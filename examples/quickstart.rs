@@ -1,0 +1,54 @@
+//! Quickstart: one 2-D convolution through every algorithm, verified
+//! equal, plus the pooling primitives.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use swconv::harness::{bench, machine_peaks};
+use swconv::kernels::{
+    avg_pool2d, conv2d, max_pool2d, Conv2dParams, ConvAlgo, PoolParams,
+};
+use swconv::tensor::Tensor;
+
+fn main() {
+    // A small "edge camera frame": 3x64x64, 5x5 filter bank, same padding.
+    let x = Tensor::randn(&[1, 3, 64, 64], 42);
+    let w = Tensor::randn(&[8, 3, 5, 5], 7);
+    let bias = vec![0.1f32; 8];
+    let p = Conv2dParams::same(5);
+
+    println!("input  {:?}", x.dims());
+    println!("filter {:?} (same padding, stride 1)\n", w.dims());
+
+    // Run every algorithm on identical data; all must agree.
+    let reference = conv2d(&x, &w, Some(&bias), &p, ConvAlgo::Direct);
+    println!("{:<18} {:>10}  {:>9}  {}", "algo", "median", "GFLOP/s", "max|diff| vs direct");
+    let flops = 2 * 8 * 64 * 64 * 3 * 25;
+    for algo in ConvAlgo::ALL {
+        let stats = bench(|| conv2d(&x, &w, Some(&bias), &p, algo));
+        let y = conv2d(&x, &w, Some(&bias), &p, algo);
+        println!(
+            "{:<18} {:>10.3?}  {:>9.2}  {:.2e}",
+            algo.name(),
+            stats.median,
+            stats.gflops(flops),
+            y.max_abs_diff(&reference)
+        );
+        assert!(y.allclose(&reference, 1e-3), "{algo:?} disagrees!");
+    }
+
+    // Pooling is a sliding window sum too (paper abstract).
+    let mp = max_pool2d(&x, &PoolParams::square(2));
+    let ap = avg_pool2d(&x, &PoolParams::square(2));
+    println!("\nmax_pool2d 2x2 -> {:?}, avg_pool2d 2x2 -> {:?}", mp.dims(), ap.dims());
+
+    let peaks = machine_peaks();
+    println!(
+        "\nmachine: {:.1} GFLOP/s peak, {:.1} GB/s bandwidth (ridge {:.1} FLOP/B)",
+        peaks.gflops,
+        peaks.bandwidth_gbs,
+        peaks.ridge()
+    );
+    println!("quickstart OK");
+}

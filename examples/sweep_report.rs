@@ -1,0 +1,52 @@
+//! Regenerate the paper's Fig. 1 and Fig. 2 as text tables + CSVs in one
+//! shot (a lighter-weight alternative to the `swconv bench-fig1/2` CLI,
+//! using a reduced grid so it finishes in ~a minute).
+//!
+//! ```bash
+//! cargo run --release --example sweep_report
+//! ```
+
+use swconv::harness::report::{f3, Table};
+use swconv::harness::{fig1_speedup_sweep, fig2_throughput_sweep, machine_peaks, ConvCase};
+
+fn main() {
+    let ks: Vec<usize> = vec![2, 3, 4, 5, 7, 9, 11, 13, 15, 17, 18, 21, 25, 31, 33];
+    let make = |k| ConvCase::square(4, 64, k);
+
+    let peaks = machine_peaks();
+    println!(
+        "machine: {:.1} GFLOP/s peak, {:.1} GB/s, ridge {:.1} FLOP/B\n",
+        peaks.gflops,
+        peaks.bandwidth_gbs,
+        peaks.ridge()
+    );
+
+    let rows = fig1_speedup_sweep(&ks, make);
+    let mut t1 = Table::new(
+        "Fig 1 — 2-D sliding convolution speedup over GEMM (c=4, 64x64)",
+        &["k", "kernel", "speedup"],
+    );
+    for r in &rows {
+        t1.row(vec![r.k.to_string(), r.kernel_used.into(), f3(r.speedup)]);
+    }
+    println!("{}", t1.render());
+    t1.write_csv("target/reports/fig1_example.csv").expect("csv");
+
+    let rows = fig2_throughput_sweep(&ks, make);
+    let mut t2 = Table::new(
+        "Fig 2 — throughput GFLOP/s vs roofline (c=4, 64x64)",
+        &["k", "sliding", "gemm", "roof(sliding)", "peak"],
+    );
+    for r in &rows {
+        t2.row(vec![
+            r.k.to_string(),
+            f3(r.sliding_gflops),
+            f3(r.gemm_gflops),
+            f3(r.sliding_roof),
+            f3(r.peak),
+        ]);
+    }
+    println!("{}", t2.render());
+    t2.write_csv("target/reports/fig2_example.csv").expect("csv");
+    println!("CSVs written to target/reports/");
+}

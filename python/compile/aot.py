@@ -1,0 +1,135 @@
+"""AOT lowering: JAX/Pallas (L1+L2) -> HLO text artifacts for the Rust runtime.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``  (see Makefile)
+
+HLO *text* is the interchange format, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. Lowering uses
+``return_tuple=True`` and the Rust side unwraps with ``to_tuple1()``.
+(See /opt/xla-example/README.md.)
+
+Artifacts produced (all f32, all deterministic):
+  conv2d_{algo}_c{c}_{hw}x{hw}_k{k}  -- standalone conv with "same" padding
+  model_simple_cnn_{algo}_b{b}       -- LeNet CNN fwd (weights baked in)
+  simple_cnn_weights.bin             -- the same weights as raw little-
+                                        endian f32 (conv1 | conv2 | fc, row
+                                        major) so the Rust-native backends
+                                        can serve the identical model
+Each is recorded in ``manifest.json`` for rust/src/runtime/manifest.rs.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default elides big
+    # literals as "{...}", which the HLO text parser silently reparses as
+    # zeros — a model artifact with all-zero weights (uniform softmax).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_conv2d(algo, c, hw, k, co=8):
+    """Lower one standalone conv2d artifact ("same" padding, odd k)."""
+    assert k % 2 == 1, "conv2d artifacts use same padding (odd k)"
+    pad = (k // 2, k // 2)
+
+    def fn(x, w):
+        return (model_mod.conv2d(x, w, pad=pad, algo=algo),)
+
+    x_spec = jax.ShapeDtypeStruct((1, c, hw, hw), jnp.float32)
+    w_spec = jax.ShapeDtypeStruct((co, c, k, k), jnp.float32)
+    lowered = jax.jit(fn).lower(x_spec, w_spec)
+    return {
+        "name": f"conv2d_{algo}_c{c}_{hw}x{hw}_k{k}",
+        "kind": "conv2d",
+        "algo": algo,
+        "inputs": [list(x_spec.shape), list(w_spec.shape)],
+        "output": [1, co, hw, hw],
+    }, to_hlo_text(lowered)
+
+
+def lower_model(algo, batch, classes=10, seed=42):
+    """Lower the simple CNN forward (+softmax); weights baked as constants."""
+    params = model_mod.init_params(seed=seed, classes=classes)
+
+    def fn(x):
+        return (model_mod.softmax(model_mod.simple_cnn(params, x, algo=algo)),)
+
+    x_spec = jax.ShapeDtypeStruct((batch, 1, 28, 28), jnp.float32)
+    lowered = jax.jit(fn).lower(x_spec)
+    return {
+        "name": f"model_simple_cnn_{algo}_b{batch}",
+        "kind": "model",
+        "algo": algo,
+        "inputs": [list(x_spec.shape)],
+        "output": [batch, classes],
+    }, to_hlo_text(lowered)
+
+
+def dump_weights(out_dir, seed=42, classes=10):
+    """Write the model weights as raw f32 for the Rust-native backends."""
+    import numpy as np
+
+    params = model_mod.init_params(seed=seed, classes=classes)
+    order = ["conv1", "conv2", "fc"]
+    fname = "simple_cnn_weights.bin"
+    path = os.path.join(out_dir, fname)
+    with open(path, "wb") as f:
+        for k in order:
+            f.write(np.asarray(params[k], dtype="<f4").tobytes())
+    print(f"wrote {path}")
+    return {
+        "name": "simple_cnn_weights",
+        "kind": "weights",
+        "algo": "none",
+        "file": fname,
+        "inputs": [list(params[k].shape) for k in order],
+        "output": [],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    jobs = []
+    for algo in ("sliding", "gemm"):
+        for k in (3, 5, 7):
+            jobs.append(lower_conv2d(algo, c=3, hw=32, k=k))
+        jobs.append(lower_model(algo, batch=args.batch))
+
+    manifest = {"version": 1, "artifacts": [dump_weights(args.out_dir)]}
+    for spec, hlo in jobs:
+        fname = spec["name"] + ".hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(hlo)
+        spec["file"] = fname
+        manifest["artifacts"].append(spec)
+        print(f"wrote {path} ({len(hlo)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

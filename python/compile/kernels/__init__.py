@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime).
+
+Modules:
+    ref       -- pure-jnp oracles every kernel is tested against.
+    sliding   -- Sliding Window convolution kernels (the paper's
+                 contribution) as Pallas kernels, interpret=True.
+    pooling   -- sliding max/avg pooling kernels.
+    gemm_conv -- im2col + dot kernel (the GEMM baseline; maps to the MXU
+                 on a real TPU).
+"""

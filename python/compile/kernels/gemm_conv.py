@@ -1,0 +1,69 @@
+"""im2col + GEMM convolution as a Pallas kernel (the baseline, Layer 1).
+
+This is the computation the paper argues *against*: every input window is
+materialised into a column matrix (k^2 memory bloat) and the convolution
+becomes one big matrix multiply. On a real TPU the ``jnp.dot`` maps to the
+MXU systolic array — preserving the paper's CPU-vs-matrix-engine contrast
+at the kernel level (the sliding kernel uses only the VPU lane network).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _im2col(x, kh, kw, oh, ow, stride):
+    """x: [ci, hp, wp] -> col: [ci*kh*kw, oh*ow] (the memory bloat)."""
+    sh, sw = stride
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            win = x[:, ky : ky + (oh - 1) * sh + 1 : sh, kx : kx + (ow - 1) * sw + 1 : sw]
+            cols.append(win.reshape(x.shape[0], oh * ow))
+    # [kh*kw, ci, oh*ow] -> [ci, kh*kw, oh*ow] -> [ci*kh*kw, oh*ow]
+    col = jnp.stack(cols, axis=0).transpose(1, 0, 2)
+    return col.reshape(x.shape[0] * kh * kw, oh * ow)
+
+
+def _gemm_conv_kernel(x_ref, w_ref, o_ref, *, kh, kw, oh, ow, stride):
+    """One image: materialise the column matrix, run one GEMM (MXU)."""
+    x = x_ref[0]                        # [ci, hp, wp]
+    w = w_ref[...]                      # [co, ci, kh, kw]
+    co = w.shape[0]
+    col = _im2col(x, kh, kw, oh, ow, stride)          # [ci*kh*kw, oh*ow]
+    wmat = w.reshape(co, -1)                          # [co, ci*kh*kw]
+    y = jnp.dot(wmat, col, preferred_element_type=jnp.float32)
+    o_ref[0] = y.reshape(co, oh, ow)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad"))
+def conv2d_gemm(x, w, *, stride=(1, 1), pad=(0, 0)):
+    """im2col + GEMM 2-D convolution.
+
+    x: [n, ci, h, w] f32, w: [co, ci, kh, kw] f32 -> [n, co, oh, ow].
+    """
+    n, ci, h, wdt = x.shape
+    co, ci_w, kh, kw = w.shape
+    assert ci == ci_w, f"c_in mismatch: {ci} vs {ci_w}"
+    ph, pw = pad
+    hp, wp = h + 2 * ph, wdt + 2 * pw
+    sh, sw = stride
+    oh, ow = (hp - kh) // sh + 1, (wp - kw) // sw + 1
+
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph, ph), (pw, pw)))
+    kernel = functools.partial(
+        _gemm_conv_kernel, kh=kh, kw=kw, oh=oh, ow=ow, stride=stride
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, ci, hp, wp), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((co, ci_w, kh, kw), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, co, oh, ow), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, co, oh, ow), jnp.float32),
+        interpret=True,
+    )(xp, w)

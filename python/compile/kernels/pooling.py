@@ -1,0 +1,102 @@
+"""Pooling as log-step sliding window combines (Pallas, Layer 1).
+
+The horizontal pass is the paper's doubling algorithm — O(log k) shifted
+combines instead of k-1 — expressed as statically shifted slices of the
+VMEM block (the TPU form of the register slide; see sliding.py). The
+vertical pass is a plain elementwise combine across kh rows.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sliding_combine_1d(x, k, op):
+    """Log-step sliding combine along the last axis.
+
+    x: [..., L] -> [..., L - k + 1] where out[..., i] = op over x[..., i:i+k].
+    Mirrors rust/src/kernels/pool.rs: process the bits of k from the
+    second-most-significant down — double the window, then extend by one
+    when the bit is set.
+    """
+    assert k >= 1
+    s = x
+    width = 1
+    bits = k.bit_length()
+    for bit in range(bits - 2, -1, -1):
+        # Double: S_2w[i] = op(S_w[i], S_w[i+w]). Shifted slices keep every
+        # lane needed by later steps valid.
+        s = op(s[..., : s.shape[-1] - width], s[..., width:])
+        width *= 2
+        if (k >> bit) & 1:
+            s = op(s[..., : x.shape[-1] - width], x[..., width : width + s.shape[-1]][..., : x.shape[-1] - width])
+            width += 1
+    assert width == k
+    return s[..., : x.shape[-1] - k + 1]
+
+
+def _pool_kernel(x_ref, o_ref, *, k, stride, op):
+    """One (n, c) plane: horizontal log-step combine, vertical combine."""
+    x = x_ref[0, 0]  # [hp, wp]
+    kh, kw = k
+    h1 = _sliding_combine_1d(x, kw, op)          # [hp, ow1]
+    acc = h1[: h1.shape[0] - kh + 1]
+    for ky in range(1, kh):
+        acc = op(acc, h1[ky : ky + acc.shape[0]])
+    sh, sw = stride
+    o_ref[0, 0] = acc[::sh, ::sw]
+
+
+def _pool2d(x, k, stride, pad, op, fill):
+    n, c, h, wdt = x.shape
+    if isinstance(k, int):
+        k = (k, k)
+    stride = stride or k
+    if isinstance(stride, int):
+        stride = (stride, stride)
+    ph, pw = pad
+    hp, wp = h + 2 * ph, wdt + 2 * pw
+    oh1, ow1 = hp - k[0] + 1, wp - k[1] + 1
+    oh = (oh1 + stride[0] - 1) // stride[0]
+    ow = (ow1 + stride[1] - 1) // stride[1]
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph, ph), (pw, pw)), constant_values=fill)
+    kernel = functools.partial(_pool_kernel, k=k, stride=stride, op=op)
+    return pl.pallas_call(
+        kernel,
+        grid=(n, c),
+        in_specs=[pl.BlockSpec((1, 1, hp, wp), lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, oh, ow), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, oh, ow), jnp.float32),
+        interpret=True,
+    )(xp)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "pad"))
+def max_pool2d(x, k, *, stride=None, pad=(0, 0)):
+    """Sliding max pooling (log-step). x: [n, c, h, w]."""
+    return _pool2d(x, k, stride, pad, jnp.maximum, -jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "pad"))
+def avg_pool2d(x, k, *, stride=None, pad=(0, 0)):
+    """Sliding average pooling, count_include_pad=True."""
+    kk = (k, k) if isinstance(k, int) else k
+    s = _pool2d(x, k, stride, pad, jnp.add, 0.0)
+    return s / (kk[0] * kk[1])
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def sliding_sum(x, k):
+    """1-D log-step sliding window sum. x: [l] -> [l - k + 1]."""
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = _sliding_combine_1d(x_ref[...], k, jnp.add)
+
+    (l,) = x.shape
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((l - k + 1,), jnp.float32),
+        interpret=True,
+    )(x)

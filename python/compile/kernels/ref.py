@@ -1,0 +1,69 @@
+"""Pure-jnp reference implementations (correctness oracles).
+
+Every Pallas kernel in this package is tested against these functions by
+``python/tests``; the Rust kernels are in turn cross-checked against the
+AOT-lowered versions of these graphs, closing the three-layer loop.
+
+Conventions match the Rust side: NCHW images, ``[c_out, c_in, kh, kw]``
+weights, cross-correlation (DNN convention), zero padding, unit dilation.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d(x, w, *, stride=(1, 1), pad=(0, 0)):
+    """2-D convolution. x: [n, c, h, w], w: [co, ci, kh, kw] -> [n, co, oh, ow]."""
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=stride,
+        padding=((pad[0], pad[0]), (pad[1], pad[1])),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def conv1d(x, w, *, stride=1, pad=0):
+    """1-D convolution. x: [ci, l], w: [co, ci, k] -> [co, lo]."""
+    y = conv2d(x[None, :, None, :], w[:, :, None, :], stride=(1, stride), pad=(0, pad))
+    return y[0, :, 0, :]
+
+
+def max_pool2d(x, k, *, stride=None, pad=(0, 0)):
+    """Max pooling with -inf padding. x: [n, c, h, w]."""
+    stride = stride or (k, k)
+    if isinstance(k, int):
+        k = (k, k)
+    if isinstance(stride, int):
+        stride = (stride, stride)
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 1, k[0], k[1]),
+        window_strides=(1, 1, stride[0], stride[1]),
+        padding=((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])),
+    )
+
+
+def avg_pool2d(x, k, *, stride=None, pad=(0, 0)):
+    """Average pooling, count_include_pad=True (matches the Rust kernels)."""
+    stride = stride or (k, k)
+    if isinstance(k, int):
+        k = (k, k)
+    if isinstance(stride, int):
+        stride = (stride, stride)
+    s = lax.reduce_window(
+        x,
+        0.0,
+        lax.add,
+        window_dimensions=(1, 1, k[0], k[1]),
+        window_strides=(1, 1, stride[0], stride[1]),
+        padding=((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])),
+    )
+    return s / (k[0] * k[1])
+
+
+def sliding_sum(x, k):
+    """1-D sliding window sum: out[i] = sum(x[i:i+k]). x: [l] -> [l-k+1]."""
+    return jnp.convolve(x, jnp.ones(k, x.dtype), mode="valid")

@@ -1,0 +1,118 @@
+"""Sliding Window convolution as Pallas kernels (Layer 1).
+
+HARDWARE ADAPTATION (DESIGN.md section "Hardware-Adaptation"): the paper's
+CPU kernels slide an AVX-512 register across the row with ``valignd``. On
+TPU the analogue is not a register shuffle but a *statically shifted slice
+of a VMEM-resident block*: the lane network performs the shift for free,
+and each filter tap becomes one shifted slice + FMA into a VMEM
+accumulator. The HBM<->VMEM schedule expressed by the BlockSpec plays the
+role the paper's cache blocking plays on the CPU; crucially there is no
+im2col materialisation, so HBM traffic stays O(input), not O(k^2 * input).
+
+The tap loops are unrolled at trace time (filter sizes are static), which
+is exactly the "custom kernel generated per filter size" the paper
+advocates ("generating custom kernels at run time might improve the
+performance for every filter size").
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO, which both the pytest
+suite and the Rust runtime execute. Real-TPU performance is *estimated*
+structurally in DESIGN.md (VMEM footprint / MXU-vs-VPU balance).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv2d_plane_kernel(x_ref, w_ref, o_ref, *, kh, kw, oh1, ow1, stride):
+    """One (image, out-channel) plane: accumulate kh*kw shifted-slice FMAs.
+
+    x_ref: [1, ci, hp, wp] padded input block (VMEM)
+    w_ref: [1, ci, kh, kw] this output channel's filter (VMEM)
+    o_ref: [1, 1, oh, ow]  output block (VMEM)
+    """
+    x = x_ref[0]          # [ci, hp, wp]
+    w = w_ref[0]          # [ci, kh, kw]
+    ci = x.shape[0]
+    acc = jnp.zeros((oh1, ow1), dtype=jnp.float32)
+    # Vector Slide, TPU form: every tap is a statically shifted slice of
+    # the VMEM block; the adds vectorise across the (8,128) lane tile.
+    for c in range(ci):
+        for ky in range(kh):
+            for kx in range(kw):
+                window = x[c, ky : ky + oh1, kx : kx + ow1]
+                acc = acc + w[c, ky, kx] * window
+    sh, sw = stride
+    o_ref[0, 0] = acc[::sh, ::sw]
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad"))
+def conv2d_sliding(x, w, *, stride=(1, 1), pad=(0, 0)):
+    """Sliding Window 2-D convolution.
+
+    x: [n, ci, h, wdt] f32, w: [co, ci, kh, kw] f32 -> [n, co, oh, ow].
+    Grid is (n, co); each program produces one output plane from the
+    padded input plane resident in VMEM.
+    """
+    n, ci, h, wdt = x.shape
+    co, ci_w, kh, kw = w.shape
+    assert ci == ci_w, f"c_in mismatch: {ci} vs {ci_w}"
+    ph, pw = pad
+    hp, wp = h + 2 * ph, wdt + 2 * pw
+    oh1, ow1 = hp - kh + 1, wp - kw + 1
+    sh, sw = stride
+    oh, ow = (oh1 + sh - 1) // sh, (ow1 + sw - 1) // sw
+
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph, ph), (pw, pw)))
+    kernel = functools.partial(
+        _conv2d_plane_kernel, kh=kh, kw=kw, oh1=oh1, ow1=ow1, stride=stride
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n, co),
+        in_specs=[
+            pl.BlockSpec((1, ci, hp, wp), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, ci_w, kh, kw), lambda i, j: (j, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, oh, ow), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, co, oh, ow), jnp.float32),
+        interpret=True,
+    )(xp, w)
+
+
+def _conv1d_kernel(x_ref, w_ref, o_ref, *, k, lo):
+    """One output channel of a 1-D convolution via shifted slices."""
+    x = x_ref[...]        # [ci, lp]
+    w = w_ref[0]          # [ci, k]
+    ci = x.shape[0]
+    acc = jnp.zeros((lo,), dtype=jnp.float32)
+    for c in range(ci):
+        for j in range(k):
+            acc = acc + w[c, j] * x[c, j : j + lo]
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("pad",))
+def conv1d_sliding(x, w, *, pad=0):
+    """Sliding Window 1-D convolution. x: [ci, l], w: [co, ci, k] -> [co, lo]."""
+    ci, l = x.shape
+    co, ci_w, k = w.shape
+    assert ci == ci_w
+    lp = l + 2 * pad
+    lo = lp - k + 1
+    xp = jnp.pad(x, ((0, 0), (pad, pad)))
+    kernel = functools.partial(_conv1d_kernel, k=k, lo=lo)
+    return pl.pallas_call(
+        kernel,
+        grid=(co,),
+        in_specs=[
+            pl.BlockSpec((ci, lp), lambda j: (0, 0)),
+            pl.BlockSpec((1, ci_w, k), lambda j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, lo), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((co, lo), jnp.float32),
+        interpret=True,
+    )(xp, w)

@@ -1,0 +1,68 @@
+"""Layer-2 JAX model: a small CNN whose conv layers call the L1 kernels.
+
+The model mirrors ``rust/src/nn/zoo.rs::simple_cnn`` (LeNet geometry) so
+the AOT artifact can be cross-checked against the Rust-native execution.
+The convolution algorithm is a build-time choice (``algo``): "sliding"
+routes through the Pallas Sliding Window kernel, "gemm" through the
+im2col+GEMM Pallas kernel, "ref" through plain lax — all three lower to
+HLO the Rust runtime executes identically.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import gemm_conv, pooling, ref, sliding
+
+
+def conv2d(x, w, *, stride=(1, 1), pad=(0, 0), algo="sliding"):
+    """Dispatch a 2-D convolution to one of the L1 kernels."""
+    if algo == "sliding":
+        return sliding.conv2d_sliding(x, w, stride=stride, pad=pad)
+    if algo == "gemm":
+        return gemm_conv.conv2d_gemm(x, w, stride=stride, pad=pad)
+    if algo == "ref":
+        return ref.conv2d(x, w, stride=stride, pad=pad)
+    raise ValueError(f"unknown algo '{algo}'")
+
+
+def init_params(seed=42, classes=10):
+    """Deterministic He-initialised weights for the simple CNN.
+
+    Plain numpy-free init via jax PRNG so artifacts are reproducible.
+    """
+    import jax
+
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+
+    def he(key, shape, fan_in):
+        return jax.random.normal(key, shape, jnp.float32) * (2.0 / fan_in) ** 0.5
+
+    return {
+        "conv1": he(k1, (16, 1, 5, 5), 1 * 5 * 5),
+        "conv2": he(k2, (32, 16, 5, 5), 16 * 5 * 5),
+        "fc": he(k3, (classes, 32 * 7 * 7), 32 * 7 * 7),
+    }
+
+
+def simple_cnn(params, x, *, algo="sliding"):
+    """LeNet-style forward pass. x: [n, 1, 28, 28] -> [n, classes] logits.
+
+    conv5-same -> relu -> maxpool2 -> conv5-same -> relu -> maxpool2 ->
+    flatten -> linear. Pooling always uses the sliding log-step kernel
+    (pooling *is* a sliding window sum — the paper's abstract).
+    """
+    y = conv2d(x, params["conv1"], pad=(2, 2), algo=algo)
+    y = jnp.maximum(y, 0.0)
+    y = pooling.max_pool2d(y, 2) if algo != "ref" else ref.max_pool2d(y, 2)
+    y = conv2d(y, params["conv2"], pad=(2, 2), algo=algo)
+    y = jnp.maximum(y, 0.0)
+    y = pooling.max_pool2d(y, 2) if algo != "ref" else ref.max_pool2d(y, 2)
+    y = y.reshape(y.shape[0], -1)
+    return y @ params["fc"].T
+
+
+def softmax(logits):
+    """Row softmax (matches the Rust nn layer)."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

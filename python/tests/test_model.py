@@ -1,0 +1,68 @@
+"""Layer-2 model: shapes, algo agreement, and AOT lowering round-trip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(seed=42)
+
+
+def rand(shape, seed):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape, jnp.float32, -1.0, 1.0)
+
+
+def test_model_output_shape(params):
+    x = rand((2, 1, 28, 28), 1)
+    y = model.simple_cnn(params, x, algo="ref")
+    assert y.shape == (2, 10)
+
+
+@pytest.mark.parametrize("algo", ["sliding", "gemm"])
+def test_model_algos_match_ref(params, algo):
+    x = rand((1, 1, 28, 28), 2)
+    want = model.simple_cnn(params, x, algo="ref")
+    got = model.simple_cnn(params, x, algo=algo)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_softmax_normalises(params):
+    x = rand((3, 1, 28, 28), 3)
+    p = model.softmax(model.simple_cnn(params, x, algo="ref"))
+    np.testing.assert_allclose(np.sum(np.asarray(p), axis=-1), 1.0, rtol=1e-5)
+    assert np.all(np.asarray(p) >= 0)
+
+
+def test_params_deterministic():
+    a = model.init_params(seed=7)
+    b = model.init_params(seed=7)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_conv2d_rejects_unknown_algo(params):
+    with pytest.raises(ValueError):
+        model.conv2d(rand((1, 1, 8, 8), 4), rand((1, 1, 3, 3), 5), algo="winograd")
+
+
+def test_aot_lower_conv2d_produces_hlo():
+    spec, hlo = aot.lower_conv2d("sliding", c=1, hw=8, k=3, co=2)
+    assert spec["name"] == "conv2d_sliding_c1_8x8_k3"
+    assert spec["inputs"] == [[1, 1, 8, 8], [2, 1, 3, 3]]
+    assert spec["output"] == [1, 2, 8, 8]
+    assert "HloModule" in hlo
+    # The artifact must be pure HLO text: no Mosaic custom-calls (those
+    # would be un-runnable on the CPU PJRT plugin).
+    assert "mosaic" not in hlo.lower()
+
+
+def test_aot_lower_model_produces_hlo():
+    spec, hlo = aot.lower_model("gemm", batch=2)
+    assert spec["inputs"] == [[2, 1, 28, 28]]
+    assert spec["output"] == [2, 10]
+    assert "HloModule" in hlo

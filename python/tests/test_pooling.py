@@ -1,0 +1,75 @@
+"""Pallas log-step pooling kernels vs the lax.reduce_window oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pooling, ref
+
+
+def rand(shape, seed):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape, jnp.float32, -1.0, 1.0)
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 4, 5, 7, 8, 13])
+def test_max_pool_all_window_sizes_stride1(k):
+    x = rand((1, 2, 16, 20), k)
+    got = pooling.max_pool2d(x, k, stride=1)
+    want = ref.max_pool2d(x, k, stride=1)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("k", [2, 3, 4])
+def test_max_pool_nonoverlapping(k):
+    x = rand((2, 3, 12, 12), 50 + k)
+    got = pooling.max_pool2d(x, k)
+    want = ref.max_pool2d(x, k)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("k", [2, 3, 5])
+def test_avg_pool_matches_ref(k):
+    x = rand((1, 2, 14, 15), 60 + k)
+    got = pooling.avg_pool2d(x, k, stride=1)
+    want = ref.avg_pool2d(x, k, stride=1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_max_pool_padded():
+    x = rand((1, 1, 8, 8), 3)
+    got = pooling.max_pool2d(x, 3, stride=1, pad=(1, 1))
+    want = ref.max_pool2d(x, 3, stride=1, pad=(1, 1))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_rectangular_window():
+    x = rand((1, 1, 10, 24), 4)
+    got = pooling.max_pool2d(x, (2, 5), stride=(1, 2))
+    want = ref.max_pool2d(x, (2, 5), stride=(1, 2))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 6, 9, 15, 16])
+def test_sliding_sum_log_step(k):
+    x = rand((64,), 70 + k)
+    got = pooling.sliding_sum(x, k)
+    want = ref.sliding_sum(x, k)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(4, 14),
+    w=st.integers(4, 14),
+    k=st.integers(1, 4),
+    s=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_max_pool_hypothesis(h, w, k, s, seed):
+    k = min(k, h, w)
+    x = rand((1, 1, h, w), seed)
+    got = pooling.max_pool2d(x, k, stride=s)
+    want = ref.max_pool2d(x, k, stride=s)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)

@@ -1,0 +1,87 @@
+"""Pallas Sliding Window kernels vs the pure-jnp oracle — the core L1
+correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, sliding
+
+
+def rand(shape, seed):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape, jnp.float32, -1.0, 1.0)
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 5, 7, 11])
+def test_conv2d_sliding_matches_ref_filter_sizes(k):
+    x = rand((1, 2, 16, 18), k)
+    w = rand((3, 2, k, k), 100 + k)
+    got = sliding.conv2d_sliding(x, w)
+    want = ref.conv2d(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("pad", [(0, 0), (1, 1), (2, 3)])
+def test_conv2d_sliding_padding(pad):
+    x = rand((2, 3, 10, 12), 7)
+    w = rand((4, 3, 3, 3), 8)
+    got = sliding.conv2d_sliding(x, w, pad=pad)
+    want = ref.conv2d(x, w, pad=pad)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("stride", [(1, 1), (2, 2), (1, 3)])
+def test_conv2d_sliding_stride(stride):
+    x = rand((1, 2, 13, 14), 9)
+    w = rand((2, 2, 3, 3), 10)
+    got = sliding.conv2d_sliding(x, w, stride=stride, pad=(1, 1))
+    want = ref.conv2d(x, w, stride=stride, pad=(1, 1))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_rectangular_filter_via_khkw():
+    x = rand((1, 1, 9, 30), 11)
+    w = rand((1, 1, 2, 7), 12)
+    got = sliding.conv2d_sliding(x, w)
+    want = ref.conv2d(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("k", [1, 2, 5, 16, 17, 31])
+def test_conv1d_sliding_matches_ref(k):
+    x = rand((2, 64), k)
+    w = rand((3, 2, k), 200 + k)
+    got = sliding.conv1d_sliding(x, w)
+    want = ref.conv1d(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv1d_sliding_padded():
+    x = rand((1, 40), 1)
+    w = rand((2, 1, 5), 2)
+    got = sliding.conv1d_sliding(x, w, pad=2)
+    want = ref.conv1d(x, w, pad=2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# Hypothesis sweep: the mandate's shape/dtype fuzzing for the L1 kernel.
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    ci=st.integers(1, 3),
+    co=st.integers(1, 3),
+    h=st.integers(4, 12),
+    w=st.integers(4, 12),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_sliding_hypothesis(n, ci, co, h, w, k, seed):
+    kh = min(k, h)
+    kw = min(k, w)
+    x = rand((n, ci, h, w), seed)
+    wt = rand((co, ci, kh, kw), seed + 1)
+    got = sliding.conv2d_sliding(x, wt)
+    want = ref.conv2d(x, wt)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

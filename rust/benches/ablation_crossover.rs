@@ -1,0 +1,46 @@
+//! BENCH — ablation for paper §2's k = 17 observation: filter width 17 can
+//! be evaluated by either the in-vector generic kernel or the compound
+//! kernel; the paper found the compound variant "significantly faster"
+//! and flagged it worth studying. We sweep the crossover region k=13..20
+//! with both kernels forced.
+
+use swconv::harness::report::{f3, Table};
+use swconv::harness::timing::bench;
+use swconv::kernels::rowconv::GENERIC_MAX_K;
+use swconv::kernels::sliding2d::{conv2d_sliding, SlideVariant};
+use swconv::kernels::Conv2dParams;
+use swconv::tensor::Tensor;
+
+fn main() {
+    let mut t = Table::new(
+        "Crossover — generic (in-vector) vs compound around k=17 (c=2, 96x96)",
+        &["k", "t_generic_ms", "t_compound_ms", "compound/generic", "winner"],
+    );
+    for k in 13..=20usize {
+        let x = Tensor::rand_uniform(&[1, 2, 96, 96], -1.0, 1.0, k as u64);
+        let w = Tensor::rand_uniform(&[2, 2, 3, k], -1.0, 1.0, 5);
+        let p = Conv2dParams::default();
+        let tg = if k <= GENERIC_MAX_K {
+            Some(bench(|| conv2d_sliding(&x, &w, None, &p, SlideVariant::Generic)).secs())
+        } else {
+            None
+        };
+        let tc = bench(|| conv2d_sliding(&x, &w, None, &p, SlideVariant::Compound)).secs();
+        let (ratio, winner) = match tg {
+            Some(tg) => (
+                f3(tc / tg),
+                if tc < tg { "compound" } else { "generic" },
+            ),
+            None => ("-".into(), "compound (only option)"),
+        };
+        t.row(vec![
+            k.to_string(),
+            tg.map_or("-".into(), |v| f3(v * 1e3)),
+            f3(tc * 1e3),
+            ratio,
+            winner.into(),
+        ]);
+    }
+    println!("{}", t.render());
+    t.write_csv("target/reports/ablation_crossover.csv").expect("csv");
+}

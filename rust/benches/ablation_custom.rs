@@ -1,0 +1,71 @@
+//! BENCH — ablation for paper §2: "custom implementations are indeed
+//! faster than their generic counterparts" at k = 3 and k = 5.
+//!
+//! Measures both the raw row kernels (isolated inner loop) and the full
+//! 2-D convolution with each row kernel forced.
+
+use swconv::harness::report::{f3, Table};
+use swconv::harness::timing::bench;
+use swconv::kernels::rowconv::{
+    row_conv_compound, row_conv_custom3, row_conv_custom5, row_conv_generic,
+};
+use swconv::kernels::sliding2d::{conv2d_sliding, SlideVariant};
+use swconv::kernels::Conv2dParams;
+use swconv::simd::LANES;
+use swconv::tensor::{pad_row, Tensor};
+
+fn bench_row(kernel: fn(&[f32], &[f32], &mut [f32], usize), k: usize) -> f64 {
+    let out_len = 4096;
+    let raw: Vec<f32> = (0..out_len + k).map(|i| (i % 17) as f32 * 0.1).collect();
+    let src = pad_row(&raw, 0, LANES + k, 0.0);
+    let w: Vec<f32> = (0..k).map(|i| 0.2 + i as f32 * 0.05).collect();
+    let mut dst = vec![0.0f32; out_len];
+    bench(|| {
+        kernel(&src, &w, &mut dst, out_len);
+        dst[0]
+    })
+    .secs()
+}
+
+fn main() {
+    // Raw row kernels.
+    let mut t = Table::new(
+        "Ablation — row kernel time per 4096-column row (lower is better)",
+        &["k", "custom_us", "generic_us", "compound_us", "generic/custom", "compound/custom"],
+    );
+    for (k, custom) in [
+        (3usize, row_conv_custom3 as fn(&[f32], &[f32], &mut [f32], usize)),
+        (5, row_conv_custom5),
+    ] {
+        let tc = bench_row(custom, k);
+        let tg = bench_row(row_conv_generic, k);
+        let tp = bench_row(row_conv_compound, k);
+        t.row(vec![
+            k.to_string(),
+            f3(tc * 1e6),
+            f3(tg * 1e6),
+            f3(tp * 1e6),
+            f3(tg / tc),
+            f3(tp / tc),
+        ]);
+    }
+    println!("{}", t.render());
+    t.write_csv("target/reports/ablation_custom_row.csv").expect("csv");
+
+    // Full 2-D convolution with each variant forced.
+    let mut t2 = Table::new(
+        "Ablation — full conv2d (c=4, 64x64), auto(custom) vs forced generic/compound",
+        &["k", "t_auto_ms", "t_generic_ms", "t_compound_ms"],
+    );
+    for k in [3usize, 5] {
+        let x = Tensor::rand_uniform(&[1, 4, 64, 64], -1.0, 1.0, k as u64);
+        let w = Tensor::rand_uniform(&[4, 4, k, k], -1.0, 1.0, 9);
+        let p = Conv2dParams::default();
+        let ta = bench(|| conv2d_sliding(&x, &w, None, &p, SlideVariant::Auto)).secs();
+        let tg = bench(|| conv2d_sliding(&x, &w, None, &p, SlideVariant::Generic)).secs();
+        let tc = bench(|| conv2d_sliding(&x, &w, None, &p, SlideVariant::Compound)).secs();
+        t2.row(vec![k.to_string(), f3(ta * 1e3), f3(tg * 1e3), f3(tc * 1e3)]);
+    }
+    println!("{}", t2.render());
+    t2.write_csv("target/reports/ablation_custom_conv.csv").expect("csv");
+}

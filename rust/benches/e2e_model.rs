@@ -1,0 +1,36 @@
+//! BENCH — end-to-end model forward passes: every zoo model with GEMM vs
+//! Sliding Window convolutions on identical weights. This is the paper's
+//! §1.2/§3 discussion quantified: 1x1-heavy nets (SqueezeNet fires,
+//! MobileNet pointwise) benefit least; the large-filter net benefits most.
+
+use swconv::harness::report::{dur, f3, Table};
+use swconv::harness::timing::bench;
+use swconv::kernels::ConvAlgo;
+use swconv::nn::{zoo, ExecCtx};
+use swconv::tensor::Tensor;
+
+fn main() {
+    let mut t = Table::new(
+        "Model forward (batch 4): GEMM vs Sliding",
+        &["model", "MFLOP", "t_gemm", "t_sliding", "t_direct", "sliding_speedup"],
+    );
+    for name in zoo::MODEL_NAMES {
+        let m = zoo::by_name(name, 10, 42).unwrap();
+        let mut shape = vec![4];
+        shape.extend_from_slice(&m.input_shape);
+        let x = Tensor::randn(&shape, 1);
+        let tg = bench(|| m.forward(&x, &ExecCtx { algo: ConvAlgo::Im2colGemm })).median;
+        let ts = bench(|| m.forward(&x, &ExecCtx { algo: ConvAlgo::Sliding })).median;
+        let td = bench(|| m.forward(&x, &ExecCtx { algo: ConvAlgo::Direct })).median;
+        t.row(vec![
+            name.into(),
+            f3(m.flops(4) as f64 / 1e6),
+            dur(tg),
+            dur(ts),
+            dur(td),
+            f3(tg.as_secs_f64() / ts.as_secs_f64()),
+        ]);
+    }
+    println!("{}", t.render());
+    t.write_csv("target/reports/e2e_models.csv").expect("csv");
+}

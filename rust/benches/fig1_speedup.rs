@@ -1,0 +1,40 @@
+//! BENCH — Paper Fig. 1: speedup of 2-D Sliding Window convolution over
+//! the im2col+GEMM (MlasConv-style) baseline, as a function of filter
+//! size. Single core, NCHW f32, c=4 channels, 64x64 images (and a second
+//! 128x128 single-channel series like the paper's large-image regime).
+//!
+//! Expected shape (paper): speedup > 1 everywhere, growing roughly
+//! logarithmically with k; custom kernels (k=3,5) above the generic
+//! trend; zigzag in the compound regime from hardware-vector alignment.
+
+use swconv::harness::report::{f3, Table};
+use swconv::harness::sweep::{default_k_grid, fig1_speedup_sweep};
+use swconv::harness::ConvCase;
+
+fn run(title: &str, c: usize, hw: usize, csv: &str) {
+    let ks = default_k_grid();
+    let rows = fig1_speedup_sweep(&ks, |k| ConvCase::square(c, hw, k));
+    let mut t = Table::new(
+        title,
+        &["k", "kernel", "t_gemm_ms", "t_sliding_ms", "t_generic_ms", "t_compound_ms", "speedup"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.k.to_string(),
+            r.kernel_used.into(),
+            f3(r.t_gemm * 1e3),
+            f3(r.t_sliding * 1e3),
+            r.t_generic.map_or("-".into(), |v| f3(v * 1e3)),
+            r.t_compound.map_or("-".into(), |v| f3(v * 1e3)),
+            f3(r.speedup),
+        ]);
+    }
+    println!("{}", t.render());
+    t.write_csv(format!("target/reports/{csv}")).expect("csv");
+}
+
+fn main() {
+    run("Fig 1a — speedup vs k (c=4, 64x64)", 4, 64, "fig1_c4_64.csv");
+    run("Fig 1b — speedup vs k (c=1, 128x128)", 1, 128, "fig1_c1_128.csv");
+    println!("CSV series in target/reports/fig1_*.csv");
+}

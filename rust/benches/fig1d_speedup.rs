@@ -1,0 +1,39 @@
+//! BENCH — the precursor result paper §2 recalls: 1-D convolution speedup
+//! of the Vector Slide kernel over GEMM/direct, "roughly proportional to
+//! the logarithm of the filter width".
+
+use swconv::harness::report::{f3, Table};
+use swconv::harness::timing::bench_quick;
+use swconv::kernels::{conv1d, Conv1dParams, ConvAlgo};
+use swconv::tensor::Tensor;
+
+fn main() {
+    let l = 1 << 15; // 32k samples
+    let c_in = 2;
+    let c_out = 4;
+    let ks = [2usize, 3, 4, 5, 7, 9, 12, 16, 17, 20, 24, 31, 33, 48, 64];
+
+    let mut t = Table::new(
+        format!("1-D convolution speedup (cin={c_in}, cout={c_out}, L={l})"),
+        &["k", "t_gemm_ms", "t_direct_ms", "t_sliding_ms", "speedup_vs_gemm", "speedup_vs_direct"],
+    );
+    for &k in &ks {
+        let x = Tensor::rand_uniform(&[c_in, l], -1.0, 1.0, k as u64);
+        let w = Tensor::rand_uniform(&[c_out, c_in, k], -1.0, 1.0, 1 + k as u64);
+        let p = Conv1dParams::default();
+        let tg = bench_quick(|| conv1d(&x, &w, None, &p, ConvAlgo::Im2colGemm)).secs();
+        let td = bench_quick(|| conv1d(&x, &w, None, &p, ConvAlgo::Direct)).secs();
+        let ts = bench_quick(|| conv1d(&x, &w, None, &p, ConvAlgo::Sliding)).secs();
+        t.row(vec![
+            k.to_string(),
+            f3(tg * 1e3),
+            f3(td * 1e3),
+            f3(ts * 1e3),
+            f3(tg / ts),
+            f3(td / ts),
+        ]);
+    }
+    println!("{}", t.render());
+    t.write_csv("target/reports/fig1d.csv").expect("csv");
+    println!("CSV in target/reports/fig1d.csv");
+}

@@ -1,0 +1,43 @@
+//! BENCH — Paper Fig. 2: arithmetic throughput (GFLOP/s) of the sliding
+//! and GEMM convolution kernels vs filter size, against the measured
+//! roofline (Intel-Advisor stand-in; see harness::roofline).
+//!
+//! Expected shape (paper): sliding throughput approaches the hardware
+//! limit as the filter grows; GEMM stays below it (its im2col traffic
+//! caps arithmetic intensity); misalignment with the vector length shows
+//! as matching dips in both series.
+
+use swconv::harness::report::{f3, Table};
+use swconv::harness::sweep::{default_k_grid, fig2_throughput_sweep};
+use swconv::harness::{machine_peaks, ConvCase};
+
+fn main() {
+    let peaks = machine_peaks();
+    println!(
+        "machine: {:.2} GFLOP/s peak, {:.2} GB/s bandwidth, ridge {:.2} FLOP/B\n",
+        peaks.gflops,
+        peaks.bandwidth_gbs,
+        peaks.ridge()
+    );
+    let ks = default_k_grid();
+    let rows = fig2_throughput_sweep(&ks, |k| ConvCase::square(4, 64, k));
+    let mut t = Table::new(
+        "Fig 2 — throughput GFLOP/s (c=4, 64x64)",
+        &["k", "sliding", "gemm", "roof(sliding)", "roof(gemm)", "peak", "sliding/peak", "gemm/peak"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.k.to_string(),
+            f3(r.sliding_gflops),
+            f3(r.gemm_gflops),
+            f3(r.sliding_roof),
+            f3(r.gemm_roof),
+            f3(r.peak),
+            f3(r.sliding_gflops / r.peak),
+            f3(r.gemm_gflops / r.peak),
+        ]);
+    }
+    println!("{}", t.render());
+    t.write_csv("target/reports/fig2_c4_64.csv").expect("csv");
+    println!("CSV in target/reports/fig2_c4_64.csv");
+}

@@ -1,0 +1,54 @@
+//! BENCH — baseline fairness: the blocked SGEMM substrate's standalone
+//! throughput. The Fig. 1 comparison is only meaningful if the GEMM the
+//! im2col path calls is a respectable fraction of machine peak on
+//! conv-shaped problems (tall-skinny: M=c_out, K=c_in*k*k, N=oh*ow).
+
+use swconv::harness::report::{f3, Table};
+use swconv::harness::timing::bench;
+use swconv::harness::machine_peaks;
+use swconv::kernels::gemm::sgemm;
+use swconv::tensor::XorShiftRng;
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = XorShiftRng::new(seed);
+    (0..n).map(|_| r.uniform(-1.0, 1.0)).collect()
+}
+
+fn main() {
+    let peaks = machine_peaks();
+    println!("machine peak: {:.2} GFLOP/s\n", peaks.gflops);
+    let mut t = Table::new(
+        "SGEMM throughput (C += A*B)",
+        &["M", "K", "N", "GFLOP/s", "frac_of_peak"],
+    );
+    let cases = [
+        // Square problems.
+        (256usize, 256usize, 256usize),
+        (512, 512, 512),
+        // conv-shaped: M=c_out, K=c_in*k*k, N=oh*ow.
+        (8, 36, 3844),   // c=4, k=3, 64x64
+        (8, 100, 3600),  // c=4, k=5
+        (8, 1156, 2304), // c=4, k=17
+        (32, 288, 3136), // c=32, k=3, 58x58-ish
+    ];
+    for (m, k, n) in cases {
+        let a = rand_vec(m * k, 1);
+        let b = rand_vec(k * n, 2);
+        let mut c = vec![0.0f32; m * n];
+        let s = bench(|| {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            sgemm(m, k, n, &a, &b, &mut c);
+            c[0]
+        });
+        let gf = s.gflops((2 * m * k * n) as u64);
+        t.row(vec![
+            m.to_string(),
+            k.to_string(),
+            n.to_string(),
+            f3(gf),
+            f3(gf / peaks.gflops),
+        ]);
+    }
+    println!("{}", t.render());
+    t.write_csv("target/reports/gemm.csv").expect("csv");
+}

@@ -1,0 +1,36 @@
+//! BENCH — pooling as a sliding window sum (paper abstract): the log-step
+//! kernels vs the naïve window loop, max and avg, window sizes 2..16.
+//! Expected: the sliding kernel's advantage grows with the window (it
+//! does O(log k) work per output vs O(k)).
+
+use swconv::harness::report::{f3, Table};
+use swconv::harness::timing::bench;
+use swconv::kernels::pool::{avg_pool2d, avg_pool2d_naive, max_pool2d, max_pool2d_naive};
+use swconv::kernels::PoolParams;
+use swconv::tensor::Tensor;
+
+fn main() {
+    let x = Tensor::rand_uniform(&[1, 4, 128, 128], -1.0, 1.0, 3);
+    let mut t = Table::new(
+        "Pooling — log-step sliding vs naive (c=4, 128x128, stride 1)",
+        &["k", "max_sliding_ms", "max_naive_ms", "max_speedup", "avg_sliding_ms", "avg_naive_ms", "avg_speedup"],
+    );
+    for k in [2usize, 3, 4, 5, 6, 8, 10, 12, 16] {
+        let p = PoolParams::with_stride(k, 1);
+        let ms = bench(|| max_pool2d(&x, &p)).secs();
+        let mn = bench(|| max_pool2d_naive(&x, &p)).secs();
+        let as_ = bench(|| avg_pool2d(&x, &p)).secs();
+        let an = bench(|| avg_pool2d_naive(&x, &p)).secs();
+        t.row(vec![
+            k.to_string(),
+            f3(ms * 1e3),
+            f3(mn * 1e3),
+            f3(mn / ms),
+            f3(as_ * 1e3),
+            f3(an * 1e3),
+            f3(an / as_),
+        ]);
+    }
+    println!("{}", t.render());
+    t.write_csv("target/reports/pool.csv").expect("csv");
+}

@@ -1,0 +1,230 @@
+//! Inference backends: what a coordinator worker actually runs.
+
+use crate::nn::{ExecCtx, Model};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// A batched inference backend. Workers own their backend exclusively
+/// (`&mut self`), so implementations may keep scratch state.
+///
+/// Backends are **not** required to be `Send`: PJRT handles contain
+/// `Rc`s, so the coordinator constructs each backend *inside* its worker
+/// thread via [`BackendSpec`].
+pub trait Backend {
+    /// Backend name (router key).
+    fn name(&self) -> &str;
+    /// Expected per-item input shape `[c, h, w]`-style (no batch dim).
+    fn item_shape(&self) -> &[usize];
+    /// Run a batch `[b, …item_shape]` and return `[b, …out]`.
+    fn infer(&mut self, batch: &Tensor) -> Result<Tensor>;
+}
+
+/// Native backend: a [`Model`] executed by the Rust kernels with a fixed
+/// [`ExecCtx`] (the router registers one backend per algorithm).
+pub struct NativeBackend {
+    name: String,
+    model: Model,
+    ctx: ExecCtx,
+}
+
+impl NativeBackend {
+    /// Wrap a model + algorithm choice.
+    pub fn new(name: impl Into<String>, model: Model, ctx: ExecCtx) -> Self {
+        NativeBackend { name: name.into(), model, ctx }
+    }
+
+    /// The wrapped model.
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn item_shape(&self) -> &[usize] {
+        &self.model.input_shape
+    }
+
+    fn infer(&mut self, batch: &Tensor) -> Result<Tensor> {
+        Ok(self.model.forward(batch, &self.ctx))
+    }
+}
+
+/// How a coordinator worker constructs its backend. The factory runs on
+/// the worker thread itself (PJRT handles are not `Send`), so only the
+/// spec — not the backend — crosses threads.
+pub struct BackendSpec {
+    /// Router key.
+    pub name: String,
+    /// Per-item input shape the router validates against.
+    pub item_shape: Vec<usize>,
+    /// Constructor, run once on the worker thread.
+    pub factory: Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>,
+}
+
+impl BackendSpec {
+    /// Spec for a native (Rust kernels) backend.
+    pub fn native(name: impl Into<String>, model: Model, ctx: ExecCtx) -> Self {
+        let name = name.into();
+        let item_shape = model.input_shape.clone();
+        let n2 = name.clone();
+        BackendSpec {
+            name,
+            item_shape,
+            factory: Box::new(move || {
+                Ok(Box::new(NativeBackend::new(n2, model, ctx)) as Box<dyn Backend>)
+            }),
+        }
+    }
+
+    /// Spec for a PJRT artifact backend. `item_shape` must match the
+    /// artifact's input with the batch dimension stripped (validated when
+    /// the worker constructs the backend).
+    pub fn pjrt(
+        name: impl Into<String>,
+        artifacts_dir: impl Into<std::path::PathBuf>,
+        artifact: impl Into<String>,
+        item_shape: Vec<usize>,
+    ) -> Self {
+        let name = name.into();
+        let dir = artifacts_dir.into();
+        let artifact = artifact.into();
+        let n2 = name.clone();
+        let expect = item_shape.clone();
+        BackendSpec {
+            name,
+            item_shape,
+            factory: Box::new(move || {
+                let engine = Engine::new(dir)?;
+                let b = PjrtBackend::new(n2, engine, &artifact)?;
+                if b.item_shape() != expect {
+                    bail!(
+                        "artifact '{artifact}' item shape {:?} != declared {:?}",
+                        b.item_shape(),
+                        expect
+                    );
+                }
+                Ok(Box::new(b) as Box<dyn Backend>)
+            }),
+        }
+    }
+}
+
+/// PJRT backend: an AOT artifact with a *fixed* batch dimension. Smaller
+/// batches are zero-padded to the artifact batch and the outputs sliced
+/// back; larger batches are split into chunks.
+pub struct PjrtBackend {
+    name: String,
+    engine: Engine,
+    artifact: String,
+    item_shape: Vec<usize>,
+    artifact_batch: usize,
+}
+
+impl PjrtBackend {
+    /// Create over an existing engine. The artifact must take a single
+    /// `[b, …]` input.
+    pub fn new(name: impl Into<String>, mut engine: Engine, artifact: &str) -> Result<Self> {
+        let spec = engine.load(artifact)?.clone();
+        if spec.inputs.len() != 1 {
+            bail!("PjrtBackend needs a single-input artifact, '{artifact}' has {}", spec.inputs.len());
+        }
+        let shape = &spec.inputs[0];
+        if shape.is_empty() {
+            bail!("artifact '{artifact}' input has rank 0");
+        }
+        Ok(PjrtBackend {
+            name: name.into(),
+            engine,
+            artifact: artifact.to_string(),
+            item_shape: shape[1..].to_vec(),
+            artifact_batch: shape[0],
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn item_shape(&self) -> &[usize] {
+        &self.item_shape
+    }
+
+    fn infer(&mut self, batch: &Tensor) -> Result<Tensor> {
+        let b = batch.dim(0);
+        let item: usize = self.item_shape.iter().product();
+        let spec_out = self
+            .engine
+            .manifest()
+            .find(&self.artifact)
+            .expect("artifact known")
+            .output
+            .clone();
+        let out_item: usize = spec_out[1..].iter().product();
+        let mut out_data = Vec::with_capacity(b * out_item);
+
+        let mut done = 0;
+        while done < b {
+            let chunk = (b - done).min(self.artifact_batch);
+            // Pad the chunk to the artifact's fixed batch.
+            let mut padded =
+                vec![0.0f32; self.artifact_batch * item];
+            padded[..chunk * item]
+                .copy_from_slice(&batch.as_slice()[done * item..(done + chunk) * item]);
+            let mut in_shape = vec![self.artifact_batch];
+            in_shape.extend_from_slice(&self.item_shape);
+            let t = Tensor::from_vec(padded, &in_shape);
+            let y = self.engine.execute(&self.artifact, &[&t])?;
+            out_data.extend_from_slice(&y.as_slice()[..chunk * out_item]);
+            done += chunk;
+        }
+        let mut out_shape = vec![b];
+        out_shape.extend_from_slice(&spec_out[1..]);
+        Ok(Tensor::from_vec(out_data, &out_shape))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::ConvAlgo;
+    use crate::nn::zoo::simple_cnn;
+
+    #[test]
+    fn native_backend_runs_batches() {
+        let mut b = NativeBackend::new(
+            "sliding",
+            simple_cnn(10, 1),
+            ExecCtx { algo: ConvAlgo::Sliding },
+        );
+        assert_eq!(b.item_shape(), &[1, 28, 28]);
+        let x = Tensor::randn(&[3, 1, 28, 28], 4);
+        let y = b.infer(&x).unwrap();
+        assert_eq!(y.dims(), &[3, 10]);
+        assert_eq!(b.name(), "sliding");
+    }
+
+    #[test]
+    fn native_backends_agree_across_algos() {
+        let x = Tensor::randn(&[2, 1, 28, 28], 5);
+        let mut g = NativeBackend::new(
+            "gemm",
+            simple_cnn(10, 1),
+            ExecCtx { algo: ConvAlgo::Im2colGemm },
+        );
+        let mut s = NativeBackend::new(
+            "sliding",
+            simple_cnn(10, 1),
+            ExecCtx { algo: ConvAlgo::Sliding },
+        );
+        let yg = g.infer(&x).unwrap();
+        let ys = s.infer(&x).unwrap();
+        assert!(yg.allclose(&ys, 1e-4), "diff {}", yg.max_abs_diff(&ys));
+    }
+}

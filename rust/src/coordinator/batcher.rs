@@ -1,0 +1,123 @@
+//! Dynamic batching: collect queued requests into a batch bounded by
+//! size and deadline — the standard serving trade-off (larger batches
+//! amortise per-call overhead; the deadline caps queueing latency).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batch formation policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// Maximum time to wait for the batch to fill after the first
+    /// request arrives.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Outcome of waiting for a batch.
+pub enum BatchOutcome<T> {
+    /// A non-empty batch.
+    Batch(Vec<T>),
+    /// The channel closed and no requests remain.
+    Closed,
+}
+
+/// Block for the next batch on `rx` under `policy`.
+///
+/// Semantics: wait indefinitely for the first request; then drain
+/// whatever arrives until the batch is full or `max_wait` has elapsed
+/// since the first request.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> BatchOutcome<T> {
+    let first = match rx.recv() {
+        Ok(r) => r,
+        Err(_) => return BatchOutcome::Closed,
+    };
+    let mut batch = Vec::with_capacity(policy.max_batch);
+    batch.push(first);
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => batch.push(r),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    BatchOutcome::Batch(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::thread;
+
+    #[test]
+    fn collects_up_to_max_batch() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let p = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) };
+        match next_batch(&rx, &p) {
+            BatchOutcome::Batch(b) => assert_eq!(b, vec![0, 1, 2, 3]),
+            _ => panic!("expected batch"),
+        }
+        match next_batch(&rx, &p) {
+            BatchOutcome::Batch(b) => assert_eq!(b, vec![4, 5, 6, 7]),
+            _ => panic!("expected batch"),
+        }
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = channel::<u32>();
+        tx.send(1).unwrap();
+        let p = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(10) };
+        let t = Instant::now();
+        match next_batch(&rx, &p) {
+            BatchOutcome::Batch(b) => {
+                assert_eq!(b, vec![1]);
+                assert!(t.elapsed() >= Duration::from_millis(9));
+            }
+            _ => panic!("expected batch"),
+        }
+    }
+
+    #[test]
+    fn closed_channel_reports_closed() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(matches!(
+            next_batch(&rx, &BatchPolicy::default()),
+            BatchOutcome::Closed
+        ));
+    }
+
+    #[test]
+    fn drains_requests_arriving_during_wait() {
+        let (tx, rx) = channel();
+        let p = BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(100) };
+        let sender = thread::spawn(move || {
+            tx.send(1).unwrap();
+            thread::sleep(Duration::from_millis(5));
+            tx.send(2).unwrap();
+            tx.send(3).unwrap();
+        });
+        match next_batch(&rx, &p) {
+            BatchOutcome::Batch(b) => assert_eq!(b, vec![1, 2, 3]),
+            _ => panic!("expected batch"),
+        }
+        sender.join().unwrap();
+    }
+}

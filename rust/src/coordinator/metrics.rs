@@ -1,0 +1,191 @@
+//! Latency/throughput metrics for the serving path.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Log-scale latency histogram (power-of-two microsecond buckets) plus
+/// counters. Cheap to record (one atomic-free locked increment; the
+/// coordinator records from a single worker thread per backend).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Clone)]
+struct Inner {
+    /// bucket[i] counts latencies in [2^i, 2^(i+1)) microseconds.
+    buckets: [u64; 32],
+    count: u64,
+    total_us: u64,
+    max_us: u64,
+    /// Items processed (for batch backends this exceeds request count).
+    items: u64,
+    batches: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        LatencyHistogram {
+            inner: Mutex::new(Inner {
+                buckets: [0; 32],
+                count: 0,
+                total_us: 0,
+                max_us: 0,
+                items: 0,
+                batches: 0,
+            }),
+        }
+    }
+
+    /// Record one request latency.
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(31);
+        let mut g = self.inner.lock().unwrap();
+        g.buckets[bucket] += 1;
+        g.count += 1;
+        g.total_us += us;
+        g.max_us = g.max_us.max(us);
+    }
+
+    /// Record a processed batch of `n` items.
+    pub fn record_batch(&self, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.items += n as u64;
+        g.batches += 1;
+    }
+
+    /// Snapshot for reporting.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            count: g.count,
+            mean: Duration::from_micros(if g.count == 0 { 0 } else { g.total_us / g.count }),
+            p50: g.quantile(0.50),
+            p95: g.quantile(0.95),
+            p99: g.quantile(0.99),
+            max: Duration::from_micros(g.max_us),
+            items: g.items,
+            batches: g.batches,
+        }
+    }
+}
+
+impl Inner {
+    /// Upper edge of the bucket containing quantile `q` (log-bucket
+    /// resolution: within 2× of the true value).
+    fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return Duration::from_micros(1 << (i + 1));
+            }
+        }
+        Duration::from_micros(self.max_us)
+    }
+}
+
+/// Point-in-time metrics view.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    /// Requests recorded.
+    pub count: u64,
+    /// Mean latency.
+    pub mean: Duration,
+    /// Median (bucket upper edge).
+    pub p50: Duration,
+    /// 95th percentile (bucket upper edge).
+    pub p95: Duration,
+    /// 99th percentile (bucket upper edge).
+    pub p99: Duration,
+    /// Maximum latency.
+    pub max: Duration,
+    /// Items processed in batches.
+    pub items: u64,
+    /// Batches processed.
+    pub batches: u64,
+}
+
+impl MetricsSnapshot {
+    /// Mean batch size.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.items as f64 / self.batches as f64
+        }
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:?} p50={:?} p95={:?} p99={:?} max={:?} batches={} (avg {:.1}/batch)",
+            self.count,
+            self.mean,
+            self.p50,
+            self.p95,
+            self.p99,
+            self.max,
+            self.batches,
+            self.mean_batch()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99, Duration::ZERO);
+        assert_eq!(s.mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+        // p50 of 1..1000us is ~500us; log-bucket answer within 2x.
+        assert!(s.p50 >= Duration::from_micros(256) && s.p50 <= Duration::from_micros(1024));
+        assert!(s.max == Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let h = LatencyHistogram::new();
+        h.record_batch(4);
+        h.record_batch(8);
+        let s = h.snapshot();
+        assert_eq!(s.items, 12);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_is_printable() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_millis(3));
+        assert!(h.snapshot().summary().contains("n=1"));
+    }
+}

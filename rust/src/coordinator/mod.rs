@@ -1,0 +1,26 @@
+//! The serving coordinator — L3 of the stack.
+//!
+//! The paper's contribution is a kernel, so the coordinator is a thin but
+//! real inference driver: a request router in front of per-backend worker
+//! threads, each with a dynamic batcher (size + deadline), latency
+//! metrics, and a choice of backend:
+//!
+//! * [`backend::NativeBackend`] — the Rust kernel library executing a
+//!   [`crate::nn::Model`] with a per-backend [`crate::nn::ExecCtx`]
+//!   (i.e. GEMM vs Sliding Window on identical weights).
+//! * [`backend::PjrtBackend`] — an AOT JAX/Pallas artifact executed via
+//!   [`crate::runtime::Engine`] (Python never on the request path).
+//!
+//! tokio is unavailable in this offline environment; the coordinator uses
+//! std threads + channels, which for a single-node single-core serving
+//! driver is equivalent (documented in DESIGN.md §Substitutions).
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use backend::{Backend, BackendSpec, NativeBackend, PjrtBackend};
+pub use batcher::BatchPolicy;
+pub use metrics::{LatencyHistogram, MetricsSnapshot};
+pub use server::{Coordinator, InferError, InferResponse};

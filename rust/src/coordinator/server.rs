@@ -1,0 +1,314 @@
+//! The coordinator: a router in front of per-backend worker threads,
+//! each running a dynamic-batching loop.
+//!
+//! ```text
+//! client ──submit(backend, item)──▶ router ──queue──▶ worker(backend A)
+//!                                        └────queue──▶ worker(backend B)
+//! worker: next_batch → stack items → Backend::infer → split → reply
+//! ```
+
+use super::backend::{Backend, BackendSpec};
+use super::batcher::{next_batch, BatchOutcome, BatchPolicy};
+use super::metrics::{LatencyHistogram, MetricsSnapshot};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A completed inference.
+#[derive(Debug)]
+pub struct InferResponse {
+    /// Request id (assigned by the coordinator, monotonically increasing).
+    pub id: u64,
+    /// Model output for this item (batch dimension removed).
+    pub output: Result<Tensor, InferError>,
+    /// End-to-end latency (submit → reply).
+    pub latency: std::time::Duration,
+}
+
+/// Inference failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InferError {
+    /// Unknown backend name.
+    UnknownBackend(String),
+    /// Input shape didn't match the backend's item shape.
+    BadShape {
+        /// What the backend expects.
+        expected: Vec<usize>,
+        /// What the request carried.
+        got: Vec<usize>,
+    },
+    /// The backend failed.
+    Backend(String),
+    /// The coordinator is shutting down.
+    Shutdown,
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferError::UnknownBackend(b) => write!(f, "unknown backend '{b}'"),
+            InferError::BadShape { expected, got } => {
+                write!(f, "bad input shape {got:?}, expected {expected:?}")
+            }
+            InferError::Backend(e) => write!(f, "backend error: {e}"),
+            InferError::Shutdown => write!(f, "coordinator shut down"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
+
+struct Request {
+    id: u64,
+    input: Tensor,
+    submitted: Instant,
+    reply: Sender<InferResponse>,
+}
+
+struct Worker {
+    queue: Sender<Request>,
+    item_shape: Vec<usize>,
+    metrics: Arc<LatencyHistogram>,
+    join: JoinHandle<()>,
+}
+
+/// The request router + worker pool.
+pub struct Coordinator {
+    workers: HashMap<String, Worker>,
+    next_id: AtomicU64,
+}
+
+impl Coordinator {
+    /// Build a coordinator: one worker thread per backend spec, each with
+    /// its own queue and batch policy. The backend itself is constructed
+    /// *on* the worker thread (PJRT handles are not `Send`); if the
+    /// factory fails, the worker answers every request with the error.
+    pub fn new(backends: Vec<BackendSpec>, policy: BatchPolicy) -> Self {
+        let mut workers = HashMap::new();
+        for spec in backends {
+            let (tx, rx) = channel::<Request>();
+            let metrics = Arc::new(LatencyHistogram::new());
+            let m2 = Arc::clone(&metrics);
+            let name = spec.name.clone();
+            let item_shape = spec.item_shape.clone();
+            let factory = spec.factory;
+            let join = std::thread::Builder::new()
+                .name(format!("swconv-worker-{name}"))
+                .spawn(move || match factory() {
+                    Ok(mut b) => worker_loop(&mut *b, &rx, policy, &m2),
+                    Err(e) => {
+                        let msg = e.to_string();
+                        // Answer everything with the construction error.
+                        while let Ok(r) = rx.recv() {
+                            let _ = r.reply.send(InferResponse {
+                                id: r.id,
+                                output: Err(InferError::Backend(msg.clone())),
+                                latency: r.submitted.elapsed(),
+                            });
+                        }
+                    }
+                })
+                .expect("spawn worker");
+            workers.insert(name, Worker { queue: tx, item_shape, metrics, join });
+        }
+        Coordinator { workers, next_id: AtomicU64::new(0) }
+    }
+
+    /// Registered backend names (sorted).
+    pub fn backends(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.workers.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Submit one item to a backend; the response arrives on the returned
+    /// channel. Shape is validated here so errors are immediate.
+    pub fn submit(
+        &self,
+        backend: &str,
+        input: Tensor,
+    ) -> Result<Receiver<InferResponse>, InferError> {
+        let w = self
+            .workers
+            .get(backend)
+            .ok_or_else(|| InferError::UnknownBackend(backend.to_string()))?;
+        if input.dims() != &w.item_shape[..] {
+            return Err(InferError::BadShape {
+                expected: w.item_shape.clone(),
+                got: input.dims().to_vec(),
+            });
+        }
+        let (reply, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        w.queue
+            .send(Request { id, input, submitted: Instant::now(), reply })
+            .map_err(|_| InferError::Shutdown)?;
+        Ok(rx)
+    }
+
+    /// Submit and block for the result.
+    pub fn infer(&self, backend: &str, input: Tensor) -> Result<InferResponse, InferError> {
+        let rx = self.submit(backend, input)?;
+        rx.recv().map_err(|_| InferError::Shutdown)
+    }
+
+    /// Metrics snapshot for one backend.
+    pub fn metrics(&self, backend: &str) -> Option<MetricsSnapshot> {
+        self.workers.get(backend).map(|w| w.metrics.snapshot())
+    }
+
+    /// Shut down: close queues and join workers. In-flight requests are
+    /// completed first.
+    pub fn shutdown(self) {
+        let mut joins = Vec::new();
+        for (_, w) in self.workers {
+            drop(w.queue);
+            joins.push(w.join);
+        }
+        for j in joins {
+            let _ = j.join();
+        }
+    }
+}
+
+fn worker_loop(
+    backend: &mut dyn Backend,
+    rx: &Receiver<Request>,
+    policy: BatchPolicy,
+    metrics: &LatencyHistogram,
+) {
+    let item_shape = backend.item_shape().to_vec();
+    let item: usize = item_shape.iter().product();
+    loop {
+        let batch = match next_batch(rx, &policy) {
+            BatchOutcome::Batch(b) => b,
+            BatchOutcome::Closed => return,
+        };
+        let b = batch.len();
+        metrics.record_batch(b);
+
+        // Stack items into [b, …item_shape].
+        let mut data = Vec::with_capacity(b * item);
+        for r in &batch {
+            data.extend_from_slice(r.input.as_slice());
+        }
+        let mut shape = vec![b];
+        shape.extend_from_slice(&item_shape);
+        let stacked = Tensor::from_vec(data, &shape);
+
+        match backend.infer(&stacked) {
+            Ok(out) => {
+                let out_item: usize = out.dims()[1..].iter().product();
+                let out_shape = out.dims()[1..].to_vec();
+                for (i, r) in batch.into_iter().enumerate() {
+                    let row = out.as_slice()[i * out_item..(i + 1) * out_item].to_vec();
+                    let latency = r.submitted.elapsed();
+                    metrics.record(latency);
+                    let _ = r.reply.send(InferResponse {
+                        id: r.id,
+                        output: Ok(Tensor::from_vec(row, &out_shape)),
+                        latency,
+                    });
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for r in batch {
+                    let latency = r.submitted.elapsed();
+                    let _ = r.reply.send(InferResponse {
+                        id: r.id,
+                        output: Err(InferError::Backend(msg.clone())),
+                        latency,
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::ConvAlgo;
+    use crate::nn::zoo::simple_cnn;
+    use crate::nn::ExecCtx;
+    use crate::coordinator::backend::BackendSpec;
+    use std::time::Duration;
+
+    fn coord() -> Coordinator {
+        let backends = vec![
+            BackendSpec::native("sliding", simple_cnn(10, 1), ExecCtx { algo: ConvAlgo::Sliding }),
+            BackendSpec::native("gemm", simple_cnn(10, 1), ExecCtx { algo: ConvAlgo::Im2colGemm }),
+        ];
+        Coordinator::new(
+            backends,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        )
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let c = coord();
+        let x = Tensor::randn(&[1, 28, 28], 1);
+        let r = c.infer("sliding", x).unwrap();
+        let y = r.output.unwrap();
+        assert_eq!(y.dims(), &[10]);
+        let s: f32 = y.as_slice().iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_backend_rejected() {
+        let c = coord();
+        let x = Tensor::zeros(&[1, 28, 28]);
+        assert!(matches!(
+            c.infer("nope", x),
+            Err(InferError::UnknownBackend(_))
+        ));
+        c.shutdown();
+    }
+
+    #[test]
+    fn bad_shape_rejected_immediately() {
+        let c = coord();
+        let x = Tensor::zeros(&[3, 28, 28]);
+        assert!(matches!(c.infer("sliding", x), Err(InferError::BadShape { .. })));
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_all_answered_and_batched() {
+        let c = coord();
+        let rxs: Vec<_> = (0..16)
+            .map(|i| c.submit("sliding", Tensor::randn(&[1, 28, 28], i as u64)).unwrap())
+            .collect();
+        let mut ids = Vec::new();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.output.is_ok());
+            ids.push(r.id);
+        }
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 16, "no lost or duplicated responses");
+        let m = c.metrics("sliding").unwrap();
+        assert_eq!(m.items, 16);
+        assert!(m.batches < 16, "some batching should occur: {m:?}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn backends_agree_through_the_server() {
+        let c = coord();
+        let x = Tensor::randn(&[1, 28, 28], 33);
+        let a = c.infer("sliding", x.clone()).unwrap().output.unwrap();
+        let b = c.infer("gemm", x).unwrap().output.unwrap();
+        assert!(a.allclose(&b, 1e-4));
+        c.shutdown();
+    }
+}

@@ -1,0 +1,20 @@
+//! Benchmark harness: timing, workload generation, parameter sweeps and
+//! the Advisor-style roofline model.
+//!
+//! criterion is not available in this offline environment, so [`timing`]
+//! implements the measurement loop (warm-up, adaptive iteration count,
+//! median-of-samples) the benches use; the substitution is recorded in
+//! DESIGN.md. [`roofline`] replaces Intel Advisor for Fig. 2: machine
+//! peaks are *measured* (FMA micro-kernel, stream triad) and each kernel's
+//! arithmetic intensity is *counted* analytically.
+
+pub mod report;
+pub mod roofline;
+pub mod sweep;
+pub mod timing;
+pub mod workload;
+
+pub use roofline::{machine_peaks, MachinePeaks};
+pub use sweep::{fig1_speedup_sweep, fig2_throughput_sweep, Fig1Row, Fig2Row};
+pub use timing::{bench, Stats};
+pub use workload::ConvCase;

@@ -1,0 +1,166 @@
+//! The paper's evaluation sweeps.
+//!
+//! * [`fig1_speedup_sweep`] — Fig. 1: speedup of 2-D Sliding Window
+//!   convolution over the GEMM (`MlasConv`-style) baseline as a function
+//!   of filter size, for the auto policy and the forced generic/compound
+//!   variants.
+//! * [`fig2_throughput_sweep`] — Fig. 2: arithmetic throughput (GFLOP/s)
+//!   of each kernel against the measured roofline.
+
+use super::roofline::machine_peaks;
+use super::timing::{bench_quick, Stats};
+use super::workload::ConvCase;
+use crate::kernels::{conv2d, ConvAlgo};
+use crate::tensor::Tensor;
+
+/// One Fig. 1 data point.
+#[derive(Clone, Debug)]
+pub struct Fig1Row {
+    /// Filter size `k`.
+    pub k: usize,
+    /// GEMM baseline time (seconds).
+    pub t_gemm: f64,
+    /// Sliding (auto policy) time.
+    pub t_sliding: f64,
+    /// Forced generic kernel time, if the width is supported.
+    pub t_generic: Option<f64>,
+    /// Forced compound kernel time.
+    pub t_compound: Option<f64>,
+    /// Auto-policy speedup over GEMM.
+    pub speedup: f64,
+    /// Which row kernel the auto policy used ("custom"/"generic"/"compound").
+    pub kernel_used: &'static str,
+}
+
+/// One Fig. 2 data point.
+#[derive(Clone, Debug)]
+pub struct Fig2Row {
+    /// Filter size `k`.
+    pub k: usize,
+    /// Sliding kernel throughput, GFLOP/s.
+    pub sliding_gflops: f64,
+    /// GEMM kernel throughput, GFLOP/s.
+    pub gemm_gflops: f64,
+    /// Roofline ceiling at the sliding kernel's arithmetic intensity.
+    pub sliding_roof: f64,
+    /// Roofline ceiling at the GEMM kernel's arithmetic intensity.
+    pub gemm_roof: f64,
+    /// Machine compute peak, GFLOP/s.
+    pub peak: f64,
+}
+
+fn time_algo(case: &ConvCase, x: &Tensor, w: &Tensor, algo: ConvAlgo) -> Option<Stats> {
+    if !algo.supports_width(case.k) {
+        return None;
+    }
+    Some(bench_quick(|| conv2d(x, w, None, &case.params, algo)))
+}
+
+/// Which row kernel the auto policy picks for width `k` (paper §2).
+pub fn auto_kernel_name(k: usize) -> &'static str {
+    match k {
+        3 | 5 => "custom",
+        _ if k <= crate::kernels::rowconv::GENERIC_MAX_K => "generic",
+        _ => "compound",
+    }
+}
+
+/// Run the Fig. 1 sweep over the given filter sizes.
+///
+/// `make_case` maps a filter size to a workload (use
+/// `ConvCase::square(c, hw, k)` for the paper's setup).
+pub fn fig1_speedup_sweep(
+    ks: &[usize],
+    make_case: impl Fn(usize) -> ConvCase,
+) -> Vec<Fig1Row> {
+    let mut rows = Vec::with_capacity(ks.len());
+    for &k in ks {
+        let case = make_case(k);
+        let x = case.input();
+        let w = case.weights();
+        let t_gemm = time_algo(&case, &x, &w, ConvAlgo::Im2colGemm).unwrap().secs();
+        let t_sliding = time_algo(&case, &x, &w, ConvAlgo::Sliding).unwrap().secs();
+        let t_generic = time_algo(&case, &x, &w, ConvAlgo::SlidingGeneric).map(|s| s.secs());
+        let t_compound = time_algo(&case, &x, &w, ConvAlgo::SlidingCompound).map(|s| s.secs());
+        rows.push(Fig1Row {
+            k,
+            t_gemm,
+            t_sliding,
+            t_generic,
+            t_compound,
+            speedup: t_gemm / t_sliding,
+            kernel_used: auto_kernel_name(k),
+        });
+    }
+    rows
+}
+
+/// Run the Fig. 2 sweep over the given filter sizes.
+pub fn fig2_throughput_sweep(
+    ks: &[usize],
+    make_case: impl Fn(usize) -> ConvCase,
+) -> Vec<Fig2Row> {
+    let peaks = machine_peaks();
+    let mut rows = Vec::with_capacity(ks.len());
+    for &k in ks {
+        let case = make_case(k);
+        let x = case.input();
+        let w = case.weights();
+        let flops = case.flops();
+        let sliding = time_algo(&case, &x, &w, ConvAlgo::Sliding).unwrap().gflops(flops);
+        let gemm = time_algo(&case, &x, &w, ConvAlgo::Im2colGemm).unwrap().gflops(flops);
+        rows.push(Fig2Row {
+            k,
+            sliding_gflops: sliding,
+            gemm_gflops: gemm,
+            sliding_roof: peaks.attainable(case.intensity(case.sliding_bytes())),
+            gemm_roof: peaks.attainable(case.intensity(case.gemm_bytes())),
+            peak: peaks.gflops,
+        });
+    }
+    rows
+}
+
+/// Default Fig. 1 / Fig. 2 filter-size grid: every size 2–18 (the custom
+/// and generic regimes plus the crossover), then the compound regime
+/// sampled to 49 where the zigzag lives.
+pub fn default_k_grid() -> Vec<usize> {
+    let mut ks: Vec<usize> = (2..=18).collect();
+    ks.extend([20, 22, 24, 26, 28, 31, 32, 33, 40, 47, 48, 49]);
+    ks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_kernel_policy() {
+        assert_eq!(auto_kernel_name(3), "custom");
+        assert_eq!(auto_kernel_name(5), "custom");
+        assert_eq!(auto_kernel_name(4), "generic");
+        assert_eq!(auto_kernel_name(17), "generic");
+        assert_eq!(auto_kernel_name(18), "compound");
+    }
+
+    #[test]
+    fn sweeps_produce_rows() {
+        // Tiny geometry so the test is fast even in debug builds.
+        let ks = [3, 18];
+        let rows = fig1_speedup_sweep(&ks, |k| ConvCase::square(1, 32, k));
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].t_gemm > 0.0 && rows[0].t_sliding > 0.0);
+        assert!(rows[0].t_generic.is_some());
+        assert!(rows[1].t_generic.is_none(), "k=18 exceeds generic");
+        let rows2 = fig2_throughput_sweep(&[3], |k| ConvCase::square(1, 32, k));
+        assert!(rows2[0].sliding_gflops > 0.0);
+        assert!(rows2[0].peak >= rows2[0].sliding_roof * 0.99);
+    }
+
+    #[test]
+    fn grid_covers_regimes() {
+        let g = default_k_grid();
+        assert!(g.contains(&3) && g.contains(&17) && g.contains(&18) && g.contains(&33));
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -1,0 +1,130 @@
+//! Measurement loop: warm-up, adaptive iteration count, robust statistics.
+//!
+//! All paper experiments are single-threaded (paper §2: "all tests have
+//! been run in a single-core configuration"), so a simple wall-clock loop
+//! with median aggregation is accurate and deterministic enough; the
+//! benches report median and MAD so outliers (scheduler preemption) are
+//! visible instead of folded into a mean.
+
+use std::time::{Duration, Instant};
+
+/// Robust summary of one benchmark.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    /// Median time per iteration.
+    pub median: Duration,
+    /// Minimum observed time per iteration.
+    pub min: Duration,
+    /// Median absolute deviation.
+    pub mad: Duration,
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Iterations per sample.
+    pub iters_per_sample: usize,
+}
+
+impl Stats {
+    /// Median in seconds.
+    pub fn secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+
+    /// Throughput in GFLOP/s given the per-iteration FLOP count.
+    pub fn gflops(&self, flops: u64) -> f64 {
+        flops as f64 / self.secs() / 1e9
+    }
+}
+
+/// Benchmark a closure: warm up, pick an iteration count so one sample
+/// takes ≳ `sample_target`, then time `samples` samples and report robust
+/// statistics.
+///
+/// The closure should return something observable (its result is passed
+/// to `std::hint::black_box` to stop dead-code elimination).
+pub fn bench_config<T>(
+    mut f: impl FnMut() -> T,
+    samples: usize,
+    sample_target: Duration,
+) -> Stats {
+    // Warm-up and calibration: run until we have a stable single-shot
+    // estimate (at least 3 runs, at least ~5 ms total).
+    let mut one = Duration::ZERO;
+    let calib_start = Instant::now();
+    let mut calib_runs = 0u32;
+    while calib_runs < 3 || calib_start.elapsed() < Duration::from_millis(5) {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        one = t.elapsed().max(Duration::from_nanos(1));
+        calib_runs += 1;
+        if calib_runs > 1000 {
+            break;
+        }
+    }
+    let iters = (sample_target.as_nanos() / one.as_nanos()).clamp(1, 1_000_000) as usize;
+
+    let mut times: Vec<Duration> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        times.push((t.elapsed() / iters as u32).max(Duration::from_nanos(1)));
+    }
+    times.sort();
+    let median = times[times.len() / 2];
+    let min = times[0];
+    let mut devs: Vec<Duration> = times
+        .iter()
+        .map(|&t| if t > median { t - median } else { median - t })
+        .collect();
+    devs.sort();
+    Stats { median, min, mad: devs[devs.len() / 2], samples, iters_per_sample: iters }
+}
+
+/// Benchmark with the default configuration (9 samples of ≥ 20 ms).
+pub fn bench<T>(f: impl FnMut() -> T) -> Stats {
+    bench_config(f, 9, Duration::from_millis(20))
+}
+
+/// Quick benchmark for sweeps with many points (5 samples of ≥ 10 ms).
+pub fn bench_quick<T>(f: impl FnMut() -> T) -> Stats {
+    bench_config(f, 5, Duration::from_millis(10))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_orders_correctly() {
+        let mut x = 0u64;
+        let s = bench_config(
+            || {
+                // black_box inside the loop so the whole body cannot be
+                // const-folded away in release builds.
+                for i in 0..100u64 {
+                    x = x.wrapping_add(std::hint::black_box(i * i));
+                }
+                x
+            },
+            5,
+            Duration::from_micros(500),
+        );
+        assert!(s.min <= s.median);
+        assert!(s.samples == 5);
+        assert!(s.iters_per_sample >= 1);
+        assert!(s.secs() > 0.0);
+    }
+
+    #[test]
+    fn gflops_conversion() {
+        let s = Stats {
+            median: Duration::from_secs(1),
+            min: Duration::from_secs(1),
+            mad: Duration::ZERO,
+            samples: 1,
+            iters_per_sample: 1,
+        };
+        assert!((s.gflops(2_000_000_000) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,150 @@
+//! Workload generation for the paper's experiments.
+//!
+//! A [`ConvCase`] captures one point of the Fig. 1 / Fig. 2 sweeps:
+//! geometry + filter size, with deterministic input/weight tensors and
+//! the analytic FLOP/byte counts the roofline model needs.
+
+use crate::kernels::{im2col::im2col_bytes, Conv2dParams};
+use crate::tensor::Tensor;
+
+/// One convolution benchmark case.
+#[derive(Clone, Debug)]
+pub struct ConvCase {
+    /// Batch size.
+    pub n: usize,
+    /// Input channels.
+    pub c_in: usize,
+    /// Output channels.
+    pub c_out: usize,
+    /// Input height.
+    pub h: usize,
+    /// Input width.
+    pub w: usize,
+    /// Filter size (kh = kw = k).
+    pub k: usize,
+    /// Stride/pad/groups.
+    pub params: Conv2dParams,
+    /// RNG seed for the tensors.
+    pub seed: u64,
+}
+
+impl ConvCase {
+    /// The paper's Fig. 1/2 style case: single image, square geometry,
+    /// valid padding, unit stride.
+    pub fn square(c: usize, hw: usize, k: usize) -> Self {
+        ConvCase {
+            n: 1,
+            c_in: c,
+            c_out: c,
+            h: hw,
+            w: hw,
+            k,
+            params: Conv2dParams::default(),
+            seed: 0xC0FFEE + k as u64,
+        }
+    }
+
+    /// Output spatial size.
+    pub fn out_size(&self) -> (usize, usize) {
+        self.params.out_size(self.h, self.w, self.k, self.k)
+    }
+
+    /// Deterministic input tensor `[n, c_in, h, w]`.
+    pub fn input(&self) -> Tensor {
+        Tensor::rand_uniform(&[self.n, self.c_in, self.h, self.w], -1.0, 1.0, self.seed)
+    }
+
+    /// Deterministic weight tensor `[c_out, c_in/g, k, k]`.
+    pub fn weights(&self) -> Tensor {
+        Tensor::rand_uniform(
+            &[self.c_out, self.c_in / self.params.groups, self.k, self.k],
+            -1.0,
+            1.0,
+            self.seed + 1,
+        )
+    }
+
+    /// FLOPs of one convolution (2 per multiply-accumulate).
+    pub fn flops(&self) -> u64 {
+        let (oh, ow) = self.out_size();
+        let taps = (self.c_in / self.params.groups) * self.k * self.k;
+        (2 * self.n * self.c_out * oh * ow * taps) as u64
+    }
+
+    /// Minimum HBM/DRAM traffic in bytes for the *sliding* kernel: read
+    /// the input once per filter row tap that misses cache — model as one
+    /// input read + one output write + weights (compulsory misses only).
+    pub fn sliding_bytes(&self) -> u64 {
+        let (oh, ow) = self.out_size();
+        let input = self.n * self.c_in * self.h * self.w;
+        let output = self.n * self.c_out * oh * ow;
+        let weights = self.c_out * (self.c_in / self.params.groups) * self.k * self.k;
+        (4 * (input + output + weights)) as u64
+    }
+
+    /// DRAM traffic for the `im2col` baseline: the column matrix is both
+    /// written and read back (k² bloat), plus output and weights.
+    pub fn gemm_bytes(&self) -> u64 {
+        let (oh, ow) = self.out_size();
+        let col = self.n
+            * im2col_bytes(self.c_in / self.params.groups, self.k, self.k, oh, ow)
+            * self.params.groups;
+        let input = 4 * self.n * self.c_in * self.h * self.w;
+        let output = 4 * self.n * self.c_out * oh * ow;
+        let weights = 4 * self.c_out * (self.c_in / self.params.groups) * self.k * self.k;
+        (input + 2 * col + output + weights) as u64
+    }
+
+    /// Arithmetic intensity (FLOP/byte) for the given algorithm's traffic
+    /// model.
+    pub fn intensity(&self, bytes: u64) -> f64 {
+        self.flops() as f64 / bytes as f64
+    }
+
+    /// Short id for reports: `c{c}_{h}x{w}_k{k}`.
+    pub fn id(&self) -> String {
+        format!("c{}_{}x{}_k{}", self.c_in, self.h, self.w, self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_case_geometry() {
+        let c = ConvCase::square(4, 64, 5);
+        assert_eq!(c.out_size(), (60, 60));
+        assert_eq!(c.input().dims(), &[1, 4, 64, 64]);
+        assert_eq!(c.weights().dims(), &[4, 4, 5, 5]);
+    }
+
+    #[test]
+    fn flop_count_matches_manual() {
+        let c = ConvCase::square(2, 10, 3);
+        // 2 * 1 * 2 * 8*8 * (2*9) = 4608
+        assert_eq!(c.flops(), 2 * 2 * 64 * 18);
+    }
+
+    #[test]
+    fn gemm_traffic_exceeds_sliding() {
+        let c = ConvCase::square(8, 64, 7);
+        assert!(c.gemm_bytes() > c.sliding_bytes());
+        // The bloat grows with k².
+        let c2 = ConvCase::square(8, 64, 14);
+        let ratio7 = c.gemm_bytes() as f64 / c.sliding_bytes() as f64;
+        let ratio14 = c2.gemm_bytes() as f64 / c2.sliding_bytes() as f64;
+        assert!(ratio14 > ratio7);
+    }
+
+    #[test]
+    fn intensity_positive() {
+        let c = ConvCase::square(4, 32, 5);
+        assert!(c.intensity(c.sliding_bytes()) > c.intensity(c.gemm_bytes()));
+    }
+
+    #[test]
+    fn ids_stable() {
+        assert_eq!(ConvCase::square(3, 32, 5).id(), "c3_32x32_k5");
+    }
+}

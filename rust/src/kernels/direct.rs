@@ -1,0 +1,198 @@
+//! Naïve direct convolution — the correctness oracle every other kernel is
+//! tested against, and the "same arithmetic-operation count" baseline the
+//! paper compares memory behaviour with.
+//!
+//! Seven nested scalar loops, no blocking, no vectorisation hints. It
+//! performs exactly `2 · N · Cout · OH · OW · (Cin/g) · kh · kw` FLOPs —
+//! the same count as GEMM and sliding convolution (paper §2: "the number
+//! of arithmetic operations performed by the sliding convolution is the
+//! same as the naïve or GEMM-based algorithms").
+
+use super::{Conv1dParams, Conv2dParams};
+use crate::tensor::Tensor;
+
+/// Direct 2-D convolution (cross-correlation, DNN convention).
+///
+/// * `x` — input `[n, c_in, h, w]`
+/// * `w` — weights `[c_out, c_in / groups, kh, kw]`
+/// * `bias` — optional `[c_out]`
+///
+/// Returns `[n, c_out, oh, ow]`.
+///
+/// # Panics
+/// On any shape inconsistency.
+pub fn conv2d_direct(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+) -> Tensor {
+    assert_eq!(x.rank(), 4, "input must be NCHW");
+    assert_eq!(w.rank(), 4, "weights must be [cout, cin/g, kh, kw]");
+    let (n, c_in, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (c_out, c_in_g, kh, kw) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+    let g = p.groups;
+    assert!(g >= 1 && c_in % g == 0 && c_out % g == 0, "bad groups {g}");
+    assert_eq!(c_in / g, c_in_g, "weight c_in/{g} mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), c_out, "bias length");
+    }
+    let (oh, ow) = p.out_size(h, win, kh, kw);
+    let (sh, sw) = p.stride;
+    let (ph, pw) = p.pad;
+
+    let mut out = Tensor::zeros(&[n, c_out, oh, ow]);
+    for ni in 0..n {
+        for co in 0..c_out {
+            let grp = co / (c_out / g);
+            let b = bias.map_or(0.0, |b| b[co]);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = b;
+                    for cig in 0..c_in_g {
+                        let ci = grp * c_in_g + cig;
+                        for ky in 0..kh {
+                            let iy = oy * sh + ky;
+                            if iy < ph || iy >= h + ph {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let ix = ox * sw + kx;
+                                if ix < pw || ix >= win + pw {
+                                    continue;
+                                }
+                                acc += x.at4(ni, ci, iy - ph, ix - pw)
+                                    * w.at4(co, cig, ky, kx);
+                            }
+                        }
+                    }
+                    *out.at4_mut(ni, co, oy, ox) = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Direct 1-D convolution.
+///
+/// * `x` — `[c_in, l]`
+/// * `w` — `[c_out, c_in, k]`
+///
+/// Returns `[c_out, l_out]`.
+pub fn conv1d_direct(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+) -> Tensor {
+    assert_eq!(x.rank(), 2, "input must be [c, l]");
+    assert_eq!(w.rank(), 3, "weights must be [cout, cin, k]");
+    let (c_in, l) = (x.dim(0), x.dim(1));
+    let (c_out, c_in_w, k) = (w.dim(0), w.dim(1), w.dim(2));
+    assert_eq!(c_in, c_in_w, "c_in mismatch");
+    let lo = p.out_len(l, k);
+
+    let xs = x.as_slice();
+    let ws = w.as_slice();
+    let mut out = Tensor::zeros(&[c_out, lo]);
+    for co in 0..c_out {
+        let b = bias.map_or(0.0, |b| b[co]);
+        for o in 0..lo {
+            let mut acc = b;
+            for ci in 0..c_in {
+                for j in 0..k {
+                    let i = o * p.stride + j;
+                    if i < p.pad || i >= l + p.pad {
+                        continue;
+                    }
+                    acc += xs[ci * l + i - p.pad] * ws[(co * c_in + ci) * k + j];
+                }
+            }
+            out.as_mut_slice()[co * lo + o] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 1x1x3x3 input, 1x1x2x2 ones filter: each output is the window sum.
+    #[test]
+    fn conv2d_window_sums() {
+        let x = Tensor::iota(&[1, 1, 3, 3]);
+        let w = Tensor::full(&[1, 1, 2, 2], 1.0);
+        let y = conv2d_direct(&x, &w, None, &Conv2dParams::default());
+        assert_eq!(y.dims(), &[1, 1, 2, 2]);
+        // windows: [0,1,3,4]=8, [1,2,4,5]=12, [3,4,6,7]=20, [4,5,7,8]=24
+        assert_eq!(y.as_slice(), &[8.0, 12.0, 20.0, 24.0]);
+    }
+
+    #[test]
+    fn conv2d_bias_added() {
+        let x = Tensor::zeros(&[1, 1, 2, 2]);
+        let w = Tensor::full(&[2, 1, 1, 1], 1.0);
+        let y = conv2d_direct(&x, &w, Some(&[1.5, -2.0]), &Conv2dParams::default());
+        assert_eq!(y.at4(0, 0, 0, 0), 1.5);
+        assert_eq!(y.at4(0, 1, 1, 1), -2.0);
+    }
+
+    #[test]
+    fn conv2d_padding_zero_border() {
+        // 1x1 input, 3x3 ones filter, same padding: output = input value.
+        let x = Tensor::full(&[1, 1, 1, 1], 4.0);
+        let w = Tensor::full(&[1, 1, 3, 3], 1.0);
+        let y = conv2d_direct(&x, &w, None, &Conv2dParams::same(3));
+        assert_eq!(y.dims(), &[1, 1, 1, 1]);
+        assert_eq!(y.as_slice()[0], 4.0);
+    }
+
+    #[test]
+    fn conv2d_stride_subsamples() {
+        let x = Tensor::iota(&[1, 1, 4, 4]);
+        let w = Tensor::full(&[1, 1, 1, 1], 1.0);
+        let p = Conv2dParams { stride: (2, 2), pad: (0, 0), groups: 1 };
+        let y = conv2d_direct(&x, &w, None, &p);
+        assert_eq!(y.dims(), &[1, 1, 2, 2]);
+        assert_eq!(y.as_slice(), &[0.0, 2.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn conv2d_depthwise_groups() {
+        // 2 channels, groups=2: each output channel sees only its input.
+        let mut x = Tensor::zeros(&[1, 2, 1, 2]);
+        x.as_mut_slice().copy_from_slice(&[1.0, 2.0, 10.0, 20.0]);
+        let w = Tensor::full(&[2, 1, 1, 1], 1.0);
+        let p = Conv2dParams { stride: (1, 1), pad: (0, 0), groups: 2 };
+        let y = conv2d_direct(&x, &w, None, &p);
+        assert_eq!(y.as_slice(), &[1.0, 2.0, 10.0, 20.0]);
+    }
+
+    #[test]
+    fn conv2d_multichannel_sums_channels() {
+        let x = Tensor::full(&[1, 3, 2, 2], 1.0);
+        let w = Tensor::full(&[1, 3, 2, 2], 1.0);
+        let y = conv2d_direct(&x, &w, None, &Conv2dParams::default());
+        assert_eq!(y.as_slice(), &[12.0]); // 3 channels * 4 taps
+    }
+
+    #[test]
+    fn conv1d_basic() {
+        let x = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[1, 4]);
+        let w = Tensor::from_vec(vec![1.0, -1.0], &[1, 1, 2]);
+        let y = conv1d_direct(&x, &w, None, &Conv1dParams::default());
+        assert_eq!(y.as_slice(), &[-1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn conv1d_padded_stride() {
+        let x = Tensor::from_vec(vec![1.0, 1.0, 1.0], &[1, 3]);
+        let w = Tensor::from_vec(vec![1.0, 1.0, 1.0], &[1, 1, 3]);
+        let p = Conv1dParams { stride: 2, pad: 1 };
+        let y = conv1d_direct(&x, &w, None, &p);
+        // padded signal 0 1 1 1 0; windows at 0 and 2: [0,1,1]=2, [1,1,0]=2
+        assert_eq!(y.as_slice(), &[2.0, 2.0]);
+    }
+}

@@ -1,0 +1,155 @@
+//! Algorithm selection: one entry point per primitive, parameterised by
+//! [`ConvAlgo`] so callers (layers, benchmarks, the coordinator's router)
+//! can pit implementations against each other on identical inputs.
+
+use super::direct::{conv1d_direct, conv2d_direct};
+use super::im2col::conv2d_im2col;
+use super::sliding1d::conv1d_sliding;
+use super::sliding2d::{conv2d_sliding, SlideVariant};
+use super::{Conv1dParams, Conv2dParams};
+use crate::tensor::Tensor;
+
+/// Which convolution implementation to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ConvAlgo {
+    /// Naïve scalar loops — oracle/baseline.
+    Direct,
+    /// `im2col` + blocked GEMM — the `MlasConv`-style baseline.
+    Im2colGemm,
+    /// Sliding Window, paper §2 auto policy (custom 3/5 → generic ≤17 →
+    /// compound).
+    Sliding,
+    /// Sliding Window, forced generic in-vector kernel (k ≤ 17).
+    SlidingGeneric,
+    /// Sliding Window, forced compound-vector kernel.
+    SlidingCompound,
+}
+
+impl ConvAlgo {
+    /// All algorithms, in the order benchmarks report them.
+    pub const ALL: [ConvAlgo; 5] = [
+        ConvAlgo::Direct,
+        ConvAlgo::Im2colGemm,
+        ConvAlgo::Sliding,
+        ConvAlgo::SlidingGeneric,
+        ConvAlgo::SlidingCompound,
+    ];
+
+    /// Short stable name for reports and the CLI.
+    pub fn name(self) -> &'static str {
+        match self {
+            ConvAlgo::Direct => "direct",
+            ConvAlgo::Im2colGemm => "gemm",
+            ConvAlgo::Sliding => "sliding",
+            ConvAlgo::SlidingGeneric => "sliding-generic",
+            ConvAlgo::SlidingCompound => "sliding-compound",
+        }
+    }
+
+    /// Parse a CLI name (inverse of [`ConvAlgo::name`]).
+    pub fn parse(s: &str) -> Option<ConvAlgo> {
+        Self::ALL.into_iter().find(|a| a.name() == s)
+    }
+
+    /// Whether this algorithm can evaluate filter width `kw`.
+    pub fn supports_width(self, kw: usize) -> bool {
+        match self {
+            ConvAlgo::SlidingGeneric => SlideVariant::Generic.supports(kw),
+            ConvAlgo::SlidingCompound => SlideVariant::Compound.supports(kw),
+            _ => true,
+        }
+    }
+}
+
+/// 2-D convolution with the chosen algorithm.
+///
+/// * `x` — `[n, c_in, h, w]`, `w` — `[c_out, c_in/groups, kh, kw]`,
+///   `bias` — optional `[c_out]`. Returns `[n, c_out, oh, ow]`.
+pub fn conv2d(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+    algo: ConvAlgo,
+) -> Tensor {
+    match algo {
+        ConvAlgo::Direct => conv2d_direct(x, w, bias, p),
+        ConvAlgo::Im2colGemm => conv2d_im2col(x, w, bias, p),
+        ConvAlgo::Sliding => conv2d_sliding(x, w, bias, p, SlideVariant::Auto),
+        ConvAlgo::SlidingGeneric => conv2d_sliding(x, w, bias, p, SlideVariant::Generic),
+        ConvAlgo::SlidingCompound => conv2d_sliding(x, w, bias, p, SlideVariant::Compound),
+    }
+}
+
+/// 1-D convolution with the chosen algorithm (`Im2colGemm` and the forced
+/// sliding variants collapse to their natural 1-D counterparts).
+pub fn conv1d(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    algo: ConvAlgo,
+) -> Tensor {
+    match algo {
+        ConvAlgo::Direct => conv1d_direct(x, w, bias, p),
+        // A 1-D convolution is a 2-D one with kh = 1: reuse the kernels.
+        ConvAlgo::Im2colGemm => {
+            let (c_in, l) = (x.dim(0), x.dim(1));
+            let (c_out, _, k) = (w.dim(0), w.dim(1), w.dim(2));
+            let x4 = x.clone().reshape(&[1, c_in, 1, l]);
+            let w4 = w.clone().reshape(&[c_out, c_in, 1, k]);
+            let p4 = Conv2dParams { stride: (1, p.stride), pad: (0, p.pad), groups: 1 };
+            let y = conv2d_im2col(&x4, &w4, bias, &p4);
+            let lo = y.dim(3);
+            y.reshape(&[c_out, lo])
+        }
+        _ => conv1d_sliding(x, w, bias, p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for a in ConvAlgo::ALL {
+            assert_eq!(ConvAlgo::parse(a.name()), Some(a));
+        }
+        assert_eq!(ConvAlgo::parse("nope"), None);
+    }
+
+    #[test]
+    fn all_algos_agree_2d() {
+        let x = Tensor::randn(&[1, 3, 12, 14], 81);
+        let w = Tensor::randn(&[4, 3, 5, 5], 82);
+        let p = Conv2dParams::same(5);
+        let reference = conv2d(&x, &w, None, &p, ConvAlgo::Direct);
+        for algo in ConvAlgo::ALL {
+            let y = conv2d(&x, &w, None, &p, algo);
+            let d = y.max_abs_diff(&reference);
+            assert!(d < 2e-3, "{algo:?}: diff {d}");
+        }
+    }
+
+    #[test]
+    fn all_algos_agree_1d() {
+        let x = Tensor::randn(&[2, 60], 83);
+        let w = Tensor::randn(&[3, 2, 7], 84);
+        let p = Conv1dParams { stride: 1, pad: 3 };
+        let reference = conv1d(&x, &w, None, &p, ConvAlgo::Direct);
+        for algo in ConvAlgo::ALL {
+            let y = conv1d(&x, &w, None, &p, algo);
+            let d = y.max_abs_diff(&reference);
+            assert!(d < 2e-3, "{algo:?}: diff {d}");
+        }
+    }
+
+    #[test]
+    fn supports_width_policy() {
+        assert!(ConvAlgo::SlidingGeneric.supports_width(17));
+        assert!(!ConvAlgo::SlidingGeneric.supports_width(18));
+        assert!(ConvAlgo::SlidingCompound.supports_width(64));
+        assert!(ConvAlgo::Sliding.supports_width(10_000)); // falls back to direct
+    }
+}

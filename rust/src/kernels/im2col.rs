@@ -1,0 +1,200 @@
+//! `im2col` + GEMM convolution — the baseline the paper measures against
+//! (a stand-in for ONNX Runtime's `MlasConv`).
+//!
+//! The input window of every output position is copied into a column of a
+//! `[c_in·kh·kw, oh·ow]` matrix, after which convolution is one GEMM with
+//! the `[c_out, c_in·kh·kw]` weight matrix. This is the approach whose
+//! "memory bloating problem" motivates the paper: the column matrix is
+//! `kh·kw` times larger than the input tensor, and building it is pure
+//! memory traffic. [`im2col_bytes`] reports the bloat so the benchmark
+//! harness can plot it.
+
+use super::gemm::sgemm;
+use super::Conv2dParams;
+use crate::tensor::Tensor;
+use std::cell::RefCell;
+
+thread_local! {
+    static COL_BUF: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Size in bytes of the column matrix `im2col` materialises for one image
+/// of one group — the paper's memory-bloat metric.
+pub fn im2col_bytes(c_in_g: usize, kh: usize, kw: usize, oh: usize, ow: usize) -> usize {
+    c_in_g * kh * kw * oh * ow * std::mem::size_of::<f32>()
+}
+
+/// Expand one `(image, group)` into the column matrix.
+///
+/// `col` is `[c_in_g * kh * kw, oh * ow]` row-major; out-of-image taps
+/// (from padding) become zeros.
+#[allow(clippy::too_many_arguments)]
+fn im2col_plane(
+    x: &Tensor,
+    ni: usize,
+    ci0: usize,
+    c_in_g: usize,
+    kh: usize,
+    kw: usize,
+    p: &Conv2dParams,
+    oh: usize,
+    ow: usize,
+    col: &mut [f32],
+) {
+    let (h, w) = (x.dim(2), x.dim(3));
+    let (sh, sw) = p.stride;
+    let (ph, pw) = p.pad;
+    let ohw = oh * ow;
+    for cig in 0..c_in_g {
+        let plane = x.plane(ni, ci0 + cig);
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let row = &mut col[((cig * kh + ky) * kw + kx) * ohw..][..ohw];
+                for oy in 0..oh {
+                    let iy = oy * sh + ky;
+                    let dst = &mut row[oy * ow..oy * ow + ow];
+                    if iy < ph || iy >= h + ph {
+                        dst.fill(0.0);
+                        continue;
+                    }
+                    let src_row = &plane[(iy - ph) * w..(iy - ph) * w + w];
+                    // Columns: ix = ox*sw + kx - pw must lie in [0, w).
+                    if sw == 1 {
+                        // Contiguous copy with zero head/tail.
+                        for (ox, d) in dst.iter_mut().enumerate() {
+                            let ix = ox + kx;
+                            *d = if ix < pw || ix >= w + pw {
+                                0.0
+                            } else {
+                                src_row[ix - pw]
+                            };
+                        }
+                    } else {
+                        for (ox, d) in dst.iter_mut().enumerate() {
+                            let ix = ox * sw + kx;
+                            *d = if ix < pw || ix >= w + pw {
+                                0.0
+                            } else {
+                                src_row[ix - pw]
+                            };
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// 2-D convolution via `im2col` + blocked GEMM.
+///
+/// Same contract as [`super::direct::conv2d_direct`].
+pub fn conv2d_im2col(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    assert_eq!(w.rank(), 4);
+    let (n, c_in, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (c_out, c_in_g, kh, kw) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+    let g = p.groups;
+    assert!(g >= 1 && c_in % g == 0 && c_out % g == 0, "bad groups {g}");
+    assert_eq!(c_in / g, c_in_g);
+    let (oh, ow) = p.out_size(h, win, kh, kw);
+    let (c_out_g, ohw) = (c_out / g, oh * ow);
+    let kdim = c_in_g * kh * kw;
+
+    let mut out = Tensor::zeros(&[n, c_out, oh, ow]);
+    COL_BUF.with(|cb| {
+        let mut col = cb.borrow_mut();
+        col.resize(kdim * ohw, 0.0);
+        for ni in 0..n {
+            for grp in 0..g {
+                im2col_plane(x, ni, grp * c_in_g, c_in_g, kh, kw, p, oh, ow, &mut col);
+                // Weight block for this group is contiguous:
+                // rows [grp*c_out_g .. (grp+1)*c_out_g) of the flattened
+                // [c_out, kdim] weight matrix.
+                let wmat = &w.as_slice()[grp * c_out_g * kdim..(grp + 1) * c_out_g * kdim];
+                let co0 = grp * c_out_g;
+                // C is the [c_out_g, ohw] block of the output planes,
+                // which is contiguous in NCHW.
+                let start = out.offset4(ni, co0, 0, 0);
+                let cblk = &mut out.as_mut_slice()[start..start + c_out_g * ohw];
+                sgemm(c_out_g, kdim, ohw, wmat, &col, cblk);
+            }
+        }
+    });
+    if let Some(b) = bias {
+        assert_eq!(b.len(), c_out);
+        for ni in 0..n {
+            for co in 0..c_out {
+                let bv = b[co];
+                for v in out.plane_mut(ni, co) {
+                    *v += bv;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::direct::conv2d_direct;
+
+    fn against_direct(xdims: &[usize], wdims: &[usize], p: &Conv2dParams, seed: u64) {
+        let x = Tensor::randn(xdims, seed);
+        let w = Tensor::randn(wdims, seed + 1);
+        let bias: Vec<f32> = (0..wdims[0]).map(|i| i as f32 * 0.1).collect();
+        let y = conv2d_im2col(&x, &w, Some(&bias), p);
+        let y_ref = conv2d_direct(&x, &w, Some(&bias), p);
+        let d = y.max_abs_diff(&y_ref);
+        assert!(d < 1e-3, "{xdims:?} {wdims:?} {p:?}: diff {d}");
+    }
+
+    #[test]
+    fn matches_direct_basic() {
+        against_direct(&[1, 3, 8, 8], &[4, 3, 3, 3], &Conv2dParams::default(), 11);
+    }
+
+    #[test]
+    fn matches_direct_padded() {
+        against_direct(&[2, 2, 7, 9], &[3, 2, 5, 5], &Conv2dParams::same(5), 12);
+    }
+
+    #[test]
+    fn matches_direct_strided() {
+        let p = Conv2dParams { stride: (2, 3), pad: (1, 2), groups: 1 };
+        against_direct(&[1, 4, 11, 13], &[2, 4, 3, 5], &p, 13);
+    }
+
+    #[test]
+    fn matches_direct_grouped() {
+        let p = Conv2dParams { stride: (1, 1), pad: (1, 1), groups: 2 };
+        against_direct(&[1, 4, 6, 6], &[6, 2, 3, 3], &p, 14);
+    }
+
+    #[test]
+    fn matches_direct_depthwise() {
+        let p = Conv2dParams { stride: (1, 1), pad: (0, 0), groups: 4 };
+        against_direct(&[1, 4, 6, 6], &[4, 1, 3, 3], &p, 15);
+    }
+
+    #[test]
+    fn matches_direct_1x1_pointwise() {
+        against_direct(&[1, 8, 5, 5], &[16, 8, 1, 1], &Conv2dParams::default(), 16);
+    }
+
+    #[test]
+    fn matches_direct_wide_filter() {
+        against_direct(&[1, 1, 4, 40], &[1, 1, 3, 21], &Conv2dParams::default(), 17);
+    }
+
+    #[test]
+    fn bloat_metric() {
+        // k=5 on 3 channels, 28x28 output: col is 75x784 floats.
+        assert_eq!(im2col_bytes(3, 5, 5, 28, 28), 75 * 784 * 4);
+    }
+}

@@ -1,0 +1,130 @@
+//! Convolution and pooling kernels — the paper's contribution and its
+//! baselines.
+//!
+//! | module | role |
+//! |---|---|
+//! | [`direct`]    | naïve direct convolution — correctness oracle + baseline |
+//! | [`gemm`]      | blocked, register-tiled SGEMM (packing + 8×32 micro-kernel) |
+//! | [`im2col`]    | `im2col` + GEMM convolution — the `MlasConv` stand-in |
+//! | [`sliding1d`] | 1-D Vector Slide convolution + log-step sliding sums |
+//! | [`sliding2d`] | 2-D sliding convolution: generic (k ≤ 17), compound (k > 17), custom k=3/k=5 |
+//! | [`pool`]      | max/avg pooling via log-step sliding combines |
+//! | [`dispatch`]  | filter-size–driven algorithm selection (paper §2 policy) |
+//!
+//! The public entry points are [`conv2d`], [`conv1d`] and the pooling
+//! functions re-exported from [`pool`]; each takes a [`ConvAlgo`] so the
+//! benchmark harness can pit implementations against each other on
+//! identical inputs.
+
+pub mod direct;
+pub mod gemm;
+pub mod rowconv;
+pub mod im2col;
+pub mod sliding1d;
+pub mod sliding2d;
+pub mod pool;
+pub mod dispatch;
+
+pub use dispatch::{conv1d, conv2d, ConvAlgo};
+pub use pool::{avg_pool2d, max_pool2d, PoolParams};
+
+/// Hyper-parameters of a 2-D convolution (dilation fixed at 1, as in the
+/// paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv2dParams {
+    /// Stride `(sh, sw)`.
+    pub stride: (usize, usize),
+    /// Zero padding `(ph, pw)` applied on every side.
+    pub pad: (usize, usize),
+    /// Channel groups; `groups == c_in` gives a depthwise convolution.
+    pub groups: usize,
+}
+
+impl Default for Conv2dParams {
+    fn default() -> Self {
+        Conv2dParams { stride: (1, 1), pad: (0, 0), groups: 1 }
+    }
+}
+
+impl Conv2dParams {
+    /// Unit-stride convolution with the given padding.
+    pub fn with_pad(ph: usize, pw: usize) -> Self {
+        Conv2dParams { stride: (1, 1), pad: (ph, pw), groups: 1 }
+    }
+
+    /// "Same" padding for odd k×k filters at stride 1.
+    pub fn same(k: usize) -> Self {
+        assert!(k % 2 == 1, "same padding needs odd filter size");
+        Conv2dParams { stride: (1, 1), pad: (k / 2, k / 2), groups: 1 }
+    }
+
+    /// Output spatial size for an `h × w` input and `kh × kw` filter.
+    ///
+    /// # Panics
+    /// If the filter (plus padding) does not fit the input.
+    pub fn out_size(&self, h: usize, w: usize, kh: usize, kw: usize) -> (usize, usize) {
+        let hp = h + 2 * self.pad.0;
+        let wp = w + 2 * self.pad.1;
+        assert!(hp >= kh && wp >= kw, "filter {kh}x{kw} larger than padded input {hp}x{wp}");
+        ((hp - kh) / self.stride.0 + 1, (wp - kw) / self.stride.1 + 1)
+    }
+}
+
+/// Hyper-parameters of a 1-D convolution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv1dParams {
+    /// Stride along the signal.
+    pub stride: usize,
+    /// Zero padding on both ends.
+    pub pad: usize,
+}
+
+impl Default for Conv1dParams {
+    fn default() -> Self {
+        Conv1dParams { stride: 1, pad: 0 }
+    }
+}
+
+impl Conv1dParams {
+    /// Output length for input length `l` and filter width `k`.
+    pub fn out_len(&self, l: usize, k: usize) -> usize {
+        let lp = l + 2 * self.pad;
+        assert!(lp >= k, "filter {k} larger than padded signal {lp}");
+        (lp - k) / self.stride + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_size_valid() {
+        let p = Conv2dParams::default();
+        assert_eq!(p.out_size(8, 8, 3, 3), (6, 6));
+    }
+
+    #[test]
+    fn out_size_same() {
+        let p = Conv2dParams::same(5);
+        assert_eq!(p.out_size(8, 8, 5, 5), (8, 8));
+    }
+
+    #[test]
+    fn out_size_strided() {
+        let p = Conv2dParams { stride: (2, 2), pad: (1, 1), groups: 1 };
+        assert_eq!(p.out_size(8, 8, 3, 3), (4, 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "larger than padded")]
+    fn out_size_too_small_panics() {
+        Conv2dParams::default().out_size(2, 2, 3, 3);
+    }
+
+    #[test]
+    fn out_len_1d() {
+        let p = Conv1dParams { stride: 1, pad: 2 };
+        assert_eq!(p.out_len(10, 5), 10);
+    }
+}

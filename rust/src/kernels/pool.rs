@@ -1,0 +1,331 @@
+//! Pooling as a Sliding Window Sum (the paper's abstract: "both pooling
+//! and convolution 1-D primitives could be expressed as sliding sums and
+//! evaluated by compute kernels with a shared structure").
+//!
+//! Horizontal pooling over a row is the log-step sliding combine —
+//! `O(log k)` vector ops per output vector instead of `k − 1` — followed
+//! by a vertical elementwise combine across `kh` rows. Max pooling uses
+//! the same kernel with `max` as the combiner (idempotent, so the
+//! doubling decomposition is trivially valid); average pooling runs the
+//! sum kernel and scales by `1/(kh·kw)` (padding counted, the ONNX
+//! `count_include_pad` convention).
+
+use crate::simd::{slide_dyn, F32xL, LANES};
+use crate::tensor::{pad2d, Tensor};
+
+/// Pooling hyper-parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolParams {
+    /// Window `(kh, kw)`.
+    pub k: (usize, usize),
+    /// Stride `(sh, sw)`; `None` in constructors means stride = window.
+    pub stride: (usize, usize),
+    /// Padding `(ph, pw)`.
+    pub pad: (usize, usize),
+}
+
+impl PoolParams {
+    /// Square window with stride = window (the common non-overlapping case).
+    pub fn square(k: usize) -> Self {
+        PoolParams { k: (k, k), stride: (k, k), pad: (0, 0) }
+    }
+
+    /// Square window with explicit stride.
+    pub fn with_stride(k: usize, s: usize) -> Self {
+        PoolParams { k: (k, k), stride: (s, s), pad: (0, 0) }
+    }
+
+    /// Output spatial size.
+    pub fn out_size(&self, h: usize, w: usize) -> (usize, usize) {
+        let hp = h + 2 * self.pad.0;
+        let wp = w + 2 * self.pad.1;
+        assert!(hp >= self.k.0 && wp >= self.k.1, "pool window larger than input");
+        ((hp - self.k.0) / self.stride.0 + 1, (wp - self.k.1) / self.stride.1 + 1)
+    }
+}
+
+/// The combiner a sliding pool kernel uses.
+#[derive(Clone, Copy, Debug)]
+enum Combine {
+    Sum,
+    Max,
+}
+
+impl Combine {
+    #[inline(always)]
+    fn vec(self, a: F32xL, b: F32xL) -> F32xL {
+        match self {
+            Combine::Sum => a + b,
+            Combine::Max => a.max(b),
+        }
+    }
+
+    #[inline(always)]
+    fn scalar(self, a: f32, b: f32) -> f32 {
+        match self {
+            Combine::Sum => a + b,
+            Combine::Max => a.max(b),
+        }
+    }
+
+    fn identity(self) -> f32 {
+        match self {
+            Combine::Sum => 0.0,
+            Combine::Max => f32::NEG_INFINITY,
+        }
+    }
+}
+
+/// Log-step sliding combine over one padded row.
+///
+/// `dst[i] = op(src[i], src[i+1], …, src[i+k-1])` built by doubling —
+/// the shared structure of the paper's sum/max/avg kernels. Requires
+/// `k ≤ LANES` (callers fall back to the serial loop beyond; pooling
+/// windows that large do not occur in practice).
+fn sliding_combine_row(src: &[f32], k: usize, dst: &mut [f32], out_len: usize, op: Combine) {
+    debug_assert!(k >= 1);
+    if k > LANES {
+        for i in 0..out_len {
+            let mut acc = src[i];
+            for j in 1..k {
+                acc = op.scalar(acc, src[i + j]);
+            }
+            dst[i] = acc;
+        }
+        return;
+    }
+    debug_assert!(out_len == 0 || src.len() >= out_len - 1 + k - 1 + 3 * LANES);
+    let mut i = 0;
+    while i + LANES <= out_len {
+        let x0 = F32xL::load(&src[i..]);
+        let x1 = F32xL::load(&src[i + LANES..]);
+        let x2 = F32xL::load(&src[i + 2 * LANES..]);
+        let (mut s0, mut s1, mut s2) = (x0, x1, x2);
+        let mut width = 1usize;
+        let bits = usize::BITS - k.leading_zeros();
+        for bit in (0..bits - 1).rev() {
+            let t0 = op.vec(s0, slide_dyn(s0, s1, width));
+            let t1 = op.vec(s1, slide_dyn(s1, s2, width));
+            let t2 = op.vec(s2, slide_dyn(s2, s2, width));
+            (s0, s1, s2) = (t0, t1, t2);
+            width *= 2;
+            if (k >> bit) & 1 == 1 {
+                let t0 = op.vec(s0, slide_dyn(x0, x1, width));
+                let t1 = op.vec(s1, slide_dyn(x1, x2, width));
+                (s0, s1) = (t0, t1);
+                width += 1;
+            }
+        }
+        debug_assert_eq!(width, k);
+        s0.store(&mut dst[i..]);
+        i += LANES;
+    }
+    for o in i..out_len {
+        let mut acc = src[o];
+        for j in 1..k {
+            acc = op.scalar(acc, src[o + j]);
+        }
+        dst[o] = acc;
+    }
+}
+
+/// Shared 2-D pooling skeleton: horizontal sliding combine per input row,
+/// then vertical combine across `kh` rows, then stride subsampling.
+fn pool2d_sliding(x: &Tensor, p: &PoolParams, op: Combine) -> Tensor {
+    assert_eq!(x.rank(), 4, "pooling expects NCHW");
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (kh, kw) = p.k;
+    let (oh, ow) = p.out_size(h, w);
+    let (sh, sw) = p.stride;
+    let ow1 = w + 2 * p.pad.1 - kw + 1;
+    let hp = h + 2 * p.pad.0;
+
+    let padded = pad2d(x, p.pad.0, p.pad.1, 3 * LANES + kw, op.identity());
+    let wp = padded.dim(3);
+
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    // Horizontal results for the kh rows feeding one output row.
+    let mut hrows = vec![0.0f32; hp * ow1];
+    for ni in 0..n {
+        for ci in 0..c {
+            let plane = padded.plane(ni, ci);
+            for iy in 0..hp {
+                sliding_combine_row(
+                    &plane[iy * wp..],
+                    kw,
+                    &mut hrows[iy * ow1..(iy + 1) * ow1],
+                    ow1,
+                    op,
+                );
+            }
+            for oy in 0..oh {
+                let iy0 = oy * sh;
+                // Vertical combine of kh horizontal rows (vectorises as a
+                // simple elementwise loop over the row).
+                let (head, tail) = hrows.split_at(iy0 * ow1 + ow1);
+                let mut acc: Vec<f32> = head[iy0 * ow1..].to_vec();
+                for ky in 1..kh {
+                    let row = &tail[(ky - 1) * ow1..ky * ow1];
+                    for (a, &r) in acc.iter_mut().zip(row) {
+                        *a = op.scalar(*a, r);
+                    }
+                }
+                let orow_start = out.offset4(ni, ci, oy, 0);
+                let orow = &mut out.as_mut_slice()[orow_start..orow_start + ow];
+                for (ox, v) in orow.iter_mut().enumerate() {
+                    *v = acc[ox * sw];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Max pooling via the sliding-window kernel.
+pub fn max_pool2d(x: &Tensor, p: &PoolParams) -> Tensor {
+    pool2d_sliding(x, p, Combine::Max)
+}
+
+/// Average pooling via the sliding-window sum kernel
+/// (`count_include_pad = true`).
+pub fn avg_pool2d(x: &Tensor, p: &PoolParams) -> Tensor {
+    let inv = 1.0 / (p.k.0 * p.k.1) as f32;
+    let mut y = pool2d_sliding(x, p, Combine::Sum);
+    for v in y.as_mut_slice() {
+        *v *= inv;
+    }
+    y
+}
+
+/// Naïve max pooling — baseline + oracle.
+pub fn max_pool2d_naive(x: &Tensor, p: &PoolParams) -> Tensor {
+    pool2d_naive(x, p, Combine::Max)
+}
+
+/// Naïve average pooling — baseline + oracle.
+pub fn avg_pool2d_naive(x: &Tensor, p: &PoolParams) -> Tensor {
+    let inv = 1.0 / (p.k.0 * p.k.1) as f32;
+    let mut y = pool2d_naive(x, p, Combine::Sum);
+    for v in y.as_mut_slice() {
+        *v *= inv;
+    }
+    y
+}
+
+fn pool2d_naive(x: &Tensor, p: &PoolParams, op: Combine) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (kh, kw) = p.k;
+    let (oh, ow) = p.out_size(h, w);
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = op.identity();
+                    for ky in 0..kh {
+                        let iy = oy * p.stride.0 + ky;
+                        for kx in 0..kw {
+                            let ix = ox * p.stride.1 + kx;
+                            let v = if iy < p.pad.0
+                                || iy >= h + p.pad.0
+                                || ix < p.pad.1
+                                || ix >= w + p.pad.1
+                            {
+                                op.identity()
+                            } else {
+                                x.at4(ni, ci, iy - p.pad.0, ix - p.pad.1)
+                            };
+                            acc = op.scalar(acc, v);
+                        }
+                    }
+                    *out.at4_mut(ni, ci, oy, ox) = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn against_naive_max(dims: &[usize], p: &PoolParams, seed: u64) {
+        let x = Tensor::randn(dims, seed);
+        let got = max_pool2d(&x, p);
+        let want = max_pool2d_naive(&x, p);
+        assert_eq!(got.dims(), want.dims());
+        let d = got.max_abs_diff(&want);
+        assert!(d == 0.0, "{dims:?} {p:?}: diff {d}");
+    }
+
+    fn against_naive_avg(dims: &[usize], p: &PoolParams, seed: u64) {
+        let x = Tensor::randn(dims, seed);
+        let got = avg_pool2d(&x, p);
+        let want = avg_pool2d_naive(&x, p);
+        let d = got.max_abs_diff(&want);
+        assert!(d < 1e-5, "{dims:?} {p:?}: diff {d}");
+    }
+
+    #[test]
+    fn max_matches_naive_all_windows() {
+        for k in 1..=8 {
+            against_naive_max(&[1, 2, 17, 23], &PoolParams::with_stride(k, 1), 100 + k as u64);
+        }
+    }
+
+    #[test]
+    fn max_matches_naive_large_windows() {
+        for k in [13, 16] {
+            against_naive_max(&[1, 1, 20, 40], &PoolParams::with_stride(k, 1), 200 + k as u64);
+        }
+    }
+
+    #[test]
+    fn max_matches_naive_nonoverlapping() {
+        against_naive_max(&[2, 3, 16, 16], &PoolParams::square(2), 300);
+        against_naive_max(&[1, 1, 18, 18], &PoolParams::square(3), 301);
+    }
+
+    #[test]
+    fn avg_matches_naive() {
+        for k in [2, 3, 5, 7] {
+            against_naive_avg(&[1, 2, 15, 19], &PoolParams::with_stride(k, 1), 400 + k as u64);
+            against_naive_avg(&[1, 2, 16, 16], &PoolParams::square(k.min(4)), 500 + k as u64);
+        }
+    }
+
+    #[test]
+    fn padded_max_ignores_border() {
+        let x = Tensor::full(&[1, 1, 2, 2], -5.0);
+        let p = PoolParams { k: (3, 3), stride: (1, 1), pad: (1, 1) };
+        let y = max_pool2d(&x, &p);
+        // Padding is -inf for max, so every output is -5.
+        assert!(y.as_slice().iter().all(|&v| v == -5.0));
+        assert_eq!(y.dims(), &[1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn padded_avg_counts_pad_as_zero() {
+        let x = Tensor::full(&[1, 1, 1, 1], 9.0);
+        let p = PoolParams { k: (3, 3), stride: (1, 1), pad: (1, 1) };
+        let y = avg_pool2d(&x, &p);
+        assert!((y.as_slice()[0] - 1.0).abs() < 1e-6); // 9 / 9 taps
+    }
+
+    #[test]
+    fn global_pool() {
+        let x = Tensor::iota(&[1, 1, 4, 4]);
+        let y = avg_pool2d(&x, &PoolParams::square(4));
+        assert_eq!(y.dims(), &[1, 1, 1, 1]);
+        assert!((y.as_slice()[0] - 7.5).abs() < 1e-6);
+        let m = max_pool2d(&x, &PoolParams::square(4));
+        assert_eq!(m.as_slice()[0], 15.0);
+    }
+
+    #[test]
+    fn window_wider_than_lanes_serial_path() {
+        against_naive_max(&[1, 1, 2, 80], &PoolParams { k: (1, 20), stride: (1, 1), pad: (0, 0) }, 600);
+        against_naive_avg(&[1, 1, 2, 80], &PoolParams { k: (1, 20), stride: (1, 1), pad: (0, 0) }, 601);
+    }
+}

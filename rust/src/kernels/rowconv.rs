@@ -1,0 +1,306 @@
+//! Row-convolution inner loops — the Vector Slide algorithm.
+//!
+//! Every sliding convolution (1-D signals, 2-D image rows) reduces to the
+//! same inner routine: given a padded source row, a filter row `w[0..k)`,
+//! and a destination row, accumulate
+//!
+//! ```text
+//! dst[i] += Σ_j  w[j] · src[i + j]        (i = 0 .. out_len)
+//! ```
+//!
+//! vectorised over `i`: one `LANES`-wide block of outputs is produced from
+//! the already-loaded registers covering `src[i .. i + LANES + k)`; the
+//! window at tap `j` is a register-pair *slide* — no re-reads, no `im2col`
+//! copies. Three variants, exactly the paper's three implementations:
+//!
+//! * [`row_conv_generic`] — filter widths `k ≤ LANES + 1` (17 on AVX-512):
+//!   two registers per block, `slide_dyn` per tap ("the straightforward
+//!   version of the Vector Slide algorithm").
+//! * [`row_conv_compound`] — any width: a [`CompoundF32`] of `R` registers
+//!   treated as one long vector ("kernels of larger width … operate on
+//!   multiple hardware vectors treating them as a single long compound
+//!   vector").
+//! * [`row_conv_custom3`] / [`row_conv_custom5`] — fully unrolled k=3 and
+//!   k=5 with compile-time slides, "custom kernels with optimal number of
+//!   operations".
+//!
+//! SAFETY CONTRACT (checked by `debug_assert!`): callers must pad `src` so
+//! that `src[out_len - 1 + k - 1 + 2*LANES]` is readable; `pad2d`/`pad_row`
+//! with `slack = 2*LANES + k` guarantees this. (The row tail is handled by
+//! one *partial* vector block — masked store — instead of a scalar loop:
+//! a scalar tail costs up to 50% of a row when `out_len % LANES` is large,
+//! the k=18 cliff in EXPERIMENTS.md §Perf.)
+
+use crate::simd::{slide, slide_dyn, F32xL, LANES};
+
+/// Largest filter width the generic in-vector kernel handles: a window at
+/// tap `k-1` must still come from one register pair, so `k - 1 ≤ LANES`.
+pub const GENERIC_MAX_K: usize = LANES + 1;
+
+/// Largest filter width the compound kernel supports (8 registers).
+pub const COMPOUND_MAX_K: usize = 7 * LANES + 1;
+
+#[inline(always)]
+fn src_ok(src: &[f32], out_len: usize, k: usize) -> bool {
+    out_len == 0 || src.len() >= out_len - 1 + k - 1 + 2 * LANES + 1
+}
+
+/// Drive `block` over every `LANES`-wide output block, including one
+/// final *partial* block for the row tail (masked load/store of the
+/// `out_len % LANES` remaining columns). `block(x, acc)` must return the
+/// accumulator for output columns `[x, x + LANES)`.
+#[inline(always)]
+fn run_blocks(dst: &mut [f32], out_len: usize, mut block: impl FnMut(usize, F32xL) -> F32xL) {
+    let mut x = 0;
+    while x + LANES <= out_len {
+        let acc = block(x, F32xL::load(&dst[x..]));
+        acc.store(&mut dst[x..]);
+        x += LANES;
+    }
+    if x < out_len {
+        let n = out_len - x;
+        let acc = block(x, F32xL::load_partial(&dst[x..out_len], 0.0));
+        acc.store_partial(&mut dst[x..out_len], n);
+    }
+}
+
+/// Generic Vector Slide row convolution, `k ≤ GENERIC_MAX_K`.
+#[inline]
+pub fn row_conv_generic(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+    let k = w.len();
+    debug_assert!(k >= 1 && k <= GENERIC_MAX_K, "generic kernel k={k}");
+    debug_assert!(src_ok(src, out_len, k), "source row under-padded");
+    debug_assert!(dst.len() >= out_len);
+
+    // PERF: two output blocks per iteration. Each block's accumulator is
+    // a serial FMA chain (latency-bound at ~4 cycles/tap); running two
+    // independent chains under the *same* per-tap dispatch doubles
+    // throughput without disturbing LLVM's jump-table for slide_dyn.
+    // (A 4-chain single-block unroll was tried first and measured ~2x
+    // SLOWER — it defeats the jump-table layout; EXPERIMENTS.md §Perf.)
+    let mut x = 0;
+    while x + 2 * LANES <= out_len {
+        let a0 = F32xL::load(&src[x..]);
+        let b0 = F32xL::load(&src[x + LANES..]);
+        let c0 = F32xL::load(&src[x + 2 * LANES..]);
+        let mut acc0 = F32xL::load(&dst[x..]);
+        let mut acc1 = F32xL::load(&dst[x + LANES..]);
+        for (j, &wj) in w.iter().enumerate() {
+            let wv = F32xL::splat(wj);
+            acc0 = wv.mul_add(slide_dyn(a0, b0, j), acc0);
+            acc1 = wv.mul_add(slide_dyn(b0, c0, j), acc1);
+        }
+        acc0.store(&mut dst[x..]);
+        acc1.store(&mut dst[x + LANES..]);
+        x += 2 * LANES;
+    }
+    run_blocks(&mut dst[x..out_len], out_len - x, |xr, mut acc| {
+        let xr = x + xr;
+        let a = F32xL::load(&src[xr..]);
+        let b = F32xL::load(&src[xr + LANES..]);
+        for (j, &wj) in w.iter().enumerate() {
+            acc = F32xL::splat(wj).mul_add(slide_dyn(a, b, j), acc);
+        }
+        acc
+    });
+}
+
+/// Compound-vector row convolution for arbitrary `k ≤ COMPOUND_MAX_K`.
+///
+/// The compound vector is traversed one register *pair* at a time: taps
+/// `j ∈ [r·LANES, (r+1)·LANES)` all slide within the pair
+/// `(x_r, x_{r+1})`, which lives in two named locals (PERF: an indexed
+/// register array would be kept on the stack by LLVM, turning every
+/// window into memory traffic — the k=18 cliff in EXPERIMENTS.md §Perf).
+#[inline]
+pub fn row_conv_compound(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+    let k = w.len();
+    debug_assert!(k >= 1 && k <= COMPOUND_MAX_K, "compound kernel k={k}");
+    debug_assert!(src_ok(src, out_len, k), "source row under-padded");
+    // Register groups: taps [r*LANES, (r+1)*LANES) per group.
+    let groups = k.div_ceil(LANES);
+    // PERF: two output blocks per iteration, same rationale as
+    // row_conv_generic (two independent FMA chains under one dispatch).
+    let mut x = 0;
+    while x + 2 * LANES <= out_len {
+        let mut acc0 = F32xL::load(&dst[x..]);
+        let mut acc1 = F32xL::load(&dst[x + LANES..]);
+        for r in 0..groups {
+            let base = r * LANES;
+            let a = F32xL::load(&src[x + base..]);
+            let b = F32xL::load(&src[x + base + LANES..]);
+            let c = F32xL::load(&src[x + base + 2 * LANES..]);
+            let hi = k.min(base + LANES);
+            let wv = F32xL::splat(w[base]);
+            acc0 = wv.mul_add(a, acc0);
+            acc1 = wv.mul_add(b, acc1);
+            for (j, &wj) in w[base + 1..hi].iter().enumerate() {
+                let wv = F32xL::splat(wj);
+                acc0 = wv.mul_add(slide_dyn(a, b, j + 1), acc0);
+                acc1 = wv.mul_add(slide_dyn(b, c, j + 1), acc1);
+            }
+        }
+        acc0.store(&mut dst[x..]);
+        acc1.store(&mut dst[x + LANES..]);
+        x += 2 * LANES;
+    }
+    run_blocks(&mut dst[x..out_len], out_len - x, |xr, mut acc| {
+        let xr = x + xr;
+        for r in 0..groups {
+            let base = r * LANES;
+            let a = F32xL::load(&src[xr + base..]);
+            let b = F32xL::load(&src[xr + base + LANES..]);
+            let hi = k.min(base + LANES);
+            acc = F32xL::splat(w[base]).mul_add(a, acc);
+            for (j, &wj) in w[base + 1..hi].iter().enumerate() {
+                acc = F32xL::splat(wj).mul_add(slide_dyn(a, b, j + 1), acc);
+            }
+        }
+        acc
+    });
+}
+
+/// Custom k = 3 kernel: compile-time slides, no dispatch, minimal shuffles
+/// (2 per output vector).
+#[inline]
+pub fn row_conv_custom3(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+    debug_assert_eq!(w.len(), 3);
+    debug_assert!(src_ok(src, out_len, 3), "source row under-padded");
+    let (w0, w1, w2) = (F32xL::splat(w[0]), F32xL::splat(w[1]), F32xL::splat(w[2]));
+    run_blocks(dst, out_len, |x, mut acc| {
+        let a = F32xL::load(&src[x..]);
+        let b = F32xL::load(&src[x + LANES..]);
+        acc = w0.mul_add(a, acc);
+        acc = w1.mul_add(slide::<1>(a, b), acc);
+        acc = w2.mul_add(slide::<2>(a, b), acc);
+        acc
+    });
+}
+
+/// Custom k = 5 kernel: compile-time slides, 4 shuffles per output vector.
+#[inline]
+pub fn row_conv_custom5(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+    debug_assert_eq!(w.len(), 5);
+    debug_assert!(src_ok(src, out_len, 5), "source row under-padded");
+    let w0 = F32xL::splat(w[0]);
+    let w1 = F32xL::splat(w[1]);
+    let w2 = F32xL::splat(w[2]);
+    let w3 = F32xL::splat(w[3]);
+    let w4 = F32xL::splat(w[4]);
+    run_blocks(dst, out_len, |x, mut acc| {
+        let a = F32xL::load(&src[x..]);
+        let b = F32xL::load(&src[x + LANES..]);
+        acc = w0.mul_add(a, acc);
+        acc = w1.mul_add(slide::<1>(a, b), acc);
+        acc = w2.mul_add(slide::<2>(a, b), acc);
+        acc = w3.mul_add(slide::<3>(a, b), acc);
+        acc = w4.mul_add(slide::<4>(a, b), acc);
+        acc
+    });
+}
+
+/// Pick the fastest row kernel for filter width `k` — the paper's §2
+/// selection policy (custom for 3/5, generic to 17, compound beyond).
+#[inline]
+pub fn row_conv_auto(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+    match w.len() {
+        3 => row_conv_custom3(src, w, dst, out_len),
+        5 => row_conv_custom5(src, w, dst, out_len),
+        k if k <= GENERIC_MAX_K => row_conv_generic(src, w, dst, out_len),
+        _ => row_conv_compound(src, w, dst, out_len),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{pad_row, XorShiftRng};
+
+    /// Scalar reference.
+    fn ref_conv(src: &[f32], w: &[f32], out_len: usize) -> Vec<f32> {
+        (0..out_len)
+            .map(|i| w.iter().enumerate().map(|(j, &wj)| wj * src[i + j]).sum())
+            .collect()
+    }
+
+    fn run(kernel: fn(&[f32], &[f32], &mut [f32], usize), k: usize, out_len: usize, seed: u64) {
+        let mut rng = XorShiftRng::new(seed);
+        let raw: Vec<f32> = (0..out_len + k - 1).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let w: Vec<f32> = (0..k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let src = pad_row(&raw, 0, 2 * LANES + k, 0.0);
+        let mut dst = vec![0.0f32; out_len];
+        kernel(&src, &w, &mut dst, out_len);
+        let expect = ref_conv(&src, &w, out_len);
+        for i in 0..out_len {
+            assert!(
+                (dst[i] - expect[i]).abs() < 1e-4,
+                "k={k} i={i}: {} vs {}",
+                dst[i],
+                expect[i]
+            );
+        }
+    }
+
+    #[test]
+    fn generic_all_k() {
+        for k in 1..=GENERIC_MAX_K {
+            run(row_conv_generic, k, 100, k as u64);
+        }
+    }
+
+    #[test]
+    fn generic_short_rows_and_tails() {
+        for out_len in [1, 2, LANES - 1, LANES, LANES + 1, 2 * LANES + 3] {
+            run(row_conv_generic, 4, out_len, 99 + out_len as u64);
+        }
+    }
+
+    #[test]
+    fn compound_all_k_to_65() {
+        for k in 2..=65 {
+            run(row_conv_compound, k, 80, 1000 + k as u64);
+        }
+    }
+
+    #[test]
+    fn compound_max_width() {
+        run(row_conv_compound, COMPOUND_MAX_K, 40, 7);
+    }
+
+    #[test]
+    fn custom3_matches() {
+        for out_len in [1, 16, 33, 100] {
+            run(row_conv_custom3, 3, out_len, 5 + out_len as u64);
+        }
+    }
+
+    #[test]
+    fn custom5_matches() {
+        for out_len in [1, 16, 33, 100] {
+            run(row_conv_custom5, 5, out_len, 6 + out_len as u64);
+        }
+    }
+
+    #[test]
+    fn auto_selects_correctly_everywhere() {
+        for k in [1, 2, 3, 5, 7, 16, 17, 18, 31, 33, 64] {
+            run(row_conv_auto, k, 70, 2000 + k as u64);
+        }
+    }
+
+    #[test]
+    fn accumulates_into_dst() {
+        let src = pad_row(&[1.0; 20], 0, 2 * LANES + 2, 0.0);
+        let w = [1.0, 1.0];
+        let mut dst = vec![10.0f32; 19];
+        row_conv_generic(&src, &w, &mut dst, 19);
+        assert!(dst.iter().all(|&v| v == 12.0));
+    }
+
+    #[test]
+    fn zero_out_len_is_noop() {
+        let src = vec![0.0; 64];
+        let mut dst: Vec<f32> = vec![];
+        row_conv_generic(&src, &[1.0, 2.0], &mut dst, 0);
+    }
+}

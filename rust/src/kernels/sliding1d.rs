@@ -1,0 +1,227 @@
+//! 1-D Sliding Window primitives: vector-slide convolution and the
+//! log-step sliding window sum (the algorithm family of the paper's
+//! precursor, arXiv:2305.16513, whose ~log(k) speedup §2 recalls).
+
+use super::direct::conv1d_direct;
+use super::rowconv::{row_conv_auto, COMPOUND_MAX_K};
+use super::Conv1dParams;
+use crate::simd::{slide_dyn, F32xL, LANES};
+use crate::tensor::{pad_row, Tensor};
+
+/// 1-D convolution via the Vector Slide kernels.
+///
+/// * `x` — `[c_in, l]`, `w` — `[c_out, c_in, k]`; returns `[c_out, l_out]`.
+///
+/// Stride 1 runs the sliding kernel directly; larger strides compute the
+/// stride-1 result per row and subsample (the paper only evaluates unit
+/// stride). Filter widths beyond [`COMPOUND_MAX_K`] fall back to the
+/// direct kernel.
+pub fn conv1d_sliding(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+) -> Tensor {
+    assert_eq!(x.rank(), 2, "input must be [c, l]");
+    assert_eq!(w.rank(), 3, "weights must be [cout, cin, k]");
+    let (c_in, l) = (x.dim(0), x.dim(1));
+    let (c_out, c_in_w, k) = (w.dim(0), w.dim(1), w.dim(2));
+    assert_eq!(c_in, c_in_w, "c_in mismatch");
+    if k > COMPOUND_MAX_K {
+        return conv1d_direct(x, w, bias, p);
+    }
+    let lo = p.out_len(l, k);
+    // Unit-stride output length (subsampled later if stride > 1).
+    let lo1 = l + 2 * p.pad - k + 1;
+
+    // Pad every channel once: conv padding + right slack for vector loads.
+    let lp = l + 2 * p.pad + 2 * LANES + k;
+    let mut padded = vec![0.0f32; c_in * lp];
+    for ci in 0..c_in {
+        let row = pad_row(&x.as_slice()[ci * l..(ci + 1) * l], p.pad, 2 * LANES + k, 0.0);
+        padded[ci * lp..ci * lp + row.len()].copy_from_slice(&row);
+    }
+
+    let ws = w.as_slice();
+    let mut out = Tensor::zeros(&[c_out, lo]);
+    let mut scratch = vec![0.0f32; lo1];
+    for co in 0..c_out {
+        let b = bias.map_or(0.0, |b| b[co]);
+        scratch.fill(b);
+        for ci in 0..c_in {
+            let wrow = &ws[(co * c_in + ci) * k..(co * c_in + ci + 1) * k];
+            row_conv_auto(&padded[ci * lp..], wrow, &mut scratch, lo1);
+        }
+        let orow = &mut out.as_mut_slice()[co * lo..(co + 1) * lo];
+        if p.stride == 1 {
+            orow.copy_from_slice(&scratch[..lo]);
+        } else {
+            for (o, v) in orow.iter_mut().enumerate() {
+                *v = scratch[o * p.stride];
+            }
+        }
+    }
+    out
+}
+
+/// Log-step sliding window sum: `out[i] = Σ_{j<k} x[i+j]`.
+///
+/// Instead of `k − 1` adds per output, the window sum is built by
+/// doubling: `S_{2m}[i] = S_m[i] + S_m[i+m]`, plus one add per set bit of
+/// `k` — `O(log k)` vector operations per output vector. This is the core
+/// "sliding window sum" algorithm (and the source of the logarithmic
+/// speedup the paper's intro recalls for 1-D).
+///
+/// Requires `1 ≤ k ≤ LANES`; `x` must be padded so `x[out_len-1 + k-1]`
+/// plus a `2·LANES` slack is readable (see [`sliding_sum`] for the
+/// user-facing wrapper that pads).
+pub fn sliding_sum_padded(x: &[f32], k: usize, dst: &mut [f32], out_len: usize) {
+    assert!(k >= 1 && k <= LANES, "sliding_sum supports k in 1..=LANES, got {k}");
+    debug_assert!(out_len == 0 || x.len() >= out_len - 1 + k - 1 + 3 * LANES);
+
+    let mut i = 0;
+    while i + LANES <= out_len {
+        // Three registers cover every slide this block performs: the
+        // doubling chain shifts by at most k-1 ≤ LANES-1 total per
+        // register, so the valid prefix never drops below LANES lanes.
+        let x0 = F32xL::load(&x[i..]);
+        let x1 = F32xL::load(&x[i + LANES..]);
+        let x2 = F32xL::load(&x[i + 2 * LANES..]);
+        let s = sliding_sum_block(x0, x1, x2, k);
+        s.store(&mut dst[i..]);
+        i += LANES;
+    }
+    for o in i..out_len {
+        dst[o] = (0..k).map(|j| x[o + j]).sum();
+    }
+}
+
+/// One output register of the log-step window sum over `x0‖x1‖x2`.
+#[inline]
+fn sliding_sum_block(x0: F32xL, x1: F32xL, x2: F32xL, k: usize) -> F32xL {
+    // s_* hold the running window sum over the compound vector; width is
+    // the window length accumulated so far.
+    let (mut s0, mut s1, mut s2) = (x0, x1, x2);
+    let mut width = 1usize;
+    // Consume the bits of k from the second-most-significant down:
+    // double, then add one more element when the bit is set.
+    let bits = usize::BITS - k.leading_zeros();
+    for bit in (0..bits - 1).rev() {
+        // Double: S_{2w}[i] = S_w[i] + S_w[i+w].
+        let t0 = s0 + slide_dyn(s0, s1, width);
+        let t1 = s1 + slide_dyn(s1, s2, width);
+        let t2 = s2 + slide_dyn(s2, s2, width); // tail lanes garbage, never read
+        (s0, s1, s2) = (t0, t1, t2);
+        width *= 2;
+        if (k >> bit) & 1 == 1 {
+            // S_{w+1}[i] = S_w[i] + X[i+w].
+            let t0 = s0 + slide_dyn(x0, x1, width);
+            let t1 = s1 + slide_dyn(x1, x2, width);
+            (s0, s1, s2) = (t0, t1, s2);
+            width += 1;
+        }
+    }
+    debug_assert_eq!(width, k);
+    s0
+}
+
+/// User-facing sliding window sum over a signal: pads and runs
+/// [`sliding_sum_padded`]. Returns `x.len() - k + 1` sums.
+pub fn sliding_sum(x: &[f32], k: usize) -> Vec<f32> {
+    assert!(k >= 1 && k <= x.len(), "window {k} vs signal {}", x.len());
+    let out_len = x.len() - k + 1;
+    let padded = pad_row(x, 0, 3 * LANES + k, 0.0);
+    let mut dst = vec![0.0f32; out_len];
+    sliding_sum_padded(&padded, k.min(LANES), &mut dst, out_len);
+    if k > LANES {
+        // Large windows: combine the LANES-wide log-step result serially.
+        // (Pooling windows beyond the register width are rare; keep exact.)
+        let mut out = vec![0.0f32; out_len];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = (0..k).map(|j| padded[i + j]).sum();
+        }
+        return out;
+    }
+    dst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Conv1dParams;
+    use crate::tensor::XorShiftRng;
+
+    fn ref_sliding_sum(x: &[f32], k: usize) -> Vec<f32> {
+        (0..x.len() - k + 1)
+            .map(|i| x[i..i + k].iter().sum())
+            .collect()
+    }
+
+    #[test]
+    fn sliding_sum_all_k() {
+        let mut rng = XorShiftRng::new(3);
+        let x: Vec<f32> = (0..200).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        for k in 1..=LANES {
+            let got = sliding_sum(&x, k);
+            let want = ref_sliding_sum(&x, k);
+            assert_eq!(got.len(), want.len());
+            for i in 0..got.len() {
+                assert!((got[i] - want[i]).abs() < 1e-4, "k={k} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn sliding_sum_large_window_fallback() {
+        let x: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let got = sliding_sum(&x, 40);
+        let want = ref_sliding_sum(&x, 40);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn sliding_sum_short_signal() {
+        let x = [1.0, 2.0, 3.0];
+        assert_eq!(sliding_sum(&x, 3), vec![6.0]);
+        assert_eq!(sliding_sum(&x, 1), vec![1.0, 2.0, 3.0]);
+    }
+
+    fn against_direct(c_in: usize, c_out: usize, l: usize, k: usize, p: Conv1dParams, seed: u64) {
+        let x = Tensor::randn(&[c_in, l], seed);
+        let w = Tensor::randn(&[c_out, c_in, k], seed + 1);
+        let bias: Vec<f32> = (0..c_out).map(|i| 0.01 * i as f32).collect();
+        let got = conv1d_sliding(&x, &w, Some(&bias), &p);
+        let want = conv1d_direct(&x, &w, Some(&bias), &p);
+        let d = got.max_abs_diff(&want);
+        assert!(d < 1e-3, "cin={c_in} cout={c_out} l={l} k={k}: diff {d}");
+    }
+
+    #[test]
+    fn conv1d_matches_direct_small_filters() {
+        for k in [1, 2, 3, 5, 8] {
+            against_direct(2, 3, 50, k, Conv1dParams::default(), 10 + k as u64);
+        }
+    }
+
+    #[test]
+    fn conv1d_matches_direct_generic_and_compound() {
+        for k in [16, 17, 18, 33, 64] {
+            against_direct(1, 2, 120, k, Conv1dParams::default(), 20 + k as u64);
+        }
+    }
+
+    #[test]
+    fn conv1d_matches_direct_padded() {
+        against_direct(3, 2, 40, 7, Conv1dParams { stride: 1, pad: 3 }, 30);
+    }
+
+    #[test]
+    fn conv1d_matches_direct_strided() {
+        against_direct(2, 2, 41, 5, Conv1dParams { stride: 3, pad: 2 }, 31);
+    }
+
+    #[test]
+    fn conv1d_huge_filter_falls_back() {
+        against_direct(1, 1, 300, COMPOUND_MAX_K + 10, Conv1dParams::default(), 32);
+    }
+}

@@ -1,0 +1,278 @@
+//! 2-D Sliding Window convolution — the paper's headline contribution.
+//!
+//! A 2-D convolution is evaluated as a vertical accumulation of 1-D
+//! vector-slide row convolutions: for output row `oy`, each filter row
+//! `ky` contributes a 1-D convolution of padded input row `oy + ky`.
+//! The input is traversed exactly once per filter row, in row-major
+//! streaming order, and **no intermediate matrix is materialised** —
+//! contrast `im2col`, which copies every window (a `kh·kw ×` blow-up)
+//! before its GEMM. Arithmetic-operation count is identical to
+//! GEMM/direct; the speedup comes from the memory access pattern
+//! (paper §2).
+//!
+//! The row kernel is chosen by [`SlideVariant`]:
+//! * `Auto` — the paper's policy: custom kernels for k = 3 and 5, the
+//!   generic in-vector kernel up to k = 17, compound vectors beyond.
+//! * `Generic` / `Compound` — forced, for the ablation studies
+//!   (custom-vs-generic, and the k = 17 crossover where the compound
+//!   kernel beats the in-vector one).
+
+use super::direct::conv2d_direct;
+use super::rowconv::{
+    row_conv_auto, row_conv_compound, row_conv_generic, COMPOUND_MAX_K, GENERIC_MAX_K,
+};
+use super::Conv2dParams;
+use crate::simd::LANES;
+use crate::tensor::{pad2d, Tensor};
+
+/// Which row kernel the 2-D sliding convolution uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlideVariant {
+    /// Paper §2 policy: custom (k=3,5) → generic (k≤17) → compound.
+    Auto,
+    /// Force the straightforward in-vector Vector Slide (k ≤ 17).
+    Generic,
+    /// Force the compound-vector kernel (any k ≤ [`COMPOUND_MAX_K`]).
+    Compound,
+}
+
+impl SlideVariant {
+    /// Whether this variant can evaluate filter width `k`.
+    pub fn supports(self, k: usize) -> bool {
+        match self {
+            SlideVariant::Auto => k <= COMPOUND_MAX_K,
+            SlideVariant::Generic => k <= GENERIC_MAX_K,
+            SlideVariant::Compound => k <= COMPOUND_MAX_K,
+        }
+    }
+
+    #[inline]
+    fn row_fn(self) -> fn(&[f32], &[f32], &mut [f32], usize) {
+        match self {
+            SlideVariant::Auto => row_conv_auto,
+            SlideVariant::Generic => row_conv_generic,
+            SlideVariant::Compound => row_conv_compound,
+        }
+    }
+}
+
+/// 2-D convolution via the Sliding Window kernels (same contract as
+/// [`conv2d_direct`]).
+///
+/// Filter widths the variant cannot handle fall back to the direct
+/// kernel (only possible beyond [`COMPOUND_MAX_K`] with `Auto`).
+///
+/// # Panics
+/// If `variant` is forced (`Generic`/`Compound`) and cannot handle `kw`.
+pub fn conv2d_sliding(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+    variant: SlideVariant,
+) -> Tensor {
+    assert_eq!(x.rank(), 4, "input must be NCHW");
+    assert_eq!(w.rank(), 4, "weights must be [cout, cin/g, kh, kw]");
+    let (n, c_in, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (c_out, c_in_g, kh, kw) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+    let g = p.groups;
+    assert!(g >= 1 && c_in % g == 0 && c_out % g == 0, "bad groups {g}");
+    assert_eq!(c_in / g, c_in_g, "weight c_in/{g} mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), c_out, "bias length");
+    }
+    if !variant.supports(kw) {
+        match variant {
+            SlideVariant::Auto => return conv2d_direct(x, w, bias, p),
+            _ => panic!("{variant:?} cannot evaluate filter width {kw}"),
+        }
+    }
+    let (oh, ow) = p.out_size(h, win, kh, kw);
+    let (sh, sw) = p.stride;
+    // Unit-stride geometry; strided outputs subsample it.
+    let ow1 = win + 2 * p.pad.1 - kw + 1;
+    let row_fn = variant.row_fn();
+
+    // Pad once: convolution padding plus vector-load slack on the right.
+    let padded = pad2d(x, p.pad.0, p.pad.1, 2 * LANES + kw, 0.0);
+    let wp = padded.dim(3);
+
+    let ws = w.as_slice();
+    let c_out_g = c_out / g;
+    let mut out = Tensor::zeros(&[n, c_out, oh, ow]);
+    let mut scratch = vec![0.0f32; ow1];
+    for ni in 0..n {
+        for co in 0..c_out {
+            let grp = co / c_out_g;
+            let b = bias.map_or(0.0, |b| b[co]);
+            for oy in 0..oh {
+                let iy0 = oy * sh;
+                scratch.fill(b);
+                for cig in 0..c_in_g {
+                    let plane = padded.plane(ni, grp * c_in_g + cig);
+                    for ky in 0..kh {
+                        let src = &plane[(iy0 + ky) * wp..];
+                        let wrow = &ws[((co * c_in_g + cig) * kh + ky) * kw..][..kw];
+                        row_fn(src, wrow, &mut scratch, ow1);
+                    }
+                }
+                let orow_start = out.offset4(ni, co, oy, 0);
+                let orow = &mut out.as_mut_slice()[orow_start..orow_start + ow];
+                if sw == 1 {
+                    orow.copy_from_slice(&scratch[..ow]);
+                } else {
+                    for (ox, v) in orow.iter_mut().enumerate() {
+                        *v = scratch[ox * sw];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn against_direct(
+        xdims: &[usize],
+        wdims: &[usize],
+        p: &Conv2dParams,
+        variant: SlideVariant,
+        seed: u64,
+    ) {
+        let x = Tensor::randn(xdims, seed);
+        let w = Tensor::randn(wdims, seed + 1);
+        let bias: Vec<f32> = (0..wdims[0]).map(|i| 0.05 * i as f32).collect();
+        let got = conv2d_sliding(&x, &w, Some(&bias), p, variant);
+        let want = conv2d_direct(&x, &w, Some(&bias), p);
+        let d = got.max_abs_diff(&want);
+        assert!(d < 2e-3, "{xdims:?} {wdims:?} {p:?} {variant:?}: diff {d}");
+    }
+
+    #[test]
+    fn auto_matches_direct_small_filters() {
+        for k in [1, 2, 3, 4, 5, 7] {
+            against_direct(
+                &[1, 2, 10, 12],
+                &[3, 2, k, k],
+                &Conv2dParams::default(),
+                SlideVariant::Auto,
+                40 + k as u64,
+            );
+        }
+    }
+
+    #[test]
+    fn auto_matches_direct_generic_range() {
+        for k in [9, 16, 17] {
+            against_direct(
+                &[1, 1, 20, 40],
+                &[2, 1, 3, k],
+                &Conv2dParams::default(),
+                SlideVariant::Auto,
+                50 + k as u64,
+            );
+        }
+    }
+
+    #[test]
+    fn auto_matches_direct_compound_range() {
+        for k in [18, 24, 33, 49] {
+            against_direct(
+                &[1, 1, 8, 80],
+                &[1, 1, 2, k],
+                &Conv2dParams::default(),
+                SlideVariant::Auto,
+                60 + k as u64,
+            );
+        }
+    }
+
+    #[test]
+    fn forced_generic_matches() {
+        against_direct(
+            &[1, 2, 9, 30],
+            &[2, 2, 3, 3],
+            &Conv2dParams::default(),
+            SlideVariant::Generic,
+            70,
+        );
+    }
+
+    #[test]
+    fn forced_compound_matches_even_small_k() {
+        against_direct(
+            &[1, 2, 9, 30],
+            &[2, 2, 5, 5],
+            &Conv2dParams::default(),
+            SlideVariant::Compound,
+            71,
+        );
+    }
+
+    #[test]
+    fn crossover_width_17_both_variants_agree() {
+        // k=17 can be evaluated by either kernel family — the paper's
+        // crossover observation. Both must be exact.
+        for v in [SlideVariant::Generic, SlideVariant::Compound] {
+            against_direct(&[1, 1, 6, 64], &[1, 1, 1, 17], &Conv2dParams::default(), v, 72);
+        }
+    }
+
+    #[test]
+    fn padded_same_matches() {
+        against_direct(
+            &[2, 3, 13, 13],
+            &[4, 3, 5, 5],
+            &Conv2dParams::same(5),
+            SlideVariant::Auto,
+            73,
+        );
+    }
+
+    #[test]
+    fn strided_matches() {
+        let p = Conv2dParams { stride: (2, 2), pad: (1, 1), groups: 1 };
+        against_direct(&[1, 3, 12, 14], &[2, 3, 3, 3], &p, SlideVariant::Auto, 74);
+    }
+
+    #[test]
+    fn grouped_and_depthwise_match() {
+        let p = Conv2dParams { stride: (1, 1), pad: (1, 1), groups: 2 };
+        against_direct(&[1, 4, 8, 8], &[6, 2, 3, 3], &p, SlideVariant::Auto, 75);
+        let dw = Conv2dParams { stride: (1, 1), pad: (2, 2), groups: 8 };
+        against_direct(&[1, 8, 9, 9], &[8, 1, 5, 5], &dw, SlideVariant::Auto, 76);
+    }
+
+    #[test]
+    fn tall_filter_rows_accumulate() {
+        against_direct(
+            &[1, 1, 30, 10],
+            &[1, 1, 11, 3],
+            &Conv2dParams::default(),
+            SlideVariant::Auto,
+            77,
+        );
+    }
+
+    #[test]
+    fn huge_width_falls_back_to_direct() {
+        against_direct(
+            &[1, 1, 3, 160],
+            &[1, 1, 1, COMPOUND_MAX_K + 5],
+            &Conv2dParams::default(),
+            SlideVariant::Auto,
+            78,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot evaluate")]
+    fn forced_generic_rejects_wide_filters() {
+        let x = Tensor::zeros(&[1, 1, 4, 40]);
+        let w = Tensor::zeros(&[1, 1, 1, 20]);
+        let _ = conv2d_sliding(&x, &w, None, &Conv2dParams::default(), SlideVariant::Generic);
+    }
+}

@@ -1,0 +1,53 @@
+//! # swconv — Sliding-Window convolution primitives for commodity hardware
+//!
+//! Reproduction of *"Accelerating Machine Learning Primitives on Commodity
+//! Hardware"* (R. Snytsar, 2023): 1-D and 2-D convolution and pooling
+//! expressed as **sliding window sums** and evaluated by SIMD "vector
+//! slide" kernels that operate on the unmodified input, instead of the
+//! usual `im2col` + GEMM route that bloats memory by the filter size.
+//!
+//! The crate is organised in layers:
+//!
+//! * [`simd`] — the portable "hardware vector" ([`simd::F32xL`], 16 × f32 =
+//!   one AVX-512 register) with the *slide* (lane-shift) primitives the
+//!   paper's kernels are built from, plus compound (multi-register) slides.
+//! * [`tensor`] — a minimal NCHW tensor library (owned `f32` buffers,
+//!   stride math, zero-padding) used by every kernel.
+//! * [`kernels`] — the paper's contribution and its baselines:
+//!   sliding-window 1-D/2-D convolution (generic, compound, and custom
+//!   k=3/k=5 kernels), sliding max/avg pooling, plus the `im2col` + blocked
+//!   GEMM baseline (our stand-in for ONNX Runtime's `MlasConv`) and a naïve
+//!   direct convolution oracle.
+//! * [`nn`] — a small layer/graph library (Conv2d, Pool, ReLU, Linear, …)
+//!   and a model zoo (SqueezeNet-lite, MobileNet-lite, SimpleCNN) so the
+//!   primitives can be exercised inside real networks.
+//! * [`harness`] — workload generators, parameter sweeps, the
+//!   Advisor-style roofline model, and the report builders that regenerate
+//!   the paper's Fig. 1 (speedup) and Fig. 2 (throughput).
+//! * [`runtime`] — PJRT wrapper that loads the AOT artifacts produced by
+//!   `python/compile/aot.py` (JAX/Pallas lowered to HLO text) and executes
+//!   them from Rust; Python is never on the request path.
+//! * [`coordinator`] — the serving driver: request queue, dynamic batcher,
+//!   per-algorithm router and latency/throughput metrics.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use swconv::tensor::Tensor;
+//! use swconv::kernels::{conv2d, Conv2dParams, ConvAlgo};
+//!
+//! let x = Tensor::randn(&[1, 3, 32, 32], 42);     // NCHW
+//! let w = Tensor::randn(&[8, 3, 5, 5], 7);        // [Cout, Cin, kh, kw]
+//! let p = Conv2dParams::default();
+//! let y_sliding = conv2d(&x, &w, None, &p, ConvAlgo::Sliding);
+//! let y_gemm    = conv2d(&x, &w, None, &p, ConvAlgo::Im2colGemm);
+//! assert!(y_sliding.allclose(&y_gemm, 1e-4));
+//! ```
+
+pub mod simd;
+pub mod tensor;
+pub mod kernels;
+pub mod nn;
+pub mod harness;
+pub mod runtime;
+pub mod coordinator;

@@ -1,0 +1,298 @@
+//! swconv CLI — the leader entrypoint.
+//!
+//! Subcommands (clap is unavailable offline; parsing is hand-rolled):
+//!
+//! * `bench-fig1`  — regenerate the paper's Fig. 1 (speedup vs filter size)
+//! * `bench-fig2`  — regenerate Fig. 2 (throughput vs roofline)
+//! * `peaks`       — measure machine compute/bandwidth ceilings
+//! * `run-model`   — one forward pass of a zoo model, timed per algorithm
+//! * `serve`       — demo serving run through the coordinator
+//! * `summary`     — layer/FLOP summary of a zoo model
+//! * `artifacts-check` — load every AOT artifact and cross-check numerics
+//!   against the native kernels
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::time::{Duration, Instant};
+use swconv::coordinator::{BackendSpec, BatchPolicy, Coordinator};
+use swconv::harness::report::{dur, f3, Table};
+use swconv::harness::{
+    bench, fig1_speedup_sweep, fig2_throughput_sweep, machine_peaks, sweep, ConvCase,
+};
+use swconv::kernels::{conv2d, Conv2dParams, ConvAlgo};
+use swconv::nn::{zoo, ExecCtx};
+use swconv::runtime::{engine::default_artifacts_dir, Engine};
+use swconv::tensor::Tensor;
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    cmd: String,
+    kv: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut kv = Vec::new();
+        while let Some(k) = it.next() {
+            let k = k
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{k}'"))?
+                .to_string();
+            let v = it.next().ok_or_else(|| anyhow!("--{k} needs a value"))?;
+            kv.push((k, v));
+        }
+        Ok(Args { cmd, kv })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.kv.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+        }
+    }
+}
+
+fn parse_ks(args: &Args) -> Result<Vec<usize>> {
+    match args.get("ks") {
+        None => Ok(sweep::default_k_grid()),
+        Some(s) => s
+            .split(',')
+            .map(|t| t.trim().parse::<usize>().with_context(|| format!("bad k '{t}'")))
+            .collect(),
+    }
+}
+
+fn cmd_fig1(args: &Args) -> Result<()> {
+    let c = args.usize("c", 4)?;
+    let hw = args.usize("hw", 64)?;
+    let ks = parse_ks(args)?;
+    eprintln!("fig1: c={c} hw={hw} ks={ks:?} (single core)");
+    let rows = fig1_speedup_sweep(&ks, |k| ConvCase::square(c, hw, k));
+    let mut t = Table::new(
+        format!("Fig 1 — 2-D convolution speedup vs MlasConv-style GEMM (c={c}, {hw}x{hw})"),
+        &["k", "kernel", "t_gemm", "t_sliding", "t_generic", "t_compound", "speedup"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.k.to_string(),
+            r.kernel_used.to_string(),
+            format!("{:.3}ms", r.t_gemm * 1e3),
+            format!("{:.3}ms", r.t_sliding * 1e3),
+            r.t_generic.map_or("-".into(), |v| format!("{:.3}ms", v * 1e3)),
+            r.t_compound.map_or("-".into(), |v| format!("{:.3}ms", v * 1e3)),
+            f3(r.speedup),
+        ]);
+    }
+    println!("{}", t.render());
+    if let Some(path) = args.get("csv") {
+        t.write_csv(path)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> Result<()> {
+    let c = args.usize("c", 4)?;
+    let hw = args.usize("hw", 64)?;
+    let ks = parse_ks(args)?;
+    let peaks = machine_peaks();
+    eprintln!(
+        "fig2: c={c} hw={hw}; machine peak {:.1} GFLOP/s, bw {:.1} GB/s, ridge {:.2} FLOP/B",
+        peaks.gflops,
+        peaks.bandwidth_gbs,
+        peaks.ridge()
+    );
+    let rows = fig2_throughput_sweep(&ks, |k| ConvCase::square(c, hw, k));
+    let mut t = Table::new(
+        format!("Fig 2 — 2-D convolution throughput, GFLOP/s (c={c}, {hw}x{hw})"),
+        &["k", "sliding", "gemm", "roof(sliding)", "roof(gemm)", "peak", "sliding/peak"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.k.to_string(),
+            f3(r.sliding_gflops),
+            f3(r.gemm_gflops),
+            f3(r.sliding_roof),
+            f3(r.gemm_roof),
+            f3(r.peak),
+            f3(r.sliding_gflops / r.peak),
+        ]);
+    }
+    println!("{}", t.render());
+    if let Some(path) = args.get("csv") {
+        t.write_csv(path)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_peaks() -> Result<()> {
+    let p = machine_peaks();
+    println!("compute peak : {:.2} GFLOP/s (single core, f32 FMA)", p.gflops);
+    println!("bandwidth    : {:.2} GB/s (stream triad)", p.bandwidth_gbs);
+    println!("ridge point  : {:.2} FLOP/byte", p.ridge());
+    Ok(())
+}
+
+fn cmd_run_model(args: &Args) -> Result<()> {
+    let name = args.get("model").unwrap_or("simple-cnn");
+    let batch = args.usize("batch", 1)?;
+    let model = zoo::by_name(name, 10, 42)
+        .ok_or_else(|| anyhow!("unknown model '{name}' (try {:?})", zoo::MODEL_NAMES))?;
+    let mut in_shape = vec![batch];
+    in_shape.extend_from_slice(&model.input_shape);
+    let x = Tensor::randn(&in_shape, 7);
+    let mut t = Table::new(
+        format!("{name} forward, batch {batch} ({} FLOP)", model.flops(batch)),
+        &["algo", "median", "GFLOP/s"],
+    );
+    let mut outputs: Vec<(ConvAlgo, Tensor)> = Vec::new();
+    for algo in [ConvAlgo::Im2colGemm, ConvAlgo::Sliding, ConvAlgo::Direct] {
+        let ctx = ExecCtx { algo };
+        let stats = bench(|| model.forward(&x, &ctx));
+        t.row(vec![
+            algo.name().into(),
+            dur(stats.median),
+            f3(stats.gflops(model.flops(batch))),
+        ]);
+        outputs.push((algo, model.forward(&x, &ctx)));
+    }
+    println!("{}", t.render());
+    for w in outputs.windows(2) {
+        let d = w[0].1.max_abs_diff(&w[1].1);
+        println!(
+            "outputs {} vs {}: max |diff| = {d:.2e}",
+            w[0].0.name(),
+            w[1].0.name()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_summary(args: &Args) -> Result<()> {
+    let name = args.get("model").unwrap_or("simple-cnn");
+    let model = zoo::by_name(name, 10, 42)
+        .ok_or_else(|| anyhow!("unknown model '{name}' (try {:?})", zoo::MODEL_NAMES))?;
+    print!("{}", model.summary(args.usize("batch", 1)?));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let name = args.get("model").unwrap_or("squeezenet-lite");
+    let n_req = args.usize("requests", 64)?;
+    let max_batch = args.usize("max-batch", 8)?;
+    let wait_ms = args.usize("max-wait-ms", 2)?;
+    let model_a = zoo::by_name(name, 10, 42).ok_or_else(|| anyhow!("unknown model '{name}'"))?;
+    let model_b = zoo::by_name(name, 10, 42).unwrap();
+    let item_shape = model_a.input_shape.clone();
+
+    let backends = vec![
+        BackendSpec::native("sliding", model_a, ExecCtx { algo: ConvAlgo::Sliding }),
+        BackendSpec::native("gemm", model_b, ExecCtx { algo: ConvAlgo::Im2colGemm }),
+    ];
+    let coord = Coordinator::new(
+        backends,
+        BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms as u64) },
+    );
+
+    for backend in ["sliding", "gemm"] {
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n_req)
+            .map(|i| coord.submit(backend, Tensor::randn(&item_shape, i as u64)).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv()
+                .map_err(|_| anyhow!("worker died"))?
+                .output
+                .map_err(|e| anyhow!("{e}"))?;
+        }
+        let wall = t0.elapsed();
+        let m = coord.metrics(backend).unwrap();
+        println!(
+            "{backend:>8}: {n_req} reqs in {} = {:.1} req/s | {}",
+            dur(wall),
+            n_req as f64 / wall.as_secs_f64(),
+            m.summary()
+        );
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_artifacts_check(args: &Args) -> Result<()> {
+    let dir = args
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let mut engine = Engine::new(&dir)
+        .with_context(|| format!("loading artifacts from {} (run `make artifacts`)", dir.display()))?;
+    let n = engine.load_all()?;
+    println!("compiled {n} artifacts on {}", engine.platform());
+
+    // Cross-check every conv2d artifact against the native kernels.
+    let specs: Vec<_> = engine.manifest().of_kind("conv2d").into_iter().cloned().collect();
+    let mut checked = 0;
+    for spec in specs {
+        let x = Tensor::rand_uniform(&spec.inputs[0], -1.0, 1.0, 11);
+        let w = Tensor::rand_uniform(&spec.inputs[1], -1.0, 1.0, 12);
+        let y = engine.execute(&spec.name, &[&x, &w])?;
+        // aot.py lowers conv2d artifacts with "same" padding for odd k.
+        let pad = spec.inputs[1][2].saturating_sub(1) / 2;
+        let params = Conv2dParams::with_pad(pad, pad);
+        let native = conv2d(&x, &w, None, &params, ConvAlgo::Sliding);
+        let d = y.max_abs_diff(&native);
+        if d > 1e-3 {
+            bail!("artifact {} differs from native kernels: {d}", spec.name);
+        }
+        println!("  {:<40} max|diff| = {d:.2e}  OK", spec.name);
+        checked += 1;
+    }
+    println!("artifacts-check OK ({checked} conv2d artifacts cross-checked)");
+    Ok(())
+}
+
+fn help() {
+    println!(
+        "swconv — Sliding-Window convolution reproduction
+
+USAGE: swconv <command> [--flag value]...
+
+COMMANDS
+  bench-fig1       [--c 4] [--hw 64] [--ks 2,3,...] [--csv out.csv]
+  bench-fig2       [--c 4] [--hw 64] [--ks 2,3,...] [--csv out.csv]
+  peaks
+  run-model        [--model NAME] [--batch N]
+  summary          [--model NAME] [--batch N]
+  serve            [--model NAME] [--requests N] [--max-batch N] [--max-wait-ms MS]
+  artifacts-check  [--dir artifacts]
+
+MODELS: {:?}",
+        zoo::MODEL_NAMES
+    );
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "bench-fig1" => cmd_fig1(&args),
+        "bench-fig2" => cmd_fig2(&args),
+        "peaks" => cmd_peaks(),
+        "run-model" => cmd_run_model(&args),
+        "summary" => cmd_summary(&args),
+        "serve" => cmd_serve(&args),
+        "artifacts-check" => cmd_artifacts_check(&args),
+        "help" | "--help" | "-h" => {
+            help();
+            Ok(())
+        }
+        other => {
+            help();
+            bail!("unknown command '{other}'");
+        }
+    }
+}

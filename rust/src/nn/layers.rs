@@ -1,0 +1,535 @@
+//! Layers. Each layer is a [`Layer`] trait object with forward execution,
+//! shape inference and FLOP accounting (the roofline harness uses the
+//! latter two without running anything).
+
+use crate::kernels::{
+    avg_pool2d, conv2d, max_pool2d, Conv2dParams, ConvAlgo, PoolParams,
+};
+use crate::tensor::Tensor;
+
+/// Per-request execution context: which convolution algorithm every conv
+/// layer in the model uses. The coordinator's router switches this per
+/// request; weights stay shared.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecCtx {
+    /// Convolution algorithm for all `Conv2d` layers.
+    pub algo: ConvAlgo,
+}
+
+impl Default for ExecCtx {
+    fn default() -> Self {
+        ExecCtx { algo: ConvAlgo::Sliding }
+    }
+}
+
+/// A neural-network layer.
+pub trait Layer: Send + Sync {
+    /// Human-readable description (used in model summaries).
+    fn describe(&self) -> String;
+    /// Output shape for a given input shape.
+    ///
+    /// # Panics
+    /// If the input shape is incompatible.
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize>;
+    /// Floating-point operations for one forward pass at this input shape
+    /// (multiply and add counted separately, the usual convention).
+    fn flops(&self, in_shape: &[usize]) -> u64;
+    /// Run the layer.
+    fn forward(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor;
+}
+
+// ---------------------------------------------------------------- Conv2d
+
+/// 2-D convolution layer; the algorithm comes from [`ExecCtx`].
+pub struct Conv2d {
+    /// Weights `[c_out, c_in/groups, kh, kw]`.
+    pub w: Tensor,
+    /// Bias `[c_out]`.
+    pub bias: Vec<f32>,
+    /// Stride / padding / groups.
+    pub params: Conv2dParams,
+}
+
+impl Conv2d {
+    /// He-initialised convolution layer, deterministic in `seed`.
+    pub fn new(
+        c_in: usize,
+        c_out: usize,
+        k: usize,
+        params: Conv2dParams,
+        seed: u64,
+    ) -> Self {
+        let c_in_g = c_in / params.groups;
+        let fan_in = (c_in_g * k * k) as f32;
+        let scale = (2.0 / fan_in).sqrt();
+        let w = Tensor::randn(&[c_out, c_in_g, k, k], seed).map(|v| v * scale);
+        Conv2d { w, bias: vec![0.0; c_out], params }
+    }
+}
+
+impl Layer for Conv2d {
+    fn describe(&self) -> String {
+        let d = self.w.dims();
+        format!(
+            "Conv2d {}x{}x{}x{} s{:?} p{:?} g{}",
+            d[0], d[1], d[2], d[3], self.params.stride, self.params.pad, self.params.groups
+        )
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        assert_eq!(in_shape.len(), 4, "Conv2d input must be NCHW");
+        let (kh, kw) = (self.w.dim(2), self.w.dim(3));
+        assert_eq!(
+            in_shape[1],
+            self.w.dim(1) * self.params.groups,
+            "Conv2d channel mismatch"
+        );
+        let (oh, ow) = self.params.out_size(in_shape[2], in_shape[3], kh, kw);
+        vec![in_shape[0], self.w.dim(0), oh, ow]
+    }
+
+    fn flops(&self, in_shape: &[usize]) -> u64 {
+        let out = self.out_shape(in_shape);
+        let taps = self.w.dim(1) * self.w.dim(2) * self.w.dim(3);
+        // 2 FLOPs (mul+add) per tap per output element, plus the bias add.
+        (out.iter().product::<usize>() * (2 * taps + 1)) as u64
+    }
+
+    fn forward(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor {
+        conv2d(x, &self.w, Some(&self.bias), &self.params, ctx.algo)
+    }
+}
+
+// --------------------------------------------------------------- Pooling
+
+/// Max-pooling layer (sliding-window kernel).
+pub struct MaxPool2d(pub PoolParams);
+
+impl Layer for MaxPool2d {
+    fn describe(&self) -> String {
+        format!("MaxPool2d k{:?} s{:?}", self.0.k, self.0.stride)
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        let (oh, ow) = self.0.out_size(in_shape[2], in_shape[3]);
+        vec![in_shape[0], in_shape[1], oh, ow]
+    }
+
+    fn flops(&self, in_shape: &[usize]) -> u64 {
+        let out = self.out_shape(in_shape);
+        (out.iter().product::<usize>() * (self.0.k.0 * self.0.k.1 - 1)) as u64
+    }
+
+    fn forward(&self, x: &Tensor, _ctx: &ExecCtx) -> Tensor {
+        max_pool2d(x, &self.0)
+    }
+}
+
+/// Average-pooling layer (sliding-window sum kernel).
+pub struct AvgPool2d(pub PoolParams);
+
+impl Layer for AvgPool2d {
+    fn describe(&self) -> String {
+        format!("AvgPool2d k{:?} s{:?}", self.0.k, self.0.stride)
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        let (oh, ow) = self.0.out_size(in_shape[2], in_shape[3]);
+        vec![in_shape[0], in_shape[1], oh, ow]
+    }
+
+    fn flops(&self, in_shape: &[usize]) -> u64 {
+        let out = self.out_shape(in_shape);
+        (out.iter().product::<usize>() * (self.0.k.0 * self.0.k.1)) as u64
+    }
+
+    fn forward(&self, x: &Tensor, _ctx: &ExecCtx) -> Tensor {
+        avg_pool2d(x, &self.0)
+    }
+}
+
+/// Global average pooling: collapses H×W to 1×1.
+pub struct GlobalAvgPool;
+
+impl Layer for GlobalAvgPool {
+    fn describe(&self) -> String {
+        "GlobalAvgPool".into()
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        vec![in_shape[0], in_shape[1], 1, 1]
+    }
+
+    fn flops(&self, in_shape: &[usize]) -> u64 {
+        in_shape.iter().product::<usize>() as u64
+    }
+
+    fn forward(&self, x: &Tensor, _ctx: &ExecCtx) -> Tensor {
+        let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+        let inv = 1.0 / (h * w) as f32;
+        let mut out = Tensor::zeros(&[n, c, 1, 1]);
+        for ni in 0..n {
+            for ci in 0..c {
+                let s: f32 = x.plane(ni, ci).iter().sum();
+                *out.at4_mut(ni, ci, 0, 0) = s * inv;
+            }
+        }
+        out
+    }
+}
+
+// ----------------------------------------------------------- Activations
+
+/// Rectified linear unit.
+pub struct ReLU;
+
+impl Layer for ReLU {
+    fn describe(&self) -> String {
+        "ReLU".into()
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        in_shape.to_vec()
+    }
+
+    fn flops(&self, in_shape: &[usize]) -> u64 {
+        in_shape.iter().product::<usize>() as u64
+    }
+
+    fn forward(&self, x: &Tensor, _ctx: &ExecCtx) -> Tensor {
+        x.map(|v| v.max(0.0))
+    }
+}
+
+/// Row-wise softmax over the last dimension.
+pub struct Softmax;
+
+impl Layer for Softmax {
+    fn describe(&self) -> String {
+        "Softmax".into()
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        in_shape.to_vec()
+    }
+
+    fn flops(&self, in_shape: &[usize]) -> u64 {
+        (3 * in_shape.iter().product::<usize>()) as u64
+    }
+
+    fn forward(&self, x: &Tensor, _ctx: &ExecCtx) -> Tensor {
+        let cols = *x.dims().last().expect("softmax needs rank >= 1");
+        let mut out = x.clone();
+        for row in out.as_mut_slice().chunks_mut(cols) {
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut z = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - m).exp();
+                z += *v;
+            }
+            let inv = 1.0 / z;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+        out
+    }
+}
+
+// ------------------------------------------------------- Shape plumbing
+
+/// Flatten `[n, …]` to `[n, prod(rest)]`.
+pub struct Flatten;
+
+impl Layer for Flatten {
+    fn describe(&self) -> String {
+        "Flatten".into()
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        vec![in_shape[0], in_shape[1..].iter().product()]
+    }
+
+    fn flops(&self, _in_shape: &[usize]) -> u64 {
+        0
+    }
+
+    fn forward(&self, x: &Tensor, _ctx: &ExecCtx) -> Tensor {
+        let shape = self.out_shape(x.dims());
+        x.clone().reshape(&shape)
+    }
+}
+
+// ---------------------------------------------------------------- Linear
+
+/// Fully connected layer: `y = x · Wᵀ + b` for `x [n, in]`, `W [out, in]`.
+pub struct Linear {
+    /// Weights `[out, in]`.
+    pub w: Tensor,
+    /// Bias `[out]`.
+    pub bias: Vec<f32>,
+}
+
+impl Linear {
+    /// He-initialised linear layer, deterministic in `seed`.
+    pub fn new(d_in: usize, d_out: usize, seed: u64) -> Self {
+        let scale = (2.0 / d_in as f32).sqrt();
+        Linear {
+            w: Tensor::randn(&[d_out, d_in], seed).map(|v| v * scale),
+            bias: vec![0.0; d_out],
+        }
+    }
+}
+
+impl Layer for Linear {
+    fn describe(&self) -> String {
+        format!("Linear {}x{}", self.w.dim(0), self.w.dim(1))
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        assert_eq!(in_shape.len(), 2, "Linear input must be [n, d]");
+        assert_eq!(in_shape[1], self.w.dim(1), "Linear dim mismatch");
+        vec![in_shape[0], self.w.dim(0)]
+    }
+
+    fn flops(&self, in_shape: &[usize]) -> u64 {
+        (in_shape[0] * self.w.dim(0) * (2 * self.w.dim(1) + 1)) as u64
+    }
+
+    fn forward(&self, x: &Tensor, _ctx: &ExecCtx) -> Tensor {
+        let (n, d_in) = (x.dim(0), x.dim(1));
+        let d_out = self.w.dim(0);
+        let mut out = Tensor::zeros(&[n, d_out]);
+        let xs = x.as_slice();
+        let ws = self.w.as_slice();
+        for i in 0..n {
+            let xrow = &xs[i * d_in..(i + 1) * d_in];
+            let orow = &mut out.as_mut_slice()[i * d_out..(i + 1) * d_out];
+            for (o, ov) in orow.iter_mut().enumerate() {
+                let wrow = &ws[o * d_in..(o + 1) * d_in];
+                let mut acc = self.bias[o];
+                for (xv, wv) in xrow.iter().zip(wrow) {
+                    acc += xv * wv;
+                }
+                *ov = acc;
+            }
+        }
+        out
+    }
+}
+
+// ------------------------------------------------------------------ Fire
+
+/// SqueezeNet *fire module*: 1×1 squeeze → (1×1 expand ‖ 3×3 expand),
+/// channel-concatenated, ReLU between stages.
+pub struct Fire {
+    squeeze: Conv2d,
+    expand1: Conv2d,
+    expand3: Conv2d,
+}
+
+impl Fire {
+    /// `c_in → s` squeeze, then `s → e1` (1×1) and `s → e3` (3×3) expands;
+    /// output has `e1 + e3` channels at the input's spatial size.
+    pub fn new(c_in: usize, s: usize, e1: usize, e3: usize, seed: u64) -> Self {
+        Fire {
+            squeeze: Conv2d::new(c_in, s, 1, Conv2dParams::default(), seed),
+            expand1: Conv2d::new(s, e1, 1, Conv2dParams::default(), seed + 1),
+            expand3: Conv2d::new(s, e3, 3, Conv2dParams::same(3), seed + 2),
+        }
+    }
+}
+
+impl Layer for Fire {
+    fn describe(&self) -> String {
+        format!(
+            "Fire s{} e1:{} e3:{}",
+            self.squeeze.w.dim(0),
+            self.expand1.w.dim(0),
+            self.expand3.w.dim(0)
+        )
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        let s = self.squeeze.out_shape(in_shape);
+        let e1 = self.expand1.out_shape(&s);
+        let e3 = self.expand3.out_shape(&s);
+        assert_eq!(e1[2..], e3[2..], "fire expand spatial mismatch");
+        vec![e1[0], e1[1] + e3[1], e1[2], e1[3]]
+    }
+
+    fn flops(&self, in_shape: &[usize]) -> u64 {
+        let s = self.squeeze.out_shape(in_shape);
+        self.squeeze.flops(in_shape)
+            + self.expand1.flops(&s)
+            + self.expand3.flops(&s)
+            + 2 * s.iter().product::<usize>() as u64 // ReLUs
+    }
+
+    fn forward(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor {
+        let s = self.squeeze.forward(x, ctx).map(|v| v.max(0.0));
+        let a = self.expand1.forward(&s, ctx);
+        let b = self.expand3.forward(&s, ctx);
+        concat_channels(&a, &b).map(|v| v.max(0.0))
+    }
+}
+
+/// Concatenate two NCHW tensors along channels.
+pub fn concat_channels(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.dim(0), b.dim(0), "batch mismatch");
+    assert_eq!(a.dims()[2..], b.dims()[2..], "spatial mismatch");
+    let (n, ca, cb) = (a.dim(0), a.dim(1), b.dim(1));
+    let (h, w) = (a.dim(2), a.dim(3));
+    let mut out = Tensor::zeros(&[n, ca + cb, h, w]);
+    for ni in 0..n {
+        for ci in 0..ca {
+            out.plane_mut(ni, ci).copy_from_slice(a.plane(ni, ci));
+        }
+        for ci in 0..cb {
+            out.plane_mut(ni, ca + ci).copy_from_slice(b.plane(ni, ci));
+        }
+    }
+    out
+}
+
+// --------------------------------------------- Depthwise separable block
+
+/// MobileNet block: depthwise 3×3 (groups = channels) + pointwise 1×1,
+/// ReLU after each.
+pub struct DepthwiseSeparable {
+    dw: Conv2d,
+    pw: Conv2d,
+}
+
+impl DepthwiseSeparable {
+    /// `c_in` channels depthwise (stride `s`), then pointwise to `c_out`.
+    pub fn new(c_in: usize, c_out: usize, stride: usize, seed: u64) -> Self {
+        let dw_params = Conv2dParams { stride: (stride, stride), pad: (1, 1), groups: c_in };
+        DepthwiseSeparable {
+            dw: Conv2d::new(c_in, c_in, 3, dw_params, seed),
+            pw: Conv2d::new(c_in, c_out, 1, Conv2dParams::default(), seed + 1),
+        }
+    }
+}
+
+impl Layer for DepthwiseSeparable {
+    fn describe(&self) -> String {
+        format!(
+            "DwSep {}→{} s{}",
+            self.dw.w.dim(0),
+            self.pw.w.dim(0),
+            self.dw.params.stride.0
+        )
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        self.pw.out_shape(&self.dw.out_shape(in_shape))
+    }
+
+    fn flops(&self, in_shape: &[usize]) -> u64 {
+        let mid = self.dw.out_shape(in_shape);
+        self.dw.flops(in_shape)
+            + self.pw.flops(&mid)
+            + (mid.iter().product::<usize>() + self.out_shape(in_shape).iter().product::<usize>())
+                as u64
+    }
+
+    fn forward(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor {
+        let mid = self.dw.forward(x, ctx).map(|v| v.max(0.0));
+        self.pw.forward(&mid, ctx).map(|v| v.max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv2d_layer_shapes_and_flops() {
+        let l = Conv2d::new(3, 8, 5, Conv2dParams::same(5), 1);
+        assert_eq!(l.out_shape(&[2, 3, 16, 16]), vec![2, 8, 16, 16]);
+        // 2*3*5*5+1 = 151 flops per output element
+        assert_eq!(l.flops(&[1, 3, 16, 16]), (8 * 16 * 16 * 151) as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "channel mismatch")]
+    fn conv2d_layer_rejects_bad_channels() {
+        let l = Conv2d::new(3, 8, 3, Conv2dParams::default(), 1);
+        l.out_shape(&[1, 4, 8, 8]);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let x = Tensor::from_vec(vec![-1.0, 2.0], &[1, 2]);
+        let y = ReLU.forward(&x, &ExecCtx::default());
+        assert_eq!(y.as_slice(), &[0.0, 2.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = Tensor::randn(&[3, 7], 2);
+        let y = Softmax.forward(&x, &ExecCtx::default());
+        for r in 0..3 {
+            let s: f32 = y.as_slice()[r * 7..(r + 1) * 7].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(y.as_slice()[r * 7..(r + 1) * 7].iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn flatten_shape() {
+        let x = Tensor::iota(&[2, 3, 4, 5]);
+        let y = Flatten.forward(&x, &ExecCtx::default());
+        assert_eq!(y.dims(), &[2, 60]);
+        assert_eq!(y.as_slice()[59], 59.0);
+    }
+
+    #[test]
+    fn linear_matches_manual() {
+        let mut l = Linear::new(2, 2, 3);
+        l.w = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        l.bias = vec![0.5, -0.5];
+        let x = Tensor::from_vec(vec![1.0, 1.0], &[1, 2]);
+        let y = l.forward(&x, &ExecCtx::default());
+        assert_eq!(y.as_slice(), &[3.5, 6.5]);
+    }
+
+    #[test]
+    fn global_avg_pool_values() {
+        let x = Tensor::iota(&[1, 2, 2, 2]);
+        let y = GlobalAvgPool.forward(&x, &ExecCtx::default());
+        assert_eq!(y.dims(), &[1, 2, 1, 1]);
+        assert_eq!(y.as_slice(), &[1.5, 5.5]);
+    }
+
+    #[test]
+    fn concat_channels_layout() {
+        let a = Tensor::full(&[1, 1, 2, 2], 1.0);
+        let b = Tensor::full(&[1, 2, 2, 2], 2.0);
+        let c = concat_channels(&a, &b);
+        assert_eq!(c.dims(), &[1, 3, 2, 2]);
+        assert_eq!(c.plane(0, 0), &[1.0; 4]);
+        assert_eq!(c.plane(0, 2), &[2.0; 4]);
+    }
+
+    #[test]
+    fn fire_shape_and_consistency_across_algos() {
+        let f = Fire::new(8, 4, 6, 6, 9);
+        let x = Tensor::randn(&[1, 8, 7, 7], 10);
+        assert_eq!(f.out_shape(x.dims()), vec![1, 12, 7, 7]);
+        let g = f.forward(&x, &ExecCtx { algo: ConvAlgo::Im2colGemm });
+        let s = f.forward(&x, &ExecCtx { algo: ConvAlgo::Sliding });
+        assert!(g.allclose(&s, 1e-4), "diff {}", g.max_abs_diff(&s));
+    }
+
+    #[test]
+    fn depthwise_separable_shapes() {
+        let l = DepthwiseSeparable::new(8, 16, 2, 11);
+        assert_eq!(l.out_shape(&[1, 8, 8, 8]), vec![1, 16, 4, 4]);
+        let x = Tensor::randn(&[1, 8, 8, 8], 12);
+        let g = l.forward(&x, &ExecCtx { algo: ConvAlgo::Im2colGemm });
+        let s = l.forward(&x, &ExecCtx { algo: ConvAlgo::Sliding });
+        assert!(g.allclose(&s, 1e-4));
+    }
+}

@@ -1,0 +1,21 @@
+//! A small neural-network layer library and model zoo.
+//!
+//! The paper's primitives don't live in isolation — §1.2 discusses the
+//! network families (SqueezeNet, MobileNet, ShuffleNet) whose filter-size
+//! choices interact with the Sliding Window advantage. This module lets us
+//! run those interactions end-to-end: every [`layers::Conv2d`] takes its
+//! algorithm from the per-request [`ExecCtx`], so the same model can be
+//! served with GEMM or Sliding Window backends and compared on identical
+//! weights (the coordinator's router does exactly that).
+//!
+//! * [`layers`] — Conv2d, pooling, ReLU, Linear, Softmax, Flatten, Fire
+//!   (SqueezeNet), DepthwiseSeparable (MobileNet).
+//! * [`model`] — the sequential executor with shape/FLOP introspection.
+//! * [`zoo`] — SimpleCNN, SqueezeNet-lite, MobileNet-lite, LargeFilterNet.
+
+pub mod layers;
+pub mod model;
+pub mod zoo;
+
+pub use layers::{ExecCtx, Layer};
+pub use model::Model;

@@ -1,0 +1,164 @@
+//! The sequential model executor with shape/FLOP introspection.
+
+use super::layers::{ExecCtx, Layer};
+use crate::tensor::Tensor;
+
+/// A sequential stack of layers with a name and a fixed input shape
+/// (batch dimension excluded — models accept any batch size).
+pub struct Model {
+    /// Model name (used by the CLI, the manifest and reports).
+    pub name: String,
+    /// Input shape `[c, h, w]` (no batch).
+    pub input_shape: Vec<usize>,
+    layers: Vec<Box<dyn Layer>>,
+}
+
+impl Model {
+    /// Empty model.
+    pub fn new(name: impl Into<String>, input_shape: &[usize]) -> Self {
+        Model { name: name.into(), input_shape: input_shape.to_vec(), layers: Vec::new() }
+    }
+
+    /// Append a layer (builder style).
+    pub fn push(mut self, layer: impl Layer + 'static) -> Self {
+        self.layers.push(Box::new(layer));
+        self
+    }
+
+    /// Number of layers.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// True when the model has no layers.
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Output shape for a batch of `n` inputs.
+    ///
+    /// # Panics
+    /// If any layer rejects its input shape.
+    pub fn out_shape(&self, n: usize) -> Vec<usize> {
+        let mut shape: Vec<usize> =
+            std::iter::once(n).chain(self.input_shape.iter().copied()).collect();
+        for l in &self.layers {
+            shape = l.out_shape(&shape);
+        }
+        shape
+    }
+
+    /// Total forward FLOPs for a batch of `n`.
+    pub fn flops(&self, n: usize) -> u64 {
+        let mut shape: Vec<usize> =
+            std::iter::once(n).chain(self.input_shape.iter().copied()).collect();
+        let mut total = 0u64;
+        for l in &self.layers {
+            total += l.flops(&shape);
+            shape = l.out_shape(&shape);
+        }
+        total
+    }
+
+    /// Forward pass.
+    ///
+    /// # Panics
+    /// If `x`'s trailing dims don't match `input_shape`.
+    pub fn forward(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor {
+        assert_eq!(
+            &x.dims()[1..],
+            &self.input_shape[..],
+            "model {} expects input {:?}",
+            self.name,
+            self.input_shape
+        );
+        let mut cur = x.clone();
+        for l in &self.layers {
+            cur = l.forward(&cur, ctx);
+        }
+        cur
+    }
+
+    /// Per-layer summary table: description, output shape, FLOPs.
+    pub fn summary(&self, n: usize) -> String {
+        let mut shape: Vec<usize> =
+            std::iter::once(n).chain(self.input_shape.iter().copied()).collect();
+        let mut s = format!("{} (input {:?})\n", self.name, shape);
+        let mut total = 0u64;
+        for l in &self.layers {
+            let f = l.flops(&shape);
+            shape = l.out_shape(&shape);
+            total += f;
+            s.push_str(&format!("  {:<40} -> {:?} [{} FLOP]\n", l.describe(), shape, f));
+        }
+        s.push_str(&format!("  total: {total} FLOP\n"));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Conv2dParams, ConvAlgo, PoolParams};
+    use crate::nn::layers::{Conv2d, Flatten, Linear, MaxPool2d, ReLU, Softmax};
+
+    fn tiny() -> Model {
+        Model::new("tiny", &[1, 8, 8])
+            .push(Conv2d::new(1, 4, 3, Conv2dParams::same(3), 1))
+            .push(ReLU)
+            .push(MaxPool2d(PoolParams::square(2)))
+            .push(Flatten)
+            .push(Linear::new(4 * 4 * 4, 10, 2))
+            .push(Softmax)
+    }
+
+    #[test]
+    fn shapes_propagate() {
+        let m = tiny();
+        assert_eq!(m.out_shape(3), vec![3, 10]);
+        assert_eq!(m.len(), 6);
+    }
+
+    #[test]
+    fn forward_runs_and_normalises() {
+        let m = tiny();
+        let x = Tensor::randn(&[2, 1, 8, 8], 5);
+        let y = m.forward(&x, &ExecCtx::default());
+        assert_eq!(y.dims(), &[2, 10]);
+        for r in 0..2 {
+            let s: f32 = y.as_slice()[r * 10..(r + 1) * 10].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn algos_agree_end_to_end() {
+        let m = tiny();
+        let x = Tensor::randn(&[1, 1, 8, 8], 6);
+        let a = m.forward(&x, &ExecCtx { algo: ConvAlgo::Direct });
+        let b = m.forward(&x, &ExecCtx { algo: ConvAlgo::Im2colGemm });
+        let c = m.forward(&x, &ExecCtx { algo: ConvAlgo::Sliding });
+        assert!(a.allclose(&b, 1e-4));
+        assert!(a.allclose(&c, 1e-4));
+    }
+
+    #[test]
+    fn flops_positive_and_additive() {
+        let m = tiny();
+        assert!(m.flops(1) > 0);
+        assert_eq!(m.flops(2), 2 * m.flops(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "expects input")]
+    fn forward_rejects_wrong_shape() {
+        tiny().forward(&Tensor::zeros(&[1, 2, 8, 8]), &ExecCtx::default());
+    }
+
+    #[test]
+    fn summary_mentions_layers() {
+        let s = tiny().summary(1);
+        assert!(s.contains("Conv2d"));
+        assert!(s.contains("total:"));
+    }
+}

@@ -1,0 +1,210 @@
+//! Model zoo: the network families the paper's §1.2/§3 discussion turns
+//! on, scaled to edge-device sizes (the paper's target hardware class).
+//!
+//! * [`simple_cnn`] — a plain LeNet-style CNN with k=5 filters.
+//! * [`squeezenet_lite`] — fire modules (1×1-heavy: the regime where the
+//!   Sliding Window advantage shrinks, per §3).
+//! * [`mobilenet_lite`] — depthwise-separable blocks (depthwise 3×3 is
+//!   the custom-kernel sweet spot; pointwise 1×1 is pure GEMM).
+//! * [`large_filter_net`] — the architecture direction §3 *encourages*:
+//!   "fewer layers with larger convolution filters", where the sliding
+//!   kernels shine (k = 11/17/21 layers).
+
+use super::layers::{
+    AvgPool2d, Conv2d, DepthwiseSeparable, Fire, Flatten, GlobalAvgPool, Linear, MaxPool2d, ReLU,
+    Softmax,
+};
+use super::model::Model;
+use crate::kernels::{Conv2dParams, PoolParams};
+use crate::tensor::Tensor;
+
+/// All zoo model names, as accepted by [`by_name`].
+pub const MODEL_NAMES: [&str; 4] =
+    ["simple-cnn", "squeezenet-lite", "mobilenet-lite", "large-filter-net"];
+
+/// Look a model up by CLI name (`classes` output classes, deterministic
+/// weights from `seed`).
+pub fn by_name(name: &str, classes: usize, seed: u64) -> Option<Model> {
+    match name {
+        "simple-cnn" => Some(simple_cnn(classes, seed)),
+        "squeezenet-lite" => Some(squeezenet_lite(classes, seed)),
+        "mobilenet-lite" => Some(mobilenet_lite(classes, seed)),
+        "large-filter-net" => Some(large_filter_net(classes, seed)),
+        _ => None,
+    }
+}
+
+/// LeNet-style CNN with explicit weights (same topology as
+/// [`simple_cnn`]). Used to serve the *identical* model that
+/// `python/compile/aot.py` baked into the PJRT artifact.
+pub fn simple_cnn_with_weights(conv1: Tensor, conv2: Tensor, fc: Tensor) -> Model {
+    use crate::kernels::Conv2dParams;
+    assert_eq!(conv1.dims(), &[16, 1, 5, 5], "conv1 shape");
+    assert_eq!(conv2.dims(), &[32, 16, 5, 5], "conv2 shape");
+    assert_eq!(fc.dim(1), 32 * 7 * 7, "fc fan-in");
+    let classes = fc.dim(0);
+    let c1 = Conv2d { w: conv1, bias: vec![0.0; 16], params: Conv2dParams::same(5) };
+    let c2 = Conv2d { w: conv2, bias: vec![0.0; 32], params: Conv2dParams::same(5) };
+    let lin = Linear { w: fc, bias: vec![0.0; classes] };
+    Model::new("simple-cnn", &[1, 28, 28])
+        .push(c1)
+        .push(ReLU)
+        .push(MaxPool2d(PoolParams::square(2)))
+        .push(c2)
+        .push(ReLU)
+        .push(MaxPool2d(PoolParams::square(2)))
+        .push(Flatten)
+        .push(lin)
+        .push(Softmax)
+}
+
+/// Load `simple_cnn_weights.bin` (written by `python/compile/aot.py`:
+/// conv1 ‖ conv2 ‖ fc as little-endian f32) and build the model.
+pub fn simple_cnn_from_weights_file(
+    path: impl AsRef<std::path::Path>,
+    classes: usize,
+) -> std::io::Result<Model> {
+    let bytes = std::fs::read(path)?;
+    let n1 = 16 * 5 * 5;
+    let n2 = 32 * 16 * 5 * 5;
+    let n3 = classes * 32 * 7 * 7;
+    let want = 4 * (n1 + n2 + n3);
+    if bytes.len() != want {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("weights file is {} bytes, expected {want}", bytes.len()),
+        ));
+    }
+    let floats: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let conv1 = Tensor::from_vec(floats[..n1].to_vec(), &[16, 1, 5, 5]);
+    let conv2 = Tensor::from_vec(floats[n1..n1 + n2].to_vec(), &[32, 16, 5, 5]);
+    let fc = Tensor::from_vec(floats[n1 + n2..].to_vec(), &[classes, 32 * 7 * 7]);
+    Ok(simple_cnn_with_weights(conv1, conv2, fc))
+}
+
+/// LeNet-style CNN for 1×28×28 inputs (MNIST geometry).
+pub fn simple_cnn(classes: usize, seed: u64) -> Model {
+    Model::new("simple-cnn", &[1, 28, 28])
+        .push(Conv2d::new(1, 16, 5, Conv2dParams::same(5), seed))
+        .push(ReLU)
+        .push(MaxPool2d(PoolParams::square(2)))
+        .push(Conv2d::new(16, 32, 5, Conv2dParams::same(5), seed + 1))
+        .push(ReLU)
+        .push(MaxPool2d(PoolParams::square(2)))
+        .push(Flatten)
+        .push(Linear::new(32 * 7 * 7, classes, seed + 2))
+        .push(Softmax)
+}
+
+/// SqueezeNet-lite for 3×64×64 inputs: conv5/2 → pool → 3 fire modules →
+/// global pool → linear.
+pub fn squeezenet_lite(classes: usize, seed: u64) -> Model {
+    Model::new("squeezenet-lite", &[3, 64, 64])
+        .push(Conv2d::new(
+            3,
+            32,
+            5,
+            Conv2dParams { stride: (2, 2), pad: (2, 2), groups: 1 },
+            seed,
+        ))
+        .push(ReLU)
+        .push(MaxPool2d(PoolParams::with_stride(3, 2)))
+        .push(Fire::new(32, 16, 32, 32, seed + 1))
+        .push(Fire::new(64, 16, 32, 32, seed + 4))
+        .push(MaxPool2d(PoolParams::with_stride(3, 2)))
+        .push(Fire::new(64, 32, 64, 64, seed + 7))
+        .push(GlobalAvgPool)
+        .push(Flatten)
+        .push(Linear::new(128, classes, seed + 10))
+        .push(Softmax)
+}
+
+/// MobileNet-lite for 3×64×64 inputs: conv3/2 + 4 depthwise-separable
+/// blocks → global pool → linear.
+pub fn mobilenet_lite(classes: usize, seed: u64) -> Model {
+    Model::new("mobilenet-lite", &[3, 64, 64])
+        .push(Conv2d::new(
+            3,
+            16,
+            3,
+            Conv2dParams { stride: (2, 2), pad: (1, 1), groups: 1 },
+            seed,
+        ))
+        .push(ReLU)
+        .push(DepthwiseSeparable::new(16, 32, 1, seed + 1))
+        .push(DepthwiseSeparable::new(32, 64, 2, seed + 3))
+        .push(DepthwiseSeparable::new(64, 64, 1, seed + 5))
+        .push(DepthwiseSeparable::new(64, 128, 2, seed + 7))
+        .push(GlobalAvgPool)
+        .push(Flatten)
+        .push(Linear::new(128, classes, seed + 9))
+        .push(Softmax)
+}
+
+/// The §3 "future work" architecture: few layers, large filters
+/// (k = 11, 17, 21) for 1×96×96 inputs — the Sliding Window sweet spot.
+pub fn large_filter_net(classes: usize, seed: u64) -> Model {
+    Model::new("large-filter-net", &[1, 96, 96])
+        .push(Conv2d::new(1, 8, 11, Conv2dParams::same(11), seed))
+        .push(ReLU)
+        .push(MaxPool2d(PoolParams::square(2)))
+        .push(Conv2d::new(8, 16, 17, Conv2dParams::same(17), seed + 1))
+        .push(ReLU)
+        .push(MaxPool2d(PoolParams::square(2)))
+        .push(Conv2d::new(16, 16, 21, Conv2dParams::same(21), seed + 2))
+        .push(ReLU)
+        .push(AvgPool2d(PoolParams::square(3)))
+        .push(Flatten)
+        .push(Linear::new(16 * 8 * 8, classes, seed + 3))
+        .push(Softmax)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::ConvAlgo;
+    use crate::nn::layers::ExecCtx;
+
+    #[test]
+    fn zoo_lookup() {
+        for name in MODEL_NAMES {
+            assert!(by_name(name, 10, 1).is_some(), "{name}");
+        }
+        assert!(by_name("resnet-152", 10, 1).is_none());
+    }
+
+    #[test]
+    fn shapes_all_models() {
+        assert_eq!(simple_cnn(10, 1).out_shape(2), vec![2, 10]);
+        assert_eq!(squeezenet_lite(10, 1).out_shape(1), vec![1, 10]);
+        assert_eq!(mobilenet_lite(5, 1).out_shape(3), vec![3, 5]);
+        assert_eq!(large_filter_net(7, 1).out_shape(1), vec![1, 7]);
+    }
+
+    #[test]
+    fn gemm_and_sliding_agree_on_every_model() {
+        for name in MODEL_NAMES {
+            let m = by_name(name, 4, 42).unwrap();
+            let x = Tensor::randn(
+                &std::iter::once(1).chain(m.input_shape.iter().copied()).collect::<Vec<_>>(),
+                7,
+            );
+            let g = m.forward(&x, &ExecCtx { algo: ConvAlgo::Im2colGemm });
+            let s = m.forward(&x, &ExecCtx { algo: ConvAlgo::Sliding });
+            let d = g.max_abs_diff(&s);
+            assert!(d < 1e-3, "{name}: diff {d}");
+        }
+    }
+
+    #[test]
+    fn flop_counts_sane() {
+        // MobileNet-lite should be cheaper than the large-filter net.
+        let mb = mobilenet_lite(10, 1).flops(1);
+        let lf = large_filter_net(10, 1).flops(1);
+        assert!(mb > 1_000_000);
+        assert!(lf > mb, "large filters should dominate: {lf} vs {mb}");
+    }
+}

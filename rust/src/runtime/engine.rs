@@ -1,0 +1,161 @@
+//! The PJRT execution engine: compile-once, execute-many.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Executables are cached by artifact
+//! name so the request path pays only buffer transfer + execution.
+
+use super::manifest::{ArtifactSpec, Manifest};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// A compiled-artifact execution engine on the PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create an engine over an artifact directory (must contain
+    /// `manifest.json`; see `python/compile/aot.py`).
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Engine> {
+        let dir = artifacts_dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Engine { client, manifest, cache: HashMap::new() })
+    }
+
+    /// The manifest the engine serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform string (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an artifact (no-op if cached). Returns the artifact spec.
+    pub fn load(&mut self, name: &str) -> Result<&ArtifactSpec> {
+        if !self.cache.contains_key(name) {
+            let spec = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+                .clone();
+            let path = spec.path(&self.manifest.dir);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling '{name}': {e}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.manifest.find(name).unwrap())
+    }
+
+    /// Compile every artifact in the manifest (warm-up at startup so the
+    /// request path never compiles).
+    pub fn load_all(&mut self) -> Result<usize> {
+        // Only executable artifacts: the manifest also lists raw-weight
+        // blobs (kind "weights") that are not HLO.
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.file.ends_with(".hlo.txt"))
+            .map(|a| a.name.clone())
+            .collect();
+        for n in &names {
+            self.load(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Execute an artifact on f32 tensors. Shapes must match the
+    /// manifest; the single (tupled) output is returned as a [`Tensor`].
+    pub fn execute(&mut self, name: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+        self.load(name)?;
+        let spec = self.manifest.find(name).unwrap().clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, want)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if t.dims() != &want[..] {
+                bail!(
+                    "artifact '{name}' input {i}: shape {:?} != manifest {:?}",
+                    t.dims(),
+                    want
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.as_slice())
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("building literal: {e}"))
+            })
+            .collect::<Result<_>>()?;
+
+        let exe = self.cache.get(name).expect("loaded above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing '{name}': {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untupling result: {e}"))?;
+        let values: Vec<f32> =
+            out.to_vec().map_err(|e| anyhow!("reading result: {e}"))?;
+        let expect: usize = spec.output.iter().product();
+        if values.len() != expect {
+            bail!(
+                "artifact '{name}' returned {} values, manifest says {:?}",
+                values.len(),
+                spec.output
+            );
+        }
+        Ok(Tensor::from_vec(values, &spec.output))
+    }
+}
+
+/// Default artifact directory (`$SWCONV_ARTIFACTS` or `./artifacts`).
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("SWCONV_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine tests that need real artifacts live in rust/tests/
+    // (integration) so `cargo test --lib` passes before `make artifacts`.
+
+    #[test]
+    fn missing_dir_is_error() {
+        let e = Engine::new("/nonexistent/path/xyz");
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        std::env::set_var("SWCONV_ARTIFACTS", "/tmp/zzz");
+        assert_eq!(default_artifacts_dir(), PathBuf::from("/tmp/zzz"));
+        std::env::remove_var("SWCONV_ARTIFACTS");
+        assert_eq!(default_artifacts_dir(), PathBuf::from("artifacts"));
+    }
+}

@@ -1,0 +1,168 @@
+//! The artifact manifest written by `python/compile/aot.py`.
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "artifacts": [
+//!     {
+//!       "name": "conv2d_sliding_c3_64x64_k5",
+//!       "file": "conv2d_sliding_c3_64x64_k5.hlo.txt",
+//!       "kind": "conv2d",
+//!       "algo": "sliding",
+//!       "inputs": [[1, 3, 64, 64], [8, 3, 5, 5]],
+//!       "output": [1, 8, 60, 60]
+//!     }
+//!   ]
+//! }
+//! ```
+
+use super::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-lowered computation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    /// Unique artifact name (cache key).
+    pub name: String,
+    /// HLO text file, relative to the manifest's directory.
+    pub file: String,
+    /// What the computation is ("conv2d", "model", …).
+    pub kind: String,
+    /// Which L1 kernel family it was lowered with ("sliding", "gemm",
+    /// "ref", …).
+    pub algo: String,
+    /// Input shapes, in argument order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shape.
+    pub output: Vec<usize>,
+}
+
+impl ArtifactSpec {
+    /// Absolute path of the HLO text file.
+    pub fn path(&self, dir: &Path) -> PathBuf {
+        dir.join(&self.file)
+    }
+}
+
+/// The full manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from (artifact paths are
+    /// relative to it).
+    pub dir: PathBuf,
+    /// All artifacts.
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("shape is not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("shape dim is not a number")))
+        .collect()
+}
+
+impl Manifest {
+    /// Parse a manifest from JSON text (paths resolved against `dir`).
+    pub fn parse(text: &str, dir: impl Into<PathBuf>) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest is not valid JSON")?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for (i, a) in arts.iter().enumerate() {
+            let field = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact {i}: missing '{k}'"))?
+                    .to_string())
+            };
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {i}: missing 'inputs'"))?
+                .iter()
+                .map(shape_of)
+                .collect::<Result<Vec<_>>>()?;
+            let output = shape_of(
+                a.get("output").ok_or_else(|| anyhow!("artifact {i}: missing 'output'"))?,
+            )?;
+            artifacts.push(ArtifactSpec {
+                name: field("name")?,
+                file: field("file")?,
+                kind: field("kind")?,
+                algo: field("algo")?,
+                inputs,
+                output,
+            });
+        }
+        // Names must be unique: they key the executable cache.
+        let mut names: Vec<&str> = artifacts.iter().map(|a| a.name.as_str()).collect();
+        names.sort_unstable();
+        if names.windows(2).any(|w| w[0] == w[1]) {
+            bail!("duplicate artifact names in manifest");
+        }
+        Ok(Manifest { dir: dir.into(), artifacts })
+    }
+
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Find an artifact by name.
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts of a given kind.
+    pub fn of_kind(&self, kind: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "a", "file": "a.hlo.txt", "kind": "conv2d", "algo": "sliding",
+             "inputs": [[1,3,8,8],[4,3,3,3]], "output": [1,4,6,6]},
+            {"name": "b", "file": "b.hlo.txt", "kind": "model", "algo": "gemm",
+             "inputs": [[1,1,28,28]], "output": [1,10]}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(DOC, "/tmp/arts").unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.find("a").unwrap();
+        assert_eq!(a.inputs, vec![vec![1, 3, 8, 8], vec![4, 3, 3, 3]]);
+        assert_eq!(a.output, vec![1, 4, 6, 6]);
+        assert_eq!(a.path(&m.dir), PathBuf::from("/tmp/arts/a.hlo.txt"));
+        assert_eq!(m.of_kind("model").len(), 1);
+        assert!(m.find("zzz").is_none());
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let doc = DOC.replace("\"name\": \"b\"", "\"name\": \"a\"");
+        assert!(Manifest::parse(&doc, ".").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"artifacts": [{"name": "x"}]}"#, ".").is_err());
+        assert!(Manifest::parse(r#"{}"#, ".").is_err());
+        assert!(Manifest::parse("not json", ".").is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from Rust. Python runs once at build time (`make
+//! artifacts`) and never on the request path.
+//!
+//! * [`json`] — minimal JSON parser (offline substitute for serde_json).
+//! * [`manifest`] — `artifacts/manifest.json` schema: one entry per
+//!   lowered (model, algo, shape) variant.
+//! * [`engine`] — `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//!   → `compile` → `execute`, with an executable cache keyed by artifact
+//!   name. HLO **text** is the interchange format: jax ≥ 0.5 emits protos
+//!   with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//!   text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod json;
+pub mod manifest;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactSpec, Manifest};

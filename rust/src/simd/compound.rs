@@ -1,0 +1,131 @@
+//! The *compound vector*: several hardware vectors treated as one long
+//! vector (paper §2: "kernels of larger width do not fit into the hardware
+//! vector and require a special version that operates on multiple hardware
+//! vectors treating them as a single long compound vector").
+//!
+//! A [`CompoundF32<R>`] holds `R` consecutive registers covering
+//! `R · LANES` input lanes; [`CompoundF32::window`] extracts the
+//! `LANES`-wide window starting at any offset `j ≤ (R-1)·LANES` with one
+//! register-pair slide. The cross-register index arithmetic (`j / LANES`,
+//! `j % LANES`) is the source of the paper's zigzag: when the filter width
+//! is misaligned with `LANES` the last register is mostly wasted slack.
+
+use super::slide::slide_dyn;
+use super::vector::{F32xL, LANES};
+
+/// `R` hardware vectors treated as one `R * LANES`-lane compound vector.
+#[derive(Clone, Copy, Debug)]
+pub struct CompoundF32<const R: usize>(pub [F32xL; R]);
+
+impl<const R: usize> CompoundF32<R> {
+    /// Number of lanes in the compound vector.
+    pub const COMPOUND_LANES: usize = R * LANES;
+
+    /// Load `R * LANES` consecutive values from `src`.
+    ///
+    /// # Panics
+    /// If `src.len() < R * LANES`.
+    #[inline(always)]
+    pub fn load(src: &[f32]) -> Self {
+        let mut regs = [F32xL::zero(); R];
+        for (r, reg) in regs.iter_mut().enumerate() {
+            *reg = F32xL::load(&src[r * LANES..]);
+        }
+        CompoundF32(regs)
+    }
+
+    /// Load with a partial tail: lanes past `src.len()` are filled with
+    /// `fill`.
+    #[inline(always)]
+    pub fn load_partial(src: &[f32], fill: f32) -> Self {
+        let mut regs = [F32xL::splat(fill); R];
+        for (r, reg) in regs.iter_mut().enumerate() {
+            let start = r * LANES;
+            if start >= src.len() {
+                break;
+            }
+            *reg = F32xL::load_partial(&src[start..], fill);
+        }
+        CompoundF32(regs)
+    }
+
+    /// The `LANES`-wide window starting at compound-lane `j`.
+    ///
+    /// Requires `j + LANES <= R * LANES`, i.e. `j <= (R-1) * LANES`.
+    ///
+    /// # Panics
+    /// If the window would read past the last register.
+    #[inline(always)]
+    pub fn window(&self, j: usize) -> F32xL {
+        let r = j / LANES;
+        let off = j % LANES;
+        if off == 0 {
+            // Aligned window: a whole register, no shuffle at all. Filter
+            // widths aligned to LANES hit this fast path — the *dips* of
+            // the paper's zigzag.
+            self.0[r]
+        } else {
+            assert!(
+                r + 1 < R,
+                "compound window j={j} spills past R={R} registers"
+            );
+            slide_dyn(self.0[r], self.0[r + 1], off)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(n: usize) -> Vec<f32> {
+        (0..n).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn load_covers_all_registers() {
+        let s = src(4 * LANES);
+        let c = CompoundF32::<4>::load(&s);
+        for r in 0..4 {
+            for i in 0..LANES {
+                assert_eq!(c.0[r].0[i], (r * LANES + i) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn window_matches_concat_all_offsets() {
+        let s = src(3 * LANES);
+        let c = CompoundF32::<3>::load(&s);
+        for j in 0..=2 * LANES {
+            let w = c.window(j);
+            for i in 0..LANES {
+                assert_eq!(w.0[i], (j + i) as f32, "j={j} lane={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn window_aligned_is_register_copy() {
+        let s = src(2 * LANES);
+        let c = CompoundF32::<2>::load(&s);
+        assert_eq!(c.window(LANES), c.0[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "spills")]
+    fn window_past_end_panics() {
+        let s = src(2 * LANES);
+        let c = CompoundF32::<2>::load(&s);
+        let _ = c.window(LANES + 1); // needs register 2, doesn't exist
+    }
+
+    #[test]
+    fn load_partial_fills_tail() {
+        let s = src(LANES + 3);
+        let c = CompoundF32::<2>::load_partial(&s, 0.0);
+        assert_eq!(c.0[1].0[2], (LANES + 2) as f32);
+        assert_eq!(c.0[1].0[3], 0.0);
+        assert_eq!(c.0[1].0[LANES - 1], 0.0);
+    }
+}

@@ -1,0 +1,26 @@
+//! The portable "hardware vector" and its slide (lane-shift) primitives.
+//!
+//! The paper's kernels are written against an abstract SIMD register with a
+//! `slide` operation that shifts lanes across a register pair (AVX-512
+//! `valignd`). We model that register as [`F32xL`]: a `#[repr(align(64))]`
+//! array of [`LANES`] = 16 `f32` values whose element-wise operations are
+//! written as fixed-trip-count loops — with `-C target-cpu=native` LLVM
+//! compiles each into a single AVX-512 instruction (verified in
+//! EXPERIMENTS.md §Perf).
+//!
+//! Submodules:
+//! * [`vector`] — `F32xL` and its arithmetic.
+//! * [`slide`]  — compile-time (`slide::<J>`) and runtime (`slide_dyn`)
+//!   lane shifts across a register pair; the core of the Vector Slide
+//!   algorithm.
+//! * [`compound`] — the *compound vector*: several hardware vectors treated
+//!   as one long vector, for filter widths that do not fit a single
+//!   register (paper §2, "kernels of larger width").
+
+pub mod vector;
+pub mod slide;
+pub mod compound;
+
+pub use compound::CompoundF32;
+pub use slide::{slide, slide_dyn};
+pub use vector::{F32xL, LANES};

@@ -1,0 +1,114 @@
+//! The *slide* primitive: shift lanes across a register pair.
+//!
+//! `slide::<J>(a, b)` produces the vector whose lane `i` is lane `i + J`
+//! of the 2·LANES-lane concatenation `a ‖ b` — AVX-512's `valignd`
+//! instruction. It is the building block of the Vector Slide convolution:
+//! the window of the input starting at offset `J` is obtained from two
+//! already-loaded registers with one shuffle, instead of re-reading memory
+//! (GEMM/im2col) or performing a scalar gather (naïve convolution).
+//!
+//! Two forms are provided:
+//! * [`slide`] — `J` is a const generic, so the lane mapping is known at
+//!   compile time and LLVM emits a single `valignd`. The custom k=3/k=5
+//!   kernels and the unrolled generic kernel use this form.
+//! * [`slide_dyn`] — runtime `j`, dispatched through a match so each arm
+//!   is still a const slide. The paper's "generic" kernel pays exactly
+//!   this dispatch cost, which is one reason its custom kernels win.
+
+use super::vector::{F32xL, LANES};
+
+/// Compile-time slide: lane `i` of the result is lane `i + J` of `a ‖ b`.
+///
+/// `J` must be in `0..=LANES`; `slide::<0>` is `a`, `slide::<LANES>` is `b`.
+#[inline(always)]
+pub fn slide<const J: usize>(a: F32xL, b: F32xL) -> F32xL {
+    const { assert!(J <= LANES) };
+    let mut out = [0.0; LANES];
+    for i in 0..LANES {
+        out[i] = if i + J < LANES {
+            a.0[i + J]
+        } else {
+            b.0[i + J - LANES]
+        };
+    }
+    F32xL(out)
+}
+
+/// Runtime slide: dispatches to the const form. `j` must be `<= LANES`.
+///
+/// # Panics
+/// If `j > LANES`.
+#[inline(always)]
+pub fn slide_dyn(a: F32xL, b: F32xL, j: usize) -> F32xL {
+    // A 17-way match: every arm is a compile-time shuffle. This is the
+    // "redundant shuffle" overhead the paper's custom kernels eliminate.
+    match j {
+        0 => slide::<0>(a, b),
+        1 => slide::<1>(a, b),
+        2 => slide::<2>(a, b),
+        3 => slide::<3>(a, b),
+        4 => slide::<4>(a, b),
+        5 => slide::<5>(a, b),
+        6 => slide::<6>(a, b),
+        7 => slide::<7>(a, b),
+        8 => slide::<8>(a, b),
+        9 => slide::<9>(a, b),
+        10 => slide::<10>(a, b),
+        11 => slide::<11>(a, b),
+        12 => slide::<12>(a, b),
+        13 => slide::<13>(a, b),
+        14 => slide::<14>(a, b),
+        15 => slide::<15>(a, b),
+        16 => slide::<16>(a, b),
+        _ => panic!("slide_dyn: j={j} exceeds LANES={LANES}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair() -> (F32xL, F32xL) {
+        let mut a = [0.0; LANES];
+        let mut b = [0.0; LANES];
+        for i in 0..LANES {
+            a[i] = i as f32;
+            b[i] = (LANES + i) as f32;
+        }
+        (F32xL(a), F32xL(b))
+    }
+
+    #[test]
+    fn slide_zero_is_identity() {
+        let (a, b) = pair();
+        assert_eq!(slide::<0>(a, b), a);
+        assert_eq!(slide::<LANES>(a, b), b);
+    }
+
+    #[test]
+    fn slide_const_matches_concat() {
+        let (a, b) = pair();
+        let s = slide::<5>(a, b);
+        for i in 0..LANES {
+            assert_eq!(s.0[i], (i + 5) as f32);
+        }
+    }
+
+    #[test]
+    fn slide_dyn_matches_const_for_all_j() {
+        let (a, b) = pair();
+        for j in 0..=LANES {
+            let s = slide_dyn(a, b, j);
+            for i in 0..LANES {
+                assert_eq!(s.0[i], (i + j) as f32, "j={j} lane={i}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn slide_dyn_rejects_large_j() {
+        let (a, b) = pair();
+        let _ = slide_dyn(a, b, LANES + 1);
+    }
+}

@@ -1,0 +1,243 @@
+//! [`F32xL`]: the model of one hardware vector register (16 × f32).
+//!
+//! All operations are fixed-trip-count element-wise loops over a
+//! 64-byte-aligned array. Built with `-C target-cpu=native` on an AVX-512
+//! machine each op compiles to a single vector instruction (`vaddps`,
+//! `vmulps`, `vfmadd...`, `vmaxps`), which is exactly the register model
+//! the paper's kernels assume.
+
+use std::ops::{Add, Mul, Sub};
+
+/// Number of f32 lanes in one hardware vector (AVX-512 ZMM register).
+///
+/// The paper's Xeon 8272CL has 16 f32 lanes; the crossover phenomena it
+/// reports (generic kernels handle filter widths up to `LANES + 1`,
+/// compound kernels beyond, zigzag at compound/hardware misalignment)
+/// depend on this constant.
+pub const LANES: usize = 16;
+
+/// One hardware vector: 16 f32 lanes, 64-byte aligned (one ZMM register /
+/// one cache line).
+#[derive(Clone, Copy, Debug, PartialEq)]
+#[repr(C, align(64))]
+pub struct F32xL(pub [f32; LANES]);
+
+impl F32xL {
+    /// All lanes zero.
+    #[inline(always)]
+    pub fn zero() -> Self {
+        F32xL([0.0; LANES])
+    }
+
+    /// Broadcast `v` to all lanes (`vbroadcastss`).
+    #[inline(always)]
+    pub fn splat(v: f32) -> Self {
+        F32xL([v; LANES])
+    }
+
+    /// Unaligned load of `LANES` consecutive values starting at `src[0]`.
+    ///
+    /// # Panics
+    /// If `src.len() < LANES`.
+    #[inline(always)]
+    pub fn load(src: &[f32]) -> Self {
+        let mut out = [0.0; LANES];
+        out.copy_from_slice(&src[..LANES]);
+        F32xL(out)
+    }
+
+    /// Load up to `LANES` values; missing lanes are filled with `fill`.
+    ///
+    /// Used for row tails where fewer than `LANES` outputs remain; `fill`
+    /// is `0.0` for sums and `f32::NEG_INFINITY` for max-pooling.
+    #[inline(always)]
+    pub fn load_partial(src: &[f32], fill: f32) -> Self {
+        let mut out = [fill; LANES];
+        let n = src.len().min(LANES);
+        out[..n].copy_from_slice(&src[..n]);
+        F32xL(out)
+    }
+
+    /// Unaligned store of all lanes into `dst[..LANES]`.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [f32]) {
+        dst[..LANES].copy_from_slice(&self.0);
+    }
+
+    /// Store the first `n` lanes only (row-tail store).
+    #[inline(always)]
+    pub fn store_partial(self, dst: &mut [f32], n: usize) {
+        let n = n.min(LANES).min(dst.len());
+        dst[..n].copy_from_slice(&self.0[..n]);
+    }
+
+    /// Fused multiply-add: `self * a + b` per lane (`vfmadd213ps`).
+    #[inline(always)]
+    pub fn mul_add(self, a: Self, b: Self) -> Self {
+        let mut out = [0.0; LANES];
+        for i in 0..LANES {
+            out[i] = self.0[i].mul_add(a.0[i], b.0[i]);
+        }
+        F32xL(out)
+    }
+
+    /// Lane-wise maximum (`vmaxps`).
+    #[inline(always)]
+    pub fn max(self, other: Self) -> Self {
+        let mut out = [0.0; LANES];
+        for i in 0..LANES {
+            out[i] = self.0[i].max(other.0[i]);
+        }
+        F32xL(out)
+    }
+
+    /// Lane-wise minimum (`vminps`).
+    #[inline(always)]
+    pub fn min(self, other: Self) -> Self {
+        let mut out = [0.0; LANES];
+        for i in 0..LANES {
+            out[i] = self.0[i].min(other.0[i]);
+        }
+        F32xL(out)
+    }
+
+    /// Horizontal sum of all lanes.
+    #[inline(always)]
+    pub fn reduce_sum(self) -> f32 {
+        // Pairwise tree reduction: better numerics than a serial fold and
+        // compiles to log2(LANES) shuffles + adds.
+        let mut acc = self.0;
+        let mut width = LANES / 2;
+        while width > 0 {
+            for i in 0..width {
+                acc[i] += acc[i + width];
+            }
+            width /= 2;
+        }
+        acc[0]
+    }
+
+    /// Horizontal max of all lanes.
+    #[inline(always)]
+    pub fn reduce_max(self) -> f32 {
+        let mut acc = self.0;
+        let mut width = LANES / 2;
+        while width > 0 {
+            for i in 0..width {
+                acc[i] = acc[i].max(acc[i + width]);
+            }
+            width /= 2;
+        }
+        acc[0]
+    }
+}
+
+impl Add for F32xL {
+    type Output = Self;
+    #[inline(always)]
+    fn add(self, rhs: Self) -> Self {
+        let mut out = [0.0; LANES];
+        for i in 0..LANES {
+            out[i] = self.0[i] + rhs.0[i];
+        }
+        F32xL(out)
+    }
+}
+
+impl Sub for F32xL {
+    type Output = Self;
+    #[inline(always)]
+    fn sub(self, rhs: Self) -> Self {
+        let mut out = [0.0; LANES];
+        for i in 0..LANES {
+            out[i] = self.0[i] - rhs.0[i];
+        }
+        F32xL(out)
+    }
+}
+
+impl Mul for F32xL {
+    type Output = Self;
+    #[inline(always)]
+    fn mul(self, rhs: Self) -> Self {
+        let mut out = [0.0; LANES];
+        for i in 0..LANES {
+            out[i] = self.0[i] * rhs.0[i];
+        }
+        F32xL(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iota() -> F32xL {
+        let mut a = [0.0; LANES];
+        for (i, v) in a.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        F32xL(a)
+    }
+
+    #[test]
+    fn splat_and_zero() {
+        assert_eq!(F32xL::splat(2.5).0, [2.5; LANES]);
+        assert_eq!(F32xL::zero().0, [0.0; LANES]);
+    }
+
+    #[test]
+    fn load_store_roundtrip() {
+        let src: Vec<f32> = (0..LANES + 4).map(|i| i as f32).collect();
+        let v = F32xL::load(&src[2..]);
+        assert_eq!(v.0[0], 2.0);
+        assert_eq!(v.0[LANES - 1], (LANES + 1) as f32);
+        let mut dst = vec![0.0; LANES];
+        v.store(&mut dst);
+        assert_eq!(&dst[..], &src[2..2 + LANES]);
+    }
+
+    #[test]
+    fn load_partial_fills() {
+        let src = [1.0, 2.0, 3.0];
+        let v = F32xL::load_partial(&src, -9.0);
+        assert_eq!(v.0[0..3], [1.0, 2.0, 3.0]);
+        assert!(v.0[3..].iter().all(|&x| x == -9.0));
+    }
+
+    #[test]
+    fn store_partial_clips() {
+        let v = iota();
+        let mut dst = [0.0f32; 4];
+        v.store_partial(&mut dst, 10); // clipped to dst.len()
+        assert_eq!(dst, [0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = iota();
+        let b = F32xL::splat(2.0);
+        assert_eq!((a + b).0[3], 5.0);
+        assert_eq!((a - b).0[3], 1.0);
+        assert_eq!((a * b).0[3], 6.0);
+        assert_eq!(a.mul_add(b, b).0[3], 8.0); // 3*2+2
+    }
+
+    #[test]
+    fn minmax() {
+        let a = iota();
+        let b = F32xL::splat(7.0);
+        assert_eq!(a.max(b).0[3], 7.0);
+        assert_eq!(a.max(b).0[12], 12.0);
+        assert_eq!(a.min(b).0[3], 3.0);
+        assert_eq!(a.min(b).0[12], 7.0);
+    }
+
+    #[test]
+    fn reductions() {
+        let a = iota();
+        let expect: f32 = (0..LANES).map(|i| i as f32).sum();
+        assert_eq!(a.reduce_sum(), expect);
+        assert_eq!(a.reduce_max(), (LANES - 1) as f32);
+    }
+}

@@ -1,0 +1,274 @@
+//! The dense row-major tensor.
+
+use super::rng::XorShiftRng;
+
+/// A contiguous row-major `f32` tensor of arbitrary rank.
+///
+/// Images use the NCHW convention `[batch, channels, height, width]`;
+/// convolution weights use `[c_out, c_in, kh, kw]`; 1-D signals use
+/// `[len]` or `[channels, len]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    data: Vec<f32>,
+    dims: Vec<usize>,
+}
+
+impl Tensor {
+    /// All-zero tensor of the given shape.
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        Tensor { data: vec![0.0; n], dims: dims.to_vec() }
+    }
+
+    /// Tensor filled with `v`.
+    pub fn full(dims: &[usize], v: f32) -> Self {
+        let n: usize = dims.iter().product();
+        Tensor { data: vec![v; n], dims: dims.to_vec() }
+    }
+
+    /// Wrap an existing buffer. `data.len()` must equal the shape product.
+    ///
+    /// # Panics
+    /// On length/shape mismatch.
+    pub fn from_vec(data: Vec<f32>, dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        assert_eq!(data.len(), n, "from_vec: {} values for shape {:?}", data.len(), dims);
+        Tensor { data, dims: dims.to_vec() }
+    }
+
+    /// Standard-normal random tensor, deterministic in `seed`.
+    pub fn randn(dims: &[usize], seed: u64) -> Self {
+        let mut rng = XorShiftRng::new(seed);
+        let n: usize = dims.iter().product();
+        let data = (0..n).map(|_| rng.gauss()).collect();
+        Tensor { data, dims: dims.to_vec() }
+    }
+
+    /// Uniform random tensor in `[lo, hi)`, deterministic in `seed`.
+    pub fn rand_uniform(dims: &[usize], lo: f32, hi: f32, seed: u64) -> Self {
+        let mut rng = XorShiftRng::new(seed);
+        let n: usize = dims.iter().product();
+        let data = (0..n).map(|_| rng.uniform(lo, hi)).collect();
+        Tensor { data, dims: dims.to_vec() }
+    }
+
+    /// Tensor whose flat element `i` is `i as f32` — handy in tests.
+    pub fn iota(dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        Tensor { data: (0..n).map(|i| i as f32).collect(), dims: dims.to_vec() }
+    }
+
+    /// Shape.
+    #[inline]
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Rank (number of dimensions).
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total element count.
+    #[inline]
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Size of dimension `d`.
+    #[inline]
+    pub fn dim(&self, d: usize) -> usize {
+        self.dims[d]
+    }
+
+    /// Row-major strides (in elements).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.dims.len()];
+        for d in (0..self.dims.len().saturating_sub(1)).rev() {
+            s[d] = s[d + 1] * self.dims[d + 1];
+        }
+        s
+    }
+
+    /// Flat data view.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat data view.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the flat buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Flat offset of NCHW index `(n, c, h, w)`; tensor must be rank 4.
+    #[inline]
+    pub fn offset4(&self, n: usize, c: usize, h: usize, w: usize) -> usize {
+        debug_assert_eq!(self.dims.len(), 4);
+        ((n * self.dims[1] + c) * self.dims[2] + h) * self.dims[3] + w
+    }
+
+    /// Element at NCHW index.
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        self.data[self.offset4(n, c, h, w)]
+    }
+
+    /// Mutable element at NCHW index.
+    #[inline]
+    pub fn at4_mut(&mut self, n: usize, c: usize, h: usize, w: usize) -> &mut f32 {
+        let o = self.offset4(n, c, h, w);
+        &mut self.data[o]
+    }
+
+    /// The `(n, c)` image plane as a contiguous `[h * w]` slice (rank 4).
+    #[inline]
+    pub fn plane(&self, n: usize, c: usize) -> &[f32] {
+        let hw = self.dims[2] * self.dims[3];
+        let start = (n * self.dims[1] + c) * hw;
+        &self.data[start..start + hw]
+    }
+
+    /// Mutable `(n, c)` image plane (rank 4).
+    #[inline]
+    pub fn plane_mut(&mut self, n: usize, c: usize) -> &mut [f32] {
+        let hw = self.dims[2] * self.dims[3];
+        let start = (n * self.dims[1] + c) * hw;
+        &mut self.data[start..start + hw]
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    ///
+    /// # Panics
+    /// If the products differ.
+    pub fn reshape(mut self, dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {:?}", self.dims, dims);
+        self.dims = dims.to_vec();
+        self
+    }
+
+    /// Element-wise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
+        Tensor {
+            data: self.data.iter().map(|&x| f(x)).collect(),
+            dims: self.dims.clone(),
+        }
+    }
+
+    /// Largest absolute element.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Largest absolute difference against `other` (shapes must match).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.dims, other.dims, "max_abs_diff shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+
+    /// True when every element matches `other` within `atol + rtol·|b|`
+    /// (with `rtol` fixed at `1e-5`), the numpy `allclose` convention.
+    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+        if self.dims != other.dims {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(&a, &b)| (a - b).abs() <= atol + 1e-5 * b.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_full_shapes() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.dims(), &[2, 3, 4]);
+        let f = Tensor::full(&[5], 2.5);
+        assert!(f.as_slice().iter().all(|&x| x == 2.5));
+    }
+
+    #[test]
+    #[should_panic(expected = "from_vec")]
+    fn from_vec_checks_len() {
+        let _ = Tensor::from_vec(vec![1.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let t = Tensor::zeros(&[2, 3, 4, 5]);
+        assert_eq!(t.strides(), vec![60, 20, 5, 1]);
+    }
+
+    #[test]
+    fn offset4_matches_strides() {
+        let t = Tensor::iota(&[2, 3, 4, 5]);
+        assert_eq!(t.at4(1, 2, 3, 4), (60 + 40 + 15 + 4) as f32);
+    }
+
+    #[test]
+    fn plane_is_contiguous_hw() {
+        let t = Tensor::iota(&[2, 3, 2, 2]);
+        let p = t.plane(1, 2);
+        assert_eq!(p, &[20.0, 21.0, 22.0, 23.0]);
+    }
+
+    #[test]
+    fn plane_mut_writes_through() {
+        let mut t = Tensor::zeros(&[1, 2, 2, 2]);
+        t.plane_mut(0, 1)[3] = 9.0;
+        assert_eq!(t.at4(0, 1, 1, 1), 9.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::iota(&[2, 6]).reshape(&[3, 4]);
+        assert_eq!(t.dims(), &[3, 4]);
+        assert_eq!(t.as_slice()[7], 7.0);
+    }
+
+    #[test]
+    fn allclose_tolerates_small_error() {
+        let a = Tensor::full(&[4], 1.0);
+        let mut b = a.clone();
+        b.as_mut_slice()[0] = 1.0 + 1e-7;
+        assert!(a.allclose(&b, 1e-6));
+        b.as_mut_slice()[0] = 1.1;
+        assert!(!a.allclose(&b, 1e-6));
+    }
+
+    #[test]
+    fn allclose_shape_mismatch_is_false() {
+        assert!(!Tensor::zeros(&[2]).allclose(&Tensor::zeros(&[3]), 1.0));
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let a = Tensor::randn(&[10], 9);
+        let b = Tensor::randn(&[10], 9);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::from_vec(vec![1.0, -4.0], &[2]);
+        let b = Tensor::from_vec(vec![2.0, -1.0], &[2]);
+        assert_eq!(a.max_abs_diff(&b), 3.0);
+        assert_eq!(a.max_abs(), 4.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Minimal owned-`f32` tensor library (NCHW convention for images).
+//!
+//! Everything the kernels need and nothing more: contiguous row-major
+//! buffers, stride math, deterministic pseudo-random fills (no external
+//! RNG dependency), comparison helpers for the test suite, and the
+//! zero-padding used by the sliding kernels.
+//!
+//! Note on padding: the sliding kernels pad a tensor **once** with
+//! `pad2d`, adding a `LANES`-sized right slack so shifted vector loads
+//! never read out of bounds. That costs `O(H·W)` extra memory — compare
+//! the `im2col` baseline which materialises a `k²`-times larger matrix
+//! per convolution (the paper's "memory bloating problem").
+
+mod dense;
+mod pad;
+mod rng;
+
+pub use dense::Tensor;
+pub use pad::{pad2d, pad_row};
+pub use rng::XorShiftRng;

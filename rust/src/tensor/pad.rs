@@ -1,0 +1,81 @@
+//! Zero-padding for the sliding kernels.
+//!
+//! The sliding-window kernels read the input through shifted vector loads:
+//! the window at output column `x` spans input columns `x .. x+k`, and the
+//! vectorised loop loads whole `LANES`-wide registers. To keep those loads
+//! in-bounds for every output column (including row tails) the input is
+//! padded **once** with the convolution padding plus a right *slack* of at
+//! least `LANES + k` columns. This is `O(H · W)` extra memory versus the
+//! `k²×` blow-up of `im2col` — the core of the paper's memory argument.
+
+use super::dense::Tensor;
+
+/// Pad an NCHW tensor with `ph` rows / `pw` columns of `value` on each
+/// side, plus `slack_w` extra columns of `value` on the right only.
+///
+/// Output shape: `[n, c, h + 2·ph, w + 2·pw + slack_w]`.
+pub fn pad2d(x: &Tensor, ph: usize, pw: usize, slack_w: usize, value: f32) -> Tensor {
+    assert_eq!(x.rank(), 4, "pad2d expects NCHW");
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (hp, wp) = (h + 2 * ph, w + 2 * pw + slack_w);
+    let mut out = Tensor::full(&[n, c, hp, wp], value);
+    for ni in 0..n {
+        for ci in 0..c {
+            let src = x.plane(ni, ci);
+            let dst = out.plane_mut(ni, ci);
+            for row in 0..h {
+                let s = &src[row * w..row * w + w];
+                let d = &mut dst[(row + ph) * wp + pw..(row + ph) * wp + pw + w];
+                d.copy_from_slice(s);
+            }
+        }
+    }
+    out
+}
+
+/// Pad a single row (1-D signal) with `p` values on the left and
+/// `p + slack` on the right.
+pub fn pad_row(x: &[f32], p: usize, slack: usize, value: f32) -> Vec<f32> {
+    let mut out = vec![value; x.len() + 2 * p + slack];
+    out[p..p + x.len()].copy_from_slice(x);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad2d_shape_and_values() {
+        let x = Tensor::iota(&[1, 2, 2, 3]);
+        let p = pad2d(&x, 1, 2, 4, 0.0);
+        assert_eq!(p.dims(), &[1, 2, 4, 3 + 4 + 4]);
+        // Interior preserved.
+        assert_eq!(p.at4(0, 0, 1, 2), x.at4(0, 0, 0, 0));
+        assert_eq!(p.at4(0, 1, 2, 4), x.at4(0, 1, 1, 2));
+        // Border zero.
+        assert_eq!(p.at4(0, 0, 0, 0), 0.0);
+        assert_eq!(p.at4(0, 1, 3, 10), 0.0);
+    }
+
+    #[test]
+    fn pad2d_value_fill() {
+        let x = Tensor::zeros(&[1, 1, 1, 1]);
+        let p = pad2d(&x, 1, 1, 0, f32::NEG_INFINITY);
+        assert_eq!(p.at4(0, 0, 0, 0), f32::NEG_INFINITY);
+        assert_eq!(p.at4(0, 0, 1, 1), 0.0);
+    }
+
+    #[test]
+    fn pad2d_no_padding_copies() {
+        let x = Tensor::iota(&[2, 1, 3, 3]);
+        let p = pad2d(&x, 0, 0, 0, 0.0);
+        assert_eq!(p, x);
+    }
+
+    #[test]
+    fn pad_row_layout() {
+        let r = pad_row(&[1.0, 2.0], 2, 3, 0.5);
+        assert_eq!(r, vec![0.5, 0.5, 1.0, 2.0, 0.5, 0.5, 0.5, 0.5, 0.5]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Tiny deterministic RNG so the crate needs no external `rand` dependency
+//! and every test / benchmark workload is reproducible from a seed.
+
+/// xorshift64* generator with a Box–Muller Gaussian tap.
+#[derive(Clone, Debug)]
+pub struct XorShiftRng {
+    state: u64,
+    /// Cached second output of the Box–Muller pair.
+    spare: Option<f64>,
+}
+
+impl XorShiftRng {
+    /// Create a generator from a seed (any value; 0 is remapped).
+    pub fn new(seed: u64) -> Self {
+        XorShiftRng {
+            state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed },
+            spare: None,
+        }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f64() as f32
+    }
+
+    /// Uniform usize in `[0, n)`. `n` must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard-normal f32 (Box–Muller).
+    pub fn gauss(&mut self) -> f32 {
+        if let Some(s) = self.spare.take() {
+            return s as f32;
+        }
+        // Avoid ln(0).
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 1e-12 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * theta.sin());
+        (r * theta.cos()) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = XorShiftRng::new(7);
+        let mut b = XorShiftRng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = XorShiftRng::new(1);
+        let mut b = XorShiftRng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = XorShiftRng::new(3);
+        for _ in 0..1000 {
+            let v = r.uniform(-2.0, 5.0);
+            assert!((-2.0..5.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = XorShiftRng::new(4);
+        for _ in 0..1000 {
+            assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn gauss_moments_roughly_standard() {
+        let mut r = XorShiftRng::new(5);
+        let n = 20_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.gauss()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+}

@@ -1,0 +1,190 @@
+//! Coordinator integration: batching invariants under concurrent load,
+//! router correctness, failure behaviour, metrics accounting.
+
+use std::sync::Arc;
+use std::time::Duration;
+use swconv::coordinator::{BackendSpec, BatchPolicy, Coordinator, InferError};
+use swconv::kernels::ConvAlgo;
+use swconv::nn::{zoo, ExecCtx};
+use swconv::tensor::Tensor;
+
+fn coord(max_batch: usize, wait_ms: u64) -> Coordinator {
+    Coordinator::new(
+        vec![
+            BackendSpec::native("sliding", zoo::simple_cnn(10, 1), ExecCtx { algo: ConvAlgo::Sliding }),
+            BackendSpec::native("gemm", zoo::simple_cnn(10, 1), ExecCtx { algo: ConvAlgo::Im2colGemm }),
+        ],
+        BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms) },
+    )
+}
+
+/// INVARIANT — no request is lost or duplicated under concurrent
+/// multi-threaded submission; every id is answered exactly once.
+#[test]
+fn no_lost_or_duplicated_requests_under_concurrency() {
+    let c = Arc::new(coord(4, 1));
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let c = Arc::clone(&c);
+        handles.push(std::thread::spawn(move || {
+            let mut ids = Vec::new();
+            for i in 0..12 {
+                let r = c
+                    .infer("sliding", Tensor::randn(&[1, 28, 28], t * 100 + i))
+                    .expect("infer");
+                assert!(r.output.is_ok());
+                ids.push(r.id);
+            }
+            ids
+        }));
+    }
+    let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    let n = all.len();
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len(), n, "duplicate response ids");
+    assert_eq!(n, 48);
+
+    let m = c.metrics("sliding").unwrap();
+    assert_eq!(m.count, 48, "all requests recorded");
+    assert_eq!(m.items, 48, "all items processed");
+    Arc::try_unwrap(c).ok().expect("sole owner").shutdown();
+}
+
+/// INVARIANT — batches never exceed the policy's max_batch.
+#[test]
+fn batches_bounded_by_policy() {
+    let c = coord(3, 50);
+    let rxs: Vec<_> = (0..10)
+        .map(|i| c.submit("gemm", Tensor::randn(&[1, 28, 28], i)).unwrap())
+        .collect();
+    for rx in rxs {
+        assert!(rx.recv().unwrap().output.is_ok());
+    }
+    let m = c.metrics("gemm").unwrap();
+    // 10 items in batches of <= 3 means at least 4 batches.
+    assert!(m.batches >= 4, "batches {} too few for max_batch=3", m.batches);
+    assert!(m.mean_batch() <= 3.0 + 1e-9);
+    c.shutdown();
+}
+
+/// Router isolation: the same request routed to both backends gives the
+/// same answer, and queues don't interfere.
+#[test]
+fn router_backends_isolated_and_equivalent() {
+    let c = coord(8, 1);
+    let x = Tensor::randn(&[1, 28, 28], 77);
+    let a = c.infer("sliding", x.clone()).unwrap().output.unwrap();
+    let b = c.infer("gemm", x).unwrap().output.unwrap();
+    assert!(a.allclose(&b, 1e-4));
+    assert_eq!(c.backends(), vec!["gemm".to_string(), "sliding".to_string()]);
+    c.shutdown();
+}
+
+/// Failure injection: a backend whose factory fails must answer every
+/// request with an error instead of hanging or panicking the router.
+#[test]
+fn failing_backend_factory_reports_errors() {
+    let spec = BackendSpec {
+        name: "broken".into(),
+        item_shape: vec![1, 28, 28],
+        factory: Box::new(|| anyhow::bail!("injected construction failure")),
+    };
+    let c = Coordinator::new(vec![spec], BatchPolicy::default());
+    let r = c.infer("broken", Tensor::zeros(&[1, 28, 28])).unwrap();
+    match r.output {
+        Err(InferError::Backend(msg)) => assert!(msg.contains("injected")),
+        other => panic!("expected backend error, got {other:?}"),
+    }
+    c.shutdown();
+}
+
+/// Failure injection: a backend that errors per-batch answers all batch
+/// members with the error and keeps serving later requests.
+#[test]
+fn erroring_backend_answers_every_request() {
+    struct Flaky {
+        calls: usize,
+    }
+    impl swconv::coordinator::Backend for Flaky {
+        fn name(&self) -> &str {
+            "flaky"
+        }
+        fn item_shape(&self) -> &[usize] {
+            &[2]
+        }
+        fn infer(&mut self, batch: &Tensor) -> anyhow::Result<Tensor> {
+            self.calls += 1;
+            if self.calls == 1 {
+                anyhow::bail!("transient failure");
+            }
+            Ok(batch.clone())
+        }
+    }
+    let spec = BackendSpec {
+        name: "flaky".into(),
+        item_shape: vec![2],
+        factory: Box::new(|| Ok(Box::new(Flaky { calls: 0 }))),
+    };
+    let c = Coordinator::new(
+        vec![spec],
+        BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+    );
+    let r1 = c.infer("flaky", Tensor::zeros(&[2])).unwrap();
+    assert!(matches!(r1.output, Err(InferError::Backend(_))));
+    let r2 = c.infer("flaky", Tensor::full(&[2], 3.0)).unwrap();
+    assert_eq!(r2.output.unwrap().as_slice(), &[3.0, 3.0]);
+    c.shutdown();
+}
+
+/// Echo backend: batch stacking and splitting round-trips every item
+/// bit-exactly in order.
+#[test]
+fn batch_split_preserves_item_identity_and_order() {
+    struct Echo;
+    impl swconv::coordinator::Backend for Echo {
+        fn name(&self) -> &str {
+            "echo"
+        }
+        fn item_shape(&self) -> &[usize] {
+            &[3]
+        }
+        fn infer(&mut self, batch: &Tensor) -> anyhow::Result<Tensor> {
+            Ok(batch.clone())
+        }
+    }
+    let spec = BackendSpec {
+        name: "echo".into(),
+        item_shape: vec![3],
+        factory: Box::new(|| Ok(Box::new(Echo))),
+    };
+    let c = Coordinator::new(
+        vec![spec],
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(5) },
+    );
+    let rxs: Vec<_> = (0..32)
+        .map(|i| {
+            let t = Tensor::full(&[3], i as f32);
+            c.submit("echo", t).unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let out = rx.recv().unwrap().output.unwrap();
+        assert_eq!(out.as_slice(), &[i as f32; 3], "item {i} mangled");
+    }
+    c.shutdown();
+}
+
+/// Shape validation is synchronous and precise.
+#[test]
+fn shape_validation() {
+    let c = coord(2, 1);
+    match c.infer("sliding", Tensor::zeros(&[28, 28])) {
+        Err(InferError::BadShape { expected, got }) => {
+            assert_eq!(expected, vec![1, 28, 28]);
+            assert_eq!(got, vec![28, 28]);
+        }
+        other => panic!("expected BadShape, got {other:?}"),
+    }
+    c.shutdown();
+}

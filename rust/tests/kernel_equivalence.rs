@@ -1,0 +1,121 @@
+//! Cross-algorithm kernel equivalence over a broad grid of shapes.
+//!
+//! Every convolution algorithm must produce the same numbers as the
+//! direct oracle for every geometry it claims to support — this is the
+//! load-bearing correctness statement behind the Fig. 1 comparison
+//! ("same arithmetic, different memory behaviour").
+
+use swconv::kernels::{conv1d, conv2d, Conv1dParams, Conv2dParams, ConvAlgo};
+use swconv::tensor::Tensor;
+
+fn check_2d(xdims: &[usize], wdims: &[usize], p: &Conv2dParams, seed: u64) {
+    let x = Tensor::randn(xdims, seed);
+    let w = Tensor::randn(wdims, seed + 1);
+    let bias: Vec<f32> = (0..wdims[0]).map(|i| 0.01 * i as f32 - 0.02).collect();
+    let reference = conv2d(&x, &w, Some(&bias), p, ConvAlgo::Direct);
+    for algo in ConvAlgo::ALL {
+        if !algo.supports_width(wdims[3]) {
+            continue;
+        }
+        let y = conv2d(&x, &w, Some(&bias), p, algo);
+        let d = y.max_abs_diff(&reference);
+        assert!(
+            d < 3e-3,
+            "{algo:?} x{xdims:?} w{wdims:?} p{p:?}: diff {d}"
+        );
+    }
+}
+
+#[test]
+fn grid_of_filter_sizes_all_algos() {
+    for k in [1usize, 2, 3, 4, 5, 6, 8, 11, 16, 17, 18, 25, 33] {
+        check_2d(
+            &[1, 2, 20, 40.max(k + 3)],
+            &[3, 2, 2.min(k), k],
+            &Conv2dParams::default(),
+            1000 + k as u64,
+        );
+    }
+}
+
+#[test]
+fn grid_of_image_sizes() {
+    for hw in [5usize, 7, 16, 17, 31, 33, 64] {
+        check_2d(
+            &[1, 3, hw, hw],
+            &[2, 3, 3, 3],
+            &Conv2dParams::same(3),
+            2000 + hw as u64,
+        );
+    }
+}
+
+#[test]
+fn grid_of_channel_counts() {
+    for c in [1usize, 2, 3, 4, 7, 16] {
+        check_2d(
+            &[1, c, 12, 12],
+            &[c.max(2), c, 5, 5],
+            &Conv2dParams::default(),
+            3000 + c as u64,
+        );
+    }
+}
+
+#[test]
+fn batches_strides_pads() {
+    check_2d(&[3, 2, 14, 14], &[2, 2, 3, 3], &Conv2dParams::same(3), 4001);
+    let p = Conv2dParams { stride: (2, 2), pad: (2, 2), groups: 1 };
+    check_2d(&[2, 3, 15, 17], &[4, 3, 5, 5], &p, 4002);
+    let p = Conv2dParams { stride: (3, 1), pad: (0, 4), groups: 1 };
+    check_2d(&[1, 2, 13, 11], &[2, 2, 3, 3], &p, 4003);
+}
+
+#[test]
+fn grouped_and_depthwise() {
+    let p = Conv2dParams { stride: (1, 1), pad: (1, 1), groups: 4 };
+    check_2d(&[1, 8, 10, 10], &[8, 2, 3, 3], &p, 5001);
+    let dw = Conv2dParams { stride: (1, 1), pad: (2, 2), groups: 16 };
+    check_2d(&[2, 16, 9, 9], &[16, 1, 5, 5], &dw, 5002);
+}
+
+#[test]
+fn conv1d_all_algos_wide_grid() {
+    for k in [1usize, 2, 3, 5, 9, 16, 17, 33, 64] {
+        let x = Tensor::randn(&[2, 100 + k], 6000 + k as u64);
+        let w = Tensor::randn(&[3, 2, k], 6100 + k as u64);
+        let p = Conv1dParams { stride: 1, pad: k / 2 };
+        let reference = conv1d(&x, &w, None, &p, ConvAlgo::Direct);
+        for algo in ConvAlgo::ALL {
+            if !algo.supports_width(k) {
+                continue;
+            }
+            let y = conv1d(&x, &w, None, &p, algo);
+            let d = y.max_abs_diff(&reference);
+            assert!(d < 3e-3, "{algo:?} k={k}: diff {d}");
+        }
+    }
+}
+
+/// Adversarial values: extremes, denormals, signed zeros.
+#[test]
+fn extreme_values_stay_finite_and_equal() {
+    let mut x = Tensor::zeros(&[1, 1, 8, 24]);
+    let xs = x.as_mut_slice();
+    xs[0] = 1e30;
+    xs[10] = -1e30;
+    xs[50] = 1e-38;
+    xs[100] = -0.0;
+    let w = Tensor::full(&[1, 1, 3, 3], 1e-6);
+    let p = Conv2dParams::default();
+    let reference = conv2d(&x, &w, None, &p, ConvAlgo::Direct);
+    for algo in [ConvAlgo::Sliding, ConvAlgo::Im2colGemm] {
+        let y = conv2d(&x, &w, None, &p, algo);
+        for (a, b) in y.as_slice().iter().zip(reference.as_slice()) {
+            assert_eq!(a.is_finite(), b.is_finite());
+            if b.is_finite() {
+                assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+            }
+        }
+    }
+}

