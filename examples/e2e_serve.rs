@@ -61,8 +61,8 @@ fn main() {
     let model_gemm = load();
 
     let mut backends = vec![
-        BackendSpec::native("sliding", model_sliding, ExecCtx { algo: ConvAlgo::Sliding }),
-        BackendSpec::native("gemm", model_gemm, ExecCtx { algo: ConvAlgo::Im2colGemm }),
+        BackendSpec::native("sliding", model_sliding, ExecCtx::new(ConvAlgo::Sliding)),
+        BackendSpec::native("gemm", model_gemm, ExecCtx::new(ConvAlgo::Im2colGemm)),
     ];
     if have_artifacts {
         backends.push(BackendSpec::pjrt(

@@ -11,9 +11,10 @@
 //! cargo run --release --example edge_audio
 //! ```
 
+use swconv::exec::ExecCtx;
 use swconv::harness::bench;
 use swconv::kernels::sliding1d::sliding_sum;
-use swconv::kernels::{conv1d, Conv1dParams, ConvAlgo};
+use swconv::kernels::{conv1d, conv1d_ctx, Conv1dParams, ConvAlgo};
 use swconv::tensor::{Tensor, XorShiftRng};
 
 const SAMPLE_RATE: usize = 16_000;
@@ -54,8 +55,9 @@ fn synth_frame(seed: u64) -> Tensor {
     let mut x = vec![0.0f32; FRAME];
     for (i, v) in x.iter_mut().enumerate() {
         let t = i as f32 / SAMPLE_RATE as f32;
-        let burst1 = if (0.05..0.12).contains(&t) { (2.0 * std::f32::consts::PI * 700.0 * t).sin() } else { 0.0 };
-        let burst2 = if (0.15..0.22).contains(&t) { (2.0 * std::f32::consts::PI * 2600.0 * t).sin() } else { 0.0 };
+        let tone = |hz: f32| (2.0 * std::f32::consts::PI * hz * t).sin();
+        let burst1 = if (0.05..0.12).contains(&t) { tone(700.0) } else { 0.0 };
+        let burst2 = if (0.15..0.22).contains(&t) { tone(2600.0) } else { 0.0 };
         *v = 0.8 * burst1 + 0.7 * burst2 + 0.05 * rng.gauss();
     }
     Tensor::from_vec(x, &[1, FRAME])
@@ -74,10 +76,14 @@ fn main() {
     println!("sliding vs direct: max|diff| = {d:.2e}");
     assert!(d < 1e-3);
 
-    // Throughput: the edge device budget question.
-    let s_slide = bench(|| conv1d(&frame, &w, None, &p, ConvAlgo::Sliding));
-    let s_direct = bench(|| conv1d(&frame, &w, None, &p, ConvAlgo::Direct));
-    let s_gemm = bench(|| conv1d(&frame, &w, None, &p, ConvAlgo::Im2colGemm));
+    // Throughput: the edge device budget question. One ctx per
+    // algorithm so the timed loop reuses arena scratch across frames.
+    let sliding = ExecCtx::new(ConvAlgo::Sliding);
+    let direct = ExecCtx::new(ConvAlgo::Direct);
+    let gemm = ExecCtx::new(ConvAlgo::Im2colGemm);
+    let s_slide = bench(|| conv1d_ctx(&frame, &w, None, &p, &sliding));
+    let s_direct = bench(|| conv1d_ctx(&frame, &w, None, &p, &direct));
+    let s_gemm = bench(|| conv1d_ctx(&frame, &w, None, &p, &gemm));
     let rt = |t: std::time::Duration| {
         FRAME as f64 / SAMPLE_RATE as f64 / t.as_secs_f64()
     };

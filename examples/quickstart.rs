@@ -5,9 +5,10 @@
 //! cargo run --release --example quickstart
 //! ```
 
+use swconv::exec::ExecCtx;
 use swconv::harness::{bench, machine_peaks};
 use swconv::kernels::{
-    avg_pool2d, conv2d, max_pool2d, Conv2dParams, ConvAlgo, PoolParams,
+    avg_pool2d, conv2d, conv2d_ctx, max_pool2d, Conv2dParams, ConvAlgo, PoolParams,
 };
 use swconv::tensor::Tensor;
 
@@ -26,8 +27,10 @@ fn main() {
     println!("{:<18} {:>10}  {:>9}  {}", "algo", "median", "GFLOP/s", "max|diff| vs direct");
     let flops = 2 * 8 * 64 * 64 * 3 * 25;
     for algo in ConvAlgo::ALL {
-        let stats = bench(|| conv2d(&x, &w, Some(&bias), &p, algo));
-        let y = conv2d(&x, &w, Some(&bias), &p, algo);
+        // One ctx per algorithm: the timed loop reuses arena scratch.
+        let ctx = ExecCtx::new(algo);
+        let stats = bench(|| conv2d_ctx(&x, &w, Some(&bias), &p, &ctx));
+        let y = conv2d_ctx(&x, &w, Some(&bias), &p, &ctx);
         println!(
             "{:<18} {:>10.3?}  {:>9.2}  {:.2e}",
             algo.name(),

@@ -21,7 +21,7 @@ fn main() {
         peaks.ridge()
     );
 
-    let rows = fig1_speedup_sweep(&ks, make);
+    let rows = fig1_speedup_sweep(&ks, 1, make);
     let mut t1 = Table::new(
         "Fig 1 — 2-D sliding convolution speedup over GEMM (c=4, 64x64)",
         &["k", "kernel", "speedup"],
@@ -32,7 +32,7 @@ fn main() {
     println!("{}", t1.render());
     t1.write_csv("target/reports/fig1_example.csv").expect("csv");
 
-    let rows = fig2_throughput_sweep(&ks, make);
+    let rows = fig2_throughput_sweep(&ks, 1, make);
     let mut t2 = Table::new(
         "Fig 2 — throughput GFLOP/s vs roofline (c=4, 64x64)",
         &["k", "sliding", "gemm", "roof(sliding)", "peak"],

@@ -19,9 +19,14 @@ fn main() {
         let mut shape = vec![4];
         shape.extend_from_slice(&m.input_shape);
         let x = Tensor::randn(&shape, 1);
-        let tg = bench(|| m.forward(&x, &ExecCtx { algo: ConvAlgo::Im2colGemm })).median;
-        let ts = bench(|| m.forward(&x, &ExecCtx { algo: ConvAlgo::Sliding })).median;
-        let td = bench(|| m.forward(&x, &ExecCtx { algo: ConvAlgo::Direct })).median;
+        // One ctx per algorithm so scratch buffers are reused across the
+        // bench's iterations (the serving configuration).
+        let gemm = ExecCtx::new(ConvAlgo::Im2colGemm);
+        let sliding = ExecCtx::new(ConvAlgo::Sliding);
+        let direct = ExecCtx::new(ConvAlgo::Direct);
+        let tg = bench(|| m.forward(&x, &gemm)).median;
+        let ts = bench(|| m.forward(&x, &sliding)).median;
+        let td = bench(|| m.forward(&x, &direct)).median;
         t.row(vec![
             name.into(),
             f3(m.flops(4) as f64 / 1e6),

@@ -1,19 +1,34 @@
 //! BENCH — Paper Fig. 1: speedup of 2-D Sliding Window convolution over
 //! the im2col+GEMM (MlasConv-style) baseline, as a function of filter
-//! size. Single core, NCHW f32, c=4 channels, 64x64 images (and a second
-//! 128x128 single-channel series like the paper's large-image regime).
+//! size. NCHW f32, c=4 channels, 64x64 images (and a second 128x128
+//! single-channel series like the paper's large-image regime). The
+//! paper's configuration is single core; a second multi-core series
+//! (every hardware thread through the exec subsystem) is reported when
+//! the machine has more than one.
 //!
 //! Expected shape (paper): speedup > 1 everywhere, growing roughly
 //! logarithmically with k; custom kernels (k=3,5) above the generic
 //! trend; zigzag in the compound regime from hardware-vector alignment.
+//!
+//! Machine-readable records land in `target/reports/BENCH_fig1.json`.
 
-use swconv::harness::report::{f3, Table};
+use swconv::harness::report::{f3, write_bench_json, BenchRecord, Table};
 use swconv::harness::sweep::{default_k_grid, fig1_speedup_sweep};
 use swconv::harness::ConvCase;
 
-fn run(title: &str, c: usize, hw: usize, csv: &str) {
+fn run(
+    title: &str,
+    c: usize,
+    hw: usize,
+    threads: usize,
+    csv: &str,
+    records: &mut Vec<BenchRecord>,
+) {
     let ks = default_k_grid();
-    let rows = fig1_speedup_sweep(&ks, |k| ConvCase::square(c, hw, k));
+    // One workload builder shared by the sweep and the JSON records, so
+    // the recorded shape/flops always describe what was actually timed.
+    let make_case = |k| ConvCase::square(c, hw, k);
+    let rows = fig1_speedup_sweep(&ks, threads, make_case);
     let mut t = Table::new(
         title,
         &["k", "kernel", "t_gemm_ms", "t_sliding_ms", "t_generic_ms", "t_compound_ms", "speedup"],
@@ -28,13 +43,53 @@ fn run(title: &str, c: usize, hw: usize, csv: &str) {
             r.t_compound.map_or("-".into(), |v| f3(v * 1e3)),
             f3(r.speedup),
         ]);
+        let case = make_case(r.k);
+        let flops = case.flops() as f64;
+        let mut push = |algo: &str, secs: f64| {
+            records.push(BenchRecord {
+                bench: "fig1".into(),
+                algo: algo.into(),
+                shape: case.id(),
+                threads,
+                ns_per_iter: secs * 1e9,
+                gflops: flops / secs / 1e9,
+            });
+        };
+        push("gemm", r.t_gemm);
+        push("sliding", r.t_sliding);
+        if let Some(s) = r.t_generic {
+            push("sliding-generic", s);
+        }
+        if let Some(s) = r.t_compound {
+            push("sliding-compound", s);
+        }
     }
     println!("{}", t.render());
     t.write_csv(format!("target/reports/{csv}")).expect("csv");
 }
 
 fn main() {
-    run("Fig 1a — speedup vs k (c=4, 64x64)", 4, 64, "fig1_c4_64.csv");
-    run("Fig 1b — speedup vs k (c=1, 128x128)", 1, 128, "fig1_c1_128.csv");
-    println!("CSV series in target/reports/fig1_*.csv");
+    let all = swconv::exec::available_threads();
+    let mut records = Vec::new();
+    run("Fig 1a — speedup vs k (c=4, 64x64, 1 thread)", 4, 64, 1, "fig1_c4_64.csv", &mut records);
+    run(
+        "Fig 1b — speedup vs k (c=1, 128x128, 1 thread)",
+        1,
+        128,
+        1,
+        "fig1_c1_128.csv",
+        &mut records,
+    );
+    if all > 1 {
+        run(
+            &format!("Fig 1a' — speedup vs k (c=4, 64x64, {all} threads)"),
+            4,
+            64,
+            all,
+            "fig1_c4_64_mt.csv",
+            &mut records,
+        );
+    }
+    write_bench_json("target/reports/BENCH_fig1.json", &records).expect("json");
+    println!("CSV series in target/reports/fig1_*.csv; records in target/reports/BENCH_fig1.json");
 }

@@ -2,9 +2,10 @@
 //! of the Vector Slide kernel over GEMM/direct, "roughly proportional to
 //! the logarithm of the filter width".
 
+use swconv::exec::ExecCtx;
 use swconv::harness::report::{f3, Table};
 use swconv::harness::timing::bench_quick;
-use swconv::kernels::{conv1d, Conv1dParams, ConvAlgo};
+use swconv::kernels::{conv1d_ctx, Conv1dParams, ConvAlgo};
 use swconv::tensor::Tensor;
 
 fn main() {
@@ -21,9 +22,14 @@ fn main() {
         let x = Tensor::rand_uniform(&[c_in, l], -1.0, 1.0, k as u64);
         let w = Tensor::rand_uniform(&[c_out, c_in, k], -1.0, 1.0, 1 + k as u64);
         let p = Conv1dParams::default();
-        let tg = bench_quick(|| conv1d(&x, &w, None, &p, ConvAlgo::Im2colGemm)).secs();
-        let td = bench_quick(|| conv1d(&x, &w, None, &p, ConvAlgo::Direct)).secs();
-        let ts = bench_quick(|| conv1d(&x, &w, None, &p, ConvAlgo::Sliding)).secs();
+        // One ctx per algorithm so the timed iterations reuse arena
+        // scratch instead of paying a fresh column/pad allocation each.
+        let gemm = ExecCtx::new(ConvAlgo::Im2colGemm);
+        let direct = ExecCtx::new(ConvAlgo::Direct);
+        let sliding = ExecCtx::new(ConvAlgo::Sliding);
+        let tg = bench_quick(|| conv1d_ctx(&x, &w, None, &p, &gemm)).secs();
+        let td = bench_quick(|| conv1d_ctx(&x, &w, None, &p, &direct)).secs();
+        let ts = bench_quick(|| conv1d_ctx(&x, &w, None, &p, &sliding)).secs();
         t.row(vec![
             k.to_string(),
             f3(tg * 1e3),

@@ -1,15 +1,47 @@
 //! BENCH — Paper Fig. 2: arithmetic throughput (GFLOP/s) of the sliding
 //! and GEMM convolution kernels vs filter size, against the measured
-//! roofline (Intel-Advisor stand-in; see harness::roofline).
+//! roofline (Intel-Advisor stand-in; see harness::roofline). Reported at
+//! 1 thread (the paper's configuration) and, when the machine has more
+//! cores, at every hardware thread through the exec subsystem — the
+//! multi/single ratio is the wall-clock speedup the `ExecCtx` thread
+//! pool buys.
 //!
 //! Expected shape (paper): sliding throughput approaches the hardware
 //! limit as the filter grows; GEMM stays below it (its im2col traffic
 //! caps arithmetic intensity); misalignment with the vector length shows
 //! as matching dips in both series.
+//!
+//! Machine-readable records land in `target/reports/BENCH_fig2.json`.
 
-use swconv::harness::report::{f3, Table};
-use swconv::harness::sweep::{default_k_grid, fig2_throughput_sweep};
+use swconv::harness::report::{f3, write_bench_json, BenchRecord, Table};
+use swconv::harness::sweep::{default_k_grid, fig2_throughput_sweep, Fig2Row};
 use swconv::harness::{machine_peaks, ConvCase};
+
+const C: usize = 4;
+const HW: usize = 64;
+
+// One workload builder shared by the sweeps and the JSON records, so the
+// recorded shape/flops always describe what was actually timed.
+fn make_case(k: usize) -> ConvCase {
+    ConvCase::square(C, HW, k)
+}
+
+fn push_records(rows: &[Fig2Row], records: &mut Vec<BenchRecord>) {
+    for r in rows {
+        let case = make_case(r.k);
+        let flops = case.flops() as f64;
+        for (algo, gflops) in [("sliding", r.sliding_gflops), ("gemm", r.gemm_gflops)] {
+            records.push(BenchRecord {
+                bench: "fig2".into(),
+                algo: algo.into(),
+                shape: case.id(),
+                threads: r.threads,
+                ns_per_iter: flops / gflops, // flops / (gflop/s * 1e9) * 1e9 ns
+                gflops,
+            });
+        }
+    }
+}
 
 fn main() {
     let peaks = machine_peaks();
@@ -20,24 +52,55 @@ fn main() {
         peaks.ridge()
     );
     let ks = default_k_grid();
-    let rows = fig2_throughput_sweep(&ks, |k| ConvCase::square(4, 64, k));
+    let all = swconv::exec::available_threads();
+
+    let rows1 = fig2_throughput_sweep(&ks, 1, make_case);
+    let rows_mt = if all > 1 {
+        Some(fig2_throughput_sweep(&ks, all, make_case))
+    } else {
+        None
+    };
+
+    let mt_note = if all > 1 {
+        format!("; xN = {all}-thread speedup")
+    } else {
+        String::new()
+    };
     let mut t = Table::new(
-        "Fig 2 — throughput GFLOP/s (c=4, 64x64)",
-        &["k", "sliding", "gemm", "roof(sliding)", "roof(gemm)", "peak", "sliding/peak", "gemm/peak"],
+        format!("Fig 2 — throughput GFLOP/s (c={C}, {HW}x{HW}{mt_note})"),
+        &["k", "sliding", "gemm", "roof(sliding)", "peak", "sliding/peak", "sliding_mt", "xN"],
     );
-    for r in &rows {
+    for (i, r) in rows1.iter().enumerate() {
+        let mt = rows_mt.as_ref().map(|rs| rs[i].sliding_gflops);
         t.row(vec![
             r.k.to_string(),
             f3(r.sliding_gflops),
             f3(r.gemm_gflops),
             f3(r.sliding_roof),
-            f3(r.gemm_roof),
             f3(r.peak),
             f3(r.sliding_gflops / r.peak),
-            f3(r.gemm_gflops / r.peak),
+            mt.map_or("-".into(), f3),
+            mt.map_or("-".into(), |m| f3(m / r.sliding_gflops)),
         ]);
     }
     println!("{}", t.render());
     t.write_csv("target/reports/fig2_c4_64.csv").expect("csv");
-    println!("CSV in target/reports/fig2_c4_64.csv");
+
+    let mut records = Vec::new();
+    push_records(&rows1, &mut records);
+    if let Some(rs) = &rows_mt {
+        push_records(rs, &mut records);
+        let gm: f64 = rows1
+            .iter()
+            .zip(rs)
+            .map(|(a, b)| (b.sliding_gflops / a.sliding_gflops).ln())
+            .sum::<f64>()
+            / rows1.len() as f64;
+        println!(
+            "geomean sliding speedup at {all} threads vs 1: {:.2}x",
+            gm.exp()
+        );
+    }
+    write_bench_json("target/reports/BENCH_fig2.json", &records).expect("json");
+    println!("CSV in target/reports/fig2_c4_64.csv; records in target/reports/BENCH_fig2.json");
 }

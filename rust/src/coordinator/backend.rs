@@ -1,9 +1,9 @@
 //! Inference backends: what a coordinator worker actually runs.
 
+use crate::error::{bail, Result};
 use crate::nn::{ExecCtx, Model};
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
-use anyhow::{bail, Result};
 
 /// A batched inference backend. Workers own their backend exclusively
 /// (`&mut self`), so implementations may keep scratch state.
@@ -21,7 +21,10 @@ pub trait Backend {
 }
 
 /// Native backend: a [`Model`] executed by the Rust kernels with a fixed
-/// [`ExecCtx`] (the router registers one backend per algorithm).
+/// [`ExecCtx`] (the router registers one backend per algorithm). The ctx
+/// — and with it the scratch arena — lives as long as the backend, so
+/// batched inference reuses buffers across requests instead of paying
+/// allocation churn per call.
 pub struct NativeBackend {
     name: String,
     model: Model,
@@ -201,7 +204,7 @@ mod tests {
         let mut b = NativeBackend::new(
             "sliding",
             simple_cnn(10, 1),
-            ExecCtx { algo: ConvAlgo::Sliding },
+            ExecCtx::new(ConvAlgo::Sliding),
         );
         assert_eq!(b.item_shape(), &[1, 28, 28]);
         let x = Tensor::randn(&[3, 1, 28, 28], 4);
@@ -216,15 +219,35 @@ mod tests {
         let mut g = NativeBackend::new(
             "gemm",
             simple_cnn(10, 1),
-            ExecCtx { algo: ConvAlgo::Im2colGemm },
+            ExecCtx::new(ConvAlgo::Im2colGemm),
         );
         let mut s = NativeBackend::new(
             "sliding",
             simple_cnn(10, 1),
-            ExecCtx { algo: ConvAlgo::Sliding },
+            ExecCtx::new(ConvAlgo::Sliding),
         );
         let yg = g.infer(&x).unwrap();
         let ys = s.infer(&x).unwrap();
         assert!(yg.allclose(&ys, 1e-4), "diff {}", yg.max_abs_diff(&ys));
+    }
+
+    #[test]
+    fn multithreaded_backend_matches_single_threaded() {
+        let x = Tensor::randn(&[4, 1, 28, 28], 6);
+        let mut one = NativeBackend::new(
+            "sliding-1t",
+            simple_cnn(10, 1),
+            ExecCtx::with_threads(ConvAlgo::Sliding, 1),
+        );
+        let mut many = NativeBackend::new(
+            "sliding-4t",
+            simple_cnn(10, 1),
+            ExecCtx::with_threads(ConvAlgo::Sliding, 4),
+        );
+        let a = one.infer(&x).unwrap();
+        let b = many.infer(&x).unwrap();
+        // Work items are computed identically on every partition, so the
+        // outputs are bit-identical, not merely close.
+        assert_eq!(a.as_slice(), b.as_slice());
     }
 }

@@ -241,8 +241,8 @@ mod tests {
 
     fn coord() -> Coordinator {
         let backends = vec![
-            BackendSpec::native("sliding", simple_cnn(10, 1), ExecCtx { algo: ConvAlgo::Sliding }),
-            BackendSpec::native("gemm", simple_cnn(10, 1), ExecCtx { algo: ConvAlgo::Im2colGemm }),
+            BackendSpec::native("sliding", simple_cnn(10, 1), ExecCtx::new(ConvAlgo::Sliding)),
+            BackendSpec::native("gemm", simple_cnn(10, 1), ExecCtx::new(ConvAlgo::Im2colGemm)),
         ];
         Coordinator::new(
             backends,

@@ -1,0 +1,431 @@
+//! The execution-context subsystem: worker threads + a scratch-buffer
+//! arena, threaded through every kernel layer.
+//!
+//! The paper's precursor (arXiv:2305.16513) stresses that sliding-window
+//! kernels parallelize naturally across independent output rows, and
+//! ZNNi (arXiv:1606.05688) shows CPU conv throughput is won by saturating
+//! all cores while controlling working-set memory. [`ExecCtx`] is the
+//! carrier for both:
+//!
+//! * **Threads** — [`ExecCtx::par_chunks`] fans independent work items
+//!   (one output plane / row / group block each) out over `threads`
+//!   std scoped threads (no dependencies, no persistent pool to keep
+//!   `Send` bounds simple). Items are split into *contiguous* ranges so
+//!   each worker owns a disjoint `&mut` window of the output — no
+//!   unsafe, no locks on the hot path — and every item is computed with
+//!   exactly the same instruction sequence regardless of which worker
+//!   runs it, so results are **bit-identical** for any thread count.
+//! * **Scratch arena** — [`ExecCtx::take`]/[`ExecCtx::put`] check
+//!   reusable `Vec<f32>` buffers in and out of a shared free list, so
+//!   the padded-input / row-accumulator / im2col-column buffers that
+//!   every kernel needs are allocated once and reused across calls
+//!   (the coordinator keeps one ctx per backend, so batched serving
+//!   stops paying allocation churn per request).
+//!   [`ExecCtx::alloc_events`] counts buffer growths so tests can
+//!   assert the steady state allocates nothing.
+//!
+//! `ExecCtx` also carries the convolution-algorithm choice
+//! ([`ConvAlgo`]) that the per-request router switches, which is all it
+//! used to be before this subsystem existed.
+
+use crate::kernels::ConvAlgo;
+use std::cell::RefCell;
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Per-request / per-backend execution context: algorithm selection,
+/// worker-thread count and the scratch-buffer arena.
+///
+/// Cheap to construct; construct once and reuse to amortise scratch
+/// allocations. Not `Copy` (it owns the arena) — build with
+/// [`ExecCtx::new`] / [`ExecCtx::with_threads`] / [`ExecCtx::auto`].
+pub struct ExecCtx {
+    /// Convolution algorithm for all conv layers routed through this ctx.
+    pub algo: ConvAlgo,
+    threads: usize,
+    arena: Mutex<Vec<Vec<f32>>>,
+    allocs: AtomicUsize,
+}
+
+impl ExecCtx {
+    /// Single-threaded context with the given algorithm (the exact
+    /// behaviour of the pre-subsystem `ExecCtx { algo }`).
+    pub fn new(algo: ConvAlgo) -> Self {
+        Self::with_threads(algo, 1)
+    }
+
+    /// Context with an explicit worker-thread count (clamped to ≥ 1).
+    pub fn with_threads(algo: ConvAlgo, threads: usize) -> Self {
+        ExecCtx {
+            algo,
+            threads: threads.max(1),
+            arena: Mutex::new(Vec::new()),
+            allocs: AtomicUsize::new(0),
+        }
+    }
+
+    /// Context using every available hardware thread
+    /// (see [`available_threads`]).
+    pub fn auto(algo: ConvAlgo) -> Self {
+        Self::with_threads(algo, available_threads())
+    }
+
+    /// Worker-thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Number of scratch-buffer allocations (or capacity growths) so
+    /// far. Steady-state kernel calls must not move this counter — the
+    /// arena-reuse tests assert exactly that.
+    pub fn alloc_events(&self) -> usize {
+        self.allocs.load(Ordering::Relaxed)
+    }
+
+    /// Check a buffer of `len` elements, every element set to `fill`,
+    /// out of the arena; return it with [`ExecCtx::put`] when done.
+    ///
+    /// Best-fit reuse: the smallest free buffer whose capacity already
+    /// holds `len`, else the largest available (which grows once and
+    /// then keeps its capacity). Best-fit keeps small requests from
+    /// stealing large buffers, so a warmed arena serves a repeating
+    /// workload with zero allocations in any take order.
+    pub fn take(&self, len: usize, fill: f32) -> Vec<f32> {
+        let mut buf = self.pick(len);
+        let before = buf.capacity();
+        buf.clear();
+        buf.resize(len, fill);
+        if buf.capacity() > before {
+            self.allocs.fetch_add(1, Ordering::Relaxed);
+        }
+        buf
+    }
+
+    /// [`ExecCtx::take`] without the refill: the buffer has `len`
+    /// elements of **unspecified** (stale) content. For scratch the
+    /// kernel fully overwrites before reading — column matrices, GEMM
+    /// pack buffers, row accumulators — this skips the memset that
+    /// [`ExecCtx::take`] pays on every checkout. Padded-input buffers
+    /// must keep using the filling variant.
+    pub fn take_unfilled(&self, len: usize) -> Vec<f32> {
+        let mut buf = self.pick(len);
+        let before = buf.capacity();
+        if buf.len() > len {
+            buf.truncate(len);
+        } else {
+            // Writes only the grown tail (nothing, when warm).
+            buf.resize(len, 0.0);
+        }
+        if buf.capacity() > before {
+            self.allocs.fetch_add(1, Ordering::Relaxed);
+        }
+        buf
+    }
+
+    /// Best-fit pick from the arena (or an empty vec when none fits).
+    fn pick(&self, len: usize) -> Vec<f32> {
+        let mut arena = self.arena.lock().unwrap();
+        let pick = (0..arena.len())
+            .filter(|&i| arena[i].capacity() >= len)
+            .min_by_key(|&i| arena[i].capacity())
+            .or_else(|| (0..arena.len()).max_by_key(|&i| arena[i].capacity()));
+        match pick {
+            Some(i) => arena.swap_remove(i),
+            None => Vec::new(),
+        }
+    }
+
+    /// Return a buffer taken with [`ExecCtx::take`] /
+    /// [`ExecCtx::take_unfilled`] to the arena.
+    pub fn put(&self, buf: Vec<f32>) {
+        self.arena.lock().unwrap().push(buf);
+    }
+
+    /// Drop cached buffers (largest first) until the arena holds at most
+    /// `max_floats` elements of capacity. Bounds the high-water-mark
+    /// memory a long-lived context retains; the legacy no-ctx entry
+    /// points trim their shared per-thread context after every call.
+    pub fn trim(&self, max_floats: usize) {
+        let mut arena = self.arena.lock().unwrap();
+        arena.sort_by_key(Vec::capacity);
+        let mut total: usize = arena.iter().map(Vec::capacity).sum();
+        while total > max_floats {
+            match arena.pop() {
+                Some(b) => total -= b.capacity(),
+                None => break,
+            }
+        }
+    }
+
+    /// Run `body(item_index, item_slice)` for every `chunk`-sized item
+    /// of `data`, fanning contiguous item ranges out over the ctx's
+    /// worker threads.
+    ///
+    /// Every kernel's parallel loop is this call: `data` is the output
+    /// tensor's storage, one item is one independently-computable unit
+    /// (an output plane for 2-D kernels, an output row for 1-D, a group
+    /// block for im2col+GEMM). Results are bit-identical for any thread
+    /// count because the per-item computation never depends on the
+    /// partition.
+    ///
+    /// # Panics
+    /// If `chunk` is zero or does not divide `data.len()`.
+    pub fn par_chunks(
+        &self,
+        data: &mut [f32],
+        chunk: usize,
+        body: impl Fn(usize, &mut [f32]) + Sync,
+    ) {
+        self.par_chunks_with(data, chunk, || (), |i, c, _s| body(i, c), |_s| {});
+    }
+
+    /// [`ExecCtx::par_chunks`] with worker-local state: each worker runs
+    /// `init()` once before its items, threads the state `&mut` through
+    /// `body`, and hands it to `fini` when its range is done.
+    ///
+    /// Kernels use the state for their scratch buffers (`init` takes
+    /// from the arena, `fini` puts back), so a worker checks scratch out
+    /// **once per parallel region**, not once per item — the number of
+    /// live buffers equals the worker count, which keeps steady-state
+    /// arena traffic deterministic and allocation-free.
+    ///
+    /// # Panics
+    /// If `chunk` is zero or does not divide `data.len()`.
+    pub fn par_chunks_with<S>(
+        &self,
+        data: &mut [f32],
+        chunk: usize,
+        init: impl Fn() -> S + Sync,
+        body: impl Fn(usize, &mut [f32], &mut S) + Sync,
+        fini: impl Fn(S) + Sync,
+    ) {
+        assert!(chunk > 0, "par_chunks needs a positive chunk size");
+        assert_eq!(data.len() % chunk, 0, "data not a whole number of chunks");
+        let items = data.len() / chunk;
+        let workers = self.threads.min(items);
+        if workers <= 1 {
+            if items == 0 {
+                return;
+            }
+            let mut state = init();
+            for (i, c) in data.chunks_mut(chunk).enumerate() {
+                body(i, c, &mut state);
+            }
+            fini(state);
+            return;
+        }
+        // Contiguous balanced partition: first `rem` workers take one
+        // extra item. Worker w's range starts where w-1's ended, so the
+        // split points are pure arithmetic.
+        let base = items / workers;
+        let rem = items % workers;
+        let init = &init;
+        let body = &body;
+        let fini = &fini;
+        std::thread::scope(|s| {
+            let mut rest = data;
+            let mut start = 0usize;
+            for w in 0..workers {
+                let count = base + usize::from(w < rem);
+                let (mine, tail) = rest.split_at_mut(count * chunk);
+                rest = tail;
+                let first = start;
+                start += count;
+                let run = move || {
+                    // State never crosses threads: created, used and
+                    // finalised on this worker (no `Send` bound on S).
+                    let mut state = init();
+                    for (j, c) in mine.chunks_mut(chunk).enumerate() {
+                        body(first + j, c, &mut state);
+                    }
+                    fini(state);
+                };
+                if w + 1 == workers {
+                    // Run the last range on the calling thread: one fewer
+                    // spawn, and the scope still joins the rest.
+                    run();
+                } else {
+                    s.spawn(run);
+                }
+            }
+        });
+    }
+}
+
+/// The number of hardware threads "use all threads" means, everywhere:
+/// [`ExecCtx::auto`], the CLI's `--threads 0`, and the benches' multi-core
+/// series all route through this one policy (1 when the machine won't say).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}
+
+thread_local! {
+    static THREAD_CTX: RefCell<ExecCtx> = RefCell::new(ExecCtx::new(ConvAlgo::Sliding));
+}
+
+/// Run `f` against this thread's shared single-threaded context, with its
+/// algorithm set to `algo`.
+///
+/// The legacy no-ctx kernel entry points (`conv2d`, `max_pool2d`, …)
+/// route here, so repeated calls on one thread reuse padded/column/pack
+/// scratch across calls instead of re-allocating per call. Re-entrant
+/// use (a legacy call from inside another's `f`) falls back to a fresh
+/// throwaway context rather than aliasing the shared one.
+pub fn with_thread_ctx<R>(algo: ConvAlgo, f: impl FnOnce(&ExecCtx) -> R) -> R {
+    /// Retention cap for the shared per-thread arena, in f32 elements
+    /// (16 MiB): keeps the common scratch (column matrices, pack
+    /// buffers, row accumulators) warm across legacy calls while one
+    /// huge padded input can't stay pinned for the thread's lifetime.
+    const LEGACY_ARENA_CAP: usize = 4 << 20;
+    THREAD_CTX.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut ctx) => {
+            ctx.algo = algo;
+            let r = f(&ctx);
+            ctx.trim(LEGACY_ARENA_CAP);
+            r
+        }
+        Err(_) => f(&ExecCtx::new(algo)),
+    })
+}
+
+impl Default for ExecCtx {
+    fn default() -> Self {
+        ExecCtx::new(ConvAlgo::Sliding)
+    }
+}
+
+impl Clone for ExecCtx {
+    /// Clones algorithm + thread count with a fresh (empty) arena: the
+    /// arena is a cache, not state.
+    fn clone(&self) -> Self {
+        ExecCtx::with_threads(self.algo, self.threads)
+    }
+}
+
+impl fmt::Debug for ExecCtx {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ExecCtx")
+            .field("algo", &self.algo)
+            .field("threads", &self.threads)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_reuses_capacity() {
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let b = ctx.take(100, 1.5);
+        assert_eq!(b.len(), 100);
+        assert!(b.iter().all(|&v| v == 1.5));
+        assert_eq!(ctx.alloc_events(), 1);
+        ctx.put(b);
+        // Same-size re-take: no new allocation, fully refilled.
+        let b = ctx.take(64, -2.0);
+        assert!(b.iter().all(|&v| v == -2.0));
+        assert_eq!(ctx.alloc_events(), 1);
+        ctx.put(b);
+        // Growth is an alloc event.
+        let b = ctx.take(10_000, 0.0);
+        assert_eq!(ctx.alloc_events(), 2);
+        ctx.put(b);
+    }
+
+    #[test]
+    fn par_chunks_covers_every_item_once() {
+        for threads in [1usize, 2, 3, 8] {
+            let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads);
+            let mut data = vec![0.0f32; 7 * 3];
+            ctx.par_chunks(&mut data, 3, |i, c| {
+                for v in c.iter_mut() {
+                    *v += 1.0 + i as f32;
+                }
+            });
+            for i in 0..7 {
+                assert!(
+                    data[i * 3..(i + 1) * 3].iter().all(|&v| v == 1.0 + i as f32),
+                    "threads={threads} item {i}: {data:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_more_threads_than_items() {
+        let ctx = ExecCtx::with_threads(ConvAlgo::Direct, 16);
+        let mut data = vec![0.0f32; 2 * 5];
+        ctx.par_chunks(&mut data, 5, |i, c| c.fill(i as f32));
+        assert!(data[..5].iter().all(|&v| v == 0.0));
+        assert!(data[5..].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn par_chunks_empty_is_noop() {
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 4);
+        let mut data: Vec<f32> = Vec::new();
+        ctx.par_chunks(&mut data, 4, |_, _| panic!("no items"));
+    }
+
+    #[test]
+    fn workers_can_draw_scratch_concurrently() {
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 4);
+        let mut data = vec![0.0f32; 32];
+        ctx.par_chunks(&mut data, 1, |i, c| {
+            let mut s = ctx.take(16, i as f32);
+            s[0] += 1.0;
+            c[0] = s[0];
+            ctx.put(s);
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as f32 + 1.0);
+        }
+    }
+
+    #[test]
+    fn clone_keeps_config_fresh_arena() {
+        let ctx = ExecCtx::with_threads(ConvAlgo::Im2colGemm, 3);
+        let b = ctx.take(8, 0.0);
+        ctx.put(b);
+        let c2 = ctx.clone();
+        assert_eq!(c2.algo, ConvAlgo::Im2colGemm);
+        assert_eq!(c2.threads(), 3);
+        assert_eq!(c2.alloc_events(), 0);
+    }
+
+    #[test]
+    fn debug_is_compact() {
+        let s = format!("{:?}", ExecCtx::with_threads(ConvAlgo::Sliding, 2));
+        assert!(s.contains("Sliding") && s.contains("2"));
+    }
+
+    #[test]
+    fn thread_ctx_reuses_scratch_across_legacy_calls() {
+        // Each test runs on its own thread, so THREAD_CTX starts fresh.
+        let before = with_thread_ctx(ConvAlgo::Direct, |ctx| {
+            let b = ctx.take(128, 0.0);
+            ctx.put(b);
+            ctx.alloc_events()
+        });
+        let after = with_thread_ctx(ConvAlgo::Sliding, |ctx| {
+            assert_eq!(ctx.algo, ConvAlgo::Sliding);
+            let b = ctx.take(64, 0.0);
+            ctx.put(b);
+            ctx.alloc_events()
+        });
+        assert_eq!(after, before, "second legacy call must reuse scratch");
+    }
+
+    #[test]
+    fn thread_ctx_reentrant_falls_back_to_fresh_ctx() {
+        with_thread_ctx(ConvAlgo::Direct, |outer| {
+            with_thread_ctx(ConvAlgo::Sliding, |inner| {
+                assert_eq!(inner.algo, ConvAlgo::Sliding);
+                assert_eq!(outer.algo, ConvAlgo::Direct);
+            });
+        });
+    }
+}

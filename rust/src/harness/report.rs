@@ -84,6 +84,48 @@ impl Table {
     }
 }
 
+/// One machine-readable benchmark measurement (the `BENCH_*.json`
+/// schema): which figure, which algorithm, which workload shape, how many
+/// threads, how long per iteration and the resulting throughput.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    /// Figure/series id, e.g. `"fig1"`.
+    pub bench: String,
+    /// Algorithm name (a [`crate::kernels::ConvAlgo::name`] string).
+    pub algo: String,
+    /// Workload id, e.g. `c4_64x64_k5` (see `ConvCase::id`).
+    pub shape: String,
+    /// Worker threads the kernel ran with.
+    pub threads: usize,
+    /// Median time per iteration, nanoseconds.
+    pub ns_per_iter: f64,
+    /// Arithmetic throughput, GFLOP/s.
+    pub gflops: f64,
+}
+
+/// Write benchmark records as a JSON array (one object per record) so
+/// the perf trajectory can be tracked across PRs by any tooling. All
+/// field values are program-generated identifiers, so no string escaping
+/// is needed.
+pub fn write_bench_json(path: impl AsRef<Path>, records: &[BenchRecord]) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "[")?;
+    for (i, r) in records.iter().enumerate() {
+        let sep = if i + 1 == records.len() { "" } else { "," };
+        writeln!(
+            f,
+            "  {{\"bench\": \"{}\", \"algo\": \"{}\", \"shape\": \"{}\", \
+             \"threads\": {}, \"ns_per_iter\": {:.1}, \"gflops\": {:.4}}}{sep}",
+            r.bench, r.algo, r.shape, r.threads, r.ns_per_iter, r.gflops
+        )?;
+    }
+    writeln!(f, "]")?;
+    Ok(())
+}
+
 /// Format a float with 3 significant decimals for table cells.
 pub fn f3(v: f64) -> String {
     format!("{v:.3}")
@@ -131,6 +173,40 @@ mod tests {
         t.write_csv(&p).unwrap();
         let s = std::fs::read_to_string(&p).unwrap();
         assert_eq!(s, "a,b\n1,2\n");
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn bench_json_roundtrips_through_parser() {
+        let recs = vec![
+            BenchRecord {
+                bench: "fig1".into(),
+                algo: "sliding".into(),
+                shape: "c4_64x64_k5".into(),
+                threads: 2,
+                ns_per_iter: 1234.5,
+                gflops: 3.21,
+            },
+            BenchRecord {
+                bench: "fig1".into(),
+                algo: "gemm".into(),
+                shape: "c4_64x64_k5".into(),
+                threads: 1,
+                ns_per_iter: 2000.0,
+                gflops: 1.5,
+            },
+        ];
+        let p = std::env::temp_dir().join("swconv_test_bench.json");
+        write_bench_json(&p, &recs).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let j = crate::runtime::json::Json::parse(&text).expect("valid JSON");
+        let arr = match &j {
+            crate::runtime::json::Json::Arr(a) => a,
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("algo").and_then(|v| v.as_str()), Some("sliding"));
+        assert_eq!(arr[1].get("threads").and_then(|v| v.as_usize()), Some(1));
         let _ = std::fs::remove_file(p);
     }
 

@@ -10,7 +10,8 @@
 use super::roofline::machine_peaks;
 use super::timing::{bench_quick, Stats};
 use super::workload::ConvCase;
-use crate::kernels::{conv2d, ConvAlgo};
+use crate::exec::ExecCtx;
+use crate::kernels::{conv2d_ctx, ConvAlgo};
 use crate::tensor::Tensor;
 
 /// One Fig. 1 data point.
@@ -18,6 +19,8 @@ use crate::tensor::Tensor;
 pub struct Fig1Row {
     /// Filter size `k`.
     pub k: usize,
+    /// Worker threads every kernel ran with.
+    pub threads: usize,
     /// GEMM baseline time (seconds).
     pub t_gemm: f64,
     /// Sliding (auto policy) time.
@@ -37,6 +40,8 @@ pub struct Fig1Row {
 pub struct Fig2Row {
     /// Filter size `k`.
     pub k: usize,
+    /// Worker threads every kernel ran with.
+    pub threads: usize,
     /// Sliding kernel throughput, GFLOP/s.
     pub sliding_gflops: f64,
     /// GEMM kernel throughput, GFLOP/s.
@@ -49,11 +54,20 @@ pub struct Fig2Row {
     pub peak: f64,
 }
 
-fn time_algo(case: &ConvCase, x: &Tensor, w: &Tensor, algo: ConvAlgo) -> Option<Stats> {
+fn time_algo(
+    case: &ConvCase,
+    x: &Tensor,
+    w: &Tensor,
+    algo: ConvAlgo,
+    threads: usize,
+) -> Option<Stats> {
     if !algo.supports_width(case.k) {
         return None;
     }
-    Some(bench_quick(|| conv2d(x, w, None, &case.params, algo)))
+    // One ctx per series: scratch buffers are warmed by the bench's
+    // calibration runs, so the timed iterations are allocation-free.
+    let ctx = ExecCtx::with_threads(algo, threads);
+    Some(bench_quick(|| conv2d_ctx(x, w, None, &case.params, &ctx)))
 }
 
 /// Which row kernel the auto policy picks for width `k` (paper §2).
@@ -65,12 +79,15 @@ pub fn auto_kernel_name(k: usize) -> &'static str {
     }
 }
 
-/// Run the Fig. 1 sweep over the given filter sizes.
+/// Run the Fig. 1 sweep over the given filter sizes with `threads`
+/// worker threads per kernel (1 reproduces the paper's single-core
+/// setup; more lets Fig. 1 report multi-core speedups).
 ///
 /// `make_case` maps a filter size to a workload (use
 /// `ConvCase::square(c, hw, k)` for the paper's setup).
 pub fn fig1_speedup_sweep(
     ks: &[usize],
+    threads: usize,
     make_case: impl Fn(usize) -> ConvCase,
 ) -> Vec<Fig1Row> {
     let mut rows = Vec::with_capacity(ks.len());
@@ -78,12 +95,15 @@ pub fn fig1_speedup_sweep(
         let case = make_case(k);
         let x = case.input();
         let w = case.weights();
-        let t_gemm = time_algo(&case, &x, &w, ConvAlgo::Im2colGemm).unwrap().secs();
-        let t_sliding = time_algo(&case, &x, &w, ConvAlgo::Sliding).unwrap().secs();
-        let t_generic = time_algo(&case, &x, &w, ConvAlgo::SlidingGeneric).map(|s| s.secs());
-        let t_compound = time_algo(&case, &x, &w, ConvAlgo::SlidingCompound).map(|s| s.secs());
+        let t_gemm = time_algo(&case, &x, &w, ConvAlgo::Im2colGemm, threads).unwrap().secs();
+        let t_sliding = time_algo(&case, &x, &w, ConvAlgo::Sliding, threads).unwrap().secs();
+        let t_generic =
+            time_algo(&case, &x, &w, ConvAlgo::SlidingGeneric, threads).map(|s| s.secs());
+        let t_compound =
+            time_algo(&case, &x, &w, ConvAlgo::SlidingCompound, threads).map(|s| s.secs());
         rows.push(Fig1Row {
             k,
+            threads,
             t_gemm,
             t_sliding,
             t_generic,
@@ -95,9 +115,11 @@ pub fn fig1_speedup_sweep(
     rows
 }
 
-/// Run the Fig. 2 sweep over the given filter sizes.
+/// Run the Fig. 2 sweep over the given filter sizes with `threads`
+/// worker threads per kernel.
 pub fn fig2_throughput_sweep(
     ks: &[usize],
+    threads: usize,
     make_case: impl Fn(usize) -> ConvCase,
 ) -> Vec<Fig2Row> {
     let peaks = machine_peaks();
@@ -107,10 +129,13 @@ pub fn fig2_throughput_sweep(
         let x = case.input();
         let w = case.weights();
         let flops = case.flops();
-        let sliding = time_algo(&case, &x, &w, ConvAlgo::Sliding).unwrap().gflops(flops);
-        let gemm = time_algo(&case, &x, &w, ConvAlgo::Im2colGemm).unwrap().gflops(flops);
+        let sliding =
+            time_algo(&case, &x, &w, ConvAlgo::Sliding, threads).unwrap().gflops(flops);
+        let gemm =
+            time_algo(&case, &x, &w, ConvAlgo::Im2colGemm, threads).unwrap().gflops(flops);
         rows.push(Fig2Row {
             k,
+            threads,
             sliding_gflops: sliding,
             gemm_gflops: gemm,
             sliding_roof: peaks.attainable(case.intensity(case.sliding_bytes())),
@@ -147,14 +172,16 @@ mod tests {
     fn sweeps_produce_rows() {
         // Tiny geometry so the test is fast even in debug builds.
         let ks = [3, 18];
-        let rows = fig1_speedup_sweep(&ks, |k| ConvCase::square(1, 32, k));
+        let rows = fig1_speedup_sweep(&ks, 1, |k| ConvCase::square(1, 32, k));
         assert_eq!(rows.len(), 2);
         assert!(rows[0].t_gemm > 0.0 && rows[0].t_sliding > 0.0);
         assert!(rows[0].t_generic.is_some());
         assert!(rows[1].t_generic.is_none(), "k=18 exceeds generic");
-        let rows2 = fig2_throughput_sweep(&[3], |k| ConvCase::square(1, 32, k));
+        assert_eq!(rows[0].threads, 1);
+        let rows2 = fig2_throughput_sweep(&[3], 2, |k| ConvCase::square(1, 32, k));
         assert!(rows2[0].sliding_gflops > 0.0);
         assert!(rows2[0].peak >= rows2[0].sliding_roof * 0.99);
+        assert_eq!(rows2[0].threads, 2);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! same as the naïve or GEMM-based algorithms").
 
 use super::{Conv1dParams, Conv2dParams};
+use crate::exec::ExecCtx;
 use crate::tensor::Tensor;
 
 /// Direct 2-D convolution (cross-correlation, DNN convention).
@@ -27,6 +28,20 @@ pub fn conv2d_direct(
     bias: Option<&[f32]>,
     p: &Conv2dParams,
 ) -> Tensor {
+    crate::exec::with_thread_ctx(crate::kernels::ConvAlgo::Direct, |ctx| {
+        conv2d_direct_ctx(x, w, bias, p, ctx)
+    })
+}
+
+/// [`conv2d_direct`] with an execution context: output planes `(n, c_out)`
+/// are independent work items fanned out over the ctx's threads.
+pub fn conv2d_direct_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
     assert_eq!(x.rank(), 4, "input must be NCHW");
     assert_eq!(w.rank(), 4, "weights must be [cout, cin/g, kh, kw]");
     let (n, c_in, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
@@ -42,35 +57,34 @@ pub fn conv2d_direct(
     let (ph, pw) = p.pad;
 
     let mut out = Tensor::zeros(&[n, c_out, oh, ow]);
-    for ni in 0..n {
-        for co in 0..c_out {
-            let grp = co / (c_out / g);
-            let b = bias.map_or(0.0, |b| b[co]);
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut acc = b;
-                    for cig in 0..c_in_g {
-                        let ci = grp * c_in_g + cig;
-                        for ky in 0..kh {
-                            let iy = oy * sh + ky;
-                            if iy < ph || iy >= h + ph {
+    ctx.par_chunks(out.as_mut_slice(), oh * ow, |item, oplane| {
+        let (ni, co) = (item / c_out, item % c_out);
+        let grp = co / (c_out / g);
+        let b = bias.map_or(0.0, |b| b[co]);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = b;
+                for cig in 0..c_in_g {
+                    let ci = grp * c_in_g + cig;
+                    for ky in 0..kh {
+                        let iy = oy * sh + ky;
+                        if iy < ph || iy >= h + ph {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = ox * sw + kx;
+                            if ix < pw || ix >= win + pw {
                                 continue;
                             }
-                            for kx in 0..kw {
-                                let ix = ox * sw + kx;
-                                if ix < pw || ix >= win + pw {
-                                    continue;
-                                }
-                                acc += x.at4(ni, ci, iy - ph, ix - pw)
-                                    * w.at4(co, cig, ky, kx);
-                            }
+                            acc += x.at4(ni, ci, iy - ph, ix - pw)
+                                * w.at4(co, cig, ky, kx);
                         }
                     }
-                    *out.at4_mut(ni, co, oy, ox) = acc;
                 }
+                oplane[oy * ow + ox] = acc;
             }
         }
-    }
+    });
     out
 }
 
@@ -86,6 +100,20 @@ pub fn conv1d_direct(
     bias: Option<&[f32]>,
     p: &Conv1dParams,
 ) -> Tensor {
+    crate::exec::with_thread_ctx(crate::kernels::ConvAlgo::Direct, |ctx| {
+        conv1d_direct_ctx(x, w, bias, p, ctx)
+    })
+}
+
+/// [`conv1d_direct`] with an execution context: output rows are
+/// independent work items fanned out over the ctx's threads.
+pub fn conv1d_direct_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
     assert_eq!(x.rank(), 2, "input must be [c, l]");
     assert_eq!(w.rank(), 3, "weights must be [cout, cin, k]");
     let (c_in, l) = (x.dim(0), x.dim(1));
@@ -96,9 +124,9 @@ pub fn conv1d_direct(
     let xs = x.as_slice();
     let ws = w.as_slice();
     let mut out = Tensor::zeros(&[c_out, lo]);
-    for co in 0..c_out {
+    ctx.par_chunks(out.as_mut_slice(), lo, |co, orow| {
         let b = bias.map_or(0.0, |b| b[co]);
-        for o in 0..lo {
+        for (o, ov) in orow.iter_mut().enumerate() {
             let mut acc = b;
             for ci in 0..c_in {
                 for j in 0..k {
@@ -109,9 +137,9 @@ pub fn conv1d_direct(
                     acc += xs[ci * l + i - p.pad] * ws[(co * c_in + ci) * k + j];
                 }
             }
-            out.as_mut_slice()[co * lo + o] = acc;
+            *ov = acc;
         }
-    }
+    });
     out
 }
 

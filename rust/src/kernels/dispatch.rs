@@ -2,11 +2,12 @@
 //! [`ConvAlgo`] so callers (layers, benchmarks, the coordinator's router)
 //! can pit implementations against each other on identical inputs.
 
-use super::direct::{conv1d_direct, conv2d_direct};
-use super::im2col::conv2d_im2col;
-use super::sliding1d::conv1d_sliding;
-use super::sliding2d::{conv2d_sliding, SlideVariant};
+use super::direct::{conv1d_direct_ctx, conv2d_direct_ctx};
+use super::im2col::conv2d_im2col_ctx;
+use super::sliding1d::conv1d_sliding_ctx;
+use super::sliding2d::{conv2d_sliding_ctx, SlideVariant};
 use super::{Conv1dParams, Conv2dParams};
+use crate::exec::ExecCtx;
 use crate::tensor::Tensor;
 
 /// Which convolution implementation to run.
@@ -65,6 +66,10 @@ impl ConvAlgo {
 ///
 /// * `x` — `[n, c_in, h, w]`, `w` — `[c_out, c_in/groups, kh, kw]`,
 ///   `bias` — optional `[c_out]`. Returns `[n, c_out, oh, ow]`.
+///
+/// Single-threaded convenience wrapper over [`conv2d_ctx`]: runs on the
+/// thread's shared context ([`crate::exec::with_thread_ctx`]), so
+/// repeated calls still reuse scratch buffers across calls.
 pub fn conv2d(
     x: &Tensor,
     w: &Tensor,
@@ -72,17 +77,36 @@ pub fn conv2d(
     p: &Conv2dParams,
     algo: ConvAlgo,
 ) -> Tensor {
-    match algo {
-        ConvAlgo::Direct => conv2d_direct(x, w, bias, p),
-        ConvAlgo::Im2colGemm => conv2d_im2col(x, w, bias, p),
-        ConvAlgo::Sliding => conv2d_sliding(x, w, bias, p, SlideVariant::Auto),
-        ConvAlgo::SlidingGeneric => conv2d_sliding(x, w, bias, p, SlideVariant::Generic),
-        ConvAlgo::SlidingCompound => conv2d_sliding(x, w, bias, p, SlideVariant::Compound),
+    crate::exec::with_thread_ctx(algo, |ctx| conv2d_ctx(x, w, bias, p, ctx))
+}
+
+/// 2-D convolution with the algorithm, thread count and scratch arena of
+/// the given execution context.
+pub fn conv2d_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
+    match ctx.algo {
+        ConvAlgo::Direct => conv2d_direct_ctx(x, w, bias, p, ctx),
+        ConvAlgo::Im2colGemm => conv2d_im2col_ctx(x, w, bias, p, ctx),
+        ConvAlgo::Sliding => conv2d_sliding_ctx(x, w, bias, p, SlideVariant::Auto, ctx),
+        ConvAlgo::SlidingGeneric => {
+            conv2d_sliding_ctx(x, w, bias, p, SlideVariant::Generic, ctx)
+        }
+        ConvAlgo::SlidingCompound => {
+            conv2d_sliding_ctx(x, w, bias, p, SlideVariant::Compound, ctx)
+        }
     }
 }
 
 /// 1-D convolution with the chosen algorithm (`Im2colGemm` and the forced
 /// sliding variants collapse to their natural 1-D counterparts).
+///
+/// Single-threaded convenience wrapper around [`conv1d_ctx`] on the
+/// thread's shared context (scratch reused across calls).
 pub fn conv1d(
     x: &Tensor,
     w: &Tensor,
@@ -90,8 +114,20 @@ pub fn conv1d(
     p: &Conv1dParams,
     algo: ConvAlgo,
 ) -> Tensor {
-    match algo {
-        ConvAlgo::Direct => conv1d_direct(x, w, bias, p),
+    crate::exec::with_thread_ctx(algo, |ctx| conv1d_ctx(x, w, bias, p, ctx))
+}
+
+/// 1-D convolution with the algorithm, thread count and scratch arena of
+/// the given execution context.
+pub fn conv1d_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
+    match ctx.algo {
+        ConvAlgo::Direct => conv1d_direct_ctx(x, w, bias, p, ctx),
         // A 1-D convolution is a 2-D one with kh = 1: reuse the kernels.
         ConvAlgo::Im2colGemm => {
             let (c_in, l) = (x.dim(0), x.dim(1));
@@ -99,11 +135,11 @@ pub fn conv1d(
             let x4 = x.clone().reshape(&[1, c_in, 1, l]);
             let w4 = w.clone().reshape(&[c_out, c_in, 1, k]);
             let p4 = Conv2dParams { stride: (1, p.stride), pad: (0, p.pad), groups: 1 };
-            let y = conv2d_im2col(&x4, &w4, bias, &p4);
+            let y = conv2d_im2col_ctx(&x4, &w4, bias, &p4, ctx);
             let lo = y.dim(3);
             y.reshape(&[c_out, lo])
         }
-        _ => conv1d_sliding(x, w, bias, p),
+        _ => conv1d_sliding_ctx(x, w, bias, p, ctx),
     }
 }
 

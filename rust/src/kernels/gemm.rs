@@ -14,7 +14,9 @@
 //!
 //! Loop order: `kc` (K blocking) → `mc` (M blocking) → `jr` (NR panels) →
 //! `ir` (MR strips) → micro-kernel. Packing buffers are reused across
-//! calls via thread-locals to keep allocation off the hot path.
+//! calls — via thread-locals in [`sgemm`], or caller-provided (arena)
+//! scratch in [`sgemm_with_scratch`] — to keep allocation off the hot
+//! path.
 
 use crate::simd::{F32xL, LANES};
 use std::cell::RefCell;
@@ -33,14 +35,47 @@ thread_local! {
     static PACK_B: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
 }
 
+/// Packing-buffer length for `A` strips (independent of the problem size).
+pub fn pack_a_len() -> usize {
+    MC.div_ceil(MR) * MR * KC
+}
+
+/// Packing-buffer length for `B` panels of an `N`-column GEMM.
+pub fn pack_b_len(n: usize) -> usize {
+    n.div_ceil(NR) * NR * KC
+}
+
 /// `C += A · B` for row-major `A[M×K]`, `B[K×N]`, `C[M×N]`.
 ///
 /// `C` must be pre-initialised (zeros for a plain product); the routine
-/// accumulates into it.
+/// accumulates into it. Packing scratch comes from thread-locals; hot
+/// paths that spawn short-lived worker threads (the `exec` subsystem)
+/// call [`sgemm_with_scratch`] with arena buffers instead, so packing
+/// never re-allocates per parallel region.
 ///
 /// # Panics
 /// If any slice is shorter than its shape requires.
 pub fn sgemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    PACK_A.with(|pa| {
+        PACK_B.with(|pb| {
+            sgemm_with_scratch(m, k, n, a, b, c, &mut pa.borrow_mut(), &mut pb.borrow_mut())
+        })
+    });
+}
+
+/// [`sgemm`] with caller-provided packing scratch (resized as needed to
+/// [`pack_a_len`] / [`pack_b_len`] elements).
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_with_scratch(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    pa: &mut Vec<f32>,
+    pb: &mut Vec<f32>,
+) {
     assert!(a.len() >= m * k, "A too short");
     assert!(b.len() >= k * n, "B too short");
     assert!(c.len() >= m * n, "C too short");
@@ -48,48 +83,42 @@ pub fn sgemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) 
         return;
     }
 
-    PACK_A.with(|pa| {
-        PACK_B.with(|pb| {
-            let mut pa = pa.borrow_mut();
-            let mut pb = pb.borrow_mut();
-            let n_panels = n.div_ceil(NR);
-            pa.resize(MC.div_ceil(MR) * MR * KC, 0.0);
-            pb.resize(n_panels * NR * KC, 0.0);
+    let n_panels = n.div_ceil(NR);
+    pa.resize(pack_a_len(), 0.0);
+    pb.resize(pack_b_len(n), 0.0);
 
-            let mut kb = 0;
-            while kb < k {
-                let kc = KC.min(k - kb);
-                pack_b(&mut pb, b, kb, kc, n);
-                let mut mb = 0;
-                while mb < m {
-                    let mc = MC.min(m - mb);
-                    pack_a(&mut pa, a, mb, mc, kb, kc, k);
-                    // Panels of C.
-                    for jp in 0..n_panels {
-                        let j0 = jp * NR;
-                        let nr = NR.min(n - j0);
-                        for ip in 0..mc.div_ceil(MR) {
-                            let i0 = mb + ip * MR;
-                            let mr = MR.min(m - i0);
-                            micro_kernel(
-                                kc,
-                                &pa[ip * MR * KC..],
-                                &pb[jp * NR * KC..],
-                                c,
-                                i0,
-                                j0,
-                                mr,
-                                nr,
-                                n,
-                            );
-                        }
-                    }
-                    mb += mc;
+    let mut kb = 0;
+    while kb < k {
+        let kc = KC.min(k - kb);
+        pack_b(pb, b, kb, kc, n);
+        let mut mb = 0;
+        while mb < m {
+            let mc = MC.min(m - mb);
+            pack_a(pa, a, mb, mc, kb, kc, k);
+            // Panels of C.
+            for jp in 0..n_panels {
+                let j0 = jp * NR;
+                let nr = NR.min(n - j0);
+                for ip in 0..mc.div_ceil(MR) {
+                    let i0 = mb + ip * MR;
+                    let mr = MR.min(m - i0);
+                    micro_kernel(
+                        kc,
+                        &pa[ip * MR * KC..],
+                        &pb[jp * NR * KC..],
+                        c,
+                        i0,
+                        j0,
+                        mr,
+                        nr,
+                        n,
+                    );
                 }
-                kb += kc;
             }
-        })
-    });
+            mb += mc;
+        }
+        kb += kc;
+    }
 }
 
 /// Pack `B[kb..kb+kc, :]` into `NR`-wide column panels, p-major inside a

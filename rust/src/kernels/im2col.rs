@@ -9,14 +9,10 @@
 //! memory traffic. [`im2col_bytes`] reports the bloat so the benchmark
 //! harness can plot it.
 
-use super::gemm::sgemm;
+use super::gemm::{pack_a_len, pack_b_len, sgemm_with_scratch};
 use super::Conv2dParams;
+use crate::exec::ExecCtx;
 use crate::tensor::Tensor;
-use std::cell::RefCell;
-
-thread_local! {
-    static COL_BUF: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
-}
 
 /// Size in bytes of the column matrix `im2col` materialises for one image
 /// of one group — the paper's memory-bloat metric.
@@ -94,6 +90,22 @@ pub fn conv2d_im2col(
     bias: Option<&[f32]>,
     p: &Conv2dParams,
 ) -> Tensor {
+    crate::exec::with_thread_ctx(crate::kernels::ConvAlgo::Im2colGemm, |ctx| {
+        conv2d_im2col_ctx(x, w, bias, p, ctx)
+    })
+}
+
+/// [`conv2d_im2col`] with an execution context: each `(image, group)` is
+/// one work item — its column matrix comes from the ctx's scratch arena
+/// and its GEMM writes a contiguous `[c_out/g, oh·ow]` output block, so
+/// items fan out over the ctx's threads with no shared mutable state.
+pub fn conv2d_im2col_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
     assert_eq!(x.rank(), 4);
     assert_eq!(w.rank(), 4);
     let (n, c_in, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
@@ -101,41 +113,57 @@ pub fn conv2d_im2col(
     let g = p.groups;
     assert!(g >= 1 && c_in % g == 0 && c_out % g == 0, "bad groups {g}");
     assert_eq!(c_in / g, c_in_g);
+    if let Some(b) = bias {
+        assert_eq!(b.len(), c_out);
+    }
     let (oh, ow) = p.out_size(h, win, kh, kw);
     let (c_out_g, ohw) = (c_out / g, oh * ow);
     let kdim = c_in_g * kh * kw;
 
     let mut out = Tensor::zeros(&[n, c_out, oh, ow]);
-    COL_BUF.with(|cb| {
-        let mut col = cb.borrow_mut();
-        col.resize(kdim * ohw, 0.0);
-        for ni in 0..n {
-            for grp in 0..g {
-                im2col_plane(x, ni, grp * c_in_g, c_in_g, kh, kw, p, oh, ow, &mut col);
-                // Weight block for this group is contiguous:
-                // rows [grp*c_out_g .. (grp+1)*c_out_g) of the flattened
-                // [c_out, kdim] weight matrix.
-                let wmat = &w.as_slice()[grp * c_out_g * kdim..(grp + 1) * c_out_g * kdim];
-                let co0 = grp * c_out_g;
-                // C is the [c_out_g, ohw] block of the output planes,
-                // which is contiguous in NCHW.
-                let start = out.offset4(ni, co0, 0, 0);
-                let cblk = &mut out.as_mut_slice()[start..start + c_out_g * ohw];
-                sgemm(c_out_g, kdim, ohw, wmat, &col, cblk);
-            }
-        }
-    });
-    if let Some(b) = bias {
-        assert_eq!(b.len(), c_out);
-        for ni in 0..n {
-            for co in 0..c_out {
-                let bv = b[co];
-                for v in out.plane_mut(ni, co) {
-                    *v += bv;
+    let ws = w.as_slice();
+    // One work item per (image, group): the output block
+    // [ni, grp*c_out_g .. (grp+1)*c_out_g) is contiguous in NCHW, so
+    // item index ni*g + grp maps straight onto chunked output storage.
+    // Per-worker scratch (column matrix + GEMM packing buffers): one
+    // arena checkout per parallel region (im2col_plane and the packers
+    // overwrite every element they read, so reuse across items is safe),
+    // keeping steady-state arena traffic allocation-free — including on
+    // freshly spawned worker threads, where sgemm's thread-locals would
+    // otherwise re-allocate every call.
+    ctx.par_chunks_with(
+        out.as_mut_slice(),
+        c_out_g * ohw,
+        || {
+            (
+                ctx.take_unfilled(kdim * ohw),
+                ctx.take_unfilled(pack_a_len()),
+                ctx.take_unfilled(pack_b_len(ohw)),
+            )
+        },
+        |item, cblk, (col, pa, pb)| {
+            let (ni, grp) = (item / g, item % g);
+            im2col_plane(x, ni, grp * c_in_g, c_in_g, kh, kw, p, oh, ow, col);
+            // Weight block for this group is contiguous:
+            // rows [grp*c_out_g .. (grp+1)*c_out_g) of the flattened
+            // [c_out, kdim] weight matrix.
+            let wmat = &ws[grp * c_out_g * kdim..(grp + 1) * c_out_g * kdim];
+            sgemm_with_scratch(c_out_g, kdim, ohw, wmat, col, cblk, pa, pb);
+            if let Some(b) = bias {
+                for cog in 0..c_out_g {
+                    let bv = b[grp * c_out_g + cog];
+                    for v in &mut cblk[cog * ohw..(cog + 1) * ohw] {
+                        *v += bv;
+                    }
                 }
             }
-        }
-    }
+        },
+        |(col, pa, pb)| {
+            ctx.put(col);
+            ctx.put(pa);
+            ctx.put(pb);
+        },
+    );
     out
 }
 

@@ -15,6 +15,14 @@
 //! functions re-exported from [`pool`]; each takes a [`ConvAlgo`] so the
 //! benchmark harness can pit implementations against each other on
 //! identical inputs.
+//!
+//! Every entry point also has a `*_ctx` variant ([`conv2d_ctx`],
+//! [`conv1d_ctx`], `conv2d_sliding_ctx`, `max_pool2d_ctx`, …) taking a
+//! [`crate::exec::ExecCtx`]: work items (independent output planes, rows
+//! or group blocks) fan out over the ctx's worker threads, and
+//! padded/scratch/column buffers come from its reusable arena instead of
+//! per-call `vec![0.0; …]`. The plain functions are single-threaded
+//! wrappers that build a throwaway ctx.
 
 pub mod direct;
 pub mod gemm;
@@ -25,8 +33,8 @@ pub mod sliding2d;
 pub mod pool;
 pub mod dispatch;
 
-pub use dispatch::{conv1d, conv2d, ConvAlgo};
-pub use pool::{avg_pool2d, max_pool2d, PoolParams};
+pub use dispatch::{conv1d, conv1d_ctx, conv2d, conv2d_ctx, ConvAlgo};
+pub use pool::{avg_pool2d, avg_pool2d_ctx, max_pool2d, max_pool2d_ctx, PoolParams};
 
 /// Hyper-parameters of a 2-D convolution (dilation fixed at 1, as in the
 /// paper).

@@ -10,8 +10,9 @@
 //! sum kernel and scales by `1/(kh·kw)` (padding counted, the ONNX
 //! `count_include_pad` convention).
 
+use crate::exec::ExecCtx;
 use crate::simd::{slide_dyn, F32xL, LANES};
-use crate::tensor::{pad2d, Tensor};
+use crate::tensor::{pad2d_into, padded2d_size, Tensor};
 
 /// Pooling hyper-parameters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -131,24 +132,32 @@ fn sliding_combine_row(src: &[f32], k: usize, dst: &mut [f32], out_len: usize, o
 
 /// Shared 2-D pooling skeleton: horizontal sliding combine per input row,
 /// then vertical combine across `kh` rows, then stride subsampling.
-fn pool2d_sliding(x: &Tensor, p: &PoolParams, op: Combine) -> Tensor {
+/// Channel planes `(n, c)` are independent work items fanned out over the
+/// ctx's threads; all buffers come from the ctx's scratch arena.
+fn pool2d_sliding(x: &Tensor, p: &PoolParams, op: Combine, ctx: &ExecCtx) -> Tensor {
     assert_eq!(x.rank(), 4, "pooling expects NCHW");
     let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
     let (kh, kw) = p.k;
     let (oh, ow) = p.out_size(h, w);
     let (sh, sw) = p.stride;
     let ow1 = w + 2 * p.pad.1 - kw + 1;
-    let hp = h + 2 * p.pad.0;
 
-    let padded = pad2d(x, p.pad.0, p.pad.1, 3 * LANES + kw, op.identity());
-    let wp = padded.dim(3);
+    let (hp, wp) = padded2d_size(h, w, p.pad.0, p.pad.1, 3 * LANES + kw);
+    let mut padded = ctx.take(n * c * hp * wp, op.identity());
+    pad2d_into(x, p.pad.0, p.pad.1, 3 * LANES + kw, &mut padded);
 
     let mut out = Tensor::zeros(&[n, c, oh, ow]);
-    // Horizontal results for the kh rows feeding one output row.
-    let mut hrows = vec![0.0f32; hp * ow1];
-    for ni in 0..n {
-        for ci in 0..c {
-            let plane = padded.plane(ni, ci);
+    let padded_ref: &[f32] = &padded;
+    // Per-worker scratch (horizontal rows + vertical accumulator): one
+    // arena checkout per parallel region, so steady-state arena traffic
+    // is deterministic and allocation-free.
+    ctx.par_chunks_with(
+        out.as_mut_slice(),
+        oh * ow,
+        || (ctx.take_unfilled(hp * ow1), ctx.take_unfilled(ow1)),
+        |item, oplane, (hrows, acc)| {
+            let plane = &padded_ref[item * hp * wp..(item + 1) * hp * wp];
+            // Horizontal results for every padded input row of this plane.
             for iy in 0..hp {
                 sliding_combine_row(
                     &plane[iy * wp..],
@@ -162,35 +171,52 @@ fn pool2d_sliding(x: &Tensor, p: &PoolParams, op: Combine) -> Tensor {
                 let iy0 = oy * sh;
                 // Vertical combine of kh horizontal rows (vectorises as a
                 // simple elementwise loop over the row).
-                let (head, tail) = hrows.split_at(iy0 * ow1 + ow1);
-                let mut acc: Vec<f32> = head[iy0 * ow1..].to_vec();
+                acc.copy_from_slice(&hrows[iy0 * ow1..(iy0 + 1) * ow1]);
                 for ky in 1..kh {
-                    let row = &tail[(ky - 1) * ow1..ky * ow1];
-                    for (a, &r) in acc.iter_mut().zip(row) {
+                    let row = &hrows[(iy0 + ky) * ow1..(iy0 + ky + 1) * ow1];
+                    for (a, &r) in acc.iter_mut().zip(row.iter()) {
                         *a = op.scalar(*a, r);
                     }
                 }
-                let orow_start = out.offset4(ni, ci, oy, 0);
-                let orow = &mut out.as_mut_slice()[orow_start..orow_start + ow];
+                let orow = &mut oplane[oy * ow..oy * ow + ow];
                 for (ox, v) in orow.iter_mut().enumerate() {
                     *v = acc[ox * sw];
                 }
             }
-        }
-    }
+        },
+        |(hrows, acc)| {
+            ctx.put(hrows);
+            ctx.put(acc);
+        },
+    );
+    ctx.put(padded);
     out
 }
 
 /// Max pooling via the sliding-window kernel.
 pub fn max_pool2d(x: &Tensor, p: &PoolParams) -> Tensor {
-    pool2d_sliding(x, p, Combine::Max)
+    crate::exec::with_thread_ctx(crate::kernels::ConvAlgo::Sliding, |ctx| {
+        max_pool2d_ctx(x, p, ctx)
+    })
+}
+
+/// [`max_pool2d`] with an execution context (threads + scratch arena).
+pub fn max_pool2d_ctx(x: &Tensor, p: &PoolParams, ctx: &ExecCtx) -> Tensor {
+    pool2d_sliding(x, p, Combine::Max, ctx)
 }
 
 /// Average pooling via the sliding-window sum kernel
 /// (`count_include_pad = true`).
 pub fn avg_pool2d(x: &Tensor, p: &PoolParams) -> Tensor {
+    crate::exec::with_thread_ctx(crate::kernels::ConvAlgo::Sliding, |ctx| {
+        avg_pool2d_ctx(x, p, ctx)
+    })
+}
+
+/// [`avg_pool2d`] with an execution context (threads + scratch arena).
+pub fn avg_pool2d_ctx(x: &Tensor, p: &PoolParams, ctx: &ExecCtx) -> Tensor {
     let inv = 1.0 / (p.k.0 * p.k.1) as f32;
-    let mut y = pool2d_sliding(x, p, Combine::Sum);
+    let mut y = pool2d_sliding(x, p, Combine::Sum, ctx);
     for v in y.as_mut_slice() {
         *v *= inv;
     }
@@ -325,7 +351,8 @@ mod tests {
 
     #[test]
     fn window_wider_than_lanes_serial_path() {
-        against_naive_max(&[1, 1, 2, 80], &PoolParams { k: (1, 20), stride: (1, 1), pad: (0, 0) }, 600);
-        against_naive_avg(&[1, 1, 2, 80], &PoolParams { k: (1, 20), stride: (1, 1), pad: (0, 0) }, 601);
+        let p = PoolParams { k: (1, 20), stride: (1, 1), pad: (0, 0) };
+        against_naive_max(&[1, 1, 2, 80], &p, 600);
+        against_naive_avg(&[1, 1, 2, 80], &p, 601);
     }
 }

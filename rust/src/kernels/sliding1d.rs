@@ -2,11 +2,12 @@
 //! log-step sliding window sum (the algorithm family of the paper's
 //! precursor, arXiv:2305.16513, whose ~log(k) speedup §2 recalls).
 
-use super::direct::conv1d_direct;
+use super::direct::conv1d_direct_ctx;
 use super::rowconv::{row_conv_auto, COMPOUND_MAX_K};
 use super::Conv1dParams;
+use crate::exec::ExecCtx;
 use crate::simd::{slide_dyn, F32xL, LANES};
-use crate::tensor::{pad_row, Tensor};
+use crate::tensor::{pad_row, pad_row_into, Tensor};
 
 /// 1-D convolution via the Vector Slide kernels.
 ///
@@ -22,45 +23,70 @@ pub fn conv1d_sliding(
     bias: Option<&[f32]>,
     p: &Conv1dParams,
 ) -> Tensor {
+    crate::exec::with_thread_ctx(crate::kernels::ConvAlgo::Sliding, |ctx| {
+        conv1d_sliding_ctx(x, w, bias, p, ctx)
+    })
+}
+
+/// [`conv1d_sliding`] with an execution context: the padded channels and
+/// the per-worker accumulator come from the ctx's scratch arena, and
+/// output rows fan out over the ctx's threads (bit-identical for any
+/// thread count).
+pub fn conv1d_sliding_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
     assert_eq!(x.rank(), 2, "input must be [c, l]");
     assert_eq!(w.rank(), 3, "weights must be [cout, cin, k]");
     let (c_in, l) = (x.dim(0), x.dim(1));
     let (c_out, c_in_w, k) = (w.dim(0), w.dim(1), w.dim(2));
     assert_eq!(c_in, c_in_w, "c_in mismatch");
     if k > COMPOUND_MAX_K {
-        return conv1d_direct(x, w, bias, p);
+        return conv1d_direct_ctx(x, w, bias, p, ctx);
     }
     let lo = p.out_len(l, k);
     // Unit-stride output length (subsampled later if stride > 1).
     let lo1 = l + 2 * p.pad - k + 1;
 
-    // Pad every channel once: conv padding + right slack for vector loads.
+    // Pad every channel once into arena scratch: conv padding + right
+    // slack for vector loads.
     let lp = l + 2 * p.pad + 2 * LANES + k;
-    let mut padded = vec![0.0f32; c_in * lp];
+    let mut padded = ctx.take(c_in * lp, 0.0);
+    let xs = x.as_slice();
     for ci in 0..c_in {
-        let row = pad_row(&x.as_slice()[ci * l..(ci + 1) * l], p.pad, 2 * LANES + k, 0.0);
-        padded[ci * lp..ci * lp + row.len()].copy_from_slice(&row);
+        pad_row_into(&xs[ci * l..(ci + 1) * l], p.pad, &mut padded[ci * lp..(ci + 1) * lp]);
     }
 
     let ws = w.as_slice();
     let mut out = Tensor::zeros(&[c_out, lo]);
-    let mut scratch = vec![0.0f32; lo1];
-    for co in 0..c_out {
-        let b = bias.map_or(0.0, |b| b[co]);
-        scratch.fill(b);
-        for ci in 0..c_in {
-            let wrow = &ws[(co * c_in + ci) * k..(co * c_in + ci + 1) * k];
-            row_conv_auto(&padded[ci * lp..], wrow, &mut scratch, lo1);
-        }
-        let orow = &mut out.as_mut_slice()[co * lo..(co + 1) * lo];
-        if p.stride == 1 {
-            orow.copy_from_slice(&scratch[..lo]);
-        } else {
-            for (o, v) in orow.iter_mut().enumerate() {
-                *v = scratch[o * p.stride];
+    let padded_ref: &[f32] = &padded;
+    // Per-worker accumulator: one arena checkout per parallel region,
+    // so steady-state arena traffic is deterministic and allocation-free.
+    ctx.par_chunks_with(
+        out.as_mut_slice(),
+        lo,
+        || ctx.take_unfilled(lo1),
+        |co, orow, scratch| {
+            let b = bias.map_or(0.0, |b| b[co]);
+            scratch.fill(b);
+            for ci in 0..c_in {
+                let wrow = &ws[(co * c_in + ci) * k..(co * c_in + ci + 1) * k];
+                row_conv_auto(&padded_ref[ci * lp..], wrow, scratch, lo1);
             }
-        }
-    }
+            if p.stride == 1 {
+                orow.copy_from_slice(&scratch[..lo]);
+            } else {
+                for (o, v) in orow.iter_mut().enumerate() {
+                    *v = scratch[o * p.stride];
+                }
+            }
+        },
+        |scratch| ctx.put(scratch),
+    );
+    ctx.put(padded);
     out
 }
 
@@ -148,6 +174,7 @@ pub fn sliding_sum(x: &[f32], k: usize) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::direct::conv1d_direct;
     use crate::kernels::Conv1dParams;
     use crate::tensor::XorShiftRng;
 

@@ -17,13 +17,14 @@
 //!   (custom-vs-generic, and the k = 17 crossover where the compound
 //!   kernel beats the in-vector one).
 
-use super::direct::conv2d_direct;
+use super::direct::conv2d_direct_ctx;
 use super::rowconv::{
     row_conv_auto, row_conv_compound, row_conv_generic, COMPOUND_MAX_K, GENERIC_MAX_K,
 };
 use super::Conv2dParams;
+use crate::exec::ExecCtx;
 use crate::simd::LANES;
-use crate::tensor::{pad2d, Tensor};
+use crate::tensor::{pad2d_into, padded2d_size, Tensor};
 
 /// Which row kernel the 2-D sliding convolution uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -71,6 +72,24 @@ pub fn conv2d_sliding(
     p: &Conv2dParams,
     variant: SlideVariant,
 ) -> Tensor {
+    crate::exec::with_thread_ctx(crate::kernels::ConvAlgo::Sliding, |ctx| {
+        conv2d_sliding_ctx(x, w, bias, p, variant, ctx)
+    })
+}
+
+/// [`conv2d_sliding`] with an execution context: the padded input and the
+/// per-worker row accumulator come from the ctx's scratch arena (zero
+/// steady-state allocations), and output planes `(n, c_out)` fan out over
+/// the ctx's threads. Per-plane arithmetic is identical for every thread
+/// count, so results are bit-identical to the single-threaded kernel.
+pub fn conv2d_sliding_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+    variant: SlideVariant,
+    ctx: &ExecCtx,
+) -> Tensor {
     assert_eq!(x.rank(), 4, "input must be NCHW");
     assert_eq!(w.rank(), 4, "weights must be [cout, cin/g, kh, kw]");
     let (n, c_in, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
@@ -83,7 +102,7 @@ pub fn conv2d_sliding(
     }
     if !variant.supports(kw) {
         match variant {
-            SlideVariant::Auto => return conv2d_direct(x, w, bias, p),
+            SlideVariant::Auto => return conv2d_direct_ctx(x, w, bias, p, ctx),
             _ => panic!("{variant:?} cannot evaluate filter width {kw}"),
         }
     }
@@ -93,31 +112,41 @@ pub fn conv2d_sliding(
     let ow1 = win + 2 * p.pad.1 - kw + 1;
     let row_fn = variant.row_fn();
 
-    // Pad once: convolution padding plus vector-load slack on the right.
-    let padded = pad2d(x, p.pad.0, p.pad.1, 2 * LANES + kw, 0.0);
-    let wp = padded.dim(3);
+    // Pad once into arena scratch: convolution padding plus vector-load
+    // slack on the right.
+    let (hp, wp) = padded2d_size(h, win, p.pad.0, p.pad.1, 2 * LANES + kw);
+    let mut padded = ctx.take(n * c_in * hp * wp, 0.0);
+    pad2d_into(x, p.pad.0, p.pad.1, 2 * LANES + kw, &mut padded);
 
     let ws = w.as_slice();
     let c_out_g = c_out / g;
     let mut out = Tensor::zeros(&[n, c_out, oh, ow]);
-    let mut scratch = vec![0.0f32; ow1];
-    for ni in 0..n {
-        for co in 0..c_out {
+    let padded_ref: &[f32] = &padded;
+    // Per-worker row accumulator: checked out of the arena once per
+    // parallel region (not per output plane), so steady-state arena
+    // traffic is deterministic and allocation-free.
+    ctx.par_chunks_with(
+        out.as_mut_slice(),
+        oh * ow,
+        || ctx.take_unfilled(ow1),
+        |item, oplane, scratch| {
+            let (ni, co) = (item / c_out, item % c_out);
             let grp = co / c_out_g;
             let b = bias.map_or(0.0, |b| b[co]);
             for oy in 0..oh {
                 let iy0 = oy * sh;
                 scratch.fill(b);
                 for cig in 0..c_in_g {
-                    let plane = padded.plane(ni, grp * c_in_g + cig);
+                    let ci = grp * c_in_g + cig;
+                    let plane =
+                        &padded_ref[(ni * c_in + ci) * hp * wp..(ni * c_in + ci + 1) * hp * wp];
                     for ky in 0..kh {
                         let src = &plane[(iy0 + ky) * wp..];
                         let wrow = &ws[((co * c_in_g + cig) * kh + ky) * kw..][..kw];
-                        row_fn(src, wrow, &mut scratch, ow1);
+                        row_fn(src, wrow, scratch, ow1);
                     }
                 }
-                let orow_start = out.offset4(ni, co, oy, 0);
-                let orow = &mut out.as_mut_slice()[orow_start..orow_start + ow];
+                let orow = &mut oplane[oy * ow..oy * ow + ow];
                 if sw == 1 {
                     orow.copy_from_slice(&scratch[..ow]);
                 } else {
@@ -126,14 +155,17 @@ pub fn conv2d_sliding(
                     }
                 }
             }
-        }
-    }
+        },
+        |scratch| ctx.put(scratch),
+    );
+    ctx.put(padded);
     out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::direct::conv2d_direct;
 
     fn against_direct(
         xdims: &[usize],

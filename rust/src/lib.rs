@@ -13,6 +13,11 @@
 //!   paper's kernels are built from, plus compound (multi-register) slides.
 //! * [`tensor`] — a minimal NCHW tensor library (owned `f32` buffers,
 //!   stride math, zero-padding) used by every kernel.
+//! * [`exec`] — the execution-context subsystem: [`exec::ExecCtx`] carries
+//!   the algorithm choice, a worker-thread count and a reusable scratch
+//!   arena; every kernel has a `*_ctx` variant that parallelises over
+//!   independent output planes/rows and draws its padded/scratch/column
+//!   buffers from the arena instead of allocating per call.
 //! * [`kernels`] — the paper's contribution and its baselines:
 //!   sliding-window 1-D/2-D convolution (generic, compound, and custom
 //!   k=3/k=5 kernels), sliding max/avg pooling, plus the `im2col` + blocked
@@ -28,7 +33,10 @@
 //!   `python/compile/aot.py` (JAX/Pallas lowered to HLO text) and executes
 //!   them from Rust; Python is never on the request path.
 //! * [`coordinator`] — the serving driver: request queue, dynamic batcher,
-//!   per-algorithm router and latency/throughput metrics.
+//!   per-algorithm router and latency/throughput metrics; each backend
+//!   owns one [`exec::ExecCtx`] so batched inference reuses scratch
+//!   buffers across requests.
+//! * [`error`] — string-backed `anyhow` substitute (offline build).
 //!
 //! ## Quickstart
 //!
@@ -44,8 +52,10 @@
 //! assert!(y_sliding.allclose(&y_gemm, 1e-4));
 //! ```
 
+pub mod error;
 pub mod simd;
 pub mod tensor;
+pub mod exec;
 pub mod kernels;
 pub mod nn;
 pub mod harness;

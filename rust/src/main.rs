@@ -11,9 +11,9 @@
 //! * `artifacts-check` — load every AOT artifact and cross-check numerics
 //!   against the native kernels
 
-use anyhow::{anyhow, bail, Context, Result};
 use std::time::{Duration, Instant};
 use swconv::coordinator::{BackendSpec, BatchPolicy, Coordinator};
+use swconv::error::{anyhow, bail, Context, Result};
 use swconv::harness::report::{dur, f3, Table};
 use swconv::harness::{
     bench, fig1_speedup_sweep, fig2_throughput_sweep, machine_peaks, sweep, ConvCase,
@@ -57,6 +57,13 @@ impl Args {
     }
 }
 
+/// `--threads N` (default 1, the paper's single-core setup); `0` means
+/// "all hardware threads".
+fn parse_threads(args: &Args) -> Result<usize> {
+    let t = args.usize("threads", 1)?;
+    Ok(if t == 0 { swconv::exec::available_threads() } else { t })
+}
+
 fn parse_ks(args: &Args) -> Result<Vec<usize>> {
     match args.get("ks") {
         None => Ok(sweep::default_k_grid()),
@@ -70,11 +77,14 @@ fn parse_ks(args: &Args) -> Result<Vec<usize>> {
 fn cmd_fig1(args: &Args) -> Result<()> {
     let c = args.usize("c", 4)?;
     let hw = args.usize("hw", 64)?;
+    let threads = parse_threads(args)?;
     let ks = parse_ks(args)?;
-    eprintln!("fig1: c={c} hw={hw} ks={ks:?} (single core)");
-    let rows = fig1_speedup_sweep(&ks, |k| ConvCase::square(c, hw, k));
+    eprintln!("fig1: c={c} hw={hw} ks={ks:?} threads={threads}");
+    let rows = fig1_speedup_sweep(&ks, threads, |k| ConvCase::square(c, hw, k));
     let mut t = Table::new(
-        format!("Fig 1 — 2-D convolution speedup vs MlasConv-style GEMM (c={c}, {hw}x{hw})"),
+        format!(
+            "Fig 1 — 2-D convolution speedup vs MlasConv-style GEMM (c={c}, {hw}x{hw}, {threads} thread(s))"
+        ),
         &["k", "kernel", "t_gemm", "t_sliding", "t_generic", "t_compound", "speedup"],
     );
     for r in &rows {
@@ -99,17 +109,20 @@ fn cmd_fig1(args: &Args) -> Result<()> {
 fn cmd_fig2(args: &Args) -> Result<()> {
     let c = args.usize("c", 4)?;
     let hw = args.usize("hw", 64)?;
+    let threads = parse_threads(args)?;
     let ks = parse_ks(args)?;
     let peaks = machine_peaks();
     eprintln!(
-        "fig2: c={c} hw={hw}; machine peak {:.1} GFLOP/s, bw {:.1} GB/s, ridge {:.2} FLOP/B",
+        "fig2: c={c} hw={hw} threads={threads}; machine peak {:.1} GFLOP/s, bw {:.1} GB/s, ridge {:.2} FLOP/B",
         peaks.gflops,
         peaks.bandwidth_gbs,
         peaks.ridge()
     );
-    let rows = fig2_throughput_sweep(&ks, |k| ConvCase::square(c, hw, k));
+    let rows = fig2_throughput_sweep(&ks, threads, |k| ConvCase::square(c, hw, k));
     let mut t = Table::new(
-        format!("Fig 2 — 2-D convolution throughput, GFLOP/s (c={c}, {hw}x{hw})"),
+        format!(
+            "Fig 2 — 2-D convolution throughput, GFLOP/s (c={c}, {hw}x{hw}, {threads} thread(s))"
+        ),
         &["k", "sliding", "gemm", "roof(sliding)", "roof(gemm)", "peak", "sliding/peak"],
     );
     for r in &rows {
@@ -142,18 +155,22 @@ fn cmd_peaks() -> Result<()> {
 fn cmd_run_model(args: &Args) -> Result<()> {
     let name = args.get("model").unwrap_or("simple-cnn");
     let batch = args.usize("batch", 1)?;
+    let threads = parse_threads(args)?;
     let model = zoo::by_name(name, 10, 42)
         .ok_or_else(|| anyhow!("unknown model '{name}' (try {:?})", zoo::MODEL_NAMES))?;
     let mut in_shape = vec![batch];
     in_shape.extend_from_slice(&model.input_shape);
     let x = Tensor::randn(&in_shape, 7);
     let mut t = Table::new(
-        format!("{name} forward, batch {batch} ({} FLOP)", model.flops(batch)),
+        format!(
+            "{name} forward, batch {batch}, {threads} thread(s) ({} FLOP)",
+            model.flops(batch)
+        ),
         &["algo", "median", "GFLOP/s"],
     );
     let mut outputs: Vec<(ConvAlgo, Tensor)> = Vec::new();
     for algo in [ConvAlgo::Im2colGemm, ConvAlgo::Sliding, ConvAlgo::Direct] {
-        let ctx = ExecCtx { algo };
+        let ctx = ExecCtx::with_threads(algo, threads);
         let stats = bench(|| model.forward(&x, &ctx));
         t.row(vec![
             algo.name().into(),
@@ -187,13 +204,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_req = args.usize("requests", 64)?;
     let max_batch = args.usize("max-batch", 8)?;
     let wait_ms = args.usize("max-wait-ms", 2)?;
+    let threads = parse_threads(args)?;
     let model_a = zoo::by_name(name, 10, 42).ok_or_else(|| anyhow!("unknown model '{name}'"))?;
     let model_b = zoo::by_name(name, 10, 42).unwrap();
     let item_shape = model_a.input_shape.clone();
 
     let backends = vec![
-        BackendSpec::native("sliding", model_a, ExecCtx { algo: ConvAlgo::Sliding }),
-        BackendSpec::native("gemm", model_b, ExecCtx { algo: ConvAlgo::Im2colGemm }),
+        BackendSpec::native(
+            "sliding",
+            model_a,
+            ExecCtx::with_threads(ConvAlgo::Sliding, threads),
+        ),
+        BackendSpec::native(
+            "gemm",
+            model_b,
+            ExecCtx::with_threads(ConvAlgo::Im2colGemm, threads),
+        ),
     ];
     let coord = Coordinator::new(
         backends,
@@ -229,8 +255,9 @@ fn cmd_artifacts_check(args: &Args) -> Result<()> {
         .get("dir")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(default_artifacts_dir);
-    let mut engine = Engine::new(&dir)
-        .with_context(|| format!("loading artifacts from {} (run `make artifacts`)", dir.display()))?;
+    let mut engine = Engine::new(&dir).with_context(|| {
+        format!("loading artifacts from {} (run `make artifacts`)", dir.display())
+    })?;
     let n = engine.load_all()?;
     println!("compiled {n} artifacts on {}", engine.platform());
 
@@ -263,13 +290,16 @@ fn help() {
 USAGE: swconv <command> [--flag value]...
 
 COMMANDS
-  bench-fig1       [--c 4] [--hw 64] [--ks 2,3,...] [--csv out.csv]
-  bench-fig2       [--c 4] [--hw 64] [--ks 2,3,...] [--csv out.csv]
+  bench-fig1       [--c 4] [--hw 64] [--ks 2,3,...] [--threads N] [--csv out.csv]
+  bench-fig2       [--c 4] [--hw 64] [--ks 2,3,...] [--threads N] [--csv out.csv]
   peaks
-  run-model        [--model NAME] [--batch N]
+  run-model        [--model NAME] [--batch N] [--threads N]
   summary          [--model NAME] [--batch N]
-  serve            [--model NAME] [--requests N] [--max-batch N] [--max-wait-ms MS]
+  serve            [--model NAME] [--requests N] [--max-batch N] [--max-wait-ms MS] [--threads N]
   artifacts-check  [--dir artifacts]
+
+  --threads 0 means \"use all hardware threads\"; the default 1 matches
+  the paper's single-core configuration.
 
 MODELS: {:?}",
         zoo::MODEL_NAMES

@@ -3,24 +3,13 @@
 //! latter two without running anything).
 
 use crate::kernels::{
-    avg_pool2d, conv2d, max_pool2d, Conv2dParams, ConvAlgo, PoolParams,
+    avg_pool2d_ctx, conv2d_ctx, max_pool2d_ctx, Conv2dParams, PoolParams,
 };
 use crate::tensor::Tensor;
 
-/// Per-request execution context: which convolution algorithm every conv
-/// layer in the model uses. The coordinator's router switches this per
-/// request; weights stay shared.
-#[derive(Clone, Copy, Debug)]
-pub struct ExecCtx {
-    /// Convolution algorithm for all `Conv2d` layers.
-    pub algo: ConvAlgo,
-}
-
-impl Default for ExecCtx {
-    fn default() -> Self {
-        ExecCtx { algo: ConvAlgo::Sliding }
-    }
-}
+// The execution context grew into its own subsystem (threads + scratch
+// arena); re-exported here so `nn::layers::ExecCtx` keeps working.
+pub use crate::exec::ExecCtx;
 
 /// A neural-network layer.
 pub trait Layer: Send + Sync {
@@ -96,7 +85,7 @@ impl Layer for Conv2d {
     }
 
     fn forward(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor {
-        conv2d(x, &self.w, Some(&self.bias), &self.params, ctx.algo)
+        conv2d_ctx(x, &self.w, Some(&self.bias), &self.params, ctx)
     }
 }
 
@@ -120,8 +109,8 @@ impl Layer for MaxPool2d {
         (out.iter().product::<usize>() * (self.0.k.0 * self.0.k.1 - 1)) as u64
     }
 
-    fn forward(&self, x: &Tensor, _ctx: &ExecCtx) -> Tensor {
-        max_pool2d(x, &self.0)
+    fn forward(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor {
+        max_pool2d_ctx(x, &self.0, ctx)
     }
 }
 
@@ -143,8 +132,8 @@ impl Layer for AvgPool2d {
         (out.iter().product::<usize>() * (self.0.k.0 * self.0.k.1)) as u64
     }
 
-    fn forward(&self, x: &Tensor, _ctx: &ExecCtx) -> Tensor {
-        avg_pool2d(x, &self.0)
+    fn forward(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor {
+        avg_pool2d_ctx(x, &self.0, ctx)
     }
 }
 
@@ -443,6 +432,7 @@ impl Layer for DepthwiseSeparable {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::ConvAlgo;
 
     #[test]
     fn conv2d_layer_shapes_and_flops() {
@@ -518,8 +508,8 @@ mod tests {
         let f = Fire::new(8, 4, 6, 6, 9);
         let x = Tensor::randn(&[1, 8, 7, 7], 10);
         assert_eq!(f.out_shape(x.dims()), vec![1, 12, 7, 7]);
-        let g = f.forward(&x, &ExecCtx { algo: ConvAlgo::Im2colGemm });
-        let s = f.forward(&x, &ExecCtx { algo: ConvAlgo::Sliding });
+        let g = f.forward(&x, &ExecCtx::new(ConvAlgo::Im2colGemm));
+        let s = f.forward(&x, &ExecCtx::new(ConvAlgo::Sliding));
         assert!(g.allclose(&s, 1e-4), "diff {}", g.max_abs_diff(&s));
     }
 
@@ -528,8 +518,8 @@ mod tests {
         let l = DepthwiseSeparable::new(8, 16, 2, 11);
         assert_eq!(l.out_shape(&[1, 8, 8, 8]), vec![1, 16, 4, 4]);
         let x = Tensor::randn(&[1, 8, 8, 8], 12);
-        let g = l.forward(&x, &ExecCtx { algo: ConvAlgo::Im2colGemm });
-        let s = l.forward(&x, &ExecCtx { algo: ConvAlgo::Sliding });
+        let g = l.forward(&x, &ExecCtx::new(ConvAlgo::Im2colGemm));
+        let s = l.forward(&x, &ExecCtx::new(ConvAlgo::Sliding));
         assert!(g.allclose(&s, 1e-4));
     }
 }

@@ -4,9 +4,11 @@
 //! network families (SqueezeNet, MobileNet, ShuffleNet) whose filter-size
 //! choices interact with the Sliding Window advantage. This module lets us
 //! run those interactions end-to-end: every [`layers::Conv2d`] takes its
-//! algorithm from the per-request [`ExecCtx`], so the same model can be
-//! served with GEMM or Sliding Window backends and compared on identical
-//! weights (the coordinator's router does exactly that).
+//! algorithm — and now its thread pool and scratch arena, see
+//! [`crate::exec`] — from the per-request [`ExecCtx`], so the same model
+//! can be served with GEMM or Sliding Window backends (single- or
+//! multi-core) and compared on identical weights (the coordinator's
+//! router does exactly that).
 //!
 //! * [`layers`] — Conv2d, pooling, ReLU, Linear, Softmax, Flatten, Fire
 //!   (SqueezeNet), DepthwiseSeparable (MobileNet).

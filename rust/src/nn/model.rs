@@ -135,9 +135,9 @@ mod tests {
     fn algos_agree_end_to_end() {
         let m = tiny();
         let x = Tensor::randn(&[1, 1, 8, 8], 6);
-        let a = m.forward(&x, &ExecCtx { algo: ConvAlgo::Direct });
-        let b = m.forward(&x, &ExecCtx { algo: ConvAlgo::Im2colGemm });
-        let c = m.forward(&x, &ExecCtx { algo: ConvAlgo::Sliding });
+        let a = m.forward(&x, &ExecCtx::new(ConvAlgo::Direct));
+        let b = m.forward(&x, &ExecCtx::new(ConvAlgo::Im2colGemm));
+        let c = m.forward(&x, &ExecCtx::new(ConvAlgo::Sliding));
         assert!(a.allclose(&b, 1e-4));
         assert!(a.allclose(&c, 1e-4));
     }

@@ -192,8 +192,8 @@ mod tests {
                 &std::iter::once(1).chain(m.input_shape.iter().copied()).collect::<Vec<_>>(),
                 7,
             );
-            let g = m.forward(&x, &ExecCtx { algo: ConvAlgo::Im2colGemm });
-            let s = m.forward(&x, &ExecCtx { algo: ConvAlgo::Sliding });
+            let g = m.forward(&x, &ExecCtx::new(ConvAlgo::Im2colGemm));
+            let s = m.forward(&x, &ExecCtx::new(ConvAlgo::Sliding));
             let d = g.max_abs_diff(&s);
             assert!(d < 1e-3, "{name}: diff {d}");
         }

@@ -6,18 +6,29 @@
 //! name so the request path pays only buffer transfer + execution.
 
 use super::manifest::{ArtifactSpec, Manifest};
+use crate::error::{bail, Result};
+#[cfg(feature = "pjrt")]
+use crate::error::anyhow;
 use crate::tensor::Tensor;
-use anyhow::{anyhow, bail, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::PathBuf;
 
 /// A compiled-artifact execution engine on the PJRT CPU client.
+///
+/// Only available with the `pjrt` cargo feature (which needs the
+/// vendored `xla` crate); the default offline build gets a stub with the
+/// same API whose constructor errors, so everything above it (the
+/// coordinator's `PjrtBackend`, the CLI's `artifacts-check`) degrades to
+/// a clear message instead of failing to compile.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create an engine over an artifact directory (must contain
     /// `manifest.json`; see `python/compile/aot.py`).
@@ -128,6 +139,56 @@ impl Engine {
             );
         }
         Ok(Tensor::from_vec(values, &spec.output))
+    }
+}
+
+/// Stub engine for builds without the `pjrt` feature: loads the manifest
+/// (so "missing artifacts" is still the first error users see) and then
+/// refuses to construct.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Always errors after validating the artifact directory: executing
+    /// artifacts needs the `pjrt` feature.
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Engine> {
+        let dir = artifacts_dir.into();
+        let _ = Manifest::load(&dir)?;
+        bail!(
+            "swconv was built without the `pjrt` feature; to execute AOT \
+             artifacts from {}, vendor the `xla` crate, declare it in \
+             rust/Cargo.toml (the offline default manifest deliberately \
+             omits it), and rebuild with `--features pjrt`",
+            dir.display()
+        )
+    }
+
+    /// The manifest the engine serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform string.
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Unavailable without the `pjrt` feature.
+    pub fn load(&mut self, name: &str) -> Result<&ArtifactSpec> {
+        bail!("cannot compile artifact '{name}': built without the `pjrt` feature")
+    }
+
+    /// Unavailable without the `pjrt` feature.
+    pub fn load_all(&mut self) -> Result<usize> {
+        bail!("cannot compile artifacts: built without the `pjrt` feature")
+    }
+
+    /// Unavailable without the `pjrt` feature.
+    pub fn execute(&mut self, name: &str, _inputs: &[&Tensor]) -> Result<Tensor> {
+        bail!("cannot execute artifact '{name}': built without the `pjrt` feature")
     }
 }
 

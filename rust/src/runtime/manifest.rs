@@ -17,7 +17,7 @@
 //! ```
 
 use super::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One AOT-lowered computation.

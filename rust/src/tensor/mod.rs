@@ -16,5 +16,5 @@ mod pad;
 mod rng;
 
 pub use dense::Tensor;
-pub use pad::{pad2d, pad_row};
+pub use pad::{pad2d, pad2d_into, pad_row, pad_row_into, padded2d_size};
 pub use rng::XorShiftRng;

@@ -10,34 +10,69 @@
 
 use super::dense::Tensor;
 
-/// Pad an NCHW tensor with `ph` rows / `pw` columns of `value` on each
-/// side, plus `slack_w` extra columns of `value` on the right only.
+/// Padded geometry for [`pad2d_into`]: `(hp, wp)` of an `[n, c, hp, wp]`
+/// buffer for an `h × w` input with `ph`/`pw` padding and `slack_w`
+/// right slack.
+pub fn padded2d_size(h: usize, w: usize, ph: usize, pw: usize, slack_w: usize) -> (usize, usize) {
+    (h + 2 * ph, w + 2 * pw + slack_w)
+}
+
+/// Copy `x` into a pre-filled padded buffer.
 ///
-/// Output shape: `[n, c, h + 2·ph, w + 2·pw + slack_w]`.
-pub fn pad2d(x: &Tensor, ph: usize, pw: usize, slack_w: usize, value: f32) -> Tensor {
+/// `dst` must hold `n · c · hp · wp` elements (see [`padded2d_size`])
+/// already set to the pad value — kernels draw it from the
+/// [`crate::exec::ExecCtx`] scratch arena with the fill applied — and
+/// only the interior rows are written here. Returns `(hp, wp)`.
+pub fn pad2d_into(
+    x: &Tensor,
+    ph: usize,
+    pw: usize,
+    slack_w: usize,
+    dst: &mut [f32],
+) -> (usize, usize) {
     assert_eq!(x.rank(), 4, "pad2d expects NCHW");
     let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
-    let (hp, wp) = (h + 2 * ph, w + 2 * pw + slack_w);
-    let mut out = Tensor::full(&[n, c, hp, wp], value);
+    let (hp, wp) = padded2d_size(h, w, ph, pw, slack_w);
+    assert_eq!(dst.len(), n * c * hp * wp, "padded buffer size");
     for ni in 0..n {
         for ci in 0..c {
             let src = x.plane(ni, ci);
-            let dst = out.plane_mut(ni, ci);
+            let plane = &mut dst[(ni * c + ci) * hp * wp..(ni * c + ci + 1) * hp * wp];
             for row in 0..h {
                 let s = &src[row * w..row * w + w];
-                let d = &mut dst[(row + ph) * wp + pw..(row + ph) * wp + pw + w];
+                let d = &mut plane[(row + ph) * wp + pw..(row + ph) * wp + pw + w];
                 d.copy_from_slice(s);
             }
         }
     }
+    (hp, wp)
+}
+
+/// Pad an NCHW tensor with `ph` rows / `pw` columns of `value` on each
+/// side, plus `slack_w` extra columns of `value` on the right only.
+///
+/// Output shape: `[n, c, h + 2·ph, w + 2·pw + slack_w]`. Allocating
+/// wrapper around [`pad2d_into`]; hot paths pad into arena scratch
+/// instead.
+pub fn pad2d(x: &Tensor, ph: usize, pw: usize, slack_w: usize, value: f32) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (hp, wp) = padded2d_size(h, w, ph, pw, slack_w);
+    let mut out = Tensor::full(&[n, c, hp, wp], value);
+    pad2d_into(x, ph, pw, slack_w, out.as_mut_slice());
     out
 }
 
+/// Copy a row (1-D signal) into a pre-filled padded buffer: `x` lands at
+/// `dst[p..p + x.len()]`; everything else keeps its pad value.
+pub fn pad_row_into(x: &[f32], p: usize, dst: &mut [f32]) {
+    dst[p..p + x.len()].copy_from_slice(x);
+}
+
 /// Pad a single row (1-D signal) with `p` values on the left and
-/// `p + slack` on the right.
+/// `p + slack` on the right. Allocating wrapper around [`pad_row_into`].
 pub fn pad_row(x: &[f32], p: usize, slack: usize, value: f32) -> Vec<f32> {
     let mut out = vec![value; x.len() + 2 * p + slack];
-    out[p..p + x.len()].copy_from_slice(x);
+    pad_row_into(x, p, &mut out);
     out
 }
 
@@ -77,5 +112,23 @@ mod tests {
     fn pad_row_layout() {
         let r = pad_row(&[1.0, 2.0], 2, 3, 0.5);
         assert_eq!(r, vec![0.5, 0.5, 1.0, 2.0, 0.5, 0.5, 0.5, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn pad2d_into_matches_pad2d() {
+        let x = Tensor::randn(&[2, 3, 4, 5], 9);
+        let want = pad2d(&x, 1, 2, 3, -1.0);
+        let (hp, wp) = padded2d_size(4, 5, 1, 2, 3);
+        let mut dst = vec![-1.0f32; 2 * 3 * hp * wp];
+        assert_eq!(pad2d_into(&x, 1, 2, 3, &mut dst), (hp, wp));
+        assert_eq!(dst, want.as_slice());
+    }
+
+    #[test]
+    #[should_panic(expected = "padded buffer size")]
+    fn pad2d_into_rejects_wrong_size() {
+        let x = Tensor::zeros(&[1, 1, 2, 2]);
+        let mut dst = vec![0.0f32; 3];
+        pad2d_into(&x, 0, 0, 0, &mut dst);
     }
 }

@@ -11,8 +11,8 @@ use swconv::tensor::Tensor;
 fn coord(max_batch: usize, wait_ms: u64) -> Coordinator {
     Coordinator::new(
         vec![
-            BackendSpec::native("sliding", zoo::simple_cnn(10, 1), ExecCtx { algo: ConvAlgo::Sliding }),
-            BackendSpec::native("gemm", zoo::simple_cnn(10, 1), ExecCtx { algo: ConvAlgo::Im2colGemm }),
+            BackendSpec::native("sliding", zoo::simple_cnn(10, 1), ExecCtx::new(ConvAlgo::Sliding)),
+            BackendSpec::native("gemm", zoo::simple_cnn(10, 1), ExecCtx::new(ConvAlgo::Im2colGemm)),
         ],
         BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms) },
     )
@@ -88,7 +88,7 @@ fn failing_backend_factory_reports_errors() {
     let spec = BackendSpec {
         name: "broken".into(),
         item_shape: vec![1, 28, 28],
-        factory: Box::new(|| anyhow::bail!("injected construction failure")),
+        factory: Box::new(|| swconv::bail!("injected construction failure")),
     };
     let c = Coordinator::new(vec![spec], BatchPolicy::default());
     let r = c.infer("broken", Tensor::zeros(&[1, 28, 28])).unwrap();
@@ -113,10 +113,10 @@ fn erroring_backend_answers_every_request() {
         fn item_shape(&self) -> &[usize] {
             &[2]
         }
-        fn infer(&mut self, batch: &Tensor) -> anyhow::Result<Tensor> {
+        fn infer(&mut self, batch: &Tensor) -> swconv::error::Result<Tensor> {
             self.calls += 1;
             if self.calls == 1 {
-                anyhow::bail!("transient failure");
+                swconv::bail!("transient failure");
             }
             Ok(batch.clone())
         }
@@ -149,7 +149,7 @@ fn batch_split_preserves_item_identity_and_order() {
         fn item_shape(&self) -> &[usize] {
             &[3]
         }
-        fn infer(&mut self, batch: &Tensor) -> anyhow::Result<Tensor> {
+        fn infer(&mut self, batch: &Tensor) -> swconv::error::Result<Tensor> {
             Ok(batch.clone())
         }
     }

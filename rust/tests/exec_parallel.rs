@@ -1,0 +1,184 @@
+//! Integration tests for the exec subsystem: multi-threaded kernels must
+//! be bit-identical to single-threaded ones, stay within the kernel
+//! parity tolerance against the direct oracle, and run allocation-free
+//! once the scratch arena is warm.
+
+use swconv::exec::ExecCtx;
+use swconv::kernels::pool::{avg_pool2d_ctx, max_pool2d_ctx, max_pool2d_naive};
+use swconv::kernels::sliding1d::conv1d_sliding_ctx;
+use swconv::kernels::sliding2d::{conv2d_sliding_ctx, SlideVariant};
+use swconv::kernels::{
+    conv1d_ctx, conv2d_ctx, Conv1dParams, Conv2dParams, ConvAlgo, PoolParams,
+};
+use swconv::tensor::Tensor;
+
+/// DETERMINISM — threads=1 and threads=N produce identical bytes for the
+/// sliding kernels: work items are whole output planes/rows computed
+/// with the same instruction sequence on any partition.
+#[test]
+fn sliding2d_bitwise_deterministic_across_thread_counts() {
+    let x = Tensor::randn(&[2, 3, 20, 24], 900);
+    let w = Tensor::randn(&[6, 3, 5, 5], 901);
+    let bias: Vec<f32> = (0..6).map(|i| 0.1 * i as f32).collect();
+    let p = Conv2dParams::same(5);
+    let one = ExecCtx::with_threads(ConvAlgo::Sliding, 1);
+    let base = conv2d_sliding_ctx(&x, &w, Some(&bias), &p, SlideVariant::Auto, &one);
+    for threads in [2usize, 3, 4, 7] {
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads);
+        let y = conv2d_sliding_ctx(&x, &w, Some(&bias), &p, SlideVariant::Auto, &ctx);
+        assert_eq!(
+            base.as_slice(),
+            y.as_slice(),
+            "threads={threads} not bit-identical"
+        );
+    }
+}
+
+#[test]
+fn sliding1d_bitwise_deterministic_across_thread_counts() {
+    let x = Tensor::randn(&[3, 200], 902);
+    let w = Tensor::randn(&[5, 3, 9], 903);
+    let p = Conv1dParams { stride: 1, pad: 4 };
+    let one = ExecCtx::with_threads(ConvAlgo::Sliding, 1);
+    let base = conv1d_sliding_ctx(&x, &w, None, &p, &one);
+    for threads in [2usize, 5, 8] {
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads);
+        let y = conv1d_sliding_ctx(&x, &w, None, &p, &ctx);
+        assert_eq!(base.as_slice(), y.as_slice(), "threads={threads}");
+    }
+}
+
+#[test]
+fn pooling_bitwise_deterministic_across_thread_counts() {
+    let x = Tensor::randn(&[2, 4, 17, 19], 904);
+    let p = PoolParams { k: (3, 3), stride: (2, 2), pad: (1, 1) };
+    let one = ExecCtx::with_threads(ConvAlgo::Sliding, 1);
+    let base_max = max_pool2d_ctx(&x, &p, &one);
+    let base_avg = avg_pool2d_ctx(&x, &p, &one);
+    for threads in [2usize, 4] {
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads);
+        assert_eq!(base_max.as_slice(), max_pool2d_ctx(&x, &p, &ctx).as_slice());
+        assert_eq!(base_avg.as_slice(), avg_pool2d_ctx(&x, &p, &ctx).as_slice());
+    }
+    // And the sliding pool still matches the naive oracle exactly.
+    assert_eq!(base_max.as_slice(), max_pool2d_naive(&x, &p).as_slice());
+}
+
+/// DETERMINISM — the ctx-taking dispatch entry points are bit-identical
+/// to the legacy single-threaded wrappers for every algorithm.
+#[test]
+fn ctx_dispatch_matches_legacy_entry_points() {
+    let x = Tensor::randn(&[1, 3, 14, 16], 905);
+    let w = Tensor::randn(&[4, 3, 3, 3], 906);
+    let p = Conv2dParams::same(3);
+    for algo in ConvAlgo::ALL {
+        let legacy = swconv::kernels::conv2d(&x, &w, None, &p, algo);
+        for threads in [1usize, 4] {
+            let ctx = ExecCtx::with_threads(algo, threads);
+            let y = conv2d_ctx(&x, &w, None, &p, &ctx);
+            assert_eq!(legacy.as_slice(), y.as_slice(), "{algo:?} threads={threads}");
+        }
+    }
+}
+
+/// PARITY — multi-threaded runs of every algorithm stay within the
+/// existing 2e-3 tolerance of the direct oracle (strided + grouped too).
+#[test]
+fn multithreaded_parity_with_direct_oracle() {
+    let cases = [
+        (vec![2, 4, 13, 15], vec![6, 4, 3, 3], Conv2dParams::same(3)),
+        // Strided, ungrouped (asymmetric stride).
+        (
+            vec![1, 3, 15, 17],
+            vec![4, 3, 5, 5],
+            Conv2dParams { stride: (2, 3), pad: (2, 2), groups: 1 },
+        ),
+        // Strided AND depthwise (groups == c_in).
+        (
+            vec![1, 4, 12, 14],
+            vec![4, 1, 5, 5],
+            Conv2dParams { stride: (2, 2), pad: (2, 2), groups: 4 },
+        ),
+    ];
+    for (i, (xd, wd, p)) in cases.iter().enumerate() {
+        let x = Tensor::randn(xd, 910 + i as u64);
+        let w = Tensor::randn(wd, 920 + i as u64);
+        let oracle = ExecCtx::with_threads(ConvAlgo::Direct, 3);
+        let reference = conv2d_ctx(&x, &w, None, p, &oracle);
+        for algo in ConvAlgo::ALL {
+            if !algo.supports_width(wd[3]) {
+                continue;
+            }
+            let ctx = ExecCtx::with_threads(algo, 4);
+            let y = conv2d_ctx(&x, &w, None, p, &ctx);
+            let d = y.max_abs_diff(&reference);
+            assert!(d < 2e-3, "case {i} {algo:?}: diff {d}");
+        }
+    }
+}
+
+#[test]
+fn conv1d_ctx_parity_all_algos() {
+    let x = Tensor::randn(&[2, 90], 930);
+    let w = Tensor::randn(&[3, 2, 7], 931);
+    let p = Conv1dParams { stride: 1, pad: 3 };
+    let reference = conv1d_ctx(&x, &w, None, &p, &ExecCtx::new(ConvAlgo::Direct));
+    for algo in ConvAlgo::ALL {
+        let ctx = ExecCtx::with_threads(algo, 4);
+        let y = conv1d_ctx(&x, &w, None, &p, &ctx);
+        let d = y.max_abs_diff(&reference);
+        assert!(d < 2e-3, "{algo:?}: diff {d}");
+    }
+}
+
+/// ARENA — after a warm-up call, the sliding2d hot loop performs zero
+/// heap allocations: every padded/scratch buffer is reused from the
+/// ctx's arena (this is the acceptance gate for serving workloads).
+#[test]
+fn sliding2d_steady_state_allocates_nothing() {
+    let x = Tensor::randn(&[2, 3, 32, 32], 940);
+    let w = Tensor::randn(&[8, 3, 5, 5], 941);
+    let p = Conv2dParams::same(5);
+    for threads in [1usize, 4] {
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads);
+        let warm = conv2d_ctx(&x, &w, None, &p, &ctx);
+        let after_warmup = ctx.alloc_events();
+        assert!(after_warmup > 0, "warm-up must have allocated scratch");
+        for _ in 0..3 {
+            let y = conv2d_ctx(&x, &w, None, &p, &ctx);
+            assert_eq!(y.as_slice(), warm.as_slice());
+        }
+        assert_eq!(
+            ctx.alloc_events(),
+            after_warmup,
+            "threads={threads}: steady-state conv must not allocate scratch"
+        );
+    }
+}
+
+#[test]
+fn im2col_and_pool_steady_state_allocate_nothing() {
+    let x = Tensor::randn(&[2, 3, 24, 24], 950);
+    let w = Tensor::randn(&[4, 3, 3, 3], 951);
+    let p = Conv2dParams::same(3);
+    let ctx = ExecCtx::with_threads(ConvAlgo::Im2colGemm, 2);
+    let _ = conv2d_ctx(&x, &w, None, &p, &ctx);
+    let pp = PoolParams::with_stride(2, 2);
+    let _ = max_pool2d_ctx(&x, &pp, &ctx);
+    let marks = ctx.alloc_events();
+    let _ = conv2d_ctx(&x, &w, None, &p, &ctx);
+    let _ = max_pool2d_ctx(&x, &pp, &ctx);
+    assert_eq!(ctx.alloc_events(), marks, "steady state must reuse the arena");
+}
+
+/// A model forward through a shared multi-threaded ctx matches the
+/// single-threaded forward bit-for-bit (the coordinator-backend setup).
+#[test]
+fn model_forward_deterministic_across_thread_counts() {
+    use swconv::nn::zoo;
+    let m = zoo::simple_cnn(10, 7);
+    let x = Tensor::randn(&[3, 1, 28, 28], 960);
+    let one = m.forward(&x, &ExecCtx::with_threads(ConvAlgo::Sliding, 1));
+    let many = m.forward(&x, &ExecCtx::with_threads(ConvAlgo::Sliding, 4));
+    assert_eq!(one.as_slice(), many.as_slice());
+}

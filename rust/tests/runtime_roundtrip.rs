@@ -56,7 +56,7 @@ fn model_artifact_matches_native_model_on_shared_weights() {
         .expect("weights");
     let x = Tensor::rand_uniform(&[8, 1, 28, 28], -1.0, 1.0, 33);
     let y_pjrt = e.execute("model_simple_cnn_sliding_b8", &[&x]).expect("pjrt");
-    let y_native = model.forward(&x, &ExecCtx { algo: ConvAlgo::Sliding });
+    let y_native = model.forward(&x, &ExecCtx::new(ConvAlgo::Sliding));
     let d = y_pjrt.max_abs_diff(&y_native);
     assert!(d < 1e-4, "pjrt vs native diverge: {d}");
 }
