@@ -15,6 +15,8 @@
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example e2e_serve
+//! # intra x inter core-budget split for the native backends:
+//! cargo run --release --example e2e_serve -- --replicas 4 --threads 1
 //! ```
 //! Results are recorded in EXPERIMENTS.md §E2E.
 
@@ -42,7 +44,22 @@ fn synth_digit(seed: u64) -> Tensor {
     t
 }
 
+/// `--flag N` lookup over the example's argv (no parser dependency).
+fn flag(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a.as_str() == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 fn main() {
+    // The native backends' core budget: `--replicas` worker replicas per
+    // backend (inter-request), each with `--threads` kernel threads
+    // (intra-request). Defaults reproduce the single-replica setup.
+    let replicas = flag("--replicas", 1).max(1);
+    let threads = flag("--threads", 1).max(1);
     let artifacts = default_artifacts_dir();
     let have_artifacts = artifacts.join("manifest.json").exists();
 
@@ -61,8 +78,18 @@ fn main() {
     let model_gemm = load();
 
     let mut backends = vec![
-        BackendSpec::native("sliding", model_sliding, ExecCtx::new(ConvAlgo::Sliding)),
-        BackendSpec::native("gemm", model_gemm, ExecCtx::new(ConvAlgo::Im2colGemm)),
+        BackendSpec::native(
+            "sliding",
+            model_sliding,
+            ExecCtx::with_threads(ConvAlgo::Sliding, threads),
+        )
+        .with_replicas(replicas),
+        BackendSpec::native(
+            "gemm",
+            model_gemm,
+            ExecCtx::with_threads(ConvAlgo::Im2colGemm, threads),
+        )
+        .with_replicas(replicas),
     ];
     if have_artifacts {
         backends.push(BackendSpec::pjrt(
@@ -81,7 +108,10 @@ fn main() {
         BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
     );
 
-    println!("serving {N_REQUESTS} requests per backend over backends {names:?}\n");
+    println!(
+        "serving {N_REQUESTS} requests per backend over backends {names:?} \
+         ({replicas} replica(s) x {threads} kernel thread(s) for native)\n"
+    );
     let mut all_outputs: Vec<(String, Vec<Tensor>)> = Vec::new();
     for name in &names {
         let t0 = Instant::now();

@@ -51,6 +51,7 @@ fn run(
                 algo: algo.into(),
                 shape: case.id(),
                 threads,
+                replicas: 1,
                 ns_per_iter: secs * 1e9,
                 gflops: flops / secs / 1e9,
             });

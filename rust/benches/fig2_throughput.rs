@@ -36,6 +36,7 @@ fn push_records(rows: &[Fig2Row], records: &mut Vec<BenchRecord>) {
                 algo: algo.into(),
                 shape: case.id(),
                 threads: r.threads,
+                replicas: 1,
                 ns_per_iter: flops / gflops, // flops / (gflop/s * 1e9) * 1e9 ns
                 gflops,
             });

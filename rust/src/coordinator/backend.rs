@@ -1,12 +1,13 @@
-//! Inference backends: what a coordinator worker actually runs.
+//! Inference backends: what a coordinator replica actually runs.
 
 use crate::error::{bail, Result};
 use crate::nn::{ExecCtx, Model};
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
+use std::sync::Arc;
 
-/// A batched inference backend. Workers own their backend exclusively
-/// (`&mut self`), so implementations may keep scratch state.
+/// A batched inference backend. Replica workers own their backend
+/// exclusively (`&mut self`), so implementations may keep scratch state.
 ///
 /// Backends are **not** required to be `Send`: PJRT handles contain
 /// `Rc`s, so the coordinator constructs each backend *inside* its worker
@@ -25,21 +26,41 @@ pub trait Backend {
 /// — and with it the scratch arena — lives as long as the backend, so
 /// batched inference reuses buffers across requests instead of paying
 /// allocation churn per call.
+///
+/// By default the arena keeps its high-water scratch forever (fastest
+/// steady state); [`NativeBackend::with_trim_after`] caps the retained
+/// capacity after every batch so one outsized request can't pin memory
+/// for the backend's lifetime.
 pub struct NativeBackend {
     name: String,
     model: Model,
     ctx: ExecCtx,
+    trim_after: Option<usize>,
 }
 
 impl NativeBackend {
     /// Wrap a model + algorithm choice.
     pub fn new(name: impl Into<String>, model: Model, ctx: ExecCtx) -> Self {
-        NativeBackend { name: name.into(), model, ctx }
+        NativeBackend { name: name.into(), model, ctx, trim_after: None }
+    }
+
+    /// Arena retention knob: after each batch, trim the ctx's scratch
+    /// arena to at most `max_floats` retained `f32`s (see
+    /// [`ExecCtx::trim`]). The working set of the *current* batch is
+    /// unaffected — only what stays cached between batches is bounded.
+    pub fn with_trim_after(mut self, max_floats: usize) -> Self {
+        self.trim_after = Some(max_floats);
+        self
     }
 
     /// The wrapped model.
     pub fn model(&self) -> &Model {
         &self.model
+    }
+
+    /// The backend-owned execution context (scratch arena + threads).
+    pub fn ctx(&self) -> &ExecCtx {
+        &self.ctx
     }
 }
 
@@ -53,40 +74,100 @@ impl Backend for NativeBackend {
     }
 
     fn infer(&mut self, batch: &Tensor) -> Result<Tensor> {
-        Ok(self.model.forward(batch, &self.ctx))
+        let out = self.model.forward(batch, &self.ctx);
+        if let Some(cap) = self.trim_after {
+            self.ctx.trim(cap);
+        }
+        Ok(out)
     }
 }
 
-/// How a coordinator worker constructs its backend. The factory runs on
-/// the worker thread itself (PJRT handles are not `Send`), so only the
-/// spec — not the backend — crosses threads.
+/// The factory a replica worker runs (on its own thread — PJRT handles
+/// are not `Send`, so only the spec crosses threads) to build its
+/// backend instance. Called once per replica with the replica index.
+pub type BackendFactory = Arc<dyn Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync>;
+
+/// How the coordinator constructs a backend's serving tier: the router
+/// key, the validated item shape, how many replica workers to spawn and
+/// the factory each replica runs. With `replicas > 1` the coordinator
+/// shards formed batches across the replicas (see
+/// [`super::shard::ShardPlanner`]); each replica gets its own backend
+/// instance and therefore its own `ExecCtx`/engine state, while native
+/// replicas share model weights through [`Model`]'s `Arc`-backed clone.
 pub struct BackendSpec {
     /// Router key.
     pub name: String,
     /// Per-item input shape the router validates against.
     pub item_shape: Vec<usize>,
-    /// Constructor, run once on the worker thread.
-    pub factory: Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>,
+    /// Replica worker threads (clamped to ≥ 1 by the coordinator).
+    pub replicas: usize,
+    /// Constructor, run once per replica on the replica's thread.
+    pub factory: BackendFactory,
 }
 
 impl BackendSpec {
-    /// Spec for a native (Rust kernels) backend.
+    /// Spec from a raw factory closure (the replica index is passed in;
+    /// most factories ignore it).
+    pub fn from_factory(
+        name: impl Into<String>,
+        item_shape: Vec<usize>,
+        factory: impl Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
+    ) -> Self {
+        BackendSpec { name: name.into(), item_shape, replicas: 1, factory: Arc::new(factory) }
+    }
+
+    /// Set the replica count (builder style; clamped to ≥ 1).
+    pub fn with_replicas(mut self, replicas: usize) -> Self {
+        self.replicas = replicas.max(1);
+        self
+    }
+
+    /// Spec for a native (Rust kernels) backend. Every replica clones
+    /// the model (sharing weights) and the ctx (fresh arena, same
+    /// algorithm + thread count).
     pub fn native(name: impl Into<String>, model: Model, ctx: ExecCtx) -> Self {
+        Self::native_spec(name, model, ctx, None)
+    }
+
+    /// [`BackendSpec::native`] with the arena retention knob: each
+    /// replica trims its scratch arena to `trim_after` floats after
+    /// every batch (see [`NativeBackend::with_trim_after`]).
+    pub fn native_trimmed(
+        name: impl Into<String>,
+        model: Model,
+        ctx: ExecCtx,
+        trim_after: usize,
+    ) -> Self {
+        Self::native_spec(name, model, ctx, Some(trim_after))
+    }
+
+    fn native_spec(
+        name: impl Into<String>,
+        model: Model,
+        ctx: ExecCtx,
+        trim_after: Option<usize>,
+    ) -> Self {
         let name = name.into();
         let item_shape = model.input_shape.clone();
         let n2 = name.clone();
         BackendSpec {
             name,
             item_shape,
-            factory: Box::new(move || {
-                Ok(Box::new(NativeBackend::new(n2, model, ctx)) as Box<dyn Backend>)
+            replicas: 1,
+            factory: Arc::new(move |_replica| {
+                let mut b = NativeBackend::new(n2.clone(), model.clone(), ctx.clone());
+                if let Some(cap) = trim_after {
+                    b = b.with_trim_after(cap);
+                }
+                Ok(Box::new(b) as Box<dyn Backend>)
             }),
         }
     }
 
     /// Spec for a PJRT artifact backend. `item_shape` must match the
     /// artifact's input with the batch dimension stripped (validated when
-    /// the worker constructs the backend).
+    /// each replica constructs its backend; every replica loads its own
+    /// engine, since PJRT handles cannot be shared across threads).
     pub fn pjrt(
         name: impl Into<String>,
         artifacts_dir: impl Into<std::path::PathBuf>,
@@ -101,9 +182,10 @@ impl BackendSpec {
         BackendSpec {
             name,
             item_shape,
-            factory: Box::new(move || {
-                let engine = Engine::new(dir)?;
-                let b = PjrtBackend::new(n2, engine, &artifact)?;
+            replicas: 1,
+            factory: Arc::new(move |_replica| {
+                let engine = Engine::new(dir.clone())?;
+                let b = PjrtBackend::new(n2.clone(), engine, &artifact)?;
                 if b.item_shape() != expect {
                     bail!(
                         "artifact '{artifact}' item shape {:?} != declared {:?}",
@@ -126,6 +208,10 @@ pub struct PjrtBackend {
     artifact: String,
     item_shape: Vec<usize>,
     artifact_batch: usize,
+    /// Output shape with the batch dimension stripped, captured from the
+    /// manifest at construction — a manifest miss is therefore a
+    /// construction-time `Err`, never a request-path panic.
+    out_item_shape: Vec<usize>,
 }
 
 impl PjrtBackend {
@@ -140,12 +226,16 @@ impl PjrtBackend {
         if shape.is_empty() {
             bail!("artifact '{artifact}' input has rank 0");
         }
+        if spec.output.is_empty() {
+            bail!("artifact '{artifact}' output has rank 0");
+        }
         Ok(PjrtBackend {
             name: name.into(),
             engine,
             artifact: artifact.to_string(),
             item_shape: shape[1..].to_vec(),
             artifact_batch: shape[0],
+            out_item_shape: spec.output[1..].to_vec(),
         })
     }
 }
@@ -162,14 +252,7 @@ impl Backend for PjrtBackend {
     fn infer(&mut self, batch: &Tensor) -> Result<Tensor> {
         let b = batch.dim(0);
         let item: usize = self.item_shape.iter().product();
-        let spec_out = self
-            .engine
-            .manifest()
-            .find(&self.artifact)
-            .expect("artifact known")
-            .output
-            .clone();
-        let out_item: usize = spec_out[1..].iter().product();
+        let out_item: usize = self.out_item_shape.iter().product();
         let mut out_data = Vec::with_capacity(b * out_item);
 
         let mut done = 0;
@@ -188,7 +271,7 @@ impl Backend for PjrtBackend {
             done += chunk;
         }
         let mut out_shape = vec![b];
-        out_shape.extend_from_slice(&spec_out[1..]);
+        out_shape.extend_from_slice(&self.out_item_shape);
         Ok(Tensor::from_vec(out_data, &out_shape))
     }
 }
@@ -249,5 +332,70 @@ mod tests {
         // Work items are computed identically on every partition, so the
         // outputs are bit-identical, not merely close.
         assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    /// REGRESSION (arena retention knob) — after a one-off huge request,
+    /// a trimmed backend's retained scratch stays bounded while an
+    /// untrimmed one keeps its high-water mark.
+    #[test]
+    fn trim_after_bounds_retained_scratch() {
+        const CAP: usize = 64 * 1024; // 256 KiB of f32 scratch
+        let mut capped = NativeBackend::new(
+            "capped",
+            simple_cnn(10, 1),
+            ExecCtx::new(ConvAlgo::Im2colGemm),
+        )
+        .with_trim_after(CAP);
+        let mut uncapped = NativeBackend::new(
+            "uncapped",
+            simple_cnn(10, 1),
+            ExecCtx::new(ConvAlgo::Im2colGemm),
+        );
+
+        // One-off huge batch, then a small steady-state request.
+        let huge = Tensor::randn(&[16, 1, 28, 28], 7);
+        let small = Tensor::randn(&[1, 1, 28, 28], 8);
+        let a = capped.infer(&huge).unwrap();
+        let b = uncapped.infer(&huge).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice(), "trimming must not change results");
+        capped.infer(&small).unwrap();
+        uncapped.infer(&small).unwrap();
+
+        assert!(
+            capped.ctx().arena_floats() <= CAP,
+            "retained {} floats > cap {CAP}",
+            capped.ctx().arena_floats()
+        );
+        assert!(
+            uncapped.ctx().arena_floats() > capped.ctx().arena_floats(),
+            "untrimmed backend should retain its high-water scratch \
+             (untrimmed {}, trimmed {})",
+            uncapped.ctx().arena_floats(),
+            capped.ctx().arena_floats()
+        );
+    }
+
+    #[test]
+    fn spec_builders_set_replicas() {
+        let s = BackendSpec::native("a", simple_cnn(10, 1), ExecCtx::default());
+        assert_eq!(s.replicas, 1);
+        let s = s.with_replicas(4);
+        assert_eq!(s.replicas, 4);
+        assert_eq!(s.with_replicas(0).replicas, 1, "clamped to >= 1");
+    }
+
+    #[test]
+    fn native_factory_is_repeatable_and_replicas_agree() {
+        let spec = BackendSpec::native(
+            "sliding",
+            simple_cnn(10, 1),
+            ExecCtx::new(ConvAlgo::Sliding),
+        );
+        let mut r0 = spec.factory.as_ref()(0).unwrap();
+        let mut r1 = spec.factory.as_ref()(1).unwrap();
+        let x = Tensor::randn(&[2, 1, 28, 28], 9);
+        let a = r0.infer(&x).unwrap();
+        let b = r1.infer(&x).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice(), "replicas share weights");
     }
 }

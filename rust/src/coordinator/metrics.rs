@@ -1,11 +1,16 @@
 //! Latency/throughput metrics for the serving path.
+//!
+//! Each backend **replica** owns one [`LatencyHistogram`] (recorded from
+//! its worker thread only, so the lock is uncontended); the coordinator
+//! builds the backend-level view by merging the per-replica histograms
+//! with [`LatencyHistogram::aggregate`].
 
 use std::sync::Mutex;
 use std::time::Duration;
 
 /// Log-scale latency histogram (power-of-two microsecond buckets) plus
 /// counters. Cheap to record (one atomic-free locked increment; the
-/// coordinator records from a single worker thread per backend).
+/// coordinator records from a single worker thread per replica).
 #[derive(Debug)]
 pub struct LatencyHistogram {
     inner: Mutex<Inner>,
@@ -32,16 +37,7 @@ impl Default for LatencyHistogram {
 impl LatencyHistogram {
     /// Empty histogram.
     pub fn new() -> Self {
-        LatencyHistogram {
-            inner: Mutex::new(Inner {
-                buckets: [0; 32],
-                count: 0,
-                total_us: 0,
-                max_us: 0,
-                items: 0,
-                batches: 0,
-            }),
-        }
+        LatencyHistogram { inner: Mutex::new(Inner::empty()) }
     }
 
     /// Record one request latency.
@@ -64,21 +60,55 @@ impl LatencyHistogram {
 
     /// Snapshot for reporting.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let g = self.inner.lock().unwrap();
-        MetricsSnapshot {
-            count: g.count,
-            mean: Duration::from_micros(if g.count == 0 { 0 } else { g.total_us / g.count }),
-            p50: g.quantile(0.50),
-            p95: g.quantile(0.95),
-            p99: g.quantile(0.99),
-            max: Duration::from_micros(g.max_us),
-            items: g.items,
-            batches: g.batches,
+        self.inner.lock().unwrap().snapshot()
+    }
+
+    /// Merge any number of histograms (one per replica) into a single
+    /// backend-level snapshot. Quantiles are computed on the summed
+    /// buckets, so the aggregate has the same log-bucket resolution as
+    /// any individual histogram — not an average of averages.
+    pub fn aggregate<'a>(
+        histograms: impl IntoIterator<Item = &'a LatencyHistogram>,
+    ) -> MetricsSnapshot {
+        let mut acc = Inner::empty();
+        for h in histograms {
+            acc.absorb(&h.inner.lock().unwrap());
         }
+        acc.snapshot()
     }
 }
 
 impl Inner {
+    fn empty() -> Inner {
+        Inner { buckets: [0; 32], count: 0, total_us: 0, max_us: 0, items: 0, batches: 0 }
+    }
+
+    /// Add another histogram's counts into this one.
+    fn absorb(&mut self, o: &Inner) {
+        for (a, b) in self.buckets.iter_mut().zip(o.buckets.iter()) {
+            *a += b;
+        }
+        self.count += o.count;
+        self.total_us += o.total_us;
+        self.max_us = self.max_us.max(o.max_us);
+        self.items += o.items;
+        self.batches += o.batches;
+    }
+
+    fn snapshot(&self) -> MetricsSnapshot {
+        let mean_us = if self.count == 0 { 0 } else { self.total_us / self.count };
+        MetricsSnapshot {
+            count: self.count,
+            mean: Duration::from_micros(mean_us),
+            p50: self.quantile(0.50),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            max: Duration::from_micros(self.max_us),
+            items: self.items,
+            batches: self.batches,
+        }
+    }
+
     /// Upper edge of the bucket containing quantile `q` (log-bucket
     /// resolution: within 2× of the true value).
     fn quantile(&self, q: f64) -> Duration {
@@ -114,7 +144,7 @@ pub struct MetricsSnapshot {
     pub max: Duration,
     /// Items processed in batches.
     pub items: u64,
-    /// Batches processed.
+    /// Batches processed (for a replicated backend: shards executed).
     pub batches: u64,
 }
 
@@ -187,5 +217,37 @@ mod tests {
         let h = LatencyHistogram::new();
         h.record(Duration::from_millis(3));
         assert!(h.snapshot().summary().contains("n=1"));
+    }
+
+    #[test]
+    fn aggregate_sums_replica_histograms() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        for i in 1..=10u64 {
+            a.record(Duration::from_micros(i * 10));
+        }
+        b.record(Duration::from_millis(50));
+        a.record_batch(3);
+        b.record_batch(5);
+        let s = LatencyHistogram::aggregate([&a, &b]);
+        assert_eq!(s.count, 11);
+        assert_eq!(s.items, 8);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.max, Duration::from_millis(50));
+        // The slow outlier lives in the aggregate's tail, not its median.
+        assert!(s.p50 < Duration::from_millis(1));
+        assert!(s.p99 >= Duration::from_millis(32));
+        // Aggregating one histogram is the identity.
+        let solo = LatencyHistogram::aggregate([&b]);
+        assert_eq!(solo.count, 1);
+        assert_eq!(solo.items, 5);
+    }
+
+    #[test]
+    fn aggregate_of_nothing_is_empty() {
+        let s = LatencyHistogram::aggregate(std::iter::empty());
+        assert_eq!(s.count, 0);
+        assert_eq!(s.batches, 0);
+        assert_eq!(s.p95, Duration::ZERO);
     }
 }

@@ -1,26 +1,38 @@
 //! The serving coordinator — L3 of the stack.
 //!
 //! The paper's contribution is a kernel, so the coordinator is a thin but
-//! real inference driver: a request router in front of per-backend worker
-//! threads, each with a dynamic batcher (size + deadline), latency
-//! metrics, and a choice of backend:
+//! real inference driver: a request router in front of per-backend
+//! serving tiers. Each tier is a dynamic batcher (size + deadline)
+//! feeding a [`shard::ShardPlanner`] that splits formed batches across
+//! `replicas` worker threads — the *inter*-request parallelism axis,
+//! complementing the *intra*-kernel threads each replica's
+//! [`crate::nn::ExecCtx`] owns (ZNNi's core/batch trade-off,
+//! arXiv:1606.05688). Backends:
 //!
 //! * [`backend::NativeBackend`] — the Rust kernel library executing a
-//!   [`crate::nn::Model`] with a per-backend [`crate::nn::ExecCtx`]
-//!   (i.e. GEMM vs Sliding Window on identical weights).
+//!   [`crate::nn::Model`] with a per-replica [`crate::nn::ExecCtx`]
+//!   (i.e. GEMM vs Sliding Window on identical, `Arc`-shared weights).
 //! * [`backend::PjrtBackend`] — an AOT JAX/Pallas artifact executed via
 //!   [`crate::runtime::Engine`] (Python never on the request path).
 //!
+//! The serving path is panic-proof: a panic inside `Backend::infer` (or
+//! its factory) is caught, answered as [`server::InferError::Backend`],
+//! and the replica keeps draining its queue. Per-replica
+//! [`metrics::LatencyHistogram`]s merge into a backend-level snapshot
+//! via [`metrics::LatencyHistogram::aggregate`].
+//!
 //! tokio is unavailable in this offline environment; the coordinator uses
-//! std threads + channels, which for a single-node single-core serving
-//! driver is equivalent (documented in DESIGN.md §Substitutions).
+//! std threads + channels, which for a single-node serving driver is
+//! equivalent (documented in DESIGN.md §Substitutions).
 
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
 pub mod server;
+pub mod shard;
 
-pub use backend::{Backend, BackendSpec, NativeBackend, PjrtBackend};
+pub use backend::{Backend, BackendFactory, BackendSpec, NativeBackend, PjrtBackend};
 pub use batcher::BatchPolicy;
 pub use metrics::{LatencyHistogram, MetricsSnapshot};
 pub use server::{Coordinator, InferError, InferResponse};
+pub use shard::ShardPlanner;

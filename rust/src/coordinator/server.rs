@@ -1,18 +1,34 @@
-//! The coordinator: a router in front of per-backend worker threads,
-//! each running a dynamic-batching loop.
+//! The coordinator: a router in front of per-backend serving tiers,
+//! each a batch planner plus N replica worker threads.
 //!
 //! ```text
-//! client ──submit(backend, item)──▶ router ──queue──▶ worker(backend A)
-//!                                        └────queue──▶ worker(backend B)
-//! worker: next_batch → stack items → Backend::infer → split → reply
+//! client ──submit(backend, item)──▶ router ──queue──▶ planner(backend A)
+//!                                        └────queue──▶ planner(backend B)
+//! planner: next_batch → ShardPlanner → per-replica sub-batches
+//! replica: stack shard → Backend::infer (panic-proof) → split → reply
 //! ```
+//!
+//! Each backend runs `replicas` worker threads (see
+//! [`super::backend::BackendSpec::with_replicas`]); every replica
+//! constructs its own backend instance *on* its thread, so non-`Send`
+//! backends (PJRT) and per-replica scratch (`ExecCtx` arenas) both work.
+//! The planner splits formed batches across idle replicas — round-robin
+//! for small batches, scatter/gather for large ones (policy in
+//! [`super::shard`]) — and each request's reply channel reassembles the
+//! answer, so no request is lost or duplicated by sharding.
+//!
+//! The serving path is panic-proof: a panic inside `Backend::infer`
+//! answers the shard with [`InferError::Backend`] and the replica keeps
+//! serving later requests instead of wedging its queue.
 
-use super::backend::{Backend, BackendSpec};
+use super::backend::{Backend, BackendFactory, BackendSpec};
 use super::batcher::{next_batch, BatchOutcome, BatchPolicy};
 use super::metrics::{LatencyHistogram, MetricsSnapshot};
+use super::shard::{ShardPlanner, BROKEN_REPLICA_BIAS};
 use crate::tensor::Tensor;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -41,7 +57,8 @@ pub enum InferError {
         /// What the request carried.
         got: Vec<usize>,
     },
-    /// The backend failed.
+    /// The backend failed (an `Err` from `Backend::infer`, a panic
+    /// inside it, or a malformed output batch).
     Backend(String),
     /// The coordinator is shutting down.
     Shutdown,
@@ -69,51 +86,69 @@ struct Request {
     reply: Sender<InferResponse>,
 }
 
+/// Planner-side handle to one replica worker.
+struct ReplicaHandle {
+    queue: Sender<Vec<Request>>,
+    /// Shards dispatched but not yet finished (queue depth); the shard
+    /// planner treats a replica with zero as idle. A replica whose
+    /// factory failed — or whose thread died — carries
+    /// [`BROKEN_REPLICA_BIAS`] so the planner excludes it while healthy
+    /// replicas remain.
+    in_flight: Arc<AtomicUsize>,
+}
+
+/// One backend's serving tier, as seen by the router.
 struct Worker {
     queue: Sender<Request>,
     item_shape: Vec<usize>,
-    metrics: Arc<LatencyHistogram>,
-    join: JoinHandle<()>,
+    /// One histogram per replica, index-aligned with the replica threads.
+    replica_metrics: Vec<Arc<LatencyHistogram>>,
+    /// Planner thread + replica threads.
+    joins: Vec<JoinHandle<()>>,
 }
 
-/// The request router + worker pool.
+/// The request router + replicated worker pool.
 pub struct Coordinator {
     workers: HashMap<String, Worker>,
     next_id: AtomicU64,
 }
 
 impl Coordinator {
-    /// Build a coordinator: one worker thread per backend spec, each with
-    /// its own queue and batch policy. The backend itself is constructed
-    /// *on* the worker thread (PJRT handles are not `Send`); if the
-    /// factory fails, the worker answers every request with the error.
+    /// Build a coordinator: per backend spec, one planner thread plus
+    /// `spec.replicas` replica worker threads, each constructing its own
+    /// backend instance *on* the replica thread (PJRT handles are not
+    /// `Send`). A factory that fails — or panics — turns that replica
+    /// into an error responder instead of wedging the tier.
     pub fn new(backends: Vec<BackendSpec>, policy: BatchPolicy) -> Self {
         let mut workers = HashMap::new();
         for spec in backends {
+            let BackendSpec { name, item_shape, replicas, factory } = spec;
+            let replicas = replicas.max(1);
             let (tx, rx) = channel::<Request>();
-            let metrics = Arc::new(LatencyHistogram::new());
-            let m2 = Arc::clone(&metrics);
-            let name = spec.name.clone();
-            let item_shape = spec.item_shape.clone();
-            let factory = spec.factory;
+            let mut replica_metrics = Vec::with_capacity(replicas);
+            let mut joins = Vec::with_capacity(replicas + 1);
+            let mut handles = Vec::with_capacity(replicas);
+            for r in 0..replicas {
+                let (stx, srx) = channel::<Vec<Request>>();
+                let metrics = Arc::new(LatencyHistogram::new());
+                let in_flight = Arc::new(AtomicUsize::new(0));
+                let m2 = Arc::clone(&metrics);
+                let if2 = Arc::clone(&in_flight);
+                let f2: BackendFactory = Arc::clone(&factory);
+                let join = std::thread::Builder::new()
+                    .name(format!("swconv-{name}-r{r}"))
+                    .spawn(move || replica_main(&f2, r, &srx, &m2, &if2))
+                    .expect("spawn replica worker");
+                replica_metrics.push(metrics);
+                joins.push(join);
+                handles.push(ReplicaHandle { queue: stx, in_flight });
+            }
             let join = std::thread::Builder::new()
-                .name(format!("swconv-worker-{name}"))
-                .spawn(move || match factory() {
-                    Ok(mut b) => worker_loop(&mut *b, &rx, policy, &m2),
-                    Err(e) => {
-                        let msg = e.to_string();
-                        // Answer everything with the construction error.
-                        while let Ok(r) = rx.recv() {
-                            let _ = r.reply.send(InferResponse {
-                                id: r.id,
-                                output: Err(InferError::Backend(msg.clone())),
-                                latency: r.submitted.elapsed(),
-                            });
-                        }
-                    }
-                })
-                .expect("spawn worker");
-            workers.insert(name, Worker { queue: tx, item_shape, metrics, join });
+                .name(format!("swconv-{name}-planner"))
+                .spawn(move || planner_loop(&rx, policy, handles))
+                .expect("spawn batch planner");
+            joins.push(join);
+            workers.insert(name, Worker { queue: tx, item_shape, replica_metrics, joins });
         }
         Coordinator { workers, next_id: AtomicU64::new(0) }
     }
@@ -123,6 +158,11 @@ impl Coordinator {
         let mut v: Vec<String> = self.workers.keys().cloned().collect();
         v.sort();
         v
+    }
+
+    /// Replica count for one backend.
+    pub fn replicas(&self, backend: &str) -> Option<usize> {
+        self.workers.get(backend).map(|w| w.replica_metrics.len())
     }
 
     /// Submit one item to a backend; the response arrives on the returned
@@ -156,18 +196,29 @@ impl Coordinator {
         rx.recv().map_err(|_| InferError::Shutdown)
     }
 
-    /// Metrics snapshot for one backend.
+    /// Aggregated metrics snapshot for one backend (all replicas merged;
+    /// `batches` counts executed shards).
     pub fn metrics(&self, backend: &str) -> Option<MetricsSnapshot> {
-        self.workers.get(backend).map(|w| w.metrics.snapshot())
+        self.workers
+            .get(backend)
+            .map(|w| LatencyHistogram::aggregate(w.replica_metrics.iter().map(Arc::as_ref)))
     }
 
-    /// Shut down: close queues and join workers. In-flight requests are
-    /// completed first.
+    /// Per-replica metrics snapshots for one backend, index-aligned with
+    /// the replica threads.
+    pub fn replica_metrics(&self, backend: &str) -> Option<Vec<MetricsSnapshot>> {
+        self.workers
+            .get(backend)
+            .map(|w| w.replica_metrics.iter().map(|m| m.snapshot()).collect())
+    }
+
+    /// Shut down: close queues and join planners + replicas. In-flight
+    /// requests are completed first.
     pub fn shutdown(self) {
         let mut joins = Vec::new();
         for (_, w) in self.workers {
             drop(w.queue);
-            joins.push(w.join);
+            joins.extend(w.joins);
         }
         for j in joins {
             let _ = j.join();
@@ -175,68 +226,198 @@ impl Coordinator {
     }
 }
 
-fn worker_loop(
-    backend: &mut dyn Backend,
-    rx: &Receiver<Request>,
-    policy: BatchPolicy,
-    metrics: &LatencyHistogram,
-) {
-    let item_shape = backend.item_shape().to_vec();
-    let item: usize = item_shape.iter().product();
+/// Per-backend batch planner: form batches, split them across replicas.
+/// Exits (dropping the replica queues, which stops the replicas) when
+/// the router side closes.
+fn planner_loop(rx: &Receiver<Request>, policy: BatchPolicy, replicas: Vec<ReplicaHandle>) {
+    let mut planner = ShardPlanner::new(replicas.len());
+    let mut in_flight = vec![0usize; replicas.len()];
     loop {
-        let batch = match next_batch(rx, &policy) {
+        let mut batch = match next_batch(rx, &policy) {
             BatchOutcome::Batch(b) => b,
             BatchOutcome::Closed => return,
         };
-        let b = batch.len();
-        metrics.record_batch(b);
-
-        // Stack items into [b, …item_shape].
-        let mut data = Vec::with_capacity(b * item);
-        for r in &batch {
-            data.extend_from_slice(r.input.as_slice());
+        for (c, h) in in_flight.iter_mut().zip(&replicas) {
+            *c = h.in_flight.load(Ordering::Acquire);
         }
-        let mut shape = vec![b];
-        shape.extend_from_slice(&item_shape);
-        let stacked = Tensor::from_vec(data, &shape);
-
-        match backend.infer(&stacked) {
-            Ok(out) => {
-                let out_item: usize = out.dims()[1..].iter().product();
-                let out_shape = out.dims()[1..].to_vec();
-                for (i, r) in batch.into_iter().enumerate() {
-                    let row = out.as_slice()[i * out_item..(i + 1) * out_item].to_vec();
+        for (replica, range) in planner.plan(batch.len(), &in_flight) {
+            // Ranges are ascending and contiguous: peel off the front.
+            let rest = batch.split_off(range.len());
+            let shard = std::mem::replace(&mut batch, rest);
+            let h = &replicas[replica];
+            h.in_flight.fetch_add(1, Ordering::AcqRel);
+            if let Err(e) = h.queue.send(shard) {
+                // Replica thread is gone (a catastrophic panic outside
+                // the guarded region): answer rather than drop, and
+                // tombstone the replica so the planner stops routing to
+                // it. The guard keeps repeated failures from wrapping
+                // the counter; only this planner thread writes the bias.
+                for r in e.0 {
                     let latency = r.submitted.elapsed();
-                    metrics.record(latency);
                     let _ = r.reply.send(InferResponse {
                         id: r.id,
-                        output: Ok(Tensor::from_vec(row, &out_shape)),
+                        output: Err(InferError::Shutdown),
                         latency,
                     });
                 }
-            }
-            Err(e) => {
-                let msg = e.to_string();
-                for r in batch {
-                    let latency = r.submitted.elapsed();
-                    let _ = r.reply.send(InferResponse {
-                        id: r.id,
-                        output: Err(InferError::Backend(msg.clone())),
-                        latency,
-                    });
+                h.in_flight.fetch_sub(1, Ordering::AcqRel);
+                if h.in_flight.load(Ordering::Acquire) < BROKEN_REPLICA_BIAS {
+                    h.in_flight.fetch_add(BROKEN_REPLICA_BIAS, Ordering::AcqRel);
                 }
             }
         }
     }
 }
 
+/// Replica thread body: build the backend (guarding against factory
+/// errors *and* panics), then serve shards until the planner hangs up.
+fn replica_main(
+    factory: &BackendFactory,
+    replica: usize,
+    rx: &Receiver<Vec<Request>>,
+    metrics: &LatencyHistogram,
+    in_flight: &AtomicUsize,
+) {
+    match catch_unwind(AssertUnwindSafe(|| factory.as_ref()(replica))) {
+        Ok(Ok(mut backend)) => replica_loop(&mut *backend, rx, metrics, in_flight),
+        Ok(Err(e)) => answer_all_with_error(rx, in_flight, &e.to_string()),
+        Err(p) => answer_all_with_error(
+            rx,
+            in_flight,
+            &format!("backend factory panicked: {}", panic_message(&p)),
+        ),
+    }
+}
+
+/// Construction failed: answer every shard with the error until close.
+/// The bias marks this replica dead so the planner routes around it
+/// while any healthy replica remains.
+fn answer_all_with_error(rx: &Receiver<Vec<Request>>, in_flight: &AtomicUsize, msg: &str) {
+    in_flight.fetch_add(BROKEN_REPLICA_BIAS, Ordering::AcqRel);
+    while let Ok(shard) = rx.recv() {
+        for r in shard {
+            let _ = r.reply.send(InferResponse {
+                id: r.id,
+                output: Err(InferError::Backend(msg.to_string())),
+                latency: r.submitted.elapsed(),
+            });
+        }
+        in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+fn replica_loop(
+    backend: &mut dyn Backend,
+    rx: &Receiver<Vec<Request>>,
+    metrics: &LatencyHistogram,
+    in_flight: &AtomicUsize,
+) {
+    let item_shape = backend.item_shape().to_vec();
+    let item: usize = item_shape.iter().product();
+    while let Ok(shard) = rx.recv() {
+        run_shard(backend, &item_shape, item, shard, metrics);
+        in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Execute one sub-batch end to end: stack, infer (panic-proof),
+/// validate the output batch dimension, split and reply per request.
+fn run_shard(
+    backend: &mut dyn Backend,
+    item_shape: &[usize],
+    item: usize,
+    batch: Vec<Request>,
+    metrics: &LatencyHistogram,
+) {
+    let b = batch.len();
+
+    // A panicking backend must not kill the replica: convert the panic
+    // into a per-request error and keep the worker loop alive. The
+    // guard covers the batch *stacking* too — a backend whose
+    // `item_shape()` disagrees with its spec would otherwise panic the
+    // thread in `Tensor::from_vec` before `infer` even runs. (The
+    // backend's own state is assumed recoverable — true for the native
+    // kernels, whose scratch is checked back in between batches.)
+    let outcome = match catch_unwind(AssertUnwindSafe(|| {
+        // Stack items into [b, …item_shape].
+        let mut data = Vec::with_capacity(b * item);
+        for r in &batch {
+            data.extend_from_slice(r.input.as_slice());
+        }
+        let mut shape = vec![b];
+        shape.extend_from_slice(item_shape);
+        backend.infer(&Tensor::from_vec(data, &shape))
+    })) {
+        Ok(Ok(out)) => {
+            // Never trust the backend's output geometry: a wrong batch
+            // dimension would slice-panic or silently mis-route rows.
+            if out.dims().is_empty() || out.dim(0) != b {
+                Err(InferError::Backend(format!(
+                    "backend '{}' returned output shape {:?} for a batch of {b}",
+                    backend.name(),
+                    out.dims()
+                )))
+            } else {
+                Ok(out)
+            }
+        }
+        Ok(Err(e)) => Err(InferError::Backend(e.to_string())),
+        Err(p) => Err(InferError::Backend(format!(
+            "backend '{}' panicked: {}",
+            backend.name(),
+            panic_message(&p)
+        ))),
+    };
+
+    match outcome {
+        Ok(out) => {
+            // Batch accounting happens only for *served* shards so that
+            // items/batches stay consistent with count/latency (which
+            // also exclude failures).
+            metrics.record_batch(b);
+            let out_item: usize = out.dims()[1..].iter().product();
+            let out_shape = out.dims()[1..].to_vec();
+            for (i, r) in batch.into_iter().enumerate() {
+                let row = out.as_slice()[i * out_item..(i + 1) * out_item].to_vec();
+                let latency = r.submitted.elapsed();
+                metrics.record(latency);
+                let _ = r.reply.send(InferResponse {
+                    id: r.id,
+                    output: Ok(Tensor::from_vec(row, &out_shape)),
+                    latency,
+                });
+            }
+        }
+        Err(e) => {
+            // Errored requests are answered but not recorded as
+            // latencies: the histogram tracks served inferences.
+            for r in batch {
+                let latency = r.submitted.elapsed();
+                let _ = r.reply.send(InferResponse {
+                    id: r.id,
+                    output: Err(e.clone()),
+                    latency,
+                });
+            }
+        }
+    }
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> &str {
+    p.downcast_ref::<&'static str>()
+        .copied()
+        .or_else(|| p.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("opaque panic payload")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::backend::BackendSpec;
     use crate::kernels::ConvAlgo;
     use crate::nn::zoo::simple_cnn;
     use crate::nn::ExecCtx;
-    use crate::coordinator::backend::BackendSpec;
     use std::time::Duration;
 
     fn coord() -> Coordinator {
@@ -309,6 +490,114 @@ mod tests {
         let a = c.infer("sliding", x.clone()).unwrap().output.unwrap();
         let b = c.infer("gemm", x).unwrap().output.unwrap();
         assert!(a.allclose(&b, 1e-4));
+        c.shutdown();
+    }
+
+    #[test]
+    fn replicated_backend_serves_and_aggregates_metrics() {
+        let c = Coordinator::new(
+            vec![BackendSpec::native(
+                "sliding",
+                simple_cnn(10, 1),
+                ExecCtx::new(ConvAlgo::Sliding),
+            )
+            .with_replicas(3)],
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        );
+        assert_eq!(c.replicas("sliding"), Some(3));
+        let rxs: Vec<_> = (0..24)
+            .map(|i| c.submit("sliding", Tensor::randn(&[1, 28, 28], i as u64)).unwrap())
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().output.is_ok());
+        }
+        let agg = c.metrics("sliding").unwrap();
+        assert_eq!(agg.count, 24);
+        assert_eq!(agg.items, 24);
+        let per = c.replica_metrics("sliding").unwrap();
+        assert_eq!(per.len(), 3);
+        assert_eq!(per.iter().map(|m| m.items).sum::<u64>(), 24);
+        c.shutdown();
+    }
+
+    /// REGRESSION — a replica whose factory failed must not attract
+    /// traffic: its error responder biases its queue depth, so after at
+    /// most one error the planner steers every subsequent request to
+    /// the healthy replica. Without the bias, the broken replica reads
+    /// as permanently idle and the idle preference keeps feeding it.
+    #[test]
+    fn broken_replica_does_not_attract_traffic() {
+        struct Echo;
+        impl Backend for Echo {
+            fn name(&self) -> &str {
+                "echo"
+            }
+            fn item_shape(&self) -> &[usize] {
+                &[2]
+            }
+            fn infer(&mut self, batch: &Tensor) -> crate::error::Result<Tensor> {
+                Ok(batch.clone())
+            }
+        }
+        let spec = BackendSpec::from_factory("half-broken", vec![2], |replica| {
+            if replica == 0 {
+                crate::bail!("replica 0 refuses to start");
+            }
+            Ok(Box::new(Echo))
+        })
+        .with_replicas(2);
+        let c = Coordinator::new(
+            vec![spec],
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        );
+        // Warm-up: the first requests may race the broken replica's
+        // startup (its bias might not be set when the planner first
+        // looks). Two sequential round trips guarantee the planner has
+        // either routed to replica 0 (whose error reply proves the bias
+        // is set) or already observed the bias and avoided it.
+        let mut warmup_errors = 0;
+        for _ in 0..2 {
+            let r = c.infer("half-broken", Tensor::zeros(&[2])).unwrap();
+            if r.output.is_err() {
+                warmup_errors += 1;
+            }
+        }
+        assert!(warmup_errors <= 1, "healthy replica must answer at least one warm-up");
+        // Steady state, small batches: every request lands on the
+        // healthy replica.
+        for i in 0..10 {
+            let r = c.infer("half-broken", Tensor::full(&[2], i as f32)).unwrap();
+            assert!(r.output.is_ok(), "small batch routed to dead replica: {:?}", r.output);
+        }
+        // Steady state, burst: formed batches are > 1 item, so this
+        // exercises the scatter path, which must exclude the dead
+        // replica rather than hand it a sub-batch.
+        let rxs: Vec<_> = (0..16)
+            .map(|i| c.submit("half-broken", Tensor::full(&[2], i as f32)).unwrap())
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.output.is_ok(), "burst shard routed to dead replica: {:?}", r.output);
+        }
+        c.shutdown();
+    }
+
+    /// REGRESSION — a panicking factory answers requests with the panic
+    /// message instead of hanging the tier.
+    #[test]
+    fn panicking_factory_reports_errors() {
+        let spec = BackendSpec::from_factory("boom", vec![2], |_r| {
+            panic!("factory exploded")
+        });
+        let c = Coordinator::new(
+            vec![spec],
+            BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+        );
+        let r = c.infer("boom", Tensor::zeros(&[2])).unwrap();
+        match r.output {
+            Err(InferError::Backend(msg)) => assert!(msg.contains("factory exploded"), "{msg}"),
+            other => panic!("expected backend error, got {other:?}"),
+        }
         c.shutdown();
     }
 }

@@ -1,0 +1,284 @@
+//! The shard planner: how a formed batch is spread across a backend's
+//! replicas.
+//!
+//! ZNNi's core observation (arXiv:1606.05688) is that CPU inference
+//! throughput is a question of *where* to spend cores — inside the
+//! kernel (intra-parallelism, `ExecCtx` threads) or across concurrent
+//! inputs (inter-parallelism, backend replicas). The coordinator's
+//! replica tier implements the second axis, and this module decides the
+//! split for each batch the batcher forms:
+//!
+//! * **Small batches** are routed whole, round-robin, preferring an idle
+//!   replica — splitting them would only add dispatch overhead.
+//! * **Large batches** are scattered: contiguous per-replica sub-batches
+//!   over the idle replicas (over the least-loaded replicas when fewer
+//!   than two are idle), so a burst is absorbed by every core at once.
+//!   Each request carries its own reply channel, so the "gather" is
+//!   per-request and needs no extra synchronisation barrier.
+//!
+//! The planner is pure (it maps a batch length + per-replica in-flight
+//! counts to index ranges), which keeps the policy unit-testable without
+//! threads or tensors.
+
+use std::ops::Range;
+
+/// Batches shorter than this are never split: one sub-batch per item
+/// only pays per-shard dispatch and wake-up cost without adding
+/// parallelism the kernel couldn't get from its own threads.
+pub const MIN_SCATTER_BATCH: usize = 2;
+
+/// Queue-depth level at which a replica counts as *dead* rather than
+/// busy. The coordinator adds this bias to a replica whose factory
+/// failed (its queue is answered by an error responder) or whose worker
+/// thread is gone, so the planner excludes it from every plan unless no
+/// live replica remains — without the bias an error responder drains
+/// instantly and the idle preference would steer *more* traffic at the
+/// broken replica than at healthy-but-busy ones. Huge but far from
+/// overflow: per-shard increments/decrements stay balanced on top.
+pub const BROKEN_REPLICA_BIAS: usize = usize::MAX / 2;
+
+/// Decides which replica(s) execute each formed batch.
+///
+/// Stateful only in its round-robin cursor; the in-flight counts come
+/// from the caller on every [`ShardPlanner::plan`] call so the planner
+/// never holds locks.
+#[derive(Debug)]
+pub struct ShardPlanner {
+    replicas: usize,
+    rr: usize,
+}
+
+impl ShardPlanner {
+    /// Planner over `replicas` replicas (clamped to ≥ 1).
+    pub fn new(replicas: usize) -> Self {
+        ShardPlanner { replicas: replicas.max(1), rr: 0 }
+    }
+
+    /// Number of replicas being planned over.
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Split a batch of `batch_len` requests into per-replica shards.
+    ///
+    /// `in_flight[i]` is replica `i`'s current queue depth (shards
+    /// dispatched but not yet finished); a replica is *idle* when it is
+    /// zero. Returns `(replica index, request index range)` assignments
+    /// whose ranges are ascending, disjoint and cover `0..batch_len`
+    /// exactly — the dispatcher peels sub-batches off the front in
+    /// order.
+    ///
+    /// # Panics
+    /// If `in_flight.len()` differs from the planner's replica count.
+    pub fn plan(&mut self, batch_len: usize, in_flight: &[usize]) -> Vec<(usize, Range<usize>)> {
+        assert_eq!(in_flight.len(), self.replicas, "in-flight counts per replica");
+        if batch_len == 0 {
+            return Vec::new();
+        }
+        if self.replicas == 1 {
+            return vec![(0, 0..batch_len)];
+        }
+        // Plan over the live replicas only; a dead replica (depth at or
+        // past [`BROKEN_REPLICA_BIAS`]) receives traffic only when
+        // nothing else is left, so its errors still surface instead of
+        // requests hanging.
+        let mut pool: Vec<usize> = (0..self.replicas)
+            .filter(|&i| in_flight[i] < BROKEN_REPLICA_BIAS)
+            .collect();
+        if pool.is_empty() {
+            pool = (0..self.replicas).collect();
+        }
+        let idle: Vec<usize> = pool.iter().copied().filter(|&i| in_flight[i] == 0).collect();
+
+        if batch_len < MIN_SCATTER_BATCH {
+            // Route whole: the first idle replica at or after the
+            // round-robin cursor, else round-robin over the live pool.
+            let start = self.rr % self.replicas;
+            let target = idle
+                .iter()
+                .copied()
+                .find(|&i| i >= start)
+                .or_else(|| idle.first().copied())
+                .or_else(|| pool.iter().copied().find(|&i| i >= start))
+                .or_else(|| pool.first().copied())
+                .unwrap_or(start);
+            self.rr = target + 1;
+            return vec![(target, 0..batch_len)];
+        }
+
+        // Scatter targets: the idle live replicas; when fewer than two
+        // are idle, the least-loaded live replicas instead, so a burst
+        // formed while everyone is busy still spreads over the tier
+        // rather than queueing behind one replica.
+        let targets: Vec<usize> = if idle.len() >= 2 {
+            idle
+        } else {
+            let mut by_load = pool;
+            by_load.sort_by_key(|&i| in_flight[i]);
+            by_load
+        };
+
+        // Contiguous balanced sub-batches (first `rem` shards take one
+        // extra request).
+        let shards = targets.len().min(batch_len);
+        let base = batch_len / shards;
+        let rem = batch_len % shards;
+        let mut plan = Vec::with_capacity(shards);
+        let mut start = 0;
+        for (s, &replica) in targets.iter().take(shards).enumerate() {
+            let len = base + usize::from(s < rem);
+            plan.push((replica, start..start + len));
+            start += len;
+        }
+        self.rr = targets[shards - 1] + 1;
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Ranges must be ascending, disjoint and cover 0..len.
+    fn check_coverage(plan: &[(usize, Range<usize>)], len: usize, replicas: usize) {
+        let mut at = 0;
+        for (r, range) in plan {
+            assert!(*r < replicas, "replica {r} out of bounds");
+            assert_eq!(range.start, at, "ranges not contiguous");
+            assert!(range.end > range.start, "empty shard");
+            at = range.end;
+        }
+        assert_eq!(at, len, "plan does not cover the batch");
+    }
+
+    #[test]
+    fn single_replica_takes_everything() {
+        let mut p = ShardPlanner::new(1);
+        assert_eq!(p.plan(5, &[0]), vec![(0, 0..5)]);
+        assert_eq!(p.plan(1, &[3]), vec![(0, 0..1)]);
+        assert!(p.plan(0, &[0]).is_empty());
+    }
+
+    #[test]
+    fn small_batches_round_robin_over_idle_replicas() {
+        let mut p = ShardPlanner::new(3);
+        let idle = [0, 0, 0];
+        let targets: Vec<usize> = (0..6).map(|_| p.plan(1, &idle)[0].0).collect();
+        assert_eq!(targets, vec![0, 1, 2, 0, 1, 2], "rotation over idle replicas");
+    }
+
+    #[test]
+    fn small_batches_prefer_idle_replica() {
+        let mut p = ShardPlanner::new(3);
+        // Replica 0 busy: a single-item batch starting from cursor 0
+        // must skip to the first idle replica.
+        let plan = p.plan(1, &[4, 0, 0]);
+        assert_eq!(plan, vec![(1, 0..1)]);
+        // Replicas 1,2 busy next time: falls to the only idle one.
+        assert_eq!(p.plan(1, &[0, 9, 9]), vec![(0, 0..1)]);
+    }
+
+    #[test]
+    fn all_busy_small_batch_still_rotates() {
+        let mut p = ShardPlanner::new(2);
+        let a = p.plan(1, &[2, 2]);
+        check_coverage(&a, 1, 2);
+        let b = p.plan(1, &[2, 2]);
+        check_coverage(&b, 1, 2);
+        assert_ne!(a[0].0, b[0].0, "round-robin must rotate when all busy");
+    }
+
+    #[test]
+    fn burst_with_no_idle_scatters_by_load() {
+        let mut p = ShardPlanner::new(3);
+        // Everyone busy: a large batch must still spread over the tier,
+        // least-loaded replicas first.
+        let plan = p.plan(6, &[5, 1, 9]);
+        check_coverage(&plan, 6, 3);
+        let replicas: Vec<usize> = plan.iter().map(|(r, _)| *r).collect();
+        assert_eq!(replicas, vec![1, 0, 2], "targets ordered by queue depth");
+        assert!(plan.iter().all(|(_, r)| r.len() == 2), "balanced split");
+    }
+
+    #[test]
+    fn dead_replica_excluded_from_every_plan() {
+        let mut p = ShardPlanner::new(4);
+        // Replica 3 is dead (biased queue depth): bursts spread over the
+        // live, busy replicas only.
+        let plan = p.plan(3, &[1, 2, 3, BROKEN_REPLICA_BIAS]);
+        check_coverage(&plan, 3, 4);
+        let replicas: Vec<usize> = plan.iter().map(|(r, _)| *r).collect();
+        assert_eq!(replicas, vec![0, 1, 2], "dead replica dropped from scatter");
+        // Even when the batch is large enough to want every replica.
+        let plan = p.plan(40, &[1, 2, 3, BROKEN_REPLICA_BIAS + 7]);
+        check_coverage(&plan, 40, 4);
+        assert!(
+            plan.iter().all(|(r, _)| *r != 3),
+            "dead replica must receive nothing while live ones exist: {plan:?}"
+        );
+        // Small batches skip it too.
+        for _ in 0..8 {
+            let plan = p.plan(1, &[0, 0, 0, BROKEN_REPLICA_BIAS]);
+            assert_ne!(plan[0].0, 3);
+        }
+    }
+
+    #[test]
+    fn all_dead_tier_still_routes_so_errors_surface() {
+        let mut p = ShardPlanner::new(2);
+        let dead = [BROKEN_REPLICA_BIAS, BROKEN_REPLICA_BIAS + 1];
+        let plan = p.plan(4, &dead);
+        check_coverage(&plan, 4, 2);
+        let a = p.plan(1, &dead);
+        let b = p.plan(1, &dead);
+        check_coverage(&a, 1, 2);
+        assert_ne!(a[0].0, b[0].0, "round-robin over a fully-dead tier");
+    }
+
+    #[test]
+    fn large_batches_scatter_balanced_over_idle() {
+        let mut p = ShardPlanner::new(4);
+        let plan = p.plan(10, &[0, 0, 0, 0]);
+        check_coverage(&plan, 10, 4);
+        assert_eq!(plan.len(), 4);
+        let sizes: Vec<usize> = plan.iter().map(|(_, r)| r.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2], "balanced contiguous split");
+    }
+
+    #[test]
+    fn scatter_skips_busy_replicas() {
+        let mut p = ShardPlanner::new(4);
+        let plan = p.plan(6, &[0, 7, 0, 7]);
+        check_coverage(&plan, 6, 4);
+        let replicas: Vec<usize> = plan.iter().map(|(r, _)| *r).collect();
+        assert_eq!(replicas, vec![0, 2], "only idle replicas receive shards");
+    }
+
+    #[test]
+    fn never_more_shards_than_requests() {
+        let mut p = ShardPlanner::new(8);
+        let plan = p.plan(3, &[0; 8]);
+        check_coverage(&plan, 3, 8);
+        assert_eq!(plan.len(), 3, "one request per shard at most");
+        assert!(plan.iter().all(|(_, r)| r.len() == 1));
+    }
+
+    #[test]
+    fn plan_is_exhaustive_over_random_like_inputs() {
+        let mut p = ShardPlanner::new(5);
+        // Deterministic pseudo-random in-flight patterns.
+        for step in 0..100usize {
+            let len = step % 13 + 1;
+            let inflight: Vec<usize> =
+                (0..5).map(|i| (step * 7 + i * 3) % 4 % 2).collect();
+            let plan = p.plan(len, &inflight);
+            check_coverage(&plan, len, 5);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "in-flight")]
+    fn wrong_inflight_len_panics() {
+        ShardPlanner::new(2).plan(1, &[0]);
+    }
+}

@@ -142,6 +142,14 @@ impl ExecCtx {
         self.arena.lock().unwrap().push(buf);
     }
 
+    /// Total `f32` capacity currently retained by the arena's free
+    /// buffers. This is the memory a long-lived context pins between
+    /// calls — the quantity [`ExecCtx::trim`] bounds and the
+    /// coordinator's arena-retention knob caps after every batch.
+    pub fn arena_floats(&self) -> usize {
+        self.arena.lock().unwrap().iter().map(Vec::capacity).sum()
+    }
+
     /// Drop cached buffers (largest first) until the arena holds at most
     /// `max_floats` elements of capacity. Bounds the high-water-mark
     /// memory a long-lived context retains; the legacy no-ctx entry
@@ -383,6 +391,22 @@ mod tests {
         for (i, &v) in data.iter().enumerate() {
             assert_eq!(v, i as f32 + 1.0);
         }
+    }
+
+    #[test]
+    fn trim_bounds_retained_capacity() {
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let big = ctx.take(1 << 20, 0.0);
+        let small = ctx.take(1 << 10, 0.0);
+        ctx.put(big);
+        ctx.put(small);
+        assert!(ctx.arena_floats() >= (1 << 20) + (1 << 10));
+        ctx.trim(1 << 12);
+        // The huge buffer is gone, the small one survives.
+        assert!(ctx.arena_floats() <= 1 << 12);
+        assert!(ctx.arena_floats() >= 1 << 10);
+        ctx.trim(0);
+        assert_eq!(ctx.arena_floats(), 0);
     }
 
     #[test]

@@ -95,8 +95,12 @@ pub struct BenchRecord {
     pub algo: String,
     /// Workload id, e.g. `c4_64x64_k5` (see `ConvCase::id`).
     pub shape: String,
-    /// Worker threads the kernel ran with.
+    /// Worker threads the kernel ran with (per replica, for serving
+    /// benches).
     pub threads: usize,
+    /// Backend replicas serving concurrently (1 for plain kernel
+    /// benches; the coordinator's inter-request parallelism axis).
+    pub replicas: usize,
     /// Median time per iteration, nanoseconds.
     pub ns_per_iter: f64,
     /// Arithmetic throughput, GFLOP/s.
@@ -118,8 +122,8 @@ pub fn write_bench_json(path: impl AsRef<Path>, records: &[BenchRecord]) -> std:
         writeln!(
             f,
             "  {{\"bench\": \"{}\", \"algo\": \"{}\", \"shape\": \"{}\", \
-             \"threads\": {}, \"ns_per_iter\": {:.1}, \"gflops\": {:.4}}}{sep}",
-            r.bench, r.algo, r.shape, r.threads, r.ns_per_iter, r.gflops
+             \"threads\": {}, \"replicas\": {}, \"ns_per_iter\": {:.1}, \"gflops\": {:.4}}}{sep}",
+            r.bench, r.algo, r.shape, r.threads, r.replicas, r.ns_per_iter, r.gflops
         )?;
     }
     writeln!(f, "]")?;
@@ -184,6 +188,7 @@ mod tests {
                 algo: "sliding".into(),
                 shape: "c4_64x64_k5".into(),
                 threads: 2,
+                replicas: 1,
                 ns_per_iter: 1234.5,
                 gflops: 3.21,
             },
@@ -192,6 +197,7 @@ mod tests {
                 algo: "gemm".into(),
                 shape: "c4_64x64_k5".into(),
                 threads: 1,
+                replicas: 4,
                 ns_per_iter: 2000.0,
                 gflops: 1.5,
             },
@@ -207,6 +213,7 @@ mod tests {
         assert_eq!(arr.len(), 2);
         assert_eq!(arr[0].get("algo").and_then(|v| v.as_str()), Some("sliding"));
         assert_eq!(arr[1].get("threads").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(arr[1].get("replicas").and_then(|v| v.as_usize()), Some(4));
         let _ = std::fs::remove_file(p);
     }
 

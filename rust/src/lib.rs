@@ -33,9 +33,10 @@
 //!   `python/compile/aot.py` (JAX/Pallas lowered to HLO text) and executes
 //!   them from Rust; Python is never on the request path.
 //! * [`coordinator`] — the serving driver: request queue, dynamic batcher,
-//!   per-algorithm router and latency/throughput metrics; each backend
-//!   owns one [`exec::ExecCtx`] so batched inference reuses scratch
-//!   buffers across requests.
+//!   per-algorithm router, replicated backends (a shard planner splits
+//!   formed batches across N replica workers, each owning its own
+//!   [`exec::ExecCtx`]) and per-replica latency/throughput metrics with
+//!   an aggregated view; the batch path is panic-proof.
 //! * [`error`] — string-backed `anyhow` substitute (offline build).
 //!
 //! ## Quickstart

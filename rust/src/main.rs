@@ -204,28 +204,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_req = args.usize("requests", 64)?;
     let max_batch = args.usize("max-batch", 8)?;
     let wait_ms = args.usize("max-wait-ms", 2)?;
+    // The intra x inter core budget: each backend runs `replicas` worker
+    // replicas, each replica's ExecCtx runs `threads` kernel threads.
     let threads = parse_threads(args)?;
+    let replicas = match args.usize("replicas", 1)? {
+        0 => swconv::exec::available_threads(),
+        r => r,
+    };
+    // Arena retention: 0 (default) keeps the high-water scratch for
+    // maximum steady-state speed; N caps each replica's retained arena
+    // at N MiB after every batch.
+    let trim_mb = args.usize("trim-mb", 0)?;
     let model_a = zoo::by_name(name, 10, 42).ok_or_else(|| anyhow!("unknown model '{name}'"))?;
     let model_b = zoo::by_name(name, 10, 42).unwrap();
     let item_shape = model_a.input_shape.clone();
 
+    let spec = |key: &str, model, algo| {
+        let ctx = ExecCtx::with_threads(algo, threads);
+        let s = if trim_mb > 0 {
+            BackendSpec::native_trimmed(key, model, ctx, trim_mb << 18) // MiB -> f32s
+        } else {
+            BackendSpec::native(key, model, ctx)
+        };
+        s.with_replicas(replicas)
+    };
     let backends = vec![
-        BackendSpec::native(
-            "sliding",
-            model_a,
-            ExecCtx::with_threads(ConvAlgo::Sliding, threads),
-        ),
-        BackendSpec::native(
-            "gemm",
-            model_b,
-            ExecCtx::with_threads(ConvAlgo::Im2colGemm, threads),
-        ),
+        spec("sliding", model_a, ConvAlgo::Sliding),
+        spec("gemm", model_b, ConvAlgo::Im2colGemm),
     ];
     let coord = Coordinator::new(
         backends,
         BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms as u64) },
     );
 
+    eprintln!("serve: {replicas} replica(s) x {threads} kernel thread(s) per backend");
     for backend in ["sliding", "gemm"] {
         let t0 = Instant::now();
         let rxs: Vec<_> = (0..n_req)
@@ -245,6 +257,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             n_req as f64 / wall.as_secs_f64(),
             m.summary()
         );
+        if replicas > 1 {
+            for (i, rm) in coord.replica_metrics(backend).unwrap().iter().enumerate() {
+                println!(
+                    "          r{i}: {} items in {} shards (avg {:.1}/shard)",
+                    rm.items,
+                    rm.batches,
+                    rm.mean_batch()
+                );
+            }
+        }
     }
     coord.shutdown();
     Ok(())
@@ -295,11 +317,16 @@ COMMANDS
   peaks
   run-model        [--model NAME] [--batch N] [--threads N]
   summary          [--model NAME] [--batch N]
-  serve            [--model NAME] [--requests N] [--max-batch N] [--max-wait-ms MS] [--threads N]
+  serve            [--model NAME] [--requests N] [--max-batch N] [--max-wait-ms MS]
+                   [--threads N] [--replicas N] [--trim-mb N]
   artifacts-check  [--dir artifacts]
 
   --threads 0 means \"use all hardware threads\"; the default 1 matches
-  the paper's single-core configuration.
+  the paper's single-core configuration. serve's --replicas N spawns N
+  worker replicas per backend (0 = all hardware threads) and shards
+  batches across them — the intra (--threads) x inter (--replicas)
+  core-budget split. --trim-mb caps each replica's retained scratch
+  arena after every batch (0 = keep the high-water mark).
 
 MODELS: {:?}",
         zoo::MODEL_NAMES

@@ -2,15 +2,22 @@
 
 use super::layers::{ExecCtx, Layer};
 use crate::tensor::Tensor;
+use std::sync::Arc;
 
 /// A sequential stack of layers with a name and a fixed input shape
 /// (batch dimension excluded — models accept any batch size).
+///
+/// Layers are immutable once pushed and held behind `Arc`, so cloning a
+/// model is cheap and the clones *share* weights — the coordinator's
+/// backend replicas all serve one copy of the parameters while keeping
+/// their own scratch state in their [`ExecCtx`].
+#[derive(Clone)]
 pub struct Model {
     /// Model name (used by the CLI, the manifest and reports).
     pub name: String,
     /// Input shape `[c, h, w]` (no batch).
     pub input_shape: Vec<usize>,
-    layers: Vec<Box<dyn Layer>>,
+    layers: Vec<Arc<dyn Layer>>,
 }
 
 impl Model {
@@ -21,7 +28,7 @@ impl Model {
 
     /// Append a layer (builder style).
     pub fn push(mut self, layer: impl Layer + 'static) -> Self {
-        self.layers.push(Box::new(layer));
+        self.layers.push(Arc::new(layer));
         self
     }
 
@@ -140,6 +147,17 @@ mod tests {
         let c = m.forward(&x, &ExecCtx::new(ConvAlgo::Sliding));
         assert!(a.allclose(&b, 1e-4));
         assert!(a.allclose(&c, 1e-4));
+    }
+
+    #[test]
+    fn clones_share_weights_and_agree_bitwise() {
+        let m = tiny();
+        let c = m.clone();
+        let x = Tensor::randn(&[1, 1, 8, 8], 7);
+        let a = m.forward(&x, &ExecCtx::default());
+        let b = c.forward(&x, &ExecCtx::default());
+        assert_eq!(a.as_slice(), b.as_slice());
+        assert_eq!(c.len(), m.len());
     }
 
     #[test]

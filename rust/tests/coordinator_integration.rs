@@ -1,12 +1,29 @@
 //! Coordinator integration: batching invariants under concurrent load,
-//! router correctness, failure behaviour, metrics accounting.
+//! router correctness, replica sharding, failure behaviour (including
+//! panicking backends), metrics accounting.
 
 use std::sync::Arc;
 use std::time::Duration;
-use swconv::coordinator::{BackendSpec, BatchPolicy, Coordinator, InferError};
+use swconv::coordinator::{Backend, BackendSpec, BatchPolicy, Coordinator, InferError};
 use swconv::kernels::ConvAlgo;
 use swconv::nn::{zoo, ExecCtx};
 use swconv::tensor::Tensor;
+
+/// Identity backend over `[3]` items: batch in, batch out. Shared by
+/// the stacking/splitting round-trip tests.
+struct Echo;
+
+impl Backend for Echo {
+    fn name(&self) -> &str {
+        "echo"
+    }
+    fn item_shape(&self) -> &[usize] {
+        &[3]
+    }
+    fn infer(&mut self, batch: &Tensor) -> swconv::error::Result<Tensor> {
+        Ok(batch.clone())
+    }
+}
 
 fn coord(max_batch: usize, wait_ms: u64) -> Coordinator {
     Coordinator::new(
@@ -51,6 +68,88 @@ fn no_lost_or_duplicated_requests_under_concurrency() {
     Arc::try_unwrap(c).ok().expect("sole owner").shutdown();
 }
 
+/// INVARIANT — replica sharding loses and duplicates nothing either:
+/// the same concurrent-submission invariant over a 4-replica backend,
+/// with per-replica metrics summing to the total.
+#[test]
+fn no_lost_or_duplicated_requests_with_replicas() {
+    let c = Arc::new(Coordinator::new(
+        vec![BackendSpec::native(
+            "sliding",
+            zoo::simple_cnn(10, 1),
+            ExecCtx::new(ConvAlgo::Sliding),
+        )
+        .with_replicas(4)],
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+    ));
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let c = Arc::clone(&c);
+        handles.push(std::thread::spawn(move || {
+            let mut ids = Vec::new();
+            for i in 0..12 {
+                let r = c
+                    .infer("sliding", Tensor::randn(&[1, 28, 28], t * 100 + i))
+                    .expect("infer");
+                assert!(r.output.is_ok(), "{:?}", r.output);
+                ids.push(r.id);
+            }
+            ids
+        }));
+    }
+    let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    let n = all.len();
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len(), n, "duplicate response ids");
+    assert_eq!(n, 48);
+
+    let agg = c.metrics("sliding").unwrap();
+    assert_eq!(agg.count, 48, "all requests recorded across replicas");
+    assert_eq!(agg.items, 48, "all items processed across replicas");
+    let per = c.replica_metrics("sliding").unwrap();
+    assert_eq!(per.len(), 4);
+    assert_eq!(per.iter().map(|m| m.items).sum::<u64>(), 48);
+    Arc::try_unwrap(c).ok().expect("sole owner").shutdown();
+}
+
+/// INVARIANT — replica sharding is invisible in the numbers: the same
+/// submission set answered by a 1-replica and a 3-replica backend over
+/// identical weights is bit-identical, request by request.
+#[test]
+fn replicated_responses_bit_identical_to_single() {
+    let c = Coordinator::new(
+        vec![
+            BackendSpec::native(
+                "one",
+                zoo::simple_cnn(10, 1),
+                ExecCtx::new(ConvAlgo::Sliding),
+            ),
+            BackendSpec::native(
+                "many",
+                zoo::simple_cnn(10, 1),
+                ExecCtx::new(ConvAlgo::Sliding),
+            )
+            .with_replicas(3),
+        ],
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+    );
+    let inputs: Vec<Tensor> = (0..24).map(|i| Tensor::randn(&[1, 28, 28], i)).collect();
+    // Submit the whole set to each backend (bursts, so the 3-replica
+    // tier actually scatters sub-batches).
+    let rx_one: Vec<_> =
+        inputs.iter().map(|x| c.submit("one", x.clone()).unwrap()).collect();
+    let rx_many: Vec<_> =
+        inputs.iter().map(|x| c.submit("many", x.clone()).unwrap()).collect();
+    for (i, (a, b)) in rx_one.into_iter().zip(rx_many).enumerate() {
+        let ya = a.recv().unwrap().output.unwrap();
+        let yb = b.recv().unwrap().output.unwrap();
+        assert_eq!(ya.dims(), yb.dims());
+        assert_eq!(ya.as_slice(), yb.as_slice(), "request {i} differs across replica counts");
+    }
+    c.shutdown();
+}
+
 /// INVARIANT — batches never exceed the policy's max_batch.
 #[test]
 fn batches_bounded_by_policy() {
@@ -85,11 +184,9 @@ fn router_backends_isolated_and_equivalent() {
 /// request with an error instead of hanging or panicking the router.
 #[test]
 fn failing_backend_factory_reports_errors() {
-    let spec = BackendSpec {
-        name: "broken".into(),
-        item_shape: vec![1, 28, 28],
-        factory: Box::new(|| swconv::bail!("injected construction failure")),
-    };
+    let spec = BackendSpec::from_factory("broken", vec![1, 28, 28], |_replica| {
+        swconv::bail!("injected construction failure")
+    });
     let c = Coordinator::new(vec![spec], BatchPolicy::default());
     let r = c.infer("broken", Tensor::zeros(&[1, 28, 28])).unwrap();
     match r.output {
@@ -106,7 +203,7 @@ fn erroring_backend_answers_every_request() {
     struct Flaky {
         calls: usize,
     }
-    impl swconv::coordinator::Backend for Flaky {
+    impl Backend for Flaky {
         fn name(&self) -> &str {
             "flaky"
         }
@@ -121,11 +218,8 @@ fn erroring_backend_answers_every_request() {
             Ok(batch.clone())
         }
     }
-    let spec = BackendSpec {
-        name: "flaky".into(),
-        item_shape: vec![2],
-        factory: Box::new(|| Ok(Box::new(Flaky { calls: 0 }))),
-    };
+    let spec =
+        BackendSpec::from_factory("flaky", vec![2], |_replica| Ok(Box::new(Flaky { calls: 0 })));
     let c = Coordinator::new(
         vec![spec],
         BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
@@ -137,27 +231,93 @@ fn erroring_backend_answers_every_request() {
     c.shutdown();
 }
 
+/// REGRESSION — a panic inside `Backend::infer` used to kill the worker
+/// loop for good: the panicking batch hung and every later submit
+/// surfaced as a misleading `Shutdown`. The serving path must instead
+/// answer the batch with `InferError::Backend` and keep the replica
+/// alive for subsequent requests.
+#[test]
+fn panicking_backend_keeps_serving() {
+    struct PanicOnce {
+        calls: usize,
+    }
+    impl Backend for PanicOnce {
+        fn name(&self) -> &str {
+            "panic-once"
+        }
+        fn item_shape(&self) -> &[usize] {
+            &[2]
+        }
+        fn infer(&mut self, batch: &Tensor) -> swconv::error::Result<Tensor> {
+            self.calls += 1;
+            if self.calls == 1 {
+                panic!("deliberate test panic");
+            }
+            Ok(batch.clone())
+        }
+    }
+    let spec = BackendSpec::from_factory("panicky", vec![2], |_replica| {
+        Ok(Box::new(PanicOnce { calls: 0 }))
+    });
+    let c = Coordinator::new(
+        vec![spec],
+        BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+    );
+    let r1 = c.infer("panicky", Tensor::zeros(&[2])).unwrap();
+    match r1.output {
+        Err(InferError::Backend(msg)) => {
+            assert!(msg.contains("panicked"), "error should name the panic: {msg}");
+            assert!(msg.contains("deliberate test panic"), "payload lost: {msg}");
+        }
+        other => panic!("expected backend error, got {other:?}"),
+    }
+    // The queue is not wedged: the next request succeeds on the same
+    // replica (this used to error with Shutdown).
+    let r2 = c.infer("panicky", Tensor::full(&[2], 5.0)).unwrap();
+    assert_eq!(r2.output.unwrap().as_slice(), &[5.0, 5.0]);
+    c.shutdown();
+}
+
+/// REGRESSION — a backend returning the wrong output batch dimension
+/// used to slice-panic (too few rows) or silently mis-route rows (too
+/// many); the worker must turn it into a per-request error and survive.
+#[test]
+fn wrong_output_batch_dim_is_an_error_not_a_panic() {
+    struct BadDim;
+    impl Backend for BadDim {
+        fn name(&self) -> &str {
+            "bad-dim"
+        }
+        fn item_shape(&self) -> &[usize] {
+            &[2]
+        }
+        fn infer(&mut self, batch: &Tensor) -> swconv::error::Result<Tensor> {
+            // One row too many, whatever the batch size.
+            Ok(Tensor::zeros(&[batch.dim(0) + 1, 2]))
+        }
+    }
+    let spec = BackendSpec::from_factory("bad-dim", vec![2], |_replica| Ok(Box::new(BadDim)));
+    let c = Coordinator::new(
+        vec![spec],
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+    );
+    for _ in 0..2 {
+        let r = c.infer("bad-dim", Tensor::zeros(&[2])).unwrap();
+        match r.output {
+            Err(InferError::Backend(msg)) => {
+                assert!(msg.contains("batch of"), "should describe the mismatch: {msg}")
+            }
+            other => panic!("expected backend error, got {other:?}"),
+        }
+    }
+    c.shutdown();
+}
+
 /// Echo backend: batch stacking and splitting round-trips every item
 /// bit-exactly in order.
 #[test]
 fn batch_split_preserves_item_identity_and_order() {
-    struct Echo;
-    impl swconv::coordinator::Backend for Echo {
-        fn name(&self) -> &str {
-            "echo"
-        }
-        fn item_shape(&self) -> &[usize] {
-            &[3]
-        }
-        fn infer(&mut self, batch: &Tensor) -> swconv::error::Result<Tensor> {
-            Ok(batch.clone())
-        }
-    }
-    let spec = BackendSpec {
-        name: "echo".into(),
-        item_shape: vec![3],
-        factory: Box::new(|| Ok(Box::new(Echo))),
-    };
+    let spec = BackendSpec::from_factory("echo", vec![3], |_replica| Ok(Box::new(Echo)));
     let c = Coordinator::new(
         vec![spec],
         BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(5) },
@@ -171,6 +331,26 @@ fn batch_split_preserves_item_identity_and_order() {
     for (i, rx) in rxs.into_iter().enumerate() {
         let out = rx.recv().unwrap().output.unwrap();
         assert_eq!(out.as_slice(), &[i as f32; 3], "item {i} mangled");
+    }
+    c.shutdown();
+}
+
+/// Echo sharded: the round-trip identity also holds when the batch is
+/// scattered across replicas.
+#[test]
+fn sharded_echo_preserves_item_identity() {
+    let spec = BackendSpec::from_factory("echo", vec![3], |_replica| Ok(Box::new(Echo)))
+        .with_replicas(4);
+    let c = Coordinator::new(
+        vec![spec],
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(5) },
+    );
+    let rxs: Vec<_> = (0..64)
+        .map(|i| c.submit("echo", Tensor::full(&[3], i as f32)).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let out = rx.recv().unwrap().output.unwrap();
+        assert_eq!(out.as_slice(), &[i as f32; 3], "item {i} mangled by sharding");
     }
     c.shutdown();
 }
