@@ -4,6 +4,21 @@
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
+//!
+//! From here, the CLI drives the full stack (see README.md):
+//!
+//! ```bash
+//! cargo run --release -- bench-fig1 --threads 0      # paper Fig. 1, all cores
+//! cargo run --release -- autotune                    # cache this machine's
+//!                                                    #   dispatch crossovers
+//! cargo run --release -- serve --replicas 2 --threads 2 --trim-mb 64 \
+//!     --profile target/autotune/profile.json         # tuned, sharded serving
+//! ```
+//!
+//! Every `--threads N` (0 = all hardware threads; default 1 = the
+//! paper's single-core setup) is bit-deterministic; `serve --replicas`
+//! shards batches across N worker replicas per backend and `--trim-mb`
+//! caps each replica's retained scratch arena between batches.
 
 use swconv::exec::ExecCtx;
 use swconv::harness::{bench, machine_peaks};

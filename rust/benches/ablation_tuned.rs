@@ -1,0 +1,78 @@
+//! BENCH — measured (tuned) dispatch vs the paper's hard-coded policy.
+//!
+//! The paper's §2 selection (custom 3/5 → generic ≤17 → compound) is
+//! calibrated to one Xeon; this ablation asks what *this* machine's
+//! measured crossover table buys. It autotunes a profile in-process,
+//! then times the same Fig. 1/2 workload twice per filter size:
+//!
+//! * **paper** — `ConvAlgo::Sliding` with no profile (the hard-coded
+//!   k=17 policy, exactly what every PR before the autotuner ran), and
+//! * **tuned** — `ConvAlgo::Tuned` dispatching from the measured
+//!   profile (which may route a width to GEMM or direct where those
+//!   actually win).
+//!
+//! Machine-readable records land in `target/reports/BENCH_tuned.json`
+//! (the `BENCH_*.json` array-of-records schema of
+//! `swconv::harness::report::write_bench_json`; `algo` is `"sliding"`
+//! for the paper rows and `"tuned"` for the profiled rows). The tuned
+//! series should never lose by more than noise: where the paper policy
+//! is already optimal the profile picks the same kernel.
+
+use std::sync::Arc;
+use swconv::autotune::{autotune, profile_table, AutotuneOpts};
+use swconv::exec::ExecCtx;
+use swconv::harness::report::{f3, write_bench_json, BenchRecord, Table};
+use swconv::harness::timing::bench_quick;
+use swconv::harness::ConvCase;
+use swconv::kernels::{conv2d_ctx, ConvAlgo};
+
+const C: usize = 4;
+const HW: usize = 64;
+
+fn main() {
+    // Measure the machine (single-threaded, the paper's configuration;
+    // the profile's thread dimension is exercised by `serve --profile`).
+    let opts = AutotuneOpts { c: C, hw: HW, threads: vec![1], verbose: true, ..Default::default() };
+    let profile = Arc::new(autotune(&opts));
+    println!("{}", profile_table(&profile).render());
+
+    let mut table = Table::new(
+        format!("tuned vs paper-policy dispatch (c{C}, {HW}x{HW}, 1 thread)"),
+        &["k", "paper GFLOP/s", "tuned GFLOP/s", "tuned/paper"],
+    );
+    let mut records = Vec::new();
+    for &k in &opts.ks {
+        let case = ConvCase::square(C, HW.max(k + 1), k);
+        let x = case.input();
+        let w = case.weights();
+        let flops = case.flops();
+
+        let paper_ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let paper = bench_quick(|| conv2d_ctx(&x, &w, None, &case.params, &paper_ctx))
+            .gflops(flops);
+        let tuned_ctx = ExecCtx::new(ConvAlgo::Tuned).with_profile(Arc::clone(&profile));
+        let tuned = bench_quick(|| conv2d_ctx(&x, &w, None, &case.params, &tuned_ctx))
+            .gflops(flops);
+
+        table.row(vec![
+            k.to_string(),
+            f3(paper),
+            f3(tuned),
+            f3(tuned / paper),
+        ]);
+        for (algo, gflops) in [("sliding", paper), ("tuned", tuned)] {
+            records.push(BenchRecord {
+                bench: "ablation_tuned".into(),
+                algo: algo.into(),
+                shape: case.id(),
+                threads: 1,
+                replicas: 1,
+                ns_per_iter: flops as f64 / gflops, // GFLOP/s ⇒ ns = flops/gflops
+                gflops,
+            });
+        }
+    }
+    println!("{}", table.render());
+    write_bench_json("target/reports/BENCH_tuned.json", &records).expect("json");
+    println!("records in target/reports/BENCH_tuned.json");
+}

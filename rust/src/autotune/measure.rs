@@ -1,0 +1,249 @@
+//! The microbenchmark pass that fills a [`DispatchProfile`]: per
+//! `(filter width, thread count)` bucket, race every convolution
+//! implementation on a representative plane and record the winners.
+//!
+//! Reuses the harness' measurement loop ([`crate::harness::timing`]) and
+//! the kernels' `*_ctx` entry points, so what is timed is exactly what
+//! serving executes — same scratch arena, same thread fan-out.
+
+use super::profile::{DispatchProfile, ProfileEntry, TunedAlgo};
+use crate::exec::{available_threads, ExecCtx};
+use crate::harness::report::{f3, Table};
+use crate::harness::timing::bench_config;
+use crate::harness::workload::ConvCase;
+use crate::kernels::rowconv::{RowKernel, COMPOUND_MAX_K};
+use crate::kernels::{conv2d_ctx, ConvAlgo};
+use std::time::Duration;
+
+/// What the autotuner measures: the representative workload geometry,
+/// the `(k, threads)` grid, and how much timing effort to spend per
+/// candidate.
+#[derive(Clone, Debug)]
+pub struct AutotuneOpts {
+    /// Channels of the representative plane (in = out, the Fig. 1/2
+    /// setup).
+    pub c: usize,
+    /// Spatial size of the representative plane (`hw × hw`).
+    pub hw: usize,
+    /// Filter widths to measure — the bucket centres of the resulting
+    /// crossover table.
+    pub ks: Vec<usize>,
+    /// Thread counts to measure (each becomes a bucket dimension).
+    pub threads: Vec<usize>,
+    /// Timed samples per candidate (see
+    /// [`crate::harness::timing::bench_config`]).
+    pub samples: usize,
+    /// Minimum time per sample.
+    pub sample_target: Duration,
+    /// Print one progress line per bucket to stderr.
+    pub verbose: bool,
+}
+
+impl Default for AutotuneOpts {
+    /// The Fig. 1/2 plane (c=4, 64×64), every dispatch regime — custom
+    /// (3/5), generic (≤17), the crossover (18) and the compound zigzag
+    /// — at 1 thread and all hardware threads.
+    fn default() -> Self {
+        let all = available_threads();
+        let mut threads = vec![1];
+        if all > 1 {
+            threads.push(all);
+        }
+        AutotuneOpts {
+            c: 4,
+            hw: 64,
+            ks: vec![1, 2, 3, 4, 5, 7, 9, 11, 13, 15, 17, 18, 21, 25, 33, 49],
+            threads,
+            samples: 5,
+            sample_target: Duration::from_millis(10),
+            verbose: false,
+        }
+    }
+}
+
+impl AutotuneOpts {
+    /// A deliberately tiny pass (small plane, few widths, one sample)
+    /// for tests and smoke runs: completes in well under a second and
+    /// still exercises every candidate family.
+    pub fn quick() -> Self {
+        AutotuneOpts {
+            c: 1,
+            hw: 16,
+            ks: vec![3, 9, 19],
+            threads: vec![1],
+            samples: 1,
+            sample_target: Duration::from_micros(500),
+            verbose: false,
+        }
+    }
+}
+
+/// The conv-level candidates raced at every bucket, and how each maps
+/// into a profile entry. `Sliding` is the paper's auto policy, so at
+/// k = 3/5 it *is* the custom-kernel candidate.
+const CANDIDATES: [ConvAlgo; 5] = [
+    ConvAlgo::Direct,
+    ConvAlgo::Im2colGemm,
+    ConvAlgo::Sliding,
+    ConvAlgo::SlidingGeneric,
+    ConvAlgo::SlidingCompound,
+];
+
+fn tuned_algo_of(algo: ConvAlgo) -> TunedAlgo {
+    match algo {
+        ConvAlgo::Direct => TunedAlgo::Direct,
+        ConvAlgo::Im2colGemm => TunedAlgo::Gemm,
+        _ => TunedAlgo::Sliding,
+    }
+}
+
+fn row_kernel_of(algo: ConvAlgo, k: usize) -> RowKernel {
+    match algo {
+        ConvAlgo::SlidingGeneric => RowKernel::Generic,
+        ConvAlgo::SlidingCompound => RowKernel::Compound,
+        // The auto policy's family at this width.
+        _ => RowKernel::paper_policy(k.min(COMPOUND_MAX_K)),
+    }
+}
+
+/// Measure a dispatch profile: for every `(k, threads)` bucket in
+/// `opts`, time each candidate on the representative plane and distill
+/// the crossover table. Pure measurement — callers persist the result
+/// with [`DispatchProfile::save`] (the CLI caches it at
+/// [`super::profile::default_profile_path`]).
+pub fn autotune(opts: &AutotuneOpts) -> DispatchProfile {
+    let mut entries = Vec::new();
+    let mut ks = opts.ks.clone();
+    ks.sort_unstable();
+    ks.dedup();
+    let mut threads = opts.threads.clone();
+    threads.sort_unstable();
+    threads.dedup();
+
+    for &t in &threads {
+        let t = t.max(1);
+        for &k in &ks {
+            if k == 0 {
+                continue;
+            }
+            let case = ConvCase::square(opts.c, opts.hw.max(k + 1), k);
+            let x = case.input();
+            let w = case.weights();
+            let flops = case.flops();
+
+            let mut best: Option<(ConvAlgo, f64)> = None;
+            let mut best_sliding: Option<(ConvAlgo, f64)> = None;
+            for algo in CANDIDATES {
+                if !algo.supports_width(k) {
+                    continue;
+                }
+                // Beyond the compound reach `Sliding` silently falls
+                // back to the direct kernel; timing it would record a
+                // direct measurement under a "sliding" label and poison
+                // nearby buckets. Only the real candidates race.
+                if k > COMPOUND_MAX_K && tuned_algo_of(algo) == TunedAlgo::Sliding {
+                    continue;
+                }
+                // One ctx per candidate: the calibration runs warm its
+                // arena, so the timed loop measures steady-state serving.
+                let ctx = ExecCtx::with_threads(algo, t);
+                let stats = bench_config(
+                    || conv2d_ctx(&x, &w, None, &case.params, &ctx),
+                    opts.samples,
+                    opts.sample_target,
+                );
+                let gflops = stats.gflops(flops);
+                let beats = |cur: &Option<(ConvAlgo, f64)>| match cur {
+                    None => true,
+                    Some((_, g)) => gflops > *g,
+                };
+                if beats(&best) {
+                    best = Some((algo, gflops));
+                }
+                if tuned_algo_of(algo) == TunedAlgo::Sliding && beats(&best_sliding) {
+                    best_sliding = Some((algo, gflops));
+                }
+            }
+            let (winner, gflops) = best.expect("at least direct always runs");
+            let slide = best_sliding
+                .map(|(a, _)| row_kernel_of(a, k))
+                .unwrap_or_else(|| RowKernel::paper_policy(k.min(COMPOUND_MAX_K)));
+            if opts.verbose {
+                eprintln!(
+                    "autotune: k={k:<3} threads={t:<3} -> {} / {} rows ({} GFLOP/s)",
+                    tuned_algo_of(winner).name(),
+                    slide.name(),
+                    f3(gflops)
+                );
+            }
+            entries.push(ProfileEntry {
+                k,
+                threads: t,
+                algo: tuned_algo_of(winner),
+                slide,
+                gflops,
+            });
+        }
+    }
+    DispatchProfile::from_entries(entries)
+}
+
+/// Render a profile's crossover table for humans (the CLI and the
+/// `ablation_tuned` bench both print this).
+pub fn profile_table(profile: &DispatchProfile) -> Table {
+    let mut t = Table::new(
+        "dispatch profile — measured (k, threads) winners",
+        &["k", "threads", "algo", "slide", "GFLOP/s"],
+    );
+    for e in profile.entries() {
+        t.row(vec![
+            e.k.to_string(),
+            e.threads.to_string(),
+            e.algo.name().into(),
+            e.slide.name().into(),
+            f3(e.gflops),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_pass_covers_grid_with_legal_winners() {
+        let opts = AutotuneOpts::quick();
+        let p = autotune(&opts);
+        assert_eq!(p.entries().len(), opts.ks.len() * opts.threads.len());
+        for e in p.entries() {
+            assert!(opts.ks.contains(&e.k));
+            assert!(opts.threads.contains(&e.threads));
+            assert!(e.slide.supports(e.k), "{e:?}: illegal row family recorded");
+            assert!(e.gflops > 0.0, "{e:?}: no throughput measured");
+        }
+        // The table renders one row per entry.
+        assert_eq!(profile_table(&p).len(), p.entries().len());
+    }
+
+    #[test]
+    fn duplicate_grid_points_are_deduped() {
+        let mut opts = AutotuneOpts::quick();
+        opts.ks = vec![3, 3, 3];
+        opts.threads = vec![1, 1];
+        let p = autotune(&opts);
+        assert_eq!(p.entries().len(), 1);
+    }
+
+    /// Beyond the compound kernel's reach "sliding" is secretly the
+    /// direct fallback — the measured winner must never be recorded
+    /// under the sliding label there.
+    #[test]
+    fn beyond_compound_reach_never_records_sliding() {
+        let mut opts = AutotuneOpts::quick();
+        opts.ks = vec![COMPOUND_MAX_K + 7];
+        let p = autotune(&opts);
+        assert_eq!(p.entries().len(), 1);
+        assert_ne!(p.entries()[0].algo, TunedAlgo::Sliding);
+    }
+}

@@ -1,0 +1,63 @@
+//! Per-machine dispatch autotuning — measure the crossovers, cache the
+//! winners, dispatch tuned.
+//!
+//! The paper's §2 selection policy (custom k=3/5 kernels → the generic
+//! in-vector slide up to k=17 → compound vectors beyond) is calibrated
+//! to one Xeon 8272CL. On other commodity CPUs the crossovers move with
+//! lane width, cache size and core count — the machine-dependence that
+//! low-memory GEMM work (arXiv:1709.03395) and ZNNi's per-layer
+//! primitive selection (arXiv:1606.05688) show must be *measured*, not
+//! assumed. This subsystem does the measuring:
+//!
+//! * [`autotune`] ([`measure`]) — a microbenchmark pass reusing
+//!   [`crate::harness::timing`] and [`crate::exec::ExecCtx`]: per
+//!   `(filter-width bucket, thread count)` it races the direct, GEMM,
+//!   sliding-generic, sliding-compound and custom kernels on a
+//!   representative plane.
+//! * [`DispatchProfile`] ([`profile`]) — the distilled crossover table,
+//!   serialized through [`crate::runtime::json`] and cached at
+//!   [`default_profile_path`] (`target/autotune/profile.json`) so
+//!   serving loads it from disk instead of re-measuring at startup.
+//!
+//! Dispatch consults the profile in two places: the conv-level
+//! [`crate::kernels::ConvAlgo::Tuned`] algorithm resolves each filter
+//! width to the measured winner, and the row-level
+//! `SlideVariant::Auto` inside the sliding kernel picks the measured
+//! row family. Both reach the profile through the
+//! [`crate::exec::ExecCtx`] that already carries the algorithm choice —
+//! one profile per backend replica, loaded once. Every fallback path
+//! (no profile, corrupt profile, out-of-range width) degrades to the
+//! paper's hard-coded policy, never to an error.
+//!
+//! # Examples
+//!
+//! Measure, cache, reload, dispatch (a real pass — the quick
+//! configuration keeps it fast):
+//!
+//! ```
+//! use std::sync::Arc;
+//! use swconv::autotune::{autotune, AutotuneOpts, DispatchProfile};
+//! use swconv::exec::ExecCtx;
+//! use swconv::kernels::{conv2d_ctx, Conv2dParams, ConvAlgo};
+//! use swconv::tensor::Tensor;
+//!
+//! let profile = autotune(&AutotuneOpts::quick());
+//! let path = std::env::temp_dir().join("swconv_doc_profile.json");
+//! profile.save(&path).unwrap();
+//! let loaded = DispatchProfile::load_or_paper(&path);
+//! assert_eq!(profile, loaded);
+//!
+//! // Tuned dispatch: the ctx carries the profile.
+//! let ctx = ExecCtx::with_threads(ConvAlgo::Tuned, 1).with_profile(Arc::new(loaded));
+//! let x = Tensor::randn(&[1, 1, 12, 12], 1);
+//! let w = Tensor::randn(&[1, 1, 3, 3], 2);
+//! let y = conv2d_ctx(&x, &w, None, &Conv2dParams::default(), &ctx);
+//! assert_eq!(y.dims(), &[1, 1, 10, 10]);
+//! # let _ = std::fs::remove_file(path);
+//! ```
+
+pub mod measure;
+pub mod profile;
+
+pub use measure::{autotune, profile_table, AutotuneOpts};
+pub use profile::{default_profile_path, DispatchProfile, ProfileEntry, TunedAlgo};

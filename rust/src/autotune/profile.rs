@@ -1,0 +1,450 @@
+//! The cached per-machine dispatch profile: a crossover table mapping
+//! `(filter-width bucket, thread count)` to the measured-fastest
+//! convolution algorithm and row-kernel family.
+//!
+//! ## `profile.json` schema
+//!
+//! [`DispatchProfile::save`] writes — and [`DispatchProfile::load`]
+//! parses, via [`crate::runtime::json`] — a single JSON object:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "lanes": 16,
+//!   "entries": [
+//!     {"k": 3,  "threads": 1, "algo": "sliding", "slide": "custom",   "gflops": 11.2},
+//!     {"k": 17, "threads": 8, "algo": "sliding", "slide": "compound", "gflops": 64.0},
+//!     {"k": 33, "threads": 8, "algo": "gemm",    "slide": "compound", "gflops": 41.5}
+//!   ]
+//! }
+//! ```
+//!
+//! * `version` — schema version; anything but `1` is rejected.
+//! * `lanes` — [`crate::simd::LANES`] of the build that measured the
+//!   profile. A profile measured for a different hardware-vector width
+//!   describes a different machine, so a mismatch is rejected at load.
+//! * `entries[].k` / `entries[].threads` — the measured bucket. Lookups
+//!   minimise `(k distance, threads distance)` lexicographically over
+//!   all entries, resolving exact ties toward the smaller bucket (see
+//!   [`DispatchProfile::choice`]).
+//! * `entries[].algo` — conv-level winner: `"direct"`, `"gemm"` or
+//!   `"sliding"`.
+//! * `entries[].slide` — fastest sliding row-kernel family at this
+//!   bucket: `"custom"`, `"generic"` or `"compound"` (recorded even when
+//!   `algo` is not `"sliding"`, so forced-sliding callers still dispatch
+//!   tuned rows).
+//! * `entries[].gflops` — the winner's measured throughput, for the
+//!   record; not consulted by dispatch.
+//!
+//! Any parse failure, schema violation or unreadable file makes
+//! [`DispatchProfile::load`] return an `Err`;
+//! [`DispatchProfile::load_or_paper`] turns that into a warning plus the
+//! paper-policy fallback, so a corrupt cache can never take serving down.
+
+use crate::error::{bail, Context, Result};
+use crate::kernels::rowconv::{RowKernel, COMPOUND_MAX_K};
+use crate::runtime::json::Json;
+use crate::simd::LANES;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Conv-level dispatch choice a profile entry records — deliberately
+/// *not* [`crate::kernels::ConvAlgo`]: a tuned lookup must resolve to a
+/// concrete kernel, never back to `Tuned` (no recursion) and never to an
+/// under-specified auto policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TunedAlgo {
+    /// Naïve direct convolution.
+    Direct,
+    /// `im2col` + blocked GEMM.
+    Gemm,
+    /// Sliding Window, rows chosen by the entry's [`RowKernel`].
+    Sliding,
+}
+
+impl TunedAlgo {
+    /// All choices, in report order.
+    pub const ALL: [TunedAlgo; 3] = [TunedAlgo::Direct, TunedAlgo::Gemm, TunedAlgo::Sliding];
+
+    /// Stable name used in `profile.json`.
+    pub fn name(self) -> &'static str {
+        match self {
+            TunedAlgo::Direct => "direct",
+            TunedAlgo::Gemm => "gemm",
+            TunedAlgo::Sliding => "sliding",
+        }
+    }
+
+    /// Parse a stable name (inverse of [`TunedAlgo::name`]).
+    pub fn parse(s: &str) -> Option<TunedAlgo> {
+        Self::ALL.into_iter().find(|a| a.name() == s)
+    }
+}
+
+/// One measured crossover-table row: the winners at a
+/// `(filter width, thread count)` bucket.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ProfileEntry {
+    /// Filter width this bucket was measured at.
+    pub k: usize,
+    /// Worker-thread count this bucket was measured at.
+    pub threads: usize,
+    /// Conv-level winner.
+    pub algo: TunedAlgo,
+    /// Fastest sliding row-kernel family at this bucket.
+    pub slide: RowKernel,
+    /// The winner's throughput when measured, GFLOP/s (recorded for the
+    /// report; dispatch never reads it).
+    pub gflops: f64,
+}
+
+/// A per-machine dispatch profile: the distilled crossover table the
+/// autotuner measures (see [`crate::autotune::autotune`]), cached as
+/// `profile.json` so serving never re-measures.
+///
+/// An **empty** profile is the paper's hard-coded §2 policy: every
+/// lookup falls back to custom-3/5 → generic ≤ 17 → compound, with the
+/// sliding algorithm at conv level — exactly what dispatch did before
+/// this subsystem existed. [`DispatchProfile::is_paper_policy`] tells
+/// the two apart.
+///
+/// # Examples
+///
+/// ```
+/// use swconv::autotune::{DispatchProfile, TunedAlgo};
+/// use swconv::kernels::rowconv::RowKernel;
+///
+/// // No profile on disk → the paper policy.
+/// let paper = DispatchProfile::paper_policy();
+/// assert!(paper.is_paper_policy());
+/// assert_eq!(paper.choice(5, 1), (TunedAlgo::Sliding, RowKernel::Custom));
+/// assert_eq!(paper.choice(9, 1), (TunedAlgo::Sliding, RowKernel::Generic));
+/// assert_eq!(paper.choice(33, 1), (TunedAlgo::Sliding, RowKernel::Compound));
+/// ```
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct DispatchProfile {
+    entries: Vec<ProfileEntry>,
+}
+
+/// Where the CLI caches the machine's profile:
+/// `target/autotune/profile.json` (relative to the working directory,
+/// like the `target/reports/BENCH_*.json` artifacts).
+pub fn default_profile_path() -> PathBuf {
+    PathBuf::from("target/autotune/profile.json")
+}
+
+impl DispatchProfile {
+    /// The empty profile — every lookup answers with the paper's §2
+    /// policy.
+    pub fn paper_policy() -> Self {
+        DispatchProfile { entries: Vec::new() }
+    }
+
+    /// Build from measured entries (the autotuner's constructor).
+    pub fn from_entries(entries: Vec<ProfileEntry>) -> Self {
+        DispatchProfile { entries }
+    }
+
+    /// The crossover table, as measured.
+    pub fn entries(&self) -> &[ProfileEntry] {
+        &self.entries
+    }
+
+    /// True when the table is empty and every lookup falls back to the
+    /// paper policy.
+    pub fn is_paper_policy(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The tuned `(conv-level algorithm, row-kernel family)` for filter
+    /// width `k` at `threads` worker threads.
+    ///
+    /// Nearest-bucket lookup over all entries, minimising `(k distance,
+    /// thread distance)` lexicographically — equal distances resolve
+    /// toward the smaller `k`, then the smaller `threads`, so ties are
+    /// deterministic. The answer is clamped so it is always *legal*:
+    /// the row family is re-clamped through [`RowKernel::legal_for`],
+    /// and a sliding choice for a width beyond the compound kernel's
+    /// reach degrades to [`TunedAlgo::Direct`] (mirroring the auto
+    /// policy's direct fallback). An empty profile answers with the
+    /// paper policy.
+    pub fn choice(&self, k: usize, threads: usize) -> (TunedAlgo, RowKernel) {
+        let k = k.max(1);
+        let nearest = self
+            .entries
+            .iter()
+            .min_by_key(|e| {
+                let dk = e.k.abs_diff(k);
+                let dt = e.threads.abs_diff(threads);
+                // Lexicographic: nearest k first, then nearest threads,
+                // then smaller k/threads so ties are deterministic.
+                (dk, dt, e.k, e.threads)
+            })
+            .copied();
+        let clamped = k.min(COMPOUND_MAX_K);
+        let (algo, slide) = match nearest {
+            Some(e) => (e.algo, e.slide.legal_for(clamped)),
+            None => (TunedAlgo::Sliding, RowKernel::paper_policy(clamped)),
+        };
+        if algo == TunedAlgo::Sliding && k > COMPOUND_MAX_K {
+            (TunedAlgo::Direct, slide)
+        } else {
+            (algo, slide)
+        }
+    }
+
+    /// The tuned row-kernel family for width `k` at `threads` threads
+    /// (the [`DispatchProfile::choice`] slide component).
+    pub fn row_kernel(&self, k: usize, threads: usize) -> RowKernel {
+        self.choice(k, threads).1
+    }
+
+    /// Serialize to `path` (schema at the
+    /// [module level](crate::autotune::profile)).
+    /// Parent directories are created. Written entries round-trip
+    /// exactly: floats use Rust's shortest-round-trip `Display`.
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{{")?;
+        writeln!(f, "  \"version\": 1,")?;
+        writeln!(f, "  \"lanes\": {LANES},")?;
+        writeln!(f, "  \"entries\": [")?;
+        for (i, e) in self.entries.iter().enumerate() {
+            let sep = if i + 1 == self.entries.len() { "" } else { "," };
+            // Non-finite throughput would not be valid JSON; it can only
+            // mean a broken measurement, so record it as 0.
+            let gflops = if e.gflops.is_finite() { e.gflops } else { 0.0 };
+            writeln!(
+                f,
+                "    {{\"k\": {}, \"threads\": {}, \"algo\": \"{}\", \
+                 \"slide\": \"{}\", \"gflops\": {}}}{sep}",
+                e.k,
+                e.threads,
+                e.algo.name(),
+                e.slide.name(),
+                gflops
+            )?;
+        }
+        writeln!(f, "  ]")?;
+        writeln!(f, "}}")?;
+        Ok(())
+    }
+
+    /// Load and validate a profile from `path`. Every failure mode — an
+    /// unreadable file, malformed JSON, a wrong `version`, a `lanes`
+    /// mismatch, or an entry with unknown names / zero buckets — is an
+    /// `Err`, never a panic.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading profile {}", path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing profile {}", path.display()))?;
+        Self::from_json(&j)
+    }
+
+    /// Parse an already-loaded JSON document (schema at the
+    /// [module level](crate::autotune::profile)).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        match j.get("version").and_then(Json::as_usize) {
+            Some(1) => {}
+            other => bail!("profile version {other:?} unsupported (want 1)"),
+        }
+        let lanes = j
+            .get("lanes")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| crate::anyhow!("profile missing 'lanes'"))?;
+        if lanes != LANES {
+            bail!("profile measured for {lanes}-lane vectors, this build has {LANES}");
+        }
+        let arr = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| crate::anyhow!("profile missing 'entries' array"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let field = |name: &str| {
+                e.get(name)
+                    .ok_or_else(|| crate::anyhow!("entry {i}: missing '{name}'"))
+            };
+            let k = field("k")?.as_usize().unwrap_or(0);
+            let threads = field("threads")?.as_usize().unwrap_or(0);
+            if k == 0 || threads == 0 {
+                bail!("entry {i}: k and threads must be >= 1");
+            }
+            let algo_name = field("algo")?
+                .as_str()
+                .ok_or_else(|| crate::anyhow!("entry {i}: 'algo' not a string"))?;
+            let algo = TunedAlgo::parse(algo_name)
+                .ok_or_else(|| crate::anyhow!("entry {i}: unknown algo '{algo_name}'"))?;
+            let slide_name = field("slide")?
+                .as_str()
+                .ok_or_else(|| crate::anyhow!("entry {i}: 'slide' not a string"))?;
+            let slide = RowKernel::parse(slide_name)
+                .ok_or_else(|| crate::anyhow!("entry {i}: unknown slide '{slide_name}'"))?;
+            let gflops = field("gflops")?.as_f64().unwrap_or(0.0);
+            entries.push(ProfileEntry { k, threads, algo, slide, gflops });
+        }
+        Ok(DispatchProfile { entries })
+    }
+
+    /// [`DispatchProfile::load`], degraded to the paper policy on any
+    /// failure: a missing cache is silent (first run), everything else
+    /// warns on stderr. Serving therefore *cannot* be taken down by a
+    /// corrupt or truncated `profile.json` — it just dispatches like the
+    /// paper again.
+    pub fn load_or_paper(path: impl AsRef<Path>) -> Self {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Self::paper_policy();
+        }
+        match Self::load(path) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!(
+                    "warning: ignoring dispatch profile {}: {e}; \
+                     falling back to the paper's k=17 policy",
+                    path.display()
+                );
+                Self::paper_policy()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DispatchProfile {
+        DispatchProfile::from_entries(vec![
+            ProfileEntry {
+                k: 3,
+                threads: 1,
+                algo: TunedAlgo::Sliding,
+                slide: RowKernel::Custom,
+                gflops: 10.5,
+            },
+            ProfileEntry {
+                k: 9,
+                threads: 1,
+                algo: TunedAlgo::Sliding,
+                slide: RowKernel::Compound,
+                gflops: 9.25,
+            },
+            ProfileEntry {
+                k: 9,
+                threads: 8,
+                algo: TunedAlgo::Gemm,
+                slide: RowKernel::Generic,
+                gflops: 40.0,
+            },
+            ProfileEntry {
+                k: 33,
+                threads: 1,
+                algo: TunedAlgo::Direct,
+                slide: RowKernel::Compound,
+                gflops: 2.0,
+            },
+        ])
+    }
+
+    #[test]
+    fn empty_profile_is_paper_policy() {
+        let p = DispatchProfile::paper_policy();
+        assert!(p.is_paper_policy());
+        assert_eq!(p.choice(3, 4), (TunedAlgo::Sliding, RowKernel::Custom));
+        assert_eq!(p.choice(17, 1), (TunedAlgo::Sliding, RowKernel::Generic));
+        assert_eq!(p.choice(18, 1), (TunedAlgo::Sliding, RowKernel::Compound));
+        // Beyond the compound reach the conv level degrades to direct,
+        // mirroring SlideVariant::Auto's fallback.
+        let big = crate::kernels::rowconv::COMPOUND_MAX_K + 1;
+        assert_eq!(p.choice(big, 1).0, TunedAlgo::Direct);
+    }
+
+    #[test]
+    fn nearest_bucket_lookup() {
+        let p = sample();
+        // Exact hits.
+        assert_eq!(p.choice(3, 1), (TunedAlgo::Sliding, RowKernel::Custom));
+        assert_eq!(p.choice(9, 8), (TunedAlgo::Gemm, RowKernel::Generic));
+        // k between buckets: 4 is nearer 3 than 9.
+        assert_eq!(p.choice(4, 1).0, TunedAlgo::Sliding);
+        // k=6 ties 3 and 9 → smaller bucket wins (k=3, custom row) but
+        // custom cannot evaluate 6, so the row clamps to paper policy.
+        assert_eq!(p.choice(6, 1), (TunedAlgo::Sliding, RowKernel::Generic));
+        // threads between buckets at k=9: 2 is nearer 1 than 8.
+        assert_eq!(p.choice(9, 2).0, TunedAlgo::Sliding);
+        assert_eq!(p.choice(9, 6).0, TunedAlgo::Gemm);
+        // Far k snaps to the 33 bucket.
+        assert_eq!(p.choice(40, 1).0, TunedAlgo::Direct);
+    }
+
+    #[test]
+    fn lookup_clamps_illegal_rows() {
+        // An entry claiming "generic" far beyond the generic reach must
+        // never hand back the generic kernel.
+        let p = DispatchProfile::from_entries(vec![ProfileEntry {
+            k: 33,
+            threads: 1,
+            algo: TunedAlgo::Sliding,
+            slide: RowKernel::Generic,
+            gflops: 1.0,
+        }]);
+        assert_eq!(p.row_kernel(33, 1), RowKernel::Compound);
+    }
+
+    #[test]
+    fn save_load_roundtrip_exact() {
+        let p = sample();
+        let path = std::env::temp_dir().join("swconv_profile_roundtrip.json");
+        p.save(&path).unwrap();
+        let q = DispatchProfile::load(&path).unwrap();
+        assert_eq!(p, q, "profile must round-trip bit-exact through JSON");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn load_rejects_bad_documents() {
+        let dir = std::env::temp_dir();
+        let cases: [(&str, &str); 5] = [
+            ("not json at all", "parse"),
+            ("{\"version\": 2, \"lanes\": 16, \"entries\": []}", "version"),
+            ("{\"version\": 1, \"entries\": []}", "lanes"),
+            ("{\"version\": 1, \"lanes\": 9999, \"entries\": []}", "lane"),
+            (
+                "{\"version\": 1, \"lanes\": 16, \"entries\": [{\"k\": 3}]}",
+                "entry",
+            ),
+        ];
+        for (i, (doc, why)) in cases.iter().enumerate() {
+            let path = dir.join(format!("swconv_profile_bad_{i}.json"));
+            std::fs::write(&path, doc).unwrap();
+            assert!(
+                DispatchProfile::load(&path).is_err(),
+                "case {i} ({why}) must be rejected"
+            );
+            // And the degraded loader answers with the paper policy.
+            assert!(DispatchProfile::load_or_paper(&path).is_paper_policy());
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
+    #[test]
+    fn load_or_paper_on_missing_file_is_silent_paper() {
+        let p = DispatchProfile::load_or_paper("/nonexistent/swconv/profile.json");
+        assert!(p.is_paper_policy());
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for a in TunedAlgo::ALL {
+            assert_eq!(TunedAlgo::parse(a.name()), Some(a));
+        }
+        assert_eq!(TunedAlgo::parse("tuned"), None, "no recursion by construction");
+    }
+}

@@ -1,5 +1,6 @@
 //! Inference backends: what a coordinator replica actually runs.
 
+use crate::autotune::DispatchProfile;
 use crate::error::{bail, Result};
 use crate::nn::{ExecCtx, Model};
 use crate::runtime::Engine;
@@ -19,6 +20,12 @@ pub trait Backend {
     fn item_shape(&self) -> &[usize];
     /// Run a batch `[b, …item_shape]` and return `[b, …out]`.
     fn infer(&mut self, batch: &Tensor) -> Result<Tensor>;
+    /// Install a measured dispatch profile ([`crate::autotune`]). The
+    /// coordinator calls this once, right after construction, on every
+    /// replica of a spec built with [`BackendSpec::with_profile`].
+    /// Default: ignored (PJRT artifacts are compiled ahead of time, so
+    /// there is nothing to tune at dispatch).
+    fn set_profile(&mut self, _profile: Arc<DispatchProfile>) {}
 }
 
 /// Native backend: a [`Model`] executed by the Rust kernels with a fixed
@@ -39,7 +46,8 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
-    /// Wrap a model + algorithm choice.
+    /// Wrap a model + execution context (algorithm, worker threads,
+    /// scratch arena and — if attached — the dispatch profile).
     pub fn new(name: impl Into<String>, model: Model, ctx: ExecCtx) -> Self {
         NativeBackend { name: name.into(), model, ctx, trim_after: None }
     }
@@ -80,6 +88,10 @@ impl Backend for NativeBackend {
         }
         Ok(out)
     }
+
+    fn set_profile(&mut self, profile: Arc<DispatchProfile>) {
+        self.ctx.set_profile(profile);
+    }
 }
 
 /// The factory a replica worker runs (on its own thread — PJRT handles
@@ -94,6 +106,41 @@ pub type BackendFactory = Arc<dyn Fn(usize) -> Result<Box<dyn Backend>> + Send +
 /// [`super::shard::ShardPlanner`]); each replica gets its own backend
 /// instance and therefore its own `ExecCtx`/engine state, while native
 /// replicas share model weights through [`Model`]'s `Arc`-backed clone.
+///
+/// # Examples
+///
+/// A replicated, profile-tuned native tier served end to end:
+///
+/// ```
+/// use std::sync::Arc;
+/// use std::time::Duration;
+/// use swconv::autotune::DispatchProfile;
+/// use swconv::coordinator::{BackendSpec, BatchPolicy, Coordinator};
+/// use swconv::kernels::ConvAlgo;
+/// use swconv::nn::{zoo, ExecCtx};
+/// use swconv::tensor::Tensor;
+///
+/// let profile = Arc::new(DispatchProfile::paper_policy()); // or load_or_paper(path)
+/// let spec = BackendSpec::native(
+///     "sliding",
+///     zoo::simple_cnn(10, 1),
+///     ExecCtx::with_threads(ConvAlgo::Sliding, 2),
+/// )
+/// .with_replicas(2)
+/// .with_profile(profile);
+///
+/// let coord = Coordinator::new(
+///     vec![spec],
+///     BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+/// );
+/// let y = coord
+///     .infer("sliding", Tensor::randn(&[1, 28, 28], 7))
+///     .unwrap()
+///     .output
+///     .unwrap();
+/// assert_eq!(y.dims(), &[10]);
+/// coord.shutdown();
+/// ```
 pub struct BackendSpec {
     /// Router key.
     pub name: String,
@@ -103,6 +150,10 @@ pub struct BackendSpec {
     pub replicas: usize,
     /// Constructor, run once per replica on the replica's thread.
     pub factory: BackendFactory,
+    /// Measured dispatch profile installed on every replica right after
+    /// its factory runs ([`Backend::set_profile`]); `None` leaves each
+    /// replica on the paper's hard-coded dispatch policy.
+    pub profile: Option<Arc<DispatchProfile>>,
 }
 
 impl BackendSpec {
@@ -113,12 +164,28 @@ impl BackendSpec {
         item_shape: Vec<usize>,
         factory: impl Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
     ) -> Self {
-        BackendSpec { name: name.into(), item_shape, replicas: 1, factory: Arc::new(factory) }
+        BackendSpec {
+            name: name.into(),
+            item_shape,
+            replicas: 1,
+            factory: Arc::new(factory),
+            profile: None,
+        }
     }
 
     /// Set the replica count (builder style; clamped to ≥ 1).
     pub fn with_replicas(mut self, replicas: usize) -> Self {
         self.replicas = replicas.max(1);
+        self
+    }
+
+    /// Attach a measured dispatch profile (builder style): every
+    /// replica of this tier dispatches tuned — the coordinator installs
+    /// the shared profile on each replica's backend right after the
+    /// factory constructs it, so one `autotune` run (or one cached
+    /// `profile.json`) steers the whole tier.
+    pub fn with_profile(mut self, profile: Arc<DispatchProfile>) -> Self {
+        self.profile = Some(profile);
         self
     }
 
@@ -161,6 +228,7 @@ impl BackendSpec {
                 }
                 Ok(Box::new(b) as Box<dyn Backend>)
             }),
+            profile: None,
         }
     }
 
@@ -183,6 +251,7 @@ impl BackendSpec {
             name,
             item_shape,
             replicas: 1,
+            profile: None,
             factory: Arc::new(move |_replica| {
                 let engine = Engine::new(dir.clone())?;
                 let b = PjrtBackend::new(n2.clone(), engine, &artifact)?;
@@ -382,6 +451,25 @@ mod tests {
         let s = s.with_replicas(4);
         assert_eq!(s.replicas, 4);
         assert_eq!(s.with_replicas(0).replicas, 1, "clamped to >= 1");
+    }
+
+    /// The profile knob: installing a profile must not change results
+    /// when the profile agrees with the paper policy, and the spec
+    /// carries it for the coordinator to install per replica.
+    #[test]
+    fn spec_profile_knob_and_native_set_profile() {
+        let profile = Arc::new(DispatchProfile::paper_policy());
+        let spec = BackendSpec::native("sliding", simple_cnn(10, 1), ExecCtx::default())
+            .with_profile(Arc::clone(&profile));
+        assert!(spec.profile.is_some());
+
+        let x = Tensor::randn(&[2, 1, 28, 28], 10);
+        let mut plain = spec.factory.as_ref()(0).unwrap();
+        let baseline = plain.infer(&x).unwrap();
+        let mut tuned = spec.factory.as_ref()(1).unwrap();
+        tuned.set_profile(Arc::clone(&profile));
+        let y = tuned.infer(&x).unwrap();
+        assert_eq!(baseline.as_slice(), y.as_slice());
     }
 
     #[test]

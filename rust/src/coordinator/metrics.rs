@@ -18,7 +18,7 @@ pub struct LatencyHistogram {
 
 #[derive(Debug, Clone)]
 struct Inner {
-    /// bucket[i] counts latencies in [2^i, 2^(i+1)) microseconds.
+    /// `bucket[i]` counts latencies in `[2^i, 2^(i+1))` microseconds.
     buckets: [u64; 32],
     count: u64,
     total_us: u64,

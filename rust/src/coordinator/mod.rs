@@ -21,6 +21,11 @@
 //! [`metrics::LatencyHistogram`]s merge into a backend-level snapshot
 //! via [`metrics::LatencyHistogram::aggregate`].
 //!
+//! A spec built with [`backend::BackendSpec::with_profile`] carries a
+//! measured [`crate::autotune::DispatchProfile`]; the coordinator
+//! installs it on every replica right after construction, so one cached
+//! `profile.json` makes the whole tier dispatch tuned.
+//!
 //! tokio is unavailable in this offline environment; the coordinator uses
 //! std threads + channels, which for a single-node serving driver is
 //! equivalent (documented in DESIGN.md §Substitutions).

@@ -122,7 +122,7 @@ impl Coordinator {
     pub fn new(backends: Vec<BackendSpec>, policy: BatchPolicy) -> Self {
         let mut workers = HashMap::new();
         for spec in backends {
-            let BackendSpec { name, item_shape, replicas, factory } = spec;
+            let BackendSpec { name, item_shape, replicas, factory, profile } = spec;
             let replicas = replicas.max(1);
             let (tx, rx) = channel::<Request>();
             let mut replica_metrics = Vec::with_capacity(replicas);
@@ -135,9 +135,10 @@ impl Coordinator {
                 let m2 = Arc::clone(&metrics);
                 let if2 = Arc::clone(&in_flight);
                 let f2: BackendFactory = Arc::clone(&factory);
+                let p2 = profile.clone();
                 let join = std::thread::Builder::new()
                     .name(format!("swconv-{name}-r{r}"))
-                    .spawn(move || replica_main(&f2, r, &srx, &m2, &if2))
+                    .spawn(move || replica_main(&f2, r, p2, &srx, &m2, &if2))
                     .expect("spawn replica worker");
                 replica_metrics.push(metrics);
                 joins.push(join);
@@ -270,16 +271,23 @@ fn planner_loop(rx: &Receiver<Request>, policy: BatchPolicy, replicas: Vec<Repli
 }
 
 /// Replica thread body: build the backend (guarding against factory
-/// errors *and* panics), then serve shards until the planner hangs up.
+/// errors *and* panics), install the spec's dispatch profile if one was
+/// attached, then serve shards until the planner hangs up.
 fn replica_main(
     factory: &BackendFactory,
     replica: usize,
+    profile: Option<Arc<crate::autotune::DispatchProfile>>,
     rx: &Receiver<Vec<Request>>,
     metrics: &LatencyHistogram,
     in_flight: &AtomicUsize,
 ) {
     match catch_unwind(AssertUnwindSafe(|| factory.as_ref()(replica))) {
-        Ok(Ok(mut backend)) => replica_loop(&mut *backend, rx, metrics, in_flight),
+        Ok(Ok(mut backend)) => {
+            if let Some(p) = profile {
+                backend.set_profile(p);
+            }
+            replica_loop(&mut *backend, rx, metrics, in_flight)
+        }
         Ok(Err(e)) => answer_all_with_error(rx, in_flight, &e.to_string()),
         Err(p) => answer_all_with_error(
             rx,
@@ -578,6 +586,42 @@ mod tests {
         for rx in rxs {
             let r = rx.recv().unwrap();
             assert!(r.output.is_ok(), "burst shard routed to dead replica: {:?}", r.output);
+        }
+        c.shutdown();
+    }
+
+    /// The spec's profile knob reaches every replica: a tuned tier
+    /// whose profile routes all convolutions to GEMM must answer
+    /// bit-identically to a plain GEMM tier.
+    #[test]
+    fn profiled_tier_dispatches_tuned_on_every_replica() {
+        use crate::autotune::{DispatchProfile, ProfileEntry, TunedAlgo};
+        use crate::kernels::rowconv::RowKernel;
+        let profile = Arc::new(DispatchProfile::from_entries(vec![ProfileEntry {
+            k: 3,
+            threads: 1,
+            algo: TunedAlgo::Gemm,
+            slide: RowKernel::Generic,
+            gflops: 1.0,
+        }]));
+        let c = Coordinator::new(
+            vec![
+                BackendSpec::native("tuned", simple_cnn(10, 1), ExecCtx::new(ConvAlgo::Tuned))
+                    .with_profile(Arc::clone(&profile))
+                    .with_replicas(2),
+                BackendSpec::native("gemm", simple_cnn(10, 1), ExecCtx::new(ConvAlgo::Im2colGemm)),
+            ],
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        );
+        for seed in 0..4 {
+            let x = Tensor::randn(&[1, 28, 28], 50 + seed);
+            let a = c.infer("tuned", x.clone()).unwrap().output.unwrap();
+            let b = c.infer("gemm", x).unwrap().output.unwrap();
+            assert_eq!(
+                a.as_slice(),
+                b.as_slice(),
+                "tuned tier must route every conv to the profiled winner"
+            );
         }
         c.shutdown();
     }

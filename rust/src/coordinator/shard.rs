@@ -42,6 +42,22 @@ pub const BROKEN_REPLICA_BIAS: usize = usize::MAX / 2;
 /// Stateful only in its round-robin cursor; the in-flight counts come
 /// from the caller on every [`ShardPlanner::plan`] call so the planner
 /// never holds locks.
+///
+/// # Examples
+///
+/// ```
+/// use swconv::coordinator::ShardPlanner;
+///
+/// let mut planner = ShardPlanner::new(3);
+/// // A burst of 6 requests while every replica is idle: scattered as
+/// // contiguous sub-batches covering 0..6 exactly.
+/// let plan = planner.plan(6, &[0, 0, 0]);
+/// assert_eq!(plan.iter().map(|(_, r)| r.len()).sum::<usize>(), 6);
+/// // A single request is routed whole to one replica.
+/// let single = planner.plan(1, &[0, 1, 0]);
+/// assert_eq!(single.len(), 1);
+/// assert_eq!(single[0].1, 0..1);
+/// ```
 #[derive(Debug)]
 pub struct ShardPlanner {
     replicas: usize,

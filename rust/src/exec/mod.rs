@@ -25,27 +25,61 @@
 //!   assert the steady state allocates nothing.
 //!
 //! `ExecCtx` also carries the convolution-algorithm choice
-//! ([`ConvAlgo`]) that the per-request router switches, which is all it
-//! used to be before this subsystem existed.
+//! ([`ConvAlgo`]) that the per-request router switches — which is all it
+//! used to be before this subsystem existed — and, optionally, a
+//! measured [`DispatchProfile`] ([`ExecCtx::with_profile`]) that the
+//! tuned dispatch paths ([`ConvAlgo::Tuned`], `SlideVariant::Auto`)
+//! consult instead of the paper's hard-coded k=17 crossover policy.
 
+use crate::autotune::{DispatchProfile, TunedAlgo};
+use crate::kernels::rowconv::RowKernel;
 use crate::kernels::ConvAlgo;
 use std::cell::RefCell;
 use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Per-request / per-backend execution context: algorithm selection,
-/// worker-thread count and the scratch-buffer arena.
+/// worker-thread count, the scratch-buffer arena and (optionally) the
+/// machine's measured dispatch profile.
 ///
 /// Cheap to construct; construct once and reuse to amortise scratch
 /// allocations. Not `Copy` (it owns the arena) — build with
 /// [`ExecCtx::new`] / [`ExecCtx::with_threads`] / [`ExecCtx::auto`].
+///
+/// # Examples
+///
+/// Serve the same workload single- and multi-threaded; results are
+/// bit-identical and the second call reuses the first call's scratch:
+///
+/// ```
+/// use swconv::exec::ExecCtx;
+/// use swconv::kernels::{conv2d_ctx, Conv2dParams, ConvAlgo};
+/// use swconv::tensor::Tensor;
+///
+/// let x = Tensor::randn(&[1, 2, 16, 16], 1);
+/// let w = Tensor::randn(&[4, 2, 3, 3], 2);
+/// let p = Conv2dParams::same(3);
+///
+/// let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 4);
+/// let warm = conv2d_ctx(&x, &w, None, &p, &ctx);
+/// let allocs = ctx.alloc_events();
+/// let again = conv2d_ctx(&x, &w, None, &p, &ctx);
+/// assert_eq!(warm.as_slice(), again.as_slice());
+/// assert_eq!(ctx.alloc_events(), allocs, "steady state allocates nothing");
+///
+/// let one = ExecCtx::new(ConvAlgo::Sliding);
+/// assert_eq!(conv2d_ctx(&x, &w, None, &p, &one).as_slice(), warm.as_slice());
+/// ```
 pub struct ExecCtx {
     /// Convolution algorithm for all conv layers routed through this ctx.
     pub algo: ConvAlgo,
     threads: usize,
     arena: Mutex<Vec<Vec<f32>>>,
     allocs: AtomicUsize,
+    /// Measured dispatch profile, shared across replicas via `Arc`;
+    /// `None` means every tuned lookup answers with the paper policy.
+    profile: Option<Arc<DispatchProfile>>,
 }
 
 impl ExecCtx {
@@ -62,6 +96,7 @@ impl ExecCtx {
             threads: threads.max(1),
             arena: Mutex::new(Vec::new()),
             allocs: AtomicUsize::new(0),
+            profile: None,
         }
     }
 
@@ -69,6 +104,46 @@ impl ExecCtx {
     /// (see [`available_threads`]).
     pub fn auto(algo: ConvAlgo) -> Self {
         Self::with_threads(algo, available_threads())
+    }
+
+    /// Attach a measured dispatch profile (builder style). The tuned
+    /// dispatch paths — [`ConvAlgo::Tuned`] and the sliding kernel's
+    /// `Auto` row selection — consult it via [`ExecCtx::tuned_choice`] /
+    /// [`ExecCtx::tuned_row_kernel`]; without one they answer with the
+    /// paper's §2 policy.
+    pub fn with_profile(mut self, profile: Arc<DispatchProfile>) -> Self {
+        self.profile = Some(profile);
+        self
+    }
+
+    /// Install (or replace) the dispatch profile on an existing context
+    /// — what [`crate::coordinator::BackendSpec::with_profile`] does to
+    /// each replica's backend right after construction.
+    pub fn set_profile(&mut self, profile: Arc<DispatchProfile>) {
+        self.profile = Some(profile);
+    }
+
+    /// The attached dispatch profile, if any.
+    pub fn profile(&self) -> Option<&Arc<DispatchProfile>> {
+        self.profile.as_ref()
+    }
+
+    /// Tuned `(conv-level algorithm, row family)` for filter width `k`
+    /// at this ctx's thread count: the profile's nearest-bucket answer,
+    /// or the paper policy when no profile is attached. Always legal —
+    /// see [`DispatchProfile::choice`] for the clamping rules.
+    pub fn tuned_choice(&self, k: usize) -> (TunedAlgo, RowKernel) {
+        match &self.profile {
+            Some(p) => p.choice(k, self.threads),
+            None => DispatchProfile::paper_policy().choice(k, self.threads),
+        }
+    }
+
+    /// The tuned row-kernel family for width `k` (the
+    /// [`ExecCtx::tuned_choice`] slide component): what
+    /// `SlideVariant::Auto` runs per row.
+    pub fn tuned_row_kernel(&self, k: usize) -> RowKernel {
+        self.tuned_choice(k).1
     }
 
     /// Worker-thread count.
@@ -304,10 +379,14 @@ impl Default for ExecCtx {
 }
 
 impl Clone for ExecCtx {
-    /// Clones algorithm + thread count with a fresh (empty) arena: the
-    /// arena is a cache, not state.
+    /// Clones algorithm, thread count and the (shared) dispatch profile
+    /// with a fresh (empty) arena: the arena is a cache, not state —
+    /// this is how each coordinator replica gets its own scratch while
+    /// all replicas dispatch from one measured profile.
     fn clone(&self) -> Self {
-        ExecCtx::with_threads(self.algo, self.threads)
+        let mut c = ExecCtx::with_threads(self.algo, self.threads);
+        c.profile = self.profile.clone();
+        c
     }
 }
 
@@ -411,13 +490,28 @@ mod tests {
 
     #[test]
     fn clone_keeps_config_fresh_arena() {
-        let ctx = ExecCtx::with_threads(ConvAlgo::Im2colGemm, 3);
+        let profile = Arc::new(DispatchProfile::paper_policy());
+        let ctx =
+            ExecCtx::with_threads(ConvAlgo::Im2colGemm, 3).with_profile(Arc::clone(&profile));
         let b = ctx.take(8, 0.0);
         ctx.put(b);
         let c2 = ctx.clone();
         assert_eq!(c2.algo, ConvAlgo::Im2colGemm);
         assert_eq!(c2.threads(), 3);
         assert_eq!(c2.alloc_events(), 0);
+        assert!(
+            c2.profile().is_some_and(|p| Arc::ptr_eq(p, &profile)),
+            "replica clones must share the measured profile"
+        );
+    }
+
+    #[test]
+    fn tuned_lookups_fall_back_to_paper_policy() {
+        let ctx = ExecCtx::new(ConvAlgo::Tuned);
+        assert!(ctx.profile().is_none());
+        assert_eq!(ctx.tuned_choice(5), (TunedAlgo::Sliding, RowKernel::Custom));
+        assert_eq!(ctx.tuned_row_kernel(9), RowKernel::Generic);
+        assert_eq!(ctx.tuned_row_kernel(30), RowKernel::Compound);
     }
 
     #[test]

@@ -15,6 +15,9 @@ pub mod timing;
 pub mod workload;
 
 pub use roofline::{machine_peaks, MachinePeaks};
-pub use sweep::{fig1_speedup_sweep, fig2_throughput_sweep, Fig1Row, Fig2Row};
+pub use sweep::{
+    fig1_speedup_sweep, fig1_speedup_sweep_profiled, fig2_throughput_sweep,
+    fig2_throughput_sweep_profiled, Fig1Row, Fig2Row,
+};
 pub use timing::{bench, Stats};
 pub use workload::ConvCase;

@@ -5,6 +5,17 @@ use std::io::Write;
 use std::path::Path;
 
 /// A simple column-aligned table that can also be saved as CSV.
+///
+/// # Examples
+///
+/// ```
+/// use swconv::harness::report::Table;
+///
+/// let mut t = Table::new("speedups", &["k", "speedup"]);
+/// t.row(vec!["3".into(), "1.52".into()]);
+/// let text = t.render();
+/// assert!(text.contains("== speedups ==") && text.contains("1.52"));
+/// ```
 #[derive(Clone, Debug, Default)]
 pub struct Table {
     /// Table title (printed above, not in the CSV).
@@ -84,9 +95,31 @@ impl Table {
     }
 }
 
-/// One machine-readable benchmark measurement (the `BENCH_*.json`
-/// schema): which figure, which algorithm, which workload shape, how many
-/// threads, how long per iteration and the resulting throughput.
+/// One machine-readable benchmark measurement — one element of the
+/// `BENCH_*.json` schema: which figure, which algorithm, which workload
+/// shape, how many threads/replicas, how long per iteration and the
+/// resulting throughput.
+///
+/// ## `BENCH_*.json` schema
+///
+/// Every bench target writes `target/reports/BENCH_<name>.json` via
+/// [`write_bench_json`]: a JSON **array**, one object per record, each
+/// with exactly these fields —
+///
+/// ```json
+/// [
+///   {"bench": "fig1", "algo": "sliding", "shape": "c4_64x64_k5",
+///    "threads": 1, "replicas": 1, "ns_per_iter": 81234.5, "gflops": 9.3210}
+/// ]
+/// ```
+///
+/// `bench`/`algo`/`shape` are program-generated identifiers (no
+/// escaping needed); `algo` is a [`crate::kernels::ConvAlgo::name`]
+/// string or a bench-specific label (e.g. `"tuned"` vs `"sliding"` in
+/// `BENCH_tuned.json`); `shape` is a `ConvCase::id`. This is a
+/// *measurement log* — contrast the dispatch cache
+/// `target/autotune/profile.json`, whose schema lives with
+/// [`crate::autotune::profile`].
 #[derive(Clone, Debug, PartialEq)]
 pub struct BenchRecord {
     /// Figure/series id, e.g. `"fig1"`.

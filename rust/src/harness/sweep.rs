@@ -10,9 +10,12 @@
 use super::roofline::machine_peaks;
 use super::timing::{bench_quick, Stats};
 use super::workload::ConvCase;
+use crate::autotune::DispatchProfile;
 use crate::exec::ExecCtx;
+use crate::kernels::rowconv::{RowKernel, COMPOUND_MAX_K};
 use crate::kernels::{conv2d_ctx, ConvAlgo};
 use crate::tensor::Tensor;
+use std::sync::Arc;
 
 /// One Fig. 1 data point.
 #[derive(Clone, Debug)]
@@ -60,23 +63,25 @@ fn time_algo(
     w: &Tensor,
     algo: ConvAlgo,
     threads: usize,
+    profile: Option<&Arc<DispatchProfile>>,
 ) -> Option<Stats> {
     if !algo.supports_width(case.k) {
         return None;
     }
     // One ctx per series: scratch buffers are warmed by the bench's
     // calibration runs, so the timed iterations are allocation-free.
-    let ctx = ExecCtx::with_threads(algo, threads);
+    let mut ctx = ExecCtx::with_threads(algo, threads);
+    if let Some(p) = profile {
+        ctx.set_profile(Arc::clone(p));
+    }
     Some(bench_quick(|| conv2d_ctx(x, w, None, &case.params, &ctx)))
 }
 
-/// Which row kernel the auto policy picks for width `k` (paper §2).
+/// Which row kernel the auto policy picks for width `k` — a thin
+/// naming wrapper over the single policy encoding,
+/// [`RowKernel::paper_policy`].
 pub fn auto_kernel_name(k: usize) -> &'static str {
-    match k {
-        3 | 5 => "custom",
-        _ if k <= crate::kernels::rowconv::GENERIC_MAX_K => "generic",
-        _ => "compound",
-    }
+    RowKernel::paper_policy(k.min(COMPOUND_MAX_K)).name()
 }
 
 /// Run the Fig. 1 sweep over the given filter sizes with `threads`
@@ -90,17 +95,32 @@ pub fn fig1_speedup_sweep(
     threads: usize,
     make_case: impl Fn(usize) -> ConvCase,
 ) -> Vec<Fig1Row> {
+    fig1_speedup_sweep_profiled(ks, threads, None, make_case)
+}
+
+/// [`fig1_speedup_sweep`] with an optional measured dispatch profile:
+/// the sliding (auto) series then dispatches tuned rows — the CLI's
+/// `bench-fig1 --profile` path — while the forced series are unchanged.
+pub fn fig1_speedup_sweep_profiled(
+    ks: &[usize],
+    threads: usize,
+    profile: Option<Arc<DispatchProfile>>,
+    make_case: impl Fn(usize) -> ConvCase,
+) -> Vec<Fig1Row> {
+    let profile = profile.as_ref();
     let mut rows = Vec::with_capacity(ks.len());
     for &k in ks {
         let case = make_case(k);
         let x = case.input();
         let w = case.weights();
-        let t_gemm = time_algo(&case, &x, &w, ConvAlgo::Im2colGemm, threads).unwrap().secs();
-        let t_sliding = time_algo(&case, &x, &w, ConvAlgo::Sliding, threads).unwrap().secs();
+        let t_gemm =
+            time_algo(&case, &x, &w, ConvAlgo::Im2colGemm, threads, profile).unwrap().secs();
+        let t_sliding =
+            time_algo(&case, &x, &w, ConvAlgo::Sliding, threads, profile).unwrap().secs();
         let t_generic =
-            time_algo(&case, &x, &w, ConvAlgo::SlidingGeneric, threads).map(|s| s.secs());
-        let t_compound =
-            time_algo(&case, &x, &w, ConvAlgo::SlidingCompound, threads).map(|s| s.secs());
+            time_algo(&case, &x, &w, ConvAlgo::SlidingGeneric, threads, profile).map(|s| s.secs());
+        let t_compound = time_algo(&case, &x, &w, ConvAlgo::SlidingCompound, threads, profile)
+            .map(|s| s.secs());
         rows.push(Fig1Row {
             k,
             threads,
@@ -109,7 +129,10 @@ pub fn fig1_speedup_sweep(
             t_generic,
             t_compound,
             speedup: t_gemm / t_sliding,
-            kernel_used: auto_kernel_name(k),
+            kernel_used: match profile {
+                Some(p) => p.row_kernel(k, threads).name(),
+                None => auto_kernel_name(k),
+            },
         });
     }
     rows
@@ -122,6 +145,18 @@ pub fn fig2_throughput_sweep(
     threads: usize,
     make_case: impl Fn(usize) -> ConvCase,
 ) -> Vec<Fig2Row> {
+    fig2_throughput_sweep_profiled(ks, threads, None, make_case)
+}
+
+/// [`fig2_throughput_sweep`] with an optional measured dispatch profile
+/// steering the sliding series (the CLI's `bench-fig2 --profile` path).
+pub fn fig2_throughput_sweep_profiled(
+    ks: &[usize],
+    threads: usize,
+    profile: Option<Arc<DispatchProfile>>,
+    make_case: impl Fn(usize) -> ConvCase,
+) -> Vec<Fig2Row> {
+    let profile = profile.as_ref();
     let peaks = machine_peaks();
     let mut rows = Vec::with_capacity(ks.len());
     for &k in ks {
@@ -130,9 +165,9 @@ pub fn fig2_throughput_sweep(
         let w = case.weights();
         let flops = case.flops();
         let sliding =
-            time_algo(&case, &x, &w, ConvAlgo::Sliding, threads).unwrap().gflops(flops);
+            time_algo(&case, &x, &w, ConvAlgo::Sliding, threads, profile).unwrap().gflops(flops);
         let gemm =
-            time_algo(&case, &x, &w, ConvAlgo::Im2colGemm, threads).unwrap().gflops(flops);
+            time_algo(&case, &x, &w, ConvAlgo::Im2colGemm, threads, profile).unwrap().gflops(flops);
         rows.push(Fig2Row {
             k,
             threads,

@@ -7,6 +7,7 @@ use super::im2col::conv2d_im2col_ctx;
 use super::sliding1d::conv1d_sliding_ctx;
 use super::sliding2d::{conv2d_sliding_ctx, SlideVariant};
 use super::{Conv1dParams, Conv2dParams};
+use crate::autotune::TunedAlgo;
 use crate::exec::ExecCtx;
 use crate::tensor::Tensor;
 
@@ -24,16 +25,22 @@ pub enum ConvAlgo {
     SlidingGeneric,
     /// Sliding Window, forced compound-vector kernel.
     SlidingCompound,
+    /// Measured dispatch: per filter width, the winner recorded in the
+    /// ctx's [`crate::autotune::DispatchProfile`] (direct / GEMM /
+    /// sliding with the tuned row family). Without a profile this is
+    /// exactly the paper policy, i.e. [`ConvAlgo::Sliding`].
+    Tuned,
 }
 
 impl ConvAlgo {
     /// All algorithms, in the order benchmarks report them.
-    pub const ALL: [ConvAlgo; 5] = [
+    pub const ALL: [ConvAlgo; 6] = [
         ConvAlgo::Direct,
         ConvAlgo::Im2colGemm,
         ConvAlgo::Sliding,
         ConvAlgo::SlidingGeneric,
         ConvAlgo::SlidingCompound,
+        ConvAlgo::Tuned,
     ];
 
     /// Short stable name for reports and the CLI.
@@ -44,6 +51,7 @@ impl ConvAlgo {
             ConvAlgo::Sliding => "sliding",
             ConvAlgo::SlidingGeneric => "sliding-generic",
             ConvAlgo::SlidingCompound => "sliding-compound",
+            ConvAlgo::Tuned => "tuned",
         }
     }
 
@@ -99,6 +107,16 @@ pub fn conv2d_ctx(
         ConvAlgo::SlidingCompound => {
             conv2d_sliding_ctx(x, w, bias, p, SlideVariant::Compound, ctx)
         }
+        // Pure routing: resolve the width's measured winner, then run
+        // that kernel unchanged — the output is bit-identical to calling
+        // the chosen algorithm directly.
+        ConvAlgo::Tuned => match ctx.tuned_choice(w.dim(3)).0 {
+            TunedAlgo::Direct => conv2d_direct_ctx(x, w, bias, p, ctx),
+            TunedAlgo::Gemm => conv2d_im2col_ctx(x, w, bias, p, ctx),
+            TunedAlgo::Sliding => {
+                conv2d_sliding_ctx(x, w, bias, p, SlideVariant::Auto, ctx)
+            }
+        },
     }
 }
 
@@ -139,6 +157,9 @@ pub fn conv1d_ctx(
             let lo = y.dim(3);
             y.reshape(&[c_out, lo])
         }
+        // The sliding variants — and `Tuned`, whose profile buckets are
+        // measured on 2-D planes — all take the 1-D sliding path (its
+        // row loop already applies the paper's auto policy per width).
         _ => conv1d_sliding_ctx(x, w, bias, p, ctx),
     }
 }
@@ -187,5 +208,48 @@ mod tests {
         assert!(!ConvAlgo::SlidingGeneric.supports_width(18));
         assert!(ConvAlgo::SlidingCompound.supports_width(64));
         assert!(ConvAlgo::Sliding.supports_width(10_000)); // falls back to direct
+        assert!(ConvAlgo::Tuned.supports_width(10_000)); // same fallback
+    }
+
+    #[test]
+    fn tuned_without_profile_is_bitwise_paper_policy() {
+        let x = Tensor::randn(&[1, 3, 12, 14], 85);
+        let w = Tensor::randn(&[4, 3, 5, 5], 86);
+        let p = Conv2dParams::same(5);
+        let paper = conv2d(&x, &w, None, &p, ConvAlgo::Sliding);
+        let tuned = conv2d(&x, &w, None, &p, ConvAlgo::Tuned);
+        assert_eq!(paper.as_slice(), tuned.as_slice());
+    }
+
+    #[test]
+    fn tuned_routes_to_the_profiled_winner_bit_for_bit() {
+        use crate::autotune::{DispatchProfile, ProfileEntry, TunedAlgo};
+        use crate::kernels::rowconv::RowKernel;
+        use std::sync::Arc;
+
+        let x = Tensor::randn(&[1, 2, 10, 12], 87);
+        let w = Tensor::randn(&[3, 2, 5, 5], 88);
+        let p = Conv2dParams::default();
+        for (algo, reference) in [
+            (TunedAlgo::Direct, ConvAlgo::Direct),
+            (TunedAlgo::Gemm, ConvAlgo::Im2colGemm),
+            (TunedAlgo::Sliding, ConvAlgo::Sliding),
+        ] {
+            let profile = DispatchProfile::from_entries(vec![ProfileEntry {
+                k: 5,
+                threads: 1,
+                algo,
+                slide: RowKernel::Custom,
+                gflops: 1.0,
+            }]);
+            let ctx = ExecCtx::new(ConvAlgo::Tuned).with_profile(Arc::new(profile));
+            let tuned = conv2d_ctx(&x, &w, None, &p, &ctx);
+            let want = conv2d(&x, &w, None, &p, reference);
+            assert_eq!(
+                tuned.as_slice(),
+                want.as_slice(),
+                "{algo:?} must be routed bit-for-bit"
+            );
+        }
     }
 }

@@ -9,7 +9,7 @@
 //! | [`sliding1d`] | 1-D Vector Slide convolution + log-step sliding sums |
 //! | [`sliding2d`] | 2-D sliding convolution: generic (k ≤ 17), compound (k > 17), custom k=3/k=5 |
 //! | [`pool`]      | max/avg pooling via log-step sliding combines |
-//! | [`dispatch`]  | filter-size–driven algorithm selection (paper §2 policy) |
+//! | [`dispatch`]  | filter-size–driven algorithm selection (paper §2 policy, or a measured [`crate::autotune`] profile via [`ConvAlgo::Tuned`]) |
 //!
 //! The public entry points are [`conv2d`], [`conv1d`] and the pooling
 //! functions re-exported from [`pool`]; each takes a [`ConvAlgo`] so the

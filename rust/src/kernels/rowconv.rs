@@ -16,7 +16,7 @@
 //! * [`row_conv_generic`] — filter widths `k ≤ LANES + 1` (17 on AVX-512):
 //!   two registers per block, `slide_dyn` per tap ("the straightforward
 //!   version of the Vector Slide algorithm").
-//! * [`row_conv_compound`] — any width: a [`CompoundF32`] of `R` registers
+//! * [`row_conv_compound`] — any width: a [`crate::simd::CompoundF32`] of `R` registers
 //!   treated as one long vector ("kernels of larger width … operate on
 //!   multiple hardware vectors treating them as a single long compound
 //!   vector").
@@ -211,6 +211,91 @@ pub fn row_conv_auto(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
     }
 }
 
+/// The three row-kernel families, as a *value* — what the paper's §2
+/// policy chooses between, and what a measured
+/// [`crate::autotune::DispatchProfile`] records as the per-width winner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowKernel {
+    /// Fully unrolled custom kernels ([`row_conv_custom3`] /
+    /// [`row_conv_custom5`]); widths 3 and 5 only.
+    Custom,
+    /// The generic in-vector Vector Slide ([`row_conv_generic`]),
+    /// widths up to [`GENERIC_MAX_K`].
+    Generic,
+    /// The compound multi-register kernel ([`row_conv_compound`]),
+    /// widths up to [`COMPOUND_MAX_K`].
+    Compound,
+}
+
+impl RowKernel {
+    /// All families, in report order.
+    pub const ALL: [RowKernel; 3] = [RowKernel::Custom, RowKernel::Generic, RowKernel::Compound];
+
+    /// Stable name used in reports and `profile.json`.
+    pub fn name(self) -> &'static str {
+        match self {
+            RowKernel::Custom => "custom",
+            RowKernel::Generic => "generic",
+            RowKernel::Compound => "compound",
+        }
+    }
+
+    /// Parse a stable name (inverse of [`RowKernel::name`]).
+    pub fn parse(s: &str) -> Option<RowKernel> {
+        Self::ALL.into_iter().find(|r| r.name() == s)
+    }
+
+    /// Whether this family can evaluate filter width `k`.
+    pub fn supports(self, k: usize) -> bool {
+        match self {
+            RowKernel::Custom => k == 3 || k == 5,
+            RowKernel::Generic => k >= 1 && k <= GENERIC_MAX_K,
+            RowKernel::Compound => k >= 1 && k <= COMPOUND_MAX_K,
+        }
+    }
+
+    /// The paper's §2 selection for width `k` (custom 3/5 → generic ≤
+    /// [`GENERIC_MAX_K`] → compound). This is the fallback every tuned
+    /// lookup reduces to when no profile is present.
+    ///
+    /// # Panics
+    /// If `k` exceeds [`COMPOUND_MAX_K`] (callers fall back to the
+    /// direct kernel before any row kernel is chosen).
+    pub fn paper_policy(k: usize) -> RowKernel {
+        assert!(k >= 1 && k <= COMPOUND_MAX_K, "no row kernel for width {k}");
+        match k {
+            3 | 5 => RowKernel::Custom,
+            _ if k <= GENERIC_MAX_K => RowKernel::Generic,
+            _ => RowKernel::Compound,
+        }
+    }
+
+    /// This family if it can evaluate `k`, else the paper policy for `k`
+    /// — the clamp that keeps a nearest-bucket profile lookup (or a
+    /// hand-edited profile) from ever selecting an illegal kernel.
+    pub fn legal_for(self, k: usize) -> RowKernel {
+        if self.supports(k) {
+            self
+        } else {
+            RowKernel::paper_policy(k)
+        }
+    }
+
+    /// The concrete row routine for width `k`.
+    ///
+    /// Total even on out-of-family widths: an unsupported pick quietly
+    /// re-clamps through [`RowKernel::legal_for`], so callers can feed a
+    /// profile choice straight in.
+    pub fn row_fn(self, k: usize) -> fn(&[f32], &[f32], &mut [f32], usize) {
+        match self.legal_for(k) {
+            RowKernel::Custom if k == 3 => row_conv_custom3,
+            RowKernel::Custom => row_conv_custom5,
+            RowKernel::Generic => row_conv_generic,
+            RowKernel::Compound => row_conv_compound,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -302,5 +387,47 @@ mod tests {
         let src = vec![0.0; 64];
         let mut dst: Vec<f32> = vec![];
         row_conv_generic(&src, &[1.0, 2.0], &mut dst, 0);
+    }
+
+    #[test]
+    fn row_kernel_names_roundtrip() {
+        for r in RowKernel::ALL {
+            assert_eq!(RowKernel::parse(r.name()), Some(r));
+        }
+        assert_eq!(RowKernel::parse("mystery"), None);
+    }
+
+    #[test]
+    fn row_kernel_paper_policy_matches_auto() {
+        assert_eq!(RowKernel::paper_policy(3), RowKernel::Custom);
+        assert_eq!(RowKernel::paper_policy(5), RowKernel::Custom);
+        assert_eq!(RowKernel::paper_policy(4), RowKernel::Generic);
+        assert_eq!(RowKernel::paper_policy(GENERIC_MAX_K), RowKernel::Generic);
+        assert_eq!(RowKernel::paper_policy(GENERIC_MAX_K + 1), RowKernel::Compound);
+        assert_eq!(RowKernel::paper_policy(COMPOUND_MAX_K), RowKernel::Compound);
+    }
+
+    #[test]
+    fn row_kernel_legal_for_clamps() {
+        // Custom picked for a width it cannot evaluate → paper policy.
+        assert_eq!(RowKernel::Custom.legal_for(4), RowKernel::Generic);
+        assert_eq!(RowKernel::Custom.legal_for(3), RowKernel::Custom);
+        // Generic beyond its reach → compound.
+        assert_eq!(
+            RowKernel::Generic.legal_for(GENERIC_MAX_K + 1),
+            RowKernel::Compound
+        );
+        assert_eq!(RowKernel::Compound.legal_for(2), RowKernel::Compound);
+    }
+
+    #[test]
+    fn row_fn_total_and_correct() {
+        // Every family × a width it may or may not support: row_fn must
+        // hand back a routine that computes the right answer for k.
+        for rk in RowKernel::ALL {
+            for k in [2usize, 3, 5, 9, GENERIC_MAX_K, GENERIC_MAX_K + 4] {
+                run(rk.row_fn(k), k, 50, 3000 + k as u64);
+            }
+        }
     }
 }

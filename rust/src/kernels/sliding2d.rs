@@ -11,16 +11,17 @@
 //! (paper §2).
 //!
 //! The row kernel is chosen by [`SlideVariant`]:
-//! * `Auto` — the paper's policy: custom kernels for k = 3 and 5, the
-//!   generic in-vector kernel up to k = 17, compound vectors beyond.
+//! * `Auto` — tuned selection: when the [`ExecCtx`] carries a measured
+//!   [`crate::autotune::DispatchProfile`], the profile's winner for this
+//!   filter width and thread count; otherwise the paper's policy
+//!   (custom kernels for k = 3 and 5, the generic in-vector kernel up
+//!   to k = 17, compound vectors beyond).
 //! * `Generic` / `Compound` — forced, for the ablation studies
 //!   (custom-vs-generic, and the k = 17 crossover where the compound
 //!   kernel beats the in-vector one).
 
 use super::direct::conv2d_direct_ctx;
-use super::rowconv::{
-    row_conv_auto, row_conv_compound, row_conv_generic, COMPOUND_MAX_K, GENERIC_MAX_K,
-};
+use super::rowconv::{row_conv_compound, row_conv_generic, COMPOUND_MAX_K, GENERIC_MAX_K};
 use super::Conv2dParams;
 use crate::exec::ExecCtx;
 use crate::simd::LANES;
@@ -29,7 +30,9 @@ use crate::tensor::{pad2d_into, padded2d_size, Tensor};
 /// Which row kernel the 2-D sliding convolution uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SlideVariant {
-    /// Paper §2 policy: custom (k=3,5) → generic (k≤17) → compound.
+    /// The ctx's measured profile winner when one is attached
+    /// ([`crate::exec::ExecCtx::tuned_row_kernel`]); the paper's §2
+    /// policy — custom (k=3,5) → generic (k≤17) → compound — otherwise.
     Auto,
     /// Force the straightforward in-vector Vector Slide (k ≤ 17).
     Generic,
@@ -47,18 +50,10 @@ impl SlideVariant {
         }
     }
 
-    #[inline]
-    fn row_fn(self) -> fn(&[f32], &[f32], &mut [f32], usize) {
-        match self {
-            SlideVariant::Auto => row_conv_auto,
-            SlideVariant::Generic => row_conv_generic,
-            SlideVariant::Compound => row_conv_compound,
-        }
-    }
 }
 
 /// 2-D convolution via the Sliding Window kernels (same contract as
-/// [`conv2d_direct`]).
+/// [`super::direct::conv2d_direct`]).
 ///
 /// Filter widths the variant cannot handle fall back to the direct
 /// kernel (only possible beyond [`COMPOUND_MAX_K`] with `Auto`).
@@ -110,7 +105,16 @@ pub fn conv2d_sliding_ctx(
     let (sh, sw) = p.stride;
     // Unit-stride geometry; strided outputs subsample it.
     let ow1 = win + 2 * p.pad.1 - kw + 1;
-    let row_fn = variant.row_fn();
+    // Auto resolves the row family once per conv, not per row call: the
+    // ctx's tuned winner for (kw, threads), or the paper's §2 policy
+    // when no profile is attached — the same functions `row_conv_auto`
+    // dispatches to, so an unprofiled Auto is bit-identical to the
+    // pre-autotune kernel.
+    let row_fn = match variant {
+        SlideVariant::Auto => ctx.tuned_row_kernel(kw).row_fn(kw),
+        SlideVariant::Generic => row_conv_generic,
+        SlideVariant::Compound => row_conv_compound,
+    };
 
     // Pad once into arena scratch: convolution padding plus vector-load
     // slack on the right.
@@ -298,6 +302,34 @@ mod tests {
             SlideVariant::Auto,
             78,
         );
+    }
+
+    /// A profiled ctx steers `Auto` to the measured row family: forcing
+    /// compound through the profile must match the forced-compound
+    /// variant bit for bit (and an unprofiled ctx must keep matching
+    /// the paper policy — covered by the dispatch tests).
+    #[test]
+    fn auto_with_profile_uses_tuned_row_family() {
+        use crate::autotune::{DispatchProfile, ProfileEntry, TunedAlgo};
+        use crate::exec::ExecCtx;
+        use crate::kernels::rowconv::RowKernel;
+        use std::sync::Arc;
+
+        let x = Tensor::randn(&[1, 2, 9, 30], 90);
+        let w = Tensor::randn(&[2, 2, 5, 5], 91);
+        let p = Conv2dParams::default();
+        let profile = DispatchProfile::from_entries(vec![ProfileEntry {
+            k: 5,
+            threads: 1,
+            algo: TunedAlgo::Sliding,
+            slide: RowKernel::Compound,
+            gflops: 1.0,
+        }]);
+        let ctx = ExecCtx::new(crate::kernels::ConvAlgo::Sliding)
+            .with_profile(Arc::new(profile));
+        let tuned = conv2d_sliding_ctx(&x, &w, None, &p, SlideVariant::Auto, &ctx);
+        let forced = conv2d_sliding(&x, &w, None, &p, SlideVariant::Compound);
+        assert_eq!(tuned.as_slice(), forced.as_slice());
     }
 
     #[test]

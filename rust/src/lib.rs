@@ -14,8 +14,9 @@
 //! * [`tensor`] — a minimal NCHW tensor library (owned `f32` buffers,
 //!   stride math, zero-padding) used by every kernel.
 //! * [`exec`] — the execution-context subsystem: [`exec::ExecCtx`] carries
-//!   the algorithm choice, a worker-thread count and a reusable scratch
-//!   arena; every kernel has a `*_ctx` variant that parallelises over
+//!   the algorithm choice, a worker-thread count, a reusable scratch
+//!   arena and (optionally) the machine's measured dispatch profile;
+//!   every kernel has a `*_ctx` variant that parallelises over
 //!   independent output planes/rows and draws its padded/scratch/column
 //!   buffers from the arena instead of allocating per call.
 //! * [`kernels`] — the paper's contribution and its baselines:
@@ -23,6 +24,12 @@
 //!   k=3/k=5 kernels), sliding max/avg pooling, plus the `im2col` + blocked
 //!   GEMM baseline (our stand-in for ONNX Runtime's `MlasConv`) and a naïve
 //!   direct convolution oracle.
+//! * [`autotune`] — per-machine dispatch autotuning: a microbenchmark
+//!   pass races the kernels per (filter width, thread count) and caches
+//!   the winners as a [`autotune::DispatchProfile`]
+//!   (`target/autotune/profile.json`); [`kernels::ConvAlgo::Tuned`] and
+//!   the sliding kernel's `Auto` row selection dispatch from it, falling
+//!   back to the paper's k=17 policy when no profile exists.
 //! * [`nn`] — a small layer/graph library (Conv2d, Pool, ReLU, Linear, …)
 //!   and a model zoo (SqueezeNet-lite, MobileNet-lite, SimpleCNN) so the
 //!   primitives can be exercised inside real networks.
@@ -58,6 +65,7 @@ pub mod simd;
 pub mod tensor;
 pub mod exec;
 pub mod kernels;
+pub mod autotune;
 pub mod nn;
 pub mod harness;
 pub mod runtime;

@@ -5,18 +5,29 @@
 //! * `bench-fig1`  — regenerate the paper's Fig. 1 (speedup vs filter size)
 //! * `bench-fig2`  — regenerate Fig. 2 (throughput vs roofline)
 //! * `peaks`       — measure machine compute/bandwidth ceilings
+//! * `autotune`    — measure this machine's dispatch crossovers and cache
+//!   them as `target/autotune/profile.json`
 //! * `run-model`   — one forward pass of a zoo model, timed per algorithm
 //! * `serve`       — demo serving run through the coordinator
 //! * `summary`     — layer/FLOP summary of a zoo model
 //! * `artifacts-check` — load every AOT artifact and cross-check numerics
 //!   against the native kernels
+//!
+//! `bench-fig1`, `bench-fig2`, `run-model` and `serve` accept
+//! `--profile <path>` to dispatch from a cached profile (a missing or
+//! corrupt file falls back to the paper's policy with a warning).
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+use swconv::autotune::{
+    autotune, default_profile_path, profile_table, AutotuneOpts, DispatchProfile,
+};
 use swconv::coordinator::{BackendSpec, BatchPolicy, Coordinator};
 use swconv::error::{anyhow, bail, Context, Result};
 use swconv::harness::report::{dur, f3, Table};
 use swconv::harness::{
-    bench, fig1_speedup_sweep, fig2_throughput_sweep, machine_peaks, sweep, ConvCase,
+    bench, fig1_speedup_sweep_profiled, fig2_throughput_sweep_profiled, machine_peaks, sweep,
+    ConvCase,
 };
 use swconv::kernels::{conv2d, Conv2dParams, ConvAlgo};
 use swconv::nn::{zoo, ExecCtx};
@@ -74,13 +85,29 @@ fn parse_ks(args: &Args) -> Result<Vec<usize>> {
     }
 }
 
+/// `--profile PATH` — load a cached dispatch profile; a missing or
+/// corrupt file degrades to the paper policy with a warning. `None`
+/// when the flag is absent (pure paper-policy dispatch, no lookup).
+fn parse_profile(args: &Args) -> Option<Arc<DispatchProfile>> {
+    args.get("profile").map(|path| {
+        let p = DispatchProfile::load_or_paper(path);
+        if p.is_paper_policy() {
+            eprintln!("profile {path}: dispatching with the paper's k=17 policy");
+        } else {
+            eprintln!("profile {path}: {} measured buckets", p.entries().len());
+        }
+        Arc::new(p)
+    })
+}
+
 fn cmd_fig1(args: &Args) -> Result<()> {
     let c = args.usize("c", 4)?;
     let hw = args.usize("hw", 64)?;
     let threads = parse_threads(args)?;
     let ks = parse_ks(args)?;
+    let profile = parse_profile(args);
     eprintln!("fig1: c={c} hw={hw} ks={ks:?} threads={threads}");
-    let rows = fig1_speedup_sweep(&ks, threads, |k| ConvCase::square(c, hw, k));
+    let rows = fig1_speedup_sweep_profiled(&ks, threads, profile, |k| ConvCase::square(c, hw, k));
     let mut t = Table::new(
         format!(
             "Fig 1 — 2-D convolution speedup vs MlasConv-style GEMM (c={c}, {hw}x{hw}, {threads} thread(s))"
@@ -118,7 +145,9 @@ fn cmd_fig2(args: &Args) -> Result<()> {
         peaks.bandwidth_gbs,
         peaks.ridge()
     );
-    let rows = fig2_throughput_sweep(&ks, threads, |k| ConvCase::square(c, hw, k));
+    let rows = fig2_throughput_sweep_profiled(&ks, threads, parse_profile(args), |k| {
+        ConvCase::square(c, hw, k)
+    });
     let mut t = Table::new(
         format!(
             "Fig 2 — 2-D convolution throughput, GFLOP/s (c={c}, {hw}x{hw}, {threads} thread(s))"
@@ -152,6 +181,54 @@ fn cmd_peaks() -> Result<()> {
     Ok(())
 }
 
+/// `autotune` — measure this machine's dispatch crossovers and cache
+/// them (default `target/autotune/profile.json`) for every later
+/// `--profile` consumer.
+fn cmd_autotune(args: &Args) -> Result<()> {
+    let base = AutotuneOpts::default();
+    let ks = match args.get("ks") {
+        Some(_) => parse_ks(args)?,
+        None => base.ks.clone(),
+    };
+    // --threads N measures {1, N}; --threads 0 measures {1, all}; the
+    // default grid already covers {1, all hardware threads}.
+    let threads = match args.get("threads") {
+        Some(_) => {
+            let t = parse_threads(args)?;
+            if t <= 1 {
+                vec![1]
+            } else {
+                vec![1, t]
+            }
+        }
+        None => base.threads.clone(),
+    };
+    let opts = AutotuneOpts {
+        c: args.usize("c", base.c)?,
+        hw: args.usize("hw", base.hw)?,
+        ks,
+        threads,
+        verbose: true,
+        ..base
+    };
+    let out = args.get("out").map(std::path::PathBuf::from).unwrap_or_else(default_profile_path);
+
+    eprintln!(
+        "autotune: c={} hw={} ks={:?} threads={:?}",
+        opts.c, opts.hw, opts.ks, opts.threads
+    );
+    let profile = autotune(&opts);
+    println!("{}", profile_table(&profile).render());
+    profile.save(&out).with_context(|| format!("writing {}", out.display()))?;
+    println!(
+        "cached {} buckets in {} (use --profile {} on bench/serve)",
+        profile.entries().len(),
+        out.display(),
+        out.display()
+    );
+    Ok(())
+}
+
 fn cmd_run_model(args: &Args) -> Result<()> {
     let name = args.get("model").unwrap_or("simple-cnn");
     let batch = args.usize("batch", 1)?;
@@ -168,9 +245,18 @@ fn cmd_run_model(args: &Args) -> Result<()> {
         ),
         &["algo", "median", "GFLOP/s"],
     );
+    // With --profile, add the tuned dispatch as a fourth series.
+    let profile = parse_profile(args);
+    let mut algos = vec![ConvAlgo::Im2colGemm, ConvAlgo::Sliding, ConvAlgo::Direct];
+    if profile.is_some() {
+        algos.push(ConvAlgo::Tuned);
+    }
     let mut outputs: Vec<(ConvAlgo, Tensor)> = Vec::new();
-    for algo in [ConvAlgo::Im2colGemm, ConvAlgo::Sliding, ConvAlgo::Direct] {
-        let ctx = ExecCtx::with_threads(algo, threads);
+    for algo in algos {
+        let mut ctx = ExecCtx::with_threads(algo, threads);
+        if let Some(p) = &profile {
+            ctx.set_profile(Arc::clone(p));
+        }
         let stats = bench(|| model.forward(&x, &ctx));
         t.row(vec![
             algo.name().into(),
@@ -215,30 +301,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // maximum steady-state speed; N caps each replica's retained arena
     // at N MiB after every batch.
     let trim_mb = args.usize("trim-mb", 0)?;
+    // --profile: every tier dispatches from the cached crossover table,
+    // and a third "tuned" backend (ConvAlgo::Tuned) joins the race.
+    let profile = parse_profile(args);
     let model_a = zoo::by_name(name, 10, 42).ok_or_else(|| anyhow!("unknown model '{name}'"))?;
     let model_b = zoo::by_name(name, 10, 42).unwrap();
     let item_shape = model_a.input_shape.clone();
 
     let spec = |key: &str, model, algo| {
         let ctx = ExecCtx::with_threads(algo, threads);
-        let s = if trim_mb > 0 {
+        let mut s = if trim_mb > 0 {
             BackendSpec::native_trimmed(key, model, ctx, trim_mb << 18) // MiB -> f32s
         } else {
             BackendSpec::native(key, model, ctx)
         };
+        if let Some(p) = &profile {
+            s = s.with_profile(Arc::clone(p));
+        }
         s.with_replicas(replicas)
     };
-    let backends = vec![
+    let mut backends = vec![
         spec("sliding", model_a, ConvAlgo::Sliding),
         spec("gemm", model_b, ConvAlgo::Im2colGemm),
     ];
+    let mut backend_names = vec!["sliding", "gemm"];
+    if profile.is_some() {
+        backends.push(spec("tuned", zoo::by_name(name, 10, 42).unwrap(), ConvAlgo::Tuned));
+        backend_names.push("tuned");
+    }
     let coord = Coordinator::new(
         backends,
         BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms as u64) },
     );
 
     eprintln!("serve: {replicas} replica(s) x {threads} kernel thread(s) per backend");
-    for backend in ["sliding", "gemm"] {
+    for backend in backend_names {
         let t0 = Instant::now();
         let rxs: Vec<_> = (0..n_req)
             .map(|i| coord.submit(backend, Tensor::randn(&item_shape, i as u64)).unwrap())
@@ -313,12 +410,16 @@ USAGE: swconv <command> [--flag value]...
 
 COMMANDS
   bench-fig1       [--c 4] [--hw 64] [--ks 2,3,...] [--threads N] [--csv out.csv]
+                   [--profile PATH]
   bench-fig2       [--c 4] [--hw 64] [--ks 2,3,...] [--threads N] [--csv out.csv]
+                   [--profile PATH]
   peaks
-  run-model        [--model NAME] [--batch N] [--threads N]
+  autotune         [--c 4] [--hw 64] [--ks 2,3,...] [--threads N]
+                   [--out target/autotune/profile.json]
+  run-model        [--model NAME] [--batch N] [--threads N] [--profile PATH]
   summary          [--model NAME] [--batch N]
   serve            [--model NAME] [--requests N] [--max-batch N] [--max-wait-ms MS]
-                   [--threads N] [--replicas N] [--trim-mb N]
+                   [--threads N] [--replicas N] [--trim-mb N] [--profile PATH]
   artifacts-check  [--dir artifacts]
 
   --threads 0 means \"use all hardware threads\"; the default 1 matches
@@ -327,6 +428,12 @@ COMMANDS
   batches across them — the intra (--threads) x inter (--replicas)
   core-budget split. --trim-mb caps each replica's retained scratch
   arena after every batch (0 = keep the high-water mark).
+
+  autotune races direct/GEMM/sliding-generic/compound/custom kernels per
+  (filter width, thread count) and caches the winners; --profile PATH
+  makes bench/run-model/serve dispatch from that cache (run-model and
+  serve then also race a \"tuned\" series/backend). A missing or corrupt
+  profile falls back to the paper's k=17 policy with a warning.
 
 MODELS: {:?}",
         zoo::MODEL_NAMES
@@ -339,6 +446,7 @@ fn main() -> Result<()> {
         "bench-fig1" => cmd_fig1(&args),
         "bench-fig2" => cmd_fig2(&args),
         "peaks" => cmd_peaks(),
+        "autotune" => cmd_autotune(&args),
         "run-model" => cmd_run_model(&args),
         "summary" => cmd_summary(&args),
         "serve" => cmd_serve(&args),

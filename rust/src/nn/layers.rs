@@ -8,7 +8,8 @@ use crate::kernels::{
 use crate::tensor::Tensor;
 
 // The execution context grew into its own subsystem (threads + scratch
-// arena); re-exported here so `nn::layers::ExecCtx` keeps working.
+// arena + optional dispatch profile); re-exported here so
+// `nn::layers::ExecCtx` keeps working.
 pub use crate::exec::ExecCtx;
 
 /// A neural-network layer.
@@ -29,7 +30,10 @@ pub trait Layer: Send + Sync {
 
 // ---------------------------------------------------------------- Conv2d
 
-/// 2-D convolution layer; the algorithm comes from [`ExecCtx`].
+/// 2-D convolution layer. The per-request [`ExecCtx`] supplies
+/// everything execution-related: the algorithm (GEMM / sliding /
+/// tuned), the worker threads, the scratch arena and — when one is
+/// attached — the measured dispatch profile.
 pub struct Conv2d {
     /// Weights `[c_out, c_in/groups, kh, kw]`.
     pub w: Tensor,

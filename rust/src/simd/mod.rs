@@ -10,7 +10,7 @@
 //!
 //! Submodules:
 //! * [`vector`] — `F32xL` and its arithmetic.
-//! * [`slide`]  — compile-time (`slide::<J>`) and runtime (`slide_dyn`)
+//! * [`mod@slide`]  — compile-time (`slide::<J>`) and runtime (`slide_dyn`)
 //!   lane shifts across a register pair; the core of the Vector Slide
 //!   algorithm.
 //! * [`compound`] — the *compound vector*: several hardware vectors treated

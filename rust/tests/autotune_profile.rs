@@ -1,0 +1,222 @@
+//! Integration tests for the autotune subsystem: profile persistence
+//! (round-trip, corrupt-file fallback), tuned dispatch parity (the
+//! tuned router must be a pure relabeling of existing kernels, bit for
+//! bit), and the no-profile paper-policy fallback.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use swconv::autotune::{autotune, AutotuneOpts, DispatchProfile, ProfileEntry, TunedAlgo};
+use swconv::exec::ExecCtx;
+use swconv::kernels::rowconv::RowKernel;
+use swconv::kernels::{conv2d_ctx, Conv2dParams, ConvAlgo};
+use swconv::tensor::Tensor;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("swconv_autotune_it_{name}"))
+}
+
+/// A hand-built profile covering all three conv-level choices across
+/// the width range (no measurement needed, so tests stay fast and
+/// deterministic on any machine).
+fn handmade() -> DispatchProfile {
+    DispatchProfile::from_entries(vec![
+        ProfileEntry {
+            k: 3,
+            threads: 1,
+            algo: TunedAlgo::Sliding,
+            slide: RowKernel::Custom,
+            gflops: 8.0,
+        },
+        ProfileEntry {
+            k: 7,
+            threads: 1,
+            algo: TunedAlgo::Gemm,
+            slide: RowKernel::Generic,
+            gflops: 6.0,
+        },
+        ProfileEntry {
+            k: 11,
+            threads: 1,
+            algo: TunedAlgo::Sliding,
+            slide: RowKernel::Compound,
+            gflops: 5.0,
+        },
+        ProfileEntry {
+            k: 19,
+            threads: 4,
+            algo: TunedAlgo::Direct,
+            slide: RowKernel::Compound,
+            gflops: 1.0,
+        },
+    ])
+}
+
+/// The parity suite: geometries covering padding, stride, groups and
+/// every dispatch regime (custom, generic, compound widths).
+fn parity_cases() -> Vec<(Vec<usize>, Vec<usize>, Conv2dParams)> {
+    vec![
+        (vec![1, 3, 12, 14], vec![4, 3, 3, 3], Conv2dParams::same(3)),
+        (vec![2, 2, 10, 16], vec![3, 2, 7, 7], Conv2dParams::same(7)),
+        (
+            vec![1, 4, 12, 14],
+            vec![4, 1, 5, 5],
+            Conv2dParams { stride: (2, 2), pad: (2, 2), groups: 4 },
+        ),
+        (vec![1, 1, 8, 40], vec![2, 1, 3, 19], Conv2dParams::default()),
+    ]
+}
+
+/// PARITY — `ConvAlgo::Tuned` is routing, not arithmetic: on the full
+/// parity suite it stays within the kernel tolerance of the `Direct`
+/// oracle, for a profiled and an unprofiled ctx alike.
+#[test]
+fn tuned_dispatch_matches_direct_oracle_on_parity_suite() {
+    let profile = Arc::new(handmade());
+    for (i, (xd, wd, p)) in parity_cases().iter().enumerate() {
+        let x = Tensor::randn(xd, 700 + i as u64);
+        let w = Tensor::randn(wd, 710 + i as u64);
+        let reference = conv2d_ctx(&x, &w, None, p, &ExecCtx::new(ConvAlgo::Direct));
+        for profiled in [false, true] {
+            let mut ctx = ExecCtx::new(ConvAlgo::Tuned);
+            if profiled {
+                ctx.set_profile(Arc::clone(&profile));
+            }
+            let y = conv2d_ctx(&x, &w, None, p, &ctx);
+            let d = y.max_abs_diff(&reference);
+            assert!(d < 2e-3, "case {i} profiled={profiled}: diff {d}");
+        }
+    }
+}
+
+/// DETERMINISM — whatever kernel the profile picks, the tuned output is
+/// bit-identical to invoking that kernel directly (here: a profile
+/// routing k=7 to GEMM must reproduce `Im2colGemm` exactly).
+#[test]
+fn tuned_is_bitwise_equal_to_the_routed_kernel() {
+    let profile = Arc::new(handmade());
+    let x = Tensor::randn(&[2, 2, 10, 16], 720);
+    let w = Tensor::randn(&[3, 2, 7, 7], 721);
+    let p = Conv2dParams::same(7);
+    let tuned = conv2d_ctx(
+        &x,
+        &w,
+        None,
+        &p,
+        &ExecCtx::new(ConvAlgo::Tuned).with_profile(Arc::clone(&profile)),
+    );
+    let gemm = conv2d_ctx(&x, &w, None, &p, &ExecCtx::new(ConvAlgo::Im2colGemm));
+    assert_eq!(tuned.as_slice(), gemm.as_slice());
+}
+
+/// FALLBACK — with no profile attached, tuned dispatch *is* the paper
+/// policy, bit for bit, on every parity-suite case.
+#[test]
+fn tuned_without_profile_is_bitwise_paper_policy() {
+    for (i, (xd, wd, p)) in parity_cases().iter().enumerate() {
+        let x = Tensor::randn(xd, 730 + i as u64);
+        let w = Tensor::randn(wd, 740 + i as u64);
+        let paper = conv2d_ctx(&x, &w, None, p, &ExecCtx::new(ConvAlgo::Sliding));
+        let tuned = conv2d_ctx(&x, &w, None, p, &ExecCtx::new(ConvAlgo::Tuned));
+        assert_eq!(paper.as_slice(), tuned.as_slice(), "case {i}");
+    }
+}
+
+/// PERSISTENCE — a saved-then-loaded profile is equal to the in-memory
+/// one and dispatches identically (bit for bit) on the parity suite.
+#[test]
+fn saved_and_loaded_profile_dispatch_identically() {
+    let in_mem = Arc::new(handmade());
+    let path = tmp("roundtrip.json");
+    in_mem.save(&path).unwrap();
+    let loaded = Arc::new(DispatchProfile::load(&path).unwrap());
+    assert_eq!(*in_mem, *loaded);
+
+    for (i, (xd, wd, p)) in parity_cases().iter().enumerate() {
+        let x = Tensor::randn(xd, 750 + i as u64);
+        let w = Tensor::randn(wd, 760 + i as u64);
+        let a = conv2d_ctx(
+            &x,
+            &w,
+            None,
+            p,
+            &ExecCtx::new(ConvAlgo::Tuned).with_profile(Arc::clone(&in_mem)),
+        );
+        let b = conv2d_ctx(
+            &x,
+            &w,
+            None,
+            p,
+            &ExecCtx::new(ConvAlgo::Tuned).with_profile(Arc::clone(&loaded)),
+        );
+        assert_eq!(a.as_slice(), b.as_slice(), "case {i}");
+    }
+    let _ = std::fs::remove_file(path);
+}
+
+/// PERSISTENCE — a *measured* profile (tiny quick pass) round-trips
+/// through save/load exactly, floats included.
+#[test]
+fn measured_profile_roundtrips_exactly() {
+    let p = autotune(&AutotuneOpts::quick());
+    assert!(!p.is_paper_policy());
+    let path = tmp("measured.json");
+    p.save(&path).unwrap();
+    assert_eq!(p, DispatchProfile::load(&path).unwrap());
+    let _ = std::fs::remove_file(path);
+}
+
+/// ROBUSTNESS — corrupt and truncated caches degrade to the paper
+/// policy (with a warning) instead of panicking, and dispatch through
+/// the degraded profile still matches the paper policy bit for bit.
+#[test]
+fn corrupt_or_truncated_profile_falls_back_to_paper_policy() {
+    // A real profile, truncated mid-document (simulating a torn write).
+    let full = tmp("torn_full.json");
+    handmade().save(&full).unwrap();
+    let text = std::fs::read_to_string(&full).unwrap();
+    let torn = tmp("torn.json");
+    std::fs::write(&torn, &text[..text.len() / 2]).unwrap();
+    // And outright garbage.
+    let garbage = tmp("garbage.json");
+    std::fs::write(&garbage, "{\"version\": 1, \"lanes\": oops").unwrap();
+
+    let x = Tensor::randn(&[1, 2, 10, 12], 770);
+    let w = Tensor::randn(&[3, 2, 5, 5], 771);
+    let p = Conv2dParams::default();
+    let paper = conv2d_ctx(&x, &w, None, &p, &ExecCtx::new(ConvAlgo::Sliding));
+    for path in [&torn, &garbage] {
+        assert!(DispatchProfile::load(path).is_err(), "{} must not parse", path.display());
+        let degraded = DispatchProfile::load_or_paper(path);
+        assert!(degraded.is_paper_policy(), "{} must degrade", path.display());
+        let y = conv2d_ctx(
+            &x,
+            &w,
+            None,
+            &p,
+            &ExecCtx::new(ConvAlgo::Tuned).with_profile(Arc::new(degraded)),
+        );
+        assert_eq!(paper.as_slice(), y.as_slice());
+    }
+    for f in [full, torn, garbage] {
+        let _ = std::fs::remove_file(f);
+    }
+}
+
+/// The measured profile is *usable*: tuned dispatch through a freshly
+/// autotuned table stays within tolerance of the direct oracle (the
+/// acceptance gate tying measurement to dispatch).
+#[test]
+fn measured_profile_dispatches_correctly() {
+    let profile = Arc::new(autotune(&AutotuneOpts::quick()));
+    let x = Tensor::randn(&[1, 3, 14, 24], 780);
+    let reference_ctx = ExecCtx::new(ConvAlgo::Direct);
+    for k in [3usize, 5, 9, 19] {
+        let w = Tensor::randn(&[2, 3, k.min(9), k], 781 + k as u64);
+        let p = Conv2dParams::default();
+        let want = conv2d_ctx(&x, &w, None, &p, &reference_ctx);
+        let ctx = ExecCtx::new(ConvAlgo::Tuned).with_profile(Arc::clone(&profile));
+        let got = conv2d_ctx(&x, &w, None, &p, &ctx);
+        let d = got.max_abs_diff(&want);
+        assert!(d < 2e-3, "k={k}: diff {d}");
+    }
+}
