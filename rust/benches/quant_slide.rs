@@ -1,0 +1,107 @@
+//! BENCH — quantized sliding convolution vs its baselines on the fig2
+//! workload shape.
+//!
+//! The paper's closing argument is low-power/low-memory deployment; the
+//! low-memory GEMM line (arXiv:1709.03395) shows reduced precision is
+//! where commodity inference wins. This bench races, per filter size on
+//! the Fig. 2 plane (c=4, 64×64):
+//!
+//! * `sliding-f32`  — the paper's f32 sliding kernel (reference speed),
+//! * `sliding-q8`   — int8 sliding, exact i32 accumulators
+//!   (`conv2d_sliding_q8_raw_ctx`),
+//! * `gemm-q8`      — int8 im2col+GEMM (`conv2d_im2col_q8_raw_ctx`),
+//!   the quantized `MlasConv` stand-in.
+//!
+//! Both int8 series compute bit-identical raw accumulators (asserted
+//! here), so the comparison isolates the memory access pattern: the
+//! sliding kernel streams the padded input once per tap, the GEMM
+//! baseline materialises and re-reads the `k²`-bloated column matrix.
+//!
+//! ## `BENCH_quant.json` schema
+//!
+//! Machine-readable records land in `target/reports/BENCH_quant.json` —
+//! the shared `BENCH_*.json` array schema (see
+//! [`swconv::harness::report::BenchRecord`]) with `bench` = `"quant"`,
+//! `algo` ∈ {`"sliding-f32"`, `"sliding-q8"`, `"gemm-q8"`} and `shape`
+//! a `ConvCase::id`. `gflops` counts the same 2·MAC arithmetic for
+//! every series (integer MACs counted like FLOPs), so the three
+//! throughputs are directly comparable.
+
+use swconv::exec::ExecCtx;
+use swconv::harness::report::{f3, write_bench_json, BenchRecord, Table};
+use swconv::harness::timing::bench_quick;
+use swconv::harness::ConvCase;
+use swconv::kernels::im2col::conv2d_im2col_q8_raw_ctx;
+use swconv::kernels::sliding2d::conv2d_sliding_q8_raw_ctx;
+use swconv::kernels::{conv2d_ctx, ConvAlgo};
+use swconv::tensor::{quantize, QuantParams};
+
+const C: usize = 4;
+const HW: usize = 64;
+const KS: [usize; 4] = [3, 5, 9, 17];
+
+fn main() {
+    let mut table = Table::new(
+        format!("quantized sliding conv — c{C}, {HW}x{HW} (single thread)"),
+        &["k", "sliding-f32", "sliding-q8", "gemm-q8", "q8 slide/gemm speedup"],
+    );
+    let mut records = Vec::new();
+    let mut q8_wins_fig2_shape = true;
+    for &k in &KS {
+        let case = ConvCase::square(C, HW, k);
+        let flops = case.flops();
+        let x = case.input();
+        let w = case.weights();
+        let qx = quantize(&x, QuantParams::for_tensor(&x));
+        let qw = quantize(&w, QuantParams::for_tensor(&w));
+
+        let f32_ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let slide_ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let gemm_ctx = ExecCtx::new(ConvAlgo::Im2colGemm);
+
+        // Honesty check before timing: both int8 kernels must produce
+        // the same raw accumulators bit for bit.
+        let a = conv2d_sliding_q8_raw_ctx(&qx, &qw, &case.params, &slide_ctx);
+        let b = conv2d_im2col_q8_raw_ctx(&qx, &qw, &case.params, &gemm_ctx);
+        assert_eq!(a.as_slice(), b.as_slice(), "k={k}: int8 kernels disagree");
+
+        let s_f32 =
+            bench_quick(|| conv2d_ctx(&x, &w, None, &case.params, &f32_ctx)).gflops(flops);
+        let s_q8 = bench_quick(|| conv2d_sliding_q8_raw_ctx(&qx, &qw, &case.params, &slide_ctx))
+            .gflops(flops);
+        let g_q8 = bench_quick(|| conv2d_im2col_q8_raw_ctx(&qx, &qw, &case.params, &gemm_ctx))
+            .gflops(flops);
+        if s_q8 <= g_q8 {
+            q8_wins_fig2_shape = false;
+        }
+
+        table.row(vec![
+            k.to_string(),
+            f3(s_f32),
+            f3(s_q8),
+            f3(g_q8),
+            f3(s_q8 / g_q8),
+        ]);
+        for (algo, gflops) in
+            [("sliding-f32", s_f32), ("sliding-q8", s_q8), ("gemm-q8", g_q8)]
+        {
+            records.push(BenchRecord {
+                bench: "quant".into(),
+                algo: algo.into(),
+                shape: case.id(),
+                threads: 1,
+                replicas: 1,
+                // flops [FLOP] / gflops [1e9 FLOP/s] = 1e-9 s = 1 ns units.
+                ns_per_iter: flops as f64 / gflops,
+                gflops,
+            });
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "int8 sliding {} int8 im2col-GEMM on the fig2 workload shape (c{C}, {HW}x{HW})",
+        if q8_wins_fig2_shape { "beats" } else { "does NOT beat" }
+    );
+    write_bench_json("target/reports/BENCH_quant.json", &records).expect("json");
+    println!("records in target/reports/BENCH_quant.json");
+}

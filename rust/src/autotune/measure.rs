@@ -13,6 +13,7 @@ use crate::harness::timing::bench_config;
 use crate::harness::workload::ConvCase;
 use crate::kernels::rowconv::{RowKernel, COMPOUND_MAX_K};
 use crate::kernels::{conv2d_ctx, ConvAlgo};
+use crate::tensor::Dtype;
 use std::time::Duration;
 
 /// What the autotuner measures: the representative workload geometry,
@@ -179,6 +180,11 @@ pub fn autotune(opts: &AutotuneOpts) -> DispatchProfile {
             entries.push(ProfileEntry {
                 k,
                 threads: t,
+                // The microbenchmark pass races the f32 kernels; the
+                // quantized kernels have no per-width family split to
+                // tune, so their buckets (if ever measured) would come
+                // from a dedicated pass.
+                dtype: Dtype::F32,
                 algo: tuned_algo_of(winner),
                 slide,
                 gflops,
@@ -192,13 +198,14 @@ pub fn autotune(opts: &AutotuneOpts) -> DispatchProfile {
 /// `ablation_tuned` bench both print this).
 pub fn profile_table(profile: &DispatchProfile) -> Table {
     let mut t = Table::new(
-        "dispatch profile — measured (k, threads) winners",
-        &["k", "threads", "algo", "slide", "GFLOP/s"],
+        "dispatch profile — measured (k, threads, dtype) winners",
+        &["k", "threads", "dtype", "algo", "slide", "GFLOP/s"],
     );
     for e in profile.entries() {
         t.row(vec![
             e.k.to_string(),
             e.threads.to_string(),
+            e.dtype.name().into(),
             e.algo.name().into(),
             e.slide.name().into(),
             f3(e.gflops),

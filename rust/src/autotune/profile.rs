@@ -2,37 +2,46 @@
 //! `(filter-width bucket, thread count)` to the measured-fastest
 //! convolution algorithm and row-kernel family.
 //!
-//! ## `profile.json` schema
+//! ## `profile.json` schema (version 2)
 //!
 //! [`DispatchProfile::save`] writes — and [`DispatchProfile::load`]
 //! parses, via [`crate::runtime::json`] — a single JSON object:
 //!
 //! ```json
 //! {
-//!   "version": 1,
+//!   "version": 2,
 //!   "lanes": 16,
 //!   "entries": [
-//!     {"k": 3,  "threads": 1, "algo": "sliding", "slide": "custom",   "gflops": 11.2},
-//!     {"k": 17, "threads": 8, "algo": "sliding", "slide": "compound", "gflops": 64.0},
-//!     {"k": 33, "threads": 8, "algo": "gemm",    "slide": "compound", "gflops": 41.5}
+//!     {"k": 3,  "threads": 1, "dtype": "f32", "algo": "sliding", "slide": "custom",   "gflops": 11.2},
+//!     {"k": 17, "threads": 8, "dtype": "f32", "algo": "sliding", "slide": "compound", "gflops": 64.0},
+//!     {"k": 33, "threads": 8, "dtype": "i8",  "algo": "gemm",    "slide": "compound", "gflops": 41.5}
 //!   ]
 //! }
 //! ```
 //!
-//! * `version` — schema version; anything but `1` is rejected.
+//! * `version` — schema version. `2` is current; `1` — and a missing
+//!   `version` (the pre-versioning format) — load **backward
+//!   compatibly** as f32-only buckets (every entry gets
+//!   `dtype: "f32"`), so an old cache keeps steering f32 dispatch
+//!   instead of degrading to the paper policy with a warning. Anything
+//!   else is rejected.
 //! * `lanes` — [`crate::simd::LANES`] of the build that measured the
 //!   profile. A profile measured for a different hardware-vector width
 //!   describes a different machine, so a mismatch is rejected at load.
 //! * `entries[].k` / `entries[].threads` — the measured bucket. Lookups
-//!   minimise `(k distance, threads distance)` lexicographically over
-//!   all entries, resolving exact ties toward the smaller bucket (see
-//!   [`DispatchProfile::choice`]).
+//!   restrict to the queried dtype's entries and minimise `(k distance,
+//!   threads distance)` lexicographically over them, resolving exact
+//!   ties toward the smaller bucket (see
+//!   [`DispatchProfile::choice_for`]).
+//! * `entries[].dtype` — element type this bucket was measured at
+//!   (`"f32"`, `"bf16"`, `"i8"`); defaults to `"f32"` when absent.
 //! * `entries[].algo` — conv-level winner: `"direct"`, `"gemm"` or
 //!   `"sliding"`.
 //! * `entries[].slide` — fastest sliding row-kernel family at this
 //!   bucket: `"custom"`, `"generic"` or `"compound"` (recorded even when
 //!   `algo` is not `"sliding"`, so forced-sliding callers still dispatch
-//!   tuned rows).
+//!   tuned rows; the `_q8`/`_bf16` row kernels are width-universal, so
+//!   the family only steers f32 rows).
 //! * `entries[].gflops` — the winner's measured throughput, for the
 //!   record; not consulted by dispatch.
 //!
@@ -45,6 +54,7 @@ use crate::error::{bail, Context, Result};
 use crate::kernels::rowconv::{RowKernel, COMPOUND_MAX_K};
 use crate::runtime::json::Json;
 use crate::simd::LANES;
+use crate::tensor::Dtype;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
@@ -89,6 +99,9 @@ pub struct ProfileEntry {
     pub k: usize,
     /// Worker-thread count this bucket was measured at.
     pub threads: usize,
+    /// Element type this bucket was measured at (profiles loaded from
+    /// the version-1 / versionless schema are f32-only).
+    pub dtype: Dtype,
     /// Conv-level winner.
     pub algo: TunedAlgo,
     /// Fastest sliding row-kernel family at this bucket.
@@ -157,22 +170,35 @@ impl DispatchProfile {
     }
 
     /// The tuned `(conv-level algorithm, row-kernel family)` for filter
-    /// width `k` at `threads` worker threads.
-    ///
-    /// Nearest-bucket lookup over all entries, minimising `(k distance,
-    /// thread distance)` lexicographically — equal distances resolve
-    /// toward the smaller `k`, then the smaller `threads`, so ties are
-    /// deterministic. The answer is clamped so it is always *legal*:
-    /// the row family is re-clamped through [`RowKernel::legal_for`],
-    /// and a sliding choice for a width beyond the compound kernel's
-    /// reach degrades to [`TunedAlgo::Direct`] (mirroring the auto
-    /// policy's direct fallback). An empty profile answers with the
-    /// paper policy.
+    /// width `k` at `threads` worker threads, for `f32` dispatch —
+    /// shorthand for [`DispatchProfile::choice_for`] with
+    /// [`Dtype::F32`].
     pub fn choice(&self, k: usize, threads: usize) -> (TunedAlgo, RowKernel) {
+        self.choice_for(k, threads, Dtype::F32)
+    }
+
+    /// The tuned `(conv-level algorithm, row-kernel family)` for filter
+    /// width `k` at `threads` worker threads and element type `dtype`.
+    ///
+    /// Nearest-bucket lookup over the entries **measured at this
+    /// dtype**, minimising `(k distance, thread distance)`
+    /// lexicographically — equal distances resolve toward the smaller
+    /// `k`, then the smaller `threads`, so ties are deterministic. The
+    /// answer is clamped so it is always *legal*: the row family is
+    /// re-clamped through [`RowKernel::legal_for`], and a sliding choice
+    /// for a width beyond the compound kernel's reach degrades to
+    /// [`TunedAlgo::Direct`] (mirroring the auto policy's direct
+    /// fallback; the clamp only matters for f32 rows — the `_q8`/`_bf16`
+    /// kernels are width-universal). An empty profile — or one with no
+    /// buckets at this dtype (e.g. a version-1 f32-only cache queried
+    /// for `I8`) — answers with the paper policy rather than borrowing
+    /// another dtype's crossovers.
+    pub fn choice_for(&self, k: usize, threads: usize, dtype: Dtype) -> (TunedAlgo, RowKernel) {
         let k = k.max(1);
         let nearest = self
             .entries
             .iter()
+            .filter(|e| e.dtype == dtype)
             .min_by_key(|e| {
                 let dk = e.k.abs_diff(k);
                 let dt = e.threads.abs_diff(threads);
@@ -210,7 +236,7 @@ impl DispatchProfile {
         }
         let mut f = std::fs::File::create(path)?;
         writeln!(f, "{{")?;
-        writeln!(f, "  \"version\": 1,")?;
+        writeln!(f, "  \"version\": 2,")?;
         writeln!(f, "  \"lanes\": {LANES},")?;
         writeln!(f, "  \"entries\": [")?;
         for (i, e) in self.entries.iter().enumerate() {
@@ -220,10 +246,11 @@ impl DispatchProfile {
             let gflops = if e.gflops.is_finite() { e.gflops } else { 0.0 };
             writeln!(
                 f,
-                "    {{\"k\": {}, \"threads\": {}, \"algo\": \"{}\", \
+                "    {{\"k\": {}, \"threads\": {}, \"dtype\": \"{}\", \"algo\": \"{}\", \
                  \"slide\": \"{}\", \"gflops\": {}}}{sep}",
                 e.k,
                 e.threads,
+                e.dtype.name(),
                 e.algo.name(),
                 e.slide.name(),
                 gflops
@@ -250,9 +277,18 @@ impl DispatchProfile {
     /// Parse an already-loaded JSON document (schema at the
     /// [module level](crate::autotune::profile)).
     pub fn from_json(j: &Json) -> Result<Self> {
-        match j.get("version").and_then(Json::as_usize) {
-            Some(1) => {}
-            other => bail!("profile version {other:?} unsupported (want 1)"),
+        // Versionless documents are the pre-versioning format: accept
+        // them — like explicit version 1 — as f32-only (the satellite
+        // promise: an old cache keeps steering f32 dispatch instead of
+        // degrading to the paper policy with a warning).
+        let version = match j.get("version") {
+            None => 1,
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| crate::anyhow!("profile 'version' not an integer"))?,
+        };
+        if !(1..=2).contains(&version) {
+            bail!("profile version {version} unsupported (want 1 or 2)");
         }
         let lanes = j
             .get("lanes")
@@ -286,8 +322,21 @@ impl DispatchProfile {
                 .ok_or_else(|| crate::anyhow!("entry {i}: 'slide' not a string"))?;
             let slide = RowKernel::parse(slide_name)
                 .ok_or_else(|| crate::anyhow!("entry {i}: unknown slide '{slide_name}'"))?;
+            // The dtype dimension arrived with version 2; version-1 (and
+            // versionless) entries are f32 buckets, and a v2 entry
+            // without the field defaults the same way.
+            let dtype = match e.get("dtype") {
+                None => Dtype::F32,
+                Some(d) => {
+                    let name = d
+                        .as_str()
+                        .ok_or_else(|| crate::anyhow!("entry {i}: 'dtype' not a string"))?;
+                    Dtype::parse(name)
+                        .ok_or_else(|| crate::anyhow!("entry {i}: unknown dtype '{name}'"))?
+                }
+            };
             let gflops = field("gflops")?.as_f64().unwrap_or(0.0);
-            entries.push(ProfileEntry { k, threads, algo, slide, gflops });
+            entries.push(ProfileEntry { k, threads, dtype, algo, slide, gflops });
         }
         Ok(DispatchProfile { entries })
     }
@@ -325,6 +374,7 @@ mod tests {
             ProfileEntry {
                 k: 3,
                 threads: 1,
+                dtype: Dtype::F32,
                 algo: TunedAlgo::Sliding,
                 slide: RowKernel::Custom,
                 gflops: 10.5,
@@ -332,6 +382,7 @@ mod tests {
             ProfileEntry {
                 k: 9,
                 threads: 1,
+                dtype: Dtype::F32,
                 algo: TunedAlgo::Sliding,
                 slide: RowKernel::Compound,
                 gflops: 9.25,
@@ -339,6 +390,7 @@ mod tests {
             ProfileEntry {
                 k: 9,
                 threads: 8,
+                dtype: Dtype::F32,
                 algo: TunedAlgo::Gemm,
                 slide: RowKernel::Generic,
                 gflops: 40.0,
@@ -346,9 +398,18 @@ mod tests {
             ProfileEntry {
                 k: 33,
                 threads: 1,
+                dtype: Dtype::F32,
                 algo: TunedAlgo::Direct,
                 slide: RowKernel::Compound,
                 gflops: 2.0,
+            },
+            ProfileEntry {
+                k: 9,
+                threads: 1,
+                dtype: Dtype::I8,
+                algo: TunedAlgo::Gemm,
+                slide: RowKernel::Generic,
+                gflops: 55.0,
             },
         ])
     }
@@ -391,11 +452,27 @@ mod tests {
         let p = DispatchProfile::from_entries(vec![ProfileEntry {
             k: 33,
             threads: 1,
+            dtype: Dtype::F32,
             algo: TunedAlgo::Sliding,
             slide: RowKernel::Generic,
             gflops: 1.0,
         }]);
         assert_eq!(p.row_kernel(33, 1), RowKernel::Compound);
+    }
+
+    #[test]
+    fn choice_restricts_to_the_queried_dtype() {
+        let p = sample();
+        // f32 lookup at k=9/t=1 sees the f32 bucket (sliding), not the
+        // int8 one (gemm).
+        assert_eq!(p.choice(9, 1).0, TunedAlgo::Sliding);
+        assert_eq!(p.choice_for(9, 1, Dtype::I8).0, TunedAlgo::Gemm);
+        // A dtype with no buckets answers with the paper policy instead
+        // of borrowing another dtype's crossovers.
+        assert_eq!(
+            p.choice_for(9, 1, Dtype::Bf16),
+            (TunedAlgo::Sliding, RowKernel::Generic)
+        );
     }
 
     #[test]
@@ -413,7 +490,7 @@ mod tests {
         let dir = std::env::temp_dir();
         let cases: [(&str, &str); 5] = [
             ("not json at all", "parse"),
-            ("{\"version\": 2, \"lanes\": 16, \"entries\": []}", "version"),
+            ("{\"version\": 99, \"lanes\": 16, \"entries\": []}", "version"),
             ("{\"version\": 1, \"entries\": []}", "lanes"),
             ("{\"version\": 1, \"lanes\": 9999, \"entries\": []}", "lane"),
             (
@@ -430,6 +507,33 @@ mod tests {
             );
             // And the degraded loader answers with the paper policy.
             assert!(DispatchProfile::load_or_paper(&path).is_paper_policy());
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
+    #[test]
+    fn old_and_versionless_profiles_load_as_f32_only() {
+        let dir = std::env::temp_dir();
+        let v1 = format!(
+            "{{\"version\": 1, \"lanes\": {LANES}, \"entries\": [\
+             {{\"k\": 9, \"threads\": 1, \"algo\": \"gemm\", \"slide\": \"generic\", \
+             \"gflops\": 4.0}}]}}"
+        );
+        let versionless = format!(
+            "{{\"lanes\": {LANES}, \"entries\": [\
+             {{\"k\": 9, \"threads\": 1, \"algo\": \"gemm\", \"slide\": \"generic\", \
+             \"gflops\": 4.0}}]}}"
+        );
+        for (name, doc) in [("v1", v1), ("versionless", versionless)] {
+            let path = dir.join(format!("swconv_profile_compat_{name}.json"));
+            std::fs::write(&path, doc).unwrap();
+            let p = DispatchProfile::load(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!p.is_paper_policy(), "{name} must load its bucket, not degrade");
+            assert_eq!(p.entries()[0].dtype, Dtype::F32, "{name} entries are f32-only");
+            // The f32 bucket steers f32 dispatch…
+            assert_eq!(p.choice(9, 1).0, TunedAlgo::Gemm, "{name}");
+            // …and is invisible to other dtypes.
+            assert_eq!(p.choice_for(9, 1, Dtype::I8).0, TunedAlgo::Sliding, "{name}");
             let _ = std::fs::remove_file(path);
         }
     }

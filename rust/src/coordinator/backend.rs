@@ -4,8 +4,9 @@ use crate::autotune::DispatchProfile;
 use crate::error::{bail, Result};
 use crate::nn::{ExecCtx, Model};
 use crate::runtime::Engine;
-use crate::tensor::Tensor;
+use crate::tensor::{Dtype, Tensor};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// A batched inference backend. Replica workers own their backend
 /// exclusively (`&mut self`), so implementations may keep scratch state.
@@ -26,6 +27,22 @@ pub trait Backend {
     /// Default: ignored (PJRT artifacts are compiled ahead of time, so
     /// there is nothing to tune at dispatch).
     fn set_profile(&mut self, _profile: Arc<DispatchProfile>) {}
+    /// Install the element type this replica should serve in
+    /// ([`crate::tensor::Dtype`]). The coordinator calls this once,
+    /// right after construction, on every replica of a spec built with
+    /// [`BackendSpec::with_dtype`]. Default: ignored (PJRT artifacts
+    /// bake their precision in at compile time).
+    fn set_dtype(&mut self, _dtype: Dtype) {}
+    /// How often the replica worker should call [`Backend::idle_tick`]
+    /// while its queue is quiet; `None` (default) means never — the
+    /// worker blocks on its queue with no wakeups.
+    fn idle_tick_period(&self) -> Option<Duration> {
+        None
+    }
+    /// Housekeeping hook, called by the replica worker between requests
+    /// when the queue has been quiet for [`Backend::idle_tick_period`]
+    /// — never concurrently with [`Backend::infer`]. Default: no-op.
+    fn idle_tick(&mut self) {}
 }
 
 /// Native backend: a [`Model`] executed by the Rust kernels with a fixed
@@ -37,19 +54,23 @@ pub trait Backend {
 /// By default the arena keeps its high-water scratch forever (fastest
 /// steady state); [`NativeBackend::with_trim_after`] caps the retained
 /// capacity after every batch so one outsized request can't pin memory
-/// for the backend's lifetime.
+/// for the backend's lifetime, and [`NativeBackend::with_trim_idle`]
+/// releases *all* of it once the backend has been quiet for a while
+/// (the replica worker drives the idle clock via
+/// [`Backend::idle_tick`]).
 pub struct NativeBackend {
     name: String,
     model: Model,
     ctx: ExecCtx,
     trim_after: Option<usize>,
+    trim_idle: Option<Duration>,
 }
 
 impl NativeBackend {
     /// Wrap a model + execution context (algorithm, worker threads,
     /// scratch arena and — if attached — the dispatch profile).
     pub fn new(name: impl Into<String>, model: Model, ctx: ExecCtx) -> Self {
-        NativeBackend { name: name.into(), model, ctx, trim_after: None }
+        NativeBackend { name: name.into(), model, ctx, trim_after: None, trim_idle: None }
     }
 
     /// Arena retention knob: after each batch, trim the ctx's scratch
@@ -58,6 +79,17 @@ impl NativeBackend {
     /// unaffected — only what stays cached between batches is bounded.
     pub fn with_trim_after(mut self, max_floats: usize) -> Self {
         self.trim_after = Some(max_floats);
+        self
+    }
+
+    /// Time-based arena retention: once the backend has served nothing
+    /// for `idle`, drop every cached scratch buffer
+    /// ([`ExecCtx::trim_after_idle`]). The replica worker polls
+    /// [`Backend::idle_tick`] at a fraction of `idle` while its queue
+    /// is quiet, so a burst's high-water scratch is released during the
+    /// lull instead of pinned until the next burst.
+    pub fn with_trim_idle(mut self, idle: Duration) -> Self {
+        self.trim_idle = Some(idle);
         self
     }
 
@@ -91,6 +123,23 @@ impl Backend for NativeBackend {
 
     fn set_profile(&mut self, profile: Arc<DispatchProfile>) {
         self.ctx.set_profile(profile);
+    }
+
+    fn set_dtype(&mut self, dtype: Dtype) {
+        self.ctx.set_dtype(dtype);
+    }
+
+    fn idle_tick_period(&self) -> Option<Duration> {
+        // Poll at a quarter of the idle threshold (≥ 5 ms so a tiny
+        // threshold can't busy-spin the worker): the arena is released
+        // at most 1.25 × `idle` after the last request.
+        self.trim_idle.map(|d| (d / 4).max(Duration::from_millis(5)))
+    }
+
+    fn idle_tick(&mut self) {
+        if let Some(idle) = self.trim_idle {
+            self.ctx.trim_after_idle(idle);
+        }
     }
 }
 
@@ -154,6 +203,11 @@ pub struct BackendSpec {
     /// its factory runs ([`Backend::set_profile`]); `None` leaves each
     /// replica on the paper's hard-coded dispatch policy.
     pub profile: Option<Arc<DispatchProfile>>,
+    /// Element type installed on every replica right after its factory
+    /// runs ([`Backend::set_dtype`]): `F32` (the default) is the
+    /// bit-exact baseline, `Bf16`/`I8` make native replicas serve the
+    /// reduced-precision kernels.
+    pub dtype: Dtype,
 }
 
 impl BackendSpec {
@@ -170,12 +224,22 @@ impl BackendSpec {
             replicas: 1,
             factory: Arc::new(factory),
             profile: None,
+            dtype: Dtype::F32,
         }
     }
 
     /// Set the replica count (builder style; clamped to ≥ 1).
     pub fn with_replicas(mut self, replicas: usize) -> Self {
         self.replicas = replicas.max(1);
+        self
+    }
+
+    /// Set the serving element type (builder style): the coordinator
+    /// installs it on every replica's backend right after construction,
+    /// so one knob switches a whole tier to bf16 or int8 serving (the
+    /// CLI's `serve --dtype`).
+    pub fn with_dtype(mut self, dtype: Dtype) -> Self {
+        self.dtype = dtype;
         self
     }
 
@@ -193,11 +257,11 @@ impl BackendSpec {
     /// the model (sharing weights) and the ctx (fresh arena, same
     /// algorithm + thread count).
     pub fn native(name: impl Into<String>, model: Model, ctx: ExecCtx) -> Self {
-        Self::native_spec(name, model, ctx, None)
+        Self::native_retention(name, model, ctx, None, None)
     }
 
-    /// [`BackendSpec::native`] with the arena retention knob: each
-    /// replica trims its scratch arena to `trim_after` floats after
+    /// [`BackendSpec::native`] with the size-based arena retention knob:
+    /// each replica trims its scratch arena to `trim_after` floats after
     /// every batch (see [`NativeBackend::with_trim_after`]).
     pub fn native_trimmed(
         name: impl Into<String>,
@@ -205,14 +269,21 @@ impl BackendSpec {
         ctx: ExecCtx,
         trim_after: usize,
     ) -> Self {
-        Self::native_spec(name, model, ctx, Some(trim_after))
+        Self::native_retention(name, model, ctx, Some(trim_after), None)
     }
 
-    fn native_spec(
+    /// [`BackendSpec::native`] with both arena retention knobs:
+    /// `trim_after` caps the retained floats after every batch (size
+    /// policy, `None` = unbounded) and `trim_idle` drops all retained
+    /// scratch once a replica has been quiet that long (time policy,
+    /// `None` = never; see [`NativeBackend::with_trim_idle`]). The two
+    /// compose: cap the steady state, release it entirely across lulls.
+    pub fn native_retention(
         name: impl Into<String>,
         model: Model,
         ctx: ExecCtx,
         trim_after: Option<usize>,
+        trim_idle: Option<Duration>,
     ) -> Self {
         let name = name.into();
         let item_shape = model.input_shape.clone();
@@ -226,9 +297,13 @@ impl BackendSpec {
                 if let Some(cap) = trim_after {
                     b = b.with_trim_after(cap);
                 }
+                if let Some(idle) = trim_idle {
+                    b = b.with_trim_idle(idle);
+                }
                 Ok(Box::new(b) as Box<dyn Backend>)
             }),
             profile: None,
+            dtype: Dtype::F32,
         }
     }
 
@@ -252,6 +327,7 @@ impl BackendSpec {
             item_shape,
             replicas: 1,
             profile: None,
+            dtype: Dtype::F32,
             factory: Arc::new(move |_replica| {
                 let engine = Engine::new(dir.clone())?;
                 let b = PjrtBackend::new(n2.clone(), engine, &artifact)?;
@@ -408,7 +484,7 @@ mod tests {
     /// untrimmed one keeps its high-water mark.
     #[test]
     fn trim_after_bounds_retained_scratch() {
-        const CAP: usize = 64 * 1024; // 256 KiB of f32 scratch
+        const CAP: usize = 64 * 1024; // 64 Ki floats = 256 KiB of scratch
         let mut capped = NativeBackend::new(
             "capped",
             simple_cnn(10, 1),
@@ -431,17 +507,68 @@ mod tests {
         uncapped.infer(&small).unwrap();
 
         assert!(
-            capped.ctx().arena_floats() <= CAP,
-            "retained {} floats > cap {CAP}",
-            capped.ctx().arena_floats()
+            capped.ctx().arena_bytes() <= 4 * CAP,
+            "retained {} bytes > cap {}",
+            capped.ctx().arena_bytes(),
+            4 * CAP
         );
         assert!(
-            uncapped.ctx().arena_floats() > capped.ctx().arena_floats(),
+            uncapped.ctx().arena_bytes() > capped.ctx().arena_bytes(),
             "untrimmed backend should retain its high-water scratch \
              (untrimmed {}, trimmed {})",
-            uncapped.ctx().arena_floats(),
-            capped.ctx().arena_floats()
+            uncapped.ctx().arena_bytes(),
+            capped.ctx().arena_bytes()
         );
+    }
+
+    /// REGRESSION (trim-after-idle) — the time-based retention policy:
+    /// after a quiet period the idle tick releases every retained
+    /// buffer; a busy backend is left alone.
+    #[test]
+    fn idle_tick_releases_scratch_after_quiet_period() {
+        let mut b = NativeBackend::new(
+            "idle",
+            simple_cnn(10, 1),
+            ExecCtx::new(ConvAlgo::Im2colGemm),
+        )
+        .with_trim_idle(Duration::from_millis(150));
+        assert!(b.idle_tick_period().is_some());
+        b.infer(&Tensor::randn(&[2, 1, 28, 28], 11)).unwrap();
+        assert!(b.ctx().arena_bytes() > 0, "warm arena expected");
+        // Immediately after serving: not idle yet, nothing released.
+        b.idle_tick();
+        assert!(b.ctx().arena_bytes() > 0, "busy backend must keep scratch");
+        std::thread::sleep(Duration::from_millis(200));
+        b.idle_tick();
+        assert_eq!(b.ctx().arena_bytes(), 0, "idle backend must release scratch");
+        // And serving afterwards still works (arena rebuilds).
+        b.infer(&Tensor::randn(&[1, 1, 28, 28], 12)).unwrap();
+        assert!(b.ctx().arena_bytes() > 0);
+    }
+
+    /// The dtype knob reaches the replica ctx, changes the numerics of
+    /// an int8 tier only within quantization error, and keeps the f32
+    /// tier bit-identical.
+    #[test]
+    fn spec_dtype_knob_switches_replicas_to_quantized_serving() {
+        use crate::kernels::Conv2dParams;
+        use crate::nn::layers::Conv2d;
+        let model = || {
+            Model::new("one-conv", &[2, 10, 10])
+                .push(Conv2d::new(2, 3, 3, Conv2dParams::same(3), 40))
+        };
+        let spec = BackendSpec::native("q", model(), ExecCtx::default()).with_dtype(Dtype::I8);
+        assert_eq!(spec.dtype, Dtype::I8);
+        let x = Tensor::randn(&[2, 2, 10, 10], 13);
+        let mut f32_b = NativeBackend::new("f", model(), ExecCtx::default());
+        let yf = f32_b.infer(&x).unwrap();
+        let mut q_b = spec.factory.as_ref()(0).unwrap();
+        q_b.set_dtype(spec.dtype);
+        let yq = q_b.infer(&x).unwrap();
+        assert_eq!(yq.dims(), yf.dims());
+        let d = yq.max_abs_diff(&yf);
+        assert!(d < 0.25, "int8 serving should track f32 (diff {d})");
+        assert!(d > 0.0, "dtype knob must actually engage the int8 path");
     }
 
     #[test]

@@ -122,7 +122,7 @@ impl Coordinator {
     pub fn new(backends: Vec<BackendSpec>, policy: BatchPolicy) -> Self {
         let mut workers = HashMap::new();
         for spec in backends {
-            let BackendSpec { name, item_shape, replicas, factory, profile } = spec;
+            let BackendSpec { name, item_shape, replicas, factory, profile, dtype } = spec;
             let replicas = replicas.max(1);
             let (tx, rx) = channel::<Request>();
             let mut replica_metrics = Vec::with_capacity(replicas);
@@ -138,7 +138,7 @@ impl Coordinator {
                 let p2 = profile.clone();
                 let join = std::thread::Builder::new()
                     .name(format!("swconv-{name}-r{r}"))
-                    .spawn(move || replica_main(&f2, r, p2, &srx, &m2, &if2))
+                    .spawn(move || replica_main(&f2, r, p2, dtype, &srx, &m2, &if2))
                     .expect("spawn replica worker");
                 replica_metrics.push(metrics);
                 joins.push(join);
@@ -271,12 +271,13 @@ fn planner_loop(rx: &Receiver<Request>, policy: BatchPolicy, replicas: Vec<Repli
 }
 
 /// Replica thread body: build the backend (guarding against factory
-/// errors *and* panics), install the spec's dispatch profile if one was
-/// attached, then serve shards until the planner hangs up.
+/// errors *and* panics), install the spec's dispatch profile and
+/// serving dtype, then serve shards until the planner hangs up.
 fn replica_main(
     factory: &BackendFactory,
     replica: usize,
     profile: Option<Arc<crate::autotune::DispatchProfile>>,
+    dtype: crate::tensor::Dtype,
     rx: &Receiver<Vec<Request>>,
     metrics: &LatencyHistogram,
     in_flight: &AtomicUsize,
@@ -286,6 +287,7 @@ fn replica_main(
             if let Some(p) = profile {
                 backend.set_profile(p);
             }
+            backend.set_dtype(dtype);
             replica_loop(&mut *backend, rx, metrics, in_flight)
         }
         Ok(Err(e)) => answer_all_with_error(rx, in_flight, &e.to_string()),
@@ -322,9 +324,26 @@ fn replica_loop(
 ) {
     let item_shape = backend.item_shape().to_vec();
     let item: usize = item_shape.iter().product();
-    while let Ok(shard) = rx.recv() {
-        run_shard(backend, &item_shape, item, shard, metrics);
-        in_flight.fetch_sub(1, Ordering::AcqRel);
+    // Backends with housekeeping (e.g. NativeBackend's trim-after-idle)
+    // ask for periodic wakeups while the queue is quiet; everyone else
+    // blocks on the queue with no timer churn.
+    match backend.idle_tick_period() {
+        None => {
+            while let Ok(shard) = rx.recv() {
+                run_shard(backend, &item_shape, item, shard, metrics);
+                in_flight.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+        Some(tick) => loop {
+            match rx.recv_timeout(tick) {
+                Ok(shard) => {
+                    run_shard(backend, &item_shape, item, shard, metrics);
+                    in_flight.fetch_sub(1, Ordering::AcqRel);
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => backend.idle_tick(),
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        },
     }
 }
 
@@ -600,6 +619,7 @@ mod tests {
         let profile = Arc::new(DispatchProfile::from_entries(vec![ProfileEntry {
             k: 3,
             threads: 1,
+            dtype: crate::tensor::Dtype::F32,
             algo: TunedAlgo::Gemm,
             slide: RowKernel::Generic,
             gflops: 1.0,
@@ -623,6 +643,63 @@ mod tests {
                 "tuned tier must route every conv to the profiled winner"
             );
         }
+        c.shutdown();
+    }
+
+    /// A `with_dtype(I8)` tier serves through the coordinator: same
+    /// output geometry as the f32 tier, values within quantization
+    /// error, and the knob reaches every replica.
+    #[test]
+    fn quantized_tier_serves_through_the_coordinator() {
+        use crate::kernels::Conv2dParams;
+        use crate::nn::layers::Conv2d;
+        use crate::nn::Model;
+        use crate::tensor::Dtype;
+        let model = || {
+            Model::new("one-conv", &[2, 10, 10])
+                .push(Conv2d::new(2, 3, 3, Conv2dParams::same(3), 41))
+        };
+        let c = Coordinator::new(
+            vec![
+                BackendSpec::native("f32", model(), ExecCtx::default()),
+                BackendSpec::native("i8", model(), ExecCtx::default())
+                    .with_dtype(Dtype::I8)
+                    .with_replicas(2),
+            ],
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        );
+        for seed in 0..4 {
+            let x = Tensor::randn(&[2, 10, 10], 80 + seed);
+            let a = c.infer("f32", x.clone()).unwrap().output.unwrap();
+            let b = c.infer("i8", x).unwrap().output.unwrap();
+            assert_eq!(a.dims(), b.dims());
+            let d = a.max_abs_diff(&b);
+            assert!(d < 0.25, "seed {seed}: quantized tier diverged ({d})");
+        }
+        c.shutdown();
+    }
+
+    /// A trim-idle tier keeps serving correctly (the idle ticks between
+    /// requests must not disturb results).
+    #[test]
+    fn trim_idle_tier_serves_across_idle_gaps() {
+        let spec = BackendSpec::native_retention(
+            "sliding",
+            simple_cnn(10, 1),
+            ExecCtx::new(ConvAlgo::Sliding),
+            None,
+            Some(Duration::from_millis(10)),
+        );
+        let c = Coordinator::new(
+            vec![spec],
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        );
+        let x = Tensor::randn(&[1, 28, 28], 90);
+        let first = c.infer("sliding", x.clone()).unwrap().output.unwrap();
+        // Let several idle ticks fire (each may drop the arena).
+        std::thread::sleep(Duration::from_millis(60));
+        let second = c.infer("sliding", x).unwrap().output.unwrap();
+        assert_eq!(first.as_slice(), second.as_slice(), "idle trim must not change results");
         c.shutdown();
     }
 

@@ -15,33 +15,66 @@
 //!   unsafe, no locks on the hot path — and every item is computed with
 //!   exactly the same instruction sequence regardless of which worker
 //!   runs it, so results are **bit-identical** for any thread count.
-//! * **Scratch arena** — [`ExecCtx::take`]/[`ExecCtx::put`] check
-//!   reusable `Vec<f32>` buffers in and out of a shared free list, so
-//!   the padded-input / row-accumulator / im2col-column buffers that
-//!   every kernel needs are allocated once and reused across calls
-//!   (the coordinator keeps one ctx per backend, so batched serving
-//!   stops paying allocation churn per request).
-//!   [`ExecCtx::alloc_events`] counts buffer growths so tests can
-//!   assert the steady state allocates nothing.
+//!   The chunked data is generic over its element type (`f32` output
+//!   planes, `i32` quantized accumulators, bf16 storage — anything
+//!   `Send`).
+//! * **Scratch arena** — [`ExecCtx::take_elems`]/[`ExecCtx::put_elems`]
+//!   check reusable typed buffers (`Vec<f32>`, `Vec<i8>`, `Vec<i32>`,
+//!   `Vec<Bf16>`, …) in and out of one shared free list, so the
+//!   padded-input / row-accumulator / im2col-column buffers that every
+//!   kernel needs — at every element width — are allocated once and
+//!   reused across calls (the coordinator keeps one ctx per backend, so
+//!   batched serving stops paying allocation churn per request).
+//!   Retention accounting is **byte-based** ([`ExecCtx::arena_bytes`];
+//!   the old f32-denominated [`ExecCtx::arena_floats`] remains as a
+//!   deprecated shim), and [`ExecCtx::alloc_events`] counts buffer
+//!   growths so tests can assert the steady state allocates nothing.
+//!   [`ExecCtx::take`]/[`ExecCtx::put`] are the `f32` conveniences the
+//!   pre-dtype kernels keep using, unchanged.
 //!
 //! `ExecCtx` also carries the convolution-algorithm choice
-//! ([`ConvAlgo`]) that the per-request router switches — which is all it
-//! used to be before this subsystem existed — and, optionally, a
+//! ([`ConvAlgo`]) that the per-request router switches, the element type
+//! requests should be served in ([`ExecCtx::dtype`] — `f32` bit-exact by
+//! default, bf16 or quantized int8 when asked), and, optionally, a
 //! measured [`DispatchProfile`] ([`ExecCtx::with_profile`]) that the
 //! tuned dispatch paths ([`ConvAlgo::Tuned`], `SlideVariant::Auto`)
-//! consult instead of the paper's hard-coded k=17 crossover policy.
+//! consult instead of the paper's hard-coded k=17 crossover policy
+//! (profile lookups are dtype-aware; see
+//! [`DispatchProfile::choice_for`]).
 
 use crate::autotune::{DispatchProfile, TunedAlgo};
 use crate::kernels::rowconv::RowKernel;
 use crate::kernels::ConvAlgo;
+use crate::tensor::Dtype;
+use std::any::{Any, TypeId};
 use std::cell::RefCell;
 use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One parked scratch buffer: a type-erased `Vec<T>` plus the metadata
+/// the best-fit picker and the byte accounting need without downcasting.
+struct ArenaSlot {
+    /// `TypeId::of::<Vec<T>>()` — buffers only ever hand back to a
+    /// matching `take_elems::<T>`.
+    ty: TypeId,
+    /// Retained capacity in bytes (`capacity * size_of::<T>()`).
+    bytes: usize,
+    buf: Box<dyn Any + Send>,
+}
+
+/// The arena behind the mutex: parked buffers plus the last time any
+/// buffer was checked in or out (what [`ExecCtx::trim_after_idle`]
+/// compares against).
+struct ArenaState {
+    slots: Vec<ArenaSlot>,
+    last_use: Instant,
+}
 
 /// Per-request / per-backend execution context: algorithm selection,
-/// worker-thread count, the scratch-buffer arena and (optionally) the
-/// machine's measured dispatch profile.
+/// element type, worker-thread count, the scratch-buffer arena and
+/// (optionally) the machine's measured dispatch profile.
 ///
 /// Cheap to construct; construct once and reuse to amortise scratch
 /// allocations. Not `Copy` (it owns the arena) — build with
@@ -75,7 +108,8 @@ pub struct ExecCtx {
     /// Convolution algorithm for all conv layers routed through this ctx.
     pub algo: ConvAlgo,
     threads: usize,
-    arena: Mutex<Vec<Vec<f32>>>,
+    dtype: Dtype,
+    arena: Mutex<ArenaState>,
     allocs: AtomicUsize,
     /// Measured dispatch profile, shared across replicas via `Arc`;
     /// `None` means every tuned lookup answers with the paper policy.
@@ -94,7 +128,8 @@ impl ExecCtx {
         ExecCtx {
             algo,
             threads: threads.max(1),
-            arena: Mutex::new(Vec::new()),
+            dtype: Dtype::F32,
+            arena: Mutex::new(ArenaState { slots: Vec::new(), last_use: Instant::now() }),
             allocs: AtomicUsize::new(0),
             profile: None,
         }
@@ -116,6 +151,28 @@ impl ExecCtx {
         self
     }
 
+    /// Set the element type this context serves in (builder style).
+    /// `Dtype::F32` — the default — is the pre-dtype behaviour bit for
+    /// bit; `Bf16`/`I8` make dtype-aware layers ([`crate::nn`]'s
+    /// `Conv2d`, `QuantizedConv2d`) run the reduced-precision kernels
+    /// with quantize/dequantize at layer boundaries.
+    pub fn with_dtype(mut self, dtype: Dtype) -> Self {
+        self.dtype = dtype;
+        self
+    }
+
+    /// Install (or replace) the element type on an existing context —
+    /// what the coordinator does to each replica's backend right after
+    /// construction for a `BackendSpec::with_dtype` tier.
+    pub fn set_dtype(&mut self, dtype: Dtype) {
+        self.dtype = dtype;
+    }
+
+    /// The element type this context serves in.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
     /// Install (or replace) the dispatch profile on an existing context
     /// — what [`crate::coordinator::BackendSpec::with_profile`] does to
     /// each replica's backend right after construction.
@@ -129,13 +186,24 @@ impl ExecCtx {
     }
 
     /// Tuned `(conv-level algorithm, row family)` for filter width `k`
-    /// at this ctx's thread count: the profile's nearest-bucket answer,
-    /// or the paper policy when no profile is attached. Always legal —
-    /// see [`DispatchProfile::choice`] for the clamping rules.
+    /// at this ctx's thread count **and dtype**: the profile's
+    /// nearest-bucket answer among entries measured for this dtype, or
+    /// the paper policy when no profile (or no matching-dtype bucket) is
+    /// attached. Always legal — see [`DispatchProfile::choice_for`] for
+    /// the clamping rules.
     pub fn tuned_choice(&self, k: usize) -> (TunedAlgo, RowKernel) {
+        self.tuned_choice_for(k, self.dtype)
+    }
+
+    /// [`ExecCtx::tuned_choice`] with an explicit element type,
+    /// overriding the ctx's own dtype. The reduced-precision boundary
+    /// wrappers use this: a `QuantizedConv2d` layer always runs int8
+    /// regardless of the ctx's serving dtype, so its `Tuned` routing
+    /// must consult the `I8` buckets even under a `F32` ctx.
+    pub fn tuned_choice_for(&self, k: usize, dtype: Dtype) -> (TunedAlgo, RowKernel) {
         match &self.profile {
-            Some(p) => p.choice(k, self.threads),
-            None => DispatchProfile::paper_policy().choice(k, self.threads),
+            Some(p) => p.choice_for(k, self.threads, dtype),
+            None => DispatchProfile::paper_policy().choice_for(k, self.threads, dtype),
         }
     }
 
@@ -158,16 +226,21 @@ impl ExecCtx {
         self.allocs.load(Ordering::Relaxed)
     }
 
-    /// Check a buffer of `len` elements, every element set to `fill`,
-    /// out of the arena; return it with [`ExecCtx::put`] when done.
+    /// Check a typed buffer of `len` elements, every element set to
+    /// `fill`, out of the arena; return it with [`ExecCtx::put_elems`]
+    /// when done. This is the dtype-generic workhorse behind
+    /// [`ExecCtx::take`]; the quantized kernels draw their `i8` padded
+    /// inputs and `i32` accumulators from the same arena as the f32
+    /// kernels draw theirs.
     ///
-    /// Best-fit reuse: the smallest free buffer whose capacity already
-    /// holds `len`, else the largest available (which grows once and
-    /// then keeps its capacity). Best-fit keeps small requests from
-    /// stealing large buffers, so a warmed arena serves a repeating
-    /// workload with zero allocations in any take order.
-    pub fn take(&self, len: usize, fill: f32) -> Vec<f32> {
-        let mut buf = self.pick(len);
+    /// Best-fit reuse *per element type*: the smallest free buffer of
+    /// this type whose capacity already holds `len`, else the largest
+    /// available (which grows once and then keeps its capacity).
+    /// Best-fit keeps small requests from stealing large buffers, so a
+    /// warmed arena serves a repeating workload with zero allocations in
+    /// any take order.
+    pub fn take_elems<T: Copy + Send + 'static>(&self, len: usize, fill: T) -> Vec<T> {
+        let mut buf = self.pick::<T>(len);
         let before = buf.capacity();
         buf.clear();
         buf.resize(len, fill);
@@ -177,20 +250,20 @@ impl ExecCtx {
         buf
     }
 
-    /// [`ExecCtx::take`] without the refill: the buffer has `len`
+    /// [`ExecCtx::take_elems`] without the refill: the buffer has `len`
     /// elements of **unspecified** (stale) content. For scratch the
     /// kernel fully overwrites before reading — column matrices, GEMM
     /// pack buffers, row accumulators — this skips the memset that
-    /// [`ExecCtx::take`] pays on every checkout. Padded-input buffers
+    /// the filling variant pays on every checkout. Padded-input buffers
     /// must keep using the filling variant.
-    pub fn take_unfilled(&self, len: usize) -> Vec<f32> {
-        let mut buf = self.pick(len);
+    pub fn take_elems_unfilled<T: Copy + Default + Send + 'static>(&self, len: usize) -> Vec<T> {
+        let mut buf = self.pick::<T>(len);
         let before = buf.capacity();
         if buf.len() > len {
             buf.truncate(len);
         } else {
             // Writes only the grown tail (nothing, when warm).
-            buf.resize(len, 0.0);
+            buf.resize(len, T::default());
         }
         if buf.capacity() > before {
             self.allocs.fetch_add(1, Ordering::Relaxed);
@@ -198,47 +271,110 @@ impl ExecCtx {
         buf
     }
 
-    /// Best-fit pick from the arena (or an empty vec when none fits).
-    fn pick(&self, len: usize) -> Vec<f32> {
-        let mut arena = self.arena.lock().unwrap();
-        let pick = (0..arena.len())
-            .filter(|&i| arena[i].capacity() >= len)
-            .min_by_key(|&i| arena[i].capacity())
-            .or_else(|| (0..arena.len()).max_by_key(|&i| arena[i].capacity()));
+    /// Best-fit pick from the arena's same-typed slots (or an empty vec
+    /// when none fits).
+    fn pick<T: Copy + Send + 'static>(&self, len: usize) -> Vec<T> {
+        let want = len.saturating_mul(std::mem::size_of::<T>());
+        let ty = TypeId::of::<Vec<T>>();
+        let mut st = self.arena.lock().unwrap();
+        st.last_use = Instant::now();
+        let slots = &st.slots;
+        let pick = (0..slots.len())
+            .filter(|&i| slots[i].ty == ty && slots[i].bytes >= want)
+            .min_by_key(|&i| slots[i].bytes)
+            .or_else(|| {
+                (0..slots.len()).filter(|&i| slots[i].ty == ty).max_by_key(|&i| slots[i].bytes)
+            });
         match pick {
-            Some(i) => arena.swap_remove(i),
+            Some(i) => *st.slots.swap_remove(i).buf.downcast::<Vec<T>>().expect("slot type tag"),
             None => Vec::new(),
         }
     }
 
-    /// Return a buffer taken with [`ExecCtx::take`] /
-    /// [`ExecCtx::take_unfilled`] to the arena.
+    /// Return a buffer taken with [`ExecCtx::take_elems`] /
+    /// [`ExecCtx::take_elems_unfilled`] (or the `f32` conveniences) to
+    /// the arena.
+    pub fn put_elems<T: Copy + Send + 'static>(&self, buf: Vec<T>) {
+        let bytes = buf.capacity().saturating_mul(std::mem::size_of::<T>());
+        let slot = ArenaSlot { ty: TypeId::of::<Vec<T>>(), bytes, buf: Box::new(buf) };
+        let mut st = self.arena.lock().unwrap();
+        st.last_use = Instant::now();
+        st.slots.push(slot);
+    }
+
+    /// [`ExecCtx::take_elems`] for `f32` — the convenience every
+    /// pre-dtype kernel keeps calling.
+    pub fn take(&self, len: usize, fill: f32) -> Vec<f32> {
+        self.take_elems(len, fill)
+    }
+
+    /// [`ExecCtx::take_elems_unfilled`] for `f32`.
+    pub fn take_unfilled(&self, len: usize) -> Vec<f32> {
+        self.take_elems_unfilled(len)
+    }
+
+    /// [`ExecCtx::put_elems`] for `f32`.
     pub fn put(&self, buf: Vec<f32>) {
-        self.arena.lock().unwrap().push(buf);
+        self.put_elems(buf)
     }
 
-    /// Total `f32` capacity currently retained by the arena's free
-    /// buffers. This is the memory a long-lived context pins between
-    /// calls — the quantity [`ExecCtx::trim`] bounds and the
-    /// coordinator's arena-retention knob caps after every batch.
+    /// Total capacity in **bytes** currently retained by the arena's
+    /// free buffers, across every element type. This is the memory a
+    /// long-lived context pins between calls — the quantity
+    /// [`ExecCtx::trim_bytes`] bounds and the coordinator's
+    /// arena-retention knobs cap after every batch / idle period.
+    pub fn arena_bytes(&self) -> usize {
+        self.arena.lock().unwrap().slots.iter().map(|s| s.bytes).sum()
+    }
+
+    /// Retained arena capacity in `f32`-equivalents.
+    #[deprecated(
+        note = "arena retention is byte-based now that buffers are dtype-generic; \
+                use `arena_bytes` (this shim reports `arena_bytes() / 4`)"
+    )]
     pub fn arena_floats(&self) -> usize {
-        self.arena.lock().unwrap().iter().map(Vec::capacity).sum()
+        self.arena_bytes() / std::mem::size_of::<f32>()
     }
 
-    /// Drop cached buffers (largest first) until the arena holds at most
-    /// `max_floats` elements of capacity. Bounds the high-water-mark
-    /// memory a long-lived context retains; the legacy no-ctx entry
-    /// points trim their shared per-thread context after every call.
-    pub fn trim(&self, max_floats: usize) {
-        let mut arena = self.arena.lock().unwrap();
-        arena.sort_by_key(Vec::capacity);
-        let mut total: usize = arena.iter().map(Vec::capacity).sum();
-        while total > max_floats {
-            match arena.pop() {
-                Some(b) => total -= b.capacity(),
+    /// Drop cached buffers (largest first, any element type) until the
+    /// arena holds at most `max_bytes` bytes of capacity. Bounds the
+    /// high-water-mark memory a long-lived context retains; the legacy
+    /// no-ctx entry points trim their shared per-thread context after
+    /// every call.
+    pub fn trim_bytes(&self, max_bytes: usize) {
+        let mut st = self.arena.lock().unwrap();
+        st.slots.sort_by_key(|s| s.bytes);
+        let mut total: usize = st.slots.iter().map(|s| s.bytes).sum();
+        while total > max_bytes {
+            match st.slots.pop() {
+                Some(s) => total -= s.bytes,
                 None => break,
             }
         }
+    }
+
+    /// [`ExecCtx::trim_bytes`] with an `f32`-denominated cap (the
+    /// coordinator's historical `--trim-mb` unit: `max_floats` × 4
+    /// bytes).
+    pub fn trim(&self, max_floats: usize) {
+        self.trim_bytes(max_floats.saturating_mul(std::mem::size_of::<f32>()));
+    }
+
+    /// Time-based retention: drop **all** cached buffers if the arena
+    /// has not been touched (no take/put) for at least `idle`. Returns
+    /// whether anything was freed. This is the serving-tier
+    /// trim-after-idle knob — a backend that has gone quiet releases its
+    /// scratch instead of pinning the last burst's high-water mark; the
+    /// next request simply re-allocates (one `alloc_event`, then steady
+    /// state again). Checking the idle clock does not itself count as a
+    /// use.
+    pub fn trim_after_idle(&self, idle: Duration) -> bool {
+        let mut st = self.arena.lock().unwrap();
+        if st.last_use.elapsed() < idle || st.slots.is_empty() {
+            return false;
+        }
+        st.slots.clear();
+        true
     }
 
     /// Run `body(item_index, item_slice)` for every `chunk`-sized item
@@ -246,19 +382,20 @@ impl ExecCtx {
     /// worker threads.
     ///
     /// Every kernel's parallel loop is this call: `data` is the output
-    /// tensor's storage, one item is one independently-computable unit
-    /// (an output plane for 2-D kernels, an output row for 1-D, a group
-    /// block for im2col+GEMM). Results are bit-identical for any thread
-    /// count because the per-item computation never depends on the
-    /// partition.
+    /// tensor's storage — any `Send` element type: `f32` planes, `i32`
+    /// quantized accumulators, bf16 rows — one item is one
+    /// independently-computable unit (an output plane for 2-D kernels,
+    /// an output row for 1-D, a group block for im2col+GEMM). Results
+    /// are bit-identical for any thread count because the per-item
+    /// computation never depends on the partition.
     ///
     /// # Panics
     /// If `chunk` is zero or does not divide `data.len()`.
-    pub fn par_chunks(
+    pub fn par_chunks<T: Send>(
         &self,
-        data: &mut [f32],
+        data: &mut [T],
         chunk: usize,
-        body: impl Fn(usize, &mut [f32]) + Sync,
+        body: impl Fn(usize, &mut [T]) + Sync,
     ) {
         self.par_chunks_with(data, chunk, || (), |i, c, _s| body(i, c), |_s| {});
     }
@@ -275,12 +412,12 @@ impl ExecCtx {
     ///
     /// # Panics
     /// If `chunk` is zero or does not divide `data.len()`.
-    pub fn par_chunks_with<S>(
+    pub fn par_chunks_with<T: Send, S>(
         &self,
-        data: &mut [f32],
+        data: &mut [T],
         chunk: usize,
         init: impl Fn() -> S + Sync,
-        body: impl Fn(usize, &mut [f32], &mut S) + Sync,
+        body: impl Fn(usize, &mut [T], &mut S) + Sync,
         fini: impl Fn(S) + Sync,
     ) {
         assert!(chunk > 0, "par_chunks needs a positive chunk size");
@@ -356,16 +493,16 @@ thread_local! {
 /// use (a legacy call from inside another's `f`) falls back to a fresh
 /// throwaway context rather than aliasing the shared one.
 pub fn with_thread_ctx<R>(algo: ConvAlgo, f: impl FnOnce(&ExecCtx) -> R) -> R {
-    /// Retention cap for the shared per-thread arena, in f32 elements
-    /// (16 MiB): keeps the common scratch (column matrices, pack
-    /// buffers, row accumulators) warm across legacy calls while one
-    /// huge padded input can't stay pinned for the thread's lifetime.
-    const LEGACY_ARENA_CAP: usize = 4 << 20;
+    /// Retention cap for the shared per-thread arena, in bytes (16 MiB):
+    /// keeps the common scratch (column matrices, pack buffers, row
+    /// accumulators) warm across legacy calls while one huge padded
+    /// input can't stay pinned for the thread's lifetime.
+    const LEGACY_ARENA_CAP_BYTES: usize = 16 << 20;
     THREAD_CTX.with(|cell| match cell.try_borrow_mut() {
         Ok(mut ctx) => {
             ctx.algo = algo;
             let r = f(&ctx);
-            ctx.trim(LEGACY_ARENA_CAP);
+            ctx.trim_bytes(LEGACY_ARENA_CAP_BYTES);
             r
         }
         Err(_) => f(&ExecCtx::new(algo)),
@@ -379,12 +516,13 @@ impl Default for ExecCtx {
 }
 
 impl Clone for ExecCtx {
-    /// Clones algorithm, thread count and the (shared) dispatch profile
-    /// with a fresh (empty) arena: the arena is a cache, not state —
-    /// this is how each coordinator replica gets its own scratch while
-    /// all replicas dispatch from one measured profile.
+    /// Clones algorithm, thread count, dtype and the (shared) dispatch
+    /// profile with a fresh (empty) arena: the arena is a cache, not
+    /// state — this is how each coordinator replica gets its own scratch
+    /// while all replicas dispatch from one measured profile.
     fn clone(&self) -> Self {
         let mut c = ExecCtx::with_threads(self.algo, self.threads);
+        c.dtype = self.dtype;
         c.profile = self.profile.clone();
         c
     }
@@ -394,6 +532,7 @@ impl fmt::Debug for ExecCtx {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.debug_struct("ExecCtx")
             .field("algo", &self.algo)
+            .field("dtype", &self.dtype)
             .field("threads", &self.threads)
             .finish()
     }
@@ -402,6 +541,7 @@ impl fmt::Debug for ExecCtx {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::Bf16;
 
     #[test]
     fn take_put_reuses_capacity() {
@@ -423,6 +563,40 @@ mod tests {
     }
 
     #[test]
+    fn arena_is_dtype_generic_and_typed_buffers_do_not_mix() {
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let q: Vec<i8> = ctx.take_elems(256, 7i8);
+        assert!(q.iter().all(|&v| v == 7));
+        let acc: Vec<i32> = ctx.take_elems_unfilled(64);
+        assert_eq!(acc.len(), 64);
+        let h: Vec<Bf16> = ctx.take_elems(32, Bf16::from_f32(1.0));
+        assert_eq!(ctx.alloc_events(), 3);
+        ctx.put_elems(q);
+        ctx.put_elems(acc);
+        ctx.put_elems(h);
+        // 256 i8 + 64 i32 + 32 bf16 = 256 + 256 + 64 bytes retained.
+        assert!(ctx.arena_bytes() >= 256 + 256 + 64);
+        // An f32 take must NOT hand back the i8 buffer's storage: it
+        // allocates fresh (4th event) while same-typed re-takes reuse.
+        let f: Vec<f32> = ctx.take_elems(16, 0.0f32);
+        assert_eq!(ctx.alloc_events(), 4);
+        ctx.put_elems(f);
+        let q2: Vec<i8> = ctx.take_elems(100, 0i8);
+        assert_eq!(ctx.alloc_events(), 4, "warm i8 buffer is reused");
+        ctx.put_elems(q2);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn arena_floats_shim_reports_quarter_bytes() {
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let b = ctx.take(1000, 0.0);
+        ctx.put(b);
+        assert_eq!(ctx.arena_floats(), ctx.arena_bytes() / 4);
+        assert!(ctx.arena_floats() >= 1000);
+    }
+
+    #[test]
     fn par_chunks_covers_every_item_once() {
         for threads in [1usize, 2, 3, 8] {
             let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads);
@@ -438,6 +612,16 @@ mod tests {
                     "threads={threads} item {i}: {data:?}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn par_chunks_is_generic_over_the_element() {
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 4);
+        let mut data = vec![0i32; 6 * 2];
+        ctx.par_chunks(&mut data, 2, |i, c| c.fill(i as i32 * 10));
+        for i in 0..6 {
+            assert!(data[i * 2..(i + 1) * 2].iter().all(|&v| v == i as i32 * 10));
         }
     }
 
@@ -479,25 +663,43 @@ mod tests {
         let small = ctx.take(1 << 10, 0.0);
         ctx.put(big);
         ctx.put(small);
-        assert!(ctx.arena_floats() >= (1 << 20) + (1 << 10));
+        assert!(ctx.arena_bytes() >= 4 * ((1 << 20) + (1 << 10)));
         ctx.trim(1 << 12);
         // The huge buffer is gone, the small one survives.
-        assert!(ctx.arena_floats() <= 1 << 12);
-        assert!(ctx.arena_floats() >= 1 << 10);
-        ctx.trim(0);
-        assert_eq!(ctx.arena_floats(), 0);
+        assert!(ctx.arena_bytes() <= 4 << 12);
+        assert!(ctx.arena_bytes() >= 4 << 10);
+        ctx.trim_bytes(0);
+        assert_eq!(ctx.arena_bytes(), 0);
+    }
+
+    #[test]
+    fn trim_after_idle_frees_only_after_the_idle_gap() {
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let b = ctx.take(4096, 0.0);
+        ctx.put(b);
+        assert!(ctx.arena_bytes() > 0);
+        // Fresh use: a long idle threshold must not trim.
+        assert!(!ctx.trim_after_idle(Duration::from_secs(3600)));
+        assert!(ctx.arena_bytes() > 0);
+        // Checking the clock is not a use, so a zero threshold trims.
+        assert!(ctx.trim_after_idle(Duration::ZERO));
+        assert_eq!(ctx.arena_bytes(), 0);
+        // Nothing retained: reports false.
+        assert!(!ctx.trim_after_idle(Duration::ZERO));
     }
 
     #[test]
     fn clone_keeps_config_fresh_arena() {
         let profile = Arc::new(DispatchProfile::paper_policy());
-        let ctx =
-            ExecCtx::with_threads(ConvAlgo::Im2colGemm, 3).with_profile(Arc::clone(&profile));
+        let ctx = ExecCtx::with_threads(ConvAlgo::Im2colGemm, 3)
+            .with_dtype(Dtype::I8)
+            .with_profile(Arc::clone(&profile));
         let b = ctx.take(8, 0.0);
         ctx.put(b);
         let c2 = ctx.clone();
         assert_eq!(c2.algo, ConvAlgo::Im2colGemm);
         assert_eq!(c2.threads(), 3);
+        assert_eq!(c2.dtype(), Dtype::I8);
         assert_eq!(c2.alloc_events(), 0);
         assert!(
             c2.profile().is_some_and(|p| Arc::ptr_eq(p, &profile)),
@@ -509,15 +711,20 @@ mod tests {
     fn tuned_lookups_fall_back_to_paper_policy() {
         let ctx = ExecCtx::new(ConvAlgo::Tuned);
         assert!(ctx.profile().is_none());
+        assert_eq!(ctx.dtype(), Dtype::F32);
         assert_eq!(ctx.tuned_choice(5), (TunedAlgo::Sliding, RowKernel::Custom));
         assert_eq!(ctx.tuned_row_kernel(9), RowKernel::Generic);
         assert_eq!(ctx.tuned_row_kernel(30), RowKernel::Compound);
+        // A non-f32 dtype with no measured buckets also answers with the
+        // paper policy rather than borrowing f32 buckets.
+        let qctx = ExecCtx::new(ConvAlgo::Tuned).with_dtype(Dtype::I8);
+        assert_eq!(qctx.tuned_choice(5), (TunedAlgo::Sliding, RowKernel::Custom));
     }
 
     #[test]
     fn debug_is_compact() {
         let s = format!("{:?}", ExecCtx::with_threads(ConvAlgo::Sliding, 2));
-        assert!(s.contains("Sliding") && s.contains("2"));
+        assert!(s.contains("Sliding") && s.contains("2") && s.contains("F32"));
     }
 
     #[test]

@@ -16,8 +16,9 @@ pub mod workload;
 
 pub use roofline::{machine_peaks, MachinePeaks};
 pub use sweep::{
-    fig1_speedup_sweep, fig1_speedup_sweep_profiled, fig2_throughput_sweep,
-    fig2_throughput_sweep_profiled, Fig1Row, Fig2Row,
+    fig1_speedup_sweep, fig1_speedup_sweep_dtyped, fig1_speedup_sweep_profiled,
+    fig2_throughput_sweep, fig2_throughput_sweep_dtyped, fig2_throughput_sweep_profiled,
+    Fig1Row, Fig2Row,
 };
 pub use timing::{bench, Stats};
 pub use workload::ConvCase;

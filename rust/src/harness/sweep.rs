@@ -12,9 +12,11 @@ use super::timing::{bench_quick, Stats};
 use super::workload::ConvCase;
 use crate::autotune::DispatchProfile;
 use crate::exec::ExecCtx;
+use crate::kernels::im2col::{conv2d_im2col_ctx, conv2d_im2col_q8_raw_ctx};
 use crate::kernels::rowconv::{RowKernel, COMPOUND_MAX_K};
+use crate::kernels::sliding2d::{conv2d_sliding_bf16_ctx, conv2d_sliding_q8_raw_ctx};
 use crate::kernels::{conv2d_ctx, ConvAlgo};
-use crate::tensor::Tensor;
+use crate::tensor::{from_bf16, quantize, to_bf16, Dtype, QuantParams, Tensor};
 use std::sync::Arc;
 
 /// One Fig. 1 data point.
@@ -98,6 +100,81 @@ pub fn fig1_speedup_sweep(
     fig1_speedup_sweep_profiled(ks, threads, None, make_case)
 }
 
+/// Time the two series of a reduced-precision sweep point:
+/// `(t_gemm, t_sliding)`.
+///
+/// * `I8` — the quantized sliding kernel vs the quantized im2col+GEMM
+///   baseline, both on *raw* i32 accumulators (identical arithmetic,
+///   identical outputs bit for bit — the comparison is purely memory
+///   access pattern; quantize/dequantize sit outside the timed loop at
+///   layer boundaries in real serving too).
+/// * `Bf16` — the bf16 sliding kernel vs the f32 im2col+GEMM baseline
+///   on the same bf16-rounded operands (there is no bf16 GEMM kernel;
+///   the baseline computes identical values at full storage width).
+fn time_reduced(case: &ConvCase, threads: usize, dtype: Dtype) -> (f64, f64) {
+    let x = case.input();
+    let w = case.weights();
+    let gemm_ctx = ExecCtx::with_threads(ConvAlgo::Im2colGemm, threads);
+    let slide_ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads);
+    match dtype {
+        Dtype::I8 => {
+            let qx = quantize(&x, QuantParams::for_tensor(&x));
+            let qw = quantize(&w, QuantParams::for_tensor(&w));
+            let t_gemm = bench_quick(|| conv2d_im2col_q8_raw_ctx(&qx, &qw, &case.params, &gemm_ctx))
+                .secs();
+            let t_sliding =
+                bench_quick(|| conv2d_sliding_q8_raw_ctx(&qx, &qw, &case.params, &slide_ctx))
+                    .secs();
+            (t_gemm, t_sliding)
+        }
+        _ => {
+            let xb = to_bf16(&x);
+            let wb = to_bf16(&w);
+            let (xr, wr) = (from_bf16(&xb), from_bf16(&wb));
+            let t_gemm = bench_quick(|| conv2d_im2col_ctx(&xr, &wr, None, &case.params, &gemm_ctx))
+                .secs();
+            let t_sliding =
+                bench_quick(|| conv2d_sliding_bf16_ctx(&xb, &wb, None, &case.params, &slide_ctx))
+                    .secs();
+            (t_gemm, t_sliding)
+        }
+    }
+}
+
+/// [`fig1_speedup_sweep_profiled`] with a dtype dimension — the CLI's
+/// `bench-fig1 --dtype` path. `F32` is exactly the profiled sweep; for
+/// `I8`/`Bf16` the gemm and sliding series come from `time_reduced`
+/// (the forced generic/compound columns are `None`: the
+/// reduced-precision row kernels are width-universal, so there is no
+/// family ablation to run) and `kernel_used` reports the dtype.
+pub fn fig1_speedup_sweep_dtyped(
+    ks: &[usize],
+    threads: usize,
+    profile: Option<Arc<DispatchProfile>>,
+    dtype: Dtype,
+    make_case: impl Fn(usize) -> ConvCase,
+) -> Vec<Fig1Row> {
+    if dtype == Dtype::F32 {
+        return fig1_speedup_sweep_profiled(ks, threads, profile, make_case);
+    }
+    ks.iter()
+        .map(|&k| {
+            let case = make_case(k);
+            let (t_gemm, t_sliding) = time_reduced(&case, threads, dtype);
+            Fig1Row {
+                k,
+                threads,
+                t_gemm,
+                t_sliding,
+                t_generic: None,
+                t_compound: None,
+                speedup: t_gemm / t_sliding,
+                kernel_used: if dtype == Dtype::I8 { "q8" } else { "bf16" },
+            }
+        })
+        .collect()
+}
+
 /// [`fig1_speedup_sweep`] with an optional measured dispatch profile:
 /// the sliding (auto) series then dispatches tuned rows — the CLI's
 /// `bench-fig1 --profile` path — while the forced series are unchanged.
@@ -146,6 +223,46 @@ pub fn fig2_throughput_sweep(
     make_case: impl Fn(usize) -> ConvCase,
 ) -> Vec<Fig2Row> {
     fig2_throughput_sweep_profiled(ks, threads, None, make_case)
+}
+
+/// [`fig2_throughput_sweep_profiled`] with a dtype dimension — the
+/// CLI's `bench-fig2 --dtype` path. `F32` delegates; for `I8`/`Bf16`
+/// both series come from `time_reduced` and the roofline ceilings use
+/// the dtype-scaled traffic models ([`ConvCase::sliding_bytes_for`] /
+/// [`ConvCase::gemm_bytes_for`]) — reduced precision moves the ridge,
+/// not the arithmetic.
+pub fn fig2_throughput_sweep_dtyped(
+    ks: &[usize],
+    threads: usize,
+    profile: Option<Arc<DispatchProfile>>,
+    dtype: Dtype,
+    make_case: impl Fn(usize) -> ConvCase,
+) -> Vec<Fig2Row> {
+    if dtype == Dtype::F32 {
+        return fig2_throughput_sweep_profiled(ks, threads, profile, make_case);
+    }
+    let peaks = machine_peaks();
+    // The bf16 gemm series is the f32 GEMM on bf16-rounded operands
+    // (there is no bf16 GEMM kernel — see `time_reduced`), so its
+    // roofline must model the f32 traffic it actually streams; only
+    // the int8 series runs an actually-narrower GEMM.
+    let gemm_traffic = if dtype == Dtype::Bf16 { Dtype::F32 } else { dtype };
+    ks.iter()
+        .map(|&k| {
+            let case = make_case(k);
+            let flops = case.flops() as f64;
+            let (t_gemm, t_sliding) = time_reduced(&case, threads, dtype);
+            Fig2Row {
+                k,
+                threads,
+                sliding_gflops: flops / t_sliding / 1e9,
+                gemm_gflops: flops / t_gemm / 1e9,
+                sliding_roof: peaks.attainable(case.intensity(case.sliding_bytes_for(dtype))),
+                gemm_roof: peaks.attainable(case.intensity(case.gemm_bytes_for(gemm_traffic))),
+                peak: peaks.gflops,
+            }
+        })
+        .collect()
 }
 
 /// [`fig2_throughput_sweep`] with an optional measured dispatch profile
@@ -217,6 +334,26 @@ mod tests {
         assert!(rows2[0].sliding_gflops > 0.0);
         assert!(rows2[0].peak >= rows2[0].sliding_roof * 0.99);
         assert_eq!(rows2[0].threads, 2);
+    }
+
+    #[test]
+    fn dtyped_sweeps_produce_rows() {
+        // Tiny geometry; exercises the q8 and bf16 timing paths.
+        for d in [Dtype::I8, Dtype::Bf16] {
+            let rows =
+                fig1_speedup_sweep_dtyped(&[3], 1, None, d, |k| ConvCase::square(1, 24, k));
+            assert_eq!(rows.len(), 1);
+            assert!(rows[0].t_gemm > 0.0 && rows[0].t_sliding > 0.0);
+            assert!(rows[0].t_generic.is_none(), "no family ablation below f32");
+            assert_eq!(rows[0].kernel_used, if d == Dtype::I8 { "q8" } else { "bf16" });
+            let r2 =
+                fig2_throughput_sweep_dtyped(&[3], 1, None, d, |k| ConvCase::square(1, 24, k));
+            assert!(r2[0].sliding_gflops > 0.0 && r2[0].gemm_gflops > 0.0);
+        }
+        // F32 delegates to the profiled sweep (same row shape).
+        let rows =
+            fig1_speedup_sweep_dtyped(&[3], 1, None, Dtype::F32, |k| ConvCase::square(1, 24, k));
+        assert!(rows[0].t_generic.is_some());
     }
 
     #[test]

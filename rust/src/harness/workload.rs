@@ -5,7 +5,7 @@
 //! the analytic FLOP/byte counts the roofline model needs.
 
 use crate::kernels::{im2col::im2col_bytes, Conv2dParams};
-use crate::tensor::Tensor;
+use crate::tensor::{Dtype, Tensor};
 
 /// One convolution benchmark case.
 #[derive(Clone, Debug)]
@@ -75,23 +75,53 @@ impl ConvCase {
     /// the input once per filter row tap that misses cache — model as one
     /// input read + one output write + weights (compulsory misses only).
     pub fn sliding_bytes(&self) -> u64 {
+        self.sliding_bytes_for(Dtype::F32)
+    }
+
+    /// [`ConvCase::sliding_bytes`] for an arbitrary storage dtype:
+    /// input/weights stream at `dtype.bytes()` per element (1 for int8
+    /// codes, 2 for bf16) while the output writes at the accumulator
+    /// width (i32/f32 — 4 bytes; bf16 rounds back to 2). This is where
+    /// the quantized roofline moves: less traffic at identical
+    /// arithmetic.
+    pub fn sliding_bytes_for(&self, dtype: Dtype) -> u64 {
         let (oh, ow) = self.out_size();
         let input = self.n * self.c_in * self.h * self.w;
         let output = self.n * self.c_out * oh * ow;
         let weights = self.c_out * (self.c_in / self.params.groups) * self.k * self.k;
-        (4 * (input + output + weights)) as u64
+        let out_bytes = match dtype {
+            Dtype::Bf16 => 2,
+            _ => 4,
+        };
+        (dtype.bytes() * (input + weights) + out_bytes * output) as u64
     }
 
     /// DRAM traffic for the `im2col` baseline: the column matrix is both
     /// written and read back (k² bloat), plus output and weights.
     pub fn gemm_bytes(&self) -> u64 {
+        self.gemm_bytes_for(Dtype::F32)
+    }
+
+    /// [`ConvCase::gemm_bytes`] for an arbitrary storage dtype: the k²
+    /// column-matrix bloat scales with the element width (an int8
+    /// column matrix is 4× smaller in bytes but still k²× the input),
+    /// the output writes at accumulator width.
+    pub fn gemm_bytes_for(&self, dtype: Dtype) -> u64 {
         let (oh, ow) = self.out_size();
+        // im2col_bytes counts f32 columns; rescale to this dtype.
         let col = self.n
             * im2col_bytes(self.c_in / self.params.groups, self.k, self.k, oh, ow)
-            * self.params.groups;
-        let input = 4 * self.n * self.c_in * self.h * self.w;
-        let output = 4 * self.n * self.c_out * oh * ow;
-        let weights = 4 * self.c_out * (self.c_in / self.params.groups) * self.k * self.k;
+            * self.params.groups
+            * dtype.bytes()
+            / 4;
+        let input = dtype.bytes() * self.n * self.c_in * self.h * self.w;
+        let out_bytes = match dtype {
+            Dtype::Bf16 => 2,
+            _ => 4,
+        };
+        let output = out_bytes * self.n * self.c_out * oh * ow;
+        let weights =
+            dtype.bytes() * self.c_out * (self.c_in / self.params.groups) * self.k * self.k;
         (input + 2 * col + output + weights) as u64
     }
 
@@ -141,6 +171,19 @@ mod tests {
     fn intensity_positive() {
         let c = ConvCase::square(4, 32, 5);
         assert!(c.intensity(c.sliding_bytes()) > c.intensity(c.gemm_bytes()));
+    }
+
+    #[test]
+    fn dtype_scales_traffic_models() {
+        let c = ConvCase::square(4, 32, 5);
+        assert_eq!(c.sliding_bytes_for(Dtype::F32), c.sliding_bytes());
+        assert_eq!(c.gemm_bytes_for(Dtype::F32), c.gemm_bytes());
+        assert!(c.sliding_bytes_for(Dtype::I8) < c.sliding_bytes_for(Dtype::Bf16));
+        assert!(c.sliding_bytes_for(Dtype::Bf16) < c.sliding_bytes());
+        assert!(c.gemm_bytes_for(Dtype::I8) < c.gemm_bytes());
+        // The bloat ratio is dtype-independent in elements, so int8
+        // still pays the k² column matrix relative to its own input.
+        assert!(c.gemm_bytes_for(Dtype::I8) > c.sliding_bytes_for(Dtype::I8));
     }
 
     #[test]

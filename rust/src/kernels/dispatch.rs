@@ -3,13 +3,15 @@
 //! can pit implementations against each other on identical inputs.
 
 use super::direct::{conv1d_direct_ctx, conv2d_direct_ctx};
-use super::im2col::conv2d_im2col_ctx;
+use super::im2col::{conv2d_im2col_ctx, conv2d_im2col_q8_ctx};
 use super::sliding1d::conv1d_sliding_ctx;
-use super::sliding2d::{conv2d_sliding_ctx, SlideVariant};
+use super::sliding2d::{
+    conv2d_sliding_bf16_ctx, conv2d_sliding_ctx, conv2d_sliding_q8_ctx, SlideVariant,
+};
 use super::{Conv1dParams, Conv2dParams};
 use crate::autotune::TunedAlgo;
 use crate::exec::ExecCtx;
-use crate::tensor::Tensor;
+use crate::tensor::{from_bf16, quantize, to_bf16, QuantParams, Tensor, TensorT};
 
 /// Which convolution implementation to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -164,6 +166,84 @@ pub fn conv1d_ctx(
     }
 }
 
+/// f32-boundary quantized 2-D convolution: dynamically quantize the
+/// activations (per-tensor symmetric, scale from this batch's
+/// `max_abs`), run the int8 kernel the ctx's algorithm routes to, and
+/// dequantize back to f32 (`+ bias`).
+///
+/// This is what the quantized nn layers call per forward pass — the
+/// weight codes `qw`/`wq` are quantized once ahead of time, the
+/// activations per call. Routing honours [`ExecCtx::algo`]:
+/// `Im2colGemm` runs the int8 im2col+GEMM baseline, `Tuned` asks the
+/// profile's **`I8` buckets** explicitly
+/// ([`ExecCtx::tuned_choice_for`] — this layer runs int8 whatever the
+/// ctx's own serving dtype, so f32 crossovers are never borrowed), and
+/// everything else — including `Direct`, which has no int8 kernel —
+/// takes the quantized sliding path.
+pub fn conv2d_q8_ctx(
+    x: &Tensor,
+    qw: &TensorT<i8>,
+    wq: QuantParams,
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
+    let xq = QuantParams::for_tensor(x);
+    let qx = quantize(x, xq);
+    let use_gemm = match ctx.algo {
+        ConvAlgo::Im2colGemm => true,
+        ConvAlgo::Tuned => {
+            ctx.tuned_choice_for(qw.dim(3), crate::tensor::Dtype::I8).0 == TunedAlgo::Gemm
+        }
+        _ => false,
+    };
+    if use_gemm {
+        conv2d_im2col_q8_ctx(&qx, xq, qw, wq, bias, p, ctx)
+    } else {
+        conv2d_sliding_q8_ctx(&qx, xq, qw, wq, bias, p, ctx)
+    }
+}
+
+/// f32-boundary bfloat16 2-D convolution: round both operands to bf16
+/// storage, run the bf16 sliding kernel, widen the result back to f32.
+///
+/// Algorithms without a bf16 kernel (`Direct`, `Im2colGemm`, and a
+/// `Tuned` lookup that resolves to them — consulted from the profile's
+/// **`Bf16` buckets** via [`ExecCtx::tuned_choice_for`]) apply the same
+/// storage rounding on the operands, compute in f32, and round the
+/// output back through bf16 — numerically the identical contract
+/// (bf16-rounded operands and outputs, f32 accumulation), just without
+/// the halved streaming traffic.
+pub fn conv2d_bf16_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
+    let xb = to_bf16(x);
+    let wb = to_bf16(w);
+    let fallback = match ctx.algo {
+        ConvAlgo::Direct | ConvAlgo::Im2colGemm => Some(ctx.algo),
+        ConvAlgo::Tuned => match ctx.tuned_choice_for(w.dim(3), crate::tensor::Dtype::Bf16).0 {
+            TunedAlgo::Direct => Some(ConvAlgo::Direct),
+            TunedAlgo::Gemm => Some(ConvAlgo::Im2colGemm),
+            TunedAlgo::Sliding => None,
+        },
+        _ => None,
+    };
+    let y = match fallback {
+        Some(ConvAlgo::Im2colGemm) => {
+            conv2d_im2col_ctx(&from_bf16(&xb), &from_bf16(&wb), bias, p, ctx)
+        }
+        Some(_) => conv2d_direct_ctx(&from_bf16(&xb), &from_bf16(&wb), bias, p, ctx),
+        None => return from_bf16(&conv2d_sliding_bf16_ctx(&xb, &wb, bias, p, ctx)),
+    };
+    // Match the sliding path's output precision: bf16 storage rounding
+    // on the way out, so routing never changes the numeric contract.
+    from_bf16(&to_bf16(&y))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,6 +318,7 @@ mod tests {
             let profile = DispatchProfile::from_entries(vec![ProfileEntry {
                 k: 5,
                 threads: 1,
+                dtype: crate::tensor::Dtype::F32,
                 algo,
                 slide: RowKernel::Custom,
                 gflops: 1.0,

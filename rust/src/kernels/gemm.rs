@@ -221,6 +221,38 @@ fn micro_kernel(
     }
 }
 
+/// Integer GEMM for the int8 convolution baseline:
+/// `C += A · B` for row-major `A[M×K]` (i8), `B[K×N]` (i8),
+/// `C[M×N]` (i32, exact accumulation).
+///
+/// Deliberately simpler than [`sgemm`]: an `i·p·j` loop with a
+/// unit-stride inner over `N` that LLVM autovectorizes (widening
+/// `i8 → i32` multiply-adds). What the int8 im2col baseline pays for —
+/// and what the quantized sliding kernel avoids — is *materialising and
+/// re-streaming the `k²`-bloated column matrix*, which this loop order
+/// reproduces faithfully: every row of `A` streams the whole packed
+/// column matrix `B`. Because i32 accumulation is exact, loop order
+/// does not affect the result bit-wise.
+///
+/// # Panics
+/// If any slice is shorter than its shape requires.
+pub fn gemm_q8(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    assert!(a.len() >= m * k, "A too short");
+    assert!(b.len() >= k * n, "B too short");
+    assert!(c.len() >= m * n, "C too short");
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &ap) in arow.iter().enumerate() {
+            let av = ap as i32;
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv as i32;
+            }
+        }
+    }
+}
+
 /// Reference scalar GEMM for tests.
 pub fn sgemm_ref(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     for i in 0..m {
@@ -288,6 +320,24 @@ mod tests {
         let mut c = vec![10.0; 4]; // 2x2
         sgemm(2, 1, 2, &a, &b, &mut c);
         assert_eq!(c, vec![13.0, 14.0, 16.0, 18.0]);
+    }
+
+    #[test]
+    fn gemm_q8_matches_scalar_reference() {
+        let (m, k, n) = (5usize, 9usize, 37usize);
+        let mut r = XorShiftRng::new(77);
+        let a: Vec<i8> = (0..m * k).map(|_| r.uniform(-127.0, 127.0) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|_| r.uniform(-127.0, 127.0) as i8).collect();
+        let mut c = vec![3i32; m * n];
+        gemm_q8(m, k, n, &a, &b, &mut c);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = 3 + (0..k)
+                    .map(|p| a[i * k + p] as i32 * b[p * n + j] as i32)
+                    .sum::<i32>();
+                assert_eq!(c[i * n + j], want, "({i},{j})");
+            }
+        }
     }
 
     #[test]

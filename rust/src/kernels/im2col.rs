@@ -9,10 +9,11 @@
 //! memory traffic. [`im2col_bytes`] reports the bloat so the benchmark
 //! harness can plot it.
 
-use super::gemm::{pack_a_len, pack_b_len, sgemm_with_scratch};
+use super::gemm::{gemm_q8, pack_a_len, pack_b_len, sgemm_with_scratch};
+use super::sliding2d::dequantize_conv_acc;
 use super::Conv2dParams;
 use crate::exec::ExecCtx;
-use crate::tensor::Tensor;
+use crate::tensor::{Element, QuantParams, Tensor, TensorT};
 
 /// Size in bytes of the column matrix `im2col` materialises for one image
 /// of one group — the paper's memory-bloat metric.
@@ -20,13 +21,15 @@ pub fn im2col_bytes(c_in_g: usize, kh: usize, kw: usize, oh: usize, ow: usize) -
     c_in_g * kh * kw * oh * ow * std::mem::size_of::<f32>()
 }
 
-/// Expand one `(image, group)` into the column matrix.
+/// Expand one `(image, group)` into the column matrix (any element
+/// type — the int8 baseline materialises i8 columns, so its bloat is
+/// byte-for-byte what an int8 `MlasConv` would pay).
 ///
 /// `col` is `[c_in_g * kh * kw, oh * ow]` row-major; out-of-image taps
-/// (from padding) become zeros.
+/// (from padding) become the element's additive zero.
 #[allow(clippy::too_many_arguments)]
-fn im2col_plane(
-    x: &Tensor,
+fn im2col_plane<E: Element>(
+    x: &TensorT<E>,
     ni: usize,
     ci0: usize,
     c_in_g: usize,
@@ -35,7 +38,7 @@ fn im2col_plane(
     p: &Conv2dParams,
     oh: usize,
     ow: usize,
-    col: &mut [f32],
+    col: &mut [E],
 ) {
     let (h, w) = (x.dim(2), x.dim(3));
     let (sh, sw) = p.stride;
@@ -50,7 +53,7 @@ fn im2col_plane(
                     let iy = oy * sh + ky;
                     let dst = &mut row[oy * ow..oy * ow + ow];
                     if iy < ph || iy >= h + ph {
-                        dst.fill(0.0);
+                        dst.fill(E::default());
                         continue;
                     }
                     let src_row = &plane[(iy - ph) * w..(iy - ph) * w + w];
@@ -60,7 +63,7 @@ fn im2col_plane(
                         for (ox, d) in dst.iter_mut().enumerate() {
                             let ix = ox + kx;
                             *d = if ix < pw || ix >= w + pw {
-                                0.0
+                                E::default()
                             } else {
                                 src_row[ix - pw]
                             };
@@ -69,7 +72,7 @@ fn im2col_plane(
                         for (ox, d) in dst.iter_mut().enumerate() {
                             let ix = ox * sw + kx;
                             *d = if ix < pw || ix >= w + pw {
-                                0.0
+                                E::default()
                             } else {
                                 src_row[ix - pw]
                             };
@@ -165,6 +168,75 @@ pub fn conv2d_im2col_ctx(
         },
     );
     out
+}
+
+/// Quantized int8 `im2col` + GEMM convolution, **raw accumulator**
+/// output — the baseline the quantized sliding kernel is measured
+/// against (`BENCH_quant.json`).
+///
+/// Identical structure to [`conv2d_im2col_ctx`]: each `(image, group)`
+/// expands an **i8** column matrix from the arena (the same `kh·kw ×`
+/// memory bloat, now in bytes) and runs one exact-i32 [`gemm_q8`] into
+/// a contiguous output block. Requires symmetric quantization (codes
+/// sum directly; zero padding is the code 0). Exact integer arithmetic
+/// makes this bit-identical to
+/// [`super::sliding2d::conv2d_sliding_q8_raw_ctx`].
+pub fn conv2d_im2col_q8_raw_ctx(
+    x: &TensorT<i8>,
+    w: &TensorT<i8>,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> TensorT<i32> {
+    assert_eq!(x.rank(), 4);
+    assert_eq!(w.rank(), 4);
+    let (n, c_in, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (c_out, c_in_g, kh, kw) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+    let g = p.groups;
+    assert!(g >= 1 && c_in % g == 0 && c_out % g == 0, "bad groups {g}");
+    assert_eq!(c_in / g, c_in_g);
+    assert!(
+        c_in_g * kh * kw <= crate::kernels::rowconv::Q8_MAX_TAPS,
+        "int8 conv with {} taps could overflow the i32 accumulator",
+        c_in_g * kh * kw
+    );
+    let (oh, ow) = p.out_size(h, win, kh, kw);
+    let (c_out_g, ohw) = (c_out / g, oh * ow);
+    let kdim = c_in_g * kh * kw;
+
+    let mut out = TensorT::<i32>::zeros(&[n, c_out, oh, ow]);
+    let ws = w.as_slice();
+    ctx.par_chunks_with(
+        out.as_mut_slice(),
+        c_out_g * ohw,
+        || ctx.take_elems_unfilled::<i8>(kdim * ohw),
+        |item, cblk, col| {
+            let (ni, grp) = (item / g, item % g);
+            im2col_plane(x, ni, grp * c_in_g, c_in_g, kh, kw, p, oh, ow, col);
+            let wmat = &ws[grp * c_out_g * kdim..(grp + 1) * c_out_g * kdim];
+            gemm_q8(c_out_g, kdim, ohw, wmat, col, cblk);
+        },
+        |col| ctx.put_elems(col),
+    );
+    out
+}
+
+/// [`conv2d_im2col_q8_raw_ctx`] with dequantized `f32` output
+/// (`· x_scale · w_scale`, plus the f32 `bias`). Both quantizations
+/// must be symmetric.
+pub fn conv2d_im2col_q8_ctx(
+    x: &TensorT<i8>,
+    xq: QuantParams,
+    w: &TensorT<i8>,
+    wq: QuantParams,
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
+    if let Some(b) = bias {
+        assert_eq!(b.len(), w.dim(0), "bias length");
+    }
+    let raw = conv2d_im2col_q8_raw_ctx(x, w, p, ctx);
+    dequantize_conv_acc(&raw, xq, wq, bias)
 }
 
 #[cfg(test)]

@@ -23,6 +23,18 @@
 //! padded/scratch/column buffers come from its reusable arena instead of
 //! per-call `vec![0.0; …]`. The plain functions are single-threaded
 //! wrappers that build a throwaway ctx.
+//!
+//! Every sliding primitive also has reduced-precision variants — the
+//! dtype dimension the element layer ([`crate::tensor::Element`]) makes
+//! uniform: `_q8` (int8 codes, exact i32 accumulation, symmetric
+//! [`crate::tensor::QuantParams`]) for `rowconv`/`sliding1d`/
+//! `sliding2d`/`pool`, `_bf16` (bfloat16 storage, f32 accumulation) for
+//! the same, plus an int8 `im2col`+GEMM baseline
+//! ([`im2col::conv2d_im2col_q8_raw_ctx`] over [`gemm::gemm_q8`]) so the
+//! quantized speedup comparison stays honest. The f32-boundary wrappers
+//! [`conv2d_q8_ctx`] / [`conv2d_bf16_ctx`] quantize/round on the way in
+//! and dequantize/widen on the way out — what the nn layers call when
+//! the ctx's [`crate::tensor::Dtype`] asks for reduced precision.
 
 pub mod direct;
 pub mod gemm;
@@ -33,8 +45,13 @@ pub mod sliding2d;
 pub mod pool;
 pub mod dispatch;
 
-pub use dispatch::{conv1d, conv1d_ctx, conv2d, conv2d_ctx, ConvAlgo};
-pub use pool::{avg_pool2d, avg_pool2d_ctx, max_pool2d, max_pool2d_ctx, PoolParams};
+pub use dispatch::{
+    conv1d, conv1d_ctx, conv2d, conv2d_bf16_ctx, conv2d_ctx, conv2d_q8_ctx, ConvAlgo,
+};
+pub use pool::{
+    avg_pool2d, avg_pool2d_bf16_ctx, avg_pool2d_ctx, max_pool2d, max_pool2d_bf16_ctx,
+    max_pool2d_ctx, max_pool2d_q8_ctx, PoolParams,
+};
 
 /// Hyper-parameters of a 2-D convolution (dilation fixed at 1, as in the
 /// paper).

@@ -12,7 +12,7 @@
 
 use crate::exec::ExecCtx;
 use crate::simd::{slide_dyn, F32xL, LANES};
-use crate::tensor::{pad2d_into, padded2d_size, Tensor};
+use crate::tensor::{pad2d_into, padded2d_size, Bf16, Tensor, TensorT};
 
 /// Pooling hyper-parameters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -223,6 +223,149 @@ pub fn avg_pool2d_ctx(x: &Tensor, p: &PoolParams, ctx: &ExecCtx) -> Tensor {
     y
 }
 
+/// Quantized int8 max pooling: i8 codes in, i8 codes out, same
+/// [`PoolParams`] contract as [`max_pool2d_ctx`].
+///
+/// `max` commutes with any monotone code mapping (the affine dequant
+/// has positive scale), so pooling the **codes** is exactly pooling the
+/// reals — no dequantize/requantize round-trip, no accumulator, and the
+/// quantization parameters pass through unchanged. Padding is
+/// `i8::MIN` (the code-domain −∞). The horizontal window runs a simple
+/// `O(k)` max per output (`vpmaxsb` saturates the port width without a
+/// log-step ladder at these window sizes); planes fan out over the
+/// ctx's threads with per-worker arena scratch like every other kernel.
+pub fn max_pool2d_q8_ctx(x: &TensorT<i8>, p: &PoolParams, ctx: &ExecCtx) -> TensorT<i8> {
+    assert_eq!(x.rank(), 4, "pooling expects NCHW");
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (kh, kw) = p.k;
+    let (oh, ow) = p.out_size(h, w);
+    let (sh, sw) = p.stride;
+    let ow1 = w + 2 * p.pad.1 - kw + 1;
+
+    let (hp, wp) = padded2d_size(h, w, p.pad.0, p.pad.1, 0);
+    let mut padded: Vec<i8> = ctx.take_elems(n * c * hp * wp, i8::MIN);
+    pad2d_into(x, p.pad.0, p.pad.1, 0, &mut padded);
+
+    let mut out = TensorT::<i8>::zeros(&[n, c, oh, ow]);
+    let padded_ref: &[i8] = &padded;
+    ctx.par_chunks_with(
+        out.as_mut_slice(),
+        oh * ow,
+        || (ctx.take_elems_unfilled::<i8>(hp * ow1), ctx.take_elems_unfilled::<i8>(ow1)),
+        |item, oplane, (hrows, acc)| {
+            let plane = &padded_ref[item * hp * wp..(item + 1) * hp * wp];
+            for iy in 0..hp {
+                let src = &plane[iy * wp..iy * wp + wp];
+                for (ox, d) in hrows[iy * ow1..(iy + 1) * ow1].iter_mut().enumerate() {
+                    *d = src[ox..ox + kw].iter().copied().max().expect("kw >= 1");
+                }
+            }
+            for oy in 0..oh {
+                let iy0 = oy * sh;
+                acc.copy_from_slice(&hrows[iy0 * ow1..(iy0 + 1) * ow1]);
+                for ky in 1..kh {
+                    let row = &hrows[(iy0 + ky) * ow1..(iy0 + ky + 1) * ow1];
+                    for (a, &r) in acc.iter_mut().zip(row.iter()) {
+                        *a = (*a).max(r);
+                    }
+                }
+                let orow = &mut oplane[oy * ow..oy * ow + ow];
+                for (ox, v) in orow.iter_mut().enumerate() {
+                    *v = acc[ox * sw];
+                }
+            }
+        },
+        |(hrows, acc)| {
+            ctx.put_elems(hrows);
+            ctx.put_elems(acc);
+        },
+    );
+    ctx.put_elems(padded);
+    out
+}
+
+/// Shared bf16 2-D pooling skeleton: bf16 storage traffic, f32
+/// combine. Each padded row widens into a per-worker f32 buffer, the
+/// f32 log-step [`sliding_combine_row`] runs unchanged (the "shared
+/// structure" of the paper's pooling argument), and outputs round back
+/// to bf16.
+fn pool2d_sliding_bf16(
+    x: &TensorT<Bf16>,
+    p: &PoolParams,
+    op: Combine,
+    ctx: &ExecCtx,
+) -> TensorT<Bf16> {
+    assert_eq!(x.rank(), 4, "pooling expects NCHW");
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (kh, kw) = p.k;
+    let (oh, ow) = p.out_size(h, w);
+    let (sh, sw) = p.stride;
+    let ow1 = w + 2 * p.pad.1 - kw + 1;
+
+    let (hp, wp) = padded2d_size(h, w, p.pad.0, p.pad.1, 3 * LANES + kw);
+    let mut padded: Vec<Bf16> = ctx.take_elems(n * c * hp * wp, Bf16::from_f32(op.identity()));
+    pad2d_into(x, p.pad.0, p.pad.1, 3 * LANES + kw, &mut padded);
+
+    let mut out = TensorT::<Bf16>::zeros(&[n, c, oh, ow]);
+    let padded_ref: &[Bf16] = &padded;
+    ctx.par_chunks_with(
+        out.as_mut_slice(),
+        oh * ow,
+        || {
+            (
+                ctx.take_elems_unfilled::<f32>(wp),
+                ctx.take_elems_unfilled::<f32>(hp * ow1),
+                ctx.take_elems_unfilled::<f32>(ow1),
+            )
+        },
+        |item, oplane, (rowf, hrows, acc)| {
+            let plane = &padded_ref[item * hp * wp..(item + 1) * hp * wp];
+            for iy in 0..hp {
+                for (d, s) in rowf.iter_mut().zip(&plane[iy * wp..(iy + 1) * wp]) {
+                    *d = s.to_f32();
+                }
+                sliding_combine_row(rowf, kw, &mut hrows[iy * ow1..(iy + 1) * ow1], ow1, op);
+            }
+            for oy in 0..oh {
+                let iy0 = oy * sh;
+                acc.copy_from_slice(&hrows[iy0 * ow1..(iy0 + 1) * ow1]);
+                for ky in 1..kh {
+                    let row = &hrows[(iy0 + ky) * ow1..(iy0 + ky + 1) * ow1];
+                    for (a, &r) in acc.iter_mut().zip(row.iter()) {
+                        *a = op.scalar(*a, r);
+                    }
+                }
+                let inv = match op {
+                    Combine::Sum => 1.0 / (kh * kw) as f32,
+                    Combine::Max => 1.0,
+                };
+                let orow = &mut oplane[oy * ow..oy * ow + ow];
+                for (ox, v) in orow.iter_mut().enumerate() {
+                    *v = Bf16::from_f32(acc[ox * sw] * inv);
+                }
+            }
+        },
+        |(rowf, hrows, acc)| {
+            ctx.put_elems(rowf);
+            ctx.put_elems(hrows);
+            ctx.put_elems(acc);
+        },
+    );
+    ctx.put_elems(padded);
+    out
+}
+
+/// bfloat16 max pooling (bf16 in/out, f32 combine).
+pub fn max_pool2d_bf16_ctx(x: &TensorT<Bf16>, p: &PoolParams, ctx: &ExecCtx) -> TensorT<Bf16> {
+    pool2d_sliding_bf16(x, p, Combine::Max, ctx)
+}
+
+/// bfloat16 average pooling (bf16 in/out, f32 sum then scale,
+/// `count_include_pad = true` like [`avg_pool2d_ctx`]).
+pub fn avg_pool2d_bf16_ctx(x: &TensorT<Bf16>, p: &PoolParams, ctx: &ExecCtx) -> TensorT<Bf16> {
+    pool2d_sliding_bf16(x, p, Combine::Sum, ctx)
+}
+
 /// Naïve max pooling — baseline + oracle.
 pub fn max_pool2d_naive(x: &Tensor, p: &PoolParams) -> Tensor {
     pool2d_naive(x, p, Combine::Max)
@@ -347,6 +490,39 @@ mod tests {
         assert!((y.as_slice()[0] - 7.5).abs() < 1e-6);
         let m = max_pool2d(&x, &PoolParams::square(4));
         assert_eq!(m.as_slice()[0], 15.0);
+    }
+
+    #[test]
+    fn q8_max_pool_commutes_with_quantization() {
+        use crate::tensor::{quantize, QuantParams};
+        let ctx = ExecCtx::default();
+        for p in [
+            PoolParams::with_stride(3, 1),
+            PoolParams::square(2),
+            PoolParams { k: (3, 3), stride: (1, 1), pad: (1, 1) },
+        ] {
+            let x = Tensor::randn(&[1, 2, 11, 13], 900);
+            let q = QuantParams::for_tensor(&x);
+            // max over codes == codes of max: quantization is monotone.
+            let got = max_pool2d_q8_ctx(&quantize(&x, q), &p, &ctx);
+            let want = quantize(&max_pool2d_naive(&x, &p), q);
+            assert_eq!(got.as_slice(), want.as_slice(), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn bf16_pools_track_f32_within_storage_rounding() {
+        use crate::tensor::{from_bf16, to_bf16};
+        let ctx = ExecCtx::default();
+        let x = Tensor::randn(&[1, 2, 12, 12], 901);
+        for p in [PoolParams::with_stride(3, 1), PoolParams::square(2)] {
+            let m = from_bf16(&max_pool2d_bf16_ctx(&to_bf16(&x), &p, &ctx));
+            let mf = max_pool2d_naive(&x, &p);
+            assert!(m.max_abs_diff(&mf) <= mf.max_abs() / 128.0, "max {p:?}");
+            let a = from_bf16(&avg_pool2d_bf16_ctx(&to_bf16(&x), &p, &ctx));
+            let af = avg_pool2d_naive(&x, &p);
+            assert!(a.max_abs_diff(&af) <= af.max_abs() / 64.0 + 0.02, "avg {p:?}");
+        }
     }
 
     #[test]

@@ -24,6 +24,13 @@
 //!   k=5 with compile-time slides, "custom kernels with optimal number of
 //!   operations".
 //!
+//! Plus the reduced-precision members of the family (the paper's closing
+//! low-memory-devices argument): [`row_conv_q8`] — int8 codes with an
+//! exact i32 accumulator — and [`row_conv_bf16`] — bf16 storage with f32
+//! accumulation. Both stream the padded row with the same no-`im2col`
+//! access pattern; neither has a register-pair width constraint, so one
+//! kernel each covers every filter width.
+//!
 //! SAFETY CONTRACT (checked by `debug_assert!`): callers must pad `src` so
 //! that `src[out_len - 1 + k - 1 + 2*LANES]` is readable; `pad2d`/`pad_row`
 //! with `slack = 2*LANES + k` guarantees this. (The row tail is handled by
@@ -39,6 +46,15 @@ pub const GENERIC_MAX_K: usize = LANES + 1;
 
 /// Largest filter width the compound kernel supports (8 registers).
 pub const COMPOUND_MAX_K: usize = 7 * LANES + 1;
+
+/// Largest total tap count (`c_in/groups · kh · kw`) whose int8
+/// convolution accumulator provably cannot overflow i32: each tap
+/// contributes at most `128 · 128` in magnitude (`-128` codes can
+/// appear through saturating quantization), so `i32::MAX / 128²` ≈
+/// 131k taps are always safe — e.g. every `c_in ≤ 453` network at
+/// k = 17. The conv-level `_q8` entry points assert this bound so
+/// overflow is loud rather than a silent wrap.
+pub const Q8_MAX_TAPS: usize = i32::MAX as usize / (128 * 128);
 
 #[inline(always)]
 fn src_ok(src: &[f32], out_len: usize, k: usize) -> bool {
@@ -197,6 +213,108 @@ pub fn row_conv_custom5(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize)
         acc = w4.mul_add(slide::<4>(a, b), acc);
         acc
     });
+}
+
+/// Quantized int8 row convolution: `dst[i] += Σ_j w[j] · src[i + j]`
+/// with i8 codes and an exact i32 accumulator.
+///
+/// This is the `_q8` member of the row-kernel family. Integer MACs have
+/// no register-pair slide constraint, so one kernel covers **every**
+/// filter width (no generic/compound split): the inner loop widens
+/// `i8 → i32` and accumulates a `LANES`-wide block of outputs per tap,
+/// which LLVM autovectorizes (`vpmovsxbd` + `vpmulld`/`vpmaddwd`-class
+/// code with `-C target-cpu=native`). The sliding property is the same
+/// as in f32 — the padded row is streamed once per tap with **no
+/// im2col materialisation** — which is where the int8 speedup over the
+/// int8 GEMM baseline comes from.
+///
+/// The caller quantizes symmetrically (`zero_point == 0` for both
+/// operands — see [`crate::tensor::QuantParams`]), so zero padding is
+/// the code 0 and no zero-point correction term is needed. Because the
+/// accumulator is exact, this kernel and the int8 im2col+GEMM baseline
+/// agree **bit for bit** (the kernel-equivalence suite asserts it).
+///
+/// `src` must be padded like the f32 kernels' rows (`2·LANES + k` right
+/// slack).
+///
+/// The i32 accumulator is exact only while the convolution's total tap
+/// count stays at or below [`Q8_MAX_TAPS`]; the conv-level q8 entry
+/// points assert that bound, so overflow is loud rather than a silent
+/// wrap.
+#[inline]
+pub fn row_conv_q8(src: &[i8], w: &[i8], dst: &mut [i32], out_len: usize) {
+    let k = w.len();
+    debug_assert!(k >= 1, "empty filter");
+    debug_assert!(
+        out_len == 0 || src.len() >= out_len - 1 + k - 1 + LANES + 1,
+        "source row under-padded"
+    );
+    debug_assert!(dst.len() >= out_len);
+    let mut x = 0;
+    while x + LANES <= out_len {
+        let mut acc = [0i32; LANES];
+        for (j, &wj) in w.iter().enumerate() {
+            let wv = wj as i32;
+            let win = &src[x + j..x + j + LANES];
+            for (a, &s) in acc.iter_mut().zip(win) {
+                *a += wv * s as i32;
+            }
+        }
+        for (d, a) in dst[x..x + LANES].iter_mut().zip(acc) {
+            *d += a;
+        }
+        x += LANES;
+    }
+    for (i, d) in dst[x..out_len].iter_mut().enumerate() {
+        let mut acc = 0i32;
+        for (j, &wj) in w.iter().enumerate() {
+            acc += wj as i32 * src[x + i + j] as i32;
+        }
+        *d += acc;
+    }
+}
+
+/// bfloat16 row convolution: bf16 storage, f32 accumulation.
+///
+/// The `_bf16` member of the row-kernel family: the source row is bf16
+/// (half the memory traffic of f32), each load widens to f32 with a
+/// 16-bit shift, and the weight row arrives pre-widened to f32 (one
+/// conversion per convolution, not per row). Accumulation is ordinary
+/// f32, so the result differs from the f32 kernel only by the storage
+/// rounding of the inputs. Like the int8 kernel there is no register
+/// width constraint, so one kernel covers every filter width.
+///
+/// `src` must be padded like the f32 kernels' rows.
+#[inline]
+pub fn row_conv_bf16(src: &[crate::tensor::Bf16], w: &[f32], dst: &mut [f32], out_len: usize) {
+    let k = w.len();
+    debug_assert!(k >= 1, "empty filter");
+    debug_assert!(
+        out_len == 0 || src.len() >= out_len - 1 + k - 1 + LANES + 1,
+        "source row under-padded"
+    );
+    debug_assert!(dst.len() >= out_len);
+    let mut x = 0;
+    while x + LANES <= out_len {
+        let mut acc = [0.0f32; LANES];
+        for (j, &wj) in w.iter().enumerate() {
+            let win = &src[x + j..x + j + LANES];
+            for (a, s) in acc.iter_mut().zip(win) {
+                *a += wj * s.to_f32();
+            }
+        }
+        for (d, a) in dst[x..x + LANES].iter_mut().zip(acc) {
+            *d += a;
+        }
+        x += LANES;
+    }
+    for (i, d) in dst[x..out_len].iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for (j, &wj) in w.iter().enumerate() {
+            acc += wj * src[x + i + j].to_f32();
+        }
+        *d += acc;
+    }
 }
 
 /// Pick the fastest row kernel for filter width `k` — the paper's §2
@@ -387,6 +505,60 @@ mod tests {
         let src = vec![0.0; 64];
         let mut dst: Vec<f32> = vec![];
         row_conv_generic(&src, &[1.0, 2.0], &mut dst, 0);
+    }
+
+    #[test]
+    fn q8_matches_scalar_reference_exactly() {
+        for (k, out_len) in [(1usize, 40usize), (3, 100), (5, 33), (17, 50), (18, 50), (64, 20)] {
+            let mut rng = XorShiftRng::new(7000 + k as u64);
+            let raw: Vec<i8> =
+                (0..out_len + k - 1).map(|_| rng.uniform(-127.0, 127.0) as i8).collect();
+            let w: Vec<i8> = (0..k).map(|_| rng.uniform(-127.0, 127.0) as i8).collect();
+            let src = pad_row(&raw, 0, 2 * LANES + k, 0i8);
+            let mut dst = vec![5i32; out_len];
+            row_conv_q8(&src, &w, &mut dst, out_len);
+            for i in 0..out_len {
+                let want: i32 = 5 + w
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &wj)| wj as i32 * src[i + j] as i32)
+                    .sum::<i32>();
+                assert_eq!(dst[i], want, "k={k} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_matches_f32_on_exactly_representable_inputs() {
+        use crate::tensor::Bf16;
+        // Small integers are exactly representable in bf16, so the bf16
+        // row kernel must agree with the f32 reference exactly.
+        for (k, out_len) in [(3usize, 40usize), (9, 50), (33, 20)] {
+            let mut rng = XorShiftRng::new(8000 + k as u64);
+            let raw: Vec<f32> =
+                (0..out_len + k - 1).map(|_| rng.uniform(-8.0, 8.0).round()).collect();
+            let w: Vec<f32> = (0..k).map(|_| rng.uniform(-4.0, 4.0).round()).collect();
+            let srcf = pad_row(&raw, 0, 2 * LANES + k, 0.0f32);
+            let src: Vec<Bf16> = srcf.iter().map(|&v| Bf16::from_f32(v)).collect();
+            let mut dst = vec![0.0f32; out_len];
+            row_conv_bf16(&src, &w, &mut dst, out_len);
+            let expect = ref_conv(&srcf, &w, out_len);
+            for i in 0..out_len {
+                assert!(
+                    (dst[i] - expect[i]).abs() < 1e-3,
+                    "k={k} i={i}: {} vs {}",
+                    dst[i],
+                    expect[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn q8_zero_out_len_is_noop() {
+        let src = vec![0i8; 64];
+        let mut dst: Vec<i32> = vec![];
+        row_conv_q8(&src, &[1, 2], &mut dst, 0);
     }
 
     #[test]

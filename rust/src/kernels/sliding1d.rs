@@ -3,11 +3,11 @@
 //! precursor, arXiv:2305.16513, whose ~log(k) speedup §2 recalls).
 
 use super::direct::conv1d_direct_ctx;
-use super::rowconv::{row_conv_auto, COMPOUND_MAX_K};
+use super::rowconv::{row_conv_auto, row_conv_bf16, row_conv_q8, COMPOUND_MAX_K};
 use super::Conv1dParams;
 use crate::exec::ExecCtx;
 use crate::simd::{slide_dyn, F32xL, LANES};
-use crate::tensor::{pad_row, pad_row_into, Tensor};
+use crate::tensor::{pad_row, pad_row_into, Bf16, QuantParams, Tensor, TensorT};
 
 /// 1-D convolution via the Vector Slide kernels.
 ///
@@ -87,6 +87,140 @@ pub fn conv1d_sliding_ctx(
         |scratch| ctx.put(scratch),
     );
     ctx.put(padded);
+    out
+}
+
+/// Quantized int8 1-D sliding convolution, raw i32 accumulator output
+/// (`x` — `[c_in, l]` codes, `w` — `[c_out, c_in, k]` codes, both
+/// symmetric). Mirrors [`conv1d_sliding_ctx`]'s pad-once / fan-out
+/// structure with [`row_conv_q8`] rows; every width is supported (no
+/// direct fallback needed).
+pub fn conv1d_sliding_q8_raw_ctx(
+    x: &TensorT<i8>,
+    w: &TensorT<i8>,
+    p: &Conv1dParams,
+    ctx: &ExecCtx,
+) -> TensorT<i32> {
+    assert_eq!(x.rank(), 2, "input must be [c, l]");
+    assert_eq!(w.rank(), 3, "weights must be [cout, cin, k]");
+    let (c_in, l) = (x.dim(0), x.dim(1));
+    let (c_out, c_in_w, k) = (w.dim(0), w.dim(1), w.dim(2));
+    assert_eq!(c_in, c_in_w, "c_in mismatch");
+    assert!(
+        c_in * k <= crate::kernels::rowconv::Q8_MAX_TAPS,
+        "int8 conv with {} taps could overflow the i32 accumulator",
+        c_in * k
+    );
+    let lo = p.out_len(l, k);
+    let lo1 = l + 2 * p.pad - k + 1;
+
+    let lp = l + 2 * p.pad + 2 * LANES + k;
+    let mut padded: Vec<i8> = ctx.take_elems(c_in * lp, 0i8);
+    let xs = x.as_slice();
+    for ci in 0..c_in {
+        pad_row_into(&xs[ci * l..(ci + 1) * l], p.pad, &mut padded[ci * lp..(ci + 1) * lp]);
+    }
+
+    let ws = w.as_slice();
+    let mut out = TensorT::<i32>::zeros(&[c_out, lo]);
+    let padded_ref: &[i8] = &padded;
+    ctx.par_chunks_with(
+        out.as_mut_slice(),
+        lo,
+        || ctx.take_elems_unfilled::<i32>(lo1),
+        |co, orow, scratch| {
+            scratch.fill(0);
+            for ci in 0..c_in {
+                let wrow = &ws[(co * c_in + ci) * k..(co * c_in + ci + 1) * k];
+                row_conv_q8(&padded_ref[ci * lp..], wrow, scratch, lo1);
+            }
+            if p.stride == 1 {
+                orow.copy_from_slice(&scratch[..lo]);
+            } else {
+                for (o, v) in orow.iter_mut().enumerate() {
+                    *v = scratch[o * p.stride];
+                }
+            }
+        },
+        |scratch| ctx.put_elems(scratch),
+    );
+    ctx.put_elems(padded);
+    out
+}
+
+/// [`conv1d_sliding_q8_raw_ctx`] with dequantized `f32` output
+/// (`· x_scale · w_scale` + per-channel `bias`, through the dequant
+/// shared with the 2-D paths). Both quantizations must be symmetric.
+pub fn conv1d_sliding_q8_ctx(
+    x: &TensorT<i8>,
+    xq: QuantParams,
+    w: &TensorT<i8>,
+    wq: QuantParams,
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
+    if let Some(b) = bias {
+        assert_eq!(b.len(), w.dim(0), "bias length");
+    }
+    let raw = conv1d_sliding_q8_raw_ctx(x, w, p, ctx);
+    super::sliding2d::dequantize_conv_acc(&raw, xq, wq, bias)
+}
+
+/// bfloat16 1-D sliding convolution: bf16 storage in and out, f32
+/// accumulation ([`row_conv_bf16`]; weights widened to f32 once per
+/// call). Mirrors [`conv1d_sliding_ctx`].
+pub fn conv1d_sliding_bf16_ctx(
+    x: &TensorT<Bf16>,
+    w: &TensorT<Bf16>,
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    ctx: &ExecCtx,
+) -> TensorT<Bf16> {
+    assert_eq!(x.rank(), 2, "input must be [c, l]");
+    assert_eq!(w.rank(), 3, "weights must be [cout, cin, k]");
+    let (c_in, l) = (x.dim(0), x.dim(1));
+    let (c_out, c_in_w, k) = (w.dim(0), w.dim(1), w.dim(2));
+    assert_eq!(c_in, c_in_w, "c_in mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), c_out, "bias length");
+    }
+    let lo = p.out_len(l, k);
+    let lo1 = l + 2 * p.pad - k + 1;
+
+    let lp = l + 2 * p.pad + 2 * LANES + k;
+    let mut padded: Vec<Bf16> = ctx.take_elems(c_in * lp, Bf16::ZERO);
+    let xs = x.as_slice();
+    for ci in 0..c_in {
+        pad_row_into(&xs[ci * l..(ci + 1) * l], p.pad, &mut padded[ci * lp..(ci + 1) * lp]);
+    }
+    let mut wf: Vec<f32> = ctx.take_elems_unfilled(w.numel());
+    for (d, s) in wf.iter_mut().zip(w.as_slice()) {
+        *d = s.to_f32();
+    }
+
+    let mut out = TensorT::<Bf16>::zeros(&[c_out, lo]);
+    let padded_ref: &[Bf16] = &padded;
+    let wf_ref: &[f32] = &wf;
+    ctx.par_chunks_with(
+        out.as_mut_slice(),
+        lo,
+        || ctx.take_elems_unfilled::<f32>(lo1),
+        |co, orow, scratch| {
+            let b = bias.map_or(0.0, |b| b[co]);
+            scratch.fill(b);
+            for ci in 0..c_in {
+                let wrow = &wf_ref[(co * c_in + ci) * k..(co * c_in + ci + 1) * k];
+                row_conv_bf16(&padded_ref[ci * lp..], wrow, scratch, lo1);
+            }
+            for (o, v) in orow.iter_mut().enumerate() {
+                *v = Bf16::from_f32(scratch[if p.stride == 1 { o } else { o * p.stride }]);
+            }
+        },
+        |scratch| ctx.put_elems(scratch),
+    );
+    ctx.put_elems(wf);
+    ctx.put_elems(padded);
     out
 }
 

@@ -21,11 +21,14 @@
 //!   kernel beats the in-vector one).
 
 use super::direct::conv2d_direct_ctx;
-use super::rowconv::{row_conv_compound, row_conv_generic, COMPOUND_MAX_K, GENERIC_MAX_K};
+use super::rowconv::{
+    row_conv_bf16, row_conv_compound, row_conv_generic, row_conv_q8, COMPOUND_MAX_K,
+    GENERIC_MAX_K, Q8_MAX_TAPS,
+};
 use super::Conv2dParams;
 use crate::exec::ExecCtx;
 use crate::simd::LANES;
-use crate::tensor::{pad2d_into, padded2d_size, Tensor};
+use crate::tensor::{pad2d_into, padded2d_size, Bf16, QuantParams, Tensor, TensorT};
 
 /// Which row kernel the 2-D sliding convolution uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -163,6 +166,224 @@ pub fn conv2d_sliding_ctx(
         |scratch| ctx.put(scratch),
     );
     ctx.put(padded);
+    out
+}
+
+/// Validate the shared NCHW/weight geometry and return
+/// `(n, c_in, h, w, c_out, c_in_g, kh, kw)`.
+fn conv2d_geometry<A: crate::tensor::Element, B: crate::tensor::Element>(
+    x: &TensorT<A>,
+    w: &TensorT<B>,
+    p: &Conv2dParams,
+) -> (usize, usize, usize, usize, usize, usize, usize, usize) {
+    assert_eq!(x.rank(), 4, "input must be NCHW");
+    assert_eq!(w.rank(), 4, "weights must be [cout, cin/g, kh, kw]");
+    let (n, c_in, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (c_out, c_in_g, kh, kw) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+    let g = p.groups;
+    assert!(g >= 1 && c_in % g == 0 && c_out % g == 0, "bad groups {g}");
+    assert_eq!(c_in / g, c_in_g, "weight c_in/{g} mismatch");
+    (n, c_in, h, win, c_out, c_in_g, kh, kw)
+}
+
+/// Quantized int8 2-D sliding convolution, **raw accumulator** output.
+///
+/// `x` and `w` hold i8 codes under *symmetric* per-tensor quantization
+/// (the caller's [`QuantParams`] with `zero_point == 0`; zero padding is
+/// then the code 0). The output is the exact i32 accumulator
+/// `Σ x_code · w_code` per tap — dequantize with
+/// `x_scale · w_scale` (see [`conv2d_sliding_q8_ctx`]). Because the
+/// accumulation is exact integer arithmetic, this agrees **bit for
+/// bit** with the int8 im2col+GEMM baseline
+/// ([`super::im2col::conv2d_im2col_q8_raw_ctx`]) — the speedup
+/// comparison between the two is purely about memory access pattern.
+///
+/// Same parallel/scratch structure as [`conv2d_sliding_ctx`]: the i8
+/// padded input and the per-worker i32 row accumulator come from the
+/// ctx's (dtype-generic) arena; output planes fan out over its threads.
+/// [`row_conv_q8`] covers every filter width, so there is no variant
+/// parameter and no direct fallback.
+pub fn conv2d_sliding_q8_raw_ctx(
+    x: &TensorT<i8>,
+    w: &TensorT<i8>,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> TensorT<i32> {
+    let (n, c_in, h, win, c_out, c_in_g, kh, kw) = conv2d_geometry(x, w, p);
+    assert!(
+        c_in_g * kh * kw <= Q8_MAX_TAPS,
+        "int8 conv with {} taps could overflow the i32 accumulator (max {Q8_MAX_TAPS})",
+        c_in_g * kh * kw
+    );
+    let (oh, ow) = p.out_size(h, win, kh, kw);
+    let (sh, sw) = p.stride;
+    let ow1 = win + 2 * p.pad.1 - kw + 1;
+
+    let (hp, wp) = padded2d_size(h, win, p.pad.0, p.pad.1, 2 * LANES + kw);
+    let mut padded: Vec<i8> = ctx.take_elems(n * c_in * hp * wp, 0i8);
+    pad2d_into(x, p.pad.0, p.pad.1, 2 * LANES + kw, &mut padded);
+
+    let ws = w.as_slice();
+    let c_out_g = c_out / p.groups;
+    let mut out = TensorT::<i32>::zeros(&[n, c_out, oh, ow]);
+    let padded_ref: &[i8] = &padded;
+    ctx.par_chunks_with(
+        out.as_mut_slice(),
+        oh * ow,
+        || ctx.take_elems_unfilled::<i32>(ow1),
+        |item, oplane, scratch| {
+            let (ni, co) = (item / c_out, item % c_out);
+            let grp = co / c_out_g;
+            for oy in 0..oh {
+                let iy0 = oy * sh;
+                scratch.fill(0);
+                for cig in 0..c_in_g {
+                    let ci = grp * c_in_g + cig;
+                    let plane =
+                        &padded_ref[(ni * c_in + ci) * hp * wp..(ni * c_in + ci + 1) * hp * wp];
+                    for ky in 0..kh {
+                        let src = &plane[(iy0 + ky) * wp..];
+                        let wrow = &ws[((co * c_in_g + cig) * kh + ky) * kw..][..kw];
+                        row_conv_q8(src, wrow, scratch, ow1);
+                    }
+                }
+                let orow = &mut oplane[oy * ow..oy * ow + ow];
+                if sw == 1 {
+                    orow.copy_from_slice(&scratch[..ow]);
+                } else {
+                    for (ox, v) in orow.iter_mut().enumerate() {
+                        *v = scratch[ox * sw];
+                    }
+                }
+            }
+        },
+        |scratch| ctx.put_elems(scratch),
+    );
+    ctx.put_elems(padded);
+    out
+}
+
+/// Dequantize a raw i32 convolution accumulator:
+/// `out = raw · (x_scale · w_scale) + bias`, shared by every int8 path
+/// — 2-D sliding, 2-D im2col and 1-D sliding — so their f32 outputs
+/// agree exactly too. Accepts the two conv output layouts:
+/// `[n, c_out, oh, ow]` (rank 4) and `[c_out, lo]` (rank 2).
+pub(crate) fn dequantize_conv_acc(
+    raw: &TensorT<i32>,
+    xq: QuantParams,
+    wq: QuantParams,
+    bias: Option<&[f32]>,
+) -> Tensor {
+    assert!(
+        xq.is_symmetric() && wq.is_symmetric(),
+        "int8 conv kernels require symmetric quantization (zero_point == 0)"
+    );
+    let scale = xq.scale * wq.scale;
+    let (c_out, inner) = match raw.rank() {
+        4 => (raw.dim(1), raw.dim(2) * raw.dim(3)),
+        2 => (raw.dim(0), raw.dim(1)),
+        r => panic!("dequantize_conv_acc expects a rank-4 or rank-2 accumulator, got rank {r}"),
+    };
+    let mut out = Tensor::zeros(raw.dims());
+    let rs = raw.as_slice();
+    for (i, (o, &r)) in out.as_mut_slice().iter_mut().zip(rs).enumerate() {
+        let b = bias.map_or(0.0, |b| b[(i / inner) % c_out]);
+        *o = r as f32 * scale + b;
+    }
+    out
+}
+
+/// Quantized int8 2-D sliding convolution with dequantized `f32`
+/// output: [`conv2d_sliding_q8_raw_ctx`] followed by the shared
+/// per-tensor dequant (`· x_scale · w_scale`, plus the f32 `bias`).
+///
+/// Both quantizations must be symmetric ([`QuantParams::is_symmetric`]).
+pub fn conv2d_sliding_q8_ctx(
+    x: &TensorT<i8>,
+    xq: QuantParams,
+    w: &TensorT<i8>,
+    wq: QuantParams,
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
+    if let Some(b) = bias {
+        assert_eq!(b.len(), w.dim(0), "bias length");
+    }
+    let raw = conv2d_sliding_q8_raw_ctx(x, w, p, ctx);
+    dequantize_conv_acc(&raw, xq, wq, bias)
+}
+
+/// bfloat16 2-D sliding convolution: bf16 storage in and out, f32
+/// accumulation inside ([`row_conv_bf16`]).
+///
+/// The padded input stays bf16 (half the streaming traffic of the f32
+/// kernel); the weight tensor is widened to f32 once per call into
+/// arena scratch; the per-worker row accumulator is f32; each output
+/// value rounds back to bf16 storage. Covers every filter width (no
+/// register-pair constraint), same parallel structure as
+/// [`conv2d_sliding_ctx`].
+pub fn conv2d_sliding_bf16_ctx(
+    x: &TensorT<Bf16>,
+    w: &TensorT<Bf16>,
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> TensorT<Bf16> {
+    let (n, c_in, h, win, c_out, c_in_g, kh, kw) = conv2d_geometry(x, w, p);
+    if let Some(b) = bias {
+        assert_eq!(b.len(), c_out, "bias length");
+    }
+    let (oh, ow) = p.out_size(h, win, kh, kw);
+    let (sh, sw) = p.stride;
+    let ow1 = win + 2 * p.pad.1 - kw + 1;
+
+    let (hp, wp) = padded2d_size(h, win, p.pad.0, p.pad.1, 2 * LANES + kw);
+    let mut padded: Vec<Bf16> = ctx.take_elems(n * c_in * hp * wp, Bf16::ZERO);
+    pad2d_into(x, p.pad.0, p.pad.1, 2 * LANES + kw, &mut padded);
+
+    // Widen the weights once per conv (they are small and reused by
+    // every output plane).
+    let mut wf: Vec<f32> = ctx.take_elems_unfilled(w.numel());
+    for (d, s) in wf.iter_mut().zip(w.as_slice()) {
+        *d = s.to_f32();
+    }
+
+    let c_out_g = c_out / p.groups;
+    let mut out = TensorT::<Bf16>::zeros(&[n, c_out, oh, ow]);
+    let padded_ref: &[Bf16] = &padded;
+    let wf_ref: &[f32] = &wf;
+    ctx.par_chunks_with(
+        out.as_mut_slice(),
+        oh * ow,
+        || ctx.take_elems_unfilled::<f32>(ow1),
+        |item, oplane, scratch| {
+            let (ni, co) = (item / c_out, item % c_out);
+            let grp = co / c_out_g;
+            let b = bias.map_or(0.0, |b| b[co]);
+            for oy in 0..oh {
+                let iy0 = oy * sh;
+                scratch.fill(b);
+                for cig in 0..c_in_g {
+                    let ci = grp * c_in_g + cig;
+                    let plane =
+                        &padded_ref[(ni * c_in + ci) * hp * wp..(ni * c_in + ci + 1) * hp * wp];
+                    for ky in 0..kh {
+                        let src = &plane[(iy0 + ky) * wp..];
+                        let wrow = &wf_ref[((co * c_in_g + cig) * kh + ky) * kw..][..kw];
+                        row_conv_bf16(src, wrow, scratch, ow1);
+                    }
+                }
+                let orow = &mut oplane[oy * ow..oy * ow + ow];
+                for (ox, v) in orow.iter_mut().enumerate() {
+                    *v = Bf16::from_f32(scratch[if sw == 1 { ox } else { ox * sw }]);
+                }
+            }
+        },
+        |scratch| ctx.put_elems(scratch),
+    );
+    ctx.put_elems(wf);
+    ctx.put_elems(padded);
     out
 }
 
@@ -313,6 +534,7 @@ mod tests {
         use crate::autotune::{DispatchProfile, ProfileEntry, TunedAlgo};
         use crate::exec::ExecCtx;
         use crate::kernels::rowconv::RowKernel;
+        use crate::tensor::Dtype;
         use std::sync::Arc;
 
         let x = Tensor::randn(&[1, 2, 9, 30], 90);
@@ -321,6 +543,7 @@ mod tests {
         let profile = DispatchProfile::from_entries(vec![ProfileEntry {
             k: 5,
             threads: 1,
+            dtype: Dtype::F32,
             algo: TunedAlgo::Sliding,
             slide: RowKernel::Compound,
             gflops: 1.0,

@@ -11,19 +11,27 @@
 //! * [`simd`] — the portable "hardware vector" ([`simd::F32xL`], 16 × f32 =
 //!   one AVX-512 register) with the *slide* (lane-shift) primitives the
 //!   paper's kernels are built from, plus compound (multi-register) slides.
-//! * [`tensor`] — a minimal NCHW tensor library (owned `f32` buffers,
-//!   stride math, zero-padding) used by every kernel.
+//! * [`tensor`] — a minimal NCHW tensor library (owned buffers, stride
+//!   math, zero-padding), **generic over its element type**: the
+//!   [`tensor::Element`] layer defines `f32`, bfloat16
+//!   ([`tensor::Bf16`]) and quantized int8 (i8 codes under a per-tensor
+//!   [`tensor::QuantParams`]) storage with their accumulator types —
+//!   adding a dtype is a trait impl, not a fork of the kernel tree.
 //! * [`exec`] — the execution-context subsystem: [`exec::ExecCtx`] carries
-//!   the algorithm choice, a worker-thread count, a reusable scratch
-//!   arena and (optionally) the machine's measured dispatch profile;
-//!   every kernel has a `*_ctx` variant that parallelises over
-//!   independent output planes/rows and draws its padded/scratch/column
-//!   buffers from the arena instead of allocating per call.
+//!   the algorithm choice, the serving element type
+//!   ([`tensor::Dtype`]), a worker-thread count, a dtype-generic
+//!   reusable scratch arena (byte-based retention accounting) and
+//!   (optionally) the machine's measured dispatch profile; every kernel
+//!   has a `*_ctx` variant that parallelises over independent output
+//!   planes/rows and draws its padded/scratch/column buffers from the
+//!   arena instead of allocating per call.
 //! * [`kernels`] — the paper's contribution and its baselines:
 //!   sliding-window 1-D/2-D convolution (generic, compound, and custom
 //!   k=3/k=5 kernels), sliding max/avg pooling, plus the `im2col` + blocked
 //!   GEMM baseline (our stand-in for ONNX Runtime's `MlasConv`) and a naïve
-//!   direct convolution oracle.
+//!   direct convolution oracle — each sliding primitive also in `_q8`
+//!   (int8 codes, exact i32 accumulation) and `_bf16` variants, with an
+//!   int8 `im2col`+GEMM baseline keeping the quantized comparison honest.
 //! * [`autotune`] — per-machine dispatch autotuning: a microbenchmark
 //!   pass races the kernels per (filter width, thread count) and caches
 //!   the winners as a [`autotune::DispatchProfile`]

@@ -26,13 +26,13 @@ use swconv::coordinator::{BackendSpec, BatchPolicy, Coordinator};
 use swconv::error::{anyhow, bail, Context, Result};
 use swconv::harness::report::{dur, f3, Table};
 use swconv::harness::{
-    bench, fig1_speedup_sweep_profiled, fig2_throughput_sweep_profiled, machine_peaks, sweep,
+    bench, fig1_speedup_sweep_dtyped, fig2_throughput_sweep_dtyped, machine_peaks, sweep,
     ConvCase,
 };
 use swconv::kernels::{conv2d, Conv2dParams, ConvAlgo};
 use swconv::nn::{zoo, ExecCtx};
 use swconv::runtime::{engine::default_artifacts_dir, Engine};
-use swconv::tensor::Tensor;
+use swconv::tensor::{Dtype, Tensor};
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
 struct Args {
@@ -75,6 +75,22 @@ fn parse_threads(args: &Args) -> Result<usize> {
     Ok(if t == 0 { swconv::exec::available_threads() } else { t })
 }
 
+/// `--dtype f32|bf16|i8` — the element type benches/serving run in
+/// (default f32, the paper's configuration and the bit-exact baseline).
+fn parse_dtype(args: &Args) -> Result<Dtype> {
+    match args.get("dtype") {
+        None => Ok(Dtype::F32),
+        Some(s) => {
+            let d = Dtype::parse(s)
+                .ok_or_else(|| anyhow!("unknown dtype '{s}' (expected f32, bf16 or i8)"))?;
+            if !Dtype::SERVING.contains(&d) {
+                bail!("dtype '{s}' is an accumulator type, not a serving dtype");
+            }
+            Ok(d)
+        }
+    }
+}
+
 fn parse_ks(args: &Args) -> Result<Vec<usize>> {
     match args.get("ks") {
         None => Ok(sweep::default_k_grid()),
@@ -106,11 +122,14 @@ fn cmd_fig1(args: &Args) -> Result<()> {
     let threads = parse_threads(args)?;
     let ks = parse_ks(args)?;
     let profile = parse_profile(args);
-    eprintln!("fig1: c={c} hw={hw} ks={ks:?} threads={threads}");
-    let rows = fig1_speedup_sweep_profiled(&ks, threads, profile, |k| ConvCase::square(c, hw, k));
+    let dtype = parse_dtype(args)?;
+    eprintln!("fig1: c={c} hw={hw} ks={ks:?} threads={threads} dtype={}", dtype.name());
+    let rows =
+        fig1_speedup_sweep_dtyped(&ks, threads, profile, dtype, |k| ConvCase::square(c, hw, k));
     let mut t = Table::new(
         format!(
-            "Fig 1 — 2-D convolution speedup vs MlasConv-style GEMM (c={c}, {hw}x{hw}, {threads} thread(s))"
+            "Fig 1 — 2-D convolution speedup vs MlasConv-style GEMM (c={c}, {hw}x{hw}, {threads} thread(s), {})",
+            dtype.name()
         ),
         &["k", "kernel", "t_gemm", "t_sliding", "t_generic", "t_compound", "speedup"],
     );
@@ -145,12 +164,14 @@ fn cmd_fig2(args: &Args) -> Result<()> {
         peaks.bandwidth_gbs,
         peaks.ridge()
     );
-    let rows = fig2_throughput_sweep_profiled(&ks, threads, parse_profile(args), |k| {
+    let dtype = parse_dtype(args)?;
+    let rows = fig2_throughput_sweep_dtyped(&ks, threads, parse_profile(args), dtype, |k| {
         ConvCase::square(c, hw, k)
     });
     let mut t = Table::new(
         format!(
-            "Fig 2 — 2-D convolution throughput, GFLOP/s (c={c}, {hw}x{hw}, {threads} thread(s))"
+            "Fig 2 — 2-D convolution throughput, GFLOP/s (c={c}, {hw}x{hw}, {threads} thread(s), {})",
+            dtype.name()
         ),
         &["k", "sliding", "gemm", "roof(sliding)", "roof(gemm)", "peak", "sliding/peak"],
     );
@@ -235,12 +256,14 @@ fn cmd_run_model(args: &Args) -> Result<()> {
     let threads = parse_threads(args)?;
     let model = zoo::by_name(name, 10, 42)
         .ok_or_else(|| anyhow!("unknown model '{name}' (try {:?})", zoo::MODEL_NAMES))?;
+    let dtype = parse_dtype(args)?;
     let mut in_shape = vec![batch];
     in_shape.extend_from_slice(&model.input_shape);
     let x = Tensor::randn(&in_shape, 7);
     let mut t = Table::new(
         format!(
-            "{name} forward, batch {batch}, {threads} thread(s) ({} FLOP)",
+            "{name} forward, batch {batch}, {threads} thread(s), {} ({} FLOP)",
+            dtype.name(),
             model.flops(batch)
         ),
         &["algo", "median", "GFLOP/s"],
@@ -253,7 +276,7 @@ fn cmd_run_model(args: &Args) -> Result<()> {
     }
     let mut outputs: Vec<(ConvAlgo, Tensor)> = Vec::new();
     for algo in algos {
-        let mut ctx = ExecCtx::with_threads(algo, threads);
+        let mut ctx = ExecCtx::with_threads(algo, threads).with_dtype(dtype);
         if let Some(p) = &profile {
             ctx.set_profile(Arc::clone(p));
         }
@@ -299,8 +322,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     // Arena retention: 0 (default) keeps the high-water scratch for
     // maximum steady-state speed; N caps each replica's retained arena
-    // at N MiB after every batch.
+    // at N MiB after every batch. --trim-idle-ms M additionally drops
+    // all retained scratch once a replica has been quiet for M ms.
     let trim_mb = args.usize("trim-mb", 0)?;
+    let trim_idle_ms = args.usize("trim-idle-ms", 0)?;
+    // --dtype: every tier serves in this element type (f32 default).
+    let dtype = parse_dtype(args)?;
     // --profile: every tier dispatches from the cached crossover table,
     // and a third "tuned" backend (ConvAlgo::Tuned) joins the race.
     let profile = parse_profile(args);
@@ -310,11 +337,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let spec = |key: &str, model, algo| {
         let ctx = ExecCtx::with_threads(algo, threads);
-        let mut s = if trim_mb > 0 {
-            BackendSpec::native_trimmed(key, model, ctx, trim_mb << 18) // MiB -> f32s
+        let trim_after = if trim_mb > 0 { Some(trim_mb << 18) } else { None }; // MiB -> f32s
+        let trim_idle = if trim_idle_ms > 0 {
+            Some(Duration::from_millis(trim_idle_ms as u64))
         } else {
-            BackendSpec::native(key, model, ctx)
+            None
         };
+        let mut s = BackendSpec::native_retention(key, model, ctx, trim_after, trim_idle)
+            .with_dtype(dtype);
         if let Some(p) = &profile {
             s = s.with_profile(Arc::clone(p));
         }
@@ -334,7 +364,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms as u64) },
     );
 
-    eprintln!("serve: {replicas} replica(s) x {threads} kernel thread(s) per backend");
+    eprintln!(
+        "serve: {replicas} replica(s) x {threads} kernel thread(s) per backend, dtype {}",
+        dtype.name()
+    );
     for backend in backend_names {
         let t0 = Instant::now();
         let rxs: Vec<_> = (0..n_req)
@@ -410,16 +443,18 @@ USAGE: swconv <command> [--flag value]...
 
 COMMANDS
   bench-fig1       [--c 4] [--hw 64] [--ks 2,3,...] [--threads N] [--csv out.csv]
-                   [--profile PATH]
+                   [--profile PATH] [--dtype f32|bf16|i8]
   bench-fig2       [--c 4] [--hw 64] [--ks 2,3,...] [--threads N] [--csv out.csv]
-                   [--profile PATH]
+                   [--profile PATH] [--dtype f32|bf16|i8]
   peaks
   autotune         [--c 4] [--hw 64] [--ks 2,3,...] [--threads N]
                    [--out target/autotune/profile.json]
   run-model        [--model NAME] [--batch N] [--threads N] [--profile PATH]
+                   [--dtype f32|bf16|i8]
   summary          [--model NAME] [--batch N]
   serve            [--model NAME] [--requests N] [--max-batch N] [--max-wait-ms MS]
-                   [--threads N] [--replicas N] [--trim-mb N] [--profile PATH]
+                   [--threads N] [--replicas N] [--trim-mb N] [--trim-idle-ms MS]
+                   [--profile PATH] [--dtype f32|bf16|i8]
   artifacts-check  [--dir artifacts]
 
   --threads 0 means \"use all hardware threads\"; the default 1 matches
@@ -427,7 +462,18 @@ COMMANDS
   worker replicas per backend (0 = all hardware threads) and shards
   batches across them — the intra (--threads) x inter (--replicas)
   core-budget split. --trim-mb caps each replica's retained scratch
-  arena after every batch (0 = keep the high-water mark).
+  arena after every batch (0 = keep the high-water mark);
+  --trim-idle-ms drops all retained scratch once a replica has been
+  quiet that long (0 = never).
+
+  --dtype picks the element type (default f32, bit-exact with the
+  paper's kernels): bf16 halves storage traffic with f32 accumulation;
+  i8 serves quantized — conv layers dynamically quantize activations
+  (per-tensor symmetric), run int8 sliding (or int8 im2col+GEMM under
+  the gemm algorithm) with exact i32 accumulation, and dequantize at
+  layer boundaries. bench-fig1/bench-fig2 with --dtype i8 race int8
+  sliding against the int8 GEMM baseline (see also
+  `cargo bench --bench quant_slide`, which emits BENCH_quant.json).
 
   autotune races direct/GEMM/sliding-generic/compound/custom kernels per
   (filter width, thread count) and caches the winners; --profile PATH

@@ -3,9 +3,10 @@
 //! latter two without running anything).
 
 use crate::kernels::{
-    avg_pool2d_ctx, conv2d_ctx, max_pool2d_ctx, Conv2dParams, PoolParams,
+    avg_pool2d_ctx, conv2d_bf16_ctx, conv2d_ctx, conv2d_q8_ctx, max_pool2d_ctx, Conv2dParams,
+    PoolParams,
 };
-use crate::tensor::Tensor;
+use crate::tensor::{quantize, Dtype, QuantParams, Tensor, TensorT};
 
 // The execution context grew into its own subsystem (threads + scratch
 // arena + optional dispatch profile); re-exported here so
@@ -32,8 +33,12 @@ pub trait Layer: Send + Sync {
 
 /// 2-D convolution layer. The per-request [`ExecCtx`] supplies
 /// everything execution-related: the algorithm (GEMM / sliding /
-/// tuned), the worker threads, the scratch arena and — when one is
-/// attached — the measured dispatch profile.
+/// tuned), the worker threads, the scratch arena, the element type
+/// ([`ExecCtx::dtype`] — `Bf16` runs the bf16 sliding kernel on
+/// storage-rounded operands, `I8` dynamically quantizes per call; both
+/// keep f32 tensors at layer boundaries) and — when one is attached —
+/// the measured dispatch profile. For a model that should carry
+/// *pre-quantized* weights, see [`QuantizedConv2d`].
 pub struct Conv2d {
     /// Weights `[c_out, c_in/groups, kh, kw]`.
     pub w: Tensor,
@@ -89,7 +94,102 @@ impl Layer for Conv2d {
     }
 
     fn forward(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor {
-        conv2d_ctx(x, &self.w, Some(&self.bias), &self.params, ctx)
+        match ctx.dtype() {
+            // The accumulator-only I32 tag never reaches a serving ctx;
+            // treat it like the default.
+            Dtype::F32 | Dtype::I32 => {
+                conv2d_ctx(x, &self.w, Some(&self.bias), &self.params, ctx)
+            }
+            Dtype::Bf16 => conv2d_bf16_ctx(x, &self.w, Some(&self.bias), &self.params, ctx),
+            Dtype::I8 => {
+                // Dynamic quantization of the f32 weights per call —
+                // honest but repeated work; QuantizedConv2d caches the
+                // codes instead.
+                let wq = QuantParams::for_tensor(&self.w);
+                let qw = quantize(&self.w, wq);
+                conv2d_q8_ctx(x, &qw, wq, Some(&self.bias), &self.params, ctx)
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ QuantizedConv2d
+
+/// 2-D convolution with **pre-quantized int8 weights** — the
+/// first-class quantized layer the paper's low-memory-devices argument
+/// asks for.
+///
+/// Weights are quantized once at construction (per-tensor symmetric,
+/// [`QuantParams::for_tensor`]) and stored as i8 codes — a 4× parameter
+/// memory saving over [`Conv2d`]. Each forward pass dynamically
+/// quantizes the activations, runs the int8 kernel the ctx's algorithm
+/// routes to ([`conv2d_q8_ctx`]: sliding by default, im2col+GEMM for
+/// `Im2colGemm`, the dtype-aware profile winner for `Tuned`), and
+/// dequantizes back to f32 — quantize/dequantize live at the layer
+/// boundary, so this layer composes with every f32 layer around it
+/// regardless of the ctx's [`Dtype`].
+pub struct QuantizedConv2d {
+    /// Weight codes `[c_out, c_in/groups, kh, kw]`.
+    pub qw: TensorT<i8>,
+    /// The weights' (symmetric) quantization parameters.
+    pub wq: QuantParams,
+    /// Bias `[c_out]`, kept in f32 (added after dequantization).
+    pub bias: Vec<f32>,
+    /// Stride / padding / groups.
+    pub params: Conv2dParams,
+}
+
+impl QuantizedConv2d {
+    /// Quantize an existing f32 convolution layer's weights (the
+    /// post-training-quantization path).
+    pub fn from_conv2d(conv: &Conv2d) -> Self {
+        let wq = QuantParams::for_tensor(&conv.w);
+        QuantizedConv2d {
+            qw: quantize(&conv.w, wq),
+            wq,
+            bias: conv.bias.clone(),
+            params: conv.params,
+        }
+    }
+
+    /// He-initialised quantized layer, deterministic in `seed`
+    /// ([`Conv2d::new`] then weight quantization).
+    pub fn new(c_in: usize, c_out: usize, k: usize, params: Conv2dParams, seed: u64) -> Self {
+        Self::from_conv2d(&Conv2d::new(c_in, c_out, k, params, seed))
+    }
+}
+
+impl Layer for QuantizedConv2d {
+    fn describe(&self) -> String {
+        let d = self.qw.dims();
+        format!(
+            "QuantizedConv2d(i8) {}x{}x{}x{} s{:?} p{:?} g{}",
+            d[0], d[1], d[2], d[3], self.params.stride, self.params.pad, self.params.groups
+        )
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        assert_eq!(in_shape.len(), 4, "QuantizedConv2d input must be NCHW");
+        let (kh, kw) = (self.qw.dim(2), self.qw.dim(3));
+        assert_eq!(
+            in_shape[1],
+            self.qw.dim(1) * self.params.groups,
+            "QuantizedConv2d channel mismatch"
+        );
+        let (oh, ow) = self.params.out_size(in_shape[2], in_shape[3], kh, kw);
+        vec![in_shape[0], self.qw.dim(0), oh, ow]
+    }
+
+    fn flops(&self, in_shape: &[usize]) -> u64 {
+        // Integer MACs counted like FLOPs (the roofline comparisons
+        // stay apples-to-apples across dtypes).
+        let out = self.out_shape(in_shape);
+        let taps = self.qw.dim(1) * self.qw.dim(2) * self.qw.dim(3);
+        (out.iter().product::<usize>() * (2 * taps + 1)) as u64
+    }
+
+    fn forward(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor {
+        conv2d_q8_ctx(x, &self.qw, self.wq, Some(&self.bias), &self.params, ctx)
     }
 }
 
@@ -505,6 +605,43 @@ mod tests {
         assert_eq!(c.dims(), &[1, 3, 2, 2]);
         assert_eq!(c.plane(0, 0), &[1.0; 4]);
         assert_eq!(c.plane(0, 2), &[2.0; 4]);
+    }
+
+    #[test]
+    fn conv2d_dtype_knob_keeps_f32_boundaries() {
+        let l = Conv2d::new(2, 3, 3, Conv2dParams::same(3), 21);
+        let x = Tensor::randn(&[1, 2, 10, 10], 22);
+        let f = l.forward(&x, &ExecCtx::default());
+        // f32 ctx: bit-identical to calling the kernel directly.
+        assert_eq!(
+            f.as_slice(),
+            conv2d_ctx(&x, &l.w, Some(&l.bias), &l.params, &ExecCtx::default()).as_slice()
+        );
+        // bf16/i8 ctxs: same shape, close values, f32 tensors out.
+        for d in [Dtype::Bf16, Dtype::I8] {
+            let y = l.forward(&x, &ExecCtx::default().with_dtype(d));
+            assert_eq!(y.dims(), f.dims());
+            let diff = y.max_abs_diff(&f);
+            assert!(diff < 0.25, "{d:?}: diff {diff}");
+            assert!(diff > 0.0, "{d:?}: reduced precision should differ somewhere");
+        }
+    }
+
+    #[test]
+    fn quantized_conv2d_tracks_its_f32_source() {
+        let conv = Conv2d::new(3, 4, 5, Conv2dParams::same(5), 31);
+        let q = QuantizedConv2d::from_conv2d(&conv);
+        assert_eq!(q.out_shape(&[1, 3, 12, 12]), conv.out_shape(&[1, 3, 12, 12]));
+        assert_eq!(q.flops(&[1, 3, 12, 12]), conv.flops(&[1, 3, 12, 12]));
+        assert!(q.describe().contains("i8"));
+        let x = Tensor::randn(&[1, 3, 12, 12], 32);
+        let yf = conv.forward(&x, &ExecCtx::default());
+        // Sliding and GEMM int8 routes agree exactly (shared dequant of
+        // a bit-identical accumulator) and track the f32 layer.
+        let ys = q.forward(&x, &ExecCtx::new(ConvAlgo::Sliding));
+        let yg = q.forward(&x, &ExecCtx::new(ConvAlgo::Im2colGemm));
+        assert_eq!(ys.as_slice(), yg.as_slice());
+        assert!(ys.max_abs_diff(&yf) < 0.25, "diff {}", ys.max_abs_diff(&yf));
     }
 
     #[test]

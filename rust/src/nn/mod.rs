@@ -10,8 +10,12 @@
 //! multi-core) and compared on identical weights (the coordinator's
 //! router does exactly that).
 //!
-//! * [`layers`] — Conv2d, pooling, ReLU, Linear, Softmax, Flatten, Fire
-//!   (SqueezeNet), DepthwiseSeparable (MobileNet).
+//! * [`layers`] — Conv2d (dtype-aware: the ctx's
+//!   [`crate::tensor::Dtype`] switches it to the bf16 or quantized int8
+//!   kernels with f32 tensors kept at layer boundaries),
+//!   QuantizedConv2d (pre-quantized int8 weights), pooling, ReLU,
+//!   Linear, Softmax, Flatten, Fire (SqueezeNet), DepthwiseSeparable
+//!   (MobileNet).
 //! * [`model`] — the sequential executor with shape/FLOP introspection.
 //! * [`zoo`] — SimpleCNN, SqueezeNet-lite, MobileNet-lite, LargeFilterNet.
 

@@ -1,61 +1,52 @@
-//! The dense row-major tensor.
+//! The dense row-major tensor, generic over its [`Element`] type.
 
+use super::element::Element;
 use super::rng::XorShiftRng;
 
-/// A contiguous row-major `f32` tensor of arbitrary rank.
+/// A contiguous row-major tensor of arbitrary rank, generic over the
+/// storage element `E` (see [`Element`]).
+///
+/// [`Tensor`] (= `TensorT<f32>`) is the default instantiation every
+/// pre-existing API keeps using; `TensorT<i8>` carries quantized codes
+/// (with a per-tensor [`super::QuantParams`] alongside),
+/// `TensorT<`[`super::Bf16`]`>` carries bfloat16 storage, and
+/// `TensorT<i32>` carries the int8 kernels' raw accumulators.
 ///
 /// Images use the NCHW convention `[batch, channels, height, width]`;
 /// convolution weights use `[c_out, c_in, kh, kw]`; 1-D signals use
 /// `[len]` or `[channels, len]`.
 #[derive(Clone, Debug, PartialEq)]
-pub struct Tensor {
-    data: Vec<f32>,
+pub struct TensorT<E: Element> {
+    data: Vec<E>,
     dims: Vec<usize>,
 }
 
-impl Tensor {
-    /// All-zero tensor of the given shape.
+/// The default `f32` tensor (the pre-refactor `Tensor`, unchanged
+/// behaviour bit for bit).
+pub type Tensor = TensorT<f32>;
+
+impl<E: Element> TensorT<E> {
+    /// All-zero tensor of the given shape (`E::default()` is the
+    /// additive zero for every element type).
     pub fn zeros(dims: &[usize]) -> Self {
         let n: usize = dims.iter().product();
-        Tensor { data: vec![0.0; n], dims: dims.to_vec() }
+        TensorT { data: vec![E::default(); n], dims: dims.to_vec() }
     }
 
     /// Tensor filled with `v`.
-    pub fn full(dims: &[usize], v: f32) -> Self {
+    pub fn full(dims: &[usize], v: E) -> Self {
         let n: usize = dims.iter().product();
-        Tensor { data: vec![v; n], dims: dims.to_vec() }
+        TensorT { data: vec![v; n], dims: dims.to_vec() }
     }
 
     /// Wrap an existing buffer. `data.len()` must equal the shape product.
     ///
     /// # Panics
     /// On length/shape mismatch.
-    pub fn from_vec(data: Vec<f32>, dims: &[usize]) -> Self {
+    pub fn from_vec(data: Vec<E>, dims: &[usize]) -> Self {
         let n: usize = dims.iter().product();
         assert_eq!(data.len(), n, "from_vec: {} values for shape {:?}", data.len(), dims);
-        Tensor { data, dims: dims.to_vec() }
-    }
-
-    /// Standard-normal random tensor, deterministic in `seed`.
-    pub fn randn(dims: &[usize], seed: u64) -> Self {
-        let mut rng = XorShiftRng::new(seed);
-        let n: usize = dims.iter().product();
-        let data = (0..n).map(|_| rng.gauss()).collect();
-        Tensor { data, dims: dims.to_vec() }
-    }
-
-    /// Uniform random tensor in `[lo, hi)`, deterministic in `seed`.
-    pub fn rand_uniform(dims: &[usize], lo: f32, hi: f32, seed: u64) -> Self {
-        let mut rng = XorShiftRng::new(seed);
-        let n: usize = dims.iter().product();
-        let data = (0..n).map(|_| rng.uniform(lo, hi)).collect();
-        Tensor { data, dims: dims.to_vec() }
-    }
-
-    /// Tensor whose flat element `i` is `i as f32` — handy in tests.
-    pub fn iota(dims: &[usize]) -> Self {
-        let n: usize = dims.iter().product();
-        Tensor { data: (0..n).map(|i| i as f32).collect(), dims: dims.to_vec() }
+        TensorT { data, dims: dims.to_vec() }
     }
 
     /// Shape.
@@ -93,18 +84,18 @@ impl Tensor {
 
     /// Flat data view.
     #[inline]
-    pub fn as_slice(&self) -> &[f32] {
+    pub fn as_slice(&self) -> &[E] {
         &self.data
     }
 
     /// Mutable flat data view.
     #[inline]
-    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+    pub fn as_mut_slice(&mut self) -> &mut [E] {
         &mut self.data
     }
 
     /// Consume into the flat buffer.
-    pub fn into_vec(self) -> Vec<f32> {
+    pub fn into_vec(self) -> Vec<E> {
         self.data
     }
 
@@ -117,20 +108,20 @@ impl Tensor {
 
     /// Element at NCHW index.
     #[inline]
-    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> E {
         self.data[self.offset4(n, c, h, w)]
     }
 
     /// Mutable element at NCHW index.
     #[inline]
-    pub fn at4_mut(&mut self, n: usize, c: usize, h: usize, w: usize) -> &mut f32 {
+    pub fn at4_mut(&mut self, n: usize, c: usize, h: usize, w: usize) -> &mut E {
         let o = self.offset4(n, c, h, w);
         &mut self.data[o]
     }
 
     /// The `(n, c)` image plane as a contiguous `[h * w]` slice (rank 4).
     #[inline]
-    pub fn plane(&self, n: usize, c: usize) -> &[f32] {
+    pub fn plane(&self, n: usize, c: usize) -> &[E] {
         let hw = self.dims[2] * self.dims[3];
         let start = (n * self.dims[1] + c) * hw;
         &self.data[start..start + hw]
@@ -138,7 +129,7 @@ impl Tensor {
 
     /// Mutable `(n, c)` image plane (rank 4).
     #[inline]
-    pub fn plane_mut(&mut self, n: usize, c: usize) -> &mut [f32] {
+    pub fn plane_mut(&mut self, n: usize, c: usize) -> &mut [E] {
         let hw = self.dims[2] * self.dims[3];
         let start = (n * self.dims[1] + c) * hw;
         &mut self.data[start..start + hw]
@@ -155,9 +146,43 @@ impl Tensor {
         self
     }
 
+    /// Convert every element through its [`Element::to_f32`] widening —
+    /// **raw** for `i8` tensors (codes, not dequantized reals; use
+    /// [`super::dequantize`] for those), exact for `f32`/bf16/`i32`.
+    pub fn widen_f32(&self) -> Tensor {
+        TensorT {
+            data: self.data.iter().map(|x| x.to_f32()).collect(),
+            dims: self.dims.clone(),
+        }
+    }
+}
+
+impl Tensor {
+    /// Standard-normal random tensor, deterministic in `seed`.
+    pub fn randn(dims: &[usize], seed: u64) -> Self {
+        let mut rng = XorShiftRng::new(seed);
+        let n: usize = dims.iter().product();
+        let data = (0..n).map(|_| rng.gauss()).collect();
+        TensorT { data, dims: dims.to_vec() }
+    }
+
+    /// Uniform random tensor in `[lo, hi)`, deterministic in `seed`.
+    pub fn rand_uniform(dims: &[usize], lo: f32, hi: f32, seed: u64) -> Self {
+        let mut rng = XorShiftRng::new(seed);
+        let n: usize = dims.iter().product();
+        let data = (0..n).map(|_| rng.uniform(lo, hi)).collect();
+        TensorT { data, dims: dims.to_vec() }
+    }
+
+    /// Tensor whose flat element `i` is `i as f32` — handy in tests.
+    pub fn iota(dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        TensorT { data: (0..n).map(|i| i as f32).collect(), dims: dims.to_vec() }
+    }
+
     /// Element-wise map into a new tensor.
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
-        Tensor {
+        TensorT {
             data: self.data.iter().map(|&x| f(x)).collect(),
             dims: self.dims.clone(),
         }
@@ -262,6 +287,20 @@ mod tests {
         let a = Tensor::randn(&[10], 9);
         let b = Tensor::randn(&[10], 9);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn generic_tensors_hold_other_dtypes() {
+        use crate::tensor::Bf16;
+        let q = TensorT::<i8>::from_vec(vec![-3, 0, 7, 127], &[2, 2]);
+        assert_eq!(q.as_slice()[3], 127);
+        assert_eq!(q.widen_f32().as_slice(), &[-3.0, 0.0, 7.0, 127.0]);
+        let z = TensorT::<i32>::zeros(&[3]);
+        assert!(z.as_slice().iter().all(|&v| v == 0));
+        let b = TensorT::<Bf16>::full(&[2], Bf16::from_f32(1.5));
+        assert_eq!(b.widen_f32().as_slice(), &[1.5, 1.5]);
+        let r = TensorT::<i8>::from_vec(vec![1, 2, 3, 4, 5, 6], &[2, 3]).reshape(&[3, 2]);
+        assert_eq!(r.dims(), &[3, 2]);
     }
 
     #[test]

@@ -1,0 +1,399 @@
+//! The element layer: storage dtypes, quantization parameters, and the
+//! [`Element`] trait that makes the tensor/exec/kernel stack
+//! dtype-generic.
+//!
+//! The paper closes by arguing that sliding-window convolution "could
+//! promote a wider adoption of AI on low-power and low-memory devices"
+//! and is compatible with model-compression methods; the low-memory GEMM
+//! line of work (Anderson et al., arXiv:1709.03395) makes the same case
+//! for reduced precision. The slide primitives themselves are
+//! element-type agnostic — everything they need from a scalar is
+//! captured here:
+//!
+//! * [`Element`] — a storage scalar (`f32`, [`Bf16`], `i8`) plus its
+//!   accumulator type (`f32` for the float dtypes, `i32` for `i8`).
+//!   Adding a dtype is one trait impl, not a fork of the kernel tree.
+//! * [`Dtype`] — the runtime tag ([`crate::exec::ExecCtx`] and
+//!   `BackendSpec` carry one; the CLI's `--dtype` flag parses one).
+//! * [`QuantParams`] — per-tensor affine quantization
+//!   (`real = (code - zero_point) · scale`) with the symmetric
+//!   constructors the int8 conv kernels expect, plus the tensor-level
+//!   [`quantize`] / [`dequantize`] / [`to_bf16`] / [`from_bf16`]
+//!   converters used at layer boundaries.
+
+use super::dense::{Tensor, TensorT};
+
+/// Runtime element-type tag.
+///
+/// `F32`, `Bf16` and `I8` are *serving* dtypes (what `--dtype` accepts
+/// and what `BackendSpec`/`ExecCtx` carry); `I32` exists so the int8
+/// kernels' raw accumulator output is itself a well-formed
+/// [`TensorT`], and never appears on a serving knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    /// 32-bit IEEE float — the pre-refactor behaviour, bit for bit.
+    F32,
+    /// bfloat16: u16 storage (top half of an f32), f32 accumulation.
+    Bf16,
+    /// Signed 8-bit integer codes under a per-tensor [`QuantParams`],
+    /// i32 accumulation.
+    I8,
+    /// 32-bit integer — the i8 kernels' accumulator; storage-only.
+    I32,
+}
+
+impl Dtype {
+    /// Every tag, in report order.
+    pub const ALL: [Dtype; 4] = [Dtype::F32, Dtype::Bf16, Dtype::I8, Dtype::I32];
+
+    /// The dtypes a backend can serve (everything but the
+    /// accumulator-only `I32`).
+    pub const SERVING: [Dtype; 3] = [Dtype::F32, Dtype::Bf16, Dtype::I8];
+
+    /// Stable name used by the CLI and `profile.json`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Bf16 => "bf16",
+            Dtype::I8 => "i8",
+            Dtype::I32 => "i32",
+        }
+    }
+
+    /// Parse a stable name (inverse of [`Dtype::name`]).
+    pub fn parse(s: &str) -> Option<Dtype> {
+        Self::ALL.into_iter().find(|d| d.name() == s)
+    }
+
+    /// Storage width in bytes — what the byte-based arena accounting and
+    /// the roofline traffic models scale by.
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::Bf16 => 2,
+            Dtype::I8 => 1,
+        }
+    }
+}
+
+/// A storage scalar the tensor/exec/kernel stack can be instantiated
+/// over.
+///
+/// The trait carries exactly what the dtype-generic layers need: an
+/// additive-zero default, `f32` conversions for the layer boundaries,
+/// the accumulator type kernels sum in, and the runtime [`Dtype`] tag.
+/// For `i8` the conversions are *raw code* casts — the affine mapping
+/// between codes and reals lives in [`QuantParams`], per tensor, not in
+/// the element.
+pub trait Element:
+    Copy + Default + PartialEq + Send + Sync + std::fmt::Debug + 'static
+{
+    /// What kernels accumulate partial sums in (`f32` for the float
+    /// dtypes, `i32` for `i8` — exact, so int8 sliding and int8
+    /// im2col-GEMM agree bit for bit).
+    type Acc: Copy + Default + PartialEq + Send + Sync + std::fmt::Debug + 'static;
+
+    /// Runtime tag for this element type.
+    const DTYPE: Dtype;
+
+    /// Lossy conversion from `f32` (rounding for [`Bf16`],
+    /// round-and-saturate raw code for `i8`).
+    fn from_f32(v: f32) -> Self;
+
+    /// Widening conversion to `f32` (exact for every implementor).
+    fn to_f32(self) -> f32;
+}
+
+impl Element for f32 {
+    type Acc = f32;
+    const DTYPE: Dtype = Dtype::F32;
+
+    #[inline(always)]
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+impl Element for i8 {
+    type Acc = i32;
+    const DTYPE: Dtype = Dtype::I8;
+
+    #[inline(always)]
+    fn from_f32(v: f32) -> Self {
+        // Saturating cast (Rust `as` saturates): the *affine* mapping is
+        // QuantParams' job; this is the raw-code conversion.
+        v.round() as i8
+    }
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+}
+
+impl Element for i32 {
+    type Acc = i32;
+    const DTYPE: Dtype = Dtype::I32;
+
+    #[inline(always)]
+    fn from_f32(v: f32) -> Self {
+        v.round() as i32
+    }
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+}
+
+/// bfloat16: the top 16 bits of an IEEE f32 (1 sign, 8 exponent, 7
+/// mantissa bits).
+///
+/// Stored as a `u16` newtype; conversion to `f32` is a shift (exact),
+/// conversion from `f32` rounds to nearest-even — both compile to a
+/// couple of integer ops, so the bf16 kernels pay conversion in
+/// registers while halving storage traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(transparent)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    /// Positive zero.
+    pub const ZERO: Bf16 = Bf16(0);
+
+    /// Round an `f32` to the nearest bfloat16 (ties to even). NaN is
+    /// preserved as a quiet NaN.
+    #[inline(always)]
+    pub fn from_f32(v: f32) -> Self {
+        let bits = v.to_bits();
+        if v.is_nan() {
+            // Quiet the payload so truncation can't produce an infinity.
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        // Round-to-nearest-even on the truncated 16 bits.
+        let round = ((bits >> 16) & 1) + 0x7FFF;
+        Bf16(((bits + round) >> 16) as u16)
+    }
+
+    /// Widen to `f32` (exact).
+    #[inline(always)]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+impl Element for Bf16 {
+    type Acc = f32;
+    const DTYPE: Dtype = Dtype::Bf16;
+
+    #[inline(always)]
+    fn from_f32(v: f32) -> Self {
+        Bf16::from_f32(v)
+    }
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        Bf16::to_f32(self)
+    }
+}
+
+/// Per-tensor affine quantization parameters:
+/// `real = (code − zero_point) · scale`.
+///
+/// The int8 conv kernels require **symmetric** parameters
+/// (`zero_point == 0`) for both activations and weights — the
+/// accumulator is then just `Σ x_code · w_code`, zero padding is the
+/// code `0`, and the dequant is a single multiply. Affine parameters
+/// are still supported by [`quantize`]/[`dequantize`] (and covered by
+/// the round-trip property test); a kernel fed affine params asserts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    /// Real-value step between adjacent codes (> 0).
+    pub scale: f32,
+    /// Code that represents real 0.
+    pub zero_point: i32,
+}
+
+impl QuantParams {
+    /// Symmetric parameters covering `[-max_abs, max_abs]`
+    /// (`zero_point = 0`, `scale = max_abs / 127`). A zero or
+    /// non-finite `max_abs` degrades to a tiny positive scale so the
+    /// all-zero tensor round-trips exactly.
+    pub fn symmetric(max_abs: f32) -> Self {
+        let m = if max_abs.is_finite() && max_abs > 0.0 { max_abs } else { f32::MIN_POSITIVE };
+        QuantParams { scale: m / 127.0, zero_point: 0 }
+    }
+
+    /// Affine parameters covering `[lo, hi]` across the full code range.
+    pub fn affine(lo: f32, hi: f32) -> Self {
+        assert!(lo <= hi, "affine range [{lo}, {hi}]");
+        let span = (hi - lo).max(f32::MIN_POSITIVE);
+        let scale = span / 255.0;
+        let zero_point = (-128.0 - lo / scale).round() as i32;
+        QuantParams { scale, zero_point }
+    }
+
+    /// Symmetric parameters for a tensor (dynamic per-tensor
+    /// quantization: scale from the tensor's largest magnitude).
+    pub fn for_tensor(x: &Tensor) -> Self {
+        Self::symmetric(x.max_abs())
+    }
+
+    /// True when `zero_point == 0` (what the conv kernels require).
+    pub fn is_symmetric(self) -> bool {
+        self.zero_point == 0
+    }
+
+    /// Quantize one value (round to nearest, saturate to the i8 range).
+    #[inline(always)]
+    pub fn quantize_value(self, v: f32) -> i8 {
+        // i64 keeps the sum well-defined even for saturated casts of
+        // huge/non-finite inputs (f32→int casts saturate in Rust).
+        let q = (v / self.scale).round() as i64 + self.zero_point as i64;
+        q.clamp(i8::MIN as i64, i8::MAX as i64) as i8
+    }
+
+    /// Dequantize one code.
+    #[inline(always)]
+    pub fn dequantize_value(self, q: i8) -> f32 {
+        (q as i32 - self.zero_point) as f32 * self.scale
+    }
+}
+
+/// Quantize an `f32` tensor to i8 codes under `q`.
+pub fn quantize(x: &Tensor, q: QuantParams) -> TensorT<i8> {
+    let data = x.as_slice().iter().map(|&v| q.quantize_value(v)).collect();
+    TensorT::from_vec(data, x.dims())
+}
+
+/// Dequantize i8 codes back to `f32` under `q`.
+pub fn dequantize(x: &TensorT<i8>, q: QuantParams) -> Tensor {
+    let data = x.as_slice().iter().map(|&c| q.dequantize_value(c)).collect();
+    Tensor::from_vec(data, x.dims())
+}
+
+/// Round an `f32` tensor to bfloat16 storage.
+pub fn to_bf16(x: &Tensor) -> TensorT<Bf16> {
+    let data = x.as_slice().iter().map(|&v| Bf16::from_f32(v)).collect();
+    TensorT::from_vec(data, x.dims())
+}
+
+/// Widen a bfloat16 tensor to `f32` (exact).
+pub fn from_bf16(x: &TensorT<Bf16>) -> Tensor {
+    let data = x.as_slice().iter().map(|b| b.to_f32()).collect();
+    Tensor::from_vec(data, x.dims())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_names_roundtrip() {
+        for d in Dtype::ALL {
+            assert_eq!(Dtype::parse(d.name()), Some(d));
+        }
+        assert_eq!(Dtype::parse("f64"), None);
+        assert_eq!(Dtype::F32.bytes(), 4);
+        assert_eq!(Dtype::Bf16.bytes(), 2);
+        assert_eq!(Dtype::I8.bytes(), 1);
+        assert!(!Dtype::SERVING.contains(&Dtype::I32));
+    }
+
+    #[test]
+    fn bf16_roundtrip_exact_for_representables() {
+        for v in [0.0f32, -0.0, 1.0, -2.5, 0.15625, 3.0e38, -1.0e-30] {
+            let b = Bf16::from_f32(v);
+            let back = b.to_f32();
+            // Representable values (8 mantissa-bit ladder) are exact.
+            assert_eq!(Bf16::from_f32(back).to_f32(), back);
+            // And the round is within half a ulp (2^-8 relative).
+            assert!((back - v).abs() <= v.abs() / 256.0 + f32::MIN_POSITIVE, "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0 + 2^-8 is exactly halfway between 1.0 and the next bf16;
+        // nearest-even rounds down to 1.0.
+        let v = 1.0 + 1.0 / 256.0;
+        assert_eq!(Bf16::from_f32(v).to_f32(), 1.0);
+        // A hair above the halfway point rounds up.
+        let up = 1.0 + 1.5 / 256.0;
+        assert!(Bf16::from_f32(up).to_f32() > 1.0);
+    }
+
+    #[test]
+    fn bf16_specials() {
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::from_f32(f32::NEG_INFINITY).to_f32(), f32::NEG_INFINITY);
+        // Rounding at the top of the finite range may overflow to inf —
+        // the IEEE behaviour — but must never panic.
+        let _ = Bf16::from_f32(f32::MAX);
+    }
+
+    #[test]
+    fn symmetric_params_cover_range() {
+        let q = QuantParams::symmetric(2.54);
+        assert!(q.is_symmetric());
+        assert_eq!(q.quantize_value(2.54), 127);
+        assert_eq!(q.quantize_value(-2.54), -127);
+        assert_eq!(q.quantize_value(0.0), 0);
+        // Saturation beyond the covered range.
+        assert_eq!(q.quantize_value(100.0), 127);
+        assert_eq!(q.quantize_value(-100.0), -128);
+    }
+
+    #[test]
+    fn affine_params_place_zero_point() {
+        let q = QuantParams::affine(-1.0, 3.0);
+        assert!(!q.is_symmetric());
+        // lo maps to (about) the bottom code, hi to (about) the top.
+        assert!(q.quantize_value(-1.0) <= -127);
+        assert!(q.quantize_value(3.0) >= 126);
+        // Round-trip error within half a step everywhere in range.
+        for i in 0..=40 {
+            let v = -1.0 + 4.0 * i as f32 / 40.0;
+            let r = q.dequantize_value(q.quantize_value(v));
+            assert!((r - v).abs() <= q.scale / 2.0 + 1e-6, "{v} -> {r}");
+        }
+    }
+
+    #[test]
+    fn zero_tensor_roundtrips_exactly() {
+        let x = Tensor::zeros(&[2, 3]);
+        let q = QuantParams::for_tensor(&x);
+        assert_eq!(dequantize(&quantize(&x, q), q).as_slice(), x.as_slice());
+    }
+
+    #[test]
+    fn tensor_quantize_dequantize_close() {
+        let x = Tensor::randn(&[4, 9], 3);
+        let q = QuantParams::for_tensor(&x);
+        let back = dequantize(&quantize(&x, q), q);
+        assert!(x.max_abs_diff(&back) <= q.scale / 2.0 + 1e-6);
+    }
+
+    #[test]
+    fn tensor_bf16_roundtrip_close() {
+        let x = Tensor::randn(&[3, 7], 4);
+        let back = from_bf16(&to_bf16(&x));
+        assert!(x.max_abs_diff(&back) <= x.max_abs() / 256.0);
+    }
+
+    #[test]
+    fn element_raw_code_conversions() {
+        assert_eq!(<i8 as Element>::from_f32(3.6), 4);
+        assert_eq!(<i8 as Element>::from_f32(300.0), 127, "saturates");
+        assert_eq!(<i8 as Element>::from_f32(-300.0), -128);
+        assert_eq!(<f32 as Element>::from_f32(1.5), 1.5);
+        assert_eq!(<i32 as Element>::DTYPE, Dtype::I32);
+        assert_eq!(Bf16::from_f32(1.0).to_f32(), 1.0);
+    }
+}

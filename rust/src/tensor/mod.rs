@@ -1,9 +1,13 @@
-//! Minimal owned-`f32` tensor library (NCHW convention for images).
+//! Minimal owned-buffer tensor library (NCHW convention for images),
+//! generic over its element type.
 //!
 //! Everything the kernels need and nothing more: contiguous row-major
-//! buffers, stride math, deterministic pseudo-random fills (no external
-//! RNG dependency), comparison helpers for the test suite, and the
-//! zero-padding used by the sliding kernels.
+//! buffers ([`TensorT`], with [`Tensor`] = `TensorT<f32>`), stride math,
+//! deterministic pseudo-random fills (no external RNG dependency),
+//! comparison helpers for the test suite, the zero-padding used by the
+//! sliding kernels, and the element layer ([`Element`], [`Dtype`],
+//! [`Bf16`], [`QuantParams`]) that lets the same kernels run in f32,
+//! bfloat16 or quantized int8.
 //!
 //! Note on padding: the sliding kernels pad a tensor **once** with
 //! `pad2d`, adding a `LANES`-sized right slack so shifted vector loads
@@ -12,9 +16,13 @@
 //! per convolution (the paper's "memory bloating problem").
 
 mod dense;
+mod element;
 mod pad;
 mod rng;
 
-pub use dense::Tensor;
+pub use dense::{Tensor, TensorT};
+pub use element::{
+    dequantize, from_bf16, quantize, to_bf16, Bf16, Dtype, Element, QuantParams,
+};
 pub use pad::{pad2d, pad2d_into, pad_row, pad_row_into, padded2d_size};
 pub use rng::XorShiftRng;

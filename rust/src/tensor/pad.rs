@@ -8,7 +8,8 @@
 //! least `LANES + k` columns. This is `O(H · W)` extra memory versus the
 //! `k²×` blow-up of `im2col` — the core of the paper's memory argument.
 
-use super::dense::Tensor;
+use super::dense::TensorT;
+use super::element::Element;
 
 /// Padded geometry for [`pad2d_into`]: `(hp, wp)` of an `[n, c, hp, wp]`
 /// buffer for an `h × w` input with `ph`/`pw` padding and `slack_w`
@@ -17,18 +18,18 @@ pub fn padded2d_size(h: usize, w: usize, ph: usize, pw: usize, slack_w: usize) -
     (h + 2 * ph, w + 2 * pw + slack_w)
 }
 
-/// Copy `x` into a pre-filled padded buffer.
+/// Copy `x` into a pre-filled padded buffer (any element type).
 ///
 /// `dst` must hold `n · c · hp · wp` elements (see [`padded2d_size`])
 /// already set to the pad value — kernels draw it from the
 /// [`crate::exec::ExecCtx`] scratch arena with the fill applied — and
 /// only the interior rows are written here. Returns `(hp, wp)`.
-pub fn pad2d_into(
-    x: &Tensor,
+pub fn pad2d_into<E: Element>(
+    x: &TensorT<E>,
     ph: usize,
     pw: usize,
     slack_w: usize,
-    dst: &mut [f32],
+    dst: &mut [E],
 ) -> (usize, usize) {
     assert_eq!(x.rank(), 4, "pad2d expects NCHW");
     let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
@@ -54,23 +55,29 @@ pub fn pad2d_into(
 /// Output shape: `[n, c, h + 2·ph, w + 2·pw + slack_w]`. Allocating
 /// wrapper around [`pad2d_into`]; hot paths pad into arena scratch
 /// instead.
-pub fn pad2d(x: &Tensor, ph: usize, pw: usize, slack_w: usize, value: f32) -> Tensor {
+pub fn pad2d<E: Element>(
+    x: &TensorT<E>,
+    ph: usize,
+    pw: usize,
+    slack_w: usize,
+    value: E,
+) -> TensorT<E> {
     let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
     let (hp, wp) = padded2d_size(h, w, ph, pw, slack_w);
-    let mut out = Tensor::full(&[n, c, hp, wp], value);
+    let mut out = TensorT::full(&[n, c, hp, wp], value);
     pad2d_into(x, ph, pw, slack_w, out.as_mut_slice());
     out
 }
 
 /// Copy a row (1-D signal) into a pre-filled padded buffer: `x` lands at
 /// `dst[p..p + x.len()]`; everything else keeps its pad value.
-pub fn pad_row_into(x: &[f32], p: usize, dst: &mut [f32]) {
+pub fn pad_row_into<E: Copy>(x: &[E], p: usize, dst: &mut [E]) {
     dst[p..p + x.len()].copy_from_slice(x);
 }
 
 /// Pad a single row (1-D signal) with `p` values on the left and
 /// `p + slack` on the right. Allocating wrapper around [`pad_row_into`].
-pub fn pad_row(x: &[f32], p: usize, slack: usize, value: f32) -> Vec<f32> {
+pub fn pad_row<E: Copy>(x: &[E], p: usize, slack: usize, value: E) -> Vec<E> {
     let mut out = vec![value; x.len() + 2 * p + slack];
     pad_row_into(x, p, &mut out);
     out
@@ -79,6 +86,7 @@ pub fn pad_row(x: &[f32], p: usize, slack: usize, value: f32) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::Tensor;
 
     #[test]
     fn pad2d_shape_and_values() {

@@ -9,7 +9,7 @@ use swconv::autotune::{autotune, AutotuneOpts, DispatchProfile, ProfileEntry, Tu
 use swconv::exec::ExecCtx;
 use swconv::kernels::rowconv::RowKernel;
 use swconv::kernels::{conv2d_ctx, Conv2dParams, ConvAlgo};
-use swconv::tensor::Tensor;
+use swconv::tensor::{Dtype, Tensor};
 
 fn tmp(name: &str) -> PathBuf {
     std::env::temp_dir().join(format!("swconv_autotune_it_{name}"))
@@ -23,6 +23,7 @@ fn handmade() -> DispatchProfile {
         ProfileEntry {
             k: 3,
             threads: 1,
+            dtype: Dtype::F32,
             algo: TunedAlgo::Sliding,
             slide: RowKernel::Custom,
             gflops: 8.0,
@@ -30,6 +31,7 @@ fn handmade() -> DispatchProfile {
         ProfileEntry {
             k: 7,
             threads: 1,
+            dtype: Dtype::F32,
             algo: TunedAlgo::Gemm,
             slide: RowKernel::Generic,
             gflops: 6.0,
@@ -37,6 +39,7 @@ fn handmade() -> DispatchProfile {
         ProfileEntry {
             k: 11,
             threads: 1,
+            dtype: Dtype::F32,
             algo: TunedAlgo::Sliding,
             slide: RowKernel::Compound,
             gflops: 5.0,
@@ -44,6 +47,7 @@ fn handmade() -> DispatchProfile {
         ProfileEntry {
             k: 19,
             threads: 4,
+            dtype: Dtype::F32,
             algo: TunedAlgo::Direct,
             slide: RowKernel::Compound,
             gflops: 1.0,

@@ -1,0 +1,217 @@
+//! Int8 / bf16 kernel-equivalence suite.
+//!
+//! Three layers of guarantees, from exact to bounded:
+//!
+//! 1. **Exact** — int8 sliding and int8 im2col+GEMM produce bit-identical
+//!    i32 raw accumulators (both are exact integer arithmetic over the
+//!    same codes; only the memory access pattern differs).
+//! 2. **Bounded, analytically** — quantize → conv → dequantize stays
+//!    within a *derived* tolerance of the f32 reference. With symmetric
+//!    per-tensor scales `sx = max|x|/127`, `sw = max|w|/127`, each tap's
+//!    error is at most `|w|·sx/2 + |x|·sw/2 + sx·sw/4 ≤
+//!    sx·sw·(127 + 1/4)`, so a convolution with `taps = c_in/g · kh · kw`
+//!    accumulated taps errs at most `taps · 128 · sx · sw` per output —
+//!    the bound asserted below.
+//! 3. **Property** — quantize/dequantize round-trip error is bounded by
+//!    `scale / 2` for every value in the representable range, symmetric
+//!    and affine parameters alike.
+
+use swconv::exec::ExecCtx;
+use swconv::kernels::im2col::conv2d_im2col_q8_raw_ctx;
+use swconv::kernels::sliding1d::conv1d_sliding_q8_ctx;
+use swconv::kernels::sliding2d::conv2d_sliding_q8_raw_ctx;
+use swconv::kernels::{
+    conv1d, conv2d, conv2d_bf16_ctx, conv2d_q8_ctx, Conv1dParams, Conv2dParams, ConvAlgo,
+};
+use swconv::tensor::{dequantize, quantize, QuantParams, Tensor, XorShiftRng};
+
+/// The 2-D geometry suite: padding, stride, groups, every width regime
+/// (custom / generic / compound and beyond-compound widths — the int8
+/// row kernel is width-universal).
+fn geometries() -> Vec<(Vec<usize>, Vec<usize>, Conv2dParams)> {
+    vec![
+        (vec![1, 3, 12, 14], vec![4, 3, 3, 3], Conv2dParams::same(3)),
+        (vec![2, 2, 10, 16], vec![3, 2, 5, 5], Conv2dParams::same(5)),
+        (vec![1, 1, 8, 60], vec![2, 1, 3, 19], Conv2dParams::default()),
+        (
+            vec![1, 4, 12, 14],
+            vec![4, 1, 3, 3],
+            Conv2dParams { stride: (2, 2), pad: (1, 1), groups: 4 },
+        ),
+        (
+            vec![1, 4, 9, 9],
+            vec![6, 2, 3, 3],
+            Conv2dParams { stride: (1, 1), pad: (1, 1), groups: 2 },
+        ),
+        (vec![1, 1, 4, 200], vec![1, 1, 2, 120], Conv2dParams::default()),
+    ]
+}
+
+/// EXACT — the int8 sliding kernel and the int8 im2col+GEMM baseline
+/// agree bit for bit on raw i32 accumulators, on every geometry.
+#[test]
+fn q8_sliding_and_gemm_raw_accumulators_agree_bitwise() {
+    let ctx = ExecCtx::default();
+    for (i, (xd, wd, p)) in geometries().iter().enumerate() {
+        let x = Tensor::randn(xd, 500 + i as u64);
+        let w = Tensor::randn(wd, 510 + i as u64);
+        let qx = quantize(&x, QuantParams::for_tensor(&x));
+        let qw = quantize(&w, QuantParams::for_tensor(&w));
+        let a = conv2d_sliding_q8_raw_ctx(&qx, &qw, p, &ctx);
+        let b = conv2d_im2col_q8_raw_ctx(&qx, &qw, p, &ctx);
+        assert_eq!(a.dims(), b.dims(), "case {i}");
+        assert_eq!(a.as_slice(), b.as_slice(), "case {i}: accumulators must be exact");
+    }
+}
+
+/// EXACT, multi-threaded — thread count never changes int8 results
+/// (integer accumulation per independent plane).
+#[test]
+fn q8_results_bit_identical_across_thread_counts() {
+    let x = Tensor::randn(&[2, 3, 16, 16], 520);
+    let w = Tensor::randn(&[4, 3, 5, 5], 521);
+    let p = Conv2dParams::same(5);
+    let qx = quantize(&x, QuantParams::for_tensor(&x));
+    let qw = quantize(&w, QuantParams::for_tensor(&w));
+    let one_ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 1);
+    let one = conv2d_sliding_q8_raw_ctx(&qx, &qw, &p, &one_ctx);
+    for t in [2, 4, 7] {
+        let many_ctx = ExecCtx::with_threads(ConvAlgo::Sliding, t);
+        let many = conv2d_sliding_q8_raw_ctx(&qx, &qw, &p, &many_ctx);
+        assert_eq!(one.as_slice(), many.as_slice(), "threads={t}");
+    }
+}
+
+/// BOUNDED — quantize → conv → dequantize vs the f32 reference, within
+/// the derived `taps · 128 · sx · sw` tolerance (see module docs).
+#[test]
+fn q8_conv_tracks_f32_within_documented_tolerance() {
+    for (i, (xd, wd, p)) in geometries().iter().enumerate() {
+        let x = Tensor::randn(xd, 530 + i as u64);
+        let w = Tensor::randn(wd, 540 + i as u64);
+        let bias: Vec<f32> = (0..wd[0]).map(|c| 0.05 * c as f32).collect();
+        let want = conv2d(&x, &w, Some(&bias), p, ConvAlgo::Direct);
+
+        let xq = QuantParams::for_tensor(&x);
+        let wq = QuantParams::for_tensor(&w);
+        let qw = quantize(&w, wq);
+        let got = conv2d_q8_ctx(&x, &qw, wq, Some(&bias), p, &ExecCtx::default());
+
+        let taps = (wd[1] * wd[2] * wd[3]) as f32;
+        let atol = taps * 128.0 * xq.scale * wq.scale;
+        let d = got.max_abs_diff(&want);
+        assert!(d <= atol, "case {i}: diff {d} > derived bound {atol}");
+    }
+}
+
+/// BOUNDED — the 1-D quantized sliding path tracks the f32 conv1d.
+#[test]
+fn q8_conv1d_tracks_f32() {
+    let x = Tensor::randn(&[3, 70], 550);
+    let w = Tensor::randn(&[2, 3, 7], 551);
+    let p = Conv1dParams { stride: 1, pad: 3 };
+    let bias = vec![0.1, -0.2];
+    let want = conv1d(&x, &w, Some(&bias), &p, ConvAlgo::Direct);
+
+    let xq = QuantParams::for_tensor(&x);
+    let wq = QuantParams::for_tensor(&w);
+    let got = conv1d_sliding_q8_ctx(
+        &quantize(&x, xq),
+        xq,
+        &quantize(&w, wq),
+        wq,
+        Some(&bias),
+        &p,
+        &ExecCtx::default(),
+    );
+    let taps = (3 * 7) as f32;
+    let atol = taps * 128.0 * xq.scale * wq.scale;
+    let d = got.max_abs_diff(&want);
+    assert!(d <= atol, "diff {d} > derived bound {atol}");
+}
+
+/// BOUNDED — bf16 convolution vs f32: the only error source is the
+/// storage rounding of the operands (≤ 2⁻⁸ relative each), so the
+/// output errs at most `taps · max|x| · max|w| · 2⁻⁷` plus accumulation
+/// noise.
+#[test]
+fn bf16_conv_tracks_f32_within_storage_rounding() {
+    for (i, (xd, wd, p)) in geometries().iter().enumerate() {
+        let x = Tensor::randn(xd, 560 + i as u64);
+        let w = Tensor::randn(wd, 570 + i as u64);
+        let want = conv2d(&x, &w, None, p, ConvAlgo::Direct);
+        let got = conv2d_bf16_ctx(&x, &w, None, p, &ExecCtx::default());
+        let taps = (wd[1] * wd[2] * wd[3]) as f32;
+        let atol = taps * x.max_abs() * w.max_abs() / 128.0 + 1e-4;
+        let d = got.max_abs_diff(&want);
+        assert!(d <= atol, "case {i}: diff {d} > bound {atol}");
+    }
+}
+
+/// The layer-boundary router honours the ctx algorithm: gemm and
+/// sliding int8 routes agree exactly (shared dequant of bit-identical
+/// accumulators).
+#[test]
+fn q8_boundary_wrapper_routes_agree() {
+    let x = Tensor::randn(&[1, 3, 12, 12], 580);
+    let w = Tensor::randn(&[4, 3, 3, 3], 581);
+    let p = Conv2dParams::same(3);
+    let wq = QuantParams::for_tensor(&w);
+    let qw = quantize(&w, wq);
+    let s = conv2d_q8_ctx(&x, &qw, wq, None, &p, &ExecCtx::new(ConvAlgo::Sliding));
+    let g = conv2d_q8_ctx(&x, &qw, wq, None, &p, &ExecCtx::new(ConvAlgo::Im2colGemm));
+    let d = conv2d_q8_ctx(&x, &qw, wq, None, &p, &ExecCtx::new(ConvAlgo::Direct));
+    assert_eq!(s.as_slice(), g.as_slice());
+    // Direct has no int8 kernel: routed to sliding, identical result.
+    assert_eq!(s.as_slice(), d.as_slice());
+}
+
+/// PROPERTY — quantize/dequantize round-trip error is bounded by
+/// `scale / 2` for every value inside the representable range, across
+/// random tensors and both symmetric and affine parameters.
+#[test]
+fn quantize_roundtrip_error_bounded_by_half_scale() {
+    let mut rng = XorShiftRng::new(590);
+    for trial in 0..200 {
+        let symmetric = trial % 2 == 0;
+        let hi = rng.uniform(0.1, 50.0);
+        let lo = if symmetric { -hi } else { hi - rng.uniform(0.2, 60.0) };
+        let q = if symmetric {
+            QuantParams::symmetric(hi)
+        } else {
+            QuantParams::affine(lo, hi)
+        };
+        assert_eq!(q.is_symmetric(), symmetric || q.zero_point == 0);
+        // The property holds on the *representable* range (outside it,
+        // codes saturate — covered by the saturation test below). The
+        // affine zero-point rounds, so the representable range can fall
+        // short of [lo, hi] by up to a step at either edge; intersect.
+        let rep_lo = q.dequantize_value(i8::MIN).max(lo);
+        let rep_hi = q.dequantize_value(i8::MAX).min(hi);
+        for _ in 0..64 {
+            let v = rng.uniform(rep_lo, rep_hi);
+            let r = q.dequantize_value(q.quantize_value(v));
+            assert!(
+                (r - v).abs() <= q.scale / 2.0 + q.scale * 1e-3,
+                "trial {trial}: {v} -> {r} (scale {})",
+                q.scale
+            );
+        }
+        // And as whole tensors.
+        let t = Tensor::rand_uniform(&[4, 8], rep_lo, rep_hi, 600 + trial);
+        let back = dequantize(&quantize(&t, q), q);
+        assert!(t.max_abs_diff(&back) <= q.scale / 2.0 + q.scale * 1e-3, "trial {trial}");
+    }
+}
+
+/// Out-of-range values saturate (clamp) instead of wrapping — the
+/// complement of the in-range property above.
+#[test]
+fn quantize_saturates_out_of_range() {
+    let q = QuantParams::symmetric(1.0);
+    assert_eq!(q.quantize_value(10.0), 127);
+    assert_eq!(q.quantize_value(-10.0), -128);
+    let t = Tensor::from_vec(vec![100.0, -100.0], &[2]);
+    let codes = quantize(&t, q);
+    assert_eq!(codes.as_slice(), &[127, -128]);
+}
