@@ -1,0 +1,89 @@
+//! BENCH — spawn-per-region scoped threads vs the persistent worker
+//! pool, across plane sizes.
+//!
+//! The paper's sliding kernels win on the *small* layers, exactly where
+//! a per-region thread spawn (~10 µs) is a visible fraction of the
+//! convolution itself; on big planes the spawn amortises away. This
+//! bench runs the same k=3 sliding convolution on square planes from
+//! 16×16 to 512×512, once on an `ExecCtx` that spawns scoped threads
+//! per parallel region (`without_pool`, the pre-pool behaviour) and once
+//! on the persistent pool (the default path), asserting first that both
+//! produce bit-identical outputs.
+//!
+//! ## `BENCH_pool.json` schema
+//!
+//! Machine-readable records land in `target/reports/BENCH_pool.json` —
+//! the shared `BENCH_*.json` array schema (see
+//! [`swconv::harness::report::BenchRecord`]) with `bench` = `"pool"`,
+//! `algo` ∈ {`"scoped"`, `"pooled"`} and `shape` a `ConvCase::id`. Both
+//! series run the identical kernel at the identical thread count, so
+//! `ns_per_iter(scoped) - ns_per_iter(pooled)` is the per-region
+//! threading overhead the pool retires.
+
+use swconv::exec::{available_threads, ExecCtx, WorkerPool};
+use swconv::harness::report::{f3, write_bench_json, BenchRecord, Table};
+use swconv::harness::timing::bench_quick;
+use swconv::harness::ConvCase;
+use swconv::kernels::{conv2d_ctx, ConvAlgo};
+
+const C: usize = 4;
+const K: usize = 3;
+const HWS: [usize; 6] = [16, 32, 64, 128, 256, 512];
+
+fn main() {
+    // Overhead only shows with real fan-out; 1 hardware thread still
+    // runs (trivially — both paths execute inline) so CI stays green.
+    let threads = available_threads().clamp(2, 8);
+    let mut table = Table::new(
+        format!("per-region threading overhead — c{C} k{K}, {threads} threads"),
+        &["plane", "scoped", "pooled", "pooled speedup"],
+    );
+    let mut records = Vec::new();
+    for &hw in &HWS {
+        let case = ConvCase::square(C, hw, K);
+        let flops = case.flops();
+        let x = case.input();
+        let w = case.weights();
+
+        let scoped_ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads).without_pool();
+        let pooled_ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads)
+            .with_pool(WorkerPool::new(threads.saturating_sub(1).max(1)));
+
+        // The acceptance gate before any timing: pooled and scoped
+        // execution are the same computation, bit for bit.
+        let a = conv2d_ctx(&x, &w, None, &case.params, &scoped_ctx);
+        let b = conv2d_ctx(&x, &w, None, &case.params, &pooled_ctx);
+        assert_eq!(a.as_slice(), b.as_slice(), "hw={hw}: pooled != scoped");
+
+        let scoped =
+            bench_quick(|| conv2d_ctx(&x, &w, None, &case.params, &scoped_ctx)).gflops(flops);
+        let pooled =
+            bench_quick(|| conv2d_ctx(&x, &w, None, &case.params, &pooled_ctx)).gflops(flops);
+
+        table.row(vec![
+            format!("{hw}x{hw}"),
+            f3(scoped),
+            f3(pooled),
+            f3(pooled / scoped),
+        ]);
+        for (algo, gflops) in [("scoped", scoped), ("pooled", pooled)] {
+            records.push(BenchRecord {
+                bench: "pool".into(),
+                algo: algo.into(),
+                shape: case.id(),
+                threads,
+                replicas: 1,
+                // flops [FLOP] / gflops [1e9 FLOP/s] = 1e-9 s = 1 ns units.
+                ns_per_iter: flops as f64 / gflops,
+                gflops,
+            });
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "speedup > 1 means the persistent pool beat spawn-per-region; \
+         expect the gap to be largest on the smallest planes"
+    );
+    write_bench_json("target/reports/BENCH_pool.json", &records).expect("json");
+    println!("records in target/reports/BENCH_pool.json");
+}

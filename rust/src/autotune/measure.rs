@@ -7,13 +7,16 @@
 //! serving executes — same scratch arena, same thread fan-out.
 
 use super::profile::{DispatchProfile, ProfileEntry, TunedAlgo};
-use crate::exec::{available_threads, ExecCtx};
+use crate::exec::{available_threads, pool, ExecCtx, WorkerPool};
+use std::sync::Arc;
 use crate::harness::report::{f3, Table};
 use crate::harness::timing::bench_config;
 use crate::harness::workload::ConvCase;
+use crate::kernels::im2col::conv2d_im2col_q8_raw_ctx;
 use crate::kernels::rowconv::{RowKernel, COMPOUND_MAX_K};
+use crate::kernels::sliding2d::conv2d_sliding_q8_raw_ctx;
 use crate::kernels::{conv2d_ctx, ConvAlgo};
-use crate::tensor::Dtype;
+use crate::tensor::{quantize, Dtype, QuantParams};
 use std::time::Duration;
 
 /// What the autotuner measures: the representative workload geometry,
@@ -36,6 +39,12 @@ pub struct AutotuneOpts {
     pub samples: usize,
     /// Minimum time per sample.
     pub sample_target: Duration,
+    /// Element type to measure: [`Dtype::F32`] races the five f32
+    /// families; [`Dtype::I8`] races int8 sliding against the int8
+    /// im2col+GEMM baseline and records `dtype: "i8"` buckets (what
+    /// `conv2d_q8_ctx`'s tuned routing consults). Other dtypes have no
+    /// kernel family split to tune and are rejected.
+    pub dtype: Dtype,
     /// Print one progress line per bucket to stderr.
     pub verbose: bool,
 }
@@ -57,6 +66,7 @@ impl Default for AutotuneOpts {
             threads,
             samples: 5,
             sample_target: Duration::from_millis(10),
+            dtype: Dtype::F32,
             verbose: false,
         }
     }
@@ -74,8 +84,14 @@ impl AutotuneOpts {
             threads: vec![1],
             samples: 1,
             sample_target: Duration::from_micros(500),
+            dtype: Dtype::F32,
             verbose: false,
         }
+    }
+
+    /// [`AutotuneOpts::quick`] measuring the int8 kernel family.
+    pub fn quick_i8() -> Self {
+        AutotuneOpts { dtype: Dtype::I8, ..Self::quick() }
     }
 }
 
@@ -108,11 +124,23 @@ fn row_kernel_of(algo: ConvAlgo, k: usize) -> RowKernel {
 }
 
 /// Measure a dispatch profile: for every `(k, threads)` bucket in
-/// `opts`, time each candidate on the representative plane and distill
-/// the crossover table. Pure measurement — callers persist the result
-/// with [`DispatchProfile::save`] (the CLI caches it at
-/// [`super::profile::default_profile_path`]).
+/// `opts`, time each candidate of the opts' dtype on the representative
+/// plane and distill the crossover table. Pure measurement — callers
+/// persist the result with [`DispatchProfile::save`] (the CLI caches it
+/// at [`super::profile::default_profile_path`], merging per-dtype
+/// passes into one cache). The contexts it measures on resolve their
+/// worker pools exactly like serving contexts do, so cached crossovers
+/// reflect the real (pooled by default) dispatch cost.
+///
+/// # Panics
+/// If `opts.dtype` is neither `F32` nor `I8` — the other element types
+/// have no kernel-family split to tune (the CLI rejects them earlier).
 pub fn autotune(opts: &AutotuneOpts) -> DispatchProfile {
+    assert!(
+        matches!(opts.dtype, Dtype::F32 | Dtype::I8),
+        "autotune measures f32 or i8 kernel families, not {}",
+        opts.dtype.name()
+    );
     let mut entries = Vec::new();
     let mut ks = opts.ks.clone();
     ks.sort_unstable();
@@ -123,75 +151,151 @@ pub fn autotune(opts: &AutotuneOpts) -> DispatchProfile {
 
     for &t in &threads {
         let t = t.max(1);
+        // One persistent pool per thread count, shared by every
+        // candidate ctx at this `t`: measurements still run on the
+        // pooled path serving uses, without re-paying a pool spawn/join
+        // per (candidate, k) — the very overhead the pool retires.
+        // `None` under global disablement, so `--no-pool` autotune
+        // measures the scoped path it will serve with.
+        let shared = if t > 1 && !pool::pooling_disabled() {
+            Some(WorkerPool::new(t - 1))
+        } else {
+            None
+        };
         for &k in &ks {
             if k == 0 {
                 continue;
             }
-            let case = ConvCase::square(opts.c, opts.hw.max(k + 1), k);
-            let x = case.input();
-            let w = case.weights();
-            let flops = case.flops();
-
-            let mut best: Option<(ConvAlgo, f64)> = None;
-            let mut best_sliding: Option<(ConvAlgo, f64)> = None;
-            for algo in CANDIDATES {
-                if !algo.supports_width(k) {
-                    continue;
-                }
-                // Beyond the compound reach `Sliding` silently falls
-                // back to the direct kernel; timing it would record a
-                // direct measurement under a "sliding" label and poison
-                // nearby buckets. Only the real candidates race.
-                if k > COMPOUND_MAX_K && tuned_algo_of(algo) == TunedAlgo::Sliding {
-                    continue;
-                }
-                // One ctx per candidate: the calibration runs warm its
-                // arena, so the timed loop measures steady-state serving.
-                let ctx = ExecCtx::with_threads(algo, t);
-                let stats = bench_config(
-                    || conv2d_ctx(&x, &w, None, &case.params, &ctx),
-                    opts.samples,
-                    opts.sample_target,
-                );
-                let gflops = stats.gflops(flops);
-                let beats = |cur: &Option<(ConvAlgo, f64)>| match cur {
-                    None => true,
-                    Some((_, g)) => gflops > *g,
-                };
-                if beats(&best) {
-                    best = Some((algo, gflops));
-                }
-                if tuned_algo_of(algo) == TunedAlgo::Sliding && beats(&best_sliding) {
-                    best_sliding = Some((algo, gflops));
-                }
-            }
-            let (winner, gflops) = best.expect("at least direct always runs");
-            let slide = best_sliding
-                .map(|(a, _)| row_kernel_of(a, k))
-                .unwrap_or_else(|| RowKernel::paper_policy(k.min(COMPOUND_MAX_K)));
+            let entry = match opts.dtype {
+                Dtype::I8 => measure_i8_bucket(opts, k, t, shared.as_ref()),
+                _ => measure_f32_bucket(opts, k, t, shared.as_ref()),
+            };
             if opts.verbose {
                 eprintln!(
-                    "autotune: k={k:<3} threads={t:<3} -> {} / {} rows ({} GFLOP/s)",
-                    tuned_algo_of(winner).name(),
-                    slide.name(),
-                    f3(gflops)
+                    "autotune[{}]: k={k:<3} threads={t:<3} -> {} / {} rows ({} GFLOP/s)",
+                    opts.dtype.name(),
+                    entry.algo.name(),
+                    entry.slide.name(),
+                    f3(entry.gflops)
                 );
             }
-            entries.push(ProfileEntry {
-                k,
-                threads: t,
-                // The microbenchmark pass races the f32 kernels; the
-                // quantized kernels have no per-width family split to
-                // tune, so their buckets (if ever measured) would come
-                // from a dedicated pass.
-                dtype: Dtype::F32,
-                algo: tuned_algo_of(winner),
-                slide,
-                gflops,
-            });
+            entries.push(entry);
         }
     }
     DispatchProfile::from_entries(entries)
+}
+
+/// A measurement ctx at thread count `t`, running on the shared
+/// per-thread-count pool when one exists (scoped threads otherwise).
+fn measure_ctx(algo: ConvAlgo, t: usize, shared: Option<&Arc<WorkerPool>>) -> ExecCtx {
+    let ctx = ExecCtx::with_threads(algo, t);
+    match shared {
+        Some(p) => ctx.with_pool(Arc::clone(p)),
+        None => ctx.without_pool(),
+    }
+}
+
+/// Race the five f32 families at one `(k, threads)` bucket.
+fn measure_f32_bucket(
+    opts: &AutotuneOpts,
+    k: usize,
+    t: usize,
+    shared: Option<&Arc<WorkerPool>>,
+) -> ProfileEntry {
+    let case = ConvCase::square(opts.c, opts.hw.max(k + 1), k);
+    let x = case.input();
+    let w = case.weights();
+    let flops = case.flops();
+
+    let mut best: Option<(ConvAlgo, f64)> = None;
+    let mut best_sliding: Option<(ConvAlgo, f64)> = None;
+    for algo in CANDIDATES {
+        if !algo.supports_width(k) {
+            continue;
+        }
+        // Beyond the compound reach `Sliding` silently falls
+        // back to the direct kernel; timing it would record a
+        // direct measurement under a "sliding" label and poison
+        // nearby buckets. Only the real candidates race.
+        if k > COMPOUND_MAX_K && tuned_algo_of(algo) == TunedAlgo::Sliding {
+            continue;
+        }
+        // One ctx per candidate: the calibration runs warm its
+        // arena, so the timed loop measures steady-state serving.
+        let ctx = measure_ctx(algo, t, shared);
+        let stats = bench_config(
+            || conv2d_ctx(&x, &w, None, &case.params, &ctx),
+            opts.samples,
+            opts.sample_target,
+        );
+        let gflops = stats.gflops(flops);
+        let beats = |cur: &Option<(ConvAlgo, f64)>| match cur {
+            None => true,
+            Some((_, g)) => gflops > *g,
+        };
+        if beats(&best) {
+            best = Some((algo, gflops));
+        }
+        if tuned_algo_of(algo) == TunedAlgo::Sliding && beats(&best_sliding) {
+            best_sliding = Some((algo, gflops));
+        }
+    }
+    let (winner, gflops) = best.expect("at least direct always runs");
+    let slide = best_sliding
+        .map(|(a, _)| row_kernel_of(a, k))
+        .unwrap_or_else(|| RowKernel::paper_policy(k.min(COMPOUND_MAX_K)));
+    ProfileEntry { k, threads: t, dtype: Dtype::F32, algo: tuned_algo_of(winner), slide, gflops }
+}
+
+/// Race the int8 families at one `(k, threads)` bucket: quantized
+/// sliding vs the int8 im2col+GEMM baseline, both on the raw-accumulator
+/// kernels that `conv2d_q8_ctx` routes between. There is no direct int8
+/// kernel and no per-width row split (`row_conv_q8` is
+/// width-universal), so the bucket is a two-way race and its `slide`
+/// field just records the paper-policy family for the width.
+fn measure_i8_bucket(
+    opts: &AutotuneOpts,
+    k: usize,
+    t: usize,
+    shared: Option<&Arc<WorkerPool>>,
+) -> ProfileEntry {
+    let case = ConvCase::square(opts.c, opts.hw.max(k + 1), k);
+    let x = case.input();
+    let w = case.weights();
+    let qx = quantize(&x, QuantParams::for_tensor(&x));
+    let qw = quantize(&w, QuantParams::for_tensor(&w));
+    // Integer MACs counted like FLOPs, as in BENCH_quant.json, so i8
+    // and f32 buckets report on one scale.
+    let flops = case.flops();
+
+    let slide_ctx = measure_ctx(ConvAlgo::Sliding, t, shared);
+    let sliding = bench_config(
+        || conv2d_sliding_q8_raw_ctx(&qx, &qw, &case.params, &slide_ctx),
+        opts.samples,
+        opts.sample_target,
+    )
+    .gflops(flops);
+    let gemm_ctx = measure_ctx(ConvAlgo::Im2colGemm, t, shared);
+    let gemm = bench_config(
+        || conv2d_im2col_q8_raw_ctx(&qx, &qw, &case.params, &gemm_ctx),
+        opts.samples,
+        opts.sample_target,
+    )
+    .gflops(flops);
+
+    let (algo, gflops) = if sliding >= gemm {
+        (TunedAlgo::Sliding, sliding)
+    } else {
+        (TunedAlgo::Gemm, gemm)
+    };
+    ProfileEntry {
+        k,
+        threads: t,
+        dtype: Dtype::I8,
+        algo,
+        slide: RowKernel::paper_policy(k.min(COMPOUND_MAX_K)),
+        gflops,
+    }
 }
 
 /// Render a profile's crossover table for humans (the CLI and the
@@ -252,5 +356,34 @@ mod tests {
         let p = autotune(&opts);
         assert_eq!(p.entries().len(), 1);
         assert_ne!(p.entries()[0].algo, TunedAlgo::Sliding);
+    }
+
+    /// The int8 pass fills `dtype: "i8"` buckets (sliding-q8 vs gemm-q8)
+    /// that int8 lookups see and f32 lookups don't.
+    #[test]
+    fn i8_pass_fills_i8_buckets_only() {
+        let opts = AutotuneOpts::quick_i8();
+        let p = autotune(&opts);
+        assert_eq!(p.entries().len(), opts.ks.len() * opts.threads.len());
+        for e in p.entries() {
+            assert_eq!(e.dtype, Dtype::I8);
+            assert!(
+                matches!(e.algo, TunedAlgo::Sliding | TunedAlgo::Gemm),
+                "{e:?}: int8 race is sliding vs gemm only"
+            );
+            assert!(e.gflops > 0.0);
+            // The winner steers int8 lookups…
+            assert_eq!(p.choice_for(e.k, e.threads, Dtype::I8).0, e.algo);
+        }
+        // …while f32 lookups fall back to the paper policy (no f32
+        // buckets were measured by this pass).
+        assert_eq!(p.choice(3, 1), (TunedAlgo::Sliding, RowKernel::Custom));
+    }
+
+    #[test]
+    #[should_panic(expected = "autotune measures f32 or i8")]
+    fn non_tunable_dtypes_are_rejected() {
+        let opts = AutotuneOpts { dtype: Dtype::Bf16, ..AutotuneOpts::quick() };
+        let _ = autotune(&opts);
     }
 }

@@ -13,7 +13,11 @@
 //!   [`crate::harness::timing`] and [`crate::exec::ExecCtx`]: per
 //!   `(filter-width bucket, thread count)` it races the direct, GEMM,
 //!   sliding-generic, sliding-compound and custom kernels on a
-//!   representative plane.
+//!   representative plane (and, for an `i8` pass, int8 sliding against
+//!   the int8 im2col+GEMM baseline, filling the `dtype: "i8"` buckets
+//!   quantized tuned routing consults). Measurement contexts resolve
+//!   their persistent worker pools like serving contexts do, so the
+//!   cached crossovers include real dispatch overheads.
 //! * [`DispatchProfile`] ([`profile`]) — the distilled crossover table,
 //!   serialized through [`crate::runtime::json`] and cached at
 //!   [`default_profile_path`] (`target/autotune/profile.json`) so

@@ -2,11 +2,53 @@
 
 use crate::autotune::DispatchProfile;
 use crate::error::{bail, Result};
+use crate::exec::{available_threads, CoreSet, WorkerPool};
 use crate::nn::{ExecCtx, Model};
 use crate::runtime::Engine;
 use crate::tensor::{Dtype, Tensor};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// How a serving tier places its replicas on cores. The replica is the
+/// pinning unit: replica `i` of `n` gets core slice `i` of the policy's
+/// base set ([`PinPolicy::slice_for`]), the replica thread pins itself
+/// to the whole slice, and a native backend re-pools its `ExecCtx` onto
+/// a [`WorkerPool`] whose workers pin 1:1 to the slice's cores — so each
+/// replica's kernel threads stay resident on one core group (one NUMA
+/// node, when slices follow node boundaries) and the scratch they
+/// first-touch stays local.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum PinPolicy {
+    /// No pinning: the OS schedules replica and kernel threads freely
+    /// (the default, and the only option off Linux).
+    #[default]
+    None,
+    /// Round-robin every hardware thread (`0..available_threads()`)
+    /// across the replicas.
+    Auto,
+    /// Round-robin an explicit core set (the CLI's `--pin 0-3,8`)
+    /// across the replicas.
+    Cores(CoreSet),
+}
+
+impl PinPolicy {
+    /// The core slice replica `replica` of `replicas` should run on:
+    /// `None` when the policy doesn't pin. Slices are round-robin
+    /// ([`CoreSet::split`]) and never empty, so every replica always has
+    /// somewhere to run.
+    pub fn slice_for(&self, replica: usize, replicas: usize) -> Option<CoreSet> {
+        let base = match self {
+            PinPolicy::None => return None,
+            PinPolicy::Auto => CoreSet::all(available_threads()),
+            PinPolicy::Cores(set) => set.clone(),
+        };
+        if base.is_empty() {
+            return None;
+        }
+        let replicas = replicas.max(1);
+        Some(base.split(replicas)[replica % replicas].clone())
+    }
+}
 
 /// A batched inference backend. Replica workers own their backend
 /// exclusively (`&mut self`), so implementations may keep scratch state.
@@ -33,6 +75,13 @@ pub trait Backend {
     /// [`BackendSpec::with_dtype`]. Default: ignored (PJRT artifacts
     /// bake their precision in at compile time).
     fn set_dtype(&mut self, _dtype: Dtype) {}
+    /// Install this replica's core slice ([`BackendSpec::with_pinning`];
+    /// the replica worker has already pinned its own thread to the
+    /// slice before calling). Native backends re-pool their `ExecCtx`
+    /// onto workers pinned 1:1 inside the slice. Default: ignored —
+    /// thread-per-replica backends (PJRT) are fully placed by the
+    /// replica thread's own pin.
+    fn set_pinning(&mut self, _cores: &CoreSet) {}
     /// How often the replica worker should call [`Backend::idle_tick`]
     /// while its queue is quiet; `None` (default) means never — the
     /// worker blocks on its queue with no wakeups.
@@ -129,6 +178,18 @@ impl Backend for NativeBackend {
         self.ctx.set_dtype(dtype);
     }
 
+    fn set_pinning(&mut self, cores: &CoreSet) {
+        // Swap the replica's ctx onto a pool whose workers pin 1:1 to
+        // the slice cores, so kernel threads — and the arena pages they
+        // first-touch — stay inside the replica's core group. Under
+        // `--no-pool` the scoped threads simply inherit the replica
+        // thread's affinity mask instead.
+        let threads = self.ctx.threads();
+        if threads > 1 && !crate::exec::pool::pooling_disabled() {
+            self.ctx.set_pool(Some(WorkerPool::pinned(threads - 1, cores.clone())));
+        }
+    }
+
     fn idle_tick_period(&self) -> Option<Duration> {
         // Poll at a quarter of the idle threshold (≥ 5 ms so a tiny
         // threshold can't busy-spin the worker): the arena is released
@@ -208,6 +269,11 @@ pub struct BackendSpec {
     /// bit-exact baseline, `Bf16`/`I8` make native replicas serve the
     /// reduced-precision kernels.
     pub dtype: Dtype,
+    /// Core placement for the tier's replicas: replica `i` gets core
+    /// slice `i` ([`PinPolicy::slice_for`]) — the replica thread pins
+    /// itself and hands the slice to its backend
+    /// ([`Backend::set_pinning`]). Default [`PinPolicy::None`].
+    pub pinning: PinPolicy,
 }
 
 impl BackendSpec {
@@ -225,12 +291,23 @@ impl BackendSpec {
             factory: Arc::new(factory),
             profile: None,
             dtype: Dtype::F32,
+            pinning: PinPolicy::None,
         }
     }
 
     /// Set the replica count (builder style; clamped to ≥ 1).
     pub fn with_replicas(mut self, replicas: usize) -> Self {
         self.replicas = replicas.max(1);
+        self
+    }
+
+    /// Set the tier's core placement (builder style): with
+    /// [`PinPolicy::Auto`] or an explicit [`PinPolicy::Cores`] set,
+    /// replica `i` pins to core slice `i` and native replicas run their
+    /// kernel threads on a pool pinned inside that slice — the NUMA
+    /// serving setup (one replica per node) the ROADMAP calls for.
+    pub fn with_pinning(mut self, pinning: PinPolicy) -> Self {
+        self.pinning = pinning;
         self
     }
 
@@ -304,6 +381,7 @@ impl BackendSpec {
             }),
             profile: None,
             dtype: Dtype::F32,
+            pinning: PinPolicy::None,
         }
     }
 
@@ -328,6 +406,7 @@ impl BackendSpec {
             replicas: 1,
             profile: None,
             dtype: Dtype::F32,
+            pinning: PinPolicy::None,
             factory: Arc::new(move |_replica| {
                 let engine = Engine::new(dir.clone())?;
                 let b = PjrtBackend::new(n2.clone(), engine, &artifact)?;
@@ -597,6 +676,61 @@ mod tests {
         tuned.set_profile(Arc::clone(&profile));
         let y = tuned.infer(&x).unwrap();
         assert_eq!(baseline.as_slice(), y.as_slice());
+    }
+
+    /// Pin policies slice deterministically: replica `i` of `n` gets
+    /// the round-robin slice `i`, `None` never pins, and the slice math
+    /// agrees with [`CoreSet::split`].
+    #[test]
+    fn pin_policy_slices_cores_per_replica() {
+        assert_eq!(PinPolicy::None.slice_for(0, 4), None);
+        let set = CoreSet::parse("0-5").unwrap();
+        let policy = PinPolicy::Cores(set.clone());
+        assert_eq!(policy.slice_for(0, 2), Some(CoreSet::from_cores(&[0, 2, 4])));
+        assert_eq!(policy.slice_for(1, 2), Some(CoreSet::from_cores(&[1, 3, 5])));
+        // Degenerate replica counts clamp rather than panic.
+        assert_eq!(policy.slice_for(0, 0), Some(set.clone()));
+        // Auto slices every hardware thread.
+        let auto = PinPolicy::Auto.slice_for(0, 1).expect("auto always pins");
+        assert_eq!(auto, CoreSet::all(available_threads()));
+        // Default is no pinning.
+        assert_eq!(PinPolicy::default(), PinPolicy::None);
+        assert_eq!(PinPolicy::Cores(CoreSet::from_cores(&[])).slice_for(0, 2), None);
+    }
+
+    /// `set_pinning` swaps a multi-threaded native backend onto a pool
+    /// pinned to the slice — and must not change a single byte of the
+    /// results.
+    #[test]
+    fn set_pinning_installs_pinned_pool_without_changing_results() {
+        let x = Tensor::randn(&[2, 1, 28, 28], 21);
+        let mut plain = NativeBackend::new(
+            "plain",
+            simple_cnn(10, 1),
+            ExecCtx::with_threads(ConvAlgo::Sliding, 2),
+        );
+        let baseline = plain.infer(&x).unwrap();
+        let mut pinned = NativeBackend::new(
+            "pinned",
+            simple_cnn(10, 1),
+            ExecCtx::with_threads(ConvAlgo::Sliding, 2),
+        );
+        let slice = CoreSet::all(available_threads());
+        pinned.set_pinning(&slice);
+        // Under global pool disablement set_pinning leaves the ctx
+        // unpooled; whenever it *did* install a pool, it must be the
+        // slice-pinned one.
+        if let Some(p) = pinned.ctx().pool_handle() {
+            assert_eq!(p.cores(), Some(&slice), "installed pool must pin to the slice");
+            assert_eq!(p.workers(), 1, "threads - 1 pinned workers");
+        }
+        let y = pinned.infer(&x).unwrap();
+        assert_eq!(baseline.as_slice(), y.as_slice());
+        // Single-threaded ctx: nothing to pool, still a no-op result-wise.
+        let mut one = NativeBackend::new("one", simple_cnn(10, 1), ExecCtx::new(ConvAlgo::Sliding));
+        one.set_pinning(&slice);
+        assert!(one.ctx().pool_handle().is_none());
+        assert_eq!(one.infer(&x).unwrap().as_slice(), baseline.as_slice());
     }
 
     #[test]

@@ -36,7 +36,7 @@ pub mod metrics;
 pub mod server;
 pub mod shard;
 
-pub use backend::{Backend, BackendFactory, BackendSpec, NativeBackend, PjrtBackend};
+pub use backend::{Backend, BackendFactory, BackendSpec, NativeBackend, PinPolicy, PjrtBackend};
 pub use batcher::BatchPolicy;
 pub use metrics::{LatencyHistogram, MetricsSnapshot};
 pub use server::{Coordinator, InferError, InferResponse};

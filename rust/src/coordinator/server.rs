@@ -21,7 +21,7 @@
 //! answers the shard with [`InferError::Backend`] and the replica keeps
 //! serving later requests instead of wedging its queue.
 
-use super::backend::{Backend, BackendFactory, BackendSpec};
+use super::backend::{Backend, BackendFactory, BackendSpec, PinPolicy};
 use super::batcher::{next_batch, BatchOutcome, BatchPolicy};
 use super::metrics::{LatencyHistogram, MetricsSnapshot};
 use super::shard::{ShardPlanner, BROKEN_REPLICA_BIAS};
@@ -122,7 +122,8 @@ impl Coordinator {
     pub fn new(backends: Vec<BackendSpec>, policy: BatchPolicy) -> Self {
         let mut workers = HashMap::new();
         for spec in backends {
-            let BackendSpec { name, item_shape, replicas, factory, profile, dtype } = spec;
+            let BackendSpec { name, item_shape, replicas, factory, profile, dtype, pinning } =
+                spec;
             let replicas = replicas.max(1);
             let (tx, rx) = channel::<Request>();
             let mut replica_metrics = Vec::with_capacity(replicas);
@@ -136,17 +137,34 @@ impl Coordinator {
                 let if2 = Arc::clone(&in_flight);
                 let f2: BackendFactory = Arc::clone(&factory);
                 let p2 = profile.clone();
+                // Replica r of n gets core slice r: pinned on the
+                // replica thread itself (below), so everything the
+                // factory allocates — weights aside — first-touches on
+                // the replica's own core group.
+                let pin = pinning.slice_for(r, replicas);
                 let join = std::thread::Builder::new()
                     .name(format!("swconv-{name}-r{r}"))
-                    .spawn(move || replica_main(&f2, r, p2, dtype, &srx, &m2, &if2))
+                    .spawn(move || replica_main(&f2, r, p2, dtype, pin, &srx, &m2, &if2))
                     .expect("spawn replica worker");
                 replica_metrics.push(metrics);
                 joins.push(join);
                 handles.push(ReplicaHandle { queue: stx, in_flight });
             }
+            // The batcher/planner thread does no kernel work; under an
+            // explicit core set it is confined to that set so it never
+            // preempts a foreign tier's pinned workers.
+            let planner_pin = match &pinning {
+                PinPolicy::Cores(set) => Some(set.clone()),
+                _ => None,
+            };
             let join = std::thread::Builder::new()
                 .name(format!("swconv-{name}-planner"))
-                .spawn(move || planner_loop(&rx, policy, handles))
+                .spawn(move || {
+                    if let Some(set) = &planner_pin {
+                        crate::exec::affinity::pin_current(set);
+                    }
+                    planner_loop(&rx, policy, handles)
+                })
                 .expect("spawn batch planner");
             joins.push(join);
             workers.insert(name, Worker { queue: tx, item_shape, replica_metrics, joins });
@@ -270,24 +288,37 @@ fn planner_loop(rx: &Receiver<Request>, policy: BatchPolicy, replicas: Vec<Repli
     }
 }
 
-/// Replica thread body: build the backend (guarding against factory
-/// errors *and* panics), install the spec's dispatch profile and
-/// serving dtype, then serve shards until the planner hangs up.
+/// Replica thread body: pin to the replica's core slice (before the
+/// factory runs, so construction-time allocations first-touch locally),
+/// build the backend (guarding against factory errors *and* panics),
+/// install the spec's dispatch profile, serving dtype and core slice,
+/// then serve shards until the planner hangs up.
+#[allow(clippy::too_many_arguments)]
 fn replica_main(
     factory: &BackendFactory,
     replica: usize,
     profile: Option<Arc<crate::autotune::DispatchProfile>>,
     dtype: crate::tensor::Dtype,
+    pin: Option<crate::exec::CoreSet>,
     rx: &Receiver<Vec<Request>>,
     metrics: &LatencyHistogram,
     in_flight: &AtomicUsize,
 ) {
+    if let Some(slice) = &pin {
+        // Best-effort: threads spawned from here (scoped kernel workers
+        // under --no-pool) inherit this mask even before the backend
+        // installs its own pinned pool.
+        crate::exec::affinity::pin_current(slice);
+    }
     match catch_unwind(AssertUnwindSafe(|| factory.as_ref()(replica))) {
         Ok(Ok(mut backend)) => {
             if let Some(p) = profile {
                 backend.set_profile(p);
             }
             backend.set_dtype(dtype);
+            if let Some(slice) = &pin {
+                backend.set_pinning(slice);
+            }
             replica_loop(&mut *backend, rx, metrics, in_flight)
         }
         Ok(Err(e)) => answer_all_with_error(rx, in_flight, &e.to_string()),
@@ -700,6 +731,38 @@ mod tests {
         std::thread::sleep(Duration::from_millis(60));
         let second = c.infer("sliding", x).unwrap().output.unwrap();
         assert_eq!(first.as_slice(), second.as_slice(), "idle trim must not change results");
+        c.shutdown();
+    }
+
+    /// An auto-pinned, replicated tier answers bit-identically to an
+    /// unpinned one: pinning places threads, it never touches numerics
+    /// (and on platforms without affinity support it degrades to a
+    /// no-op).
+    #[test]
+    fn pinned_tier_serves_identically_to_unpinned() {
+        let c = Coordinator::new(
+            vec![
+                BackendSpec::native(
+                    "plain",
+                    simple_cnn(10, 1),
+                    ExecCtx::with_threads(ConvAlgo::Sliding, 2),
+                ),
+                BackendSpec::native(
+                    "pinned",
+                    simple_cnn(10, 1),
+                    ExecCtx::with_threads(ConvAlgo::Sliding, 2),
+                )
+                .with_replicas(2)
+                .with_pinning(PinPolicy::Auto),
+            ],
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        );
+        for seed in 0..4 {
+            let x = Tensor::randn(&[1, 28, 28], 70 + seed);
+            let a = c.infer("plain", x.clone()).unwrap().output.unwrap();
+            let b = c.infer("pinned", x).unwrap().output.unwrap();
+            assert_eq!(a.as_slice(), b.as_slice(), "pinning must never change results");
+        }
         c.shutdown();
     }
 

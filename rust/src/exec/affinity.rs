@@ -1,0 +1,332 @@
+//! CPU-affinity pinning: a parsed core set plus a thread-pinning
+//! primitive, so pool workers and coordinator replicas can stay resident
+//! on their cores and keep their first-touched memory node-local (the
+//! ZNNi / SLIDE observation: multi-core CPU throughput is won by
+//! *placing* threads, not just spawning them).
+//!
+//! The crate builds offline with zero dependencies, so on Linux the pin
+//! is a direct `sched_setaffinity` syscall (x86-64 and aarch64 inline
+//! asm); everywhere else [`pin_current`] is a no-op that reports `false`.
+//! Pinning is always best-effort: a sandbox that rejects the syscall
+//! degrades to unpinned scheduling, never to an error.
+
+use crate::error::{bail, Result};
+use std::fmt;
+
+/// A set of CPU core ids, parsed from the CLI's `--pin 0-3,8` syntax:
+/// comma-separated core ids and inclusive ranges.
+///
+/// Core ids are kept sorted and deduplicated, so a set renders back in
+/// canonical form and [`CoreSet::split`] distributes deterministically.
+///
+/// # Examples
+///
+/// ```
+/// use swconv::exec::affinity::CoreSet;
+///
+/// let set = CoreSet::parse("0-3,8").unwrap();
+/// assert_eq!(set.cores(), &[0, 1, 2, 3, 8]);
+/// assert_eq!(set.to_string(), "0-3,8");
+/// // Replica 0 of 2 gets the even half, replica 1 the odd half.
+/// let halves = set.split(2);
+/// assert_eq!(halves[0].cores(), &[0, 2, 8]);
+/// assert_eq!(halves[1].cores(), &[1, 3]);
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CoreSet {
+    cores: Vec<usize>,
+}
+
+/// Largest core id a [`CoreSet`] accepts. Bounds the affinity-mask
+/// allocation; matches the kernel's default `CPU_SETSIZE`.
+pub const MAX_CORE_ID: usize = 1023;
+
+impl CoreSet {
+    /// Parse `"0-3,8"`-style syntax: comma-separated core ids and
+    /// inclusive `lo-hi` ranges. Rejects empty input, malformed numbers,
+    /// inverted ranges and ids above [`MAX_CORE_ID`].
+    pub fn parse(s: &str) -> Result<CoreSet> {
+        let mut cores = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                bail!("empty element in core set '{s}'");
+            }
+            let (lo, hi) = match part.split_once('-') {
+                None => {
+                    let c = parse_core(part)?;
+                    (c, c)
+                }
+                Some((a, b)) => (parse_core(a)?, parse_core(b)?),
+            };
+            if lo > hi {
+                bail!("inverted core range '{part}'");
+            }
+            cores.extend(lo..=hi);
+        }
+        Ok(Self::from_cores(&cores))
+    }
+
+    /// Set from explicit core ids (sorted and deduplicated).
+    pub fn from_cores(cores: &[usize]) -> CoreSet {
+        let mut cores = cores.to_vec();
+        cores.sort_unstable();
+        cores.dedup();
+        CoreSet { cores }
+    }
+
+    /// Cores `0..n` — "every hardware thread", the auto-pinning base set
+    /// (`n` is normally [`super::available_threads`]).
+    pub fn all(n: usize) -> CoreSet {
+        CoreSet { cores: (0..n).collect() }
+    }
+
+    /// The core ids, ascending.
+    pub fn cores(&self) -> &[usize] {
+        &self.cores
+    }
+
+    /// Number of cores in the set.
+    pub fn len(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// True when the set holds no cores.
+    pub fn is_empty(&self) -> bool {
+        self.cores.is_empty()
+    }
+
+    /// Whether `core` is in the set.
+    pub fn contains(&self, core: usize) -> bool {
+        self.cores.binary_search(&core).is_ok()
+    }
+
+    /// The `i`-th core, wrapping around the set — how a pool assigns its
+    /// `w`-th worker a core when it has more workers than cores.
+    ///
+    /// # Panics
+    /// If the set is empty.
+    pub fn nth_wrapped(&self, i: usize) -> usize {
+        self.cores[i % self.cores.len()]
+    }
+
+    /// Split into `parts` sub-sets by round-robin (core `j` of the
+    /// ascending list goes to part `j % parts`): the per-replica core
+    /// slices of a pinned serving tier. A part that would come up empty
+    /// (more parts than cores) falls back to one wrapped core, so every
+    /// replica always has somewhere to run.
+    ///
+    /// # Panics
+    /// If `parts` is zero or the set is empty.
+    pub fn split(&self, parts: usize) -> Vec<CoreSet> {
+        assert!(parts > 0, "split needs at least one part");
+        assert!(!self.is_empty(), "cannot split an empty core set");
+        let mut out: Vec<Vec<usize>> = vec![Vec::new(); parts];
+        for (j, &c) in self.cores.iter().enumerate() {
+            out[j % parts].push(c);
+        }
+        out.into_iter()
+            .enumerate()
+            .map(|(i, cores)| {
+                if cores.is_empty() {
+                    CoreSet { cores: vec![self.nth_wrapped(i)] }
+                } else {
+                    CoreSet { cores }
+                }
+            })
+            .collect()
+    }
+
+    /// The affinity bitmask (`u64` words, bit `c % 64` of word `c / 64`)
+    /// `sched_setaffinity` takes.
+    fn mask_words(&self) -> Vec<u64> {
+        let top = self.cores.last().copied().unwrap_or(0);
+        let mut words = vec![0u64; top / 64 + 1];
+        for &c in &self.cores {
+            words[c / 64] |= 1u64 << (c % 64);
+        }
+        words
+    }
+}
+
+fn parse_core(s: &str) -> Result<usize> {
+    let c: usize = match s.trim().parse() {
+        Ok(c) => c,
+        Err(_) => bail!("bad core id '{s}'"),
+    };
+    if c > MAX_CORE_ID {
+        bail!("core id {c} above the supported maximum {MAX_CORE_ID}");
+    }
+    Ok(c)
+}
+
+impl fmt::Display for CoreSet {
+    /// Canonical `--pin` syntax: ranges re-compressed (`0-3,8`).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        let mut i = 0;
+        while i < self.cores.len() {
+            let lo = self.cores[i];
+            let mut hi = lo;
+            while i + 1 < self.cores.len() && self.cores[i + 1] == hi + 1 {
+                i += 1;
+                hi = self.cores[i];
+            }
+            if !first {
+                write!(f, ",")?;
+            }
+            first = false;
+            if lo == hi {
+                write!(f, "{lo}")?;
+            } else {
+                write!(f, "{lo}-{hi}")?;
+            }
+            i += 1;
+        }
+        if first {
+            write!(f, "(empty)")?;
+        }
+        Ok(())
+    }
+}
+
+/// Whether this build can actually pin threads (Linux on x86-64 or
+/// aarch64). When `false`, [`pin_current`] is a documented no-op.
+pub fn pinning_supported() -> bool {
+    cfg!(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))
+}
+
+/// Pin the calling thread to the given cores. Returns whether the kernel
+/// accepted the mask; `false` on unsupported platforms, an empty set, or
+/// a rejected syscall (sandboxes) — callers treat that as "run unpinned",
+/// never as an error.
+pub fn pin_current(set: &CoreSet) -> bool {
+    if set.is_empty() {
+        return false;
+    }
+    let words = set.mask_words();
+    sched_setaffinity_current(&words)
+}
+
+/// [`pin_current`] with a single-core set: how a pool worker takes
+/// exclusive residence on its slice core.
+pub fn pin_current_to_core(core: usize) -> bool {
+    pin_current(&CoreSet::from_cores(&[core]))
+}
+
+/// `sched_setaffinity(0, size, mask)` for the calling thread (pid 0 =
+/// "the calling thread" for this syscall). Direct syscall — the build is
+/// dependency-free, so there is no libc to call through.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn sched_setaffinity_current(mask: &[u64]) -> bool {
+    const SYS_SCHED_SETAFFINITY: usize = 203;
+    let ret: isize;
+    unsafe {
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") SYS_SCHED_SETAFFINITY as isize => ret,
+            in("rdi") 0usize,
+            in("rsi") std::mem::size_of_val(mask),
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+/// `sched_setaffinity(0, size, mask)` for the calling thread (aarch64).
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+fn sched_setaffinity_current(mask: &[u64]) -> bool {
+    const SYS_SCHED_SETAFFINITY: usize = 122;
+    let ret: isize;
+    unsafe {
+        core::arch::asm!(
+            "svc #0",
+            in("x8") SYS_SCHED_SETAFFINITY,
+            inlateout("x0") 0isize => ret,
+            in("x1") std::mem::size_of_val(mask),
+            in("x2") mask.as_ptr(),
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+/// No-op fallback: pinning silently unsupported off Linux/x86-64/aarch64.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn sched_setaffinity_current(_mask: &[u64]) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_ids_and_ranges() {
+        assert_eq!(CoreSet::parse("0").unwrap().cores(), &[0]);
+        assert_eq!(CoreSet::parse("0-3,8").unwrap().cores(), &[0, 1, 2, 3, 8]);
+        assert_eq!(CoreSet::parse(" 2 , 4-5 ").unwrap().cores(), &[2, 4, 5]);
+        // Overlap and duplicates collapse.
+        assert_eq!(CoreSet::parse("1-3,2,3-4").unwrap().cores(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in ["", ",", "a", "3-", "-3", "5-2", "1,,2", "99999"] {
+            assert!(CoreSet::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn display_is_canonical_and_roundtrips() {
+        for s in ["0", "0-3", "0-3,8", "1,3,5", "0-1,4-6,9"] {
+            let set = CoreSet::parse(s).unwrap();
+            assert_eq!(set.to_string(), s);
+            assert_eq!(CoreSet::parse(&set.to_string()).unwrap(), set);
+        }
+        assert_eq!(CoreSet::from_cores(&[]).to_string(), "(empty)");
+    }
+
+    #[test]
+    fn split_round_robins_and_never_returns_empty_parts() {
+        let set = CoreSet::parse("0-5").unwrap();
+        let parts = set.split(2);
+        assert_eq!(parts[0].cores(), &[0, 2, 4]);
+        assert_eq!(parts[1].cores(), &[1, 3, 5]);
+        // More parts than cores: the tail parts wrap instead of being
+        // empty, so every replica gets a core.
+        let set = CoreSet::parse("0-1").unwrap();
+        let parts = set.split(3);
+        assert_eq!(parts.len(), 3);
+        for p in &parts {
+            assert!(!p.is_empty());
+        }
+        assert_eq!(parts[2].cores(), &[0]);
+    }
+
+    #[test]
+    fn mask_words_set_the_right_bits() {
+        let set = CoreSet::parse("0,1,64").unwrap();
+        assert_eq!(set.mask_words(), vec![0b11u64, 0b1u64]);
+        assert!(set.contains(64));
+        assert!(!set.contains(2));
+        assert_eq!(set.nth_wrapped(5), set.cores()[5 % 3]);
+    }
+
+    #[test]
+    fn pin_current_is_best_effort() {
+        // Pinning to every hardware thread is a no-op placement-wise, so
+        // this only exercises the syscall path; a sandbox may reject it,
+        // which must read as `false`, not a crash.
+        let all = CoreSet::all(crate::exec::available_threads());
+        let ok = pin_current(&all);
+        if !pinning_supported() {
+            assert!(!ok, "unsupported platforms must report false");
+        }
+        // An empty set is never "pinned".
+        assert!(!pin_current(&CoreSet::from_cores(&[])));
+    }
+}

@@ -9,15 +9,20 @@
 //!
 //! * **Threads** — [`ExecCtx::par_chunks`] fans independent work items
 //!   (one output plane / row / group block each) out over `threads`
-//!   std scoped threads (no dependencies, no persistent pool to keep
-//!   `Send` bounds simple). Items are split into *contiguous* ranges so
-//!   each worker owns a disjoint `&mut` window of the output — no
-//!   unsafe, no locks on the hot path — and every item is computed with
-//!   exactly the same instruction sequence regardless of which worker
-//!   runs it, so results are **bit-identical** for any thread count.
-//!   The chunked data is generic over its element type (`f32` output
-//!   planes, `i32` quantized accumulators, bf16 storage — anything
-//!   `Send`).
+//!   workers. By default the ranges are submitted to a persistent,
+//!   optionally core-pinned [`pool::WorkerPool`] (built lazily on first
+//!   use, shared by [`ExecCtx::with_pool`] / `Clone`), so the small
+//!   layers where sliding beats GEMM stop paying a thread spawn per
+//!   parallel region; `SWCONV_NO_POOL=1` — or the CLI's `--no-pool` —
+//!   restores the original spawn-per-region scoped threads
+//!   ([`pool::set_pooling_disabled`]). Either way items are split into
+//!   *contiguous* ranges so each worker owns a disjoint `&mut` window
+//!   of the output, and every item is computed with exactly the same
+//!   instruction sequence regardless of which worker runs it, so
+//!   results are **bit-identical** for any thread count, pooled or
+//!   scoped. The chunked data is generic over its element type (`f32`
+//!   output planes, `i32` quantized accumulators, bf16 storage —
+//!   anything `Send`).
 //! * **Scratch arena** — [`ExecCtx::take_elems`]/[`ExecCtx::put_elems`]
 //!   check reusable typed buffers (`Vec<f32>`, `Vec<i8>`, `Vec<i32>`,
 //!   `Vec<Bf16>`, …) in and out of one shared free list, so the
@@ -42,6 +47,12 @@
 //! (profile lookups are dtype-aware; see
 //! [`DispatchProfile::choice_for`]).
 
+pub mod affinity;
+pub mod pool;
+
+pub use affinity::CoreSet;
+pub use pool::WorkerPool;
+
 use crate::autotune::{DispatchProfile, TunedAlgo};
 use crate::kernels::rowconv::RowKernel;
 use crate::kernels::ConvAlgo;
@@ -50,7 +61,7 @@ use std::any::{Any, TypeId};
 use std::cell::RefCell;
 use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// One parked scratch buffer: a type-erased `Vec<T>` plus the metadata
@@ -61,6 +72,12 @@ struct ArenaSlot {
     ty: TypeId,
     /// Retained capacity in bytes (`capacity * size_of::<T>()`).
     bytes: usize,
+    /// Pool-worker slot that last returned this buffer (`None` off the
+    /// pool). The picker prefers handing a worker its own buffers back,
+    /// so pages a pinned worker first-touched stay on that worker's
+    /// core/node. A pure locality hint — indices are per-pool, and a
+    /// miss falls through to any fitting buffer.
+    worker: Option<usize>,
     buf: Box<dyn Any + Send>,
 }
 
@@ -69,7 +86,43 @@ struct ArenaSlot {
 /// compares against).
 struct ArenaState {
     slots: Vec<ArenaSlot>,
+    /// Buffers returned while a parallel region is active on this ctx:
+    /// parked here — invisible to the picker — until the region ends.
+    /// This makes the per-region checkout count *deterministic* (every
+    /// range's `init` draws a distinct buffer, so one region = exactly
+    /// `workers` checkouts per scratch kind), instead of depending on
+    /// whether a fast worker's `fini` raced a slow worker's `init`; the
+    /// zero-alloc steady state is then a guarantee, not a likelihood.
+    deferred: Vec<ArenaSlot>,
+    /// Parallel regions currently active on this ctx (the deferral
+    /// window; normally 0 or 1).
+    regions: usize,
     last_use: Instant,
+}
+
+/// RAII marker for one active parallel region: opens the put-deferral
+/// window on construction, and on drop — panic included — closes it,
+/// flushing the deferred buffers back to the free list.
+struct RegionGuard<'a> {
+    ctx: &'a ExecCtx,
+}
+
+impl<'a> RegionGuard<'a> {
+    fn enter(ctx: &'a ExecCtx) -> Self {
+        ctx.arena.lock().unwrap().regions += 1;
+        RegionGuard { ctx }
+    }
+}
+
+impl Drop for RegionGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.ctx.arena.lock().unwrap();
+        st.regions -= 1;
+        if st.regions == 0 {
+            let mut deferred = std::mem::take(&mut st.deferred);
+            st.slots.append(&mut deferred);
+        }
+    }
 }
 
 /// Per-request / per-backend execution context: algorithm selection,
@@ -114,6 +167,12 @@ pub struct ExecCtx {
     /// Measured dispatch profile, shared across replicas via `Arc`;
     /// `None` means every tuned lookup answers with the paper policy.
     profile: Option<Arc<DispatchProfile>>,
+    /// How this ctx runs parallel regions, resolved at most once:
+    /// unset → decide lazily on the first multi-worker region (build a
+    /// persistent [`WorkerPool`] unless pooling is disabled);
+    /// `Some(pool)` → submit to that pool; `None` → scoped threads,
+    /// explicitly ([`ExecCtx::without_pool`] or a disabled resolution).
+    pool: OnceLock<Option<Arc<WorkerPool>>>,
 }
 
 impl ExecCtx {
@@ -129,9 +188,15 @@ impl ExecCtx {
             algo,
             threads: threads.max(1),
             dtype: Dtype::F32,
-            arena: Mutex::new(ArenaState { slots: Vec::new(), last_use: Instant::now() }),
+            arena: Mutex::new(ArenaState {
+                slots: Vec::new(),
+                deferred: Vec::new(),
+                regions: 0,
+                last_use: Instant::now(),
+            }),
             allocs: AtomicUsize::new(0),
             profile: None,
+            pool: OnceLock::new(),
         }
     }
 
@@ -171,6 +236,60 @@ impl ExecCtx {
     /// The element type this context serves in.
     pub fn dtype(&self) -> Dtype {
         self.dtype
+    }
+
+    /// Run parallel regions on the given persistent [`WorkerPool`]
+    /// (builder style). Without this, a multi-threaded ctx builds its
+    /// own pool lazily on the first parallel region — `with_pool` is for
+    /// sharing one pool between contexts, or installing a core-pinned
+    /// one ([`WorkerPool::pinned`]).
+    pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.set_pool(Some(pool));
+        self
+    }
+
+    /// Opt this context out of persistent pooling (builder style): every
+    /// parallel region spawns scoped threads, the pre-pool behaviour bit
+    /// for bit. The overhead bench uses this as its baseline; the
+    /// `--no-pool` CLI flag and `SWCONV_NO_POOL=1` apply the same
+    /// fallback globally ([`pool::set_pooling_disabled`]).
+    pub fn without_pool(mut self) -> Self {
+        self.set_pool(None);
+        self
+    }
+
+    /// Install (`Some`) or remove (`None`) the worker pool on an
+    /// existing context, replacing any earlier — or lazily made —
+    /// choice. This is how a coordinator replica swaps its cloned ctx
+    /// onto a pool pinned to the replica's own core slice.
+    pub fn set_pool(&mut self, pool: Option<Arc<WorkerPool>>) {
+        let cell = OnceLock::new();
+        let _ = cell.set(pool);
+        self.pool = cell;
+    }
+
+    /// The persistent pool this context runs on, if one has been
+    /// attached or lazily resolved. `None` both before the first
+    /// parallel region (nothing resolved yet) and when the ctx runs
+    /// scoped threads.
+    pub fn pool_handle(&self) -> Option<&Arc<WorkerPool>> {
+        self.pool.get().and_then(|p| p.as_ref())
+    }
+
+    /// Resolve the pooling decision (at most once per ctx): an attached
+    /// pool wins; otherwise build a `threads - 1`-worker pool — the
+    /// caller runs the last range itself — unless pooling is globally
+    /// disabled.
+    fn resolve_pool(&self) -> Option<Arc<WorkerPool>> {
+        self.pool
+            .get_or_init(|| {
+                if self.threads <= 1 || pool::pooling_disabled() {
+                    None
+                } else {
+                    Some(WorkerPool::new(self.threads - 1))
+                }
+            })
+            .clone()
     }
 
     /// Install (or replace) the dispatch profile on an existing context
@@ -272,16 +391,23 @@ impl ExecCtx {
     }
 
     /// Best-fit pick from the arena's same-typed slots (or an empty vec
-    /// when none fits).
+    /// when none fits). A pool worker's own returned buffers are
+    /// preferred over equally-fitting ones, so first-touched pages keep
+    /// coming back to the core that touched them; the fallbacks are
+    /// unchanged, so the preference can change locality but never
+    /// whether a warm arena re-allocates.
     fn pick<T: Copy + Send + 'static>(&self, len: usize) -> Vec<T> {
         let want = len.saturating_mul(std::mem::size_of::<T>());
         let ty = TypeId::of::<Vec<T>>();
+        let me = pool::current_worker_slot();
         let mut st = self.arena.lock().unwrap();
         st.last_use = Instant::now();
         let slots = &st.slots;
+        let fits = |i: usize| slots[i].ty == ty && slots[i].bytes >= want;
         let pick = (0..slots.len())
-            .filter(|&i| slots[i].ty == ty && slots[i].bytes >= want)
+            .filter(|&i| fits(i) && slots[i].worker == me)
             .min_by_key(|&i| slots[i].bytes)
+            .or_else(|| (0..slots.len()).filter(|&i| fits(i)).min_by_key(|&i| slots[i].bytes))
             .or_else(|| {
                 (0..slots.len()).filter(|&i| slots[i].ty == ty).max_by_key(|&i| slots[i].bytes)
             });
@@ -296,10 +422,21 @@ impl ExecCtx {
     /// the arena.
     pub fn put_elems<T: Copy + Send + 'static>(&self, buf: Vec<T>) {
         let bytes = buf.capacity().saturating_mul(std::mem::size_of::<T>());
-        let slot = ArenaSlot { ty: TypeId::of::<Vec<T>>(), bytes, buf: Box::new(buf) };
+        let slot = ArenaSlot {
+            ty: TypeId::of::<Vec<T>>(),
+            bytes,
+            worker: pool::current_worker_slot(),
+            buf: Box::new(buf),
+        };
         let mut st = self.arena.lock().unwrap();
         st.last_use = Instant::now();
-        st.slots.push(slot);
+        if st.regions > 0 {
+            // Mid-region returns park aside so concurrent ranges never
+            // reuse each other's buffers (see `ArenaState::deferred`).
+            st.deferred.push(slot);
+        } else {
+            st.slots.push(slot);
+        }
     }
 
     /// [`ExecCtx::take_elems`] for `f32` — the convenience every
@@ -410,8 +547,17 @@ impl ExecCtx {
     /// live buffers equals the worker count, which keeps steady-state
     /// arena traffic deterministic and allocation-free.
     ///
+    /// Ranges run on the ctx's persistent [`WorkerPool`] by default
+    /// (scoped threads when pooling is disabled — the partition, and
+    /// therefore every result bit, is identical either way). A region
+    /// opened from inside a pool worker — a kernel calling a kernel —
+    /// runs inline on that worker, so nesting cannot deadlock.
+    ///
     /// # Panics
-    /// If `chunk` is zero or does not divide `data.len()`.
+    /// If `chunk` is zero or does not divide `data.len()`. A panic in
+    /// any chunk body propagates to this caller once the region has
+    /// drained; pool workers survive it (the panic poisons only the
+    /// region, not the pool).
     pub fn par_chunks_with<T: Send, S>(
         &self,
         data: &mut [T],
@@ -424,7 +570,7 @@ impl ExecCtx {
         assert_eq!(data.len() % chunk, 0, "data not a whole number of chunks");
         let items = data.len() / chunk;
         let workers = self.threads.min(items);
-        if workers <= 1 {
+        if workers <= 1 || pool::on_pool_worker() {
             if items == 0 {
                 return;
             }
@@ -437,9 +583,39 @@ impl ExecCtx {
         }
         // Contiguous balanced partition: first `rem` workers take one
         // extra item. Worker w's range starts where w-1's ended, so the
-        // split points are pure arithmetic.
+        // split points are pure arithmetic — identical for the pooled
+        // and scoped paths, which is what keeps them bit-identical.
         let base = items / workers;
         let rem = items % workers;
+        // Deterministic scratch accounting for the whole region: puts
+        // issued while this guard lives are deferred, so each range's
+        // `init` checks out a distinct buffer no matter how the ranges
+        // interleave in time (exactly `workers` checkouts per kind).
+        let _region = RegionGuard::enter(self);
+        if let Some(pool) = self.resolve_pool() {
+            let ptr = SendPtr(data.as_mut_ptr());
+            let run = move |w: usize| {
+                let first = w * base + w.min(rem);
+                let count = base + usize::from(w < rem);
+                // SAFETY: ranges are pairwise disjoint by the partition
+                // arithmetic, `T: Send` lets the slice cross to a pool
+                // worker, and `run_region` does not return until every
+                // range is done — so each worker holds the only live
+                // reference to its window of `data`.
+                let mine = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0.add(first * chunk), count * chunk)
+                };
+                // State never crosses threads: created, used and
+                // finalised within this range (no `Send` bound on S).
+                let mut state = init();
+                for (j, c) in mine.chunks_mut(chunk).enumerate() {
+                    body(first + j, c, &mut state);
+                }
+                fini(state);
+            };
+            pool.run_region(workers, &run);
+            return;
+        }
         let init = &init;
         let body = &body;
         let fini = &fini;
@@ -472,6 +648,26 @@ impl ExecCtx {
         });
     }
 }
+
+/// A raw pointer that may cross threads: the pooled `par_chunks` path
+/// derives pairwise-disjoint `&mut` range windows from it on the pool
+/// workers.
+struct SendPtr<T>(*mut T);
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T> Copy for SendPtr<T> {}
+
+// SAFETY: only ever dereferenced through disjoint ranges whose lifetime
+// is bounded by the region (see the safety comment at the use site);
+// sending/sharing the *pointer value* is then as safe as `&mut [T]`
+// itself, which requires `T: Send`.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// The number of hardware threads "use all threads" means, everywhere:
 /// [`ExecCtx::auto`], the CLI's `--threads 0`, and the benches' multi-core
@@ -516,14 +712,21 @@ impl Default for ExecCtx {
 }
 
 impl Clone for ExecCtx {
-    /// Clones algorithm, thread count, dtype and the (shared) dispatch
-    /// profile with a fresh (empty) arena: the arena is a cache, not
-    /// state — this is how each coordinator replica gets its own scratch
-    /// while all replicas dispatch from one measured profile.
+    /// Clones algorithm, thread count, dtype, the (shared) dispatch
+    /// profile and the (shared) worker pool with a fresh (empty) arena:
+    /// the arena is a cache, not state — this is how each coordinator
+    /// replica gets its own scratch while all replicas dispatch from one
+    /// measured profile. The pool is shared only once *resolved*
+    /// (attached explicitly or created by a first parallel region); a
+    /// never-used prototype ctx clones into replicas that each lazily
+    /// build — and pin — their own pool.
     fn clone(&self) -> Self {
         let mut c = ExecCtx::with_threads(self.algo, self.threads);
         c.dtype = self.dtype;
         c.profile = self.profile.clone();
+        if let Some(choice) = self.pool.get() {
+            let _ = c.pool.set(choice.clone());
+        }
         c
     }
 }
@@ -752,5 +955,125 @@ mod tests {
                 assert_eq!(outer.algo, ConvAlgo::Direct);
             });
         });
+    }
+
+    #[test]
+    fn attached_pool_runs_regions_and_is_shared_by_clone() {
+        let p = WorkerPool::new(2);
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 3).with_pool(Arc::clone(&p));
+        let mut data = vec![0.0f32; 9];
+        ctx.par_chunks(&mut data, 3, |i, c| c.fill(i as f32 + 1.0));
+        for i in 0..3 {
+            assert!(data[i * 3..(i + 1) * 3].iter().all(|&v| v == i as f32 + 1.0));
+        }
+        let c2 = ctx.clone();
+        assert!(
+            c2.pool_handle().is_some_and(|q| Arc::ptr_eq(q, &p)),
+            "clone must share an attached pool"
+        );
+        // An explicitly scoped ctx resolves to no pool, and its clone
+        // inherits that choice.
+        let scoped = ExecCtx::with_threads(ConvAlgo::Sliding, 3).without_pool();
+        let mut d2 = vec![0.0f32; 9];
+        scoped.par_chunks(&mut d2, 3, |i, c| c.fill(i as f32 + 1.0));
+        assert_eq!(d2, data);
+        assert!(scoped.pool_handle().is_none());
+        assert!(scoped.clone().pool_handle().is_none());
+    }
+
+    // The process-global pooling flag is exercised by
+    // `tests/pool_flag.rs` — its own integration binary, hence its own
+    // process, so flipping the flag cannot race any lib test's lazy
+    // pool resolution.
+
+    #[test]
+    fn nested_par_chunks_runs_inline_without_deadlock() {
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 4).with_pool(WorkerPool::new(3));
+        let inner_ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 4).with_pool(WorkerPool::new(3));
+        let mut data = vec![0.0f32; 6 * 4];
+        ctx.par_chunks(&mut data, 4, |i, c| {
+            // A parallel region from inside a pool worker: must run
+            // inline (sequentially) rather than re-entering a pool.
+            inner_ctx.par_chunks(c, 1, |j, v| v.fill((i * 10 + j) as f32));
+        });
+        for i in 0..6 {
+            for j in 0..4 {
+                assert_eq!(data[i * 4 + j], (i * 10 + j) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_panic_poisons_region_not_ctx() {
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 3).with_pool(WorkerPool::new(2));
+        let mut data = vec![0.0f32; 8];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ctx.par_chunks(&mut data, 1, |i, _c| {
+                if i == 5 {
+                    panic!("item 5 exploded");
+                }
+            });
+        }));
+        assert!(r.is_err(), "chunk panic must reach the submitter");
+        // The ctx (and its pool) keep serving.
+        let mut again = vec![0.0f32; 8];
+        ctx.par_chunks(&mut again, 1, |i, c| c.fill(i as f32));
+        for (i, &v) in again.iter().enumerate() {
+            assert_eq!(v, i as f32);
+        }
+        assert_eq!(ctx.pool_handle().unwrap().live_workers(), 2);
+    }
+
+    /// With put-deferral, a region's scratch checkout count equals the
+    /// worker count *exactly* — on the first region and on every one
+    /// after — regardless of how ranges interleave in time.
+    #[test]
+    fn region_scratch_checkout_is_deterministic() {
+        for threads in [2usize, 4] {
+            let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads)
+                .with_pool(WorkerPool::new(threads));
+            let mut data = vec![0.0f32; 8];
+            let region = |data: &mut [f32]| {
+                ctx.par_chunks_with(
+                    data,
+                    1,
+                    || ctx.take(32, 0.0),
+                    |i, c, s| {
+                        s[0] = i as f32;
+                        c[0] = s[0];
+                    },
+                    |s| ctx.put(s),
+                );
+            };
+            region(&mut data);
+            assert_eq!(
+                ctx.alloc_events(),
+                threads,
+                "threads={threads}: exactly one checkout per range"
+            );
+            for _ in 0..3 {
+                region(&mut data);
+            }
+            assert_eq!(ctx.alloc_events(), threads, "threads={threads}: steady state");
+            for (i, &v) in data.iter().enumerate() {
+                assert_eq!(v, i as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_workers_can_draw_scratch_concurrently() {
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 4).with_pool(WorkerPool::new(3));
+        let mut data = vec![0.0f32; 32];
+        ctx.par_chunks(&mut data, 1, |i, c| {
+            let mut s = ctx.take(16, i as f32);
+            s[0] += 1.0;
+            c[0] = s[0];
+            ctx.put(s);
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as f32 + 1.0);
+        }
+        assert!(ctx.arena_bytes() > 0, "scratch came back to the shared arena");
     }
 }

@@ -1,0 +1,511 @@
+//! The persistent worker pool: long-lived, optionally core-pinned worker
+//! threads that parallel regions submit to, instead of spawning scoped
+//! threads per region.
+//!
+//! The paper's sliding kernels win precisely where planes are small —
+//! and there a ~10 µs thread spawn per parallel region is a measurable
+//! tax on a ~100 µs convolution (`benches/pool_overhead.rs` quantifies
+//! it). ZNNi's (arXiv:1606.05688) CPU conv throughput argument is built
+//! on workers staying resident with their memory local; SLIDE
+//! (arXiv:1903.03129) shows the same about deliberate thread/affinity
+//! management. [`WorkerPool`] is that refactor:
+//!
+//! * **Work stealing** — each worker owns an injector deque (a region
+//!   submission deals range `r` to deque `r % workers`);
+//!   a worker pops its own deque from the front and steals from the
+//!   others' backs when empty, so an uneven region drains at the speed
+//!   of the free workers, not the slowest assignment.
+//! * **Condvar parking** — workers with nothing to run park on a condvar
+//!   and are woken per submission: an idle pool burns no cycles.
+//! * **Region semantics** — the submitting thread runs the *last* range
+//!   itself (exactly like the scoped path it replaces), then blocks
+//!   until the pool has finished the rest. A panic in any range is
+//!   caught on the worker, re-thrown on the submitter once the region
+//!   has fully drained, and poisons **only that region** — the workers
+//!   survive and keep serving later regions.
+//! * **Nested regions run inline** — a parallel region opened *from* a
+//!   pool worker (a kernel called inside another kernel's chunk)
+//!   executes sequentially on that worker instead of re-entering the
+//!   pool, so nesting can never deadlock ([`on_pool_worker`]).
+//! * **Determinism** — the pool schedules *which thread* runs a range,
+//!   never *what* the range computes: partitioning stays the same
+//!   contiguous arithmetic as the scoped path, so results remain
+//!   bit-identical for any worker count, pooled or not.
+//!
+//! The pool is the default execution path ([`super::ExecCtx`] builds one
+//! lazily on first use); `SWCONV_NO_POOL=1` in the environment — or the
+//! CLI's `--no-pool`, which calls [`set_pooling_disabled`] — restores
+//! spawn-per-region scoped threads everywhere, as a fallback and as the
+//! baseline the overhead bench compares against.
+
+use super::affinity::CoreSet;
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Once};
+use std::thread::JoinHandle;
+
+/// One queued unit of work: range `range` of the region behind `region`.
+/// The raw pointer is sound because [`WorkerPool::run_region`] does not
+/// return (and therefore the region and everything it borrows stays
+/// alive) until every task of the region has finished.
+struct Task {
+    region: *const RegionCore,
+    range: usize,
+}
+
+// SAFETY: a Task only crosses threads inside the pool, and the region it
+// points to outlives its execution (the submitter blocks on the region's
+// completion latch); the closure it runs is `Sync` by construction.
+unsafe impl Send for Task {}
+
+/// The shared state of one parallel region, owned by the submitting
+/// thread's stack frame for the duration of [`WorkerPool::run_region`].
+struct RegionCore {
+    /// The range runner, lifetime-erased; see `run_region` for why the
+    /// erasure is sound.
+    run: &'static (dyn Fn(usize) + Sync),
+    /// Tasks handed to the pool and not yet finished.
+    pending: AtomicUsize,
+    /// First panic payload caught in any range (worker or submitter).
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+    /// Completion latch: set under the mutex by the worker that finishes
+    /// the last task, waited on by the submitter.
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+impl RegionCore {
+    /// Record the first panic of the region (later ones are dropped —
+    /// the scoped path it replaces also rethrows a single payload).
+    fn record_panic(&self, payload: Box<dyn Any + Send>) {
+        let mut slot = self.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+}
+
+/// What the pool's threads share.
+struct Inner {
+    /// One injector deque per worker; range `r` is dealt to deque
+    /// `r % workers`, owners pop the front, thieves steal the back.
+    queues: Vec<Mutex<VecDeque<Task>>>,
+    /// Parking lot: workers with no runnable task wait here.
+    sleep: Mutex<()>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+    /// Workers currently alive (incremented at thread start, decremented
+    /// on exit): the observable behind [`WorkerPool::live_workers`].
+    live: Arc<AtomicUsize>,
+}
+
+impl Inner {
+    /// Pop (own queue, front) or steal (other queues, back).
+    fn find_task(&self, me: usize) -> Option<Task> {
+        if let Some(t) = self.queues[me].lock().unwrap().pop_front() {
+            return Some(t);
+        }
+        let n = self.queues.len();
+        for off in 1..n {
+            let victim = (me + off) % n;
+            if let Some(t) = self.queues[victim].lock().unwrap().pop_back() {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    fn any_task(&self) -> bool {
+        self.queues.iter().any(|q| !q.lock().unwrap().is_empty())
+    }
+
+    /// Run one task: the range body under `catch_unwind`, then the
+    /// region's completion accounting. After the final `pending`
+    /// decrement's latch handoff the region pointer is never touched
+    /// again, which is what makes the submitter's stack ownership sound.
+    fn execute(&self, task: Task) {
+        // SAFETY: see `Task` — the region outlives this call.
+        let region = unsafe { &*task.region };
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| (region.run)(task.range))) {
+            region.record_panic(p);
+        }
+        if region.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last task: flip the latch *under its mutex* and notify
+            // while still holding it — the submitter can only observe
+            // `done` through the same mutex, so it cannot free the
+            // region before this worker is finished with it.
+            let mut done = region.done.lock().unwrap();
+            *done = true;
+            region.done_cv.notify_all();
+        }
+    }
+}
+
+/// A persistent pool of worker threads executing [`super::ExecCtx`]
+/// parallel regions. Construct once (or let `ExecCtx` build one lazily),
+/// share via `Arc`; dropping the last handle shuts the workers down and
+/// **joins** them.
+///
+/// # Examples
+///
+/// ```
+/// use swconv::exec::{ExecCtx, WorkerPool};
+/// use swconv::kernels::ConvAlgo;
+///
+/// let pool = WorkerPool::new(3);
+/// let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 4).with_pool(pool);
+/// let mut data = vec![0.0f32; 8];
+/// ctx.par_chunks(&mut data, 2, |i, c| c.fill(i as f32));
+/// assert_eq!(data, [0., 0., 1., 1., 2., 2., 3., 3.]);
+/// // Dropping the last handle (the ctx's) joins the three workers.
+/// ```
+pub struct WorkerPool {
+    inner: Arc<Inner>,
+    joins: Mutex<Vec<JoinHandle<()>>>,
+    workers: usize,
+    cores: Option<CoreSet>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` (clamped to ≥ 1) resident worker threads, named
+    /// `swconv-pool-w<i>`, with no core pinning.
+    pub fn new(workers: usize) -> Arc<WorkerPool> {
+        Self::build(workers, None)
+    }
+
+    /// [`WorkerPool::new`] with affinity: worker `w` pins itself to core
+    /// `cores.nth_wrapped(w)` before serving, so the scratch it
+    /// first-touches is resident on its own core's memory node.
+    /// Pinning is best-effort ([`super::affinity::pin_current`]).
+    pub fn pinned(workers: usize, cores: CoreSet) -> Arc<WorkerPool> {
+        Self::build(workers, if cores.is_empty() { None } else { Some(cores) })
+    }
+
+    fn build(workers: usize, cores: Option<CoreSet>) -> Arc<WorkerPool> {
+        let workers = workers.max(1);
+        let inner = Arc::new(Inner {
+            queues: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            sleep: Mutex::new(()),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            live: Arc::new(AtomicUsize::new(0)),
+        });
+        let mut joins = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let inner = Arc::clone(&inner);
+            let pin = cores.as_ref().map(|c| c.nth_wrapped(w));
+            let join = std::thread::Builder::new()
+                .name(format!("swconv-pool-w{w}"))
+                .spawn(move || worker_main(&inner, w, pin))
+                .expect("spawn pool worker");
+            joins.push(join);
+        }
+        // Wait (bounded, sleeping on the pool's own condvar — each
+        // worker signals after incrementing `live`) for the workers to
+        // come up before handing the pool out: the first region then
+        // fans out over live, parked workers — exactly the concurrency
+        // the scoped path had — so the arena's first-call scratch
+        // high-water mark stays deterministic instead of depending on
+        // thread-spawn latency.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(1);
+        let mut parked = inner.sleep.lock().unwrap();
+        while inner.live.load(Ordering::Acquire) < workers {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = inner.wake.wait_timeout(parked, deadline - now).unwrap();
+            parked = guard;
+        }
+        drop(parked);
+        Arc::new(WorkerPool { inner, joins: Mutex::new(joins), workers, cores })
+    }
+
+    /// Resident worker-thread count (the submitter is not counted: a
+    /// region of `workers() + 1` ranges still has every range running
+    /// concurrently).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The core set workers pinned themselves to, if any.
+    pub fn cores(&self) -> Option<&CoreSet> {
+        self.cores.as_ref()
+    }
+
+    /// Worker threads currently alive. Rises to [`WorkerPool::workers`]
+    /// as the threads start and — because `Drop` joins — is exactly zero
+    /// once the last pool handle is gone.
+    pub fn live_workers(&self) -> usize {
+        self.inner.live.load(Ordering::Acquire)
+    }
+
+    /// A probe for the live-worker count that outlives the pool: the
+    /// lifecycle tests hold one across `drop(pool)` to assert the drop
+    /// actually joined every worker.
+    pub fn live_workers_probe(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.inner.live)
+    }
+
+    /// Execute one parallel region of `ranges` ranges: ranges
+    /// `0..ranges-1` are dealt to the worker deques, range `ranges - 1`
+    /// runs on the calling thread (mirroring the scoped path's "last
+    /// range on the caller"), and the call returns only when every range
+    /// has finished. If any range panicked, the first payload is
+    /// re-thrown here — after the region has fully drained, so the
+    /// borrows inside `run` stay valid for the stragglers.
+    pub(crate) fn run_region(&self, ranges: usize, run: &(dyn Fn(usize) + Sync)) {
+        if ranges == 0 {
+            return;
+        }
+        if ranges == 1 {
+            run(0);
+            return;
+        }
+        // SAFETY (lifetime erasure): the `'static` is a lie told only to
+        // the type system. Every path out of this function — normal
+        // return, submitter panic, worker panic — first waits for
+        // `pending` to reach zero, so no worker can dereference `run`
+        // (or anything it borrows) after this frame is gone.
+        let run_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(run) };
+        let submitted = ranges - 1;
+        let region = RegionCore {
+            run: run_static,
+            pending: AtomicUsize::new(submitted),
+            panic: Mutex::new(None),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        };
+        for r in 0..submitted {
+            let queue = &self.inner.queues[r % self.workers];
+            queue.lock().unwrap().push_back(Task { region: &region, range: r });
+        }
+        {
+            // Taking the sleep lock before notifying closes the race
+            // with a worker that found nothing and is about to park: it
+            // re-checks the queues under this same lock. One wake per
+            // submitted range (capped at the pool size) — waking the
+            // whole pool for a two-range region would send every loser
+            // through a futile scan-and-repark on each small conv, the
+            // very overhead this pool exists to retire. Busy workers
+            // need no signal: they re-run find_task after every task.
+            let _parked = self.inner.sleep.lock().unwrap();
+            for _ in 0..submitted.min(self.workers) {
+                self.inner.wake.notify_one();
+            }
+        }
+        // The caller's own range: caught so an early submitter panic
+        // cannot unwind past workers still borrowing the region.
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| run(ranges - 1))) {
+            region.record_panic(p);
+        }
+        let mut done = region.done.lock().unwrap();
+        while !*done {
+            done = region.done_cv.wait(done).unwrap();
+        }
+        drop(done);
+        if let Some(p) = region.panic.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Shut down and **join** every worker: after the last `Arc` handle
+    /// is gone no pool thread is left running (the lifecycle tests pin
+    /// this via [`WorkerPool::live_workers_probe`]).
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        {
+            let _parked = self.inner.sleep.lock().unwrap();
+            self.inner.wake.notify_all();
+        }
+        for join in self.joins.lock().unwrap().drain(..) {
+            let _ = join.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.workers)
+            .field("cores", &self.cores)
+            .finish()
+    }
+}
+
+/// Worker thread body: pin if asked, mark this thread as a pool worker
+/// (so nested regions run inline), then pop/steal/park until shutdown.
+fn worker_main(inner: &Arc<Inner>, me: usize, pin: Option<usize>) {
+    if let Some(core) = pin {
+        // Best-effort: a sandbox that rejects the syscall leaves this
+        // worker floating, which is slower but never wrong.
+        super::affinity::pin_current_to_core(core);
+    }
+    WORKER_SLOT.with(|slot| slot.set(Some(me)));
+    inner.live.fetch_add(1, Ordering::AcqRel);
+    {
+        // Signal the constructor's startup wait (stray wakes just send
+        // parked siblings through a re-check; startup-only, harmless).
+        let _parked = inner.sleep.lock().unwrap();
+        inner.wake.notify_all();
+    }
+    loop {
+        if let Some(task) = inner.find_task(me) {
+            inner.execute(task);
+            continue;
+        }
+        let parked = inner.sleep.lock().unwrap();
+        // Drain-before-exit: shutdown only stops the worker once no
+        // queued region work remains (a region submitter still holds a
+        // pool handle, so this is belt and braces, not load-bearing).
+        if inner.shutdown.load(Ordering::Acquire) && !inner.any_task() {
+            break;
+        }
+        if inner.any_task() {
+            continue;
+        }
+        let _parked = inner.wake.wait(parked).unwrap();
+    }
+    inner.live.fetch_sub(1, Ordering::AcqRel);
+}
+
+thread_local! {
+    /// `Some(worker index)` on pool worker threads, `None` elsewhere.
+    static WORKER_SLOT: std::cell::Cell<Option<usize>> = const { std::cell::Cell::new(None) };
+}
+
+/// The pool-worker slot of the current thread, if it is one: the arena
+/// uses it to prefer handing a worker back the buffers it first-touched.
+pub(crate) fn current_worker_slot() -> Option<usize> {
+    WORKER_SLOT.with(|slot| slot.get())
+}
+
+/// Whether the current thread is a pool worker. Parallel regions opened
+/// on a pool worker run inline (sequentially) instead of re-entering a
+/// pool, so nested `par_chunks` cannot deadlock.
+pub fn on_pool_worker() -> bool {
+    current_worker_slot().is_some()
+}
+
+static POOLING_DISABLED: AtomicBool = AtomicBool::new(false);
+static POOLING_INIT: Once = Once::new();
+
+/// Whether persistent pools are globally disabled — by `SWCONV_NO_POOL`
+/// in the environment (any value but `0` or empty), or by
+/// [`set_pooling_disabled`] (the CLI's `--no-pool`). Disabled pooling
+/// restores the scoped spawn-per-region path bit for bit.
+pub fn pooling_disabled() -> bool {
+    POOLING_INIT.call_once(|| {
+        let from_env =
+            matches!(std::env::var("SWCONV_NO_POOL"), Ok(v) if !v.is_empty() && v != "0");
+        POOLING_DISABLED.store(from_env, Ordering::Relaxed);
+    });
+    POOLING_DISABLED.load(Ordering::Relaxed)
+}
+
+/// Globally enable/disable persistent pools (overrides the environment;
+/// affects contexts whose pool has not been resolved yet, not pools
+/// already running).
+pub fn set_pooling_disabled(disabled: bool) {
+    POOLING_INIT.call_once(|| {});
+    POOLING_DISABLED.store(disabled, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn region_covers_every_range_exactly_once() {
+        let pool = WorkerPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..10).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_region(10, &|r| {
+            hits[r].fetch_add(1, Ordering::Relaxed);
+        });
+        for (r, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "range {r}");
+        }
+    }
+
+    #[test]
+    fn single_range_runs_inline() {
+        let pool = WorkerPool::new(2);
+        let mut x = 0;
+        // A 1-range region must not need Sync state: it runs here.
+        pool.run_region(1, &|r| assert_eq!(r, 0));
+        x += 1;
+        assert_eq!(x, 1);
+        pool.run_region(0, &|_| panic!("no ranges, no calls"));
+    }
+
+    #[test]
+    fn workers_park_and_wake_across_many_regions() {
+        let pool = WorkerPool::new(2);
+        let sum = AtomicUsize::new(0);
+        for _ in 0..100 {
+            pool.run_region(4, &|r| {
+                sum.fetch_add(r + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(sum.load(Ordering::Relaxed), 100 * (1 + 2 + 3 + 4));
+    }
+
+    #[test]
+    fn panic_poisons_only_its_region() {
+        let pool = WorkerPool::new(2);
+        let survivors = AtomicUsize::new(0);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_region(6, &|r| {
+                if r == 2 {
+                    panic!("chunk 2 exploded");
+                }
+                survivors.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(r.is_err(), "the region's submitter must see the panic");
+        // The region drained fully before rethrowing…
+        assert_eq!(survivors.load(Ordering::Relaxed), 5);
+        // …and the pool still serves later regions with all workers.
+        assert_eq!(pool.live_workers(), 2);
+        let ok = AtomicUsize::new(0);
+        pool.run_region(6, &|_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn drop_joins_every_worker() {
+        let pool = WorkerPool::new(3);
+        let probe = pool.live_workers_probe();
+        // Wait for startup (threads race the constructor's return).
+        let t0 = std::time::Instant::now();
+        while probe.load(Ordering::Acquire) < 3 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::yield_now();
+        }
+        assert_eq!(probe.load(Ordering::Acquire), 3);
+        drop(pool);
+        // Drop joined, so this is exact, not eventual.
+        assert_eq!(probe.load(Ordering::Acquire), 0);
+    }
+
+    #[test]
+    fn worker_count_is_clamped_and_reported() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 1);
+        assert!(pool.cores().is_none());
+        let pinned = WorkerPool::pinned(2, CoreSet::from_cores(&[0]));
+        assert_eq!(pinned.cores().map(|c| c.cores()), Some(&[0][..]));
+        let unset = WorkerPool::pinned(2, CoreSet::from_cores(&[]));
+        assert!(unset.cores().is_none());
+    }
+
+    // The global disable flag is exercised (together with the lazy pool
+    // it gates) by `tests/pool_flag.rs`, a dedicated integration binary:
+    // its own process, so flipping the flag races nothing.
+}

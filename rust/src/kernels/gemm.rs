@@ -48,10 +48,12 @@ pub fn pack_b_len(n: usize) -> usize {
 /// `C += A · B` for row-major `A[M×K]`, `B[K×N]`, `C[M×N]`.
 ///
 /// `C` must be pre-initialised (zeros for a plain product); the routine
-/// accumulates into it. Packing scratch comes from thread-locals; hot
-/// paths that spawn short-lived worker threads (the `exec` subsystem)
-/// call [`sgemm_with_scratch`] with arena buffers instead, so packing
-/// never re-allocates per parallel region.
+/// accumulates into it. Packing scratch comes from thread-locals; the
+/// `exec` subsystem's parallel regions call [`sgemm_with_scratch`] with
+/// arena buffers instead — pool workers are long-lived now, but their
+/// thread-locals would still pin one packing buffer per worker for the
+/// pool's lifetime, while arena scratch is shared, accounted and
+/// trimmable.
 ///
 /// # Panics
 /// If any slice is shorter than its shape requires.

@@ -131,9 +131,11 @@ pub fn conv2d_im2col_ctx(
     // Per-worker scratch (column matrix + GEMM packing buffers): one
     // arena checkout per parallel region (im2col_plane and the packers
     // overwrite every element they read, so reuse across items is safe),
-    // keeping steady-state arena traffic allocation-free — including on
-    // freshly spawned worker threads, where sgemm's thread-locals would
-    // otherwise re-allocate every call.
+    // keeping steady-state arena traffic allocation-free. The arena —
+    // not sgemm's thread-locals — is what makes this hold on pool
+    // workers too: checked-in buffers outlive the region and stay
+    // trimmable, instead of each resident worker pinning its own
+    // packing scratch forever.
     ctx.par_chunks_with(
         out.as_mut_slice(),
         c_out_g * ohw,

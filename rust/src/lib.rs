@@ -19,12 +19,16 @@
 //!   adding a dtype is a trait impl, not a fork of the kernel tree.
 //! * [`exec`] — the execution-context subsystem: [`exec::ExecCtx`] carries
 //!   the algorithm choice, the serving element type
-//!   ([`tensor::Dtype`]), a worker-thread count, a dtype-generic
-//!   reusable scratch arena (byte-based retention accounting) and
-//!   (optionally) the machine's measured dispatch profile; every kernel
-//!   has a `*_ctx` variant that parallelises over independent output
-//!   planes/rows and draws its padded/scratch/column buffers from the
-//!   arena instead of allocating per call.
+//!   ([`tensor::Dtype`]), a worker-thread count backed by a persistent
+//!   work-stealing worker pool ([`exec::WorkerPool`] — built lazily,
+//!   optionally pinned to cores via [`exec::affinity`]; scoped
+//!   spawn-per-region threads remain as the `SWCONV_NO_POOL=1` /
+//!   `--no-pool` fallback, bit-identical), a dtype-generic reusable
+//!   scratch arena (byte-based retention accounting) and (optionally)
+//!   the machine's measured dispatch profile; every kernel has a `*_ctx`
+//!   variant that parallelises over independent output planes/rows and
+//!   draws its padded/scratch/column buffers from the arena instead of
+//!   allocating per call.
 //! * [`kernels`] — the paper's contribution and its baselines:
 //!   sliding-window 1-D/2-D convolution (generic, compound, and custom
 //!   k=3/k=5 kernels), sliding max/avg pooling, plus the `im2col` + blocked

@@ -15,15 +15,19 @@
 //!
 //! `bench-fig1`, `bench-fig2`, `run-model` and `serve` accept
 //! `--profile <path>` to dispatch from a cached profile (a missing or
-//! corrupt file falls back to the paper's policy with a warning).
+//! corrupt file falls back to the paper's policy with a warning), plus
+//! `--pin <cores>` (confine/pin to a core set) and `--no-pool` (scoped
+//! spawn-per-region threads instead of the persistent worker pool).
+//! `autotune --dtype i8` additionally fills the profile's int8 buckets.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use swconv::autotune::{
-    autotune, default_profile_path, profile_table, AutotuneOpts, DispatchProfile,
+    autotune, default_profile_path, profile_table, AutotuneOpts, DispatchProfile, ProfileEntry,
 };
-use swconv::coordinator::{BackendSpec, BatchPolicy, Coordinator};
+use swconv::coordinator::{BackendSpec, BatchPolicy, Coordinator, PinPolicy};
 use swconv::error::{anyhow, bail, Context, Result};
+use swconv::exec::{affinity, pool, CoreSet};
 use swconv::harness::report::{dur, f3, Table};
 use swconv::harness::{
     bench, fig1_speedup_sweep_dtyped, fig2_throughput_sweep_dtyped, machine_peaks, sweep,
@@ -34,7 +38,11 @@ use swconv::nn::{zoo, ExecCtx};
 use swconv::runtime::{engine::default_artifacts_dir, Engine};
 use swconv::tensor::{Dtype, Tensor};
 
-/// Tiny flag parser: `--key value` pairs after the subcommand.
+/// Flags that take no value (present = on).
+const BOOL_FLAGS: [&str; 1] = ["no-pool"];
+
+/// Tiny flag parser: `--key value` pairs after the subcommand, plus the
+/// valueless [`BOOL_FLAGS`].
 struct Args {
     cmd: String,
     kv: Vec<(String, String)>,
@@ -50,6 +58,10 @@ impl Args {
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow!("expected --flag, got '{k}'"))?
                 .to_string();
+            if BOOL_FLAGS.contains(&k.as_str()) {
+                kv.push((k, "1".to_string()));
+                continue;
+            }
             let v = it.next().ok_or_else(|| anyhow!("--{k} needs a value"))?;
             kv.push((k, v));
         }
@@ -58,6 +70,10 @@ impl Args {
 
     fn get(&self, key: &str) -> Option<&str> {
         self.kv.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.get(key).is_some()
     }
 
     fn usize(&self, key: &str, default: usize) -> Result<usize> {
@@ -89,6 +105,33 @@ fn parse_dtype(args: &Args) -> Result<Dtype> {
             Ok(d)
         }
     }
+}
+
+/// `--pin 0-3,8 | auto` as a serving policy: replica `i` of a tier gets
+/// core slice `i`. Absent ⇒ no pinning.
+fn parse_pin_policy(args: &Args) -> Result<PinPolicy> {
+    match args.get("pin") {
+        None => Ok(PinPolicy::None),
+        Some("auto") => Ok(PinPolicy::Auto),
+        Some(s) => Ok(PinPolicy::Cores(CoreSet::parse(s)?)),
+    }
+}
+
+/// `--pin` for the single-process commands (benches, run-model): pin the
+/// main thread to the set — lazily built pool workers and scoped threads
+/// both inherit the mask, so the whole run is confined to those cores.
+fn apply_pin_current(args: &Args) -> Result<()> {
+    let set = match args.get("pin") {
+        None => return Ok(()),
+        Some("auto") => CoreSet::all(swconv::exec::available_threads()),
+        Some(s) => CoreSet::parse(s)?,
+    };
+    if affinity::pin_current(&set) {
+        eprintln!("pinned to cores {set}");
+    } else {
+        eprintln!("warning: could not pin to cores {set} (unsupported platform or sandbox)");
+    }
+    Ok(())
 }
 
 fn parse_ks(args: &Args) -> Result<Vec<usize>> {
@@ -123,6 +166,7 @@ fn cmd_fig1(args: &Args) -> Result<()> {
     let ks = parse_ks(args)?;
     let profile = parse_profile(args);
     let dtype = parse_dtype(args)?;
+    apply_pin_current(args)?;
     eprintln!("fig1: c={c} hw={hw} ks={ks:?} threads={threads} dtype={}", dtype.name());
     let rows =
         fig1_speedup_sweep_dtyped(&ks, threads, profile, dtype, |k| ConvCase::square(c, hw, k));
@@ -157,6 +201,7 @@ fn cmd_fig2(args: &Args) -> Result<()> {
     let hw = args.usize("hw", 64)?;
     let threads = parse_threads(args)?;
     let ks = parse_ks(args)?;
+    apply_pin_current(args)?;
     let peaks = machine_peaks();
     eprintln!(
         "fig2: c={c} hw={hw} threads={threads}; machine peak {:.1} GFLOP/s, bw {:.1} GB/s, ridge {:.2} FLOP/B",
@@ -204,7 +249,10 @@ fn cmd_peaks() -> Result<()> {
 
 /// `autotune` — measure this machine's dispatch crossovers and cache
 /// them (default `target/autotune/profile.json`) for every later
-/// `--profile` consumer.
+/// `--profile` consumer. `--dtype i8` runs the int8 pass (sliding-q8 vs
+/// gemm-q8); per-dtype passes **merge** into the cache, so
+/// `autotune && autotune --dtype i8` leaves one profile with both
+/// families' buckets.
 fn cmd_autotune(args: &Args) -> Result<()> {
     let base = AutotuneOpts::default();
     let ks = match args.get("ks") {
@@ -224,21 +272,48 @@ fn cmd_autotune(args: &Args) -> Result<()> {
         }
         None => base.threads.clone(),
     };
+    let dtype = parse_dtype(args)?;
+    if !matches!(dtype, Dtype::F32 | Dtype::I8) {
+        bail!(
+            "autotune measures the f32 or i8 kernel families; '{}' has no \
+             family split to tune",
+            dtype.name()
+        );
+    }
+    apply_pin_current(args)?;
     let opts = AutotuneOpts {
         c: args.usize("c", base.c)?,
         hw: args.usize("hw", base.hw)?,
         ks,
         threads,
+        dtype,
         verbose: true,
         ..base
     };
     let out = args.get("out").map(std::path::PathBuf::from).unwrap_or_else(default_profile_path);
 
     eprintln!(
-        "autotune: c={} hw={} ks={:?} threads={:?}",
-        opts.c, opts.hw, opts.ks, opts.threads
+        "autotune: c={} hw={} ks={:?} threads={:?} dtype={}",
+        opts.c,
+        opts.hw,
+        opts.ks,
+        opts.threads,
+        dtype.name()
     );
-    let profile = autotune(&opts);
+    let measured = autotune(&opts);
+    // Merge with the cache: this pass replaces its own dtype's buckets
+    // and keeps every other dtype's, so f32 and i8 passes accumulate.
+    let mut entries: Vec<ProfileEntry> = Vec::new();
+    if out.exists() {
+        match DispatchProfile::load(&out) {
+            Ok(prev) => {
+                entries.extend(prev.entries().iter().filter(|e| e.dtype != dtype).copied());
+            }
+            Err(e) => eprintln!("warning: replacing unreadable profile {}: {e}", out.display()),
+        }
+    }
+    entries.extend(measured.entries().iter().copied());
+    let profile = DispatchProfile::from_entries(entries);
     println!("{}", profile_table(&profile).render());
     profile.save(&out).with_context(|| format!("writing {}", out.display()))?;
     println!(
@@ -254,6 +329,7 @@ fn cmd_run_model(args: &Args) -> Result<()> {
     let name = args.get("model").unwrap_or("simple-cnn");
     let batch = args.usize("batch", 1)?;
     let threads = parse_threads(args)?;
+    apply_pin_current(args)?;
     let model = zoo::by_name(name, 10, 42)
         .ok_or_else(|| anyhow!("unknown model '{name}' (try {:?})", zoo::MODEL_NAMES))?;
     let dtype = parse_dtype(args)?;
@@ -328,6 +404,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let trim_idle_ms = args.usize("trim-idle-ms", 0)?;
     // --dtype: every tier serves in this element type (f32 default).
     let dtype = parse_dtype(args)?;
+    // --pin: replica i of every tier runs on core slice i ("auto" =
+    // round-robin all hardware threads); each native replica's kernel
+    // threads are pooled and pinned inside its slice.
+    let pinning = parse_pin_policy(args)?;
     // --profile: every tier dispatches from the cached crossover table,
     // and a third "tuned" backend (ConvAlgo::Tuned) joins the race.
     let profile = parse_profile(args);
@@ -344,7 +424,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None
         };
         let mut s = BackendSpec::native_retention(key, model, ctx, trim_after, trim_idle)
-            .with_dtype(dtype);
+            .with_dtype(dtype)
+            .with_pinning(pinning.clone());
         if let Some(p) = &profile {
             s = s.with_profile(Arc::clone(p));
         }
@@ -365,8 +446,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
 
     eprintln!(
-        "serve: {replicas} replica(s) x {threads} kernel thread(s) per backend, dtype {}",
-        dtype.name()
+        "serve: {replicas} replica(s) x {threads} kernel thread(s) per backend, dtype {}{}",
+        dtype.name(),
+        match &pinning {
+            PinPolicy::None => String::new(),
+            PinPolicy::Auto => ", pinned (auto slices)".to_string(),
+            PinPolicy::Cores(set) => format!(", pinned to {set}"),
+        }
     );
     for backend in backend_names {
         let t0 = Instant::now();
@@ -443,18 +529,18 @@ USAGE: swconv <command> [--flag value]...
 
 COMMANDS
   bench-fig1       [--c 4] [--hw 64] [--ks 2,3,...] [--threads N] [--csv out.csv]
-                   [--profile PATH] [--dtype f32|bf16|i8]
+                   [--profile PATH] [--dtype f32|bf16|i8] [--pin CORES] [--no-pool]
   bench-fig2       [--c 4] [--hw 64] [--ks 2,3,...] [--threads N] [--csv out.csv]
-                   [--profile PATH] [--dtype f32|bf16|i8]
+                   [--profile PATH] [--dtype f32|bf16|i8] [--pin CORES] [--no-pool]
   peaks
-  autotune         [--c 4] [--hw 64] [--ks 2,3,...] [--threads N]
-                   [--out target/autotune/profile.json]
+  autotune         [--c 4] [--hw 64] [--ks 2,3,...] [--threads N] [--dtype f32|i8]
+                   [--out target/autotune/profile.json] [--pin CORES] [--no-pool]
   run-model        [--model NAME] [--batch N] [--threads N] [--profile PATH]
-                   [--dtype f32|bf16|i8]
+                   [--dtype f32|bf16|i8] [--pin CORES] [--no-pool]
   summary          [--model NAME] [--batch N]
   serve            [--model NAME] [--requests N] [--max-batch N] [--max-wait-ms MS]
                    [--threads N] [--replicas N] [--trim-mb N] [--trim-idle-ms MS]
-                   [--profile PATH] [--dtype f32|bf16|i8]
+                   [--profile PATH] [--dtype f32|bf16|i8] [--pin CORES|auto] [--no-pool]
   artifacts-check  [--dir artifacts]
 
   --threads 0 means \"use all hardware threads\"; the default 1 matches
@@ -466,6 +552,16 @@ COMMANDS
   --trim-idle-ms drops all retained scratch once a replica has been
   quiet that long (0 = never).
 
+  Kernel threads run on a persistent, work-stealing worker pool per
+  execution context (one spawn at startup instead of one per parallel
+  region). --no-pool — or SWCONV_NO_POOL=1 — restores scoped
+  spawn-per-region threads; results are bit-identical either way.
+  --pin 0-3,8 confines a run to those cores (Linux only, best-effort);
+  on serve, --pin slices the set round-robin across each tier's
+  replicas — replica i pins to slice i and pools its kernel threads
+  pinned inside the slice (--pin auto slices all hardware threads), so
+  first-touched scratch stays on the replica's own cores/NUMA node.
+
   --dtype picks the element type (default f32, bit-exact with the
   paper's kernels): bf16 halves storage traffic with f32 accumulation;
   i8 serves quantized — conv layers dynamically quantize activations
@@ -476,10 +572,12 @@ COMMANDS
   `cargo bench --bench quant_slide`, which emits BENCH_quant.json).
 
   autotune races direct/GEMM/sliding-generic/compound/custom kernels per
-  (filter width, thread count) and caches the winners; --profile PATH
-  makes bench/run-model/serve dispatch from that cache (run-model and
-  serve then also race a \"tuned\" series/backend). A missing or corrupt
-  profile falls back to the paper's k=17 policy with a warning.
+  (filter width, thread count) and caches the winners; with --dtype i8
+  it instead races int8 sliding vs the int8 im2col+GEMM baseline and
+  fills the cache's i8 buckets (passes merge, so run both). --profile
+  PATH makes bench/run-model/serve dispatch from that cache (run-model
+  and serve then also race a \"tuned\" series/backend). A missing or
+  corrupt profile falls back to the paper's k=17 policy with a warning.
 
 MODELS: {:?}",
         zoo::MODEL_NAMES
@@ -488,6 +586,13 @@ MODELS: {:?}",
 
 fn main() -> Result<()> {
     let args = Args::parse()?;
+    // --no-pool (or SWCONV_NO_POOL=1 in the environment) restores the
+    // scoped spawn-per-region threads for the whole process; results
+    // are bit-identical either way.
+    if args.flag("no-pool") {
+        pool::set_pooling_disabled(true);
+        eprintln!("persistent worker pools disabled (--no-pool): scoped threads per region");
+    }
     match args.cmd.as_str() {
         "bench-fig1" => cmd_fig1(&args),
         "bench-fig2" => cmd_fig2(&args),

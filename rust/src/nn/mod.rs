@@ -4,7 +4,7 @@
 //! network families (SqueezeNet, MobileNet, ShuffleNet) whose filter-size
 //! choices interact with the Sliding Window advantage. This module lets us
 //! run those interactions end-to-end: every [`layers::Conv2d`] takes its
-//! algorithm — and now its thread pool and scratch arena, see
+//! algorithm — and its persistent worker pool and scratch arena, see
 //! [`crate::exec`] — from the per-request [`ExecCtx`], so the same model
 //! can be served with GEMM or Sliding Window backends (single- or
 //! multi-core) and compared on identical weights (the coordinator's

@@ -1,0 +1,164 @@
+//! Integration tests for the persistent worker pool: lifecycle
+//! (drop joins, panic poisons one region only, nesting runs inline) and
+//! the acceptance gate that pooled execution is bit-identical to the
+//! scoped-thread seed behaviour for every algorithm at every thread
+//! count.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use swconv::exec::{ExecCtx, WorkerPool};
+use swconv::kernels::{conv2d_ctx, Conv2dParams, ConvAlgo};
+use swconv::nn::zoo;
+use swconv::tensor::Tensor;
+
+/// ACCEPTANCE — for every `ConvAlgo` at every tested thread count, a
+/// pooled ctx and a scoped (`without_pool`) ctx produce bit-identical
+/// conv outputs, and both match the single-threaded seed result.
+#[test]
+fn pooled_and_scoped_convs_bit_identical_for_every_algo() {
+    let x = Tensor::randn(&[2, 3, 20, 22], 1000);
+    let w = Tensor::randn(&[6, 3, 5, 5], 1001);
+    let bias: Vec<f32> = (0..6).map(|i| 0.05 * i as f32).collect();
+    let p = Conv2dParams::same(5);
+    for algo in ConvAlgo::ALL {
+        let seed = {
+            let one = ExecCtx::with_threads(algo, 1).without_pool();
+            conv2d_ctx(&x, &w, Some(&bias), &p, &one)
+        };
+        for threads in [1usize, 2, 7] {
+            let scoped = ExecCtx::with_threads(algo, threads).without_pool();
+            let ys = conv2d_ctx(&x, &w, Some(&bias), &p, &scoped);
+            assert_eq!(
+                seed.as_slice(),
+                ys.as_slice(),
+                "{algo:?} threads={threads}: scoped != single-threaded seed"
+            );
+            // An explicitly attached pool of `threads` workers…
+            let pooled = ExecCtx::with_threads(algo, threads).with_pool(WorkerPool::new(threads));
+            let yp = conv2d_ctx(&x, &w, Some(&bias), &p, &pooled);
+            assert_eq!(
+                seed.as_slice(),
+                yp.as_slice(),
+                "{algo:?} threads={threads}: pooled != scoped seed"
+            );
+            // …and the default (lazily resolved) path, whatever it is
+            // under the current SWCONV_NO_POOL setting.
+            let default_ctx = ExecCtx::with_threads(algo, threads);
+            let yd = conv2d_ctx(&x, &w, Some(&bias), &p, &default_ctx);
+            assert_eq!(seed.as_slice(), yd.as_slice(), "{algo:?} threads={threads}: default path");
+        }
+    }
+}
+
+/// Pool workers of sizes {1, 2, 7} all reproduce the scoped seed on a
+/// whole-model forward (the serving configuration).
+#[test]
+fn model_forward_bit_identical_across_pool_sizes() {
+    let m = zoo::simple_cnn(10, 7);
+    let x = Tensor::randn(&[3, 1, 28, 28], 1010);
+    let seed = m.forward(&x, &ExecCtx::with_threads(ConvAlgo::Sliding, 4).without_pool());
+    for workers in [1usize, 2, 7] {
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 4).with_pool(WorkerPool::new(workers));
+        let y = m.forward(&x, &ctx);
+        assert_eq!(seed.as_slice(), y.as_slice(), "pool of {workers} workers diverged");
+    }
+}
+
+/// LIFECYCLE — dropping the last pool handle joins every worker thread:
+/// the live count is exactly zero right after `drop`, with no grace
+/// period.
+#[test]
+fn dropping_the_pool_joins_its_workers() {
+    let pool = WorkerPool::new(4);
+    let probe = pool.live_workers_probe();
+    // Construction waits (bounded) for startup; allow a loaded CI box a
+    // little longer before asserting all four workers are live.
+    let t0 = std::time::Instant::now();
+    while probe.load(Ordering::Acquire) < 4 && t0.elapsed().as_secs() < 5 {
+        std::thread::yield_now();
+    }
+    assert_eq!(pool.live_workers(), 4, "workers are up before first use");
+    // Give the ctx a handle too: the pool must survive until the *last*
+    // handle is gone.
+    let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 5).with_pool(pool);
+    let mut data = vec![0.0f32; 10];
+    ctx.par_chunks(&mut data, 2, |i, c| c.fill(i as f32));
+    assert_eq!(probe.load(Ordering::Acquire), 4, "ctx handle keeps workers alive");
+    drop(ctx);
+    assert_eq!(probe.load(Ordering::Acquire), 0, "drop must join every worker");
+}
+
+/// LIFECYCLE — a panic in one chunk fails that region's caller and only
+/// it: earlier regions' results stand, the workers survive, and the
+/// same ctx serves later regions.
+#[test]
+fn chunk_panic_poisons_region_and_pool_survives() {
+    let pool = WorkerPool::new(2);
+    let probe = pool.live_workers_probe();
+    let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 3).with_pool(pool);
+    let x = Tensor::randn(&[1, 2, 12, 12], 1020);
+    let w = Tensor::randn(&[4, 2, 3, 3], 1021);
+    let p = Conv2dParams::same(3);
+    let before = conv2d_ctx(&x, &w, None, &p, &ctx);
+
+    let mut data = vec![0.0f32; 12];
+    let poisoned = catch_unwind(AssertUnwindSafe(|| {
+        ctx.par_chunks(&mut data, 1, |i, _c| {
+            if i == 7 {
+                panic!("item 7 exploded");
+            }
+        });
+    }));
+    assert!(poisoned.is_err(), "the panic must surface on the submitter");
+    assert_eq!(probe.load(Ordering::Acquire), 2, "workers must survive a region panic");
+
+    let after = conv2d_ctx(&x, &w, None, &p, &ctx);
+    assert_eq!(before.as_slice(), after.as_slice(), "pool must keep serving correctly");
+}
+
+/// LIFECYCLE — nested parallel regions (a ctx used from inside another
+/// ctx's chunk body) complete without deadlock: the inner region runs
+/// inline on the pool worker.
+#[test]
+fn nested_regions_from_pool_workers_do_not_deadlock() {
+    let outer = ExecCtx::with_threads(ConvAlgo::Sliding, 4).with_pool(WorkerPool::new(3));
+    let inner = ExecCtx::with_threads(ConvAlgo::Sliding, 4).with_pool(WorkerPool::new(3));
+    let x = Tensor::randn(&[1, 2, 10, 10], 1030);
+    let w = Tensor::randn(&[2, 2, 3, 3], 1031);
+    let p = Conv2dParams::same(3);
+    let expect = conv2d_ctx(&x, &w, None, &p, &inner);
+
+    let mut out: Vec<f32> = vec![0.0; 8 * expect.as_slice().len()];
+    let chunk = expect.as_slice().len();
+    outer.par_chunks(&mut out, chunk, |_i, c| {
+        // A full convolution from inside a chunk: its own parallel
+        // region must run inline on this worker, not re-enter a pool.
+        let y = conv2d_ctx(&x, &w, None, &p, &inner);
+        c.copy_from_slice(y.as_slice());
+    });
+    for i in 0..8 {
+        assert_eq!(
+            &out[i * chunk..(i + 1) * chunk],
+            expect.as_slice(),
+            "nested conv {i} diverged"
+        );
+    }
+}
+
+/// The arena stays allocation-free in the steady state on the pooled
+/// path, exactly as it did on scoped threads.
+#[test]
+fn pooled_steady_state_allocates_nothing() {
+    let x = Tensor::randn(&[2, 3, 32, 32], 1040);
+    let w = Tensor::randn(&[8, 3, 5, 5], 1041);
+    let p = Conv2dParams::same(5);
+    let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 4).with_pool(WorkerPool::new(3));
+    let warm = conv2d_ctx(&x, &w, None, &p, &ctx);
+    let after_warmup = ctx.alloc_events();
+    assert!(after_warmup > 0, "warm-up must have allocated scratch");
+    for _ in 0..3 {
+        let y = conv2d_ctx(&x, &w, None, &p, &ctx);
+        assert_eq!(y.as_slice(), warm.as_slice());
+    }
+    assert_eq!(ctx.alloc_events(), after_warmup, "pooled steady state must not allocate");
+}

@@ -1,0 +1,33 @@
+//! The process-global pooling switch, in its own integration binary on
+//! purpose: cargo gives each integration-test file its own process, and
+//! this is the only test in it — so flipping the global flag can never
+//! race another test's lazy pool resolution (inside the lib-test
+//! process it would briefly re-enable pooling during the
+//! `SWCONV_NO_POOL=1` CI leg, silently weakening the scoped-fallback
+//! coverage that job exists for).
+
+use swconv::exec::{pool, ExecCtx};
+use swconv::kernels::ConvAlgo;
+
+/// Disabling makes a fresh ctx resolve to scoped threads, enabling
+/// makes it lazily build a persistent pool, and both paths compute
+/// identical bytes.
+#[test]
+fn pooling_disable_flag_controls_lazy_pool() {
+    let initial = pool::pooling_disabled();
+    pool::set_pooling_disabled(true);
+    assert!(pool::pooling_disabled());
+    let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 4);
+    let mut a = vec![0i32; 8];
+    ctx.par_chunks(&mut a, 2, |i, c| c.fill(i as i32));
+    assert!(ctx.pool_handle().is_none(), "disabled ⇒ scoped threads");
+
+    pool::set_pooling_disabled(false);
+    let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 4);
+    let mut b = vec![0i32; 8];
+    ctx.par_chunks(&mut b, 2, |i, c| c.fill(i as i32));
+    assert!(ctx.pool_handle().is_some(), "enabled ⇒ lazy persistent pool");
+    assert_eq!(ctx.pool_handle().unwrap().workers(), 3, "threads - 1 resident workers");
+    assert_eq!(a, b, "pooled and scoped results are identical");
+    pool::set_pooling_disabled(initial);
+}
