@@ -1,0 +1,204 @@
+//! BENCH — explicit `std::arch` row microkernels vs the per-ISA compute
+//! roof (the tentpole measurement for the SIMD dispatch layer).
+//!
+//! For every instruction-set level available on this machine
+//! ([`IsaLevel::available_levels`]) and every row-kernel family, this
+//! bench times the raw row routine returned by the dispatch seam
+//! ([`RowKernel::row_fn_at`], [`row_conv_q8_at`], [`row_conv_bf16_at`])
+//! on an L1-resident 4096-wide row, then divides achieved GFLOP/s by
+//! that level's *measured* FMA roof ([`swconv::harness::isa_peak`]) —
+//! the roofline fraction Advisor would report per kernel × ISA.
+//!
+//! Before any timing, every level's output is asserted bit-identical
+//! (f32/bf16) or exactly equal (i8/i32) to the Scalar level on the same
+//! inputs — the dispatch layer is a speed knob, never an accuracy knob.
+//!
+//! ## `BENCH_simd.json` schema
+//!
+//! Unlike the shared `BenchRecord` schema, per-ISA records carry the
+//! roof they were judged against, so the file is its own array shape:
+//!
+//! ```json
+//! [
+//!   {"bench": "simd", "kernel": "generic", "isa": "avx2", "k": 9,
+//!    "width": 4096, "gflops": 41.2, "peak_gflops": 55.1,
+//!    "roofline_frac": 0.748}
+//! ]
+//! ```
+//!
+//! `kernel` ∈ {`custom3`, `custom5`, `generic`, `compound`, `q8`,
+//! `bf16`}; `isa` is an [`IsaLevel::name`]; `peak_gflops` is the f32
+//! FMA roof of that level. Integer MACs are counted like FLOPs (the
+//! `BENCH_quant.json` convention), so the `q8` fraction may exceed 1.0
+//! where the integer pipeline out-issues f32 FMA.
+
+use std::io::Write;
+use swconv::harness::isa_peak;
+use swconv::harness::report::{f3, Table};
+use swconv::harness::timing::bench_quick;
+use swconv::kernels::rowconv::{row_conv_bf16_at, row_conv_q8_at, RowKernel};
+use swconv::simd::{IsaLevel, LANES};
+use swconv::tensor::Bf16;
+
+/// Output row width: 16 KiB of f32 — resident in L1, so the measurement
+/// probes the compute roof, not DRAM.
+const WIDTH: usize = 4096;
+
+struct SimdRecord {
+    kernel: &'static str,
+    isa: IsaLevel,
+    k: usize,
+    gflops: f64,
+    peak_gflops: f64,
+}
+
+/// Deterministic pseudo-random f32 in (-1, 1) — no rand crate offline.
+fn lcg_f32(seed: &mut u64) -> f32 {
+    *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    ((*seed >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+}
+
+/// Time one f32 row family at one level, asserting bit-parity with the
+/// Scalar level first. Returns achieved GFLOP/s.
+fn bench_f32(family: RowKernel, k: usize, isa: IsaLevel) -> f64 {
+    let mut seed = 0x5eed_0000 + k as u64;
+    let src: Vec<f32> = (0..WIDTH + k + 2 * LANES + 8).map(|_| lcg_f32(&mut seed)).collect();
+    let w: Vec<f32> = (0..k).map(|_| lcg_f32(&mut seed)).collect();
+    let row = family.row_fn_at(k, isa);
+
+    // Parity gate: same bias-prefilled dst, one call, bit-for-bit.
+    let scalar = family.row_fn_at(k, IsaLevel::Scalar);
+    let mut want = vec![0.25f32; WIDTH];
+    let mut got = vec![0.25f32; WIDTH];
+    scalar(&src, &w, &mut want, WIDTH);
+    row(&src, &w, &mut got, WIDTH);
+    assert_eq!(want, got, "{family:?} k={k} at {isa} diverges from scalar");
+
+    // Accumulation is the kernel's contract; |w·src| ≤ k per call keeps
+    // the running dst finite for any realistic iteration count.
+    let mut dst = vec![0.25f32; WIDTH];
+    let stats = bench_quick(|| {
+        row(&src, &w, &mut dst, WIDTH);
+        dst[0]
+    });
+    stats.gflops((2 * k * WIDTH) as u64)
+}
+
+/// Time the int8 row kernel at one level (exact i32 parity asserted).
+fn bench_q8(k: usize, isa: IsaLevel) -> f64 {
+    let mut seed = 0x5eed_1000 + k as u64;
+    let src: Vec<i8> = (0..WIDTH + k + 2 * LANES + 8)
+        .map(|_| (lcg_f32(&mut seed) * 127.0) as i8)
+        .collect();
+    let w: Vec<i8> = (0..k).map(|_| (lcg_f32(&mut seed) * 127.0) as i8).collect();
+    let row = row_conv_q8_at(isa);
+
+    let scalar = row_conv_q8_at(IsaLevel::Scalar);
+    let mut want = vec![0i32; WIDTH];
+    let mut got = vec![0i32; WIDTH];
+    scalar(&src, &w, &mut want, WIDTH);
+    row(&src, &w, &mut got, WIDTH);
+    assert_eq!(want, got, "q8 k={k} at {isa} diverges from scalar");
+
+    // Zero the accumulator inside the loop (an in-L1 16 KiB fill) so the
+    // running i32 sum cannot wrap; the fill is noise next to k taps of
+    // widening multiplies.
+    let mut dst = vec![0i32; WIDTH];
+    let stats = bench_quick(|| {
+        dst.fill(0);
+        row(&src, &w, &mut dst, WIDTH);
+        dst[0]
+    });
+    stats.gflops((2 * k * WIDTH) as u64)
+}
+
+/// Time the bf16 row kernel at one level (bitwise f32 parity asserted).
+fn bench_bf16(k: usize, isa: IsaLevel) -> f64 {
+    let mut seed = 0x5eed_2000 + k as u64;
+    let src: Vec<Bf16> = (0..WIDTH + k + 2 * LANES + 8)
+        .map(|_| Bf16::from_f32(lcg_f32(&mut seed)))
+        .collect();
+    let w: Vec<f32> = (0..k).map(|_| lcg_f32(&mut seed)).collect();
+    let row = row_conv_bf16_at(isa);
+
+    let scalar = row_conv_bf16_at(IsaLevel::Scalar);
+    let mut want = vec![0.25f32; WIDTH];
+    let mut got = vec![0.25f32; WIDTH];
+    scalar(&src, &w, &mut want, WIDTH);
+    row(&src, &w, &mut got, WIDTH);
+    assert_eq!(want, got, "bf16 k={k} at {isa} diverges from scalar");
+
+    let mut dst = vec![0.25f32; WIDTH];
+    let stats = bench_quick(|| {
+        row(&src, &w, &mut dst, WIDTH);
+        dst[0]
+    });
+    stats.gflops((2 * k * WIDTH) as u64)
+}
+
+fn write_simd_json(path: &str, records: &[SimdRecord]) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "[")?;
+    for (i, r) in records.iter().enumerate() {
+        let sep = if i + 1 == records.len() { "" } else { "," };
+        writeln!(
+            f,
+            "  {{\"bench\": \"simd\", \"kernel\": \"{}\", \"isa\": \"{}\", \"k\": {}, \
+             \"width\": {WIDTH}, \"gflops\": {:.4}, \"peak_gflops\": {:.4}, \
+             \"roofline_frac\": {:.4}}}{sep}",
+            r.kernel, r.isa.name(), r.k, r.gflops, r.peak_gflops, r.gflops / r.peak_gflops
+        )?;
+    }
+    writeln!(f, "]")?;
+    Ok(())
+}
+
+fn main() {
+    let levels = IsaLevel::available_levels();
+    println!(
+        "detected {} — racing {} level(s): {}",
+        IsaLevel::detected(),
+        levels.len(),
+        levels.iter().map(|l| l.name()).collect::<Vec<_>>().join(", ")
+    );
+
+    let mut table = Table::new(
+        format!("row microkernels vs per-ISA FMA roof ({WIDTH}-wide row, single thread)"),
+        &["kernel", "k", "isa", "GFLOP/s", "peak", "frac"],
+    );
+    let mut records = Vec::new();
+    let series: [(&str, Option<RowKernel>, usize); 6] = [
+        ("custom3", Some(RowKernel::Custom), 3),
+        ("custom5", Some(RowKernel::Custom), 5),
+        ("generic", Some(RowKernel::Generic), 9),
+        ("compound", Some(RowKernel::Compound), 33),
+        ("q8", None, 9),
+        ("bf16", None, 9),
+    ];
+    for (kernel, family, k) in series {
+        for &isa in &levels {
+            let gflops = match (kernel, family) {
+                ("q8", _) => bench_q8(k, isa),
+                ("bf16", _) => bench_bf16(k, isa),
+                (_, Some(fam)) => bench_f32(fam, k, isa),
+                _ => unreachable!("f32 series carry a family"),
+            };
+            let peak = isa_peak(isa).expect("available level has a roof").gflops;
+            table.row(vec![
+                kernel.to_string(),
+                k.to_string(),
+                isa.name().to_string(),
+                f3(gflops),
+                f3(peak),
+                f3(gflops / peak),
+            ]);
+            records.push(SimdRecord { kernel, isa, k, gflops, peak_gflops: peak });
+        }
+    }
+    println!("{}", table.render());
+    write_simd_json("target/reports/BENCH_simd.json", &records).expect("json");
+    println!("records in target/reports/BENCH_simd.json");
+}

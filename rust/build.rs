@@ -1,0 +1,34 @@
+//! Build probe: gate the AVX-512 intrinsic kernels on compiler support.
+//!
+//! The `_mm512_*` f32 intrinsics were stabilized in Rust 1.89. Older
+//! stable compilers must still build this crate (the dispatch layer then
+//! tops out at AVX2), so instead of a hard `rustc` floor we probe the
+//! compiler version here and emit the `swconv_avx512` cfg only when the
+//! intrinsics exist. `cargo:rustc-check-cfg` registers the custom cfg so
+//! `-D warnings` builds (clippy/check-cfg lints) stay clean either way.
+
+use std::process::Command;
+
+fn rustc_minor() -> Option<u32> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("-V").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (abc 2025-08-01)" or "rustc 1.91.0-nightly (...)".
+    let version = text.split_whitespace().nth(1)?;
+    let mut parts = version.split('.');
+    let major: u32 = parts.next()?.parse().ok()?;
+    let minor: u32 = parts.next()?.parse().ok()?;
+    if major != 1 {
+        // A hypothetical 2.x compiler has everything 1.89 had.
+        return Some(u32::MAX);
+    }
+    Some(minor)
+}
+
+fn main() {
+    println!("cargo:rustc-check-cfg=cfg(swconv_avx512)");
+    if rustc_minor().is_some_and(|minor| minor >= 89) {
+        println!("cargo:rustc-cfg=swconv_avx512");
+    }
+    println!("cargo:rerun-if-changed=build.rs");
+}

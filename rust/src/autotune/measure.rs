@@ -16,6 +16,7 @@ use crate::kernels::im2col::conv2d_im2col_q8_raw_ctx;
 use crate::kernels::rowconv::{RowKernel, COMPOUND_MAX_K};
 use crate::kernels::sliding2d::conv2d_sliding_q8_raw_ctx;
 use crate::kernels::{conv2d_ctx, ConvAlgo};
+use crate::simd::IsaLevel;
 use crate::tensor::{quantize, Dtype, QuantParams};
 use std::time::Duration;
 
@@ -123,9 +124,12 @@ fn row_kernel_of(algo: ConvAlgo, k: usize) -> RowKernel {
     }
 }
 
-/// Measure a dispatch profile: for every `(k, threads)` bucket in
-/// `opts`, time each candidate of the opts' dtype on the representative
-/// plane and distill the crossover table. Pure measurement — callers
+/// Measure a dispatch profile: for every `(k, threads, isa)` bucket in
+/// `opts` — the ISA dimension is every [`IsaLevel::available_levels`]
+/// on this machine, each candidate ctx pinned to the level via
+/// [`ExecCtx::with_isa`] — time each candidate of the opts' dtype on
+/// the representative plane and distill the crossover table. Pure
+/// measurement — callers
 /// persist the result with [`DispatchProfile::save`] (the CLI caches it
 /// at [`super::profile::default_profile_path`], merging per-dtype
 /// passes into one cache). The contexts it measures on resolve their
@@ -166,40 +170,51 @@ pub fn autotune(opts: &AutotuneOpts) -> DispatchProfile {
             if k == 0 {
                 continue;
             }
-            let entry = match opts.dtype {
-                Dtype::I8 => measure_i8_bucket(opts, k, t, shared.as_ref()),
-                _ => measure_f32_bucket(opts, k, t, shared.as_ref()),
-            };
-            if opts.verbose {
-                eprintln!(
-                    "autotune[{}]: k={k:<3} threads={t:<3} -> {} / {} rows ({} GFLOP/s)",
-                    opts.dtype.name(),
-                    entry.algo.name(),
-                    entry.slide.name(),
-                    f3(entry.gflops)
-                );
+            for &isa in &IsaLevel::available_levels() {
+                let entry = match opts.dtype {
+                    Dtype::I8 => measure_i8_bucket(opts, k, t, isa, shared.as_ref()),
+                    _ => measure_f32_bucket(opts, k, t, isa, shared.as_ref()),
+                };
+                if opts.verbose {
+                    eprintln!(
+                        "autotune[{}]: k={k:<3} threads={t:<3} isa={:<6} -> {} / {} rows \
+                         ({} GFLOP/s)",
+                        opts.dtype.name(),
+                        isa.name(),
+                        entry.algo.name(),
+                        entry.slide.name(),
+                        f3(entry.gflops)
+                    );
+                }
+                entries.push(entry);
             }
-            entries.push(entry);
         }
     }
     DispatchProfile::from_entries(entries)
 }
 
-/// A measurement ctx at thread count `t`, running on the shared
-/// per-thread-count pool when one exists (scoped threads otherwise).
-fn measure_ctx(algo: ConvAlgo, t: usize, shared: Option<&Arc<WorkerPool>>) -> ExecCtx {
-    let ctx = ExecCtx::with_threads(algo, t);
+/// A measurement ctx at thread count `t` pinned to ISA level `isa`,
+/// running on the shared per-thread-count pool when one exists (scoped
+/// threads otherwise).
+fn measure_ctx(
+    algo: ConvAlgo,
+    t: usize,
+    isa: IsaLevel,
+    shared: Option<&Arc<WorkerPool>>,
+) -> ExecCtx {
+    let ctx = ExecCtx::with_threads(algo, t).with_isa(isa);
     match shared {
         Some(p) => ctx.with_pool(Arc::clone(p)),
         None => ctx.without_pool(),
     }
 }
 
-/// Race the five f32 families at one `(k, threads)` bucket.
+/// Race the five f32 families at one `(k, threads, isa)` bucket.
 fn measure_f32_bucket(
     opts: &AutotuneOpts,
     k: usize,
     t: usize,
+    isa: IsaLevel,
     shared: Option<&Arc<WorkerPool>>,
 ) -> ProfileEntry {
     let case = ConvCase::square(opts.c, opts.hw.max(k + 1), k);
@@ -222,7 +237,7 @@ fn measure_f32_bucket(
         }
         // One ctx per candidate: the calibration runs warm its
         // arena, so the timed loop measures steady-state serving.
-        let ctx = measure_ctx(algo, t, shared);
+        let ctx = measure_ctx(algo, t, isa, shared);
         let stats = bench_config(
             || conv2d_ctx(&x, &w, None, &case.params, &ctx),
             opts.samples,
@@ -244,7 +259,15 @@ fn measure_f32_bucket(
     let slide = best_sliding
         .map(|(a, _)| row_kernel_of(a, k))
         .unwrap_or_else(|| RowKernel::paper_policy(k.min(COMPOUND_MAX_K)));
-    ProfileEntry { k, threads: t, dtype: Dtype::F32, algo: tuned_algo_of(winner), slide, gflops }
+    ProfileEntry {
+        k,
+        threads: t,
+        dtype: Dtype::F32,
+        isa,
+        algo: tuned_algo_of(winner),
+        slide,
+        gflops,
+    }
 }
 
 /// Race the int8 families at one `(k, threads)` bucket: quantized
@@ -257,6 +280,7 @@ fn measure_i8_bucket(
     opts: &AutotuneOpts,
     k: usize,
     t: usize,
+    isa: IsaLevel,
     shared: Option<&Arc<WorkerPool>>,
 ) -> ProfileEntry {
     let case = ConvCase::square(opts.c, opts.hw.max(k + 1), k);
@@ -268,14 +292,14 @@ fn measure_i8_bucket(
     // and f32 buckets report on one scale.
     let flops = case.flops();
 
-    let slide_ctx = measure_ctx(ConvAlgo::Sliding, t, shared);
+    let slide_ctx = measure_ctx(ConvAlgo::Sliding, t, isa, shared);
     let sliding = bench_config(
         || conv2d_sliding_q8_raw_ctx(&qx, &qw, &case.params, &slide_ctx),
         opts.samples,
         opts.sample_target,
     )
     .gflops(flops);
-    let gemm_ctx = measure_ctx(ConvAlgo::Im2colGemm, t, shared);
+    let gemm_ctx = measure_ctx(ConvAlgo::Im2colGemm, t, isa, shared);
     let gemm = bench_config(
         || conv2d_im2col_q8_raw_ctx(&qx, &qw, &case.params, &gemm_ctx),
         opts.samples,
@@ -292,6 +316,7 @@ fn measure_i8_bucket(
         k,
         threads: t,
         dtype: Dtype::I8,
+        isa,
         algo,
         slide: RowKernel::paper_policy(k.min(COMPOUND_MAX_K)),
         gflops,
@@ -302,14 +327,15 @@ fn measure_i8_bucket(
 /// `ablation_tuned` bench both print this).
 pub fn profile_table(profile: &DispatchProfile) -> Table {
     let mut t = Table::new(
-        "dispatch profile — measured (k, threads, dtype) winners",
-        &["k", "threads", "dtype", "algo", "slide", "GFLOP/s"],
+        "dispatch profile — measured (k, threads, dtype, isa) winners",
+        &["k", "threads", "dtype", "isa", "algo", "slide", "GFLOP/s"],
     );
     for e in profile.entries() {
         t.row(vec![
             e.k.to_string(),
             e.threads.to_string(),
             e.dtype.name().into(),
+            e.isa.name().into(),
             e.algo.name().into(),
             e.slide.name().into(),
             f3(e.gflops),
@@ -325,13 +351,19 @@ mod tests {
     #[test]
     fn quick_pass_covers_grid_with_legal_winners() {
         let opts = AutotuneOpts::quick();
+        let levels = IsaLevel::available_levels();
         let p = autotune(&opts);
-        assert_eq!(p.entries().len(), opts.ks.len() * opts.threads.len());
+        assert_eq!(p.entries().len(), opts.ks.len() * opts.threads.len() * levels.len());
         for e in p.entries() {
             assert!(opts.ks.contains(&e.k));
             assert!(opts.threads.contains(&e.threads));
+            assert!(levels.contains(&e.isa), "{e:?}: unavailable ISA level recorded");
             assert!(e.slide.supports(e.k), "{e:?}: illegal row family recorded");
             assert!(e.gflops > 0.0, "{e:?}: no throughput measured");
+        }
+        // Every available level got its own buckets.
+        for isa in levels {
+            assert!(p.entries().iter().any(|e| e.isa == isa), "no {isa} buckets");
         }
         // The table renders one row per entry.
         assert_eq!(profile_table(&p).len(), p.entries().len());
@@ -343,7 +375,8 @@ mod tests {
         opts.ks = vec![3, 3, 3];
         opts.threads = vec![1, 1];
         let p = autotune(&opts);
-        assert_eq!(p.entries().len(), 1);
+        // One bucket per available ISA level, not per duplicate.
+        assert_eq!(p.entries().len(), IsaLevel::available_levels().len());
     }
 
     /// Beyond the compound kernel's reach "sliding" is secretly the
@@ -354,8 +387,10 @@ mod tests {
         let mut opts = AutotuneOpts::quick();
         opts.ks = vec![COMPOUND_MAX_K + 7];
         let p = autotune(&opts);
-        assert_eq!(p.entries().len(), 1);
-        assert_ne!(p.entries()[0].algo, TunedAlgo::Sliding);
+        assert_eq!(p.entries().len(), IsaLevel::available_levels().len());
+        for e in p.entries() {
+            assert_ne!(e.algo, TunedAlgo::Sliding);
+        }
     }
 
     /// The int8 pass fills `dtype: "i8"` buckets (sliding-q8 vs gemm-q8)
@@ -363,8 +398,9 @@ mod tests {
     #[test]
     fn i8_pass_fills_i8_buckets_only() {
         let opts = AutotuneOpts::quick_i8();
+        let levels = IsaLevel::available_levels();
         let p = autotune(&opts);
-        assert_eq!(p.entries().len(), opts.ks.len() * opts.threads.len());
+        assert_eq!(p.entries().len(), opts.ks.len() * opts.threads.len() * levels.len());
         for e in p.entries() {
             assert_eq!(e.dtype, Dtype::I8);
             assert!(
@@ -372,8 +408,8 @@ mod tests {
                 "{e:?}: int8 race is sliding vs gemm only"
             );
             assert!(e.gflops > 0.0);
-            // The winner steers int8 lookups…
-            assert_eq!(p.choice_for(e.k, e.threads, Dtype::I8).0, e.algo);
+            // The winner steers int8 lookups at its own ISA level…
+            assert_eq!(p.choice_at(e.k, e.threads, Dtype::I8, e.isa).0, e.algo);
         }
         // …while f32 lookups fall back to the paper policy (no f32
         // buckets were measured by this pass).

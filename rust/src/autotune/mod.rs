@@ -11,11 +11,11 @@
 //!
 //! * [`autotune`] ([`measure`]) — a microbenchmark pass reusing
 //!   [`crate::harness::timing`] and [`crate::exec::ExecCtx`]: per
-//!   `(filter-width bucket, thread count)` it races the direct, GEMM,
-//!   sliding-generic, sliding-compound and custom kernels on a
-//!   representative plane (and, for an `i8` pass, int8 sliding against
-//!   the int8 im2col+GEMM baseline, filling the `dtype: "i8"` buckets
-//!   quantized tuned routing consults). Measurement contexts resolve
+//!   `(filter-width bucket, thread count, available ISA level)` it
+//!   races the direct, GEMM, sliding-generic, sliding-compound and
+//!   custom kernels on a representative plane (and, for an `i8` pass,
+//!   int8 sliding against the int8 im2col+GEMM baseline, filling the
+//!   `dtype: "i8"` buckets quantized tuned routing consults). Measurement contexts resolve
 //!   their persistent worker pools like serving contexts do, so the
 //!   cached crossovers include real dispatch overheads.
 //! * [`DispatchProfile`] ([`profile`]) — the distilled crossover table,

@@ -2,39 +2,43 @@
 //! `(filter-width bucket, thread count)` to the measured-fastest
 //! convolution algorithm and row-kernel family.
 //!
-//! ## `profile.json` schema (version 2)
+//! ## `profile.json` schema (version 3)
 //!
 //! [`DispatchProfile::save`] writes — and [`DispatchProfile::load`]
 //! parses, via [`crate::runtime::json`] — a single JSON object:
 //!
 //! ```json
 //! {
-//!   "version": 2,
+//!   "version": 3,
 //!   "lanes": 16,
 //!   "entries": [
-//!     {"k": 3,  "threads": 1, "dtype": "f32", "algo": "sliding", "slide": "custom",   "gflops": 11.2},
-//!     {"k": 17, "threads": 8, "dtype": "f32", "algo": "sliding", "slide": "compound", "gflops": 64.0},
-//!     {"k": 33, "threads": 8, "dtype": "i8",  "algo": "gemm",    "slide": "compound", "gflops": 41.5}
+//!     {"k": 3,  "threads": 1, "dtype": "f32", "isa": "avx2",   "algo": "sliding", "slide": "custom",   "gflops": 11.2},
+//!     {"k": 17, "threads": 8, "dtype": "f32", "isa": "scalar", "algo": "sliding", "slide": "compound", "gflops": 64.0},
+//!     {"k": 33, "threads": 8, "dtype": "i8",  "isa": "avx2",   "algo": "gemm",    "slide": "compound", "gflops": 41.5}
 //!   ]
 //! }
 //! ```
 //!
-//! * `version` — schema version. `2` is current; `1` — and a missing
-//!   `version` (the pre-versioning format) — load **backward
-//!   compatibly** as f32-only buckets (every entry gets
-//!   `dtype: "f32"`), so an old cache keeps steering f32 dispatch
-//!   instead of degrading to the paper policy with a warning. Anything
-//!   else is rejected.
+//! * `version` — schema version. `3` is current; `2`, `1` and a missing
+//!   `version` (the pre-versioning format) load **backward
+//!   compatibly** — a v1/versionless entry gets `dtype: "f32"`, and any
+//!   entry without an `isa` field gets `isa: "scalar"` — so an old
+//!   cache keeps steering dispatch instead of degrading to the paper
+//!   policy with a warning. Anything else is rejected.
 //! * `lanes` — [`crate::simd::LANES`] of the build that measured the
 //!   profile. A profile measured for a different hardware-vector width
 //!   describes a different machine, so a mismatch is rejected at load.
 //! * `entries[].k` / `entries[].threads` — the measured bucket. Lookups
-//!   restrict to the queried dtype's entries and minimise `(k distance,
-//!   threads distance)` lexicographically over them, resolving exact
-//!   ties toward the smaller bucket (see
-//!   [`DispatchProfile::choice_for`]).
+//!   restrict to the queried dtype's entries, prefer buckets measured
+//!   at the queried ISA level, and minimise `(k distance, threads
+//!   distance)` lexicographically over them, resolving exact ties
+//!   toward the smaller bucket (see [`DispatchProfile::choice_at`]).
 //! * `entries[].dtype` — element type this bucket was measured at
 //!   (`"f32"`, `"bf16"`, `"i8"`); defaults to `"f32"` when absent.
+//! * `entries[].isa` — instruction-set level this bucket was measured
+//!   at (`"scalar"`, `"avx2"`, `"avx512"`, `"neon"`); defaults to
+//!   `"scalar"` when absent (everything a pre-v3 profile measured ran
+//!   the portable kernels).
 //! * `entries[].algo` — conv-level winner: `"direct"`, `"gemm"` or
 //!   `"sliding"`.
 //! * `entries[].slide` — fastest sliding row-kernel family at this
@@ -53,7 +57,7 @@
 use crate::error::{bail, Context, Result};
 use crate::kernels::rowconv::{RowKernel, COMPOUND_MAX_K};
 use crate::runtime::json::Json;
-use crate::simd::LANES;
+use crate::simd::{IsaLevel, LANES};
 use crate::tensor::Dtype;
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -102,6 +106,10 @@ pub struct ProfileEntry {
     /// Element type this bucket was measured at (profiles loaded from
     /// the version-1 / versionless schema are f32-only).
     pub dtype: Dtype,
+    /// Instruction-set level this bucket was measured at (profiles
+    /// loaded from a pre-version-3 schema are scalar-only: everything
+    /// they measured ran the portable kernels).
+    pub isa: IsaLevel,
     /// Conv-level winner.
     pub algo: TunedAlgo,
     /// Fastest sliding row-kernel family at this bucket.
@@ -177,23 +185,41 @@ impl DispatchProfile {
         self.choice_for(k, threads, Dtype::F32)
     }
 
+    /// [`DispatchProfile::choice_at`] at the process-wide effective
+    /// instruction-set level ([`IsaLevel::effective`]).
+    pub fn choice_for(&self, k: usize, threads: usize, dtype: Dtype) -> (TunedAlgo, RowKernel) {
+        self.choice_at(k, threads, dtype, IsaLevel::effective())
+    }
+
     /// The tuned `(conv-level algorithm, row-kernel family)` for filter
-    /// width `k` at `threads` worker threads and element type `dtype`.
+    /// width `k` at `threads` worker threads, element type `dtype` and
+    /// instruction-set level `isa`.
     ///
     /// Nearest-bucket lookup over the entries **measured at this
-    /// dtype**, minimising `(k distance, thread distance)`
-    /// lexicographically — equal distances resolve toward the smaller
-    /// `k`, then the smaller `threads`, so ties are deterministic. The
-    /// answer is clamped so it is always *legal*: the row family is
-    /// re-clamped through [`RowKernel::legal_for`], and a sliding choice
-    /// for a width beyond the compound kernel's reach degrades to
-    /// [`TunedAlgo::Direct`] (mirroring the auto policy's direct
-    /// fallback; the clamp only matters for f32 rows — the `_q8`/`_bf16`
-    /// kernels are width-universal). An empty profile — or one with no
-    /// buckets at this dtype (e.g. a version-1 f32-only cache queried
-    /// for `I8`) — answers with the paper policy rather than borrowing
-    /// another dtype's crossovers.
-    pub fn choice_for(&self, k: usize, threads: usize, dtype: Dtype) -> (TunedAlgo, RowKernel) {
+    /// dtype**, minimising `(isa mismatch, k distance, thread
+    /// distance)` lexicographically — a bucket measured at the queried
+    /// ISA level always beats an off-level one, but when this level was
+    /// never measured (say, a pre-v3 scalar-only cache running on an
+    /// AVX2 machine) the same-dtype buckets still steer dispatch rather
+    /// than falling to the paper policy: the crossover *shape* is far
+    /// more dtype- than ISA-sensitive. Equal distances resolve toward
+    /// the smaller `k`, then the smaller `threads`, so ties are
+    /// deterministic. The answer is clamped so it is always *legal*:
+    /// the row family is re-clamped through [`RowKernel::legal_for`],
+    /// and a sliding choice for a width beyond the compound kernel's
+    /// reach degrades to [`TunedAlgo::Direct`] (mirroring the auto
+    /// policy's direct fallback; the clamp only matters for f32 rows —
+    /// the `_q8`/`_bf16` kernels are width-universal). An empty profile
+    /// — or one with no buckets at this dtype (e.g. a version-1
+    /// f32-only cache queried for `I8`) — answers with the paper policy
+    /// rather than borrowing another dtype's crossovers.
+    pub fn choice_at(
+        &self,
+        k: usize,
+        threads: usize,
+        dtype: Dtype,
+        isa: IsaLevel,
+    ) -> (TunedAlgo, RowKernel) {
         let k = k.max(1);
         let nearest = self
             .entries
@@ -202,9 +228,10 @@ impl DispatchProfile {
             .min_by_key(|e| {
                 let dk = e.k.abs_diff(k);
                 let dt = e.threads.abs_diff(threads);
-                // Lexicographic: nearest k first, then nearest threads,
-                // then smaller k/threads so ties are deterministic.
-                (dk, dt, e.k, e.threads)
+                // Lexicographic: matching ISA level first, then nearest
+                // k, then nearest threads, then smaller k/threads so
+                // ties are deterministic.
+                (e.isa != isa, dk, dt, e.k, e.threads)
             })
             .copied();
         let clamped = k.min(COMPOUND_MAX_K);
@@ -236,7 +263,7 @@ impl DispatchProfile {
         }
         let mut f = std::fs::File::create(path)?;
         writeln!(f, "{{")?;
-        writeln!(f, "  \"version\": 2,")?;
+        writeln!(f, "  \"version\": 3,")?;
         writeln!(f, "  \"lanes\": {LANES},")?;
         writeln!(f, "  \"entries\": [")?;
         for (i, e) in self.entries.iter().enumerate() {
@@ -246,11 +273,12 @@ impl DispatchProfile {
             let gflops = if e.gflops.is_finite() { e.gflops } else { 0.0 };
             writeln!(
                 f,
-                "    {{\"k\": {}, \"threads\": {}, \"dtype\": \"{}\", \"algo\": \"{}\", \
-                 \"slide\": \"{}\", \"gflops\": {}}}{sep}",
+                "    {{\"k\": {}, \"threads\": {}, \"dtype\": \"{}\", \"isa\": \"{}\", \
+                 \"algo\": \"{}\", \"slide\": \"{}\", \"gflops\": {}}}{sep}",
                 e.k,
                 e.threads,
                 e.dtype.name(),
+                e.isa.name(),
                 e.algo.name(),
                 e.slide.name(),
                 gflops
@@ -287,8 +315,8 @@ impl DispatchProfile {
                 .as_usize()
                 .ok_or_else(|| crate::anyhow!("profile 'version' not an integer"))?,
         };
-        if !(1..=2).contains(&version) {
-            bail!("profile version {version} unsupported (want 1 or 2)");
+        if !(1..=3).contains(&version) {
+            bail!("profile version {version} unsupported (want 1 to 3)");
         }
         let lanes = j
             .get("lanes")
@@ -335,8 +363,22 @@ impl DispatchProfile {
                         .ok_or_else(|| crate::anyhow!("entry {i}: unknown dtype '{name}'"))?
                 }
             };
+            // The ISA dimension arrived with version 3; everything a
+            // pre-v3 profile measured ran the portable kernels, so
+            // entries without the field load as scalar buckets —
+            // silently, never with a warning.
+            let isa = match e.get("isa") {
+                None => IsaLevel::Scalar,
+                Some(d) => {
+                    let name = d
+                        .as_str()
+                        .ok_or_else(|| crate::anyhow!("entry {i}: 'isa' not a string"))?;
+                    IsaLevel::parse(name)
+                        .ok_or_else(|| crate::anyhow!("entry {i}: unknown isa '{name}'"))?
+                }
+            };
             let gflops = field("gflops")?.as_f64().unwrap_or(0.0);
-            entries.push(ProfileEntry { k, threads, dtype, algo, slide, gflops });
+            entries.push(ProfileEntry { k, threads, dtype, isa, algo, slide, gflops });
         }
         Ok(DispatchProfile { entries })
     }
@@ -375,6 +417,7 @@ mod tests {
                 k: 3,
                 threads: 1,
                 dtype: Dtype::F32,
+                isa: IsaLevel::Scalar,
                 algo: TunedAlgo::Sliding,
                 slide: RowKernel::Custom,
                 gflops: 10.5,
@@ -383,6 +426,7 @@ mod tests {
                 k: 9,
                 threads: 1,
                 dtype: Dtype::F32,
+                isa: IsaLevel::Scalar,
                 algo: TunedAlgo::Sliding,
                 slide: RowKernel::Compound,
                 gflops: 9.25,
@@ -391,6 +435,7 @@ mod tests {
                 k: 9,
                 threads: 8,
                 dtype: Dtype::F32,
+                isa: IsaLevel::Scalar,
                 algo: TunedAlgo::Gemm,
                 slide: RowKernel::Generic,
                 gflops: 40.0,
@@ -399,6 +444,7 @@ mod tests {
                 k: 33,
                 threads: 1,
                 dtype: Dtype::F32,
+                isa: IsaLevel::Scalar,
                 algo: TunedAlgo::Direct,
                 slide: RowKernel::Compound,
                 gflops: 2.0,
@@ -407,6 +453,7 @@ mod tests {
                 k: 9,
                 threads: 1,
                 dtype: Dtype::I8,
+                isa: IsaLevel::Scalar,
                 algo: TunedAlgo::Gemm,
                 slide: RowKernel::Generic,
                 gflops: 55.0,
@@ -453,11 +500,43 @@ mod tests {
             k: 33,
             threads: 1,
             dtype: Dtype::F32,
+            isa: IsaLevel::Scalar,
             algo: TunedAlgo::Sliding,
             slide: RowKernel::Generic,
             gflops: 1.0,
         }]);
         assert_eq!(p.row_kernel(33, 1), RowKernel::Compound);
+    }
+
+    #[test]
+    fn choice_at_prefers_the_queried_isa_but_still_steers_off_level() {
+        // Two buckets at the same (k, threads, dtype), different ISA
+        // levels disagreeing on the winner.
+        let scalar = ProfileEntry {
+            k: 9,
+            threads: 1,
+            dtype: Dtype::F32,
+            isa: IsaLevel::Scalar,
+            algo: TunedAlgo::Gemm,
+            slide: RowKernel::Generic,
+            gflops: 4.0,
+        };
+        let avx2 = ProfileEntry { isa: IsaLevel::Avx2, algo: TunedAlgo::Sliding, ..scalar };
+        let p = DispatchProfile::from_entries(vec![scalar, avx2]);
+        // A matching-level bucket beats the off-level one, even when the
+        // off-level bucket is nearer in (k, threads).
+        assert_eq!(p.choice_at(9, 1, Dtype::F32, IsaLevel::Scalar).0, TunedAlgo::Gemm);
+        assert_eq!(p.choice_at(9, 1, Dtype::F32, IsaLevel::Avx2).0, TunedAlgo::Sliding);
+        // A level that was never measured still steers from the
+        // same-dtype buckets instead of degrading to the paper policy;
+        // the tie between the two off-level buckets is broken by the
+        // deterministic (k, threads) order — both share it, so the
+        // first in entry order of the min is irrelevant: min_by_key
+        // keeps the earliest minimum, the scalar bucket.
+        assert_eq!(p.choice_at(9, 1, Dtype::F32, IsaLevel::Neon).0, TunedAlgo::Gemm);
+        // Scalar-only caches (every pre-v3 profile) steer an AVX2 ctx.
+        let old = DispatchProfile::from_entries(vec![scalar]);
+        assert_eq!(old.choice_at(9, 1, Dtype::F32, IsaLevel::Avx2).0, TunedAlgo::Gemm);
     }
 
     #[test]
@@ -530,12 +609,34 @@ mod tests {
             let p = DispatchProfile::load(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
             assert!(!p.is_paper_policy(), "{name} must load its bucket, not degrade");
             assert_eq!(p.entries()[0].dtype, Dtype::F32, "{name} entries are f32-only");
+            assert_eq!(p.entries()[0].isa, IsaLevel::Scalar, "{name} entries are scalar-only");
             // The f32 bucket steers f32 dispatch…
             assert_eq!(p.choice(9, 1).0, TunedAlgo::Gemm, "{name}");
             // …and is invisible to other dtypes.
             assert_eq!(p.choice_for(9, 1, Dtype::I8).0, TunedAlgo::Sliding, "{name}");
             let _ = std::fs::remove_file(path);
         }
+    }
+
+    #[test]
+    fn v2_profiles_load_as_scalar_only() {
+        // A version-2 cache (dtype-aware, pre-ISA) loads silently with
+        // every entry at the scalar level — and keeps steering dispatch
+        // at any queried level.
+        let doc = format!(
+            "{{\"version\": 2, \"lanes\": {LANES}, \"entries\": [\
+             {{\"k\": 9, \"threads\": 1, \"dtype\": \"i8\", \"algo\": \"gemm\", \
+             \"slide\": \"generic\", \"gflops\": 4.0}}]}}"
+        );
+        let path = std::env::temp_dir().join("swconv_profile_compat_v2.json");
+        std::fs::write(&path, doc).unwrap();
+        let p = DispatchProfile::load(&path).unwrap();
+        assert_eq!(p.entries()[0].isa, IsaLevel::Scalar);
+        assert_eq!(p.entries()[0].dtype, Dtype::I8);
+        for isa in IsaLevel::ALL {
+            assert_eq!(p.choice_at(9, 1, Dtype::I8, isa).0, TunedAlgo::Gemm, "{isa}");
+        }
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

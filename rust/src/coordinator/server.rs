@@ -651,6 +651,7 @@ mod tests {
             k: 3,
             threads: 1,
             dtype: crate::tensor::Dtype::F32,
+            isa: crate::simd::IsaLevel::Scalar,
             algo: TunedAlgo::Gemm,
             slide: RowKernel::Generic,
             gflops: 1.0,

@@ -30,9 +30,8 @@
 //!   kernel needs — at every element width — are allocated once and
 //!   reused across calls (the coordinator keeps one ctx per backend, so
 //!   batched serving stops paying allocation churn per request).
-//!   Retention accounting is **byte-based** ([`ExecCtx::arena_bytes`];
-//!   the old f32-denominated [`ExecCtx::arena_floats`] remains as a
-//!   deprecated shim), and [`ExecCtx::alloc_events`] counts buffer
+//!   Retention accounting is **byte-based** ([`ExecCtx::arena_bytes`]),
+//!   and [`ExecCtx::alloc_events`] counts buffer
 //!   growths so tests can assert the steady state allocates nothing.
 //!   [`ExecCtx::take`]/[`ExecCtx::put`] are the `f32` conveniences the
 //!   pre-dtype kernels keep using, unchanged.
@@ -44,8 +43,15 @@
 //! measured [`DispatchProfile`] ([`ExecCtx::with_profile`]) that the
 //! tuned dispatch paths ([`ConvAlgo::Tuned`], `SlideVariant::Auto`)
 //! consult instead of the paper's hard-coded k=17 crossover policy
-//! (profile lookups are dtype-aware; see
-//! [`DispatchProfile::choice_for`]).
+//! (profile lookups are dtype- and ISA-aware; see
+//! [`DispatchProfile::choice_at`]).
+//!
+//! Finally, the ctx pins the **instruction-set level** its kernels run
+//! at ([`ExecCtx::isa`]): the machine's detected [`IsaLevel`] by
+//! default, overridable per ctx ([`ExecCtx::with_isa`]) or globally
+//! (the CLI's `--isa`, via [`IsaLevel::force`]). Every intrinsic
+//! kernel is bit-identical to the portable one, so the level changes
+//! throughput, never results.
 
 pub mod affinity;
 pub mod pool;
@@ -56,6 +62,7 @@ pub use pool::WorkerPool;
 use crate::autotune::{DispatchProfile, TunedAlgo};
 use crate::kernels::rowconv::RowKernel;
 use crate::kernels::ConvAlgo;
+use crate::simd::IsaLevel;
 use crate::tensor::Dtype;
 use std::any::{Any, TypeId};
 use std::cell::RefCell;
@@ -162,6 +169,9 @@ pub struct ExecCtx {
     pub algo: ConvAlgo,
     threads: usize,
     dtype: Dtype,
+    /// Instruction-set level the kernels dispatch at; defaults to the
+    /// process-wide effective level ([`IsaLevel::effective`]).
+    isa: IsaLevel,
     arena: Mutex<ArenaState>,
     allocs: AtomicUsize,
     /// Measured dispatch profile, shared across replicas via `Arc`;
@@ -188,6 +198,7 @@ impl ExecCtx {
             algo,
             threads: threads.max(1),
             dtype: Dtype::F32,
+            isa: IsaLevel::effective(),
             arena: Mutex::new(ArenaState {
                 slots: Vec::new(),
                 deferred: Vec::new(),
@@ -236,6 +247,30 @@ impl ExecCtx {
     /// The element type this context serves in.
     pub fn dtype(&self) -> Dtype {
         self.dtype
+    }
+
+    /// Pin the instruction-set level this context dispatches at
+    /// (builder style). The level must hold [`IsaLevel::available`] on
+    /// this machine for the intrinsic paths to actually run — the safe
+    /// kernel wrappers re-check availability and fall back to the
+    /// portable kernels otherwise, so an impossible level degrades to
+    /// scalar rather than faulting. `IsaLevel::Scalar` forces the
+    /// portable [`crate::simd::F32xL`] kernels, which is what the
+    /// parity tests diff every other level against.
+    pub fn with_isa(mut self, isa: IsaLevel) -> Self {
+        self.isa = isa;
+        self
+    }
+
+    /// Install (or replace) the instruction-set level on an existing
+    /// context.
+    pub fn set_isa(&mut self, isa: IsaLevel) {
+        self.isa = isa;
+    }
+
+    /// The instruction-set level this context dispatches kernels at.
+    pub fn isa(&self) -> IsaLevel {
+        self.isa
     }
 
     /// Run parallel regions on the given persistent [`WorkerPool`]
@@ -321,8 +356,8 @@ impl ExecCtx {
     /// must consult the `I8` buckets even under a `F32` ctx.
     pub fn tuned_choice_for(&self, k: usize, dtype: Dtype) -> (TunedAlgo, RowKernel) {
         match &self.profile {
-            Some(p) => p.choice_for(k, self.threads, dtype),
-            None => DispatchProfile::paper_policy().choice_for(k, self.threads, dtype),
+            Some(p) => p.choice_at(k, self.threads, dtype, self.isa),
+            None => DispatchProfile::paper_policy().choice_at(k, self.threads, dtype, self.isa),
         }
     }
 
@@ -462,15 +497,6 @@ impl ExecCtx {
     /// arena-retention knobs cap after every batch / idle period.
     pub fn arena_bytes(&self) -> usize {
         self.arena.lock().unwrap().slots.iter().map(|s| s.bytes).sum()
-    }
-
-    /// Retained arena capacity in `f32`-equivalents.
-    #[deprecated(
-        note = "arena retention is byte-based now that buffers are dtype-generic; \
-                use `arena_bytes` (this shim reports `arena_bytes() / 4`)"
-    )]
-    pub fn arena_floats(&self) -> usize {
-        self.arena_bytes() / std::mem::size_of::<f32>()
     }
 
     /// Drop cached buffers (largest first, any element type) until the
@@ -712,8 +738,9 @@ impl Default for ExecCtx {
 }
 
 impl Clone for ExecCtx {
-    /// Clones algorithm, thread count, dtype, the (shared) dispatch
-    /// profile and the (shared) worker pool with a fresh (empty) arena:
+    /// Clones algorithm, thread count, dtype, ISA level, the (shared)
+    /// dispatch profile and the (shared) worker pool with a fresh
+    /// (empty) arena:
     /// the arena is a cache, not state — this is how each coordinator
     /// replica gets its own scratch while all replicas dispatch from one
     /// measured profile. The pool is shared only once *resolved*
@@ -723,6 +750,7 @@ impl Clone for ExecCtx {
     fn clone(&self) -> Self {
         let mut c = ExecCtx::with_threads(self.algo, self.threads);
         c.dtype = self.dtype;
+        c.isa = self.isa;
         c.profile = self.profile.clone();
         if let Some(choice) = self.pool.get() {
             let _ = c.pool.set(choice.clone());
@@ -737,6 +765,7 @@ impl fmt::Debug for ExecCtx {
             .field("algo", &self.algo)
             .field("dtype", &self.dtype)
             .field("threads", &self.threads)
+            .field("isa", &self.isa)
             .finish()
     }
 }
@@ -787,16 +816,6 @@ mod tests {
         let q2: Vec<i8> = ctx.take_elems(100, 0i8);
         assert_eq!(ctx.alloc_events(), 4, "warm i8 buffer is reused");
         ctx.put_elems(q2);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn arena_floats_shim_reports_quarter_bytes() {
-        let ctx = ExecCtx::new(ConvAlgo::Sliding);
-        let b = ctx.take(1000, 0.0);
-        ctx.put(b);
-        assert_eq!(ctx.arena_floats(), ctx.arena_bytes() / 4);
-        assert!(ctx.arena_floats() >= 1000);
     }
 
     #[test]

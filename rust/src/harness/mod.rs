@@ -14,7 +14,7 @@ pub mod sweep;
 pub mod timing;
 pub mod workload;
 
-pub use roofline::{machine_peaks, MachinePeaks};
+pub use roofline::{isa_peak, isa_peaks, machine_peaks, IsaPeak, MachinePeaks};
 pub use sweep::{
     fig1_speedup_sweep, fig1_speedup_sweep_dtyped, fig1_speedup_sweep_profiled,
     fig2_throughput_sweep, fig2_throughput_sweep_dtyped, fig2_throughput_sweep_profiled,

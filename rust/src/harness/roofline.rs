@@ -13,8 +13,15 @@
 //! Attainable throughput at intensity `I` is `min(peak, I · bw)` — the
 //! classic roofline. Fig. 2 plots measured kernel GFLOP/s against this
 //! ceiling.
+//!
+//! With the explicit `std::arch` microkernels the compute roof is also
+//! measured **per instruction-set level** ([`isa_peaks`]): each
+//! available [`IsaLevel`] gets its own six-chain FMA peak, so
+//! `benches/simd_isa.rs` can report achieved-vs-peak roofline fractions
+//! per kernel × ISA instead of comparing an 8-lane AVX2 kernel against
+//! a 16-lane portable roof.
 
-use crate::simd::{F32xL, LANES};
+use crate::simd::{F32xL, IsaLevel, LANES};
 use std::time::Instant;
 
 /// Measured machine ceilings.
@@ -48,38 +55,14 @@ pub fn measure_peak_gflops() -> f64 {
     const CHAINS: usize = 6;
     const INNER: usize = 100_000;
 
-    // The FMA chains must live in registers for the whole inner loop:
-    // black_box only at the end of a timed repetition, never inside it
-    // (a black_box inside forces a stack round-trip per iteration and
-    // under-reports peak by >10x).
-    #[inline(never)]
-    fn fma_loop(seed: f32) -> f32 {
-        let a = F32xL::splat(1.000_000_1);
-        let b = F32xL::splat(1e-9);
-        // PERF: named locals, not an array — LLVM keeps indexed arrays on
-        // the stack and every FMA becomes a memory round-trip (measured
-        // ~4 GFLOP/s instead of >100; EXPERIMENTS.md §Perf). Six named
-        // accumulators = enough independent chains to hide the 4-cycle
-        // FMA latency at 2 issues/cycle.
-        let (mut c0, mut c1, mut c2) = (F32xL::splat(seed), F32xL::splat(seed), F32xL::splat(seed));
-        let (mut c3, mut c4, mut c5) = (F32xL::splat(seed), F32xL::splat(seed), F32xL::splat(seed));
-        for _ in 0..INNER {
-            c0 = c0.mul_add(a, b);
-            c1 = c1.mul_add(a, b);
-            c2 = c2.mul_add(a, b);
-            c3 = c3.mul_add(a, b);
-            c4 = c4.mul_add(a, b);
-            c5 = c5.mul_add(a, b);
-        }
-        let s = ((c0 + c1) + (c2 + c3)) + (c4 + c5);
-        s.reduce_sum()
-    }
-
-    // Warm-up + measure best of 5.
+    // Warm-up + measure best of 5. The FMA chains must live in
+    // registers for the whole inner loop: black_box only at the end of
+    // a timed repetition, never inside it (a black_box inside forces a
+    // stack round-trip per iteration and under-reports peak by >10x).
     let mut best = f64::MAX;
     for rep in 0..5 {
         let t = Instant::now();
-        let out = fma_loop(0.1 + rep as f32 * 1e-3);
+        let out = portable_fma_loop(0.1 + rep as f32 * 1e-3, INNER);
         let dt = t.elapsed().as_secs_f64();
         std::hint::black_box(out);
         best = best.min(dt);
@@ -106,6 +89,106 @@ pub fn measure_peak_gflops() -> f64 {
     }
     let gemm_peak = (2 * m * k * n) as f64 / best_gemm / 1e9;
     synthetic.max(gemm_peak)
+}
+
+/// The portable six-chain FMA loop behind both [`measure_peak_gflops`]
+/// and the scalar entry of [`isa_peaks`]. FLOPs =
+/// `iters · 6 chains · LANES lanes · 2`.
+#[inline(never)]
+fn portable_fma_loop(seed: f32, iters: usize) -> f32 {
+    let a = F32xL::splat(1.000_000_1);
+    let b = F32xL::splat(1e-9);
+    // PERF: named locals, not an array — LLVM keeps indexed arrays on
+    // the stack and every FMA becomes a memory round-trip (measured
+    // ~4 GFLOP/s instead of >100; EXPERIMENTS.md §Perf). Six named
+    // accumulators = enough independent chains to hide the 4-cycle
+    // FMA latency at 2 issues/cycle.
+    let (mut c0, mut c1, mut c2) = (F32xL::splat(seed), F32xL::splat(seed), F32xL::splat(seed));
+    let (mut c3, mut c4, mut c5) = (F32xL::splat(seed), F32xL::splat(seed), F32xL::splat(seed));
+    for _ in 0..iters {
+        c0 = c0.mul_add(a, b);
+        c1 = c1.mul_add(a, b);
+        c2 = c2.mul_add(a, b);
+        c3 = c3.mul_add(a, b);
+        c4 = c4.mul_add(a, b);
+        c5 = c5.mul_add(a, b);
+    }
+    let s = ((c0 + c1) + (c2 + c3)) + (c4 + c5);
+    s.reduce_sum()
+}
+
+/// One timed repetition of `isa`'s six-chain FMA loop: the explicit
+/// intrinsic loop for a SIMD level (availability re-checked, so an
+/// impossible level degrades to the portable loop instead of faulting),
+/// the portable [`F32xL`] loop for `Scalar`. Returns the chain sum so
+/// the caller can keep it live.
+fn isa_fma_rep(isa: IsaLevel, iters: usize, seed: f32) -> f32 {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        IsaLevel::Avx2 if IsaLevel::Avx2.available() => {
+            // SAFETY: AVX2+FMA availability checked by the guard.
+            unsafe { crate::simd::x86::fma_peak_avx2(iters) }
+        }
+        #[cfg(all(target_arch = "x86_64", swconv_avx512))]
+        IsaLevel::Avx512 if IsaLevel::Avx512.available() => {
+            // SAFETY: AVX-512F availability checked by the guard.
+            unsafe { crate::simd::x86::fma_peak_avx512(iters) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        IsaLevel::Neon if IsaLevel::Neon.available() => {
+            // SAFETY: NEON availability checked by the guard.
+            unsafe { crate::simd::neon::fma_peak_neon(iters) }
+        }
+        _ => portable_fma_loop(seed, iters),
+    }
+}
+
+/// Measured peak FMA throughput at one instruction-set level.
+#[derive(Clone, Copy, Debug)]
+pub struct IsaPeak {
+    /// The level this roof was measured at.
+    pub isa: IsaLevel,
+    /// f32 lanes one of the level's FMA instructions operates on
+    /// ([`IsaLevel::lanes`]).
+    pub lanes: usize,
+    /// Peak single-core f32 FMA throughput at this level, GFLOP/s.
+    pub gflops: f64,
+}
+
+/// Measure the compute roof of one instruction-set level: best of 5
+/// timed repetitions of the level's six-chain register-resident FMA
+/// loop. Unlike [`measure_peak_gflops`] there is no SGEMM guard — the
+/// point here is the roof of *this level's* FMA issue width, and the
+/// explicit intrinsic loops cannot be re-vectorised by LLVM.
+pub fn measure_isa_peak(isa: IsaLevel) -> IsaPeak {
+    const CHAINS: usize = 6;
+    const INNER: usize = 100_000;
+    let mut best = f64::MAX;
+    for rep in 0..5 {
+        let t = Instant::now();
+        let out = isa_fma_rep(isa, INNER, 0.1 + rep as f32 * 1e-3);
+        let dt = t.elapsed().as_secs_f64();
+        std::hint::black_box(out);
+        best = best.min(dt);
+    }
+    let lanes = isa.lanes();
+    let gflops = (INNER * CHAINS * lanes * 2) as f64 / best / 1e9;
+    IsaPeak { isa, lanes, gflops }
+}
+
+/// The per-level compute roofs of every [`IsaLevel::available_levels`]
+/// on this machine, measured once per process (scalar first, in
+/// [`IsaLevel::ALL`] order).
+pub fn isa_peaks() -> &'static [IsaPeak] {
+    use std::sync::OnceLock;
+    static PEAKS: OnceLock<Vec<IsaPeak>> = OnceLock::new();
+    PEAKS.get_or_init(|| IsaLevel::available_levels().into_iter().map(measure_isa_peak).collect())
+}
+
+/// The measured compute roof of `isa`, or `None` when the level is not
+/// available on this machine.
+pub fn isa_peak(isa: IsaLevel) -> Option<IsaPeak> {
+    isa_peaks().iter().find(|p| p.isa == isa).copied()
 }
 
 /// Measure sustained memory bandwidth with a stream triad
@@ -160,5 +243,24 @@ mod tests {
         let p = machine_peaks();
         assert!(p.gflops > 0.1, "peak {p:?}");
         assert!(p.bandwidth_gbs > 0.1, "bw {p:?}");
+    }
+
+    #[test]
+    fn isa_peaks_cover_every_available_level() {
+        let peaks = isa_peaks();
+        let levels = IsaLevel::available_levels();
+        assert_eq!(peaks.len(), levels.len());
+        for (p, isa) in peaks.iter().zip(levels) {
+            assert_eq!(p.isa, isa);
+            assert_eq!(p.lanes, isa.lanes());
+            assert!(p.gflops > 0.0, "{p:?}: no throughput measured");
+        }
+        // Scalar is always measurable, and lookup round-trips.
+        let s = isa_peak(IsaLevel::Scalar).expect("scalar roof");
+        assert_eq!(s.lanes, crate::simd::LANES);
+        // An unavailable level has no roof.
+        for isa in IsaLevel::ALL {
+            assert_eq!(isa_peak(isa).is_some(), isa.available(), "{isa}");
+        }
     }
 }

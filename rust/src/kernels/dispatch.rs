@@ -319,6 +319,7 @@ mod tests {
                 k: 5,
                 threads: 1,
                 dtype: crate::tensor::Dtype::F32,
+                isa: crate::simd::IsaLevel::Scalar,
                 algo,
                 slide: RowKernel::Custom,
                 gflops: 1.0,

@@ -38,7 +38,7 @@
 //! a scalar tail costs up to 50% of a row when `out_len % LANES` is large,
 //! the k=18 cliff in EXPERIMENTS.md §Perf.)
 
-use crate::simd::{slide, slide_dyn, F32xL, LANES};
+use crate::simd::{slide, slide_dyn, F32xL, IsaLevel, LANES};
 
 /// Largest filter width the generic in-vector kernel handles: a window at
 /// tap `k-1` must still come from one register pair, so `k - 1 ≤ LANES`.
@@ -399,17 +399,304 @@ impl RowKernel {
         }
     }
 
-    /// The concrete row routine for width `k`.
+    /// The concrete row routine for width `k` at the process's effective
+    /// ISA level ([`IsaLevel::effective`] — the detected level, or the
+    /// `--isa`-forced one).
     ///
     /// Total even on out-of-family widths: an unsupported pick quietly
     /// re-clamps through [`RowKernel::legal_for`], so callers can feed a
     /// profile choice straight in.
     pub fn row_fn(self, k: usize) -> fn(&[f32], &[f32], &mut [f32], usize) {
-        match self.legal_for(k) {
-            RowKernel::Custom if k == 3 => row_conv_custom3,
-            RowKernel::Custom => row_conv_custom5,
-            RowKernel::Generic => row_conv_generic,
-            RowKernel::Compound => row_conv_compound,
+        self.row_fn_at(k, IsaLevel::effective())
+    }
+
+    /// The concrete row routine for width `k` at an explicit [`IsaLevel`].
+    ///
+    /// Total in *both* arguments: the family re-clamps through
+    /// [`RowKernel::legal_for`], and a level this machine (or build)
+    /// cannot execute resolves to the portable kernel — requesting
+    /// `Neon` on x86-64, `Avx512` under a pre-1.89 toolchain, or any
+    /// intrinsic level on a machine without the feature is never UB,
+    /// just the scalar path. Every intrinsic routine is bit-identical to
+    /// its portable counterpart (the `isa_parity` suite pins this), so
+    /// the level only moves throughput, never results.
+    ///
+    /// On x86-64 both AVX2 and AVX-512 serve the Generic and Compound
+    /// families with one any-width streaming kernel: at 8/16 f32 per
+    /// unaligned L1 load the register-pair slide economy that splits the
+    /// portable families is not worth a shuffle port — only the custom
+    /// k=3/5 kernels keep the paper's slide form (see `simd::x86`).
+    pub fn row_fn_at(self, k: usize, isa: IsaLevel) -> fn(&[f32], &[f32], &mut [f32], usize) {
+        let family = self.legal_for(k);
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            IsaLevel::Avx2 => match family {
+                RowKernel::Custom if k == 3 => accel::custom3_avx2,
+                RowKernel::Custom => accel::custom5_avx2,
+                RowKernel::Generic | RowKernel::Compound => accel::f32_avx2,
+            },
+            #[cfg(all(target_arch = "x86_64", swconv_avx512))]
+            IsaLevel::Avx512 => match family {
+                RowKernel::Custom if k == 3 => accel::custom3_avx512,
+                RowKernel::Custom => accel::custom5_avx512,
+                RowKernel::Generic | RowKernel::Compound => accel::f32_avx512,
+            },
+            #[cfg(target_arch = "aarch64")]
+            IsaLevel::Neon => match family {
+                RowKernel::Custom if k == 3 => accel::custom3_neon,
+                RowKernel::Custom => accel::custom5_neon,
+                RowKernel::Generic | RowKernel::Compound => accel::f32_neon,
+            },
+            _ => match family {
+                RowKernel::Custom if k == 3 => row_conv_custom3,
+                RowKernel::Custom => row_conv_custom5,
+                RowKernel::Generic => row_conv_generic,
+                RowKernel::Compound => row_conv_compound,
+            },
+        }
+    }
+}
+
+/// The int8 row routine at an explicit [`IsaLevel`] — the quantized
+/// member of [`RowKernel::row_fn_at`]'s dispatch. One kernel covers
+/// every filter width (no family split), so the level is the only
+/// dimension. All variants produce **identical** i32 accumulators
+/// (integer arithmetic is exact); unavailable levels resolve to the
+/// portable [`row_conv_q8`]. AVX-512 reuses the AVX2 integer kernel —
+/// the pair-madd form has no AVX-512F equivalent (`vpmaddwd` at 512 bits
+/// needs AVX-512BW) and the i8 path is memory-bound anyway.
+pub fn row_conv_q8_at(isa: IsaLevel) -> fn(&[i8], &[i8], &mut [i32], usize) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        IsaLevel::Avx2 | IsaLevel::Avx512 => accel::q8_avx2,
+        #[cfg(target_arch = "aarch64")]
+        IsaLevel::Neon => accel::q8_neon,
+        _ => row_conv_q8,
+    }
+}
+
+/// The bf16 row routine at an explicit [`IsaLevel`] — the bf16 member
+/// of [`RowKernel::row_fn_at`]'s dispatch. Like the int8 kernel there is
+/// no family split. All variants accumulate in the portable kernel's
+/// exact (non-fused) order, so results are bit-identical across levels;
+/// unavailable levels resolve to the portable [`row_conv_bf16`].
+/// AVX-512 reuses the AVX2 expand-multiply kernel (the widening shuffle
+/// at 512 bits needs AVX-512BW).
+pub fn row_conv_bf16_at(
+    isa: IsaLevel,
+) -> fn(&[crate::tensor::Bf16], &[f32], &mut [f32], usize) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        IsaLevel::Avx2 | IsaLevel::Avx512 => accel::bf16_avx2,
+        #[cfg(target_arch = "aarch64")]
+        IsaLevel::Neon => accel::bf16_neon,
+        _ => row_conv_bf16,
+    }
+}
+
+/// Safe dispatch shims around the x86-64 `std::arch` kernels
+/// (`simd::x86`): each shim *hard-asserts* the padding/length contract
+/// (the intrinsic kernels read full vectors past `out_len`, so an
+/// under-padded row must panic like the portable path would, never read
+/// out of bounds), verifies ISA availability, and falls back to the
+/// portable kernel when the level is missing — which makes
+/// [`RowKernel::row_fn_at`] total over levels on every machine.
+#[cfg(target_arch = "x86_64")]
+mod accel {
+    use super::*;
+    use crate::simd::x86;
+    use crate::tensor::Bf16;
+
+    #[inline]
+    fn assert_f32_contract(src: &[f32], k: usize, dst: &[f32], out_len: usize) {
+        assert!(k >= 1, "empty filter");
+        assert!(src_ok(src, out_len, k), "source row under-padded");
+        assert!(dst.len() >= out_len);
+    }
+
+    /// The narrower q8/bf16 slack: `LANES + 1` f32 past the last window.
+    #[inline]
+    fn assert_narrow_contract(src_len: usize, k: usize, dst_len: usize, out_len: usize) {
+        assert!(k >= 1, "empty filter");
+        assert!(
+            out_len == 0 || src_len >= out_len - 1 + k - 1 + LANES + 1,
+            "source row under-padded"
+        );
+        assert!(dst_len >= out_len);
+    }
+
+    pub(super) fn custom3_avx2(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+        assert_eq!(w.len(), 3);
+        assert_f32_contract(src, 3, dst, out_len);
+        if IsaLevel::Avx2.available() {
+            // SAFETY: AVX2+FMA verified available; contract asserted.
+            unsafe { x86::row_conv_custom3_avx2(src, w, dst, out_len) }
+        } else {
+            row_conv_custom3(src, w, dst, out_len)
+        }
+    }
+
+    pub(super) fn custom5_avx2(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+        assert_eq!(w.len(), 5);
+        assert_f32_contract(src, 5, dst, out_len);
+        if IsaLevel::Avx2.available() {
+            // SAFETY: AVX2+FMA verified available; contract asserted.
+            unsafe { x86::row_conv_custom5_avx2(src, w, dst, out_len) }
+        } else {
+            row_conv_custom5(src, w, dst, out_len)
+        }
+    }
+
+    pub(super) fn f32_avx2(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+        assert_f32_contract(src, w.len(), dst, out_len);
+        if IsaLevel::Avx2.available() {
+            // SAFETY: AVX2+FMA verified available; contract asserted.
+            unsafe { x86::row_conv_f32_avx2(src, w, dst, out_len) }
+        } else {
+            row_conv_auto(src, w, dst, out_len)
+        }
+    }
+
+    pub(super) fn q8_avx2(src: &[i8], w: &[i8], dst: &mut [i32], out_len: usize) {
+        assert_narrow_contract(src.len(), w.len(), dst.len(), out_len);
+        if IsaLevel::Avx2.available() {
+            // SAFETY: AVX2 verified available; contract asserted.
+            unsafe { x86::row_conv_q8_avx2(src, w, dst, out_len) }
+        } else {
+            row_conv_q8(src, w, dst, out_len)
+        }
+    }
+
+    pub(super) fn bf16_avx2(src: &[Bf16], w: &[f32], dst: &mut [f32], out_len: usize) {
+        assert_narrow_contract(src.len(), w.len(), dst.len(), out_len);
+        if IsaLevel::Avx2.available() {
+            // SAFETY: Bf16 is #[repr(transparent)] over u16, so the raw
+            // bit view is layout-identical; AVX2 verified available;
+            // contract asserted.
+            unsafe {
+                let bits = std::slice::from_raw_parts(src.as_ptr().cast::<u16>(), src.len());
+                x86::row_conv_bf16_avx2(bits, w, dst, out_len)
+            }
+        } else {
+            row_conv_bf16(src, w, dst, out_len)
+        }
+    }
+
+    #[cfg(swconv_avx512)]
+    pub(super) fn custom3_avx512(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+        assert_eq!(w.len(), 3);
+        assert_f32_contract(src, 3, dst, out_len);
+        if IsaLevel::Avx512.available() {
+            // SAFETY: AVX-512F verified available; contract asserted.
+            unsafe { x86::row_conv_custom3_avx512(src, w, dst, out_len) }
+        } else {
+            row_conv_custom3(src, w, dst, out_len)
+        }
+    }
+
+    #[cfg(swconv_avx512)]
+    pub(super) fn custom5_avx512(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+        assert_eq!(w.len(), 5);
+        assert_f32_contract(src, 5, dst, out_len);
+        if IsaLevel::Avx512.available() {
+            // SAFETY: AVX-512F verified available; contract asserted.
+            unsafe { x86::row_conv_custom5_avx512(src, w, dst, out_len) }
+        } else {
+            row_conv_custom5(src, w, dst, out_len)
+        }
+    }
+
+    #[cfg(swconv_avx512)]
+    pub(super) fn f32_avx512(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+        assert_f32_contract(src, w.len(), dst, out_len);
+        if IsaLevel::Avx512.available() {
+            // SAFETY: AVX-512F verified available; contract asserted.
+            unsafe { x86::row_conv_f32_avx512(src, w, dst, out_len) }
+        } else {
+            row_conv_auto(src, w, dst, out_len)
+        }
+    }
+}
+
+/// Safe dispatch shims around the aarch64 NEON kernels (`simd::neon`) —
+/// same contract-then-call structure as the x86 shims.
+#[cfg(target_arch = "aarch64")]
+mod accel {
+    use super::*;
+    use crate::simd::neon;
+    use crate::tensor::Bf16;
+
+    #[inline]
+    fn assert_f32_contract(src: &[f32], k: usize, dst: &[f32], out_len: usize) {
+        assert!(k >= 1, "empty filter");
+        assert!(src_ok(src, out_len, k), "source row under-padded");
+        assert!(dst.len() >= out_len);
+    }
+
+    #[inline]
+    fn assert_narrow_contract(src_len: usize, k: usize, dst_len: usize, out_len: usize) {
+        assert!(k >= 1, "empty filter");
+        assert!(
+            out_len == 0 || src_len >= out_len - 1 + k - 1 + LANES + 1,
+            "source row under-padded"
+        );
+        assert!(dst_len >= out_len);
+    }
+
+    pub(super) fn custom3_neon(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+        assert_eq!(w.len(), 3);
+        assert_f32_contract(src, 3, dst, out_len);
+        if IsaLevel::Neon.available() {
+            // SAFETY: NEON verified available; contract asserted.
+            unsafe { neon::row_conv_custom3_neon(src, w, dst, out_len) }
+        } else {
+            row_conv_custom3(src, w, dst, out_len)
+        }
+    }
+
+    pub(super) fn custom5_neon(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+        assert_eq!(w.len(), 5);
+        assert_f32_contract(src, 5, dst, out_len);
+        if IsaLevel::Neon.available() {
+            // SAFETY: NEON verified available; contract asserted.
+            unsafe { neon::row_conv_custom5_neon(src, w, dst, out_len) }
+        } else {
+            row_conv_custom5(src, w, dst, out_len)
+        }
+    }
+
+    pub(super) fn f32_neon(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+        assert_f32_contract(src, w.len(), dst, out_len);
+        if IsaLevel::Neon.available() {
+            // SAFETY: NEON verified available; contract asserted.
+            unsafe { neon::row_conv_f32_neon(src, w, dst, out_len) }
+        } else {
+            row_conv_auto(src, w, dst, out_len)
+        }
+    }
+
+    pub(super) fn q8_neon(src: &[i8], w: &[i8], dst: &mut [i32], out_len: usize) {
+        assert_narrow_contract(src.len(), w.len(), dst.len(), out_len);
+        if IsaLevel::Neon.available() {
+            // SAFETY: NEON verified available; contract asserted.
+            unsafe { neon::row_conv_q8_neon(src, w, dst, out_len) }
+        } else {
+            row_conv_q8(src, w, dst, out_len)
+        }
+    }
+
+    pub(super) fn bf16_neon(src: &[Bf16], w: &[f32], dst: &mut [f32], out_len: usize) {
+        assert_narrow_contract(src.len(), w.len(), dst.len(), out_len);
+        if IsaLevel::Neon.available() {
+            // SAFETY: Bf16 is #[repr(transparent)] over u16, so the raw
+            // bit view is layout-identical; NEON verified available;
+            // contract asserted.
+            unsafe {
+                let bits = std::slice::from_raw_parts(src.as_ptr().cast::<u16>(), src.len());
+                neon::row_conv_bf16_neon(bits, w, dst, out_len)
+            }
+        } else {
+            row_conv_bf16(src, w, dst, out_len)
         }
     }
 }
@@ -599,6 +886,66 @@ mod tests {
         for rk in RowKernel::ALL {
             for k in [2usize, 3, 5, 9, GENERIC_MAX_K, GENERIC_MAX_K + 4] {
                 run(rk.row_fn(k), k, 50, 3000 + k as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn row_fn_at_total_and_correct_for_every_level() {
+        // Every family × every ISA level — including levels this machine
+        // (or build) cannot execute, which must resolve to the portable
+        // kernel rather than fault. The exhaustive bit-parity sweep
+        // lives in tests/isa_parity.rs; this pins totality + accuracy.
+        for isa in IsaLevel::ALL {
+            for rk in RowKernel::ALL {
+                for k in [1usize, 3, 5, 9, GENERIC_MAX_K, GENERIC_MAX_K + 4] {
+                    run(rk.row_fn_at(k, isa), k, 50, 4000 + k as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q8_dispatch_is_exact_for_every_level() {
+        for isa in IsaLevel::ALL {
+            let kernel = row_conv_q8_at(isa);
+            for (k, out_len) in [(1usize, 40usize), (3, 100), (17, 50), (64, 20)] {
+                let mut rng = XorShiftRng::new(9000 + k as u64);
+                let raw: Vec<i8> =
+                    (0..out_len + k - 1).map(|_| rng.uniform(-127.0, 127.0) as i8).collect();
+                let w: Vec<i8> = (0..k).map(|_| rng.uniform(-127.0, 127.0) as i8).collect();
+                let src = pad_row(&raw, 0, 2 * LANES + k, 0i8);
+                let mut dst = vec![5i32; out_len];
+                kernel(&src, &w, &mut dst, out_len);
+                for i in 0..out_len {
+                    let want: i32 = 5 + w
+                        .iter()
+                        .enumerate()
+                        .map(|(j, &wj)| wj as i32 * src[i + j] as i32)
+                        .sum::<i32>();
+                    assert_eq!(dst[i], want, "isa={} k={k} i={i}", isa.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_dispatch_matches_portable_bitwise_for_every_level() {
+        use crate::tensor::Bf16;
+        for isa in IsaLevel::ALL {
+            let kernel = row_conv_bf16_at(isa);
+            for (k, out_len) in [(3usize, 40usize), (9, 50), (33, 20)] {
+                let mut rng = XorShiftRng::new(9500 + k as u64);
+                let raw: Vec<f32> =
+                    (0..out_len + k - 1).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                let w: Vec<f32> = (0..k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                let srcf = pad_row(&raw, 0, 2 * LANES + k, 0.0f32);
+                let src: Vec<Bf16> = srcf.iter().map(|&v| Bf16::from_f32(v)).collect();
+                let mut want = vec![0.25f32; out_len];
+                row_conv_bf16(&src, &w, &mut want, out_len);
+                let mut got = vec![0.25f32; out_len];
+                kernel(&src, &w, &mut got, out_len);
+                assert_eq!(got, want, "isa={} k={k}", isa.name());
             }
         }
     }

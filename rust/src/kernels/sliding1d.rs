@@ -3,7 +3,7 @@
 //! precursor, arXiv:2305.16513, whose ~log(k) speedup §2 recalls).
 
 use super::direct::conv1d_direct_ctx;
-use super::rowconv::{row_conv_auto, row_conv_bf16, row_conv_q8, COMPOUND_MAX_K};
+use super::rowconv::{row_conv_bf16_at, row_conv_q8_at, RowKernel, COMPOUND_MAX_K};
 use super::Conv1dParams;
 use crate::exec::ExecCtx;
 use crate::simd::{slide_dyn, F32xL, LANES};
@@ -63,6 +63,9 @@ pub fn conv1d_sliding_ctx(
     let ws = w.as_slice();
     let mut out = Tensor::zeros(&[c_out, lo]);
     let padded_ref: &[f32] = &padded;
+    // Resolve the row routine once per conv: the paper's §2 family for
+    // this width, at the ctx's ISA level.
+    let row_fn = RowKernel::paper_policy(k).row_fn_at(k, ctx.isa());
     // Per-worker accumulator: one arena checkout per parallel region,
     // so steady-state arena traffic is deterministic and allocation-free.
     ctx.par_chunks_with(
@@ -74,7 +77,7 @@ pub fn conv1d_sliding_ctx(
             scratch.fill(b);
             for ci in 0..c_in {
                 let wrow = &ws[(co * c_in + ci) * k..(co * c_in + ci + 1) * k];
-                row_conv_auto(&padded_ref[ci * lp..], wrow, scratch, lo1);
+                row_fn(&padded_ref[ci * lp..], wrow, scratch, lo1);
             }
             if p.stride == 1 {
                 orow.copy_from_slice(&scratch[..lo]);
@@ -93,7 +96,8 @@ pub fn conv1d_sliding_ctx(
 /// Quantized int8 1-D sliding convolution, raw i32 accumulator output
 /// (`x` — `[c_in, l]` codes, `w` — `[c_out, c_in, k]` codes, both
 /// symmetric). Mirrors [`conv1d_sliding_ctx`]'s pad-once / fan-out
-/// structure with [`row_conv_q8`] rows; every width is supported (no
+/// structure with [`super::rowconv::row_conv_q8`]-contract rows
+/// (dispatched per ISA via [`row_conv_q8_at`]); every width is supported (no
 /// direct fallback needed).
 pub fn conv1d_sliding_q8_raw_ctx(
     x: &TensorT<i8>,
@@ -124,6 +128,7 @@ pub fn conv1d_sliding_q8_raw_ctx(
     let ws = w.as_slice();
     let mut out = TensorT::<i32>::zeros(&[c_out, lo]);
     let padded_ref: &[i8] = &padded;
+    let row_fn = row_conv_q8_at(ctx.isa());
     ctx.par_chunks_with(
         out.as_mut_slice(),
         lo,
@@ -132,7 +137,7 @@ pub fn conv1d_sliding_q8_raw_ctx(
             scratch.fill(0);
             for ci in 0..c_in {
                 let wrow = &ws[(co * c_in + ci) * k..(co * c_in + ci + 1) * k];
-                row_conv_q8(&padded_ref[ci * lp..], wrow, scratch, lo1);
+                row_fn(&padded_ref[ci * lp..], wrow, scratch, lo1);
             }
             if p.stride == 1 {
                 orow.copy_from_slice(&scratch[..lo]);
@@ -168,7 +173,8 @@ pub fn conv1d_sliding_q8_ctx(
 }
 
 /// bfloat16 1-D sliding convolution: bf16 storage in and out, f32
-/// accumulation ([`row_conv_bf16`]; weights widened to f32 once per
+/// accumulation ([`super::rowconv::row_conv_bf16`]-contract rows via
+/// [`row_conv_bf16_at`]; weights widened to f32 once per
 /// call). Mirrors [`conv1d_sliding_ctx`].
 pub fn conv1d_sliding_bf16_ctx(
     x: &TensorT<Bf16>,
@@ -202,6 +208,7 @@ pub fn conv1d_sliding_bf16_ctx(
     let mut out = TensorT::<Bf16>::zeros(&[c_out, lo]);
     let padded_ref: &[Bf16] = &padded;
     let wf_ref: &[f32] = &wf;
+    let row_fn = row_conv_bf16_at(ctx.isa());
     ctx.par_chunks_with(
         out.as_mut_slice(),
         lo,
@@ -211,7 +218,7 @@ pub fn conv1d_sliding_bf16_ctx(
             scratch.fill(b);
             for ci in 0..c_in {
                 let wrow = &wf_ref[(co * c_in + ci) * k..(co * c_in + ci + 1) * k];
-                row_conv_bf16(&padded_ref[ci * lp..], wrow, scratch, lo1);
+                row_fn(&padded_ref[ci * lp..], wrow, scratch, lo1);
             }
             for (o, v) in orow.iter_mut().enumerate() {
                 *v = Bf16::from_f32(scratch[if p.stride == 1 { o } else { o * p.stride }]);

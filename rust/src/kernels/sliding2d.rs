@@ -22,8 +22,7 @@
 
 use super::direct::conv2d_direct_ctx;
 use super::rowconv::{
-    row_conv_bf16, row_conv_compound, row_conv_generic, row_conv_q8, COMPOUND_MAX_K,
-    GENERIC_MAX_K, Q8_MAX_TAPS,
+    row_conv_bf16_at, row_conv_q8_at, RowKernel, COMPOUND_MAX_K, GENERIC_MAX_K, Q8_MAX_TAPS,
 };
 use super::Conv2dParams;
 use crate::exec::ExecCtx;
@@ -112,11 +111,13 @@ pub fn conv2d_sliding_ctx(
     // ctx's tuned winner for (kw, threads), or the paper's §2 policy
     // when no profile is attached — the same functions `row_conv_auto`
     // dispatches to, so an unprofiled Auto is bit-identical to the
-    // pre-autotune kernel.
+    // pre-autotune kernel. Every variant resolves at the ctx's ISA
+    // level; the intrinsic kernels are bit-identical to the portable
+    // ones, so the level never changes results.
     let row_fn = match variant {
-        SlideVariant::Auto => ctx.tuned_row_kernel(kw).row_fn(kw),
-        SlideVariant::Generic => row_conv_generic,
-        SlideVariant::Compound => row_conv_compound,
+        SlideVariant::Auto => ctx.tuned_row_kernel(kw).row_fn_at(kw, ctx.isa()),
+        SlideVariant::Generic => RowKernel::Generic.row_fn_at(kw, ctx.isa()),
+        SlideVariant::Compound => RowKernel::Compound.row_fn_at(kw, ctx.isa()),
     };
 
     // Pad once into arena scratch: convolution padding plus vector-load
@@ -201,7 +202,9 @@ fn conv2d_geometry<A: crate::tensor::Element, B: crate::tensor::Element>(
 /// Same parallel/scratch structure as [`conv2d_sliding_ctx`]: the i8
 /// padded input and the per-worker i32 row accumulator come from the
 /// ctx's (dtype-generic) arena; output planes fan out over its threads.
-/// [`row_conv_q8`] covers every filter width, so there is no variant
+/// [`super::rowconv::row_conv_q8`] covers every filter width (the ISA
+/// dispatch picks an exact intrinsic equivalent when one is available,
+/// see [`row_conv_q8_at`]), so there is no variant
 /// parameter and no direct fallback.
 pub fn conv2d_sliding_q8_raw_ctx(
     x: &TensorT<i8>,
@@ -227,6 +230,7 @@ pub fn conv2d_sliding_q8_raw_ctx(
     let c_out_g = c_out / p.groups;
     let mut out = TensorT::<i32>::zeros(&[n, c_out, oh, ow]);
     let padded_ref: &[i8] = &padded;
+    let row_fn = row_conv_q8_at(ctx.isa());
     ctx.par_chunks_with(
         out.as_mut_slice(),
         oh * ow,
@@ -244,7 +248,7 @@ pub fn conv2d_sliding_q8_raw_ctx(
                     for ky in 0..kh {
                         let src = &plane[(iy0 + ky) * wp..];
                         let wrow = &ws[((co * c_in_g + cig) * kh + ky) * kw..][..kw];
-                        row_conv_q8(src, wrow, scratch, ow1);
+                        row_fn(src, wrow, scratch, ow1);
                     }
                 }
                 let orow = &mut oplane[oy * ow..oy * ow + ow];
@@ -315,7 +319,8 @@ pub fn conv2d_sliding_q8_ctx(
 }
 
 /// bfloat16 2-D sliding convolution: bf16 storage in and out, f32
-/// accumulation inside ([`row_conv_bf16`]).
+/// accumulation inside ([`super::rowconv::row_conv_bf16`], or its
+/// intrinsic equivalent via [`row_conv_bf16_at`]).
 ///
 /// The padded input stays bf16 (half the streaming traffic of the f32
 /// kernel); the weight tensor is widened to f32 once per call into
@@ -353,6 +358,7 @@ pub fn conv2d_sliding_bf16_ctx(
     let mut out = TensorT::<Bf16>::zeros(&[n, c_out, oh, ow]);
     let padded_ref: &[Bf16] = &padded;
     let wf_ref: &[f32] = &wf;
+    let row_fn = row_conv_bf16_at(ctx.isa());
     ctx.par_chunks_with(
         out.as_mut_slice(),
         oh * ow,
@@ -371,7 +377,7 @@ pub fn conv2d_sliding_bf16_ctx(
                     for ky in 0..kh {
                         let src = &plane[(iy0 + ky) * wp..];
                         let wrow = &wf_ref[((co * c_in_g + cig) * kh + ky) * kw..][..kw];
-                        row_conv_bf16(src, wrow, scratch, ow1);
+                        row_fn(src, wrow, scratch, ow1);
                     }
                 }
                 let orow = &mut oplane[oy * ow..oy * ow + ow];
@@ -544,6 +550,7 @@ mod tests {
             k: 5,
             threads: 1,
             dtype: Dtype::F32,
+            isa: crate::simd::IsaLevel::Scalar,
             algo: TunedAlgo::Sliding,
             slide: RowKernel::Compound,
             gflops: 1.0,

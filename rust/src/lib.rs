@@ -10,7 +10,11 @@
 //!
 //! * [`simd`] — the portable "hardware vector" ([`simd::F32xL`], 16 × f32 =
 //!   one AVX-512 register) with the *slide* (lane-shift) primitives the
-//!   paper's kernels are built from, plus compound (multi-register) slides.
+//!   paper's kernels are built from, plus compound (multi-register) slides —
+//!   and the explicit lane: runtime instruction-set detection
+//!   ([`simd::IsaLevel`], forceable via `--isa`) selecting hand-written
+//!   `std::arch` row microkernels (AVX2+FMA / AVX-512F / NEON) that are
+//!   bit-identical to the portable path.
 //! * [`tensor`] — a minimal NCHW tensor library (owned buffers, stride
 //!   math, zero-padding), **generic over its element type**: the
 //!   [`tensor::Element`] layer defines `f32`, bfloat16
@@ -37,8 +41,8 @@
 //!   (int8 codes, exact i32 accumulation) and `_bf16` variants, with an
 //!   int8 `im2col`+GEMM baseline keeping the quantized comparison honest.
 //! * [`autotune`] — per-machine dispatch autotuning: a microbenchmark
-//!   pass races the kernels per (filter width, thread count) and caches
-//!   the winners as a [`autotune::DispatchProfile`]
+//!   pass races the kernels per (filter width, thread count, dtype,
+//!   ISA level) and caches the winners as a [`autotune::DispatchProfile`]
 //!   (`target/autotune/profile.json`); [`kernels::ConvAlgo::Tuned`] and
 //!   the sliding kernel's `Auto` row selection dispatch from it, falling
 //!   back to the paper's k=17 policy when no profile exists.

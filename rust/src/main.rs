@@ -19,6 +19,10 @@
 //! `--pin <cores>` (confine/pin to a core set) and `--no-pool` (scoped
 //! spawn-per-region threads instead of the persistent worker pool).
 //! `autotune --dtype i8` additionally fills the profile's int8 buckets.
+//! Every command accepts `--isa scalar|avx2|avx512|neon` to force the
+//! instruction-set level kernels dispatch at (process-wide, via
+//! [`swconv::simd::IsaLevel::force`]); results are bit-identical at
+//! every level.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -30,12 +34,13 @@ use swconv::error::{anyhow, bail, Context, Result};
 use swconv::exec::{affinity, pool, CoreSet};
 use swconv::harness::report::{dur, f3, Table};
 use swconv::harness::{
-    bench, fig1_speedup_sweep_dtyped, fig2_throughput_sweep_dtyped, machine_peaks, sweep,
-    ConvCase,
+    bench, fig1_speedup_sweep_dtyped, fig2_throughput_sweep_dtyped, isa_peaks, machine_peaks,
+    sweep, ConvCase,
 };
 use swconv::kernels::{conv2d, Conv2dParams, ConvAlgo};
 use swconv::nn::{zoo, ExecCtx};
 use swconv::runtime::{engine::default_artifacts_dir, Engine};
+use swconv::simd::IsaLevel;
 use swconv::tensor::{Dtype, Tensor};
 
 /// Flags that take no value (present = on).
@@ -244,6 +249,15 @@ fn cmd_peaks() -> Result<()> {
     println!("compute peak : {:.2} GFLOP/s (single core, f32 FMA)", p.gflops);
     println!("bandwidth    : {:.2} GB/s (stream triad)", p.bandwidth_gbs);
     println!("ridge point  : {:.2} FLOP/byte", p.ridge());
+    println!("isa          : {} detected", IsaLevel::detected());
+    for roof in isa_peaks() {
+        println!(
+            "  {:<7}: {:.2} GFLOP/s ({} lanes, f32 FMA)",
+            roof.isa.name(),
+            roof.gflops,
+            roof.lanes
+        );
+    }
     Ok(())
 }
 
@@ -556,6 +570,11 @@ COMMANDS
   execution context (one spawn at startup instead of one per parallel
   region). --no-pool — or SWCONV_NO_POOL=1 — restores scoped
   spawn-per-region threads; results are bit-identical either way.
+  --isa scalar|avx2|avx512|neon (any command) forces the instruction-set
+  level kernels dispatch at: the detected level is the default, scalar
+  forces the portable F32xL kernels, and forcing a level the machine
+  lacks is an error. Results are bit-identical at every level — the
+  explicit std::arch microkernels only change throughput.
   --pin 0-3,8 confines a run to those cores (Linux only, best-effort);
   on serve, --pin slices the set round-robin across each tier's
   replicas — replica i pins to slice i and pools its kernel threads
@@ -592,6 +611,16 @@ fn main() -> Result<()> {
     if args.flag("no-pool") {
         pool::set_pooling_disabled(true);
         eprintln!("persistent worker pools disabled (--no-pool): scoped threads per region");
+    }
+    // --isa pins the instruction-set level process-wide: every ExecCtx
+    // built after this dispatches the forced level's kernels. Forcing
+    // an unavailable level is an error (scalar is always available);
+    // results are bit-identical at every level.
+    if let Some(s) = args.get("isa") {
+        let isa = IsaLevel::parse(s)
+            .ok_or_else(|| anyhow!("unknown isa '{s}' (expected scalar, avx2, avx512 or neon)"))?;
+        IsaLevel::force(isa)?;
+        eprintln!("isa forced to {isa} (detected: {})", IsaLevel::detected());
     }
     match args.cmd.as_str() {
         "bench-fig1" => cmd_fig1(&args),

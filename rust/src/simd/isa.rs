@@ -1,0 +1,209 @@
+//! Runtime ISA detection and dispatch levels.
+//!
+//! The portable [`crate::simd::F32xL`] kernels are correct everywhere but
+//! leave throughput on the table when the build was not compiled with
+//! `-C target-cpu=native`: without the target features enabled at compile
+//! time, LLVM lowers the 16-lane loops to SSE2 (x86-64's baseline). The
+//! explicit `std::arch` microkernels in [`crate::simd`]'s `x86`/`neon`
+//! modules recover that throughput at *runtime*: this module detects once
+//! (per process, [`std::sync::OnceLock`]) which instruction set the
+//! machine actually has and exposes the result as an [`IsaLevel`], the
+//! dispatch key threaded through
+//! [`crate::kernels::rowconv::RowKernel::row_fn_at`], `ExecCtx`, and the
+//! autotuner's profile buckets.
+//!
+//! Levels:
+//! * [`IsaLevel::Scalar`] — the portable `F32xL` kernels; always
+//!   available, always the correctness reference.
+//! * [`IsaLevel::Avx2`] — x86-64 with AVX2 **and** FMA (`_mm256_*`,
+//!   8 × f32 per register).
+//! * [`IsaLevel::Avx512`] — x86-64 with AVX-512F (`_mm512_*`, 16 × f32).
+//!   Only compiled when the toolchain has the stabilized `_mm512`
+//!   intrinsics (Rust ≥ 1.89; see `build.rs` / the `swconv_avx512` cfg);
+//!   on older compilers the level simply reports unavailable.
+//! * [`IsaLevel::Neon`] — aarch64 (NEON is mandatory there, 4 × f32).
+//!
+//! Forcing a level: tests and benches force a level *per context*
+//! (`ExecCtx::with_isa`) or per call ([`RowKernel::row_fn_at`]); the CLI's
+//! `--isa` flag forces the *process-wide* default via [`IsaLevel::force`],
+//! which [`IsaLevel::effective`] then reports instead of the detected
+//! level. Forcing an unavailable level is rejected — dispatch can
+//! therefore never hand out an intrinsic the machine cannot execute, and
+//! every wrapper double-checks availability and falls back to the
+//! portable kernel besides.
+//!
+//! [`RowKernel::row_fn_at`]: crate::kernels::rowconv::RowKernel::row_fn_at
+
+use crate::error::{bail, Result};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// An instruction-set level the row kernels can be dispatched at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum IsaLevel {
+    /// Portable [`crate::simd::F32xL`] kernels — always available.
+    Scalar,
+    /// x86-64 AVX2 + FMA (`_mm256_*`, 8 f32 lanes).
+    Avx2,
+    /// x86-64 AVX-512F (`_mm512_*`, 16 f32 lanes).
+    Avx512,
+    /// aarch64 NEON (`vfmaq_f32` & co., 4 f32 lanes).
+    Neon,
+}
+
+/// Process-wide forced level (CLI `--isa`): 0 = none, else discriminant+1.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+impl IsaLevel {
+    /// All levels, in report order (portable first, widest last).
+    pub const ALL: [IsaLevel; 4] =
+        [IsaLevel::Scalar, IsaLevel::Avx2, IsaLevel::Avx512, IsaLevel::Neon];
+
+    /// Stable name used in reports, `profile.json` and the `--isa` flag.
+    pub fn name(self) -> &'static str {
+        match self {
+            IsaLevel::Scalar => "scalar",
+            IsaLevel::Avx2 => "avx2",
+            IsaLevel::Avx512 => "avx512",
+            IsaLevel::Neon => "neon",
+        }
+    }
+
+    /// Parse a stable name (inverse of [`IsaLevel::name`]).
+    pub fn parse(s: &str) -> Option<IsaLevel> {
+        Self::ALL.into_iter().find(|l| l.name() == s)
+    }
+
+    /// f32 lanes per hardware register at this level. `Scalar` reports
+    /// the portable model's [`crate::simd::LANES`] — `F32xL` *models* a
+    /// 16-lane register even when LLVM lowers it narrower.
+    pub fn lanes(self) -> usize {
+        match self {
+            IsaLevel::Scalar => crate::simd::LANES,
+            IsaLevel::Avx2 => 8,
+            IsaLevel::Avx512 => 16,
+            IsaLevel::Neon => 4,
+        }
+    }
+
+    /// Whether this machine (and this build) can execute kernels at this
+    /// level. `Scalar` is always available.
+    pub fn available(self) -> bool {
+        match self {
+            IsaLevel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            IsaLevel::Avx2 => {
+                is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+            }
+            #[cfg(all(target_arch = "x86_64", swconv_avx512))]
+            IsaLevel::Avx512 => IsaLevel::Avx2.available() && is_x86_feature_detected!("avx512f"),
+            #[cfg(target_arch = "aarch64")]
+            IsaLevel::Neon => true, // NEON is mandatory on aarch64.
+            _ => false,
+        }
+    }
+
+    /// The best level this machine supports, detected once per process.
+    pub fn detected() -> IsaLevel {
+        static DETECTED: OnceLock<IsaLevel> = OnceLock::new();
+        *DETECTED.get_or_init(|| {
+            [IsaLevel::Avx512, IsaLevel::Neon, IsaLevel::Avx2]
+                .into_iter()
+                .find(|l| l.available())
+                .unwrap_or(IsaLevel::Scalar)
+        })
+    }
+
+    /// Every available level, portable first — the grid the autotuner
+    /// races and the parity/bench suites sweep.
+    pub fn available_levels() -> Vec<IsaLevel> {
+        Self::ALL.into_iter().filter(|l| l.available()).collect()
+    }
+
+    /// Force the process-wide default level (the CLI `--isa` knob).
+    ///
+    /// Rejects levels the machine cannot execute; forcing `Scalar` is
+    /// always legal (that is the point of the knob: exercising the
+    /// fallback path on capable hardware). Prefer `ExecCtx::with_isa`
+    /// in tests — this global is for process entry points.
+    pub fn force(level: IsaLevel) -> Result<()> {
+        if !level.available() {
+            bail!(
+                "--isa {} not available on this machine (detected: {})",
+                level.name(),
+                IsaLevel::detected().name()
+            );
+        }
+        let idx = Self::ALL.iter().position(|&l| l == level).unwrap() as u8 + 1;
+        FORCED.store(idx, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// The forced level, if [`IsaLevel::force`] has been called.
+    pub fn forced() -> Option<IsaLevel> {
+        match FORCED.load(Ordering::Relaxed) {
+            0 => None,
+            i => Some(Self::ALL[i as usize - 1]),
+        }
+    }
+
+    /// The level new `ExecCtx`s dispatch at: the forced level if one is
+    /// set, else the detected one.
+    pub fn effective() -> IsaLevel {
+        Self::forced().unwrap_or_else(Self::detected)
+    }
+}
+
+impl std::fmt::Display for IsaLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for l in IsaLevel::ALL {
+            assert_eq!(IsaLevel::parse(l.name()), Some(l));
+        }
+        assert_eq!(IsaLevel::parse("avx9000"), None);
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_detected_is_available() {
+        assert!(IsaLevel::Scalar.available());
+        assert!(IsaLevel::detected().available());
+        assert!(IsaLevel::available_levels().contains(&IsaLevel::Scalar));
+    }
+
+    #[test]
+    fn at_most_one_simd_arch_is_available() {
+        // AVX and NEON live on different architectures; a machine never
+        // reports both. (Guards the detection order in `detected`.)
+        assert!(!(IsaLevel::Avx2.available() && IsaLevel::Neon.available()));
+    }
+
+    #[test]
+    fn lanes_model() {
+        assert_eq!(IsaLevel::Scalar.lanes(), crate::simd::LANES);
+        assert_eq!(IsaLevel::Avx2.lanes(), 8);
+        assert_eq!(IsaLevel::Avx512.lanes(), 16);
+        assert_eq!(IsaLevel::Neon.lanes(), 4);
+    }
+
+    #[test]
+    fn forcing_an_unavailable_level_is_rejected() {
+        if let Some(&bad) = IsaLevel::ALL.iter().find(|l| !l.available()) {
+            let err = IsaLevel::force(bad).unwrap_err();
+            assert!(err.to_string().contains("not available"), "{err}");
+            // The rejected force must not leak into the effective level.
+            assert_ne!(IsaLevel::effective(), bad);
+        }
+    }
+    // NOTE: the *successful* global force is exercised in its own
+    // integration binary (`tests/isa_flag.rs`) — it mutates process
+    // state, like the pooling kill-switch in `tests/pool_flag.rs`.
+}

@@ -16,11 +16,24 @@
 //! * [`compound`] — the *compound vector*: several hardware vectors treated
 //!   as one long vector, for filter widths that do not fit a single
 //!   register (paper §2, "kernels of larger width").
+//! * [`isa`] — runtime ISA detection ([`IsaLevel`]): which explicit
+//!   `std::arch` microkernel set (AVX-512F / AVX2+FMA / NEON) this
+//!   machine can dispatch to, with the portable kernels as the always-
+//!   correct scalar fallback.
+//! * `x86` / `neon` (crate-internal, per-arch) — the explicit intrinsic
+//!   row kernels themselves, handed out through
+//!   [`crate::kernels::rowconv::RowKernel::row_fn_at`].
 
 pub mod vector;
 pub mod slide;
 pub mod compound;
+pub mod isa;
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86;
 
 pub use compound::CompoundF32;
+pub use isa::IsaLevel;
 pub use slide::{slide, slide_dyn};
 pub use vector::{F32xL, LANES};

@@ -1,0 +1,258 @@
+//! Explicit NEON microkernels (`std::arch`, aarch64 only).
+//!
+//! The aarch64 members of the microkernel family handed out by
+//! [`crate::kernels::rowconv::RowKernel::row_fn_at`]. Arithmetic parity
+//! with the portable kernels follows the same rules as the x86 module:
+//! f32 kernels are ascending-tap fused-FMA chains (`vfmaq_f32` rounds
+//! once, like `f32::mul_add`), the int8 kernel is exact i32
+//! accumulation, the bf16 kernel is non-fused multiply-then-add. Scalar
+//! row tails use `f32::mul_add`, so every element — vector body or tail
+//! — is bit-identical to the portable path.
+//!
+//! * The custom k=3/k=5 kernels use the native register-pair lane
+//!   extract `vextq_f32` — aarch64's `EXT`, exactly the paper's slide
+//!   primitive at 4-lane width.
+//! * The any-k streaming kernel (serving Generic and Compound) issues
+//!   one unaligned `vld1q_f32` per tap per chain, four chains deep.
+//! * The int8 kernel widens with `vmovl_s8` and multiply-accumulates
+//!   with `vmlal_s16` (`SMLAL`), which widens i16 products to i32 before
+//!   adding — exact for the full i8 range. (`sdot` would be faster still
+//!   but needs the optional `dotprod` feature and computes 4-tap groups,
+//!   which does not fit the per-tap row layout; `SMLAL` is baseline
+//!   NEON.)
+//! * The bf16 kernel widens `u16 → u32` (`vmovl_u16`) and shifts into
+//!   f32 bit position (`vshlq_n_u32::<16>`).
+//!
+//! NEON is mandatory on aarch64, so unlike AVX these kernels are always
+//! available once the target is aarch64; the dispatch wrappers still
+//! verify [`crate::simd::IsaLevel::available`] before calling in.
+
+use core::arch::aarch64::*;
+
+/// Scalar row tail for f32 kernels: `f32::mul_add` per tap in ascending
+/// order — bit-identical to one lane of the portable partial block.
+#[inline(always)]
+fn f32_tail(src: &[f32], w: &[f32], dst: &mut [f32], from: usize, out_len: usize) {
+    for i in from..out_len {
+        let mut acc = dst[i];
+        for (j, &wj) in w.iter().enumerate() {
+            acc = wj.mul_add(src[i + j], acc);
+        }
+        dst[i] = acc;
+    }
+}
+
+/// Custom k = 3 row kernel, `vextq_f32` slide form.
+///
+/// # Safety
+/// NEON must be available; `w.len() == 3`, `dst.len() >= out_len`, and
+/// `src` padded per the f32 row contract
+/// (`src.len() >= out_len + 1 + 2·LANES` readable f32).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn row_conv_custom3_neon(
+    src: &[f32],
+    w: &[f32],
+    dst: &mut [f32],
+    out_len: usize,
+) {
+    let (w0, w1, w2) = (vdupq_n_f32(w[0]), vdupq_n_f32(w[1]), vdupq_n_f32(w[2]));
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut x = 0;
+    while x + 4 <= out_len {
+        let a = vld1q_f32(sp.add(x));
+        let b = vld1q_f32(sp.add(x + 4));
+        let mut acc = vld1q_f32(dp.add(x));
+        acc = vfmaq_f32(acc, w0, a);
+        acc = vfmaq_f32(acc, w1, vextq_f32::<1>(a, b));
+        acc = vfmaq_f32(acc, w2, vextq_f32::<2>(a, b));
+        vst1q_f32(dp.add(x), acc);
+        x += 4;
+    }
+    f32_tail(src, w, dst, x, out_len);
+}
+
+/// Custom k = 5 row kernel, `vextq_f32` slide form. Tap 4 slides a full
+/// register, so the window is simply the second register of the pair at
+/// the next offset.
+///
+/// # Safety
+/// As [`row_conv_custom3_neon`], with `w.len() == 5`.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn row_conv_custom5_neon(
+    src: &[f32],
+    w: &[f32],
+    dst: &mut [f32],
+    out_len: usize,
+) {
+    let w0 = vdupq_n_f32(w[0]);
+    let w1 = vdupq_n_f32(w[1]);
+    let w2 = vdupq_n_f32(w[2]);
+    let w3 = vdupq_n_f32(w[3]);
+    let w4 = vdupq_n_f32(w[4]);
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut x = 0;
+    while x + 4 <= out_len {
+        let a = vld1q_f32(sp.add(x));
+        let b = vld1q_f32(sp.add(x + 4));
+        let mut acc = vld1q_f32(dp.add(x));
+        acc = vfmaq_f32(acc, w0, a);
+        acc = vfmaq_f32(acc, w1, vextq_f32::<1>(a, b));
+        acc = vfmaq_f32(acc, w2, vextq_f32::<2>(a, b));
+        acc = vfmaq_f32(acc, w3, vextq_f32::<3>(a, b));
+        acc = vfmaq_f32(acc, w4, b);
+        vst1q_f32(dp.add(x), acc);
+        x += 4;
+    }
+    f32_tail(src, w, dst, x, out_len);
+}
+
+/// Any-width f32 streaming row kernel (serves Generic *and* Compound):
+/// four independent FMA chains, 16 outputs per main iteration.
+///
+/// # Safety
+/// NEON must be available; `w.len() >= 1`, `dst.len() >= out_len`, `src`
+/// padded per the f32 row contract.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn row_conv_f32_neon(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let k = w.len();
+    let mut x = 0;
+    while x + 16 <= out_len {
+        let mut acc0 = vld1q_f32(dp.add(x));
+        let mut acc1 = vld1q_f32(dp.add(x + 4));
+        let mut acc2 = vld1q_f32(dp.add(x + 8));
+        let mut acc3 = vld1q_f32(dp.add(x + 12));
+        for j in 0..k {
+            let wv = vdupq_n_f32(*w.get_unchecked(j));
+            let p = sp.add(x + j);
+            acc0 = vfmaq_f32(acc0, wv, vld1q_f32(p));
+            acc1 = vfmaq_f32(acc1, wv, vld1q_f32(p.add(4)));
+            acc2 = vfmaq_f32(acc2, wv, vld1q_f32(p.add(8)));
+            acc3 = vfmaq_f32(acc3, wv, vld1q_f32(p.add(12)));
+        }
+        vst1q_f32(dp.add(x), acc0);
+        vst1q_f32(dp.add(x + 4), acc1);
+        vst1q_f32(dp.add(x + 8), acc2);
+        vst1q_f32(dp.add(x + 12), acc3);
+        x += 16;
+    }
+    while x + 4 <= out_len {
+        let mut acc = vld1q_f32(dp.add(x));
+        for j in 0..k {
+            let wv = vdupq_n_f32(*w.get_unchecked(j));
+            acc = vfmaq_f32(acc, wv, vld1q_f32(sp.add(x + j)));
+        }
+        vst1q_f32(dp.add(x), acc);
+        x += 4;
+    }
+    f32_tail(src, w, dst, x, out_len);
+}
+
+/// Exact signed-int8 row kernel: widen with `vmovl_s8`, multiply-
+/// accumulate with `vmlal_s16` (widens products to i32 before adding —
+/// exact for the full i8 × i8 range).
+///
+/// # Safety
+/// NEON must be available; `w.len() >= 1`, `dst.len() >= out_len`, and
+/// `src` padded per the q8 row contract
+/// (`src.len() >= out_len - 1 + (k - 1) + LANES + 1`).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn row_conv_q8_neon(src: &[i8], w: &[i8], dst: &mut [i32], out_len: usize) {
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let k = w.len();
+    let mut x = 0;
+    while x + 8 <= out_len {
+        let mut acc0 = vdupq_n_s32(0); // outputs x .. x+4
+        let mut acc1 = vdupq_n_s32(0); // outputs x+4 .. x+8
+        for j in 0..k {
+            let wv = vdupq_n_s16(*w.get_unchecked(j) as i16);
+            let s16 = vmovl_s8(vld1_s8(sp.add(x + j)));
+            acc0 = vmlal_s16(acc0, vget_low_s16(s16), vget_low_s16(wv));
+            acc1 = vmlal_s16(acc1, vget_high_s16(s16), vget_high_s16(wv));
+        }
+        let d0 = vld1q_s32(dp.add(x));
+        let d1 = vld1q_s32(dp.add(x + 4));
+        vst1q_s32(dp.add(x), vaddq_s32(d0, acc0));
+        vst1q_s32(dp.add(x + 4), vaddq_s32(d1, acc1));
+        x += 8;
+    }
+    for i in x..out_len {
+        let mut acc = 0i32;
+        for (j, &wj) in w.iter().enumerate() {
+            acc += wj as i32 * src[i + j] as i32;
+        }
+        dst[i] += acc;
+    }
+}
+
+/// bf16 expand-multiply row kernel: widen `u16 → u32`, shift into f32
+/// bit position, then multiply and add **non-fused** — matching the
+/// portable `row_conv_bf16` accumulation bit for bit.
+///
+/// `src` is the raw `u16` view of the `Bf16` row (`#[repr(transparent)]`).
+///
+/// # Safety
+/// NEON must be available; `w.len() >= 1`, `dst.len() >= out_len`, and
+/// `src` padded per the bf16 row contract
+/// (`src.len() >= out_len - 1 + (k - 1) + LANES + 1`).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn row_conv_bf16_neon(src: &[u16], w: &[f32], dst: &mut [f32], out_len: usize) {
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let k = w.len();
+    let mut x = 0;
+    while x + 4 <= out_len {
+        let mut acc = vdupq_n_f32(0.0);
+        for j in 0..k {
+            let wv = vdupq_n_f32(*w.get_unchecked(j));
+            let wide = vshlq_n_u32::<16>(vmovl_u16(vld1_u16(sp.add(x + j))));
+            let s = vreinterpretq_f32_u32(wide);
+            acc = vaddq_f32(acc, vmulq_f32(wv, s));
+        }
+        let d = vld1q_f32(dp.add(x));
+        vst1q_f32(dp.add(x), vaddq_f32(d, acc));
+        x += 4;
+    }
+    for i in x..out_len {
+        let mut acc = 0.0f32;
+        for (j, &wj) in w.iter().enumerate() {
+            acc += wj * f32::from_bits((src[i + j] as u32) << 16);
+        }
+        dst[i] += acc;
+    }
+}
+
+/// Six-chain NEON FMA micro-loop for the per-ISA roofline peak.
+/// FLOPs = `iters · 6 chains · 4 lanes · 2`.
+///
+/// # Safety
+/// NEON must be available.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn fma_peak_neon(iters: usize) -> f32 {
+    let a = vdupq_n_f32(0.999_999_9);
+    let b = vdupq_n_f32(1.0e-7);
+    let mut c0 = vdupq_n_f32(0.1);
+    let mut c1 = vdupq_n_f32(0.2);
+    let mut c2 = vdupq_n_f32(0.3);
+    let mut c3 = vdupq_n_f32(0.4);
+    let mut c4 = vdupq_n_f32(0.5);
+    let mut c5 = vdupq_n_f32(0.6);
+    for _ in 0..iters {
+        // c = c·a + b, the dependency carried through the multiplicand.
+        c0 = vfmaq_f32(b, c0, a);
+        c1 = vfmaq_f32(b, c1, a);
+        c2 = vfmaq_f32(b, c2, a);
+        c3 = vfmaq_f32(b, c3, a);
+        c4 = vfmaq_f32(b, c4, a);
+        c5 = vfmaq_f32(b, c5, a);
+    }
+    let sum = vaddq_f32(
+        vaddq_f32(vaddq_f32(c0, c1), vaddq_f32(c2, c3)),
+        vaddq_f32(c4, c5),
+    );
+    vaddvq_f32(sum)
+}

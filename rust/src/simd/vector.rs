@@ -11,9 +11,12 @@ use std::ops::{Add, Mul, Sub};
 /// Number of f32 lanes in one hardware vector (AVX-512 ZMM register).
 ///
 /// The paper's Xeon 8272CL has 16 f32 lanes; the crossover phenomena it
-/// reports (generic kernels handle filter widths up to `LANES + 1`,
-/// compound kernels beyond, zigzag at compound/hardware misalignment)
-/// depend on this constant.
+/// reports (the generic/compound kernel handoff, zigzag at
+/// compound/hardware misalignment) depend on this constant. The actual
+/// filter-width limits each row-kernel family derives from `LANES` are
+/// defined **once**, next to the kernels:
+/// [`crate::kernels::rowconv::GENERIC_MAX_K`] (`LANES + 1`) and
+/// [`crate::kernels::rowconv::COMPOUND_MAX_K`] (`7·LANES + 1`).
 pub const LANES: usize = 16;
 
 /// One hardware vector: 16 f32 lanes, 64-byte aligned (one ZMM register /

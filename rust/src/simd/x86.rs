@@ -1,0 +1,482 @@
+//! Explicit AVX2 / AVX-512 microkernels (`std::arch`, x86-64 only).
+//!
+//! These are the register-tiled row-convolution inner loops the ISA
+//! dispatcher ([`crate::kernels::rowconv::RowKernel::row_fn_at`]) hands
+//! out on x86-64. Each kernel reproduces its portable counterpart's
+//! arithmetic **exactly**:
+//!
+//! * f32 kernels fold taps in ascending `j` order with one fused
+//!   multiply-add per tap per element — the same per-element operation
+//!   chain as the portable [`crate::simd::F32xL::mul_add`] kernels, so
+//!   results are bit-identical at any vector width or blocking.
+//! * the int8 kernel accumulates exact i32 products (order-independent),
+//! * the bf16 kernel uses a separate multiply then add (non-fused),
+//!   matching the portable `row_conv_bf16` accumulation exactly.
+//!
+//! Row tails shorter than one vector run a scalar loop built on
+//! `f32::mul_add` — still one rounding per tap, so the tail is
+//! bit-identical too.
+//!
+//! Two shapes of f32 kernel:
+//!
+//! * **Custom k=3/k=5** — the paper's slide form: load one register pair
+//!   per output vector, derive every tap window with an in-register
+//!   shift. On AVX2 the shift is `_mm256_permutevar8x32_ps` on both
+//!   registers + `_mm256_blendv_ps` (no single cross-lane `valign` exists
+//!   pre-AVX-512); on AVX-512 it is one `_mm512_permutex2var_ps`
+//!   (`vpermt2ps`), the native two-register lane extract.
+//! * **Any-k streaming** — serves both the Generic and Compound families:
+//!   per tap, one unaligned load at `src[x + j]` feeds several
+//!   independent FMA accumulator chains. At 8/16 f32 per unaligned L1
+//!   load there is no need for the portable code's register-pair slide
+//!   economy, and the multi-chain unroll hides FMA latency. (The padding
+//!   contract already guarantees `2·LANES` readable f32 past the last
+//!   window, so full-width loads near the row end stay in bounds.)
+//!
+//! All functions are `unsafe` `#[target_feature]` items: the safe
+//! wrappers in `kernels::rowconv` verify ISA availability (and assert the
+//! padding contract) before calling in. AVX-512 kernels additionally sit
+//! behind the `swconv_avx512` cfg — the `_mm512_*` intrinsics need
+//! Rust ≥ 1.89 (probed by `build.rs`).
+
+use core::arch::x86_64::*;
+
+/// Scalar row tail for f32 kernels: `f32::mul_add` per tap in ascending
+/// order — bit-identical to one lane of the portable partial block.
+#[inline(always)]
+fn f32_tail(src: &[f32], w: &[f32], dst: &mut [f32], from: usize, out_len: usize) {
+    for i in from..out_len {
+        let mut acc = dst[i];
+        for (j, &wj) in w.iter().enumerate() {
+            acc = wj.mul_add(src[i + j], acc);
+        }
+        dst[i] = acc;
+    }
+}
+
+/// AVX2 slide across a register pair: lane `i` of the result is lane
+/// `i + j` of `a ‖ b`, with `idx` = `splat(j) + iota (mod 8)` and
+/// `take_b` the sign-bit mask of lanes with `i + j >= 8`. This is the
+/// `_mm256_permutevar8x32_ps` form of the paper's slide primitive.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn slide8(a: __m256, b: __m256, idx: __m256i, take_b: __m256) -> __m256 {
+    let pa = _mm256_permutevar8x32_ps(a, idx);
+    let pb = _mm256_permutevar8x32_ps(b, idx);
+    _mm256_blendv_ps(pa, pb, take_b)
+}
+
+/// Rotate-index and source-select constants for an AVX2 slide by `j`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn slide8_consts(j: i32) -> (__m256i, __m256) {
+    let iota = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+    let idx = _mm256_and_si256(_mm256_add_epi32(iota, _mm256_set1_epi32(j)), _mm256_set1_epi32(7));
+    let take_b = _mm256_castsi256_ps(_mm256_cmpgt_epi32(
+        _mm256_add_epi32(iota, _mm256_set1_epi32(j)),
+        _mm256_set1_epi32(7),
+    ));
+    (idx, take_b)
+}
+
+/// Custom k = 3 row kernel, AVX2 slide form.
+///
+/// # Safety
+/// AVX2 + FMA must be available; `w.len() == 3`, `dst.len() >= out_len`,
+/// and `src` padded per the f32 row contract
+/// (`src.len() >= out_len + 1 + 2·LANES` readable f32).
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn row_conv_custom3_avx2(
+    src: &[f32],
+    w: &[f32],
+    dst: &mut [f32],
+    out_len: usize,
+) {
+    let (w0, w1, w2) = (_mm256_set1_ps(w[0]), _mm256_set1_ps(w[1]), _mm256_set1_ps(w[2]));
+    let (i1, m1) = slide8_consts(1);
+    let (i2, m2) = slide8_consts(2);
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut x = 0;
+    while x + 8 <= out_len {
+        let a = _mm256_loadu_ps(sp.add(x));
+        let b = _mm256_loadu_ps(sp.add(x + 8));
+        let mut acc = _mm256_loadu_ps(dp.add(x));
+        acc = _mm256_fmadd_ps(w0, a, acc);
+        acc = _mm256_fmadd_ps(w1, slide8(a, b, i1, m1), acc);
+        acc = _mm256_fmadd_ps(w2, slide8(a, b, i2, m2), acc);
+        _mm256_storeu_ps(dp.add(x), acc);
+        x += 8;
+    }
+    f32_tail(src, w, dst, x, out_len);
+}
+
+/// Custom k = 5 row kernel, AVX2 slide form.
+///
+/// # Safety
+/// As [`row_conv_custom3_avx2`], with `w.len() == 5`.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn row_conv_custom5_avx2(
+    src: &[f32],
+    w: &[f32],
+    dst: &mut [f32],
+    out_len: usize,
+) {
+    let w0 = _mm256_set1_ps(w[0]);
+    let w1 = _mm256_set1_ps(w[1]);
+    let w2 = _mm256_set1_ps(w[2]);
+    let w3 = _mm256_set1_ps(w[3]);
+    let w4 = _mm256_set1_ps(w[4]);
+    let (i1, m1) = slide8_consts(1);
+    let (i2, m2) = slide8_consts(2);
+    let (i3, m3) = slide8_consts(3);
+    let (i4, m4) = slide8_consts(4);
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut x = 0;
+    while x + 8 <= out_len {
+        let a = _mm256_loadu_ps(sp.add(x));
+        let b = _mm256_loadu_ps(sp.add(x + 8));
+        let mut acc = _mm256_loadu_ps(dp.add(x));
+        acc = _mm256_fmadd_ps(w0, a, acc);
+        acc = _mm256_fmadd_ps(w1, slide8(a, b, i1, m1), acc);
+        acc = _mm256_fmadd_ps(w2, slide8(a, b, i2, m2), acc);
+        acc = _mm256_fmadd_ps(w3, slide8(a, b, i3, m3), acc);
+        acc = _mm256_fmadd_ps(w4, slide8(a, b, i4, m4), acc);
+        _mm256_storeu_ps(dp.add(x), acc);
+        x += 8;
+    }
+    f32_tail(src, w, dst, x, out_len);
+}
+
+/// Any-width f32 streaming row kernel (serves Generic *and* Compound):
+/// per tap one unaligned load per accumulator chain, four independent
+/// chains (32 outputs) per main iteration.
+///
+/// # Safety
+/// AVX2 + FMA must be available; `w.len() >= 1`, `dst.len() >= out_len`,
+/// `src` padded per the f32 row contract.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn row_conv_f32_avx2(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let k = w.len();
+    let mut x = 0;
+    while x + 32 <= out_len {
+        let mut acc0 = _mm256_loadu_ps(dp.add(x));
+        let mut acc1 = _mm256_loadu_ps(dp.add(x + 8));
+        let mut acc2 = _mm256_loadu_ps(dp.add(x + 16));
+        let mut acc3 = _mm256_loadu_ps(dp.add(x + 24));
+        for j in 0..k {
+            let wv = _mm256_set1_ps(*w.get_unchecked(j));
+            let p = sp.add(x + j);
+            acc0 = _mm256_fmadd_ps(wv, _mm256_loadu_ps(p), acc0);
+            acc1 = _mm256_fmadd_ps(wv, _mm256_loadu_ps(p.add(8)), acc1);
+            acc2 = _mm256_fmadd_ps(wv, _mm256_loadu_ps(p.add(16)), acc2);
+            acc3 = _mm256_fmadd_ps(wv, _mm256_loadu_ps(p.add(24)), acc3);
+        }
+        _mm256_storeu_ps(dp.add(x), acc0);
+        _mm256_storeu_ps(dp.add(x + 8), acc1);
+        _mm256_storeu_ps(dp.add(x + 16), acc2);
+        _mm256_storeu_ps(dp.add(x + 24), acc3);
+        x += 32;
+    }
+    while x + 8 <= out_len {
+        let mut acc = _mm256_loadu_ps(dp.add(x));
+        for j in 0..k {
+            let wv = _mm256_set1_ps(*w.get_unchecked(j));
+            acc = _mm256_fmadd_ps(wv, _mm256_loadu_ps(sp.add(x + j)), acc);
+        }
+        _mm256_storeu_ps(dp.add(x), acc);
+        x += 8;
+    }
+    f32_tail(src, w, dst, x, out_len);
+}
+
+/// Exact signed-int8 row kernel: taps are consumed in pairs via
+/// interleave → sign-extend → `_mm256_madd_epi16` into i32 accumulators.
+///
+/// `_mm256_maddubs_epi16` (the obvious one-instruction widening
+/// multiply) is **unsigned × signed** and therefore wrong for our signed
+/// codes; the unpack + `madd_epi16` form is exact for the full i8 × i8
+/// range (each pair sum |2·128·128| = 2¹⁵ fits the i32 lanes `pmaddwd`
+/// produces).
+///
+/// # Safety
+/// AVX2 must be available; `w.len() >= 1`, `dst.len() >= out_len`, and
+/// `src` padded per the q8 row contract
+/// (`src.len() >= out_len - 1 + (k - 1) + LANES + 1`).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn row_conv_q8_avx2(src: &[i8], w: &[i8], dst: &mut [i32], out_len: usize) {
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let k = w.len();
+    let mut x = 0;
+    while x + 16 <= out_len {
+        let mut acc_lo = _mm256_setzero_si256(); // outputs x .. x+8
+        let mut acc_hi = _mm256_setzero_si256(); // outputs x+8 .. x+16
+        let mut j = 0;
+        while j + 2 <= k {
+            let wj = *w.get_unchecked(j) as u16 as u32;
+            let wj1 = *w.get_unchecked(j + 1) as u16 as u32;
+            let wpair = _mm256_set1_epi32((wj | (wj1 << 16)) as i32);
+            let va = _mm_loadu_si128(sp.add(x + j) as *const __m128i);
+            let vb = _mm_loadu_si128(sp.add(x + j + 1) as *const __m128i);
+            let lo = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(va, vb));
+            let hi = _mm256_cvtepi8_epi16(_mm_unpackhi_epi8(va, vb));
+            acc_lo = _mm256_add_epi32(acc_lo, _mm256_madd_epi16(lo, wpair));
+            acc_hi = _mm256_add_epi32(acc_hi, _mm256_madd_epi16(hi, wpair));
+            j += 2;
+        }
+        if j < k {
+            // Odd filter width: final tap paired with weight 0.
+            let wj = *w.get_unchecked(j) as u16 as u32;
+            let wpair = _mm256_set1_epi32(wj as i32);
+            let va = _mm_loadu_si128(sp.add(x + j) as *const __m128i);
+            let zero = _mm_setzero_si128();
+            let lo = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(va, zero));
+            let hi = _mm256_cvtepi8_epi16(_mm_unpackhi_epi8(va, zero));
+            acc_lo = _mm256_add_epi32(acc_lo, _mm256_madd_epi16(lo, wpair));
+            acc_hi = _mm256_add_epi32(acc_hi, _mm256_madd_epi16(hi, wpair));
+        }
+        let d0 = _mm256_loadu_si256(dp.add(x) as *const __m256i);
+        let d1 = _mm256_loadu_si256(dp.add(x + 8) as *const __m256i);
+        _mm256_storeu_si256(dp.add(x) as *mut __m256i, _mm256_add_epi32(d0, acc_lo));
+        _mm256_storeu_si256(dp.add(x + 8) as *mut __m256i, _mm256_add_epi32(d1, acc_hi));
+        x += 16;
+    }
+    for i in x..out_len {
+        let mut acc = 0i32;
+        for (j, &wj) in w.iter().enumerate() {
+            acc += wj as i32 * src[i + j] as i32;
+        }
+        dst[i] += acc;
+    }
+}
+
+/// bf16 expand-multiply row kernel: each load widens 8 bf16 words to f32
+/// with a 16-bit lane shift, then multiplies and adds **non-fused** —
+/// matching the portable `row_conv_bf16` accumulation bit for bit.
+///
+/// `src` is the raw `u16` view of the `Bf16` row (`#[repr(transparent)]`).
+///
+/// # Safety
+/// AVX2 must be available; `w.len() >= 1`, `dst.len() >= out_len`, and
+/// `src` padded per the bf16 row contract
+/// (`src.len() >= out_len - 1 + (k - 1) + LANES + 1`).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn row_conv_bf16_avx2(src: &[u16], w: &[f32], dst: &mut [f32], out_len: usize) {
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let k = w.len();
+    let mut x = 0;
+    while x + 8 <= out_len {
+        let mut acc = _mm256_setzero_ps();
+        for j in 0..k {
+            let wv = _mm256_set1_ps(*w.get_unchecked(j));
+            let raw = _mm_loadu_si128(sp.add(x + j) as *const __m128i); // 8 × u16
+            let s = _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(raw)));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(wv, s));
+        }
+        let d = _mm256_loadu_ps(dp.add(x));
+        _mm256_storeu_ps(dp.add(x), _mm256_add_ps(d, acc));
+        x += 8;
+    }
+    for i in x..out_len {
+        let mut acc = 0.0f32;
+        for (j, &wj) in w.iter().enumerate() {
+            acc += wj * f32::from_bits((src[i + j] as u32) << 16);
+        }
+        dst[i] += acc;
+    }
+}
+
+/// Six-chain AVX2 FMA micro-loop for the per-ISA roofline peak
+/// ([`crate::harness::roofline`]). FLOPs = `iters · 6 chains · 8 lanes · 2`.
+///
+/// # Safety
+/// AVX2 + FMA must be available.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn fma_peak_avx2(iters: usize) -> f32 {
+    let a = _mm256_set1_ps(0.999_999_9);
+    let b = _mm256_set1_ps(1.0e-7);
+    let mut c0 = _mm256_set1_ps(0.1);
+    let mut c1 = _mm256_set1_ps(0.2);
+    let mut c2 = _mm256_set1_ps(0.3);
+    let mut c3 = _mm256_set1_ps(0.4);
+    let mut c4 = _mm256_set1_ps(0.5);
+    let mut c5 = _mm256_set1_ps(0.6);
+    for _ in 0..iters {
+        c0 = _mm256_fmadd_ps(c0, a, b);
+        c1 = _mm256_fmadd_ps(c1, a, b);
+        c2 = _mm256_fmadd_ps(c2, a, b);
+        c3 = _mm256_fmadd_ps(c3, a, b);
+        c4 = _mm256_fmadd_ps(c4, a, b);
+        c5 = _mm256_fmadd_ps(c5, a, b);
+    }
+    let sum = _mm256_add_ps(
+        _mm256_add_ps(_mm256_add_ps(c0, c1), _mm256_add_ps(c2, c3)),
+        _mm256_add_ps(c4, c5),
+    );
+    let mut out = [0.0f32; 8];
+    _mm256_storeu_ps(out.as_mut_ptr(), sum);
+    out.iter().sum()
+}
+
+// ---------------------------------------------------------------------
+// AVX-512F kernels — compiled only when the toolchain has the stabilized
+// `_mm512_*` intrinsics (Rust ≥ 1.89; `build.rs` probes and sets the
+// `swconv_avx512` cfg). The f32 slide is the native two-register lane
+// extract `_mm512_permutex2var_ps` (`vpermt2ps`), exactly the portable
+// `slide::<J>` at hardware width.
+// ---------------------------------------------------------------------
+
+/// 0..15 lane indices for `vpermt2ps` slides.
+#[cfg(swconv_avx512)]
+#[inline]
+#[target_feature(enable = "avx512f")]
+unsafe fn iota16() -> __m512i {
+    _mm512_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15)
+}
+
+/// Custom k = 3 row kernel, AVX-512 slide form.
+///
+/// # Safety
+/// AVX-512F must be available; contract as [`row_conv_custom3_avx2`].
+#[cfg(swconv_avx512)]
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn row_conv_custom3_avx512(
+    src: &[f32],
+    w: &[f32],
+    dst: &mut [f32],
+    out_len: usize,
+) {
+    let (w0, w1, w2) = (_mm512_set1_ps(w[0]), _mm512_set1_ps(w[1]), _mm512_set1_ps(w[2]));
+    let iota = iota16();
+    let i1 = _mm512_add_epi32(iota, _mm512_set1_epi32(1));
+    let i2 = _mm512_add_epi32(iota, _mm512_set1_epi32(2));
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut x = 0;
+    while x + 16 <= out_len {
+        let a = _mm512_loadu_ps(sp.add(x));
+        let b = _mm512_loadu_ps(sp.add(x + 16));
+        let mut acc = _mm512_loadu_ps(dp.add(x));
+        acc = _mm512_fmadd_ps(w0, a, acc);
+        acc = _mm512_fmadd_ps(w1, _mm512_permutex2var_ps(a, i1, b), acc);
+        acc = _mm512_fmadd_ps(w2, _mm512_permutex2var_ps(a, i2, b), acc);
+        _mm512_storeu_ps(dp.add(x), acc);
+        x += 16;
+    }
+    f32_tail(src, w, dst, x, out_len);
+}
+
+/// Custom k = 5 row kernel, AVX-512 slide form.
+///
+/// # Safety
+/// AVX-512F must be available; contract as [`row_conv_custom5_avx2`].
+#[cfg(swconv_avx512)]
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn row_conv_custom5_avx512(
+    src: &[f32],
+    w: &[f32],
+    dst: &mut [f32],
+    out_len: usize,
+) {
+    let w0 = _mm512_set1_ps(w[0]);
+    let w1 = _mm512_set1_ps(w[1]);
+    let w2 = _mm512_set1_ps(w[2]);
+    let w3 = _mm512_set1_ps(w[3]);
+    let w4 = _mm512_set1_ps(w[4]);
+    let iota = iota16();
+    let i1 = _mm512_add_epi32(iota, _mm512_set1_epi32(1));
+    let i2 = _mm512_add_epi32(iota, _mm512_set1_epi32(2));
+    let i3 = _mm512_add_epi32(iota, _mm512_set1_epi32(3));
+    let i4 = _mm512_add_epi32(iota, _mm512_set1_epi32(4));
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut x = 0;
+    while x + 16 <= out_len {
+        let a = _mm512_loadu_ps(sp.add(x));
+        let b = _mm512_loadu_ps(sp.add(x + 16));
+        let mut acc = _mm512_loadu_ps(dp.add(x));
+        acc = _mm512_fmadd_ps(w0, a, acc);
+        acc = _mm512_fmadd_ps(w1, _mm512_permutex2var_ps(a, i1, b), acc);
+        acc = _mm512_fmadd_ps(w2, _mm512_permutex2var_ps(a, i2, b), acc);
+        acc = _mm512_fmadd_ps(w3, _mm512_permutex2var_ps(a, i3, b), acc);
+        acc = _mm512_fmadd_ps(w4, _mm512_permutex2var_ps(a, i4, b), acc);
+        _mm512_storeu_ps(dp.add(x), acc);
+        x += 16;
+    }
+    f32_tail(src, w, dst, x, out_len);
+}
+
+/// Any-width f32 streaming row kernel at AVX-512 width (two independent
+/// 16-lane chains, 32 outputs per main iteration).
+///
+/// # Safety
+/// AVX-512F must be available; contract as [`row_conv_f32_avx2`].
+#[cfg(swconv_avx512)]
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn row_conv_f32_avx512(src: &[f32], w: &[f32], dst: &mut [f32], out_len: usize) {
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let k = w.len();
+    let mut x = 0;
+    while x + 32 <= out_len {
+        let mut acc0 = _mm512_loadu_ps(dp.add(x));
+        let mut acc1 = _mm512_loadu_ps(dp.add(x + 16));
+        for j in 0..k {
+            let wv = _mm512_set1_ps(*w.get_unchecked(j));
+            let p = sp.add(x + j);
+            acc0 = _mm512_fmadd_ps(wv, _mm512_loadu_ps(p), acc0);
+            acc1 = _mm512_fmadd_ps(wv, _mm512_loadu_ps(p.add(16)), acc1);
+        }
+        _mm512_storeu_ps(dp.add(x), acc0);
+        _mm512_storeu_ps(dp.add(x + 16), acc1);
+        x += 32;
+    }
+    while x + 16 <= out_len {
+        let mut acc = _mm512_loadu_ps(dp.add(x));
+        for j in 0..k {
+            let wv = _mm512_set1_ps(*w.get_unchecked(j));
+            acc = _mm512_fmadd_ps(wv, _mm512_loadu_ps(sp.add(x + j)), acc);
+        }
+        _mm512_storeu_ps(dp.add(x), acc);
+        x += 16;
+    }
+    f32_tail(src, w, dst, x, out_len);
+}
+
+/// Six-chain AVX-512 FMA micro-loop for the per-ISA roofline peak.
+/// FLOPs = `iters · 6 chains · 16 lanes · 2`.
+///
+/// # Safety
+/// AVX-512F must be available.
+#[cfg(swconv_avx512)]
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn fma_peak_avx512(iters: usize) -> f32 {
+    let a = _mm512_set1_ps(0.999_999_9);
+    let b = _mm512_set1_ps(1.0e-7);
+    let mut c0 = _mm512_set1_ps(0.1);
+    let mut c1 = _mm512_set1_ps(0.2);
+    let mut c2 = _mm512_set1_ps(0.3);
+    let mut c3 = _mm512_set1_ps(0.4);
+    let mut c4 = _mm512_set1_ps(0.5);
+    let mut c5 = _mm512_set1_ps(0.6);
+    for _ in 0..iters {
+        c0 = _mm512_fmadd_ps(c0, a, b);
+        c1 = _mm512_fmadd_ps(c1, a, b);
+        c2 = _mm512_fmadd_ps(c2, a, b);
+        c3 = _mm512_fmadd_ps(c3, a, b);
+        c4 = _mm512_fmadd_ps(c4, a, b);
+        c5 = _mm512_fmadd_ps(c5, a, b);
+    }
+    let sum = _mm512_add_ps(
+        _mm512_add_ps(_mm512_add_ps(c0, c1), _mm512_add_ps(c2, c3)),
+        _mm512_add_ps(c4, c5),
+    );
+    let mut out = [0.0f32; 16];
+    _mm512_storeu_ps(out.as_mut_ptr(), sum);
+    out.iter().sum()
+}

@@ -9,6 +9,7 @@ use swconv::autotune::{autotune, AutotuneOpts, DispatchProfile, ProfileEntry, Tu
 use swconv::exec::ExecCtx;
 use swconv::kernels::rowconv::RowKernel;
 use swconv::kernels::{conv2d_ctx, Conv2dParams, ConvAlgo};
+use swconv::simd::IsaLevel;
 use swconv::tensor::{Dtype, Tensor};
 
 fn tmp(name: &str) -> PathBuf {
@@ -24,6 +25,7 @@ fn handmade() -> DispatchProfile {
             k: 3,
             threads: 1,
             dtype: Dtype::F32,
+            isa: IsaLevel::Scalar,
             algo: TunedAlgo::Sliding,
             slide: RowKernel::Custom,
             gflops: 8.0,
@@ -32,6 +34,7 @@ fn handmade() -> DispatchProfile {
             k: 7,
             threads: 1,
             dtype: Dtype::F32,
+            isa: IsaLevel::Scalar,
             algo: TunedAlgo::Gemm,
             slide: RowKernel::Generic,
             gflops: 6.0,
@@ -40,6 +43,7 @@ fn handmade() -> DispatchProfile {
             k: 11,
             threads: 1,
             dtype: Dtype::F32,
+            isa: IsaLevel::Scalar,
             algo: TunedAlgo::Sliding,
             slide: RowKernel::Compound,
             gflops: 5.0,
@@ -48,6 +52,7 @@ fn handmade() -> DispatchProfile {
             k: 19,
             threads: 4,
             dtype: Dtype::F32,
+            isa: IsaLevel::Scalar,
             algo: TunedAlgo::Direct,
             slide: RowKernel::Compound,
             gflops: 1.0,

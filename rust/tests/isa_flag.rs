@@ -1,0 +1,43 @@
+//! The process-global ISA force (`--isa`), in its own integration
+//! binary on purpose: cargo gives each integration-test file its own
+//! process, and this is the only test in it — so pinning the global
+//! level can never leak into another test's `IsaLevel::effective()`
+//! resolution (inside the lib-test process it would silently pin every
+//! subsequently built `ExecCtx` to scalar). Referenced from the NOTE in
+//! `simd::isa`'s unit tests, which only cover the rejection path.
+
+use swconv::exec::ExecCtx;
+use swconv::kernels::{conv2d_ctx, Conv2dParams, ConvAlgo};
+use swconv::simd::IsaLevel;
+use swconv::tensor::Tensor;
+
+/// Forcing the always-available scalar level succeeds, wins over
+/// detection in [`IsaLevel::effective`], seeds fresh `ExecCtx`s, and
+/// the forced ctx computes the same bytes as an explicitly scalar one.
+#[test]
+fn forcing_scalar_pins_effective_level_and_fresh_ctxs() {
+    assert!(IsaLevel::forced().is_none(), "no force at process start");
+    IsaLevel::force(IsaLevel::Scalar).expect("scalar is always available");
+    assert_eq!(IsaLevel::forced(), Some(IsaLevel::Scalar));
+    assert_eq!(IsaLevel::effective(), IsaLevel::Scalar);
+
+    // A ctx built *after* the force inherits it (the `--isa` flow:
+    // main() forces the level before any ctx exists).
+    let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 2);
+    assert_eq!(ctx.isa(), IsaLevel::Scalar);
+
+    // And the forced ctx computes exactly what an explicit scalar
+    // override computes.
+    let x = Tensor::randn(&[1, 2, 8, 18], 940);
+    let w = Tensor::randn(&[2, 2, 3, 3], 941);
+    let p = Conv2dParams::same(3);
+    let explicit = ExecCtx::with_threads(ConvAlgo::Sliding, 2).with_isa(IsaLevel::Scalar);
+    let a = conv2d_ctx(&x, &w, None, &p, &ctx);
+    let b = conv2d_ctx(&x, &w, None, &p, &explicit);
+    assert_eq!(a.as_slice(), b.as_slice());
+
+    // Re-forcing to another *available* level still works (the knob is
+    // settable more than once; last force wins).
+    IsaLevel::force(IsaLevel::detected()).expect("detected level is available");
+    assert_eq!(IsaLevel::effective(), IsaLevel::detected());
+}

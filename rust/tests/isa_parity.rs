@@ -1,0 +1,201 @@
+//! Exhaustive scalar-vs-intrinsic parity for the explicit SIMD
+//! microkernels: every [`RowKernel`] family × every [`IsaLevel`] across
+//! the full supported width range `k = 1..=COMPOUND_MAX_K`, on odd
+//! plane widths (tail lanes), widths below one vector, and strided
+//! convs — forced through the explicit-ISA dispatch seams.
+//!
+//! The invariant under test: the ISA level is a *speed* knob, never an
+//! accuracy knob. Every f32 kernel preserves the portable path's
+//! per-element ascending-tap fused-FMA order, so results are
+//! bit-identical (`assert_eq!`, not a tolerance) at every level; int8
+//! accumulation is exact integer arithmetic; bf16 replicates the
+//! portable non-fused widening order bitwise. Levels this machine
+//! cannot execute degrade to the portable kernel inside the dispatch
+//! ([`RowKernel::row_fn_at`] is total), so this suite passes — and
+//! still exercises every match arm — on any host.
+
+use swconv::exec::ExecCtx;
+use swconv::kernels::rowconv::{row_conv_bf16_at, row_conv_q8_at, RowKernel, COMPOUND_MAX_K};
+use swconv::kernels::sliding2d::{conv2d_sliding_bf16_ctx, conv2d_sliding_q8_raw_ctx};
+use swconv::kernels::{conv2d_ctx, Conv2dParams, ConvAlgo};
+use swconv::simd::{IsaLevel, LANES};
+use swconv::tensor::{quantize, to_bf16, Bf16, QuantParams, Tensor};
+
+/// Output widths covering the awkward cases: empty, sub-vector (< 4,
+/// < 8, < 16 lanes), exactly one portable vector, one-past, odd tails
+/// at every lane count, and a multi-vector run.
+const WIDTHS: [usize; 10] = [0, 1, 3, 7, 15, 16, 17, 31, 40, 100];
+
+/// Deterministic pseudo-random f32 in (-1, 1) — no rand crate offline.
+fn lcg_f32(seed: &mut u64) -> f32 {
+    *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    ((*seed >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+}
+
+/// Source rows long enough for the widest (k, width) pair under the
+/// strictest kernel contract (`width - 1 + k - 1 + 2·LANES + 1`).
+fn f32_src() -> Vec<f32> {
+    let mut seed = 11;
+    (0..COMPOUND_MAX_K + 100 + 2 * LANES + 8).map(|_| lcg_f32(&mut seed)).collect()
+}
+
+/// BIT PARITY (f32 rows) — every family × every level × every width
+/// `1..=COMPOUND_MAX_K` × every odd output width is bit-identical to
+/// the same family at `IsaLevel::Scalar` (the portable kernels).
+#[test]
+fn f32_row_kernels_bit_identical_at_every_level() {
+    let src = f32_src();
+    let mut seed = 12;
+    for k in 1..=COMPOUND_MAX_K {
+        let w: Vec<f32> = (0..k).map(|_| lcg_f32(&mut seed)).collect();
+        for family in [RowKernel::Custom, RowKernel::Generic, RowKernel::Compound] {
+            let reference = family.row_fn_at(k, IsaLevel::Scalar);
+            for width in WIDTHS {
+                // Non-zero prefill: the contract accumulates into dst,
+                // so a kernel that overwrites instead of adding fails.
+                let mut want = vec![0.5f32; width];
+                reference(&src, &w, &mut want, width);
+                for isa in IsaLevel::ALL {
+                    let mut got = vec![0.5f32; width];
+                    family.row_fn_at(k, isa)(&src, &w, &mut got, width);
+                    assert_eq!(want, got, "{family:?} k={k} width={width} {isa}");
+                }
+            }
+        }
+    }
+}
+
+/// EXACTNESS (int8 rows) — every level matches a freshly written naive
+/// i32-accumulation reference exactly (not just the portable kernel:
+/// this catches a portable bug replicated into the intrinsics).
+#[test]
+fn q8_row_kernel_exact_at_every_level() {
+    let mut seed = 13;
+    let src: Vec<i8> = (0..COMPOUND_MAX_K + 100 + 2 * LANES + 8)
+        .map(|_| (lcg_f32(&mut seed) * 127.0) as i8)
+        .collect();
+    for k in [1usize, 2, 3, 5, 8, 9, 16, 17, 33, 64] {
+        let w: Vec<i8> = (0..k).map(|_| (lcg_f32(&mut seed) * 127.0) as i8).collect();
+        for width in WIDTHS {
+            // Naive reference with the same accumulate-into contract.
+            let mut want = vec![7i32; width];
+            for (i, d) in want.iter_mut().enumerate() {
+                let mut acc = 0i32;
+                for (j, &wj) in w.iter().enumerate() {
+                    acc += wj as i32 * src[i + j] as i32;
+                }
+                *d += acc;
+            }
+            for isa in IsaLevel::ALL {
+                let mut got = vec![7i32; width];
+                row_conv_q8_at(isa)(&src, &w, &mut got, width);
+                assert_eq!(want, got, "q8 k={k} width={width} {isa}");
+            }
+        }
+    }
+}
+
+/// BIT PARITY (bf16 rows) — every level reproduces the portable bf16
+/// kernel's f32 row accumulator bitwise (the portable path is
+/// deliberately non-fused; intrinsics must replicate that order).
+#[test]
+fn bf16_row_kernel_bitwise_at_every_level() {
+    let mut seed = 14;
+    let src: Vec<Bf16> = (0..COMPOUND_MAX_K + 100 + 2 * LANES + 8)
+        .map(|_| Bf16::from_f32(lcg_f32(&mut seed)))
+        .collect();
+    for k in [1usize, 2, 3, 5, 9, 16, 17, 33, 64] {
+        let w: Vec<f32> = (0..k).map(|_| lcg_f32(&mut seed)).collect();
+        let reference = row_conv_bf16_at(IsaLevel::Scalar);
+        for width in WIDTHS {
+            let mut want = vec![0.5f32; width];
+            reference(&src, &w, &mut want, width);
+            for isa in IsaLevel::ALL {
+                let mut got = vec![0.5f32; width];
+                row_conv_bf16_at(isa)(&src, &w, &mut got, width);
+                assert_eq!(want, got, "bf16 k={k} width={width} {isa}");
+            }
+        }
+    }
+}
+
+/// Conv geometries covering every dispatch family plus the awkward
+/// plane shapes: sub-vector plane width, stride 2, grouped, and a wide
+/// filter that routes to the compound kernel.
+fn conv_cases() -> Vec<(Vec<usize>, Vec<usize>, Conv2dParams)> {
+    vec![
+        // Custom k=3 on an even plane.
+        (vec![1, 3, 12, 20], vec![4, 3, 3, 3], Conv2dParams::same(3)),
+        // Plane narrower than one portable vector (width 7 < LANES).
+        (vec![1, 2, 7, 7], vec![2, 2, 3, 3], Conv2dParams::same(3)),
+        // Stride 2 + groups: strided reads from the row accumulator.
+        (
+            vec![1, 4, 12, 14],
+            vec![4, 1, 5, 5],
+            Conv2dParams { stride: (2, 2), pad: (2, 2), groups: 4 },
+        ),
+        // Generic k=9 on an odd plane width.
+        (vec![1, 2, 10, 21], vec![3, 2, 9, 9], Conv2dParams::same(9)),
+        // Compound k=19 (> GENERIC_MAX_K) row filter.
+        (vec![1, 1, 8, 40], vec![2, 1, 3, 19], Conv2dParams::default()),
+    ]
+}
+
+/// END TO END (f32) — a full sliding conv forced to each level via
+/// [`ExecCtx::with_isa`] is bit-identical to the scalar-forced run at
+/// every tested thread count (the threading axis must not perturb the
+/// per-ISA parity, and vice versa).
+#[test]
+fn conv2d_forced_isa_bit_identical_across_levels_and_threads() {
+    for (i, (xd, wd, p)) in conv_cases().iter().enumerate() {
+        let x = Tensor::randn(xd, 900 + i as u64);
+        let w = Tensor::randn(wd, 910 + i as u64);
+        let reference_ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 1).with_isa(IsaLevel::Scalar);
+        let want = conv2d_ctx(&x, &w, None, p, &reference_ctx);
+        for threads in [1usize, 2, 4] {
+            for isa in IsaLevel::ALL {
+                let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads).with_isa(isa);
+                let got = conv2d_ctx(&x, &w, None, p, &ctx);
+                assert_eq!(want.as_slice(), got.as_slice(), "case {i} threads={threads} {isa}");
+            }
+        }
+    }
+}
+
+/// END TO END (int8) — the raw i32 accumulator conv matches the
+/// scalar-forced run exactly at every level × thread count.
+#[test]
+fn conv2d_q8_forced_isa_exact_across_levels_and_threads() {
+    let x = Tensor::randn(&[1, 2, 10, 21], 920);
+    let w = Tensor::randn(&[3, 2, 3, 3], 921);
+    let qx = quantize(&x, QuantParams::for_tensor(&x));
+    let qw = quantize(&w, QuantParams::for_tensor(&w));
+    let p = Conv2dParams::same(3);
+    let reference_ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 1).with_isa(IsaLevel::Scalar);
+    let want = conv2d_sliding_q8_raw_ctx(&qx, &qw, &p, &reference_ctx);
+    for threads in [1usize, 2, 4] {
+        for isa in IsaLevel::ALL {
+            let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads).with_isa(isa);
+            let got = conv2d_sliding_q8_raw_ctx(&qx, &qw, &p, &ctx);
+            assert_eq!(want.as_slice(), got.as_slice(), "threads={threads} {isa}");
+        }
+    }
+}
+
+/// END TO END (bf16) — the bf16 conv matches the scalar-forced run
+/// bitwise at every level × thread count.
+#[test]
+fn conv2d_bf16_forced_isa_bitwise_across_levels_and_threads() {
+    let x = to_bf16(&Tensor::randn(&[1, 2, 9, 19], 930));
+    let w = to_bf16(&Tensor::randn(&[2, 2, 5, 5], 931));
+    let p = Conv2dParams::same(5);
+    let reference_ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 1).with_isa(IsaLevel::Scalar);
+    let want = conv2d_sliding_bf16_ctx(&x, &w, None, &p, &reference_ctx);
+    for threads in [1usize, 2, 4] {
+        for isa in IsaLevel::ALL {
+            let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads).with_isa(isa);
+            let got = conv2d_sliding_bf16_ctx(&x, &w, None, &p, &ctx);
+            assert_eq!(want.as_slice(), got.as_slice(), "threads={threads} {isa}");
+        }
+    }
+}
