@@ -1,0 +1,77 @@
+//! BENCH — the graph compiler's payoff: every zoo model forwarded
+//! three ways on identical weights — layer by layer, through the
+//! verbatim compiled plan (passes off, the `SWCONV_NO_FUSE=1` shape),
+//! and through the fused plan (epilogue fusion + pad elision + quant
+//! hoisting). The passes exist to cut *memory traffic* — the paper's
+//! whole argument is that conv is bandwidth-bound on commodity
+//! hardware — so the table reports both wall time and the plans'
+//! static activation-byte accounting side by side.
+//!
+//! Parity is asserted before anything is timed: both plans must equal
+//! the layer path bit-for-bit, or the bench aborts.
+//!
+//! Emits `target/reports/BENCH_graph.json` (schema:
+//! [`swconv::harness::report::GraphBenchRecord`]) with `bench` =
+//! `"graph"` and one `"fused"`/`"unfused"` record pair per model.
+
+use swconv::harness::report::{dur, f3, write_graph_bench_json, GraphBenchRecord, Table};
+use swconv::harness::timing::bench;
+use swconv::kernels::ConvAlgo;
+use swconv::nn::{zoo, ExecCtx};
+use swconv::tensor::Tensor;
+
+const BATCH: usize = 4;
+
+fn main() {
+    let mut t = Table::new(
+        format!("Graph compiler: fused plan vs unfused plan vs layers (batch {BATCH}, sliding)"),
+        &["model", "MFLOP", "t_layers", "t_unfused", "t_fused", "act_unfused", "act_fused", "traffic"],
+    );
+    let mut records: Vec<GraphBenchRecord> = Vec::new();
+    // One ctx for the whole bench: scratch buffers warm up once and are
+    // recycled across iterations — the serving configuration.
+    let ctx = ExecCtx::new(ConvAlgo::Sliding);
+    for name in zoo::MODEL_NAMES {
+        let m = zoo::by_name(name, 10, 42).unwrap();
+        let mut shape = vec![BATCH];
+        shape.extend_from_slice(&m.input_shape);
+        let x = Tensor::randn(&shape, 1);
+        let fused = m.compile_with(true);
+        let plain = m.compile_with(false);
+
+        // Parity gate: timing a wrong answer is worse than no answer.
+        let want = m.forward(&x, &ctx);
+        assert_eq!(fused.run(&x, &ctx).as_slice(), want.as_slice(), "{name}: fused parity");
+        assert_eq!(plain.run(&x, &ctx).as_slice(), want.as_slice(), "{name}: unfused parity");
+
+        let tl = bench(|| m.forward(&x, &ctx));
+        let tu = bench(|| plain.run(&x, &ctx));
+        let tf = bench(|| fused.run(&x, &ctx));
+        let (ub, fb) = (plain.activation_bytes(BATCH), fused.activation_bytes(BATCH));
+        let flops = m.flops(BATCH);
+        t.row(vec![
+            name.into(),
+            f3(flops as f64 / 1e6),
+            dur(tl.median),
+            dur(tu.median),
+            dur(tf.median),
+            format!("{:.1}KiB", ub as f64 / 1024.0),
+            format!("{:.1}KiB", fb as f64 / 1024.0),
+            format!("{:+.1}%", (fb as f64 / ub as f64 - 1.0) * 100.0),
+        ]);
+        for (mode, stats, bytes) in [("unfused", &tu, ub), ("fused", &tf, fb)] {
+            records.push(GraphBenchRecord {
+                bench: "graph".into(),
+                model: name.into(),
+                mode: mode.into(),
+                threads: 1,
+                ns_per_iter: stats.median.as_secs_f64() * 1e9,
+                gflops: stats.gflops(flops),
+                activation_bytes: bytes,
+            });
+        }
+    }
+    println!("{}", t.render());
+    write_graph_bench_json("target/reports/BENCH_graph.json", &records).expect("json");
+    eprintln!("wrote target/reports/BENCH_graph.json ({} records)", records.len());
+}

@@ -3,6 +3,7 @@
 use crate::autotune::DispatchProfile;
 use crate::error::{bail, Result};
 use crate::exec::{available_threads, CoreSet, WorkerPool};
+use crate::graph::CompiledPlan;
 use crate::nn::{ExecCtx, Model};
 use crate::runtime::Engine;
 use crate::tensor::{Dtype, Tensor};
@@ -94,11 +95,17 @@ pub trait Backend {
     fn idle_tick(&mut self) {}
 }
 
-/// Native backend: a [`Model`] executed by the Rust kernels with a fixed
-/// [`ExecCtx`] (the router registers one backend per algorithm). The ctx
-/// — and with it the scratch arena — lives as long as the backend, so
-/// batched inference reuses buffers across requests instead of paying
-/// allocation churn per call.
+/// Native backend: a [`Model`] compiled to a [`CompiledPlan`] (typed
+/// graph IR + fusion passes, see [`crate::graph`]) and executed by the
+/// Rust kernels with a fixed [`ExecCtx`] (the router registers one
+/// backend per algorithm). The plan is compiled **once per tier** and
+/// shared across replicas behind an `Arc`, exactly like the model
+/// weights it contains; each replica keeps only its own ctx/arena.
+/// `SWCONV_NO_FUSE=1` (or `--no-fuse`) makes the plan reproduce the
+/// layer stack verbatim — either way `infer` is bit-identical to
+/// `model.forward`. The ctx — and with it the scratch arena — lives as
+/// long as the backend, so batched inference reuses buffers across
+/// requests instead of paying allocation churn per call.
 ///
 /// By default the arena keeps its high-water scratch forever (fastest
 /// steady state); [`NativeBackend::with_trim_after`] caps the retained
@@ -110,6 +117,7 @@ pub trait Backend {
 pub struct NativeBackend {
     name: String,
     model: Model,
+    plan: Arc<CompiledPlan>,
     ctx: ExecCtx,
     trim_after: Option<usize>,
     trim_idle: Option<Duration>,
@@ -117,9 +125,24 @@ pub struct NativeBackend {
 
 impl NativeBackend {
     /// Wrap a model + execution context (algorithm, worker threads,
-    /// scratch arena and — if attached — the dispatch profile).
+    /// scratch arena and — if attached — the dispatch profile). The
+    /// model is compiled here; to share one compiled plan across
+    /// replicas, use [`NativeBackend::with_plan`].
     pub fn new(name: impl Into<String>, model: Model, ctx: ExecCtx) -> Self {
-        NativeBackend { name: name.into(), model, ctx, trim_after: None, trim_idle: None }
+        let plan = Arc::new(model.compile());
+        Self::with_plan(name, model, plan, ctx)
+    }
+
+    /// Wrap an already-compiled plan (shared across a tier's replicas
+    /// by [`BackendSpec::native_retention`]'s factory) together with
+    /// the model it came from.
+    pub fn with_plan(
+        name: impl Into<String>,
+        model: Model,
+        plan: Arc<CompiledPlan>,
+        ctx: ExecCtx,
+    ) -> Self {
+        NativeBackend { name: name.into(), model, plan, ctx, trim_after: None, trim_idle: None }
     }
 
     /// Arena retention knob: after each batch, trim the ctx's scratch
@@ -147,6 +170,11 @@ impl NativeBackend {
         &self.model
     }
 
+    /// The compiled plan this backend serves.
+    pub fn plan(&self) -> &Arc<CompiledPlan> {
+        &self.plan
+    }
+
     /// The backend-owned execution context (scratch arena + threads).
     pub fn ctx(&self) -> &ExecCtx {
         &self.ctx
@@ -163,7 +191,7 @@ impl Backend for NativeBackend {
     }
 
     fn infer(&mut self, batch: &Tensor) -> Result<Tensor> {
-        let out = self.model.forward(batch, &self.ctx);
+        let out = self.plan.run(batch, &self.ctx);
         if let Some(cap) = self.trim_after {
             self.ctx.trim(cap);
         }
@@ -365,12 +393,20 @@ impl BackendSpec {
         let name = name.into();
         let item_shape = model.input_shape.clone();
         let n2 = name.clone();
+        // Compile once per tier: every replica serves this one plan
+        // (graph + weights) and keeps only its own ctx/arena private.
+        let plan = Arc::new(model.compile());
         BackendSpec {
             name,
             item_shape,
             replicas: 1,
             factory: Arc::new(move |_replica| {
-                let mut b = NativeBackend::new(n2.clone(), model.clone(), ctx.clone());
+                let mut b = NativeBackend::with_plan(
+                    n2.clone(),
+                    model.clone(),
+                    Arc::clone(&plan),
+                    ctx.clone(),
+                );
                 if let Some(cap) = trim_after {
                     b = b.with_trim_after(cap);
                 }
@@ -731,6 +767,26 @@ mod tests {
         one.set_pinning(&slice);
         assert!(one.ctx().pool_handle().is_none());
         assert_eq!(one.infer(&x).unwrap().as_slice(), baseline.as_slice());
+    }
+
+    /// The backend serves a compiled plan — bit-identical to the
+    /// layer-by-layer forward — and the shared-plan constructor lets a
+    /// tier's replicas serve one plan object.
+    #[test]
+    fn backend_serves_the_compiled_plan_bitwise() {
+        let m = simple_cnn(10, 1);
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let x = Tensor::randn(&[2, 1, 28, 28], 30);
+        let want = m.forward(&x, &ctx);
+        let mut b = NativeBackend::new("p", m.clone(), ctx.clone());
+        assert_eq!(b.infer(&x).unwrap().as_slice(), want.as_slice());
+        let plan = Arc::new(m.compile_with(true));
+        assert_eq!(plan.summary.fused_relu, 2, "both conv ReLUs fuse");
+        let mut r0 = NativeBackend::with_plan("r0", m.clone(), Arc::clone(&plan), ctx.clone());
+        let mut r1 = NativeBackend::with_plan("r1", m.clone(), Arc::clone(&plan), ctx.clone());
+        assert!(Arc::ptr_eq(r0.plan(), r1.plan()), "replicas share one plan");
+        assert_eq!(r0.infer(&x).unwrap().as_slice(), want.as_slice());
+        assert_eq!(r1.infer(&x).unwrap().as_slice(), want.as_slice());
     }
 
     #[test]

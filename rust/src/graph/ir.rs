@@ -1,0 +1,425 @@
+//! The typed intermediate representation: a DAG of [`Node`]s with static
+//! shape facts, produced by [`crate::nn::Model::lower`] and rewritten by
+//! [`super::passes`].
+//!
+//! Every node lists its input node ids (always smaller than its own —
+//! the graph is topologically ordered by construction, and the passes
+//! only ever rewire edges *backwards*), carries the output shape
+//! inferred at build time, and two post-pass facts the executor honours:
+//!
+//! * [`Node::fused_relu`] — the epilogue-fusion pass folded a following
+//!   ReLU into this node's output write.
+//! * [`Node::quant_out`] — the quantize-boundary pass decided this
+//!   node's consumers take i8 activation codes directly, so the f32
+//!   tensor between them is never materialised.
+
+use crate::kernels::{Conv2dParams, PoolParams};
+use crate::nn::Layer;
+use crate::tensor::{Tensor, TensorT, WeightScales};
+use std::sync::Arc;
+
+/// Index of a node in [`Graph::nodes`].
+pub type NodeId = usize;
+
+/// A graph operation. Weight-carrying ops own their parameters (cloned
+/// from the layer at lowering time; replicas share the *compiled plan*,
+/// so the clone happens once per model, not per replica or request).
+pub enum Op {
+    /// The graph input placeholder (always node 0).
+    Input,
+    /// f32 2-D convolution (weights `[c_out, c_in/g, kh, kw]`).
+    Conv2d {
+        /// Weights.
+        w: Tensor,
+        /// Bias `[c_out]`.
+        bias: Vec<f32>,
+        /// Stride / padding / groups.
+        params: Conv2dParams,
+    },
+    /// Int8-weight 2-D convolution (pre-quantized codes + scales).
+    QuantConv2d {
+        /// Weight codes.
+        qw: TensorT<i8>,
+        /// Weight scales (per-tensor or per-output-channel).
+        wq: WeightScales,
+        /// Bias `[c_out]` in f32.
+        bias: Vec<f32>,
+        /// Stride / padding / groups.
+        params: Conv2dParams,
+    },
+    /// Fully connected layer (`w` is `[out, in]`).
+    Linear {
+        /// Weights.
+        w: Tensor,
+        /// Bias `[out]`.
+        bias: Vec<f32>,
+    },
+    /// Elementwise `max(v, 0)`.
+    Relu,
+    /// Row-wise softmax over the last dimension.
+    Softmax,
+    /// Flatten `[n, …]` to `[n, prod(rest)]`.
+    Flatten,
+    /// Max pooling.
+    MaxPool2d(PoolParams),
+    /// Average pooling (`count_include_pad`).
+    AvgPool2d(PoolParams),
+    /// Global average pooling to `[n, c, 1, 1]`.
+    GlobalAvgPool,
+    /// Explicit zero padding of the spatial dims.
+    Pad2d {
+        /// Rows added on top and bottom.
+        ph: usize,
+        /// Columns added left and right.
+        pw: usize,
+    },
+    /// Channel concatenation of exactly two NCHW inputs.
+    Concat,
+    /// A layer without a typed lowering: executed via its
+    /// [`Layer::forward`], opaque to every pass.
+    Opaque(Arc<dyn Layer>),
+}
+
+impl Op {
+    /// Short stable name for rendering.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Input => "input",
+            Op::Conv2d { .. } => "conv2d",
+            Op::QuantConv2d { .. } => "quant-conv2d",
+            Op::Linear { .. } => "linear",
+            Op::Relu => "relu",
+            Op::Softmax => "softmax",
+            Op::Flatten => "flatten",
+            Op::MaxPool2d(_) => "max-pool2d",
+            Op::AvgPool2d(_) => "avg-pool2d",
+            Op::GlobalAvgPool => "global-avg-pool",
+            Op::Pad2d { .. } => "pad2d",
+            Op::Concat => "concat",
+            Op::Opaque(_) => "opaque",
+        }
+    }
+
+    /// Output shape from the input shapes.
+    fn infer_shape(&self, ins: &[&[usize]]) -> Vec<usize> {
+        match self {
+            Op::Input => unreachable!("Input has no predecessors"),
+            Op::Conv2d { w, params, .. } => conv_out_shape(ins[0], w.dims(), params),
+            Op::QuantConv2d { qw, params, .. } => conv_out_shape(ins[0], qw.dims(), params),
+            Op::Linear { w, .. } => {
+                assert_eq!(ins[0].len(), 2, "Linear input must be [n, d]");
+                assert_eq!(ins[0][1], w.dim(1), "Linear dim mismatch");
+                vec![ins[0][0], w.dim(0)]
+            }
+            Op::Relu | Op::Softmax => ins[0].to_vec(),
+            Op::Flatten => vec![ins[0][0], ins[0][1..].iter().product()],
+            Op::MaxPool2d(p) | Op::AvgPool2d(p) => {
+                let (oh, ow) = p.out_size(ins[0][2], ins[0][3]);
+                vec![ins[0][0], ins[0][1], oh, ow]
+            }
+            Op::GlobalAvgPool => vec![ins[0][0], ins[0][1], 1, 1],
+            Op::Pad2d { ph, pw } => {
+                vec![ins[0][0], ins[0][1], ins[0][2] + 2 * ph, ins[0][3] + 2 * pw]
+            }
+            Op::Concat => {
+                assert_eq!(ins.len(), 2, "Concat takes two inputs");
+                assert_eq!(ins[0][0], ins[1][0], "batch mismatch");
+                assert_eq!(ins[0][2..], ins[1][2..], "spatial mismatch");
+                vec![ins[0][0], ins[0][1] + ins[1][1], ins[0][2], ins[0][3]]
+            }
+            Op::Opaque(l) => l.out_shape(ins[0]),
+        }
+    }
+
+    /// FLOPs for one evaluation at the given input shapes (same
+    /// conventions as the [`Layer::flops`] impls).
+    fn flops(&self, ins: &[&[usize]], out: &[usize]) -> u64 {
+        let numel = |s: &[usize]| s.iter().product::<usize>() as u64;
+        match self {
+            Op::Input | Op::Flatten | Op::Pad2d { .. } | Op::Concat => 0,
+            Op::Conv2d { w, .. } => {
+                let taps = w.dim(1) * w.dim(2) * w.dim(3);
+                numel(out) * (2 * taps as u64 + 1)
+            }
+            Op::QuantConv2d { qw, .. } => {
+                let taps = qw.dim(1) * qw.dim(2) * qw.dim(3);
+                numel(out) * (2 * taps as u64 + 1)
+            }
+            Op::Linear { w, .. } => {
+                (ins[0][0] * w.dim(0) * (2 * w.dim(1) + 1)) as u64
+            }
+            Op::Relu | Op::GlobalAvgPool => numel(ins[0]),
+            Op::Softmax => 3 * numel(ins[0]),
+            Op::MaxPool2d(p) => numel(out) * (p.k.0 * p.k.1 - 1) as u64,
+            Op::AvgPool2d(p) => numel(out) * (p.k.0 * p.k.1) as u64,
+            Op::Opaque(l) => l.flops(ins[0]),
+        }
+    }
+}
+
+fn conv_out_shape(x: &[usize], w: &[usize], p: &Conv2dParams) -> Vec<usize> {
+    assert_eq!(x.len(), 4, "conv input must be NCHW");
+    assert_eq!(x[1], w[1] * p.groups, "conv channel mismatch");
+    let (oh, ow) = p.out_size(x[2], x[3], w[2], w[3]);
+    vec![x[0], w[0], oh, ow]
+}
+
+/// One graph node: an op, its input edges and the statically inferred
+/// output shape, plus the pass-assigned fusion facts.
+pub struct Node {
+    /// The operation.
+    pub op: Op,
+    /// Producer node ids (each `< ` this node's own id).
+    pub inputs: Vec<NodeId>,
+    /// Output shape (batch dimension included).
+    pub shape: Vec<usize>,
+    /// Epilogue fusion: apply ReLU in this node's output write.
+    pub fused_relu: bool,
+    /// Quantize-boundary hoisting: output stays i8 codes +
+    /// [`crate::tensor::QuantParams`] (only ever set on `QuantConv2d`).
+    pub quant_out: bool,
+}
+
+/// The typed graph a [`crate::nn::Model`] lowers into: nodes in
+/// topological order (node 0 is [`Op::Input`]), one designated output.
+pub struct Graph {
+    /// Model name (carried into reports and the CLI).
+    pub name: String,
+    /// Per-example input shape `[c, h, w]` (no batch dimension — plans
+    /// accept any batch, like [`crate::nn::Model::forward`]).
+    pub input_shape: Vec<usize>,
+    /// The nodes, topologically ordered.
+    pub nodes: Vec<Node>,
+    /// The output node.
+    pub output: NodeId,
+}
+
+impl Graph {
+    /// New graph holding only the input placeholder (node 0), which is
+    /// also the initial output.
+    pub fn new(name: impl Into<String>, input_shape: &[usize]) -> Self {
+        // Shape inference runs with a symbolic batch of 1; execution
+        // accepts any batch (shapes scale linearly in dim 0).
+        let shape = std::iter::once(1).chain(input_shape.iter().copied()).collect();
+        Graph {
+            name: name.into(),
+            input_shape: input_shape.to_vec(),
+            nodes: vec![Node {
+                op: Op::Input,
+                inputs: Vec::new(),
+                shape,
+                fused_relu: false,
+                quant_out: false,
+            }],
+            output: 0,
+        }
+    }
+
+    /// Append a node, inferring its shape from its inputs' shapes, and
+    /// make it the current output.
+    ///
+    /// # Panics
+    /// If an input id is out of range or the shapes are incompatible.
+    pub fn add(&mut self, op: Op, inputs: Vec<NodeId>) -> NodeId {
+        let id = self.nodes.len();
+        for &i in &inputs {
+            assert!(i < id, "node input {i} must precede the node");
+        }
+        let in_shapes: Vec<&[usize]> =
+            inputs.iter().map(|&i| self.nodes[i].shape.as_slice()).collect();
+        let shape = op.infer_shape(&in_shapes);
+        self.nodes.push(Node { op, inputs, shape, fused_relu: false, quant_out: false });
+        self.output = id;
+        id
+    }
+
+    /// Designate the output node.
+    pub fn set_output(&mut self, id: NodeId) {
+        assert!(id < self.nodes.len(), "output {id} out of range");
+        self.output = id;
+    }
+
+    /// How many nodes consume each node's output (the output node gets
+    /// one extra use for the caller).
+    pub fn consumer_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                counts[i] += 1;
+            }
+        }
+        counts[self.output] += 1;
+        counts
+    }
+
+    /// Drop nodes unreachable from the output (the dead ReLU/Pad2d
+    /// nodes the passes leave behind) and remap ids. Node 0 (the input)
+    /// is always kept; topological order is preserved.
+    pub fn compact(&mut self) {
+        let mut live = vec![false; self.nodes.len()];
+        live[0] = true;
+        live[self.output] = true;
+        // Reverse topological sweep: a node's inputs are live if it is.
+        for id in (0..self.nodes.len()).rev() {
+            if live[id] {
+                for &i in &self.nodes[id].inputs {
+                    live[i] = true;
+                }
+            }
+        }
+        let mut remap = vec![usize::MAX; self.nodes.len()];
+        let mut kept = 0usize;
+        for (id, &l) in live.iter().enumerate() {
+            if l {
+                remap[id] = kept;
+                kept += 1;
+            }
+        }
+        let mut idx = 0usize;
+        self.nodes.retain(|_| {
+            let keep = live[idx];
+            idx += 1;
+            keep
+        });
+        for n in &mut self.nodes {
+            for i in &mut n.inputs {
+                *i = remap[*i];
+            }
+        }
+        self.output = remap[self.output];
+    }
+
+    /// Total FLOPs for one forward pass at batch `n` (same conventions
+    /// as [`crate::nn::Model::flops`]).
+    pub fn flops(&self, n: usize) -> u64 {
+        self.nodes
+            .iter()
+            .map(|node| {
+                let ins: Vec<Vec<usize>> = node
+                    .inputs
+                    .iter()
+                    .map(|&i| scale_batch(&self.nodes[i].shape, n))
+                    .collect();
+                let ins_ref: Vec<&[usize]> = ins.iter().map(|s| s.as_slice()).collect();
+                node.op.flops(&ins_ref, &scale_batch(&node.shape, n))
+            })
+            .sum()
+    }
+
+    /// Bytes of activation memory the executor writes for one forward
+    /// pass at batch `n`: every non-input node's output tensor, at 4
+    /// bytes per element (f32 serving) or 1 for a `quant_out` node.
+    /// This is the graph-level memory-traffic metric
+    /// `benches/graph_fusion.rs` reports — fusion removes whole nodes,
+    /// so it shrinks this sum directly.
+    pub fn activation_bytes(&self, n: usize) -> u64 {
+        self.nodes
+            .iter()
+            .skip(1)
+            .map(|node| {
+                let numel: usize = scale_batch(&node.shape, n).iter().product();
+                numel as u64 * if node.quant_out { 1 } else { 4 }
+            })
+            .sum()
+    }
+
+    /// Human-readable rendering (the CLI `compile` subcommand's
+    /// before/after view): one line per node with fusion annotations.
+    pub fn render(&self) -> String {
+        let mut s = format!("graph \"{}\" (input {:?})\n", self.name, self.input_shape);
+        for (id, node) in self.nodes.iter().enumerate() {
+            let mut attrs = String::new();
+            if node.fused_relu {
+                attrs.push_str(" +relu");
+            }
+            if node.quant_out {
+                attrs.push_str(" +i8-out");
+            }
+            let ins = if node.inputs.is_empty() {
+                String::new()
+            } else {
+                format!(
+                    " <- {}",
+                    node.inputs.iter().map(|i| format!("%{i}")).collect::<Vec<_>>().join(", ")
+                )
+            };
+            let marker = if id == self.output { "  (output)" } else { "" };
+            s.push_str(&format!(
+                "  %{id}: {}{attrs} {:?}{ins}{marker}\n",
+                node.op.name(),
+                node.shape
+            ));
+        }
+        s
+    }
+}
+
+fn scale_batch(shape: &[usize], n: usize) -> Vec<usize> {
+    let mut s = shape.to_vec();
+    if !s.is_empty() {
+        s[0] *= n;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv_op(c_in: usize, c_out: usize, k: usize, params: Conv2dParams) -> Op {
+        Op::Conv2d {
+            w: Tensor::randn(&[c_out, c_in, k, k], 1),
+            bias: vec![0.0; c_out],
+            params,
+        }
+    }
+
+    #[test]
+    fn shapes_infer_along_a_chain() {
+        let mut g = Graph::new("t", &[3, 8, 8]);
+        let c = g.add(conv_op(3, 4, 3, Conv2dParams::same(3)), vec![0]);
+        assert_eq!(g.nodes[c].shape, vec![1, 4, 8, 8]);
+        let r = g.add(Op::Relu, vec![c]);
+        let f = g.add(Op::Flatten, vec![r]);
+        assert_eq!(g.nodes[f].shape, vec![1, 4 * 8 * 8]);
+        assert_eq!(g.output, f);
+    }
+
+    #[test]
+    fn compact_drops_unreachable_nodes() {
+        let mut g = Graph::new("t", &[3, 8, 8]);
+        let c = g.add(conv_op(3, 4, 3, Conv2dParams::same(3)), vec![0]);
+        let _dead = g.add(Op::Relu, vec![c]);
+        g.set_output(c);
+        g.compact();
+        assert_eq!(g.nodes.len(), 2);
+        assert_eq!(g.output, 1);
+    }
+
+    #[test]
+    fn consumer_counts_include_the_output_use() {
+        let mut g = Graph::new("t", &[3, 8, 8]);
+        let c = g.add(conv_op(3, 4, 3, Conv2dParams::same(3)), vec![0]);
+        let counts = g.consumer_counts();
+        assert_eq!(counts[0], 1);
+        assert_eq!(counts[c], 1); // the external output use
+    }
+
+    #[test]
+    fn activation_bytes_count_quant_nodes_as_one_byte() {
+        let mut g = Graph::new("t", &[3, 8, 8]);
+        let c = g.add(conv_op(3, 4, 3, Conv2dParams::same(3)), vec![0]);
+        let full = g.activation_bytes(1);
+        g.nodes[c].quant_out = true;
+        assert_eq!(g.activation_bytes(1) * 4, full);
+    }
+
+    #[test]
+    fn render_mentions_ops_and_output() {
+        let mut g = Graph::new("t", &[3, 8, 8]);
+        g.add(conv_op(3, 4, 3, Conv2dParams::same(3)), vec![0]);
+        let s = g.render();
+        assert!(s.contains("conv2d"));
+        assert!(s.contains("(output)"));
+    }
+}

@@ -1,0 +1,52 @@
+//! Typed graph IR, optimization passes and the compiled-plan executor —
+//! the compilation layer between [`crate::nn`]'s layer list and the
+//! [`crate::kernels`].
+//!
+//! A [`crate::nn::Model`] *lowers* into a [`Graph`] of typed [`Node`]s
+//! (static shape and dtype facts per edge), [`passes::optimize`]
+//! rewrites it — epilogue fusion, pad elision, quantize-boundary
+//! hoisting, see [`passes`] for the exactness argument behind each —
+//! and the result executes as a [`CompiledPlan`] through an ordinary
+//! [`crate::exec::ExecCtx`]. The paper's memory-bound thesis is what
+//! motivates every pass: each one removes a full read+write of an
+//! activation tensor, which on commodity CPUs is worth more than the
+//! arithmetic it rearranges.
+//!
+//! The `SWCONV_NO_FUSE` environment variable (any non-empty value other
+//! than `"0"`) disables the pass pipeline process-wide —
+//! [`crate::nn::Model::compile`] then returns a verbatim, unfused plan.
+//! The CLI's `--no-fuse` flag sets the same switch. This mirrors the
+//! `SWCONV_NO_POOL` escape hatch for the worker pool: a one-knob A/B
+//! lever for benchmarks and CI.
+
+pub mod ir;
+pub mod passes;
+pub mod plan;
+
+pub use ir::{Graph, Node, NodeId, Op};
+pub use passes::{optimize, PassSummary};
+pub use plan::CompiledPlan;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Once;
+
+static FUSION_DISABLED: AtomicBool = AtomicBool::new(false);
+static FUSION_INIT: Once = Once::new();
+
+/// Is graph fusion disabled process-wide? First call consults the
+/// `SWCONV_NO_FUSE` environment variable; later calls (and
+/// [`set_fusion_disabled`]) just read/write the cached flag.
+pub fn fusion_disabled() -> bool {
+    FUSION_INIT.call_once(|| {
+        let disabled = matches!(std::env::var("SWCONV_NO_FUSE"), Ok(v) if !v.is_empty() && v != "0");
+        FUSION_DISABLED.store(disabled, Ordering::Relaxed);
+    });
+    FUSION_DISABLED.load(Ordering::Relaxed)
+}
+
+/// Override the fusion switch programmatically (the CLI's `--no-fuse`).
+/// Wins over the environment variable regardless of call order.
+pub fn set_fusion_disabled(disabled: bool) {
+    FUSION_INIT.call_once(|| {});
+    FUSION_DISABLED.store(disabled, Ordering::Relaxed);
+}

@@ -1,0 +1,296 @@
+//! Graph rewrite passes. [`optimize`] runs them in a fixed order —
+//! epilogue fusion, pad elision, quantize-boundary hoisting — then
+//! compacts the graph. Each pass only rewires edges *backwards* (to
+//! smaller node ids), so topological order is preserved throughout and
+//! the executor can keep evaluating nodes in index order.
+//!
+//! Legality notes (the reasons each rewrite is exact, not just close):
+//!
+//! * **Epilogue fusion** — `relu` is folded into a producer's output
+//!   write as `v.max(0.0)` on the exact value the unfused kernel would
+//!   have stored; a separate ReLU pass computes the same expression on
+//!   the same bits. Only producers with a single consumer are eligible
+//!   (another consumer would observe pre-activation values).
+//! * **Pad elision** — a `pad2d` copy feeding a convolution is absorbed
+//!   into the conv's own `pad` parameter: the sliding kernels
+//!   materialise an identical padded buffer either way, and
+//!   `avg_pool2d` pads with the same zero (count-include-pad). Max
+//!   pooling is **excluded**: its internal padding identity is −∞, not
+//!   zero, so absorbing an explicit zero pad would change values.
+//! * **Quantize-boundary hoisting** — a `quant-conv2d` whose consumers
+//!   are all `quant-conv2d` emits i8 codes + scale directly
+//!   ([`crate::kernels`]' `quantize_conv_acc` computes bit-identically
+//!   the same codes the unfused dequantize → re-quantize round trip
+//!   produces), so the intermediate f32 tensor is never written.
+//!   Restricted to *direct* edges: hoisting across e.g. a pooling node
+//!   would requantize with that node's output statistics instead.
+
+use super::ir::{Graph, NodeId, Op};
+
+/// What [`optimize`] did — surfaced by the CLI `compile` subcommand and
+/// asserted on by the structural tests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PassSummary {
+    /// ReLU nodes folded into a producer's output epilogue.
+    pub fused_relu: usize,
+    /// `pad2d` nodes absorbed into consumer edge handling.
+    pub elided_pads: usize,
+    /// Convolutions now exchanging i8 activations directly.
+    pub hoisted_quant: usize,
+}
+
+/// Run the full pass pipeline in place.
+pub fn optimize(g: &mut Graph) -> PassSummary {
+    let summary = PassSummary {
+        fused_relu: fuse_epilogues(g),
+        elided_pads: elide_pads(g),
+        hoisted_quant: hoist_quant_boundaries(g),
+    };
+    g.compact();
+    summary
+}
+
+/// Can this op apply a fused ReLU in its output write?
+fn is_conv_like(op: &Op) -> bool {
+    matches!(op, Op::Conv2d { .. } | Op::QuantConv2d { .. } | Op::Linear { .. })
+}
+
+/// Replace every use of `from` (edges and the graph output) with `to`.
+fn rewire(g: &mut Graph, from: NodeId, to: NodeId) {
+    for n in &mut g.nodes {
+        for i in &mut n.inputs {
+            if *i == from {
+                *i = to;
+            }
+        }
+    }
+    if g.output == from {
+        g.output = to;
+    }
+}
+
+/// Pass 1: fold ReLU nodes into the output epilogue of their producer.
+/// Handles the direct `conv → relu` edge and the `(conv ‖ conv) →
+/// concat → relu` shape (Fire modules), pushing the ReLU into both
+/// branches — legal because `relu(concat(a, b)) == concat(relu(a),
+/// relu(b))`.
+pub fn fuse_epilogues(g: &mut Graph) -> usize {
+    let mut fused = 0;
+    for r in 1..g.nodes.len() {
+        if !matches!(g.nodes[r].op, Op::Relu) {
+            continue;
+        }
+        let p = g.nodes[r].inputs[0];
+        let counts = g.consumer_counts();
+        if counts[p] != 1 {
+            continue; // someone else observes the pre-activation values
+        }
+        if is_conv_like(&g.nodes[p].op) && !g.nodes[p].fused_relu {
+            g.nodes[p].fused_relu = true;
+            rewire(g, r, p);
+            fused += 1;
+        } else if matches!(g.nodes[p].op, Op::Concat) {
+            let branches = g.nodes[p].inputs.clone();
+            let eligible = branches.iter().all(|&b| {
+                counts[b] == 1 && is_conv_like(&g.nodes[b].op) && !g.nodes[b].fused_relu
+            });
+            if eligible {
+                for &b in &branches {
+                    g.nodes[b].fused_relu = true;
+                }
+                rewire(g, r, p);
+                fused += 1;
+            }
+        }
+    }
+    fused
+}
+
+/// Pass 2: absorb explicit `pad2d` copies into the consumers' own edge
+/// handling. Walks ids high-to-low so chained pads collapse in one
+/// sweep.
+pub fn elide_pads(g: &mut Graph) -> usize {
+    let mut elided = 0;
+    for d in (1..g.nodes.len()).rev() {
+        let (ph, pw) = match g.nodes[d].op {
+            Op::Pad2d { ph, pw } => (ph, pw),
+            _ => continue,
+        };
+        if g.output == d {
+            continue;
+        }
+        let src = g.nodes[d].inputs[0];
+        let consumers: Vec<NodeId> = (0..g.nodes.len())
+            .filter(|&c| g.nodes[c].inputs.contains(&d))
+            .collect();
+        let absorbable = !consumers.is_empty()
+            && consumers.iter().all(|&c| {
+                matches!(
+                    g.nodes[c].op,
+                    Op::Conv2d { .. } | Op::QuantConv2d { .. } | Op::AvgPool2d(_)
+                )
+            });
+        if !absorbable {
+            continue;
+        }
+        for &c in &consumers {
+            match &mut g.nodes[c].op {
+                Op::Conv2d { params, .. } | Op::QuantConv2d { params, .. } => {
+                    params.pad = (params.pad.0 + ph, params.pad.1 + pw);
+                }
+                Op::AvgPool2d(p) => {
+                    p.pad = (p.pad.0 + ph, p.pad.1 + pw);
+                }
+                _ => unreachable!(),
+            }
+            for i in &mut g.nodes[c].inputs {
+                if *i == d {
+                    *i = src;
+                }
+            }
+        }
+        elided += 1;
+    }
+    elided
+}
+
+/// Pass 3: mark `quant-conv2d` nodes whose every consumer is another
+/// `quant-conv2d` as emitting i8 activations directly.
+pub fn hoist_quant_boundaries(g: &mut Graph) -> usize {
+    let mut hoisted = 0;
+    for q in 1..g.nodes.len() {
+        if !matches!(g.nodes[q].op, Op::QuantConv2d { .. }) || g.output == q {
+            continue;
+        }
+        let mut any = false;
+        let all_quant = (0..g.nodes.len())
+            .filter(|&c| g.nodes[c].inputs.contains(&q))
+            .all(|c| {
+                any = true;
+                matches!(g.nodes[c].op, Op::QuantConv2d { .. })
+            });
+        if any && all_quant {
+            g.nodes[q].quant_out = true;
+            hoisted += 1;
+        }
+    }
+    hoisted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Conv2dParams, PoolParams};
+    use crate::tensor::{quantize_per_channel, Tensor};
+
+    fn conv(c_in: usize, c_out: usize, k: usize, params: Conv2dParams) -> Op {
+        Op::Conv2d {
+            w: Tensor::randn(&[c_out, c_in, k, k], 7),
+            bias: vec![0.0; c_out],
+            params,
+        }
+    }
+
+    fn qconv(c_in: usize, c_out: usize, k: usize, params: Conv2dParams) -> Op {
+        let (qw, wq) = quantize_per_channel(&Tensor::randn(&[c_out, c_in, k, k], 8));
+        Op::QuantConv2d { qw, wq, bias: vec![0.0; c_out], params }
+    }
+
+    #[test]
+    fn relu_fuses_into_single_consumer_conv() {
+        let mut g = Graph::new("t", &[3, 8, 8]);
+        let c = g.add(conv(3, 4, 3, Conv2dParams::same(3)), vec![0]);
+        let r = g.add(Op::Relu, vec![c]);
+        g.add(Op::Flatten, vec![r]);
+        let s = optimize(&mut g);
+        assert_eq!(s.fused_relu, 1);
+        assert_eq!(g.nodes.len(), 3); // input, conv(+relu), flatten
+        assert!(g.nodes[1].fused_relu);
+        assert!(matches!(g.nodes[2].op, Op::Flatten));
+        assert_eq!(g.nodes[2].inputs, vec![1]);
+    }
+
+    #[test]
+    fn relu_not_fused_when_preactivation_is_observed() {
+        let mut g = Graph::new("t", &[3, 8, 8]);
+        let c = g.add(conv(3, 4, 3, Conv2dParams::same(3)), vec![0]);
+        let r = g.add(Op::Relu, vec![c]);
+        // Second consumer of the conv: a concat of pre- and post-relu.
+        g.add(Op::Concat, vec![c, r]);
+        let s = optimize(&mut g);
+        assert_eq!(s.fused_relu, 0);
+        assert!(!g.nodes[1].fused_relu);
+    }
+
+    #[test]
+    fn relu_after_concat_pushes_into_both_branches() {
+        let mut g = Graph::new("t", &[3, 8, 8]);
+        let a = g.add(conv(3, 4, 1, Conv2dParams::default()), vec![0]);
+        let b = g.add(conv(3, 4, 3, Conv2dParams::same(3)), vec![0]);
+        let cat = g.add(Op::Concat, vec![a, b]);
+        g.add(Op::Relu, vec![cat]);
+        let s = optimize(&mut g);
+        assert_eq!(s.fused_relu, 1);
+        assert!(g.nodes[1].fused_relu && g.nodes[2].fused_relu);
+        assert!(matches!(g.nodes[g.output].op, Op::Concat));
+    }
+
+    #[test]
+    fn pad_elides_into_conv_but_not_max_pool() {
+        let mut g = Graph::new("t", &[3, 8, 8]);
+        let p = g.add(Op::Pad2d { ph: 1, pw: 1 }, vec![0]);
+        let c = g.add(conv(3, 4, 3, Conv2dParams::default()), vec![p]);
+        let p2 = g.add(Op::Pad2d { ph: 1, pw: 1 }, vec![c]);
+        g.add(Op::MaxPool2d(PoolParams::square(2)), vec![p2]);
+        let s = optimize(&mut g);
+        // First pad absorbed; the max-pool one must survive (its
+        // internal pad identity is −∞, not zero).
+        assert_eq!(s.elided_pads, 1);
+        let conv_node = &g.nodes[1];
+        match &conv_node.op {
+            Op::Conv2d { params, .. } => assert_eq!(params.pad, (1, 1)),
+            other => panic!("expected conv, got {}", other.name()),
+        }
+        assert_eq!(conv_node.inputs, vec![0]);
+        assert!(g.nodes.iter().any(|n| matches!(n.op, Op::Pad2d { .. })));
+    }
+
+    #[test]
+    fn chained_pads_collapse_in_one_sweep() {
+        let mut g = Graph::new("t", &[3, 8, 8]);
+        let p1 = g.add(Op::Pad2d { ph: 1, pw: 0 }, vec![0]);
+        let p2 = g.add(Op::Pad2d { ph: 0, pw: 1 }, vec![p1]);
+        g.add(conv(3, 4, 3, Conv2dParams::default()), vec![p2]);
+        let s = optimize(&mut g);
+        assert_eq!(s.elided_pads, 2);
+        match &g.nodes[1].op {
+            Op::Conv2d { params, .. } => assert_eq!(params.pad, (1, 1)),
+            other => panic!("expected conv, got {}", other.name()),
+        }
+        assert_eq!(g.nodes.len(), 2);
+    }
+
+    #[test]
+    fn quant_hoists_only_between_quant_convs() {
+        let mut g = Graph::new("t", &[3, 8, 8]);
+        let q1 = g.add(qconv(3, 4, 3, Conv2dParams::same(3)), vec![0]);
+        let q2 = g.add(qconv(4, 4, 3, Conv2dParams::same(3)), vec![q1]);
+        let q3 = g.add(qconv(4, 2, 3, Conv2dParams::same(3)), vec![q2]);
+        g.add(Op::Flatten, vec![q3]);
+        let s = optimize(&mut g);
+        // q1 and q2 feed quant convs; q3 feeds a flatten.
+        assert_eq!(s.hoisted_quant, 2);
+        assert!(g.nodes[1].quant_out && g.nodes[2].quant_out);
+        assert!(!g.nodes[3].quant_out);
+    }
+
+    #[test]
+    fn quant_does_not_hoist_across_pooling() {
+        let mut g = Graph::new("t", &[3, 8, 8]);
+        let q1 = g.add(qconv(3, 4, 3, Conv2dParams::same(3)), vec![0]);
+        let m = g.add(Op::MaxPool2d(PoolParams::square(2)), vec![q1]);
+        g.add(qconv(4, 4, 3, Conv2dParams::same(3)), vec![m]);
+        let s = optimize(&mut g);
+        assert_eq!(s.hoisted_quant, 0);
+    }
+}

@@ -1,0 +1,346 @@
+//! The compiled-plan executor: evaluates an optimized [`Graph`] through
+//! an [`ExecCtx`], honouring the fusion facts the passes left behind.
+//!
+//! Execution walks the nodes in index order (the graph is topological
+//! by construction). Activations live in a slot array the plan owns for
+//! the duration of the call: the model input is *borrowed* (node 0 —
+//! the executor never clones it, unlike the historical
+//! `Model::forward`), every other value is owned, and a tensor's buffer
+//! is returned to the ctx arena the moment its last consumer has run —
+//! so peak activation memory is the live frontier of the graph, not the
+//! whole activation set, and the next node's output allocation is
+//! usually served straight from the arena.
+//!
+//! Numerical contract: for every graph a [`crate::nn::Model`] lowers
+//! to, `plan.run(x, ctx)` is **bit-identical** to the layer-by-layer
+//! `model.forward(x, ctx)` in f32 and bf16, and exactly equal in i8 —
+//! per algorithm, per ISA level, per thread count. The op bodies here
+//! either are the very functions the layers call, or fused variants
+//! whose exactness arguments live in [`super::passes`] and
+//! [`crate::kernels::Epilogue`].
+
+use super::ir::{Graph, Op};
+use super::passes::PassSummary;
+use crate::exec::ExecCtx;
+use crate::kernels::{
+    avg_pool2d_ctx, conv2d_bf16_epi_ctx, conv2d_epi_ctx, conv2d_q8_epi_ctx,
+    conv2d_q8_raw_routed_ctx, dequantize_conv_acc, max_pool2d_ctx, quantize_conv_acc, Epilogue,
+};
+use crate::nn::layers::{
+    concat_channels, global_avg_pool, linear_forward, softmax_rows_inplace, zero_pad2d,
+};
+use crate::tensor::{quantize, Dtype, QuantParams, Tensor, TensorT, WeightScales};
+
+/// An activation value flowing along a graph edge.
+enum Value {
+    /// Ordinary f32 tensor.
+    F32(Tensor),
+    /// Hoisted quantize boundary: i8 codes plus their params, produced
+    /// by a `quant_out` node and consumed directly by quantized convs.
+    Q8(TensorT<i8>, QuantParams),
+}
+
+/// One activation slot during a plan run.
+enum Slot<'a> {
+    /// Not produced yet, or already recycled.
+    Empty,
+    /// The caller's input tensor (node 0) — never cloned.
+    Borrowed(&'a Tensor),
+    /// A plan-owned intermediate.
+    Owned(Value),
+}
+
+/// An executable, optimized graph — what [`crate::nn::Model::compile`]
+/// returns and what the serving backends share across replicas (the
+/// weights inside the graph are cloned once at lowering, then the whole
+/// plan travels behind an `Arc` exactly like the model it came from).
+pub struct CompiledPlan {
+    /// The optimized graph.
+    pub graph: Graph,
+    /// What the passes did (empty summary when compiled with fusion
+    /// off).
+    pub summary: PassSummary,
+    /// Consumer count per node (+1 on the output), fixed at compile
+    /// time; each run counts down a copy to recycle buffers eagerly.
+    uses: Vec<usize>,
+}
+
+impl CompiledPlan {
+    /// Wrap an optimized graph.
+    pub(crate) fn new(graph: Graph, summary: PassSummary) -> Self {
+        let uses = graph.consumer_counts();
+        CompiledPlan { graph, summary, uses }
+    }
+
+    /// Model name this plan was compiled from.
+    pub fn name(&self) -> &str {
+        &self.graph.name
+    }
+
+    /// Total FLOPs for one run at batch `n`.
+    pub fn flops(&self, n: usize) -> u64 {
+        self.graph.flops(n)
+    }
+
+    /// Activation bytes written per run at batch `n` (the fusion
+    /// benchmark's memory-traffic metric).
+    pub fn activation_bytes(&self, n: usize) -> u64 {
+        self.graph.activation_bytes(n)
+    }
+
+    /// Render the optimized graph.
+    pub fn render(&self) -> String {
+        self.graph.render()
+    }
+
+    /// Execute the plan.
+    ///
+    /// # Panics
+    /// If the input's per-example shape differs from the shape the
+    /// model was lowered for.
+    pub fn run(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor {
+        assert_eq!(
+            &x.dims()[1..],
+            &self.graph.input_shape[..],
+            "plan for {} expects input {:?}",
+            self.graph.name,
+            self.graph.input_shape
+        );
+        let n = self.graph.nodes.len();
+        let mut slots: Vec<Slot> = Vec::with_capacity(n);
+        slots.push(Slot::Borrowed(x));
+        for _ in 1..n {
+            slots.push(Slot::Empty);
+        }
+        let mut remaining = self.uses.clone();
+        for id in 1..n {
+            if remaining[id] == 0 {
+                continue; // dead node (kept only in an uncompacted graph)
+            }
+            let value = self.eval(id, &slots, ctx);
+            slots[id] = Slot::Owned(value);
+            for &i in &self.graph.nodes[id].inputs {
+                remaining[i] -= 1;
+                if remaining[i] == 0 {
+                    if let Slot::Owned(v) = std::mem::replace(&mut slots[i], Slot::Empty) {
+                        match v {
+                            Value::F32(t) => ctx.put(t.into_vec()),
+                            Value::Q8(codes, _) => ctx.put_elems(codes.into_vec()),
+                        }
+                    }
+                }
+            }
+        }
+        match std::mem::replace(&mut slots[self.graph.output], Slot::Empty) {
+            Slot::Owned(Value::F32(t)) => t,
+            Slot::Borrowed(t) => t.clone(), // identity graph
+            Slot::Owned(Value::Q8(..)) => {
+                unreachable!("the passes never hoist the output node")
+            }
+            Slot::Empty => unreachable!("output slot was recycled"),
+        }
+    }
+
+    fn eval(&self, id: usize, slots: &[Slot<'_>], ctx: &ExecCtx) -> Value {
+        let node = &self.graph.nodes[id];
+        let f32_in = |i: usize| -> &Tensor {
+            match &slots[node.inputs[i]] {
+                Slot::Borrowed(t) => t,
+                Slot::Owned(Value::F32(t)) => t,
+                Slot::Owned(Value::Q8(..)) => {
+                    panic!("{} fed i8 activations it cannot consume", node.op.name())
+                }
+                Slot::Empty => panic!("{} input not materialised", node.op.name()),
+            }
+        };
+        match &node.op {
+            Op::Input => unreachable!("node 0 is pre-filled"),
+            Op::Conv2d { w, bias, params } => {
+                let x = f32_in(0);
+                // Mirrors Conv2d::forward's dtype dispatch, with the
+                // fused epilogue threaded into each route.
+                Value::F32(match ctx.dtype() {
+                    Dtype::F32 | Dtype::I32 => conv2d_epi_ctx(
+                        x,
+                        w,
+                        Epilogue::from_bias(Some(bias)).with_relu(node.fused_relu),
+                        params,
+                        ctx,
+                    ),
+                    Dtype::Bf16 => {
+                        conv2d_bf16_epi_ctx(x, w, Some(bias), node.fused_relu, params, ctx)
+                    }
+                    Dtype::I8 => {
+                        let wq = QuantParams::for_tensor(w);
+                        let qw = quantize(w, wq);
+                        conv2d_q8_epi_ctx(
+                            x,
+                            &qw,
+                            &WeightScales::PerTensor(wq),
+                            Some(bias),
+                            node.fused_relu,
+                            params,
+                            ctx,
+                        )
+                    }
+                })
+            }
+            Op::QuantConv2d { qw, wq, bias, params } => {
+                match &slots[node.inputs[0]] {
+                    Slot::Owned(Value::Q8(qx, xq)) => {
+                        // Hoisted boundary: consume the producer's codes
+                        // directly — no f32 tensor in between.
+                        let raw = conv2d_q8_raw_routed_ctx(qx, qw, params, ctx);
+                        if node.quant_out {
+                            let (codes, q) =
+                                quantize_conv_acc(&raw, *xq, wq, Some(bias), node.fused_relu);
+                            Value::Q8(codes, q)
+                        } else {
+                            Value::F32(dequantize_conv_acc(
+                                &raw,
+                                *xq,
+                                wq,
+                                Some(bias),
+                                node.fused_relu,
+                            ))
+                        }
+                    }
+                    _ => {
+                        let x = f32_in(0);
+                        if node.quant_out {
+                            let xq = QuantParams::for_tensor(x);
+                            let qx = quantize(x, xq);
+                            let raw = conv2d_q8_raw_routed_ctx(&qx, qw, params, ctx);
+                            let (codes, q) =
+                                quantize_conv_acc(&raw, xq, wq, Some(bias), node.fused_relu);
+                            Value::Q8(codes, q)
+                        } else {
+                            Value::F32(conv2d_q8_epi_ctx(
+                                x,
+                                qw,
+                                wq,
+                                Some(bias),
+                                node.fused_relu,
+                                params,
+                                ctx,
+                            ))
+                        }
+                    }
+                }
+            }
+            Op::Linear { w, bias } => {
+                Value::F32(linear_forward(f32_in(0), w, bias, node.fused_relu))
+            }
+            Op::Relu => Value::F32(f32_in(0).map(|v| v.max(0.0))),
+            Op::Softmax => {
+                let mut y = f32_in(0).clone();
+                softmax_rows_inplace(&mut y);
+                Value::F32(y)
+            }
+            Op::Flatten => {
+                let x = f32_in(0);
+                let shape = [x.dim(0), x.numel() / x.dim(0)];
+                Value::F32(x.clone().reshape(&shape))
+            }
+            Op::MaxPool2d(p) => Value::F32(max_pool2d_ctx(f32_in(0), p, ctx)),
+            Op::AvgPool2d(p) => Value::F32(avg_pool2d_ctx(f32_in(0), p, ctx)),
+            Op::GlobalAvgPool => Value::F32(global_avg_pool(f32_in(0))),
+            Op::Pad2d { ph, pw } => Value::F32(zero_pad2d(f32_in(0), *ph, *pw)),
+            Op::Concat => Value::F32(concat_channels(f32_in(0), f32_in(1))),
+            Op::Opaque(l) => Value::F32(l.forward(f32_in(0), ctx)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::passes::optimize;
+    use crate::kernels::{Conv2dParams, ConvAlgo};
+    use crate::nn::layers::{Conv2d, Layer, QuantizedConv2d, ReLU};
+
+    fn plan_of(mut g: Graph, fuse: bool) -> CompiledPlan {
+        let summary = if fuse { optimize(&mut g) } else { PassSummary::default() };
+        CompiledPlan::new(g, summary)
+    }
+
+    #[test]
+    fn fused_conv_relu_is_bit_identical_to_layers() {
+        let conv = Conv2d::new(3, 4, 3, Conv2dParams::same(3), 61);
+        let x = Tensor::randn(&[2, 3, 10, 10], 62);
+        for algo in [ConvAlgo::Direct, ConvAlgo::Sliding, ConvAlgo::Im2colGemm] {
+            let ctx = ExecCtx::new(algo);
+            let want = ReLU.forward(&conv.forward(&x, &ctx), &ctx);
+
+            let mut g = Graph::new("t", &[3, 10, 10]);
+            let c = conv.lower_into(&mut g, 0).unwrap();
+            g.add(Op::Relu, vec![c]);
+            let plan = plan_of(g, true);
+            assert_eq!(plan.summary.fused_relu, 1);
+            let got = plan.run(&x, &ctx);
+            assert_eq!(got.as_slice(), want.as_slice(), "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn hoisted_quant_chain_matches_unfused_exactly() {
+        let q1 = QuantizedConv2d::new(3, 4, 3, Conv2dParams::same(3), 63);
+        let q2 = QuantizedConv2d::new(4, 2, 3, Conv2dParams::same(3), 64);
+        let x = Tensor::randn(&[1, 3, 9, 9], 65);
+        for algo in [ConvAlgo::Sliding, ConvAlgo::Im2colGemm] {
+            let ctx = ExecCtx::new(algo);
+            let want = q2.forward(&q1.forward(&x, &ctx), &ctx);
+
+            let mut g = Graph::new("t", &[3, 9, 9]);
+            let a = q1.lower_into(&mut g, 0).unwrap();
+            q2.lower_into(&mut g, a).unwrap();
+            let plan = plan_of(g, true);
+            assert_eq!(plan.summary.hoisted_quant, 1);
+            let got = plan.run(&x, &ctx);
+            assert_eq!(got.as_slice(), want.as_slice(), "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn elided_pad_matches_explicit_pad_layer() {
+        let conv = Conv2d::new(2, 3, 3, Conv2dParams::default(), 66);
+        let x = Tensor::randn(&[1, 2, 8, 8], 67);
+        for algo in [ConvAlgo::Direct, ConvAlgo::Sliding, ConvAlgo::Im2colGemm] {
+            let ctx = ExecCtx::new(algo);
+            let padded = zero_pad2d(&x, 1, 1);
+            let want = conv.forward(&padded, &ctx);
+
+            let mut g = Graph::new("t", &[2, 8, 8]);
+            let p = g.add(Op::Pad2d { ph: 1, pw: 1 }, vec![0]);
+            conv.lower_into(&mut g, p).unwrap();
+            let plan = plan_of(g, true);
+            assert_eq!(plan.summary.elided_pads, 1);
+            let got = plan.run(&x, &ctx);
+            assert_eq!(got.as_slice(), want.as_slice(), "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn unfused_plan_reproduces_the_graph_verbatim() {
+        let conv = Conv2d::new(3, 4, 3, Conv2dParams::same(3), 68);
+        let x = Tensor::randn(&[1, 3, 8, 8], 69);
+        let ctx = ExecCtx::default();
+        let want = ReLU.forward(&conv.forward(&x, &ctx), &ctx);
+
+        let mut g = Graph::new("t", &[3, 8, 8]);
+        let c = conv.lower_into(&mut g, 0).unwrap();
+        g.add(Op::Relu, vec![c]);
+        let plan = plan_of(g, false);
+        assert_eq!(plan.summary, PassSummary::default());
+        assert_eq!(plan.graph.nodes.len(), 3);
+        assert_eq!(plan.run(&x, &ctx).as_slice(), want.as_slice());
+    }
+
+    #[test]
+    #[should_panic(expected = "expects input")]
+    fn plan_rejects_wrong_input_shape() {
+        let g = Graph::new("t", &[3, 8, 8]);
+        let plan = plan_of(g, false);
+        plan.run(&Tensor::zeros(&[1, 3, 4, 4]), &ExecCtx::default());
+    }
+}

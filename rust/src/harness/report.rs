@@ -163,6 +163,72 @@ pub fn write_bench_json(path: impl AsRef<Path>, records: &[BenchRecord]) -> std:
     Ok(())
 }
 
+/// One graph-compiler benchmark measurement — one element of the
+/// `BENCH_graph.json` schema, produced by `benches/graph_fusion.rs`.
+///
+/// ## `BENCH_graph.json` schema
+///
+/// A JSON **array**, one object per (model, mode) pair:
+///
+/// ```json
+/// [
+///   {"bench": "graph", "model": "quantized-cnn", "mode": "fused",
+///    "threads": 1, "ns_per_iter": 812345.0, "gflops": 2.4513,
+///    "activation_bytes": 123456}
+/// ]
+/// ```
+///
+/// `mode` is `"fused"` (full pass pipeline) or `"unfused"` (the plan
+/// reproducing the layer stack verbatim, as under `SWCONV_NO_FUSE=1`);
+/// `activation_bytes` is the plan's static per-batch activation
+/// traffic from [`crate::graph::CompiledPlan::activation_bytes`] — the
+/// memory the passes exist to avoid moving. Comparing the two modes'
+/// rows gives both the traffic reduction and the wall-time effect.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphBenchRecord {
+    /// Series id, `"graph"`.
+    pub bench: String,
+    /// Zoo model name.
+    pub model: String,
+    /// `"fused"` or `"unfused"`.
+    pub mode: String,
+    /// Worker threads the plan ran with.
+    pub threads: usize,
+    /// Median time per forward, nanoseconds.
+    pub ns_per_iter: f64,
+    /// Arithmetic throughput, GFLOP/s.
+    pub gflops: f64,
+    /// Static activation traffic of the plan for the benched batch,
+    /// bytes (quantized i8 edges count one byte per element).
+    pub activation_bytes: u64,
+}
+
+/// Write graph-compiler bench records as a JSON array (the
+/// `BENCH_graph.json` writer — same conventions as
+/// [`write_bench_json`]: program-generated identifiers, no escaping).
+pub fn write_graph_bench_json(
+    path: impl AsRef<Path>,
+    records: &[GraphBenchRecord],
+) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "[")?;
+    for (i, r) in records.iter().enumerate() {
+        let sep = if i + 1 == records.len() { "" } else { "," };
+        writeln!(
+            f,
+            "  {{\"bench\": \"{}\", \"model\": \"{}\", \"mode\": \"{}\", \
+             \"threads\": {}, \"ns_per_iter\": {:.1}, \"gflops\": {:.4}, \
+             \"activation_bytes\": {}}}{sep}",
+            r.bench, r.model, r.mode, r.threads, r.ns_per_iter, r.gflops, r.activation_bytes
+        )?;
+    }
+    writeln!(f, "]")?;
+    Ok(())
+}
+
 /// Format a float with 3 significant decimals for table cells.
 pub fn f3(v: f64) -> String {
     format!("{v:.3}")
@@ -247,6 +313,43 @@ mod tests {
         assert_eq!(arr[0].get("algo").and_then(|v| v.as_str()), Some("sliding"));
         assert_eq!(arr[1].get("threads").and_then(|v| v.as_usize()), Some(1));
         assert_eq!(arr[1].get("replicas").and_then(|v| v.as_usize()), Some(4));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn graph_bench_json_roundtrips_through_parser() {
+        let recs = vec![
+            GraphBenchRecord {
+                bench: "graph".into(),
+                model: "quantized-cnn".into(),
+                mode: "fused".into(),
+                threads: 1,
+                ns_per_iter: 812345.0,
+                gflops: 2.45,
+                activation_bytes: 123456,
+            },
+            GraphBenchRecord {
+                bench: "graph".into(),
+                model: "quantized-cnn".into(),
+                mode: "unfused".into(),
+                threads: 1,
+                ns_per_iter: 901234.0,
+                gflops: 2.21,
+                activation_bytes: 234567,
+            },
+        ];
+        let p = std::env::temp_dir().join("swconv_test_graph_bench.json");
+        write_graph_bench_json(&p, &recs).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let j = crate::runtime::json::Json::parse(&text).expect("valid JSON");
+        let arr = match &j {
+            crate::runtime::json::Json::Arr(a) => a,
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("mode").and_then(|v| v.as_str()), Some("fused"));
+        assert_eq!(arr[0].get("activation_bytes").and_then(|v| v.as_usize()), Some(123456));
+        assert_eq!(arr[1].get("model").and_then(|v| v.as_str()), Some("quantized-cnn"));
         let _ = std::fs::remove_file(p);
     }
 

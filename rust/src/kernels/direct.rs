@@ -8,6 +8,7 @@
 //! of arithmetic operations performed by the sliding convolution is the
 //! same as the naïve or GEMM-based algorithms").
 
+use super::epilogue::Epilogue;
 use super::{Conv1dParams, Conv2dParams};
 use crate::exec::ExecCtx;
 use crate::tensor::Tensor;
@@ -42,6 +43,21 @@ pub fn conv2d_direct_ctx(
     p: &Conv2dParams,
     ctx: &ExecCtx,
 ) -> Tensor {
+    conv2d_direct_epi_ctx(x, w, Epilogue::from_bias(bias), p, ctx)
+}
+
+/// [`conv2d_direct_ctx`] with a fused output [`Epilogue`]: bias seeds
+/// the accumulator exactly as in the unfused kernel, a requested ReLU
+/// is applied to each value as it is stored (bit-identical to a
+/// separate ReLU pass).
+pub fn conv2d_direct_epi_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    epi: Epilogue<'_>,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
+    let bias = epi.bias;
     assert_eq!(x.rank(), 4, "input must be NCHW");
     assert_eq!(w.rank(), 4, "weights must be [cout, cin/g, kh, kw]");
     let (n, c_in, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
@@ -81,7 +97,7 @@ pub fn conv2d_direct_ctx(
                         }
                     }
                 }
-                oplane[oy * ow + ox] = acc;
+                oplane[oy * ow + ox] = epi.activate(acc);
             }
         }
     });
@@ -114,6 +130,19 @@ pub fn conv1d_direct_ctx(
     p: &Conv1dParams,
     ctx: &ExecCtx,
 ) -> Tensor {
+    conv1d_direct_epi_ctx(x, w, Epilogue::from_bias(bias), p, ctx)
+}
+
+/// [`conv1d_direct_ctx`] with a fused output [`Epilogue`] (same
+/// contract as [`conv2d_direct_epi_ctx`]).
+pub fn conv1d_direct_epi_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    epi: Epilogue<'_>,
+    p: &Conv1dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
+    let bias = epi.bias;
     assert_eq!(x.rank(), 2, "input must be [c, l]");
     assert_eq!(w.rank(), 3, "weights must be [cout, cin, k]");
     let (c_in, l) = (x.dim(0), x.dim(1));
@@ -137,7 +166,7 @@ pub fn conv1d_direct_ctx(
                     acc += xs[ci * l + i - p.pad] * ws[(co * c_in + ci) * k + j];
                 }
             }
-            *ov = acc;
+            *ov = epi.activate(acc);
         }
     });
     out

@@ -2,16 +2,22 @@
 //! [`ConvAlgo`] so callers (layers, benchmarks, the coordinator's router)
 //! can pit implementations against each other on identical inputs.
 
-use super::direct::{conv1d_direct_ctx, conv2d_direct_ctx};
-use super::im2col::{conv2d_im2col_ctx, conv2d_im2col_q8_ctx};
+use super::direct::{conv1d_direct_ctx, conv2d_direct_ctx, conv2d_direct_epi_ctx};
+use super::epilogue::Epilogue;
+use super::im2col::{
+    conv2d_im2col_ctx, conv2d_im2col_epi_ctx, conv2d_im2col_q8_raw_ctx,
+};
 use super::sliding1d::conv1d_sliding_ctx;
 use super::sliding2d::{
-    conv2d_sliding_bf16_ctx, conv2d_sliding_ctx, conv2d_sliding_q8_ctx, SlideVariant,
+    conv2d_sliding_bf16_ctx, conv2d_sliding_ctx, conv2d_sliding_epi_ctx,
+    conv2d_sliding_q8_raw_ctx, dequantize_conv_acc, SlideVariant,
 };
 use super::{Conv1dParams, Conv2dParams};
 use crate::autotune::TunedAlgo;
 use crate::exec::ExecCtx;
-use crate::tensor::{from_bf16, quantize, to_bf16, QuantParams, Tensor, TensorT};
+use crate::tensor::{
+    from_bf16, quantize, to_bf16, QuantParams, Tensor, TensorT, WeightScales,
+};
 
 /// Which convolution implementation to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -122,6 +128,38 @@ pub fn conv2d_ctx(
     }
 }
 
+/// [`conv2d_ctx`] with a fused output [`Epilogue`]: the same per-algo
+/// routing (including `Tuned` profile resolution), but bias and the
+/// optional ReLU are folded into the chosen kernel's output write. This
+/// is what the graph executor's fused conv nodes call — one memory pass
+/// instead of conv → bias → ReLU, with bit-identical results.
+pub fn conv2d_epi_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    epi: Epilogue<'_>,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
+    match ctx.algo {
+        ConvAlgo::Direct => conv2d_direct_epi_ctx(x, w, epi, p, ctx),
+        ConvAlgo::Im2colGemm => conv2d_im2col_epi_ctx(x, w, epi, p, ctx),
+        ConvAlgo::Sliding => conv2d_sliding_epi_ctx(x, w, epi, p, SlideVariant::Auto, ctx),
+        ConvAlgo::SlidingGeneric => {
+            conv2d_sliding_epi_ctx(x, w, epi, p, SlideVariant::Generic, ctx)
+        }
+        ConvAlgo::SlidingCompound => {
+            conv2d_sliding_epi_ctx(x, w, epi, p, SlideVariant::Compound, ctx)
+        }
+        ConvAlgo::Tuned => match ctx.tuned_choice(w.dim(3)).0 {
+            TunedAlgo::Direct => conv2d_direct_epi_ctx(x, w, epi, p, ctx),
+            TunedAlgo::Gemm => conv2d_im2col_epi_ctx(x, w, epi, p, ctx),
+            TunedAlgo::Sliding => {
+                conv2d_sliding_epi_ctx(x, w, epi, p, SlideVariant::Auto, ctx)
+            }
+        },
+    }
+}
+
 /// 1-D convolution with the chosen algorithm (`Im2colGemm` and the forced
 /// sliding variants collapse to their natural 1-D counterparts).
 ///
@@ -188,8 +226,21 @@ pub fn conv2d_q8_ctx(
     p: &Conv2dParams,
     ctx: &ExecCtx,
 ) -> Tensor {
-    let xq = QuantParams::for_tensor(x);
-    let qx = quantize(x, xq);
+    conv2d_q8_epi_ctx(x, qw, &WeightScales::PerTensor(wq), bias, false, p, ctx)
+}
+
+/// The int8 accumulation core with the ctx's algorithm routing: run the
+/// exact-i32 kernel `ConvAlgo` resolves to — the int8 im2col+GEMM
+/// baseline for `Im2colGemm` (and a `Tuned` profile whose **`I8`
+/// bucket** picks GEMM), the quantized sliding kernel for everything
+/// else — on already-quantized activation codes. Both kernels produce
+/// the identical i32 accumulator, so routing never changes values.
+pub fn conv2d_q8_raw_routed_ctx(
+    qx: &TensorT<i8>,
+    qw: &TensorT<i8>,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> TensorT<i32> {
     let use_gemm = match ctx.algo {
         ConvAlgo::Im2colGemm => true,
         ConvAlgo::Tuned => {
@@ -198,10 +249,33 @@ pub fn conv2d_q8_ctx(
         _ => false,
     };
     if use_gemm {
-        conv2d_im2col_q8_ctx(&qx, xq, qw, wq, bias, p, ctx)
+        conv2d_im2col_q8_raw_ctx(qx, qw, p, ctx)
     } else {
-        conv2d_sliding_q8_ctx(&qx, xq, qw, wq, bias, p, ctx)
+        conv2d_sliding_q8_raw_ctx(qx, qw, p, ctx)
     }
+}
+
+/// [`conv2d_q8_ctx`] generalised to [`WeightScales`] (per-tensor or
+/// per-output-channel) and a fused ReLU in the dequant write: dynamic
+/// per-tensor activation quantization, the routed exact-i32 kernel,
+/// then `raw · x_scale · w_scale[c_out] + bias` (and `max(v, 0.0)` when
+/// `relu`) stored in a single pass.
+pub fn conv2d_q8_epi_ctx(
+    x: &Tensor,
+    qw: &TensorT<i8>,
+    wq: &WeightScales,
+    bias: Option<&[f32]>,
+    relu: bool,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
+    if let Some(b) = bias {
+        assert_eq!(b.len(), qw.dim(0), "bias length");
+    }
+    let xq = QuantParams::for_tensor(x);
+    let qx = quantize(x, xq);
+    let raw = conv2d_q8_raw_routed_ctx(&qx, qw, p, ctx);
+    dequantize_conv_acc(&raw, xq, wq, bias, relu)
 }
 
 /// f32-boundary bfloat16 2-D convolution: round both operands to bf16
@@ -242,6 +316,28 @@ pub fn conv2d_bf16_ctx(
     // Match the sliding path's output precision: bf16 storage rounding
     // on the way out, so routing never changes the numeric contract.
     from_bf16(&to_bf16(&y))
+}
+
+/// [`conv2d_bf16_ctx`] with a fused ReLU: the activation is applied
+/// **in place** over the widened f32 output — the exact operation a
+/// standalone ReLU layer performs on that tensor (`max(v, 0.0)` on
+/// already-bf16-rounded values), so the fusion saves the separate
+/// activation tensor, not a rounding step, and stays bit-identical.
+pub fn conv2d_bf16_epi_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    relu: bool,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
+    let mut y = conv2d_bf16_ctx(x, w, bias, p, ctx);
+    if relu {
+        for v in y.as_mut_slice() {
+            *v = v.max(0.0);
+        }
+    }
+    y
 }
 
 #[cfg(test)]

@@ -1,0 +1,142 @@
+//! The fused kernel epilogue — what the graph compiler's epilogue-fusion
+//! pass threads into the convolution/GEMM output write.
+//!
+//! The paper's thesis is that convolution on commodity CPUs is
+//! memory-bound; a separate bias-add or ReLU layer pays a full extra
+//! read+write of the activation tensor for a trivial amount of
+//! arithmetic. An [`Epilogue`] folds both into the kernel's *existing*
+//! output write:
+//!
+//! * **bias** rides wherever the kernel already seeds or adds it —
+//!   pre-accumulation for the sliding/direct kernels (the row
+//!   accumulator is `fill`ed with the bias), post-GEMM for the im2col
+//!   path (added over the cache-resident output block).
+//! * **ReLU** is applied by [`Epilogue::activate`] at the single point
+//!   where each output value is stored.
+//!
+//! Bit-exactness contract: `max(v, 0.0)` applied at the write site is
+//! the *same* floating-point operation a standalone ReLU layer applies
+//! to the stored value, so a fused kernel is bit-identical to the
+//! unfused kernel followed by a ReLU pass. (The epilogue deliberately
+//! does **not** live inside the row kernels of
+//! [`super::rowconv`] — a row call produces *partial* sums that later
+//! filter rows and channels still accumulate into; activation is only
+//! legal once the accumulation is complete, i.e. at the output write.)
+
+/// Fused output epilogue for the convolution/GEMM kernels: optional
+/// per-output-channel bias and an optional ReLU, applied in the
+/// kernel's output write instead of as separate memory passes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Epilogue<'a> {
+    /// Per-output-channel bias `[c_out]` (added exactly where the
+    /// unfused kernel adds it).
+    pub bias: Option<&'a [f32]>,
+    /// Apply `max(v, 0.0)` to every output value at the write site.
+    pub relu: bool,
+}
+
+impl<'a> Epilogue<'a> {
+    /// Bias-only epilogue — what the pre-existing kernel entry points
+    /// (bias parameter, no activation) wrap themselves in.
+    pub fn from_bias(bias: Option<&'a [f32]>) -> Self {
+        Epilogue { bias, relu: false }
+    }
+
+    /// Same epilogue with the ReLU flag set.
+    pub fn with_relu(self, relu: bool) -> Self {
+        Epilogue { relu, ..self }
+    }
+
+    /// True when the epilogue changes nothing (no bias, no activation).
+    pub fn is_noop(&self) -> bool {
+        self.bias.is_none() && !self.relu
+    }
+
+    /// Activation half of the epilogue: `max(v, 0.0)` when `relu` is
+    /// set, identity otherwise. Bias is *not* applied here — each
+    /// kernel adds it where its unfused variant always has.
+    #[inline(always)]
+    pub fn activate(&self, v: f32) -> f32 {
+        if self.relu {
+            v.max(0.0)
+        } else {
+            v
+        }
+    }
+
+    /// Post-GEMM application over a row-major `[rows, cols]` output
+    /// block whose row `r` is output channel `row0 + r` (the im2col
+    /// path: bias and activation folded over the cache-resident block,
+    /// before it ever leaves L2). When the epilogue is a no-op the
+    /// block is untouched — bit-identical to the unfused path.
+    pub fn apply_rows(&self, c: &mut [f32], rows: usize, cols: usize, row0: usize) {
+        if self.is_noop() {
+            return;
+        }
+        for r in 0..rows {
+            let row = &mut c[r * cols..(r + 1) * cols];
+            match (self.bias, self.relu) {
+                (Some(b), true) => {
+                    let bv = b[row0 + r];
+                    for v in row.iter_mut() {
+                        *v = (*v + bv).max(0.0);
+                    }
+                }
+                (Some(b), false) => {
+                    let bv = b[row0 + r];
+                    for v in row.iter_mut() {
+                        *v += bv;
+                    }
+                }
+                (None, true) => {
+                    for v in row.iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                }
+                (None, false) => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_detection() {
+        assert!(Epilogue::from_bias(None).is_noop());
+        assert!(!Epilogue::from_bias(None).with_relu(true).is_noop());
+        let b = [1.0];
+        assert!(!Epilogue::from_bias(Some(&b)).is_noop());
+    }
+
+    #[test]
+    fn activate_clamps_only_with_relu() {
+        let plain = Epilogue::from_bias(None);
+        assert_eq!(plain.activate(-2.0), -2.0);
+        let relu = plain.with_relu(true);
+        assert_eq!(relu.activate(-2.0), 0.0);
+        assert_eq!(relu.activate(3.0), 3.0);
+    }
+
+    #[test]
+    fn apply_rows_matches_manual() {
+        let bias = [1.0, -10.0];
+        let mut c = vec![1.0, -2.0, 3.0, 4.0];
+        Epilogue::from_bias(Some(&bias)).with_relu(true).apply_rows(&mut c, 2, 2, 0);
+        assert_eq!(c, vec![2.0, 0.0, 0.0, 0.0]);
+
+        let mut c2 = vec![-1.0, 2.0];
+        Epilogue::from_bias(None).with_relu(true).apply_rows(&mut c2, 1, 2, 0);
+        assert_eq!(c2, vec![0.0, 2.0]);
+    }
+
+    #[test]
+    fn apply_rows_respects_row_offset() {
+        let bias = [0.0, 0.0, 5.0];
+        let mut c = vec![1.0, 1.0];
+        Epilogue::from_bias(Some(&bias)).apply_rows(&mut c, 1, 2, 2);
+        assert_eq!(c, vec![6.0, 6.0]);
+    }
+}

@@ -18,6 +18,7 @@
 //! scratch in [`sgemm_with_scratch`] — to keep allocation off the hot
 //! path.
 
+use super::epilogue::Epilogue;
 use crate::simd::{F32xL, LANES};
 use std::cell::RefCell;
 
@@ -43,6 +44,28 @@ pub fn pack_a_len() -> usize {
 /// Packing-buffer length for `B` panels of an `N`-column GEMM.
 pub fn pack_b_len(n: usize) -> usize {
     n.div_ceil(NR) * NR * KC
+}
+
+/// [`sgemm_with_scratch`] with a fused output [`Epilogue`]: after the
+/// blocked product, bias (row `r` of `C` gets `epi.bias[row0 + r]`) and
+/// the optional ReLU are applied over `C` while it is still
+/// cache-resident, instead of as separate full-matrix memory passes.
+/// A no-op epilogue leaves `C` byte-identical to the plain GEMM.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_epi_with_scratch(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    pa: &mut Vec<f32>,
+    pb: &mut Vec<f32>,
+    epi: Epilogue<'_>,
+    row0: usize,
+) {
+    sgemm_with_scratch(m, k, n, a, b, c, pa, pb);
+    epi.apply_rows(c, m, n, row0);
 }
 
 /// `C += A · B` for row-major `A[M×K]`, `B[K×N]`, `C[M×N]`.

@@ -9,11 +9,12 @@
 //! memory traffic. [`im2col_bytes`] reports the bloat so the benchmark
 //! harness can plot it.
 
+use super::epilogue::Epilogue;
 use super::gemm::{gemm_q8, pack_a_len, pack_b_len, sgemm_with_scratch};
 use super::sliding2d::dequantize_conv_acc;
 use super::Conv2dParams;
 use crate::exec::ExecCtx;
-use crate::tensor::{Element, QuantParams, Tensor, TensorT};
+use crate::tensor::{Element, QuantParams, Tensor, TensorT, WeightScales};
 
 /// Size in bytes of the column matrix `im2col` materialises for one image
 /// of one group — the paper's memory-bloat metric.
@@ -109,6 +110,22 @@ pub fn conv2d_im2col_ctx(
     p: &Conv2dParams,
     ctx: &ExecCtx,
 ) -> Tensor {
+    conv2d_im2col_epi_ctx(x, w, Epilogue::from_bias(bias), p, ctx)
+}
+
+/// [`conv2d_im2col_ctx`] with a fused output [`Epilogue`]: bias and the
+/// optional ReLU are folded over each group's cache-resident GEMM
+/// output block ([`Epilogue::apply_rows`]) before it leaves L2, instead
+/// of as separate full-tensor memory passes. With `relu == false` the
+/// arithmetic is the unfused kernel's bias loop verbatim — bit-identical.
+pub fn conv2d_im2col_epi_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    epi: Epilogue<'_>,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
+    let bias = epi.bias;
     assert_eq!(x.rank(), 4);
     assert_eq!(w.rank(), 4);
     let (n, c_in, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
@@ -154,14 +171,7 @@ pub fn conv2d_im2col_ctx(
             // [c_out, kdim] weight matrix.
             let wmat = &ws[grp * c_out_g * kdim..(grp + 1) * c_out_g * kdim];
             sgemm_with_scratch(c_out_g, kdim, ohw, wmat, col, cblk, pa, pb);
-            if let Some(b) = bias {
-                for cog in 0..c_out_g {
-                    let bv = b[grp * c_out_g + cog];
-                    for v in &mut cblk[cog * ohw..(cog + 1) * ohw] {
-                        *v += bv;
-                    }
-                }
-            }
+            epi.apply_rows(cblk, c_out_g, ohw, grp * c_out_g);
         },
         |(col, pa, pb)| {
             ctx.put(col);
@@ -238,7 +248,7 @@ pub fn conv2d_im2col_q8_ctx(
         assert_eq!(b.len(), w.dim(0), "bias length");
     }
     let raw = conv2d_im2col_q8_raw_ctx(x, w, p, ctx);
-    dequantize_conv_acc(&raw, xq, wq, bias)
+    dequantize_conv_acc(&raw, xq, &WeightScales::PerTensor(wq), bias, false)
 }
 
 #[cfg(test)]

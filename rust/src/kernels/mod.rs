@@ -4,6 +4,7 @@
 //! | module | role |
 //! |---|---|
 //! | [`direct`]    | naïve direct convolution — correctness oracle + baseline |
+//! | [`epilogue`]  | fused output epilogue (bias + ReLU in the kernel's output write) for the graph compiler |
 //! | [`gemm`]      | blocked, register-tiled SGEMM (packing + 8×32 micro-kernel) |
 //! | [`im2col`]    | `im2col` + GEMM convolution — the `MlasConv` stand-in |
 //! | [`sliding1d`] | 1-D Vector Slide convolution + log-step sliding sums |
@@ -37,6 +38,7 @@
 //! the ctx's [`crate::tensor::Dtype`] asks for reduced precision.
 
 pub mod direct;
+pub mod epilogue;
 pub mod gemm;
 pub mod rowconv;
 pub mod im2col;
@@ -46,8 +48,11 @@ pub mod pool;
 pub mod dispatch;
 
 pub use dispatch::{
-    conv1d, conv1d_ctx, conv2d, conv2d_bf16_ctx, conv2d_ctx, conv2d_q8_ctx, ConvAlgo,
+    conv1d, conv1d_ctx, conv2d, conv2d_bf16_ctx, conv2d_bf16_epi_ctx, conv2d_ctx,
+    conv2d_epi_ctx, conv2d_q8_ctx, conv2d_q8_epi_ctx, conv2d_q8_raw_routed_ctx, ConvAlgo,
 };
+pub use epilogue::Epilogue;
+pub(crate) use sliding2d::{dequantize_conv_acc, quantize_conv_acc};
 pub use pool::{
     avg_pool2d, avg_pool2d_bf16_ctx, avg_pool2d_ctx, max_pool2d, max_pool2d_bf16_ctx,
     max_pool2d_ctx, max_pool2d_q8_ctx, PoolParams,

@@ -2,12 +2,13 @@
 //! log-step sliding window sum (the algorithm family of the paper's
 //! precursor, arXiv:2305.16513, whose ~log(k) speedup §2 recalls).
 
-use super::direct::conv1d_direct_ctx;
+use super::direct::conv1d_direct_epi_ctx;
+use super::epilogue::Epilogue;
 use super::rowconv::{row_conv_bf16_at, row_conv_q8_at, RowKernel, COMPOUND_MAX_K};
 use super::Conv1dParams;
 use crate::exec::ExecCtx;
 use crate::simd::{slide_dyn, F32xL, LANES};
-use crate::tensor::{pad_row, pad_row_into, Bf16, QuantParams, Tensor, TensorT};
+use crate::tensor::{pad_row, pad_row_into, Bf16, QuantParams, Tensor, TensorT, WeightScales};
 
 /// 1-D convolution via the Vector Slide kernels.
 ///
@@ -39,13 +40,27 @@ pub fn conv1d_sliding_ctx(
     p: &Conv1dParams,
     ctx: &ExecCtx,
 ) -> Tensor {
+    conv1d_sliding_epi_ctx(x, w, Epilogue::from_bias(bias), p, ctx)
+}
+
+/// [`conv1d_sliding_ctx`] with a fused output [`Epilogue`] — bias seeds
+/// the accumulator as always, a requested ReLU is applied at the output
+/// write (bit-identical to a separate ReLU pass).
+pub fn conv1d_sliding_epi_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    epi: Epilogue<'_>,
+    p: &Conv1dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
+    let bias = epi.bias;
     assert_eq!(x.rank(), 2, "input must be [c, l]");
     assert_eq!(w.rank(), 3, "weights must be [cout, cin, k]");
     let (c_in, l) = (x.dim(0), x.dim(1));
     let (c_out, c_in_w, k) = (w.dim(0), w.dim(1), w.dim(2));
     assert_eq!(c_in, c_in_w, "c_in mismatch");
     if k > COMPOUND_MAX_K {
-        return conv1d_direct_ctx(x, w, bias, p, ctx);
+        return conv1d_direct_epi_ctx(x, w, epi, p, ctx);
     }
     let lo = p.out_len(l, k);
     // Unit-stride output length (subsampled later if stride > 1).
@@ -79,7 +94,11 @@ pub fn conv1d_sliding_ctx(
                 let wrow = &ws[(co * c_in + ci) * k..(co * c_in + ci + 1) * k];
                 row_fn(&padded_ref[ci * lp..], wrow, scratch, lo1);
             }
-            if p.stride == 1 {
+            if epi.relu {
+                for (o, v) in orow.iter_mut().enumerate() {
+                    *v = scratch[if p.stride == 1 { o } else { o * p.stride }].max(0.0);
+                }
+            } else if p.stride == 1 {
                 orow.copy_from_slice(&scratch[..lo]);
             } else {
                 for (o, v) in orow.iter_mut().enumerate() {
@@ -169,7 +188,7 @@ pub fn conv1d_sliding_q8_ctx(
         assert_eq!(b.len(), w.dim(0), "bias length");
     }
     let raw = conv1d_sliding_q8_raw_ctx(x, w, p, ctx);
-    super::sliding2d::dequantize_conv_acc(&raw, xq, wq, bias)
+    super::sliding2d::dequantize_conv_acc(&raw, xq, &WeightScales::PerTensor(wq), bias, false)
 }
 
 /// bfloat16 1-D sliding convolution: bf16 storage in and out, f32

@@ -20,14 +20,17 @@
 //!   (custom-vs-generic, and the k = 17 crossover where the compound
 //!   kernel beats the in-vector one).
 
-use super::direct::conv2d_direct_ctx;
+use super::direct::conv2d_direct_epi_ctx;
+use super::epilogue::Epilogue;
 use super::rowconv::{
     row_conv_bf16_at, row_conv_q8_at, RowKernel, COMPOUND_MAX_K, GENERIC_MAX_K, Q8_MAX_TAPS,
 };
 use super::Conv2dParams;
 use crate::exec::ExecCtx;
 use crate::simd::LANES;
-use crate::tensor::{pad2d_into, padded2d_size, Bf16, QuantParams, Tensor, TensorT};
+use crate::tensor::{
+    pad2d_into, padded2d_size, Bf16, QuantParams, Tensor, TensorT, WeightScales,
+};
 
 /// Which row kernel the 2-D sliding convolution uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -87,6 +90,24 @@ pub fn conv2d_sliding_ctx(
     variant: SlideVariant,
     ctx: &ExecCtx,
 ) -> Tensor {
+    conv2d_sliding_epi_ctx(x, w, Epilogue::from_bias(bias), p, variant, ctx)
+}
+
+/// [`conv2d_sliding_ctx`] with a fused output [`Epilogue`]: the bias
+/// seeds the row accumulator exactly as in the unfused kernel, and a
+/// requested ReLU is applied at the output write — `max(v, 0.0)` on the
+/// stored value, bit-identical to running a separate ReLU pass over the
+/// unfused output, without the extra read+write of the activation
+/// tensor.
+pub fn conv2d_sliding_epi_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    epi: Epilogue<'_>,
+    p: &Conv2dParams,
+    variant: SlideVariant,
+    ctx: &ExecCtx,
+) -> Tensor {
+    let bias = epi.bias;
     assert_eq!(x.rank(), 4, "input must be NCHW");
     assert_eq!(w.rank(), 4, "weights must be [cout, cin/g, kh, kw]");
     let (n, c_in, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
@@ -99,7 +120,7 @@ pub fn conv2d_sliding_ctx(
     }
     if !variant.supports(kw) {
         match variant {
-            SlideVariant::Auto => return conv2d_direct_ctx(x, w, bias, p, ctx),
+            SlideVariant::Auto => return conv2d_direct_epi_ctx(x, w, epi, p, ctx),
             _ => panic!("{variant:?} cannot evaluate filter width {kw}"),
         }
     }
@@ -155,7 +176,11 @@ pub fn conv2d_sliding_ctx(
                     }
                 }
                 let orow = &mut oplane[oy * ow..oy * ow + ow];
-                if sw == 1 {
+                if epi.relu {
+                    for (ox, v) in orow.iter_mut().enumerate() {
+                        *v = scratch[if sw == 1 { ox } else { ox * sw }].max(0.0);
+                    }
+                } else if sw == 1 {
                     orow.copy_from_slice(&scratch[..ow]);
                 } else {
                     for (ox, v) in orow.iter_mut().enumerate() {
@@ -267,34 +292,95 @@ pub fn conv2d_sliding_q8_raw_ctx(
     out
 }
 
+/// `(c_out, inner)` extraction shared by the accumulator epilogues:
+/// accepts the two conv output layouts, `[n, c_out, oh, ow]` (rank 4)
+/// and `[c_out, lo]` (rank 2).
+fn acc_channel_geometry(raw: &TensorT<i32>) -> (usize, usize) {
+    match raw.rank() {
+        4 => (raw.dim(1), raw.dim(2) * raw.dim(3)),
+        2 => (raw.dim(0), raw.dim(1)),
+        r => panic!("conv accumulator epilogue expects rank 4 or rank 2, got rank {r}"),
+    }
+}
+
 /// Dequantize a raw i32 convolution accumulator:
-/// `out = raw · (x_scale · w_scale) + bias`, shared by every int8 path
-/// — 2-D sliding, 2-D im2col and 1-D sliding — so their f32 outputs
-/// agree exactly too. Accepts the two conv output layouts:
-/// `[n, c_out, oh, ow]` (rank 4) and `[c_out, lo]` (rank 2).
+/// `out = raw · (x_scale · w_scale[c_out]) + bias`, then an optional
+/// fused ReLU. Shared by every int8 path — 2-D sliding, 2-D im2col and
+/// 1-D sliding — so their f32 outputs agree exactly too. The weight
+/// scales may be per-tensor or per-output-channel
+/// ([`WeightScales`]); `relu` applies `max(v, 0.0)` to the stored
+/// value, bit-identical to a separate ReLU pass over the unfused
+/// output.
 pub(crate) fn dequantize_conv_acc(
     raw: &TensorT<i32>,
     xq: QuantParams,
-    wq: QuantParams,
+    wq: &WeightScales,
     bias: Option<&[f32]>,
+    relu: bool,
 ) -> Tensor {
     assert!(
         xq.is_symmetric() && wq.is_symmetric(),
         "int8 conv kernels require symmetric quantization (zero_point == 0)"
     );
-    let scale = xq.scale * wq.scale;
-    let (c_out, inner) = match raw.rank() {
-        4 => (raw.dim(1), raw.dim(2) * raw.dim(3)),
-        2 => (raw.dim(0), raw.dim(1)),
-        r => panic!("dequantize_conv_acc expects a rank-4 or rank-2 accumulator, got rank {r}"),
-    };
+    let (c_out, inner) = acc_channel_geometry(raw);
     let mut out = Tensor::zeros(raw.dims());
     let rs = raw.as_slice();
     for (i, (o, &r)) in out.as_mut_slice().iter_mut().zip(rs).enumerate() {
-        let b = bias.map_or(0.0, |b| b[(i / inner) % c_out]);
-        *o = r as f32 * scale + b;
+        let co = (i / inner) % c_out;
+        let b = bias.map_or(0.0, |b| b[co]);
+        let v = r as f32 * (xq.scale * wq.scale(co)) + b;
+        *o = if relu { v.max(0.0) } else { v };
     }
     out
+}
+
+/// The quantize-boundary epilogue: dequantize a raw i32 convolution
+/// accumulator and **re-quantize the result to i8 codes directly**,
+/// without materialising the f32 activation tensor in between.
+///
+/// Streaming two-pass over the accumulator: pass 1 computes the f32
+/// value each element *would* dequantize to and folds its magnitude
+/// into a max (starting from `0.0`, exactly like
+/// [`crate::tensor::TensorT::max_abs`]); pass 2 quantizes every value
+/// under the resulting symmetric [`QuantParams`]. Because each pass
+/// evaluates the *identical* f32 expression the unfused path stores
+/// (`raw · x_scale · w_scale[c_out] + bias`, then the optional ReLU),
+/// the returned codes and params are bit-equivalent to
+/// `dequantize → [relu →] QuantParams::for_tensor → quantize` — the
+/// hoisting pass changes memory traffic, never values.
+pub(crate) fn quantize_conv_acc(
+    raw: &TensorT<i32>,
+    xq: QuantParams,
+    wq: &WeightScales,
+    bias: Option<&[f32]>,
+    relu: bool,
+) -> (TensorT<i8>, QuantParams) {
+    assert!(
+        xq.is_symmetric() && wq.is_symmetric(),
+        "int8 conv kernels require symmetric quantization (zero_point == 0)"
+    );
+    let (c_out, inner) = acc_channel_geometry(raw);
+    let rs = raw.as_slice();
+    let value = |i: usize, r: i32| -> f32 {
+        let co = (i / inner) % c_out;
+        let b = bias.map_or(0.0, |b| b[co]);
+        let v = r as f32 * (xq.scale * wq.scale(co)) + b;
+        if relu {
+            v.max(0.0)
+        } else {
+            v
+        }
+    };
+    let mut max_abs = 0.0f32;
+    for (i, &r) in rs.iter().enumerate() {
+        max_abs = max_abs.max(value(i, r).abs());
+    }
+    let q = QuantParams::symmetric(max_abs);
+    let mut codes = vec![0i8; raw.numel()];
+    for (i, (c, &r)) in codes.iter_mut().zip(rs).enumerate() {
+        *c = q.quantize_value(value(i, r));
+    }
+    (TensorT::from_vec(codes, raw.dims()), q)
 }
 
 /// Quantized int8 2-D sliding convolution with dequantized `f32`
@@ -315,7 +401,7 @@ pub fn conv2d_sliding_q8_ctx(
         assert_eq!(b.len(), w.dim(0), "bias length");
     }
     let raw = conv2d_sliding_q8_raw_ctx(x, w, p, ctx);
-    dequantize_conv_acc(&raw, xq, wq, bias)
+    dequantize_conv_acc(&raw, xq, &WeightScales::PerTensor(wq), bias, false)
 }
 
 /// bfloat16 2-D sliding convolution: bf16 storage in and out, f32

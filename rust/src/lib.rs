@@ -47,8 +47,17 @@
 //!   the sliding kernel's `Auto` row selection dispatch from it, falling
 //!   back to the paper's k=17 policy when no profile exists.
 //! * [`nn`] — a small layer/graph library (Conv2d, Pool, ReLU, Linear, …)
-//!   and a model zoo (SqueezeNet-lite, MobileNet-lite, SimpleCNN) so the
-//!   primitives can be exercised inside real networks.
+//!   and a model zoo (SqueezeNet-lite, MobileNet-lite, SimpleCNN, a
+//!   quantized CNN) so the primitives can be exercised inside real
+//!   networks.
+//! * [`graph`] — the compilation layer: models lower into a typed
+//!   graph IR ([`graph::Graph`]), a pass pipeline fuses conv/GEMM
+//!   epilogues (bias + ReLU at the output write), elides explicit
+//!   zero-pads into kernel edge handling and hoists quantize boundaries
+//!   so adjacent int8 convs exchange i8 activations directly; the
+//!   optimized [`graph::CompiledPlan`] executes bit-identically to the
+//!   layer-by-layer path (`SWCONV_NO_FUSE=1` / `--no-fuse` disables the
+//!   passes).
 //! * [`harness`] — workload generators, parameter sweeps, the
 //!   Advisor-style roofline model, and the report builders that regenerate
 //!   the paper's Fig. 1 (speedup) and Fig. 2 (throughput).
@@ -82,6 +91,7 @@ pub mod tensor;
 pub mod exec;
 pub mod kernels;
 pub mod autotune;
+pub mod graph;
 pub mod nn;
 pub mod harness;
 pub mod runtime;

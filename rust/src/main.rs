@@ -10,6 +10,9 @@
 //! * `run-model`   — one forward pass of a zoo model, timed per algorithm
 //! * `serve`       — demo serving run through the coordinator
 //! * `summary`     — layer/FLOP summary of a zoo model
+//! * `compile`     — lower a zoo model into the graph IR and show the
+//!   before/after of the pass pipeline (fusion, pad elision, quantize
+//!   hoisting) with FLOP and activation-byte accounting
 //! * `artifacts-check` — load every AOT artifact and cross-check numerics
 //!   against the native kernels
 //!
@@ -44,7 +47,7 @@ use swconv::simd::IsaLevel;
 use swconv::tensor::{Dtype, Tensor};
 
 /// Flags that take no value (present = on).
-const BOOL_FLAGS: [&str; 1] = ["no-pool"];
+const BOOL_FLAGS: [&str; 2] = ["no-pool", "no-fuse"];
 
 /// Tiny flag parser: `--key value` pairs after the subcommand, plus the
 /// valueless [`BOOL_FLAGS`].
@@ -398,6 +401,48 @@ fn cmd_summary(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `compile` — lower a zoo model (or all of them) into the graph IR,
+/// run the pass pipeline and print the before/after graphs with pass
+/// counts and FLOP/activation-byte accounting. `--no-fuse` (or
+/// `SWCONV_NO_FUSE=1`) shows the verbatim plan instead.
+fn cmd_compile(args: &Args) -> Result<()> {
+    let batch = args.usize("batch", 1)?;
+    let names: Vec<&str> = match args.get("model") {
+        Some(n) => vec![n],
+        None => zoo::MODEL_NAMES.to_vec(),
+    };
+    for name in names {
+        let model = zoo::by_name(name, 10, 42)
+            .ok_or_else(|| anyhow!("unknown model '{name}' (try {:?})", zoo::MODEL_NAMES))?;
+        let unfused = model.compile_with(false);
+        let fused = model.compile();
+        println!("== {name} (input {:?}, batch {batch}) ==", model.input_shape);
+        println!("lowered ({} nodes):", unfused.graph.nodes.len());
+        print!("{}", unfused.render());
+        if swconv::graph::fusion_disabled() {
+            println!("fusion disabled (--no-fuse / SWCONV_NO_FUSE): plan runs verbatim");
+        } else {
+            let s = fused.summary;
+            println!(
+                "optimized ({} nodes): {} relu fused, {} pad(s) elided, {} quant boundary(ies) hoisted:",
+                fused.graph.nodes.len(),
+                s.fused_relu,
+                s.elided_pads,
+                s.hoisted_quant
+            );
+            print!("{}", fused.render());
+        }
+        let (fb, ub) = (fused.activation_bytes(batch), unfused.activation_bytes(batch));
+        println!("flops       : {}", fused.flops(batch));
+        println!(
+            "activations : {ub} B unfused -> {fb} B compiled ({:+.1}%)",
+            (fb as f64 / ub as f64 - 1.0) * 100.0
+        );
+        println!();
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.get("model").unwrap_or("squeezenet-lite");
     let n_req = args.usize("requests", 64)?;
@@ -552,9 +597,11 @@ COMMANDS
   run-model        [--model NAME] [--batch N] [--threads N] [--profile PATH]
                    [--dtype f32|bf16|i8] [--pin CORES] [--no-pool]
   summary          [--model NAME] [--batch N]
+  compile          [--model NAME] [--batch N] [--no-fuse]
   serve            [--model NAME] [--requests N] [--max-batch N] [--max-wait-ms MS]
                    [--threads N] [--replicas N] [--trim-mb N] [--trim-idle-ms MS]
                    [--profile PATH] [--dtype f32|bf16|i8] [--pin CORES|auto] [--no-pool]
+                   [--no-fuse]
   artifacts-check  [--dir artifacts]
 
   --threads 0 means \"use all hardware threads\"; the default 1 matches
@@ -565,6 +612,16 @@ COMMANDS
   arena after every batch (0 = keep the high-water mark);
   --trim-idle-ms drops all retained scratch once a replica has been
   quiet that long (0 = never).
+
+  compile lowers a model into the typed graph IR and prints the graph
+  before and after the pass pipeline (bias+ReLU epilogue fusion, pad
+  elision into kernel edge handling, quantize-boundary hoisting between
+  adjacent int8 convs) with FLOP and activation-byte accounting; serve
+  executes every backend through the same compiled plan (shared across
+  a tier's replicas like the weights). --no-fuse — or SWCONV_NO_FUSE=1
+  — skips every pass, so the plan reproduces the layer stack verbatim;
+  results are bit-identical either way (see `cargo bench --bench
+  graph_fusion`, which emits BENCH_graph.json).
 
   Kernel threads run on a persistent, work-stealing worker pool per
   execution context (one spawn at startup instead of one per parallel
@@ -612,6 +669,13 @@ fn main() -> Result<()> {
         pool::set_pooling_disabled(true);
         eprintln!("persistent worker pools disabled (--no-pool): scoped threads per region");
     }
+    // --no-fuse (or SWCONV_NO_FUSE=1) skips the graph pass pipeline:
+    // compiled plans reproduce the layer stack verbatim. Bit-identical
+    // results either way — this is the A/B escape hatch.
+    if args.flag("no-fuse") {
+        swconv::graph::set_fusion_disabled(true);
+        eprintln!("graph passes disabled (--no-fuse): plans run the layer stack verbatim");
+    }
     // --isa pins the instruction-set level process-wide: every ExecCtx
     // built after this dispatches the forced level's kernels. Forcing
     // an unavailable level is an error (scalar is always available);
@@ -629,6 +693,7 @@ fn main() -> Result<()> {
         "autotune" => cmd_autotune(&args),
         "run-model" => cmd_run_model(&args),
         "summary" => cmd_summary(&args),
+        "compile" => cmd_compile(&args),
         "serve" => cmd_serve(&args),
         "artifacts-check" => cmd_artifacts_check(&args),
         "help" | "--help" | "-h" => {

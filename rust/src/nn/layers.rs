@@ -2,11 +2,14 @@
 //! shape inference and FLOP accounting (the roofline harness uses the
 //! latter two without running anything).
 
+use crate::graph::{Graph, NodeId, Op};
 use crate::kernels::{
-    avg_pool2d_ctx, conv2d_bf16_ctx, conv2d_ctx, conv2d_q8_ctx, max_pool2d_ctx, Conv2dParams,
+    avg_pool2d_ctx, conv2d_bf16_ctx, conv2d_ctx, conv2d_q8_epi_ctx, max_pool2d_ctx, Conv2dParams,
     PoolParams,
 };
-use crate::tensor::{quantize, Dtype, QuantParams, Tensor, TensorT};
+use crate::tensor::{
+    pad2d, quantize, quantize_per_channel, Dtype, QuantParams, Tensor, TensorT, WeightScales,
+};
 
 // The execution context grew into its own subsystem (threads + scratch
 // arena + optional dispatch profile); re-exported here so
@@ -27,6 +30,80 @@ pub trait Layer: Send + Sync {
     fn flops(&self, in_shape: &[usize]) -> u64;
     /// Run the layer.
     fn forward(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor;
+    /// Lower this layer into typed graph nodes consuming `input`,
+    /// returning the output node — or `None` when the layer has no
+    /// typed lowering, in which case [`crate::nn::Model::lower`] wraps
+    /// it in an [`Op::Opaque`] node that the passes leave alone.
+    fn lower_into(&self, g: &mut Graph, input: NodeId) -> Option<NodeId> {
+        let _ = (g, input);
+        None
+    }
+}
+
+// ------------------------------------------------- shared forward bodies
+//
+// The layer `forward`s and the graph executor
+// ([`crate::graph::CompiledPlan`]) must produce bit-identical results,
+// so the op bodies with any numerical content live here as free
+// functions both call.
+
+/// Row-wise softmax over the last dimension, in place.
+pub(crate) fn softmax_rows_inplace(x: &mut Tensor) {
+    let cols = *x.dims().last().expect("softmax needs rank >= 1");
+    for row in x.as_mut_slice().chunks_mut(cols) {
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut z = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            z += *v;
+        }
+        let inv = 1.0 / z;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Fully connected forward: `y = x · Wᵀ + b`, optional fused ReLU.
+pub(crate) fn linear_forward(x: &Tensor, w: &Tensor, bias: &[f32], relu: bool) -> Tensor {
+    let (n, d_in) = (x.dim(0), x.dim(1));
+    let d_out = w.dim(0);
+    assert_eq!(d_in, w.dim(1), "Linear dim mismatch");
+    let mut out = Tensor::zeros(&[n, d_out]);
+    let xs = x.as_slice();
+    let ws = w.as_slice();
+    for i in 0..n {
+        let xrow = &xs[i * d_in..(i + 1) * d_in];
+        let orow = &mut out.as_mut_slice()[i * d_out..(i + 1) * d_out];
+        for (o, ov) in orow.iter_mut().enumerate() {
+            let wrow = &ws[o * d_in..(o + 1) * d_in];
+            let mut acc = bias[o];
+            for (xv, wv) in xrow.iter().zip(wrow) {
+                acc += xv * wv;
+            }
+            *ov = if relu { acc.max(0.0) } else { acc };
+        }
+    }
+    out
+}
+
+/// Global average pooling body: `[n, c, h, w]` → `[n, c, 1, 1]`.
+pub(crate) fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let inv = 1.0 / (h * w) as f32;
+    let mut out = Tensor::zeros(&[n, c, 1, 1]);
+    for ni in 0..n {
+        for ci in 0..c {
+            let s: f32 = x.plane(ni, ci).iter().sum();
+            *out.at4_mut(ni, ci, 0, 0) = s * inv;
+        }
+    }
+    out
+}
+
+/// Explicit zero padding of the two spatial dims (no slack).
+pub(crate) fn zero_pad2d(x: &Tensor, ph: usize, pw: usize) -> Tensor {
+    pad2d(x, ph, pw, 0, 0.0f32)
 }
 
 // ---------------------------------------------------------------- Conv2d
@@ -107,9 +184,24 @@ impl Layer for Conv2d {
                 // codes instead.
                 let wq = QuantParams::for_tensor(&self.w);
                 let qw = quantize(&self.w, wq);
-                conv2d_q8_ctx(x, &qw, wq, Some(&self.bias), &self.params, ctx)
+                conv2d_q8_epi_ctx(
+                    x,
+                    &qw,
+                    &WeightScales::PerTensor(wq),
+                    Some(&self.bias),
+                    false,
+                    &self.params,
+                    ctx,
+                )
             }
         }
+    }
+
+    fn lower_into(&self, g: &mut Graph, input: NodeId) -> Option<NodeId> {
+        Some(g.add(
+            Op::Conv2d { w: self.w.clone(), bias: self.bias.clone(), params: self.params },
+            vec![input],
+        ))
     }
 }
 
@@ -119,20 +211,23 @@ impl Layer for Conv2d {
 /// first-class quantized layer the paper's low-memory-devices argument
 /// asks for.
 ///
-/// Weights are quantized once at construction (per-tensor symmetric,
-/// [`QuantParams::for_tensor`]) and stored as i8 codes — a 4× parameter
-/// memory saving over [`Conv2d`]. Each forward pass dynamically
-/// quantizes the activations, runs the int8 kernel the ctx's algorithm
-/// routes to ([`conv2d_q8_ctx`]: sliding by default, im2col+GEMM for
+/// Weights are quantized once at construction — **per output channel**
+/// by default ([`quantize_per_channel`]: each `c_out` row of the filter
+/// gets its own symmetric scale, so one large-magnitude channel no
+/// longer flattens the resolution of the rest) — and stored as i8
+/// codes, a 4× parameter memory saving over [`Conv2d`]. Each forward
+/// pass dynamically quantizes the activations, runs the int8 kernel the
+/// ctx's algorithm routes to (sliding by default, im2col+GEMM for
 /// `Im2colGemm`, the dtype-aware profile winner for `Tuned`), and
-/// dequantizes back to f32 — quantize/dequantize live at the layer
-/// boundary, so this layer composes with every f32 layer around it
-/// regardless of the ctx's [`Dtype`].
+/// dequantizes back to f32 with the per-channel scales — quantize/
+/// dequantize live at the layer boundary, so this layer composes with
+/// every f32 layer around it regardless of the ctx's [`Dtype`].
 pub struct QuantizedConv2d {
     /// Weight codes `[c_out, c_in/groups, kh, kw]`.
     pub qw: TensorT<i8>,
-    /// The weights' (symmetric) quantization parameters.
-    pub wq: QuantParams,
+    /// The weights' symmetric scales (per-channel by default; per-tensor
+    /// via [`QuantizedConv2d::from_conv2d_per_tensor`]).
+    pub wq: WeightScales,
     /// Bias `[c_out]`, kept in f32 (added after dequantization).
     pub bias: Vec<f32>,
     /// Stride / padding / groups.
@@ -141,12 +236,21 @@ pub struct QuantizedConv2d {
 
 impl QuantizedConv2d {
     /// Quantize an existing f32 convolution layer's weights (the
-    /// post-training-quantization path).
+    /// post-training-quantization path), one symmetric scale per
+    /// output channel.
     pub fn from_conv2d(conv: &Conv2d) -> Self {
+        let (qw, wq) = quantize_per_channel(&conv.w);
+        QuantizedConv2d { qw, wq, bias: conv.bias.clone(), params: conv.params }
+    }
+
+    /// Per-tensor variant of [`QuantizedConv2d::from_conv2d`] — a
+    /// single scale for the whole filter bank. Kept as the accuracy
+    /// baseline the per-channel parity tests compare against.
+    pub fn from_conv2d_per_tensor(conv: &Conv2d) -> Self {
         let wq = QuantParams::for_tensor(&conv.w);
         QuantizedConv2d {
             qw: quantize(&conv.w, wq),
-            wq,
+            wq: WeightScales::PerTensor(wq),
             bias: conv.bias.clone(),
             params: conv.params,
         }
@@ -189,7 +293,19 @@ impl Layer for QuantizedConv2d {
     }
 
     fn forward(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor {
-        conv2d_q8_ctx(x, &self.qw, self.wq, Some(&self.bias), &self.params, ctx)
+        conv2d_q8_epi_ctx(x, &self.qw, &self.wq, Some(&self.bias), false, &self.params, ctx)
+    }
+
+    fn lower_into(&self, g: &mut Graph, input: NodeId) -> Option<NodeId> {
+        Some(g.add(
+            Op::QuantConv2d {
+                qw: self.qw.clone(),
+                wq: self.wq.clone(),
+                bias: self.bias.clone(),
+                params: self.params,
+            },
+            vec![input],
+        ))
     }
 }
 
@@ -216,6 +332,10 @@ impl Layer for MaxPool2d {
     fn forward(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor {
         max_pool2d_ctx(x, &self.0, ctx)
     }
+
+    fn lower_into(&self, g: &mut Graph, input: NodeId) -> Option<NodeId> {
+        Some(g.add(Op::MaxPool2d(self.0), vec![input]))
+    }
 }
 
 /// Average-pooling layer (sliding-window sum kernel).
@@ -239,6 +359,10 @@ impl Layer for AvgPool2d {
     fn forward(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor {
         avg_pool2d_ctx(x, &self.0, ctx)
     }
+
+    fn lower_into(&self, g: &mut Graph, input: NodeId) -> Option<NodeId> {
+        Some(g.add(Op::AvgPool2d(self.0), vec![input]))
+    }
 }
 
 /// Global average pooling: collapses H×W to 1×1.
@@ -258,16 +382,11 @@ impl Layer for GlobalAvgPool {
     }
 
     fn forward(&self, x: &Tensor, _ctx: &ExecCtx) -> Tensor {
-        let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
-        let inv = 1.0 / (h * w) as f32;
-        let mut out = Tensor::zeros(&[n, c, 1, 1]);
-        for ni in 0..n {
-            for ci in 0..c {
-                let s: f32 = x.plane(ni, ci).iter().sum();
-                *out.at4_mut(ni, ci, 0, 0) = s * inv;
-            }
-        }
-        out
+        global_avg_pool(x)
+    }
+
+    fn lower_into(&self, g: &mut Graph, input: NodeId) -> Option<NodeId> {
+        Some(g.add(Op::GlobalAvgPool, vec![input]))
     }
 }
 
@@ -292,6 +411,10 @@ impl Layer for ReLU {
     fn forward(&self, x: &Tensor, _ctx: &ExecCtx) -> Tensor {
         x.map(|v| v.max(0.0))
     }
+
+    fn lower_into(&self, g: &mut Graph, input: NodeId) -> Option<NodeId> {
+        Some(g.add(Op::Relu, vec![input]))
+    }
 }
 
 /// Row-wise softmax over the last dimension.
@@ -311,21 +434,13 @@ impl Layer for Softmax {
     }
 
     fn forward(&self, x: &Tensor, _ctx: &ExecCtx) -> Tensor {
-        let cols = *x.dims().last().expect("softmax needs rank >= 1");
         let mut out = x.clone();
-        for row in out.as_mut_slice().chunks_mut(cols) {
-            let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-            let mut z = 0.0;
-            for v in row.iter_mut() {
-                *v = (*v - m).exp();
-                z += *v;
-            }
-            let inv = 1.0 / z;
-            for v in row.iter_mut() {
-                *v *= inv;
-            }
-        }
+        softmax_rows_inplace(&mut out);
         out
+    }
+
+    fn lower_into(&self, g: &mut Graph, input: NodeId) -> Option<NodeId> {
+        Some(g.add(Op::Softmax, vec![input]))
     }
 }
 
@@ -350,6 +465,10 @@ impl Layer for Flatten {
     fn forward(&self, x: &Tensor, _ctx: &ExecCtx) -> Tensor {
         let shape = self.out_shape(x.dims());
         x.clone().reshape(&shape)
+    }
+
+    fn lower_into(&self, g: &mut Graph, input: NodeId) -> Option<NodeId> {
+        Some(g.add(Op::Flatten, vec![input]))
     }
 }
 
@@ -390,24 +509,52 @@ impl Layer for Linear {
     }
 
     fn forward(&self, x: &Tensor, _ctx: &ExecCtx) -> Tensor {
-        let (n, d_in) = (x.dim(0), x.dim(1));
-        let d_out = self.w.dim(0);
-        let mut out = Tensor::zeros(&[n, d_out]);
-        let xs = x.as_slice();
-        let ws = self.w.as_slice();
-        for i in 0..n {
-            let xrow = &xs[i * d_in..(i + 1) * d_in];
-            let orow = &mut out.as_mut_slice()[i * d_out..(i + 1) * d_out];
-            for (o, ov) in orow.iter_mut().enumerate() {
-                let wrow = &ws[o * d_in..(o + 1) * d_in];
-                let mut acc = self.bias[o];
-                for (xv, wv) in xrow.iter().zip(wrow) {
-                    acc += xv * wv;
-                }
-                *ov = acc;
-            }
-        }
-        out
+        linear_forward(x, &self.w, &self.bias, false)
+    }
+
+    fn lower_into(&self, g: &mut Graph, input: NodeId) -> Option<NodeId> {
+        Some(g.add(Op::Linear { w: self.w.clone(), bias: self.bias.clone() }, vec![input]))
+    }
+}
+
+// ----------------------------------------------------------------- Pad2d
+
+/// Explicit zero padding of the spatial dims — the layer the pad-elision
+/// pass exists to absorb: a compiled plan feeds the padding amounts into
+/// the consuming convolution's own edge handling instead of
+/// materialising the padded copy.
+pub struct Pad2d {
+    /// Rows added on top and bottom.
+    pub ph: usize,
+    /// Columns added left and right.
+    pub pw: usize,
+}
+
+impl Layer for Pad2d {
+    fn describe(&self) -> String {
+        format!("Pad2d p({}, {})", self.ph, self.pw)
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        assert_eq!(in_shape.len(), 4, "Pad2d input must be NCHW");
+        vec![
+            in_shape[0],
+            in_shape[1],
+            in_shape[2] + 2 * self.ph,
+            in_shape[3] + 2 * self.pw,
+        ]
+    }
+
+    fn flops(&self, _in_shape: &[usize]) -> u64 {
+        0
+    }
+
+    fn forward(&self, x: &Tensor, _ctx: &ExecCtx) -> Tensor {
+        zero_pad2d(x, self.ph, self.pw)
+    }
+
+    fn lower_into(&self, g: &mut Graph, input: NodeId) -> Option<NodeId> {
+        Some(g.add(Op::Pad2d { ph: self.ph, pw: self.pw }, vec![input]))
     }
 }
 
@@ -464,6 +611,17 @@ impl Layer for Fire {
         let a = self.expand1.forward(&s, ctx);
         let b = self.expand3.forward(&s, ctx);
         concat_channels(&a, &b).map(|v| v.max(0.0))
+    }
+
+    fn lower_into(&self, g: &mut Graph, input: NodeId) -> Option<NodeId> {
+        // Mirrors `forward` op for op; the fusion pass then folds the
+        // two ReLUs into the convolutions' epilogues.
+        let s = self.squeeze.lower_into(g, input)?;
+        let sr = g.add(Op::Relu, vec![s]);
+        let a = self.expand1.lower_into(g, sr)?;
+        let b = self.expand3.lower_into(g, sr)?;
+        let cat = g.add(Op::Concat, vec![a, b]);
+        Some(g.add(Op::Relu, vec![cat]))
     }
 }
 
@@ -530,6 +688,13 @@ impl Layer for DepthwiseSeparable {
     fn forward(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor {
         let mid = self.dw.forward(x, ctx).map(|v| v.max(0.0));
         self.pw.forward(&mid, ctx).map(|v| v.max(0.0))
+    }
+
+    fn lower_into(&self, g: &mut Graph, input: NodeId) -> Option<NodeId> {
+        let d = self.dw.lower_into(g, input)?;
+        let dr = g.add(Op::Relu, vec![d]);
+        let p = self.pw.lower_into(g, dr)?;
+        Some(g.add(Op::Relu, vec![p]))
     }
 }
 
@@ -652,6 +817,57 @@ mod tests {
         let g = f.forward(&x, &ExecCtx::new(ConvAlgo::Im2colGemm));
         let s = f.forward(&x, &ExecCtx::new(ConvAlgo::Sliding));
         assert!(g.allclose(&s, 1e-4), "diff {}", g.max_abs_diff(&s));
+    }
+
+    #[test]
+    fn pad2d_layer_shape_and_values() {
+        let l = Pad2d { ph: 1, pw: 2 };
+        assert_eq!(l.out_shape(&[1, 2, 3, 3]), vec![1, 2, 5, 7]);
+        let x = Tensor::full(&[1, 1, 2, 2], 3.0);
+        let mut y = l.forward(&x, &ExecCtx::default());
+        assert_eq!(y.dims(), &[1, 1, 4, 6]);
+        let s: f32 = y.as_slice().iter().sum();
+        assert_eq!(s, 12.0); // the four 3.0s survive, the rest is zero
+        assert_eq!(y.as_slice()[0], 0.0);
+        assert_eq!(*y.at4_mut(0, 0, 1, 2), 3.0);
+    }
+
+    #[test]
+    fn pad2d_then_unpadded_conv_matches_padded_conv() {
+        // The identity pad elision relies on: conv(pad2d(x), pad=0) ==
+        // conv(x, pad=1), exactly, per algorithm.
+        let conv1 = Conv2d::new(2, 3, 3, Conv2dParams::same(3), 41);
+        let mut conv0 = Conv2d::new(2, 3, 3, Conv2dParams::default(), 41);
+        conv0.w = conv1.w.clone();
+        conv0.bias = conv1.bias.clone();
+        let x = Tensor::randn(&[1, 2, 9, 9], 42);
+        let padded = Pad2d { ph: 1, pw: 1 }.forward(&x, &ExecCtx::default());
+        for algo in [ConvAlgo::Direct, ConvAlgo::Sliding, ConvAlgo::Im2colGemm] {
+            let ctx = ExecCtx::new(algo);
+            let a = conv1.forward(&x, &ctx);
+            let b = conv0.forward(&padded, &ctx);
+            assert_eq!(a.as_slice(), b.as_slice(), "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn per_channel_scales_beat_per_tensor_on_skewed_weights() {
+        // One outlier output channel: a shared scale crushes the other
+        // channels' resolution, per-channel scales do not.
+        let mut conv = Conv2d::new(2, 3, 3, Conv2dParams::same(3), 51);
+        let c_stride = conv.w.numel() / 3;
+        for v in &mut conv.w.as_mut_slice()[2 * c_stride..] {
+            *v *= 60.0;
+        }
+        let x = Tensor::randn(&[1, 2, 8, 8], 52);
+        let f = conv.forward(&x, &ExecCtx::default());
+        let qc = QuantizedConv2d::from_conv2d(&conv);
+        let qt = QuantizedConv2d::from_conv2d_per_tensor(&conv);
+        assert!(matches!(qc.wq, WeightScales::PerChannel(_)));
+        let ec = qc.forward(&x, &ExecCtx::default()).max_abs_diff(&f);
+        let et = qt.forward(&x, &ExecCtx::default()).max_abs_diff(&f);
+        assert!(ec < et, "per-channel err {ec} should beat per-tensor {et}");
+        assert!(ec < 0.25, "per-channel err {ec}");
     }
 
     #[test]

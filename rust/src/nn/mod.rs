@@ -16,8 +16,11 @@
 //!   QuantizedConv2d (pre-quantized int8 weights), pooling, ReLU,
 //!   Linear, Softmax, Flatten, Fire (SqueezeNet), DepthwiseSeparable
 //!   (MobileNet).
-//! * [`model`] — the sequential executor with shape/FLOP introspection.
-//! * [`zoo`] — SimpleCNN, SqueezeNet-lite, MobileNet-lite, LargeFilterNet.
+//! * [`model`] — the sequential executor with shape/FLOP introspection
+//!   and [`Model::compile`], the entry point into [`crate::graph`]'s
+//!   typed IR, pass pipeline and compiled-plan executor.
+//! * [`zoo`] — SimpleCNN, SqueezeNet-lite, MobileNet-lite,
+//!   LargeFilterNet, QuantizedCNN.
 
 pub mod layers;
 pub mod model;

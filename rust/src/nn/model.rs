@@ -1,6 +1,8 @@
-//! The sequential model executor with shape/FLOP introspection.
+//! The sequential model executor with shape/FLOP introspection, and the
+//! entry point into the graph compiler ([`Model::compile`]).
 
 use super::layers::{ExecCtx, Layer};
+use crate::graph::{optimize, CompiledPlan, Graph, Op, PassSummary};
 use crate::tensor::Tensor;
 use std::sync::Arc;
 
@@ -79,11 +81,46 @@ impl Model {
             self.name,
             self.input_shape
         );
-        let mut cur = x.clone();
+        // The first layer reads the caller's tensor directly — no
+        // defensive clone of the input.
+        let mut cur: Option<Tensor> = None;
         for l in &self.layers {
-            cur = l.forward(&cur, ctx);
+            cur = Some(l.forward(cur.as_ref().unwrap_or(x), ctx));
         }
-        cur
+        cur.unwrap_or_else(|| x.clone())
+    }
+
+    /// Lower the layer stack into the typed graph IR, un-optimized.
+    /// Layers without a typed lowering become [`Op::Opaque`] nodes that
+    /// still execute via their [`Layer::forward`].
+    pub fn lower(&self) -> Graph {
+        let mut g = Graph::new(self.name.clone(), &self.input_shape);
+        let mut cur = 0;
+        for l in &self.layers {
+            cur = match l.lower_into(&mut g, cur) {
+                Some(id) => id,
+                None => g.add(Op::Opaque(Arc::clone(l)), vec![cur]),
+            };
+        }
+        g.set_output(cur);
+        g
+    }
+
+    /// Compile the model: lower into the graph IR and run the pass
+    /// pipeline — unless `SWCONV_NO_FUSE` /
+    /// [`crate::graph::set_fusion_disabled`] turned fusion off, in
+    /// which case the plan reproduces the layer stack verbatim.
+    pub fn compile(&self) -> CompiledPlan {
+        self.compile_with(!crate::graph::fusion_disabled())
+    }
+
+    /// Compile with an explicit fusion choice (`fuse == false` skips
+    /// every pass — the A/B baseline the parity tests and the fusion
+    /// benchmark compare against).
+    pub fn compile_with(&self, fuse: bool) -> CompiledPlan {
+        let mut g = self.lower();
+        let summary = if fuse { optimize(&mut g) } else { PassSummary::default() };
+        CompiledPlan::new(g, summary)
     }
 
     /// Per-layer summary table: description, output shape, FLOPs.
@@ -171,6 +208,32 @@ mod tests {
     #[should_panic(expected = "expects input")]
     fn forward_rejects_wrong_shape() {
         tiny().forward(&Tensor::zeros(&[1, 2, 8, 8]), &ExecCtx::default());
+    }
+
+    #[test]
+    fn compiled_plan_matches_forward_bitwise() {
+        let m = tiny();
+        let x = Tensor::randn(&[2, 1, 8, 8], 8);
+        for algo in [ConvAlgo::Direct, ConvAlgo::Im2colGemm, ConvAlgo::Sliding] {
+            let ctx = ExecCtx::new(algo);
+            let want = m.forward(&x, &ctx);
+            let fused = m.compile_with(true).run(&x, &ctx);
+            let plain = m.compile_with(false).run(&x, &ctx);
+            assert_eq!(fused.as_slice(), want.as_slice(), "{algo:?} fused");
+            assert_eq!(plain.as_slice(), want.as_slice(), "{algo:?} unfused");
+        }
+    }
+
+    #[test]
+    fn compile_fuses_the_tiny_models_relu() {
+        let m = tiny();
+        let plan = m.compile_with(true);
+        assert_eq!(plan.summary.fused_relu, 1);
+        // input + 6 layers, minus the fused ReLU node.
+        assert_eq!(plan.graph.nodes.len(), 6);
+        let unfused = m.compile_with(false);
+        assert_eq!(unfused.graph.nodes.len(), 7);
+        assert!(plan.activation_bytes(1) < unfused.activation_bytes(1));
     }
 
     #[test]

@@ -9,18 +9,21 @@
 //! * [`large_filter_net`] — the architecture direction §3 *encourages*:
 //!   "fewer layers with larger convolution filters", where the sliding
 //!   kernels shine (k = 11/17/21 layers).
+//! * [`quantized_cnn`] — pre-quantized int8 convolutions (per-channel
+//!   weight scales) with an explicit pad layer: the model the graph
+//!   compiler's pad-elision and quantize-boundary passes bite on.
 
 use super::layers::{
-    AvgPool2d, Conv2d, DepthwiseSeparable, Fire, Flatten, GlobalAvgPool, Linear, MaxPool2d, ReLU,
-    Softmax,
+    AvgPool2d, Conv2d, DepthwiseSeparable, Fire, Flatten, GlobalAvgPool, Linear, MaxPool2d, Pad2d,
+    QuantizedConv2d, ReLU, Softmax,
 };
 use super::model::Model;
 use crate::kernels::{Conv2dParams, PoolParams};
 use crate::tensor::Tensor;
 
 /// All zoo model names, as accepted by [`by_name`].
-pub const MODEL_NAMES: [&str; 4] =
-    ["simple-cnn", "squeezenet-lite", "mobilenet-lite", "large-filter-net"];
+pub const MODEL_NAMES: [&str; 5] =
+    ["simple-cnn", "squeezenet-lite", "mobilenet-lite", "large-filter-net", "quantized-cnn"];
 
 /// Look a model up by CLI name (`classes` output classes, deterministic
 /// weights from `seed`).
@@ -30,6 +33,7 @@ pub fn by_name(name: &str, classes: usize, seed: u64) -> Option<Model> {
         "squeezenet-lite" => Some(squeezenet_lite(classes, seed)),
         "mobilenet-lite" => Some(mobilenet_lite(classes, seed)),
         "large-filter-net" => Some(large_filter_net(classes, seed)),
+        "quantized-cnn" => Some(quantized_cnn(classes, seed)),
         _ => None,
     }
 }
@@ -162,6 +166,26 @@ pub fn large_filter_net(classes: usize, seed: u64) -> Model {
         .push(Softmax)
 }
 
+/// Int8-weight CNN for 3×32×32 inputs — the model that exercises every
+/// graph pass at once: an explicit [`Pad2d`] for the elision pass, a
+/// back-to-back [`QuantizedConv2d`] pair for quantize-boundary
+/// hoisting, and ReLUs after each conv for epilogue fusion.
+pub fn quantized_cnn(classes: usize, seed: u64) -> Model {
+    Model::new("quantized-cnn", &[3, 32, 32])
+        .push(Pad2d { ph: 1, pw: 1 })
+        .push(QuantizedConv2d::new(3, 8, 3, Conv2dParams::default(), seed))
+        .push(ReLU)
+        .push(QuantizedConv2d::new(8, 8, 3, Conv2dParams::same(3), seed + 1))
+        .push(ReLU)
+        .push(MaxPool2d(PoolParams::square(2)))
+        .push(QuantizedConv2d::new(8, 16, 3, Conv2dParams::same(3), seed + 2))
+        .push(ReLU)
+        .push(GlobalAvgPool)
+        .push(Flatten)
+        .push(Linear::new(16, classes, seed + 3))
+        .push(Softmax)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,6 +206,15 @@ mod tests {
         assert_eq!(squeezenet_lite(10, 1).out_shape(1), vec![1, 10]);
         assert_eq!(mobilenet_lite(5, 1).out_shape(3), vec![3, 5]);
         assert_eq!(large_filter_net(7, 1).out_shape(1), vec![1, 7]);
+        assert_eq!(quantized_cnn(6, 1).out_shape(2), vec![2, 6]);
+    }
+
+    #[test]
+    fn quantized_cnn_compiles_with_every_pass_firing() {
+        let plan = quantized_cnn(4, 9).compile_with(true);
+        assert_eq!(plan.summary.elided_pads, 1);
+        assert_eq!(plan.summary.fused_relu, 3);
+        assert_eq!(plan.summary.hoisted_quant, 1);
     }
 
     #[test]

@@ -265,6 +265,81 @@ impl QuantParams {
     }
 }
 
+/// Weight-tensor quantization scales: one symmetric [`QuantParams`] for
+/// the whole tensor, or one scale per output channel (`c_out` — the
+/// leading weight dimension).
+///
+/// Per-channel scales cost nothing inside the integer kernels — the i32
+/// accumulator `Σ x_code · w_code` is scale-agnostic — and only touch
+/// the dequant (`raw · x_scale · w_scale[c_out]`), but they stop one
+/// outlier filter from flattening every other channel's resolution,
+/// which is where per-tensor int8 loses accuracy first.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WeightScales {
+    /// One symmetric scale for the whole weight tensor.
+    PerTensor(QuantParams),
+    /// One symmetric scale per output channel (`zero_point = 0`
+    /// implied; index = `c_out` row).
+    PerChannel(Vec<f32>),
+}
+
+impl WeightScales {
+    /// Per-tensor scales from symmetric `QuantParams`.
+    pub fn per_tensor(q: QuantParams) -> Self {
+        WeightScales::PerTensor(q)
+    }
+
+    /// The dequant scale for output channel `co`.
+    #[inline(always)]
+    pub fn scale(&self, co: usize) -> f32 {
+        match self {
+            WeightScales::PerTensor(q) => q.scale,
+            WeightScales::PerChannel(s) => s[co],
+        }
+    }
+
+    /// True when the scales are symmetric (what the int8 conv kernels
+    /// require; per-channel scales are symmetric by construction).
+    pub fn is_symmetric(&self) -> bool {
+        match self {
+            WeightScales::PerTensor(q) => q.is_symmetric(),
+            WeightScales::PerChannel(_) => true,
+        }
+    }
+
+    /// Number of channels for per-channel scales (`None` for
+    /// per-tensor).
+    pub fn channels(&self) -> Option<usize> {
+        match self {
+            WeightScales::PerTensor(_) => None,
+            WeightScales::PerChannel(s) => Some(s.len()),
+        }
+    }
+}
+
+/// Quantize a weight tensor with **per-channel** symmetric scales: each
+/// `c_out` row (leading dimension) gets its own
+/// [`QuantParams::symmetric`] from that row's largest magnitude.
+///
+/// Returns the codes and the matching [`WeightScales::PerChannel`].
+pub fn quantize_per_channel(w: &Tensor) -> (TensorT<i8>, WeightScales) {
+    let c_out = w.dim(0);
+    let inner = w.numel() / c_out;
+    let ws = w.as_slice();
+    let mut codes = vec![0i8; w.numel()];
+    let mut scales = vec![0.0f32; c_out];
+    for co in 0..c_out {
+        let row = &ws[co * inner..(co + 1) * inner];
+        let max_abs = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let q = QuantParams::symmetric(max_abs);
+        scales[co] = q.scale;
+        for (c, &v) in codes[co * inner..(co + 1) * inner].iter_mut().zip(row) {
+            *c = q.quantize_value(v);
+        }
+    }
+    (TensorT::from_vec(codes, w.dims()), WeightScales::PerChannel(scales))
+}
+
 /// Quantize an `f32` tensor to i8 codes under `q`.
 pub fn quantize(x: &Tensor, q: QuantParams) -> TensorT<i8> {
     let data = x.as_slice().iter().map(|&v| q.quantize_value(v)).collect();
@@ -292,6 +367,51 @@ pub fn from_bf16(x: &TensorT<Bf16>) -> Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn per_channel_scales_track_each_row() {
+        // Channel 0 holds small values, channel 1 one large outlier:
+        // per-channel quantization must keep full resolution on row 0.
+        let w = Tensor::from_vec(vec![0.1, -0.05, 100.0, 50.0], &[2, 2]);
+        let (codes, ws) = quantize_per_channel(&w);
+        assert_eq!(ws.channels(), Some(2));
+        assert!(ws.is_symmetric());
+        // Row 0 codes are quantized against 0.1, not 100.0.
+        assert_eq!(codes.as_slice()[0], 127);
+        assert_eq!(codes.as_slice()[2], 127);
+        // Dequantizing row by row recovers the values within one step.
+        for co in 0..2 {
+            for i in 0..2 {
+                let back = codes.as_slice()[co * 2 + i] as f32 * ws.scale(co);
+                let want = w.as_slice()[co * 2 + i];
+                assert!((back - want).abs() <= ws.scale(co), "co={co} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_tensor_weight_scales_match_quant_params() {
+        let q = QuantParams::symmetric(2.0);
+        let ws = WeightScales::per_tensor(q);
+        assert_eq!(ws.scale(0), q.scale);
+        assert_eq!(ws.scale(7), q.scale);
+        assert_eq!(ws.channels(), None);
+    }
+
+    #[test]
+    fn per_channel_matches_per_row_symmetric_quant() {
+        let w = Tensor::randn(&[3, 8], 77);
+        let (codes, ws) = quantize_per_channel(&w);
+        for co in 0..3 {
+            let row: Vec<f32> = w.as_slice()[co * 8..(co + 1) * 8].to_vec();
+            let max_abs = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let q = QuantParams::symmetric(max_abs);
+            assert_eq!(ws.scale(co), q.scale);
+            for (i, &v) in row.iter().enumerate() {
+                assert_eq!(codes.as_slice()[co * 8 + i], q.quantize_value(v));
+            }
+        }
+    }
 
     #[test]
     fn dtype_names_roundtrip() {

@@ -22,7 +22,8 @@ mod rng;
 
 pub use dense::{Tensor, TensorT};
 pub use element::{
-    dequantize, from_bf16, quantize, to_bf16, Bf16, Dtype, Element, QuantParams,
+    dequantize, from_bf16, quantize, quantize_per_channel, to_bf16, Bf16, Dtype, Element,
+    QuantParams, WeightScales,
 };
 pub use pad::{pad2d, pad2d_into, pad_row, pad_row_into, padded2d_size};
 pub use rng::XorShiftRng;

@@ -1,0 +1,38 @@
+//! The process-global fusion switch, in its own integration binary on
+//! purpose: cargo gives each integration-test file its own process, so
+//! flipping the flag here can never race another test's `compile()`
+//! (inside a shared process it would briefly re-enable the passes
+//! during the `SWCONV_NO_FUSE=1` CI leg, silently weakening the
+//! verbatim-plan coverage that job exists for).
+
+use swconv::graph::{self, PassSummary};
+use swconv::kernels::ConvAlgo;
+use swconv::nn::{zoo, ExecCtx};
+use swconv::tensor::Tensor;
+
+/// Disabling makes `Model::compile` reproduce the layer stack verbatim
+/// (no pass fires), enabling restores the pipeline — and both plans
+/// compute bit-identical outputs.
+#[test]
+fn fusion_disable_flag_controls_compile() {
+    let initial = graph::fusion_disabled();
+    let m = zoo::quantized_cnn(4, 3);
+
+    graph::set_fusion_disabled(true);
+    assert!(graph::fusion_disabled());
+    let plain = m.compile();
+    assert_eq!(plain.summary, PassSummary::default(), "disabled ⇒ no pass fires");
+
+    graph::set_fusion_disabled(false);
+    assert!(!graph::fusion_disabled());
+    let fused = m.compile();
+    assert!(fused.summary.fused_relu > 0, "enabled ⇒ the pipeline runs");
+    assert!(fused.graph.nodes.len() < plain.graph.nodes.len());
+
+    let x = Tensor::randn(&[1, 3, 32, 32], 5);
+    let ctx = ExecCtx::new(ConvAlgo::Sliding);
+    let want = m.forward(&x, &ctx);
+    assert_eq!(plain.run(&x, &ctx).as_slice(), want.as_slice(), "verbatim plan parity");
+    assert_eq!(fused.run(&x, &ctx).as_slice(), want.as_slice(), "fused plan parity");
+    graph::set_fusion_disabled(initial);
+}

@@ -1,0 +1,156 @@
+//! End-to-end parity of the graph compiler: the compiled plan — fused
+//! (full pass pipeline) and verbatim (`compile_with(false)`, the
+//! `SWCONV_NO_FUSE=1` shape) — must reproduce the layer-by-layer
+//! `Model::forward` **bit-for-bit** for f32/bf16 and **exactly** for
+//! int8, for every zoo model, per forced algorithm, per serving dtype,
+//! per thread count and per ISA level. The pass pipeline is a traffic
+//! knob, never an accuracy knob: fusing bias+ReLU into the output
+//! write, eliding a pad copy into kernel edge handling, or exchanging
+//! i8 activations between adjacent quantized convs must all leave the
+//! produced numbers untouched.
+
+use swconv::kernels::ConvAlgo;
+use swconv::nn::{zoo, ExecCtx, Model};
+use swconv::simd::IsaLevel;
+use swconv::tensor::{Dtype, Tensor};
+
+/// A deterministic batch for `m`.
+fn input_for(m: &Model, batch: usize, seed: u64) -> Tensor {
+    let dims: Vec<usize> = std::iter::once(batch).chain(m.input_shape.iter().copied()).collect();
+    Tensor::randn(&dims, seed)
+}
+
+/// Algorithms worth forcing per model: the small nets take the full
+/// set (Tuned without a profile routes like Sliding); SlidingGeneric
+/// caps at k = 17, so the k = 21 net skips it, and the bigger nets
+/// skip the O(k²)-per-output Direct oracle to keep debug runs sane.
+fn algos_for(name: &str) -> Vec<ConvAlgo> {
+    match name {
+        "simple-cnn" | "quantized-cnn" => ConvAlgo::ALL.to_vec(),
+        "large-filter-net" => {
+            vec![ConvAlgo::Im2colGemm, ConvAlgo::Sliding, ConvAlgo::SlidingCompound]
+        }
+        _ => vec![ConvAlgo::Im2colGemm, ConvAlgo::Sliding],
+    }
+}
+
+/// Fused and verbatim plans equal `forward` bitwise for every zoo
+/// model under every algorithm that model supports.
+#[test]
+fn compiled_plans_bit_identical_per_model_and_algo() {
+    for name in zoo::MODEL_NAMES {
+        let m = zoo::by_name(name, 4, 42).unwrap();
+        let batch = if matches!(name, "simple-cnn" | "quantized-cnn") { 2 } else { 1 };
+        let x = input_for(&m, batch, 7);
+        let fused = m.compile_with(true);
+        let plain = m.compile_with(false);
+        for algo in algos_for(name) {
+            let ctx = ExecCtx::new(algo);
+            let want = m.forward(&x, &ctx);
+            assert_eq!(fused.run(&x, &ctx).as_slice(), want.as_slice(), "{name} {algo:?} fused");
+            assert_eq!(
+                plain.run(&x, &ctx).as_slice(),
+                want.as_slice(),
+                "{name} {algo:?} verbatim"
+            );
+        }
+    }
+}
+
+/// The threading axis must not perturb plan parity (the plan hands the
+/// same ctx to the same kernels the layers call).
+#[test]
+fn thread_counts_do_not_perturb_compiled_parity() {
+    for name in ["simple-cnn", "quantized-cnn"] {
+        let m = zoo::by_name(name, 4, 42).unwrap();
+        let x = input_for(&m, 2, 11);
+        let fused = m.compile_with(true);
+        for algo in [ConvAlgo::Sliding, ConvAlgo::Im2colGemm] {
+            for threads in [1usize, 2, 4] {
+                let ctx = ExecCtx::with_threads(algo, threads);
+                let want = m.forward(&x, &ctx);
+                assert_eq!(
+                    fused.run(&x, &ctx).as_slice(),
+                    want.as_slice(),
+                    "{name} {algo:?} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+/// The serving-dtype axis: bf16 and dynamic-int8 contexts run the plan
+/// through the same reduced-precision kernels the layers use, so the
+/// compiled output is bitwise equal to `forward` under the same ctx.
+#[test]
+fn serving_dtypes_match_the_layer_path_bitwise() {
+    for name in ["simple-cnn", "quantized-cnn"] {
+        let m = zoo::by_name(name, 4, 42).unwrap();
+        let x = input_for(&m, 1, 13);
+        let fused = m.compile_with(true);
+        let plain = m.compile_with(false);
+        for dtype in [Dtype::Bf16, Dtype::I8] {
+            for algo in [ConvAlgo::Sliding, ConvAlgo::Im2colGemm] {
+                let ctx = ExecCtx::new(algo).with_dtype(dtype);
+                let want = m.forward(&x, &ctx);
+                assert_eq!(
+                    fused.run(&x, &ctx).as_slice(),
+                    want.as_slice(),
+                    "{name} {algo:?} {dtype:?} fused"
+                );
+                assert_eq!(
+                    plain.run(&x, &ctx).as_slice(),
+                    want.as_slice(),
+                    "{name} {algo:?} {dtype:?} verbatim"
+                );
+            }
+        }
+    }
+}
+
+/// Per-ctx forced ISA levels: the plan inherits the ctx's level like
+/// every kernel call does, and parity holds at each one (levels this
+/// machine lacks degrade to the portable kernels inside dispatch, so
+/// this passes — and still exercises every arm — on any host).
+#[test]
+fn forced_isa_levels_preserve_compiled_parity() {
+    let m = zoo::simple_cnn(4, 42);
+    let x = input_for(&m, 1, 17);
+    let fused = m.compile_with(true);
+    let scalar_ctx = ExecCtx::new(ConvAlgo::Sliding).with_isa(IsaLevel::Scalar);
+    let reference = m.forward(&x, &scalar_ctx);
+    for isa in IsaLevel::ALL {
+        let ctx = ExecCtx::new(ConvAlgo::Sliding).with_isa(isa);
+        let want = m.forward(&x, &ctx);
+        assert_eq!(fused.run(&x, &ctx).as_slice(), want.as_slice(), "{isa} fused vs forward");
+        // And the ISA-invariance contract carries over to plans.
+        assert_eq!(fused.run(&x, &ctx).as_slice(), reference.as_slice(), "{isa} vs scalar");
+    }
+}
+
+/// Structural checks: the passes actually fire on the models built to
+/// exercise them, and firing shrinks the graph's activation traffic.
+#[test]
+fn pass_pipeline_fires_and_reduces_traffic() {
+    let m = zoo::quantized_cnn(4, 42);
+    let fused = m.compile_with(true);
+    let plain = m.compile_with(false);
+    assert_eq!(fused.summary.elided_pads, 1);
+    assert_eq!(fused.summary.fused_relu, 3);
+    assert_eq!(fused.summary.hoisted_quant, 1);
+    assert!(fused.graph.nodes.len() < plain.graph.nodes.len());
+    assert!(
+        fused.activation_bytes(1) < plain.activation_bytes(1),
+        "passes should shrink activation traffic: {} vs {}",
+        fused.activation_bytes(1),
+        plain.activation_bytes(1)
+    );
+    // Fusion folds the ReLU element pass into the conv write, so the
+    // fused plan's counted FLOPs can only drop, never grow.
+    assert!(fused.flops(2) > 0 && fused.flops(2) <= plain.flops(2));
+
+    let s = zoo::simple_cnn(4, 42).compile_with(true);
+    assert_eq!(s.summary.fused_relu, 2);
+    assert_eq!(s.summary.elided_pads, 0);
+    assert_eq!(s.summary.hoisted_quant, 0);
+}

@@ -1,0 +1,95 @@
+//! Zoo-wide end-to-end coverage of the *layer* path (the graph-plan
+//! counterpart lives in `graph_parity.rs`): every model × every
+//! algorithm it supports agrees with the im2col+GEMM baseline within a
+//! post-softmax tolerance, the threading axis is bit-exact, and the
+//! reduced-precision serving dtypes stay close to f32 on every model.
+
+use swconv::kernels::ConvAlgo;
+use swconv::nn::{zoo, ExecCtx, Model};
+use swconv::tensor::{Dtype, Tensor};
+
+fn input_for(m: &Model, batch: usize, seed: u64) -> Tensor {
+    let dims: Vec<usize> = std::iter::once(batch).chain(m.input_shape.iter().copied()).collect();
+    Tensor::randn(&dims, seed)
+}
+
+/// Forcible algorithms per model (SlidingGeneric caps at k = 17, so
+/// the k = 21 net skips it; Direct — the O(k²)-per-output oracle —
+/// only runs on the small nets to keep debug runs sane).
+fn algos_for(name: &str) -> Vec<ConvAlgo> {
+    match name {
+        "simple-cnn" | "quantized-cnn" => vec![
+            ConvAlgo::Direct,
+            ConvAlgo::Sliding,
+            ConvAlgo::SlidingGeneric,
+            ConvAlgo::SlidingCompound,
+            ConvAlgo::Tuned,
+        ],
+        "large-filter-net" => vec![ConvAlgo::Sliding, ConvAlgo::SlidingCompound],
+        _ => vec![ConvAlgo::Sliding],
+    }
+}
+
+/// Every model × every supported algorithm agrees with the GEMM
+/// baseline after softmax (different summation orders, so a tolerance
+/// rather than bit equality across *algorithms*).
+#[test]
+fn every_model_agrees_with_the_gemm_baseline() {
+    for name in zoo::MODEL_NAMES {
+        let m = zoo::by_name(name, 4, 42).unwrap();
+        let x = input_for(&m, 1, 23);
+        let want = m.forward(&x, &ExecCtx::new(ConvAlgo::Im2colGemm));
+        for algo in algos_for(name) {
+            let got = m.forward(&x, &ExecCtx::new(algo));
+            let d = got.max_abs_diff(&want);
+            assert!(d < 1e-3, "{name} {algo:?}: diff {d}");
+        }
+    }
+}
+
+/// Splitting work across kernel threads must never change a single
+/// bit, on any model (each output row/plane keeps its serial
+/// accumulation order; only ownership is partitioned).
+#[test]
+fn thread_counts_are_bit_identical_on_every_model() {
+    for name in zoo::MODEL_NAMES {
+        let m = zoo::by_name(name, 4, 42).unwrap();
+        let x = input_for(&m, 2, 29);
+        for algo in [ConvAlgo::Sliding, ConvAlgo::Im2colGemm] {
+            let want = m.forward(&x, &ExecCtx::with_threads(algo, 1));
+            for threads in [2usize, 4] {
+                let got = m.forward(&x, &ExecCtx::with_threads(algo, threads));
+                assert_eq!(
+                    got.as_slice(),
+                    want.as_slice(),
+                    "{name} {algo:?} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+/// The bf16 and dynamic-int8 serving dtypes run every model end to end
+/// and land near the f32 output (post-softmax probabilities, so the
+/// scale is [0, 1] and a loose bound is meaningful — quantization
+/// noise compounds through the stack but must stay bounded).
+#[test]
+fn serving_dtypes_run_every_model_close_to_f32() {
+    for name in zoo::MODEL_NAMES {
+        let m = zoo::by_name(name, 4, 42).unwrap();
+        let x = input_for(&m, 1, 31);
+        let want = m.forward(&x, &ExecCtx::new(ConvAlgo::Sliding));
+        for dtype in [Dtype::Bf16, Dtype::I8] {
+            let ctx = ExecCtx::new(ConvAlgo::Sliding).with_dtype(dtype);
+            let y = m.forward(&x, &ctx);
+            assert_eq!(y.dims(), want.dims(), "{name} {dtype:?}");
+            let d = y.max_abs_diff(&want);
+            assert!(d < 0.25, "{name} {dtype:?}: post-softmax diff {d}");
+            // Rows still normalise: the reduced-precision path feeds a
+            // real probability vector out, not garbage that happens to
+            // be close element-wise.
+            let s: f32 = y.as_slice().iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "{name} {dtype:?}: row sum {s}");
+        }
+    }
+}
