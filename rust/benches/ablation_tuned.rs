@@ -41,16 +41,18 @@ fn main() {
         &["k", "paper GFLOP/s", "tuned GFLOP/s", "tuned/paper"],
     );
     let mut records = Vec::new();
+    // One ctx per series for the whole sweep: arena scratch warms once
+    // and is recycled across filter sizes and timed iterations.
+    let paper_ctx = ExecCtx::new(ConvAlgo::Sliding);
+    let tuned_ctx = ExecCtx::new(ConvAlgo::Tuned).with_profile(Arc::clone(&profile));
     for &k in &opts.ks {
         let case = ConvCase::square(C, HW.max(k + 1), k);
         let x = case.input();
         let w = case.weights();
         let flops = case.flops();
 
-        let paper_ctx = ExecCtx::new(ConvAlgo::Sliding);
         let paper = bench_quick(|| conv2d_ctx(&x, &w, None, &case.params, &paper_ctx))
             .gflops(flops);
-        let tuned_ctx = ExecCtx::new(ConvAlgo::Tuned).with_profile(Arc::clone(&profile));
         let tuned = bench_quick(|| conv2d_ctx(&x, &w, None, &case.params, &tuned_ctx))
             .gflops(flops);
 

@@ -14,16 +14,17 @@ fn main() {
         "Model forward (batch 4): GEMM vs Sliding",
         &["model", "MFLOP", "t_gemm", "t_sliding", "t_direct", "sliding_speedup"],
     );
+    // One ctx per algorithm for the whole bench: scratch arenas warm up
+    // once and are recycled across models and iterations (the serving
+    // configuration) instead of re-allocating per model.
+    let gemm = ExecCtx::new(ConvAlgo::Im2colGemm);
+    let sliding = ExecCtx::new(ConvAlgo::Sliding);
+    let direct = ExecCtx::new(ConvAlgo::Direct);
     for name in zoo::MODEL_NAMES {
         let m = zoo::by_name(name, 10, 42).unwrap();
         let mut shape = vec![4];
         shape.extend_from_slice(&m.input_shape);
         let x = Tensor::randn(&shape, 1);
-        // One ctx per algorithm so scratch buffers are reused across the
-        // bench's iterations (the serving configuration).
-        let gemm = ExecCtx::new(ConvAlgo::Im2colGemm);
-        let sliding = ExecCtx::new(ConvAlgo::Sliding);
-        let direct = ExecCtx::new(ConvAlgo::Direct);
         let tg = bench(|| m.forward(&x, &gemm)).median;
         let ts = bench(|| m.forward(&x, &sliding)).median;
         let td = bench(|| m.forward(&x, &direct)).median;

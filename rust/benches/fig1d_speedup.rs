@@ -18,15 +18,16 @@ fn main() {
         format!("1-D convolution speedup (cin={c_in}, cout={c_out}, L={l})"),
         &["k", "t_gemm_ms", "t_direct_ms", "t_sliding_ms", "speedup_vs_gemm", "speedup_vs_direct"],
     );
+    // One ctx per algorithm for the whole sweep: the timed iterations
+    // reuse arena scratch across filter sizes instead of paying a fresh
+    // column/pad allocation per k.
+    let gemm = ExecCtx::new(ConvAlgo::Im2colGemm);
+    let direct = ExecCtx::new(ConvAlgo::Direct);
+    let sliding = ExecCtx::new(ConvAlgo::Sliding);
     for &k in &ks {
         let x = Tensor::rand_uniform(&[c_in, l], -1.0, 1.0, k as u64);
         let w = Tensor::rand_uniform(&[c_out, c_in, k], -1.0, 1.0, 1 + k as u64);
         let p = Conv1dParams::default();
-        // One ctx per algorithm so the timed iterations reuse arena
-        // scratch instead of paying a fresh column/pad allocation each.
-        let gemm = ExecCtx::new(ConvAlgo::Im2colGemm);
-        let direct = ExecCtx::new(ConvAlgo::Direct);
-        let sliding = ExecCtx::new(ConvAlgo::Sliding);
         let tg = bench_quick(|| conv1d_ctx(&x, &w, None, &p, &gemm)).secs();
         let td = bench_quick(|| conv1d_ctx(&x, &w, None, &p, &direct)).secs();
         let ts = bench_quick(|| conv1d_ctx(&x, &w, None, &p, &sliding)).secs();

@@ -39,15 +39,17 @@ fn main() {
         &["plane", "scoped", "pooled", "pooled speedup"],
     );
     let mut records = Vec::new();
+    // One ctx per series for the whole sweep: the worker pool spawns
+    // once and the arenas warm once, instead of paying a fresh pool
+    // spawn + cold scratch per plane size.
+    let scoped_ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads).without_pool();
+    let pooled_ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads)
+        .with_pool(WorkerPool::new(threads.saturating_sub(1).max(1)));
     for &hw in &HWS {
         let case = ConvCase::square(C, hw, K);
         let flops = case.flops();
         let x = case.input();
         let w = case.weights();
-
-        let scoped_ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads).without_pool();
-        let pooled_ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads)
-            .with_pool(WorkerPool::new(threads.saturating_sub(1).max(1)));
 
         // The acceptance gate before any timing: pooled and scoped
         // execution are the same computation, bit for bit.

@@ -47,6 +47,11 @@ fn main() {
     );
     let mut records = Vec::new();
     let mut q8_wins_fig2_shape = true;
+    // One ctx per series for the whole sweep: arena scratch warms once
+    // and is recycled across filter sizes and timed iterations.
+    let f32_ctx = ExecCtx::new(ConvAlgo::Sliding);
+    let slide_ctx = ExecCtx::new(ConvAlgo::Sliding);
+    let gemm_ctx = ExecCtx::new(ConvAlgo::Im2colGemm);
     for &k in &KS {
         let case = ConvCase::square(C, HW, k);
         let flops = case.flops();
@@ -54,10 +59,6 @@ fn main() {
         let w = case.weights();
         let qx = quantize(&x, QuantParams::for_tensor(&x));
         let qw = quantize(&w, QuantParams::for_tensor(&w));
-
-        let f32_ctx = ExecCtx::new(ConvAlgo::Sliding);
-        let slide_ctx = ExecCtx::new(ConvAlgo::Sliding);
-        let gemm_ctx = ExecCtx::new(ConvAlgo::Im2colGemm);
 
         // Honesty check before timing: both int8 kernels must produce
         // the same raw accumulators bit for bit.

@@ -1,0 +1,142 @@
+//! BENCH — streaming inference latency: O(taps) incremental frame
+//! updates vs recomputing the full window every frame.
+//!
+//! The paper's closing argument is low-power/edge deployment; the
+//! streaming session is how the sliding-window kernels serve there —
+//! each new sample costs one window-kernel call per conv stage plus an
+//! O(1) running-sum update per pooling stage, instead of a full batch
+//! forward over the whole signal (what a naive streamer pays per
+//! frame). This bench feeds the `edge-audio` zoo model one sample at a
+//! time and reports per-frame p50/p99/mean for both modes, in f32 and
+//! int8.
+//!
+//! Parity is asserted before anything is timed: the streamed output
+//! must equal the batch path — bit for bit in i8 (edge-audio is
+//! avg-pool-free), within the session's derived bound in f32 — or the
+//! bench aborts. Timing a wrong answer is worse than no answer.
+//!
+//! Emits `target/reports/BENCH_stream.json` (schema:
+//! [`swconv::harness::report::StreamBenchRecord`]) with `bench` =
+//! `"stream"` and one `"incremental"`/`"full"` record pair per dtype.
+
+use std::time::{Duration, Instant};
+use swconv::harness::report::{dur, f3, write_stream_bench_json, StreamBenchRecord, Table};
+use swconv::kernels::ConvAlgo;
+use swconv::nn::{zoo, ExecCtx};
+use swconv::stream::StreamSession;
+use swconv::tensor::{Dtype, Tensor};
+
+const MODEL: &str = "edge-audio";
+/// Full-recompute samples: each one is a whole batch forward, so a
+/// handful gives a stable per-frame figure for the naive streamer.
+const FULL_REPS: usize = 48;
+
+fn pctl(sorted: &[Duration], p: f64) -> Duration {
+    sorted[((sorted.len() - 1) as f64 * p).round() as usize]
+}
+
+fn mean(xs: &[Duration]) -> Duration {
+    xs.iter().sum::<Duration>() / xs.len() as u32
+}
+
+fn main() {
+    let mut table = Table::new(
+        format!("streaming latency — {MODEL}, 1 thread: incremental advance vs full recompute"),
+        &["dtype", "mode", "p50", "p99", "mean", "speedup@p50"],
+    );
+    let mut records = Vec::new();
+    for dtype in [Dtype::F32, Dtype::I8] {
+        let model = zoo::by_name(MODEL, 10, 42).unwrap();
+        let c_in = model.input_shape[0];
+        let frames = model.input_shape[2];
+        let ctx = ExecCtx::new(ConvAlgo::Sliding).with_dtype(dtype);
+        let mut sess = StreamSession::new(&model, ctx).expect("edge-audio must stream");
+        let signal = Tensor::randn(&[1, c_in, 1, frames], 7);
+        let s = signal.as_slice();
+        let mut col = vec![0.0f32; c_in];
+
+        // Parity gate: streamed must equal the batch path before any
+        // number is trusted.
+        let mut streamed: Vec<Vec<f32>> = Vec::new();
+        for t in 0..frames {
+            for (c, v) in col.iter_mut().enumerate() {
+                *v = s[c * frames + t];
+            }
+            streamed.extend(sess.advance(&col));
+        }
+        streamed.extend(sess.flush());
+        let reference = sess.run_batch(&signal);
+        let t_out = reference.dim(3);
+        assert_eq!(streamed.len(), t_out, "{}: streamed column count", dtype.name());
+        let r = reference.as_slice();
+        let mut maxd = 0.0f32;
+        for (t, c2) in streamed.iter().enumerate() {
+            for (c, &v) in c2.iter().enumerate() {
+                maxd = maxd.max((v - r[c * t_out + t]).abs());
+            }
+        }
+        if sess.is_bit_exact() {
+            assert_eq!(maxd, 0.0, "{}: streamed != batch bit-for-bit", dtype.name());
+        } else {
+            let tol = sess.tolerance();
+            assert!(maxd <= tol, "{}: diff {maxd:.3e} > bound {tol:.3e}", dtype.name());
+        }
+
+        // Incremental: one advance per frame, timed individually.
+        sess.reset();
+        let mut inc = Vec::with_capacity(frames);
+        for t in 0..frames {
+            for (c, v) in col.iter_mut().enumerate() {
+                *v = s[c * frames + t];
+            }
+            let t0 = Instant::now();
+            let _ = sess.advance(&col);
+            inc.push(t0.elapsed());
+        }
+        inc.sort();
+
+        // Full recompute: the naive streamer pays one whole batch
+        // forward per frame; each sample here is that per-frame cost.
+        let mut full = Vec::with_capacity(FULL_REPS);
+        for _ in 0..FULL_REPS {
+            let t0 = Instant::now();
+            let _ = sess.run_batch(&signal);
+            full.push(t0.elapsed());
+        }
+        full.sort();
+
+        let speedup = pctl(&full, 0.5).as_secs_f64() / pctl(&inc, 0.5).as_secs_f64().max(1e-12);
+        assert!(
+            speedup > 1.0,
+            "{}: incremental p50 must beat full recompute (got {speedup:.2}x)",
+            dtype.name()
+        );
+        for (mode, lat, cell) in [
+            ("incremental", &inc, f3(speedup)),
+            ("full", &full, "1.000".to_string()),
+        ] {
+            table.row(vec![
+                dtype.name().into(),
+                mode.into(),
+                dur(pctl(lat, 0.50)),
+                dur(pctl(lat, 0.99)),
+                dur(mean(lat)),
+                cell,
+            ]);
+            records.push(StreamBenchRecord {
+                bench: "stream".into(),
+                model: MODEL.into(),
+                dtype: dtype.name().into(),
+                mode: mode.into(),
+                threads: 1,
+                frames: lat.len(),
+                p50_ns: pctl(lat, 0.50).as_secs_f64() * 1e9,
+                p99_ns: pctl(lat, 0.99).as_secs_f64() * 1e9,
+                mean_ns: mean(lat).as_secs_f64() * 1e9,
+            });
+        }
+    }
+    println!("{}", table.render());
+    write_stream_bench_json("target/reports/BENCH_stream.json", &records).expect("json");
+    eprintln!("wrote target/reports/BENCH_stream.json ({} records)", records.len());
+}

@@ -6,9 +6,11 @@ use crate::exec::{available_threads, CoreSet, WorkerPool};
 use crate::graph::CompiledPlan;
 use crate::nn::{ExecCtx, Model};
 use crate::runtime::Engine;
+use crate::stream::StreamSession;
 use crate::tensor::{Dtype, Tensor};
+use std::collections::HashMap;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How a serving tier places its replicas on cores. The replica is the
 /// pinning unit: replica `i` of `n` gets core slice `i` of the policy's
@@ -93,6 +95,27 @@ pub trait Backend {
     /// when the queue has been quiet for [`Backend::idle_tick_period`]
     /// — never concurrently with [`Backend::infer`]. Default: no-op.
     fn idle_tick(&mut self) {}
+    /// Open the streaming session `sid` — or, if `sid` already exists,
+    /// **replace** it with a fresh one (a re-open is always a clean
+    /// state reset, never a resume from stale rings). Default: streaming
+    /// unsupported.
+    fn open_stream(&mut self, _sid: u64) -> Result<()> {
+        bail!("backend '{}' does not support streaming", self.name())
+    }
+    /// Feed one frame to session `sid`; `Ok(Some(col))` when the frame
+    /// propagated to an output column, `Ok(None)` during window warmup
+    /// or stride gaps, `Err` when the session does not exist (e.g. it
+    /// was evicted as idle — the caller re-opens and replays or accepts
+    /// the gap). Default: streaming unsupported.
+    fn advance_stream(&mut self, _sid: u64, _frame: &[f32]) -> Result<Option<Vec<f32>>> {
+        bail!("backend '{}' does not support streaming", self.name())
+    }
+    /// Drop session `sid`'s state; unknown ids are a no-op.
+    fn close_stream(&mut self, _sid: u64) {}
+    /// Live streaming sessions held by this backend (introspection).
+    fn stream_count(&self) -> usize {
+        0
+    }
 }
 
 /// Native backend: a [`Model`] compiled to a [`CompiledPlan`] (typed
@@ -121,6 +144,12 @@ pub struct NativeBackend {
     ctx: ExecCtx,
     trim_after: Option<usize>,
     trim_idle: Option<Duration>,
+    /// Live streaming sessions keyed by id, with last-touch times for
+    /// idle eviction. Each session owns a private `ExecCtx` clone, so
+    /// its ring/arena state stays hot on this replica between frames —
+    /// the whole point of session affinity.
+    sessions: HashMap<u64, (StreamSession, Instant)>,
+    stream_idle: Option<Duration>,
 }
 
 impl NativeBackend {
@@ -142,7 +171,16 @@ impl NativeBackend {
         plan: Arc<CompiledPlan>,
         ctx: ExecCtx,
     ) -> Self {
-        NativeBackend { name: name.into(), model, plan, ctx, trim_after: None, trim_idle: None }
+        NativeBackend {
+            name: name.into(),
+            model,
+            plan,
+            ctx,
+            trim_after: None,
+            trim_idle: None,
+            sessions: HashMap::new(),
+            stream_idle: None,
+        }
     }
 
     /// Arena retention knob: after each batch, trim the ctx's scratch
@@ -163,6 +201,23 @@ impl NativeBackend {
     pub fn with_trim_idle(mut self, idle: Duration) -> Self {
         self.trim_idle = Some(idle);
         self
+    }
+
+    /// Streaming-session retention: evict any session untouched for
+    /// `idle` on the next [`Backend::idle_tick`], freeing its rings and
+    /// its private arena (see [`NativeBackend::stream_arena_bytes`]).
+    /// A later `advance_stream` on an evicted id errors, and the
+    /// coordinator re-opens a *fresh* session — state never silently
+    /// resumes. `None` (the default) keeps sessions until closed.
+    pub fn with_stream_idle(mut self, idle: Duration) -> Self {
+        self.stream_idle = Some(idle);
+        self
+    }
+
+    /// Bytes of scratch retained by live streaming sessions' private
+    /// arenas (idle eviction drives this back to zero).
+    pub fn stream_arena_bytes(&self) -> usize {
+        self.sessions.values().map(|(s, _)| s.ctx().arena_bytes()).sum()
     }
 
     /// The wrapped model.
@@ -219,16 +274,59 @@ impl Backend for NativeBackend {
     }
 
     fn idle_tick_period(&self) -> Option<Duration> {
-        // Poll at a quarter of the idle threshold (≥ 5 ms so a tiny
-        // threshold can't busy-spin the worker): the arena is released
-        // at most 1.25 × `idle` after the last request.
-        self.trim_idle.map(|d| (d / 4).max(Duration::from_millis(5)))
+        // Poll at a quarter of the tightest idle threshold (≥ 5 ms so a
+        // tiny threshold can't busy-spin the worker): the arena is
+        // released at most 1.25 × `idle` after the last request, and
+        // idle sessions are evicted on the same clock.
+        let d = match (self.trim_idle, self.stream_idle) {
+            (Some(a), Some(b)) => a.min(b),
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            (None, None) => return None,
+        };
+        Some((d / 4).max(Duration::from_millis(5)))
     }
 
     fn idle_tick(&mut self) {
         if let Some(idle) = self.trim_idle {
             self.ctx.trim_after_idle(idle);
         }
+        if let Some(idle) = self.stream_idle {
+            // Dropping a session drops its private ctx and with it every
+            // arena buffer the session kept hot.
+            self.sessions.retain(|_, (_, touched)| touched.elapsed() < idle);
+        }
+    }
+
+    fn open_stream(&mut self, sid: u64) -> Result<()> {
+        // A re-open of a live id *replaces* the session: always a clean
+        // reset, never a resume from whatever state was left behind.
+        let session = StreamSession::new(&self.model, self.ctx.clone())?;
+        self.sessions.insert(sid, (session, Instant::now()));
+        Ok(())
+    }
+
+    fn advance_stream(&mut self, sid: u64, frame: &[f32]) -> Result<Option<Vec<f32>>> {
+        let Some((session, touched)) = self.sessions.get_mut(&sid) else {
+            bail!("stream {sid} is not open on this replica (evicted or never opened)");
+        };
+        if frame.len() != session.in_channels() {
+            bail!(
+                "stream {sid}: frame has {} channels, model wants {}",
+                frame.len(),
+                session.in_channels()
+            );
+        }
+        *touched = Instant::now();
+        Ok(session.advance(frame))
+    }
+
+    fn close_stream(&mut self, sid: u64) {
+        self.sessions.remove(&sid);
+    }
+
+    fn stream_count(&self) -> usize {
+        self.sessions.len()
     }
 }
 
@@ -413,6 +511,40 @@ impl BackendSpec {
                 if let Some(idle) = trim_idle {
                     b = b.with_trim_idle(idle);
                 }
+                Ok(Box::new(b) as Box<dyn Backend>)
+            }),
+            profile: None,
+            dtype: Dtype::F32,
+            pinning: PinPolicy::None,
+        }
+    }
+
+    /// [`BackendSpec::native`] with streaming-session idle eviction:
+    /// every replica evicts sessions untouched for `stream_idle` on its
+    /// idle tick ([`NativeBackend::with_stream_idle`]). Use for tiers
+    /// that serve [`super::Coordinator::open_stream`] traffic.
+    pub fn native_streaming(
+        name: impl Into<String>,
+        model: Model,
+        ctx: ExecCtx,
+        stream_idle: Duration,
+    ) -> Self {
+        let name = name.into();
+        let item_shape = model.input_shape.clone();
+        let n2 = name.clone();
+        let plan = Arc::new(model.compile());
+        BackendSpec {
+            name,
+            item_shape,
+            replicas: 1,
+            factory: Arc::new(move |_replica| {
+                let b = NativeBackend::with_plan(
+                    n2.clone(),
+                    model.clone(),
+                    Arc::clone(&plan),
+                    ctx.clone(),
+                )
+                .with_stream_idle(stream_idle);
                 Ok(Box::new(b) as Box<dyn Backend>)
             }),
             profile: None,

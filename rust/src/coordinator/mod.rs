@@ -26,6 +26,13 @@
 //! installs it on every replica right after construction, so one cached
 //! `profile.json` makes the whole tier dispatch tuned.
 //!
+//! Tiers built with [`backend::BackendSpec::native_streaming`] also
+//! serve stateful streams ([`crate::stream::StreamSession`] per open
+//! stream): [`server::Coordinator::open_stream`] pins each session to
+//! one replica (affinity), frames bypass the batcher, idle sessions are
+//! evicted on the replica's housekeeping tick, and a broken replica's
+//! streams fail over to a healthy one with an explicit state reset.
+//!
 //! tokio is unavailable in this offline environment; the coordinator uses
 //! std threads + channels, which for a single-node serving driver is
 //! equivalent (documented in DESIGN.md §Substitutions).
@@ -39,5 +46,5 @@ pub mod shard;
 pub use backend::{Backend, BackendFactory, BackendSpec, NativeBackend, PinPolicy, PjrtBackend};
 pub use batcher::BatchPolicy;
 pub use metrics::{LatencyHistogram, MetricsSnapshot};
-pub use server::{Coordinator, InferError, InferResponse};
+pub use server::{Coordinator, InferError, InferResponse, StreamFrame, StreamHandle};
 pub use shard::ShardPlanner;

@@ -20,17 +20,29 @@
 //! The serving path is panic-proof: a panic inside `Backend::infer`
 //! answers the shard with [`InferError::Backend`] and the replica keeps
 //! serving later requests instead of wedging its queue.
+//!
+//! ## Streaming sessions
+//!
+//! Besides batches, a tier serves stateful streams
+//! ([`Coordinator::open_stream`] / [`Coordinator::advance_stream`]):
+//! stream commands bypass the batcher and go straight to the replica
+//! that owns the session — **session affinity** pins each stream to one
+//! replica so its ring buffers and arena scratch stay hot between
+//! frames. A replica that breaks (or is quarantined via
+//! [`Coordinator::quarantine_replica`]) has its streams failed over to
+//! a healthy replica with a **fresh session** and `reset = true` on the
+//! response — a stream never silently resumes from stale state.
 
 use super::backend::{Backend, BackendFactory, BackendSpec, PinPolicy};
 use super::batcher::{next_batch, BatchOutcome, BatchPolicy};
 use super::metrics::{LatencyHistogram, MetricsSnapshot};
 use super::shard::{ShardPlanner, BROKEN_REPLICA_BIAS};
 use crate::tensor::Tensor;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -86,9 +98,76 @@ struct Request {
     reply: Sender<InferResponse>,
 }
 
+/// Client handle to one open stream on a backend tier. Obtained from
+/// [`Coordinator::open_stream`]; pass it to
+/// [`Coordinator::advance_stream`] / [`Coordinator::close_stream`].
+#[derive(Debug)]
+pub struct StreamHandle {
+    backend: String,
+    sid: u64,
+}
+
+impl StreamHandle {
+    /// Coordinator-assigned stream id (unique within this coordinator).
+    pub fn id(&self) -> u64 {
+        self.sid
+    }
+
+    /// Name of the backend tier this stream is open on.
+    pub fn backend(&self) -> &str {
+        &self.backend
+    }
+}
+
+/// One frame's outcome on a coordinator-managed stream.
+#[derive(Debug)]
+pub struct StreamFrame {
+    /// The column this frame produced, if the model emitted one
+    /// (streaming models emit nothing during window warm-up).
+    pub output: Option<Vec<f32>>,
+    /// `true` when the session was rebuilt before serving this frame —
+    /// replica failover or idle eviction. The session state restarted
+    /// from scratch (warm-up replays), so earlier frames of this stream
+    /// did **not** contribute to `output`; callers that need exact
+    /// continuity must re-send their window.
+    pub reset: bool,
+}
+
+/// Messages a replica worker consumes: planner-formed batch shards,
+/// or stream commands routed directly by the coordinator (bypassing
+/// the batcher — streams are latency-bound and already placed).
+enum ReplicaMsg {
+    Shard(Vec<Request>),
+    Stream(StreamCmd),
+}
+
+/// One stream operation, answered on its own reply channel.
+struct StreamCmd {
+    sid: u64,
+    op: StreamOp,
+    reply: Sender<StreamReply>,
+}
+
+enum StreamOp {
+    Open,
+    Advance(Vec<f32>),
+    Close,
+}
+
+enum StreamReply {
+    /// Operation succeeded; `Advance` carries the emitted column.
+    Done(Option<Vec<f32>>),
+    /// Session-level failure (unknown/evicted sid, bad frame, backend
+    /// without streaming support). The replica itself is fine.
+    Err(String),
+    /// Replica-level failure (factory never produced a backend): no
+    /// stream can ever be served here, fail over.
+    Broken(String),
+}
+
 /// Planner-side handle to one replica worker.
 struct ReplicaHandle {
-    queue: Sender<Vec<Request>>,
+    queue: Sender<ReplicaMsg>,
     /// Shards dispatched but not yet finished (queue depth); the shard
     /// planner treats a replica with zero as idle. A replica whose
     /// factory failed — or whose thread died — carries
@@ -103,6 +182,20 @@ struct Worker {
     item_shape: Vec<usize>,
     /// One histogram per replica, index-aligned with the replica threads.
     replica_metrics: Vec<Arc<LatencyHistogram>>,
+    /// Direct per-replica senders for stream commands (same channels the
+    /// planner shards into, so batch and stream work interleave on one
+    /// queue and never race the backend).
+    replica_queues: Vec<Sender<ReplicaMsg>>,
+    /// The planner's queue-depth counters, shared here so stream
+    /// placement can skip tombstoned replicas (depth ≥
+    /// [`BROKEN_REPLICA_BIAS`]).
+    replica_load: Vec<Arc<AtomicUsize>>,
+    /// Stream affinity: sid → owning replica. A stream stays on its
+    /// replica for life unless that replica breaks.
+    streams: Mutex<HashMap<u64, usize>>,
+    /// Replicas quarantined for stream placement (observed broken, or
+    /// marked via [`Coordinator::quarantine_replica`]).
+    dead: Mutex<HashSet<usize>>,
     /// Planner thread + replica threads.
     joins: Vec<JoinHandle<()>>,
 }
@@ -127,10 +220,12 @@ impl Coordinator {
             let replicas = replicas.max(1);
             let (tx, rx) = channel::<Request>();
             let mut replica_metrics = Vec::with_capacity(replicas);
+            let mut replica_queues = Vec::with_capacity(replicas);
+            let mut replica_load = Vec::with_capacity(replicas);
             let mut joins = Vec::with_capacity(replicas + 1);
             let mut handles = Vec::with_capacity(replicas);
             for r in 0..replicas {
-                let (stx, srx) = channel::<Vec<Request>>();
+                let (stx, srx) = channel::<ReplicaMsg>();
                 let metrics = Arc::new(LatencyHistogram::new());
                 let in_flight = Arc::new(AtomicUsize::new(0));
                 let m2 = Arc::clone(&metrics);
@@ -147,6 +242,8 @@ impl Coordinator {
                     .spawn(move || replica_main(&f2, r, p2, dtype, pin, &srx, &m2, &if2))
                     .expect("spawn replica worker");
                 replica_metrics.push(metrics);
+                replica_queues.push(stx.clone());
+                replica_load.push(Arc::clone(&in_flight));
                 joins.push(join);
                 handles.push(ReplicaHandle { queue: stx, in_flight });
             }
@@ -167,7 +264,19 @@ impl Coordinator {
                 })
                 .expect("spawn batch planner");
             joins.push(join);
-            workers.insert(name, Worker { queue: tx, item_shape, replica_metrics, joins });
+            workers.insert(
+                name,
+                Worker {
+                    queue: tx,
+                    item_shape,
+                    replica_metrics,
+                    replica_queues,
+                    replica_load,
+                    streams: Mutex::new(HashMap::new()),
+                    dead: Mutex::new(HashSet::new()),
+                    joins,
+                },
+            );
         }
         Coordinator { workers, next_id: AtomicU64::new(0) }
     }
@@ -215,6 +324,157 @@ impl Coordinator {
         rx.recv().map_err(|_| InferError::Shutdown)
     }
 
+    /// Open a stateful stream on a backend tier. The stream is placed on
+    /// the healthy replica currently owning the fewest streams and stays
+    /// there (**session affinity**) — its ring buffers and arena scratch
+    /// live on one thread for the stream's whole life. Fails if the
+    /// backend doesn't support streaming (see
+    /// [`super::backend::BackendSpec::native_streaming`]) or no healthy
+    /// replica remains.
+    pub fn open_stream(&self, backend: &str) -> Result<StreamHandle, InferError> {
+        let w = self
+            .workers
+            .get(backend)
+            .ok_or_else(|| InferError::UnknownBackend(backend.to_string()))?;
+        let sid = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let replica = self.place_stream(w, sid)?;
+        w.streams.lock().unwrap().insert(sid, replica);
+        Ok(StreamHandle { backend: backend.to_string(), sid })
+    }
+
+    /// Feed one frame (`in_channels` samples) to an open stream and
+    /// block for the outcome. If the stream's session was lost — its
+    /// replica broke or was quarantined, or the session was idle-evicted
+    /// — a fresh session is opened (on a healthy replica) and this frame
+    /// is served from it with `reset = true`; a stream never silently
+    /// continues from stale state.
+    pub fn advance_stream(
+        &self,
+        h: &StreamHandle,
+        frame: &[f32],
+    ) -> Result<StreamFrame, InferError> {
+        let w = self
+            .workers
+            .get(&h.backend)
+            .ok_or_else(|| InferError::UnknownBackend(h.backend.clone()))?;
+        let replica = *w.streams.lock().unwrap().get(&h.sid).ok_or_else(|| {
+            InferError::Backend(format!("stream {} is not open on '{}'", h.sid, h.backend))
+        })?;
+        if !replica_healthy(w, replica) {
+            // The owner was tombstoned since the last frame: fail over
+            // before even trying it.
+            return self.fail_over(w, h.sid, frame);
+        }
+        match stream_rpc(w, replica, h.sid, StreamOp::Advance(frame.to_vec())) {
+            Ok(StreamReply::Done(output)) => Ok(StreamFrame { output, reset: false }),
+            Ok(StreamReply::Err(_)) => {
+                // Session-level loss (typically idle eviction). The
+                // replica is fine: rebuild the session in place and
+                // replay this frame on the fresh state.
+                match stream_rpc(w, replica, h.sid, StreamOp::Open) {
+                    Ok(StreamReply::Done(_)) => {
+                        match stream_rpc(w, replica, h.sid, StreamOp::Advance(frame.to_vec())) {
+                            Ok(StreamReply::Done(output)) => {
+                                Ok(StreamFrame { output, reset: true })
+                            }
+                            Ok(StreamReply::Err(e)) => Err(InferError::Backend(e)),
+                            Ok(StreamReply::Broken(_)) | Err(_) => {
+                                w.dead.lock().unwrap().insert(replica);
+                                self.fail_over(w, h.sid, frame)
+                            }
+                        }
+                    }
+                    Ok(StreamReply::Err(e)) => Err(InferError::Backend(e)),
+                    Ok(StreamReply::Broken(_)) | Err(_) => {
+                        w.dead.lock().unwrap().insert(replica);
+                        self.fail_over(w, h.sid, frame)
+                    }
+                }
+            }
+            Ok(StreamReply::Broken(_)) | Err(_) => {
+                // Replica-level loss: quarantine it for streams and move
+                // the session elsewhere.
+                w.dead.lock().unwrap().insert(replica);
+                self.fail_over(w, h.sid, frame)
+            }
+        }
+    }
+
+    /// Close a stream, freeing its session state on the owning replica.
+    /// Best-effort and idempotent.
+    pub fn close_stream(&self, h: &StreamHandle) {
+        let Some(w) = self.workers.get(&h.backend) else { return };
+        let Some(replica) = w.streams.lock().unwrap().remove(&h.sid) else { return };
+        let (reply, _keep) = channel();
+        let _ = w.replica_queues[replica].send(ReplicaMsg::Stream(StreamCmd {
+            sid: h.sid,
+            op: StreamOp::Close,
+            reply,
+        }));
+    }
+
+    /// Which replica currently owns a stream (`None` if closed). Exposed
+    /// so affinity and failover are observable by tests and operators.
+    pub fn stream_replica(&self, h: &StreamHandle) -> Option<usize> {
+        self.workers.get(&h.backend)?.streams.lock().unwrap().get(&h.sid).copied()
+    }
+
+    /// Quarantine one replica for **stream placement**: existing streams
+    /// fail over (with a state reset) on their next frame and no new
+    /// stream lands there. The batch path is not affected — batch
+    /// routing is governed by the planner's queue-depth bias. Returns
+    /// `false` for an unknown backend or replica index.
+    pub fn quarantine_replica(&self, backend: &str, replica: usize) -> bool {
+        match self.workers.get(backend) {
+            Some(w) if replica < w.replica_queues.len() => {
+                w.dead.lock().unwrap().insert(replica);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Place a new session: try healthy replicas in ascending
+    /// stream-count order, opening on the first that accepts. A replica
+    /// that proves broken is quarantined and the next is tried; a
+    /// session-level refusal (backend without streaming support) aborts
+    /// immediately — every replica runs the same backend.
+    fn place_stream(&self, w: &Worker, sid: u64) -> Result<usize, InferError> {
+        let mut counts = vec![0usize; w.replica_queues.len()];
+        for (_, &r) in w.streams.lock().unwrap().iter() {
+            counts[r] += 1;
+        }
+        let mut order: Vec<usize> = (0..w.replica_queues.len()).collect();
+        order.sort_by_key(|&r| (counts[r], r));
+        for r in order {
+            if !replica_healthy(w, r) {
+                continue;
+            }
+            match stream_rpc(w, r, sid, StreamOp::Open) {
+                Ok(StreamReply::Done(_)) => return Ok(r),
+                Ok(StreamReply::Err(e)) => return Err(InferError::Backend(e)),
+                Ok(StreamReply::Broken(_)) | Err(_) => {
+                    w.dead.lock().unwrap().insert(r);
+                }
+            }
+        }
+        Err(InferError::Backend("no healthy replica accepts streams".to_string()))
+    }
+
+    /// Move a stream to a fresh session on a healthy replica and serve
+    /// `frame` from it. The returned frame has `reset = true`: the new
+    /// session replays its warm-up, so prior frames are gone by design
+    /// rather than silently half-remembered.
+    fn fail_over(&self, w: &Worker, sid: u64, frame: &[f32]) -> Result<StreamFrame, InferError> {
+        let replica = self.place_stream(w, sid)?;
+        w.streams.lock().unwrap().insert(sid, replica);
+        match stream_rpc(w, replica, sid, StreamOp::Advance(frame.to_vec())) {
+            Ok(StreamReply::Done(output)) => Ok(StreamFrame { output, reset: true }),
+            Ok(StreamReply::Err(e)) | Ok(StreamReply::Broken(e)) => Err(InferError::Backend(e)),
+            Err(_) => Err(InferError::Shutdown),
+        }
+    }
+
     /// Aggregated metrics snapshot for one backend (all replicas merged;
     /// `batches` counts executed shards).
     pub fn metrics(&self, backend: &str) -> Option<MetricsSnapshot> {
@@ -245,6 +505,29 @@ impl Coordinator {
     }
 }
 
+/// A replica is eligible for streams unless quarantined or tombstoned
+/// by the planner (queue-depth bias set when its factory failed or its
+/// thread died).
+fn replica_healthy(w: &Worker, replica: usize) -> bool {
+    !w.dead.lock().unwrap().contains(&replica)
+        && w.replica_load[replica].load(Ordering::Acquire) < BROKEN_REPLICA_BIAS
+}
+
+/// Send one stream command to a replica and block for its reply.
+/// `Err(())` means the channel itself failed (replica thread gone).
+fn stream_rpc(
+    w: &Worker,
+    replica: usize,
+    sid: u64,
+    op: StreamOp,
+) -> Result<StreamReply, ()> {
+    let (reply, rx) = channel();
+    w.replica_queues[replica]
+        .send(ReplicaMsg::Stream(StreamCmd { sid, op, reply }))
+        .map_err(|_| ())?;
+    rx.recv().map_err(|_| ())
+}
+
 /// Per-backend batch planner: form batches, split them across replicas.
 /// Exits (dropping the replica queues, which stops the replicas) when
 /// the router side closes.
@@ -265,13 +548,14 @@ fn planner_loop(rx: &Receiver<Request>, policy: BatchPolicy, replicas: Vec<Repli
             let shard = std::mem::replace(&mut batch, rest);
             let h = &replicas[replica];
             h.in_flight.fetch_add(1, Ordering::AcqRel);
-            if let Err(e) = h.queue.send(shard) {
+            if let Err(e) = h.queue.send(ReplicaMsg::Shard(shard)) {
                 // Replica thread is gone (a catastrophic panic outside
                 // the guarded region): answer rather than drop, and
                 // tombstone the replica so the planner stops routing to
                 // it. The guard keeps repeated failures from wrapping
                 // the counter; only this planner thread writes the bias.
-                for r in e.0 {
+                let ReplicaMsg::Shard(shard) = e.0 else { unreachable!() };
+                for r in shard {
                     let latency = r.submitted.elapsed();
                     let _ = r.reply.send(InferResponse {
                         id: r.id,
@@ -300,7 +584,7 @@ fn replica_main(
     profile: Option<Arc<crate::autotune::DispatchProfile>>,
     dtype: crate::tensor::Dtype,
     pin: Option<crate::exec::CoreSet>,
-    rx: &Receiver<Vec<Request>>,
+    rx: &Receiver<ReplicaMsg>,
     metrics: &LatencyHistogram,
     in_flight: &AtomicUsize,
 ) {
@@ -330,52 +614,104 @@ fn replica_main(
     }
 }
 
-/// Construction failed: answer every shard with the error until close.
-/// The bias marks this replica dead so the planner routes around it
-/// while any healthy replica remains.
-fn answer_all_with_error(rx: &Receiver<Vec<Request>>, in_flight: &AtomicUsize, msg: &str) {
+/// Construction failed: answer every shard with the error — and every
+/// stream command with [`StreamReply::Broken`], so the coordinator
+/// fails its streams over — until close. The bias marks this replica
+/// dead so the planner routes around it while any healthy replica
+/// remains.
+fn answer_all_with_error(rx: &Receiver<ReplicaMsg>, in_flight: &AtomicUsize, msg: &str) {
     in_flight.fetch_add(BROKEN_REPLICA_BIAS, Ordering::AcqRel);
-    while let Ok(shard) = rx.recv() {
-        for r in shard {
-            let _ = r.reply.send(InferResponse {
-                id: r.id,
-                output: Err(InferError::Backend(msg.to_string())),
-                latency: r.submitted.elapsed(),
-            });
+    while let Ok(msg_in) = rx.recv() {
+        match msg_in {
+            ReplicaMsg::Shard(shard) => {
+                for r in shard {
+                    let _ = r.reply.send(InferResponse {
+                        id: r.id,
+                        output: Err(InferError::Backend(msg.to_string())),
+                        latency: r.submitted.elapsed(),
+                    });
+                }
+                in_flight.fetch_sub(1, Ordering::AcqRel);
+            }
+            ReplicaMsg::Stream(cmd) => {
+                let _ = cmd.reply.send(StreamReply::Broken(msg.to_string()));
+            }
         }
-        in_flight.fetch_sub(1, Ordering::AcqRel);
     }
 }
 
 fn replica_loop(
     backend: &mut dyn Backend,
-    rx: &Receiver<Vec<Request>>,
+    rx: &Receiver<ReplicaMsg>,
     metrics: &LatencyHistogram,
     in_flight: &AtomicUsize,
 ) {
     let item_shape = backend.item_shape().to_vec();
     let item: usize = item_shape.iter().product();
-    // Backends with housekeeping (e.g. NativeBackend's trim-after-idle)
-    // ask for periodic wakeups while the queue is quiet; everyone else
-    // blocks on the queue with no timer churn.
+    let mut serve = |backend: &mut dyn Backend, msg: ReplicaMsg| match msg {
+        ReplicaMsg::Shard(shard) => {
+            run_shard(backend, &item_shape, item, shard, metrics);
+            in_flight.fetch_sub(1, Ordering::AcqRel);
+        }
+        ReplicaMsg::Stream(cmd) => run_stream_cmd(backend, cmd),
+    };
+    // Backends with housekeeping (e.g. NativeBackend's trim-after-idle
+    // and stream idle eviction) ask for periodic wakeups while the queue
+    // is quiet; everyone else blocks on the queue with no timer churn.
     match backend.idle_tick_period() {
         None => {
-            while let Ok(shard) = rx.recv() {
-                run_shard(backend, &item_shape, item, shard, metrics);
-                in_flight.fetch_sub(1, Ordering::AcqRel);
+            while let Ok(msg) = rx.recv() {
+                serve(backend, msg);
             }
         }
         Some(tick) => loop {
             match rx.recv_timeout(tick) {
-                Ok(shard) => {
-                    run_shard(backend, &item_shape, item, shard, metrics);
-                    in_flight.fetch_sub(1, Ordering::AcqRel);
-                }
+                Ok(msg) => serve(backend, msg),
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => backend.idle_tick(),
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
             }
         },
     }
+}
+
+/// Execute one stream command on the replica thread, panic-proof like
+/// the batch path: a panicking `advance` closes the session (so the
+/// stream can never resume from a half-updated ring) and answers with
+/// the panic message instead of wedging the replica.
+fn run_stream_cmd(backend: &mut dyn Backend, cmd: StreamCmd) {
+    let StreamCmd { sid, op, reply } = cmd;
+    let out = match op {
+        StreamOp::Open => {
+            match catch_unwind(AssertUnwindSafe(|| backend.open_stream(sid))) {
+                Ok(Ok(())) => StreamReply::Done(None),
+                Ok(Err(e)) => StreamReply::Err(e.to_string()),
+                Err(p) => StreamReply::Err(format!(
+                    "backend '{}' panicked opening stream {sid}: {}",
+                    backend.name(),
+                    panic_message(&p)
+                )),
+            }
+        }
+        StreamOp::Advance(frame) => {
+            match catch_unwind(AssertUnwindSafe(|| backend.advance_stream(sid, &frame))) {
+                Ok(Ok(output)) => StreamReply::Done(output),
+                Ok(Err(e)) => StreamReply::Err(e.to_string()),
+                Err(p) => {
+                    backend.close_stream(sid);
+                    StreamReply::Err(format!(
+                        "backend '{}' panicked on stream {sid}: {}",
+                        backend.name(),
+                        panic_message(&p)
+                    ))
+                }
+            }
+        }
+        StreamOp::Close => {
+            backend.close_stream(sid);
+            StreamReply::Done(None)
+        }
+    };
+    let _ = reply.send(out);
 }
 
 /// Execute one sub-batch end to end: stack, infer (panic-proof),

@@ -229,6 +229,74 @@ pub fn write_graph_bench_json(
     Ok(())
 }
 
+/// One streaming-inference benchmark measurement — one element of the
+/// `BENCH_stream.json` schema, produced by `benches/stream_latency.rs`.
+///
+/// ## `BENCH_stream.json` schema
+///
+/// A JSON **array**, one object per (model, dtype, mode) triple:
+///
+/// ```json
+/// [
+///   {"bench": "stream", "model": "edge-audio", "dtype": "f32",
+///    "mode": "incremental", "threads": 1, "frames": 512,
+///    "p50_ns": 4321.0, "p99_ns": 9876.0, "mean_ns": 5000.0}
+/// ]
+/// ```
+///
+/// `mode` is `"incremental"` (one `StreamSession::advance` per frame —
+/// O(taps) work) or `"full"` (the naive streamer: recompute the whole
+/// window with the batch path on every frame). All latencies are
+/// per-frame, nanoseconds; comparing the two modes' rows of the same
+/// (model, dtype) gives the streaming speedup the session exists for.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamBenchRecord {
+    /// Series id, `"stream"`.
+    pub bench: String,
+    /// Zoo model name.
+    pub model: String,
+    /// Serving dtype name (`"f32"`, `"bf16"`, `"i8"`).
+    pub dtype: String,
+    /// `"incremental"` or `"full"`.
+    pub mode: String,
+    /// Worker threads the session ran with.
+    pub threads: usize,
+    /// Frames fed in this measurement.
+    pub frames: usize,
+    /// Median per-frame latency, nanoseconds.
+    pub p50_ns: f64,
+    /// 99th-percentile per-frame latency, nanoseconds.
+    pub p99_ns: f64,
+    /// Mean per-frame latency, nanoseconds.
+    pub mean_ns: f64,
+}
+
+/// Write streaming bench records as a JSON array (the
+/// `BENCH_stream.json` writer — same conventions as
+/// [`write_bench_json`]: program-generated identifiers, no escaping).
+pub fn write_stream_bench_json(
+    path: impl AsRef<Path>,
+    records: &[StreamBenchRecord],
+) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "[")?;
+    for (i, r) in records.iter().enumerate() {
+        let sep = if i + 1 == records.len() { "" } else { "," };
+        writeln!(
+            f,
+            "  {{\"bench\": \"{}\", \"model\": \"{}\", \"dtype\": \"{}\", \
+             \"mode\": \"{}\", \"threads\": {}, \"frames\": {}, \
+             \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"mean_ns\": {:.1}}}{sep}",
+            r.bench, r.model, r.dtype, r.mode, r.threads, r.frames, r.p50_ns, r.p99_ns, r.mean_ns
+        )?;
+    }
+    writeln!(f, "]")?;
+    Ok(())
+}
+
 /// Format a float with 3 significant decimals for table cells.
 pub fn f3(v: f64) -> String {
     format!("{v:.3}")
@@ -350,6 +418,47 @@ mod tests {
         assert_eq!(arr[0].get("mode").and_then(|v| v.as_str()), Some("fused"));
         assert_eq!(arr[0].get("activation_bytes").and_then(|v| v.as_usize()), Some(123456));
         assert_eq!(arr[1].get("model").and_then(|v| v.as_str()), Some("quantized-cnn"));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn stream_bench_json_roundtrips_through_parser() {
+        let recs = vec![
+            StreamBenchRecord {
+                bench: "stream".into(),
+                model: "edge-audio".into(),
+                dtype: "f32".into(),
+                mode: "incremental".into(),
+                threads: 1,
+                frames: 512,
+                p50_ns: 4321.0,
+                p99_ns: 9876.0,
+                mean_ns: 5000.0,
+            },
+            StreamBenchRecord {
+                bench: "stream".into(),
+                model: "edge-audio".into(),
+                dtype: "f32".into(),
+                mode: "full".into(),
+                threads: 1,
+                frames: 512,
+                p50_ns: 87654.0,
+                p99_ns: 99999.0,
+                mean_ns: 90000.0,
+            },
+        ];
+        let p = std::env::temp_dir().join("swconv_test_stream_bench.json");
+        write_stream_bench_json(&p, &recs).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let j = crate::runtime::json::Json::parse(&text).expect("valid JSON");
+        let arr = match &j {
+            crate::runtime::json::Json::Arr(a) => a,
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("mode").and_then(|v| v.as_str()), Some("incremental"));
+        assert_eq!(arr[0].get("frames").and_then(|v| v.as_usize()), Some(512));
+        assert_eq!(arr[1].get("mode").and_then(|v| v.as_str()), Some("full"));
         let _ = std::fs::remove_file(p);
     }
 

@@ -58,6 +58,13 @@
 //!   optimized [`graph::CompiledPlan`] executes bit-identically to the
 //!   layer-by-layer path (`SWCONV_NO_FUSE=1` / `--no-fuse` disables the
 //!   passes).
+//! * [`stream`] — streaming inference: mirrored ring buffers and
+//!   [`stream::StreamSession`], which advances a compiled model one
+//!   frame at a time in O(taps) per sample (conv windows run the batch
+//!   kernels on the live ring window; avg-pool uses the
+//!   sliding-window-sum recurrence), with a batch reference and a
+//!   derived error bound so streamed == batch is checkable — bit-exact
+//!   in i8, within `StreamSession::tolerance` in f32/bf16.
 //! * [`harness`] — workload generators, parameter sweeps, the
 //!   Advisor-style roofline model, and the report builders that regenerate
 //!   the paper's Fig. 1 (speedup) and Fig. 2 (throughput).
@@ -93,6 +100,7 @@ pub mod kernels;
 pub mod autotune;
 pub mod graph;
 pub mod nn;
+pub mod stream;
 pub mod harness;
 pub mod runtime;
 pub mod coordinator;

@@ -9,6 +9,9 @@
 //!   them as `target/autotune/profile.json`
 //! * `run-model`   — one forward pass of a zoo model, timed per algorithm
 //! * `serve`       — demo serving run through the coordinator
+//! * `stream`      — frame-by-frame streaming inference (O(taps) per
+//!   sample): per-frame latency vs full recompute, parity against the
+//!   batch path, and stateful sessions through the coordinator
 //! * `summary`     — layer/FLOP summary of a zoo model
 //! * `compile`     — lower a zoo model into the graph IR and show the
 //!   before/after of the pass pipeline (fusion, pad elision, quantize
@@ -44,6 +47,7 @@ use swconv::kernels::{conv2d, Conv2dParams, ConvAlgo};
 use swconv::nn::{zoo, ExecCtx};
 use swconv::runtime::{engine::default_artifacts_dir, Engine};
 use swconv::simd::IsaLevel;
+use swconv::stream::StreamSession;
 use swconv::tensor::{Dtype, Tensor};
 
 /// Flags that take no value (present = on).
@@ -547,6 +551,157 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `stream` — frame-by-frame inference over an audio-style zoo model.
+/// Feeds a synthetic signal one sample at a time through a
+/// [`StreamSession`] (O(taps) work per frame), times each `advance`,
+/// checks the streamed output against the batch forward (bit-exact in
+/// i8 for avg-pool-free models, within the session's derived bound in
+/// f32/bf16), then demos stateful serving through the coordinator:
+/// N concurrent streams pinned to replicas by session affinity.
+fn cmd_stream(args: &Args) -> Result<()> {
+    let name = args.get("model").unwrap_or("edge-audio");
+    let frames = args.usize("frames", 512)?.max(1);
+    let n_streams = args.usize("streams", 2)?.max(1);
+    let replicas = match args.usize("replicas", 2)? {
+        0 => swconv::exec::available_threads(),
+        r => r,
+    };
+    let threads = parse_threads(args)?;
+    let dtype = parse_dtype(args)?;
+    let algo = match args.get("algo") {
+        None | Some("sliding") => ConvAlgo::Sliding,
+        Some("gemm") => ConvAlgo::Im2colGemm,
+        Some(other) => bail!("unknown --algo '{other}' (expected sliding or gemm)"),
+    };
+    apply_pin_current(args)?;
+    let model = zoo::by_name(name, 10, 42)
+        .ok_or_else(|| anyhow!("unknown model '{name}' (try {:?})", zoo::MODEL_NAMES))?;
+    let c_in = model.input_shape[0];
+
+    // Incremental path: one session, one frame per advance.
+    let ctx = ExecCtx::with_threads(algo, threads).with_dtype(dtype);
+    let mut sess = StreamSession::new(&model, ctx).map_err(|e| anyhow!("{e}"))?;
+    let signal = Tensor::randn(&[1, c_in, 1, frames], 7);
+    let s = signal.as_slice();
+    let mut col = vec![0.0f32; c_in];
+    let mut lat = Vec::with_capacity(frames);
+    let mut streamed: Vec<Vec<f32>> = Vec::new();
+    for t in 0..frames {
+        for (c, v) in col.iter_mut().enumerate() {
+            *v = s[c * frames + t];
+        }
+        let t0 = Instant::now();
+        let out = sess.advance(&col);
+        lat.push(t0.elapsed());
+        streamed.extend(out);
+    }
+    streamed.extend(sess.flush());
+
+    // Parity + the naive alternative: recomputing the whole signal
+    // every frame costs one full batch forward per sample.
+    let reference = sess.run_batch(&signal);
+    let t0 = Instant::now();
+    let _ = sess.run_batch(&signal);
+    let full = t0.elapsed();
+    let t_out = reference.dim(3);
+    if streamed.len() != t_out {
+        bail!("streamed {} columns, batch produced {t_out}", streamed.len());
+    }
+    let r = reference.as_slice();
+    let mut maxd = 0.0f32;
+    for (t, c2) in streamed.iter().enumerate() {
+        for (c, &v) in c2.iter().enumerate() {
+            maxd = maxd.max((v - r[c * t_out + t]).abs());
+        }
+    }
+    let tol = sess.tolerance();
+    let exact = sess.is_bit_exact();
+    if (exact && maxd != 0.0) || maxd > tol {
+        bail!("streamed output diverged from batch: max|diff| = {maxd:.3e} (bound {tol:.3e})");
+    }
+
+    lat.sort();
+    let pctl = |p: f64| lat[((lat.len() - 1) as f64 * p).round() as usize];
+    let mean = lat.iter().sum::<Duration>() / lat.len() as u32;
+    let mut t = Table::new(
+        format!(
+            "stream — {name}, {frames} frames x {c_in} ch, {threads} thread(s), {} ({})",
+            dtype.name(),
+            algo.name()
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec!["frames in / columns out".into(), format!("{frames} / {t_out}")]);
+    t.row(vec!["per-frame p50".into(), dur(pctl(0.50))]);
+    t.row(vec!["per-frame p99".into(), dur(pctl(0.99))]);
+    t.row(vec!["per-frame mean".into(), dur(mean)]);
+    t.row(vec!["full recompute (per frame)".into(), dur(full)]);
+    t.row(vec![
+        "speedup vs full recompute".into(),
+        f3(full.as_secs_f64() / pctl(0.50).as_secs_f64().max(1e-12)),
+    ]);
+    t.row(vec![
+        "parity vs batch".into(),
+        if exact {
+            format!("bit-exact (max|diff| = {maxd:.1e})")
+        } else {
+            format!("max|diff| = {maxd:.2e} (bound {tol:.2e})")
+        },
+    ]);
+    println!("{}", t.render());
+
+    // Stateful serving: N concurrent streams on a replicated tier.
+    // open_stream places each on the least-loaded replica and keeps it
+    // there (session affinity); frames bypass the batcher.
+    let tier = BackendSpec::native_streaming(
+        "stream",
+        zoo::by_name(name, 10, 42).unwrap(),
+        ExecCtx::with_threads(algo, threads),
+        Duration::from_secs(30),
+    )
+    .with_dtype(dtype)
+    .with_replicas(replicas);
+    let coord = Coordinator::new(
+        vec![tier],
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+    );
+    let handles = (0..n_streams)
+        .map(|_| coord.open_stream("stream"))
+        .collect::<std::result::Result<Vec<_>, _>>()
+        .map_err(|e| anyhow!("{e}"))?;
+    let serve_frames = frames.min(128);
+    let mut served = vec![0usize; n_streams];
+    for t in 0..serve_frames {
+        for (c, v) in col.iter_mut().enumerate() {
+            *v = s[c * frames + t];
+        }
+        for (i, h) in handles.iter().enumerate() {
+            let f = coord.advance_stream(h, &col).map_err(|e| anyhow!("{e}"))?;
+            if f.reset {
+                bail!("stream {i} was reset mid-run (unexpected failover)");
+            }
+            if f.output.is_some() {
+                served[i] += 1;
+            }
+        }
+    }
+    println!(
+        "coordinator: {n_streams} stream(s) x {serve_frames} frames over {replicas} replica(s)"
+    );
+    for (i, h) in handles.iter().enumerate() {
+        println!(
+            "  stream {i}: replica {}, {} column(s) emitted",
+            coord
+                .stream_replica(h)
+                .map_or("-".to_string(), |r| r.to_string()),
+            served[i]
+        );
+        coord.close_stream(h);
+    }
+    coord.shutdown();
+    Ok(())
+}
+
 fn cmd_artifacts_check(args: &Args) -> Result<()> {
     let dir = args
         .get("dir")
@@ -602,6 +757,9 @@ COMMANDS
                    [--threads N] [--replicas N] [--trim-mb N] [--trim-idle-ms MS]
                    [--profile PATH] [--dtype f32|bf16|i8] [--pin CORES|auto] [--no-pool]
                    [--no-fuse]
+  stream           [--model edge-audio] [--frames N] [--streams N] [--replicas N]
+                   [--threads N] [--algo sliding|gemm] [--dtype f32|bf16|i8]
+                   [--pin CORES] [--no-pool] [--no-fuse]
   artifacts-check  [--dir artifacts]
 
   --threads 0 means \"use all hardware threads\"; the default 1 matches
@@ -622,6 +780,17 @@ COMMANDS
   — skips every pass, so the plan reproduces the layer stack verbatim;
   results are bit-identical either way (see `cargo bench --bench
   graph_fusion`, which emits BENCH_graph.json).
+
+  stream runs frame-by-frame inference: a StreamSession keeps per-layer
+  ring buffers so each new sample costs O(taps) instead of a full
+  recompute, and the output is checked against the batch path every run
+  (bit-exact in i8 for avg-pool-free models like edge-audio, within a
+  derived error bound in f32/bf16). The coordinator demo opens
+  --streams sessions on --replicas replicas: each stream is pinned to
+  one replica (session affinity), frames bypass the batcher, idle
+  sessions are evicted, and a broken replica's streams fail over with
+  an explicit state reset. See also `cargo bench --bench
+  stream_latency`, which emits BENCH_stream.json.
 
   Kernel threads run on a persistent, work-stealing worker pool per
   execution context (one spawn at startup instead of one per parallel
@@ -695,6 +864,7 @@ fn main() -> Result<()> {
         "summary" => cmd_summary(&args),
         "compile" => cmd_compile(&args),
         "serve" => cmd_serve(&args),
+        "stream" => cmd_stream(&args),
         "artifacts-check" => cmd_artifacts_check(&args),
         "help" | "--help" | "-h" => {
             help();

@@ -12,6 +12,8 @@
 //! * [`quantized_cnn`] — pre-quantized int8 convolutions (per-channel
 //!   weight scales) with an explicit pad layer: the model the graph
 //!   compiler's pad-elision and quantize-boundary passes bite on.
+//! * [`edge_audio`] — height-1 conv/pool chain over a mono sample
+//!   stream: the streaming-inference workload (`stream` module/CLI).
 
 use super::layers::{
     AvgPool2d, Conv2d, DepthwiseSeparable, Fire, Flatten, GlobalAvgPool, Linear, MaxPool2d, Pad2d,
@@ -22,8 +24,14 @@ use crate::kernels::{Conv2dParams, PoolParams};
 use crate::tensor::Tensor;
 
 /// All zoo model names, as accepted by [`by_name`].
-pub const MODEL_NAMES: [&str; 5] =
-    ["simple-cnn", "squeezenet-lite", "mobilenet-lite", "large-filter-net", "quantized-cnn"];
+pub const MODEL_NAMES: [&str; 6] = [
+    "simple-cnn",
+    "squeezenet-lite",
+    "mobilenet-lite",
+    "large-filter-net",
+    "quantized-cnn",
+    "edge-audio",
+];
 
 /// Look a model up by CLI name (`classes` output classes, deterministic
 /// weights from `seed`).
@@ -34,6 +42,7 @@ pub fn by_name(name: &str, classes: usize, seed: u64) -> Option<Model> {
         "mobilenet-lite" => Some(mobilenet_lite(classes, seed)),
         "large-filter-net" => Some(large_filter_net(classes, seed)),
         "quantized-cnn" => Some(quantized_cnn(classes, seed)),
+        "edge-audio" => Some(edge_audio(classes, seed)),
         _ => None,
     }
 }
@@ -186,6 +195,45 @@ pub fn quantized_cnn(classes: usize, seed: u64) -> Model {
         .push(Softmax)
 }
 
+/// `edge-audio`: a 1-D (height-1) conv/ReLU/max-pool stack over a
+/// 512-sample mono frame — the streaming workload
+/// (`stream::StreamSession`, the `stream` CLI subcommand, the
+/// `stream_latency` bench). Deliberately **avg-pool-free**: conv
+/// windows and max have position-independent / order-free per-element
+/// forms, so the int8 streamed path stays bit-exact against the batch
+/// reference (avg-pool's running-sum recurrence reassociates f32 sums;
+/// see `stream::session`). Weights are He-scaled so activations stay
+/// O(1) down the chain. Output is a per-frame class logit track
+/// `[classes, 1, 64]` (8× downsampled), not a softmax head — streaming
+/// emits one logit column at a time.
+pub fn edge_audio(classes: usize, seed: u64) -> Model {
+    let conv = |c_out: usize, c_in: usize, k: usize, sd: u64| {
+        let scale = (2.0 / (c_in * k) as f32).sqrt();
+        Tensor::randn(&[c_out, c_in, 1, k], sd).map(|v| v * scale)
+    };
+    let bias = |n: usize, sd: u64| Tensor::rand_uniform(&[n], -0.1, 0.1, sd).into_vec();
+    Model::new("edge-audio", &[1, 1, 512])
+        .push(Conv2d {
+            w: conv(8, 1, 9, seed),
+            bias: bias(8, seed + 100),
+            params: Conv2dParams { stride: (1, 1), pad: (0, 4), groups: 1 },
+        })
+        .push(ReLU)
+        .push(MaxPool2d(PoolParams { k: (1, 2), stride: (1, 2), pad: (0, 0) }))
+        .push(Conv2d {
+            w: conv(16, 8, 5, seed + 1),
+            bias: bias(16, seed + 101),
+            params: Conv2dParams { stride: (1, 2), pad: (0, 2), groups: 1 },
+        })
+        .push(ReLU)
+        .push(MaxPool2d(PoolParams { k: (1, 2), stride: (1, 2), pad: (0, 0) }))
+        .push(Conv2d {
+            w: conv(classes, 16, 3, seed + 2),
+            bias: bias(classes, seed + 102),
+            params: Conv2dParams { stride: (1, 1), pad: (0, 1), groups: 1 },
+        })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,6 +255,7 @@ mod tests {
         assert_eq!(mobilenet_lite(5, 1).out_shape(3), vec![3, 5]);
         assert_eq!(large_filter_net(7, 1).out_shape(1), vec![1, 7]);
         assert_eq!(quantized_cnn(6, 1).out_shape(2), vec![2, 6]);
+        assert_eq!(edge_audio(10, 1).out_shape(2), vec![2, 10, 1, 64]);
     }
 
     #[test]

@@ -1,0 +1,25 @@
+//! Streaming (frame-by-frame) inference.
+//!
+//! The batch path computes a whole signal at once; this module keeps
+//! per-layer state so a model can consume a signal one sample at a
+//! time in O(taps) per frame — the low-power/edge scenario the paper
+//! targets. Two pieces:
+//!
+//! - [`ring`]: mirrored ring buffers whose most-recent-`w` window is
+//!   always a contiguous slice, so the batch conv kernels can run
+//!   directly on the live window without copies or wrap branches.
+//! - [`session`]: [`StreamSession`], which compiles a model's graph
+//!   once, validates it has a streaming form, and advances it frame by
+//!   frame — with a batch reference (`run_batch`) and a derived error
+//!   bound (`tolerance`) so equivalence with the batch path is
+//!   checkable, not assumed (bit-for-bit in i8; see the session docs).
+//!
+//! The coordinator builds on this for stateful serving: sessions are
+//! pinned to one replica so their rings and arena scratch stay hot
+//! (see `coordinator`).
+
+pub mod ring;
+pub mod session;
+
+pub use ring::Ring;
+pub use session::StreamSession;

@@ -1,0 +1,148 @@
+//! Mirrored ring buffers for streaming input planes.
+//!
+//! A [`Ring`] holds the last `cap` samples of a multi-channel signal.
+//! Each channel row is stored **twice** (`2 * cap` slots, the second
+//! half mirroring the first), so the window of the most recent `w ≤
+//! cap` samples is always a *contiguous* slice — the conv/pool window
+//! kernels can borrow it directly with no copy and no wrap-around
+//! branch. Sample number `p` (0-based since the last reset) lives at
+//! `p % cap` and at `p % cap + cap`; the newest sample is therefore
+//! always at a mirrored index `≥ cap`, and the `w` samples ending at
+//! it occupy `[idx + 1 - w, idx + 1)` with `idx ≥ cap > w - 1`.
+
+/// Fixed-capacity multi-channel ring buffer with mirrored storage.
+///
+/// Generic over the element so the f32 activation planes and the i8
+/// code planes of quantized streams share one implementation.
+#[derive(Clone, Debug)]
+pub struct Ring<T> {
+    channels: usize,
+    cap: usize,
+    /// Samples pushed since the last [`Ring::reset`].
+    pushed: usize,
+    /// `channels` rows of `2 * cap` mirrored slots.
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Ring<T> {
+    /// Empty ring holding up to `cap` samples of `channels` channels.
+    pub fn new(channels: usize, cap: usize) -> Self {
+        assert!(channels > 0 && cap > 0, "degenerate ring {channels}x{cap}");
+        Ring { channels, cap, pushed: 0, data: vec![T::default(); channels * 2 * cap] }
+    }
+
+    /// Number of channels per sample.
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    /// Maximum window width this ring can serve.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Samples pushed since the last reset (not clamped to `cap`).
+    pub fn pushed(&self) -> usize {
+        self.pushed
+    }
+
+    /// Samples currently available: `min(pushed, cap)`.
+    pub fn len(&self) -> usize {
+        self.pushed.min(self.cap)
+    }
+
+    /// True until the first push after construction or reset.
+    pub fn is_empty(&self) -> bool {
+        self.pushed == 0
+    }
+
+    /// Append one sample (`col[c]` is channel `c`'s new value).
+    pub fn push(&mut self, col: &[T]) {
+        assert_eq!(col.len(), self.channels, "ring push channel mismatch");
+        let slot = self.pushed % self.cap;
+        for (ch, &v) in col.iter().enumerate() {
+            let row = ch * 2 * self.cap;
+            self.data[row + slot] = v;
+            self.data[row + slot + self.cap] = v;
+        }
+        self.pushed += 1;
+    }
+
+    /// Append one sample with the same value in every channel
+    /// (zero-padding columns, without a scratch buffer).
+    pub fn push_splat(&mut self, v: T) {
+        let slot = self.pushed % self.cap;
+        for ch in 0..self.channels {
+            let row = ch * 2 * self.cap;
+            self.data[row + slot] = v;
+            self.data[row + slot + self.cap] = v;
+        }
+        self.pushed += 1;
+    }
+
+    /// The most recent `w` samples of channel `ch`, oldest first, as a
+    /// contiguous slice. Requires `w ≤ len()`.
+    pub fn window(&self, ch: usize, w: usize) -> &[T] {
+        assert!(w <= self.len(), "window {w} wider than {} buffered samples", self.len());
+        assert!(ch < self.channels, "channel {ch} out of {}", self.channels);
+        let row = ch * 2 * self.cap;
+        // Mirrored index of the newest sample, always ≥ cap.
+        let idx = (self.pushed - 1) % self.cap + self.cap;
+        &self.data[row + idx + 1 - w..row + idx + 1]
+    }
+
+    /// Forget all samples (storage is retained and re-zeroed lazily by
+    /// subsequent pushes; `window` can never observe stale slots
+    /// because `len()` gates it).
+    pub fn reset(&mut self) {
+        self.pushed = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// From-scratch reference: the last `w` of an ever-growing log.
+    fn naive_window(log: &[Vec<f32>], ch: usize, w: usize) -> Vec<f32> {
+        log[log.len() - w..].iter().map(|col| col[ch]).collect()
+    }
+
+    #[test]
+    fn window_is_contiguous_across_wraparound() {
+        let mut r = Ring::<f32>::new(3, 5);
+        let mut log: Vec<Vec<f32>> = Vec::new();
+        for p in 0..23 {
+            let col: Vec<f32> = (0..3).map(|c| (p * 10 + c) as f32).collect();
+            r.push(&col);
+            log.push(col);
+            for w in 1..=r.len() {
+                for ch in 0..3 {
+                    assert_eq!(r.window(ch, w), naive_window(&log, ch, w), "p={p} w={w} ch={ch}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn splat_and_reset() {
+        let mut r = Ring::<i8>::new(2, 4);
+        r.push_splat(7);
+        r.push(&[1, 2]);
+        assert_eq!(r.window(0, 2), &[7, 1]);
+        assert_eq!(r.window(1, 2), &[7, 2]);
+        r.reset();
+        assert!(r.is_empty());
+        r.push(&[3, 4]);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.window(1, 1), &[4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "wider than")]
+    fn overwide_window_panics() {
+        let mut r = Ring::<f32>::new(1, 4);
+        r.push(&[1.0]);
+        r.window(0, 2);
+    }
+}

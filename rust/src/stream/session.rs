@@ -1,0 +1,872 @@
+//! Frame-by-frame inference sessions over a compiled model plan.
+//!
+//! A [`StreamSession`] compiles a model's graph once, checks that it is
+//! a linear chain of 1-D (height-1) convolutions, pools, and ReLUs, and
+//! then advances it one *frame* (one input column across channels) at a
+//! time. Each stage keeps a mirrored ring of its most recent input
+//! columns (see [`super::ring`]), so a new frame costs O(taps) per
+//! stage instead of a full-plane recompute:
+//!
+//! - **Conv stages** run the regular batch conv kernel on the ring
+//!   window `[1, c_in, 1, k] → [1, c_out, 1, 1]`. That *is* the
+//!   O(taps) incremental update, and because the kernels accumulate
+//!   each output element over its taps in a position-independent
+//!   order, it reproduces the batch kernel's summation tree.
+//! - **Average pooling** uses the sliding-window-sum recurrence
+//!   `sum[i] = sum[i-1] − x[i-1] + x[i+w-1]` (arXiv 2305.16513): O(1)
+//!   per frame. The recurrence reassociates the f32 sum, so avg-pool
+//!   outputs match the batch path within a *derived* tolerance, never
+//!   bit-for-bit — [`StreamSession::tolerance`] computes the bound.
+//! - **Max pooling and ReLU** have exact windowed/pointwise forms
+//!   (max and clamp are order-free), so they add no error.
+//!
+//! ## Int8 exactness
+//!
+//! Dynamic per-tensor activation scales (`QuantParams::for_tensor` over
+//! the whole plane, what the batch executor does) are ill-defined for a
+//! causal stream — frame `t` cannot see frame `t+1` before choosing its
+//! scale. A session therefore **freezes** each conv stage's activation
+//! scale at construction from a calibration pass, and its
+//! [`StreamSession::run_batch`] reference applies the same frozen
+//! scales to the full plane with the real batch kernels. Quantization
+//! is pointwise and the i32 accumulation is order-independent, so the
+//! streamed i8 output equals `run_batch` **bit-for-bit**, provided the
+//! chain contains no average pooling (which runs in f32 and
+//! reassociates). In f32 mode `run_batch` performs exactly the kernel
+//! calls of the compiled plan, so it is bitwise-equal to `plan.run`.
+
+use super::ring::Ring;
+use crate::error::Result;
+use crate::exec::ExecCtx;
+use crate::graph::Op;
+use crate::kernels::{
+    avg_pool2d_ctx, conv2d_bf16_epi_ctx, conv2d_epi_ctx, conv2d_q8_raw_routed_ctx,
+    dequantize_conv_acc, max_pool2d_ctx, Conv2dParams, Epilogue, PoolParams,
+};
+use crate::nn::Model;
+use crate::tensor::{quantize, Dtype, QuantParams, Tensor, TensorT, WeightScales};
+
+/// Seed of the default calibration signal used by [`StreamSession::new`].
+const CALIB_SEED: u64 = 0x57E4_A0D1_0;
+
+/// f32 machine epsilon with headroom, used by the tolerance derivation.
+const EPS: f32 = 1.2e-7;
+
+/// Per-stage compute kind plus the state that kind needs.
+enum StageKernel {
+    /// f32 convolution (also used for the `I32` dtype, like the plan).
+    ConvF32 {
+        /// Weights `[c_out, c_in, 1, k]`.
+        w: Tensor,
+        /// Bias `[c_out]`.
+        bias: Vec<f32>,
+        /// Fused ReLU on the output write.
+        relu: bool,
+    },
+    /// bf16 convolution (f32 ring; the kernel converts internally).
+    ConvBf16 {
+        /// Weights `[c_out, c_in, 1, k]`.
+        w: Tensor,
+        /// Bias `[c_out]`.
+        bias: Vec<f32>,
+        /// Fused ReLU on the output write.
+        relu: bool,
+    },
+    /// Int8 convolution over a ring of i8 *codes*. Used both for
+    /// `QuantConv2d` nodes (any dtype) and for plain `Conv2d` nodes
+    /// when the session dtype is `I8`.
+    ConvI8 {
+        /// Weight codes `[c_out, c_in, 1, k]`.
+        qw: TensorT<i8>,
+        /// Weight scales.
+        wq: WeightScales,
+        /// Activation scale, frozen at calibration.
+        xq: QuantParams,
+        /// Bias `[c_out]` in f32.
+        bias: Vec<f32>,
+        /// Fused ReLU on the output write.
+        relu: bool,
+        /// Ring of quantized input columns.
+        ring_q: Ring<i8>,
+        /// Reused scratch for quantizing one incoming column.
+        qcol: Vec<i8>,
+    },
+    /// Windowed max (exact: max is order-free).
+    MaxPool,
+    /// Running-sum recurrence state, one sum per channel.
+    AvgPool {
+        /// Sum of the last `min(pushed, k)` columns, per channel.
+        sums: Vec<f32>,
+    },
+    /// Pointwise `max(v, 0)`; no ring, no state.
+    Relu,
+}
+
+/// One layer of the streaming chain: geometry + ring + kernel state.
+struct Stage {
+    kernel: StageKernel,
+    /// Window width along the signal (1 for pointwise stages).
+    k: usize,
+    /// Stride along the signal.
+    stride: usize,
+    /// Zero padding on each end of the signal (convs only).
+    pad: usize,
+    c_in: usize,
+    c_out: usize,
+    /// f32 input ring; `None` for pointwise and i8-code stages.
+    ring_f: Option<Ring<f32>>,
+    /// Columns pushed since reset (left padding included).
+    pushed: usize,
+    /// Output columns emitted since reset.
+    emitted: usize,
+    /// Max |input value| seen (seeded from calibration), for the
+    /// tolerance derivation.
+    act_max: f32,
+    /// Calibration-time `act_max`, restored by reset.
+    act_max_seed: f32,
+}
+
+impl Stage {
+    /// Batch reference for this stage: the same kernel the compiled
+    /// plan would run, with the frozen i8 activation scale where the
+    /// plan would re-derive one per plane.
+    fn run_batch(&self, x: &Tensor, ctx: &ExecCtx) -> Tensor {
+        let p = Conv2dParams { stride: (1, self.stride), pad: (0, self.pad), groups: 1 };
+        let pool = PoolParams { k: (1, self.k), stride: (1, self.stride), pad: (0, 0) };
+        match &self.kernel {
+            StageKernel::ConvF32 { w, bias, relu } => {
+                let epi = Epilogue::from_bias(Some(bias)).with_relu(*relu);
+                conv2d_epi_ctx(x, w, epi, &p, ctx)
+            }
+            StageKernel::ConvBf16 { w, bias, relu } => {
+                conv2d_bf16_epi_ctx(x, w, Some(bias), *relu, &p, ctx)
+            }
+            StageKernel::ConvI8 { qw, wq, xq, bias, relu, .. } => {
+                let qx = quantize(x, *xq);
+                let raw = conv2d_q8_raw_routed_ctx(&qx, qw, &p, ctx);
+                dequantize_conv_acc(&raw, *xq, wq, Some(bias), *relu)
+            }
+            StageKernel::MaxPool => max_pool2d_ctx(x, &pool, ctx),
+            StageKernel::AvgPool { .. } => avg_pool2d_ctx(x, &pool, ctx),
+            StageKernel::Relu => x.map(|v| v.max(0.0)),
+        }
+    }
+
+    /// Push one input column; returns the output column if this push
+    /// completes a window (at most one emission per push).
+    fn push(&mut self, col: &[f32], ctx: &ExecCtx) -> Option<Vec<f32>> {
+        debug_assert_eq!(col.len(), self.c_in, "stage fed {} of {} channels", col.len(), self.c_in);
+        if let StageKernel::Relu = self.kernel {
+            self.pushed += 1;
+            self.emitted += 1;
+            return Some(col.iter().map(|v| v.max(0.0)).collect());
+        }
+        for &v in col {
+            self.act_max = self.act_max.max(v.abs());
+        }
+        match &mut self.kernel {
+            StageKernel::ConvI8 { xq, ring_q, qcol, .. } => {
+                qcol.clear();
+                qcol.extend(col.iter().map(|&v| xq.quantize_value(v)));
+                ring_q.push(qcol);
+            }
+            StageKernel::AvgPool { sums } => {
+                let ring = self.ring_f.as_mut().expect("avg-pool stage has an f32 ring");
+                ring.push(col);
+                for (c, s) in sums.iter_mut().enumerate() {
+                    *s += col[c];
+                    if ring.pushed() > self.k {
+                        // The column that just left the k-wide window
+                        // is the oldest of the last k+1 (ring cap).
+                        *s -= ring.window(c, self.k + 1)[0];
+                    }
+                }
+            }
+            _ => self.ring_f.as_mut().expect("windowed stage has an f32 ring").push(col),
+        }
+        self.pushed += 1;
+        if self.pushed < self.k || (self.pushed - self.k) % self.stride != 0 {
+            return None;
+        }
+        self.emitted += 1;
+        Some(self.emit(ctx))
+    }
+
+    /// Push one all-zero column (padding), without a caller buffer.
+    fn push_zero(&mut self, ctx: &ExecCtx) -> Option<Vec<f32>> {
+        let zeros = vec![0.0f32; self.c_in];
+        self.push(&zeros, ctx)
+    }
+
+    /// Compute the output column for the window just completed.
+    fn emit(&mut self, ctx: &ExecCtx) -> Vec<f32> {
+        let unit = Conv2dParams::default();
+        match &self.kernel {
+            StageKernel::ConvF32 { w, bias, relu } => {
+                let x = self.window_tensor(ctx);
+                let epi = Epilogue::from_bias(Some(bias)).with_relu(*relu);
+                let y = conv2d_epi_ctx(&x, w, epi, &unit, ctx);
+                ctx.put(x.into_vec());
+                y.into_vec()
+            }
+            StageKernel::ConvBf16 { w, bias, relu } => {
+                let x = self.window_tensor(ctx);
+                let y = conv2d_bf16_epi_ctx(&x, w, Some(bias), *relu, &unit, ctx);
+                ctx.put(x.into_vec());
+                y.into_vec()
+            }
+            StageKernel::ConvI8 { qw, wq, xq, bias, relu, ring_q, .. } => {
+                let mut buf = ctx.take_elems_unfilled::<i8>(self.c_in * self.k);
+                for c in 0..self.c_in {
+                    buf[c * self.k..(c + 1) * self.k].copy_from_slice(ring_q.window(c, self.k));
+                }
+                let qx = TensorT::from_vec(buf, &[1, self.c_in, 1, self.k]);
+                let raw = conv2d_q8_raw_routed_ctx(&qx, qw, &unit, ctx);
+                ctx.put_elems(qx.into_vec());
+                dequantize_conv_acc(&raw, *xq, wq, Some(bias), *relu).into_vec()
+            }
+            StageKernel::MaxPool => {
+                let ring = self.ring_f.as_ref().expect("max-pool stage has an f32 ring");
+                (0..self.c_in)
+                    .map(|c| {
+                        ring.window(c, self.k).iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v))
+                    })
+                    .collect()
+            }
+            StageKernel::AvgPool { sums } => {
+                let inv = 1.0 / self.k as f32;
+                sums.iter().map(|&s| s * inv).collect()
+            }
+            StageKernel::Relu => unreachable!("relu emits inline"),
+        }
+    }
+
+    /// Borrow the last `k` columns from the f32 ring into an arena
+    /// buffer shaped `[1, c_in, 1, k]` for the window kernels.
+    fn window_tensor(&self, ctx: &ExecCtx) -> Tensor {
+        let ring = self.ring_f.as_ref().expect("conv stage has an f32 ring");
+        let mut buf = ctx.take_unfilled(self.c_in * self.k);
+        for c in 0..self.c_in {
+            buf[c * self.k..(c + 1) * self.k].copy_from_slice(ring.window(c, self.k));
+        }
+        Tensor::from_vec(buf, &[1, self.c_in, 1, self.k])
+    }
+
+    /// Drop buffered columns and re-preload the left padding.
+    fn reset(&mut self) {
+        if let Some(r) = self.ring_f.as_mut() {
+            r.reset();
+        }
+        match &mut self.kernel {
+            StageKernel::ConvI8 { ring_q, .. } => ring_q.reset(),
+            StageKernel::AvgPool { sums } => sums.fill(0.0),
+            _ => {}
+        }
+        for _ in 0..self.pad {
+            if let Some(r) = self.ring_f.as_mut() {
+                r.push_splat(0.0);
+            }
+            if let StageKernel::ConvI8 { ring_q, .. } = &mut self.kernel {
+                // Symmetric quantization: real 0.0 is exactly code 0,
+                // so zero-padding is the same column in both domains.
+                ring_q.push_splat(0);
+            }
+        }
+        self.pushed = self.pad;
+        self.emitted = 0;
+        self.act_max = self.act_max_seed;
+    }
+
+    /// Largest per-output-channel L1 norm of an f32 filter.
+    fn l1_max(w: &Tensor) -> f32 {
+        let taps = w.numel() / w.dim(0);
+        w.as_slice()
+            .chunks(taps)
+            .map(|ch| ch.iter().map(|v| v.abs()).sum::<f32>())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Largest per-output-channel L1 norm of a dequantized i8 filter.
+    fn l1_deq_max(qw: &TensorT<i8>, wq: &WeightScales) -> f32 {
+        let taps = qw.numel() / qw.dim(0);
+        qw.as_slice()
+            .chunks(taps)
+            .enumerate()
+            .map(|(co, ch)| {
+                wq.scale(co) * ch.iter().map(|&c| (c as i32).unsigned_abs()).sum::<u32>() as f32
+            })
+            .fold(0.0f32, f32::max)
+    }
+}
+
+/// A stateful, frame-by-frame inference session over one model.
+///
+/// Construct with [`StreamSession::new`] (or
+/// [`StreamSession::with_calibration`] to control the i8 scale-freezing
+/// input), feed frames with [`StreamSession::advance`], and finish the
+/// signal with [`StreamSession::flush`]. [`StreamSession::run_batch`]
+/// is the one-shot batch reference the streamed outputs are verified
+/// against, and [`StreamSession::tolerance`] derives the comparison
+/// bound (0 ulps in i8 without avg-pool; a composed f32 bound
+/// otherwise).
+pub struct StreamSession {
+    name: String,
+    ctx: ExecCtx,
+    dtype: Dtype,
+    stages: Vec<Stage>,
+    in_channels: usize,
+    input_len: usize,
+    frames_in: usize,
+    flushed: bool,
+}
+
+impl StreamSession {
+    /// Build a session for `model`, calibrating i8 activation scales
+    /// (and tolerance bookkeeping) on a fixed-seed Gaussian signal of
+    /// the model's nominal input length.
+    ///
+    /// Fails if the model is not a linear chain of height-1 conv /
+    /// pool / ReLU stages (see module docs).
+    pub fn new(model: &Model, ctx: ExecCtx) -> Result<Self> {
+        if model.input_shape.len() != 3 || model.input_shape[1] != 1 {
+            crate::bail!(
+                "streaming needs a [c, 1, l] input shape, got {:?}",
+                model.input_shape
+            );
+        }
+        let dims = [1, model.input_shape[0], 1, model.input_shape[2]];
+        Self::with_calibration(model, ctx, &Tensor::randn(&dims, CALIB_SEED))
+    }
+
+    /// Like [`StreamSession::new`] with an explicit calibration signal
+    /// `[1, c, 1, l]` (the range it covers becomes the frozen i8
+    /// activation range; values outside it saturate identically on the
+    /// streamed and batch paths).
+    pub fn with_calibration(model: &Model, ctx: ExecCtx, calib: &Tensor) -> Result<Self> {
+        if model.input_shape.len() != 3 || model.input_shape[1] != 1 {
+            crate::bail!(
+                "streaming needs a [c, 1, l] input shape, got {:?}",
+                model.input_shape
+            );
+        }
+        let in_channels = model.input_shape[0];
+        let input_len = model.input_shape[2];
+        if calib.rank() != 4 || calib.dim(0) != 1 || calib.dim(1) != in_channels || calib.dim(2) != 1
+        {
+            crate::bail!(
+                "calibration signal must be [1, {in_channels}, 1, l], got {:?}",
+                calib.dims()
+            );
+        }
+        let plan = model.compile();
+        let g = &plan.graph;
+        if g.nodes.is_empty() || !matches!(g.nodes[0].op, Op::Input) {
+            crate::bail!("compiled graph has no input node");
+        }
+        if g.output != g.nodes.len() - 1 {
+            crate::bail!("streaming requires the last node to be the output");
+        }
+        let dtype = ctx.dtype();
+        let mut stages = Vec::with_capacity(g.nodes.len() - 1);
+        let mut channels = in_channels;
+        for (id, node) in g.nodes.iter().enumerate().skip(1) {
+            if node.inputs != [id - 1] {
+                crate::bail!("streaming requires a linear chain; node {id} branches");
+            }
+            if node.quant_out {
+                crate::bail!("hoisted quantize boundaries have no streaming form yet");
+            }
+            if node.shape.len() == 3 && node.shape[1] != 1 {
+                crate::bail!("stage {id} leaves the height-1 signal domain: {:?}", node.shape);
+            }
+            let stage = match &node.op {
+                Op::Conv2d { w, bias, params } => {
+                    conv_stage(w, bias, params, node.fused_relu, dtype, channels)?
+                }
+                Op::QuantConv2d { qw, wq, bias, params } => {
+                    quant_conv_stage(qw, wq, bias, params, node.fused_relu, channels)?
+                }
+                Op::Relu => Stage {
+                    kernel: StageKernel::Relu,
+                    k: 1,
+                    stride: 1,
+                    pad: 0,
+                    c_in: channels,
+                    c_out: channels,
+                    ring_f: None,
+                    pushed: 0,
+                    emitted: 0,
+                    act_max: 0.0,
+                    act_max_seed: 0.0,
+                },
+                Op::MaxPool2d(p) => pool_stage(p, channels, /*avg=*/ false)?,
+                Op::AvgPool2d(p) => pool_stage(p, channels, /*avg=*/ true)?,
+                other => crate::bail!("op `{}` (node {id}) has no streaming form", other.name()),
+            };
+            channels = stage.c_out;
+            stages.push(stage);
+        }
+        if stages.is_empty() {
+            crate::bail!("model has no layers to stream");
+        }
+        let mut s = StreamSession {
+            name: g.name.clone(),
+            ctx,
+            dtype,
+            stages,
+            in_channels,
+            input_len,
+            frames_in: 0,
+            flushed: false,
+        };
+        s.calibrate(calib);
+        s.reset();
+        Ok(s)
+    }
+
+    /// Freeze i8 activation scales and seed `act_max` per stage from
+    /// one batch pass over the calibration signal.
+    fn calibrate(&mut self, calib: &Tensor) {
+        let mut x = calib.clone();
+        for stage in &mut self.stages {
+            stage.act_max_seed = x.max_abs();
+            if let StageKernel::ConvI8 { xq, .. } = &mut stage.kernel {
+                *xq = QuantParams::for_tensor(&x);
+            }
+            x = stage.run_batch(&x, &self.ctx);
+        }
+    }
+
+    /// Feed one frame (`frame[c]` is channel `c`'s new sample) and run
+    /// every stage whose window completes. Returns the model's output
+    /// column when the frame propagates all the way through, `None`
+    /// while windows are still warming up or strides swallow it.
+    pub fn advance(&mut self, frame: &[f32]) -> Option<Vec<f32>> {
+        assert!(!self.flushed, "advance after flush; call reset() first");
+        assert_eq!(frame.len(), self.in_channels, "frame has wrong channel count");
+        self.frames_in += 1;
+        let mut col = frame.to_vec();
+        for stage in &mut self.stages {
+            col = stage.push(&col, &self.ctx)?;
+        }
+        Some(col)
+    }
+
+    /// End the signal: push every stage's right-side zero padding and
+    /// cascade the resulting emissions downstream. Returns the final
+    /// output columns, in order. After a flush the session must be
+    /// [`StreamSession::reset`] before advancing again.
+    pub fn flush(&mut self) -> Vec<Vec<f32>> {
+        assert!(!self.flushed, "flush called twice; call reset() first");
+        self.flushed = true;
+        let mut out = Vec::new();
+        for i in 0..self.stages.len() {
+            for _ in 0..self.stages[i].pad {
+                if let Some(col) = self.stages[i].push_zero(&self.ctx) {
+                    self.cascade(i + 1, col, &mut out);
+                }
+            }
+        }
+        out
+    }
+
+    /// Run `col` through stages `start..`, collecting a final output.
+    fn cascade(&mut self, start: usize, mut col: Vec<f32>, out: &mut Vec<Vec<f32>>) {
+        for stage in &mut self.stages[start..] {
+            match stage.push(&col, &self.ctx) {
+                Some(next) => col = next,
+                None => return,
+            }
+        }
+        out.push(col);
+    }
+
+    /// Forget all signal state (rings, running sums, padding preload)
+    /// while keeping the compiled stages, frozen scales, and the warm
+    /// arena. A reset session behaves exactly like a fresh one.
+    pub fn reset(&mut self) {
+        for stage in &mut self.stages {
+            stage.reset();
+        }
+        self.frames_in = 0;
+        self.flushed = false;
+    }
+
+    /// One-shot batch reference: the full signal `[1, c, 1, l]` through
+    /// the same kernels stage by stage. In f32/bf16 mode these are
+    /// exactly the compiled plan's kernel calls; in i8 mode the frozen
+    /// activation scales replace the plan's per-plane dynamic ones
+    /// (see module docs for why streaming requires that).
+    pub fn run_batch(&self, x: &Tensor) -> Tensor {
+        let mut y = x.clone();
+        for stage in &self.stages {
+            y = stage.run_batch(&y, &self.ctx);
+        }
+        y
+    }
+
+    /// Derived bound on |streamed − `run_batch`| per output value,
+    /// composed stage by stage (see module docs):
+    ///
+    /// - conv stages amplify incoming divergence by their largest
+    ///   per-channel L1 norm and add `4·ε·taps·‖w‖₁·max|x|` of their
+    ///   own (different, but position-independent, summation trees);
+    ///   bf16 convs additionally re-round diverged inputs to 8
+    ///   mantissa bits (`max|x|/128` per side);
+    /// - i8 convs are exact on exact inputs; on diverged inputs a code
+    ///   can flip, bounded by `‖w‖₁·(tol + scale)`;
+    /// - avg-pool adds running-sum drift `4·ε·max|x|·(pushes + k)`;
+    ///   max-pool and ReLU are 1-Lipschitz and exact.
+    ///
+    /// Uses the actual per-stage push counts and value ranges, so call
+    /// it *after* streaming. Floored at `1e-6`.
+    pub fn tolerance(&self) -> f32 {
+        let mut tol = 0.0f32;
+        for stage in &self.stages {
+            let taps = (stage.c_in * stage.k) as f32;
+            let amax = stage.act_max;
+            match &stage.kernel {
+                StageKernel::ConvF32 { w, .. } => {
+                    let l1 = Stage::l1_max(w);
+                    tol = l1 * tol + 4.0 * EPS * taps * l1 * amax;
+                }
+                StageKernel::ConvBf16 { w, .. } => {
+                    let l1 = Stage::l1_max(w);
+                    let restep = if tol > 0.0 { amax / 128.0 } else { 0.0 };
+                    tol = l1 * (tol + restep) + 4.0 * EPS * taps * l1 * amax;
+                }
+                StageKernel::ConvI8 { qw, wq, xq, .. } => {
+                    if tol > 0.0 {
+                        tol = Stage::l1_deq_max(qw, wq) * (tol + xq.scale);
+                    }
+                }
+                StageKernel::AvgPool { .. } => {
+                    tol += 4.0 * EPS * amax * (stage.pushed + stage.k) as f32;
+                }
+                StageKernel::MaxPool | StageKernel::Relu => {}
+            }
+        }
+        tol.max(1e-6)
+    }
+
+    /// Model name (from the compiled graph).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Dtype the session was compiled for.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// The session-private execution context (its arena holds the
+    /// session's hot scratch state; see `ExecCtx::arena_bytes`).
+    pub fn ctx(&self) -> &ExecCtx {
+        &self.ctx
+    }
+
+    /// Channels per input frame.
+    pub fn in_channels(&self) -> usize {
+        self.in_channels
+    }
+
+    /// Channels per output column.
+    pub fn out_channels(&self) -> usize {
+        self.stages.last().expect("session has stages").c_out
+    }
+
+    /// The model's nominal batch signal length (frames per window).
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    /// Frames fed since the last reset.
+    pub fn frames_in(&self) -> usize {
+        self.frames_in
+    }
+
+    /// Output columns produced since the last reset (flush included).
+    pub fn frames_out(&self) -> usize {
+        self.stages.last().expect("session has stages").emitted
+    }
+
+    /// True once avg-pool-free, i8-quantized: every streamed output is
+    /// bit-for-bit equal to [`StreamSession::run_batch`].
+    pub fn is_bit_exact(&self) -> bool {
+        self.stages.iter().all(|s| {
+            matches!(
+                s.kernel,
+                StageKernel::ConvI8 { .. } | StageKernel::MaxPool | StageKernel::Relu
+            )
+        })
+    }
+}
+
+/// Validate 1-D conv geometry shared by f32/bf16/i8 conv stages.
+fn conv_geometry(
+    dims: &[usize],
+    params: &Conv2dParams,
+    channels: usize,
+) -> Result<(usize, usize, usize, usize, usize)> {
+    if params.groups != 1 {
+        crate::bail!("grouped convolutions have no streaming form");
+    }
+    if dims.len() != 4 || dims[2] != 1 {
+        crate::bail!("streaming conv needs [c_out, c_in, 1, k] weights, got {dims:?}");
+    }
+    if params.stride.0 != 1 || params.pad.0 != 0 {
+        crate::bail!("streaming conv must not stride or pad the height axis");
+    }
+    if dims[1] != channels {
+        crate::bail!("conv expects {} input channels, chain provides {channels}", dims[1]);
+    }
+    Ok((dims[0], dims[1], dims[3], params.stride.1, params.pad.1))
+}
+
+/// Build a conv stage for `Op::Conv2d`, routed by the session dtype
+/// exactly as the plan executor routes it (i8 weights are frozen with
+/// the same deterministic per-tensor quantization the plan applies).
+fn conv_stage(
+    w: &Tensor,
+    bias: &[f32],
+    params: &Conv2dParams,
+    relu: bool,
+    dtype: Dtype,
+    channels: usize,
+) -> Result<Stage> {
+    let (c_out, c_in, k, stride, pad) = conv_geometry(w.dims(), params, channels)?;
+    let kernel = match dtype {
+        Dtype::F32 | Dtype::I32 => {
+            StageKernel::ConvF32 { w: w.clone(), bias: bias.to_vec(), relu }
+        }
+        Dtype::Bf16 => StageKernel::ConvBf16 { w: w.clone(), bias: bias.to_vec(), relu },
+        Dtype::I8 => {
+            let wqp = QuantParams::for_tensor(w);
+            StageKernel::ConvI8 {
+                qw: quantize(w, wqp),
+                wq: WeightScales::PerTensor(wqp),
+                xq: QuantParams::symmetric(1.0),
+                bias: bias.to_vec(),
+                relu,
+                ring_q: Ring::new(c_in, k),
+                qcol: Vec::with_capacity(c_in),
+            }
+        }
+    };
+    let ring_f = match kernel {
+        StageKernel::ConvI8 { .. } => None,
+        _ => Some(Ring::new(c_in, k)),
+    };
+    Ok(Stage {
+        kernel,
+        k,
+        stride,
+        pad,
+        c_in,
+        c_out,
+        ring_f,
+        pushed: 0,
+        emitted: 0,
+        act_max: 0.0,
+        act_max_seed: 0.0,
+    })
+}
+
+/// Build a conv stage for `Op::QuantConv2d` (i8 codes in every dtype
+/// mode, like the plan executor).
+fn quant_conv_stage(
+    qw: &TensorT<i8>,
+    wq: &WeightScales,
+    bias: &[f32],
+    params: &Conv2dParams,
+    relu: bool,
+    channels: usize,
+) -> Result<Stage> {
+    let (c_out, c_in, k, stride, pad) = conv_geometry(qw.dims(), params, channels)?;
+    Ok(Stage {
+        kernel: StageKernel::ConvI8 {
+            qw: qw.clone(),
+            wq: wq.clone(),
+            xq: QuantParams::symmetric(1.0),
+            bias: bias.to_vec(),
+            relu,
+            ring_q: Ring::new(c_in, k),
+            qcol: Vec::with_capacity(c_in),
+        },
+        k,
+        stride,
+        pad,
+        c_in,
+        c_out,
+        ring_f: None,
+        pushed: 0,
+        emitted: 0,
+        act_max: 0.0,
+        act_max_seed: 0.0,
+    })
+}
+
+/// Build a pooling stage (height-1, unpadded windows only).
+fn pool_stage(p: &PoolParams, channels: usize, avg: bool) -> Result<Stage> {
+    if p.k.0 != 1 || p.stride.0 != 1 {
+        crate::bail!("streaming pool must not window or stride the height axis");
+    }
+    if p.pad != (0, 0) {
+        crate::bail!("padded pooling has no streaming form");
+    }
+    let k = p.k.1;
+    let kernel = if avg {
+        StageKernel::AvgPool { sums: vec![0.0; channels] }
+    } else {
+        StageKernel::MaxPool
+    };
+    // Avg-pool needs the column *leaving* the window for the
+    // running-sum recurrence, hence one extra slot.
+    let cap = if avg { k + 1 } else { k };
+    Ok(Stage {
+        kernel,
+        k,
+        stride: p.stride.1,
+        pad: 0,
+        c_in: channels,
+        c_out: channels,
+        ring_f: Some(Ring::new(channels, cap)),
+        pushed: 0,
+        emitted: 0,
+        act_max: 0.0,
+        act_max_seed: 0.0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::ConvAlgo;
+    use crate::nn::layers::{AvgPool2d, Conv2d, MaxPool2d, ReLU};
+    use crate::tensor::XorShiftRng;
+
+    fn tiny_model(avg: bool) -> Model {
+        let scale = |t: Tensor, s: f32| t.map(|v| v * s);
+        let m = Model::new("tiny-stream", &[2, 1, 32])
+            .push(Conv2d {
+                w: scale(Tensor::randn(&[4, 2, 1, 5], 901), 0.4),
+                bias: vec![0.05, -0.02, 0.0, 0.03],
+                params: Conv2dParams { stride: (1, 1), pad: (0, 2), groups: 1 },
+            })
+            .push(ReLU);
+        let m = if avg {
+            m.push(AvgPool2d(PoolParams { k: (1, 2), stride: (1, 2), pad: (0, 0) }))
+        } else {
+            m.push(MaxPool2d(PoolParams { k: (1, 2), stride: (1, 2), pad: (0, 0) }))
+        };
+        m.push(Conv2d {
+            w: scale(Tensor::randn(&[3, 4, 1, 3], 902), 0.3),
+            bias: vec![0.01, 0.02, -0.01],
+            params: Conv2dParams { stride: (1, 1), pad: (0, 1), groups: 1 },
+        })
+    }
+
+    fn signal(c: usize, l: usize, seed: u64) -> Tensor {
+        Tensor::randn(&[1, c, 1, l], seed)
+    }
+
+    /// Stream the whole signal, collecting every output column into a
+    /// `[1, c_out, 1, t]` tensor for comparison against the batch ref.
+    fn stream_all(sess: &mut StreamSession, x: &Tensor) -> Tensor {
+        let c = x.dim(1);
+        let l = x.dim(3);
+        let mut cols = Vec::new();
+        for t in 0..l {
+            let frame: Vec<f32> = (0..c).map(|ch| x.at4(0, ch, 0, t)).collect();
+            if let Some(col) = sess.advance(&frame) {
+                cols.push(col);
+            }
+        }
+        cols.extend(sess.flush());
+        let c_out = sess.out_channels();
+        let t_out = cols.len();
+        let mut data = vec![0.0f32; c_out * t_out];
+        for (t, col) in cols.iter().enumerate() {
+            for (ch, &v) in col.iter().enumerate() {
+                data[ch * t_out + t] = v;
+            }
+        }
+        Tensor::from_vec(data, &[1, c_out, 1, t_out])
+    }
+
+    #[test]
+    fn streamed_matches_batch_within_tolerance_f32() {
+        for avg in [false, true] {
+            let model = tiny_model(avg);
+            let x = signal(2, 32, 77);
+            let mut sess = StreamSession::new(&model, ExecCtx::new(ConvAlgo::Sliding)).unwrap();
+            let got = stream_all(&mut sess, &x);
+            let want = sess.run_batch(&x);
+            assert_eq!(got.dims(), want.dims(), "avg={avg}");
+            let diff = got.max_abs_diff(&want);
+            let tol = sess.tolerance();
+            assert!(diff <= tol, "avg={avg}: diff {diff} > tolerance {tol}");
+        }
+    }
+
+    #[test]
+    fn f32_run_batch_is_bitwise_the_model_forward() {
+        let model = tiny_model(true);
+        let x = signal(2, 32, 78);
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let sess = StreamSession::new(&model, ctx.clone()).unwrap();
+        let want = model.compile().run(&x, &ctx);
+        let got = sess.run_batch(&x);
+        assert_eq!(got.as_slice(), want.as_slice());
+    }
+
+    #[test]
+    fn i8_stream_is_bit_exact_without_avg_pool() {
+        let model = tiny_model(false);
+        let x = signal(2, 32, 79);
+        let ctx = ExecCtx::new(ConvAlgo::Sliding).with_dtype(Dtype::I8);
+        let mut sess = StreamSession::new(&model, ctx).unwrap();
+        assert!(sess.is_bit_exact());
+        let got = stream_all(&mut sess, &x);
+        let want = sess.run_batch(&x);
+        assert_eq!(got.as_slice(), want.as_slice(), "i8 streamed != batch");
+    }
+
+    #[test]
+    fn warmup_frames_emit_nothing_and_flush_completes_the_count() {
+        let model = tiny_model(false);
+        let mut sess = StreamSession::new(&model, ExecCtx::default()).unwrap();
+        let mut rng = XorShiftRng::new(5);
+        let mut emitted = 0;
+        for _ in 0..32 {
+            let frame = [rng.gauss(), rng.gauss()];
+            emitted += usize::from(sess.advance(&frame).is_some());
+        }
+        emitted += sess.flush().len();
+        let want_t = sess.run_batch(&signal(2, 32, 1)).dim(3);
+        assert_eq!(emitted, want_t);
+        assert_eq!(sess.frames_out(), want_t);
+    }
+
+    #[test]
+    fn reset_replays_identically() {
+        let model = tiny_model(true);
+        let x = signal(2, 32, 80);
+        let mut sess = StreamSession::new(&model, ExecCtx::default()).unwrap();
+        let first = stream_all(&mut sess, &x);
+        sess.reset();
+        let second = stream_all(&mut sess, &x);
+        assert_eq!(first.as_slice(), second.as_slice());
+    }
+
+    #[test]
+    fn non_streamable_models_are_rejected() {
+        // 2-D input shape (height > 1) has no frame axis.
+        let m = Model::new("not-1d", &[3, 8, 8]).push(ReLU);
+        assert!(StreamSession::new(&m, ExecCtx::default()).is_err());
+        // Height-windowed pooling leaves the signal domain.
+        let m = Model::new("bad-pool", &[2, 1, 16])
+            .push(MaxPool2d(PoolParams { k: (2, 2), stride: (2, 2), pad: (0, 0) }));
+        assert!(StreamSession::new(&m, ExecCtx::default()).is_err());
+    }
+}

@@ -1,0 +1,59 @@
+//! Shared parity-assertion helpers for the integration suites.
+//!
+//! Every `tests/*.rs` binary compiles its own copy via `mod common;`.
+//! The helpers encode the repo's three equivalence grades so each
+//! suite asserts them the same way, with the same failure messages:
+//!
+//! 1. **Bitwise** ([`assert_bitwise`], [`assert_slices_bitwise`]) —
+//!    f32/bf16 results that must match to the last bit (thread counts,
+//!    ISA levels, compiled plans, streamed-vs-batch in i8).
+//! 2. **Exact integers** ([`assert_exact_i32`]) — int8 kernels'
+//!    raw i32 accumulators, exact by construction.
+//! 3. **Derived tolerance** ([`assert_within`]) — reduced-precision
+//!    paths compared against f32 under an analytically derived bound
+//!    (never an eyeballed epsilon).
+
+#![allow(dead_code)] // each test binary uses its own subset
+
+use swconv::nn::Model;
+use swconv::tensor::{Tensor, TensorT};
+
+/// Two f32 tensors must be bit-for-bit identical (same shape, same
+/// bits). `what` names the comparison in the failure message.
+pub fn assert_bitwise(got: &Tensor, want: &Tensor, what: &str) {
+    assert_eq!(got.dims(), want.dims(), "{what}: shape mismatch");
+    assert_eq!(got.as_slice(), want.as_slice(), "{what}: results must be bit-identical");
+}
+
+/// Two raw slices must be bit-for-bit identical (row-kernel outputs,
+/// streamed columns).
+pub fn assert_slices_bitwise<T: PartialEq + std::fmt::Debug>(got: &[T], want: &[T], what: &str) {
+    assert_eq!(got, want, "{what}: results must be bit-identical");
+}
+
+/// Two i32 accumulator tensors must be exactly equal — integer
+/// arithmetic over identical codes has one right answer.
+pub fn assert_exact_i32(got: &TensorT<i32>, want: &TensorT<i32>, what: &str) {
+    assert_eq!(got.dims(), want.dims(), "{what}: shape mismatch");
+    assert_eq!(got.as_slice(), want.as_slice(), "{what}: integer accumulators must be exact");
+}
+
+/// `max |got − want|` must not exceed a *derived* bound (pass the
+/// analytic tolerance, not a guess).
+pub fn assert_within(got: &Tensor, want: &Tensor, bound: f32, what: &str) {
+    assert_eq!(got.dims(), want.dims(), "{what}: shape mismatch");
+    let d = got.max_abs_diff(want);
+    assert!(d <= bound, "{what}: diff {d:.3e} > derived bound {bound:.3e}");
+}
+
+/// A deterministic `[batch, …model.input_shape]` input.
+pub fn input_for(m: &Model, batch: usize, seed: u64) -> Tensor {
+    let dims: Vec<usize> = std::iter::once(batch).chain(m.input_shape.iter().copied()).collect();
+    Tensor::randn(&dims, seed)
+}
+
+/// Deterministic pseudo-random f32 in (−1, 1) — no rand crate offline.
+pub fn lcg_f32(seed: &mut u64) -> f32 {
+    *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    ((*seed >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+}

@@ -1,0 +1,251 @@
+//! Session lifecycle through the serving coordinator: affinity keeps a
+//! stream's state on one replica, failover after a quarantine or an
+//! idle eviction *always* surfaces as an explicit `reset` on a fresh
+//! session (never a silent continuation from stale rings), and evicted
+//! sessions give their arena scratch back. The numeric anchor is the
+//! same as `stream_parity.rs`: an i8 edge-audio stream served through
+//! the coordinator must equal a local [`StreamSession`] bit for bit.
+
+use std::time::Duration;
+use swconv::coordinator::{
+    Backend, BackendSpec, BatchPolicy, Coordinator, InferError, NativeBackend,
+};
+use swconv::kernels::ConvAlgo;
+use swconv::nn::{zoo, ExecCtx};
+use swconv::stream::StreamSession;
+use swconv::tensor::{Dtype, Tensor};
+
+fn policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) }
+}
+
+/// A mono signal `[1, 1, 1, l]` for the edge-audio model.
+fn audio(l: usize, seed: u64) -> Tensor {
+    Tensor::randn(&[1, 1, 1, l], seed)
+}
+
+/// AFFINITY + PARITY — streams pin to one replica for their whole life,
+/// interleave with batch traffic on the same tier, and (i8, avg-pool
+/// free) reproduce a local session's emissions bit for bit, warmup
+/// `None`s included.
+#[test]
+fn streams_pin_to_one_replica_and_match_a_local_session_bitwise() {
+    let model = zoo::edge_audio(4, 42);
+    let spec = BackendSpec::native_streaming(
+        "stream",
+        model.clone(),
+        ExecCtx::new(ConvAlgo::Sliding),
+        Duration::from_secs(60),
+    )
+    .with_dtype(Dtype::I8)
+    .with_replicas(2);
+    let c = Coordinator::new(vec![spec], policy());
+
+    // Least-streams placement: the first stream lands on replica 0, the
+    // second on replica 1.
+    let h1 = c.open_stream("stream").unwrap();
+    let h2 = c.open_stream("stream").unwrap();
+    let r1 = c.stream_replica(&h1).unwrap();
+    let r2 = c.stream_replica(&h2).unwrap();
+    assert_ne!(r1, r2, "two streams should spread across two replicas");
+    assert_eq!(h1.backend(), "stream");
+    assert_ne!(h1.id(), h2.id());
+
+    let reference_ctx = ExecCtx::new(ConvAlgo::Sliding).with_dtype(Dtype::I8);
+    let mut reference = StreamSession::new(&model, reference_ctx).unwrap();
+    assert!(reference.is_bit_exact());
+
+    let x = audio(96, 61);
+    for t in 0..x.dim(3) {
+        let frame = [x.at4(0, 0, 0, t)];
+        let want = reference.advance(&frame);
+        for h in [&h1, &h2] {
+            let f = c.advance_stream(h, &frame).unwrap();
+            assert!(!f.reset, "healthy stream must never reset (frame {t})");
+            assert_eq!(f.output, want, "stream {} frame {t}", h.id());
+        }
+        // Affinity: the owner never migrates while the replica is
+        // healthy.
+        assert_eq!(c.stream_replica(&h1), Some(r1), "frame {t}");
+        assert_eq!(c.stream_replica(&h2), Some(r2), "frame {t}");
+        if t == 48 {
+            // Batch traffic interleaves with live streams on the same
+            // tier (frames bypass the batcher, shards don't touch
+            // session state).
+            let y = c.infer("stream", Tensor::randn(&[1, 1, 512], 62)).unwrap();
+            assert!(y.output.is_ok(), "batch request on a streaming tier: {:?}", y.output);
+        }
+    }
+
+    c.close_stream(&h1);
+    assert_eq!(c.stream_replica(&h1), None, "closed stream has no owner");
+    assert!(c.advance_stream(&h1, &[0.0]).is_err(), "advance after close must error");
+    // Idempotent close; the second stream is unaffected.
+    c.close_stream(&h1);
+    assert!(c.advance_stream(&h2, &[0.0]).is_ok());
+    c.shutdown();
+}
+
+/// FAILOVER — quarantining the owner moves the stream to a healthy
+/// replica with `reset = true`, and the rebuilt session starts from
+/// *fresh* state: it replays a new signal exactly like a brand-new
+/// local session, warmup and all. Never a silent continuation.
+#[test]
+fn quarantined_replica_fails_over_with_an_explicit_reset_and_fresh_state() {
+    let model = zoo::edge_audio(4, 42);
+    let spec = BackendSpec::native_streaming(
+        "stream",
+        model.clone(),
+        ExecCtx::new(ConvAlgo::Sliding),
+        Duration::from_secs(60),
+    )
+    .with_dtype(Dtype::I8)
+    .with_replicas(2);
+    let c = Coordinator::new(vec![spec], policy());
+    let h = c.open_stream("stream").unwrap();
+    let owner = c.stream_replica(&h).unwrap();
+
+    // Stream well past warmup so the rings hold real state.
+    let a = audio(48, 63);
+    let mut emitted = 0usize;
+    for t in 0..a.dim(3) {
+        let f = c.advance_stream(&h, &[a.at4(0, 0, 0, t)]).unwrap();
+        assert!(!f.reset);
+        emitted += usize::from(f.output.is_some());
+    }
+    assert!(emitted > 0, "48 frames must emit past warmup");
+
+    assert!(c.quarantine_replica("stream", owner));
+    assert!(!c.quarantine_replica("stream", 99), "unknown replica index");
+    assert!(!c.quarantine_replica("nope", 0), "unknown backend");
+
+    // The next frame fails over: new owner, explicit reset, and — since
+    // a fresh session is warming up — no output yet.
+    let b = audio(48, 64);
+    let mut reference =
+        StreamSession::new(&model, ExecCtx::new(ConvAlgo::Sliding).with_dtype(Dtype::I8))
+            .unwrap();
+    let want0 = reference.advance(&[b.at4(0, 0, 0, 0)]);
+    let f0 = c.advance_stream(&h, &[b.at4(0, 0, 0, 0)]).unwrap();
+    assert!(f0.reset, "failover must surface as an explicit reset");
+    assert_eq!(f0.output, want0, "the reset frame runs on fresh state");
+    let moved_to = c.stream_replica(&h).unwrap();
+    assert_ne!(moved_to, owner, "stream must leave the quarantined replica");
+
+    // From here on the stream is exactly a fresh session replaying `b`:
+    // bitwise-equal emissions at every step, stable new owner.
+    for t in 1..b.dim(3) {
+        let frame = [b.at4(0, 0, 0, t)];
+        let want = reference.advance(&frame);
+        let f = c.advance_stream(&h, &frame).unwrap();
+        assert!(!f.reset, "frame {t}: reset may happen only once per loss");
+        assert_eq!(f.output, want, "frame {t} after failover");
+        assert_eq!(c.stream_replica(&h), Some(moved_to), "frame {t}");
+    }
+    c.shutdown();
+}
+
+/// NO HEALTHY REPLICA — placement skips replicas whose factory failed;
+/// once every replica is quarantined, streaming calls error instead of
+/// hanging or silently dropping frames.
+#[test]
+fn placement_skips_broken_replicas_and_errors_when_none_remain() {
+    let model = zoo::edge_audio(4, 42);
+    let item_shape = model.input_shape.clone();
+    let spec = BackendSpec::from_factory("half", item_shape, move |replica| {
+        if replica == 0 {
+            swconv::bail!("replica 0 refuses to start");
+        }
+        Ok(Box::new(NativeBackend::new("half", model.clone(), ExecCtx::default())))
+    })
+    .with_replicas(2);
+    let c = Coordinator::new(vec![spec], policy());
+
+    let h = c.open_stream("half").unwrap();
+    assert_eq!(c.stream_replica(&h), Some(1), "placement must skip the broken replica");
+    assert!(!c.advance_stream(&h, &[0.5]).unwrap().reset);
+
+    assert!(c.quarantine_replica("half", 1));
+    match c.advance_stream(&h, &[0.5]) {
+        Err(InferError::Backend(msg)) => {
+            assert!(msg.contains("no healthy replica"), "{msg}")
+        }
+        other => panic!("expected no-healthy-replica error, got {other:?}"),
+    }
+    match c.open_stream("half") {
+        Err(InferError::Backend(msg)) => {
+            assert!(msg.contains("no healthy replica"), "{msg}")
+        }
+        other => panic!("expected placement failure, got {other:?}"),
+    }
+    c.shutdown();
+}
+
+/// IDLE EVICTION (backend level) — an untouched session is dropped on
+/// the housekeeping tick, its private arena bytes go back to zero, and
+/// a later advance errors (the coordinator turns that into a reset; the
+/// state itself never lingers).
+#[test]
+fn idle_eviction_frees_session_arena_bytes() {
+    let mut b = NativeBackend::new("s", zoo::edge_audio(4, 42), ExecCtx::new(ConvAlgo::Sliding))
+        .with_stream_idle(Duration::from_millis(60));
+    assert!(b.idle_tick_period().is_some(), "stream_idle must arm the idle tick");
+    assert_eq!(b.stream_count(), 0);
+    assert_eq!(b.stream_arena_bytes(), 0);
+
+    b.open_stream(7).unwrap();
+    assert_eq!(b.stream_count(), 1);
+    let x = audio(16, 65);
+    let mut emitted = 0usize;
+    for t in 0..x.dim(3) {
+        emitted += usize::from(b.advance_stream(7, &[x.at4(0, 0, 0, t)]).unwrap().is_some());
+    }
+    assert!(emitted > 0);
+    assert!(b.stream_arena_bytes() > 0, "a streaming session keeps warm arena scratch");
+    // A frame with the wrong channel count errors without killing the
+    // session.
+    assert!(b.advance_stream(7, &[0.0, 1.0]).is_err());
+    assert_eq!(b.stream_count(), 1);
+
+    // Recently touched: the tick must keep it.
+    b.idle_tick();
+    assert_eq!(b.stream_count(), 1, "busy session must survive the tick");
+
+    std::thread::sleep(Duration::from_millis(100));
+    b.idle_tick();
+    assert_eq!(b.stream_count(), 0, "idle session must be evicted");
+    assert_eq!(b.stream_arena_bytes(), 0, "eviction must free the session arena");
+    assert!(b.advance_stream(7, &[0.0]).is_err(), "evicted stream must not resume");
+    b.close_stream(7); // unknown id: no-op
+    // Re-opening starts from scratch.
+    b.open_stream(7).unwrap();
+    assert_eq!(b.advance_stream(7, &[0.25]).unwrap(), None, "fresh session warms up again");
+}
+
+/// IDLE EVICTION (coordinator level) — the replica worker drives the
+/// eviction clock; the next frame on an evicted stream comes back with
+/// `reset = true` on a fresh session, not an error and not stale state.
+#[test]
+fn idle_evicted_coordinator_stream_resumes_with_a_reset() {
+    let model = zoo::edge_audio(4, 42);
+    let spec = BackendSpec::native_streaming(
+        "stream",
+        model,
+        ExecCtx::new(ConvAlgo::Sliding),
+        Duration::from_millis(50),
+    );
+    let c = Coordinator::new(vec![spec], policy());
+    let h = c.open_stream("stream").unwrap();
+    let x = audio(32, 66);
+    for t in 0..x.dim(3) {
+        assert!(!c.advance_stream(&h, &[x.at4(0, 0, 0, t)]).unwrap().reset);
+    }
+    // Quiet long enough for several idle ticks to fire and evict.
+    std::thread::sleep(Duration::from_millis(250));
+    let f = c.advance_stream(&h, &[0.5]).unwrap();
+    assert!(f.reset, "an evicted session must come back as an explicit reset");
+    assert_eq!(f.output, None, "fresh session warms up from scratch");
+    // The same replica keeps serving the rebuilt session.
+    assert!(!c.advance_stream(&h, &[0.25]).unwrap().reset);
+    c.shutdown();
+}

@@ -9,16 +9,13 @@
 //! i8 activations between adjacent quantized convs must all leave the
 //! produced numbers untouched.
 
-use swconv::kernels::ConvAlgo;
-use swconv::nn::{zoo, ExecCtx, Model};
-use swconv::simd::IsaLevel;
-use swconv::tensor::{Dtype, Tensor};
+mod common;
 
-/// A deterministic batch for `m`.
-fn input_for(m: &Model, batch: usize, seed: u64) -> Tensor {
-    let dims: Vec<usize> = std::iter::once(batch).chain(m.input_shape.iter().copied()).collect();
-    Tensor::randn(&dims, seed)
-}
+use common::{assert_bitwise, input_for};
+use swconv::kernels::ConvAlgo;
+use swconv::nn::{zoo, ExecCtx};
+use swconv::simd::IsaLevel;
+use swconv::tensor::Dtype;
 
 /// Algorithms worth forcing per model: the small nets take the full
 /// set (Tuned without a profile routes like Sliding); SlidingGeneric
@@ -47,12 +44,8 @@ fn compiled_plans_bit_identical_per_model_and_algo() {
         for algo in algos_for(name) {
             let ctx = ExecCtx::new(algo);
             let want = m.forward(&x, &ctx);
-            assert_eq!(fused.run(&x, &ctx).as_slice(), want.as_slice(), "{name} {algo:?} fused");
-            assert_eq!(
-                plain.run(&x, &ctx).as_slice(),
-                want.as_slice(),
-                "{name} {algo:?} verbatim"
-            );
+            assert_bitwise(&fused.run(&x, &ctx), &want, &format!("{name} {algo:?} fused"));
+            assert_bitwise(&plain.run(&x, &ctx), &want, &format!("{name} {algo:?} verbatim"));
         }
     }
 }
@@ -69,10 +62,10 @@ fn thread_counts_do_not_perturb_compiled_parity() {
             for threads in [1usize, 2, 4] {
                 let ctx = ExecCtx::with_threads(algo, threads);
                 let want = m.forward(&x, &ctx);
-                assert_eq!(
-                    fused.run(&x, &ctx).as_slice(),
-                    want.as_slice(),
-                    "{name} {algo:?} threads={threads}"
+                assert_bitwise(
+                    &fused.run(&x, &ctx),
+                    &want,
+                    &format!("{name} {algo:?} threads={threads}"),
                 );
             }
         }
@@ -93,15 +86,15 @@ fn serving_dtypes_match_the_layer_path_bitwise() {
             for algo in [ConvAlgo::Sliding, ConvAlgo::Im2colGemm] {
                 let ctx = ExecCtx::new(algo).with_dtype(dtype);
                 let want = m.forward(&x, &ctx);
-                assert_eq!(
-                    fused.run(&x, &ctx).as_slice(),
-                    want.as_slice(),
-                    "{name} {algo:?} {dtype:?} fused"
+                assert_bitwise(
+                    &fused.run(&x, &ctx),
+                    &want,
+                    &format!("{name} {algo:?} {dtype:?} fused"),
                 );
-                assert_eq!(
-                    plain.run(&x, &ctx).as_slice(),
-                    want.as_slice(),
-                    "{name} {algo:?} {dtype:?} verbatim"
+                assert_bitwise(
+                    &plain.run(&x, &ctx),
+                    &want,
+                    &format!("{name} {algo:?} {dtype:?} verbatim"),
                 );
             }
         }
@@ -122,9 +115,9 @@ fn forced_isa_levels_preserve_compiled_parity() {
     for isa in IsaLevel::ALL {
         let ctx = ExecCtx::new(ConvAlgo::Sliding).with_isa(isa);
         let want = m.forward(&x, &ctx);
-        assert_eq!(fused.run(&x, &ctx).as_slice(), want.as_slice(), "{isa} fused vs forward");
+        assert_bitwise(&fused.run(&x, &ctx), &want, &format!("{isa} fused vs forward"));
         // And the ISA-invariance contract carries over to plans.
-        assert_eq!(fused.run(&x, &ctx).as_slice(), reference.as_slice(), "{isa} vs scalar");
+        assert_bitwise(&fused.run(&x, &ctx), &reference, &format!("{isa} vs scalar"));
     }
 }
 

@@ -14,6 +14,9 @@
 //! ([`RowKernel::row_fn_at`] is total), so this suite passes — and
 //! still exercises every match arm — on any host.
 
+mod common;
+
+use common::{assert_bitwise, assert_exact_i32, assert_slices_bitwise, lcg_f32};
 use swconv::exec::ExecCtx;
 use swconv::kernels::rowconv::{row_conv_bf16_at, row_conv_q8_at, RowKernel, COMPOUND_MAX_K};
 use swconv::kernels::sliding2d::{conv2d_sliding_bf16_ctx, conv2d_sliding_q8_raw_ctx};
@@ -25,12 +28,6 @@ use swconv::tensor::{quantize, to_bf16, Bf16, QuantParams, Tensor};
 /// < 8, < 16 lanes), exactly one portable vector, one-past, odd tails
 /// at every lane count, and a multi-vector run.
 const WIDTHS: [usize; 10] = [0, 1, 3, 7, 15, 16, 17, 31, 40, 100];
-
-/// Deterministic pseudo-random f32 in (-1, 1) — no rand crate offline.
-fn lcg_f32(seed: &mut u64) -> f32 {
-    *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
-    ((*seed >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
-}
 
 /// Source rows long enough for the widest (k, width) pair under the
 /// strictest kernel contract (`width - 1 + k - 1 + 2·LANES + 1`).
@@ -58,7 +55,11 @@ fn f32_row_kernels_bit_identical_at_every_level() {
                 for isa in IsaLevel::ALL {
                     let mut got = vec![0.5f32; width];
                     family.row_fn_at(k, isa)(&src, &w, &mut got, width);
-                    assert_eq!(want, got, "{family:?} k={k} width={width} {isa}");
+                    assert_slices_bitwise(
+                        &got,
+                        &want,
+                        &format!("{family:?} k={k} width={width} {isa}"),
+                    );
                 }
             }
         }
@@ -89,7 +90,7 @@ fn q8_row_kernel_exact_at_every_level() {
             for isa in IsaLevel::ALL {
                 let mut got = vec![7i32; width];
                 row_conv_q8_at(isa)(&src, &w, &mut got, width);
-                assert_eq!(want, got, "q8 k={k} width={width} {isa}");
+                assert_slices_bitwise(&got, &want, &format!("q8 k={k} width={width} {isa}"));
             }
         }
     }
@@ -113,7 +114,7 @@ fn bf16_row_kernel_bitwise_at_every_level() {
             for isa in IsaLevel::ALL {
                 let mut got = vec![0.5f32; width];
                 row_conv_bf16_at(isa)(&src, &w, &mut got, width);
-                assert_eq!(want, got, "bf16 k={k} width={width} {isa}");
+                assert_slices_bitwise(&got, &want, &format!("bf16 k={k} width={width} {isa}"));
             }
         }
     }
@@ -156,7 +157,7 @@ fn conv2d_forced_isa_bit_identical_across_levels_and_threads() {
             for isa in IsaLevel::ALL {
                 let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads).with_isa(isa);
                 let got = conv2d_ctx(&x, &w, None, p, &ctx);
-                assert_eq!(want.as_slice(), got.as_slice(), "case {i} threads={threads} {isa}");
+                assert_bitwise(&got, &want, &format!("case {i} threads={threads} {isa}"));
             }
         }
     }
@@ -177,7 +178,7 @@ fn conv2d_q8_forced_isa_exact_across_levels_and_threads() {
         for isa in IsaLevel::ALL {
             let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads).with_isa(isa);
             let got = conv2d_sliding_q8_raw_ctx(&qx, &qw, &p, &ctx);
-            assert_eq!(want.as_slice(), got.as_slice(), "threads={threads} {isa}");
+            assert_exact_i32(&got, &want, &format!("q8 threads={threads} {isa}"));
         }
     }
 }
@@ -195,7 +196,11 @@ fn conv2d_bf16_forced_isa_bitwise_across_levels_and_threads() {
         for isa in IsaLevel::ALL {
             let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads).with_isa(isa);
             let got = conv2d_sliding_bf16_ctx(&x, &w, None, &p, &ctx);
-            assert_eq!(want.as_slice(), got.as_slice(), "threads={threads} {isa}");
+            assert_slices_bitwise(
+                got.as_slice(),
+                want.as_slice(),
+                &format!("bf16 threads={threads} {isa}"),
+            );
         }
     }
 }

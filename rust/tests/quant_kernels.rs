@@ -16,6 +16,9 @@
 //!    `scale / 2` for every value in the representable range, symmetric
 //!    and affine parameters alike.
 
+mod common;
+
+use common::{assert_bitwise, assert_exact_i32, assert_within};
 use swconv::exec::ExecCtx;
 use swconv::kernels::im2col::conv2d_im2col_q8_raw_ctx;
 use swconv::kernels::sliding1d::conv1d_sliding_q8_ctx;
@@ -59,8 +62,7 @@ fn q8_sliding_and_gemm_raw_accumulators_agree_bitwise() {
         let qw = quantize(&w, QuantParams::for_tensor(&w));
         let a = conv2d_sliding_q8_raw_ctx(&qx, &qw, p, &ctx);
         let b = conv2d_im2col_q8_raw_ctx(&qx, &qw, p, &ctx);
-        assert_eq!(a.dims(), b.dims(), "case {i}");
-        assert_eq!(a.as_slice(), b.as_slice(), "case {i}: accumulators must be exact");
+        assert_exact_i32(&a, &b, &format!("case {i} sliding vs gemm"));
     }
 }
 
@@ -78,7 +80,7 @@ fn q8_results_bit_identical_across_thread_counts() {
     for t in [2, 4, 7] {
         let many_ctx = ExecCtx::with_threads(ConvAlgo::Sliding, t);
         let many = conv2d_sliding_q8_raw_ctx(&qx, &qw, &p, &many_ctx);
-        assert_eq!(one.as_slice(), many.as_slice(), "threads={t}");
+        assert_exact_i32(&many, &one, &format!("threads={t}"));
     }
 }
 
@@ -99,8 +101,7 @@ fn q8_conv_tracks_f32_within_documented_tolerance() {
 
         let taps = (wd[1] * wd[2] * wd[3]) as f32;
         let atol = taps * 128.0 * xq.scale * wq.scale;
-        let d = got.max_abs_diff(&want);
-        assert!(d <= atol, "case {i}: diff {d} > derived bound {atol}");
+        assert_within(&got, &want, atol, &format!("case {i} q8 vs f32"));
     }
 }
 
@@ -126,8 +127,7 @@ fn q8_conv1d_tracks_f32() {
     );
     let taps = (3 * 7) as f32;
     let atol = taps * 128.0 * xq.scale * wq.scale;
-    let d = got.max_abs_diff(&want);
-    assert!(d <= atol, "diff {d} > derived bound {atol}");
+    assert_within(&got, &want, atol, "q8 conv1d vs f32");
 }
 
 /// BOUNDED — bf16 convolution vs f32: the only error source is the
@@ -143,8 +143,7 @@ fn bf16_conv_tracks_f32_within_storage_rounding() {
         let got = conv2d_bf16_ctx(&x, &w, None, p, &ExecCtx::default());
         let taps = (wd[1] * wd[2] * wd[3]) as f32;
         let atol = taps * x.max_abs() * w.max_abs() / 128.0 + 1e-4;
-        let d = got.max_abs_diff(&want);
-        assert!(d <= atol, "case {i}: diff {d} > bound {atol}");
+        assert_within(&got, &want, atol, &format!("case {i} bf16 vs f32"));
     }
 }
 
@@ -161,9 +160,9 @@ fn q8_boundary_wrapper_routes_agree() {
     let s = conv2d_q8_ctx(&x, &qw, wq, None, &p, &ExecCtx::new(ConvAlgo::Sliding));
     let g = conv2d_q8_ctx(&x, &qw, wq, None, &p, &ExecCtx::new(ConvAlgo::Im2colGemm));
     let d = conv2d_q8_ctx(&x, &qw, wq, None, &p, &ExecCtx::new(ConvAlgo::Direct));
-    assert_eq!(s.as_slice(), g.as_slice());
+    assert_bitwise(&g, &s, "q8 gemm route vs sliding route");
     // Direct has no int8 kernel: routed to sliding, identical result.
-    assert_eq!(s.as_slice(), d.as_slice());
+    assert_bitwise(&d, &s, "q8 direct route vs sliding route");
 }
 
 /// PROPERTY — quantize/dequantize round-trip error is bounded by

@@ -1,0 +1,212 @@
+//! Tentpole parity suite for streaming inference: a frame-by-frame
+//! [`StreamSession`] must reproduce its own one-shot batch reference
+//! (`run_batch` — the same kernels, same frozen scales) under every
+//! serving configuration:
+//!
+//! - **i8**: bit-for-bit. The edge-audio chain is avg-pool-free, so
+//!   quantization is pointwise and the i32 accumulation is
+//!   order-independent — `is_bit_exact()` promises zero ulps and the
+//!   suite holds it to that.
+//! - **f32 / bf16**: within the session's *derived* tolerance
+//!   ([`StreamSession::tolerance`] — composed per-stage bounds, never
+//!   an eyeballed epsilon).
+//!
+//! The matrix covers both conv algorithms × three thread counts × every
+//! ISA level (forced through the same `ExecCtx` seam as the batch
+//! suites), warmup-frame behaviour, the full nominal 512-sample window,
+//! and an ad-hoc avg-pool chain exercising the tolerance path.
+
+mod common;
+
+use common::{assert_bitwise, assert_within};
+use swconv::kernels::{Conv2dParams, ConvAlgo, PoolParams};
+use swconv::nn::layers::{AvgPool2d, Conv2d, ReLU};
+use swconv::nn::{zoo, ExecCtx, Model};
+use swconv::simd::IsaLevel;
+use swconv::stream::StreamSession;
+use swconv::tensor::{Dtype, Tensor};
+
+/// A mono signal `[1, 1, 1, l]` for the edge-audio model.
+fn audio(l: usize, seed: u64) -> Tensor {
+    Tensor::randn(&[1, 1, 1, l], seed)
+}
+
+/// Stream the whole signal through `sess` (advance every column, then
+/// flush) and pack the emitted columns into `[1, c_out, 1, t]` for
+/// comparison against the batch reference.
+fn stream_all(sess: &mut StreamSession, x: &Tensor) -> Tensor {
+    let c = x.dim(1);
+    let l = x.dim(3);
+    let mut cols = Vec::new();
+    for t in 0..l {
+        let frame: Vec<f32> = (0..c).map(|ch| x.at4(0, ch, 0, t)).collect();
+        if let Some(col) = sess.advance(&frame) {
+            cols.push(col);
+        }
+    }
+    cols.extend(sess.flush());
+    let c_out = sess.out_channels();
+    let t_out = cols.len();
+    let mut data = vec![0.0f32; c_out * t_out];
+    for (t, col) in cols.iter().enumerate() {
+        for (ch, &v) in col.iter().enumerate() {
+            data[ch * t_out + t] = v;
+        }
+    }
+    Tensor::from_vec(data, &[1, c_out, 1, t_out])
+}
+
+/// BIT PARITY (i8) — streamed output equals the batch reference to the
+/// last bit under both conv algorithms and every thread count. The
+/// algorithm and threading axes route different kernels/partitions
+/// underneath, but integer accumulation has one right answer.
+#[test]
+fn i8_streamed_bitwise_equals_batch_across_algos_and_threads() {
+    let model = zoo::edge_audio(4, 42);
+    let x = audio(160, 11);
+    for algo in [ConvAlgo::Sliding, ConvAlgo::Im2colGemm] {
+        for threads in [1usize, 2, 4] {
+            let ctx = ExecCtx::with_threads(algo, threads).with_dtype(Dtype::I8);
+            let mut sess = StreamSession::new(&model, ctx).unwrap();
+            assert!(sess.is_bit_exact(), "edge-audio i8 chain must be bit-exact");
+            let got = stream_all(&mut sess, &x);
+            let want = sess.run_batch(&x);
+            assert_bitwise(&got, &want, &format!("i8 {algo:?} threads={threads}"));
+        }
+    }
+}
+
+/// DERIVED TOLERANCE (f32 / bf16) — streamed output tracks the batch
+/// reference within the session's composed per-stage bound under both
+/// conv algorithms and every thread count.
+#[test]
+fn f32_and_bf16_streamed_within_derived_tolerance_across_algos_and_threads() {
+    let model = zoo::edge_audio(4, 42);
+    let x = audio(160, 12);
+    for dtype in [Dtype::F32, Dtype::Bf16] {
+        for algo in [ConvAlgo::Sliding, ConvAlgo::Im2colGemm] {
+            for threads in [1usize, 2, 4] {
+                let ctx = ExecCtx::with_threads(algo, threads).with_dtype(dtype);
+                let mut sess = StreamSession::new(&model, ctx).unwrap();
+                let got = stream_all(&mut sess, &x);
+                let want = sess.run_batch(&x);
+                // tolerance() uses actual push counts: derive it after
+                // streaming, per its contract.
+                let tol = sess.tolerance();
+                assert_within(&got, &want, tol, &format!("{dtype:?} {algo:?} threads={threads}"));
+            }
+        }
+    }
+}
+
+/// ISA INVARIANCE — the ISA level is a speed knob for streaming too:
+/// forcing each level produces bit-identical streamed outputs, and the
+/// i8 batch parity holds at every level (levels this machine lacks
+/// degrade to the portable kernels inside dispatch, so this passes —
+/// and still exercises every arm — on any host).
+#[test]
+fn forced_isa_levels_do_not_perturb_streamed_outputs() {
+    let model = zoo::edge_audio(4, 42);
+    let x = audio(96, 13);
+    for dtype in [Dtype::F32, Dtype::I8] {
+        let scalar = ExecCtx::new(ConvAlgo::Sliding).with_isa(IsaLevel::Scalar).with_dtype(dtype);
+        let mut reference = StreamSession::new(&model, scalar).unwrap();
+        let want = stream_all(&mut reference, &x);
+        for isa in IsaLevel::ALL {
+            let ctx = ExecCtx::new(ConvAlgo::Sliding).with_isa(isa).with_dtype(dtype);
+            let mut sess = StreamSession::new(&model, ctx).unwrap();
+            let got = stream_all(&mut sess, &x);
+            assert_bitwise(&got, &want, &format!("{dtype:?} {isa} vs scalar"));
+            if sess.is_bit_exact() {
+                assert_bitwise(&got, &sess.run_batch(&x), &format!("i8 {isa} vs batch"));
+            }
+        }
+    }
+}
+
+/// WARMUP — the first frames fill windows and must emit nothing; once
+/// columns start flowing, every one (flush included) matches its batch
+/// counterpart bitwise, and the total count equals the batch output
+/// width.
+#[test]
+fn warmup_frames_emit_none_then_every_column_matches_batch() {
+    let model = zoo::edge_audio(4, 42);
+    let x = audio(64, 14);
+    let ctx = ExecCtx::new(ConvAlgo::Sliding).with_dtype(Dtype::I8);
+    let mut sess = StreamSession::new(&model, ctx).unwrap();
+    let want = sess.run_batch(&x);
+    let t_out = want.dim(3);
+    let mut cols = Vec::new();
+    let mut warmup = 0usize;
+    for t in 0..x.dim(3) {
+        match sess.advance(&[x.at4(0, 0, 0, t)]) {
+            Some(col) => cols.push(col),
+            None if cols.is_empty() => warmup += 1,
+            None => {} // stride swallowed an interior frame
+        }
+    }
+    assert!(warmup > 0, "the leading frames must warm the windows up");
+    cols.extend(sess.flush());
+    assert_eq!(cols.len(), t_out, "streamed column count vs batch width");
+    assert_eq!(sess.frames_out(), t_out);
+    for (t, col) in cols.iter().enumerate() {
+        for (c, &v) in col.iter().enumerate() {
+            assert_eq!(
+                v.to_bits(),
+                want.at4(0, c, 0, t).to_bits(),
+                "column {t} channel {c} diverges from the batch reference"
+            );
+        }
+    }
+}
+
+/// FULL WINDOW — the nominal 512-sample edge-audio window streams
+/// bit-exactly in i8 and lands on the documented `[1, classes, 1, 64]`
+/// 8×-downsampled logit track.
+#[test]
+fn full_nominal_window_streams_bit_exact_in_i8() {
+    let model = zoo::edge_audio(6, 7);
+    let ctx = ExecCtx::new(ConvAlgo::Sliding).with_dtype(Dtype::I8);
+    let mut sess = StreamSession::new(&model, ctx).unwrap();
+    let x = audio(sess.input_len(), 16);
+    let got = stream_all(&mut sess, &x);
+    assert_eq!(got.dims(), &[1, 6, 1, 64], "8x-downsampled logit track");
+    assert_bitwise(&got, &sess.run_batch(&x), "full 512-frame window, i8");
+}
+
+/// REFERENCE ANCHOR — in f32 the session's `run_batch` performs exactly
+/// the compiled plan's kernel calls, so it is bitwise-equal to
+/// `model.compile().run` under the same ctx. This pins the streamed
+/// comparisons above to the real batch path, not a lookalike.
+#[test]
+fn f32_run_batch_is_bitwise_the_compiled_plan() {
+    let model = zoo::edge_audio(4, 42);
+    let x = audio(512, 15);
+    let ctx = ExecCtx::new(ConvAlgo::Sliding);
+    let sess = StreamSession::new(&model, ctx.clone()).unwrap();
+    let want = model.compile().run(&x, &ctx);
+    assert_bitwise(&sess.run_batch(&x), &want, "run_batch vs compiled plan");
+}
+
+/// AVG-POOL — the running-sum recurrence reassociates f32 sums, so an
+/// avg-pool chain is *not* bit-exact; it must still land inside the
+/// derived tolerance, and the session must not overclaim exactness.
+#[test]
+fn avg_pool_chain_streams_within_tolerance_but_is_not_bit_exact() {
+    let w = Tensor::randn(&[4, 2, 1, 5], 921).map(|v| v * 0.4);
+    let model = Model::new("avg-stream", &[2, 1, 48])
+        .push(Conv2d {
+            w,
+            bias: vec![0.05, -0.02, 0.0, 0.03],
+            params: Conv2dParams { stride: (1, 1), pad: (0, 2), groups: 1 },
+        })
+        .push(ReLU)
+        .push(AvgPool2d(PoolParams { k: (1, 4), stride: (1, 2), pad: (0, 0) }));
+    let x = Tensor::randn(&[1, 2, 1, 48], 17);
+    let mut sess = StreamSession::new(&model, ExecCtx::new(ConvAlgo::Sliding)).unwrap();
+    assert!(!sess.is_bit_exact(), "avg-pool must disqualify bit-exactness");
+    let got = stream_all(&mut sess, &x);
+    let want = sess.run_batch(&x);
+    let tol = sess.tolerance();
+    assert_within(&got, &want, tol, "avg-pool chain");
+}

@@ -1,0 +1,156 @@
+//! Property suite for the streaming substrate: the mirrored ring buffer
+//! and the per-stage update recurrences, each checked against a
+//! from-scratch recomputation **at every step** of random frame
+//! sequences — not just on a final aggregate. Covers wrap-around (many
+//! times the ring capacity), mid-sequence resets, stride > 1 emission
+//! schedules, and window warmup.
+
+mod common;
+
+use common::assert_slices_bitwise;
+use swconv::kernels::{Conv2dParams, ConvAlgo, PoolParams};
+use swconv::nn::layers::{AvgPool2d, Conv2d};
+use swconv::nn::{ExecCtx, Model};
+use swconv::stream::{Ring, StreamSession};
+use swconv::tensor::{Dtype, Tensor, XorShiftRng};
+
+/// The ring's contiguous window must equal the tail of an ever-growing
+/// from-scratch log after every push — across random channel/capacity
+/// geometries, splat pushes, resets, and several wrap-arounds.
+#[test]
+fn ring_window_matches_a_from_scratch_log_under_random_traffic() {
+    let mut rng = XorShiftRng::new(41);
+    for trial in 0..24 {
+        let channels = 1 + rng.uniform(0.0, 3.0) as usize;
+        let cap = 1 + rng.uniform(0.0, 9.0) as usize;
+        let mut r = Ring::<f32>::new(channels, cap);
+        let mut log: Vec<Vec<f32>> = Vec::new();
+        for step in 0..4 * cap + 13 {
+            if rng.uniform(0.0, 1.0) < 0.1 {
+                r.reset();
+                log.clear();
+            }
+            if rng.uniform(0.0, 1.0) < 0.2 {
+                r.push_splat(0.0);
+                log.push(vec![0.0; channels]);
+            } else {
+                let col: Vec<f32> = (0..channels).map(|_| rng.gauss()).collect();
+                r.push(&col);
+                log.push(col);
+            }
+            assert_eq!(r.len(), log.len().min(cap), "trial {trial} step {step}: len");
+            for w in 1..=r.len() {
+                for ch in 0..channels {
+                    let want: Vec<f32> = log[log.len() - w..].iter().map(|c| c[ch]).collect();
+                    assert_slices_bitwise(
+                        r.window(ch, w),
+                        &want,
+                        &format!("trial {trial} step {step} w={w} ch={ch}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The avg-pool running-sum recurrence must track a from-scratch mean
+/// of exactly the last `k` frames at every emission, within the
+/// documented drift bound `4·ε·max|x|·(pushes + k)` — the same formula
+/// [`StreamSession::tolerance`] charges the stage with.
+#[test]
+fn avg_pool_recurrence_tracks_the_from_scratch_window_at_every_step() {
+    let mut rng = XorShiftRng::new(42);
+    for (k, stride) in [(2usize, 2usize), (3, 1), (4, 2), (5, 3)] {
+        let channels = 2;
+        let model = Model::new("avg-prop", &[channels, 1, 64])
+            .push(AvgPool2d(PoolParams { k: (1, k), stride: (1, stride), pad: (0, 0) }));
+        let mut sess = StreamSession::new(&model, ExecCtx::default()).unwrap();
+        let mut log: Vec<Vec<f32>> = Vec::new();
+        let mut amax = 0.0f32;
+        for step in 0..200 {
+            let frame: Vec<f32> = (0..channels).map(|_| rng.gauss() * 3.0).collect();
+            for &v in &frame {
+                amax = amax.max(v.abs());
+            }
+            log.push(frame.clone());
+            if let Some(col) = sess.advance(&frame) {
+                let bound = (4.0 * 1.2e-7 * amax * (log.len() + k) as f32).max(1e-6);
+                for (ch, &got) in col.iter().enumerate() {
+                    let want: f32 =
+                        log[log.len() - k..].iter().map(|c| c[ch]).sum::<f32>() / k as f32;
+                    let d = (got - want).abs();
+                    assert!(
+                        d <= bound,
+                        "(k={k},s={stride}) step {step} ch={ch}: drift {d:e} > {bound:e}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// A stride-2 padded i8 conv: every emission — as it appears, flush
+/// included — is bit-identical to the corresponding column of the batch
+/// reference, and the emission count lands exactly on the batch output
+/// width.
+#[test]
+fn strided_conv_emissions_match_batch_columns_bit_for_bit_as_they_appear() {
+    let w = Tensor::randn(&[3, 2, 1, 5], 43).map(|v| v * 0.5);
+    let model = Model::new("stride-prop", &[2, 1, 40]).push(Conv2d {
+        w,
+        bias: vec![0.01, -0.02, 0.03],
+        params: Conv2dParams { stride: (1, 2), pad: (0, 2), groups: 1 },
+    });
+    let ctx = ExecCtx::new(ConvAlgo::Sliding).with_dtype(Dtype::I8);
+    let mut sess = StreamSession::new(&model, ctx).unwrap();
+    assert!(sess.is_bit_exact());
+    let x = Tensor::randn(&[1, 2, 1, 40], 44);
+    let want = sess.run_batch(&x);
+    let mut t_out = 0usize;
+    for t in 0..x.dim(3) {
+        let frame = [x.at4(0, 0, 0, t), x.at4(0, 1, 0, t)];
+        if let Some(col) = sess.advance(&frame) {
+            let want_col: Vec<f32> = (0..3).map(|c| want.at4(0, c, 0, t_out)).collect();
+            assert_slices_bitwise(&col, &want_col, &format!("emission {t_out} at frame {t}"));
+            t_out += 1;
+        }
+    }
+    for col in sess.flush() {
+        let want_col: Vec<f32> = (0..3).map(|c| want.at4(0, c, 0, t_out)).collect();
+        assert_slices_bitwise(&col, &want_col, &format!("flush emission {t_out}"));
+        t_out += 1;
+    }
+    assert_eq!(t_out, want.dim(3), "total emissions vs batch output width");
+}
+
+/// Emission schedule across (k, stride, pad) geometries: the total
+/// count equals the batch output width, and the first window completes
+/// on frame `k − pad − 1` (the left padding is preloaded, so only
+/// `k − pad` real frames are needed; stride never delays the *first*
+/// emission because `(pushed − k) = 0` divides everything).
+#[test]
+fn warmup_and_stride_emission_schedule_matches_the_batch_geometry() {
+    let cases = [(3usize, 1usize, 1usize), (5, 2, 2), (7, 3, 0), (4, 2, 1), (9, 1, 4)];
+    for (k, stride, pad) in cases {
+        let w = Tensor::randn(&[1, 1, 1, k], 45).map(|v| v * 0.3);
+        let model = Model::new("sched-prop", &[1, 1, 48]).push(Conv2d {
+            w,
+            bias: vec![0.0],
+            params: Conv2dParams { stride: (1, stride), pad: (0, pad), groups: 1 },
+        });
+        let mut sess = StreamSession::new(&model, ExecCtx::default()).unwrap();
+        let x = Tensor::randn(&[1, 1, 1, 48], 46);
+        let batch_w = sess.run_batch(&x).dim(3);
+        let mut first = None;
+        let mut count = 0usize;
+        for t in 0..x.dim(3) {
+            if sess.advance(&[x.at4(0, 0, 0, t)]).is_some() {
+                first.get_or_insert(t);
+                count += 1;
+            }
+        }
+        count += sess.flush().len();
+        assert_eq!(count, batch_w, "k={k} s={stride} p={pad}: emission count");
+        assert_eq!(first, Some(k - pad - 1), "k={k} s={stride} p={pad}: first emission");
+    }
+}

@@ -4,14 +4,12 @@
 //! post-softmax tolerance, the threading axis is bit-exact, and the
 //! reduced-precision serving dtypes stay close to f32 on every model.
 
-use swconv::kernels::ConvAlgo;
-use swconv::nn::{zoo, ExecCtx, Model};
-use swconv::tensor::{Dtype, Tensor};
+mod common;
 
-fn input_for(m: &Model, batch: usize, seed: u64) -> Tensor {
-    let dims: Vec<usize> = std::iter::once(batch).chain(m.input_shape.iter().copied()).collect();
-    Tensor::randn(&dims, seed)
-}
+use common::{assert_bitwise, assert_within, input_for};
+use swconv::kernels::ConvAlgo;
+use swconv::nn::{zoo, ExecCtx};
+use swconv::tensor::Dtype;
 
 /// Forcible algorithms per model (SlidingGeneric caps at k = 17, so
 /// the k = 21 net skips it; Direct — the O(k²)-per-output oracle —
@@ -41,8 +39,7 @@ fn every_model_agrees_with_the_gemm_baseline() {
         let want = m.forward(&x, &ExecCtx::new(ConvAlgo::Im2colGemm));
         for algo in algos_for(name) {
             let got = m.forward(&x, &ExecCtx::new(algo));
-            let d = got.max_abs_diff(&want);
-            assert!(d < 1e-3, "{name} {algo:?}: diff {d}");
+            assert_within(&got, &want, 1e-3, &format!("{name} {algo:?} vs gemm"));
         }
     }
 }
@@ -59,11 +56,7 @@ fn thread_counts_are_bit_identical_on_every_model() {
             let want = m.forward(&x, &ExecCtx::with_threads(algo, 1));
             for threads in [2usize, 4] {
                 let got = m.forward(&x, &ExecCtx::with_threads(algo, threads));
-                assert_eq!(
-                    got.as_slice(),
-                    want.as_slice(),
-                    "{name} {algo:?} threads={threads}"
-                );
+                assert_bitwise(&got, &want, &format!("{name} {algo:?} threads={threads}"));
             }
         }
     }
@@ -82,9 +75,7 @@ fn serving_dtypes_run_every_model_close_to_f32() {
         for dtype in [Dtype::Bf16, Dtype::I8] {
             let ctx = ExecCtx::new(ConvAlgo::Sliding).with_dtype(dtype);
             let y = m.forward(&x, &ctx);
-            assert_eq!(y.dims(), want.dims(), "{name} {dtype:?}");
-            let d = y.max_abs_diff(&want);
-            assert!(d < 0.25, "{name} {dtype:?}: post-softmax diff {d}");
+            assert_within(&y, &want, 0.25, &format!("{name} {dtype:?} post-softmax"));
             // Rows still normalise: the reduced-precision path feeds a
             // real probability vector out, not garbage that happens to
             // be close element-wise.
