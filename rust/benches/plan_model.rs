@@ -1,0 +1,164 @@
+//! BENCH — the whole-model planner's payoff: every zoo model served
+//! three ways on identical weights — `planned` (the planner's per-layer
+//! algorithm × worker-split choices, at three memory budgets from the
+//! feasibility floor up to unbudgeted), `greedy-tuned` (per-kernel
+//! tuned dispatch from the autotune cache when one exists — the
+//! no-whole-model-view baseline) and `paper-policy` (the paper's fixed
+//! k-threshold dispatch). The planner's thesis is that a layer-wise
+//! view beats greedy per-kernel choices under a memory cap: the low-mem
+//! strip GEMM and narrower worker splits trade predicted throughput for
+//! footprint only where the budget forces it. The planned rows run
+//! under a GEMM-routed ctx — the family where f32 planning has a real
+//! algorithm lever (one-shot ↔ strip; int8 roams the full kernel set
+//! whatever the ctx routes).
+//!
+//! Parity is asserted before anything is timed: every planned plan must
+//! equal the default compiled plan bit-for-bit under its own ctx (f32
+//! and i8), or the bench aborts. The tuned/paper baselines run other
+//! FP-summation families, so their gate is exact for i8 (integer
+//! accumulation has one right answer) and the kernel-equivalence
+//! tolerance for f32.
+//!
+//! Emits `target/reports/BENCH_plan.json` (schema:
+//! [`swconv::harness::report::PlanBenchRecord`]) with `bench` =
+//! `"plan"`: one `planned` record per budget plus one `greedy-tuned`
+//! and one `paper-policy` record per (model, dtype).
+
+use std::sync::Arc;
+use swconv::autotune::{default_profile_path, DispatchProfile};
+use swconv::graph::{min_feasible_budget, plan_model};
+use swconv::harness::report::{dur, f3, write_plan_bench_json, PlanBenchRecord, Table};
+use swconv::harness::timing::bench;
+use swconv::kernels::ConvAlgo;
+use swconv::nn::{zoo, ExecCtx};
+use swconv::tensor::{Dtype, Tensor};
+
+const BATCH: usize = 2;
+const THREADS: usize = 4;
+/// Cross-algorithm f32 tolerance — the kernel-equivalence suite's bound.
+const CROSS_ALGO_TOL: f32 = 3e-3;
+
+fn assert_parity(got: &Tensor, want: &Tensor, dtype: Dtype, what: &str) {
+    assert_eq!(got.dims(), want.dims(), "{what}: shape");
+    if dtype == Dtype::I8 {
+        // Exact integer accumulation: every route agrees bit for bit.
+        assert_eq!(got.as_slice(), want.as_slice(), "{what}: i8 must be exact");
+    } else {
+        let d = got
+            .as_slice()
+            .iter()
+            .zip(want.as_slice())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(d < CROSS_ALGO_TOL, "{what}: max |diff| {d} over {CROSS_ALGO_TOL}");
+    }
+}
+
+fn main() {
+    let mut t = Table::new(
+        format!("Whole-model planner vs greedy dispatch (batch {BATCH}, {THREADS} threads)"),
+        &["model", "dtype", "policy", "budget", "pred peak", "pred GF/s", "median", "GF/s"],
+    );
+    let mut records: Vec<PlanBenchRecord> = Vec::new();
+    // greedy-tuned dispatches from the machine's autotune cache when one
+    // has been measured; otherwise it degrades to the paper policy (the
+    // bench still contrasts whole-model vs per-kernel routing).
+    let tuned_profile = Arc::new(DispatchProfile::load_or_paper(default_profile_path()));
+    let paper_profile = Arc::new(DispatchProfile::paper_policy());
+    for name in zoo::MODEL_NAMES {
+        let m = zoo::by_name(name, 10, 42).unwrap();
+        let mut shape = vec![BATCH];
+        shape.extend_from_slice(&m.input_shape);
+        let x = Tensor::randn(&shape, 1);
+        for dtype in [Dtype::F32, Dtype::I8] {
+            let ctx = ExecCtx::with_threads(ConvAlgo::Im2colGemm, THREADS).with_dtype(dtype);
+            let compiled = m.compile();
+            let want = compiled.run(&x, &ctx);
+            let flops = compiled.flops(BATCH);
+
+            // The three budgets: the feasibility floor, halfway to the
+            // unbudgeted peak, and unbounded (0 in the JSON).
+            let floor = min_feasible_budget(&compiled, BATCH, &ctx);
+            let free = plan_model(&compiled, BATCH, &ctx, None).expect("unbudgeted plan");
+            let peak = free.predicted_peak_bytes.max(floor);
+            let budgets = [Some(floor), Some(floor + (peak - floor) / 2), None];
+            for budget in budgets {
+                let mp = plan_model(&compiled, BATCH, &ctx, budget)
+                    .unwrap_or_else(|e| panic!("{name} {}: {e}", dtype.name()));
+                let planned = m.compile().with_choices(mp.choices.clone());
+                // Parity gate: a planned plan must reproduce its own
+                // ctx's default route bit for bit, f32 and i8 alike —
+                // timing a wrong answer is worse than none.
+                assert_eq!(
+                    planned.run(&x, &ctx).as_slice(),
+                    want.as_slice(),
+                    "{name} {} budget {budget:?}: planned parity",
+                    dtype.name()
+                );
+                let stats = bench(|| planned.run(&x, &ctx));
+                t.row(vec![
+                    name.into(),
+                    dtype.name().into(),
+                    "planned".into(),
+                    budget.map_or("-".into(), |b| format!("{:.0}KiB", b as f64 / 1024.0)),
+                    format!("{:.0}KiB", mp.predicted_peak_bytes as f64 / 1024.0),
+                    f3(mp.predicted_gflops()),
+                    dur(stats.median),
+                    f3(stats.gflops(flops)),
+                ]);
+                records.push(PlanBenchRecord {
+                    bench: "plan".into(),
+                    model: name.into(),
+                    policy: "planned".into(),
+                    dtype: dtype.name().into(),
+                    threads: THREADS,
+                    budget_bytes: budget.unwrap_or(0),
+                    predicted_peak_bytes: mp.predicted_peak_bytes,
+                    predicted_gflops: mp.predicted_gflops(),
+                    ns_per_iter: stats.median.as_secs_f64() * 1e9,
+                    gflops: stats.gflops(flops),
+                });
+            }
+
+            for (policy, profile) in
+                [("greedy-tuned", &tuned_profile), ("paper-policy", &paper_profile)]
+            {
+                let mut pctx =
+                    ExecCtx::with_threads(ConvAlgo::Tuned, THREADS).with_dtype(dtype);
+                pctx.set_profile(Arc::clone(profile));
+                assert_parity(
+                    &compiled.run(&x, &pctx),
+                    &want,
+                    dtype,
+                    &format!("{name} {}: {policy}", dtype.name()),
+                );
+                let stats = bench(|| compiled.run(&x, &pctx));
+                t.row(vec![
+                    name.into(),
+                    dtype.name().into(),
+                    policy.into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    dur(stats.median),
+                    f3(stats.gflops(flops)),
+                ]);
+                records.push(PlanBenchRecord {
+                    bench: "plan".into(),
+                    model: name.into(),
+                    policy: policy.into(),
+                    dtype: dtype.name().into(),
+                    threads: THREADS,
+                    budget_bytes: 0,
+                    predicted_peak_bytes: 0,
+                    predicted_gflops: 0.0,
+                    ns_per_iter: stats.median.as_secs_f64() * 1e9,
+                    gflops: stats.gflops(flops),
+                });
+            }
+        }
+    }
+    println!("{}", t.render());
+    write_plan_bench_json("target/reports/BENCH_plan.json", &records).expect("json");
+    eprintln!("wrote target/reports/BENCH_plan.json ({} records)", records.len());
+}

@@ -221,19 +221,7 @@ impl DispatchProfile {
         isa: IsaLevel,
     ) -> (TunedAlgo, RowKernel) {
         let k = k.max(1);
-        let nearest = self
-            .entries
-            .iter()
-            .filter(|e| e.dtype == dtype)
-            .min_by_key(|e| {
-                let dk = e.k.abs_diff(k);
-                let dt = e.threads.abs_diff(threads);
-                // Lexicographic: matching ISA level first, then nearest
-                // k, then nearest threads, then smaller k/threads so
-                // ties are deterministic.
-                (e.isa != isa, dk, dt, e.k, e.threads)
-            })
-            .copied();
+        let nearest = self.nearest(k, threads, dtype, isa);
         let clamped = k.min(COMPOUND_MAX_K);
         let (algo, slide) = match nearest {
             Some(e) => (e.algo, e.slide.legal_for(clamped)),
@@ -250,6 +238,45 @@ impl DispatchProfile {
     /// (the [`DispatchProfile::choice`] slide component).
     pub fn row_kernel(&self, k: usize, threads: usize) -> RowKernel {
         self.choice(k, threads).1
+    }
+
+    /// The nearest measured bucket for the query, same dtype only —
+    /// the lexicographic `(isa mismatch, k distance, thread distance,
+    /// smaller k, smaller threads)` order [`DispatchProfile::choice_at`]
+    /// documents.
+    fn nearest(
+        &self,
+        k: usize,
+        threads: usize,
+        dtype: Dtype,
+        isa: IsaLevel,
+    ) -> Option<ProfileEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.dtype == dtype)
+            .min_by_key(|e| {
+                let dk = e.k.abs_diff(k);
+                let dt = e.threads.abs_diff(threads);
+                (e.isa != isa, dk, dt, e.k, e.threads)
+            })
+            .copied()
+    }
+
+    /// The nearest measured bucket's winner and its recorded GFLOP/s,
+    /// for the whole-model planner's throughput prediction
+    /// ([`crate::graph::planner`]): dispatch itself never reads
+    /// `gflops`, but the planner needs an absolute speed anchor per
+    /// `(k, threads, dtype)` to compare layer-wise candidates. `None`
+    /// when no bucket at this dtype was measured (paper-policy
+    /// fallback territory).
+    pub fn measured_at(
+        &self,
+        k: usize,
+        threads: usize,
+        dtype: Dtype,
+        isa: IsaLevel,
+    ) -> Option<(TunedAlgo, f64)> {
+        self.nearest(k.max(1), threads, dtype, isa).map(|e| (e.algo, e.gflops))
     }
 
     /// Serialize to `path` (schema at the
@@ -294,17 +321,33 @@ impl DispatchProfile {
     /// mismatch, or an entry with unknown names / zero buckets — is an
     /// `Err`, never a panic.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::load_versioned(path).map(|(p, _)| p)
+    }
+
+    /// [`DispatchProfile::load`] that also reports the on-disk **schema
+    /// version** (1–3; a versionless pre-versioning cache reports 1).
+    /// Old versions load backward compatibly and silently, which makes a
+    /// degraded v1/v2 cache indistinguishable from a fresh v3 one unless
+    /// the caller surfaces the version — the `autotune` CLI prints it
+    /// for exactly that reason.
+    pub fn load_versioned(path: impl AsRef<Path>) -> Result<(Self, usize)> {
         let path = path.as_ref();
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading profile {}", path.display()))?;
         let j = Json::parse(&text)
             .with_context(|| format!("parsing profile {}", path.display()))?;
-        Self::from_json(&j)
+        Self::from_json_versioned(&j)
     }
 
     /// Parse an already-loaded JSON document (schema at the
     /// [module level](crate::autotune::profile)).
     pub fn from_json(j: &Json) -> Result<Self> {
+        Self::from_json_versioned(j).map(|(p, _)| p)
+    }
+
+    /// [`DispatchProfile::from_json`] returning the document's schema
+    /// version alongside the profile.
+    pub fn from_json_versioned(j: &Json) -> Result<(Self, usize)> {
         // Versionless documents are the pre-versioning format: accept
         // them — like explicit version 1 — as f32-only (the satellite
         // promise: an old cache keeps steering f32 dispatch instead of
@@ -380,7 +423,7 @@ impl DispatchProfile {
             let gflops = field("gflops")?.as_f64().unwrap_or(0.0);
             entries.push(ProfileEntry { k, threads, dtype, isa, algo, slide, gflops });
         }
-        Ok(DispatchProfile { entries })
+        Ok((DispatchProfile { entries }, version))
     }
 
     /// [`DispatchProfile::load`], degraded to the paper policy on any
@@ -552,6 +595,93 @@ mod tests {
             p.choice_for(9, 1, Dtype::Bf16),
             (TunedAlgo::Sliding, RowKernel::Generic)
         );
+    }
+
+    /// Bucket-lookup edges: the lookup is *total* — a query below the
+    /// smallest measured bucket, above the largest, or against a
+    /// single-entry profile always answers (snapping to the nearest
+    /// bucket), never panics.
+    #[test]
+    fn choice_at_edges_below_above_and_single_entry() {
+        let p = sample(); // f32 buckets at k = 3, 9, 33
+        // k below the smallest bucket snaps to k=3's algo; the custom
+        // row cannot evaluate width 1, so the row clamps legal.
+        assert_eq!(p.choice(1, 1), (TunedAlgo::Sliding, RowKernel::Generic));
+        assert_eq!(p.choice(2, 1).0, TunedAlgo::Sliding);
+        // k above the largest bucket snaps to k=33 (direct), at any
+        // thread count — including thread counts never measured.
+        assert_eq!(p.choice(1000, 1).0, TunedAlgo::Direct);
+        assert_eq!(p.choice(1000, 999).0, TunedAlgo::Direct);
+        // k=0 is clamped to 1 rather than panicking on the distance math.
+        assert_eq!(p.choice(0, 1), p.choice(1, 1));
+
+        // A single-entry profile answers every query from that entry
+        // (clamped legal), regardless of distance or direction.
+        let single = DispatchProfile::from_entries(vec![ProfileEntry {
+            k: 9,
+            threads: 4,
+            dtype: Dtype::F32,
+            isa: IsaLevel::Scalar,
+            algo: TunedAlgo::Gemm,
+            slide: RowKernel::Generic,
+            gflops: 12.0,
+        }]);
+        for (k, threads) in [(1, 1), (9, 4), (500, 1), (9, 64), (COMPOUND_MAX_K + 40, 2)] {
+            let (algo, slide) = single.choice(k, threads);
+            assert_eq!(algo, TunedAlgo::Gemm, "k={k} t={threads}");
+            assert_eq!(slide, RowKernel::Generic.legal_for(k.min(COMPOUND_MAX_K)));
+        }
+        // And the empty profile stays total too (paper policy).
+        let empty = DispatchProfile::paper_policy();
+        for k in [0usize, 1, 2, 17, 18, COMPOUND_MAX_K, COMPOUND_MAX_K + 1, 10_000] {
+            let _ = empty.choice(k, 1); // must not panic
+        }
+    }
+
+    #[test]
+    fn measured_at_reports_the_nearest_winner_and_throughput() {
+        let p = sample();
+        assert_eq!(
+            p.measured_at(3, 1, Dtype::F32, IsaLevel::Scalar),
+            Some((TunedAlgo::Sliding, 10.5))
+        );
+        // Nearest-bucket semantics match choice_at's.
+        assert_eq!(
+            p.measured_at(40, 1, Dtype::F32, IsaLevel::Scalar),
+            Some((TunedAlgo::Direct, 2.0))
+        );
+        assert_eq!(
+            p.measured_at(9, 1, Dtype::I8, IsaLevel::Scalar),
+            Some((TunedAlgo::Gemm, 55.0))
+        );
+        // No bucket at the dtype → None (planner falls to flat priors).
+        assert_eq!(p.measured_at(9, 1, Dtype::Bf16, IsaLevel::Scalar), None);
+        assert_eq!(
+            DispatchProfile::paper_policy().measured_at(9, 1, Dtype::F32, IsaLevel::Scalar),
+            None
+        );
+    }
+
+    #[test]
+    fn load_versioned_reports_the_schema_version() {
+        let dir = std::env::temp_dir();
+        let p = sample();
+        let path = dir.join("swconv_profile_versioned.json");
+        p.save(&path).unwrap();
+        let (q, version) = DispatchProfile::load_versioned(&path).unwrap();
+        assert_eq!(version, 3, "save writes the current schema");
+        assert_eq!(p, q);
+        let _ = std::fs::remove_file(&path);
+        // A versionless document reports version 1.
+        let versionless = format!(
+            "{{\"lanes\": {LANES}, \"entries\": [\
+             {{\"k\": 9, \"threads\": 1, \"algo\": \"gemm\", \"slide\": \"generic\", \
+             \"gflops\": 4.0}}]}}"
+        );
+        std::fs::write(&path, versionless).unwrap();
+        let (_, version) = DispatchProfile::load_versioned(&path).unwrap();
+        assert_eq!(version, 1);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -36,9 +36,15 @@ pub enum PinPolicy {
 
 impl PinPolicy {
     /// The core slice replica `replica` of `replicas` should run on:
-    /// `None` when the policy doesn't pin. Slices are round-robin
-    /// ([`CoreSet::split`]) and never empty, so every replica always has
-    /// somewhere to run.
+    /// `None` when the policy doesn't pin. Slices are never empty, so
+    /// every replica always has somewhere to run. [`PinPolicy::Auto`] is
+    /// topology-aware: when sysfs exposes the machine's NUMA nodes
+    /// ([`crate::exec::numa_nodes`]) the slices follow node boundaries
+    /// ([`CoreSet::split_by_nodes`]) — one replica's threads never
+    /// straddle a node — and fall back to round-robin
+    /// ([`CoreSet::split`]) where sysfs is absent. Explicit
+    /// [`PinPolicy::Cores`] sets stay plain round-robin: the operator
+    /// who typed the core list owns its layout.
     pub fn slice_for(&self, replica: usize, replicas: usize) -> Option<CoreSet> {
         let base = match self {
             PinPolicy::None => return None,
@@ -49,7 +55,11 @@ impl PinPolicy {
             return None;
         }
         let replicas = replicas.max(1);
-        Some(base.split(replicas)[replica % replicas].clone())
+        let slices = match (self, crate::exec::numa_nodes()) {
+            (PinPolicy::Auto, Some(nodes)) => base.split_by_nodes(replicas, &nodes),
+            _ => base.split(replicas),
+        };
+        Some(slices[replica % replicas].clone())
     }
 }
 
@@ -519,6 +529,53 @@ impl BackendSpec {
         }
     }
 
+    /// [`BackendSpec::native`] with a whole-model planner plan: the
+    /// tier compiles once, runs [`crate::graph::plan_model`] at batch
+    /// size `plan_batch` under `budget_bytes`, and every replica serves
+    /// the *planned* [`CompiledPlan`] — per-node algorithm ×
+    /// worker-split choices attached via
+    /// [`CompiledPlan::with_choices`] — shared behind one `Arc` exactly
+    /// like the weights. Planning only re-routes between bit-identical
+    /// kernels, so a planned tier's outputs match an unplanned one's
+    /// byte for byte; the plan's dtype follows `ctx`'s serving dtype.
+    /// Errors when no plan fits the budget
+    /// ([`crate::graph::PlanError::Infeasible`]) — an explicit refusal,
+    /// never a silent fallback to an over-budget plan.
+    pub fn native_planned(
+        name: impl Into<String>,
+        model: Model,
+        ctx: ExecCtx,
+        plan_batch: usize,
+        budget_bytes: Option<u64>,
+    ) -> Result<Self> {
+        let name = name.into();
+        let item_shape = model.input_shape.clone();
+        let n2 = name.clone();
+        let compiled = model.compile();
+        let planned = match crate::graph::plan_model(&compiled, plan_batch, &ctx, budget_bytes) {
+            Ok(mp) => mp,
+            Err(e) => bail!("planned tier '{name}': {e}"),
+        };
+        let plan = Arc::new(compiled.with_choices(planned.choices));
+        Ok(BackendSpec {
+            name,
+            item_shape,
+            replicas: 1,
+            factory: Arc::new(move |_replica| {
+                let b = NativeBackend::with_plan(
+                    n2.clone(),
+                    model.clone(),
+                    Arc::clone(&plan),
+                    ctx.clone(),
+                );
+                Ok(Box::new(b) as Box<dyn Backend>)
+            }),
+            profile: None,
+            dtype: Dtype::F32,
+            pinning: PinPolicy::None,
+        })
+    }
+
     /// [`BackendSpec::native`] with streaming-session idle eviction:
     /// every replica evicts sessions untouched for `stream_idle` on its
     /// idle tick ([`NativeBackend::with_stream_idle`]). Use for tiers
@@ -919,6 +976,49 @@ mod tests {
         assert!(Arc::ptr_eq(r0.plan(), r1.plan()), "replicas share one plan");
         assert_eq!(r0.infer(&x).unwrap().as_slice(), want.as_slice());
         assert_eq!(r1.infer(&x).unwrap().as_slice(), want.as_slice());
+    }
+
+    /// A planner-driven tier serves the planned plan bit-identically to
+    /// an unplanned native tier, and replicas share the one planned
+    /// plan object the way they share weights.
+    #[test]
+    fn native_planned_replicas_match_unplanned_bitwise() {
+        let x = Tensor::randn(&[3, 1, 28, 28], 17);
+        let mut plain = NativeBackend::new(
+            "plain",
+            simple_cnn(10, 1),
+            ExecCtx::with_threads(ConvAlgo::Sliding, 2),
+        );
+        let want = plain.infer(&x).unwrap();
+        let spec = BackendSpec::native_planned(
+            "planned",
+            simple_cnn(10, 1),
+            ExecCtx::with_threads(ConvAlgo::Sliding, 2),
+            1,
+            None,
+        )
+        .expect("unbudgeted planning always succeeds");
+        let mut r0 = spec.factory.as_ref()(0).unwrap();
+        let mut r1 = spec.factory.as_ref()(1).unwrap();
+        assert_eq!(r0.infer(&x).unwrap().as_slice(), want.as_slice());
+        assert_eq!(r1.infer(&x).unwrap().as_slice(), want.as_slice());
+    }
+
+    /// An infeasible memory budget is a constructor-time error — the
+    /// tier refuses to exist rather than silently serving over budget.
+    #[test]
+    fn native_planned_rejects_infeasible_budgets() {
+        let err = BackendSpec::native_planned(
+            "squeezed",
+            simple_cnn(10, 1),
+            ExecCtx::new(ConvAlgo::Sliding),
+            1,
+            Some(1),
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("no feasible plan"), "got: {msg}");
+        assert!(msg.contains("squeezed"), "names the tier: {msg}");
     }
 
     #[test]

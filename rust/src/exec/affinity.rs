@@ -137,6 +137,50 @@ impl CoreSet {
             .collect()
     }
 
+    /// Cores present in both sets (ascending, like every `CoreSet`).
+    pub fn intersect(&self, other: &CoreSet) -> CoreSet {
+        CoreSet { cores: self.cores.iter().copied().filter(|&c| other.contains(c)).collect() }
+    }
+
+    /// Split into `parts` slices aligned to NUMA `nodes` boundaries.
+    /// With `parts <= nodes` each slice is a union of *whole* nodes
+    /// (node `j` goes to slice `j % parts`), so every core is used and
+    /// no slice splits a node; with more parts than nodes, node `j` of
+    /// `n` hosts replicas `j, j+n, j+2n, …`, sub-split within the node
+    /// — either way a pinned replica's kernel threads, and the scratch
+    /// pages they first-touch, never straddle a node they don't own
+    /// outright. Falls back to plain round-robin [`CoreSet::split`]
+    /// when fewer than two nodes intersect the set, or when the nodes
+    /// don't cover every core in it (a topology-blind split at least
+    /// uses all the cores).
+    ///
+    /// # Panics
+    /// If `parts` is zero or the set is empty.
+    pub fn split_by_nodes(&self, parts: usize, nodes: &[CoreSet]) -> Vec<CoreSet> {
+        assert!(parts > 0, "split needs at least one part");
+        assert!(!self.is_empty(), "cannot split an empty core set");
+        let local: Vec<CoreSet> =
+            nodes.iter().map(|n| self.intersect(n)).filter(|s| !s.is_empty()).collect();
+        let covered: usize = local.iter().map(|s| s.len()).sum();
+        if local.len() < 2 || covered < self.len() {
+            return self.split(parts);
+        }
+        if parts <= local.len() {
+            let mut out: Vec<Vec<usize>> = vec![Vec::new(); parts];
+            for (j, node) in local.iter().enumerate() {
+                out[j % parts].extend_from_slice(node.cores());
+            }
+            return out.into_iter().map(|cores| CoreSet::from_cores(&cores)).collect();
+        }
+        (0..parts)
+            .map(|i| {
+                let j = i % local.len();
+                let hosted = (parts - j).div_ceil(local.len());
+                local[j].split(hosted)[i / local.len()].clone()
+            })
+            .collect()
+    }
+
     /// The affinity bitmask (`u64` words, bit `c % 64` of word `c / 64`)
     /// `sched_setaffinity` takes.
     fn mask_words(&self) -> Vec<u64> {
@@ -147,6 +191,46 @@ impl CoreSet {
         }
         words
     }
+}
+
+/// The machine's NUMA node topology as one [`CoreSet`] per node, read
+/// from `/sys/devices/system/node/node*/cpulist` (the kernel emits the
+/// same `0-3,8` syntax [`CoreSet::parse`] accepts). Nodes come back
+/// sorted by node id. Returns `None` when sysfs is absent (non-Linux,
+/// sandboxes) or yields no parseable node — callers fall back to
+/// topology-blind round-robin splitting.
+pub fn numa_nodes() -> Option<Vec<CoreSet>> {
+    numa_nodes_from("/sys/devices/system/node")
+}
+
+/// [`numa_nodes`] against an arbitrary root directory, so tests can
+/// exercise the parse on a synthetic sysfs tree.
+fn numa_nodes_from(root: &str) -> Option<Vec<CoreSet>> {
+    let entries = std::fs::read_dir(root).ok()?;
+    let mut nodes: Vec<(usize, CoreSet)> = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let id: usize = match name.strip_prefix("node").and_then(|s| s.parse().ok()) {
+            Some(id) => id,
+            None => continue,
+        };
+        let cpulist = entry.path().join("cpulist");
+        let text = match std::fs::read_to_string(&cpulist) {
+            Ok(t) => t,
+            Err(_) => continue,
+        };
+        if let Ok(set) = CoreSet::parse(text.trim()) {
+            if !set.is_empty() {
+                nodes.push((id, set));
+            }
+        }
+    }
+    if nodes.is_empty() {
+        return None;
+    }
+    nodes.sort_by_key(|(id, _)| *id);
+    Some(nodes.into_iter().map(|(_, set)| set).collect())
 }
 
 fn parse_core(s: &str) -> Result<usize> {
@@ -314,6 +398,77 @@ mod tests {
         assert!(set.contains(64));
         assert!(!set.contains(2));
         assert_eq!(set.nth_wrapped(5), set.cores()[5 % 3]);
+    }
+
+    #[test]
+    fn intersect_keeps_common_cores() {
+        let a = CoreSet::parse("0-5").unwrap();
+        let b = CoreSet::parse("4-9").unwrap();
+        assert_eq!(a.intersect(&b).cores(), &[4, 5]);
+        assert!(a.intersect(&CoreSet::from_cores(&[])).is_empty());
+    }
+
+    #[test]
+    fn split_by_nodes_keeps_slices_inside_one_node() {
+        let base = CoreSet::parse("0-7").unwrap();
+        let nodes = [CoreSet::parse("0-3").unwrap(), CoreSet::parse("4-7").unwrap()];
+        // A sole replica keeps the whole machine (union of all nodes).
+        assert_eq!(base.split_by_nodes(1, &nodes), vec![base.clone()]);
+        // One replica per node: each slice IS a node.
+        let two = base.split_by_nodes(2, &nodes);
+        assert_eq!(two[0].cores(), &[0, 1, 2, 3]);
+        assert_eq!(two[1].cores(), &[4, 5, 6, 7]);
+        // Two replicas per node: sub-split within the node, never
+        // straddling the boundary.
+        let four = base.split_by_nodes(4, &nodes);
+        assert_eq!(four.len(), 4);
+        for (i, slice) in four.iter().enumerate() {
+            let node = &nodes[i % 2];
+            assert!(
+                slice.cores().iter().all(|&c| node.contains(c)),
+                "slice {i} ({slice}) straddles a node boundary"
+            );
+        }
+        // Odd replica counts still cover: 3 parts over 2 nodes puts two
+        // replicas on node 0 and one (whole-node) on node 1.
+        let three = base.split_by_nodes(3, &nodes);
+        assert_eq!(three[1].cores(), &[4, 5, 6, 7]);
+        assert!(three[0].cores().iter().all(|&c| nodes[0].contains(c)));
+        assert!(three[2].cores().iter().all(|&c| nodes[0].contains(c)));
+    }
+
+    #[test]
+    fn split_by_nodes_falls_back_to_round_robin() {
+        let base = CoreSet::parse("0-5").unwrap();
+        // Single node (or none): topology adds nothing, plain split.
+        assert_eq!(base.split_by_nodes(2, &[base.clone()]), base.split(2));
+        assert_eq!(base.split_by_nodes(2, &[]), base.split(2));
+        // Nodes that don't cover the whole set: fall back rather than
+        // silently dropping the uncovered cores.
+        let partial = [CoreSet::parse("0-1").unwrap(), CoreSet::parse("2-3").unwrap()];
+        assert_eq!(base.split_by_nodes(2, &partial), base.split(2));
+    }
+
+    #[test]
+    fn numa_nodes_parse_a_synthetic_sysfs_tree() {
+        let root = std::env::temp_dir().join(format!("swconv_numa_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        for (node, cpulist) in [("node1", "8-15\n"), ("node0", "0-7\n")] {
+            let dir = root.join(node);
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(dir.join("cpulist"), cpulist).unwrap();
+        }
+        // Distractors the parser must skip: non-node entries and a node
+        // directory without a cpulist.
+        std::fs::create_dir_all(root.join("possible")).unwrap();
+        std::fs::create_dir_all(root.join("node9")).unwrap();
+        let nodes = numa_nodes_from(root.to_str().unwrap()).expect("two nodes parse");
+        assert_eq!(nodes.len(), 2, "node9 (no cpulist) and 'possible' are skipped");
+        assert_eq!(nodes[0].cores(), (0..8).collect::<Vec<_>>().as_slice(), "sorted by id");
+        assert_eq!(nodes[1].cores(), (8..16).collect::<Vec<_>>().as_slice());
+        let _ = std::fs::remove_dir_all(&root);
+        // A missing root is `None`, never an error.
+        assert!(numa_nodes_from(root.to_str().unwrap()).is_none());
     }
 
     #[test]

@@ -56,7 +56,7 @@
 pub mod affinity;
 pub mod pool;
 
-pub use affinity::CoreSet;
+pub use affinity::{numa_nodes, CoreSet};
 pub use pool::WorkerPool;
 
 use crate::autotune::{DispatchProfile, TunedAlgo};
@@ -168,6 +168,13 @@ pub struct ExecCtx {
     /// Convolution algorithm for all conv layers routed through this ctx.
     pub algo: ConvAlgo,
     threads: usize,
+    /// Temporary worker cap (0 = uncapped): [`ExecCtx::threads`] answers
+    /// `min(threads, cap)` while a cap is set. The planned executor sets
+    /// it around a single node's kernels when the plan chose a narrower
+    /// split than the ctx-wide count ([`crate::graph::PlannedChoice`]);
+    /// results are bit-identical for any thread count, so the cap is a
+    /// pure performance/footprint knob.
+    thread_cap: AtomicUsize,
     dtype: Dtype,
     /// Instruction-set level the kernels dispatch at; defaults to the
     /// process-wide effective level ([`IsaLevel::effective`]).
@@ -197,6 +204,7 @@ impl ExecCtx {
         ExecCtx {
             algo,
             threads: threads.max(1),
+            thread_cap: AtomicUsize::new(0),
             dtype: Dtype::F32,
             isa: IsaLevel::effective(),
             arena: Mutex::new(ArenaState {
@@ -368,9 +376,25 @@ impl ExecCtx {
         self.tuned_choice(k).1
     }
 
-    /// Worker-thread count.
+    /// Worker-thread count the next parallel region fans out to: the
+    /// configured count, narrowed by the active cap when one is set
+    /// ([`ExecCtx::set_thread_cap`]).
     pub fn threads(&self) -> usize {
-        self.threads
+        match self.thread_cap.load(Ordering::Relaxed) {
+            0 => self.threads,
+            cap => self.threads.min(cap),
+        }
+    }
+
+    /// Set (non-zero) or clear (0) the temporary worker cap. The ctx's
+    /// configured thread count — and the pool built from it — is
+    /// untouched; only how many workers the next regions use changes.
+    /// Partitioning is deterministic per worker count, so capping keeps
+    /// results bit-identical while shrinking the number of concurrently
+    /// live scratch buffers — the lever the whole-model planner pulls
+    /// per node ([`crate::graph::ModelPlan`]).
+    pub fn set_thread_cap(&self, cap: usize) {
+        self.thread_cap.store(cap, Ordering::Relaxed);
     }
 
     /// Number of scratch-buffer allocations (or capacity growths) so
@@ -595,7 +619,7 @@ impl ExecCtx {
         assert!(chunk > 0, "par_chunks needs a positive chunk size");
         assert_eq!(data.len() % chunk, 0, "data not a whole number of chunks");
         let items = data.len() / chunk;
-        let workers = self.threads.min(items);
+        let workers = self.threads().min(items);
         if workers <= 1 || pool::on_pool_worker() {
             if items == 0 {
                 return;
@@ -941,6 +965,26 @@ mod tests {
         // paper policy rather than borrowing f32 buckets.
         let qctx = ExecCtx::new(ConvAlgo::Tuned).with_dtype(Dtype::I8);
         assert_eq!(qctx.tuned_choice(5), (TunedAlgo::Sliding, RowKernel::Custom));
+    }
+
+    #[test]
+    fn thread_cap_narrows_regions_without_changing_results() {
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 4);
+        assert_eq!(ctx.threads(), 4);
+        ctx.set_thread_cap(2);
+        assert_eq!(ctx.threads(), 2);
+        let mut capped = vec![0.0f32; 12];
+        ctx.par_chunks(&mut capped, 3, |i, c| c.fill(i as f32 + 1.0));
+        ctx.set_thread_cap(0);
+        assert_eq!(ctx.threads(), 4, "cap 0 clears");
+        let mut full = vec![0.0f32; 12];
+        ctx.par_chunks(&mut full, 3, |i, c| c.fill(i as f32 + 1.0));
+        assert_eq!(capped, full, "capping must not change results");
+        // A cap above the configured count is a no-op, and clones start
+        // uncapped regardless of the source's cap.
+        ctx.set_thread_cap(99);
+        assert_eq!(ctx.threads(), 4);
+        assert_eq!(ctx.clone().threads(), 4);
     }
 
     #[test]

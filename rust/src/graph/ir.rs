@@ -289,21 +289,33 @@ impl Graph {
         self.output = remap[self.output];
     }
 
+    /// FLOPs for one evaluation of node `id` at batch `n` (the
+    /// per-node term [`Graph::flops`] sums; the planner's cost input).
+    pub fn node_flops(&self, id: NodeId, n: usize) -> u64 {
+        let node = &self.nodes[id];
+        let ins: Vec<Vec<usize>> =
+            node.inputs.iter().map(|&i| scale_batch(&self.nodes[i].shape, n)).collect();
+        let ins_ref: Vec<&[usize]> = ins.iter().map(|s| s.as_slice()).collect();
+        node.op.flops(&ins_ref, &scale_batch(&node.shape, n))
+    }
+
+    /// Bytes node `id`'s output tensor occupies at batch `n`: one byte
+    /// per element for a `quant_out` node (i8 codes), four otherwise.
+    /// The input placeholder is borrowed from the caller, so node 0
+    /// reports 0 — matching what the executor actually allocates.
+    pub fn node_activation_bytes(&self, id: NodeId, n: usize) -> u64 {
+        if id == 0 {
+            return 0;
+        }
+        let node = &self.nodes[id];
+        let numel: usize = scale_batch(&node.shape, n).iter().product();
+        numel as u64 * if node.quant_out { 1 } else { 4 }
+    }
+
     /// Total FLOPs for one forward pass at batch `n` (same conventions
     /// as [`crate::nn::Model::flops`]).
     pub fn flops(&self, n: usize) -> u64 {
-        self.nodes
-            .iter()
-            .map(|node| {
-                let ins: Vec<Vec<usize>> = node
-                    .inputs
-                    .iter()
-                    .map(|&i| scale_batch(&self.nodes[i].shape, n))
-                    .collect();
-                let ins_ref: Vec<&[usize]> = ins.iter().map(|s| s.as_slice()).collect();
-                node.op.flops(&ins_ref, &scale_batch(&node.shape, n))
-            })
-            .sum()
+        (0..self.nodes.len()).map(|id| self.node_flops(id, n)).sum()
     }
 
     /// Bytes of activation memory the executor writes for one forward
@@ -313,14 +325,7 @@ impl Graph {
     /// `benches/graph_fusion.rs` reports — fusion removes whole nodes,
     /// so it shrinks this sum directly.
     pub fn activation_bytes(&self, n: usize) -> u64 {
-        self.nodes
-            .iter()
-            .skip(1)
-            .map(|node| {
-                let numel: usize = scale_batch(&node.shape, n).iter().product();
-                numel as u64 * if node.quant_out { 1 } else { 4 }
-            })
-            .sum()
+        (0..self.nodes.len()).map(|id| self.node_activation_bytes(id, n)).sum()
     }
 
     /// Human-readable rendering (the CLI `compile` subcommand's

@@ -12,26 +12,66 @@
 //! activation tensor, which on commodity CPUs is worth more than the
 //! arithmetic it rearranges.
 //!
+//! On top of compilation sits the whole-model [`planner`]: it consumes
+//! the graph's per-node FLOP/byte accounting plus the cached
+//! [`crate::autotune::DispatchProfile`] and assigns each conv node a
+//! [`PlannedChoice`] — algorithm × worker split — under a peak-memory
+//! budget; [`CompiledPlan::with_choices`] makes the executor honour it.
+//!
 //! The `SWCONV_NO_FUSE` environment variable (any non-empty value other
 //! than `"0"`) disables the pass pipeline process-wide —
 //! [`crate::nn::Model::compile`] then returns a verbatim, unfused plan.
 //! The CLI's `--no-fuse` flag sets the same switch. This mirrors the
 //! `SWCONV_NO_POOL` escape hatch for the worker pool: a one-knob A/B
-//! lever for benchmarks and CI.
+//! lever for benchmarks and CI; `SWCONV_FORCE_PLAN` ([`plan_forced`])
+//! is the planner's own lever — every compile attaches a planner plan,
+//! so the whole suite runs the planned routing.
 
 pub mod ir;
 pub mod passes;
 pub mod plan;
+pub mod planner;
 
 pub use ir::{Graph, Node, NodeId, Op};
 pub use passes::{optimize, PassSummary};
 pub use plan::CompiledPlan;
+pub use planner::{
+    min_feasible_budget, plan_model, ModelPlan, PlanAlgo, PlanError, PlannedChoice,
+};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Once;
 
 static FUSION_DISABLED: AtomicBool = AtomicBool::new(false);
 static FUSION_INIT: Once = Once::new();
+
+static PLAN_FORCED: AtomicBool = AtomicBool::new(false);
+static PLAN_INIT: Once = Once::new();
+
+/// Should every [`crate::nn::Model::compile`] attach a planner-produced
+/// per-node plan? First call consults the `SWCONV_FORCE_PLAN`
+/// environment variable (any non-empty value other than `"0"`); later
+/// calls (and [`set_plan_forced`]) just read/write the cached flag. The
+/// CI plan leg runs the whole test suite with this set, so every zoo
+/// model exercises the planned routing paths end to end — legal because
+/// the executor honours a choice only where it provably preserves bits
+/// (int8 routes are exact; an f32 choice outside the running ctx's
+/// FP-summation family degrades to the ctx route, worker cap intact).
+pub fn plan_forced() -> bool {
+    PLAN_INIT.call_once(|| {
+        let forced =
+            matches!(std::env::var("SWCONV_FORCE_PLAN"), Ok(v) if !v.is_empty() && v != "0");
+        PLAN_FORCED.store(forced, Ordering::Relaxed);
+    });
+    PLAN_FORCED.load(Ordering::Relaxed)
+}
+
+/// Override the forced-plan switch programmatically. Wins over the
+/// environment variable regardless of call order.
+pub fn set_plan_forced(forced: bool) {
+    PLAN_INIT.call_once(|| {});
+    PLAN_FORCED.store(forced, Ordering::Relaxed);
+}
 
 /// Is graph fusion disabled process-wide? First call consults the
 /// `SWCONV_NO_FUSE` environment variable; later calls (and

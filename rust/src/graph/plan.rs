@@ -21,10 +21,18 @@
 
 use super::ir::{Graph, Op};
 use super::passes::PassSummary;
+use super::planner::{PlanAlgo, PlannedChoice};
 use crate::exec::ExecCtx;
+use crate::kernels::direct::conv2d_direct_epi_ctx;
+use crate::kernels::im2col::{
+    conv2d_im2col_epi_ctx, conv2d_im2col_lowmem_epi_ctx, conv2d_im2col_lowmem_q8_raw_ctx,
+    conv2d_im2col_q8_raw_ctx,
+};
+use crate::kernels::sliding2d::{conv2d_sliding_epi_ctx, conv2d_sliding_q8_raw_ctx, SlideVariant};
 use crate::kernels::{
     avg_pool2d_ctx, conv2d_bf16_epi_ctx, conv2d_epi_ctx, conv2d_q8_epi_ctx,
-    conv2d_q8_raw_routed_ctx, dequantize_conv_acc, max_pool2d_ctx, quantize_conv_acc, Epilogue,
+    conv2d_q8_raw_routed_ctx, dequantize_conv_acc, max_pool2d_ctx, quantize_conv_acc, Conv2dParams,
+    Epilogue,
 };
 use crate::nn::layers::{
     concat_channels, global_avg_pool, linear_forward, softmax_rows_inplace, zero_pad2d,
@@ -63,13 +71,42 @@ pub struct CompiledPlan {
     /// Consumer count per node (+1 on the output), fixed at compile
     /// time; each run counts down a copy to recycle buffers eagerly.
     uses: Vec<usize>,
+    /// Planner-assigned per-node kernel choices
+    /// ([`CompiledPlan::with_choices`]); `None` = default routing. When
+    /// present, conv nodes run the chosen algorithm with the chosen
+    /// worker cap — bit-identical to the default route: int8 routes are
+    /// exact, and an f32 choice is honoured only while it sits in the
+    /// same FP-summation family as the ctx's own route
+    /// ([`super::planner::f32_family_compatible`]); outside that family
+    /// (a plan made for a different serving ctx) the node degrades to
+    /// the ctx's routing, keeping the worker cap — capping is always
+    /// value-safe.
+    choices: Option<Vec<Option<PlannedChoice>>>,
 }
 
 impl CompiledPlan {
     /// Wrap an optimized graph.
     pub(crate) fn new(graph: Graph, summary: PassSummary) -> Self {
         let uses = graph.consumer_counts();
-        CompiledPlan { graph, summary, uses }
+        CompiledPlan { graph, summary, uses, choices: None }
+    }
+
+    /// Attach a planner-produced per-node choice vector (one entry per
+    /// graph node; [`crate::graph::ModelPlan::choices`]). The executor
+    /// then routes each planned conv node to its chosen kernel under
+    /// its chosen worker cap.
+    ///
+    /// # Panics
+    /// If the vector's length differs from the node count.
+    pub fn with_choices(mut self, choices: Vec<Option<PlannedChoice>>) -> Self {
+        assert_eq!(choices.len(), self.graph.nodes.len(), "one choice slot per node");
+        self.choices = Some(choices);
+        self
+    }
+
+    /// The attached per-node plan, if any.
+    pub fn choices(&self) -> Option<&[Option<PlannedChoice>]> {
+        self.choices.as_deref()
     }
 
     /// Model name this plan was compiled from.
@@ -141,6 +178,11 @@ impl CompiledPlan {
         }
     }
 
+    /// The planner's choice for node `id`, when a plan is attached.
+    fn choice_at(&self, id: usize) -> Option<&PlannedChoice> {
+        self.choices.as_ref().and_then(|c| c[id].as_ref())
+    }
+
     fn eval(&self, id: usize, slots: &[Slot<'_>], ctx: &ExecCtx) -> Value {
         let node = &self.graph.nodes[id];
         let f32_in = |i: usize| -> &Tensor {
@@ -157,40 +199,80 @@ impl CompiledPlan {
             Op::Input => unreachable!("node 0 is pre-filled"),
             Op::Conv2d { w, bias, params } => {
                 let x = f32_in(0);
+                let choice = self.choice_at(id);
+                let _cap = choice.map(|c| CapGuard::set(ctx, c.threads));
                 // Mirrors Conv2d::forward's dtype dispatch, with the
-                // fused epilogue threaded into each route.
+                // fused epilogue threaded into each route; a planned
+                // node runs its chosen kernel instead of the ctx-wide
+                // routing (same values either way — the plan only picks
+                // among parity-tested implementations).
                 Value::F32(match ctx.dtype() {
-                    Dtype::F32 | Dtype::I32 => conv2d_epi_ctx(
-                        x,
-                        w,
-                        Epilogue::from_bias(Some(bias)).with_relu(node.fused_relu),
-                        params,
-                        ctx,
-                    ),
+                    Dtype::F32 | Dtype::I32 => {
+                        let epi = Epilogue::from_bias(Some(bias)).with_relu(node.fused_relu);
+                        // An f32 choice is honoured only inside the
+                        // ctx route's FP-summation family — a plan made
+                        // for another serving ctx must never change
+                        // bits, so it degrades to the ctx's routing
+                        // (the worker cap above still applies).
+                        let route = super::planner::default_route(ctx, w.dim(3), ctx.dtype());
+                        match choice {
+                            Some(c) if super::planner::f32_family_compatible(c.algo, route) => {
+                                conv2d_planned_epi_ctx(x, w, epi, params, c.algo, ctx)
+                            }
+                            _ => conv2d_epi_ctx(x, w, epi, params, ctx),
+                        }
+                    }
+                    // bf16 is a sliding-only dtype: the planned route
+                    // and the default route are the same kernel.
                     Dtype::Bf16 => {
                         conv2d_bf16_epi_ctx(x, w, Some(bias), node.fused_relu, params, ctx)
                     }
                     Dtype::I8 => {
                         let wq = QuantParams::for_tensor(w);
                         let qw = quantize(w, wq);
-                        conv2d_q8_epi_ctx(
-                            x,
-                            &qw,
-                            &WeightScales::PerTensor(wq),
-                            Some(bias),
-                            node.fused_relu,
-                            params,
-                            ctx,
-                        )
+                        match choice {
+                            Some(c) => {
+                                // conv2d_q8_epi_ctx's exact sequence
+                                // with the raw kernel forced to the
+                                // planned algorithm (exact i32 either
+                                // way).
+                                let xq = QuantParams::for_tensor(x);
+                                let qx = quantize(x, xq);
+                                let raw =
+                                    conv2d_q8_raw_planned_ctx(&qx, &qw, params, c.algo, ctx);
+                                dequantize_conv_acc(
+                                    &raw,
+                                    xq,
+                                    &WeightScales::PerTensor(wq),
+                                    Some(bias),
+                                    node.fused_relu,
+                                )
+                            }
+                            None => conv2d_q8_epi_ctx(
+                                x,
+                                &qw,
+                                &WeightScales::PerTensor(wq),
+                                Some(bias),
+                                node.fused_relu,
+                                params,
+                                ctx,
+                            ),
+                        }
                     }
                 })
             }
             Op::QuantConv2d { qw, wq, bias, params } => {
+                let choice = self.choice_at(id);
+                let _cap = choice.map(|c| CapGuard::set(ctx, c.threads));
+                let raw_of = |qx: &TensorT<i8>| match choice {
+                    Some(c) => conv2d_q8_raw_planned_ctx(qx, qw, params, c.algo, ctx),
+                    None => conv2d_q8_raw_routed_ctx(qx, qw, params, ctx),
+                };
                 match &slots[node.inputs[0]] {
                     Slot::Owned(Value::Q8(qx, xq)) => {
                         // Hoisted boundary: consume the producer's codes
                         // directly — no f32 tensor in between.
-                        let raw = conv2d_q8_raw_routed_ctx(qx, qw, params, ctx);
+                        let raw = raw_of(qx);
                         if node.quant_out {
                             let (codes, q) =
                                 quantize_conv_acc(&raw, *xq, wq, Some(bias), node.fused_relu);
@@ -207,22 +289,23 @@ impl CompiledPlan {
                     }
                     _ => {
                         let x = f32_in(0);
+                        let xq = QuantParams::for_tensor(x);
+                        let qx = quantize(x, xq);
+                        let raw = raw_of(&qx);
                         if node.quant_out {
-                            let xq = QuantParams::for_tensor(x);
-                            let qx = quantize(x, xq);
-                            let raw = conv2d_q8_raw_routed_ctx(&qx, qw, params, ctx);
                             let (codes, q) =
                                 quantize_conv_acc(&raw, xq, wq, Some(bias), node.fused_relu);
                             Value::Q8(codes, q)
                         } else {
-                            Value::F32(conv2d_q8_epi_ctx(
-                                x,
-                                qw,
+                            // The conv2d_q8_epi_ctx sequence inlined:
+                            // dynamic per-tensor activation quantization
+                            // around the routed (or planned) raw kernel.
+                            Value::F32(dequantize_conv_acc(
+                                &raw,
+                                xq,
                                 wq,
                                 Some(bias),
                                 node.fused_relu,
-                                params,
-                                ctx,
                             ))
                         }
                     }
@@ -249,6 +332,66 @@ impl CompiledPlan {
             Op::Concat => Value::F32(concat_channels(f32_in(0), f32_in(1))),
             Op::Opaque(l) => Value::F32(l.forward(f32_in(0), ctx)),
         }
+    }
+}
+
+/// RAII worker cap for one planned node's kernels: narrows the ctx to
+/// the plan's worker count on construction, clears the cap on drop —
+/// panic included — so the next node starts uncapped. Capping is a pure
+/// footprint/speed knob: partitioning is deterministic per worker
+/// count, so results stay bit-identical.
+struct CapGuard<'a> {
+    ctx: &'a ExecCtx,
+}
+
+impl<'a> CapGuard<'a> {
+    fn set(ctx: &'a ExecCtx, threads: usize) -> Self {
+        ctx.set_thread_cap(threads);
+        CapGuard { ctx }
+    }
+}
+
+impl Drop for CapGuard<'_> {
+    fn drop(&mut self) {
+        self.ctx.set_thread_cap(0);
+    }
+}
+
+/// Forced f32 conv routing for a planned node: run exactly the kernel
+/// the planner chose. The caller has already checked the choice sits in
+/// the ctx route's bitwise family, so the choice affects footprint and
+/// speed, never values.
+fn conv2d_planned_epi_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    epi: Epilogue<'_>,
+    p: &Conv2dParams,
+    algo: PlanAlgo,
+    ctx: &ExecCtx,
+) -> Tensor {
+    match algo {
+        PlanAlgo::Direct => conv2d_direct_epi_ctx(x, w, epi, p, ctx),
+        PlanAlgo::Gemm => conv2d_im2col_epi_ctx(x, w, epi, p, ctx),
+        PlanAlgo::GemmLowMem => conv2d_im2col_lowmem_epi_ctx(x, w, epi, p, ctx),
+        PlanAlgo::Sliding => conv2d_sliding_epi_ctx(x, w, epi, p, SlideVariant::Auto, ctx),
+    }
+}
+
+/// Forced int8 raw accumulation for a planned node. All three kernels
+/// produce the identical exact-i32 accumulator; `Direct` (which has no
+/// int8 kernel, and which the planner never emits for int8) degrades to
+/// the sliding kernel — same values.
+fn conv2d_q8_raw_planned_ctx(
+    qx: &TensorT<i8>,
+    qw: &TensorT<i8>,
+    p: &Conv2dParams,
+    algo: PlanAlgo,
+    ctx: &ExecCtx,
+) -> TensorT<i32> {
+    match algo {
+        PlanAlgo::Gemm => conv2d_im2col_q8_raw_ctx(qx, qw, p, ctx),
+        PlanAlgo::GemmLowMem => conv2d_im2col_lowmem_q8_raw_ctx(qx, qw, p, ctx),
+        PlanAlgo::Direct | PlanAlgo::Sliding => conv2d_sliding_q8_raw_ctx(qx, qw, p, ctx),
     }
 }
 
@@ -342,5 +485,101 @@ mod tests {
         let g = Graph::new("t", &[3, 8, 8]);
         let plan = plan_of(g, false);
         plan.run(&Tensor::zeros(&[1, 3, 4, 4]), &ExecCtx::default());
+    }
+
+    fn conv_relu_plan(conv: &Conv2d) -> CompiledPlan {
+        let mut g = Graph::new("t", &[3, 16, 16]);
+        let c = conv.lower_into(&mut g, 0).unwrap();
+        g.add(Op::Relu, vec![c]);
+        plan_of(g, true)
+    }
+
+    fn forced(
+        algo: PlanAlgo,
+        threads: usize,
+        dtype: Dtype,
+        nodes: usize,
+    ) -> Vec<Option<PlannedChoice>> {
+        let mut choices = vec![None; nodes];
+        choices[1] = Some(PlannedChoice {
+            algo,
+            threads,
+            dtype,
+            workspace_bytes: 0,
+            predicted_gflops: 1.0,
+        });
+        choices
+    }
+
+    #[test]
+    fn planned_f32_choices_route_bit_identically_within_the_gemm_family() {
+        // One-shot ↔ strip GEMM is the real f32 interchange: under a
+        // GEMM-routed ctx, both forced choices reproduce the default
+        // route bit for bit (the strip decomposition is order-exact).
+        let conv = Conv2d::new(3, 4, 5, Conv2dParams::same(5), 71);
+        let x = Tensor::randn(&[2, 3, 16, 16], 72);
+        let ctx = ExecCtx::with_threads(ConvAlgo::Im2colGemm, 4);
+        let want = conv_relu_plan(&conv).run(&x, &ctx);
+        for algo in [PlanAlgo::Gemm, PlanAlgo::GemmLowMem] {
+            let plan = conv_relu_plan(&conv);
+            let n = plan.graph.nodes.len();
+            let plan = plan.with_choices(forced(algo, 2, Dtype::F32, n));
+            assert!(plan.choices().is_some());
+            let got = plan.run(&x, &ctx);
+            assert_eq!(got.as_slice(), want.as_slice(), "{algo:?}");
+            assert_eq!(ctx.threads(), 4, "{algo:?}: cap must clear after the node");
+        }
+    }
+
+    #[test]
+    fn cross_family_f32_choices_degrade_to_the_ctx_route() {
+        // A plan made for a different serving ctx must never change
+        // bits: an out-of-family forced algorithm keeps the ctx's own
+        // routing (only the worker cap — always value-safe — applies).
+        let conv = Conv2d::new(3, 4, 5, Conv2dParams::same(5), 71);
+        let x = Tensor::randn(&[2, 3, 16, 16], 72);
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 4);
+        let want = conv_relu_plan(&conv).run(&x, &ctx);
+        for algo in [PlanAlgo::Direct, PlanAlgo::Gemm, PlanAlgo::GemmLowMem] {
+            let plan = conv_relu_plan(&conv);
+            let n = plan.graph.nodes.len();
+            let plan = plan.with_choices(forced(algo, 2, Dtype::F32, n));
+            let got = plan.run(&x, &ctx);
+            assert_eq!(got.as_slice(), want.as_slice(), "{algo:?}");
+        }
+        // The in-family choice still routes bit-identically.
+        let plan = conv_relu_plan(&conv);
+        let n = plan.graph.nodes.len();
+        let plan = plan.with_choices(forced(PlanAlgo::Sliding, 2, Dtype::F32, n));
+        assert_eq!(plan.run(&x, &ctx).as_slice(), want.as_slice());
+    }
+
+    #[test]
+    fn planned_q8_choices_route_exactly() {
+        let q = QuantizedConv2d::new(3, 4, 3, Conv2dParams::same(3), 73);
+        let x = Tensor::randn(&[1, 3, 12, 12], 74);
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 2);
+        let build = || {
+            let mut g = Graph::new("t", &[3, 12, 12]);
+            q.lower_into(&mut g, 0).unwrap();
+            plan_of(g, true)
+        };
+        let want = build().run(&x, &ctx);
+        for algo in [PlanAlgo::Sliding, PlanAlgo::Gemm, PlanAlgo::GemmLowMem] {
+            let plan = build();
+            let n = plan.graph.nodes.len();
+            let plan = plan.with_choices(forced(algo, 1, Dtype::I8, n));
+            let got = plan.run(&x, &ctx);
+            assert_eq!(got.as_slice(), want.as_slice(), "{algo:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "one choice slot per node")]
+    fn with_choices_rejects_wrong_length() {
+        let conv = Conv2d::new(3, 4, 3, Conv2dParams::same(3), 75);
+        let mut g = Graph::new("t", &[3, 16, 16]);
+        conv.lower_into(&mut g, 0).unwrap();
+        plan_of(g, false).with_choices(vec![None]);
     }
 }

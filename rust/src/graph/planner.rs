@@ -1,0 +1,917 @@
+//! The whole-model inference planner: per-layer algorithm ×
+//! thread-split choices under a peak-memory budget.
+//!
+//! The autotuner ([`crate::autotune`]) picks the fastest kernel per
+//! (filter-width bucket, threads, dtype, ISA) in isolation; ZNNi
+//! (arXiv:1606.05688) observes that the end-to-end win comes from
+//! planning per *layer* across the whole network — a kernel that wins a
+//! microbenchmark can lose once its column-matrix footprint evicts the
+//! neighbouring layers' activations, and the right thread split for one
+//! conv depends on how much transient scratch the budget has left. This
+//! module searches that space:
+//!
+//! * **Inputs** — the compiled graph's per-node FLOP and activation-byte
+//!   accounting ([`Graph::node_flops`] / [`Graph::node_activation_bytes`]),
+//!   the cached [`DispatchProfile`]'s measured GFLOPS
+//!   ([`DispatchProfile::measured_at`]), and a configurable peak-memory
+//!   budget.
+//! * **Search** — dynamic programming over the topologically ordered
+//!   node sequence. Because every candidate's workspace is transient
+//!   (checked back into the arena before the next node runs), the DP
+//!   value function separates: the optimal plan is the per-node argmin
+//!   of predicted time among candidates whose `live frontier +
+//!   workspace` fits the budget, where the live frontier is the same
+//!   consumer-countdown simulation the executor performs
+//!   ([`CompiledPlan::run`] recycles a buffer the moment its last
+//!   consumer has run). Fan-out (Concat/Fire) needs no special casing:
+//!   both branches' tensors are live in the frontier until the join
+//!   consumes them, so each branch is planned under the barrier's
+//!   residual budget automatically.
+//! * **Candidates** — per conv node: algorithm ∈ {direct, one-shot
+//!   im2col+GEMM, **low-memory strip GEMM**
+//!   ([`crate::kernels::im2col::conv2d_im2col_lowmem_epi_ctx`] — the
+//!   Anderson-et-al. accumulating-im2col/kn2row point below the full
+//!   im2col footprint), sliding} × worker split ∈ powers of two up to
+//!   the ctx's thread count. The dtype axis is an *input*, not a free
+//!   variable: serving dtype is part of the request contract (planned
+//!   output must stay bitwise-equal to the unplanned plan), so the
+//!   planner derives each node's compute dtype from it (`QuantConv2d`
+//!   always runs int8; `Conv2d` follows the serving dtype) and plans
+//!   within that dtype's kernel set.
+//!
+//! **The bitwise contract prunes the candidate set.** Planning is a
+//! footprint/throughput lever, never an accuracy lever, and the f32
+//! kernels do *not* share one floating-point summation order: the
+//! sliding row kernels run one fused-multiply-add chain seeded with the
+//! bias, the GEMM microkernel adds `KC`-block partial sums into the
+//! output, and the direct oracle uses unfused scalar multiply-adds —
+//! same arithmetic, different rounding (the kernel-equivalence suite
+//! bounds the difference, it does not claim zero). So for f32 nodes the
+//! planner only re-routes within the family of the route the unplanned
+//! executor would take ([`ExecCtx`] algo, with `Tuned` resolved per
+//! filter width): one-shot GEMM ↔ strip GEMM is the one real f32
+//! interchange (the strip decomposition is order-exact, see
+//! [`crate::kernels::im2col`]), plus any worker split (partitioning
+//! never changes results). Int8 accumulation is exact — one right
+//! answer — so every int8 route is interchangeable, and the planner
+//! roams the full set there. This is what lets `tests/plan_parity.rs`
+//! assert bitwise equality before any benchmark timing.
+
+use super::ir::{Graph, Node, NodeId, Op};
+use super::plan::CompiledPlan;
+use crate::autotune::{DispatchProfile, TunedAlgo};
+use crate::exec::ExecCtx;
+use crate::kernels::gemm::{pack_a_len, pack_b_len};
+use crate::kernels::im2col::lowmem_strip_cols;
+use crate::kernels::Conv2dParams;
+use crate::simd::{IsaLevel, LANES};
+use crate::tensor::{padded2d_size, Dtype};
+use std::fmt;
+
+/// Algorithm a planned conv node is forced to run — the per-node
+/// generalisation of [`crate::kernels::ConvAlgo`]'s ctx-wide choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanAlgo {
+    /// Naïve direct loops (no workspace, lowest throughput).
+    Direct,
+    /// One-shot im2col + blocked GEMM (fastest GEMM route, full
+    /// `kh·kw ×` column-matrix bloat per worker).
+    Gemm,
+    /// Accumulating-im2col strip GEMM: bounded column strip re-expanded
+    /// per GEMM call — the memory frontier below full im2col.
+    GemmLowMem,
+    /// Sliding Window with the paper's auto row policy.
+    Sliding,
+}
+
+impl PlanAlgo {
+    /// Short stable name for reports and the CLI.
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanAlgo::Direct => "direct",
+            PlanAlgo::Gemm => "gemm",
+            PlanAlgo::GemmLowMem => "gemm-lowmem",
+            PlanAlgo::Sliding => "sliding",
+        }
+    }
+}
+
+/// The planner's decision for one conv node: which kernel, how many
+/// workers, in which compute dtype, with the workspace and throughput
+/// the decision was costed at.
+#[derive(Clone, Debug)]
+pub struct PlannedChoice {
+    /// Kernel to run.
+    pub algo: PlanAlgo,
+    /// Worker cap for this node's parallel regions (≤ the ctx's thread
+    /// count; applied via [`ExecCtx::set_thread_cap`], which never
+    /// changes results — only footprint and speed).
+    pub threads: usize,
+    /// Compute dtype the node was planned for (derived from the serving
+    /// dtype, never searched — see the module docs).
+    pub dtype: Dtype,
+    /// Predicted transient workspace in bytes (scratch + any
+    /// quantize/accumulator intermediates), at the planned worker count.
+    pub workspace_bytes: u64,
+    /// Predicted sustained throughput for this node, in GFLOP/s.
+    pub predicted_gflops: f64,
+}
+
+/// A complete plan for one model at one (batch, dtype, threads)
+/// operating point: per-node choices plus the predicted peak memory and
+/// end-to-end time the search settled on.
+#[derive(Clone, Debug)]
+pub struct ModelPlan {
+    /// Model name (from the graph).
+    pub model: String,
+    /// Serving dtype the plan was built for.
+    pub dtype: Dtype,
+    /// Ctx thread count the candidate splits were drawn from.
+    pub threads: usize,
+    /// Batch size the footprints and times were computed at.
+    pub batch: usize,
+    /// The budget the plan was constrained to (`None` = unbudgeted).
+    pub budget_bytes: Option<u64>,
+    /// One entry per graph node; `None` for non-conv nodes.
+    pub choices: Vec<Option<PlannedChoice>>,
+    /// Predicted peak of `live activation frontier + workspace` over the
+    /// node sequence, in bytes. Always ≤ the budget when one was given.
+    pub predicted_peak_bytes: u64,
+    /// Predicted end-to-end time for one batch, in nanoseconds.
+    pub predicted_ns: f64,
+    /// Total FLOPs for one batch (the graph's own accounting).
+    pub flops: u64,
+}
+
+impl ModelPlan {
+    /// Predicted end-to-end throughput in GFLOP/s.
+    pub fn predicted_gflops(&self) -> f64 {
+        self.flops as f64 / self.predicted_ns.max(1.0)
+    }
+
+    /// Human-readable rendering: one line per planned node, then the
+    /// predicted peak vs. budget and throughput summary (what the CLI
+    /// `plan` subcommand prints).
+    pub fn render(&self, graph: &Graph) -> String {
+        let mut s = format!(
+            "plan \"{}\" batch={} dtype={} threads={}\n",
+            self.model,
+            self.batch,
+            self.dtype.name(),
+            self.threads
+        );
+        for (id, choice) in self.choices.iter().enumerate() {
+            if let Some(c) = choice {
+                let node = &graph.nodes[id];
+                s.push_str(&format!(
+                    "  %{id}: {:<12} k={:<2} -> {:<11} x{:<2} {:<4} ws {:>9}  {:6.2} GFLOP/s\n",
+                    node.op.name(),
+                    conv_geometry(node, graph, self.batch).map_or(0, |g| g.kw),
+                    c.algo.name(),
+                    c.threads,
+                    c.dtype.name(),
+                    fmt_bytes(c.workspace_bytes),
+                    c.predicted_gflops,
+                ));
+            }
+        }
+        let budget = match self.budget_bytes {
+            Some(b) => fmt_bytes(b),
+            None => "unbounded".to_string(),
+        };
+        s.push_str(&format!(
+            "  predicted peak {} (budget {budget}), predicted {:.2} GFLOP/s ({:.3} ms/batch)\n",
+            fmt_bytes(self.predicted_peak_bytes),
+            self.predicted_gflops(),
+            self.predicted_ns / 1e6,
+        ));
+        s
+    }
+}
+
+/// Why planning failed. The planner never silently falls back: an
+/// unsatisfiable budget is reported with the smallest budget that
+/// *would* work, so callers can surface an actionable error.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlanError {
+    /// No assignment of candidates keeps every node's live frontier +
+    /// workspace within the budget.
+    Infeasible {
+        /// Model name.
+        model: String,
+        /// First node whose minimal footprint exceeds the budget.
+        node: NodeId,
+        /// That node's op name.
+        op: &'static str,
+        /// The smallest budget (bytes) any plan for this operating
+        /// point can satisfy.
+        min_bytes: u64,
+        /// The budget that was asked for.
+        budget: u64,
+    },
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::Infeasible { model, node, op, min_bytes, budget } => write!(
+                f,
+                "no feasible plan for \"{model}\" under {budget} bytes: node %{node} ({op}) \
+                 needs at least {min_bytes} bytes of live activations + workspace"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Conv geometry the workspace and throughput models need, extracted
+/// once per node.
+struct ConvGeometry {
+    c_in: usize,
+    c_in_g: usize,
+    c_out: usize,
+    c_out_g: usize,
+    kh: usize,
+    kw: usize,
+    h: usize,
+    w: usize,
+    oh: usize,
+    ow: usize,
+    groups: usize,
+    n: usize,
+    params: Conv2dParams,
+    /// Whether the input arrives as hoisted i8 codes (the producer's
+    /// `quant_out` fact) — then the quantize step costs no workspace.
+    input_is_q8: bool,
+}
+
+fn conv_geometry(node: &Node, graph: &Graph, batch: usize) -> Option<ConvGeometry> {
+    let (wdims, params) = match &node.op {
+        Op::Conv2d { w, params, .. } => (w.dims().to_vec(), *params),
+        Op::QuantConv2d { qw, params, .. } => (qw.dims().to_vec(), *params),
+        _ => return None,
+    };
+    let in_node = &graph.nodes[node.inputs[0]];
+    let in_shape = &in_node.shape;
+    Some(ConvGeometry {
+        c_in: in_shape[1],
+        c_in_g: wdims[1],
+        c_out: wdims[0],
+        c_out_g: wdims[0] / params.groups,
+        kh: wdims[2],
+        kw: wdims[3],
+        h: in_shape[2],
+        w: in_shape[3],
+        oh: node.shape[2],
+        ow: node.shape[3],
+        groups: params.groups,
+        n: in_shape[0] * batch,
+        params,
+        input_is_q8: in_node.quant_out,
+    })
+}
+
+/// The compute dtype a node runs in, given the serving dtype:
+/// `QuantConv2d` is int8 whatever the ctx serves in; `Conv2d` follows
+/// the serving dtype (its own dtype dispatch in the executor).
+fn node_dtype(node: &Node, serving: Dtype) -> Dtype {
+    match node.op {
+        Op::QuantConv2d { .. } => Dtype::I8,
+        _ => serving,
+    }
+}
+
+/// The algorithm the *unplanned* executor would route a conv of filter
+/// width `kw` and compute dtype `nd` through under this ctx: the ctx's
+/// algo, with the forced sliding variants collapsed onto the sliding
+/// family (every row kernel accumulates in the same order, so variants
+/// are bit-identical) and `Tuned` resolved to the profile's — or the
+/// paper policy's — winner for this width.
+pub(crate) fn default_route(ctx: &ExecCtx, kw: usize, nd: Dtype) -> PlanAlgo {
+    use crate::kernels::ConvAlgo;
+    match ctx.algo {
+        ConvAlgo::Direct => PlanAlgo::Direct,
+        ConvAlgo::Im2colGemm => PlanAlgo::Gemm,
+        ConvAlgo::Sliding | ConvAlgo::SlidingGeneric | ConvAlgo::SlidingCompound => {
+            PlanAlgo::Sliding
+        }
+        ConvAlgo::Tuned => tuned_equiv(ctx.tuned_choice_for(kw, nd).0),
+    }
+}
+
+/// Whether a planned f32 algorithm can replace `route` without changing
+/// bits: it must sit in the same floating-point summation family.
+/// One-shot GEMM ↔ strip GEMM is the only cross-kernel f32 interchange
+/// (order-exact strip decomposition); everything else crosses a
+/// rounding boundary (see the module docs).
+pub(crate) fn f32_family_compatible(algo: PlanAlgo, route: PlanAlgo) -> bool {
+    algo == route
+        || matches!(
+            (algo, route),
+            (PlanAlgo::Gemm | PlanAlgo::GemmLowMem, PlanAlgo::Gemm | PlanAlgo::GemmLowMem)
+        )
+}
+
+/// Candidate kernels for one node, given its compute dtype and the
+/// route the unplanned executor would take ([`default_route`]). Int8
+/// accumulation is exact, so every int8 route is a candidate (there is
+/// no int8 direct kernel); bf16 routes everything through the sliding
+/// kernel; f32 candidates are pinned to the default route's bitwise
+/// family — the planner must never trade accuracy for footprint.
+fn candidate_algos(dtype: Dtype, route: PlanAlgo) -> &'static [PlanAlgo] {
+    match dtype {
+        Dtype::I8 => &[PlanAlgo::Sliding, PlanAlgo::Gemm, PlanAlgo::GemmLowMem],
+        Dtype::Bf16 => &[PlanAlgo::Sliding],
+        Dtype::F32 | Dtype::I32 => match route {
+            PlanAlgo::Gemm | PlanAlgo::GemmLowMem => &[PlanAlgo::Gemm, PlanAlgo::GemmLowMem],
+            PlanAlgo::Direct => &[PlanAlgo::Direct],
+            PlanAlgo::Sliding => &[PlanAlgo::Sliding],
+        },
+    }
+}
+
+/// Relative-throughput prior per algorithm, used to derate the
+/// profile's measured winner GFLOPS onto the non-winning candidates
+/// (the cache records only each bucket's winner): predicted =
+/// measured · r(algo)/r(winner), clamped below the winner — a
+/// non-winner never out-predicts the measurement that beat it.
+fn derate(algo: PlanAlgo) -> f64 {
+    match algo {
+        PlanAlgo::Sliding => 1.0,
+        PlanAlgo::Gemm => 0.80,
+        PlanAlgo::GemmLowMem => 0.72,
+        PlanAlgo::Direct => 0.15,
+    }
+}
+
+fn tuned_equiv(algo: TunedAlgo) -> PlanAlgo {
+    match algo {
+        TunedAlgo::Direct => PlanAlgo::Direct,
+        TunedAlgo::Gemm => PlanAlgo::Gemm,
+        TunedAlgo::Sliding => PlanAlgo::Sliding,
+    }
+}
+
+/// Predicted sustained GFLOP/s for one candidate: the profile's
+/// measured winner throughput at the nearest (k, threads, dtype, ISA)
+/// bucket, derated when the candidate is not that bucket's winner;
+/// without a profile (or no matching-dtype bucket), a flat paper-policy
+/// prior with imperfect thread scaling.
+fn predicted_gflops(
+    profile: Option<&DispatchProfile>,
+    k: usize,
+    threads: usize,
+    dtype: Dtype,
+    isa: IsaLevel,
+    algo: PlanAlgo,
+) -> f64 {
+    match profile.and_then(|p| p.measured_at(k, threads, dtype, isa)) {
+        Some((winner, gflops)) => {
+            let w = tuned_equiv(winner);
+            if w == algo {
+                gflops
+            } else {
+                (gflops * derate(algo) / derate(w)).min(gflops * 0.95)
+            }
+        }
+        None => {
+            // No measurement: a flat prior whose only job is to rank
+            // candidates sanely (sliding wins, as the paper policy
+            // assumes) and to reward — imperfectly — wider splits.
+            const BASE_GFLOPS: f64 = 4.0;
+            BASE_GFLOPS * (1.0 + 0.8 * (threads.max(1) - 1) as f64) * derate(algo)
+        }
+    }
+}
+
+/// Transient workspace in bytes for one candidate, mirroring what each
+/// kernel actually draws from the arena (plus the quantize/accumulator
+/// intermediates of the int8 boundary wrappers). A model, not an
+/// accountant: its job is to order candidates correctly and scale with
+/// the worker count, so narrowing the split is a real memory lever.
+fn workspace_bytes(g: &ConvGeometry, dtype: Dtype, algo: PlanAlgo, threads: usize) -> u64 {
+    let kdim = g.c_in_g * g.kh * g.kw;
+    let ohw = g.oh * g.ow;
+    let out_numel = (g.n * g.c_out * ohw) as u64;
+    let in_numel = (g.n * g.c_in * g.h * g.w) as u64;
+    let f4 = std::mem::size_of::<f32>() as u64;
+    // GEMM-family kernels fan out one (image, group) per work item;
+    // sliding fans out output planes.
+    let gemm_workers = threads.min((g.n * g.groups).max(1)) as u64;
+    let slide_workers = threads.min((g.n * g.c_out).max(1)) as u64;
+    let strip = lowmem_strip_cols(kdim).min(ohw.max(1));
+    // int8 boundary intermediates: activation codes (skipped when the
+    // producer already hands over codes) + the exact-i32 accumulator.
+    let q8_boundary = if dtype == Dtype::I8 {
+        let codes = if g.input_is_q8 { 0 } else { in_numel };
+        codes + out_numel * 4
+    } else {
+        0
+    };
+    // Sliding kernels pad the whole input once (shared across workers)
+    // with the row kernels' overhang slack, then keep one output-row
+    // accumulator per worker.
+    let slide_padded = |esize: u64| {
+        let (hp, wp) =
+            padded2d_size(g.h, g.w, g.params.pad.0, g.params.pad.1, 2 * LANES + g.kw);
+        (g.n * g.c_in * hp * wp) as u64 * esize + slide_workers * (wp as u64) * f4
+    };
+    match (dtype, algo) {
+        (Dtype::I8, PlanAlgo::Sliding) => q8_boundary + slide_padded(1),
+        (Dtype::I8, PlanAlgo::Gemm) => q8_boundary + gemm_workers * (kdim * ohw) as u64,
+        (Dtype::I8, PlanAlgo::GemmLowMem) => {
+            q8_boundary
+                + gemm_workers * ((kdim * strip) as u64 + (g.c_out_g * strip) as u64 * 4)
+        }
+        (_, PlanAlgo::Direct) => 0,
+        (_, PlanAlgo::Gemm) => {
+            gemm_workers * (kdim * ohw + pack_a_len() + pack_b_len(ohw)) as u64 * f4
+        }
+        (_, PlanAlgo::GemmLowMem) => {
+            gemm_workers
+                * (kdim * strip + pack_a_len() + pack_b_len(strip) + g.c_out_g * strip) as u64
+                * f4
+        }
+        (_, PlanAlgo::Sliding) => slide_padded(f4),
+    }
+}
+
+/// Fixed cost model for nodes the planner has no choices for: treated
+/// as memory-bound streaming over their input + output bytes plus their
+/// (usually negligible) FLOPs. Only the *relative* ranking of conv
+/// candidates matters for the plan; this term just keeps `predicted_ns`
+/// an end-to-end figure.
+fn fixed_node_ns(graph: &Graph, id: NodeId, batch: usize) -> f64 {
+    let node = &graph.nodes[id];
+    let in_bytes: u64 =
+        node.inputs.iter().map(|&i| graph.node_activation_bytes(i, batch)).sum();
+    let bytes = in_bytes + graph.node_activation_bytes(id, batch);
+    const STREAM_BYTES_PER_NS: f64 = 8.0; // ~8 GB/s effective streaming
+    const SCALAR_FLOPS_PER_NS: f64 = 4.0;
+    bytes as f64 / STREAM_BYTES_PER_NS + graph.node_flops(id, batch) as f64 / SCALAR_FLOPS_PER_NS
+}
+
+/// Candidate worker splits: powers of two up to the ctx thread count,
+/// plus the count itself when it is not a power of two.
+fn thread_splits(threads: usize) -> Vec<usize> {
+    let mut ts = Vec::new();
+    let mut v = 1usize;
+    while v < threads {
+        ts.push(v);
+        v *= 2;
+    }
+    ts.push(threads.max(1));
+    ts
+}
+
+/// The smallest peak (bytes) any plan can achieve for this operating
+/// point: per node, the live activation frontier plus the cheapest
+/// candidate's workspace, maximised over the sequence. A budget below
+/// this is infeasible by construction; [`plan_model`] reports it in
+/// [`PlanError::Infeasible`]. Returns `(min_bytes, argmax_node)`.
+fn min_feasible_peak(graph: &Graph, batch: usize, ctx: &ExecCtx) -> (u64, NodeId) {
+    let mut worst = (0u64, 0usize);
+    sweep_live(graph, batch, |id, node, live_during| {
+        let min_ws = match conv_geometry(node, graph, batch) {
+            Some(g) => {
+                let nd = node_dtype(node, ctx.dtype());
+                candidate_algos(nd, default_route(ctx, g.kw, nd))
+                    .iter()
+                    .map(|&a| workspace_bytes(&g, nd, a, 1))
+                    .min()
+                    .unwrap_or(0)
+            }
+            None => 0,
+        };
+        if live_during + min_ws > worst.0 {
+            worst = (live_during + min_ws, id);
+        }
+    });
+    worst
+}
+
+/// Public form of the feasibility floor: the smallest `--mem-budget`
+/// that admits any plan for this compiled model at the ctx's operating
+/// point (its serving dtype picks the kernel sets, its algo pins each
+/// f32 node's bitwise family).
+pub fn min_feasible_budget(plan: &CompiledPlan, batch: usize, ctx: &ExecCtx) -> u64 {
+    min_feasible_peak(&plan.graph, batch, ctx).0
+}
+
+/// Walk the graph in execution order, calling `f(id, node, live_during)`
+/// for every live node with the executor's consumer-countdown live
+/// frontier (bytes of produced-and-still-needed activations, including
+/// the node's own output being written).
+fn sweep_live(graph: &Graph, batch: usize, mut f: impl FnMut(NodeId, &Node, u64)) {
+    let uses = graph.consumer_counts();
+    let mut remaining = uses.clone();
+    let mut live_bytes = 0u64;
+    for id in 1..graph.nodes.len() {
+        if uses[id] == 0 {
+            continue; // dead node — the executor skips it too
+        }
+        let node = &graph.nodes[id];
+        let out_bytes = graph.node_activation_bytes(id, batch);
+        f(id, node, live_bytes + out_bytes);
+        live_bytes += out_bytes;
+        for &i in &node.inputs {
+            remaining[i] -= 1;
+            if remaining[i] == 0 {
+                live_bytes = live_bytes.saturating_sub(graph.node_activation_bytes(i, batch));
+            }
+        }
+    }
+}
+
+/// Plan the compiled model for one operating point.
+///
+/// * `batch` — batch size footprints and times are computed at.
+/// * `ctx` — supplies the serving dtype, the thread count candidates
+///   are drawn from, the ISA level, and (optionally) the measured
+///   [`DispatchProfile`] throughput predictions come from.
+/// * `budget_bytes` — peak-memory budget over `live activation frontier
+///   + transient workspace`; `None` plans purely for speed.
+///
+/// Returns the plan, or [`PlanError::Infeasible`] — an explicit error,
+/// never a silent fallback — when no candidate assignment fits the
+/// budget (the error carries the smallest budget that would).
+pub fn plan_model(
+    compiled: &CompiledPlan,
+    batch: usize,
+    ctx: &ExecCtx,
+    budget_bytes: Option<u64>,
+) -> Result<ModelPlan, PlanError> {
+    let graph = &compiled.graph;
+    let dtype = ctx.dtype();
+    let threads = ctx.threads();
+    let (min_bytes, worst_node) = min_feasible_peak(graph, batch, ctx);
+    if let Some(budget) = budget_bytes {
+        if budget < min_bytes {
+            return Err(PlanError::Infeasible {
+                model: graph.name.clone(),
+                node: worst_node,
+                op: graph.nodes[worst_node].op.name(),
+                min_bytes,
+                budget,
+            });
+        }
+    }
+
+    let profile = ctx.profile().map(|p| p.as_ref());
+    let splits = thread_splits(threads);
+    let mut choices: Vec<Option<PlannedChoice>> = vec![None; graph.nodes.len()];
+    let mut predicted_ns = 0.0f64;
+    let mut peak = 0u64;
+    sweep_live(graph, batch, |id, node, live_during| {
+        let Some(g) = conv_geometry(node, graph, batch) else {
+            predicted_ns += fixed_node_ns(graph, id, batch);
+            peak = peak.max(live_during);
+            return;
+        };
+        let nd = node_dtype(node, dtype);
+        let flops = graph.node_flops(id, batch) as f64;
+        // Per-node argmin of predicted time over (algo × split), among
+        // candidates that fit the residual budget. Ties (identical
+        // predicted time) break toward the smaller footprint, then the
+        // narrower split — the cheaper plan when speed is equal.
+        let mut best: Option<(f64, u64, usize, PlanAlgo, f64)> = None;
+        for &algo in candidate_algos(nd, default_route(ctx, g.kw, nd)) {
+            for &t in &splits {
+                let ws = workspace_bytes(&g, nd, algo, t);
+                if let Some(budget) = budget_bytes {
+                    if live_during + ws > budget {
+                        continue;
+                    }
+                }
+                let gf = predicted_gflops(profile, g.kw, t, nd, ctx.isa(), algo);
+                let ns = flops / gf.max(1e-9);
+                let cand = (ns, ws, t, algo, gf);
+                let better = match &best {
+                    None => true,
+                    Some(b) => (cand.0, cand.1, cand.2) < (b.0, b.1, b.2),
+                };
+                if better {
+                    best = Some(cand);
+                }
+            }
+        }
+        // `min_feasible_peak` proved a 1-worker minimum-footprint
+        // candidate fits every node, so `best` is always present.
+        let (ns, ws, t, algo, gf) = best.expect("budget pre-check guarantees a candidate");
+        choices[id] = Some(PlannedChoice {
+            algo,
+            threads: t,
+            dtype: nd,
+            workspace_bytes: ws,
+            predicted_gflops: gf,
+        });
+        predicted_ns += ns;
+        peak = peak.max(live_during + ws);
+    });
+
+    let plan = ModelPlan {
+        model: graph.name.clone(),
+        dtype,
+        threads,
+        batch,
+        budget_bytes,
+        choices,
+        predicted_peak_bytes: peak,
+        predicted_ns,
+        flops: graph.flops(batch),
+    };
+    debug_assert!(
+        match budget_bytes {
+            Some(b) => plan.predicted_peak_bytes <= b,
+            None => true,
+        },
+        "planned peak exceeds the budget it was planned under"
+    );
+    Ok(plan)
+}
+
+fn fmt_bytes(b: u64) -> String {
+    if b >= 1 << 20 {
+        format!("{:.1} MiB", b as f64 / (1 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1} KiB", b as f64 / (1 << 10) as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::ConvAlgo;
+    use crate::nn::layers::{Conv2d, MaxPool2d, QuantizedConv2d, ReLU};
+    use crate::nn::Model;
+    use crate::tensor::Tensor;
+
+    fn conv_chain() -> Model {
+        Model::new("chain", &[3, 24, 24])
+            .push(Conv2d::new(3, 8, 3, Conv2dParams::same(3), 11))
+            .push(ReLU)
+            .push(Conv2d::new(8, 8, 5, Conv2dParams::same(5), 12))
+            .push(MaxPool2d(crate::kernels::PoolParams::square(2)))
+            .push(Conv2d::new(8, 4, 3, Conv2dParams::same(3), 13))
+    }
+
+    #[test]
+    fn unbudgeted_plan_covers_every_conv_node() {
+        let compiled = conv_chain().compile_with(true);
+        let ctx = ExecCtx::with_threads(ConvAlgo::Tuned, 4);
+        let plan = plan_model(&compiled, 2, &ctx, None).unwrap();
+        let convs: Vec<_> = plan.choices.iter().flatten().collect();
+        assert_eq!(convs.len(), 3, "one choice per conv node");
+        for c in &convs {
+            assert_eq!(c.dtype, Dtype::F32);
+            assert!(c.threads >= 1 && c.threads <= 4);
+            assert!(c.predicted_gflops > 0.0);
+        }
+        assert!(plan.predicted_ns > 0.0);
+        assert!(plan.predicted_peak_bytes > 0);
+        assert_eq!(plan.flops, compiled.flops(2));
+    }
+
+    #[test]
+    fn budget_at_the_floor_is_feasible_and_respected() {
+        let compiled = conv_chain().compile_with(true);
+        let ctx = ExecCtx::with_threads(ConvAlgo::Tuned, 4);
+        let floor = min_feasible_budget(&compiled, 1, &ctx);
+        let plan = plan_model(&compiled, 1, &ctx, Some(floor)).unwrap();
+        assert!(
+            plan.predicted_peak_bytes <= floor,
+            "peak {} over floor budget {floor}",
+            plan.predicted_peak_bytes
+        );
+    }
+
+    #[test]
+    fn infeasible_budget_is_an_explicit_error() {
+        let compiled = conv_chain().compile_with(true);
+        let ctx = ExecCtx::new(ConvAlgo::Tuned);
+        let floor = min_feasible_budget(&compiled, 1, &ctx);
+        let err = plan_model(&compiled, 1, &ctx, Some(floor - 1)).unwrap_err();
+        let PlanError::Infeasible { min_bytes, budget, ref model, .. } = err;
+        assert_eq!(min_bytes, floor);
+        assert_eq!(budget, floor - 1);
+        assert_eq!(model, "chain");
+        let msg = err.to_string();
+        assert!(msg.contains("no feasible plan") && msg.contains("chain"), "{msg}");
+    }
+
+    #[test]
+    fn tight_budgets_shift_toward_smaller_workspaces() {
+        // A spatially large conv where one-shot GEMM's column matrix
+        // dwarfs the strip variant's bounded scratch.
+        let m = Model::new("wide", &[8, 64, 64]).push(Conv2d::new(
+            8,
+            8,
+            5,
+            Conv2dParams::same(5),
+            21,
+        ));
+        let compiled = m.compile_with(true);
+        // A GEMM-routed ctx: the f32 candidate family is then
+        // {one-shot, strip}, so the budget has a real algorithm lever.
+        let ctx = ExecCtx::with_threads(ConvAlgo::Im2colGemm, 4);
+        let open = plan_model(&compiled, 1, &ctx, None).unwrap();
+        let floor = min_feasible_budget(&compiled, 1, &ctx);
+        let tight = plan_model(&compiled, 1, &ctx, Some(floor)).unwrap();
+        let ws_open: u64 =
+            open.choices.iter().flatten().map(|c| c.workspace_bytes).sum();
+        let ws_tight: u64 =
+            tight.choices.iter().flatten().map(|c| c.workspace_bytes).sum();
+        assert!(
+            ws_tight <= ws_open,
+            "tight plan must not use more workspace ({ws_tight} > {ws_open})"
+        );
+        assert!(tight.predicted_peak_bytes <= floor);
+        // Unbudgeted, the faster one-shot GEMM wins; at the floor the
+        // strip variant is the only way to fit.
+        let algo_of = |p: &ModelPlan| p.choices.iter().flatten().next().unwrap().algo;
+        assert_eq!(algo_of(&open), PlanAlgo::Gemm);
+        assert_eq!(algo_of(&tight), PlanAlgo::GemmLowMem);
+    }
+
+    #[test]
+    fn f32_candidates_stay_inside_the_ctx_routes_bitwise_family() {
+        let compiled = conv_chain().compile_with(true);
+        for (algo, allowed) in [
+            (ConvAlgo::Sliding, &[PlanAlgo::Sliding][..]),
+            (ConvAlgo::Im2colGemm, &[PlanAlgo::Gemm, PlanAlgo::GemmLowMem][..]),
+            (ConvAlgo::Direct, &[PlanAlgo::Direct][..]),
+        ] {
+            let ctx = ExecCtx::with_threads(algo, 4);
+            let plan = plan_model(&compiled, 1, &ctx, None).unwrap();
+            for c in plan.choices.iter().flatten() {
+                assert!(
+                    allowed.contains(&c.algo),
+                    "{algo:?} ctx planned {:?} — outside its bitwise family",
+                    c.algo
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn family_compatibility_is_the_gemm_interchange_plus_identity() {
+        use PlanAlgo::*;
+        for a in [Direct, Gemm, GemmLowMem, Sliding] {
+            assert!(f32_family_compatible(a, a), "{a:?} with itself");
+        }
+        assert!(f32_family_compatible(Gemm, GemmLowMem));
+        assert!(f32_family_compatible(GemmLowMem, Gemm));
+        assert!(!f32_family_compatible(Sliding, Gemm));
+        assert!(!f32_family_compatible(Direct, Sliding));
+        assert!(!f32_family_compatible(GemmLowMem, Direct));
+    }
+
+    #[test]
+    fn quant_nodes_plan_in_int8_with_no_direct_candidate() {
+        let m = Model::new("q", &[3, 16, 16])
+            .push(QuantizedConv2d::new(3, 6, 3, Conv2dParams::same(3), 31))
+            .push(QuantizedConv2d::new(6, 4, 3, Conv2dParams::same(3), 32));
+        let compiled = m.compile_with(true);
+        let ctx = ExecCtx::with_threads(ConvAlgo::Tuned, 2);
+        let plan = plan_model(&compiled, 1, &ctx, None).unwrap();
+        for c in plan.choices.iter().flatten() {
+            assert_eq!(c.dtype, Dtype::I8);
+            assert_ne!(c.algo, PlanAlgo::Direct, "int8 has no direct kernel");
+        }
+    }
+
+    #[test]
+    fn lowmem_workspace_undercuts_oneshot_gemm_on_large_extents() {
+        let g = ConvGeometry {
+            c_in: 16,
+            c_in_g: 16,
+            c_out: 16,
+            c_out_g: 16,
+            kh: 5,
+            kw: 5,
+            h: 64,
+            w: 64,
+            oh: 64,
+            ow: 64,
+            groups: 1,
+            n: 1,
+            params: Conv2dParams::same(5),
+            input_is_q8: false,
+        };
+        let full = workspace_bytes(&g, Dtype::F32, PlanAlgo::Gemm, 1);
+        let strip = workspace_bytes(&g, Dtype::F32, PlanAlgo::GemmLowMem, 1);
+        assert!(
+            strip * 4 < full,
+            "strip GEMM ({strip}) should be far below one-shot ({full})"
+        );
+        // Workspace scales with the split — narrowing threads is a
+        // genuine memory lever for the GEMM family.
+        let wide = workspace_bytes(&g, Dtype::F32, PlanAlgo::Gemm, 4);
+        assert_eq!(wide, full, "one image, one group: split cannot widen scratch");
+        let g2 = ConvGeometry { n: 4, ..g };
+        assert!(
+            workspace_bytes(&g2, Dtype::F32, PlanAlgo::Gemm, 4)
+                > workspace_bytes(&g2, Dtype::F32, PlanAlgo::Gemm, 1)
+        );
+    }
+
+    #[test]
+    fn profile_throughput_derates_non_winners_below_the_winner() {
+        use crate::autotune::ProfileEntry;
+        use crate::kernels::rowconv::RowKernel;
+        let p = DispatchProfile::from_entries(vec![ProfileEntry {
+            k: 3,
+            threads: 1,
+            dtype: Dtype::F32,
+            isa: IsaLevel::Scalar,
+            algo: TunedAlgo::Sliding,
+            slide: RowKernel::Custom,
+            gflops: 10.0,
+        }]);
+        let win =
+            predicted_gflops(Some(&p), 3, 1, Dtype::F32, IsaLevel::Scalar, PlanAlgo::Sliding);
+        assert_eq!(win, 10.0);
+        for algo in [PlanAlgo::Gemm, PlanAlgo::GemmLowMem, PlanAlgo::Direct] {
+            let lose = predicted_gflops(Some(&p), 3, 1, Dtype::F32, IsaLevel::Scalar, algo);
+            assert!(lose < win, "{algo:?} predicted {lose} >= winner {win}");
+        }
+        // Direct winner: sliding's prediction is clamped below it, not
+        // extrapolated above the measurement.
+        let pd = DispatchProfile::from_entries(vec![ProfileEntry {
+            k: 3,
+            threads: 1,
+            dtype: Dtype::F32,
+            isa: IsaLevel::Scalar,
+            algo: TunedAlgo::Direct,
+            slide: RowKernel::Custom,
+            gflops: 10.0,
+        }]);
+        let clamped =
+            predicted_gflops(Some(&pd), 3, 1, Dtype::F32, IsaLevel::Scalar, PlanAlgo::Sliding);
+        assert!(clamped <= 9.5, "non-winner must stay below the measured winner");
+    }
+
+    #[test]
+    fn thread_splits_are_powers_of_two_plus_the_count() {
+        assert_eq!(thread_splits(1), vec![1]);
+        assert_eq!(thread_splits(4), vec![1, 2, 4]);
+        assert_eq!(thread_splits(6), vec![1, 2, 4, 6]);
+        assert_eq!(thread_splits(0), vec![1]);
+    }
+
+    #[test]
+    fn render_lists_choices_and_budget() {
+        let compiled = conv_chain().compile_with(true);
+        let ctx = ExecCtx::with_threads(ConvAlgo::Tuned, 2);
+        let plan =
+            plan_model(&compiled, 1, &ctx, Some(64 << 20)).unwrap();
+        let s = plan.render(&compiled.graph);
+        assert!(s.contains("conv2d"), "{s}");
+        assert!(s.contains("predicted peak"), "{s}");
+        assert!(s.contains("GFLOP/s"), "{s}");
+    }
+
+    #[test]
+    fn fanout_branches_are_both_live_at_the_join() {
+        // input -> two convs -> concat: while the second branch runs,
+        // the first branch's output must still be in the frontier.
+        let w1 = Tensor::randn(&[4, 3, 3, 3], 41);
+        let w2 = Tensor::randn(&[4, 3, 3, 3], 42);
+        let mut g = Graph::new("fan", &[3, 12, 12]);
+        let a = g.add(
+            Op::Conv2d { w: w1, bias: vec![0.0; 4], params: Conv2dParams::same(3) },
+            vec![0],
+        );
+        let b = g.add(
+            Op::Conv2d { w: w2, bias: vec![0.0; 4], params: Conv2dParams::same(3) },
+            vec![0],
+        );
+        g.add(Op::Concat, vec![a, b]);
+        let branch = g.node_activation_bytes(a, 1);
+        let concat_bytes = g.node_activation_bytes(3, 1);
+        let mut live_at_concat = 0;
+        sweep_live(&g, 1, |id, _node, live| {
+            if id == 3 {
+                live_at_concat = live;
+            }
+        });
+        assert_eq!(
+            live_at_concat,
+            2 * branch + concat_bytes,
+            "both branches + the join output are live at the barrier"
+        );
+    }
+
+    #[test]
+    fn unused_batch_scales_peak_linearly() {
+        let compiled = conv_chain().compile_with(true);
+        let ctx = ExecCtx::new(ConvAlgo::Tuned);
+        let p1 = plan_model(&compiled, 1, &ctx, None).unwrap();
+        let p4 = plan_model(&compiled, 4, &ctx, None).unwrap();
+        assert!(p4.predicted_peak_bytes > p1.predicted_peak_bytes);
+        assert_eq!(p4.flops, 4 * p1.flops);
+    }
+}

@@ -140,11 +140,16 @@ pub struct BenchRecord {
     pub gflops: f64,
 }
 
-/// Write benchmark records as a JSON array (one object per record) so
-/// the perf trajectory can be tracked across PRs by any tooling. All
-/// field values are program-generated identifiers, so no string escaping
-/// is needed.
-pub fn write_bench_json(path: impl AsRef<Path>, records: &[BenchRecord]) -> std::io::Result<()> {
+/// The one JSON-array writer behind every `BENCH_*.json` emitter:
+/// creates the parent directory, writes `[`, one `fmt_line`-rendered
+/// object per record (comma-separated, two-space indented), `]`. Each
+/// `fmt_line` must return a complete JSON object (`{...}`) built from
+/// program-generated identifiers — no escaping is applied.
+pub fn write_records<T>(
+    path: impl AsRef<Path>,
+    records: &[T],
+    fmt_line: impl Fn(&T) -> String,
+) -> std::io::Result<()> {
     if let Some(dir) = path.as_ref().parent() {
         std::fs::create_dir_all(dir)?;
     }
@@ -152,15 +157,24 @@ pub fn write_bench_json(path: impl AsRef<Path>, records: &[BenchRecord]) -> std:
     writeln!(f, "[")?;
     for (i, r) in records.iter().enumerate() {
         let sep = if i + 1 == records.len() { "" } else { "," };
-        writeln!(
-            f,
-            "  {{\"bench\": \"{}\", \"algo\": \"{}\", \"shape\": \"{}\", \
-             \"threads\": {}, \"replicas\": {}, \"ns_per_iter\": {:.1}, \"gflops\": {:.4}}}{sep}",
-            r.bench, r.algo, r.shape, r.threads, r.replicas, r.ns_per_iter, r.gflops
-        )?;
+        writeln!(f, "  {}{sep}", fmt_line(r))?;
     }
     writeln!(f, "]")?;
     Ok(())
+}
+
+/// Write benchmark records as a JSON array (one object per record) so
+/// the perf trajectory can be tracked across PRs by any tooling. All
+/// field values are program-generated identifiers, so no string escaping
+/// is needed.
+pub fn write_bench_json(path: impl AsRef<Path>, records: &[BenchRecord]) -> std::io::Result<()> {
+    write_records(path, records, |r| {
+        format!(
+            "{{\"bench\": \"{}\", \"algo\": \"{}\", \"shape\": \"{}\", \
+             \"threads\": {}, \"replicas\": {}, \"ns_per_iter\": {:.1}, \"gflops\": {:.4}}}",
+            r.bench, r.algo, r.shape, r.threads, r.replicas, r.ns_per_iter, r.gflops
+        )
+    })
 }
 
 /// One graph-compiler benchmark measurement — one element of the
@@ -210,23 +224,14 @@ pub fn write_graph_bench_json(
     path: impl AsRef<Path>,
     records: &[GraphBenchRecord],
 ) -> std::io::Result<()> {
-    if let Some(dir) = path.as_ref().parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut f = std::fs::File::create(path)?;
-    writeln!(f, "[")?;
-    for (i, r) in records.iter().enumerate() {
-        let sep = if i + 1 == records.len() { "" } else { "," };
-        writeln!(
-            f,
-            "  {{\"bench\": \"{}\", \"model\": \"{}\", \"mode\": \"{}\", \
+    write_records(path, records, |r| {
+        format!(
+            "{{\"bench\": \"{}\", \"model\": \"{}\", \"mode\": \"{}\", \
              \"threads\": {}, \"ns_per_iter\": {:.1}, \"gflops\": {:.4}, \
-             \"activation_bytes\": {}}}{sep}",
+             \"activation_bytes\": {}}}",
             r.bench, r.model, r.mode, r.threads, r.ns_per_iter, r.gflops, r.activation_bytes
-        )?;
-    }
-    writeln!(f, "]")?;
-    Ok(())
+        )
+    })
 }
 
 /// One streaming-inference benchmark measurement — one element of the
@@ -278,23 +283,91 @@ pub fn write_stream_bench_json(
     path: impl AsRef<Path>,
     records: &[StreamBenchRecord],
 ) -> std::io::Result<()> {
-    if let Some(dir) = path.as_ref().parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut f = std::fs::File::create(path)?;
-    writeln!(f, "[")?;
-    for (i, r) in records.iter().enumerate() {
-        let sep = if i + 1 == records.len() { "" } else { "," };
-        writeln!(
-            f,
-            "  {{\"bench\": \"{}\", \"model\": \"{}\", \"dtype\": \"{}\", \
+    write_records(path, records, |r| {
+        format!(
+            "{{\"bench\": \"{}\", \"model\": \"{}\", \"dtype\": \"{}\", \
              \"mode\": \"{}\", \"threads\": {}, \"frames\": {}, \
-             \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"mean_ns\": {:.1}}}{sep}",
+             \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"mean_ns\": {:.1}}}",
             r.bench, r.model, r.dtype, r.mode, r.threads, r.frames, r.p50_ns, r.p99_ns, r.mean_ns
-        )?;
-    }
-    writeln!(f, "]")?;
-    Ok(())
+        )
+    })
+}
+
+/// One whole-model-planner benchmark measurement — one element of the
+/// `BENCH_plan.json` schema, produced by `benches/plan_model.rs`.
+///
+/// ## `BENCH_plan.json` schema
+///
+/// A JSON **array**, one object per (model, policy, budget) triple:
+///
+/// ```json
+/// [
+///   {"bench": "plan", "model": "squeezenet-lite", "policy": "planned",
+///    "dtype": "f32", "threads": 4, "budget_bytes": 1048576,
+///    "predicted_peak_bytes": 912345, "predicted_gflops": 3.8123,
+///    "ns_per_iter": 812345.0, "gflops": 2.4513}
+/// ]
+/// ```
+///
+/// `policy` is `"planned"` (the whole-model planner's per-layer choices
+/// under the row's budget), `"greedy-tuned"` (per-kernel tuned dispatch
+/// — `ConvAlgo::Tuned` with no whole-model view) or `"paper-policy"`
+/// (the paper's fixed k-threshold dispatch). `budget_bytes` is `0` for
+/// an unbudgeted row; `predicted_peak_bytes`/`predicted_gflops` are the
+/// planner's own cost-model numbers (`0` on the non-planned policies,
+/// which don't predict). Parity is asserted before timing, so every row
+/// of one model describes bitwise-identical outputs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanBenchRecord {
+    /// Series id, `"plan"`.
+    pub bench: String,
+    /// Zoo model name.
+    pub model: String,
+    /// `"planned"`, `"greedy-tuned"` or `"paper-policy"`.
+    pub policy: String,
+    /// Serving dtype name (`"f32"`, `"i8"`).
+    pub dtype: String,
+    /// Ctx worker threads.
+    pub threads: usize,
+    /// Peak-memory budget the row ran under, bytes (`0` = unbudgeted).
+    pub budget_bytes: u64,
+    /// Planner-predicted peak of live activations + workspace, bytes
+    /// (`0` for non-planned policies).
+    pub predicted_peak_bytes: u64,
+    /// Planner-predicted end-to-end throughput, GFLOP/s (`0` for
+    /// non-planned policies).
+    pub predicted_gflops: f64,
+    /// Median time per forward, nanoseconds.
+    pub ns_per_iter: f64,
+    /// Measured throughput, GFLOP/s.
+    pub gflops: f64,
+}
+
+/// Write planner bench records as a JSON array (the `BENCH_plan.json`
+/// writer — same conventions as [`write_bench_json`]:
+/// program-generated identifiers, no escaping).
+pub fn write_plan_bench_json(
+    path: impl AsRef<Path>,
+    records: &[PlanBenchRecord],
+) -> std::io::Result<()> {
+    write_records(path, records, |r| {
+        format!(
+            "{{\"bench\": \"{}\", \"model\": \"{}\", \"policy\": \"{}\", \
+             \"dtype\": \"{}\", \"threads\": {}, \"budget_bytes\": {}, \
+             \"predicted_peak_bytes\": {}, \"predicted_gflops\": {:.4}, \
+             \"ns_per_iter\": {:.1}, \"gflops\": {:.4}}}",
+            r.bench,
+            r.model,
+            r.policy,
+            r.dtype,
+            r.threads,
+            r.budget_bytes,
+            r.predicted_peak_bytes,
+            r.predicted_gflops,
+            r.ns_per_iter,
+            r.gflops
+        )
+    })
 }
 
 /// Format a float with 3 significant decimals for table cells.
@@ -459,6 +532,71 @@ mod tests {
         assert_eq!(arr[0].get("mode").and_then(|v| v.as_str()), Some("incremental"));
         assert_eq!(arr[0].get("frames").and_then(|v| v.as_usize()), Some(512));
         assert_eq!(arr[1].get("mode").and_then(|v| v.as_str()), Some("full"));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn write_records_emits_a_valid_array_for_any_line_shape() {
+        let p = std::env::temp_dir().join("swconv_test_write_records.json");
+        write_records(&p, &[1usize, 2, 3], |n| format!("{{\"n\": {n}}}")).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let j = crate::runtime::json::Json::parse(&text).expect("valid JSON");
+        let arr = match &j {
+            crate::runtime::json::Json::Arr(a) => a,
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].get("n").and_then(|v| v.as_usize()), Some(3));
+        // Empty record sets are still a valid (empty) array.
+        write_records(&p, &[] as &[usize], |_| unreachable!()).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(matches!(
+            crate::runtime::json::Json::parse(&text),
+            Ok(crate::runtime::json::Json::Arr(a)) if a.is_empty()
+        ));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn plan_bench_json_roundtrips_through_parser() {
+        let recs = vec![
+            PlanBenchRecord {
+                bench: "plan".into(),
+                model: "squeezenet-lite".into(),
+                policy: "planned".into(),
+                dtype: "f32".into(),
+                threads: 4,
+                budget_bytes: 1 << 20,
+                predicted_peak_bytes: 912345,
+                predicted_gflops: 3.81,
+                ns_per_iter: 812345.0,
+                gflops: 2.45,
+            },
+            PlanBenchRecord {
+                bench: "plan".into(),
+                model: "squeezenet-lite".into(),
+                policy: "paper-policy".into(),
+                dtype: "f32".into(),
+                threads: 4,
+                budget_bytes: 0,
+                predicted_peak_bytes: 0,
+                predicted_gflops: 0.0,
+                ns_per_iter: 901234.0,
+                gflops: 2.21,
+            },
+        ];
+        let p = std::env::temp_dir().join("swconv_test_plan_bench.json");
+        write_plan_bench_json(&p, &recs).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let j = crate::runtime::json::Json::parse(&text).expect("valid JSON");
+        let arr = match &j {
+            crate::runtime::json::Json::Arr(a) => a,
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("policy").and_then(|v| v.as_str()), Some("planned"));
+        assert_eq!(arr[0].get("budget_bytes").and_then(|v| v.as_usize()), Some(1 << 20));
+        assert_eq!(arr[1].get("budget_bytes").and_then(|v| v.as_usize()), Some(0));
         let _ = std::fs::remove_file(p);
     }
 

@@ -10,11 +10,17 @@
 //! harness can plot it.
 
 use super::epilogue::Epilogue;
-use super::gemm::{gemm_q8, pack_a_len, pack_b_len, sgemm_with_scratch};
+use super::gemm::{gemm_q8, pack_a_len, pack_b_len, sgemm_with_scratch, NR};
 use super::sliding2d::dequantize_conv_acc;
 use super::Conv2dParams;
 use crate::exec::ExecCtx;
 use crate::tensor::{Element, QuantParams, Tensor, TensorT, WeightScales};
+
+/// Per-worker byte budget the accumulating (low-memory) im2col variant
+/// targets for its f32 column strip — roughly half an L2 slice, the
+/// Anderson-et-al. trade: a bounded strip is re-expanded per GEMM call
+/// instead of materialising the full `kh·kw ×` bloated column matrix.
+const LOWMEM_COL_BYTES: usize = 256 << 10;
 
 /// Size in bytes of the column matrix `im2col` materialises for one image
 /// of one group — the paper's memory-bloat metric.
@@ -79,6 +85,59 @@ fn im2col_plane<E: Element>(
                             };
                         }
                     }
+                }
+            }
+        }
+    }
+}
+
+/// Output-column strip width the low-memory GEMM variant expands at a
+/// time for a `kdim`-row column matrix: as many columns as keep the f32
+/// strip within [`LOWMEM_COL_BYTES`], but never less than one GEMM
+/// panel ([`NR`] — `pack_b` zero-pads ragged panels, so a narrower
+/// strip would waste packed lanes without saving memory).
+pub fn lowmem_strip_cols(kdim: usize) -> usize {
+    let per_col = kdim.max(1) * std::mem::size_of::<f32>();
+    (LOWMEM_COL_BYTES / per_col).max(NR)
+}
+
+/// [`im2col_plane`] restricted to output columns `[j0, j0 + len)` of the
+/// flattened `oh·ow` axis: fills `col` as `[c_in_g·kh·kw, len]`
+/// row-major. Each element is the **same** input tap the full expansion
+/// would place at flattened column `j0 + j`, so strip-wise GEMM over
+/// consecutive strips reads exactly the taps the one-shot expansion
+/// reads (per-column scalar addressing — the strip trades copy
+/// throughput for footprint).
+#[allow(clippy::too_many_arguments)]
+fn im2col_strip<E: Element>(
+    x: &TensorT<E>,
+    ni: usize,
+    ci0: usize,
+    c_in_g: usize,
+    kh: usize,
+    kw: usize,
+    p: &Conv2dParams,
+    ow: usize,
+    j0: usize,
+    len: usize,
+    col: &mut [E],
+) {
+    let (h, w) = (x.dim(2), x.dim(3));
+    let (sh, sw) = p.stride;
+    let (ph, pw) = p.pad;
+    for cig in 0..c_in_g {
+        let plane = x.plane(ni, ci0 + cig);
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let row = &mut col[((cig * kh + ky) * kw + kx) * len..][..len];
+                for (j, d) in row.iter_mut().enumerate() {
+                    let (oy, ox) = ((j0 + j) / ow, (j0 + j) % ow);
+                    let (iy, ix) = (oy * sh + ky, ox * sw + kx);
+                    *d = if iy < ph || iy >= h + ph || ix < pw || ix >= w + pw {
+                        E::default()
+                    } else {
+                        plane[(iy - ph) * w + (ix - pw)]
+                    };
                 }
             }
         }
@@ -177,6 +236,150 @@ pub fn conv2d_im2col_epi_ctx(
             ctx.put(col);
             ctx.put(pa);
             ctx.put(pb);
+        },
+    );
+    out
+}
+
+/// Low-memory (accumulating-im2col / kn2row-style) variant of
+/// [`conv2d_im2col_epi_ctx`]: instead of materialising the whole
+/// `[kdim, oh·ow]` column matrix per `(image, group)`, output columns
+/// are processed in strips of [`lowmem_strip_cols`] — expand the strip,
+/// run one strip GEMM into a small staging block, apply the epilogue,
+/// scatter the rows into the output — so per-worker scratch is bounded
+/// by the strip budget instead of growing with the spatial extent.
+///
+/// **Bit-identical to the one-shot kernel**: the blocked GEMM packs B
+/// in [`NR`]-wide zero-padded panels and accumulates each output
+/// element over the K blocks in a fixed order that never depends on the
+/// N extent, and the epilogue is per-element — so computing columns
+/// `[j0, j0+len)` via a separate GEMM call reproduces the full call's
+/// FP sequence for those columns exactly. This is what puts the memory
+/// frontier below full-im2col in the planner's candidate set without
+/// costing output parity.
+pub fn conv2d_im2col_lowmem_epi_ctx(
+    x: &Tensor,
+    w: &Tensor,
+    epi: Epilogue<'_>,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> Tensor {
+    let bias = epi.bias;
+    assert_eq!(x.rank(), 4);
+    assert_eq!(w.rank(), 4);
+    let (n, c_in, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (c_out, c_in_g, kh, kw) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+    let g = p.groups;
+    assert!(g >= 1 && c_in % g == 0 && c_out % g == 0, "bad groups {g}");
+    assert_eq!(c_in / g, c_in_g);
+    if let Some(b) = bias {
+        assert_eq!(b.len(), c_out);
+    }
+    let (oh, ow) = p.out_size(h, win, kh, kw);
+    let (c_out_g, ohw) = (c_out / g, oh * ow);
+    let kdim = c_in_g * kh * kw;
+    let strip = lowmem_strip_cols(kdim).min(ohw.max(1));
+
+    let mut out = Tensor::zeros(&[n, c_out, oh, ow]);
+    let ws = w.as_slice();
+    ctx.par_chunks_with(
+        out.as_mut_slice(),
+        c_out_g * ohw,
+        || {
+            (
+                ctx.take_unfilled(kdim * strip),
+                ctx.take_unfilled(pack_a_len()),
+                ctx.take_unfilled(pack_b_len(strip)),
+                ctx.take_unfilled(c_out_g * strip),
+            )
+        },
+        |item, cblk, (col, pa, pb, sblk)| {
+            let (ni, grp) = (item / g, item % g);
+            let wmat = &ws[grp * c_out_g * kdim..(grp + 1) * c_out_g * kdim];
+            let mut j0 = 0;
+            while j0 < ohw {
+                let len = strip.min(ohw - j0);
+                im2col_strip(x, ni, grp * c_in_g, c_in_g, kh, kw, p, ow, j0, len, col);
+                let stage = &mut sblk[..c_out_g * len];
+                stage.fill(0.0);
+                sgemm_with_scratch(c_out_g, kdim, len, wmat, &col[..kdim * len], stage, pa, pb);
+                epi.apply_rows(stage, c_out_g, len, grp * c_out_g);
+                for r in 0..c_out_g {
+                    cblk[r * ohw + j0..r * ohw + j0 + len]
+                        .copy_from_slice(&stage[r * len..(r + 1) * len]);
+                }
+                j0 += len;
+            }
+        },
+        |(col, pa, pb, sblk)| {
+            ctx.put(col);
+            ctx.put(pa);
+            ctx.put(pb);
+            ctx.put(sblk);
+        },
+    );
+    out
+}
+
+/// Low-memory strip variant of [`conv2d_im2col_q8_raw_ctx`] (int8
+/// codes, exact-i32 accumulation): the i8 column strip and i32 staging
+/// block are bounded by [`lowmem_strip_cols`], and integer GEMM is
+/// order-exact, so the output is bit-identical to both the one-shot
+/// int8 im2col baseline and the quantized sliding kernel.
+pub fn conv2d_im2col_lowmem_q8_raw_ctx(
+    x: &TensorT<i8>,
+    w: &TensorT<i8>,
+    p: &Conv2dParams,
+    ctx: &ExecCtx,
+) -> TensorT<i32> {
+    assert_eq!(x.rank(), 4);
+    assert_eq!(w.rank(), 4);
+    let (n, c_in, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (c_out, c_in_g, kh, kw) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+    let g = p.groups;
+    assert!(g >= 1 && c_in % g == 0 && c_out % g == 0, "bad groups {g}");
+    assert_eq!(c_in / g, c_in_g);
+    assert!(
+        c_in_g * kh * kw <= crate::kernels::rowconv::Q8_MAX_TAPS,
+        "int8 conv with {} taps could overflow the i32 accumulator",
+        c_in_g * kh * kw
+    );
+    let (oh, ow) = p.out_size(h, win, kh, kw);
+    let (c_out_g, ohw) = (c_out / g, oh * ow);
+    let kdim = c_in_g * kh * kw;
+    let strip = lowmem_strip_cols(kdim).min(ohw.max(1));
+
+    let mut out = TensorT::<i32>::zeros(&[n, c_out, oh, ow]);
+    let ws = w.as_slice();
+    ctx.par_chunks_with(
+        out.as_mut_slice(),
+        c_out_g * ohw,
+        || {
+            (
+                ctx.take_elems_unfilled::<i8>(kdim * strip),
+                ctx.take_elems_unfilled::<i32>(c_out_g * strip),
+            )
+        },
+        |item, cblk, (col, sblk)| {
+            let (ni, grp) = (item / g, item % g);
+            let wmat = &ws[grp * c_out_g * kdim..(grp + 1) * c_out_g * kdim];
+            let mut j0 = 0;
+            while j0 < ohw {
+                let len = strip.min(ohw - j0);
+                im2col_strip(x, ni, grp * c_in_g, c_in_g, kh, kw, p, ow, j0, len, col);
+                let stage = &mut sblk[..c_out_g * len];
+                stage.fill(0);
+                gemm_q8(c_out_g, kdim, len, wmat, &col[..kdim * len], stage);
+                for r in 0..c_out_g {
+                    cblk[r * ohw + j0..r * ohw + j0 + len]
+                        .copy_from_slice(&stage[r * len..(r + 1) * len]);
+                }
+                j0 += len;
+            }
+        },
+        |(col, sblk)| {
+            ctx.put_elems(col);
+            ctx.put_elems(sblk);
         },
     );
     out
@@ -308,5 +511,71 @@ mod tests {
     fn bloat_metric() {
         // k=5 on 3 channels, 28x28 output: col is 75x784 floats.
         assert_eq!(im2col_bytes(3, 5, 5, 28, 28), 75 * 784 * 4);
+    }
+
+    #[test]
+    fn strip_width_is_bounded_and_panel_aligned() {
+        // Small kdim: capped by the byte budget.
+        let s = lowmem_strip_cols(800);
+        assert_eq!(s, (256 << 10) / (800 * 4));
+        // Huge kdim: clamped up to one GEMM panel.
+        assert_eq!(lowmem_strip_cols(1 << 24), NR);
+        assert!(lowmem_strip_cols(0) >= NR, "degenerate kdim stays total");
+    }
+
+    /// The low-memory strip kernel is **bit-identical** to the one-shot
+    /// im2col kernel (not merely close): strip GEMM reproduces the full
+    /// call's per-element FP accumulation sequence. kdim is chosen large
+    /// enough that the strip is narrower than `oh·ow`, so multiple
+    /// strips (including a ragged tail) are actually exercised.
+    #[test]
+    fn lowmem_matches_oneshot_bitwise_f32() {
+        let p = Conv2dParams::same(5);
+        let x = Tensor::randn(&[2, 32, 12, 12], 31);
+        let w = Tensor::randn(&[4, 32, 5, 5], 32);
+        let kdim = 32 * 5 * 5;
+        assert!(lowmem_strip_cols(kdim) < 144, "test must span several strips");
+        let bias: Vec<f32> = (0..4).map(|i| i as f32 * 0.3 - 0.5).collect();
+        for threads in [1usize, 4] {
+            let ctx = ExecCtx::with_threads(crate::kernels::ConvAlgo::Im2colGemm, threads);
+            for relu in [false, true] {
+                let epi = Epilogue::from_bias(Some(&bias)).with_relu(relu);
+                let full = conv2d_im2col_epi_ctx(&x, &w, epi, &p, &ctx);
+                let strip = conv2d_im2col_lowmem_epi_ctx(&x, &w, epi, &p, &ctx);
+                assert_eq!(
+                    full.as_slice(),
+                    strip.as_slice(),
+                    "threads={threads} relu={relu}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lowmem_matches_oneshot_bitwise_f32_strided_grouped() {
+        let p = Conv2dParams { stride: (2, 3), pad: (1, 2), groups: 2 };
+        let x = Tensor::randn(&[1, 4, 11, 13], 33);
+        let w = Tensor::randn(&[6, 2, 3, 5], 34);
+        let ctx = ExecCtx::default();
+        let full = conv2d_im2col_epi_ctx(&x, &w, Epilogue::from_bias(None), &p, &ctx);
+        let strip = conv2d_im2col_lowmem_epi_ctx(&x, &w, Epilogue::from_bias(None), &p, &ctx);
+        assert_eq!(full.as_slice(), strip.as_slice());
+    }
+
+    #[test]
+    fn lowmem_matches_oneshot_bitwise_q8() {
+        let p = Conv2dParams::same(3);
+        let xf = Tensor::randn(&[2, 40, 10, 10], 35);
+        let wf = Tensor::randn(&[5, 40, 3, 3], 36);
+        let xq = QuantParams::for_tensor(&xf);
+        let wq = QuantParams::for_tensor(&wf);
+        let x = crate::tensor::quantize(&xf, xq);
+        let w = crate::tensor::quantize(&wf, wq);
+        for threads in [1usize, 3] {
+            let ctx = ExecCtx::with_threads(crate::kernels::ConvAlgo::Im2colGemm, threads);
+            let full = conv2d_im2col_q8_raw_ctx(&x, &w, &p, &ctx);
+            let strip = conv2d_im2col_lowmem_q8_raw_ctx(&x, &w, &p, &ctx);
+            assert_eq!(full.as_slice(), strip.as_slice(), "threads={threads}");
+        }
     }
 }

@@ -57,7 +57,16 @@
 //!   so adjacent int8 convs exchange i8 activations directly; the
 //!   optimized [`graph::CompiledPlan`] executes bit-identically to the
 //!   layer-by-layer path (`SWCONV_NO_FUSE=1` / `--no-fuse` disables the
-//!   passes).
+//!   passes). On top sits the whole-model planner
+//!   ([`graph::plan_model`]): per-conv-node algorithm × worker-split
+//!   choices maximizing predicted end-to-end throughput under a
+//!   peak-memory budget, costed from the cached
+//!   [`autotune::DispatchProfile`] — planned execution stays
+//!   bit-identical to the unplanned route (f32 re-routes only within
+//!   the ctx route's FP-summation family; int8 roams the full exact
+//!   kernel set), and an infeasible budget is an explicit
+//!   [`graph::PlanError::Infeasible`] naming the feasibility floor
+//!   ([`graph::min_feasible_budget`]).
 //! * [`stream`] — streaming inference: mirrored ring buffers and
 //!   [`stream::StreamSession`], which advances a compiled model one
 //!   frame at a time in O(taps) per sample (conv windows run the batch

@@ -12,6 +12,10 @@
 //! * `stream`      — frame-by-frame streaming inference (O(taps) per
 //!   sample): per-frame latency vs full recompute, parity against the
 //!   batch path, and stateful sessions through the coordinator
+//! * `plan`        — whole-model inference planner: per-layer algorithm ×
+//!   worker-split choices maximizing predicted throughput under a
+//!   `--mem-budget` peak-memory cap, printed with predicted vs. budget
+//!   memory and predicted throughput
 //! * `summary`     — layer/FLOP summary of a zoo model
 //! * `compile`     — lower a zoo model into the graph IR and show the
 //!   before/after of the pass pipeline (fusion, pad elision, quantize
@@ -144,6 +148,30 @@ fn apply_pin_current(args: &Args) -> Result<()> {
         eprintln!("warning: could not pin to cores {set} (unsupported platform or sandbox)");
     }
     Ok(())
+}
+
+/// `--mem-budget 64M`-style size: plain bytes, or a binary K/M/G suffix
+/// (case-insensitive, `KB`/`KiB` spellings accepted). `None` when the
+/// flag is absent — an unbudgeted plan.
+fn parse_mem_budget(args: &Args) -> Result<Option<u64>> {
+    let Some(raw) = args.get("mem-budget") else {
+        return Ok(None);
+    };
+    let s = raw.trim().to_ascii_lowercase();
+    let (digits, mult) = match s.find(|c: char| !c.is_ascii_digit()) {
+        None => (s.as_str(), 1u64),
+        Some(i) => {
+            let mult = match &s[i..] {
+                "k" | "kb" | "kib" => 1u64 << 10,
+                "m" | "mb" | "mib" => 1u64 << 20,
+                "g" | "gb" | "gib" => 1u64 << 30,
+                other => bail!("--mem-budget: unknown unit '{other}' (use K, M or G)"),
+            };
+            (&s[..i], mult)
+        }
+    };
+    let n: u64 = digits.parse().with_context(|| format!("--mem-budget {raw}"))?;
+    Ok(Some(n.saturating_mul(mult)))
 }
 
 fn parse_ks(args: &Args) -> Result<Vec<usize>> {
@@ -326,8 +354,15 @@ fn cmd_autotune(args: &Args) -> Result<()> {
     // and keeps every other dtype's, so f32 and i8 passes accumulate.
     let mut entries: Vec<ProfileEntry> = Vec::new();
     if out.exists() {
-        match DispatchProfile::load(&out) {
-            Ok(prev) => {
+        match DispatchProfile::load_versioned(&out) {
+            Ok((prev, version)) => {
+                // Surface what was merged from: a degraded v1/v2 cache
+                // loads silently, so the version is worth printing.
+                println!(
+                    "loaded cache {} (schema v{version}, {} entries)",
+                    out.display(),
+                    prev.entries().len()
+                );
                 entries.extend(prev.entries().iter().filter(|e| e.dtype != dtype).copied());
             }
             Err(e) => eprintln!("warning: replacing unreadable profile {}: {e}", out.display()),
@@ -393,6 +428,55 @@ fn cmd_run_model(args: &Args) -> Result<()> {
             w[0].0.name(),
             w[1].0.name()
         );
+    }
+    Ok(())
+}
+
+/// `plan` — run the whole-model planner over a zoo model (or all of
+/// them): per-conv-layer algorithm × worker-split × dtype choices
+/// maximizing predicted throughput while keeping live activations +
+/// workspace under `--mem-budget`. Prints one line per planned node,
+/// the predicted peak vs. the budget, the predicted throughput, and the
+/// smallest budget any plan could satisfy. An infeasible budget is an
+/// explicit error — never a silent over-budget plan. `--profile` plans
+/// from that cache's measured crossovers instead of the analytic model.
+/// `--algo` picks the serving route the plan must stay bit-identical
+/// to: f32 nodes only re-route within that route's FP-summation family
+/// (`gemm` exposes the one-shot ↔ strip-GEMM memory lever; `sliding`
+/// plans worker splits only); int8 nodes roam the full kernel set
+/// either way.
+fn cmd_plan(args: &Args) -> Result<()> {
+    let batch = args.usize("batch", 1)?.max(1);
+    let threads = parse_threads(args)?;
+    let dtype = parse_dtype(args)?;
+    let budget = parse_mem_budget(args)?;
+    let profile = parse_profile(args);
+    let algo = match args.get("algo") {
+        None | Some("sliding") => ConvAlgo::Sliding,
+        Some("gemm") => ConvAlgo::Im2colGemm,
+        Some("tuned") => ConvAlgo::Tuned,
+        Some(other) => bail!("unknown --algo '{other}' (expected sliding, gemm or tuned)"),
+    };
+    let names: Vec<&str> = match args.get("model") {
+        Some(n) => vec![n],
+        None => zoo::MODEL_NAMES.to_vec(),
+    };
+    for name in names {
+        let model = zoo::by_name(name, 10, 42)
+            .ok_or_else(|| anyhow!("unknown model '{name}' (try {:?})", zoo::MODEL_NAMES))?;
+        let compiled = model.compile();
+        let mut ctx = ExecCtx::with_threads(algo, threads).with_dtype(dtype);
+        if let Some(p) = &profile {
+            ctx.set_profile(Arc::clone(p));
+        }
+        let floor = swconv::graph::min_feasible_budget(&compiled, batch, &ctx);
+        match swconv::graph::plan_model(&compiled, batch, &ctx, budget) {
+            Ok(mp) => {
+                print!("{}", mp.render(&compiled.graph));
+                println!("  smallest feasible budget: {floor} B\n");
+            }
+            Err(e) => bail!("{e} (smallest feasible budget: {floor} bytes)"),
+        }
     }
     Ok(())
 }
@@ -751,6 +835,8 @@ COMMANDS
                    [--out target/autotune/profile.json] [--pin CORES] [--no-pool]
   run-model        [--model NAME] [--batch N] [--threads N] [--profile PATH]
                    [--dtype f32|bf16|i8] [--pin CORES] [--no-pool]
+  plan             [--model NAME] [--batch N] [--threads N] [--dtype f32|bf16|i8]
+                   [--algo sliding|gemm|tuned] [--mem-budget N[K|M|G]] [--profile PATH]
   summary          [--model NAME] [--batch N]
   compile          [--model NAME] [--batch N] [--no-fuse]
   serve            [--model NAME] [--requests N] [--max-batch N] [--max-wait-ms MS]
@@ -780,6 +866,24 @@ COMMANDS
   — skips every pass, so the plan reproduces the layer stack verbatim;
   results are bit-identical either way (see `cargo bench --bench
   graph_fusion`, which emits BENCH_graph.json).
+
+  plan runs the whole-model planner: for every conv layer it picks an
+  algorithm and a worker split that maximize predicted end-to-end
+  throughput while keeping live activations + workspace under
+  --mem-budget (plain bytes or a binary K/M/G suffix; absent =
+  unbounded). Planned execution is bit-identical to the unplanned
+  --algo route, so f32 layers only re-route within that route's
+  FP-summation family: --algo gemm exposes the one-shot ↔ gemm-lowmem
+  lever (the accumulating strip-im2col variant — a bounded column strip
+  instead of the full patch matrix, order-exact output), --algo sliding
+  plans worker splits only, and int8 layers roam the full exact kernel
+  set either way. An infeasible budget is an explicit error reporting
+  the smallest budget that would work — never a silent over-budget
+  plan. With --profile the planner costs candidates from the measured
+  crossover cache. SWCONV_FORCE_PLAN=1 makes every compiled model
+  attach an unbudgeted plan (the CI leg); `cargo bench --bench
+  plan_model` emits BENCH_plan.json comparing planned vs greedy-tuned
+  vs paper-policy execution across budgets.
 
   stream runs frame-by-frame inference: a StreamSession keeps per-layer
   ring buffers so each new sample costs O(taps) instead of a full
@@ -861,6 +965,7 @@ fn main() -> Result<()> {
         "peaks" => cmd_peaks(),
         "autotune" => cmd_autotune(&args),
         "run-model" => cmd_run_model(&args),
+        "plan" => cmd_plan(&args),
         "summary" => cmd_summary(&args),
         "compile" => cmd_compile(&args),
         "serve" => cmd_serve(&args),

@@ -120,7 +120,21 @@ impl Model {
     pub fn compile_with(&self, fuse: bool) -> CompiledPlan {
         let mut g = self.lower();
         let summary = if fuse { optimize(&mut g) } else { PassSummary::default() };
-        CompiledPlan::new(g, summary)
+        let plan = CompiledPlan::new(g, summary);
+        if crate::graph::plan_forced() {
+            // `SWCONV_FORCE_PLAN` (CI's planned-routing leg): attach an
+            // unbudgeted planner plan so every compiled model runs the
+            // per-node planned kernels. Safe under every execution ctx:
+            // int8 routes are exact, and the executor honours an f32
+            // choice only inside the running ctx's bitwise family —
+            // elsewhere the node degrades to the ctx route with just
+            // the (value-safe) worker cap applied.
+            let ctx = crate::exec::ExecCtx::auto(crate::kernels::ConvAlgo::Sliding);
+            if let Ok(mp) = crate::graph::plan_model(&plan, 1, &ctx, None) {
+                return plan.with_choices(mp.choices);
+            }
+        }
+        plan
     }
 
     /// Per-layer summary table: description, output shape, FLOPs.

@@ -1,0 +1,120 @@
+//! End-to-end parity of the whole-model planner: attaching a planner
+//! plan to a compiled model ([`CompiledPlan::with_choices`]) re-routes
+//! every conv node through the planned algorithm × worker split, and
+//! must reproduce the default compiled execution **bit-for-bit** for
+//! every zoo model, serving dtype and thread count — planning is a
+//! footprint/throughput lever, never an accuracy lever. Budgeted plans
+//! must keep their predicted peak within the budget, and an
+//! unsatisfiable budget must be an explicit [`PlanError::Infeasible`],
+//! never a silent over-budget plan.
+
+mod common;
+
+use common::{assert_bitwise, input_for};
+use swconv::graph::{min_feasible_budget, plan_model, PlanError};
+use swconv::kernels::ConvAlgo;
+use swconv::nn::{zoo, ExecCtx};
+use swconv::tensor::Dtype;
+
+/// Every zoo model × serving dtype {f32, i8} × threads {1, 4}: the
+/// planned plan's output is bitwise-identical to the default compiled
+/// plan's under the same ctx. The sliding ctx covers the paper's
+/// default route; the GEMM ctx at 4 threads exercises the planner's one
+/// real f32 algorithm interchange (one-shot ↔ strip GEMM).
+#[test]
+fn planned_execution_bit_identical_across_the_zoo() {
+    for name in zoo::MODEL_NAMES {
+        let m = zoo::by_name(name, 4, 42).unwrap();
+        let batch = if matches!(name, "simple-cnn" | "quantized-cnn") { 2 } else { 1 };
+        let x = input_for(&m, batch, 7);
+        for dtype in [Dtype::F32, Dtype::I8] {
+            for (algo, threads) in
+                [(ConvAlgo::Sliding, 1), (ConvAlgo::Sliding, 4), (ConvAlgo::Im2colGemm, 4)]
+            {
+                let ctx = ExecCtx::with_threads(algo, threads).with_dtype(dtype);
+                let compiled = m.compile();
+                let want = compiled.run(&x, &ctx);
+                let mp = plan_model(&compiled, batch, &ctx, None).expect("unbudgeted plan");
+                assert!(
+                    mp.choices.iter().any(Option::is_some),
+                    "{name}: plan covers no conv node"
+                );
+                let planned = m.compile().with_choices(mp.choices);
+                assert_bitwise(
+                    &planned.run(&x, &ctx),
+                    &want,
+                    &format!("{name} {} {algo:?} threads={threads} planned", dtype.name()),
+                );
+            }
+        }
+    }
+}
+
+/// Budgeted plans keep their predicted peak within the budget — at the
+/// exact feasibility floor and with headroom — and still execute
+/// bit-identically to the default plan.
+#[test]
+fn budgeted_plans_respect_the_budget_and_stay_bit_identical() {
+    for name in ["simple-cnn", "squeezenet-lite", "quantized-cnn"] {
+        let m = zoo::by_name(name, 4, 42).unwrap();
+        let x = input_for(&m, 1, 11);
+        // GEMM-routed ctx: the budget can force the strip variant, not
+        // just narrower splits.
+        let ctx = ExecCtx::with_threads(ConvAlgo::Im2colGemm, 4);
+        let compiled = m.compile();
+        let want = compiled.run(&x, &ctx);
+        let floor = min_feasible_budget(&compiled, 1, &ctx);
+        let unbounded = plan_model(&compiled, 1, &ctx, None).expect("unbudgeted plan");
+        let peak = unbounded.predicted_peak_bytes.max(floor);
+        for budget in [floor, floor + (peak - floor) / 2] {
+            let mp = plan_model(&compiled, 1, &ctx, Some(budget))
+                .unwrap_or_else(|e| panic!("{name} budget {budget}: {e}"));
+            assert!(
+                mp.predicted_peak_bytes <= budget,
+                "{name}: predicted peak {} exceeds budget {budget}",
+                mp.predicted_peak_bytes
+            );
+            let planned = m.compile().with_choices(mp.choices);
+            assert_bitwise(
+                &planned.run(&x, &ctx),
+                &want,
+                &format!("{name} budget={budget} planned"),
+            );
+        }
+    }
+}
+
+/// A budget below the feasibility floor is an explicit error that names
+/// the floor — the planner never silently hands back an over-budget
+/// plan.
+#[test]
+fn infeasible_budgets_error_instead_of_silently_falling_back() {
+    let m = zoo::simple_cnn(4, 42);
+    let compiled = m.compile();
+    let ctx = ExecCtx::new(ConvAlgo::Sliding);
+    let floor = min_feasible_budget(&compiled, 1, &ctx);
+    assert!(floor > 1, "floor must be a real footprint");
+    let PlanError::Infeasible { min_bytes, budget, .. } =
+        plan_model(&compiled, 1, &ctx, Some(floor - 1)).expect_err("sub-floor budget must fail");
+    assert_eq!(min_bytes, floor, "error reports the smallest feasible budget");
+    assert_eq!(budget, floor - 1);
+    // And exactly at the floor, planning succeeds.
+    assert!(plan_model(&compiled, 1, &ctx, Some(floor)).is_ok());
+}
+
+/// The process-wide `SWCONV_FORCE_PLAN` lever: with it set, every
+/// `Model::compile` attaches a plan, and results stay bit-identical to
+/// an explicitly unplanned compile.
+#[test]
+fn forced_planning_attaches_choices_and_preserves_results() {
+    let m = zoo::simple_cnn(4, 42);
+    let x = input_for(&m, 2, 13);
+    let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 2);
+    swconv::graph::set_plan_forced(false);
+    let want = m.compile().run(&x, &ctx);
+    swconv::graph::set_plan_forced(true);
+    let forced = m.compile();
+    swconv::graph::set_plan_forced(false);
+    assert!(forced.choices().is_some(), "forced compile must attach a plan");
+    assert_bitwise(&forced.run(&x, &ctx), &want, "forced-plan compile");
+}
