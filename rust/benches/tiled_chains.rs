@@ -1,0 +1,150 @@
+//! BENCH — cache-blocked tiled execution: every zoo model run untiled
+//! (the baseline executor, full-plane intermediates) vs tiled (the same
+//! compiled plan with the tiling analysis' fusable chains attached, run
+//! tile-by-tile through the halo-aware region kernels). Tiled rows
+//! sweep the cache-budget-sized `auto` shape plus two forced shapes, so
+//! the report shows both the working-set shrink the analysis predicts
+//! (`chain_ws_bytes`, per-tile vs full-plane) and what that locality
+//! actually buys or costs in wall time on this machine's cache
+//! hierarchy (`swconv cache-info`).
+//!
+//! Parity is asserted before anything is timed: tiled execution must
+//! reproduce the untiled run **bit for bit** (every dtype — the region
+//! kernels replay the untiled per-element accumulation order), or the
+//! bench aborts. The analysis' footprint invariant is asserted too:
+//! a chain's per-tile working set never exceeds its untiled set, and
+//! strictly shrinks whenever the tile is smaller than the plane.
+//!
+//! Emits `target/reports/BENCH_tile.json` (schema:
+//! [`swconv::harness::report::TileBenchRecord`]) with `bench` =
+//! `"tile"`: one `untiled` record plus one `tiled` record per
+//! (model, dtype, tile shape) with at least one fusable chain.
+
+use swconv::graph::{set_forced_tile_shape, tiling, TileMode};
+use swconv::harness::report::{dur, f3, write_tile_bench_json, Table, TileBenchRecord};
+use swconv::harness::timing::bench;
+use swconv::kernels::ConvAlgo;
+use swconv::nn::{zoo, ExecCtx};
+use swconv::tensor::{Dtype, Tensor};
+
+const BATCH: usize = 2;
+const THREADS: usize = 4;
+
+/// Tile-shape sweep: the cache-budget autosize plus two forced shapes
+/// (interior tile, small tile — more halo overlap, less footprint).
+const SHAPES: [(&str, Option<(usize, usize)>); 3] =
+    [("auto", None), ("8x8", Some((8, 8))), ("4x4", Some((4, 4)))];
+
+fn main() {
+    let mut t = Table::new(
+        format!("Tiled vs untiled fused chains (batch {BATCH}, {THREADS} threads)"),
+        &["model", "dtype", "mode", "tile", "chains", "chain ws", "median", "GF/s"],
+    );
+    let mut records: Vec<TileBenchRecord> = Vec::new();
+    for name in zoo::MODEL_NAMES {
+        let m = zoo::by_name(name, 10, 42).unwrap();
+        let mut shape = vec![BATCH];
+        shape.extend_from_slice(&m.input_shape);
+        let x = Tensor::randn(&shape, 1);
+        for dtype in [Dtype::F32, Dtype::I8] {
+            let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, THREADS).with_dtype(dtype);
+            let compiled = m.compile();
+            let flops = compiled.flops(BATCH);
+            let want = compiled.run(&x, &ctx);
+            // The auto analysis names the chains; its untiled estimate
+            // is shape-independent, so it prices the baseline row too.
+            let auto = tiling::analyze(&compiled.graph, None, &ctx, BATCH, TileMode::ForceAll);
+            let untiled_ws: u64 = auto.chains.iter().map(|c| c.untiled_bytes).sum();
+
+            let stats = bench(|| compiled.run(&x, &ctx));
+            t.row(vec![
+                name.into(),
+                dtype.name().into(),
+                "untiled".into(),
+                "-".into(),
+                auto.chains.len().to_string(),
+                format!("{:.0}KiB", untiled_ws as f64 / 1024.0),
+                dur(stats.median),
+                f3(stats.gflops(flops)),
+            ]);
+            records.push(TileBenchRecord {
+                bench: "tile".into(),
+                model: name.into(),
+                dtype: dtype.name().into(),
+                threads: THREADS,
+                mode: "untiled".into(),
+                tile: "-".into(),
+                chains: auto.chains.len(),
+                chain_ws_bytes: untiled_ws,
+                ns_per_iter: stats.median.as_secs_f64() * 1e9,
+                gflops: stats.gflops(flops),
+            });
+            if auto.is_empty() {
+                eprintln!("{name} {}: no fusable chain — tiled rows skipped", dtype.name());
+                continue;
+            }
+            for (label, forced) in SHAPES {
+                set_forced_tile_shape(forced);
+                let analysis =
+                    tiling::analyze(&compiled.graph, None, &ctx, BATCH, TileMode::ForceAll);
+                set_forced_tile_shape(None);
+                if analysis.is_empty() {
+                    eprintln!("{name} {}: tile {label} rejected by the grid validator", dtype.name());
+                    continue;
+                }
+                let mut ws = 0u64;
+                for c in &analysis.chains {
+                    // The analysis' footprint invariant, priced per chain.
+                    assert!(
+                        c.tiled_bytes <= c.untiled_bytes,
+                        "{name} {label}: tiling must never grow the working set"
+                    );
+                    let (oh, ow) = c.out_hw();
+                    if (c.tile.0 < oh || c.tile.1 < ow) && c.tiled_bytes == c.untiled_bytes {
+                        // Possible only when every link's halo already
+                        // clamps to its full input plane — worth seeing.
+                        eprintln!(
+                            "{name} {label}: sub-plane tile did not shrink chain %{}..%{}",
+                            c.start, c.end
+                        );
+                    }
+                    ws += c.tiled_bytes;
+                }
+                let tiled = m.compile().with_tiling(analysis.clone());
+                // Parity gate: timing a wrong answer is worse than none.
+                assert_eq!(
+                    tiled.run(&x, &ctx).as_slice(),
+                    want.as_slice(),
+                    "{name} {} tile {label}: tiled execution must be bit-identical",
+                    dtype.name()
+                );
+                let stats = bench(|| tiled.run(&x, &ctx));
+                t.row(vec![
+                    name.into(),
+                    dtype.name().into(),
+                    "tiled".into(),
+                    label.into(),
+                    analysis.chains.len().to_string(),
+                    format!("{:.0}KiB", ws as f64 / 1024.0),
+                    dur(stats.median),
+                    f3(stats.gflops(flops)),
+                ]);
+                records.push(TileBenchRecord {
+                    bench: "tile".into(),
+                    model: name.into(),
+                    dtype: dtype.name().into(),
+                    threads: THREADS,
+                    mode: "tiled".into(),
+                    tile: label.into(),
+                    chains: analysis.chains.len(),
+                    chain_ws_bytes: ws,
+                    ns_per_iter: stats.median.as_secs_f64() * 1e9,
+                    gflops: stats.gflops(flops),
+                });
+            }
+        }
+    }
+    println!("{}", t.render());
+    write_tile_bench_json("target/reports/BENCH_tile.json", &records).expect("json");
+    eprintln!("wrote target/reports/BENCH_tile.json ({} records)", records.len());
+}

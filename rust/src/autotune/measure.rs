@@ -7,7 +7,8 @@
 //! serving executes — same scratch arena, same thread fan-out.
 
 use super::profile::{DispatchProfile, ProfileEntry, TunedAlgo};
-use crate::exec::{available_threads, pool, ExecCtx, WorkerPool};
+use crate::exec::{available_threads, pool, CacheInfo, ExecCtx, WorkerPool};
+use crate::graph::{tiling, TileMode};
 use std::sync::Arc;
 use crate::harness::report::{f3, Table};
 use crate::harness::timing::bench_config;
@@ -16,8 +17,9 @@ use crate::kernels::im2col::conv2d_im2col_q8_raw_ctx;
 use crate::kernels::rowconv::{RowKernel, COMPOUND_MAX_K};
 use crate::kernels::sliding2d::conv2d_sliding_q8_raw_ctx;
 use crate::kernels::{conv2d_ctx, ConvAlgo};
+use crate::nn::Model;
 use crate::simd::IsaLevel;
-use crate::tensor::{quantize, Dtype, QuantParams};
+use crate::tensor::{quantize, Dtype, QuantParams, Tensor};
 use std::time::Duration;
 
 /// What the autotuner measures: the representative workload geometry,
@@ -323,6 +325,135 @@ fn measure_i8_bucket(
     }
 }
 
+/// A candidate in a tile-shape race (see [`race_tile_shapes`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileCandidate {
+    /// The baseline executor — full-plane intermediates, no tiling.
+    Untiled,
+    /// Cache-budget-sized tiles (what `SWCONV_FORCE_TILE=1` and
+    /// `--tile auto` run).
+    Auto,
+    /// A forced `rows × cols` output-tile shape (`--tile HxW`).
+    Fixed(usize, usize),
+}
+
+impl TileCandidate {
+    /// Human label: `untiled`, `auto`, or `HxW` — the `HxW` form is
+    /// exactly what `--tile` accepts back.
+    pub fn name(&self) -> String {
+        match *self {
+            TileCandidate::Untiled => "untiled".into(),
+            TileCandidate::Auto => "auto".into(),
+            TileCandidate::Fixed(h, w) => format!("{h}x{w}"),
+        }
+    }
+}
+
+/// One measured row of [`race_tile_shapes`].
+#[derive(Clone, Debug)]
+pub struct TileRaceRow {
+    /// The raced shape.
+    pub candidate: TileCandidate,
+    /// Fusable chains the analysis tiled at this shape (0 on the
+    /// untiled baseline row).
+    pub chains: usize,
+    /// Summed estimated intra-chain working set, in bytes — full-plane
+    /// on the untiled row, per-tile on tiled rows.
+    pub ws_bytes: u64,
+    /// Measured throughput (MACs counted as in the kernel races).
+    pub gflops: f64,
+}
+
+/// Race output-tile shapes for one model under one ctx — the tiling
+/// analogue of the kernel race. Every candidate runs the *same*
+/// compiled plan and tiled execution is bit-identical by contract
+/// (asserted here before any timing), so the race is purely about
+/// locality: the fastest row's [`TileCandidate::name`] is the shape to
+/// pass back as `--tile`. The untiled baseline always races; a shape
+/// the analysis rejects (no fusable chain under this ctx, or a
+/// degenerate grid) is skipped. The dispatch-profile schema is
+/// deliberately unchanged — the winning tile is a per-model property,
+/// not a per-filter-width bucket.
+pub fn race_tile_shapes(
+    m: &Model,
+    batch: usize,
+    ctx: &ExecCtx,
+    candidates: &[TileCandidate],
+    samples: usize,
+    sample_target: Duration,
+) -> Vec<TileRaceRow> {
+    let batch = batch.max(1);
+    let mut shape = vec![batch];
+    shape.extend_from_slice(&m.input_shape);
+    let x = Tensor::randn(&shape, 1);
+    let compiled = m.compile();
+    let flops = compiled.flops(batch);
+    let want = compiled.run(&x, ctx);
+    let budget = CacheInfo::detect().tile_budget_bytes() as u64;
+
+    let mut rows = Vec::new();
+    for &cand in candidates {
+        let row = match cand {
+            TileCandidate::Untiled => {
+                // Price the baseline with the auto analysis' untiled
+                // (full-plane) estimate over the same chains.
+                let auto = tiling::analyze_with(
+                    &compiled.graph,
+                    None,
+                    ctx,
+                    batch,
+                    TileMode::ForceAll,
+                    budget,
+                    None,
+                );
+                let stats = bench_config(|| compiled.run(&x, ctx), samples, sample_target);
+                TileRaceRow {
+                    candidate: cand,
+                    chains: 0,
+                    ws_bytes: auto.chains.iter().map(|c| c.untiled_bytes).sum(),
+                    gflops: stats.gflops(flops),
+                }
+            }
+            TileCandidate::Auto | TileCandidate::Fixed(..) => {
+                let forced = match cand {
+                    TileCandidate::Fixed(h, w) => Some((h, w)),
+                    _ => None,
+                };
+                let analysis = tiling::analyze_with(
+                    &compiled.graph,
+                    None,
+                    ctx,
+                    batch,
+                    TileMode::ForceAll,
+                    budget,
+                    forced,
+                );
+                if analysis.is_empty() {
+                    continue;
+                }
+                let chains = analysis.chains.len();
+                let ws = analysis.chains.iter().map(|c| c.tiled_bytes).sum();
+                let tiled = m.compile().with_tiling(analysis);
+                assert_eq!(
+                    tiled.run(&x, ctx).as_slice(),
+                    want.as_slice(),
+                    "tile race {}: tiled execution must be bit-identical",
+                    cand.name()
+                );
+                let stats = bench_config(|| tiled.run(&x, ctx), samples, sample_target);
+                TileRaceRow {
+                    candidate: cand,
+                    chains,
+                    ws_bytes: ws,
+                    gflops: stats.gflops(flops),
+                }
+            }
+        };
+        rows.push(row);
+    }
+    rows
+}
+
 /// Render a profile's crossover table for humans (the CLI and the
 /// `ablation_tuned` bench both print this).
 pub fn profile_table(profile: &DispatchProfile) -> Table {
@@ -421,5 +552,47 @@ mod tests {
     fn non_tunable_dtypes_are_rejected() {
         let opts = AutotuneOpts { dtype: Dtype::Bf16, ..AutotuneOpts::quick() };
         let _ = autotune(&opts);
+    }
+
+    /// The tile race always runs the untiled baseline, accepts at least
+    /// one tiled shape on a fusable chain model (asserting bit parity
+    /// internally), and never prices a tiled row above the full-plane
+    /// estimate.
+    #[test]
+    fn tile_race_covers_candidates_and_shrinks_footprint() {
+        use crate::kernels::{Conv2dParams, PoolParams};
+        use crate::nn::layers::{Conv2d, MaxPool2d, ReLU};
+
+        let m = Model::new("race", &[3, 16, 16])
+            .push(Conv2d::new(3, 4, 3, Conv2dParams::same(3), 21))
+            .push(ReLU)
+            .push(Conv2d::new(4, 4, 3, Conv2dParams::same(3), 22))
+            .push(MaxPool2d(PoolParams::square(2)));
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 1).without_pool();
+        let cands = [
+            TileCandidate::Untiled,
+            TileCandidate::Auto,
+            TileCandidate::Fixed(4, 4),
+            TileCandidate::Fixed(1, 16),
+        ];
+        let rows =
+            race_tile_shapes(&m, 1, &ctx, &cands, 1, Duration::from_micros(200));
+        let untiled = rows
+            .iter()
+            .find(|r| r.candidate == TileCandidate::Untiled)
+            .expect("the baseline always races");
+        assert!(rows.len() >= 2, "a fusable chain model must accept a tiled shape");
+        for r in &rows {
+            assert!(r.gflops > 0.0, "{:?}: no throughput measured", r.candidate);
+            assert!(!r.candidate.name().is_empty());
+            if r.candidate != TileCandidate::Untiled {
+                assert!(r.chains >= 1, "{:?}: tiled row without chains", r.candidate);
+                assert!(
+                    r.ws_bytes <= untiled.ws_bytes,
+                    "{:?}: tiling grew the working set",
+                    r.candidate
+                );
+            }
+        }
     }
 }

@@ -22,6 +22,13 @@
 //!   serialized through [`crate::runtime::json`] and cached at
 //!   [`default_profile_path`] (`target/autotune/profile.json`) so
 //!   serving loads it from disk instead of re-measuring at startup.
+//! * [`race_tile_shapes`] ([`measure`]) — the tiling analogue of the
+//!   kernel race: time a model's compiled plan untiled vs under
+//!   candidate `--tile` output-tile shapes (tiled execution is
+//!   bit-identical by contract, asserted before timing) and report
+//!   which shape this machine's cache hierarchy prefers. The winner is
+//!   a per-model `--tile` argument, not a profile bucket — the cached
+//!   schema is unchanged.
 //!
 //! Dispatch consults the profile in two places: the conv-level
 //! [`crate::kernels::ConvAlgo::Tuned`] algorithm resolves each filter
@@ -63,5 +70,7 @@
 pub mod measure;
 pub mod profile;
 
-pub use measure::{autotune, profile_table, AutotuneOpts};
+pub use measure::{
+    autotune, profile_table, race_tile_shapes, AutotuneOpts, TileCandidate, TileRaceRow,
+};
 pub use profile::{default_profile_path, DispatchProfile, ProfileEntry, TunedAlgo};

@@ -556,7 +556,10 @@ impl BackendSpec {
             Ok(mp) => mp,
             Err(e) => bail!("planned tier '{name}': {e}"),
         };
-        let plan = Arc::new(compiled.with_choices(planned.choices));
+        // Attach both planner products: per-node kernel choices and the
+        // cache-footprint term's tiled chains (empty when nothing
+        // spills the L2 tile budget). Both are bit-identical levers.
+        let plan = Arc::new(compiled.with_choices(planned.choices).with_tiling(planned.tiling));
         Ok(BackendSpec {
             name,
             item_shape,

@@ -1,0 +1,324 @@
+//! Cache-hierarchy probe: sysfs-backed detection of the L1d/L2/L3
+//! sizes the tiler sizes its working sets against.
+//!
+//! The tiled executor ([`crate::graph::tiling`]) keeps a fused chain's
+//! per-tile working set inside the innermost *private* cache level big
+//! enough to matter — on every x86/ARM server that is L2 — so it needs
+//! to know how big L2 actually is on this machine. Linux exposes the
+//! topology under `/sys/devices/system/cpu/cpu*/cache/index*` (one
+//! directory per cache instance per CPU, with `level`, `size`, `type`
+//! and `shared_cpu_list` files); [`detect`] parses cpu0's view of it
+//! once per process and caches the result.
+//!
+//! Detection is **never** load-bearing for correctness — tile shape
+//! changes which rectangles the region kernels compute, not their
+//! values — so every failure mode degrades to a conservative fallback
+//! ([`CacheInfo::fallback`]: 32 KiB L1d / 512 KiB L2 / 8 MiB L3,
+//! modest sizes that fit inside any server core of the last decade).
+//! The `SWCONV_L2_KB` / `SWCONV_L3_KB` environment variables override
+//! the detected (or fallen-back) sizes, giving benchmarks and CI an
+//! exact, machine-independent lever; `swconv cache-info` prints the
+//! whole struct so the tiler's inputs are inspectable.
+
+use super::affinity::CoreSet;
+use std::path::Path;
+use std::sync::OnceLock;
+
+/// Where the cache sizes came from, for the `cache-info` report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheSource {
+    /// Parsed from `/sys/devices/system/cpu/cpu0/cache/`.
+    Sysfs,
+    /// The conservative built-in fallback (sysfs missing or malformed).
+    Fallback,
+}
+
+/// The cache hierarchy as the tiler sees it: one size per level, plus
+/// how many CPUs share each L2/L3 instance (1 = private).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheInfo {
+    /// L1 data cache size in bytes.
+    pub l1d_bytes: usize,
+    /// L2 (unified) cache size in bytes — the tiler's working-set
+    /// target.
+    pub l2_bytes: usize,
+    /// L3 (last-level) cache size in bytes; 0 when the machine reports
+    /// none.
+    pub l3_bytes: usize,
+    /// CPUs sharing one L2 instance (1 on most x86 cores, 2 with SMT
+    /// siblings listed, more on clustered designs).
+    pub l2_shared_by: usize,
+    /// CPUs sharing one L3 instance (typically the whole socket/CCX).
+    pub l3_shared_by: usize,
+    /// Whether the sizes were probed or fallen back to.
+    pub source: CacheSource,
+    /// True when `SWCONV_L2_KB`/`SWCONV_L3_KB` overrode a size.
+    pub overridden: bool,
+}
+
+impl CacheInfo {
+    /// The conservative fallback: 32 KiB L1d, 512 KiB private L2,
+    /// 8 MiB shared L3. Small enough to be real on any supported
+    /// machine, so a tiler sized from it never *overestimates* the
+    /// cache it is trying to stay resident in.
+    pub fn fallback() -> CacheInfo {
+        CacheInfo {
+            l1d_bytes: 32 << 10,
+            l2_bytes: 512 << 10,
+            l3_bytes: 8 << 20,
+            l2_shared_by: 1,
+            l3_shared_by: 1,
+            source: CacheSource::Fallback,
+            overridden: false,
+        }
+    }
+
+    /// Human-readable multi-line report (what `swconv cache-info`
+    /// prints).
+    pub fn render(&self) -> String {
+        let src = match self.source {
+            CacheSource::Sysfs => "sysfs (/sys/devices/system/cpu/cpu0/cache)",
+            CacheSource::Fallback => "built-in fallback (sysfs unavailable)",
+        };
+        let mut out = String::new();
+        out.push_str(&format!("source : {src}\n"));
+        if self.overridden {
+            out.push_str("         (sizes overridden via SWCONV_L2_KB/SWCONV_L3_KB)\n");
+        }
+        out.push_str(&format!("L1d    : {}\n", fmt_size(self.l1d_bytes)));
+        out.push_str(&format!(
+            "L2     : {} (shared by {} cpu(s))\n",
+            fmt_size(self.l2_bytes),
+            self.l2_shared_by
+        ));
+        if self.l3_bytes > 0 {
+            out.push_str(&format!(
+                "L3     : {} (shared by {} cpu(s))\n",
+                fmt_size(self.l3_bytes),
+                self.l3_shared_by
+            ));
+        } else {
+            out.push_str("L3     : none reported\n");
+        }
+        out.push_str(&format!(
+            "tile working-set budget: {} (3/4 of L2)\n",
+            fmt_size(self.tile_budget_bytes())
+        ));
+        out
+    }
+
+    /// The per-tile working-set budget the tiler targets: 3/4 of L2,
+    /// leaving headroom for weights, row scratch and the stack. This is
+    /// a *goal*, not a contract — a chain whose minimum tile (1×1
+    /// output) still exceeds it simply runs with the minimum tile.
+    pub fn tile_budget_bytes(&self) -> usize {
+        (self.l2_bytes / 4) * 3
+    }
+
+    /// Associated form of the module-level [`detect`]: the probed (and
+    /// process-cached) hierarchy.
+    pub fn detect() -> CacheInfo {
+        detect()
+    }
+}
+
+/// Format a byte count in binary units for the report.
+fn fmt_size(b: usize) -> String {
+    if b >= 1 << 20 && b % (1 << 20) == 0 {
+        format!("{} MiB", b >> 20)
+    } else if b >= 1 << 10 {
+        format!("{} KiB", b >> 10)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Parse a sysfs cache `size` file: a decimal count with an optional
+/// `K`/`M`/`G` binary suffix (sysfs writes e.g. `512K`, `32M`).
+fn parse_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (digits, mult) = match s.char_indices().find(|(_, c)| !c.is_ascii_digit()) {
+        None => (s, 1usize),
+        Some((i, c)) => {
+            let mult = match c.to_ascii_uppercase() {
+                'K' => 1usize << 10,
+                'M' => 1usize << 20,
+                'G' => 1usize << 30,
+                _ => return None,
+            };
+            (&s[..i], mult)
+        }
+    };
+    digits.parse::<usize>().ok().map(|n| n.saturating_mul(mult))
+}
+
+/// How many CPUs a `shared_cpu_list` file names (`0-3,8` → 5). Zero or
+/// unparseable lists answer 1 (assume private).
+fn parse_shared_count(s: &str) -> usize {
+    match CoreSet::parse(s.trim()) {
+        Ok(set) => set.len().max(1),
+        Err(_) => 1,
+    }
+}
+
+fn read_trimmed(p: &Path) -> Option<String> {
+    std::fs::read_to_string(p).ok().map(|s| s.trim().to_string())
+}
+
+/// Probe cpu0's cache directories under `root` (the
+/// `/sys/devices/system/cpu` prefix — parameterized for tests).
+/// `None` when no usable L2 was found.
+fn probe_sysfs_at(root: &Path) -> Option<CacheInfo> {
+    let cache = root.join("cpu0/cache");
+    let mut info = CacheInfo { source: CacheSource::Sysfs, l3_bytes: 0, ..CacheInfo::fallback() };
+    let mut saw_l2 = false;
+    // index0..index9 covers every real topology (3–5 instances).
+    for i in 0..10 {
+        let dir = cache.join(format!("index{i}"));
+        if !dir.is_dir() {
+            continue;
+        }
+        let level = read_trimmed(&dir.join("level")).and_then(|s| s.parse::<usize>().ok());
+        let ty = read_trimmed(&dir.join("type")).unwrap_or_default();
+        let size = read_trimmed(&dir.join("size")).and_then(|s| parse_size(&s));
+        let shared = read_trimmed(&dir.join("shared_cpu_list"))
+            .map(|s| parse_shared_count(&s))
+            .unwrap_or(1);
+        let (Some(level), Some(size)) = (level, size) else { continue };
+        match (level, ty.as_str()) {
+            (1, "Data") => info.l1d_bytes = size,
+            // L2/L3 are "Unified" everywhere that matters; accept a
+            // missing type file too.
+            (2, "Unified" | "Data" | "") => {
+                info.l2_bytes = size;
+                info.l2_shared_by = shared;
+                saw_l2 = true;
+            }
+            (3, "Unified" | "Data" | "") => {
+                info.l3_bytes = size;
+                info.l3_shared_by = shared;
+            }
+            _ => {}
+        }
+    }
+    saw_l2.then_some(info)
+}
+
+/// Apply the `SWCONV_L2_KB`/`SWCONV_L3_KB` overrides (decimal KiB
+/// counts; unparseable or zero values are ignored).
+fn apply_overrides(mut info: CacheInfo) -> CacheInfo {
+    if let Ok(v) = std::env::var("SWCONV_L2_KB") {
+        if let Ok(kb) = v.trim().parse::<usize>() {
+            if kb > 0 {
+                info.l2_bytes = kb << 10;
+                info.overridden = true;
+            }
+        }
+    }
+    if let Ok(v) = std::env::var("SWCONV_L3_KB") {
+        if let Ok(kb) = v.trim().parse::<usize>() {
+            if kb > 0 {
+                info.l3_bytes = kb << 10;
+                info.overridden = true;
+            }
+        }
+    }
+    info
+}
+
+/// The machine's cache hierarchy: sysfs-probed on first call (with the
+/// conservative fallback when the probe fails) plus the environment
+/// overrides, then cached for the process lifetime.
+pub fn detect() -> CacheInfo {
+    static DETECTED: OnceLock<CacheInfo> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        let probed = probe_sysfs_at(Path::new("/sys/devices/system/cpu"))
+            .unwrap_or_else(CacheInfo::fallback);
+        apply_overrides(probed)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_suffixes_parse() {
+        assert_eq!(parse_size("512K"), Some(512 << 10));
+        assert_eq!(parse_size("32M"), Some(32 << 20));
+        assert_eq!(parse_size("1G"), Some(1 << 30));
+        assert_eq!(parse_size("448"), Some(448));
+        assert_eq!(parse_size(" 64K\n"), Some(64 << 10));
+        assert_eq!(parse_size("64KB"), None, "sysfs never writes KB");
+        assert_eq!(parse_size("abc"), None);
+        assert_eq!(parse_size(""), None);
+    }
+
+    #[test]
+    fn shared_lists_count_cpus() {
+        assert_eq!(parse_shared_count("0"), 1);
+        assert_eq!(parse_shared_count("0-3"), 4);
+        assert_eq!(parse_shared_count("0-3,8"), 5);
+        assert_eq!(parse_shared_count("garbage"), 1);
+    }
+
+    #[test]
+    fn fallback_is_conservative_and_budget_is_three_quarters() {
+        let f = CacheInfo::fallback();
+        assert_eq!(f.l2_bytes, 512 << 10);
+        assert_eq!(f.tile_budget_bytes(), 384 << 10);
+        assert_eq!(f.source, CacheSource::Fallback);
+        assert!(!f.overridden);
+    }
+
+    #[test]
+    fn probe_parses_a_synthetic_topology() {
+        let root = std::env::temp_dir().join("swconv_test_cache_topo");
+        let mk = |idx: usize, level: &str, ty: &str, size: &str, shared: &str| {
+            let d = root.join(format!("cpu0/cache/index{idx}"));
+            std::fs::create_dir_all(&d).unwrap();
+            std::fs::write(d.join("level"), level).unwrap();
+            std::fs::write(d.join("type"), ty).unwrap();
+            std::fs::write(d.join("size"), size).unwrap();
+            std::fs::write(d.join("shared_cpu_list"), shared).unwrap();
+        };
+        mk(0, "1", "Data", "48K", "0-1");
+        mk(1, "1", "Instruction", "32K", "0-1");
+        mk(2, "2", "Unified", "1280K", "0-1");
+        mk(3, "3", "Unified", "24M", "0-15");
+        let info = probe_sysfs_at(&root).expect("synthetic topology must probe");
+        assert_eq!(info.l1d_bytes, 48 << 10);
+        assert_eq!(info.l2_bytes, 1280 << 10);
+        assert_eq!(info.l2_shared_by, 2);
+        assert_eq!(info.l3_bytes, 24 << 20);
+        assert_eq!(info.l3_shared_by, 16);
+        assert_eq!(info.source, CacheSource::Sysfs);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn probe_without_l2_degrades_to_none() {
+        let root = std::env::temp_dir().join("swconv_test_cache_topo_empty");
+        std::fs::create_dir_all(root.join("cpu0/cache")).unwrap();
+        assert_eq!(probe_sysfs_at(&root), None);
+        let _ = std::fs::remove_dir_all(&root);
+        assert_eq!(probe_sysfs_at(Path::new("/definitely/not/here")), None);
+    }
+
+    #[test]
+    fn render_mentions_every_level() {
+        let s = CacheInfo::fallback().render();
+        assert!(s.contains("L1d"));
+        assert!(s.contains("L2"));
+        assert!(s.contains("L3"));
+        assert!(s.contains("budget"));
+    }
+
+    #[test]
+    fn detect_is_cached_and_total() {
+        let a = detect();
+        let b = detect();
+        assert_eq!(a, b, "detection must be cached");
+        assert!(a.l2_bytes > 0);
+    }
+}

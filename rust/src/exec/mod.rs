@@ -54,9 +54,11 @@
 //! throughput, never results.
 
 pub mod affinity;
+pub mod cache_topology;
 pub mod pool;
 
 pub use affinity::{numa_nodes, CoreSet};
+pub use cache_topology::CacheInfo;
 pub use pool::WorkerPool;
 
 use crate::autotune::{DispatchProfile, TunedAlgo};

@@ -31,6 +31,7 @@ pub mod ir;
 pub mod passes;
 pub mod plan;
 pub mod planner;
+pub mod tiling;
 
 pub use ir::{Graph, Node, NodeId, Op};
 pub use passes::{optimize, PassSummary};
@@ -38,8 +39,9 @@ pub use plan::CompiledPlan;
 pub use planner::{
     min_feasible_budget, plan_model, ModelPlan, PlanAlgo, PlanError, PlannedChoice,
 };
+pub use tiling::{ChainTiling, TileMode, TilingPlan};
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Once;
 
 static FUSION_DISABLED: AtomicBool = AtomicBool::new(false);
@@ -47,6 +49,12 @@ static FUSION_INIT: Once = Once::new();
 
 static PLAN_FORCED: AtomicBool = AtomicBool::new(false);
 static PLAN_INIT: Once = Once::new();
+
+static TILE_FORCED: AtomicBool = AtomicBool::new(false);
+static TILE_INIT: Once = Once::new();
+
+/// Forced tile shape (`--tile HxW`), packed `h << 32 | w`; 0 = unset.
+static TILE_SHAPE: AtomicU64 = AtomicU64::new(0);
 
 /// Should every [`crate::nn::Model::compile`] attach a planner-produced
 /// per-node plan? First call consults the `SWCONV_FORCE_PLAN`
@@ -71,6 +79,58 @@ pub fn plan_forced() -> bool {
 pub fn set_plan_forced(forced: bool) {
     PLAN_INIT.call_once(|| {});
     PLAN_FORCED.store(forced, Ordering::Relaxed);
+}
+
+/// Should every [`CompiledPlan::run`] execute its fusable conv/pool
+/// chains tile-by-tile? First call consults the `SWCONV_FORCE_TILE`
+/// environment variable (any non-empty value other than `"0"`); later
+/// calls (and [`set_tiling_forced`]) just read/write the cached flag.
+/// The CI tiling leg runs the whole test suite with this set, so every
+/// zoo model exercises the halo-aware region kernels end to end —
+/// legal because tiled execution is bit-identical to untiled by
+/// construction (see [`tiling`]).
+pub fn tiling_forced() -> bool {
+    TILE_INIT.call_once(|| {
+        let forced =
+            matches!(std::env::var("SWCONV_FORCE_TILE"), Ok(v) if !v.is_empty() && v != "0");
+        TILE_FORCED.store(forced, Ordering::Relaxed);
+    });
+    TILE_FORCED.load(Ordering::Relaxed)
+}
+
+/// Override the forced-tiling switch programmatically (the CLI's
+/// `--tile`). Wins over the environment variable regardless of call
+/// order.
+pub fn set_tiling_forced(forced: bool) {
+    TILE_INIT.call_once(|| {});
+    TILE_FORCED.store(forced, Ordering::Relaxed);
+}
+
+/// The forced tile shape (`--tile HxW`), if one is set. When present,
+/// [`tiling::analyze`] uses this exact output-tile shape for every
+/// chain instead of sizing tiles from the cache budget.
+pub fn forced_tile_shape() -> Option<(usize, usize)> {
+    let packed = TILE_SHAPE.load(Ordering::Relaxed);
+    if packed == 0 {
+        None
+    } else {
+        Some(((packed >> 32) as usize, (packed & 0xffff_ffff) as usize))
+    }
+}
+
+/// Set (or with `None` clear) the forced tile shape. Dimensions are
+/// clamped to `1..=u32::MAX`; `(h, w)` is the output-space tile in
+/// rows × columns.
+pub fn set_forced_tile_shape(shape: Option<(usize, usize)>) {
+    let packed = match shape {
+        None => 0,
+        Some((h, w)) => {
+            let h = (h.max(1) as u64).min(u32::MAX as u64);
+            let w = (w.max(1) as u64).min(u32::MAX as u64);
+            (h << 32) | w
+        }
+    };
+    TILE_SHAPE.store(packed, Ordering::Relaxed);
 }
 
 /// Is graph fusion disabled process-wide? First call consults the

@@ -22,11 +22,16 @@
 use super::ir::{Graph, Op};
 use super::passes::PassSummary;
 use super::planner::{PlanAlgo, PlannedChoice};
+use super::tiling::{self, ChainTiling, Link, TileMode, TilingPlan};
 use crate::exec::ExecCtx;
 use crate::kernels::direct::conv2d_direct_epi_ctx;
 use crate::kernels::im2col::{
     conv2d_im2col_epi_ctx, conv2d_im2col_lowmem_epi_ctx, conv2d_im2col_lowmem_q8_raw_ctx,
     conv2d_im2col_q8_raw_ctx,
+};
+use crate::kernels::region::{
+    conv2d_sliding_bf16_region_ctx, conv2d_sliding_q8_region_ctx, conv2d_sliding_region_epi_ctx,
+    pool2d_sliding_region, Rect, RegionScratch, SrcView,
 };
 use crate::kernels::sliding2d::{conv2d_sliding_epi_ctx, conv2d_sliding_q8_raw_ctx, SlideVariant};
 use crate::kernels::{
@@ -37,7 +42,7 @@ use crate::kernels::{
 use crate::nn::layers::{
     concat_channels, global_avg_pool, linear_forward, softmax_rows_inplace, zero_pad2d,
 };
-use crate::tensor::{quantize, Dtype, QuantParams, Tensor, TensorT, WeightScales};
+use crate::tensor::{quantize, to_bf16, Dtype, QuantParams, Tensor, TensorT, WeightScales};
 
 /// An activation value flowing along a graph edge.
 enum Value {
@@ -82,13 +87,18 @@ pub struct CompiledPlan {
     /// the ctx's routing, keeping the worker cap — capping is always
     /// value-safe.
     choices: Option<Vec<Option<PlannedChoice>>>,
+    /// Tiled-execution plan ([`CompiledPlan::with_tiling`]); `None` = run
+    /// node by node. Independently, the process-wide
+    /// [`crate::graph::set_tiling_forced`] switch makes [`CompiledPlan::run`]
+    /// analyze and tile every eligible chain on the fly.
+    tiling: Option<TilingPlan>,
 }
 
 impl CompiledPlan {
     /// Wrap an optimized graph.
     pub(crate) fn new(graph: Graph, summary: PassSummary) -> Self {
         let uses = graph.consumer_counts();
-        CompiledPlan { graph, summary, uses, choices: None }
+        CompiledPlan { graph, summary, uses, choices: None, tiling: None }
     }
 
     /// Attach a planner-produced per-node choice vector (one entry per
@@ -107,6 +117,34 @@ impl CompiledPlan {
     /// The attached per-node plan, if any.
     pub fn choices(&self) -> Option<&[Option<PlannedChoice>]> {
         self.choices.as_deref()
+    }
+
+    /// Attach a tiled-execution plan ([`crate::graph::tiling::analyze`]).
+    /// Each chain then runs fused, tile by tile, through the halo-aware
+    /// region kernels — bit-identical to the untiled path. Chains that no
+    /// longer route to their analyzed links under the serving ctx (a plan
+    /// made for a different ctx or dtype) degrade to untiled node-by-node
+    /// execution, values unchanged.
+    ///
+    /// # Panics
+    /// If a chain's node range or geometry length is inconsistent with
+    /// the graph.
+    pub fn with_tiling(mut self, tiling: TilingPlan) -> Self {
+        for c in &tiling.chains {
+            assert!(
+                c.start >= 1 && c.start < c.end && c.end < self.graph.nodes.len(),
+                "tiled chain {}..{} out of range",
+                c.start,
+                c.end
+            );
+        }
+        self.tiling = Some(tiling);
+        self
+    }
+
+    /// The attached tiling plan, if any.
+    pub fn tiling(&self) -> Option<&TilingPlan> {
+        self.tiling.as_ref()
     }
 
     /// Model name this plan was compiled from.
@@ -144,29 +182,64 @@ impl CompiledPlan {
             self.graph.input_shape
         );
         let n = self.graph.nodes.len();
+        // Tiled execution: an attached plan wins; otherwise the
+        // process-wide force switch analyzes on the fly (a cheap graph
+        // walk) against the actual ctx, choices and batch.
+        let forced_tiling;
+        let tiling = match &self.tiling {
+            Some(t) => Some(t),
+            None if super::tiling_forced() => {
+                forced_tiling =
+                    tiling::analyze(&self.graph, self.choices(), ctx, x.dim(0), TileMode::ForceAll);
+                Some(&forced_tiling)
+            }
+            None => None,
+        };
+        let tiling = tiling.filter(|t| !t.is_empty());
         let mut slots: Vec<Slot> = Vec::with_capacity(n);
         slots.push(Slot::Borrowed(x));
         for _ in 1..n {
             slots.push(Slot::Empty);
         }
         let mut remaining = self.uses.clone();
-        for id in 1..n {
+        let mut id = 1;
+        while id < n {
             if remaining[id] == 0 {
+                id += 1;
                 continue; // dead node (kept only in an uncompacted graph)
+            }
+            // A tiled chain starting here runs fused, tile by tile; its
+            // intermediates never materialise at full size. The chain
+            // must still route to the analyzed links under *this* ctx —
+            // an attached plan may have been made for another — else the
+            // nodes simply run untiled below (same values).
+            if let Some(chain) = tiling.and_then(|t| t.chain_starting_at(id)) {
+                if self.chain_valid(chain, ctx) {
+                    let value = self.run_chain_tiled(chain, &slots, ctx);
+                    slots[chain.end] = Slot::Owned(value);
+                    let head_in = self.graph.nodes[id].inputs[0];
+                    remaining[head_in] -= 1;
+                    if remaining[head_in] == 0 {
+                        recycle_slot(&mut slots, head_in, ctx);
+                    }
+                    // Interior nodes never materialised, so there is
+                    // nothing to recycle — just retire their counts.
+                    for r in &mut remaining[id..chain.end] {
+                        *r = 0;
+                    }
+                    id = chain.end + 1;
+                    continue;
+                }
             }
             let value = self.eval(id, &slots, ctx);
             slots[id] = Slot::Owned(value);
             for &i in &self.graph.nodes[id].inputs {
                 remaining[i] -= 1;
                 if remaining[i] == 0 {
-                    if let Slot::Owned(v) = std::mem::replace(&mut slots[i], Slot::Empty) {
-                        match v {
-                            Value::F32(t) => ctx.put(t.into_vec()),
-                            Value::Q8(codes, _) => ctx.put_elems(codes.into_vec()),
-                        }
-                    }
+                    recycle_slot(&mut slots, i, ctx);
                 }
             }
+            id += 1;
         }
         match std::mem::replace(&mut slots[self.graph.output], Slot::Empty) {
             Slot::Owned(Value::F32(t)) => t,
@@ -181,6 +254,315 @@ impl CompiledPlan {
     /// The planner's choice for node `id`, when a plan is attached.
     fn choice_at(&self, id: usize) -> Option<&PlannedChoice> {
         self.choices.as_ref().and_then(|c| c[id].as_ref())
+    }
+
+    /// Does this chain still route to its analyzed links under the
+    /// running ctx and the attached choices? An attached tiling plan
+    /// may have been computed for a different serving ctx; a mismatched
+    /// chain runs untiled instead (same values, untiled footprint).
+    fn chain_valid(&self, chain: &ChainTiling, ctx: &ExecCtx) -> bool {
+        chain.geoms.len() == chain.end - chain.start + 1
+            && (chain.start..=chain.end).all(|id| {
+                let node = &self.graph.nodes[id];
+                tiling::link_kind(node, self.choice_at(id), ctx, id == chain.start)
+                    == Some(chain.geoms[id - chain.start].link)
+            })
+    }
+
+    /// Execute one tiled chain: each tile of the chain-end output plane
+    /// runs the whole chain through the halo-aware region kernels
+    /// ([`crate::kernels::region`]), per-tile intermediates recycle
+    /// through the ctx arena, and tiles fan out across the worker pool
+    /// (tile = work item). Planned per-node worker caps are ignored
+    /// inside a chain — the tile grid is the parallel unit — which is
+    /// value-safe: thread counts never change results. Bit-identical to
+    /// the untiled node-by-node path by the region kernels' contract.
+    fn run_chain_tiled(&self, chain: &ChainTiling, slots: &[Slot<'_>], ctx: &ExecCtx) -> Value {
+        let head = &self.graph.nodes[chain.start];
+        let head_in = &slots[head.inputs[0]];
+        let head_f32: Option<&Tensor> = match head_in {
+            Slot::Borrowed(t) => Some(*t),
+            Slot::Owned(Value::F32(t)) => Some(t),
+            _ => None,
+        };
+        let head_codes: Option<(&TensorT<i8>, QuantParams)> = match head_in {
+            Slot::Owned(Value::Q8(c, q)) => Some((c, *q)),
+            _ => None,
+        };
+        let n = head_f32
+            .map(|t| t.dim(0))
+            .or_else(|| head_codes.map(|(c, _)| c.dim(0)))
+            .expect("chain head input not materialised");
+        // Chain-invariant weight/input preparation, hoisted out of the
+        // tile loop — exactly what the untiled eval computes per node.
+        // An int8 head over an f32 input quantizes the *whole* tensor
+        // once (QuantParams::for_tensor must see every element).
+        let q8_head: Option<(TensorT<i8>, QuantParams)> = match (chain.geoms[0].link, head_f32) {
+            (Link::ConvQ8, Some(x)) => {
+                let xq = QuantParams::for_tensor(x);
+                Some((quantize(x, xq), xq))
+            }
+            _ => None,
+        };
+        let q8_w: Option<(TensorT<i8>, WeightScales)> = match (&head.op, chain.geoms[0].link) {
+            (Op::Conv2d { w, .. }, Link::ConvQ8) => {
+                let wq = QuantParams::for_tensor(w);
+                Some((quantize(w, wq), WeightScales::PerTensor(wq)))
+            }
+            _ => None,
+        };
+        let mut bf16_w: Vec<Option<(Vec<f32>, (usize, usize, usize, usize))>> =
+            vec![None; chain.geoms.len()];
+        for (j, g) in chain.geoms.iter().enumerate() {
+            if g.link == Link::ConvBf16 {
+                if let Op::Conv2d { w, .. } = &self.graph.nodes[chain.start + j].op {
+                    let wf: Vec<f32> = to_bf16(w).as_slice().iter().map(|b| b.to_f32()).collect();
+                    bf16_w[j] = Some((wf, (w.dim(0), w.dim(1), w.dim(2), w.dim(3))));
+                }
+            }
+        }
+        let head_codes: Option<(&TensorT<i8>, QuantParams)> =
+            head_codes.or_else(|| q8_head.as_ref().map(|(c, q)| (c, *q)));
+        let lg = chain.geoms.last().expect("chains have >= 2 nodes");
+        let (oh, ow) = lg.out_hw;
+        let c_out = lg.c_out;
+        let mut out = ctx.take_unfilled(n * c_out * oh * ow);
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let tiles = chain.tiles();
+        let mut items = vec![0u8; tiles.len()];
+        ctx.par_chunks_with(
+            &mut items,
+            1,
+            || TileScratch {
+                a: ctx.take_unfilled(0),
+                b: ctx.take_unfilled(0),
+                rs: RegionScratch::from_ctx(ctx),
+            },
+            |ti, _item, scr| {
+                self.eval_chain_tile(
+                    chain,
+                    tiles[ti],
+                    head_f32,
+                    head_codes,
+                    q8_w.as_ref(),
+                    &bf16_w,
+                    n,
+                    out_ptr,
+                    scr,
+                    ctx,
+                );
+            },
+            |scr| {
+                ctx.put(scr.a);
+                ctx.put(scr.b);
+                scr.rs.release(ctx);
+            },
+        );
+        Value::F32(Tensor::from_vec(out, &[n, c_out, oh, ow]))
+    }
+
+    /// One tile of one chain: walk the links start → end over the
+    /// tile's backward halo rects, ping-ponging two per-worker buffers,
+    /// then copy the final dense tile into its rect of the chain
+    /// output.
+    #[allow(clippy::too_many_arguments)]
+    fn eval_chain_tile(
+        &self,
+        chain: &ChainTiling,
+        tile: Rect,
+        head_f32: Option<&Tensor>,
+        head_codes: Option<(&TensorT<i8>, QuantParams)>,
+        q8_w: Option<&(TensorT<i8>, WeightScales)>,
+        bf16_w: &[Option<(Vec<f32>, (usize, usize, usize, usize))>],
+        n: usize,
+        out_ptr: SendPtr<f32>,
+        scr: &mut TileScratch,
+        ctx: &ExecCtx,
+    ) {
+        let rects = chain.backward_rects(tile);
+        let TileScratch { a, b, rs } = scr;
+        // After the head link the live value sits in `a`; every
+        // non-identity link thereafter flips buffers.
+        let mut cur_in_a = true;
+        for (j, g) in chain.geoms.iter().enumerate() {
+            let node = &self.graph.nodes[chain.start + j];
+            let r = rects[j];
+            if j == 0 {
+                let full = Rect::full(g.in_hw.0, g.in_hw.1);
+                a.clear();
+                a.resize(n * g.c_out * r.area(), 0.0);
+                match g.link {
+                    Link::ConvF32(variant) => {
+                        let Op::Conv2d { w, bias, params } = &node.op else {
+                            unreachable!("ConvF32 links are Conv2d nodes")
+                        };
+                        let x = head_f32.expect("f32 chain head input");
+                        let src =
+                            SrcView { data: x.as_slice(), c: g.c_in, rect: full, full: g.in_hw };
+                        let epi = Epilogue::from_bias(Some(bias)).with_relu(node.fused_relu);
+                        conv2d_sliding_region_epi_ctx(
+                            n, &src, w, epi, params, variant, r, &mut *a, &mut *rs, ctx,
+                        );
+                    }
+                    Link::ConvBf16 => {
+                        let Op::Conv2d { bias, params, .. } = &node.op else {
+                            unreachable!("ConvBf16 links are Conv2d nodes")
+                        };
+                        let x = head_f32.expect("f32 chain head input");
+                        let src =
+                            SrcView { data: x.as_slice(), c: g.c_in, rect: full, full: g.in_hw };
+                        let (wf, wdims) = bf16_w[0].as_ref().expect("bf16 weights prepared");
+                        conv2d_sliding_bf16_region_ctx(
+                            n,
+                            &src,
+                            wf,
+                            *wdims,
+                            Some(bias),
+                            node.fused_relu,
+                            params,
+                            r,
+                            &mut *a,
+                            &mut *rs,
+                            ctx,
+                        );
+                    }
+                    Link::ConvQ8 => {
+                        let (codes, xq) = head_codes.expect("int8 chain head input");
+                        let (qw, wq): (&TensorT<i8>, &WeightScales) = match &node.op {
+                            Op::QuantConv2d { qw, wq, .. } => (qw, wq),
+                            Op::Conv2d { .. } => {
+                                let (qw, wq) = q8_w.expect("int8 weights prepared");
+                                (qw, wq)
+                            }
+                            _ => unreachable!("ConvQ8 links are conv nodes"),
+                        };
+                        let (bias, params) = match &node.op {
+                            Op::Conv2d { bias, params, .. }
+                            | Op::QuantConv2d { bias, params, .. } => (bias, params),
+                            _ => unreachable!(),
+                        };
+                        let src = SrcView {
+                            data: codes.as_slice(),
+                            c: g.c_in,
+                            rect: full,
+                            full: g.in_hw,
+                        };
+                        conv2d_sliding_q8_region_ctx(
+                            n,
+                            &src,
+                            qw,
+                            xq,
+                            wq,
+                            Some(bias),
+                            node.fused_relu,
+                            params,
+                            r,
+                            &mut *a,
+                            &mut *rs,
+                            ctx,
+                        );
+                    }
+                    Link::Pool(max) => {
+                        let (Op::MaxPool2d(p) | Op::AvgPool2d(p)) = &node.op else {
+                            unreachable!("Pool links are pool nodes")
+                        };
+                        let x = head_f32.expect("f32 chain head input");
+                        let src =
+                            SrcView { data: x.as_slice(), c: g.c_in, rect: full, full: g.in_hw };
+                        pool2d_sliding_region(n, &src, p, max, r, &mut *a, &mut *rs);
+                    }
+                    Link::Relu => {
+                        // Cannot mutate the borrowed head input: crop
+                        // the tile's rect while applying the max.
+                        let x = head_f32.expect("f32 chain head input");
+                        let src =
+                            SrcView { data: x.as_slice(), c: g.c_in, rect: full, full: g.in_hw };
+                        relu_crop(&src, n, r, &mut *a);
+                    }
+                }
+            } else {
+                let prev = rects[j - 1];
+                if g.link == Link::Relu {
+                    // Identity geometry (rects[j] == rects[j-1]): apply
+                    // in place — the untiled elementwise max exactly.
+                    let buf: &mut Vec<f32> = if cur_in_a { &mut *a } else { &mut *b };
+                    for v in buf.iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                    continue;
+                }
+                let (src_buf, dst_buf): (&Vec<f32>, &mut Vec<f32>) =
+                    if cur_in_a { (&*a, &mut *b) } else { (&*b, &mut *a) };
+                dst_buf.clear();
+                dst_buf.resize(n * g.c_out * r.area(), 0.0);
+                let src =
+                    SrcView { data: src_buf.as_slice(), c: g.c_in, rect: prev, full: g.in_hw };
+                match g.link {
+                    Link::ConvF32(variant) => {
+                        let Op::Conv2d { w, bias, params } = &node.op else {
+                            unreachable!("ConvF32 links are Conv2d nodes")
+                        };
+                        let epi = Epilogue::from_bias(Some(bias)).with_relu(node.fused_relu);
+                        conv2d_sliding_region_epi_ctx(
+                            n, &src, w, epi, params, variant, r, dst_buf, &mut *rs, ctx,
+                        );
+                    }
+                    Link::ConvBf16 => {
+                        let Op::Conv2d { bias, params, .. } = &node.op else {
+                            unreachable!("ConvBf16 links are Conv2d nodes")
+                        };
+                        let (wf, wdims) = bf16_w[j].as_ref().expect("bf16 weights prepared");
+                        conv2d_sliding_bf16_region_ctx(
+                            n,
+                            &src,
+                            wf,
+                            *wdims,
+                            Some(bias),
+                            node.fused_relu,
+                            params,
+                            r,
+                            dst_buf,
+                            &mut *rs,
+                            ctx,
+                        );
+                    }
+                    Link::Pool(max) => {
+                        let (Op::MaxPool2d(p) | Op::AvgPool2d(p)) = &node.op else {
+                            unreachable!("Pool links are pool nodes")
+                        };
+                        pool2d_sliding_region(n, &src, p, max, r, dst_buf, &mut *rs);
+                    }
+                    Link::ConvQ8 | Link::Relu => {
+                        unreachable!("int8 links are head-only; Relu handled above")
+                    }
+                }
+                cur_in_a = !cur_in_a;
+            }
+        }
+        // Strided copy of the dense tile into its output rect.
+        let fin: &[f32] = if cur_in_a { a } else { b };
+        let lg = chain.geoms.last().expect("chains have >= 2 nodes");
+        let (oh, ow) = lg.out_hw;
+        let (th, tw) = (tile.h(), tile.w());
+        debug_assert_eq!(fin.len(), n * lg.c_out * th * tw);
+        for ni in 0..n {
+            for co in 0..lg.c_out {
+                let splane = &fin[(ni * lg.c_out + co) * th * tw..][..th * tw];
+                let base = (ni * lg.c_out + co) * oh * ow + tile.y0 * ow + tile.x0;
+                for ty in 0..th {
+                    // SAFETY: each tile writes only its own disjoint
+                    // rect of the output planes, and par_chunks_with
+                    // joins all workers before `out` is read.
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            splane[ty * tw..].as_ptr(),
+                            out_ptr.0.add(base + ty * ow),
+                            tw,
+                        );
+                    }
+                }
+            }
+        }
     }
 
     fn eval(&self, id: usize, slots: &[Slot<'_>], ctx: &ExecCtx) -> Value {
@@ -331,6 +713,55 @@ impl CompiledPlan {
             Op::Pad2d { ph, pw } => Value::F32(zero_pad2d(f32_in(0), *ph, *pw)),
             Op::Concat => Value::F32(concat_channels(f32_in(0), f32_in(1))),
             Op::Opaque(l) => Value::F32(l.forward(f32_in(0), ctx)),
+        }
+    }
+}
+
+/// Return a slot's buffer to the ctx arena once its last consumer ran.
+/// Borrowed slots (the caller's input) are simply dropped.
+fn recycle_slot(slots: &mut [Slot<'_>], i: usize, ctx: &ExecCtx) {
+    if let Slot::Owned(v) = std::mem::replace(&mut slots[i], Slot::Empty) {
+        match v {
+            Value::F32(t) => ctx.put(t.into_vec()),
+            Value::Q8(codes, _) => ctx.put_elems(codes.into_vec()),
+        }
+    }
+}
+
+/// Raw output pointer a tile fan-out shares across workers. Each tile
+/// writes a disjoint rect of the output planes, so concurrent writes
+/// never alias.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Per-worker tile state: two ping-pong intermediate buffers plus the
+/// region kernels' scratch, checked out of the ctx arena once per worker
+/// (the `par_chunks_with` init/fini hooks).
+struct TileScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    rs: RegionScratch,
+}
+
+/// Crop `r` out of a source view while applying `max(0)` — a ReLU at
+/// the head of a tiled chain, where the input tensor is borrowed and
+/// cannot be rewritten in place.
+fn relu_crop(src: &SrcView<'_, f32>, n: usize, r: Rect, dst: &mut [f32]) {
+    let (rh, rw) = (src.rect.h(), src.rect.w());
+    let (th, tw) = (r.h(), r.w());
+    for ni in 0..n {
+        for ci in 0..src.c {
+            let plane = &src.data[(ni * src.c + ci) * rh * rw..][..rh * rw];
+            let dplane = &mut dst[(ni * src.c + ci) * th * tw..][..th * tw];
+            for ty in 0..th {
+                let sy = r.y0 + ty - src.rect.y0;
+                let srow = &plane[sy * rw + (r.x0 - src.rect.x0)..][..tw];
+                for (d, s) in dplane[ty * tw..][..tw].iter_mut().zip(srow) {
+                    *d = s.max(0.0);
+                }
+            }
         }
     }
 }
@@ -581,5 +1012,117 @@ mod tests {
         let mut g = Graph::new("t", &[3, 16, 16]);
         conv.lower_into(&mut g, 0).unwrap();
         plan_of(g, false).with_choices(vec![None]);
+    }
+
+    /// conv(fused relu) → conv → maxpool on a 13×11 input — a 3-link
+    /// chain with a "same"-padded k=5 middle conv and a strided pool,
+    /// so tile halos cross both padding and stride boundaries.
+    fn deep_chain_plan() -> (Conv2d, Conv2d, CompiledPlan) {
+        let c1 = Conv2d::new(3, 8, 3, Conv2dParams::same(3), 81);
+        let c2 = Conv2d::new(8, 6, 5, Conv2dParams::same(5), 82);
+        let mut g = Graph::new("t", &[3, 13, 11]);
+        let a = c1.lower_into(&mut g, 0).unwrap();
+        let r = g.add(Op::Relu, vec![a]);
+        let b = c2.lower_into(&mut g, r).unwrap();
+        g.add(Op::MaxPool2d(crate::kernels::PoolParams::with_stride(2, 2)), vec![b]);
+        (c1, c2, plan_of(g, true))
+    }
+
+    #[test]
+    fn attached_tiling_is_bit_identical_across_dtypes_threads_and_tiles() {
+        // The hard contract: tiled execution reproduces the untiled
+        // path bit for bit — every dtype, thread count and tile shape,
+        // including degenerate 1×W strips and the full output plane.
+        let x = Tensor::randn(&[2, 3, 13, 11], 83);
+        for dtype in [Dtype::F32, Dtype::Bf16, Dtype::I8] {
+            for threads in [1, 4] {
+                let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads).with_dtype(dtype);
+                let (_, _, plan) = deep_chain_plan();
+                let want = plan.run(&x, &ctx);
+                for tile in [(1, 64), (3, 4), (2, 1), (64, 64)] {
+                    let (_, _, plan) = deep_chain_plan();
+                    let t = tiling::analyze_with(
+                        &plan.graph,
+                        None,
+                        &ctx,
+                        2,
+                        TileMode::ForceAll,
+                        u64::MAX,
+                        Some(tile),
+                    );
+                    assert!(!t.is_empty(), "{dtype:?}: chain expected");
+                    let got = plan.with_tiling(t).run(&x, &ctx);
+                    assert_eq!(
+                        got.as_slice(),
+                        want.as_slice(),
+                        "{dtype:?} threads={threads} tile={tile:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forced_tiling_switch_is_bit_identical() {
+        // The SWCONV_FORCE_TILE path: run() analyzes on the fly.
+        let x = Tensor::randn(&[2, 3, 13, 11], 85);
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 2);
+        let (_, _, plan) = deep_chain_plan();
+        let want = plan.run(&x, &ctx);
+        crate::graph::set_forced_tile_shape(Some((3, 5)));
+        crate::graph::set_tiling_forced(true);
+        let (_, _, plan) = deep_chain_plan();
+        let got = plan.run(&x, &ctx);
+        crate::graph::set_tiling_forced(false);
+        crate::graph::set_forced_tile_shape(None);
+        assert_eq!(got.as_slice(), want.as_slice());
+    }
+
+    #[test]
+    fn tiled_hoisted_quant_chain_matches_untiled_exactly() {
+        // A QuantConv2d head consuming hoisted i8 codes: the q8 region
+        // kernel runs over the code plane directly.
+        let q1 = QuantizedConv2d::new(3, 4, 3, Conv2dParams::same(3), 86);
+        let q2 = QuantizedConv2d::new(4, 2, 3, Conv2dParams::same(3), 87);
+        let x = Tensor::randn(&[1, 3, 9, 9], 88);
+        let build = || {
+            let mut g = Graph::new("t", &[3, 9, 9]);
+            let a = q1.lower_into(&mut g, 0).unwrap();
+            let b = q2.lower_into(&mut g, a).unwrap();
+            g.add(Op::Relu, vec![b]);
+            plan_of(g, true)
+        };
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 2);
+        let want = build().run(&x, &ctx);
+        let plan = build();
+        let t = tiling::analyze_with(&plan.graph, None, &ctx, 1, TileMode::ForceAll, u64::MAX, Some((2, 3)));
+        assert!(!t.is_empty(), "quant-head chain expected");
+        let got = plan.with_tiling(t).run(&x, &ctx);
+        assert_eq!(got.as_slice(), want.as_slice());
+    }
+
+    #[test]
+    fn attached_tiling_degrades_safely_under_another_ctx() {
+        // Tiling analyzed for a sliding ctx but served under a GEMM
+        // ctx: the links no longer match, so the chain silently runs
+        // untiled — values unchanged.
+        let x = Tensor::randn(&[2, 3, 13, 11], 89);
+        let sliding = ExecCtx::new(ConvAlgo::Sliding);
+        let (_, _, plan) = deep_chain_plan();
+        let t = tiling::analyze_with(
+            &plan.graph,
+            None,
+            &sliding,
+            2,
+            TileMode::ForceAll,
+            u64::MAX,
+            Some((3, 4)),
+        );
+        assert!(!t.is_empty());
+        let plan = plan.with_tiling(t);
+        let gemm = ExecCtx::new(ConvAlgo::Im2colGemm);
+        let (_, _, reference) = deep_chain_plan();
+        let want = reference.run(&x, &gemm);
+        assert_eq!(plan.run(&x, &gemm).as_slice(), want.as_slice());
     }
 }

@@ -59,6 +59,7 @@
 
 use super::ir::{Graph, Node, NodeId, Op};
 use super::plan::CompiledPlan;
+use super::tiling::{self, TileMode, TilingPlan};
 use crate::autotune::{DispatchProfile, TunedAlgo};
 use crate::exec::ExecCtx;
 use crate::kernels::gemm::{pack_a_len, pack_b_len};
@@ -141,6 +142,13 @@ pub struct ModelPlan {
     pub predicted_ns: f64,
     /// Total FLOPs for one batch (the graph's own accounting).
     pub flops: u64,
+    /// The cache-footprint term's per-chain tiling decisions: chains
+    /// whose untiled working set spills the detected L2 tile budget and
+    /// whose tiled execution lowers the predicted peak. Empty when the
+    /// plan was unbudgeted, when no chain spills, or when tiling would
+    /// not help. Attach to the compiled plan via
+    /// [`CompiledPlan::with_tiling`].
+    pub tiling: TilingPlan,
 }
 
 impl ModelPlan {
@@ -174,6 +182,9 @@ impl ModelPlan {
                     c.predicted_gflops,
                 ));
             }
+        }
+        for chain in &self.tiling.chains {
+            s.push_str(&format!("  tiled {}\n", chain.render()));
         }
         let budget = match self.budget_bytes {
             Some(b) => fmt_bytes(b),
@@ -610,6 +621,27 @@ pub fn plan_model(
         peak = peak.max(live_during + ws);
     });
 
+    // Cache-footprint term: under a budget, chains whose untiled
+    // working set spills the detected L2 tile budget are candidates for
+    // tiled execution. A tiled chain's interior activations never
+    // materialise at full size — the executor recycles per-tile buffers
+    // through the arena — so the chain's cost in the peak model becomes
+    // `threads × per-tile working set` instead of `interior frontier +
+    // per-node workspace`. Tiling is adopted only when that predicted
+    // peak is no worse than the untiled one (values are bit-identical
+    // either way; this is purely a footprint/locality decision).
+    let mut tiling = TilingPlan::default();
+    if budget_bytes.is_some() {
+        let t = tiling::analyze(graph, Some(&choices), ctx, batch, TileMode::OverBudget);
+        if !t.is_empty() {
+            let tiled_peak = tiled_sweep_peak(graph, batch, &choices, &t, threads);
+            if tiled_peak <= peak {
+                peak = tiled_peak;
+                tiling = t;
+            }
+        }
+    }
+
     let plan = ModelPlan {
         model: graph.name.clone(),
         dtype,
@@ -620,6 +652,7 @@ pub fn plan_model(
         predicted_peak_bytes: peak,
         predicted_ns,
         flops: graph.flops(batch),
+        tiling,
     };
     debug_assert!(
         match budget_bytes {
@@ -629,6 +662,61 @@ pub fn plan_model(
         "planned peak exceeds the budget it was planned under"
     );
     Ok(plan)
+}
+
+/// Predicted peak of `live frontier + workspace` when the given chains
+/// run tiled: interior chain activations never enter the frontier, and
+/// each chain instead costs `threads ×` its per-tile working set
+/// (every worker holds one tile's halo, output and kernel scratch)
+/// while the chain's own output is being written. Mirrors the tiled
+/// executor's consumer-countdown recycling exactly as [`sweep_live`]
+/// mirrors the untiled one.
+fn tiled_sweep_peak(
+    graph: &Graph,
+    batch: usize,
+    choices: &[Option<PlannedChoice>],
+    tiling: &TilingPlan,
+    threads: usize,
+) -> u64 {
+    let uses = graph.consumer_counts();
+    let mut remaining = uses.clone();
+    let mut live = 0u64;
+    let mut peak = 0u64;
+    let n = graph.nodes.len();
+    let mut id = 1;
+    while id < n {
+        if uses[id] == 0 {
+            id += 1;
+            continue;
+        }
+        if let Some(chain) = tiling.chain_starting_at(id) {
+            let out_bytes = graph.node_activation_bytes(chain.end, batch);
+            let ws = threads.max(1) as u64 * chain.tiled_bytes;
+            peak = peak.max(live + out_bytes + ws);
+            live += out_bytes;
+            // Only the head input is consumed; interiors never exist.
+            let head_in = graph.nodes[id].inputs[0];
+            remaining[head_in] -= 1;
+            if remaining[head_in] == 0 {
+                live = live.saturating_sub(graph.node_activation_bytes(head_in, batch));
+            }
+            id = chain.end + 1;
+            continue;
+        }
+        let node = &graph.nodes[id];
+        let out_bytes = graph.node_activation_bytes(id, batch);
+        let ws = choices[id].as_ref().map_or(0, |c| c.workspace_bytes);
+        peak = peak.max(live + out_bytes + ws);
+        live += out_bytes;
+        for &i in &node.inputs {
+            remaining[i] -= 1;
+            if remaining[i] == 0 {
+                live = live.saturating_sub(graph.node_activation_bytes(i, batch));
+            }
+        }
+        id += 1;
+    }
+    peak
 }
 
 fn fmt_bytes(b: u64) -> String {
@@ -903,6 +991,42 @@ mod tests {
             2 * branch + concat_bytes,
             "both branches + the join output are live at the barrier"
         );
+    }
+
+    #[test]
+    fn unbudgeted_plans_stay_untiled_and_adopted_chains_shrink() {
+        let compiled = conv_chain().compile_with(true);
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 2);
+        let open = plan_model(&compiled, 1, &ctx, None).unwrap();
+        assert!(open.tiling.is_empty(), "unbudgeted plans never tile");
+        let floor = min_feasible_budget(&compiled, 1, &ctx);
+        let tight = plan_model(&compiled, 1, &ctx, Some(floor)).unwrap();
+        assert!(tight.predicted_peak_bytes <= floor, "tiling must never raise the peak");
+        for c in &tight.tiling.chains {
+            assert!(
+                c.tiled_bytes < c.untiled_bytes,
+                "adopted chain {}..{} does not shrink its working set",
+                c.start,
+                c.end
+            );
+        }
+    }
+
+    #[test]
+    fn tiled_sweep_peak_drops_interior_activations() {
+        // With a small forced tile, the chain's interior activations
+        // leave the frontier and the predicted peak collapses to the
+        // chain output plus one worker's tile working set.
+        let compiled = conv_chain().compile_with(true);
+        let g = &compiled.graph;
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let t = tiling::analyze_with(g, None, &ctx, 1, TileMode::ForceAll, u64::MAX, Some((2, 2)));
+        assert!(!t.is_empty(), "sliding ctx must yield a chain");
+        let choices = vec![None; g.nodes.len()];
+        let tiled = tiled_sweep_peak(g, 1, &choices, &t, 1);
+        let mut untiled = 0u64;
+        sweep_live(g, 1, |_, _, live| untiled = untiled.max(live));
+        assert!(tiled < untiled, "tiled peak {tiled} must undercut untiled {untiled}");
     }
 
     #[test]

@@ -1,0 +1,776 @@
+//! Cache-blocked tiling analysis: keep fused conv chains L2-resident.
+//!
+//! The [`super::plan`] executor materialises every intermediate
+//! activation at full size, so a deep conv→relu→conv→pool chain writes
+//! each tensor to DRAM and reads it right back. This module finds the
+//! *fusable chains* — maximal runs of consecutive single-consumer
+//! window/elementwise nodes the sliding kernels can evaluate per output
+//! rect — and partitions each chain's final output plane into spatial
+//! tiles sized so the whole chain's per-tile working set fits the
+//! detected L2 budget ([`crate::exec::CacheInfo::tile_budget_bytes`]).
+//! The executor then runs each chain tile-by-tile through the
+//! [`crate::kernels::region`] kernels, with every intermediate
+//! materialised only at tile size.
+//!
+//! ## Halo inference
+//!
+//! A tile of the chain's *final* output pins, walking backwards through
+//! the chain via [`input_region`], the input rect every link needs —
+//! the tile's *halo*, growing by `k − stride` per window op. The
+//! backward rects double as each link's output rect, so one tile of the
+//! chain is just the region kernels chained over those rects.
+//!
+//! ## Eligibility mirrors the untiled router
+//!
+//! Tiled execution must be **bit-identical** to untiled, so a node is
+//! chain-eligible only when the untiled executor would provably run the
+//! position-uniform sliding kernel for it — the same resolution the
+//! executor applies: a planned choice is honoured only within the ctx
+//! route's FP-summation family (`f32_family_compatible`), a
+//! `Tuned` ctx resolves per filter width through the attached profile,
+//! and GEMM/direct routes are never tiled. Int8 convs additionally run
+//! head-only (their output is dequantized f32; a second int8 conv would
+//! re-quantize against a tensor-wide max the tile cannot see), and
+//! quantize-boundary (`quant_out`) nodes are excluded for the same
+//! reason.
+//!
+//! ## Cost model
+//!
+//! Per-tile working set = the max over links of (input tile + output
+//! tile + local padded plane + pool row scratch), with the untiled
+//! working set being the same expression at the full-plane "tile" —
+//! so a full-plane tile costs exactly the untiled estimate and any
+//! smaller tile strictly shrinks it. [`TileMode::OverBudget`] (the
+//! planner) tiles only chains whose untiled set exceeds the budget;
+//! [`TileMode::ForceAll`] (`SWCONV_FORCE_TILE`, `--tile`) tiles every
+//! eligible chain so parity suites cover the region kernels everywhere.
+
+use super::ir::{Graph, Node, NodeId, Op};
+use super::planner::{default_route, f32_family_compatible, PlanAlgo, PlannedChoice};
+use crate::autotune::TunedAlgo;
+use crate::exec::{CacheInfo, ExecCtx};
+use crate::kernels::region::{input_region, Rect};
+use crate::kernels::rowconv::Q8_MAX_TAPS;
+use crate::kernels::sliding2d::SlideVariant;
+use crate::kernels::ConvAlgo;
+use crate::simd::LANES;
+use crate::tensor::Dtype;
+
+/// How one chain node executes per tile — the routing decision the
+/// analysis froze so the executor never re-derives it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Link {
+    /// f32 sliding conv with the resolved row-kernel variant.
+    ConvF32(SlideVariant),
+    /// bf16 sliding conv (f32 boundary, bf16 rounding at the write).
+    ConvBf16,
+    /// int8 sliding conv with fused dequant (chain head only).
+    ConvQ8,
+    /// Sliding pool; `true` = max, `false` = avg.
+    Pool(bool),
+    /// Elementwise ReLU (identity geometry).
+    Relu,
+}
+
+/// One chain node's link kind plus its window geometry and plane
+/// shapes — everything the per-tile executor and the cost model need.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct LinkGeom {
+    /// How the node executes per tile.
+    pub(crate) link: Link,
+    /// Window `(kh, kw)` (`(1, 1)` for ReLU).
+    pub(crate) k: (usize, usize),
+    /// Stride `(sh, sw)`.
+    pub(crate) stride: (usize, usize),
+    /// Padding `(ph, pw)`.
+    pub(crate) pad: (usize, usize),
+    /// Input channels.
+    pub(crate) c_in: usize,
+    /// Output channels.
+    pub(crate) c_out: usize,
+    /// Input plane `(h, w)`.
+    pub(crate) in_hw: (usize, usize),
+    /// Output plane `(h, w)`.
+    pub(crate) out_hw: (usize, usize),
+}
+
+/// Which chains the analysis should tile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileMode {
+    /// Tile every eligible chain, even when the untiled working set
+    /// already fits cache — the `SWCONV_FORCE_TILE` / `--tile` mode,
+    /// and what the parity suites sweep.
+    ForceAll,
+    /// Tile only chains whose untiled intra-chain working set exceeds
+    /// the cache budget (and where tiling actually shrinks it) — the
+    /// planner's default.
+    OverBudget,
+}
+
+/// One tiled chain: nodes `start..=end` run fused, tile-by-tile, with
+/// the chain result landing in `end`'s slot.
+#[derive(Clone, Debug)]
+pub struct ChainTiling {
+    /// First node of the chain (consumes the chain's external input).
+    pub start: NodeId,
+    /// Last node of the chain (produces the chain's observable output).
+    pub end: NodeId,
+    /// Output-space tile shape `(rows, cols)` on `end`'s plane.
+    pub tile: (usize, usize),
+    /// Estimated per-tile working set at that shape, in bytes.
+    pub tiled_bytes: u64,
+    /// Estimated untiled intra-chain working set, in bytes.
+    pub untiled_bytes: u64,
+    /// Per-node link kinds and geometry, `start` first.
+    pub(crate) geoms: Vec<LinkGeom>,
+}
+
+impl ChainTiling {
+    /// The chain end's output plane `(h, w)`.
+    pub fn out_hw(&self) -> (usize, usize) {
+        self.geoms.last().expect("chains have ≥ 2 nodes").out_hw
+    }
+
+    /// The row-major tile grid over the chain end's output plane:
+    /// `tile`-sized rects, clamped at the right/bottom edges. Covers
+    /// the plane exactly, without overlap.
+    pub fn tiles(&self) -> Vec<Rect> {
+        let (oh, ow) = self.out_hw();
+        let (th, tw) = self.tile;
+        let mut v = Vec::new();
+        let mut y0 = 0;
+        while y0 < oh {
+            let y1 = (y0 + th).min(oh);
+            let mut x0 = 0;
+            while x0 < ow {
+                let x1 = (x0 + tw).min(ow);
+                v.push(Rect { y0, y1, x0, x1 });
+                x0 = x1;
+            }
+            y0 = y1;
+        }
+        v
+    }
+
+    /// The output rect of *each* chain node (`start` first) for one
+    /// tile of the chain end: `tile` walked backwards through
+    /// [`input_region`]. The analysis validated every grid tile's walk
+    /// stays non-empty, so this cannot fail on a rect from
+    /// [`ChainTiling::tiles`].
+    pub(crate) fn backward_rects(&self, tile: Rect) -> Vec<Rect> {
+        backward_rects(&self.geoms, tile).expect("tile grid validated at analysis time")
+    }
+
+    /// One human-readable summary line (the `compile` report).
+    pub fn render(&self) -> String {
+        let (oh, ow) = self.out_hw();
+        let grid = self.tiles().len();
+        format!(
+            "chain %{}..%{}: tile {}x{} of {}x{} ({} tiles), per-tile ~{}, untiled ~{}",
+            self.start,
+            self.end,
+            self.tile.0,
+            self.tile.1,
+            oh,
+            ow,
+            grid,
+            fmt_bytes(self.tiled_bytes),
+            fmt_bytes(self.untiled_bytes),
+        )
+    }
+}
+
+/// The tiling decisions for one compiled graph under one ctx: zero or
+/// more non-overlapping [`ChainTiling`]s, in node order.
+#[derive(Clone, Debug, Default)]
+pub struct TilingPlan {
+    /// The tiled chains (non-overlapping node ranges, ascending).
+    pub chains: Vec<ChainTiling>,
+}
+
+impl TilingPlan {
+    /// True when nothing gets tiled.
+    pub fn is_empty(&self) -> bool {
+        self.chains.is_empty()
+    }
+
+    /// The chain whose first node is `id`, if any — how the executor
+    /// probes "does a tiled chain start here?" per node.
+    pub fn chain_starting_at(&self, id: NodeId) -> Option<&ChainTiling> {
+        self.chains.iter().find(|c| c.start == id)
+    }
+}
+
+/// Analyze a graph's fusable chains and size their tiles from the
+/// detected cache hierarchy (honouring a CLI-forced tile shape,
+/// [`super::forced_tile_shape`]). `choices` is the planner's per-node
+/// assignment when one is attached — eligibility must see it, because
+/// it changes what the untiled executor runs.
+pub fn analyze(
+    graph: &Graph,
+    choices: Option<&[Option<PlannedChoice>]>,
+    ctx: &ExecCtx,
+    batch: usize,
+    mode: TileMode,
+) -> TilingPlan {
+    let budget = CacheInfo::detect().tile_budget_bytes() as u64;
+    analyze_with(graph, choices, ctx, batch, mode, budget, super::forced_tile_shape())
+}
+
+/// [`analyze`] with the cache budget and forced tile shape passed
+/// explicitly (testable without environment overrides).
+pub(crate) fn analyze_with(
+    graph: &Graph,
+    choices: Option<&[Option<PlannedChoice>]>,
+    ctx: &ExecCtx,
+    batch: usize,
+    mode: TileMode,
+    budget: u64,
+    forced: Option<(usize, usize)>,
+) -> TilingPlan {
+    let mut chains = Vec::new();
+    for (start, end, geoms) in find_chains(graph, choices, ctx) {
+        let Some(ct) = size_chain(start, end, geoms, batch, budget, forced) else {
+            continue;
+        };
+        let keep = match mode {
+            TileMode::ForceAll => true,
+            TileMode::OverBudget => {
+                ct.untiled_bytes > budget && ct.tiled_bytes < ct.untiled_bytes
+            }
+        };
+        if keep {
+            chains.push(ct);
+        }
+    }
+    TilingPlan { chains }
+}
+
+/// The maximal fusable chains: runs of ≥ 2 consecutive node ids where
+/// every node is link-eligible under this ctx (+ optional plan), every
+/// non-head node's only input is its predecessor, and every
+/// intermediate has exactly one consumer (so skipping its full-size
+/// materialisation is unobservable).
+pub(crate) fn find_chains(
+    graph: &Graph,
+    choices: Option<&[Option<PlannedChoice>]>,
+    ctx: &ExecCtx,
+) -> Vec<(NodeId, NodeId, Vec<LinkGeom>)> {
+    let uses = graph.consumer_counts();
+    let choice_at =
+        |id: usize| choices.and_then(|c| c.get(id)).and_then(|o| o.as_ref());
+    let n = graph.nodes.len();
+    let mut res = Vec::new();
+    let mut id = 1;
+    while id < n {
+        if uses[id] == 0 {
+            id += 1; // dead node — the executor skips it
+            continue;
+        }
+        let node = &graph.nodes[id];
+        let head = match link_kind(node, choice_at(id), ctx, true) {
+            Some(l) if node.inputs.len() == 1 => l,
+            _ => {
+                id += 1;
+                continue;
+            }
+        };
+        // An i8-codes input (quantize-boundary producer) only feeds a
+        // `QuantConv2d` head; every other head needs an f32 input.
+        let q8_input = graph.nodes[node.inputs[0]].quant_out;
+        let head_ok = match head {
+            Link::ConvQ8 => !q8_input || matches!(node.op, Op::QuantConv2d { .. }),
+            _ => !q8_input,
+        };
+        if !head_ok {
+            id += 1;
+            continue;
+        }
+        let Some(mut geoms) = link_geom(graph, id, head) else {
+            id += 1;
+            continue;
+        };
+        let mut end = id;
+        while end + 1 < n {
+            let nid = end + 1;
+            // The would-be intermediate `end` must be consumed only by
+            // `nid` (the output node carries an extra external use, so
+            // it can never become an intermediate).
+            if uses[nid] == 0 || uses[end] != 1 || graph.nodes[nid].inputs != [end] {
+                break;
+            }
+            let Some(link) = link_kind(&graph.nodes[nid], choice_at(nid), ctx, false) else {
+                break;
+            };
+            let Some(g) = link_geom(graph, nid, link) else {
+                break;
+            };
+            geoms.push(g);
+            end = nid;
+        }
+        if end > id {
+            res.push((id, end, geoms));
+            id = end + 1;
+        } else {
+            id += 1;
+        }
+    }
+    res
+}
+
+/// Can this node run as a chain link under this ctx (+ optional
+/// planner choice), and how? Mirrors the untiled executor's routing
+/// exactly — `None` whenever the untiled path might run anything but
+/// the position-uniform sliding kernel.
+pub(crate) fn link_kind(
+    node: &Node,
+    choice: Option<&PlannedChoice>,
+    ctx: &ExecCtx,
+    head: bool,
+) -> Option<Link> {
+    if node.quant_out || node.shape.len() != 4 {
+        return None; // i8-codes output, or post-flatten elementwise
+    }
+    match &node.op {
+        Op::Relu => Some(Link::Relu),
+        Op::MaxPool2d(_) => Some(Link::Pool(true)),
+        Op::AvgPool2d(_) => Some(Link::Pool(false)),
+        Op::Conv2d { w, .. } => {
+            let (c_in_g, kh, kw) = (w.dim(1), w.dim(2), w.dim(3));
+            match ctx.dtype() {
+                Dtype::F32 => f32_conv_link(kw, choice, ctx),
+                Dtype::Bf16 => bf16_sliding_routed(kw, ctx).then_some(Link::ConvBf16),
+                Dtype::I8 => (head
+                    && c_in_g * kh * kw <= Q8_MAX_TAPS
+                    && q8_sliding_routed(kw, choice, ctx))
+                .then_some(Link::ConvQ8),
+                // No i32 conv kernel family to mirror — leave untiled.
+                Dtype::I32 => None,
+            }
+        }
+        Op::QuantConv2d { qw, .. } => {
+            // Always runs int8, regardless of the serving dtype.
+            let (c_in_g, kh, kw) = (qw.dim(1), qw.dim(2), qw.dim(3));
+            (head && c_in_g * kh * kw <= Q8_MAX_TAPS && q8_sliding_routed(kw, choice, ctx))
+                .then_some(Link::ConvQ8)
+        }
+        _ => None,
+    }
+}
+
+/// f32 conv link resolution — the untiled executor honours a planned
+/// choice only within the ctx route's FP-summation family, then the
+/// surviving algorithm must be the sliding kernel with a variant that
+/// supports the width (an unsupported `Auto` falls back to the direct
+/// kernel untiled, so it is not position-uniform → not tileable).
+fn f32_conv_link(kw: usize, choice: Option<&PlannedChoice>, ctx: &ExecCtx) -> Option<Link> {
+    let route = default_route(ctx, kw, ctx.dtype());
+    let honoured = choice.filter(|c| f32_family_compatible(c.algo, route));
+    let variant = match honoured {
+        Some(c) => {
+            if c.algo != PlanAlgo::Sliding {
+                return None;
+            }
+            SlideVariant::Auto
+        }
+        None => match ctx.algo {
+            ConvAlgo::Sliding => SlideVariant::Auto,
+            ConvAlgo::SlidingGeneric => SlideVariant::Generic,
+            ConvAlgo::SlidingCompound => SlideVariant::Compound,
+            ConvAlgo::Tuned => {
+                if ctx.tuned_choice(kw).0 != TunedAlgo::Sliding {
+                    return None;
+                }
+                SlideVariant::Auto
+            }
+            ConvAlgo::Direct | ConvAlgo::Im2colGemm => return None,
+        },
+    };
+    variant.supports(kw).then_some(Link::ConvF32(variant))
+}
+
+/// Does the untiled bf16 path run the sliding bf16 kernel under this
+/// ctx? (Non-sliding routes widen to f32 and run the f32 kernel with
+/// bf16 rounding applied outside — a different summation, not
+/// tileable.) The planner never re-routes bf16 nodes (its candidate
+/// set is sliding-only), so no choice parameter.
+fn bf16_sliding_routed(kw: usize, ctx: &ExecCtx) -> bool {
+    match ctx.algo {
+        ConvAlgo::Sliding | ConvAlgo::SlidingGeneric | ConvAlgo::SlidingCompound => true,
+        ConvAlgo::Tuned => ctx.tuned_choice_for(kw, Dtype::Bf16).0 == TunedAlgo::Sliding,
+        ConvAlgo::Direct | ConvAlgo::Im2colGemm => false,
+    }
+}
+
+/// Does the untiled int8 path run the sliding int8 kernel? Planned:
+/// `Direct | Sliding` both map to the sliding kernel
+/// (`conv2d_q8_raw_planned_ctx`); unplanned: anything but an explicit
+/// (or tuned) GEMM route (`conv2d_q8_raw_routed_ctx`).
+fn q8_sliding_routed(kw: usize, choice: Option<&PlannedChoice>, ctx: &ExecCtx) -> bool {
+    match choice {
+        Some(c) => matches!(c.algo, PlanAlgo::Direct | PlanAlgo::Sliding),
+        None => {
+            let gemm = ctx.algo == ConvAlgo::Im2colGemm
+                || (ctx.algo == ConvAlgo::Tuned
+                    && ctx.tuned_choice_for(kw, Dtype::I8).0 == TunedAlgo::Gemm);
+            !gemm
+        }
+    }
+}
+
+/// Window geometry + plane shapes for one chain node. `None` when the
+/// shapes are not the `[1, c, h, w]` the tiler expects (symbolic batch
+/// 1 — the executor scales by the runtime batch).
+fn link_geom(graph: &Graph, id: NodeId, link: Link) -> Option<LinkGeom> {
+    let node = &graph.nodes[id];
+    let in_shape = &graph.nodes[node.inputs[0]].shape;
+    if node.shape.len() != 4 || in_shape.len() != 4 {
+        return None;
+    }
+    let (k, stride, pad) = match &node.op {
+        Op::Conv2d { w, params, .. } => ((w.dim(2), w.dim(3)), params.stride, params.pad),
+        Op::QuantConv2d { qw, params, .. } => {
+            ((qw.dim(2), qw.dim(3)), params.stride, params.pad)
+        }
+        Op::MaxPool2d(p) | Op::AvgPool2d(p) => (p.k, p.stride, p.pad),
+        Op::Relu => ((1, 1), (1, 1), (0, 0)),
+        _ => return None,
+    };
+    Some(LinkGeom {
+        link,
+        k,
+        stride,
+        pad,
+        c_in: in_shape[1],
+        c_out: node.shape[1],
+        in_hw: (in_shape[2], in_shape[3]),
+        out_hw: (node.shape[2], node.shape[3]),
+    })
+}
+
+/// Walk one final-output tile backwards through the chain: the output
+/// rect each link must produce (`start` first; the last entry is
+/// `tile` itself). `None` if any intermediate rect clamps to empty —
+/// a link would be asked for zero output (only reachable with padding
+/// ≥ the data span); such tile shapes are rejected.
+fn backward_rects(geoms: &[LinkGeom], tile: Rect) -> Option<Vec<Rect>> {
+    let mut rects = vec![tile; geoms.len()];
+    let mut r = tile;
+    for (j, g) in geoms.iter().enumerate().rev() {
+        if r.is_empty() {
+            return None;
+        }
+        rects[j] = r;
+        r = input_region(r, g.k, g.stride, g.pad, g.in_hw.0, g.in_hw.1);
+        // `r` is now link j's *input* rect == link j−1's output rect.
+        // The head's input rect (final `r`) may clamp freely — the head
+        // reads the full input tensor, empty just means all-padding.
+    }
+    Some(rects)
+}
+
+/// Size one chain's tile: start from the full output plane (or the
+/// forced shape) and halve the larger tile dimension until the
+/// per-tile working set fits the budget or the tile is 1×1. Returns
+/// `None` when the tile grid fails [`backward_rects`] validation.
+fn size_chain(
+    start: NodeId,
+    end: NodeId,
+    geoms: Vec<LinkGeom>,
+    batch: usize,
+    budget: u64,
+    forced: Option<(usize, usize)>,
+) -> Option<ChainTiling> {
+    let (oh, ow) = geoms.last()?.out_hw;
+    let untiled_bytes = tile_working_bytes(&geoms, (oh, ow), batch);
+    let (mut th, mut tw) = match forced {
+        Some((h, w)) => (h.min(oh), w.min(ow)),
+        None => (oh, ow),
+    };
+    if forced.is_none() {
+        while tile_working_bytes(&geoms, (th, tw), batch) > budget && (th > 1 || tw > 1) {
+            if th >= tw {
+                th = th.div_ceil(2);
+            } else {
+                tw = tw.div_ceil(2);
+            }
+        }
+    }
+    let tiled_bytes = tile_working_bytes(&geoms, (th, tw), batch);
+    let chain = ChainTiling { start, end, tile: (th, tw), tiled_bytes, untiled_bytes, geoms };
+    // Validate the backward walk on the grid's corner tiles: rect
+    // bounds are monotone in the tile's bounds per axis, so emptiness
+    // (a window fully inside padding) can only first appear on the
+    // extreme tile rows/columns.
+    let tiles = chain.tiles();
+    let rows = oh.div_ceil(th);
+    let cols = ow.div_ceil(tw);
+    let corners = [0, cols - 1, (rows - 1) * cols, rows * cols - 1];
+    for idx in corners {
+        backward_rects(&chain.geoms, tiles[idx])?;
+    }
+    Some(chain)
+}
+
+/// Estimated working set (bytes) of running the chain at output tile
+/// shape `tile` and batch `n`: the max over links of input tile +
+/// output tile + the link's local padded plane(s) and row scratch.
+/// Evaluated at the full output plane this is the *untiled* intra-chain
+/// working set (the full-size activations + the untiled kernels' full
+/// padded planes), so tiled and untiled estimates are one expression.
+fn tile_working_bytes(geoms: &[LinkGeom], tile: (usize, usize), n: usize) -> u64 {
+    let f4 = 4u64;
+    let mut peak = 0u64;
+    let (mut eh, mut ew) = tile;
+    for g in geoms.iter().rev() {
+        let eh_c = eh.min(g.out_hw.0).max(1);
+        let ew_c = ew.min(g.out_hw.1).max(1);
+        // Unclamped halo extent (interior tile: the worst case) …
+        let ih = (eh_c - 1) * g.stride.0 + g.k.0;
+        let iw = (ew_c - 1) * g.stride.1 + g.k.1;
+        // … and the in-plane portion actually buffered.
+        let ih_c = ih.min(g.in_hw.0);
+        let iw_c = iw.min(g.in_hw.1);
+        let inb = (n * g.c_in * ih_c * iw_c) as u64 * f4;
+        let outb = (n * g.c_out * eh_c * ew_c) as u64 * f4;
+        // Local padded plane geometry (matches `kernels::region`).
+        let hp_l = ih;
+        let ulen = (ew_c - 1) * g.stride.1 + 1;
+        let local = match g.link {
+            Link::Relu => 0,
+            // Per-plane padded buffer + the horizontal-combine rows.
+            Link::Pool(_) => {
+                (hp_l * (ulen + g.k.1 + 4 * LANES) + hp_l * (ulen + LANES) + ulen) as u64 * f4
+            }
+            // Per-image all-channel padded buffer + the row accumulator.
+            Link::ConvF32(_) => {
+                (g.c_in * hp_l * (ulen + g.k.1 + 2 * LANES) + ulen) as u64 * f4
+            }
+            Link::ConvBf16 => {
+                (g.c_in * hp_l * (ulen + g.k.1 + 2 * LANES)) as u64 * 2 + ulen as u64 * f4
+            }
+            Link::ConvQ8 => {
+                (g.c_in * hp_l * (ulen + g.k.1 + 2 * LANES)) as u64 + ulen as u64 * f4
+            }
+        };
+        peak = peak.max(inb + outb + local);
+        eh = ih_c;
+        ew = iw_c;
+    }
+    peak
+}
+
+/// Human-readable byte count for the render lines.
+fn fmt_bytes(b: u64) -> String {
+    if b >= 1 << 20 {
+        format!("{:.1} MiB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1} KiB", b as f64 / (1u64 << 10) as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Conv2dParams, PoolParams};
+    use crate::tensor::Tensor;
+
+    fn conv_op(c_in: usize, c_out: usize, k: usize, params: Conv2dParams) -> Op {
+        Op::Conv2d {
+            w: Tensor::randn(&[c_out, c_in / params.groups, k, k], 7),
+            bias: vec![0.1; c_out],
+            params,
+        }
+    }
+
+    /// conv(4→8,k3,same) → relu → conv(8→8,k3,same) → maxpool(2,s2) on
+    /// a 16×16 input: one maximal 4-node chain ending on an 8×8 plane.
+    fn chain_graph() -> Graph {
+        let mut g = Graph::new("t", &[4, 16, 16]);
+        let c1 = g.add(conv_op(4, 8, 3, Conv2dParams::same(3)), vec![0]);
+        let r1 = g.add(Op::Relu, vec![c1]);
+        let c2 = g.add(conv_op(8, 8, 3, Conv2dParams::same(3)), vec![r1]);
+        let _p1 = g.add(Op::MaxPool2d(PoolParams::with_stride(2, 2)), vec![c2]);
+        g
+    }
+
+    #[test]
+    fn force_all_full_plane_when_budget_large() {
+        let g = chain_graph();
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let plan = analyze_with(&g, None, &ctx, 1, TileMode::ForceAll, u64::MAX, None);
+        assert_eq!(plan.chains.len(), 1);
+        let c = &plan.chains[0];
+        assert_eq!((c.start, c.end), (1, 4));
+        assert_eq!(c.tile, (8, 8), "budget never binds → full output plane");
+        assert_eq!(c.tiled_bytes, c.untiled_bytes);
+        assert_eq!(c.tiles().len(), 1);
+        assert_eq!(c.tiles()[0], Rect::full(8, 8));
+    }
+
+    #[test]
+    fn tight_budget_shrinks_tile() {
+        let g = chain_graph();
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let plan = analyze_with(&g, None, &ctx, 1, TileMode::ForceAll, 6 << 10, None);
+        let c = &plan.chains[0];
+        assert!(c.tile < (8, 8), "tile must shrink under a 6 KiB budget, got {:?}", c.tile);
+        assert!(c.tiled_bytes < c.untiled_bytes);
+        // The grid still covers the plane exactly.
+        let area: usize = c.tiles().iter().map(Rect::area).sum();
+        assert_eq!(area, 64);
+    }
+
+    #[test]
+    fn forced_shape_overrides_budget() {
+        let g = chain_graph();
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let plan =
+            analyze_with(&g, None, &ctx, 1, TileMode::ForceAll, u64::MAX, Some((3, 5)));
+        let c = &plan.chains[0];
+        assert_eq!(c.tile, (3, 5));
+        let tiles = c.tiles();
+        assert_eq!(tiles.len(), 6, "ceil(8/3) x ceil(8/5) grid");
+        let area: usize = tiles.iter().map(Rect::area).sum();
+        assert_eq!(area, 64);
+        // Every grid tile's backward walk reaches the head non-empty.
+        for t in tiles {
+            let rects = c.backward_rects(t);
+            assert_eq!(rects.len(), 4);
+            assert_eq!(rects[3], t);
+            assert!(rects.iter().all(|r| !r.is_empty()));
+        }
+    }
+
+    #[test]
+    fn over_budget_mode_only_tiles_spilling_chains() {
+        let g = chain_graph();
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let huge = analyze_with(&g, None, &ctx, 1, TileMode::OverBudget, u64::MAX, None);
+        assert!(huge.is_empty(), "everything fits → nothing to tile");
+        let tiny = analyze_with(&g, None, &ctx, 1, TileMode::OverBudget, 6 << 10, None);
+        assert_eq!(tiny.chains.len(), 1);
+        assert!(tiny.chains[0].tile < (8, 8));
+    }
+
+    #[test]
+    fn gemm_ctx_yields_no_conv_chains() {
+        let g = chain_graph();
+        let ctx = ExecCtx::new(ConvAlgo::Im2colGemm);
+        let plan = analyze_with(&g, None, &ctx, 1, TileMode::ForceAll, u64::MAX, None);
+        assert!(
+            plan.chains.iter().all(|c| (c.start..=c.end).all(|id| id != 1 && id != 3)),
+            "GEMM-routed convs must stay untiled"
+        );
+    }
+
+    #[test]
+    fn i8_ctx_runs_int8_convs_head_only() {
+        let g = chain_graph();
+        let ctx = ExecCtx::new(ConvAlgo::Sliding).with_dtype(Dtype::I8);
+        let plan = analyze_with(&g, None, &ctx, 1, TileMode::ForceAll, u64::MAX, None);
+        let spans: Vec<_> = plan.chains.iter().map(|c| (c.start, c.end)).collect();
+        assert_eq!(spans, vec![(1, 2), (3, 4)], "second conv must start its own chain");
+        assert_eq!(plan.chains[0].geoms[0].link, Link::ConvQ8);
+        assert_eq!(plan.chains[1].geoms[0].link, Link::ConvQ8);
+    }
+
+    #[test]
+    fn branch_breaks_the_chain() {
+        let mut g = Graph::new("t", &[4, 16, 16]);
+        let c1 = g.add(conv_op(4, 8, 3, Conv2dParams::same(3)), vec![0]);
+        let r1 = g.add(Op::Relu, vec![c1]);
+        let _c2 = g.add(conv_op(8, 8, 3, Conv2dParams::same(3)), vec![r1]);
+        // Second consumer of c1 (also the graph output): c1 now has two
+        // uses, so no chain may run past it.
+        let _r2 = g.add(Op::Relu, vec![c1]);
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let plan = analyze_with(&g, None, &ctx, 1, TileMode::ForceAll, u64::MAX, None);
+        assert!(
+            plan.chains.iter().all(|c| !(c.start <= c1 && c1 < c.end)),
+            "a multi-consumer node can end a chain but never be an intermediate"
+        );
+        // r1 → c2 still chains.
+        assert!(plan.chains.iter().any(|c| (c.start, c.end) == (r1, _c2)));
+    }
+
+    #[test]
+    fn planner_choice_gates_eligibility() {
+        let g = chain_graph();
+        let mk = |algo| {
+            let mut v: Vec<Option<PlannedChoice>> = vec![None; g.nodes.len()];
+            for id in [1usize, 3] {
+                v[id] = Some(PlannedChoice {
+                    algo,
+                    threads: 1,
+                    dtype: Dtype::F32,
+                    workspace_bytes: 0,
+                    predicted_gflops: 1.0,
+                });
+            }
+            v
+        };
+        // Under a sliding ctx, a planned Gemm is outside the route's
+        // family → not honoured → the ctx's sliding route still runs.
+        let sliding = ExecCtx::new(ConvAlgo::Sliding);
+        let choices = mk(PlanAlgo::Gemm);
+        let plan = analyze_with(
+            &g,
+            Some(&choices),
+            &sliding,
+            1,
+            TileMode::ForceAll,
+            u64::MAX,
+            None,
+        );
+        assert_eq!(plan.chains.len(), 1);
+        assert_eq!((plan.chains[0].start, plan.chains[0].end), (1, 4));
+        // Under a GEMM ctx, a planned GemmLowMem *is* honoured — and is
+        // not the sliding kernel, so the convs stay untiled.
+        let gemm = ExecCtx::new(ConvAlgo::Im2colGemm);
+        let choices = mk(PlanAlgo::GemmLowMem);
+        let plan = analyze_with(
+            &g,
+            Some(&choices),
+            &gemm,
+            1,
+            TileMode::ForceAll,
+            u64::MAX,
+            None,
+        );
+        assert!(plan.chains.iter().all(|c| (c.start..=c.end).all(|id| id != 1 && id != 3)));
+    }
+
+    #[test]
+    fn pathological_padding_rejects_the_tile_grid() {
+        // relu → conv(k3, pad 3): output rows 0..2 read only padding,
+        // so a 1-row tile asks the relu link for an empty rect. The
+        // full-plane tile is fine.
+        let mut g = Graph::new("t", &[2, 4, 4]);
+        let r = g.add(Op::Relu, vec![0]);
+        let p = Conv2dParams { stride: (1, 1), pad: (3, 3), groups: 1 };
+        let _c = g.add(conv_op(2, 2, 3, p), vec![r]);
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let forced =
+            analyze_with(&g, None, &ctx, 1, TileMode::ForceAll, u64::MAX, Some((1, 8)));
+        assert!(forced.is_empty(), "1-row tiles hit an empty intermediate rect");
+        let full = analyze_with(&g, None, &ctx, 1, TileMode::ForceAll, u64::MAX, None);
+        assert_eq!(full.chains.len(), 1);
+    }
+
+    #[test]
+    fn working_set_shrinks_monotonically_with_tile() {
+        let g = chain_graph();
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let plan = analyze_with(&g, None, &ctx, 1, TileMode::ForceAll, u64::MAX, None);
+        let geoms = &plan.chains[0].geoms;
+        let full = tile_working_bytes(geoms, (8, 8), 1);
+        let half = tile_working_bytes(geoms, (4, 8), 1);
+        let quarter = tile_working_bytes(geoms, (4, 4), 1);
+        assert!(half < full && quarter < half);
+        // Batch scales the activation term.
+        assert!(tile_working_bytes(geoms, (4, 4), 8) > quarter);
+    }
+}

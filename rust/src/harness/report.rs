@@ -370,6 +370,86 @@ pub fn write_plan_bench_json(
     })
 }
 
+/// One cache-blocked-tiling benchmark measurement — one element of the
+/// `BENCH_tile.json` schema, produced by `benches/tiled_chains.rs`.
+///
+/// ## `BENCH_tile.json` schema
+///
+/// A JSON **array**, one object per (model, dtype, mode) triple:
+///
+/// ```json
+/// [
+///   {"bench": "tile", "model": "simple-cnn", "dtype": "f32",
+///    "threads": 4, "mode": "tiled", "tile": "8x8", "chains": 2,
+///    "chain_ws_bytes": 73728, "ns_per_iter": 812345.0,
+///    "gflops": 2.4513}
+/// ]
+/// ```
+///
+/// `mode` is `"untiled"` (the baseline full-plane executor) or
+/// `"tiled"` (the same compiled plan with the chains of the tiling
+/// analysis attached). `tile` is the forced output-tile shape of a
+/// tiled row (`"auto"` = cache-budget-sized) and `"-"` on untiled
+/// rows. `chains` counts the fusable chains the analysis tiled, and
+/// `chain_ws_bytes` sums their estimated intra-chain working sets —
+/// per-tile on tiled rows, full-plane on the untiled row — so
+/// tiled-vs-untiled rows of one model quantify the activation-footprint
+/// shrink alongside the wall-time delta. Bitwise parity between the
+/// two modes is asserted before anything is timed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TileBenchRecord {
+    /// Series id, `"tile"`.
+    pub bench: String,
+    /// Zoo model name.
+    pub model: String,
+    /// Serving dtype name (`"f32"`, `"bf16"`, `"i8"`).
+    pub dtype: String,
+    /// Ctx worker threads.
+    pub threads: usize,
+    /// `"untiled"` or `"tiled"`.
+    pub mode: String,
+    /// Forced tile shape of a tiled row (`"auto"`, `"8x8"`, …); `"-"`
+    /// on untiled rows.
+    pub tile: String,
+    /// Fusable chains the analysis tiled (also set on the untiled row
+    /// — the same chains at full-plane cost).
+    pub chains: usize,
+    /// Summed estimated intra-chain working set, bytes (per-tile on
+    /// tiled rows, full-plane on untiled rows).
+    pub chain_ws_bytes: u64,
+    /// Median time per forward, nanoseconds.
+    pub ns_per_iter: f64,
+    /// Measured throughput, GFLOP/s.
+    pub gflops: f64,
+}
+
+/// Write tiling bench records as a JSON array (the `BENCH_tile.json`
+/// writer — same conventions as [`write_bench_json`]:
+/// program-generated identifiers, no escaping).
+pub fn write_tile_bench_json(
+    path: impl AsRef<Path>,
+    records: &[TileBenchRecord],
+) -> std::io::Result<()> {
+    write_records(path, records, |r| {
+        format!(
+            "{{\"bench\": \"{}\", \"model\": \"{}\", \"dtype\": \"{}\", \
+             \"threads\": {}, \"mode\": \"{}\", \"tile\": \"{}\", \
+             \"chains\": {}, \"chain_ws_bytes\": {}, \
+             \"ns_per_iter\": {:.1}, \"gflops\": {:.4}}}",
+            r.bench,
+            r.model,
+            r.dtype,
+            r.threads,
+            r.mode,
+            r.tile,
+            r.chains,
+            r.chain_ws_bytes,
+            r.ns_per_iter,
+            r.gflops
+        )
+    })
+}
+
 /// Format a float with 3 significant decimals for table cells.
 pub fn f3(v: f64) -> String {
     format!("{v:.3}")
@@ -597,6 +677,49 @@ mod tests {
         assert_eq!(arr[0].get("policy").and_then(|v| v.as_str()), Some("planned"));
         assert_eq!(arr[0].get("budget_bytes").and_then(|v| v.as_usize()), Some(1 << 20));
         assert_eq!(arr[1].get("budget_bytes").and_then(|v| v.as_usize()), Some(0));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn tile_bench_json_roundtrips_through_parser() {
+        let recs = vec![
+            TileBenchRecord {
+                bench: "tile".into(),
+                model: "simple-cnn".into(),
+                dtype: "f32".into(),
+                threads: 4,
+                mode: "untiled".into(),
+                tile: "-".into(),
+                chains: 2,
+                chain_ws_bytes: 1 << 18,
+                ns_per_iter: 901234.0,
+                gflops: 2.21,
+            },
+            TileBenchRecord {
+                bench: "tile".into(),
+                model: "simple-cnn".into(),
+                dtype: "f32".into(),
+                threads: 4,
+                mode: "tiled".into(),
+                tile: "8x8".into(),
+                chains: 2,
+                chain_ws_bytes: 73728,
+                ns_per_iter: 812345.0,
+                gflops: 2.45,
+            },
+        ];
+        let p = std::env::temp_dir().join("swconv_test_tile_bench.json");
+        write_tile_bench_json(&p, &recs).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let j = crate::runtime::json::Json::parse(&text).expect("valid JSON");
+        let arr = match &j {
+            crate::runtime::json::Json::Arr(a) => a,
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("mode").and_then(|v| v.as_str()), Some("untiled"));
+        assert_eq!(arr[1].get("tile").and_then(|v| v.as_str()), Some("8x8"));
+        assert_eq!(arr[1].get("chain_ws_bytes").and_then(|v| v.as_usize()), Some(73728));
         let _ = std::fs::remove_file(p);
     }
 

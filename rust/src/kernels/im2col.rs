@@ -562,6 +562,80 @@ mod tests {
         assert_eq!(full.as_slice(), strip.as_slice());
     }
 
+    /// Strip width 1: a 1x1 output plane clamps the strip to a single
+    /// column (`lowmem_strip_cols(..).min(ohw)`), so every GEMM call
+    /// sees a one-column B panel. Also checks [`im2col_strip`] at
+    /// `len = 1` against the full expansion, column by column, on a
+    /// padded + strided case where per-column addressing matters.
+    #[test]
+    fn strip_width_one_column() {
+        // ohw == 1: valid conv where the filter covers the whole input.
+        let p = Conv2dParams::default();
+        let x = Tensor::randn(&[1, 3, 4, 4], 41);
+        let w = Tensor::randn(&[2, 3, 4, 4], 42);
+        let ctx = ExecCtx::default();
+        let full = conv2d_im2col_epi_ctx(&x, &w, Epilogue::from_bias(None), &p, &ctx);
+        let strip = conv2d_im2col_lowmem_epi_ctx(&x, &w, Epilogue::from_bias(None), &p, &ctx);
+        assert_eq!(full.dims(), &[1, 2, 1, 1]);
+        assert_eq!(full.as_slice(), strip.as_slice());
+
+        // One-column expansions tile the full column matrix exactly.
+        let p = Conv2dParams { stride: (2, 1), pad: (1, 2), groups: 1 };
+        let x = Tensor::randn(&[1, 2, 5, 6], 43);
+        let (kh, kw) = (3, 3);
+        let (oh, ow) = p.out_size(5, 6, kh, kw);
+        let kdim = 2 * kh * kw;
+        let mut whole = vec![0.0f32; kdim * oh * ow];
+        im2col_plane(&x, 0, 0, 2, kh, kw, &p, oh, ow, &mut whole);
+        let mut col = vec![0.0f32; kdim];
+        for j in 0..oh * ow {
+            im2col_strip(&x, 0, 0, 2, kh, kw, &p, ow, j, 1, &mut col);
+            for r in 0..kdim {
+                assert_eq!(col[r], whole[r * oh * ow + j], "row {r} col {j}");
+            }
+        }
+    }
+
+    /// Strip >= total columns: with a tiny kdim the budgeted strip far
+    /// exceeds `oh·ow`, so the low-memory path degenerates to a single
+    /// full-width strip per (image, group) — and must still be
+    /// bit-identical, not just on multi-strip shapes.
+    #[test]
+    fn single_strip_covers_all_columns() {
+        let p = Conv2dParams::same(3);
+        let x = Tensor::randn(&[2, 2, 9, 9], 44);
+        let w = Tensor::randn(&[3, 2, 3, 3], 45);
+        assert!(
+            lowmem_strip_cols(2 * 3 * 3) >= 81,
+            "strip must cover the whole output plane"
+        );
+        for threads in [1usize, 4] {
+            let ctx = ExecCtx::with_threads(crate::kernels::ConvAlgo::Im2colGemm, threads);
+            let full = conv2d_im2col_epi_ctx(&x, &w, Epilogue::from_bias(None), &p, &ctx);
+            let strip = conv2d_im2col_lowmem_epi_ctx(&x, &w, Epilogue::from_bias(None), &p, &ctx);
+            assert_eq!(full.as_slice(), strip.as_slice(), "threads={threads}");
+        }
+    }
+
+    /// Non-divisible remainder: `oh·ow % strip != 0`, so the last strip
+    /// of every (image, group) is ragged — narrower than the budgeted
+    /// width — and its zero-padded GEMM panels must not leak into the
+    /// output.
+    #[test]
+    fn ragged_tail_strip() {
+        let p = Conv2dParams::same(5);
+        let x = Tensor::randn(&[1, 26, 14, 13], 46);
+        let w = Tensor::randn(&[3, 26, 5, 5], 47);
+        let kdim = 26 * 5 * 5;
+        let (ohw, strip) = (14 * 13, lowmem_strip_cols(kdim));
+        assert!(strip < ohw, "must span several strips");
+        assert_ne!(ohw % strip, 0, "tail strip must be ragged");
+        let ctx = ExecCtx::default();
+        let full = conv2d_im2col_epi_ctx(&x, &w, Epilogue::from_bias(None), &p, &ctx);
+        let strip = conv2d_im2col_lowmem_epi_ctx(&x, &w, Epilogue::from_bias(None), &p, &ctx);
+        assert_eq!(full.as_slice(), strip.as_slice());
+    }
+
     #[test]
     fn lowmem_matches_oneshot_bitwise_q8() {
         let p = Conv2dParams::same(3);

@@ -10,6 +10,7 @@
 //! | [`sliding1d`] | 1-D Vector Slide convolution + log-step sliding sums |
 //! | [`sliding2d`] | 2-D sliding convolution: generic (k ≤ 17), compound (k > 17), custom k=3/k=5 |
 //! | [`pool`]      | max/avg pooling via log-step sliding combines |
+//! | [`region`]    | halo-aware region (tile) variants of the sliding conv/pool kernels, bit-identical per output rect — what [`crate::graph::tiling`] drives |
 //! | [`dispatch`]  | filter-size–driven algorithm selection (paper §2 policy, or a measured [`crate::autotune`] profile via [`ConvAlgo::Tuned`]) |
 //!
 //! The public entry points are [`conv2d`], [`conv1d`] and the pooling
@@ -45,6 +46,7 @@ pub mod im2col;
 pub mod sliding1d;
 pub mod sliding2d;
 pub mod pool;
+pub mod region;
 pub mod dispatch;
 
 pub use dispatch::{

@@ -47,14 +47,14 @@ impl PoolParams {
 
 /// The combiner a sliding pool kernel uses.
 #[derive(Clone, Copy, Debug)]
-enum Combine {
+pub(crate) enum Combine {
     Sum,
     Max,
 }
 
 impl Combine {
     #[inline(always)]
-    fn vec(self, a: F32xL, b: F32xL) -> F32xL {
+    pub(crate) fn vec(self, a: F32xL, b: F32xL) -> F32xL {
         match self {
             Combine::Sum => a + b,
             Combine::Max => a.max(b),
@@ -62,14 +62,14 @@ impl Combine {
     }
 
     #[inline(always)]
-    fn scalar(self, a: f32, b: f32) -> f32 {
+    pub(crate) fn scalar(self, a: f32, b: f32) -> f32 {
         match self {
             Combine::Sum => a + b,
             Combine::Max => a.max(b),
         }
     }
 
-    fn identity(self) -> f32 {
+    pub(crate) fn identity(self) -> f32 {
         match self {
             Combine::Sum => 0.0,
             Combine::Max => f32::NEG_INFINITY,
@@ -83,7 +83,13 @@ impl Combine {
 /// the shared structure of the paper's sum/max/avg kernels. Requires
 /// `k ≤ LANES` (callers fall back to the serial loop beyond; pooling
 /// windows that large do not occur in practice).
-fn sliding_combine_row(src: &[f32], k: usize, dst: &mut [f32], out_len: usize, op: Combine) {
+pub(crate) fn sliding_combine_row(
+    src: &[f32],
+    k: usize,
+    dst: &mut [f32],
+    out_len: usize,
+    op: Combine,
+) {
     debug_assert!(k >= 1);
     if k > LANES {
         for i in 0..out_len {

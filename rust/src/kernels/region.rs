@@ -1,0 +1,904 @@
+//! Halo-aware **region variants** of the sliding conv/pool kernels:
+//! each entry point computes one output sub-rectangle (a *tile*) of the
+//! corresponding whole-tensor kernel, reading only the input *halo*
+//! that tile needs. [`crate::graph::tiling`] sizes the tiles so a whole
+//! fused chain's per-tile working set stays L2-resident, and
+//! [`crate::graph::plan`] drives these kernels tile-by-tile.
+//!
+//! ## The bitwise contract
+//!
+//! Tiled execution must be **bit-identical** to the untiled kernels for
+//! every dtype, thread count and ISA level. The f32/bf16/i8 row
+//! convolution kernels ([`crate::kernels::rowconv`]) make this easy:
+//! they are *position-uniform* — output position `j` depends only on
+//! `src[j..j+k)` combined in a fixed ascending-tap order, independent
+//! of where the row starts or ends (partial vectors are masked, never
+//! reassociated). So a region call evaluates each output element with
+//! the exact same FP operation sequence as the untiled call, and the
+//! kernels here replicate the untiled loop nests (`cig → ky` row
+//! accumulation order, bias-seeded accumulators, epilogue-at-write).
+//!
+//! The one non-uniform primitive is the pooling horizontal combine
+//! ([`crate::kernels::pool`]'s `sliding_combine_row`): unit-stride
+//! positions `u < V` (where `V` rounds the untiled unit-stride output
+//! width `ow1` down to a multiple of `LANES`) are combined by the
+//! log-step *ladder* — a fixed combination tree independent of the
+//! position's lane or block, so ladder values are position-uniform too
+//! — while positions `u ≥ V` use a scalar ascending fold. `max` is
+//! associative so the split is invisible, but `sum` (avg-pool) is not:
+//! [`pool2d_sliding_region`] therefore replicates the *untiled* `V`
+//! split exactly — ladder for tile positions below `V` (computed by
+//! rounding the tile's span up to whole lanes and discarding the
+//! extras, legal by per-lane uniformity), explicit scalar fold at and
+//! above `V`, and the untiled all-scalar path when `k > LANES`.
+//!
+//! ## Halo geometry
+//!
+//! For an output rect `[oy0, oy1) × [ox0, ox1)` of a window op with
+//! kernel `(kh, kw)`, stride `(sh, sw)` and pad `(ph, pw)`, the padded
+//! input rows read are `[oy0·sh, (oy1−1)·sh + kh)` and the unit-stride
+//! horizontal positions are `u ∈ [ox0·sw, (ox1−1)·sw]`, each reading
+//! padded columns `[u, u+kw)`. [`input_region`] translates that to the
+//! clamped *input-plane* rect — the tile's halo — which
+//! [`crate::graph::tiling`] chains backwards through a fused group so
+//! every intermediate is materialised only at tile size.
+//!
+//! Kernels here take their input as a [`SrcView`]: a dense copy of the
+//! halo rect (or the whole plane, for a chain head) plus its position
+//! in the full plane, and write a dense `[n, c_out, tile_h, tile_w]`
+//! output slice. Per-tile local buffers live in a [`RegionScratch`]
+//! checked out of the arena once per worker.
+
+use super::epilogue::Epilogue;
+use super::pool::{sliding_combine_row, Combine, PoolParams};
+use super::rowconv::{row_conv_bf16_at, row_conv_q8_at, Q8_MAX_TAPS, RowKernel};
+use super::sliding2d::SlideVariant;
+use super::Conv2dParams;
+use crate::exec::ExecCtx;
+use crate::simd::LANES;
+use crate::tensor::{Bf16, QuantParams, Tensor, TensorT, WeightScales};
+
+/// A half-open rectangle `[y0, y1) × [x0, x1)` in plane coordinates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rect {
+    pub y0: usize,
+    pub y1: usize,
+    pub x0: usize,
+    pub x1: usize,
+}
+
+impl Rect {
+    /// The whole `h × w` plane.
+    pub fn full(h: usize, w: usize) -> Rect {
+        Rect { y0: 0, y1: h, x0: 0, x1: w }
+    }
+
+    /// Rectangle height (`y1 - y0`).
+    pub fn h(&self) -> usize {
+        self.y1 - self.y0
+    }
+
+    /// Rectangle width (`x1 - x0`).
+    pub fn w(&self) -> usize {
+        self.x1 - self.x0
+    }
+
+    /// Element count.
+    pub fn area(&self) -> usize {
+        self.h() * self.w()
+    }
+
+    /// True when either side is zero.
+    pub fn is_empty(&self) -> bool {
+        self.y0 >= self.y1 || self.x0 >= self.x1
+    }
+}
+
+/// The input-plane rect a window op must read to produce output rect
+/// `out` — the tile's halo, clamped to the `in_h × in_w` plane (the
+/// out-of-plane remainder is padding, synthesised locally by the region
+/// kernels). May come back empty for tiles that read only padding;
+/// [`crate::graph::tiling`] treats such chains as untileable.
+pub fn input_region(
+    out: Rect,
+    k: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+    in_h: usize,
+    in_w: usize,
+) -> Rect {
+    assert!(!out.is_empty(), "empty output rect");
+    let (kh, kw) = k;
+    let (sh, sw) = stride;
+    let (ph, pw) = pad;
+    let pr0 = out.y0 * sh;
+    let pr1 = (out.y1 - 1) * sh + kh;
+    let pc0 = out.x0 * sw;
+    let pc1 = (out.x1 - 1) * sw + kw;
+    Rect {
+        y0: pr0.saturating_sub(ph).min(in_h),
+        y1: pr1.saturating_sub(ph).min(in_h),
+        x0: pc0.saturating_sub(pw).min(in_w),
+        x1: pc1.saturating_sub(pw).min(in_w),
+    }
+}
+
+/// A dense view of the sub-rect `rect` of every channel plane of an
+/// `[n, c, full.0, full.1]` activation: `data` is
+/// `[n, c, rect.h(), rect.w()]`. A chain head passes the whole input
+/// tensor (`rect == full plane`); chain intermediates pass the tile
+/// buffer the previous region call produced.
+pub struct SrcView<'a, T> {
+    pub data: &'a [T],
+    pub c: usize,
+    pub rect: Rect,
+    /// Full plane size `(h, w)` the rect lives in.
+    pub full: (usize, usize),
+}
+
+/// Reusable per-tile scratch for the region kernels: local padded
+/// planes and row accumulators per dtype. Every kernel `clear`s and
+/// re-grows the buffers it needs, so one warm `RegionScratch` (checked
+/// out of the arena once per worker via [`RegionScratch::from_ctx`])
+/// serves every tile of a parallel region allocation-free once its
+/// capacity has peaked.
+#[derive(Default)]
+pub struct RegionScratch {
+    padded_f32: Vec<f32>,
+    row_f32: Vec<f32>,
+    hrows: Vec<f32>,
+    acc: Vec<f32>,
+    padded_i8: Vec<i8>,
+    row_i32: Vec<i32>,
+    padded_bf16: Vec<Bf16>,
+}
+
+impl RegionScratch {
+    /// Check the scratch vectors out of the ctx's arena (zero-length;
+    /// they grow to tile size on first use and keep their capacity).
+    pub fn from_ctx(ctx: &ExecCtx) -> Self {
+        RegionScratch {
+            padded_f32: ctx.take(0, 0.0),
+            row_f32: ctx.take(0, 0.0),
+            hrows: ctx.take(0, 0.0),
+            acc: ctx.take(0, 0.0),
+            padded_i8: ctx.take_elems(0, 0i8),
+            row_i32: ctx.take_elems(0, 0i32),
+            padded_bf16: ctx.take_elems(0, Bf16::ZERO),
+        }
+    }
+
+    /// Return every buffer to the ctx's arena.
+    pub fn release(self, ctx: &ExecCtx) {
+        ctx.put(self.padded_f32);
+        ctx.put(self.row_f32);
+        ctx.put(self.hrows);
+        ctx.put(self.acc);
+        ctx.put_elems(self.padded_i8);
+        ctx.put_elems(self.row_i32);
+        ctx.put_elems(self.padded_bf16);
+    }
+}
+
+/// Local padded-plane geometry for one output rect: the padded-plane
+/// row/column window the region call covers.
+struct RegionGeom {
+    /// First padded-plane row the tile reads (`oy0 · sh`).
+    pr0: usize,
+    /// Local padded height (`(oy1−1)·sh + kh − pr0`).
+    hp_l: usize,
+    /// First unit-stride position / padded column (`ox0 · sw`).
+    u0: usize,
+    /// Unit-stride positions the tile samples (`(ox1−1)·sw + 1 − u0`).
+    ulen: usize,
+    /// Local padded width: `ulen + kw` data-relevant columns plus
+    /// vector-load slack.
+    wp_l: usize,
+}
+
+fn region_geom(out: Rect, k: (usize, usize), stride: (usize, usize), slack: usize) -> RegionGeom {
+    assert!(!out.is_empty(), "empty output rect");
+    let (kh, kw) = k;
+    let (sh, sw) = stride;
+    let pr0 = out.y0 * sh;
+    let hp_l = (out.y1 - 1) * sh + kh - pr0;
+    let u0 = out.x0 * sw;
+    let ulen = (out.x1 - 1) * sw + 1 - u0;
+    RegionGeom { pr0, hp_l, u0, ulen, wp_l: ulen + kw + slack }
+}
+
+/// Fill one channel's local padded plane (rows `[pr0, pr0+hp_l)`,
+/// columns `[u0, u0+wp_l)` of the full padded plane) from a
+/// [`SrcView`], mapping elements through `map` (identity, or the
+/// f32→bf16 narrowing). The caller has pre-filled `local` with the pad
+/// value; this copies the in-plane portion that the view covers.
+/// Columns the view does not cover are either convolution padding or
+/// vector-load slack — slack lanes are computed and discarded, so any
+/// finite fill value is sound there.
+#[allow(clippy::too_many_arguments)]
+fn fill_local_padded<S: Copy, T: Copy>(
+    src: &SrcView<'_, S>,
+    ni: usize,
+    ci: usize,
+    g: &RegionGeom,
+    pad: (usize, usize),
+    local: &mut [T],
+    map: impl Fn(S) -> T,
+) {
+    let (ph, pw) = pad;
+    let fh = src.full.0;
+    let r = src.rect;
+    let (rh, rw) = (r.h(), r.w());
+    let area = rh * rw;
+    let plane = &src.data[(ni * src.c + ci) * area..][..area];
+    // Column span of the view inside the local buffer.
+    let lc0 = (pw + r.x0).saturating_sub(g.u0);
+    let lc1 = (pw + r.x1).saturating_sub(g.u0).min(g.wp_l);
+    if lc1 <= lc0 {
+        return;
+    }
+    let s0 = g.u0 + lc0 - pw - r.x0;
+    for lr in 0..g.hp_l {
+        let gr = g.pr0 + lr;
+        if gr < ph {
+            continue; // top padding
+        }
+        let iy = gr - ph;
+        if iy >= fh {
+            break; // bottom padding
+        }
+        if iy < r.y0 || iy >= r.y1 {
+            continue; // outside the view: padding or unused slack rows
+        }
+        let srow = &plane[(iy - r.y0) * rw..][..rw];
+        let drow = &mut local[lr * g.wp_l + lc0..lr * g.wp_l + lc1];
+        for (d, s) in drow.iter_mut().zip(&srow[s0..s0 + (lc1 - lc0)]) {
+            *d = map(*s);
+        }
+    }
+}
+
+/// Region variant of
+/// [`super::sliding2d::conv2d_sliding_epi_ctx`]: compute output rect
+/// `out` of the f32 sliding convolution into the dense tile slice `dst`
+/// (`[n, c_out, out.h(), out.w()]`). Bit-identical to the untiled
+/// kernel on that rect — same row kernel resolution, same bias-seeded
+/// `cig → ky` accumulation, same epilogue-at-write. Unlike the untiled
+/// `Auto`, an unsupported filter width panics instead of falling back
+/// to the direct kernel: the tiling analysis never selects such convs.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_sliding_region_epi_ctx(
+    n: usize,
+    src: &SrcView<'_, f32>,
+    w: &Tensor,
+    epi: Epilogue<'_>,
+    p: &Conv2dParams,
+    variant: SlideVariant,
+    out: Rect,
+    dst: &mut [f32],
+    scratch: &mut RegionScratch,
+    ctx: &ExecCtx,
+) {
+    let bias = epi.bias;
+    assert_eq!(w.rank(), 4, "weights must be [cout, cin/g, kh, kw]");
+    let c_in = src.c;
+    let (c_out, c_in_g, kh, kw) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+    let g = p.groups;
+    assert!(g >= 1 && c_in % g == 0 && c_out % g == 0, "bad groups {g}");
+    assert_eq!(c_in / g, c_in_g, "weight c_in/{g} mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), c_out, "bias length");
+    }
+    assert!(variant.supports(kw), "{variant:?} cannot evaluate filter width {kw} in a region");
+    assert_eq!(src.data.len(), n * c_in * src.rect.area(), "src view length");
+    let (th, tw) = (out.h(), out.w());
+    assert_eq!(dst.len(), n * c_out * th * tw, "dst tile length");
+    let row_fn = match variant {
+        SlideVariant::Auto => ctx.tuned_row_kernel(kw).row_fn_at(kw, ctx.isa()),
+        SlideVariant::Generic => RowKernel::Generic.row_fn_at(kw, ctx.isa()),
+        SlideVariant::Compound => RowKernel::Compound.row_fn_at(kw, ctx.isa()),
+    };
+    // Right slack matches the untiled kernel's: 2·LANES beyond the
+    // `ulen + kw` data-relevant columns.
+    let geom = region_geom(out, (kh, kw), p.stride, 2 * LANES);
+    let (sh, sw) = p.stride;
+    let ws = w.as_slice();
+    let c_out_g = c_out / g;
+    let plane_l = geom.hp_l * geom.wp_l;
+
+    let RegionScratch { padded_f32, row_f32, .. } = scratch;
+    row_f32.clear();
+    row_f32.resize(geom.ulen, 0.0);
+    for ni in 0..n {
+        padded_f32.clear();
+        padded_f32.resize(c_in * plane_l, 0.0);
+        for ci in 0..c_in {
+            fill_local_padded(
+                src,
+                ni,
+                ci,
+                &geom,
+                p.pad,
+                &mut padded_f32[ci * plane_l..(ci + 1) * plane_l],
+                |v| v,
+            );
+        }
+        for co in 0..c_out {
+            let grp = co / c_out_g;
+            let b = bias.map_or(0.0, |b| b[co]);
+            let oplane = &mut dst[(ni * c_out + co) * th * tw..][..th * tw];
+            for (ty, oy) in (out.y0..out.y1).enumerate() {
+                let iy0 = oy * sh - geom.pr0;
+                row_f32.fill(b);
+                for cig in 0..c_in_g {
+                    let ci = grp * c_in_g + cig;
+                    let plane = &padded_f32[ci * plane_l..(ci + 1) * plane_l];
+                    for ky in 0..kh {
+                        let srow = &plane[(iy0 + ky) * geom.wp_l..];
+                        let wrow = &ws[((co * c_in_g + cig) * kh + ky) * kw..][..kw];
+                        row_fn(srow, wrow, row_f32, geom.ulen);
+                    }
+                }
+                let orow = &mut oplane[ty * tw..ty * tw + tw];
+                if epi.relu {
+                    for (tx, v) in orow.iter_mut().enumerate() {
+                        *v = row_f32[tx * sw].max(0.0);
+                    }
+                } else {
+                    for (tx, v) in orow.iter_mut().enumerate() {
+                        *v = row_f32[tx * sw];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Region variant of the int8 sliding convolution **with the fused
+/// dequant epilogue**: computes output rect `out` of
+/// [`super::sliding2d::conv2d_sliding_q8_raw_ctx`] and applies the
+/// shared dequant expression
+/// (`raw · x_scale · w_scale[co] + bias`, optional ReLU — exactly
+/// `dequantize_conv_acc`) at the tile write. Integer accumulation is
+/// exact, so the raw tile agrees bit for bit with the untiled
+/// accumulator; the dequant evaluates the identical f32 expression per
+/// element.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_sliding_q8_region_ctx(
+    n: usize,
+    src: &SrcView<'_, i8>,
+    qw: &TensorT<i8>,
+    xq: QuantParams,
+    wq: &WeightScales,
+    bias: Option<&[f32]>,
+    relu: bool,
+    p: &Conv2dParams,
+    out: Rect,
+    dst: &mut [f32],
+    scratch: &mut RegionScratch,
+    ctx: &ExecCtx,
+) {
+    assert_eq!(qw.rank(), 4, "weights must be [cout, cin/g, kh, kw]");
+    assert!(
+        xq.is_symmetric() && wq.is_symmetric(),
+        "int8 conv kernels require symmetric quantization (zero_point == 0)"
+    );
+    let c_in = src.c;
+    let (c_out, c_in_g, kh, kw) = (qw.dim(0), qw.dim(1), qw.dim(2), qw.dim(3));
+    let g = p.groups;
+    assert!(g >= 1 && c_in % g == 0 && c_out % g == 0, "bad groups {g}");
+    assert_eq!(c_in / g, c_in_g, "weight c_in/{g} mismatch");
+    assert!(
+        c_in_g * kh * kw <= Q8_MAX_TAPS,
+        "int8 conv with {} taps could overflow the i32 accumulator (max {Q8_MAX_TAPS})",
+        c_in_g * kh * kw
+    );
+    if let Some(b) = bias {
+        assert_eq!(b.len(), c_out, "bias length");
+    }
+    assert_eq!(src.data.len(), n * c_in * src.rect.area(), "src view length");
+    let (th, tw) = (out.h(), out.w());
+    assert_eq!(dst.len(), n * c_out * th * tw, "dst tile length");
+    let row_fn = row_conv_q8_at(ctx.isa());
+    let geom = region_geom(out, (kh, kw), p.stride, 2 * LANES);
+    let (sh, sw) = p.stride;
+    let ws = qw.as_slice();
+    let c_out_g = c_out / g;
+    let plane_l = geom.hp_l * geom.wp_l;
+
+    let RegionScratch { padded_i8, row_i32, .. } = scratch;
+    row_i32.clear();
+    row_i32.resize(geom.ulen, 0);
+    for ni in 0..n {
+        padded_i8.clear();
+        padded_i8.resize(c_in * plane_l, 0i8);
+        for ci in 0..c_in {
+            fill_local_padded(
+                src,
+                ni,
+                ci,
+                &geom,
+                p.pad,
+                &mut padded_i8[ci * plane_l..(ci + 1) * plane_l],
+                |v| v,
+            );
+        }
+        for co in 0..c_out {
+            let grp = co / c_out_g;
+            let b = bias.map_or(0.0, |b| b[co]);
+            let scale = xq.scale * wq.scale(co);
+            let oplane = &mut dst[(ni * c_out + co) * th * tw..][..th * tw];
+            for (ty, oy) in (out.y0..out.y1).enumerate() {
+                let iy0 = oy * sh - geom.pr0;
+                row_i32.fill(0);
+                for cig in 0..c_in_g {
+                    let ci = grp * c_in_g + cig;
+                    let plane = &padded_i8[ci * plane_l..(ci + 1) * plane_l];
+                    for ky in 0..kh {
+                        let srow = &plane[(iy0 + ky) * geom.wp_l..];
+                        let wrow = &ws[((co * c_in_g + cig) * kh + ky) * kw..][..kw];
+                        row_fn(srow, wrow, row_i32, geom.ulen);
+                    }
+                }
+                let orow = &mut oplane[ty * tw..ty * tw + tw];
+                for (tx, v) in orow.iter_mut().enumerate() {
+                    let val = row_i32[tx * sw] as f32 * scale + b;
+                    *v = if relu { val.max(0.0) } else { val };
+                }
+            }
+        }
+    }
+}
+
+/// Region variant of the bf16 sliding convolution **fused into an f32
+/// chain**: the f32 tile input is narrowed to bf16 codes during the
+/// local pad fill (exactly the codes `to_bf16` would produce), the
+/// weights arrive already narrowed-and-widened (`to_bf16(w)` expanded
+/// back to f32, once per chain — `wf`, with dims `wdims`), accumulation
+/// is f32 via the bf16 row kernel, and each output value rounds through
+/// bf16 storage (`Bf16::from_f32(v).to_f32()`) before the optional
+/// ReLU — exactly the untiled
+/// `from_bf16(conv2d_sliding_bf16_ctx(to_bf16(x), …))` + epilogue
+/// sequence of [`super::dispatch::conv2d_bf16_epi_ctx`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_sliding_bf16_region_ctx(
+    n: usize,
+    src: &SrcView<'_, f32>,
+    wf: &[f32],
+    wdims: (usize, usize, usize, usize),
+    bias: Option<&[f32]>,
+    relu: bool,
+    p: &Conv2dParams,
+    out: Rect,
+    dst: &mut [f32],
+    scratch: &mut RegionScratch,
+    ctx: &ExecCtx,
+) {
+    let c_in = src.c;
+    let (c_out, c_in_g, kh, kw) = wdims;
+    let g = p.groups;
+    assert!(g >= 1 && c_in % g == 0 && c_out % g == 0, "bad groups {g}");
+    assert_eq!(c_in / g, c_in_g, "weight c_in/{g} mismatch");
+    assert_eq!(wf.len(), c_out * c_in_g * kh * kw, "widened weight length");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), c_out, "bias length");
+    }
+    assert_eq!(src.data.len(), n * c_in * src.rect.area(), "src view length");
+    let (th, tw) = (out.h(), out.w());
+    assert_eq!(dst.len(), n * c_out * th * tw, "dst tile length");
+    let row_fn = row_conv_bf16_at(ctx.isa());
+    let geom = region_geom(out, (kh, kw), p.stride, 2 * LANES);
+    let (sh, sw) = p.stride;
+    let c_out_g = c_out / g;
+    let plane_l = geom.hp_l * geom.wp_l;
+
+    let RegionScratch { padded_bf16, row_f32, .. } = scratch;
+    row_f32.clear();
+    row_f32.resize(geom.ulen, 0.0);
+    for ni in 0..n {
+        padded_bf16.clear();
+        padded_bf16.resize(c_in * plane_l, Bf16::ZERO);
+        for ci in 0..c_in {
+            fill_local_padded(
+                src,
+                ni,
+                ci,
+                &geom,
+                p.pad,
+                &mut padded_bf16[ci * plane_l..(ci + 1) * plane_l],
+                Bf16::from_f32,
+            );
+        }
+        for co in 0..c_out {
+            let grp = co / c_out_g;
+            let b = bias.map_or(0.0, |b| b[co]);
+            let oplane = &mut dst[(ni * c_out + co) * th * tw..][..th * tw];
+            for (ty, oy) in (out.y0..out.y1).enumerate() {
+                let iy0 = oy * sh - geom.pr0;
+                row_f32.fill(b);
+                for cig in 0..c_in_g {
+                    let ci = grp * c_in_g + cig;
+                    let plane = &padded_bf16[ci * plane_l..(ci + 1) * plane_l];
+                    for ky in 0..kh {
+                        let srow = &plane[(iy0 + ky) * geom.wp_l..];
+                        let wrow = &wf[((co * c_in_g + cig) * kh + ky) * kw..][..kw];
+                        row_fn(srow, wrow, row_f32, geom.ulen);
+                    }
+                }
+                let orow = &mut oplane[ty * tw..ty * tw + tw];
+                for (tx, v) in orow.iter_mut().enumerate() {
+                    let val = Bf16::from_f32(row_f32[tx * sw]).to_f32();
+                    *v = if relu { val.max(0.0) } else { val };
+                }
+            }
+        }
+    }
+}
+
+/// Region variant of the shared 2-D pooling skeleton
+/// (`pool2d_sliding`): computes output rect `out` of max pooling
+/// (`max = true`) or average pooling (`max = false`,
+/// `count_include_pad = true`, the `1/(kh·kw)` scale applied at the
+/// tile write exactly as the untiled epilogue pass applies it to the
+/// stored sum). See the module docs for how the horizontal combine
+/// replicates the untiled ladder/scalar `V` split bit for bit.
+pub fn pool2d_sliding_region(
+    n: usize,
+    src: &SrcView<'_, f32>,
+    p: &PoolParams,
+    max: bool,
+    out: Rect,
+    dst: &mut [f32],
+    scratch: &mut RegionScratch,
+) {
+    let op = if max { Combine::Max } else { Combine::Sum };
+    let inv = 1.0 / (p.k.0 * p.k.1) as f32;
+    let c = src.c;
+    let (kh, kw) = p.k;
+    let (sh, sw) = p.stride;
+    let (_, fw) = src.full;
+    assert_eq!(src.data.len(), n * c * src.rect.area(), "src view length");
+    let (th, tw) = (out.h(), out.w());
+    assert_eq!(dst.len(), n * c * th * tw, "dst tile length");
+    // Untiled unit-stride width and its ladder/scalar split point.
+    let ow1 = fw + 2 * p.pad.1 - kw + 1;
+    let v_split = ow1 - ow1 % LANES;
+    let geom = region_geom(out, (kh, kw), p.stride, 4 * LANES);
+    let plane_l = geom.hp_l * geom.wp_l;
+    // Tile positions computed by the ladder: unit-stride positions
+    // `u0 + t` with `u0 + t < v_split`, rounded up to whole lanes for
+    // the ladder call (per-lane uniformity makes the extra lanes
+    // correct-but-unused; the scalar fold below overwrites the ones
+    // that the untiled kernel computes serially).
+    let nv = v_split.saturating_sub(geom.u0).min(geom.ulen);
+    let nv_r = nv.div_ceil(LANES) * LANES;
+    let hseg_w = geom.ulen + LANES; // row stride in `hrows`; slack for the round-up
+    let RegionScratch { padded_f32, hrows, acc, .. } = scratch;
+    acc.clear();
+    acc.resize(geom.ulen, 0.0);
+    hrows.clear();
+    hrows.resize(geom.hp_l * hseg_w, 0.0);
+    for ni in 0..n {
+        for ci in 0..c {
+            padded_f32.clear();
+            padded_f32.resize(plane_l, op.identity());
+            fill_local_padded(src, ni, ci, &geom, p.pad, padded_f32, |v| v);
+            // Horizontal combine per local padded row, replicating the
+            // untiled kernel's position → ladder/scalar assignment.
+            for lr in 0..geom.hp_l {
+                let srow = &padded_f32[lr * geom.wp_l..];
+                let hrow = &mut hrows[lr * hseg_w..(lr + 1) * hseg_w];
+                if kw > LANES {
+                    // Untiled kernel is all-scalar at these widths.
+                    sliding_combine_row(srow, kw, hrow, geom.ulen, op);
+                    continue;
+                }
+                if nv_r > 0 {
+                    sliding_combine_row(srow, kw, hrow, nv_r, op);
+                }
+                for t in nv..geom.ulen {
+                    let mut a = srow[t];
+                    for j in 1..kw {
+                        a = op.scalar(a, srow[t + j]);
+                    }
+                    hrow[t] = a;
+                }
+            }
+            let oplane = &mut dst[(ni * c + ci) * th * tw..][..th * tw];
+            for (ty, oy) in (out.y0..out.y1).enumerate() {
+                let iy0 = oy * sh - geom.pr0;
+                acc.copy_from_slice(&hrows[iy0 * hseg_w..iy0 * hseg_w + geom.ulen]);
+                for ky in 1..kh {
+                    let row = &hrows[(iy0 + ky) * hseg_w..(iy0 + ky) * hseg_w + geom.ulen];
+                    for (a, &r) in acc.iter_mut().zip(row.iter()) {
+                        *a = op.scalar(*a, r);
+                    }
+                }
+                let orow = &mut oplane[ty * tw..ty * tw + tw];
+                if max {
+                    for (tx, v) in orow.iter_mut().enumerate() {
+                        *v = acc[tx * sw];
+                    }
+                } else {
+                    for (tx, v) in orow.iter_mut().enumerate() {
+                        *v = acc[tx * sw] * inv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::pool::{avg_pool2d_ctx, max_pool2d_ctx};
+    use crate::kernels::sliding2d::{
+        conv2d_sliding_bf16_ctx, conv2d_sliding_epi_ctx, conv2d_sliding_q8_raw_ctx,
+        dequantize_conv_acc,
+    };
+    use crate::kernels::ConvAlgo;
+    use crate::tensor::{from_bf16, quantize, to_bf16};
+
+    fn tiles(oh: usize, ow: usize, th: usize, tw: usize) -> Vec<Rect> {
+        let mut v = Vec::new();
+        let mut y0 = 0;
+        while y0 < oh {
+            let y1 = (y0 + th).min(oh);
+            let mut x0 = 0;
+            while x0 < ow {
+                let x1 = (x0 + tw).min(ow);
+                v.push(Rect { y0, y1, x0, x1 });
+                x0 = x1;
+            }
+            y0 = y1;
+        }
+        v
+    }
+
+    fn paste(full: &mut [f32], c: usize, oh: usize, ow: usize, n: usize, r: Rect, tile: &[f32]) {
+        let (th, tw) = (r.h(), r.w());
+        for ni in 0..n {
+            for ci in 0..c {
+                for ty in 0..th {
+                    let dst =
+                        &mut full[((ni * c + ci) * oh + r.y0 + ty) * ow + r.x0..][..tw];
+                    dst.copy_from_slice(&tile[((ni * c + ci) * th + ty) * tw..][..tw]);
+                }
+            }
+        }
+    }
+
+    /// Copy the sub-rect `r` of every `[n, c, h, w]` plane into a dense
+    /// buffer — what the tiled executor's intermediate buffers hold.
+    fn crop(x: &[f32], n: usize, c: usize, h: usize, w: usize, r: Rect) -> Vec<f32> {
+        let mut out = Vec::with_capacity(n * c * r.area());
+        for ni in 0..n {
+            for ci in 0..c {
+                for iy in r.y0..r.y1 {
+                    out.extend_from_slice(&x[((ni * c + ci) * h + iy) * w + r.x0..][..r.w()]);
+                }
+            }
+        }
+        assert_eq!(out.len(), n * c * r.area());
+        out
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn conv_region_case(
+        xdims: &[usize],
+        wdims: &[usize],
+        p: &Conv2dParams,
+        variant: SlideVariant,
+        relu: bool,
+        tile: (usize, usize),
+        cropped: bool,
+        seed: u64,
+    ) {
+        let x = Tensor::randn(xdims, seed);
+        let w = Tensor::randn(wdims, seed + 1);
+        let bias: Vec<f32> = (0..wdims[0]).map(|i| 0.05 * i as f32 - 0.1).collect();
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let want = conv2d_sliding_epi_ctx(
+            &x,
+            &w,
+            Epilogue::from_bias(Some(&bias)).with_relu(relu),
+            p,
+            variant,
+            &ctx,
+        );
+        let (n, c_in, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+        let (c_out, oh, ow) = (want.dim(1), want.dim(2), want.dim(3));
+        let mut got = vec![0.0f32; n * c_out * oh * ow];
+        let mut rs = RegionScratch::default();
+        for r in tiles(oh, ow, tile.0, tile.1) {
+            let mut t = vec![0.0f32; n * c_out * r.area()];
+            let epi = Epilogue::from_bias(Some(&bias)).with_relu(relu);
+            if cropped {
+                let ir = input_region(r, (w.dim(2), w.dim(3)), p.stride, p.pad, h, win);
+                let data = crop(x.as_slice(), n, c_in, h, win, ir);
+                let src = SrcView { data: &data, c: c_in, rect: ir, full: (h, win) };
+                conv2d_sliding_region_epi_ctx(n, &src, &w, epi, p, variant, r, &mut t, &mut rs, &ctx);
+            } else {
+                let src = SrcView {
+                    data: x.as_slice(),
+                    c: c_in,
+                    rect: Rect::full(h, win),
+                    full: (h, win),
+                };
+                conv2d_sliding_region_epi_ctx(n, &src, &w, epi, p, variant, r, &mut t, &mut rs, &ctx);
+            }
+            paste(&mut got, c_out, oh, ow, n, r, &t);
+        }
+        assert_eq!(
+            &got[..],
+            want.as_slice(),
+            "{xdims:?} {wdims:?} {p:?} {variant:?} relu={relu} tile={tile:?} cropped={cropped}"
+        );
+    }
+
+    #[test]
+    fn conv_f32_region_matches_untiled_bitwise() {
+        let p = Conv2dParams::same(3);
+        for tile in [(1, 64), (64, 64), (3, 5), (2, 1)] {
+            conv_region_case(&[2, 3, 11, 13], &[4, 3, 3, 3], &p, SlideVariant::Auto, true, tile, false, 11);
+        }
+    }
+
+    #[test]
+    fn conv_f32_region_matches_on_cropped_views() {
+        let p = Conv2dParams::same(5);
+        conv_region_case(&[1, 2, 12, 17], &[3, 2, 5, 5], &p, SlideVariant::Auto, false, (4, 6), true, 21);
+        conv_region_case(&[1, 2, 12, 17], &[3, 2, 5, 5], &p, SlideVariant::Generic, true, (1, 17), true, 22);
+    }
+
+    #[test]
+    fn conv_f32_region_strided_grouped() {
+        let p = Conv2dParams { stride: (2, 2), pad: (1, 1), groups: 2 };
+        for tile in [(2, 3), (64, 64), (1, 2)] {
+            conv_region_case(&[2, 4, 12, 14], &[6, 2, 3, 3], &p, SlideVariant::Auto, false, tile, true, 31);
+        }
+    }
+
+    #[test]
+    fn conv_f32_region_compound_variant() {
+        let p = Conv2dParams::default();
+        conv_region_case(&[1, 1, 9, 40], &[2, 1, 3, 17], &p, SlideVariant::Compound, false, (3, 7), true, 41);
+    }
+
+    #[test]
+    fn pool_region_matches_untiled_bitwise() {
+        // Width chosen so ow1 % LANES != 0 — exercises the ladder/scalar
+        // V split that average pooling's non-associative sum exposes.
+        let x = Tensor::randn(&[2, 3, 13, 21], 51);
+        let (n, c, h, w) = (2, 3, 13, 21);
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        for p in [
+            PoolParams::square(2),
+            PoolParams::with_stride(3, 2),
+            PoolParams { k: (3, 3), stride: (1, 1), pad: (1, 1) },
+        ] {
+            let (oh, ow) = p.out_size(h, w);
+            for max in [true, false] {
+                let want = if max {
+                    max_pool2d_ctx(&x, &p, &ctx)
+                } else {
+                    avg_pool2d_ctx(&x, &p, &ctx)
+                };
+                for tile in [(1, ow), (oh, ow), (3, 4), (2, 1)] {
+                    let mut got = vec![0.0f32; n * c * oh * ow];
+                    let mut rs = RegionScratch::default();
+                    for r in tiles(oh, ow, tile.0, tile.1) {
+                        let ir = input_region(r, p.k, p.stride, p.pad, h, w);
+                        let data = crop(x.as_slice(), n, c, h, w, ir);
+                        let src = SrcView { data: &data, c, rect: ir, full: (h, w) };
+                        let mut t = vec![0.0f32; n * c * r.area()];
+                        pool2d_sliding_region(n, &src, &p, max, r, &mut t, &mut rs);
+                        paste(&mut got, c, oh, ow, n, r, &t);
+                    }
+                    assert_eq!(&got[..], want.as_slice(), "{p:?} max={max} tile={tile:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q8_region_matches_untiled_bitwise() {
+        let x = Tensor::randn(&[2, 3, 10, 12], 61);
+        let w = Tensor::randn(&[4, 3, 3, 3], 62);
+        let bias: Vec<f32> = (0..4).map(|i| 0.1 * i as f32).collect();
+        let p = Conv2dParams::same(3);
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let xq = QuantParams::for_tensor(&x);
+        let qx = quantize(&x, xq);
+        let wqp = QuantParams::for_tensor(&w);
+        let qw = quantize(&w, wqp);
+        let wq = WeightScales::PerTensor(wqp);
+        for relu in [false, true] {
+            let raw = conv2d_sliding_q8_raw_ctx(&qx, &qw, &p, &ctx);
+            let want = dequantize_conv_acc(&raw, xq, &wq, Some(&bias), relu);
+            let (oh, ow) = (want.dim(2), want.dim(3));
+            for tile in [(1, ow), (4, 5), (2, 2)] {
+                let mut got = vec![0.0f32; 2 * 4 * oh * ow];
+                let mut rs = RegionScratch::default();
+                for r in tiles(oh, ow, tile.0, tile.1) {
+                    let src = SrcView {
+                        data: qx.as_slice(),
+                        c: 3,
+                        rect: Rect::full(10, 12),
+                        full: (10, 12),
+                    };
+                    let mut t = vec![0.0f32; 2 * 4 * r.area()];
+                    conv2d_sliding_q8_region_ctx(
+                        2, &src, &qw, xq, &wq, Some(&bias), relu, &p, r, &mut t, &mut rs, &ctx,
+                    );
+                    paste(&mut got, 4, oh, ow, 2, r, &t);
+                }
+                assert_eq!(&got[..], want.as_slice(), "relu={relu} tile={tile:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_region_matches_untiled_bitwise() {
+        let x = Tensor::randn(&[1, 2, 9, 14], 71);
+        let w = Tensor::randn(&[3, 2, 3, 3], 72);
+        let bias: Vec<f32> = (0..3).map(|i| 0.1 * i as f32 - 0.05).collect();
+        let p = Conv2dParams::same(3);
+        let ctx = ExecCtx::new(ConvAlgo::Sliding);
+        let xb = to_bf16(&x);
+        let wb = to_bf16(&w);
+        let wf: Vec<f32> = wb.as_slice().iter().map(|v| v.to_f32()).collect();
+        for relu in [false, true] {
+            let mut want = from_bf16(&conv2d_sliding_bf16_ctx(&xb, &wb, Some(&bias), &p, &ctx));
+            if relu {
+                for v in want.as_mut_slice() {
+                    *v = v.max(0.0);
+                }
+            }
+            let (oh, ow) = (want.dim(2), want.dim(3));
+            for tile in [(1, ow), (3, 5)] {
+                let mut got = vec![0.0f32; 3 * oh * ow];
+                let mut rs = RegionScratch::default();
+                for r in tiles(oh, ow, tile.0, tile.1) {
+                    let src = SrcView {
+                        data: x.as_slice(),
+                        c: 2,
+                        rect: Rect::full(9, 14),
+                        full: (9, 14),
+                    };
+                    let mut t = vec![0.0f32; 3 * r.area()];
+                    conv2d_sliding_bf16_region_ctx(
+                        1, &src, &wf, (3, 2, 3, 3), Some(&bias), relu, &p, r, &mut t, &mut rs,
+                        &ctx,
+                    );
+                    paste(&mut got, 3, oh, ow, 1, r, &t);
+                }
+                assert_eq!(&got[..], want.as_slice(), "relu={relu} tile={tile:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn input_region_halo_math() {
+        // 3x3 same-pad conv: interior tile needs a 1-px halo.
+        let r = input_region(
+            Rect { y0: 4, y1: 8, x0: 4, x1: 8 },
+            (3, 3),
+            (1, 1),
+            (1, 1),
+            16,
+            16,
+        );
+        assert_eq!(r, Rect { y0: 3, y1: 9, x0: 3, x1: 9 });
+        // Corner tile: the padding clamps away.
+        let r = input_region(Rect { y0: 0, y1: 4, x0: 0, x1: 4 }, (3, 3), (1, 1), (1, 1), 16, 16);
+        assert_eq!(r, Rect { y0: 0, y1: 5, x0: 0, x1: 5 });
+        // Stride-2 pooling: adjacent tiles read disjoint rows.
+        let r = input_region(Rect { y0: 2, y1: 4, x0: 0, x1: 4 }, (2, 2), (2, 2), (0, 0), 16, 8);
+        assert_eq!(r, Rect { y0: 4, y1: 8, x0: 0, x1: 8 });
+        // Fully-padded tile clamps to empty.
+        let r = input_region(Rect { y0: 0, y1: 1, x0: 0, x1: 1 }, (1, 1), (1, 1), (2, 2), 4, 4);
+        assert!(r.is_empty());
+    }
+}

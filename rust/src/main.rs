@@ -19,7 +19,12 @@
 //! * `summary`     — layer/FLOP summary of a zoo model
 //! * `compile`     — lower a zoo model into the graph IR and show the
 //!   before/after of the pass pipeline (fusion, pad elision, quantize
-//!   hoisting) with FLOP and activation-byte accounting
+//!   hoisting) with FLOP and activation-byte accounting, per-node
+//!   activation bytes, and each fusable chain's tile geometry + the
+//!   footprint policy's tiled/untiled decision
+//! * `cache-info`  — print the detected cache hierarchy (sysfs probe,
+//!   `SWCONV_L2_KB`/`SWCONV_L3_KB` overrides) and the tile working-set
+//!   budget tiled chain execution sizes its tiles against
 //! * `artifacts-check` — load every AOT artifact and cross-check numerics
 //!   against the native kernels
 //!
@@ -32,12 +37,16 @@
 //! Every command accepts `--isa scalar|avx2|avx512|neon` to force the
 //! instruction-set level kernels dispatch at (process-wide, via
 //! [`swconv::simd::IsaLevel::force`]); results are bit-identical at
-//! every level.
+//! every level. Every command that runs compiled plans accepts
+//! `--tile HxW` (or `--tile auto`, or `SWCONV_FORCE_TILE=1`) to force
+//! cache-blocked tiled execution of fused conv chains — also
+//! bit-identical, purely a locality/footprint lever.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use swconv::autotune::{
-    autotune, default_profile_path, profile_table, AutotuneOpts, DispatchProfile, ProfileEntry,
+    autotune, default_profile_path, profile_table, race_tile_shapes, AutotuneOpts,
+    DispatchProfile, ProfileEntry, TileCandidate,
 };
 use swconv::coordinator::{BackendSpec, BatchPolicy, Coordinator, PinPolicy};
 use swconv::error::{anyhow, bail, Context, Result};
@@ -147,6 +156,34 @@ fn apply_pin_current(args: &Args) -> Result<()> {
     } else {
         eprintln!("warning: could not pin to cores {set} (unsupported platform or sandbox)");
     }
+    Ok(())
+}
+
+/// `--tile HxW` (any command that runs compiled plans) — force tiled
+/// execution with this output-tile shape for every fusable conv/pool
+/// chain. Equivalent to `SWCONV_FORCE_TILE=1` with an explicit shape;
+/// `--tile auto` forces tiling with cache-budget-sized tiles. Tiled
+/// execution is bit-identical to untiled, so this is a pure
+/// footprint/locality lever.
+fn apply_tile_flag(args: &Args) -> Result<()> {
+    let Some(s) = args.get("tile") else {
+        return Ok(());
+    };
+    if s.eq_ignore_ascii_case("auto") {
+        swconv::graph::set_forced_tile_shape(None);
+        swconv::graph::set_tiling_forced(true);
+        eprintln!("tiled execution forced: cache-budget-sized tiles per fused chain");
+        return Ok(());
+    }
+    let (h, w) = s
+        .to_ascii_lowercase()
+        .split_once('x')
+        .and_then(|(a, b)| Some((a.trim().parse::<usize>().ok()?, b.trim().parse::<usize>().ok()?)))
+        .filter(|&(h, w)| h > 0 && w > 0)
+        .ok_or_else(|| anyhow!("--tile {s}: expected HxW (positive integers) or 'auto'"))?;
+    swconv::graph::set_forced_tile_shape(Some((h, w)));
+    swconv::graph::set_tiling_forced(true);
+    eprintln!("tiled execution forced: {h}x{w} output tiles per fused chain");
     Ok(())
 }
 
@@ -378,6 +415,47 @@ fn cmd_autotune(args: &Args) -> Result<()> {
         out.display(),
         out.display()
     );
+
+    // --tile-race MODEL: race output-tile shapes for one zoo model on
+    // this machine's cache hierarchy. The winner is a per-model
+    // `--tile` argument — deliberately *not* a profile bucket, so the
+    // cached schema is unchanged.
+    if let Some(name) = args.get("tile-race") {
+        let m = zoo::by_name(name, 10, 42)
+            .ok_or_else(|| anyhow!("unknown model '{name}' (try {:?})", zoo::MODEL_NAMES))?;
+        let t = *opts.threads.iter().max().unwrap_or(&1);
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, t).with_dtype(dtype);
+        let cands = [
+            TileCandidate::Untiled,
+            TileCandidate::Auto,
+            TileCandidate::Fixed(16, 16),
+            TileCandidate::Fixed(8, 8),
+            TileCandidate::Fixed(4, 4),
+        ];
+        let rows = race_tile_shapes(&m, 1, &ctx, &cands, opts.samples, opts.sample_target);
+        let mut table = Table::new(
+            format!("tile race — {name} ({} threads, dtype {})", t, dtype.name()),
+            &["tile", "chains", "chain ws", "GFLOP/s"],
+        );
+        for r in &rows {
+            table.row(vec![
+                r.candidate.name(),
+                r.chains.to_string(),
+                format!("{:.0}KiB", r.ws_bytes as f64 / 1024.0),
+                f3(r.gflops),
+            ]);
+        }
+        println!("{}", table.render());
+        match rows.iter().max_by(|a, b| a.gflops.total_cmp(&b.gflops)) {
+            Some(w) if w.candidate != TileCandidate::Untiled => println!(
+                "winner: --tile {} ({} chains L2-blocked, bit-identical output)",
+                w.candidate.name(),
+                w.chains
+            ),
+            Some(_) => println!("winner: untiled — this model's chains already fit cache"),
+            None => println!("no fusable chain to race (model stays untiled)"),
+        }
+    }
     Ok(())
 }
 
@@ -491,10 +569,16 @@ fn cmd_summary(args: &Args) -> Result<()> {
 
 /// `compile` — lower a zoo model (or all of them) into the graph IR,
 /// run the pass pipeline and print the before/after graphs with pass
-/// counts and FLOP/activation-byte accounting. `--no-fuse` (or
+/// counts and FLOP/activation-byte accounting, plus the tiling layer's
+/// view of the result: per-node activation bytes and, per fusable
+/// conv/pool chain, the cache-sized tile geometry and whether the
+/// footprint policy would run it tiled. `--no-fuse` (or
 /// `SWCONV_NO_FUSE=1`) shows the verbatim plan instead.
 fn cmd_compile(args: &Args) -> Result<()> {
+    use swconv::graph::{tiling, TileMode};
+
     let batch = args.usize("batch", 1)?;
+    let dtype = parse_dtype(args)?;
     let names: Vec<&str> = match args.get("model") {
         Some(n) => vec![n],
         None => zoo::MODEL_NAMES.to_vec(),
@@ -526,6 +610,41 @@ fn cmd_compile(args: &Args) -> Result<()> {
             "activations : {ub} B unfused -> {fb} B compiled ({:+.1}%)",
             (fb as f64 / ub as f64 - 1.0) * 100.0
         );
+        println!("per-node activations (batch {batch}):");
+        for (id, node) in fused.graph.nodes.iter().enumerate().skip(1) {
+            println!(
+                "  %{id:<3} {:<14} {:>12} B  {:?}",
+                node.op.name(),
+                fused.graph.node_activation_bytes(id, batch),
+                node.shape
+            );
+        }
+        // The tiling layer's view: every fusable conv/pool chain with
+        // its cache-sized tile (ForceAll = geometry for all candidates),
+        // labeled by the footprint policy's decision (OverBudget = tile
+        // only the chains whose untiled working set spills the L2 tile
+        // budget; see `swconv cache-info`). Either way results are
+        // bit-identical — the label is a locality decision, not a
+        // numerics one.
+        let ctx = ExecCtx::new(ConvAlgo::Sliding).with_dtype(dtype);
+        let all = tiling::analyze(&fused.graph, None, &ctx, batch, TileMode::ForceAll);
+        let spill = tiling::analyze(&fused.graph, None, &ctx, batch, TileMode::OverBudget);
+        if all.is_empty() {
+            println!(
+                "tiled chains: none (no fusable sliding conv/pool chain at dtype {})",
+                dtype.name()
+            );
+        } else {
+            println!("tiled chains (dtype {}):", dtype.name());
+            for c in &all.chains {
+                let decision = if spill.chains.iter().any(|d| d.start == c.start) {
+                    "TILE  "
+                } else {
+                    "untile"
+                };
+                println!("  [{decision}] {}", c.render());
+            }
+        }
         println!();
     }
     Ok(())
@@ -819,6 +938,14 @@ fn cmd_artifacts_check(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `cache-info` — print the detected cache hierarchy (sysfs probe with
+/// per-level env overrides) and the derived tile working-set budget the
+/// tiling layer sizes chain tiles against.
+fn cmd_cache_info() -> Result<()> {
+    print!("{}", swconv::exec::CacheInfo::detect().render());
+    Ok(())
+}
+
 fn help() {
     println!(
         "swconv — Sliding-Window convolution reproduction
@@ -833,12 +960,14 @@ COMMANDS
   peaks
   autotune         [--c 4] [--hw 64] [--ks 2,3,...] [--threads N] [--dtype f32|i8]
                    [--out target/autotune/profile.json] [--pin CORES] [--no-pool]
+                   [--tile-race MODEL]
   run-model        [--model NAME] [--batch N] [--threads N] [--profile PATH]
                    [--dtype f32|bf16|i8] [--pin CORES] [--no-pool]
   plan             [--model NAME] [--batch N] [--threads N] [--dtype f32|bf16|i8]
                    [--algo sliding|gemm|tuned] [--mem-budget N[K|M|G]] [--profile PATH]
   summary          [--model NAME] [--batch N]
-  compile          [--model NAME] [--batch N] [--no-fuse]
+  compile          [--model NAME] [--batch N] [--dtype f32|bf16|i8] [--no-fuse]
+  cache-info
   serve            [--model NAME] [--requests N] [--max-batch N] [--max-wait-ms MS]
                    [--threads N] [--replicas N] [--trim-mb N] [--trim-idle-ms MS]
                    [--profile PATH] [--dtype f32|bf16|i8] [--pin CORES|auto] [--no-pool]
@@ -885,6 +1014,21 @@ COMMANDS
   plan_model` emits BENCH_plan.json comparing planned vs greedy-tuned
   vs paper-policy execution across budgets.
 
+  Tiled execution keeps fused conv chains L2-resident: instead of
+  materializing each whole activation plane, a chain runs tile by tile
+  through halo-aware region kernels, recycling per-tile intermediates
+  through the scratch arena. Tiles are sized so a tile's working set
+  fits the detected tile budget (3/4 of L2; see `swconv cache-info` —
+  SWCONV_L2_KB / SWCONV_L3_KB override the sysfs probe), and tiles
+  parallelize across the worker pool. --tile HxW (any command that runs
+  compiled plans) forces that output-tile shape on every fusable chain;
+  --tile auto — or SWCONV_FORCE_TILE=1, the CI leg — forces tiling with
+  cache-sized tiles; plan --mem-budget additionally tiles the chains
+  whose untiled working set spills the budget whenever that lowers the
+  predicted peak. Results are bit-identical to untiled execution for
+  every dtype, thread count and ISA level (see tests/tile_parity.rs and
+  `cargo bench --bench tiled_chains`, which emits BENCH_tile.json).
+
   stream runs frame-by-frame inference: a StreamSession keeps per-layer
   ring buffers so each new sample costs O(taps) instead of a full
   recompute, and the output is checked against the batch path every run
@@ -927,6 +1071,10 @@ COMMANDS
   PATH makes bench/run-model/serve dispatch from that cache (run-model
   and serve then also race a \"tuned\" series/backend). A missing or
   corrupt profile falls back to the paper's k=17 policy with a warning.
+  --tile-race MODEL additionally races output-tile shapes (untiled vs
+  auto vs fixed HxW, bit-identical by contract) for that zoo model and
+  prints the --tile argument this machine's cache hierarchy prefers —
+  a per-model property, so it is not cached in the profile.
 
 MODELS: {:?}",
         zoo::MODEL_NAMES
@@ -959,6 +1107,9 @@ fn main() -> Result<()> {
         IsaLevel::force(isa)?;
         eprintln!("isa forced to {isa} (detected: {})", IsaLevel::detected());
     }
+    // --tile HxW (or `auto`) forces tiled chain execution process-wide;
+    // bit-identical results either way, so this is a locality lever.
+    apply_tile_flag(&args)?;
     match args.cmd.as_str() {
         "bench-fig1" => cmd_fig1(&args),
         "bench-fig2" => cmd_fig2(&args),
@@ -968,6 +1119,7 @@ fn main() -> Result<()> {
         "plan" => cmd_plan(&args),
         "summary" => cmd_summary(&args),
         "compile" => cmd_compile(&args),
+        "cache-info" => cmd_cache_info(),
         "serve" => cmd_serve(&args),
         "stream" => cmd_stream(&args),
         "artifacts-check" => cmd_artifacts_check(&args),

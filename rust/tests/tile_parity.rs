@@ -1,0 +1,182 @@
+//! End-to-end parity of cache-blocked tiled execution: with tiling
+//! forced ([`swconv::graph::set_tiling_forced`] — the `--tile` /
+//! `SWCONV_FORCE_TILE` lever), every fusable conv chain runs
+//! tile-by-tile through the halo-aware region kernels, and the result
+//! must reproduce untiled execution **bit-for-bit** for every zoo
+//! model, serving dtype, thread count, forced tile shape (including
+//! the degenerate 1×W strips and a tile covering the whole plane) and
+//! ISA level. Tiling is a locality/footprint lever, never an accuracy
+//! lever: the region kernels replay the untiled kernels' per-element
+//! accumulation order on each rect, so `assert_eq!` on bits — no
+//! tolerance anywhere in this suite.
+
+mod common;
+
+use std::sync::Mutex;
+
+use common::{assert_bitwise, input_for};
+use swconv::graph::{set_forced_tile_shape, set_tiling_forced, tiling, TileMode};
+use swconv::kernels::ConvAlgo;
+use swconv::nn::{zoo, ExecCtx};
+use swconv::simd::IsaLevel;
+use swconv::tensor::Dtype;
+
+/// The forced-tiling switches are process-wide; serialize the tests
+/// that flip them so each one sees the state it set. (A lost race
+/// would still pass — tiled and untiled are bit-identical — but the
+/// failure diagnostics would blame the wrong tile shape.)
+static TILE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with tiling forced at `shape`, restoring the untiled
+/// default afterwards even if the shape sweep panics midway.
+fn with_forced_tile<R>(shape: (usize, usize), f: impl FnOnce() -> R) -> R {
+    struct Reset;
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            set_tiling_forced(false);
+            set_forced_tile_shape(None);
+        }
+    }
+    let _reset = Reset;
+    set_forced_tile_shape(Some(shape));
+    set_tiling_forced(true);
+    f()
+}
+
+/// Tile shapes covering the awkward grids: degenerate one-row strips,
+/// single-column strips, a tile larger than any zoo plane (one tile =
+/// the whole plane, the tiled executor's identity case), a square
+/// interior tile, and a small odd shape whose grid has ragged edges
+/// both ways.
+const TILES: [(usize, usize); 5] = [(1, 4096), (4096, 1), (4096, 4096), (8, 8), (3, 5)];
+
+/// Every zoo model × serving dtype × threads {1, 4} × forced tile
+/// shape: forced-tiled execution is bitwise-identical to the untiled
+/// run under the same ctx. Models whose graphs yield no eligible chain
+/// under some dtype simply run untiled — still a valid parity case
+/// (the forced switch must be a no-op there), and the vacuity guard
+/// below proves the sweep tiles real chains where it matters.
+#[test]
+fn forced_tiling_bit_identical_across_zoo_dtypes_threads_and_tiles() {
+    let _g = TILE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for name in zoo::MODEL_NAMES {
+        let m = zoo::by_name(name, 4, 42).unwrap();
+        let batch = if matches!(name, "simple-cnn" | "quantized-cnn") { 2 } else { 1 };
+        let x = input_for(&m, batch, 17);
+        for dtype in [Dtype::F32, Dtype::Bf16, Dtype::I8] {
+            for threads in [1usize, 4] {
+                let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads).with_dtype(dtype);
+                let compiled = m.compile();
+                let want = compiled.run(&x, &ctx);
+                for tile in TILES {
+                    let got = with_forced_tile(tile, || m.compile().run(&x, &ctx));
+                    assert_bitwise(
+                        &got,
+                        &want,
+                        &format!(
+                            "{name} {} threads={threads} tile={}x{}",
+                            dtype.name(),
+                            tile.0,
+                            tile.1
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Vacuity guard for the sweep above: under the f32 sliding route the
+/// analysis must actually find chains to tile in the conv zoo — and
+/// the degenerate shapes must produce the grids they claim (1×W strips
+/// one per output row; the oversized tile exactly one full-plane
+/// tile). Otherwise the parity sweep could silently compare untiled
+/// against untiled.
+#[test]
+fn analysis_finds_chains_and_degenerate_grids_cover_the_plane() {
+    let _g = TILE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let m = zoo::by_name("simple-cnn", 4, 42).unwrap();
+    let compiled = m.compile();
+    let ctx = ExecCtx::new(ConvAlgo::Sliding);
+    let strips = with_forced_tile((1, 4096), || {
+        tiling::analyze(&compiled.graph, None, &ctx, 1, TileMode::ForceAll)
+    });
+    assert!(!strips.is_empty(), "simple-cnn must yield at least one fusable chain");
+    for c in &strips.chains {
+        let (oh, ow) = c.out_hw();
+        let tiles = c.tiles();
+        assert_eq!(tiles.len(), oh, "1xW strips: one tile per output row");
+        assert_eq!(tiles.iter().map(|t| t.area()).sum::<usize>(), oh * ow);
+    }
+    let whole = with_forced_tile((4096, 4096), || {
+        tiling::analyze(&compiled.graph, None, &ctx, 1, TileMode::ForceAll)
+    });
+    for c in &whole.chains {
+        assert_eq!(c.tiles().len(), 1, "oversized tile clamps to one full-plane tile");
+        assert_eq!(c.tiled_bytes, c.untiled_bytes, "full-plane tile costs the untiled set");
+    }
+}
+
+/// Tiled execution × ISA levels: the tiled run forced to each level is
+/// bit-identical to the scalar-forced *untiled* reference — the two
+/// levers (region kernels, explicit SIMD dispatch) must compose
+/// without perturbing the per-element accumulation order.
+#[test]
+fn tiled_execution_bit_identical_across_isa_levels() {
+    let _g = TILE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let m = zoo::by_name("simple-cnn", 4, 42).unwrap();
+    let x = input_for(&m, 1, 19);
+    let reference_ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 1).with_isa(IsaLevel::Scalar);
+    let want = m.compile().run(&x, &reference_ctx);
+    for isa in IsaLevel::ALL {
+        for threads in [1usize, 2] {
+            let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, threads).with_isa(isa);
+            let got = with_forced_tile((3, 5), || m.compile().run(&x, &ctx));
+            assert_bitwise(&got, &want, &format!("tiled {isa} threads={threads}"));
+        }
+    }
+}
+
+/// The quantized zoo model end to end under forced tiling: int8 chain
+/// heads hoist the whole-tensor quantization (the tile must never see
+/// a tile-local max), so parity here is the regression test for that
+/// hoisting.
+#[test]
+fn quantized_model_tiled_parity_all_dtypes() {
+    let _g = TILE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let m = zoo::by_name("quantized-cnn", 4, 42).unwrap();
+    let x = input_for(&m, 2, 23);
+    for dtype in [Dtype::F32, Dtype::I8] {
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 4).with_dtype(dtype);
+        let want = m.compile().run(&x, &ctx);
+        for tile in [(1, 4096), (2, 3)] {
+            let got = with_forced_tile(tile, || m.compile().run(&x, &ctx));
+            assert_bitwise(
+                &got,
+                &want,
+                &format!("quantized-cnn {} tile={}x{}", dtype.name(), tile.0, tile.1),
+            );
+        }
+    }
+}
+
+/// Planner-attached tiling (the `--mem-budget` route) composes with
+/// planned choices: a budgeted plan whose cache-footprint pass adopted
+/// tiled chains must still execute bit-identically to the default
+/// compiled plan.
+#[test]
+fn budgeted_planned_tiling_stays_bit_identical() {
+    let _g = TILE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for name in ["simple-cnn", "squeezenet-lite"] {
+        let m = zoo::by_name(name, 4, 42).unwrap();
+        let x = input_for(&m, 1, 29);
+        let ctx = ExecCtx::with_threads(ConvAlgo::Sliding, 2);
+        let compiled = m.compile();
+        let want = compiled.run(&x, &ctx);
+        let floor = swconv::graph::min_feasible_budget(&compiled, 1, &ctx);
+        let mp = swconv::graph::plan_model(&compiled, 1, &ctx, Some(floor))
+            .unwrap_or_else(|e| panic!("{name} at floor budget: {e}"));
+        let planned = m.compile().with_choices(mp.choices).with_tiling(mp.tiling);
+        assert_bitwise(&planned.run(&x, &ctx), &want, &format!("{name} budgeted+tiled"));
+    }
+}
